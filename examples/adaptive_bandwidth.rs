@@ -1,0 +1,121 @@
+//! Adaptive re-planning under a time-varying uplink — the scenario
+//! Neurosurgeon [3] motivates and the paper's model enables: as the
+//! bandwidth trace moves between 3G-like and Wi-Fi-like regimes, the
+//! coordinator re-solves the shortest-path problem and swaps the active
+//! partition plan live (no restart, in-flight batches finish on the old
+//! plan).
+//!
+//!     cargo run --release --example adaptive_bandwidth
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use branchyserve::config::settings::Flavor;
+use branchyserve::coordinator::{Coordinator, CoordinatorConfig};
+use branchyserve::model::Manifest;
+use branchyserve::network::bandwidth::LinkModel;
+use branchyserve::network::{BandwidthTrace, Channel};
+use branchyserve::partition::solver;
+use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
+use branchyserve::runtime::InferenceEngine;
+use branchyserve::util::timefmt::format_secs;
+use branchyserve::workload::{LoadGen, LoadReport};
+
+const GAMMA: f64 = 20.0;
+const EXIT_P: f64 = 0.5;
+const PHASE: Duration = Duration::from_secs(4);
+
+fn main() -> anyhow::Result<()> {
+    branchyserve::util::logger::init();
+    let dir = Path::new("artifacts");
+    let manifest = Manifest::load(dir)?;
+    let edge = InferenceEngine::open(dir, manifest.clone(), Flavor::Ref, "edge")?;
+    let cloud = InferenceEngine::open(dir, manifest.clone(), Flavor::Ref, "cloud")?;
+    edge.warmup()?;
+    cloud.warmup()?;
+
+    let report: ProfileReport = profiler::measure(&edge, ProfileOptions::default())?;
+    let delay = report.to_delay_profile(GAMMA);
+    let desc = manifest.to_desc(EXIT_P);
+
+    // Bandwidth trace: Wi-Fi -> 3G -> 4G, one phase each.
+    let trace = BandwidthTrace::new(vec![
+        (0.0, 18.80),
+        (PHASE.as_secs_f64(), 1.10),
+        (2.0 * PHASE.as_secs_f64(), 5.85),
+    ])?;
+    let channel = Arc::new(Channel::new(trace.clone(), 0.0, 0.0, 3));
+
+    let initial_link = LinkModel::new(trace.mbps_at(0.0), 0.0);
+    let initial = solver::solve(&desc, &delay, initial_link, 1e-9, false);
+    println!(
+        "initial plan @ {:.2} Mbps: split after '{}'",
+        trace.mbps_at(0.0),
+        initial.split_label(&desc)
+    );
+
+    let coordinator = Arc::new(Coordinator::start(
+        edge,
+        cloud,
+        channel,
+        initial,
+        CoordinatorConfig {
+            entropy_threshold: 0.4,
+            ..Default::default()
+        },
+    ));
+
+    // Re-planner thread: every 500 ms, observe the channel's current
+    // bandwidth and re-solve; swap the plan if the split moved.
+    let replanner = {
+        let coordinator = coordinator.clone();
+        let desc = desc.clone();
+        let delay = delay.clone();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let mut last_split = usize::MAX;
+            while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                let link = coordinator.channel().current_link();
+                let plan = solver::solve(&desc, &delay, link, 1e-9, false);
+                if plan.split_after != last_split {
+                    println!(
+                        "[replan] {:.2} Mbps -> split after '{}' (E[T] {})",
+                        link.uplink_mbps,
+                        plan.split_label(&desc),
+                        format_secs(plan.expected_time_s)
+                    );
+                    last_split = plan.split_after;
+                    coordinator.set_plan(plan);
+                }
+                std::thread::sleep(Duration::from_millis(500));
+            }
+        });
+        (stop, handle)
+    };
+
+    // Load through all three phases.
+    let t0 = Instant::now();
+    let gen = LoadGen {
+        rate_rps: 20.0,
+        duration: 3 * PHASE,
+        seed: 11,
+    };
+    let report: LoadReport = gen.run(&coordinator);
+    println!(
+        "\nran {:.1}s: {} completed, exit rate {:.1}%, accuracy {:.1}%, \
+         mean latency {}, p95 {}",
+        t0.elapsed().as_secs_f64(),
+        report.completed,
+        report.exit_rate() * 100.0,
+        report.accuracy() * 100.0,
+        format_secs(report.mean_latency()),
+        format_secs(report.p(95.0)),
+    );
+
+    replanner.0.store(true, std::sync::atomic::Ordering::Relaxed);
+    replanner.1.join().ok();
+    println!("final metrics: {}", coordinator.metrics().summary());
+    Ok(())
+}

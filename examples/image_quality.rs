@@ -1,0 +1,108 @@
+//! Fig. 6 in serving mode: degrade image quality with Gaussian blur *in
+//! the Rust workload path* and watch the side-branch exit rate (and thus
+//! the effective serving latency) respond — image quality is a runtime
+//! property the partition planner should track, which is the paper's
+//! closing argument (§VI last paragraph + §VII).
+//!
+//!     cargo run --release --example image_quality
+
+use std::path::Path;
+use std::sync::Arc;
+
+use branchyserve::config::settings::Flavor;
+use branchyserve::coordinator::{Coordinator, CoordinatorConfig};
+use branchyserve::harness::Table;
+use branchyserve::model::Manifest;
+use branchyserve::network::bandwidth::{LinkModel, Profile};
+use branchyserve::network::Channel;
+use branchyserve::partition::solver;
+use branchyserve::profiler::{self, ProfileOptions};
+use branchyserve::runtime::InferenceEngine;
+use branchyserve::util::timefmt::format_secs;
+use branchyserve::workload::blur::gaussian_blur;
+use branchyserve::workload::ImageSource;
+
+const BLUR_LEVELS: [(&str, usize); 4] = [("none", 0), ("low", 5), ("mid", 15), ("high", 65)];
+const BATCH: usize = 48; // the paper's Fig. 6 batch size
+const THRESHOLD: f32 = 0.4;
+
+fn main() -> anyhow::Result<()> {
+    branchyserve::util::logger::init();
+    let dir = Path::new("artifacts");
+    let manifest = Manifest::load(dir)?;
+    let edge = InferenceEngine::open(dir, manifest.clone(), Flavor::Ref, "edge")?;
+    let cloud = InferenceEngine::open(dir, manifest.clone(), Flavor::Ref, "cloud")?;
+
+    edge.warmup()?;
+    cloud.warmup()?;
+    let profile = profiler::measure(&edge, ProfileOptions::default())?;
+    let link = LinkModel::from_profile(Profile::FourG);
+    let desc = manifest.to_desc(0.5);
+    let solved = solver::solve(&desc, &profile.to_delay_profile(20.0), link, 1e-9, false);
+    println!(
+        "solver would pick '{}'; pinning the split after stage 2 so the \
+         branch is active and the quality -> exit -> latency chain is visible",
+        solved.split_label(&desc)
+    );
+    let plan = branchyserve::partition::PartitionPlan::from_split(
+        2,
+        solved.expected_time_s,
+        branchyserve::config::settings::Strategy::ShortestPath,
+        &desc,
+    );
+
+    let coordinator = Coordinator::start(
+        edge,
+        cloud,
+        Arc::new(Channel::from_link(link)),
+        plan,
+        CoordinatorConfig {
+            entropy_threshold: THRESHOLD,
+            ..Default::default()
+        },
+    );
+
+    let mut table = Table::new(&[
+        "blur", "ksize", "exit rate", "accuracy", "mean latency", "p95 latency",
+    ]);
+    for (name, ksize) in BLUR_LEVELS {
+        let mut source = ImageSource::new(42);
+        let (images, labels) = source.batch(BATCH);
+        let mut latencies = Vec::with_capacity(BATCH);
+        let mut exits = 0usize;
+        let mut correct = 0usize;
+        // Submit asynchronously so the batcher actually forms batches.
+        let mut rx_and_label = Vec::with_capacity(BATCH);
+        for (img, label) in images.iter().zip(&labels) {
+            let blurred = gaussian_blur(img, ksize);
+            let (_, rx) = coordinator.submit(blurred)?;
+            rx_and_label.push((rx, *label));
+        }
+        for (rx, label) in rx_and_label {
+            let resp = rx.recv()?;
+            latencies.push(resp.latency_s);
+            if resp.exited_early() {
+                exits += 1;
+            }
+            if resp.class == label {
+                correct += 1;
+            }
+        }
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = latencies.iter().sum::<f64>() / latencies.len() as f64;
+        let p95 = latencies[(latencies.len() as f64 * 0.95) as usize - 1];
+        table.row(vec![
+            name.to_string(),
+            ksize.to_string(),
+            format!("{:.1}%", 100.0 * exits as f64 / BATCH as f64),
+            format!("{:.1}%", 100.0 * correct as f64 / BATCH as f64),
+            format_secs(mean),
+            format_secs(p95),
+        ]);
+    }
+    println!("\nimage quality -> early-exit rate -> serving latency (threshold {THRESHOLD})");
+    println!("{}", table.render());
+    println!("{}", coordinator.metrics().summary());
+    coordinator.shutdown();
+    Ok(())
+}

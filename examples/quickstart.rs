@@ -1,0 +1,69 @@
+//! Quickstart: plan an optimal BranchyNet partition and run one inference
+//! through the partitioned pipeline.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Walks the whole public API surface in ~60 lines: manifest -> profile
+//! -> plan (the paper's shortest-path solver) -> coordinator -> inference.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use branchyserve::config::settings::Flavor;
+use branchyserve::coordinator::{Coordinator, CoordinatorConfig};
+use branchyserve::model::Manifest;
+use branchyserve::network::bandwidth::{LinkModel, Profile};
+use branchyserve::network::Channel;
+use branchyserve::partition::solver;
+use branchyserve::profiler::{self, ProfileOptions};
+use branchyserve::runtime::InferenceEngine;
+use branchyserve::util::timefmt::format_secs;
+use branchyserve::workload::ImageSource;
+
+fn main() -> anyhow::Result<()> {
+    branchyserve::util::logger::init();
+    let dir = Path::new("artifacts");
+
+    // 1. Load the AOT-compiled model and measure per-stage cloud times.
+    let manifest = Manifest::load(dir)?;
+    let engine = InferenceEngine::open(dir, manifest.clone(), Flavor::Ref, "quickstart")?;
+    println!("model: {} with {} stages", manifest.model, manifest.num_stages());
+    let profile = profiler::measure(&engine, ProfileOptions::default())?;
+
+    // 2. Solve the partitioning problem (paper §V): edge 10x slower than
+    //    cloud, 3G uplink, 60% of samples classified at the side branch.
+    let gamma = 10.0;
+    let exit_probability = 0.6;
+    let delay = profile.to_delay_profile(gamma);
+    let link = LinkModel::from_profile(Profile::ThreeG);
+    let desc = manifest.to_desc(exit_probability);
+    let plan = solver::solve(&desc, &delay, link, 1e-9, false);
+    println!(
+        "optimal split: after '{}' — predicted E[T] = {}",
+        plan.split_label(&desc),
+        format_secs(plan.expected_time_s)
+    );
+    let (v_e, v_c) = plan.partition_sets(&desc);
+    println!("V_e = {v_e:?}\nV_c = {v_c:?}");
+
+    // 3. Serve one request through the partitioned edge->cloud pipeline.
+    let channel = Arc::new(Channel::from_link(link));
+    let coordinator = Coordinator::start(
+        engine.clone(),
+        engine, // share one PJRT client for the quickstart
+        channel,
+        plan,
+        CoordinatorConfig::default(),
+    );
+    let (image, label) = ImageSource::new(7).sample();
+    let response = coordinator.infer_sync(image)?;
+    println!(
+        "inference: class {} (truth {label}) — {} via {:?}, entropy {:.3}",
+        response.class,
+        format_secs(response.latency_s),
+        response.exit,
+        response.entropy
+    );
+    coordinator.shutdown();
+    Ok(())
+}

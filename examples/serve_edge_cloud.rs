@@ -1,0 +1,200 @@
+//! End-to-end serving driver (DESIGN.md's required E2E validation):
+//! loads the real AOT-compiled B-AlexNet, plans the optimal partition,
+//! starts the edge+cloud coordinator with separate PJRT clients and a
+//! simulated 4G uplink, drives it with open-loop Poisson traffic through
+//! the TCP front-end, and reports latency/throughput/exit-rate/accuracy.
+//!
+//!     make artifacts && cargo run --release --example serve_edge_cloud
+//!
+//! Environment knobs: RATE_RPS (default 30), DURATION_S (10),
+//! GAMMA (5), NETWORK (3g), THRESHOLD (0.4).
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use branchyserve::config::settings::Flavor;
+use branchyserve::coordinator::{Coordinator, CoordinatorConfig};
+use branchyserve::model::Manifest;
+use branchyserve::network::bandwidth::{LinkModel, Profile};
+use branchyserve::network::Channel;
+use branchyserve::partition::solver;
+use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
+use branchyserve::runtime::{HostTensor, InferenceEngine};
+use branchyserve::server::tcp::Client;
+use branchyserve::server::{Request, Response, Server};
+use branchyserve::util::rng::Pcg32;
+use branchyserve::util::stats::percentile;
+use branchyserve::util::timefmt::{format_rate, format_secs};
+use branchyserve::workload::ImageSource;
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    branchyserve::util::logger::init();
+    let dir = Path::new("artifacts");
+    let rate = env_f64("RATE_RPS", 30.0);
+    let duration = Duration::from_secs_f64(env_f64("DURATION_S", 10.0));
+    let gamma = env_f64("GAMMA", 5.0);
+    let threshold = env_f64("THRESHOLD", 0.4) as f32;
+    let net = Profile::parse(&std::env::var("NETWORK").unwrap_or("3g".into()))?;
+
+    // --- model + two nodes (edge, cloud), each with its own PJRT client.
+    let manifest = Manifest::load(dir)?;
+    let edge = InferenceEngine::open(dir, manifest.clone(), Flavor::Ref, "edge")?;
+    let cloud = InferenceEngine::open(dir, manifest.clone(), Flavor::Ref, "cloud")?;
+    let t0 = Instant::now();
+    let compile_s = edge.warmup()? + cloud.warmup()?;
+    println!(
+        "precompiled {}+{} executables in {:.1}s (xla compile {compile_s:.1}s)",
+        edge.cached_count(),
+        cloud.cached_count(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // --- plan: measured cloud profile, paper gamma model, chosen uplink.
+    let profile: ProfileReport = profiler::measure(&edge, ProfileOptions::default())?;
+    let delay = profile.to_delay_profile(gamma);
+    let link = LinkModel::from_profile(net);
+    // Exit probability estimate: measure the branch CDF at the threshold
+    // on a held-out batch (what a deployment would calibrate offline).
+    let mut calib = ImageSource::new(1234);
+    let mut entropies = Vec::new();
+    let exec_b = edge.max_batch();
+    for _ in 0..4 {
+        let (imgs, _) = calib.batch(exec_b);
+        let x = HostTensor::stack(&imgs)?;
+        let acts = edge.run_stages(1, manifest.branch.after_stage, &x)?;
+        entropies.extend(edge.run_branch(&acts)?.entropy);
+    }
+    let p_est = entropies.iter().filter(|&&e| e < threshold).count() as f64
+        / entropies.len() as f64;
+    println!("calibrated exit probability at threshold {threshold}: {p_est:.3}");
+
+    let desc = manifest.to_desc(p_est);
+    let plan = solver::solve(&desc, &delay, link, 1e-9, false);
+    println!(
+        "plan [{} gamma={gamma}]: split after '{}', predicted E[T] = {}",
+        net.name(),
+        plan.split_label(&desc),
+        format_secs(plan.expected_time_s)
+    );
+
+    // --- serving stack: coordinator + TCP front-end.
+    let channel = Arc::new(Channel::from_link(link));
+    let coordinator = Arc::new(Coordinator::start(
+        edge,
+        cloud,
+        channel,
+        plan,
+        CoordinatorConfig {
+            entropy_threshold: threshold,
+            max_batch: exec_b,
+            batch_timeout: Duration::from_millis(2),
+            queue_capacity: 4096,
+        },
+    ));
+    let server = Server::new(coordinator.clone()).start(0)?;
+    let addr = server.addr();
+    println!("TCP front-end on {addr}");
+
+    // --- open-loop Poisson load over N client connections.
+    let n_clients = 4usize;
+    let per_client_rate = rate / n_clients as f64;
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        handles.push(std::thread::spawn(move || -> anyhow::Result<ClientStats> {
+            let mut client = Client::connect(addr)?;
+            client.ping()?;
+            let mut rng = Pcg32::seeded(100 + c as u64);
+            let mut source = ImageSource::new(200 + c as u64);
+            let start = Instant::now();
+            let mut stats = ClientStats::default();
+            let mut next = start;
+            while start.elapsed() < duration {
+                let now = Instant::now();
+                if now < next {
+                    std::thread::sleep(next - now);
+                }
+                next += Duration::from_secs_f64(rng.exponential(per_client_rate));
+                let (img, label) = source.sample();
+                let sent = Instant::now();
+                match client.infer(img)? {
+                    Response::Result {
+                        class,
+                        exited_early,
+                        ..
+                    } => {
+                        stats.completed += 1;
+                        stats.latencies.push(sent.elapsed().as_secs_f64());
+                        if exited_early {
+                            stats.exits += 1;
+                        }
+                        if class as usize == label {
+                            stats.correct += 1;
+                        }
+                    }
+                    Response::Error(_) => stats.rejected += 1,
+                    other => anyhow::bail!("unexpected response {other:?}"),
+                }
+            }
+            Ok(stats)
+        }));
+    }
+
+    let mut total = ClientStats::default();
+    for h in handles {
+        total.merge(h.join().expect("client thread")?);
+    }
+    let wall = duration.as_secs_f64();
+
+    println!("\n=== end-to-end serving report ===");
+    println!("offered rate        {} over {n_clients} connections", format_rate(rate));
+    println!("completed           {}", total.completed);
+    println!("rejected            {}", total.rejected);
+    println!("throughput          {}", format_rate(total.completed as f64 / wall));
+    println!(
+        "early-exit rate     {:.1}%",
+        100.0 * total.exits as f64 / total.completed.max(1) as f64
+    );
+    println!(
+        "accuracy            {:.1}%",
+        100.0 * total.correct as f64 / total.completed.max(1) as f64
+    );
+    if !total.latencies.is_empty() {
+        println!(
+            "latency mean/p50/p95/p99  {} / {} / {} / {}",
+            format_secs(total.latencies.iter().sum::<f64>() / total.latencies.len() as f64),
+            format_secs(percentile(&total.latencies, 50.0)),
+            format_secs(percentile(&total.latencies, 95.0)),
+            format_secs(percentile(&total.latencies, 99.0)),
+        );
+    }
+    println!("coordinator: {}", coordinator.metrics().summary());
+    let (bytes, transfers, busy) = coordinator.channel().stats();
+    println!("uplink: {bytes} bytes in {transfers} transfers, busy {:.2}s", busy);
+
+    server.stop();
+    Ok(())
+}
+
+#[derive(Default)]
+struct ClientStats {
+    completed: u64,
+    rejected: u64,
+    exits: u64,
+    correct: u64,
+    latencies: Vec<f64>,
+}
+
+impl ClientStats {
+    fn merge(&mut self, other: ClientStats) {
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.exits += other.exits;
+        self.correct += other.correct;
+        self.latencies.extend(other.latencies);
+    }
+}

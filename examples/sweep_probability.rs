@@ -1,0 +1,72 @@
+//! Fig. 4-style sweep through the public API: how the optimal expected
+//! inference time and the chosen split react to the side-branch exit
+//! probability, per network technology, at a chosen gamma.
+//!
+//!     cargo run --release --example sweep_probability
+
+use std::path::Path;
+
+use branchyserve::config::settings::Flavor;
+use branchyserve::experiments::fig4;
+use branchyserve::harness::Table;
+use branchyserve::model::Manifest;
+use branchyserve::network::bandwidth::Profile;
+use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
+use branchyserve::runtime::InferenceEngine;
+use branchyserve::util::timefmt::format_secs;
+
+fn main() -> anyhow::Result<()> {
+    branchyserve::util::logger::init();
+    let dir = Path::new("artifacts");
+    let manifest = Manifest::load(dir)?;
+
+    // Profile (or reuse the cached profile.json).
+    let profile_path = dir.join("profile.json");
+    let report = if profile_path.exists() {
+        ProfileReport::load(&profile_path)?
+    } else {
+        let engine = InferenceEngine::open(dir, manifest.clone(), Flavor::Ref, "sweep")?;
+        profiler::measure(&engine, ProfileOptions::default())?
+    };
+
+    let desc = manifest.to_desc(0.0);
+    let curves = fig4::run(&desc, &report.to_delay_profile(1.0), 11, 1e-9);
+
+    for &gamma in &fig4::GAMMAS {
+        println!("\n--- gamma = {gamma} (edge {gamma}x slower than cloud) ---");
+        let mut table = Table::new(&["p", "3G", "4G", "WiFi", "3G split", "4G split", "WiFi split"]);
+        let get = |net: Profile| {
+            curves
+                .iter()
+                .find(|c| c.gamma == gamma && c.network == net)
+                .unwrap()
+        };
+        let (c3, c4, cw) = (get(Profile::ThreeG), get(Profile::FourG), get(Profile::WiFi));
+        for i in 0..c3.points.len() {
+            let lbl = |s: usize| {
+                if s == 0 {
+                    "input".to_string()
+                } else {
+                    desc.stage_names[s - 1].clone()
+                }
+            };
+            table.row(vec![
+                format!("{:.1}", c3.points[i].0),
+                format_secs(c3.points[i].1),
+                format_secs(c4.points[i].1),
+                format_secs(cw.points[i].1),
+                lbl(c3.points[i].2),
+                lbl(c4.points[i].2),
+                lbl(cw.points[i].2),
+            ]);
+        }
+        println!("{}", table.render());
+        println!(
+            "inference-time reduction p=0 -> p=1:  3G {:.1}%   4G {:.1}%   WiFi {:.1}%",
+            c3.reduction_pct(),
+            c4.reduction_pct(),
+            cw.reduction_pct()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,253 @@
+"""AOT export: B-AlexNet stages -> HLO-text artifacts + manifest + fixtures.
+
+The interchange format is **HLO text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Exported per main-branch stage i (and for the side branch and the full
+main-branch monolith), for every serving batch size in BATCH_SIZES and for
+both kernel flavors:
+
+    stage{i:02d}_{name}_{flavor}_b{B}.hlo.txt
+        flavor 'pl'  — Pallas kernels (interpret=True), the paper-system
+                       hot path expressed as L1 kernels;
+        flavor 'ref' — the pure-jnp/XLA-fused equivalent. Same function
+                       (kernel tests assert allclose); the Rust profiler
+                       benchmarks both and serving config picks one.
+
+Weights are baked into the artifacts as HLO constants, so the Rust
+coordinator feeds activations only — there is no weight I/O on the request
+path and no npz parsing in Rust.
+
+Also written:
+    manifest.json  — stage graph, shapes, alpha_i output bytes, FLOPs,
+                     artifact paths, fixture index (parsed by the Rust
+                     side's own JSON parser).
+    fixtures/*.bin — raw little-endian f32 (C-order) input/expected-output
+                     tensors for Rust runtime round-trip tests, plus the
+                     Fig. 6 blurred batches.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model, train
+from .kernels import ref
+
+BATCH_SIZES = (1, 4, 8)
+FLAVORS = ("pl", "ref")
+FIG6_BATCH = 48  # the paper applies "a batch with 48 samples" (§VI)
+FIXTURE_SEED = 99
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    """Lower a jittable fn to HLO text via stablehlo -> XlaComputation."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants matters: the default HLO printer elides big
+    # literals as `constant({...})`, which the Rust side's HLO text parser
+    # silently reads back as zeros — the baked weights would vanish.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def flops_of_stage(spec) -> int:
+    """Analytic MAC-based FLOPs per sample for a stage (2 * MACs)."""
+    if isinstance(spec, model.ConvSpec):
+        # Output spatial dims pre-pool.
+        shapes = dict(zip(model.STAGE_NAMES, model.stage_shapes()))
+        # Recompute conv output (pre-pool) from the chain.
+        c, h, w = model.INPUT_SHAPE
+        for s in model.STAGES:
+            if s.name == spec.name:
+                oh = (h + 2 * s.padding - s.kernel) // s.stride + 1
+                ow = (w + 2 * s.padding - s.kernel) // s.stride + 1
+                return 2 * spec.in_ch * spec.kernel**2 * oh * ow * spec.out_ch
+            if isinstance(s, model.ConvSpec):
+                h, w = model._conv_out_hw(h, w, s)
+                c = s.out_ch
+        raise KeyError(spec.name)
+    return 2 * spec.in_dim * spec.out_dim
+
+
+def branch_flops() -> int:
+    bc, bfc = model.BRANCH_CONV, model.BRANCH_FC
+    h = w = model.branch_input_shape()[1]
+    oh = (h + 2 * bc.padding - bc.kernel) // bc.stride + 1
+    conv = 2 * bc.in_ch * bc.kernel**2 * oh * oh * bc.out_ch
+    return conv + 2 * bfc.in_dim * bfc.out_dim
+
+
+# ---------------------------------------------------------------------------
+# Export
+# ---------------------------------------------------------------------------
+
+
+def _write_bin(path: Path, arr: np.ndarray) -> dict:
+    arr = np.ascontiguousarray(arr, dtype=np.float32)
+    path.write_bytes(arr.tobytes())
+    return {"path": path.name, "shape": list(arr.shape), "dtype": "f32"}
+
+
+def export(out_dir: Path) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fix_dir = out_dir / "fixtures"
+    fix_dir.mkdir(exist_ok=True)
+    params = train.load_weights(out_dir / "weights.npz")
+
+    shapes = model.stage_shapes()
+    stages_meta = []
+    in_shape = model.INPUT_SHAPE
+    for i, (spec, out_shape) in enumerate(zip(model.STAGES, shapes), start=1):
+        artifacts: dict[str, dict[str, str]] = {f: {} for f in FLAVORS}
+        for flavor in FLAVORS:
+            use_pallas = flavor == "pl"
+            fn = lambda x, _n=spec.name, _p=use_pallas: model.apply_stage(
+                params, _n, x, use_pallas=_p
+            )
+            for bs in BATCH_SIZES:
+                arg = jax.ShapeDtypeStruct((bs, *in_shape), jnp.float32)
+                text = to_hlo_text(fn, arg)
+                name = f"stage{i:02d}_{spec.name}_{flavor}_b{bs}.hlo.txt"
+                (out_dir / name).write_text(text)
+                artifacts[flavor][str(bs)] = name
+        stages_meta.append(
+            {
+                "index": i,
+                "name": spec.name,
+                "kind": "conv" if isinstance(spec, model.ConvSpec) else "fc",
+                "in_shape": list(in_shape),
+                "out_shape": list(out_shape),
+                "out_bytes_per_sample": model.output_bytes(out_shape),
+                "flops_per_sample": flops_of_stage(spec),
+                "artifacts": artifacts,
+            }
+        )
+        print(f"exported stage {i} ({spec.name}) in={in_shape} out={out_shape}")
+        in_shape = out_shape
+
+    # Side branch: activations -> (probs, entropy). The exit statistic is
+    # fused into the artifact so the edge node gets the gate in one call.
+    def branch_fn_pl(x):
+        logits = model.apply_branch(params, x, use_pallas=True)
+        return model.entropy(logits, use_pallas=True)
+
+    def branch_fn_ref(x):
+        logits = model.apply_branch(params, x, use_pallas=False)
+        return model.entropy(logits, use_pallas=False)
+
+    branch_meta = {
+        "after_stage": model.BRANCH_AFTER,
+        "name": "b1",
+        "in_shape": list(model.branch_input_shape()),
+        "num_classes": model.NUM_CLASSES,
+        "flops_per_sample": branch_flops(),
+        "artifacts": {f: {} for f in FLAVORS},
+    }
+    for flavor, fn in (("pl", branch_fn_pl), ("ref", branch_fn_ref)):
+        for bs in BATCH_SIZES:
+            arg = jax.ShapeDtypeStruct((bs, *model.branch_input_shape()), jnp.float32)
+            name = f"branch_b1_{flavor}_b{bs}.hlo.txt"
+            (out_dir / name).write_text(to_hlo_text(fn, arg))
+            branch_meta["artifacts"][flavor][str(bs)] = name
+    print("exported branch b1")
+
+    # Full main-branch monolith (cloud-only single executable + the L2
+    # fusion ablation target).
+    full_meta = {"artifacts": {f: {} for f in FLAVORS}}
+    for flavor in FLAVORS:
+        fn = lambda x, _p=(flavor == "pl"): model.forward_main(
+            params, x, use_pallas=_p
+        )
+        for bs in BATCH_SIZES:
+            arg = jax.ShapeDtypeStruct((bs, *model.INPUT_SHAPE), jnp.float32)
+            name = f"full_main_{flavor}_b{bs}.hlo.txt"
+            (out_dir / name).write_text(to_hlo_text(fn, arg))
+            full_meta["artifacts"][flavor][str(bs)] = name
+    print("exported full main branch")
+
+    # ----------------------------------------------------------------- #
+    # Fixtures
+    # ----------------------------------------------------------------- #
+    fixtures: dict = {}
+    rng_x, rng_y = data.make_dataset(8, seed=FIXTURE_SEED)
+    fixtures["input_b8"] = _write_bin(fix_dir / "input_b8.bin", rng_x)
+    fixtures["labels_b8"] = {
+        "path": "labels_b8.json",
+        "values": [int(v) for v in rng_y],
+    }
+    (fix_dir / "labels_b8.json").write_text(json.dumps(fixtures["labels_b8"]["values"]))
+
+    # Expected per-stage outputs (ref flavor) for the runtime round-trip.
+    h = jnp.asarray(rng_x)
+    for i, spec in enumerate(model.STAGES, start=1):
+        h = model.apply_stage(params, spec.name, h, use_pallas=False)
+        fixtures[f"expected_stage{i:02d}_b8"] = _write_bin(
+            fix_dir / f"expected_stage{i:02d}_b8.bin", np.asarray(h)
+        )
+        if i == model.BRANCH_AFTER:
+            probs, ent = model.entropy(
+                model.apply_branch(params, h, use_pallas=False)
+            )
+            fixtures["expected_branch_probs_b8"] = _write_bin(
+                fix_dir / "expected_branch_probs_b8.bin", np.asarray(probs)
+            )
+            fixtures["expected_branch_entropy_b8"] = _write_bin(
+                fix_dir / "expected_branch_entropy_b8.bin", np.asarray(ent)
+            )
+
+    # Fig. 6 batches: 48 fresh samples per blur level.
+    xs, ys = data.make_dataset(FIG6_BATCH, seed=FIXTURE_SEED + 1)
+    fig6 = {}
+    for level, ksize in data.BLUR_LEVELS.items():
+        xb = data.gaussian_blur(xs, ksize)
+        fig6[level] = _write_bin(fix_dir / f"fig6_{level}_b48.bin", xb)
+        fig6[level]["blur_ksize"] = ksize
+    fixtures["fig6"] = fig6
+    fixtures["fig6_labels"] = [int(v) for v in ys]
+    print("wrote fixtures")
+
+    manifest = {
+        "model": "b-alexnet",
+        "paper": "Pacheco & Couto, ISCC 2020 (BranchyNet partitioning)",
+        "num_classes": model.NUM_CLASSES,
+        "input_shape": list(model.INPUT_SHAPE),
+        "input_bytes_per_sample": model.output_bytes(model.INPUT_SHAPE),
+        "batch_sizes": list(BATCH_SIZES),
+        "flavors": list(FLAVORS),
+        "entropy_max_nats": math.log(model.NUM_CLASSES),
+        "stages": stages_meta,
+        "branch": branch_meta,
+        "full": full_meta,
+        "fixtures": fixtures,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote manifest with {len(stages_meta)} stages -> {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", type=Path, default=Path("../artifacts"))
+    args = ap.parse_args()
+    export(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Procedural two-class image dataset + Gaussian blur (build-time only).
+
+Substitution (DESIGN.md §4): the paper trains B-AlexNet on a cat-vs-dog
+photo dataset [8] and probes Fig. 6 by applying Gaussian blur with kernel
+sizes {5, 15, 65}. We have no photo corpus offline, so we synthesize a
+binary texture-classification task with the same *relevant* property: the
+two classes are separable through local texture statistics that Gaussian
+blur progressively destroys, so side-branch confidence (and hence exit
+probability) degrades monotonically with blur — the mechanism Fig. 6
+demonstrates.
+
+  class 0 ("cat"):  smooth low-frequency blobs (random Gaussian bumps)
+  class 1 ("dog"):  oriented high-frequency stripes (random sinusoids)
+
+Both get per-image random phase/scale/orientation, channel tinting and
+additive noise so the task is non-trivial but learnable in a few hundred
+CPU steps.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 32
+CHANNELS = 3
+
+
+def _coords() -> tuple[np.ndarray, np.ndarray]:
+    g = np.arange(IMG, dtype=np.float32)
+    return np.meshgrid(g, g, indexing="ij")
+
+
+def _blobs(rng: np.random.Generator) -> np.ndarray:
+    """Low-frequency class: sum of 3-6 random Gaussian bumps."""
+    yy, xx = _coords()
+    img = np.zeros((IMG, IMG), np.float32)
+    for _ in range(rng.integers(3, 7)):
+        cy, cx = rng.uniform(4, IMG - 4, size=2)
+        sig = rng.uniform(3.0, 7.0)
+        amp = rng.uniform(0.5, 1.0)
+        img += amp * np.exp(-((yy - cy) ** 2 + (xx - cx) ** 2) / (2 * sig**2))
+    return img
+
+
+def _stripes(rng: np.random.Generator) -> np.ndarray:
+    """High-frequency class: oriented sinusoid grating."""
+    yy, xx = _coords()
+    theta = rng.uniform(0, np.pi)
+    freq = rng.uniform(0.6, 1.4)  # cycles per ~2px: well above blob band
+    phase = rng.uniform(0, 2 * np.pi)
+    proj = np.cos(theta) * xx + np.sin(theta) * yy
+    img = 0.5 + 0.5 * np.sin(freq * proj + phase)
+    return img.astype(np.float32)
+
+
+def make_dataset(
+    n: int, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """n images, NCHW f32 in [0, 1]-ish (then standardized), labels {0,1}."""
+    rng = np.random.default_rng(seed)
+    xs = np.empty((n, CHANNELS, IMG, IMG), np.float32)
+    ys = rng.integers(0, 2, size=n).astype(np.int32)
+    for i in range(n):
+        base = _stripes(rng) if ys[i] else _blobs(rng)
+        # Cross-contaminate with a faint sample of the *other* class so the
+        # decision boundary is non-trivial and confidence varies per image.
+        other = _blobs(rng) if ys[i] else _stripes(rng)
+        mix = rng.uniform(0.0, 0.35)
+        base = (1 - mix) * base + mix * other
+        tint = rng.uniform(0.6, 1.0, size=(CHANNELS, 1, 1)).astype(np.float32)
+        noise = rng.normal(0, 0.12, size=(CHANNELS, IMG, IMG)).astype(np.float32)
+        xs[i] = base[None, :, :] * tint + noise
+    # Global standardization (train-time statistics are baked into the
+    # exported artifacts via this same function, so edge and cloud agree).
+    xs = (xs - 0.45) / 0.3
+    return xs, ys
+
+
+def gaussian_kernel1d(ksize: int) -> np.ndarray:
+    """Normalized 1-D Gaussian taps; sigma follows the OpenCV convention
+    ``sigma = 0.3*((ksize-1)*0.5 - 1) + 0.8`` used for `GaussianBlur`."""
+    sigma = 0.3 * ((ksize - 1) * 0.5 - 1) + 0.8
+    r = (ksize - 1) // 2
+    t = np.arange(-r, r + 1, dtype=np.float32)
+    k = np.exp(-(t**2) / (2 * sigma**2))
+    return k / k.sum()
+
+
+def gaussian_blur(x: np.ndarray, ksize: int) -> np.ndarray:
+    """Separable Gaussian blur on NCHW images with reflect padding.
+
+    ksize follows the paper's filter dimensions {5, 15, 65}; ksize <= 1 is
+    the identity. Kernels larger than the image are allowed (the paper's 65
+    on 32x32 images): reflect padding is applied repeatedly as needed.
+    """
+    if ksize <= 1:
+        return x.copy()
+    k = gaussian_kernel1d(ksize)
+    r = (ksize - 1) // 2
+    out = x.astype(np.float32)
+
+    def pad_reflect(a: np.ndarray, axis: int, amount: int) -> np.ndarray:
+        # np.pad reflect caps at len-1 per call; loop for huge kernels.
+        while amount > 0:
+            step = min(amount, a.shape[axis] - 1)
+            width = [(0, 0)] * a.ndim
+            width[axis] = (step, step)
+            a = np.pad(a, width, mode="reflect")
+            amount -= step
+        return a
+
+    # Convolve along H then W (separable).
+    for axis in (2, 3):
+        padded = pad_reflect(out, axis, r)
+        acc = np.zeros_like(out)
+        for i, tap in enumerate(k):
+            sl = [slice(None)] * 4
+            sl[axis] = slice(i, i + out.shape[axis])
+            acc += tap * padded[tuple(sl)]
+        out = acc
+    return out
+
+
+BLUR_LEVELS = {"none": 0, "low": 5, "mid": 15, "high": 65}

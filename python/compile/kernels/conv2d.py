@@ -1,0 +1,45 @@
+"""Pallas conv2d: im2col unfold + the blocked MXU matmul kernel.
+
+Hardware adaptation (DESIGN.md §8): instead of porting a CUDA-style
+implicit-GEMM with threadblock tiles, the convolution is expressed the TPU
+way — an explicit im2col reshuffle (pure layout work that XLA fuses into
+cheap strided slices) followed by one large (N*OH*OW, C*KH*KW) x
+(C*KH*KW, O) contraction on the MXU via ``kernels.matmul``. Bias and ReLU
+ride the matmul epilogue, so a conv layer is a single fused kernel pass
+over its data.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul
+from . import ref
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    stride: int = 1,
+    padding: int = 0,
+    act: str = "none",
+) -> jax.Array:
+    """NCHW conv2d with square kernel, bias and optional ReLU.
+
+    x: (N, C, H, W); w: (O, C, KH, KW); b: (O,). Returns (N, O, OH, OW).
+    """
+    n, c, h, wdt = x.shape
+    o, c2, kh, kw = w.shape
+    if c != c2:
+        raise ValueError(f"channel mismatch: input {c} vs weight {c2}")
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (wdt + 2 * padding - kw) // stride + 1
+
+    cols = ref.im2col(x, kh, kw, stride, padding)  # (N*OH*OW, C*KH*KW)
+    # OIHW -> (C*KH*KW, O). im2col column order is (C, KH*KW) — channel
+    # outer, window offset inner — so weight rows must match it.
+    wmat = w.reshape(o, c, kh * kw).transpose(1, 2, 0).reshape(c * kh * kw, o)
+    out = matmul.matmul_bias_act(cols, wmat, b, act=act)  # (N*OH*OW, O)
+    return out.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)

@@ -1,0 +1,111 @@
+"""Blocked Pallas matmul with fused bias + activation epilogue.
+
+This is the workhorse kernel: both the fully-connected layers and the
+im2col-lowered convolutions of B-AlexNet reduce to it.
+
+TPU mapping (see DESIGN.md §8): the grid walks (M/bm, N/bn, K/bk); each
+step keeps one (bm, bk) LHS panel, one (bk, bn) RHS panel and the (bm, bn)
+output tile in VMEM and issues a single (bm x bk) @ (bk x bn) MXU
+contraction. The K axis is innermost and the output tile's index map does
+not depend on k, so the accumulator stays resident across the whole K sweep
+(output-stationary schedule); bias-add and ReLU run as an epilogue on the
+final K step, so the activation never makes an extra HBM round-trip.
+
+Block sizes default to 128 (MXU systolic width) but shrink to the problem
+when a dimension is smaller. All dims are zero-padded up to block multiples
+in the wrapper; zero K-padding is exact for matmul, and M/N padding is
+sliced off afterwards.
+
+On this testbed the kernel runs with ``interpret=True`` (CPU PJRT cannot
+execute Mosaic custom-calls); correctness is asserted against
+``ref.matmul_bias_act`` in the pytest suite.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, b_ref, o_ref, *, nsteps_k: int, act: str):
+    """One grid step: o += x_tile @ y_tile; epilogue on the last K step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nsteps_k - 1)
+    def _epilogue():
+        out = o_ref[...] + b_ref[...]
+        if act == "relu":
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block_m", "block_n", "block_k"))
+def matmul_bias_act(
+    x: jax.Array,
+    y: jax.Array,
+    bias: jax.Array,
+    act: str = "none",
+    block_m: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """(M, K) @ (K, N) + bias[N] with optional ReLU, as a Pallas kernel."""
+    if act not in ("none", "relu"):
+        raise ValueError(f"unknown activation: {act}")
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    if bias.shape != (n,):
+        raise ValueError(f"bias shape {bias.shape} != ({n},)")
+
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    bk = min(block_k, _round_up(k, 8))
+
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(bias, (0, np_ - n))[None, :]  # (1, Np) row for broadcast
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nsteps_k=grid[2], act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp, bp)
+    return out[:m, :n]
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Plain (M, K) @ (K, N) via the fused kernel with a zero bias."""
+    return matmul_bias_act(x, y, jnp.zeros((y.shape[1],), jnp.float32), act="none")
+
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int) -> int:
+    """Estimated VMEM residency per grid step (f32): LHS+RHS+bias+out tiles."""
+    return 4 * (block_m * block_k + block_k * block_n + block_n + block_m * block_n)

@@ -1,0 +1,61 @@
+"""Pallas max-pooling kernel (NCHW, square window, VALID padding).
+
+The grid walks (N, C/bc): each step holds one (bc, H, W) channel slab in
+VMEM and computes every output pixel from ``window**2`` statically-unrolled
+shifted strided views reduced with ``jnp.maximum`` — an 8x128-lane-friendly
+elementwise max tree on the VPU, with no gather and no HBM re-reads (each
+input element is touched once per overlapping window from VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref, *, window: int, stride: int, oh: int, ow: int):
+    x = x_ref[...]  # (1, bc, H, W)
+    acc = None
+    for i in range(window):
+        for j in range(window):
+            view = jax.lax.slice(
+                x,
+                (0, 0, i, j),
+                (1, x.shape[1], i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1),
+                (1, 1, stride, stride),
+            )
+            acc = view if acc is None else jnp.maximum(acc, view)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("window", "stride", "block_c"))
+def maxpool2d(
+    x: jax.Array, window: int = 3, stride: int = 2, block_c: int = 32
+) -> jax.Array:
+    """NCHW max-pool; x: (N, C, H, W) -> (N, C, OH, OW), VALID padding."""
+    n, c, h, w = x.shape
+    if h < window or w < window:
+        raise ValueError(f"input {h}x{w} smaller than window {window}")
+    oh = (h - window) // stride + 1
+    ow = (w - window) // stride + 1
+
+    bc = min(block_c, c)
+    # Pad channels to a block multiple; padded channels are garbage but get
+    # sliced off below (maxpool is channelwise, no cross-contamination).
+    cp = (c + bc - 1) // bc * bc
+    xp = jnp.pad(x, ((0, 0), (0, cp - c), (0, 0), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _maxpool_kernel, window=window, stride=stride, oh=oh, ow=ow
+        ),
+        grid=(n, cp // bc),
+        in_specs=[pl.BlockSpec((1, bc, h, w), lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, bc, oh, ow), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, cp, oh, ow), x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:, :c]

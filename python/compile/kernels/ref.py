@@ -1,0 +1,125 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels
+(interpret=True) match these implementations to f32 tolerance.
+
+They are also the implementations used by the *training* path
+(`compile/train.py`): training only runs at build time, where XLA's fused
+`lax.conv` is much faster under CPU jit than interpret-mode Pallas. The
+*exported* inference artifacts use the Pallas kernels, and the
+kernel-vs-ref tests guarantee both paths compute the same function.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Plain f32 matmul: (M, K) @ (K, N) -> (M, N)."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def matmul_bias_act(
+    x: jax.Array, y: jax.Array, bias: jax.Array, act: str = "none"
+) -> jax.Array:
+    """Matmul with fused bias-add and optional ReLU epilogue."""
+    out = matmul(x, y) + bias[None, :]
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act != "none":
+        raise ValueError(f"unknown activation: {act}")
+    return out
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    stride: int = 1,
+    padding: int = 0,
+    act: str = "none",
+) -> jax.Array:
+    """NCHW conv2d with square kernel/stride/padding, bias and activation.
+
+    x: (N, C, H, W); w: (O, C, KH, KW); b: (O,).
+    """
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    out = out + b[None, :, None, None]
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act != "none":
+        raise ValueError(f"unknown activation: {act}")
+    return out
+
+
+def maxpool2d(x: jax.Array, window: int = 3, stride: int = 2) -> jax.Array:
+    """NCHW max-pooling with square window/stride and VALID padding."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 1, window, window),
+        window_strides=(1, 1, stride, stride),
+        padding="VALID",
+    )
+
+
+def softmax(logits: jax.Array) -> jax.Array:
+    """Numerically-stable row softmax over the last axis."""
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_entropy(logits: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused softmax + Shannon entropy (nats) over the last axis.
+
+    Returns (probs, entropy). Entropy is computed as
+    ``logsumexp(z) - sum(p * z)`` with ``z = logits - max`` which avoids
+    ``0 * log 0`` and matches ``-sum(p log p)`` analytically.
+    """
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    s = jnp.sum(e, axis=-1)
+    p = e / s[..., None]
+    lse = jnp.log(s)
+    ent = lse - jnp.sum(p * z, axis=-1)
+    return p, ent
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: int) -> jax.Array:
+    """Unfold NCHW input into patch-matrix form for matmul-based conv.
+
+    Returns (N * OH * OW, C * KH * KW); column order matches a reshape of
+    OIHW weights to (O, C*KH*KW) rows.
+    """
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    # Gather all (kh, kw) shifted strided views; static python loops unroll
+    # into cheap slices at trace time.
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = lax.slice(
+                xp,
+                (0, 0, i, j),
+                (n, c, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1),
+                (1, 1, stride, stride),
+            )  # (N, C, OH, OW)
+            cols.append(patch)
+    # (KH*KW, N, C, OH, OW) -> (N, OH, OW, C, KH*KW)
+    stacked = jnp.stack(cols, axis=0)
+    stacked = stacked.transpose(1, 3, 4, 2, 0)  # N, OH, OW, C, KH*KW
+    return stacked.reshape(n * oh * ow, c * kh * kw)

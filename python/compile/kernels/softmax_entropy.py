@@ -1,0 +1,58 @@
+"""Fused Pallas softmax + Shannon-entropy kernel — the early-exit head.
+
+BranchyNet's exit decision needs, per sample, the class-probability vector
+and its entropy (the confidence statistic compared against the branch
+threshold). Fusing them means the exit gate costs a single VMEM-resident
+pass over the (batch, classes) logits: row max, exp, row sum, normalize,
+and the entropy identity ``H = logsumexp(z) - sum(p * z)`` (z = shifted
+logits), which never evaluates ``0 * log 0``.
+
+The grid is 1-D over row blocks; classes stay un-tiled (C is tiny for a
+classifier head, far under a VMEM lane tile), so each row's statistics are
+computed in one step without cross-step reductions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_entropy_kernel(x_ref, p_ref, h_ref):
+    z = x_ref[...]
+    z = z - jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / s
+    p_ref[...] = p
+    h_ref[...] = jnp.log(s) - jnp.sum(p * z, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def softmax_entropy(
+    logits: jax.Array, block_b: int = 128
+) -> tuple[jax.Array, jax.Array]:
+    """Row softmax + entropy (nats). logits: (B, C) -> ((B, C), (B,))."""
+    b, c = logits.shape
+    bb = min(block_b, b)
+    bp = (b + bb - 1) // bb * bb
+    xp = jnp.pad(logits, ((0, bp - b), (0, 0)))
+
+    probs, ent = pl.pallas_call(
+        _softmax_entropy_kernel,
+        grid=(bp // bb,),
+        in_specs=[pl.BlockSpec((bb, c), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, c), jnp.float32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(xp)
+    return probs[:b], ent[:b, 0]

@@ -1,0 +1,254 @@
+"""L2: B-AlexNet — CIFAR-scale AlexNet main branch + one side branch.
+
+This mirrors the paper's evaluation model (§VI): a standard AlexNet main
+branch with a single side branch inserted after the first stage, trained
+for a binary (cat-vs-dog-like) image task. Per DESIGN.md §4 we use the
+32x32-input AlexNet variant (the scale the original BranchyNet paper [5]
+used) so the network is trainable on CPU at build time while keeping the
+non-monotonic per-layer output-size profile that drives the partitioning
+trade-off:
+
+    stage    out shape      alpha_i (f32 bytes, batch 1)
+    input    (3, 32, 32)    12288
+    conv1    (64, 15, 15)   57600   <- larger than the raw input!
+    conv2    (96, 7, 7)     18816
+    conv3    (128, 7, 7)    25088
+    conv4    (128, 7, 7)    25088
+    conv5    (96, 3, 3)     3456
+    fc1      (256,)         1024
+    fc2      (128,)         512
+    fc3      (2,)           8
+
+Every *stage* here is one vertex of the paper's main-branch chain graph
+(conv stages fuse their ReLU and trailing max-pool, as is standard when
+profiling partition points — a pool is never a useful split point because
+it only shrinks data). The side branch ``b1`` hangs off stage 1.
+
+Each stage has a pure function ``apply_stage(params, name, x, use_pallas)``
+used by three consumers:
+  * ``train.py``  — use_pallas=False (XLA-fused ref ops, fast CPU training)
+  * ``aot.py``    — use_pallas=True  (Pallas kernels, the exported artifacts)
+  * tests        — both, asserted equal.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as pl_conv
+from .kernels import matmul as pl_matmul
+from .kernels import maxpool as pl_pool
+from .kernels import softmax_entropy as pl_ent
+from .kernels import ref
+
+NUM_CLASSES = 2
+INPUT_SHAPE = (3, 32, 32)  # CHW
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    """A conv stage: conv(+bias+relu) followed by an optional max-pool."""
+
+    name: str
+    in_ch: int
+    out_ch: int
+    kernel: int
+    stride: int = 1
+    padding: int = 0
+    pool: bool = False
+    pool_window: int = 3
+    pool_stride: int = 2
+
+
+@dataclass(frozen=True)
+class FcSpec:
+    """A fully-connected stage; flattens its input if it is 4-D."""
+
+    name: str
+    in_dim: int
+    out_dim: int
+    act: str = "relu"
+
+
+# Main-branch chain: one entry per partitionable vertex v_1..v_8.
+STAGES: tuple = (
+    ConvSpec("conv1", 3, 64, 5, 1, 2, pool=True),
+    ConvSpec("conv2", 64, 96, 5, 1, 2, pool=True),
+    ConvSpec("conv3", 96, 128, 3, 1, 1),
+    ConvSpec("conv4", 128, 128, 3, 1, 1),
+    ConvSpec("conv5", 128, 96, 3, 1, 1, pool=True),
+    FcSpec("fc1", 96 * 3 * 3, 256),
+    FcSpec("fc2", 256, 128),
+    FcSpec("fc3", 128, NUM_CLASSES, act="none"),
+)
+
+STAGE_NAMES: tuple = tuple(s.name for s in STAGES)
+
+# Side branch b1, inserted after stage index 1 (i.e. after conv1's pool),
+# mirroring the paper's "one side branch after the first middle layer".
+BRANCH_AFTER = 1  # 1-based stage index the branch consumes the output of
+BRANCH_CONV = ConvSpec("b1_conv", 64, 32, 3, 1, 1, pool=True)
+BRANCH_FC = FcSpec("b1_fc", 32 * 7 * 7, NUM_CLASSES, act="none")
+
+
+def _conv_out_hw(h: int, w: int, s: ConvSpec) -> tuple[int, int]:
+    oh = (h + 2 * s.padding - s.kernel) // s.stride + 1
+    ow = (w + 2 * s.padding - s.kernel) // s.stride + 1
+    if s.pool:
+        oh = (oh - s.pool_window) // s.pool_stride + 1
+        ow = (ow - s.pool_window) // s.pool_stride + 1
+    return oh, ow
+
+
+def stage_shapes() -> list[tuple[int, ...]]:
+    """Output CHW/flat shape of every main-branch stage, in order."""
+    shapes: list[tuple[int, ...]] = []
+    c, h, w = INPUT_SHAPE
+    for s in STAGES:
+        if isinstance(s, ConvSpec):
+            h, w = _conv_out_hw(h, w, s)
+            c = s.out_ch
+            shapes.append((c, h, w))
+        else:
+            shapes.append((s.out_dim,))
+    return shapes
+
+
+def branch_input_shape() -> tuple[int, ...]:
+    return stage_shapes()[BRANCH_AFTER - 1]
+
+
+def branch_output_shape() -> tuple[int, ...]:
+    return (NUM_CLASSES,)
+
+
+def output_bytes(shape: tuple[int, ...], dtype_bytes: int = 4) -> int:
+    return int(math.prod(shape)) * dtype_bytes
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _init_conv(key, s: ConvSpec) -> dict:
+    kw, _ = jax.random.split(key)
+    fan_in = s.in_ch * s.kernel * s.kernel
+    std = math.sqrt(2.0 / fan_in)  # He init for ReLU stacks
+    return {
+        "w": jax.random.normal(kw, (s.out_ch, s.in_ch, s.kernel, s.kernel)) * std,
+        "b": jnp.zeros((s.out_ch,), jnp.float32),
+    }
+
+
+def _init_fc(key, s: FcSpec) -> dict:
+    kw, _ = jax.random.split(key)
+    std = math.sqrt(2.0 / s.in_dim)
+    return {
+        "w": jax.random.normal(kw, (s.in_dim, s.out_dim)) * std,
+        "b": jnp.zeros((s.out_dim,), jnp.float32),
+    }
+
+
+def init_params(key: jax.Array) -> dict:
+    """He-initialized parameter pytree: {stage_name: {w, b}} + branch."""
+    keys = jax.random.split(key, len(STAGES) + 2)
+    params: dict = {}
+    for k, s in zip(keys[: len(STAGES)], STAGES):
+        params[s.name] = _init_conv(k, s) if isinstance(s, ConvSpec) else _init_fc(k, s)
+    params[BRANCH_CONV.name] = _init_conv(keys[-2], BRANCH_CONV)
+    params[BRANCH_FC.name] = _init_fc(keys[-1], BRANCH_FC)
+    return params
+
+
+def param_count(params: dict) -> int:
+    return sum(int(math.prod(v.shape)) for leaf in params.values() for v in leaf.values())
+
+
+# ---------------------------------------------------------------------------
+# Forward functions
+# ---------------------------------------------------------------------------
+
+
+def _apply_conv(p: dict, s: ConvSpec, x: jax.Array, use_pallas: bool) -> jax.Array:
+    conv = pl_conv.conv2d if use_pallas else ref.conv2d
+    pool = pl_pool.maxpool2d if use_pallas else ref.maxpool2d
+    x = conv(x, p["w"], p["b"], stride=s.stride, padding=s.padding, act="relu")
+    if s.pool:
+        x = pool(x, s.pool_window, s.pool_stride)
+    return x
+
+
+def _apply_fc(p: dict, s: FcSpec, x: jax.Array, use_pallas: bool) -> jax.Array:
+    if x.ndim > 2:
+        x = x.reshape(x.shape[0], -1)
+    mm = pl_matmul.matmul_bias_act if use_pallas else ref.matmul_bias_act
+    return mm(x, p["w"], p["b"], act=s.act)
+
+
+def apply_stage(params: dict, name: str, x: jax.Array, use_pallas: bool = False) -> jax.Array:
+    """Run one main-branch stage on a batched NCHW / (B, D) input."""
+    spec = next(s for s in STAGES if s.name == name)
+    p = params[name]
+    if isinstance(spec, ConvSpec):
+        return _apply_conv(p, spec, x, use_pallas)
+    return _apply_fc(p, spec, x, use_pallas)
+
+
+def apply_branch(params: dict, x: jax.Array, use_pallas: bool = False) -> jax.Array:
+    """Side branch b1: (B, 64, 15, 15) activations -> (B, 2) logits."""
+    x = _apply_conv(params[BRANCH_CONV.name], BRANCH_CONV, x, use_pallas)
+    return _apply_fc(params[BRANCH_FC.name], BRANCH_FC, x, use_pallas)
+
+
+def forward_main(params: dict, x: jax.Array, use_pallas: bool = False) -> jax.Array:
+    """Full main-branch forward: (B, 3, 32, 32) -> (B, 2) logits."""
+    for s in STAGES:
+        x = apply_stage(params, s.name, x, use_pallas)
+    return x
+
+
+def forward_both(
+    params: dict, x: jax.Array, use_pallas: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """(branch_logits, main_logits) — the joint-training forward."""
+    h = x
+    branch_logits = None
+    for i, s in enumerate(STAGES, start=1):
+        h = apply_stage(params, s.name, h, use_pallas)
+        if i == BRANCH_AFTER:
+            branch_logits = apply_branch(params, h, use_pallas)
+    return branch_logits, h
+
+
+def entropy(logits: jax.Array, use_pallas: bool = False) -> tuple[jax.Array, jax.Array]:
+    """(probs, entropy-in-nats) for a batch of logits."""
+    fn = pl_ent.softmax_entropy if use_pallas else ref.softmax_entropy
+    return fn(logits)
+
+
+def infer_early_exit(
+    params: dict, x: jax.Array, threshold: float, use_pallas: bool = False
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Reference BranchyNet inference semantics (used by tests and fixtures).
+
+    Returns (predictions, exited_mask, branch_entropy). A sample exits at
+    b1 when its branch entropy < threshold; otherwise the main branch
+    classifies it. (Batched: both paths are computed, the mask selects —
+    the *serving* system in Rust actually skips the cloud stages.)
+    """
+    h = x
+    for i, s in enumerate(STAGES, start=1):
+        h = apply_stage(params, s.name, h, use_pallas)
+        if i == BRANCH_AFTER:
+            blog = apply_branch(params, h, use_pallas)
+    _, ent = entropy(blog, use_pallas)
+    exited = ent < threshold
+    bpred = jnp.argmax(blog, axis=-1)
+    mpred = jnp.argmax(h, axis=-1)
+    return jnp.where(exited, bpred, mpred), exited, ent

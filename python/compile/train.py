@@ -1,0 +1,158 @@
+"""Build-time training of B-AlexNet with the BranchyNet joint loss.
+
+Runs once inside `make artifacts` (never on the request path). Trains on
+the procedural cat/dog-like dataset (data.py) with the joint objective of
+the BranchyNet paper [5]:
+
+    L = CE(main_logits, y) + w_branch * CE(branch_logits, y)
+
+so the side branch learns a usable classifier. SGD with momentum on the
+pure-jnp (ref-op) forward — XLA fuses it well on CPU; the Pallas-kernel
+forward computes the identical function (asserted by the kernel tests) and
+is what gets exported by aot.py.
+
+Outputs: <out>/weights.npz (flat {path: array}) + training_log.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+BRANCH_LOSS_WEIGHT = 0.5
+LR = 0.01
+MOMENTUM = 0.9
+GRAD_CLIP = 5.0  # global-norm clip: keeps early high-loss steps stable
+BATCH = 64
+STEPS = 400
+TRAIN_N = 4096
+TEST_N = 512
+SEED = 7
+
+
+LABEL_SMOOTH = 0.08  # keeps confidence off the simplex corner so branch
+# entropy has a usable dynamic range (Fig. 6 threshold sweep)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    n = logits.shape[-1]
+    onehot = jax.nn.one_hot(labels, n)
+    target = onehot * (1.0 - LABEL_SMOOTH) + LABEL_SMOOTH / n
+    return -jnp.mean(jnp.sum(target * logp, axis=-1))
+
+
+def joint_loss(params: dict, x: jax.Array, y: jax.Array) -> jax.Array:
+    branch_logits, main_logits = model.forward_both(params, x, use_pallas=False)
+    return cross_entropy(main_logits, y) + BRANCH_LOSS_WEIGHT * cross_entropy(
+        branch_logits, y
+    )
+
+
+@jax.jit
+def train_step(params: dict, vel: dict, x: jax.Array, y: jax.Array):
+    loss, grads = jax.value_and_grad(joint_loss)(params, x, y)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g**2) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, GRAD_CLIP / (gnorm + 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    vel = jax.tree.map(lambda v, g: MOMENTUM * v - LR * g, vel, grads)
+    params = jax.tree.map(lambda p, v: p + v, params, vel)
+    return params, vel, loss
+
+
+@jax.jit
+def eval_step(params: dict, x: jax.Array, y: jax.Array):
+    branch_logits, main_logits = model.forward_both(params, x, use_pallas=False)
+    bacc = jnp.mean((jnp.argmax(branch_logits, -1) == y).astype(jnp.float32))
+    macc = jnp.mean((jnp.argmax(main_logits, -1) == y).astype(jnp.float32))
+    return bacc, macc
+
+
+def flatten_params(params: dict) -> dict[str, np.ndarray]:
+    return {
+        f"{stage}/{leaf}": np.asarray(arr)
+        for stage, leaves in params.items()
+        for leaf, arr in leaves.items()
+    }
+
+
+def unflatten_params(flat: dict[str, np.ndarray]) -> dict:
+    params: dict = {}
+    for key, arr in flat.items():
+        stage, leaf = key.split("/")
+        params.setdefault(stage, {})[leaf] = jnp.asarray(arr)
+    return params
+
+
+def load_weights(path: Path) -> dict:
+    with np.load(path) as z:
+        return unflatten_params({k: z[k] for k in z.files})
+
+
+def train(out_dir: Path, steps: int = STEPS, seed: int = SEED) -> dict:
+    t0 = time.time()
+    xs, ys = data.make_dataset(TRAIN_N, seed=seed)
+    xt, yt = data.make_dataset(TEST_N, seed=seed + 1)
+    xs, ys, xt, yt = map(jnp.asarray, (xs, ys, xt, yt))
+
+    params = model.init_params(jax.random.PRNGKey(seed))
+    vel = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.default_rng(seed)
+
+    log: list[dict] = []
+    for step in range(steps):
+        idx = rng.integers(0, TRAIN_N, size=BATCH)
+        params, vel, loss = train_step(params, vel, xs[idx], ys[idx])
+        if step % 50 == 0 or step == steps - 1:
+            bacc, macc = eval_step(params, xt, yt)
+            rec = {
+                "step": step,
+                "loss": float(loss),
+                "branch_acc": float(bacc),
+                "main_acc": float(macc),
+            }
+            log.append(rec)
+            print(
+                f"step {step:4d}  loss {rec['loss']:.4f}  "
+                f"branch_acc {rec['branch_acc']:.3f}  main_acc {rec['main_acc']:.3f}"
+            )
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    np.savez(out_dir / "weights.npz", **flatten_params(params))
+    (out_dir / "training_log.json").write_text(
+        json.dumps(
+            {
+                "steps": steps,
+                "batch": BATCH,
+                "lr": LR,
+                "momentum": MOMENTUM,
+                "branch_loss_weight": BRANCH_LOSS_WEIGHT,
+                "wall_seconds": time.time() - t0,
+                "history": log,
+            },
+            indent=2,
+        )
+    )
+    return params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", type=Path, default=Path("../artifacts"))
+    ap.add_argument("--steps", type=int, default=STEPS)
+    args = ap.parse_args()
+    train(args.out, steps=args.steps)
+
+
+if __name__ == "__main__":
+    main()

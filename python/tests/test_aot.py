@@ -1,0 +1,117 @@
+"""AOT export consistency: manifest <-> artifacts <-> model declarations.
+
+Requires `make artifacts` to have run (skipped otherwise) — these validate
+the actual shipped artifacts, not a rebuild.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(), reason="artifacts not built"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ART / "manifest.json").read_text())
+
+
+def test_manifest_stage_chain(manifest):
+    stages = manifest["stages"]
+    assert [s["name"] for s in stages] == list(model.STAGE_NAMES)
+    # Chain property: each stage's in_shape is the predecessor's out_shape.
+    prev = manifest["input_shape"]
+    for s in stages:
+        assert s["in_shape"] == prev
+        prev = s["out_shape"]
+
+
+def test_manifest_alpha_bytes(manifest):
+    for s, shape in zip(manifest["stages"], model.stage_shapes()):
+        assert s["out_bytes_per_sample"] == 4 * int(np.prod(shape))
+    assert manifest["input_bytes_per_sample"] == 4 * int(
+        np.prod(model.INPUT_SHAPE)
+    )
+
+
+def test_manifest_entropy_max(manifest):
+    assert manifest["entropy_max_nats"] == pytest.approx(math.log(2))
+
+
+def test_all_artifacts_exist_and_parse(manifest):
+    """Every referenced HLO file exists, is non-trivial, and has an ENTRY."""
+    refs = []
+    for s in manifest["stages"]:
+        for flavor in manifest["flavors"]:
+            refs += list(s["artifacts"][flavor].values())
+    for flavor in manifest["flavors"]:
+        refs += list(manifest["branch"]["artifacts"][flavor].values())
+        refs += list(manifest["full"]["artifacts"][flavor].values())
+    assert len(refs) == (8 + 1 + 1) * 2 * len(manifest["batch_sizes"])
+    for r in refs:
+        text = (ART / r).read_text()
+        assert "ENTRY" in text, r
+        assert "custom-call" not in text, f"{r} contains a custom-call"
+        # Regression: the default HLO printer elides big literals as
+        # `constant({...})`; the Rust text parser reads those as ZEROS and
+        # the model silently degenerates (all-ln2 entropies, Fig. 6 flat).
+        assert "constant({...})" not in text, f"{r} has elided constants"
+
+
+def test_batch_sizes_parametrize_entry_shapes(manifest):
+    """stage1's b1/b8 artifacts must declare different leading dims."""
+    s1 = manifest["stages"][0]
+    t1 = (ART / s1["artifacts"]["ref"]["1"]).read_text()
+    t8 = (ART / s1["artifacts"]["ref"]["8"]).read_text()
+    assert "f32[1,3,32,32]" in t1
+    assert "f32[8,3,32,32]" in t8
+
+
+def test_fixture_files_match_declared_shapes(manifest):
+    fx = manifest["fixtures"]
+    for key, meta in fx.items():
+        if not isinstance(meta, dict) or "shape" not in meta:
+            continue
+        path = ART / "fixtures" / meta["path"]
+        n_items = int(np.prod(meta["shape"]))
+        assert path.stat().st_size == 4 * n_items, key
+
+
+def test_fig6_fixtures_cover_blur_levels(manifest):
+    fig6 = manifest["fixtures"]["fig6"]
+    assert set(fig6) == {"none", "low", "mid", "high"}
+    for meta in fig6.values():
+        assert meta["shape"] == [48, 3, 32, 32]
+    assert len(manifest["fixtures"]["fig6_labels"]) == 48
+
+
+def test_expected_stage_fixtures_chain(manifest):
+    """Expected outputs exist for all 8 stages + branch probs/entropy."""
+    fx = manifest["fixtures"]
+    for i in range(1, 9):
+        assert f"expected_stage{i:02d}_b8" in fx
+    assert "expected_branch_probs_b8" in fx
+    assert "expected_branch_entropy_b8" in fx
+    ent = np.fromfile(
+        ART / "fixtures" / fx["expected_branch_entropy_b8"]["path"], dtype=np.float32
+    )
+    assert ent.shape == (8,)
+    assert np.all(ent >= 0) and np.all(ent <= math.log(2) + 1e-5)
+
+
+def test_flops_positive_and_ordered(manifest):
+    flops = [s["flops_per_sample"] for s in manifest["stages"]]
+    assert all(f > 0 for f in flops)
+    # conv2 is the FLOPs-heaviest stage in this geometry.
+    assert max(flops) == flops[1]

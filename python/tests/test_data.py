@@ -1,0 +1,81 @@
+"""Dataset + blur tests: class separability and the Fig. 6 blur mechanism."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile import data
+
+
+def test_dataset_shapes_and_determinism():
+    x1, y1 = data.make_dataset(16, seed=3)
+    x2, y2 = data.make_dataset(16, seed=3)
+    assert x1.shape == (16, 3, 32, 32) and x1.dtype == np.float32
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    x3, _ = data.make_dataset(16, seed=4)
+    assert not np.array_equal(x1, x3)
+
+
+def test_both_classes_present():
+    _, y = data.make_dataset(64, seed=0)
+    assert set(np.unique(y)) == {0, 1}
+
+
+def test_classes_differ_in_frequency_content():
+    """Stripes (class 1) must carry more high-frequency energy than blobs."""
+    x, y = data.make_dataset(128, seed=5)
+    gray = x.mean(axis=1)
+    # High-frequency proxy: mean squared horizontal+vertical gradient.
+    def hf(imgs):
+        gx = np.diff(imgs, axis=-1) ** 2
+        gy = np.diff(imgs, axis=-2) ** 2
+        return gx.mean(axis=(-1, -2)) + gy.mean(axis=(-1, -2))
+
+    e = hf(gray)
+    assert e[y == 1].mean() > 2.0 * e[y == 0].mean()
+
+
+def test_gaussian_kernel_normalized():
+    for k in (3, 5, 15, 65):
+        taps = data.gaussian_kernel1d(k)
+        assert taps.shape == (k,)
+        np.testing.assert_allclose(taps.sum(), 1.0, rtol=1e-6)
+        assert np.all(taps > 0)
+        # symmetric
+        np.testing.assert_allclose(taps, taps[::-1], rtol=1e-6)
+
+
+def test_blur_identity_below_threshold():
+    x, _ = data.make_dataset(4, seed=1)
+    np.testing.assert_array_equal(data.gaussian_blur(x, 0), x)
+    np.testing.assert_array_equal(data.gaussian_blur(x, 1), x)
+
+
+def test_blur_reduces_variance_monotonically():
+    """The paper's blur levels {5,15,65} must progressively smooth."""
+    x, _ = data.make_dataset(8, seed=2)
+    variances = [data.gaussian_blur(x, k).var() for k in (0, 5, 15, 65)]
+    assert variances[0] > variances[1] > variances[2] > variances[3]
+
+
+def test_blur_preserves_mean():
+    """A normalized blur is (approximately) mean-preserving."""
+    x, _ = data.make_dataset(4, seed=6)
+    b = data.gaussian_blur(x, 15)
+    np.testing.assert_allclose(b.mean(), x.mean(), atol=0.02)
+
+
+def test_blur_kernel_larger_than_image():
+    """ksize=65 on 32x32 images (the paper's 'high distortion') must work."""
+    x, _ = data.make_dataset(2, seed=7)
+    b = data.gaussian_blur(x, 65)
+    assert b.shape == x.shape
+    assert np.all(np.isfinite(b))
+    # Heavy blur approaches a constant image.
+    assert b.var() < 0.15 * x.var()
+
+
+def test_blur_levels_cover_paper():
+    assert data.BLUR_LEVELS == {"none": 0, "low": 5, "mid": 15, "high": 65}

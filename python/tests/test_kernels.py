@@ -1,0 +1,248 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps).
+
+This is the CORE correctness signal for the exported artifacts: the 'pl'
+flavor HLO is lowered from exactly these kernel implementations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, matmul, maxpool, ref, softmax_entropy
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_bias_act_matches_ref(m, k, n, act, seed):
+    kx, ky, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (m, k))
+    y = jax.random.normal(ky, (k, n))
+    b = jax.random.normal(kb, (n,))
+    got = matmul.matmul_bias_act(x, y, b, act=act)
+    want = ref.matmul_bias_act(x, y, b, act=act)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 130, 140), (1, 1, 1)])
+def test_matmul_block_boundaries(shape):
+    """Exact block multiples and oddballs around the 128 MXU tile."""
+    m, k, n = shape
+    x, y = _rand(0, (m, k)), _rand(1, (k, n))
+    b = _rand(2, (n,))
+    np.testing.assert_allclose(
+        matmul.matmul_bias_act(x, y, b),
+        ref.matmul_bias_act(x, y, b),
+        rtol=5e-4,
+        atol=5e-4,
+    )
+
+
+@pytest.mark.parametrize("blocks", [(32, 32, 32), (64, 128, 16), (8, 8, 8)])
+def test_matmul_block_shape_invariance(blocks):
+    """The result must not depend on the chosen tiling."""
+    bm, bn, bk = blocks
+    x, y, b = _rand(3, (100, 60)), _rand(4, (60, 44)), _rand(5, (44,))
+    got = matmul.matmul_bias_act(x, y, b, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(got, ref.matmul_bias_act(x, y, b), rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul.matmul_bias_act(_rand(0, (3, 4)), _rand(1, (5, 6)), _rand(2, (6,)))
+    with pytest.raises(ValueError):
+        matmul.matmul_bias_act(_rand(0, (3, 4)), _rand(1, (4, 6)), _rand(2, (7,)))
+    with pytest.raises(ValueError):
+        matmul.matmul_bias_act(
+            _rand(0, (3, 4)), _rand(1, (4, 6)), _rand(2, (6,)), act="gelu"
+        )
+
+
+def test_matmul_zero_k_padding_exact():
+    """K-padding with zeros must not perturb the contraction."""
+    x, y, b = _rand(6, (5, 3)), _rand(7, (3, 5)), jnp.zeros((5,))
+    got = matmul.matmul_bias_act(x, y, b, block_k=128)
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=RTOL, atol=ATOL)
+
+
+def test_vmem_budget():
+    """Default tiling must fit a 16 MiB VMEM core with headroom."""
+    assert matmul.vmem_bytes(128, 128, 128) < 16 * 2**20 / 4
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    c=st.integers(1, 8),
+    o=st.integers(1, 8),
+    hw=st.integers(5, 20),
+    kern=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    pad=st.integers(0, 2),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(n, c, o, hw, kern, stride, pad, act, seed):
+    if hw + 2 * pad < kern:
+        return
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k0, (n, c, hw, hw))
+    w = jax.random.normal(k1, (o, c, kern, kern))
+    b = jax.random.normal(k2, (o,))
+    got = conv2d.conv2d(x, w, b, stride=stride, padding=pad, act=act)
+    want = ref.conv2d(x, w, b, stride=stride, padding=pad, act=act)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_conv2d_channel_mismatch():
+    with pytest.raises(ValueError):
+        conv2d.conv2d(_rand(0, (1, 3, 8, 8)), _rand(1, (4, 5, 3, 3)), _rand(2, (4,)))
+
+
+def test_conv2d_alexnet_shapes():
+    """The exact stage-1 and stage-3 geometries used in B-AlexNet."""
+    x = _rand(0, (2, 3, 32, 32))
+    w = _rand(1, (64, 3, 5, 5), 0.1)
+    b = _rand(2, (64,))
+    got = conv2d.conv2d(x, w, b, stride=1, padding=2, act="relu")
+    assert got.shape == (2, 64, 32, 32)
+    np.testing.assert_allclose(
+        got, ref.conv2d(x, w, b, 1, 2, "relu"), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_im2col_identity_kernel():
+    """1x1 im2col is just a transpose-reshape."""
+    x = _rand(3, (2, 4, 6, 6))
+    cols = ref.im2col(x, 1, 1, 1, 0)
+    assert cols.shape == (2 * 6 * 6, 4)
+    np.testing.assert_allclose(
+        cols.reshape(2, 6, 6, 4), jnp.transpose(x, (0, 2, 3, 1)), rtol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# maxpool
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    c=st.integers(1, 40),
+    hw=st.integers(3, 24),
+    window=st.sampled_from([2, 3]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref(n, c, hw, window, stride, seed):
+    if hw < window:
+        return
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, c, hw, hw))
+    got = maxpool.maxpool2d(x, window, stride)
+    want = ref.maxpool2d(x, window, stride)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_maxpool_channel_block_padding():
+    """Channel counts straddling the block size must slice cleanly."""
+    for c in (31, 32, 33, 65):
+        x = _rand(c, (1, c, 9, 9))
+        np.testing.assert_allclose(
+            maxpool.maxpool2d(x, 3, 2, block_c=32), ref.maxpool2d(x, 3, 2), rtol=1e-6
+        )
+
+
+def test_maxpool_rejects_small_input():
+    with pytest.raises(ValueError):
+        maxpool.maxpool2d(_rand(0, (1, 1, 2, 2)), window=3)
+
+
+def test_maxpool_is_max():
+    """Every output element equals the max of its window (brute check)."""
+    x = np.asarray(_rand(9, (1, 2, 7, 7)))
+    got = np.asarray(maxpool.maxpool2d(jnp.asarray(x), 3, 2))
+    for ch in range(2):
+        for i in range(got.shape[2]):
+            for j in range(got.shape[3]):
+                win = x[0, ch, 2 * i : 2 * i + 3, 2 * j : 2 * j + 3]
+                assert got[0, ch, i, j] == pytest.approx(win.max(), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# softmax + entropy
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 200),
+    c=st.integers(2, 10),
+    scale=st.floats(0.1, 50.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_entropy_matches_ref(b, c, scale, seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (b, c)) * scale
+    p, h = softmax_entropy.softmax_entropy(logits)
+    pr, hr = ref.softmax_entropy(logits)
+    np.testing.assert_allclose(p, pr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(h, hr, rtol=1e-5, atol=1e-6)
+
+
+def test_entropy_bounds_and_extremes():
+    """H in [0, ln C]; uniform hits the top, one-hot-ish hits ~0."""
+    c = 4
+    uniform = jnp.zeros((1, c))
+    _, h_uni = softmax_entropy.softmax_entropy(uniform)
+    np.testing.assert_allclose(h_uni, [np.log(c)], rtol=1e-6)
+
+    peaked = jnp.asarray([[100.0, 0.0, 0.0, 0.0]])
+    p, h_pk = softmax_entropy.softmax_entropy(peaked)
+    assert float(h_pk[0]) < 1e-6
+    assert float(p[0, 0]) > 0.999
+
+    rand = _rand(1, (64, c), 3.0)
+    _, h = softmax_entropy.softmax_entropy(rand)
+    assert np.all(np.asarray(h) >= -1e-6)
+    assert np.all(np.asarray(h) <= np.log(c) + 1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    p, _ = softmax_entropy.softmax_entropy(_rand(2, (300, 5), 10.0))
+    np.testing.assert_allclose(np.asarray(p).sum(axis=1), np.ones(300), rtol=1e-5)
+
+
+def test_entropy_extreme_logits_stable():
+    """No overflow/NaN for huge logit magnitudes."""
+    logits = jnp.asarray([[1e4, -1e4], [-1e4, 1e4], [1e4, 1e4]])
+    p, h = softmax_entropy.softmax_entropy(logits)
+    assert np.all(np.isfinite(np.asarray(p)))
+    assert np.all(np.isfinite(np.asarray(h)))
+    np.testing.assert_allclose(h[2], np.log(2), rtol=1e-5)

@@ -1,0 +1,122 @@
+"""L2 tests: B-AlexNet topology, shapes, early-exit semantics, pallas/ref parity."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return jax.random.normal(jax.random.PRNGKey(1), (4, *model.INPUT_SHAPE))
+
+
+def test_stage_shapes_chain():
+    """Declared stage shapes must match actual forward shapes."""
+    shapes = model.stage_shapes()
+    assert shapes == [
+        (64, 15, 15),
+        (96, 7, 7),
+        (128, 7, 7),
+        (128, 7, 7),
+        (96, 3, 3),
+        (256,),
+        (128,),
+        (2,),
+    ]
+
+
+def test_forward_shapes_match_declared(params, batch):
+    h = batch
+    for spec, want in zip(model.STAGES, model.stage_shapes()):
+        h = model.apply_stage(params, spec.name, h)
+        assert h.shape == (4, *want), spec.name
+
+
+def test_alpha_profile_non_monotonic():
+    """conv1's output is larger than the raw input — the property that
+    makes naive 'split as early as possible' suboptimal (paper §IV-C)."""
+    sizes = [model.output_bytes(s) for s in model.stage_shapes()]
+    input_bytes = model.output_bytes(model.INPUT_SHAPE)
+    assert sizes[0] > input_bytes
+    assert sizes[-1] < input_bytes
+    assert any(sizes[i] < sizes[i + 1] for i in range(len(sizes) - 1))
+
+
+def test_branch_consumes_stage1(params, batch):
+    h = model.apply_stage(params, "conv1", batch)
+    logits = model.apply_branch(params, h)
+    assert logits.shape == (4, model.NUM_CLASSES)
+
+
+def test_forward_both_consistent_with_main(params, batch):
+    bl, ml = model.forward_both(params, batch)
+    ml2 = model.forward_main(params, batch)
+    np.testing.assert_allclose(ml, ml2, rtol=1e-6)
+    assert bl.shape == ml.shape
+
+
+def test_pallas_and_ref_paths_agree(params, batch):
+    """The exported 'pl' artifacts compute the same function as 'ref'."""
+    bl_r, ml_r = model.forward_both(params, batch, use_pallas=False)
+    bl_p, ml_p = model.forward_both(params, batch, use_pallas=True)
+    np.testing.assert_allclose(bl_p, bl_r, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(ml_p, ml_r, rtol=1e-3, atol=1e-4)
+
+
+def test_early_exit_threshold_monotone(params, batch):
+    """Raising the threshold can only exit MORE samples."""
+    prev = 0.0
+    for thr in (0.0, 0.1, 0.3, 0.5, math.log(2)):
+        _, exited, _ = model.infer_early_exit(params, batch, thr)
+        frac = float(exited.mean())
+        assert frac >= prev - 1e-9
+        prev = frac
+
+
+def test_early_exit_extremes(params, batch):
+    """thr=0 exits nothing; thr=ln(2)+eps exits everything (2 classes)."""
+    _, exited0, _ = model.infer_early_exit(params, batch, 0.0)
+    assert not bool(exited0.any())
+    _, exited1, _ = model.infer_early_exit(params, batch, math.log(2) + 1e-3)
+    assert bool(exited1.all())
+
+
+def test_exit_prediction_source(params, batch):
+    """Exited samples use branch argmax; others use main argmax."""
+    h = model.apply_stage(params, "conv1", batch)
+    blog = model.apply_branch(params, h)
+    mlog = model.forward_main(params, batch)
+    pred, exited, _ = model.infer_early_exit(params, batch, 0.4)
+    bpred = jnp.argmax(blog, -1)
+    mpred = jnp.argmax(mlog, -1)
+    for i in range(batch.shape[0]):
+        want = bpred[i] if bool(exited[i]) else mpred[i]
+        assert int(pred[i]) == int(want)
+
+
+def test_param_count_structure(params):
+    """Every stage + the branch has w and b."""
+    names = set(params.keys())
+    assert names == set(model.STAGE_NAMES) | {"b1_conv", "b1_fc"}
+    assert model.param_count(params) > 500_000  # AlexNet-scale, not a toy
+
+
+def test_init_deterministic():
+    a = model.init_params(jax.random.PRNGKey(42))
+    b = model.init_params(jax.random.PRNGKey(42))
+    for k in a:
+        np.testing.assert_array_equal(a[k]["w"], b[k]["w"])

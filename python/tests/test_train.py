@@ -1,0 +1,83 @@
+"""Training sanity: joint loss decreases, weights round-trip, exits degrade
+with blur (the trained-model precondition for Fig. 6)."""
+
+from __future__ import annotations
+
+import math
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model, train
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_cross_entropy_label_smoothing():
+    """Perfect prediction still pays the smoothing floor (> 0)."""
+    logits = jnp.asarray([[50.0, -50.0]])
+    labels = jnp.asarray([0])
+    loss = train.cross_entropy(logits, labels)
+    assert float(loss) > 0.0
+    # And the floor is exactly the smoothed-target entropy term.
+    assert float(loss) == pytest.approx(train.LABEL_SMOOTH / 2 * 100.0, rel=1e-3)
+
+
+def test_short_training_reduces_loss(tmp_path):
+    """A 30-step run must cut the joint loss by >50% on this easy task."""
+    params = train.train(tmp_path, steps=30, seed=123)
+    log = __import__("json").loads((tmp_path / "training_log.json").read_text())
+    hist = log["history"]
+    assert hist[-1]["loss"] < 0.5 * hist[0]["loss"]
+    assert (tmp_path / "weights.npz").exists()
+
+
+def test_weights_roundtrip(tmp_path):
+    params = model.init_params(jax.random.PRNGKey(9))
+    flat = train.flatten_params(params)
+    np.savez(tmp_path / "w.npz", **flat)
+    loaded = train.load_weights(tmp_path / "w.npz")
+    for stage in params:
+        for leaf in params[stage]:
+            np.testing.assert_array_equal(params[stage][leaf], loaded[stage][leaf])
+
+
+@pytest.mark.skipif(not (ART / "weights.npz").exists(), reason="artifacts not built")
+def test_trained_model_accuracy():
+    """The shipped weights must actually classify held-out data."""
+    params = train.load_weights(ART / "weights.npz")
+    xs, ys = data.make_dataset(256, seed=1234)
+    _, ml = model.forward_both(params, jnp.asarray(xs))
+    acc = float(jnp.mean((jnp.argmax(ml, -1) == jnp.asarray(ys)).astype(jnp.float32)))
+    assert acc > 0.9, f"main-branch accuracy {acc}"
+
+
+@pytest.mark.skipif(not (ART / "weights.npz").exists(), reason="artifacts not built")
+def test_blur_degrades_branch_confidence():
+    """Fig. 6 precondition: mean branch entropy rises with blur level."""
+    params = train.load_weights(ART / "weights.npz")
+    xs, _ = data.make_dataset(48, seed=77)
+    ents = []
+    for k in (0, 5, 15, 65):
+        xb = jnp.asarray(data.gaussian_blur(xs, k))
+        _, _, ent = model.infer_early_exit(params, xb, threshold=0.3)
+        ents.append(float(ent.mean()))
+    assert ents[0] < ents[1] < ents[3], ents
+    assert ents[0] < ents[2] < ents[3] + 1e-6, ents
+
+
+@pytest.mark.skipif(not (ART / "weights.npz").exists(), reason="artifacts not built")
+def test_exit_probability_monotone_in_threshold_trained():
+    """P[exit] as a function of threshold is a CDF — nondecreasing 0 -> 1."""
+    params = train.load_weights(ART / "weights.npz")
+    xs, _ = data.make_dataset(48, seed=78)
+    x = jnp.asarray(xs)
+    fracs = []
+    for thr in np.linspace(0.0, math.log(2), 8):
+        _, exited, _ = model.infer_early_exit(params, x, float(thr))
+        fracs.append(float(exited.mean()))
+    assert all(b >= a - 1e-9 for a, b in zip(fracs, fracs[1:]))
+    assert fracs[0] == 0.0

@@ -1,0 +1,37 @@
+//! Shared setup for the bench targets: artifacts dir discovery, manifest
+//! + measured profile loading (profiling on the spot if no cache).
+
+use std::path::PathBuf;
+
+use branchyserve::config::settings::Flavor;
+use branchyserve::model::Manifest;
+use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
+use branchyserve::runtime::InferenceEngine;
+
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("BRANCHYSERVE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+pub fn manifest_and_profile() -> anyhow::Result<(Manifest, ProfileReport)> {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let cached = dir.join("profile.json");
+    let report = if cached.exists() {
+        ProfileReport::load(&cached)?
+    } else {
+        let engine = InferenceEngine::open(&dir, manifest.clone(), Flavor::Ref, "bench")?;
+        let r = profiler::measure(&engine, ProfileOptions::default())?;
+        r.save(&cached).ok();
+        r
+    };
+    Ok((manifest, report))
+}
+
+#[allow(dead_code)]
+pub fn engine(flavor: Flavor, name: &str) -> anyhow::Result<InferenceEngine> {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    InferenceEngine::open(&dir, manifest, flavor, name)
+}

@@ -1,0 +1,142 @@
+//! Coordinator/serving-path benchmarks on the real artifacts:
+//! * closed-loop single-request latency per strategy (edge-only /
+//!   cloud-only / optimal split) — the serving twin of Fig. 4's model;
+//! * open-loop throughput + tail latency at increasing offered load;
+//! * batcher + protocol microbenchmarks (pure L3 overhead, no XLA).
+//!
+//!     cargo bench --bench coordinator
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use branchyserve::config::settings::{Flavor, Strategy};
+use branchyserve::coordinator::{Coordinator, CoordinatorConfig};
+use branchyserve::harness::{bench, print_table, BenchResult, Table};
+use branchyserve::network::bandwidth::{LinkModel, Profile};
+use branchyserve::network::Channel;
+use branchyserve::partition::{self, PartitionPlan};
+use branchyserve::server::protocol::{Request, Response};
+use branchyserve::util::timefmt::{format_rate, format_secs};
+use branchyserve::workload::{ImageSource, LoadGen};
+
+fn main() -> anyhow::Result<()> {
+    branchyserve::util::logger::init();
+    let (manifest, report) = common::manifest_and_profile()?;
+    let gamma = 5.0;
+    let link = LinkModel::from_profile(Profile::ThreeG);
+    let profile = report.to_delay_profile(gamma);
+    let desc = manifest.to_desc(0.6);
+
+    // --- closed-loop latency per strategy
+    let mut rows: Vec<BenchResult> = Vec::new();
+    for strategy in [Strategy::ShortestPath, Strategy::EdgeOnly, Strategy::CloudOnly] {
+        let plan: PartitionPlan =
+            partition::plan_with_strategy(strategy, &desc, &profile, link, 1e-9, false);
+        let label = format!(
+            "infer_sync {} (split '{}')",
+            strategy.as_str(),
+            plan.split_label(&desc)
+        );
+        let edge = common::engine(Flavor::Ref, "bench-edge")?;
+        let cloud = common::engine(Flavor::Ref, "bench-cloud")?;
+        edge.warmup()?;
+        cloud.warmup()?;
+        let coordinator = Coordinator::start(
+            edge,
+            cloud,
+            Arc::new(Channel::from_link(link)),
+            plan,
+            CoordinatorConfig {
+                entropy_threshold: 0.4,
+                batch_timeout: Duration::from_micros(200),
+                ..Default::default()
+            },
+        );
+        let mut source = ImageSource::new(5);
+        rows.push(bench(&label, Duration::from_millis(1500), || {
+            let (img, _) = source.sample();
+            let resp = coordinator.infer_sync(img).unwrap();
+            std::hint::black_box(resp.class);
+        }));
+        coordinator.shutdown();
+    }
+    print_table("closed-loop single-request latency (gamma=5, 3G)", &rows);
+
+    // --- open-loop load sweep on the optimal plan
+    let plan = partition::plan_with_strategy(
+        Strategy::ShortestPath,
+        &desc,
+        &profile,
+        link,
+        1e-9,
+        false,
+    );
+    let mut table = Table::new(&[
+        "offered rps", "completed", "rejected", "throughput", "exit %", "mean", "p95", "p99",
+    ]);
+    for &rate in &[20.0, 60.0, 120.0] {
+        let edge = common::engine(Flavor::Ref, "load-edge")?;
+        let cloud = common::engine(Flavor::Ref, "load-cloud")?;
+        edge.warmup()?;
+        cloud.warmup()?;
+        let coordinator = Coordinator::start(
+            edge,
+            cloud,
+            Arc::new(Channel::from_link(link)),
+            plan.clone(),
+            CoordinatorConfig {
+                entropy_threshold: 0.4,
+                queue_capacity: 256,
+                ..Default::default()
+            },
+        );
+        let gen = LoadGen {
+            rate_rps: rate,
+            duration: Duration::from_secs(4),
+            seed: 9,
+        };
+        let r = gen.run(&coordinator);
+        table.row(vec![
+            format!("{rate:.0}"),
+            r.completed.to_string(),
+            r.rejected.to_string(),
+            format_rate(r.throughput()),
+            format!("{:.1}", r.exit_rate() * 100.0),
+            format_secs(r.mean_latency()),
+            format_secs(r.p(95.0)),
+            format_secs(r.p(99.0)),
+        ]);
+        coordinator.shutdown();
+    }
+    println!("\n=== open-loop load sweep (optimal plan) ===");
+    println!("{}", table.render());
+
+    // --- pure-L3 microbenches
+    let mut rows = Vec::new();
+    let mut source = ImageSource::new(1);
+    let (img, _) = source.sample();
+    rows.push(bench("protocol encode+decode INFER", Duration::from_millis(200), || {
+        let req = Request::Infer(img.clone());
+        let decoded = Request::decode(&req.encode()).unwrap();
+        std::hint::black_box(matches!(decoded, Request::Infer(_)));
+    }));
+    let resp = Response::Result {
+        id: 1,
+        class: 1,
+        exited_early: true,
+        entropy: 0.2,
+        latency_s: 0.01,
+    };
+    rows.push(bench("protocol encode+decode RESULT", Duration::from_millis(200), || {
+        let decoded = Response::decode(&resp.encode()).unwrap();
+        std::hint::black_box(matches!(decoded, Response::Result { .. }));
+    }));
+    rows.push(bench("image generation (workload)", Duration::from_millis(200), || {
+        let (img, _) = source.sample();
+        std::hint::black_box(img.len());
+    }));
+    print_table("L3 microbenchmarks", &rows);
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Regenerates paper Figure 5: the partition layer chosen by the
+//! optimizer vs the processing factor gamma, for 3G and 4G, one curve per
+//! exit probability in {0.2, 0.5, 0.8, 1.0}.
+//!
+//!     cargo bench --bench fig5
+
+mod common;
+
+use branchyserve::experiments::fig5;
+use branchyserve::harness::Table;
+use branchyserve::network::bandwidth::Profile;
+
+fn main() -> anyhow::Result<()> {
+    branchyserve::util::logger::init();
+    let (manifest, report) = common::manifest_and_profile()?;
+    let desc = manifest.to_desc(0.0);
+    let gammas = fig5::gamma_grid(25, 2000.0);
+    let curves = fig5::run(&desc, &report.to_delay_profile(1.0), &gammas, 1e-9);
+
+    for net in [Profile::ThreeG, Profile::FourG] {
+        println!("\n### Fig. 5 — {} (chosen partition layer per gamma)", net.name());
+        let headers: Vec<String> = std::iter::once("gamma".to_string())
+            .chain(fig5::PROBABILITIES.iter().map(|p| format!("p={p}")))
+            .collect();
+        let headers_ref: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut table = Table::new(&headers_ref);
+        for (i, &gamma) in gammas.iter().enumerate() {
+            let mut row = vec![format!("{gamma:.0}")];
+            for &p in &fig5::PROBABILITIES {
+                let c = curves
+                    .iter()
+                    .find(|c| c.network == net && c.probability == p)
+                    .unwrap();
+                row.push(c.points[i].2.clone());
+            }
+            table.row(row);
+        }
+        println!("{}", table.render());
+    }
+
+    // Shape checks:
+    // 1) the split never moves deeper as gamma grows (per curve).
+    for c in &curves {
+        let splits: Vec<usize> = c.points.iter().map(|&(_, s, _)| s).collect();
+        for w in splits.windows(2) {
+            assert!(
+                w[1] <= w[0],
+                "{:?} p={}: split moved deeper with weaker edge: {splits:?}",
+                c.network,
+                c.probability
+            );
+        }
+    }
+    // 2) 4G reaches cloud-only at gamma no larger than 3G (per p < 1).
+    let first_cloud = |net: Profile, p: f64| {
+        curves
+            .iter()
+            .find(|c| c.network == net && c.probability == p)
+            .unwrap()
+            .points
+            .iter()
+            .find(|&&(_, s, _)| s == 0)
+            .map(|&(g, _, _)| g)
+    };
+    for &p in &[0.2, 0.5, 0.8] {
+        if let (Some(g3), Some(g4)) = (
+            first_cloud(Profile::ThreeG, p),
+            first_cloud(Profile::FourG, p),
+        ) {
+            assert!(g4 <= g3 + 1e-9, "p={p}: 4G {g4} vs 3G {g3}");
+        }
+    }
+    println!("\nall Fig. 5 shape checks PASSED");
+    Ok(())
+}

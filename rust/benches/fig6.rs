@@ -1,0 +1,74 @@
+//! Regenerates paper Figure 6: probability of side-branch classification
+//! vs entropy threshold under Gaussian blur {none, 5, 15, 65}, measured
+//! on the trained B-AlexNet through the PJRT runtime with the paper's
+//! 48-sample batches.
+//!
+//!     cargo bench --bench fig6
+
+mod common;
+
+use branchyserve::config::settings::Flavor;
+use branchyserve::experiments::fig6;
+use branchyserve::harness::Table;
+
+fn main() -> anyhow::Result<()> {
+    branchyserve::util::logger::init();
+    let engine = common::engine(Flavor::Ref, "fig6")?;
+    let results = fig6::run(&engine)?;
+    let max_nats = engine.manifest().entropy_max_nats;
+
+    let headers: Vec<String> = std::iter::once("threshold".to_string())
+        .chain(results.iter().map(|r| format!("{} (k={})", r.level, r.blur_ksize)))
+        .collect();
+    let headers_ref: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut table = Table::new(&headers_ref);
+    let points = 15;
+    for i in 0..points {
+        let thr = i as f64 / (points - 1) as f64 * max_nats;
+        let mut row = vec![format!("{thr:.3}")];
+        for r in &results {
+            row.push(format!("{:.3}", r.exit_probability(thr)));
+        }
+        table.row(row);
+    }
+    println!("### Fig. 6 — P[classified at side branch] vs entropy threshold");
+    println!("{}", table.render());
+    for r in &results {
+        println!(
+            "{:>5} (k={:>2}): mean entropy {:.4} nats, branch accuracy {:.3}",
+            r.level,
+            r.blur_ksize,
+            r.entropies.iter().map(|&e| e as f64).sum::<f64>() / r.entropies.len() as f64,
+            r.branch_accuracy
+        );
+    }
+
+    // Shape checks — the paper's claim: "as distortion level increases,
+    // the probability that a sample is classified at a side branch
+    // decreases" (dominance of less-blurred curves), with curves rising
+    // from 0 to 1 across the threshold range.
+    for r in &results {
+        assert!((r.exit_probability(0.0) - 0.0).abs() < 1e-12);
+        assert!((r.exit_probability(max_nats + 1e-6) - 1.0).abs() < 1e-12);
+    }
+    let mean_ent: Vec<f64> = results
+        .iter()
+        .map(|r| r.entropies.iter().map(|&e| e as f64).sum::<f64>() / r.entropies.len() as f64)
+        .collect();
+    for w in mean_ent.windows(2) {
+        assert!(
+            w[1] > w[0] - 1e-9,
+            "mean entropy must not decrease with blur: {mean_ent:?}"
+        );
+    }
+    // Curve dominance at the operating region (mid thresholds).
+    for thr in [0.2, 0.3, 0.4] {
+        let ps: Vec<f64> = results.iter().map(|r| r.exit_probability(thr)).collect();
+        assert!(
+            ps[0] >= ps[1] && ps[1] >= ps[2] && ps[2] >= ps[3],
+            "exit probability should fall with blur at thr={thr}: {ps:?}"
+        );
+    }
+    println!("\nall Fig. 6 shape checks PASSED");
+    Ok(())
+}

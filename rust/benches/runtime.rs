@@ -1,0 +1,97 @@
+//! Runtime execution benchmarks over the real artifacts:
+//! * per-stage latency at each batch size (amortization of batching);
+//! * composed per-stage pipeline vs the monolithic full-model artifact
+//!   (the L2 fusion ablation: what stage-boundary materialization costs);
+//! * Pallas-lowered ('pl') vs XLA-fused ('ref') artifact flavors.
+//!
+//!     cargo bench --bench runtime
+
+mod common;
+
+use std::time::Duration;
+
+use branchyserve::config::settings::Flavor;
+use branchyserve::harness::{bench, print_table, BenchResult};
+use branchyserve::runtime::HostTensor;
+
+fn main() -> anyhow::Result<()> {
+    branchyserve::util::logger::init();
+    let engine = common::engine(Flavor::Ref, "bench-ref")?;
+    let m = engine.manifest().clone();
+    let n = m.num_stages();
+
+    // --- per-stage at batch sizes
+    let mut rows: Vec<BenchResult> = Vec::new();
+    for &b in &m.batch_sizes {
+        let mut shape = vec![b];
+        shape.extend(&m.input_shape);
+        let x = HostTensor::zeros(shape);
+        rows.push(bench(
+            &format!("stage1 conv1 b={b} (per sample)"),
+            Duration::from_millis(200),
+            || {
+                let out = engine.run_stages(1, 1, &x).unwrap();
+                std::hint::black_box(out.len());
+            },
+        ));
+    }
+    print_table("stage-1 latency per batch size (whole batch)", &rows);
+
+    // --- composed pipeline vs monolith, batch = max
+    let b = engine.max_batch();
+    let mut shape = vec![b];
+    shape.extend(&m.input_shape);
+    let x = HostTensor::zeros(shape);
+    let mut rows = Vec::new();
+    rows.push(bench(
+        &format!("composed stages 1..={n} b={b}"),
+        Duration::from_millis(300),
+        || {
+            let out = engine.run_stages(1, n, &x).unwrap();
+            std::hint::black_box(out.len());
+        },
+    ));
+    rows.push(bench(
+        &format!("monolithic full model  b={b}"),
+        Duration::from_millis(300),
+        || {
+            let out = engine.run_full(&x).unwrap();
+            std::hint::black_box(out.len());
+        },
+    ));
+    print_table("fusion ablation: composed stages vs monolith", &rows);
+
+    // --- branch head
+    let mut bshape = vec![b];
+    bshape.extend(&m.branch.in_shape);
+    let acts = HostTensor::zeros(bshape);
+    let mut rows = Vec::new();
+    rows.push(bench(
+        &format!("branch b1 (probs+entropy) b={b}"),
+        Duration::from_millis(200),
+        || {
+            let out = engine.run_branch(&acts).unwrap();
+            std::hint::black_box(out.entropy.len());
+        },
+    ));
+    print_table("side-branch head", &rows);
+
+    // --- flavor comparison (pl = Pallas-lowered interpret-mode HLO)
+    let engine_pl = common::engine(Flavor::Pallas, "bench-pl")?;
+    let mut rows = Vec::new();
+    for (flavor, eng) in [("ref", &engine), ("pl", &engine_pl)] {
+        let mut shape = vec![1];
+        shape.extend(&m.input_shape);
+        let x1 = HostTensor::zeros(shape);
+        rows.push(bench(
+            &format!("stage1 conv1 flavor={flavor} b=1"),
+            Duration::from_millis(300),
+            || {
+                let out = eng.run_stages(1, 1, &x1).unwrap();
+                std::hint::black_box(out.len());
+            },
+        ));
+    }
+    print_table("kernel flavor: XLA-fused ref vs Pallas-lowered pl", &rows);
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Solver performance: G'_BDNN construction + Dijkstra vs the O(N^2)
+//! brute-force baseline, across chain depth and branch density. The
+//! paper's complexity argument (§V: polynomial shortest path vs
+//! exhaustive search) made concrete.
+//!
+//!     cargo bench --bench solver
+
+use std::time::Duration;
+
+use branchyserve::harness::{bench, print_table, BenchResult};
+use branchyserve::model::synthetic;
+use branchyserve::network::bandwidth::LinkModel;
+use branchyserve::partition::{brute, solver};
+use branchyserve::timing::Estimator;
+
+fn main() {
+    branchyserve::util::logger::init();
+    let link = LinkModel::new(5.85, 0.0);
+    let mut rows: Vec<BenchResult> = Vec::new();
+
+    for &n in &[8usize, 64, 256, 1024, 4096] {
+        for &branch_every in &[0usize, 8] {
+            let (desc, profile) = synthetic::deep_chain(n, branch_every, 0.3, 42);
+            let label_suffix = if branch_every == 0 {
+                "no branches".to_string()
+            } else {
+                format!("branch every {branch_every}")
+            };
+
+            rows.push(bench(
+                &format!("compact graph n={n} ({label_suffix})"),
+                Duration::from_millis(150),
+                || {
+                    let plan = solver::solve(&desc, &profile, link, 1e-9, true);
+                    std::hint::black_box(plan.split_after);
+                },
+            ));
+            rows.push(bench(
+                &format!("faithful G'   n={n} ({label_suffix})"),
+                Duration::from_millis(150),
+                || {
+                    let plan = solver::solve_faithful(&desc, &profile, link, 1e-9, true);
+                    std::hint::black_box(plan.split_after);
+                },
+            ));
+            rows.push(bench(
+                &format!("brute-force   n={n} ({label_suffix})"),
+                Duration::from_millis(150),
+                || {
+                    let est = Estimator::new(&desc, &profile, link).paper_mode();
+                    let plan = brute::solve(&est);
+                    std::hint::black_box(plan.split_after);
+                },
+            ));
+        }
+    }
+    print_table("partition solver scaling", &rows);
+
+    // Sanity: both agree on the B-AlexNet-sized instance.
+    let (desc, profile) = synthetic::deep_chain(8, 4, 0.5, 7);
+    let sp = solver::solve(&desc, &profile, link, 1e-9, true);
+    let est = Estimator::new(&desc, &profile, link).paper_mode();
+    let bf = brute::solve(&est);
+    assert!(
+        (sp.expected_time_s - bf.expected_time_s).abs() < 1e-9,
+        "solver {} vs brute {}",
+        sp.expected_time_s,
+        bf.expected_time_s
+    );
+    println!("\nsolver == brute force on sanity instance: OK");
+}

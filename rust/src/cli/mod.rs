@@ -1,0 +1,421 @@
+//! Declarative CLI parser (clap is unavailable offline — DESIGN.md §3).
+//!
+//! Supports subcommands, long/short flags, `--flag value` and
+//! `--flag=value` forms, boolean switches, defaults, required flags, and
+//! generated `--help` text at both program and subcommand level.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct Flag {
+    pub name: &'static str,
+    pub short: Option<char>,
+    /// Boolean switch if false; value-taking otherwise.
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub required: bool,
+    pub help: &'static str,
+}
+
+impl Flag {
+    pub fn value(name: &'static str, help: &'static str) -> Flag {
+        Flag {
+            name,
+            short: None,
+            takes_value: true,
+            default: None,
+            required: false,
+            help,
+        }
+    }
+
+    pub fn switch(name: &'static str, help: &'static str) -> Flag {
+        Flag {
+            name,
+            short: None,
+            takes_value: false,
+            default: None,
+            required: false,
+            help,
+        }
+    }
+
+    pub fn short(mut self, c: char) -> Flag {
+        self.short = Some(c);
+        self
+    }
+
+    pub fn default(mut self, v: &'static str) -> Flag {
+        self.default = Some(v);
+        self
+    }
+
+    pub fn required(mut self) -> Flag {
+        self.required = true;
+        self
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<Flag>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command {
+            name,
+            about,
+            flags: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, f: Flag) -> Command {
+        self.flags.push(f);
+        self
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    /// Flags valid before/without a subcommand (e.g. --config).
+    pub global_flags: Vec<Flag>,
+    pub commands: Vec<Command>,
+}
+
+/// Parse outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Parsed {
+    /// Help was requested; the rendered text is returned for printing.
+    Help(String),
+    /// A subcommand was matched.
+    Run(Invocation),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Invocation {
+    pub command: String,
+    pub values: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Invocation {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name}: '{v}' is not a number")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("{0}")]
+pub struct CliError(pub String);
+
+impl Cli {
+    pub fn parse<I: IntoIterator<Item = String>>(&self, args: I) -> Result<Parsed, CliError> {
+        let args: Vec<String> = args.into_iter().collect();
+        let mut iter = args.into_iter().peekable();
+
+        // Program-level flags until a subcommand shows up.
+        let mut global_values = BTreeMap::new();
+        let mut global_switches = Vec::new();
+        let command = loop {
+            match iter.next() {
+                None => return Ok(Parsed::Help(self.render_help(None))),
+                Some(a) if a == "--help" || a == "-h" || a == "help" => {
+                    // `help <cmd>` form:
+                    if let Some(next) = iter.peek() {
+                        if let Some(cmd) = self.commands.iter().find(|c| c.name == *next) {
+                            return Ok(Parsed::Help(self.render_help(Some(cmd))));
+                        }
+                    }
+                    return Ok(Parsed::Help(self.render_help(None)));
+                }
+                Some(a) if a.starts_with('-') => {
+                    self.consume_flag(
+                        &self.global_flags,
+                        &a,
+                        &mut iter,
+                        &mut global_values,
+                        &mut global_switches,
+                    )?;
+                }
+                Some(a) => break a,
+            }
+        };
+
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == command)
+            .ok_or_else(|| {
+                CliError(format!(
+                    "unknown command '{command}' (try '{} --help')",
+                    self.program
+                ))
+            })?;
+
+        let mut values = global_values;
+        let mut switches = global_switches;
+        let mut positionals = Vec::new();
+        while let Some(a) = iter.next() {
+            if a == "--help" || a == "-h" {
+                return Ok(Parsed::Help(self.render_help(Some(cmd))));
+            }
+            if a.starts_with('-') && a.len() > 1 {
+                // Try command flags first, then globals.
+                let all: Vec<Flag> = cmd
+                    .flags
+                    .iter()
+                    .chain(self.global_flags.iter())
+                    .cloned()
+                    .collect();
+                self.consume_flag(&all, &a, &mut iter, &mut values, &mut switches)?;
+            } else {
+                positionals.push(a);
+            }
+        }
+
+        // Defaults + required checks.
+        for f in cmd.flags.iter().chain(self.global_flags.iter()) {
+            if f.takes_value && !values.contains_key(f.name) {
+                if let Some(d) = f.default {
+                    values.insert(f.name.to_string(), d.to_string());
+                } else if f.required {
+                    return Err(CliError(format!(
+                        "missing required flag --{} for '{}'",
+                        f.name, cmd.name
+                    )));
+                }
+            }
+        }
+
+        Ok(Parsed::Run(Invocation {
+            command,
+            values,
+            switches,
+            positionals,
+        }))
+    }
+
+    fn consume_flag(
+        &self,
+        flags: &[Flag],
+        arg: &str,
+        iter: &mut std::iter::Peekable<std::vec::IntoIter<String>>,
+        values: &mut BTreeMap<String, String>,
+        switches: &mut Vec<String>,
+    ) -> Result<(), CliError> {
+        let (name_part, inline_value) = match arg.split_once('=') {
+            Some((n, v)) => (n.to_string(), Some(v.to_string())),
+            None => (arg.to_string(), None),
+        };
+        let flag = flags
+            .iter()
+            .find(|f| {
+                name_part == format!("--{}", f.name)
+                    || f.short
+                        .map(|c| name_part == format!("-{c}"))
+                        .unwrap_or(false)
+            })
+            .ok_or_else(|| CliError(format!("unknown flag '{name_part}'")))?;
+
+        if flag.takes_value {
+            let v = match inline_value {
+                Some(v) => v,
+                None => iter
+                    .next()
+                    .ok_or_else(|| CliError(format!("--{} needs a value", flag.name)))?,
+            };
+            values.insert(flag.name.to_string(), v);
+        } else {
+            if inline_value.is_some() {
+                return Err(CliError(format!("--{} takes no value", flag.name)));
+            }
+            switches.push(flag.name.to_string());
+        }
+        Ok(())
+    }
+
+    pub fn render_help(&self, cmd: Option<&Command>) -> String {
+        let mut s = String::new();
+        match cmd {
+            None => {
+                let _ = writeln!(s, "{} — {}\n", self.program, self.about);
+                let _ = writeln!(
+                    s,
+                    "USAGE: {} [GLOBAL FLAGS] <COMMAND> [FLAGS]\n",
+                    self.program
+                );
+                let _ = writeln!(s, "COMMANDS:");
+                for c in &self.commands {
+                    let _ = writeln!(s, "  {:<18} {}", c.name, c.about);
+                }
+                if !self.global_flags.is_empty() {
+                    let _ = writeln!(s, "\nGLOBAL FLAGS:");
+                    for f in &self.global_flags {
+                        Self::render_flag(&mut s, f);
+                    }
+                }
+                let _ = writeln!(
+                    s,
+                    "\nRun '{} <COMMAND> --help' for command details.",
+                    self.program
+                );
+            }
+            Some(c) => {
+                let _ = writeln!(s, "{} {} — {}\n", self.program, c.name, c.about);
+                let _ = writeln!(s, "FLAGS:");
+                for f in &c.flags {
+                    Self::render_flag(&mut s, f);
+                }
+                for f in &self.global_flags {
+                    Self::render_flag(&mut s, f);
+                }
+            }
+        }
+        s
+    }
+
+    fn render_flag(s: &mut String, f: &Flag) {
+        let mut head = format!("--{}", f.name);
+        if let Some(c) = f.short {
+            head = format!("-{c}, {head}");
+        }
+        if f.takes_value {
+            head.push_str(" <v>");
+        }
+        let mut notes = Vec::new();
+        if let Some(d) = f.default {
+            notes.push(format!("default: {d}"));
+        }
+        if f.required {
+            notes.push("required".into());
+        }
+        let notes = if notes.is_empty() {
+            String::new()
+        } else {
+            format!(" [{}]", notes.join(", "))
+        };
+        let _ = writeln!(s, "  {:<26} {}{}", head, f.help, notes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            program: "branchyserve",
+            about: "test",
+            global_flags: vec![Flag::value("config", "config file").short('c')],
+            commands: vec![
+                Command::new("plan", "plan a partition")
+                    .flag(Flag::value("gamma", "processing factor").default("100"))
+                    .flag(Flag::value("network", "profile").required())
+                    .flag(Flag::switch("verbose", "talk more").short('v')),
+                Command::new("serve", "run the server")
+                    .flag(Flag::value("port", "tcp port").default("7878")),
+            ],
+        }
+    }
+
+    fn parse(args: &[&str]) -> Result<Parsed, CliError> {
+        cli().parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_values_defaults_switches() {
+        let p = parse(&["plan", "--network", "4g", "-v"]).unwrap();
+        let Parsed::Run(inv) = p else { panic!() };
+        assert_eq!(inv.command, "plan");
+        assert_eq!(inv.get("network"), Some("4g"));
+        assert_eq!(inv.get("gamma"), Some("100")); // default applied
+        assert!(inv.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_typed_getters() {
+        let p = parse(&["plan", "--network=3g", "--gamma=12.5"]).unwrap();
+        let Parsed::Run(inv) = p else { panic!() };
+        assert_eq!(inv.get_f64("gamma").unwrap(), Some(12.5));
+        assert!(inv.get_usize("gamma").is_err());
+    }
+
+    #[test]
+    fn missing_required_flag() {
+        let e = parse(&["plan"]).unwrap_err();
+        assert!(e.0.contains("network"), "{e}");
+    }
+
+    #[test]
+    fn unknown_command_and_flag() {
+        assert!(parse(&["fly"]).is_err());
+        assert!(parse(&["serve", "--wings"]).is_err());
+    }
+
+    #[test]
+    fn global_flag_before_command() {
+        let p = parse(&["--config", "x.toml", "serve"]).unwrap();
+        let Parsed::Run(inv) = p else { panic!() };
+        assert_eq!(inv.get("config"), Some("x.toml"));
+        assert_eq!(inv.get("port"), Some("7878"));
+    }
+
+    #[test]
+    fn help_variants() {
+        for args in [
+            &["--help"][..],
+            &["help"],
+            &[],
+            &["plan", "--help"],
+            &["help", "plan"],
+        ] {
+            match parse(args).unwrap() {
+                Parsed::Help(text) => assert!(text.contains("branchyserve")),
+                other => panic!("{args:?} -> {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn switch_rejects_value() {
+        assert!(parse(&["plan", "--network", "4g", "--verbose=yes"]).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let p = parse(&["serve", "extra1", "extra2"]).unwrap();
+        let Parsed::Run(inv) = p else { panic!() };
+        assert_eq!(inv.positionals, vec!["extra1", "extra2"]);
+    }
+}

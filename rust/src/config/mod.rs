@@ -1,0 +1,10 @@
+//! Configuration subsystem: a hand-rolled JSON parser/serializer (serde is
+//! unavailable offline — DESIGN.md §3), a TOML-subset loader for config
+//! files, and the typed `Settings` used by the CLI and the coordinator.
+
+pub mod json;
+pub mod settings;
+pub mod toml;
+
+pub use json::Json;
+pub use settings::Settings;

@@ -1,0 +1,352 @@
+//! Typed settings: defaults <- config file (TOML) <- CLI overrides.
+//!
+//! Every knob the coordinator, partitioner, network model and server
+//! expose lives here, with validation at load time so a bad config fails
+//! fast instead of mid-serve.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+use super::toml;
+
+/// Which kernel flavor of the artifacts to execute (DESIGN.md: both are
+/// exported; 'pl' is the Pallas-lowered path, 'ref' the XLA-fused one).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flavor {
+    Pallas,
+    Ref,
+}
+
+impl Flavor {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Flavor::Pallas => "pl",
+            Flavor::Ref => "ref",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Flavor> {
+        match s {
+            "pl" | "pallas" => Ok(Flavor::Pallas),
+            "ref" => Ok(Flavor::Ref),
+            _ => bail!("unknown flavor '{s}' (expected 'pl' or 'ref')"),
+        }
+    }
+}
+
+/// Partitioning strategy selector (solver = the paper's contribution;
+/// the rest are baselines from §II / §VI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// G'_BDNN + Dijkstra (the paper).
+    ShortestPath,
+    /// Exhaustive evaluation of Eq. 6 over every split point.
+    BruteForce,
+    /// Branch-blind partitioning (Neurosurgeon [3]): p = 0 everywhere.
+    Neurosurgeon,
+    /// All layers on the edge device.
+    EdgeOnly,
+    /// All layers in the cloud.
+    CloudOnly,
+}
+
+impl Strategy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Strategy::ShortestPath => "shortest-path",
+            Strategy::BruteForce => "brute-force",
+            Strategy::Neurosurgeon => "neurosurgeon",
+            Strategy::EdgeOnly => "edge-only",
+            Strategy::CloudOnly => "cloud-only",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Strategy> {
+        match s {
+            "shortest-path" | "sp" | "paper" => Ok(Strategy::ShortestPath),
+            "brute-force" | "brute" => Ok(Strategy::BruteForce),
+            "neurosurgeon" => Ok(Strategy::Neurosurgeon),
+            "edge-only" | "edge" => Ok(Strategy::EdgeOnly),
+            "cloud-only" | "cloud" => Ok(Strategy::CloudOnly),
+            _ => bail!("unknown strategy '{s}'"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSettings {
+    pub artifacts_dir: PathBuf,
+    pub flavor: Flavor,
+}
+
+#[derive(Debug, Clone)]
+pub struct NetworkSettings {
+    /// Named profile: "3g", "4g", "wifi", or "custom".
+    pub kind: String,
+    /// Uplink rate in Mbps (used when kind == "custom"; named profiles
+    /// carry the paper's rates).
+    pub uplink_mbps: f64,
+    /// One-way base latency added per transfer, seconds.
+    pub rtt_s: f64,
+    /// Optional bandwidth trace file (CSV: t_seconds,mbps) for re-planning.
+    pub trace: Option<PathBuf>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EdgeSettings {
+    /// Processing factor gamma: t_e = gamma * t_c (paper §VI).
+    pub gamma: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct BranchSettings {
+    /// Entropy threshold (nats) below which a sample exits at b1.
+    pub entropy_threshold: f64,
+    /// Exit-probability override for planning; `None` = measure/assume.
+    pub exit_probability: Option<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PartitionSettings {
+    pub strategy: Strategy,
+    /// The paper's epsilon disambiguation weight on the (v*c, output) link.
+    pub epsilon: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeSettings {
+    pub port: u16,
+    /// Dynamic batcher: max batch size (must be an exported batch size).
+    pub max_batch: usize,
+    /// Dynamic batcher: flush deadline.
+    pub batch_timeout_ms: f64,
+    /// Admission queue capacity (backpressure beyond this).
+    pub queue_capacity: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Settings {
+    pub model: ModelSettings,
+    pub network: NetworkSettings,
+    pub edge: EdgeSettings,
+    pub branch: BranchSettings,
+    pub partition: PartitionSettings,
+    pub serve: ServeSettings,
+}
+
+impl Default for Settings {
+    fn default() -> Self {
+        Settings {
+            model: ModelSettings {
+                artifacts_dir: PathBuf::from("artifacts"),
+                flavor: Flavor::Ref,
+            },
+            network: NetworkSettings {
+                kind: "4g".into(),
+                uplink_mbps: 5.85,
+                rtt_s: 0.0,
+                trace: None,
+            },
+            edge: EdgeSettings { gamma: 100.0 },
+            branch: BranchSettings {
+                entropy_threshold: 0.3,
+                exit_probability: None,
+            },
+            partition: PartitionSettings {
+                strategy: Strategy::ShortestPath,
+                epsilon: 1e-9,
+            },
+            serve: ServeSettings {
+                port: 7878,
+                max_batch: 8,
+                batch_timeout_ms: 2.0,
+                queue_capacity: 1024,
+            },
+        }
+    }
+}
+
+impl Settings {
+    /// Load defaults, then overlay a TOML config file if given.
+    pub fn load(config_path: Option<&Path>) -> Result<Settings> {
+        let mut s = Settings::default();
+        if let Some(path) = config_path {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {}", path.display()))?;
+            let doc = toml::parse(&text)
+                .with_context(|| format!("parsing config {}", path.display()))?;
+            s.apply(&doc)?;
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Overlay values from a parsed config tree onto `self`.
+    pub fn apply(&mut self, doc: &Json) -> Result<()> {
+        if let Some(v) = doc.path("model.artifacts_dir").and_then(Json::as_str) {
+            self.model.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = doc.path("model.flavor").and_then(Json::as_str) {
+            self.model.flavor = Flavor::parse(v)?;
+        }
+        if let Some(v) = doc.path("network.kind").and_then(Json::as_str) {
+            self.network.kind = v.to_string();
+        }
+        if let Some(v) = doc.path("network.uplink_mbps").and_then(Json::as_f64) {
+            self.network.uplink_mbps = v;
+        }
+        if let Some(v) = doc.path("network.rtt_ms").and_then(Json::as_f64) {
+            self.network.rtt_s = v / 1e3;
+        }
+        if let Some(v) = doc.path("network.trace").and_then(Json::as_str) {
+            self.network.trace = Some(PathBuf::from(v));
+        }
+        if let Some(v) = doc.path("edge.gamma").and_then(Json::as_f64) {
+            self.edge.gamma = v;
+        }
+        if let Some(v) = doc.path("branch.entropy_threshold").and_then(Json::as_f64) {
+            self.branch.entropy_threshold = v;
+        }
+        if let Some(v) = doc.path("branch.exit_probability").and_then(Json::as_f64) {
+            self.branch.exit_probability = Some(v);
+        }
+        if let Some(v) = doc.path("partition.strategy").and_then(Json::as_str) {
+            self.partition.strategy = Strategy::parse(v)?;
+        }
+        if let Some(v) = doc.path("partition.epsilon").and_then(Json::as_f64) {
+            self.partition.epsilon = v;
+        }
+        if let Some(v) = doc.path("serve.port").and_then(Json::as_u64) {
+            self.serve.port = u16::try_from(v).context("serve.port out of range")?;
+        }
+        if let Some(v) = doc.path("serve.max_batch").and_then(Json::as_usize) {
+            self.serve.max_batch = v;
+        }
+        if let Some(v) = doc.path("serve.batch_timeout_ms").and_then(Json::as_f64) {
+            self.serve.batch_timeout_ms = v;
+        }
+        if let Some(v) = doc.path("serve.queue_capacity").and_then(Json::as_usize) {
+            self.serve.queue_capacity = v;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.edge.gamma < 1.0 {
+            bail!(
+                "edge.gamma must be >= 1 (edge is never faster than cloud in the \
+                 paper's model); got {}",
+                self.edge.gamma
+            );
+        }
+        if self.network.uplink_mbps <= 0.0 {
+            bail!("network.uplink_mbps must be > 0");
+        }
+        if !(0.0..=f64::ln(2.0) + 1e-9).contains(&self.branch.entropy_threshold) {
+            bail!(
+                "branch.entropy_threshold must be within [0, ln 2] for a binary \
+                 classifier; got {}",
+                self.branch.entropy_threshold
+            );
+        }
+        if let Some(p) = self.branch.exit_probability {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("branch.exit_probability must be in [0, 1]; got {p}");
+            }
+        }
+        if self.partition.epsilon <= 0.0 || self.partition.epsilon > 1e-3 {
+            bail!(
+                "partition.epsilon must be tiny and positive (paper §V); got {}",
+                self.partition.epsilon
+            );
+        }
+        if self.serve.max_batch == 0 || self.serve.queue_capacity == 0 {
+            bail!("serve.max_batch and serve.queue_capacity must be > 0");
+        }
+        if self.serve.batch_timeout_ms < 0.0 {
+            bail!("serve.batch_timeout_ms must be >= 0");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Settings::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overlay() {
+        let doc = toml::parse(
+            r#"
+[model]
+flavor = "pl"
+
+[network]
+kind = "3g"
+uplink_mbps = 1.10
+rtt_ms = 20
+
+[edge]
+gamma = 10
+
+[branch]
+entropy_threshold = 0.5
+exit_probability = 0.8
+
+[partition]
+strategy = "brute-force"
+
+[serve]
+port = 9000
+max_batch = 4
+"#,
+        )
+        .unwrap();
+        let mut s = Settings::default();
+        s.apply(&doc).unwrap();
+        s.validate().unwrap();
+        assert_eq!(s.model.flavor, Flavor::Pallas);
+        assert_eq!(s.network.kind, "3g");
+        assert_eq!(s.network.rtt_s, 0.02);
+        assert_eq!(s.edge.gamma, 10.0);
+        assert_eq!(s.branch.exit_probability, Some(0.8));
+        assert_eq!(s.partition.strategy, Strategy::BruteForce);
+        assert_eq!(s.serve.port, 9000);
+        assert_eq!(s.serve.max_batch, 4);
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let mut s = Settings::default();
+        s.edge.gamma = 0.5;
+        assert!(s.validate().is_err());
+
+        let mut s = Settings::default();
+        s.branch.exit_probability = Some(1.5);
+        assert!(s.validate().is_err());
+
+        let mut s = Settings::default();
+        s.branch.entropy_threshold = 0.8; // > ln 2
+        assert!(s.validate().is_err());
+
+        let mut s = Settings::default();
+        s.partition.epsilon = 0.1;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn strategy_and_flavor_parse() {
+        assert_eq!(Strategy::parse("paper").unwrap(), Strategy::ShortestPath);
+        assert_eq!(Strategy::parse("edge").unwrap(), Strategy::EdgeOnly);
+        assert!(Strategy::parse("x").is_err());
+        assert_eq!(Flavor::parse("pallas").unwrap(), Flavor::Pallas);
+        assert!(Flavor::parse("x").is_err());
+    }
+}

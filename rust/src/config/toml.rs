@@ -1,0 +1,276 @@
+//! TOML-subset parser for config files (`branchyserve --config serve.toml`).
+//!
+//! Supported: `[section]` / `[a.b]` tables, `key = value` with string,
+//! integer, float, boolean and homogeneous-array values, `#` comments.
+//! Unsupported (rejected, not silently misread): multiline strings,
+//! datetimes, inline tables, arrays of tables. That subset covers every
+//! config this project ships; values land in the same `Json` tree the
+//! JSON parser produces so `Settings` has one extraction path.
+
+use std::collections::BTreeMap;
+
+use super::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse TOML text into a nested `Json::Obj` tree.
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError {
+            line: lineno + 1,
+            msg: msg.to_string(),
+        };
+
+        if let Some(rest) = line.strip_prefix('[') {
+            if line.starts_with("[[") {
+                return Err(err("arrays of tables are not supported"));
+            }
+            let inner = rest.strip_suffix(']').ok_or_else(|| err("unclosed '['"))?;
+            if inner.is_empty() {
+                return Err(err("empty table name"));
+            }
+            current_path = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if current_path.iter().any(|s| s.is_empty() || !is_bare_key(s)) {
+                return Err(err("invalid table name"));
+            }
+            // Materialize the table even if empty.
+            ensure_table(&mut root, &current_path).map_err(|m| err(&m))?;
+            continue;
+        }
+
+        let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
+        let key = line[..eq].trim();
+        let vtext = line[eq + 1..].trim();
+        if key.is_empty() || !is_bare_key(key) {
+            return Err(err("invalid key"));
+        }
+        if vtext.is_empty() {
+            return Err(err("missing value"));
+        }
+        let value = parse_value(vtext).map_err(|m| err(&m))?;
+        let table = ensure_table(&mut root, &current_path).map_err(|m| err(&m))?;
+        if table.insert(key.to_string(), value).is_some() {
+            return Err(err(&format!("duplicate key '{key}'")));
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut quote = ' ';
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' | '\'' if !in_str => {
+                in_str = true;
+                quote = c;
+            }
+            c if in_str && c == quote => in_str = false,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        match entry {
+            Json::Obj(m) => cur = m,
+            _ => return Err(format!("'{part}' is both a value and a table")),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str) -> Result<Json, String> {
+    let s = s.trim();
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return unescape(inner);
+    }
+    if let Some(rest) = s.strip_prefix('\'') {
+        let inner = rest
+            .strip_suffix('\'')
+            .ok_or_else(|| "unterminated literal string".to_string())?;
+        return Ok(Json::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(Json::Arr(items));
+    }
+    // Number: allow underscores per TOML.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Ok(v) = cleaned.parse::<f64>() {
+        if v.is_finite() {
+            return Ok(Json::Num(v));
+        }
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+/// Split array elements on top-level commas (strings may contain commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut quote = ' ';
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' | '\'' if !in_str => {
+                in_str = true;
+                quote = c;
+            }
+            c if in_str && c == quote => in_str = false,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+fn unescape(s: &str) -> Result<Json, String> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("bad escape '\\{:?}'", other)),
+        }
+    }
+    Ok(Json::Str(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_document() {
+        let doc = r#"
+# serving config
+title = "edge demo"
+max_batch = 8
+timeout_ms = 12.5
+debug = false
+
+[network]
+kind = "4g"
+uplink_mbps = 5.85
+
+[partition.solver]
+epsilon = 1e-9
+layers = [1, 2, 3]
+names = ["a", "b,c"]
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("title").unwrap().as_str(), Some("edge demo"));
+        assert_eq!(v.get("max_batch").unwrap().as_u64(), Some(8));
+        assert_eq!(v.get("debug").unwrap().as_bool(), Some(false));
+        assert_eq!(v.path("network.uplink_mbps").unwrap().as_f64(), Some(5.85));
+        assert_eq!(v.path("partition.solver.epsilon").unwrap().as_f64(), Some(1e-9));
+        assert_eq!(
+            v.path("partition.solver.layers").unwrap().as_u64_vec(),
+            Some(vec![1, 2, 3])
+        );
+        let names = v.path("partition.solver.names").unwrap().as_arr().unwrap();
+        assert_eq!(names[1].as_str(), Some("b,c"));
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let v = parse(r##"k = "a # not comment" # real comment"##).unwrap();
+        assert_eq!(v.get("k").unwrap().as_str(), Some("a # not comment"));
+    }
+
+    #[test]
+    fn numbers_with_underscores() {
+        let v = parse("n = 1_000_000").unwrap();
+        assert_eq!(v.get("n").unwrap().as_u64(), Some(1_000_000));
+    }
+
+    #[test]
+    fn rejects_unsupported_and_malformed() {
+        for bad in [
+            "[[tables]]",
+            "k =",
+            "= 3",
+            "k = nope",
+            "[a.]",
+            "k = \"unterminated",
+            "k = 1\nk = 2",
+        ] {
+            assert!(parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn value_vs_table_conflict() {
+        assert!(parse("a = 1\n[a.b]\nc = 2").is_err());
+    }
+
+    #[test]
+    fn empty_and_comment_only() {
+        assert_eq!(parse("").unwrap(), Json::Obj(Default::default()));
+        assert_eq!(parse("# hi\n\n").unwrap(), Json::Obj(Default::default()));
+    }
+}

@@ -1,0 +1,209 @@
+//! Dynamic batcher: size-or-deadline batching with bounded-queue
+//! admission control (the backpressure point of the serving path).
+//!
+//! Semantics:
+//! * `submit` rejects when the queue is at capacity (admission control);
+//! * a worker's `next_batch` blocks until at least one item is queued,
+//!   then collects up to `max_batch` items, waiting at most
+//!   `batch_timeout` after the *first* item arrived (classic
+//!   deadline-based dynamic batching a la vLLM/Triton);
+//! * `close` wakes all workers; drained-and-closed returns `None`.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+struct State<T> {
+    queue: VecDeque<(Instant, T)>,
+    closed: bool,
+}
+
+#[derive(Debug)]
+pub struct Batcher<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    capacity: usize,
+    max_batch: usize,
+    batch_timeout: Duration,
+}
+
+/// Why a submit was rejected.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError<T> {
+    /// Queue full — caller should shed load or retry later.
+    Full(T),
+    /// Batcher closed.
+    Closed(T),
+}
+
+impl<T> Batcher<T> {
+    pub fn new(capacity: usize, max_batch: usize, batch_timeout: Duration) -> Batcher<T> {
+        assert!(capacity > 0 && max_batch > 0);
+        Batcher {
+            state: Mutex::new(State {
+                queue: VecDeque::with_capacity(capacity),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            capacity,
+            max_batch,
+            batch_timeout,
+        }
+    }
+
+    pub fn submit(&self, item: T) -> Result<(), SubmitError<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(SubmitError::Closed(item));
+        }
+        if st.queue.len() >= self.capacity {
+            return Err(SubmitError::Full(item));
+        }
+        st.queue.push_back((Instant::now(), item));
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking batch pull; `None` only after `close` with a drained queue.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let mut st = self.state.lock().unwrap();
+        'restart: loop {
+            // Wait for the first item (or close).
+            loop {
+                if !st.queue.is_empty() {
+                    break;
+                }
+                if st.closed {
+                    return None;
+                }
+                st = self.not_empty.wait(st).unwrap();
+            }
+            // Deadline anchored at the oldest queued item.
+            let deadline = st.queue.front().unwrap().0 + self.batch_timeout;
+            loop {
+                if st.queue.len() >= self.max_batch || st.closed {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (next, timeout) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+                st = next;
+                if timeout.timed_out() {
+                    break;
+                }
+                // With multiple consumers, a sibling may have drained the
+                // queue while we slept; re-anchor on the (new) oldest item.
+                if st.queue.is_empty() {
+                    continue 'restart;
+                }
+            }
+            // Same race on the deadline/timeout exits.
+            if st.queue.is_empty() {
+                if st.closed {
+                    return None;
+                }
+                continue 'restart;
+            }
+            let n = st.queue.len().min(self.max_batch);
+            return Some(st.queue.drain(..n).map(|(_, item)| item).collect());
+        }
+    }
+
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn batches_up_to_max() {
+        let b = Batcher::new(100, 4, Duration::from_millis(50));
+        for i in 0..10 {
+            b.submit(i).unwrap();
+        }
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
+        assert_eq!(b.next_batch().unwrap(), vec![8, 9]); // deadline flush
+    }
+
+    #[test]
+    fn deadline_flush_partial_batch() {
+        let b = Arc::new(Batcher::new(100, 8, Duration::from_millis(30)));
+        let b2 = b.clone();
+        let t0 = Instant::now();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(5));
+        b.submit(42).unwrap();
+        let batch = h.join().unwrap().unwrap();
+        assert_eq!(batch, vec![42]);
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(30), "{dt:?}");
+        assert!(dt < Duration::from_millis(300), "{dt:?}");
+    }
+
+    #[test]
+    fn full_batch_returns_before_deadline() {
+        let b = Arc::new(Batcher::new(100, 2, Duration::from_secs(10)));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let batch = b2.next_batch().unwrap();
+            (batch, t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        b.submit(1).unwrap();
+        b.submit(2).unwrap();
+        let (batch, dt) = h.join().unwrap();
+        assert_eq!(batch, vec![1, 2]);
+        assert!(dt < Duration::from_secs(1), "must not wait out the deadline");
+    }
+
+    #[test]
+    fn capacity_backpressure() {
+        let b = Batcher::new(2, 8, Duration::from_millis(1));
+        b.submit(1).unwrap();
+        b.submit(2).unwrap();
+        match b.submit(3) {
+            Err(SubmitError::Full(3)) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn close_semantics() {
+        let b = Batcher::new(10, 4, Duration::from_millis(1));
+        b.submit(7).unwrap();
+        b.close();
+        assert!(matches!(b.submit(8), Err(SubmitError::Closed(8))));
+        // Drain what's left, then None.
+        assert_eq!(b.next_batch().unwrap(), vec![7]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn close_wakes_blocked_worker() {
+        let b = Arc::new(Batcher::<u32>::new(10, 4, Duration::from_secs(100)));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(10));
+        b.close();
+        assert!(h.join().unwrap().is_none());
+    }
+}

@@ -1,0 +1,486 @@
+//! Coordinator engine: edge worker + cloud worker threads around the
+//! dynamic batcher, realizing a [`PartitionPlan`] over the PJRT runtime
+//! with a simulated uplink in between.
+//!
+//! Early-exit pipeline semantics (the real BranchyNet control flow, not
+//! the batched-both-paths shortcut the Python reference uses):
+//! stages `1..=k` run on the edge, the side branch classifies, samples
+//! under the entropy threshold are answered immediately, and only the
+//! *survivors* continue through stages `k+1..=s`, the uplink, and the
+//! cloud stages — so an exited sample truly never pays transfer or cloud
+//! time, which is exactly the effect Eq. 5 models.
+//!
+//! Transfers are pipelined: the edge worker samples the channel delay and
+//! stamps each survivor with a "transfer completes at" instant; the cloud
+//! worker waits for that instant before computing. Edge compute is never
+//! blocked by the (simulated) uplink.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::network::Channel;
+use crate::partition::PartitionPlan;
+use crate::runtime::{HostTensor, InferenceEngine};
+
+use super::batcher::{Batcher, SubmitError};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::{ExitPoint, InferenceRequest, InferenceResponse};
+
+/// Work item crossing the edge->cloud boundary.
+struct TransferredSample {
+    id: u64,
+    reply: mpsc::Sender<InferenceResponse>,
+    enqueued: Instant,
+    activation: HostTensor,
+    entropy: f32,
+    edge_s: f64,
+    transfer_s: f64,
+    /// The (simulated) instant the upload completes.
+    ready_at: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub entropy_threshold: f32,
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+    pub queue_capacity: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            entropy_threshold: 0.3,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(2),
+            queue_capacity: 1024,
+        }
+    }
+}
+
+pub struct Coordinator {
+    edge_engine: InferenceEngine,
+    channel: Arc<Channel>,
+    plan: Arc<RwLock<PartitionPlan>>,
+    /// Kept for introspection (`config()`); workers copy what they need.
+    cfg: CoordinatorConfig,
+    ingress: Arc<Batcher<InferenceRequest>>,
+    cloud_queue: Arc<Batcher<TransferredSample>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    started: Instant,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the pipeline. `edge_engine` and `cloud_engine` are the two
+    /// nodes' compute handles — pass two distinct engines for true
+    /// pipelining (separate PJRT clients), or two clones of one engine to
+    /// share a single client (compute then serializes).
+    pub fn start(
+        edge_engine: InferenceEngine,
+        cloud_engine: InferenceEngine,
+        channel: Arc<Channel>,
+        plan: PartitionPlan,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
+        let plan = Arc::new(RwLock::new(plan));
+        let ingress = Arc::new(Batcher::new(
+            cfg.queue_capacity,
+            cfg.max_batch,
+            cfg.batch_timeout,
+        ));
+        let cloud_queue = Arc::new(Batcher::new(
+            cfg.queue_capacity,
+            cfg.max_batch,
+            cfg.batch_timeout,
+        ));
+        let metrics = Arc::new(Metrics::new());
+
+        let mut workers = Vec::new();
+        {
+            let engine = edge_engine.clone();
+            let channel = channel.clone();
+            let plan = plan.clone();
+            let ingress = ingress.clone();
+            let cloud_queue = cloud_queue.clone();
+            let metrics = metrics.clone();
+            let threshold = cfg.entropy_threshold;
+            workers.push(
+                std::thread::Builder::new()
+                    .name("edge-worker".into())
+                    .spawn(move || {
+                        edge_loop(
+                            engine,
+                            channel,
+                            plan,
+                            ingress,
+                            cloud_queue,
+                            metrics,
+                            threshold,
+                        )
+                    })
+                    .expect("spawn edge worker"),
+            );
+        }
+        {
+            let engine = cloud_engine;
+            let plan = plan.clone();
+            let cloud_queue = cloud_queue.clone();
+            let metrics = metrics.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name("cloud-worker".into())
+                    .spawn(move || cloud_loop(engine, plan, cloud_queue, metrics))
+                    .expect("spawn cloud worker"),
+            );
+        }
+
+        Coordinator {
+            edge_engine,
+            channel,
+            plan,
+            cfg,
+            ingress,
+            cloud_queue,
+            metrics,
+            next_id: AtomicU64::new(1),
+            started: Instant::now(),
+            workers,
+        }
+    }
+
+    pub fn engine(&self) -> &InferenceEngine {
+        &self.edge_engine
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    pub fn plan(&self) -> PartitionPlan {
+        self.plan.read().unwrap().clone()
+    }
+
+    /// Swap the active partition plan (adaptive re-planning). In-flight
+    /// batches finish under the old plan; new batches use the new one.
+    pub fn set_plan(&self, plan: PartitionPlan) {
+        *self.plan.write().unwrap() = plan;
+    }
+
+    pub fn channel(&self) -> &Channel {
+        &self.channel
+    }
+
+    /// Submit one image; the response arrives on the returned receiver.
+    pub fn submit(&self, image: HostTensor) -> Result<(u64, mpsc::Receiver<InferenceResponse>)> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = InferenceRequest {
+            id,
+            image,
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match self.ingress.submit(req) {
+            Ok(()) => Ok((id, rx)),
+            Err(SubmitError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow!("admission queue full"))
+            }
+            Err(SubmitError::Closed(_)) => Err(anyhow!("coordinator shut down")),
+        }
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn infer_sync(&self, image: HostTensor) -> Result<InferenceResponse> {
+        let (_, rx) = self.submit(image)?;
+        rx.recv().map_err(|_| anyhow!("response channel dropped"))
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot(self.started)
+    }
+
+    /// Drain and stop the workers.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        // Wait for the ingress queue to drain before closing.
+        while !self.ingress.is_empty() || !self.cloud_queue.is_empty() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        self.ingress.close();
+        self.cloud_queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.snapshot(self.started)
+    }
+}
+
+/// Pick the smallest exported batch size >= n (or the max exported).
+fn bucket_up(sizes: &[usize], n: usize) -> usize {
+    sizes
+        .iter()
+        .copied()
+        .filter(|&b| b >= n)
+        .min()
+        .unwrap_or_else(|| sizes.iter().copied().max().unwrap())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn edge_loop(
+    engine: InferenceEngine,
+    channel: Arc<Channel>,
+    plan: Arc<RwLock<PartitionPlan>>,
+    ingress: Arc<Batcher<InferenceRequest>>,
+    cloud_queue: Arc<Batcher<TransferredSample>>,
+    metrics: Arc<Metrics>,
+    threshold: f32,
+) {
+    let manifest = engine.manifest().clone();
+    let sizes = manifest.batch_sizes.clone();
+    let max_exec = sizes.iter().copied().max().unwrap();
+
+    while let Some(batch) = ingress.next_batch() {
+        metrics.edge_batches.fetch_add(1, Ordering::Relaxed);
+        let current = plan.read().unwrap().clone();
+        // Chunk to the largest exported executable size.
+        let mut batch = batch;
+        while !batch.is_empty() {
+            let take = batch.len().min(max_exec);
+            let chunk: Vec<InferenceRequest> = batch.drain(..take).collect();
+            if let Err(e) = process_edge_chunk(
+                &engine,
+                &channel,
+                &current,
+                chunk,
+                &cloud_queue,
+                &metrics,
+                threshold,
+                &sizes,
+            ) {
+                log::error!("edge chunk failed: {e:#}");
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn process_edge_chunk(
+    engine: &InferenceEngine,
+    channel: &Channel,
+    plan: &PartitionPlan,
+    chunk: Vec<InferenceRequest>,
+    cloud_queue: &Batcher<TransferredSample>,
+    metrics: &Metrics,
+    threshold: f32,
+    sizes: &[usize],
+) -> Result<()> {
+    let n = chunk.len();
+    let manifest = engine.manifest();
+    let num_stages = manifest.num_stages();
+    let s = plan.split_after;
+    let branch_pos = manifest.branch.after_stage;
+    let branch_active = plan.active_branches.contains(&branch_pos);
+
+    let t_edge0 = Instant::now();
+    let images: Vec<HostTensor> = chunk.iter().map(|r| r.image.clone()).collect();
+    let stacked = HostTensor::stack(&images)?;
+    let exec_b = bucket_up(sizes, n);
+    let mut x = stacked.pad_batch(exec_b);
+
+    // Survivor bookkeeping: request index -> still alive.
+    let mut alive: Vec<usize> = (0..n).collect();
+    let mut entropies = vec![f32::NAN; n];
+
+    if s > 0 && branch_active {
+        // Stages 1..=k, then the branch gate.
+        x = engine.run_stages(1, branch_pos, &x)?;
+        let out = engine.run_branch(&x)?;
+        let classes = InferenceEngine::argmax_classes(&out.probs);
+        let edge_s_so_far = t_edge0.elapsed().as_secs_f64();
+
+        let mut survivors = Vec::new();
+        for (idx, req_i) in alive.iter().copied().enumerate() {
+            entropies[req_i] = out.entropy[idx];
+            if out.entropy[idx] < threshold {
+                // Early exit: answer from the branch.
+                let req = &chunk[req_i];
+                metrics.edge_exits.fetch_add(1, Ordering::Relaxed);
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                let latency = req.enqueued.elapsed().as_secs_f64();
+                metrics.record_latency(latency);
+                let _ = req.reply.send(InferenceResponse {
+                    id: req.id,
+                    class: classes[idx],
+                    exit: ExitPoint::EdgeBranch,
+                    entropy: out.entropy[idx],
+                    latency_s: latency,
+                    edge_s: edge_s_so_far,
+                    transfer_s: 0.0,
+                    cloud_s: 0.0,
+                });
+            } else {
+                survivors.push(req_i);
+            }
+        }
+        if survivors.is_empty() {
+            return Ok(());
+        }
+        // Re-pack survivors and continue through stages k+1..=s.
+        let kept: Vec<HostTensor> = {
+            let per_sample = x.unstack();
+            survivors.iter().map(|&i| {
+                // position of i within `alive`
+                let pos = alive.iter().position(|&a| a == i).unwrap();
+                per_sample[pos].clone()
+            }).collect()
+        };
+        alive = survivors;
+        let stacked = HostTensor::stack(&kept)?;
+        let exec_b = bucket_up(sizes, alive.len());
+        x = stacked.pad_batch(exec_b);
+        if s > branch_pos {
+            x = engine.run_stages(branch_pos + 1, s, &x)?;
+        }
+    } else if s > 0 {
+        x = engine.run_stages(1, s, &x)?;
+    }
+
+    let edge_s = t_edge0.elapsed().as_secs_f64();
+
+    if s == num_stages {
+        // Edge-only: answer from the main output.
+        let classes = InferenceEngine::argmax_classes(&x);
+        for (idx, req_i) in alive.iter().copied().enumerate() {
+            let req = &chunk[req_i];
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            let latency = req.enqueued.elapsed().as_secs_f64();
+            metrics.record_latency(latency);
+            let _ = req.reply.send(InferenceResponse {
+                id: req.id,
+                class: classes[idx],
+                exit: ExitPoint::MainOutput,
+                entropy: entropies[req_i],
+                latency_s: latency,
+                edge_s,
+                transfer_s: 0.0,
+                cloud_s: 0.0,
+            });
+        }
+        return Ok(());
+    }
+
+    // Transfer survivors to the cloud (pipelined: stamp ready_at).
+    let per_sample = x.unstack();
+    let sample_bytes: u64 = per_sample
+        .first()
+        .map(|t| t.size_bytes())
+        .unwrap_or(0);
+    let total_bytes = sample_bytes * alive.len() as u64;
+    let delay = channel.sample_delay(total_bytes);
+    metrics
+        .transferred_bytes
+        .fetch_add(total_bytes, Ordering::Relaxed);
+    let ready_at = Instant::now() + delay;
+    let transfer_s = delay.as_secs_f64();
+
+    for (idx, req_i) in alive.iter().copied().enumerate() {
+        let req = &chunk[req_i];
+        let item = TransferredSample {
+            id: req.id,
+            reply: req.reply.clone(),
+            enqueued: req.enqueued,
+            activation: per_sample[idx].clone(),
+            entropy: entropies[req_i],
+            edge_s,
+            transfer_s,
+            ready_at,
+        };
+        if let Err(SubmitError::Full(item)) = cloud_queue.submit(item) {
+            // Shed: answer with the branch-less fallback? No — reject.
+            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            drop(item);
+        }
+    }
+    Ok(())
+}
+
+fn cloud_loop(
+    engine: InferenceEngine,
+    plan: Arc<RwLock<PartitionPlan>>,
+    cloud_queue: Arc<Batcher<TransferredSample>>,
+    metrics: Arc<Metrics>,
+) {
+    let manifest = engine.manifest().clone();
+    let sizes = manifest.batch_sizes.clone();
+    let num_stages = manifest.num_stages();
+
+    while let Some(batch) = cloud_queue.next_batch() {
+        metrics.cloud_batches.fetch_add(1, Ordering::Relaxed);
+        // Honor the (simulated) transfer completion time.
+        if let Some(latest) = batch.iter().map(|t| t.ready_at).max() {
+            let now = Instant::now();
+            if latest > now {
+                std::thread::sleep(latest - now);
+            }
+        }
+        let s = plan.read().unwrap().split_after;
+        let from = s + 1;
+        if from > num_stages {
+            continue; // plan changed to edge-only mid-flight; drop
+        }
+        let t0 = Instant::now();
+        let result = (|| -> Result<()> {
+            let tensors: Vec<HostTensor> =
+                batch.iter().map(|t| t.activation.clone()).collect();
+            let stacked = HostTensor::stack(&tensors)?;
+            let exec_b = bucket_up(&sizes, batch.len());
+            let x = stacked.pad_batch(exec_b);
+            let out = engine.run_stages(from, num_stages, &x)?;
+            let classes = InferenceEngine::argmax_classes(&out);
+            let cloud_s = t0.elapsed().as_secs_f64();
+            for (idx, item) in batch.iter().enumerate() {
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                metrics
+                    .cloud_completions
+                    .fetch_add(1, Ordering::Relaxed);
+                let latency = item.enqueued.elapsed().as_secs_f64();
+                metrics.record_latency(latency);
+                let _ = item.reply.send(InferenceResponse {
+                    id: item.id,
+                    class: classes[idx],
+                    exit: ExitPoint::MainOutput,
+                    entropy: item.entropy,
+                    latency_s: latency,
+                    edge_s: item.edge_s,
+                    transfer_s: item.transfer_s,
+                    cloud_s,
+                });
+            }
+            Ok(())
+        })();
+        if let Err(e) = result {
+            log::error!("cloud batch failed: {e:#}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_up_semantics() {
+        let sizes = [1usize, 4, 8];
+        assert_eq!(bucket_up(&sizes, 1), 1);
+        assert_eq!(bucket_up(&sizes, 2), 4);
+        assert_eq!(bucket_up(&sizes, 4), 4);
+        assert_eq!(bucket_up(&sizes, 5), 8);
+        assert_eq!(bucket_up(&sizes, 9), 8); // chunked upstream
+    }
+}

@@ -1,0 +1,143 @@
+//! Serving metrics: lock-free counters on the hot path (atomics), with
+//! mutex-guarded latency histograms sampled per response.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::LatencyHistogram;
+use crate::util::timefmt::{format_rate, format_secs};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub edge_exits: AtomicU64,
+    pub cloud_completions: AtomicU64,
+    pub transferred_bytes: AtomicU64,
+    pub edge_batches: AtomicU64,
+    pub cloud_batches: AtomicU64,
+    latency: Mutex<LatencyHistogram>,
+    latency_samples: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    #[inline]
+    pub fn record_latency(&self, secs: f64) {
+        self.latency.lock().unwrap().push(secs);
+        let mut v = self.latency_samples.lock().unwrap();
+        // Reservoir cap to bound memory on long runs.
+        if v.len() < 100_000 {
+            v.push(secs);
+        }
+    }
+
+    pub fn snapshot(&self, since: Instant) -> MetricsSnapshot {
+        let elapsed = since.elapsed().as_secs_f64().max(1e-9);
+        let completed = self.completed.load(Ordering::Relaxed);
+        let samples = self.latency_samples.lock().unwrap().clone();
+        let hist = self.latency.lock().unwrap().clone();
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed,
+            edge_exits: self.edge_exits.load(Ordering::Relaxed),
+            cloud_completions: self.cloud_completions.load(Ordering::Relaxed),
+            transferred_bytes: self.transferred_bytes.load(Ordering::Relaxed),
+            edge_batches: self.edge_batches.load(Ordering::Relaxed),
+            cloud_batches: self.cloud_batches.load(Ordering::Relaxed),
+            throughput_rps: completed as f64 / elapsed,
+            mean_latency_s: if samples.is_empty() {
+                f64::NAN
+            } else {
+                samples.iter().sum::<f64>() / samples.len() as f64
+            },
+            p50_s: hist.quantile(0.5),
+            p99_s: hist.quantile(0.99),
+            elapsed_s: elapsed,
+            samples,
+        }
+    }
+}
+
+/// Point-in-time view for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub edge_exits: u64,
+    pub cloud_completions: u64,
+    pub transferred_bytes: u64,
+    pub edge_batches: u64,
+    pub cloud_batches: u64,
+    pub throughput_rps: f64,
+    pub mean_latency_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub elapsed_s: f64,
+    pub samples: Vec<f64>,
+}
+
+impl MetricsSnapshot {
+    pub fn exit_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.edge_exits as f64 / self.completed as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "completed {} ({} early-exit, {:.1}%), rejected {}, throughput {}, \
+             latency mean {} p50 {} p99 {}, transferred {} bytes",
+            self.completed,
+            self.edge_exits,
+            self.exit_rate() * 100.0,
+            self.rejected,
+            format_rate(self.throughput_rps),
+            format_secs(self.mean_latency_s),
+            format_secs(self.p50_s),
+            format_secs(self.p99_s),
+            self.transferred_bytes,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_snapshot() {
+        let m = Metrics::new();
+        let t0 = Instant::now();
+        m.submitted.fetch_add(10, Ordering::Relaxed);
+        m.completed.fetch_add(8, Ordering::Relaxed);
+        m.edge_exits.fetch_add(3, Ordering::Relaxed);
+        for i in 0..8 {
+            m.record_latency(0.001 * (i + 1) as f64);
+        }
+        let s = m.snapshot(t0);
+        assert_eq!(s.submitted, 10);
+        assert_eq!(s.completed, 8);
+        assert!((s.exit_rate() - 0.375).abs() < 1e-12);
+        assert!((s.mean_latency_s - 0.0045).abs() < 1e-12);
+        assert!(s.p50_s > 0.0);
+        assert!(s.summary().contains("completed 8"));
+    }
+
+    #[test]
+    fn empty_snapshot_is_sane() {
+        let m = Metrics::new();
+        let s = m.snapshot(Instant::now());
+        assert_eq!(s.exit_rate(), 0.0);
+        assert!(s.mean_latency_s.is_nan());
+    }
+}

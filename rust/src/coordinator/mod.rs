@@ -1,0 +1,25 @@
+//! The serving coordinator: everything between "a request arrived" and
+//! "a class came back".
+//!
+//! ```text
+//! submit -> admission -> [batcher] -> edge worker: stages 1..=s
+//!                                        '- branch b_k -> entropy gate
+//!                                             exit? respond : transfer
+//!                                     -> [channel delay] -> cloud worker:
+//!                                        stages s+1..=N -> respond
+//! ```
+//!
+//! Threads + channels (tokio is unavailable offline; a thread-per-node
+//! pipeline with bounded queues is the right shape for two pipeline
+//! stages anyway). The partition plan decides how much work each node
+//! does; `split_after = 0` degenerates to pure cloud serving (the edge
+//! node forwards raw inputs), `= N` to pure edge serving.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+
+pub use engine::{Coordinator, CoordinatorConfig};
+pub use metrics::MetricsSnapshot;
+pub use request::{InferenceRequest, InferenceResponse};

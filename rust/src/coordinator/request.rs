@@ -1,0 +1,48 @@
+//! Request/response types flowing through the coordinator.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::runtime::HostTensor;
+
+/// Where a sample's classification came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitPoint {
+    /// Classified by the side branch on the edge device.
+    EdgeBranch,
+    /// Classified by the main-branch output (in the cloud, or on the edge
+    /// when the plan is edge-only).
+    MainOutput,
+}
+
+#[derive(Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// One sample, CHW (no batch dim).
+    pub image: HostTensor,
+    pub enqueued: Instant,
+    /// Response channel (one response per request).
+    pub reply: mpsc::Sender<InferenceResponse>,
+}
+
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub class: usize,
+    pub exit: ExitPoint,
+    /// Branch entropy of this sample (NaN when the plan has no active
+    /// branch on the edge).
+    pub entropy: f32,
+    /// End-to-end latency, seconds.
+    pub latency_s: f64,
+    /// Time spent in edge compute / transfer / cloud compute, seconds.
+    pub edge_s: f64,
+    pub transfer_s: f64,
+    pub cloud_s: f64,
+}
+
+impl InferenceResponse {
+    pub fn exited_early(&self) -> bool {
+        self.exit == ExitPoint::EdgeBranch
+    }
+}

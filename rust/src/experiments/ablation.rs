@@ -1,0 +1,192 @@
+//! Ablations beyond the paper's figures — the design-choice experiments
+//! DESIGN.md §6 lists:
+//!
+//! * **strategy gap** — paper solver vs Neurosurgeon [3] vs edge-only vs
+//!   cloud-only across (p, gamma, B): how much does modeling the branch
+//!   buy? (quantifies §II's argument);
+//! * **epsilon sensitivity** — the tie-breaker must not change any
+//!   non-degenerate decision across orders of magnitude;
+//! * **branch-cost sensitivity** — paper mode vs serving mode planning;
+//! * **branch placement** — sweep the side branch position (the paper's
+//!   stated future work, §VII).
+
+use crate::config::settings::Strategy;
+use crate::model::{BranchDesc, BranchyNetDesc};
+use crate::network::bandwidth::{LinkModel, Profile};
+use crate::partition::{self, solver};
+use crate::timing::DelayProfile;
+
+/// One strategy-gap cell.
+#[derive(Debug, Clone)]
+pub struct StrategyGap {
+    pub probability: f64,
+    pub gamma: f64,
+    pub network: Profile,
+    /// (strategy, split, expected time).
+    pub rows: Vec<(Strategy, usize, f64)>,
+}
+
+impl StrategyGap {
+    pub fn solver_time(&self) -> f64 {
+        self.rows
+            .iter()
+            .find(|r| r.0 == Strategy::ShortestPath)
+            .unwrap()
+            .2
+    }
+
+    /// Worst competitor / solver — how much the paper's method saves.
+    pub fn max_speedup(&self) -> f64 {
+        let s = self.solver_time();
+        self.rows
+            .iter()
+            .map(|r| r.2 / s)
+            .fold(1.0, f64::max)
+    }
+}
+
+pub fn strategy_gap(
+    desc_template: &BranchyNetDesc,
+    profile: &DelayProfile,
+    probabilities: &[f64],
+    gammas: &[f64],
+) -> Vec<StrategyGap> {
+    let strategies = [
+        Strategy::ShortestPath,
+        Strategy::Neurosurgeon,
+        Strategy::EdgeOnly,
+        Strategy::CloudOnly,
+    ];
+    let mut out = Vec::new();
+    for &p in probabilities {
+        for &gamma in gammas {
+            for net in Profile::ALL {
+                let link = LinkModel::from_profile(net);
+                let prof = profile.with_gamma(gamma);
+                let mut desc = desc_template.clone();
+                for b in &mut desc.branches {
+                    b.exit_prob = p;
+                }
+                let rows = strategies
+                    .iter()
+                    .map(|&st| {
+                        let plan =
+                            partition::plan_with_strategy(st, &desc, &prof, link, 1e-9, true);
+                        (st, plan.split_after, plan.expected_time_s)
+                    })
+                    .collect();
+                out.push(StrategyGap {
+                    probability: p,
+                    gamma,
+                    network: net,
+                    rows,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Does the chosen split change when epsilon varies over [lo, hi]?
+/// Returns the distinct splits seen per epsilon (should be 1 entry).
+pub fn epsilon_sensitivity(
+    desc: &BranchyNetDesc,
+    profile: &DelayProfile,
+    link: LinkModel,
+    epsilons: &[f64],
+) -> Vec<(f64, usize)> {
+    epsilons
+        .iter()
+        .map(|&eps| {
+            let plan = solver::solve(desc, profile, link, eps, true);
+            (eps, plan.split_after)
+        })
+        .collect()
+}
+
+/// Sweep the branch position over every interior stage, reporting the
+/// optimal expected time for each placement — the paper's future-work
+/// "heuristics for side branch placement" (§VII) seeded as data.
+pub fn branch_placement(
+    desc_template: &BranchyNetDesc,
+    profile: &DelayProfile,
+    link: LinkModel,
+    exit_prob: f64,
+) -> Vec<(usize, f64, usize)> {
+    let n = desc_template.num_stages();
+    (1..n)
+        .map(|pos| {
+            let mut desc = desc_template.clone();
+            desc.branches = vec![BranchDesc {
+                after_stage: pos,
+                exit_prob,
+            }];
+            let plan = solver::solve(&desc, profile, link, 1e-9, true);
+            (pos, plan.expected_time_s, plan.split_after)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> (BranchyNetDesc, DelayProfile) {
+        let desc = BranchyNetDesc {
+            stage_names: (1..=8).map(|i| format!("s{i}")).collect(),
+            stage_out_bytes: vec![57_600, 18_816, 25_088, 25_088, 3_456, 1_024, 512, 8],
+            input_bytes: 12_288,
+            branches: vec![BranchDesc {
+                after_stage: 1,
+                exit_prob: 0.5,
+            }],
+        };
+        let profile = DelayProfile::from_cloud_times(
+            vec![1e-3, 1.5e-3, 1.2e-3, 1.2e-3, 8e-4, 3e-4, 1e-4, 5e-5],
+            2e-4,
+            10.0,
+        );
+        (desc, profile)
+    }
+
+    #[test]
+    fn solver_dominates_every_strategy() {
+        let (desc, profile) = fixture();
+        let gaps = strategy_gap(&desc, &profile, &[0.0, 0.5, 1.0], &[10.0, 1000.0]);
+        for g in &gaps {
+            let s = g.solver_time();
+            for &(st, _, t) in &g.rows {
+                assert!(
+                    s <= t + 1e-12,
+                    "{st:?} beat the solver at p={} gamma={} {:?}",
+                    g.probability,
+                    g.gamma,
+                    g.network
+                );
+            }
+            assert!(g.max_speedup() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn epsilon_does_not_flip_decisions() {
+        let (desc, profile) = fixture();
+        let link = LinkModel::from_profile(Profile::FourG);
+        let res = epsilon_sensitivity(
+            &desc,
+            &profile,
+            link,
+            &[1e-12, 1e-10, 1e-9, 1e-7, 1e-5],
+        );
+        let first = res[0].1;
+        assert!(res.iter().all(|&(_, s)| s == first), "{res:?}");
+    }
+
+    #[test]
+    fn branch_placement_covers_interior() {
+        let (desc, profile) = fixture();
+        let res = branch_placement(&desc, &profile, LinkModel::from_profile(Profile::ThreeG), 0.6);
+        assert_eq!(res.len(), 7);
+        assert!(res.iter().all(|&(_, t, _)| t.is_finite() && t > 0.0));
+    }
+}

@@ -1,0 +1,153 @@
+//! Figure 4: expected inference time vs the probability of classifying a
+//! sample at the side branch, for processing factors gamma in
+//! {10, 100, 1000} and uplinks {3G, 4G, Wi-Fi}.
+//!
+//! "These results are obtained based on the solution of our optimization
+//! problem when varying the probability" (§VI) — i.e. each point is the
+//! *optimal* E[T_inf] at that (p, gamma, B), not a fixed partition's.
+
+use crate::model::BranchyNetDesc;
+use crate::network::bandwidth::{LinkModel, Profile};
+use crate::partition::solver;
+use crate::timing::DelayProfile;
+
+pub const GAMMAS: [f64; 3] = [10.0, 100.0, 1000.0];
+pub const DEFAULT_POINTS: usize = 21;
+
+/// One curve: optimal expected time per probability point.
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub gamma: f64,
+    pub network: Profile,
+    /// (p, optimal E[T] seconds, chosen split_after).
+    pub points: Vec<(f64, f64, usize)>,
+}
+
+impl Curve {
+    /// Percent reduction of E[T] from p = 0 to p = 1 — the quantity the
+    /// paper quotes as 87.27% / 82.98% / 70% for 3G/4G/Wi-Fi at gamma=10.
+    pub fn reduction_pct(&self) -> f64 {
+        let t0 = self.points.first().unwrap().1;
+        let t1 = self.points.last().unwrap().1;
+        (1.0 - t1 / t0) * 100.0
+    }
+}
+
+/// Run the full Fig. 4 sweep. `desc_of(p)` stamps the probability into
+/// the BranchyNet description; `profile` carries measured cloud times.
+pub fn run(
+    desc_template: &BranchyNetDesc,
+    profile: &DelayProfile,
+    points: usize,
+    epsilon: f64,
+) -> Vec<Curve> {
+    let mut curves = Vec::new();
+    for &gamma in &GAMMAS {
+        let prof = profile.with_gamma(gamma);
+        for net in Profile::ALL {
+            let link = LinkModel::from_profile(net);
+            let mut curve = Curve {
+                gamma,
+                network: net,
+                points: Vec::with_capacity(points),
+            };
+            for i in 0..points {
+                let p = i as f64 / (points - 1) as f64;
+                let mut desc = desc_template.clone();
+                for b in &mut desc.branches {
+                    b.exit_prob = p;
+                }
+                let plan = solver::solve(&desc, &prof, link, epsilon, true);
+                curve.points.push((p, plan.expected_time_s, plan.split_after));
+            }
+            curves.push(curve);
+        }
+    }
+    curves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::BranchDesc;
+
+    fn fixture() -> (BranchyNetDesc, DelayProfile) {
+        let desc = BranchyNetDesc {
+            stage_names: (1..=8).map(|i| format!("s{i}")).collect(),
+            stage_out_bytes: vec![57_600, 18_816, 25_088, 25_088, 3_456, 1_024, 512, 8],
+            input_bytes: 12_288,
+            branches: vec![BranchDesc {
+                after_stage: 1,
+                exit_prob: 0.0,
+            }],
+        };
+        let profile = DelayProfile::from_cloud_times(
+            vec![1e-3, 1.5e-3, 1.2e-3, 1.2e-3, 8e-4, 3e-4, 1e-4, 5e-5],
+            2e-4,
+            10.0,
+        );
+        (desc, profile)
+    }
+
+    #[test]
+    fn produces_nine_curves_with_monotone_nonincreasing_times() {
+        let (desc, profile) = fixture();
+        let curves = run(&desc, &profile, 11, 1e-9);
+        assert_eq!(curves.len(), 9);
+        for c in &curves {
+            assert_eq!(c.points.len(), 11);
+            // Optimal E[T] can only improve as exit probability grows.
+            for w in c.points.windows(2) {
+                assert!(
+                    w[1].1 <= w[0].1 + 1e-12,
+                    "gamma={} net={:?}: {} -> {}",
+                    c.gamma,
+                    c.network,
+                    w[0].1,
+                    w[1].1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lower_bandwidth_more_sensitive_to_probability() {
+        // Paper: "networks with lower bandwidth are more affected by
+        // probability" — at gamma=10 the 3G reduction must exceed 4G's,
+        // which must exceed Wi-Fi's.
+        let (desc, profile) = fixture();
+        let curves = run(&desc, &profile, 11, 1e-9);
+        let get = |net: Profile| {
+            curves
+                .iter()
+                .find(|c| c.gamma == 10.0 && c.network == net)
+                .unwrap()
+                .reduction_pct()
+        };
+        let (r3, r4, rw) = (get(Profile::ThreeG), get(Profile::FourG), get(Profile::WiFi));
+        assert!(r3 > r4 && r4 > rw, "3G {r3:.1}% 4G {r4:.1}% WiFi {rw:.1}%");
+    }
+
+    #[test]
+    fn p_one_equalizes_networks_at_low_gamma() {
+        // Paper: "when the probability is one, all network technologies
+        // have the same inference time".
+        let (desc, profile) = fixture();
+        let curves = run(&desc, &profile, 11, 1e-9);
+        let at_one: Vec<f64> = Profile::ALL
+            .iter()
+            .map(|&net| {
+                curves
+                    .iter()
+                    .find(|c| c.gamma == 10.0 && c.network == net)
+                    .unwrap()
+                    .points
+                    .last()
+                    .unwrap()
+                    .1
+            })
+            .collect();
+        assert!((at_one[0] - at_one[1]).abs() < 1e-12);
+        assert!((at_one[1] - at_one[2]).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,143 @@
+//! Figure 5: the partition layer the optimizer chooses as a function of
+//! the processing factor gamma, for 3G and 4G, one curve per side-branch
+//! probability.
+//!
+//! Paper shape claims: as gamma grows (weaker edge), the chosen layer
+//! marches toward `input` (cloud-only); for the higher-bandwidth 4G this
+//! march happens at *lower* gamma than for 3G.
+
+use crate::model::BranchyNetDesc;
+use crate::network::bandwidth::{LinkModel, Profile};
+use crate::partition::solver;
+use crate::timing::DelayProfile;
+
+pub const PROBABILITIES: [f64; 4] = [0.2, 0.5, 0.8, 1.0];
+
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub network: Profile,
+    pub probability: f64,
+    /// (gamma, chosen split_after, split label).
+    pub points: Vec<(f64, usize, String)>,
+}
+
+/// Log-spaced gamma grid from 1 to `max_gamma`.
+pub fn gamma_grid(points: usize, max_gamma: f64) -> Vec<f64> {
+    assert!(points >= 2 && max_gamma > 1.0);
+    (0..points)
+        .map(|i| 10f64.powf(i as f64 / (points - 1) as f64 * max_gamma.log10()))
+        .collect()
+}
+
+pub fn run(
+    desc_template: &BranchyNetDesc,
+    profile: &DelayProfile,
+    gammas: &[f64],
+    epsilon: f64,
+) -> Vec<Curve> {
+    let mut curves = Vec::new();
+    for net in [Profile::ThreeG, Profile::FourG] {
+        let link = LinkModel::from_profile(net);
+        for &p in &PROBABILITIES {
+            let mut desc = desc_template.clone();
+            for b in &mut desc.branches {
+                b.exit_prob = p;
+            }
+            let mut curve = Curve {
+                network: net,
+                probability: p,
+                points: Vec::with_capacity(gammas.len()),
+            };
+            for &gamma in gammas {
+                let prof = profile.with_gamma(gamma);
+                let plan = solver::solve(&desc, &prof, link, epsilon, true);
+                let label = plan.split_label(&desc);
+                curve.points.push((gamma, plan.split_after, label));
+            }
+            curves.push(curve);
+        }
+    }
+    curves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::BranchDesc;
+
+    fn fixture() -> (BranchyNetDesc, DelayProfile) {
+        let desc = BranchyNetDesc {
+            stage_names: (1..=8).map(|i| format!("s{i}")).collect(),
+            stage_out_bytes: vec![57_600, 18_816, 25_088, 25_088, 3_456, 1_024, 512, 8],
+            input_bytes: 12_288,
+            branches: vec![BranchDesc {
+                after_stage: 1,
+                exit_prob: 0.0,
+            }],
+        };
+        let profile = DelayProfile::from_cloud_times(
+            vec![1e-3, 1.5e-3, 1.2e-3, 1.2e-3, 8e-4, 3e-4, 1e-4, 5e-5],
+            2e-4,
+            10.0,
+        );
+        (desc, profile)
+    }
+
+    #[test]
+    fn gamma_grid_is_log_spaced() {
+        let g = gamma_grid(4, 1000.0);
+        assert_eq!(g.len(), 4);
+        assert!((g[0] - 1.0).abs() < 1e-12);
+        assert!((g[3] - 1000.0).abs() < 1e-9);
+        assert!((g[1] - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_marches_toward_input_as_gamma_grows() {
+        let (desc, profile) = fixture();
+        let gammas = gamma_grid(25, 5000.0);
+        let curves = run(&desc, &profile, &gammas, 1e-9);
+        assert_eq!(curves.len(), 8); // 2 networks x 4 probabilities
+        for c in &curves {
+            // Non-strictly decreasing split index in gamma, modulo the
+            // p=1 regime where the split can stick at the branch.
+            let splits: Vec<usize> = c.points.iter().map(|&(_, s, _)| s).collect();
+            let first = splits[0];
+            let last = *splits.last().unwrap();
+            assert!(
+                last <= first,
+                "net {:?} p {}: splits {:?}",
+                c.network,
+                c.probability,
+                splits
+            );
+        }
+    }
+
+    #[test]
+    fn fourg_goes_cloud_only_at_lower_gamma_than_threeg() {
+        let (desc, profile) = fixture();
+        let gammas = gamma_grid(40, 10_000.0);
+        let curves = run(&desc, &profile, &gammas, 1e-9);
+        let first_cloud_only = |net: Profile, p: f64| -> Option<f64> {
+            curves
+                .iter()
+                .find(|c| c.network == net && c.probability == p)
+                .unwrap()
+                .points
+                .iter()
+                .find(|&&(_, s, _)| s == 0)
+                .map(|&(g, _, _)| g)
+        };
+        for &p in &[0.2, 0.5, 0.8] {
+            let g3 = first_cloud_only(Profile::ThreeG, p);
+            let g4 = first_cloud_only(Profile::FourG, p);
+            if let (Some(g3), Some(g4)) = (g3, g4) {
+                assert!(
+                    g4 <= g3,
+                    "p={p}: 4G should switch to cloud-only no later than 3G ({g4} vs {g3})"
+                );
+            }
+        }
+    }
+}

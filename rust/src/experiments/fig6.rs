@@ -1,0 +1,139 @@
+//! Figure 6: probability that the side branch classifies a sample, as a
+//! function of the entropy threshold, for Gaussian-blur distortion levels
+//! {none, 5, 15, 65} — run on the *real* trained B-AlexNet through the
+//! PJRT runtime (48-sample batches, as in the paper).
+//!
+//! This is the experiment that closes the loop: the p(threshold, quality)
+//! surface measured here is exactly the `p_k` parameter the Fig. 4/5
+//! planning experiments sweep analytically.
+
+use anyhow::Result;
+
+use crate::runtime::{fixture, HostTensor, InferenceEngine};
+
+pub const LEVELS: [&str; 4] = ["none", "low", "mid", "high"];
+
+#[derive(Debug, Clone)]
+pub struct LevelResult {
+    pub level: String,
+    pub blur_ksize: usize,
+    /// Per-sample branch entropies (nats).
+    pub entropies: Vec<f32>,
+    /// Branch top-1 accuracy on this batch (extra vs the paper).
+    pub branch_accuracy: f64,
+}
+
+impl LevelResult {
+    /// P[exit] at a given entropy threshold — one Fig. 6 curve point.
+    pub fn exit_probability(&self, threshold: f64) -> f64 {
+        let n = self.entropies.len();
+        if n == 0 {
+            return 0.0;
+        }
+        self.entropies
+            .iter()
+            .filter(|&&e| (e as f64) < threshold)
+            .count() as f64
+            / n as f64
+    }
+
+    /// Full curve over `points` thresholds in [0, max_nats].
+    pub fn curve(&self, points: usize, max_nats: f64) -> Vec<(f64, f64)> {
+        (0..points)
+            .map(|i| {
+                let thr = i as f64 / (points - 1) as f64 * max_nats;
+                (thr, self.exit_probability(thr))
+            })
+            .collect()
+    }
+}
+
+/// Run branch inference over the blurred fixture batches.
+pub fn run(engine: &InferenceEngine) -> Result<Vec<LevelResult>> {
+    let m = engine.manifest().clone();
+    let labels = m.fig6_labels()?;
+    let mut results = Vec::with_capacity(LEVELS.len());
+    let exec_b = *m
+        .batch_sizes
+        .iter()
+        .max()
+        .expect("manifest has batch sizes");
+
+    for level in LEVELS {
+        let info = m.fig6_fixture(level)?;
+        let batch = fixture::load(&info)?;
+        let n = batch.batch();
+        let mut entropies = Vec::with_capacity(n);
+        let mut correct = 0usize;
+
+        // Chunk the 48-sample batch through the largest executable.
+        let samples = batch.unstack();
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(exec_b);
+            let chunk = HostTensor::stack(&samples[i..i + take])?;
+            let padded = chunk.pad_batch(exec_b);
+            let acts = engine.run_stages(1, m.branch.after_stage, &padded)?;
+            let out = engine.run_branch(&acts)?;
+            let classes = InferenceEngine::argmax_classes(&out.probs);
+            for j in 0..take {
+                entropies.push(out.entropy[j]);
+                if classes[j] == labels[i + j] {
+                    correct += 1;
+                }
+            }
+            i += take;
+        }
+
+        // ksize bookkeeping (mirrors data.BLUR_LEVELS).
+        let blur_ksize = match level {
+            "none" => 0,
+            "low" => 5,
+            "mid" => 15,
+            "high" => 65,
+            _ => unreachable!(),
+        };
+        results.push(LevelResult {
+            level: level.to_string(),
+            blur_ksize,
+            branch_accuracy: correct as f64 / n as f64,
+            entropies,
+        });
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exit_probability_is_a_cdf() {
+        let r = LevelResult {
+            level: "t".into(),
+            blur_ksize: 0,
+            entropies: vec![0.1, 0.2, 0.3, 0.6],
+            branch_accuracy: 1.0,
+        };
+        assert_eq!(r.exit_probability(0.0), 0.0);
+        assert_eq!(r.exit_probability(0.15), 0.25);
+        assert_eq!(r.exit_probability(0.31), 0.75);
+        assert_eq!(r.exit_probability(1.0), 1.0);
+        let curve = r.curve(8, 0.7);
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert_eq!(curve.len(), 8);
+    }
+
+    #[test]
+    fn empty_entropies_safe() {
+        let r = LevelResult {
+            level: "t".into(),
+            blur_ksize: 0,
+            entropies: vec![],
+            branch_accuracy: 0.0,
+        };
+        assert_eq!(r.exit_probability(0.5), 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment drivers regenerating the paper's evaluation (§VI):
+//! Figure 4 (inference time vs exit probability), Figure 5 (partition
+//! layer vs processing factor), Figure 6 (exit probability vs entropy
+//! threshold under blur), plus ablations beyond the paper.
+//!
+//! Each driver returns plain data (series of points) so the CLI, the
+//! bench binaries and the shape-assertion tests all consume the same
+//! computation.
+
+pub mod ablation;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;

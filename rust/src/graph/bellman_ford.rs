@@ -1,0 +1,102 @@
+//! Bellman–Ford shortest path: the slow, obviously-correct oracle the
+//! property tests compare Dijkstra against (never used on a hot path).
+
+use super::dag::{Graph, NodeId};
+use super::dijkstra::PathResult;
+
+/// O(n * m) shortest path. Same contract as `dijkstra::shortest_path`.
+pub fn shortest_path(g: &Graph, source: NodeId, target: NodeId) -> Option<PathResult> {
+    let n = g.len();
+    let mut dist = vec![f64::INFINITY; n];
+    let mut prev: Vec<Option<NodeId>> = vec![None; n];
+    dist[source] = 0.0;
+
+    for _ in 0..n.max(1) - 1 {
+        let mut changed = false;
+        for u in 0..n {
+            if dist[u].is_infinite() {
+                continue;
+            }
+            for e in g.edges(u) {
+                let nd = dist[u] + e.weight;
+                if nd < dist[e.to] {
+                    dist[e.to] = nd;
+                    prev[e.to] = Some(u);
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    if dist[target].is_infinite() {
+        return None;
+    }
+    let mut nodes = vec![target];
+    let mut cur = target;
+    while let Some(p) = prev[cur] {
+        nodes.push(p);
+        cur = p;
+    }
+    nodes.reverse();
+    if nodes[0] != source && source != target {
+        return None;
+    }
+    Some(PathResult {
+        cost: dist[target],
+        nodes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dijkstra;
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Random layered DAGs: Bellman-Ford and Dijkstra must agree on cost.
+    #[test]
+    fn agrees_with_dijkstra_on_random_dags() {
+        let mut rng = Pcg32::seeded(42);
+        for case in 0..50 {
+            let layers = 2 + rng.below(6) as usize;
+            let width = 1 + rng.below(5) as usize;
+            let mut g = Graph::new();
+            let mut layer_nodes: Vec<Vec<NodeId>> = Vec::new();
+            for l in 0..layers {
+                let mut nodes = Vec::new();
+                for i in 0..width {
+                    nodes.push(g.add_node(format!("l{l}n{i}")));
+                }
+                layer_nodes.push(nodes);
+            }
+            for l in 0..layers - 1 {
+                for &from in &layer_nodes[l] {
+                    for &to in &layer_nodes[l + 1] {
+                        if rng.bool(0.7) {
+                            g.add_edge(from, to, rng.range_f64(0.0, 10.0));
+                        }
+                    }
+                }
+            }
+            let s = layer_nodes[0][0];
+            let t = *layer_nodes[layers - 1].last().unwrap();
+            let a = dijkstra::shortest_path(&g, s, t);
+            let b = shortest_path(&g, s, t);
+            match (a, b) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert!(
+                        (x.cost - y.cost).abs() < 1e-9,
+                        "case {case}: dijkstra {} vs bellman-ford {}",
+                        x.cost,
+                        y.cost
+                    );
+                }
+                (x, y) => panic!("case {case}: reachability disagreement {x:?} vs {y:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Directed graph with f64 link weights, adjacency-list storage, and the
+//! validation/topo-sort helpers the partitioner relies on.
+//!
+//! Nodes carry a string label (layer names like "conv1_e", "v2*" — useful
+//! for debugging the G'_BDNN construction and for reporting which layer a
+//! path vertex corresponds to).
+
+use std::collections::VecDeque;
+
+/// Index-based node handle.
+pub type NodeId = usize;
+
+#[derive(Debug, Clone)]
+pub struct Edge {
+    pub to: NodeId,
+    pub weight: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    labels: Vec<String>,
+    adj: Vec<Vec<Edge>>,
+    edge_count: usize,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph::default()
+    }
+
+    pub fn with_capacity(nodes: usize) -> Self {
+        Graph {
+            labels: Vec::with_capacity(nodes),
+            adj: Vec::with_capacity(nodes),
+            edge_count: 0,
+        }
+    }
+
+    pub fn add_node(&mut self, label: impl Into<String>) -> NodeId {
+        self.labels.push(label.into());
+        self.adj.push(Vec::new());
+        self.labels.len() - 1
+    }
+
+    /// Add a weighted directed link. Weights must be finite and >= 0
+    /// (Dijkstra's precondition; the paper's weights are all delays).
+    pub fn add_edge(&mut self, from: NodeId, to: NodeId, weight: f64) {
+        assert!(from < self.len() && to < self.len(), "node out of range");
+        assert!(
+            weight.is_finite() && weight >= 0.0,
+            "edge weight must be finite and non-negative, got {weight}"
+        );
+        self.adj[from].push(Edge { to, weight });
+        self.edge_count += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edge_count
+    }
+
+    pub fn label(&self, n: NodeId) -> &str {
+        &self.labels[n]
+    }
+
+    pub fn edges(&self, n: NodeId) -> &[Edge] {
+        &self.adj[n]
+    }
+
+    pub fn find_node(&self, label: &str) -> Option<NodeId> {
+        self.labels.iter().position(|l| l == label)
+    }
+
+    /// Kahn topological sort; `None` if the graph has a cycle.
+    pub fn topo_sort(&self) -> Option<Vec<NodeId>> {
+        let mut indeg = vec![0usize; self.len()];
+        for edges in &self.adj {
+            for e in edges {
+                indeg[e.to] += 1;
+            }
+        }
+        let mut queue: VecDeque<NodeId> = indeg
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| i)
+            .collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(n) = queue.pop_front() {
+            order.push(n);
+            for e in &self.adj[n] {
+                indeg[e.to] -= 1;
+                if indeg[e.to] == 0 {
+                    queue.push_back(e.to);
+                }
+            }
+        }
+        (order.len() == self.len()).then_some(order)
+    }
+
+    pub fn is_dag(&self) -> bool {
+        self.topo_sort().is_some()
+    }
+
+    /// All nodes reachable from `start`.
+    pub fn reachable_from(&self, start: NodeId) -> Vec<bool> {
+        let mut seen = vec![false; self.len()];
+        let mut stack = vec![start];
+        seen[start] = true;
+        while let Some(n) = stack.pop() {
+            for e in &self.adj[n] {
+                if !seen[e.to] {
+                    seen[e.to] = true;
+                    stack.push(e.to);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Graphviz dot output — debugging aid for the G'_BDNN construction.
+    pub fn to_dot(&self) -> String {
+        let mut s = String::from("digraph G {\n");
+        for (i, l) in self.labels.iter().enumerate() {
+            s.push_str(&format!("  n{i} [label=\"{l}\"];\n"));
+        }
+        for (i, edges) in self.adj.iter().enumerate() {
+            for e in edges {
+                s.push_str(&format!(
+                    "  n{i} -> n{} [label=\"{:.3e}\"];\n",
+                    e.to, e.weight
+                ));
+            }
+        }
+        s.push('}');
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // a -> b -> d, a -> c -> d
+        let mut g = Graph::new();
+        let a = g.add_node("a");
+        let b = g.add_node("b");
+        let c = g.add_node("c");
+        let d = g.add_node("d");
+        g.add_edge(a, b, 1.0);
+        g.add_edge(a, c, 2.0);
+        g.add_edge(b, d, 3.0);
+        g.add_edge(c, d, 1.0);
+        g
+    }
+
+    #[test]
+    fn build_and_query() {
+        let g = diamond();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.edge_count(), 4);
+        assert_eq!(g.label(0), "a");
+        assert_eq!(g.find_node("c"), Some(2));
+        assert_eq!(g.find_node("zz"), None);
+        assert_eq!(g.edges(0).len(), 2);
+    }
+
+    #[test]
+    fn topo_sort_of_dag() {
+        let g = diamond();
+        let order = g.topo_sort().unwrap();
+        let pos: Vec<usize> = (0..4).map(|n| order.iter().position(|&x| x == n).unwrap()).collect();
+        assert!(pos[0] < pos[1] && pos[0] < pos[2]);
+        assert!(pos[1] < pos[3] && pos[2] < pos[3]);
+        assert!(g.is_dag());
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Graph::new();
+        let a = g.add_node("a");
+        let b = g.add_node("b");
+        g.add_edge(a, b, 1.0);
+        g.add_edge(b, a, 1.0);
+        assert!(!g.is_dag());
+    }
+
+    #[test]
+    fn reachability() {
+        let mut g = diamond();
+        let e = g.add_node("island");
+        let seen = g.reachable_from(0);
+        assert!(seen[0] && seen[1] && seen[2] && seen[3]);
+        assert!(!seen[e]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn rejects_negative_weight() {
+        let mut g = Graph::new();
+        let a = g.add_node("a");
+        let b = g.add_node("b");
+        g.add_edge(a, b, -1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_dangling_edge() {
+        let mut g = Graph::new();
+        let a = g.add_node("a");
+        g.add_edge(a, 5, 1.0);
+    }
+
+    #[test]
+    fn dot_output_contains_nodes() {
+        let dot = diamond().to_dot();
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("n0 -> n1"));
+    }
+}

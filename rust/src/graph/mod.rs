@@ -1,0 +1,10 @@
+//! Graph substrate: generic weighted DAG/digraph storage, Dijkstra
+//! shortest path (the paper's solution algorithm, §V), and a Bellman–Ford
+//! oracle used by the property tests to cross-check Dijkstra.
+
+pub mod bellman_ford;
+pub mod dag;
+pub mod dijkstra;
+
+pub use dag::{Graph, NodeId};
+pub use dijkstra::{shortest_path, PathResult};

@@ -1,0 +1,171 @@
+//! Bench harness (criterion is unavailable offline): warmup + timed
+//! iterations with trimmed statistics and aligned table output, shared by
+//! every target in `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{percentile, trimmed_mean};
+use crate::util::timefmt::format_secs;
+
+/// Result of benchmarking one case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12} {:>7}",
+            self.name,
+            format_secs(self.mean_s),
+            format_secs(self.p50_s),
+            format_secs(self.min_s),
+            format_secs(self.max_s),
+            self.iters
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>12} {:>12} {:>12} {:>12} {:>7}",
+        "benchmark", "mean", "p50", "min", "max", "iters"
+    )
+}
+
+/// Time `f` adaptively: warm up, then iterate until `min_time` has been
+/// spent or `max_iters` reached (at least `min_iters`).
+pub fn bench(name: &str, min_time: Duration, mut f: impl FnMut()) -> BenchResult {
+    const MIN_ITERS: usize = 5;
+    const MAX_ITERS: usize = 100_000;
+
+    // Warmup: one untimed call plus enough to fill ~10% of min_time.
+    let warm_start = Instant::now();
+    f();
+    let one = warm_start.elapsed();
+    let mut warmups = (min_time.as_secs_f64() * 0.1 / one.as_secs_f64().max(1e-9)) as usize;
+    warmups = warmups.clamp(1, 100);
+    for _ in 0..warmups {
+        f();
+    }
+
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < min_time || samples.len() < MIN_ITERS)
+        && samples.len() < MAX_ITERS
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: trimmed_mean(&samples, 0.05),
+        p50_s: percentile(&samples, 50.0),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Pretty-print a labeled table section.
+pub fn print_table(title: &str, rows: &[BenchResult]) {
+    println!("\n=== {title} ===");
+    println!("{}", header());
+    for r in rows {
+        println!("{}", r.row());
+    }
+}
+
+/// Simple aligned data table for experiment output (figure regeneration).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV form (for plotting outside).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop-ish", Duration::from_millis(20), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s);
+        assert!(r.row().contains("noop-ish"));
+    }
+
+    #[test]
+    fn table_renders_aligned_and_csv() {
+        let mut t = Table::new(&["p", "3G", "4G"]);
+        t.row(vec!["0.0".into(), "1.5".into(), "0.9".into()]);
+        t.row(vec!["1.0".into(), "0.2".into(), "0.2".into()]);
+        let s = t.render();
+        assert!(s.contains("3G"));
+        assert_eq!(s.lines().count(), 4);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().next().unwrap(), "p,3G,4G");
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

@@ -1,0 +1,42 @@
+//! # branchyserve
+//!
+//! Edge/cloud serving framework for early-exit (BranchyNet) DNNs with
+//! optimal shortest-path partitioning — a three-layer Rust + JAX + Pallas
+//! reproduction of *"Inference Time Optimization Using BranchyNet
+//! Partitioning"* (Pacheco & Couto, IEEE ISCC 2020).
+//!
+//! The paper's contribution — choosing the layer at which to split a
+//! BranchyNet between an edge device and a cloud server so that the
+//! *expected* inference time (including the probability of early exit at
+//! a side branch) is minimized — is implemented in [`partition`]: the
+//! `G'_BDNN` graph construction (§V, Eqs. 7–8) plus Dijkstra. Around it
+//! sits a full serving system:
+//!
+//! * [`model`] — the B-AlexNet stage graph loaded from `artifacts/manifest.json`;
+//! * [`timing`] — the inference-time model (Eqs. 1–6);
+//! * [`network`] — bandwidth profiles (3G/4G/Wi-Fi), traces, simulated channels;
+//! * [`runtime`] — PJRT CPU execution of the AOT-compiled HLO artifacts;
+//! * [`profiler`] — per-layer `t_i^c` measurement;
+//! * [`coordinator`] — router, dynamic batcher, early-exit scheduler, metrics;
+//! * [`server`] / [`workload`] — TCP serving loop and load generation;
+//! * [`experiments`] — drivers regenerating the paper's Figures 4, 5, 6.
+//!
+//! Python/JAX/Pallas exist only at build time (`make artifacts`); the
+//! request path is pure Rust.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod graph;
+pub mod harness;
+pub mod model;
+pub mod network;
+pub mod partition;
+pub mod profiler;
+pub mod runtime;
+pub mod server;
+pub mod testing;
+pub mod timing;
+pub mod util;
+pub mod workload;

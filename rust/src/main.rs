@@ -1,0 +1,482 @@
+//! `branchyserve` — CLI entrypoint.
+//!
+//! Subcommands:
+//!   profile  — measure per-stage t_i^c on this machine's PJRT runtime
+//!   plan     — solve the partitioning problem, print the plan + sets
+//!   serve    — run the TCP serving front-end with a chosen plan
+//!   fig4/fig5/fig6 — regenerate the paper's figures as tables/CSV
+//!   ablation — strategy-gap / epsilon / branch-placement studies
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use branchyserve::cli::{Cli, Command, Flag, Invocation, Parsed};
+use branchyserve::config::settings::{Flavor, Settings, Strategy};
+use branchyserve::coordinator::{Coordinator, CoordinatorConfig};
+use branchyserve::experiments::{ablation, fig4, fig5, fig6};
+use branchyserve::harness::Table;
+use branchyserve::model::Manifest;
+use branchyserve::network::bandwidth::{LinkModel, Profile};
+use branchyserve::network::{BandwidthTrace, Channel};
+use branchyserve::partition;
+use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
+use branchyserve::runtime::InferenceEngine;
+use branchyserve::server::Server;
+use branchyserve::util::logger;
+use branchyserve::util::timefmt::format_secs;
+
+fn cli() -> Cli {
+    Cli {
+        program: "branchyserve",
+        about: "BranchyNet edge/cloud partitioning + serving (Pacheco & Couto, ISCC 2020)",
+        global_flags: vec![
+            Flag::value("config", "TOML config file").short('c'),
+            Flag::value("artifacts", "artifacts directory").default("artifacts"),
+            Flag::value("flavor", "kernel flavor: ref|pl").default("ref"),
+        ],
+        commands: vec![
+            Command::new("profile", "measure per-stage cloud times on this host")
+                .flag(Flag::value("out", "write profile JSON here").default("artifacts/profile.json"))
+                .flag(Flag::value("iters", "timed iterations per stage").default("15"))
+                .flag(Flag::value("batch", "batch size to profile").default("1")),
+            Command::new("plan", "solve the partitioning problem")
+                .flag(Flag::value("network", "3g|4g|wifi").default("4g"))
+                .flag(Flag::value("gamma", "edge processing factor").default("100"))
+                .flag(Flag::value("probability", "side-branch exit probability").default("0.5"))
+                .flag(Flag::value("strategy", "shortest-path|brute|neurosurgeon|edge|cloud").default("shortest-path"))
+                .flag(Flag::value("profile", "profile JSON (else measured now)"))
+                .flag(Flag::switch("all", "print every strategy for comparison")),
+            Command::new("serve", "run the TCP serving front-end")
+                .flag(Flag::value("port", "TCP port (0 = auto)").default("7878"))
+                .flag(Flag::value("network", "3g|4g|wifi").default("4g"))
+                .flag(Flag::value("gamma", "edge processing factor").default("100"))
+                .flag(Flag::value("probability", "planning exit probability").default("0.5"))
+                .flag(Flag::value("threshold", "entropy exit threshold (nats)").default("0.3"))
+                .flag(Flag::value("profile", "profile JSON (else measured now)")),
+            Command::new("fig4", "inference time vs exit probability (paper Fig. 4)")
+                .flag(Flag::value("points", "probability grid points").default("21"))
+                .flag(Flag::value("profile", "profile JSON (else measured now)"))
+                .flag(Flag::switch("csv", "emit CSV instead of a table")),
+            Command::new("fig5", "partition layer vs processing factor (paper Fig. 5)")
+                .flag(Flag::value("points", "gamma grid points").default("30"))
+                .flag(Flag::value("max-gamma", "largest gamma").default("1000"))
+                .flag(Flag::value("profile", "profile JSON (else measured now)"))
+                .flag(Flag::switch("csv", "emit CSV instead of a table")),
+            Command::new("fig6", "exit probability vs entropy threshold (paper Fig. 6)")
+                .flag(Flag::value("points", "threshold grid points").default("15"))
+                .flag(Flag::switch("csv", "emit CSV instead of a table")),
+            Command::new("ablation", "strategy gap / epsilon / branch placement")
+                .flag(Flag::value("network", "3g|4g|wifi").default("4g"))
+                .flag(Flag::value("gamma", "edge processing factor").default("100"))
+                .flag(Flag::value("probability", "side-branch exit probability").default("0.5"))
+                .flag(Flag::value("profile", "profile JSON (else measured now)")),
+        ],
+    }
+}
+
+fn main() {
+    logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match cli().parse(args) {
+        Ok(Parsed::Help(text)) => print!("{text}"),
+        Ok(Parsed::Run(inv)) => {
+            if let Err(e) = dispatch(&inv) {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn dispatch(inv: &Invocation) -> Result<()> {
+    let mut settings = Settings::load(inv.get("config").map(Path::new))?;
+    if let Some(dir) = inv.get("artifacts") {
+        settings.model.artifacts_dir = PathBuf::from(dir);
+    }
+    if let Some(f) = inv.get("flavor") {
+        settings.model.flavor = Flavor::parse(f)?;
+    }
+    match inv.command.as_str() {
+        "profile" => cmd_profile(inv, &settings),
+        "plan" => cmd_plan(inv, &settings),
+        "serve" => cmd_serve(inv, &settings),
+        "fig4" => cmd_fig4(inv, &settings),
+        "fig5" => cmd_fig5(inv, &settings),
+        "fig6" => cmd_fig6(inv, &settings),
+        "ablation" => cmd_ablation(inv, &settings),
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+}
+
+fn get_f64(inv: &Invocation, name: &str) -> Result<Option<f64>> {
+    inv.get_f64(name).map_err(anyhow::Error::msg)
+}
+
+fn get_usize(inv: &Invocation, name: &str) -> Result<Option<usize>> {
+    inv.get_usize(name).map_err(anyhow::Error::msg)
+}
+
+fn open_engine(settings: &Settings) -> Result<InferenceEngine> {
+    let manifest = Manifest::load(&settings.model.artifacts_dir)?;
+    InferenceEngine::open(
+        &settings.model.artifacts_dir,
+        manifest,
+        settings.model.flavor,
+        "main",
+    )
+}
+
+/// Load a saved profile or measure one now.
+fn load_or_measure_profile(
+    inv: &Invocation,
+    settings: &Settings,
+    engine: Option<&InferenceEngine>,
+) -> Result<ProfileReport> {
+    if let Some(path) = inv.get("profile") {
+        return ProfileReport::load(Path::new(path));
+    }
+    let default = settings.model.artifacts_dir.join("profile.json");
+    if default.exists() {
+        return ProfileReport::load(&default);
+    }
+    log::info!("no saved profile; measuring now (use `branchyserve profile` to cache)");
+    let owned;
+    let engine = match engine {
+        Some(e) => e,
+        None => {
+            owned = open_engine(settings)?;
+            &owned
+        }
+    };
+    profiler::measure(engine, ProfileOptions::default())
+}
+
+fn link_from(inv: &Invocation, settings: &Settings) -> Result<LinkModel> {
+    match inv.get("network") {
+        Some(name) => Ok(LinkModel::from_profile(Profile::parse(name)?)),
+        None => Ok(LinkModel::new(
+            settings.network.uplink_mbps,
+            settings.network.rtt_s,
+        )),
+    }
+}
+
+fn cmd_profile(inv: &Invocation, settings: &Settings) -> Result<()> {
+    let engine = open_engine(settings)?;
+    let compile_s = engine.warmup()?;
+    log::info!(
+        "warmup compiled {} executables in {compile_s:.2}s",
+        engine.cached_count()
+    );
+    let opts = ProfileOptions {
+        iters: get_usize(inv, "iters")?.unwrap_or(15),
+        batch: get_usize(inv, "batch")?.unwrap_or(1),
+        ..Default::default()
+    };
+    let report = profiler::measure(&engine, opts)?;
+    let mut table = Table::new(&["stage", "t_cloud", "min", "max"]);
+    for s in report.stages.iter().chain(std::iter::once(&report.branch)) {
+        table.row(vec![
+            s.name.clone(),
+            format_secs(s.t_cloud_s),
+            format_secs(s.min_s),
+            format_secs(s.max_s),
+        ]);
+    }
+    println!("{}", table.render());
+    let out = PathBuf::from(inv.get("out").unwrap_or("artifacts/profile.json"));
+    report.save(&out)?;
+    println!("profile written to {}", out.display());
+    Ok(())
+}
+
+fn planning_inputs(
+    inv: &Invocation,
+    settings: &Settings,
+) -> Result<(Manifest, branchyserve::timing::DelayProfile, LinkModel, f64)> {
+    let manifest = Manifest::load(&settings.model.artifacts_dir)?;
+    let report = load_or_measure_profile(inv, settings, None)?;
+    let gamma = get_f64(inv, "gamma")?.unwrap_or(settings.edge.gamma);
+    let profile = report.to_delay_profile(gamma);
+    let link = link_from(inv, settings)?;
+    let p = get_f64(inv, "probability")?
+        .or(settings.branch.exit_probability)
+        .unwrap_or(0.5);
+    Ok((manifest, profile, link, p))
+}
+
+fn cmd_plan(inv: &Invocation, settings: &Settings) -> Result<()> {
+    let (manifest, profile, link, p) = planning_inputs(inv, settings)?;
+    let desc = manifest.to_desc(p);
+    let strategies: Vec<Strategy> = if inv.has("all") {
+        vec![
+            Strategy::ShortestPath,
+            Strategy::BruteForce,
+            Strategy::Neurosurgeon,
+            Strategy::EdgeOnly,
+            Strategy::CloudOnly,
+        ]
+    } else {
+        vec![Strategy::parse(inv.get("strategy").unwrap_or("shortest-path"))?]
+    };
+    let mut table = Table::new(&["strategy", "split after", "E[T]", "transfer bytes"]);
+    for st in strategies {
+        let plan = partition::plan_with_strategy(
+            st,
+            &desc,
+            &profile,
+            link,
+            settings.partition.epsilon,
+            true,
+        );
+        table.row(vec![
+            st.as_str().to_string(),
+            plan.split_label(&desc),
+            format_secs(plan.expected_time_s),
+            plan.transfer_bytes.to_string(),
+        ]);
+        if st == Strategy::ShortestPath {
+            let (v_e, v_c) = plan.partition_sets(&desc);
+            println!("V_e = {v_e:?}");
+            println!("V_c = {v_c:?}");
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
+    // Two engines = two PJRT clients = the edge node and the cloud node.
+    let manifest = Manifest::load(&settings.model.artifacts_dir)?;
+    let edge = InferenceEngine::open(
+        &settings.model.artifacts_dir,
+        manifest.clone(),
+        settings.model.flavor,
+        "edge",
+    )?;
+    let cloud = InferenceEngine::open(
+        &settings.model.artifacts_dir,
+        manifest,
+        settings.model.flavor,
+        "cloud",
+    )?;
+    let compile_s = edge.warmup()? + cloud.warmup()?;
+    log::info!("precompiled artifacts in {compile_s:.2}s");
+    let engine = edge.clone();
+
+    let report = load_or_measure_profile(inv, settings, Some(&engine))?;
+    let gamma = get_f64(inv, "gamma")?.unwrap_or(settings.edge.gamma);
+    let profile = report.to_delay_profile(gamma);
+    let link = link_from(inv, settings)?;
+    let p = get_f64(inv, "probability")?.unwrap_or(0.5);
+    let desc = engine.manifest().to_desc(p);
+    let plan =
+        partition::solver::solve(&desc, &profile, link, settings.partition.epsilon, false);
+    println!(
+        "plan: split after '{}' (E[T] = {})",
+        plan.split_label(&desc),
+        format_secs(plan.expected_time_s)
+    );
+
+    let trace = match &settings.network.trace {
+        Some(path) => BandwidthTrace::load(path)?,
+        None => BandwidthTrace::constant(link.uplink_mbps),
+    };
+    let channel = Arc::new(Channel::new(trace, link.rtt_s, 0.0, 1));
+    let threshold =
+        get_f64(inv, "threshold")?.unwrap_or(settings.branch.entropy_threshold) as f32;
+    let coordinator = Arc::new(Coordinator::start(
+        edge,
+        cloud,
+        channel,
+        plan,
+        CoordinatorConfig {
+            entropy_threshold: threshold,
+            max_batch: settings.serve.max_batch,
+            batch_timeout: Duration::from_secs_f64(settings.serve.batch_timeout_ms / 1e3),
+            queue_capacity: settings.serve.queue_capacity,
+        },
+    ));
+    let port = get_usize(inv, "port")?.unwrap_or(7878) as u16;
+    let handle = Server::new(coordinator.clone()).start(port)?;
+    println!("serving on {} — Ctrl-C to stop", handle.addr());
+    loop {
+        std::thread::sleep(Duration::from_secs(10));
+        println!("{}", coordinator.metrics().summary());
+    }
+}
+
+fn cmd_fig4(inv: &Invocation, settings: &Settings) -> Result<()> {
+    let (manifest, profile, _, _) = planning_inputs(inv, settings)?;
+    let desc = manifest.to_desc(0.0);
+    let points = get_usize(inv, "points")?.unwrap_or(21);
+    let curves = fig4::run(&desc, &profile, points, settings.partition.epsilon);
+
+    for &gamma in &fig4::GAMMAS {
+        let mut table = Table::new(&[
+            "p", "3G E[T]", "4G E[T]", "WiFi E[T]", "3G split", "4G split", "WiFi split",
+        ]);
+        let get =
+            |net: Profile| curves.iter().find(|c| c.gamma == gamma && c.network == net).unwrap();
+        let (c3, c4, cw) = (get(Profile::ThreeG), get(Profile::FourG), get(Profile::WiFi));
+        for i in 0..points {
+            table.row(vec![
+                format!("{:.2}", c3.points[i].0),
+                format_secs(c3.points[i].1),
+                format_secs(c4.points[i].1),
+                format_secs(cw.points[i].1),
+                c3.points[i].2.to_string(),
+                c4.points[i].2.to_string(),
+                cw.points[i].2.to_string(),
+            ]);
+        }
+        println!("\nFig. 4 — gamma = {gamma}");
+        if inv.has("csv") {
+            println!("{}", table.to_csv());
+        } else {
+            println!("{}", table.render());
+        }
+        println!(
+            "reduction p=0 -> p=1: 3G {:.2}%  4G {:.2}%  WiFi {:.2}%",
+            c3.reduction_pct(),
+            c4.reduction_pct(),
+            cw.reduction_pct()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig5(inv: &Invocation, settings: &Settings) -> Result<()> {
+    let (manifest, profile, _, _) = planning_inputs(inv, settings)?;
+    let desc = manifest.to_desc(0.0);
+    let points = get_usize(inv, "points")?.unwrap_or(30);
+    let max_gamma = get_f64(inv, "max-gamma")?.unwrap_or(1000.0);
+    let gammas = fig5::gamma_grid(points, max_gamma);
+    let curves = fig5::run(&desc, &profile, &gammas, settings.partition.epsilon);
+
+    for net in [Profile::ThreeG, Profile::FourG] {
+        let mut headers = vec!["gamma".to_string()];
+        headers.extend(fig5::PROBABILITIES.iter().map(|p| format!("p={p}")));
+        let headers_ref: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut table = Table::new(&headers_ref);
+        for (i, &gamma) in gammas.iter().enumerate() {
+            let mut row = vec![format!("{gamma:.1}")];
+            for &p in &fig5::PROBABILITIES {
+                let c = curves
+                    .iter()
+                    .find(|c| c.network == net && c.probability == p)
+                    .unwrap();
+                row.push(c.points[i].2.clone());
+            }
+            table.row(row);
+        }
+        println!("\nFig. 5 — {} (chosen partition layer)", net.name());
+        if inv.has("csv") {
+            println!("{}", table.to_csv());
+        } else {
+            println!("{}", table.render());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fig6(inv: &Invocation, settings: &Settings) -> Result<()> {
+    let engine = open_engine(settings)?;
+    let results = fig6::run(&engine)?;
+    let points = get_usize(inv, "points")?.unwrap_or(15);
+    let max_nats = engine.manifest().entropy_max_nats;
+
+    let mut headers = vec!["threshold".to_string()];
+    headers.extend(
+        results
+            .iter()
+            .map(|r| format!("{} (k={})", r.level, r.blur_ksize)),
+    );
+    let headers_ref: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut table = Table::new(&headers_ref);
+    for i in 0..points {
+        let thr = i as f64 / (points - 1) as f64 * max_nats;
+        let mut row = vec![format!("{thr:.3}")];
+        for r in &results {
+            row.push(format!("{:.3}", r.exit_probability(thr)));
+        }
+        table.row(row);
+    }
+    println!("\nFig. 6 — P[classified at side branch] vs entropy threshold");
+    if inv.has("csv") {
+        println!("{}", table.to_csv());
+    } else {
+        println!("{}", table.render());
+    }
+    for r in &results {
+        println!(
+            "{:>5} (k={:>2}): mean entropy {:.4} nats, branch accuracy {:.3}",
+            r.level,
+            r.blur_ksize,
+            r.entropies.iter().map(|&e| e as f64).sum::<f64>() / r.entropies.len() as f64,
+            r.branch_accuracy
+        );
+    }
+    Ok(())
+}
+
+fn cmd_ablation(inv: &Invocation, settings: &Settings) -> Result<()> {
+    let (manifest, profile, link, p) = planning_inputs(inv, settings)?;
+    let desc = manifest.to_desc(p);
+
+    println!("\n== strategy gap ==");
+    let gaps =
+        ablation::strategy_gap(&desc, &profile, &[0.0, 0.5, 0.9], &[10.0, 100.0, 1000.0]);
+    let mut table = Table::new(&[
+        "p", "gamma", "net", "solver", "neurosurgeon", "edge-only", "cloud-only", "max speedup",
+    ]);
+    for g in &gaps {
+        let t = |st: Strategy| {
+            g.rows
+                .iter()
+                .find(|r| r.0 == st)
+                .map(|r| format_secs(r.2))
+                .unwrap_or_default()
+        };
+        table.row(vec![
+            format!("{:.1}", g.probability),
+            format!("{}", g.gamma),
+            g.network.name().to_string(),
+            t(Strategy::ShortestPath),
+            t(Strategy::Neurosurgeon),
+            t(Strategy::EdgeOnly),
+            t(Strategy::CloudOnly),
+            format!("{:.2}x", g.max_speedup()),
+        ]);
+    }
+    println!("{}", table.render());
+
+    println!("== epsilon sensitivity ==");
+    let eps = ablation::epsilon_sensitivity(
+        &desc,
+        &profile,
+        link,
+        &[1e-12, 1e-10, 1e-9, 1e-7, 1e-5],
+    );
+    for (e, s) in &eps {
+        println!("  epsilon {e:>8.0e} -> split {s}");
+    }
+
+    println!("\n== branch placement sweep (p = {p}) ==");
+    for (pos, t, split) in ablation::branch_placement(&desc, &profile, link, p) {
+        println!(
+            "  branch after {:<8} E[T*] = {:>12}  split {}",
+            desc.stage_names[pos - 1],
+            format_secs(t),
+            split
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Analytic cost model: planning-time estimates of per-stage processing
+//! time when no measured profile is available, from FLOPs and an assumed
+//! sustained throughput. The profiler's measured `t_c` supersedes this;
+//! benches compare the two (ablation: analytic vs measured planning).
+
+use super::manifest::Manifest;
+use crate::timing::profile::DelayProfile;
+
+/// Sustained FLOP/s assumption for the "cloud" device when estimating
+/// analytically. The default is deliberately modest (CPU-class, matching
+/// this testbed); the paper's model only needs *relative* layer times.
+pub const DEFAULT_CLOUD_FLOPS: f64 = 5e9;
+
+/// Build a [`DelayProfile`] from the manifest's analytic FLOPs.
+///
+/// `cloud_flops` — assumed sustained FLOP/s of the cloud device;
+/// `gamma` — the paper's edge/cloud slowdown factor (t_e = gamma * t_c).
+pub fn analytic_profile(m: &Manifest, cloud_flops: f64, gamma: f64) -> DelayProfile {
+    assert!(cloud_flops > 0.0 && gamma >= 1.0);
+    let t_c: Vec<f64> = m
+        .stages
+        .iter()
+        .map(|s| s.flops_per_sample as f64 / cloud_flops)
+        .collect();
+    let branch_t_c = m.branch.flops_per_sample as f64 / cloud_flops;
+    DelayProfile::from_cloud_times(t_c, branch_t_c, gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json::Json;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        let doc = Json::parse(crate::model::manifest::tests::SAMPLE).unwrap();
+        Manifest::from_json(Path::new("/tmp"), &doc).unwrap()
+    }
+
+    #[test]
+    fn analytic_times_scale_with_flops() {
+        let m = manifest();
+        let p = analytic_profile(&m, 1e9, 10.0);
+        // Sample manifest: stage flops 1000 and 10.
+        assert!((p.t_cloud[0] - 1e-6).abs() < 1e-12);
+        assert!((p.t_cloud[1] - 1e-8).abs() < 1e-14);
+        assert!((p.t_edge[0] - 1e-5).abs() < 1e-11);
+        assert!((p.branch_t_edge - 5e-7).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonpositive_flops_rate() {
+        analytic_profile(&manifest(), 0.0, 10.0);
+    }
+}

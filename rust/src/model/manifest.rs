@@ -1,0 +1,410 @@
+//! `artifacts/manifest.json` binding — the bridge between the Python AOT
+//! exporter and the Rust runtime/planner.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{BranchDesc, BranchyNetDesc};
+use crate::config::json::Json;
+use crate::config::settings::Flavor;
+
+/// One main-branch stage as exported.
+#[derive(Debug, Clone)]
+pub struct StageInfo {
+    /// 1-based chain index.
+    pub index: usize,
+    pub name: String,
+    /// "conv" or "fc".
+    pub kind: String,
+    /// Per-sample shapes (no batch dim).
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub out_bytes_per_sample: u64,
+    pub flops_per_sample: u64,
+    /// artifact file name per (flavor, batch size).
+    artifacts: Json,
+}
+
+impl StageInfo {
+    pub fn artifact(&self, flavor: Flavor, batch: usize) -> Result<&str> {
+        artifact_lookup(&self.artifacts, flavor, batch)
+            .ok_or_else(|| anyhow!("stage {} has no artifact for {flavor:?} b{batch}", self.name))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BranchInfo {
+    /// 1-based main-branch stage the branch consumes the output of.
+    pub after_stage: usize,
+    pub name: String,
+    pub in_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub flops_per_sample: u64,
+    artifacts: Json,
+}
+
+impl BranchInfo {
+    pub fn artifact(&self, flavor: Flavor, batch: usize) -> Result<&str> {
+        artifact_lookup(&self.artifacts, flavor, batch)
+            .ok_or_else(|| anyhow!("branch {} has no artifact for {flavor:?} b{batch}", self.name))
+    }
+}
+
+/// A named raw-f32 fixture file.
+#[derive(Debug, Clone)]
+pub struct FixtureInfo {
+    pub path: PathBuf,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub num_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub input_bytes_per_sample: u64,
+    pub batch_sizes: Vec<usize>,
+    pub entropy_max_nats: f64,
+    pub stages: Vec<StageInfo>,
+    pub branch: BranchInfo,
+    full_artifacts: Json,
+    fixtures: Json,
+}
+
+fn artifact_lookup<'a>(artifacts: &'a Json, flavor: Flavor, batch: usize) -> Option<&'a str> {
+    artifacts
+        .get(flavor.as_str())?
+        .get(&batch.to_string())?
+        .as_str()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let doc = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(dir, &doc)
+    }
+
+    pub fn from_json(dir: &Path, doc: &Json) -> Result<Manifest> {
+        let req_str = |key: &str| -> Result<String> {
+            Ok(doc
+                .path(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest missing string '{key}'"))?
+                .to_string())
+        };
+        let req_u64 = |key: &str| -> Result<u64> {
+            doc.path(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("manifest missing integer '{key}'"))
+        };
+
+        let stages_json = doc
+            .get("stages")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'stages'"))?;
+        let mut stages = Vec::with_capacity(stages_json.len());
+        for (i, s) in stages_json.iter().enumerate() {
+            let stage = StageInfo {
+                index: s
+                    .get("index")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("stage {i} missing index"))?,
+                name: s
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("stage {i} missing name"))?
+                    .to_string(),
+                kind: s
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                in_shape: s
+                    .get("in_shape")
+                    .and_then(Json::as_usize_vec)
+                    .ok_or_else(|| anyhow!("stage {i} missing in_shape"))?,
+                out_shape: s
+                    .get("out_shape")
+                    .and_then(Json::as_usize_vec)
+                    .ok_or_else(|| anyhow!("stage {i} missing out_shape"))?,
+                out_bytes_per_sample: s
+                    .get("out_bytes_per_sample")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("stage {i} missing out_bytes_per_sample"))?,
+                flops_per_sample: s
+                    .get("flops_per_sample")
+                    .and_then(Json::as_u64)
+                    .unwrap_or(0),
+                artifacts: s
+                    .get("artifacts")
+                    .cloned()
+                    .ok_or_else(|| anyhow!("stage {i} missing artifacts"))?,
+            };
+            if stage.index != i + 1 {
+                bail!("stage {} has index {}, expected {}", stage.name, stage.index, i + 1);
+            }
+            stages.push(stage);
+        }
+        if stages.is_empty() {
+            bail!("manifest has no stages");
+        }
+        // Chain consistency: in_shape[i] == out_shape[i-1].
+        for w in stages.windows(2) {
+            if w[1].in_shape != w[0].out_shape {
+                bail!(
+                    "stage chain broken: {} out {:?} != {} in {:?}",
+                    w[0].name,
+                    w[0].out_shape,
+                    w[1].name,
+                    w[1].in_shape
+                );
+            }
+        }
+
+        let b = doc
+            .get("branch")
+            .ok_or_else(|| anyhow!("manifest missing 'branch'"))?;
+        let branch = BranchInfo {
+            after_stage: b
+                .get("after_stage")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("branch missing after_stage"))?,
+            name: b
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("b1")
+                .to_string(),
+            in_shape: b
+                .get("in_shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("branch missing in_shape"))?,
+            num_classes: b
+                .get("num_classes")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("branch missing num_classes"))?,
+            flops_per_sample: b.get("flops_per_sample").and_then(Json::as_u64).unwrap_or(0),
+            artifacts: b
+                .get("artifacts")
+                .cloned()
+                .ok_or_else(|| anyhow!("branch missing artifacts"))?,
+        };
+        if branch.after_stage == 0 || branch.after_stage > stages.len() {
+            bail!("branch after_stage {} out of range", branch.after_stage);
+        }
+        if branch.in_shape != stages[branch.after_stage - 1].out_shape {
+            bail!("branch in_shape does not match its host stage output");
+        }
+
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            model: req_str("model")?,
+            num_classes: req_u64("num_classes")? as usize,
+            input_shape: doc
+                .get("input_shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("manifest missing input_shape"))?,
+            input_bytes_per_sample: req_u64("input_bytes_per_sample")?,
+            batch_sizes: doc
+                .get("batch_sizes")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("manifest missing batch_sizes"))?,
+            entropy_max_nats: doc
+                .path("entropy_max_nats")
+                .and_then(Json::as_f64)
+                .unwrap_or((2f64).ln()),
+            stages,
+            branch,
+            full_artifacts: doc
+                .path("full.artifacts")
+                .cloned()
+                .ok_or_else(|| anyhow!("manifest missing full.artifacts"))?,
+            fixtures: doc.get("fixtures").cloned().unwrap_or(Json::Null),
+        };
+        Ok(m)
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn full_artifact(&self, flavor: Flavor, batch: usize) -> Result<&str> {
+        artifact_lookup(&self.full_artifacts, flavor, batch)
+            .ok_or_else(|| anyhow!("no full-model artifact for {flavor:?} b{batch}"))
+    }
+
+    /// Absolute path of an artifact file name.
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// Named fixture (raw f32 file + shape).
+    pub fn fixture(&self, key: &str) -> Result<FixtureInfo> {
+        let f = self
+            .fixtures
+            .get(key)
+            .ok_or_else(|| anyhow!("no fixture '{key}' in manifest"))?;
+        Ok(FixtureInfo {
+            path: self.dir.join("fixtures").join(
+                f.get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("fixture '{key}' missing path"))?,
+            ),
+            shape: f
+                .get("shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("fixture '{key}' missing shape"))?,
+        })
+    }
+
+    /// Fig. 6 fixture for a blur level ("none" | "low" | "mid" | "high").
+    pub fn fig6_fixture(&self, level: &str) -> Result<FixtureInfo> {
+        let f = self
+            .fixtures
+            .path(&format!("fig6.{level}"))
+            .ok_or_else(|| anyhow!("no fig6 fixture '{level}'"))?;
+        Ok(FixtureInfo {
+            path: self.dir.join("fixtures").join(
+                f.get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("fig6 '{level}' missing path"))?,
+            ),
+            shape: f
+                .get("shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("fig6 '{level}' missing shape"))?,
+        })
+    }
+
+    pub fn fig6_labels(&self) -> Result<Vec<usize>> {
+        self.fixtures
+            .get("fig6_labels")
+            .and_then(Json::as_usize_vec)
+            .ok_or_else(|| anyhow!("no fig6_labels in manifest"))
+    }
+
+    /// Abstract description for the partitioner, with a given conditional
+    /// exit probability for the (single) side branch.
+    pub fn to_desc(&self, exit_prob: f64) -> BranchyNetDesc {
+        BranchyNetDesc {
+            stage_names: self.stages.iter().map(|s| s.name.clone()).collect(),
+            stage_out_bytes: self.stages.iter().map(|s| s.out_bytes_per_sample).collect(),
+            input_bytes: self.input_bytes_per_sample,
+            branches: vec![BranchDesc {
+                after_stage: self.branch.after_stage,
+                exit_prob,
+            }],
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) const SAMPLE: &str = r#"{
+      "model": "b-alexnet",
+      "num_classes": 2,
+      "input_shape": [3, 32, 32],
+      "input_bytes_per_sample": 12288,
+      "batch_sizes": [1, 8],
+      "entropy_max_nats": 0.6931471805599453,
+      "stages": [
+        {"index": 1, "name": "conv1", "kind": "conv",
+         "in_shape": [3,32,32], "out_shape": [64,15,15],
+         "out_bytes_per_sample": 57600, "flops_per_sample": 1000,
+         "artifacts": {"pl": {"1": "s1_pl_b1.hlo.txt", "8": "s1_pl_b8.hlo.txt"},
+                        "ref": {"1": "s1_ref_b1.hlo.txt", "8": "s1_ref_b8.hlo.txt"}}},
+        {"index": 2, "name": "fc_out", "kind": "fc",
+         "in_shape": [64,15,15], "out_shape": [2],
+         "out_bytes_per_sample": 8, "flops_per_sample": 10,
+         "artifacts": {"pl": {"1": "s2_pl_b1.hlo.txt", "8": "s2_pl_b8.hlo.txt"},
+                        "ref": {"1": "s2_ref_b1.hlo.txt", "8": "s2_ref_b8.hlo.txt"}}}
+      ],
+      "branch": {"after_stage": 1, "name": "b1", "in_shape": [64,15,15],
+                 "num_classes": 2, "flops_per_sample": 50,
+                 "artifacts": {"pl": {"1": "b_pl_b1.hlo.txt", "8": "b_pl_b8.hlo.txt"},
+                               "ref": {"1": "b_ref_b1.hlo.txt", "8": "b_ref_b8.hlo.txt"}}},
+      "full": {"artifacts": {"ref": {"1": "full_ref_b1.hlo.txt"}}},
+      "fixtures": {
+        "input_b8": {"path": "input_b8.bin", "shape": [8,3,32,32]},
+        "fig6": {"none": {"path": "fig6_none_b48.bin", "shape": [48,3,32,32]}},
+        "fig6_labels": [0, 1]
+      }
+    }"#;
+
+    fn sample() -> Manifest {
+        let doc = Json::parse(SAMPLE).unwrap();
+        Manifest::from_json(Path::new("/tmp/art"), &doc).unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = sample();
+        assert_eq!(m.num_stages(), 2);
+        assert_eq!(m.stages[0].name, "conv1");
+        assert_eq!(m.branch.after_stage, 1);
+        assert_eq!(m.batch_sizes, vec![1, 8]);
+    }
+
+    #[test]
+    fn artifact_lookup_by_flavor_batch() {
+        let m = sample();
+        assert_eq!(
+            m.stages[0].artifact(Flavor::Pallas, 8).unwrap(),
+            "s1_pl_b8.hlo.txt"
+        );
+        assert_eq!(
+            m.stages[1].artifact(Flavor::Ref, 1).unwrap(),
+            "s2_ref_b1.hlo.txt"
+        );
+        assert!(m.stages[0].artifact(Flavor::Pallas, 4).is_err());
+        assert_eq!(m.full_artifact(Flavor::Ref, 1).unwrap(), "full_ref_b1.hlo.txt");
+        assert!(m.full_artifact(Flavor::Pallas, 1).is_err());
+    }
+
+    #[test]
+    fn fixtures_resolve() {
+        let m = sample();
+        let f = m.fixture("input_b8").unwrap();
+        assert_eq!(f.shape, vec![8, 3, 32, 32]);
+        assert!(f.path.ends_with("fixtures/input_b8.bin"));
+        let g = m.fig6_fixture("none").unwrap();
+        assert_eq!(g.shape[0], 48);
+        assert!(m.fig6_fixture("blurry").is_err());
+    }
+
+    #[test]
+    fn to_desc_roundtrip() {
+        let m = sample();
+        let d = m.to_desc(0.4);
+        d.validate().unwrap();
+        assert_eq!(d.num_stages(), 2);
+        assert_eq!(d.transfer_bytes(0), 12288);
+        assert_eq!(d.transfer_bytes(1), 57600);
+        assert_eq!(d.branches[0].exit_prob, 0.4);
+    }
+
+    #[test]
+    fn rejects_broken_chain() {
+        let bad = SAMPLE.replace("\"in_shape\": [64,15,15], \"out_shape\": [2]",
+                                  "\"in_shape\": [9,9,9], \"out_shape\": [2]");
+        let doc = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp"), &doc).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let doc = Json::parse(r#"{"model": "x"}"#).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp"), &doc).is_err());
+    }
+}

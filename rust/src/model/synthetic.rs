@@ -1,0 +1,117 @@
+//! Synthetic BranchyNet generators for property tests and solver
+//! benchmarks: random chains of arbitrary depth with random side-branch
+//! placements, output-size profiles and delay profiles.
+//!
+//! These let the optimality tests cross-check the shortest-path solver
+//! against brute force on thousands of networks far from B-AlexNet's
+//! shape, and let the solver bench scale to 10^4-layer chains.
+
+use super::{BranchDesc, BranchyNetDesc};
+use crate::testing::Gen;
+use crate::timing::profile::DelayProfile;
+use crate::util::rng::Pcg32;
+
+/// A random BranchyNet description with `n_stages` stages and up to
+/// `max_branches` side branches at random positions.
+pub fn random_desc(g: &mut Gen, n_stages: usize, max_branches: usize) -> BranchyNetDesc {
+    assert!(n_stages >= 1);
+    let stage_names: Vec<String> = (1..=n_stages).map(|i| format!("s{i}")).collect();
+    let stage_out_bytes: Vec<u64> = (0..n_stages)
+        .map(|_| g.usize_in(1, 1 << 20) as u64)
+        .collect();
+    let input_bytes = g.usize_in(1, 1 << 20) as u64;
+
+    let mut positions: Vec<usize> = (1..n_stages).collect();
+    // Shuffle and take a prefix as branch positions.
+    let n_branches = if n_stages <= 1 {
+        0
+    } else {
+        g.usize_in(0, max_branches.min(n_stages - 1))
+    };
+    for i in (1..positions.len()).rev() {
+        let j = g.usize_in(0, i);
+        positions.swap(i, j);
+    }
+    let mut branches: Vec<BranchDesc> = positions[..n_branches]
+        .iter()
+        .map(|&after_stage| BranchDesc {
+            after_stage,
+            exit_prob: g.probability(),
+        })
+        .collect();
+    branches.sort_by_key(|b| b.after_stage);
+
+    let desc = BranchyNetDesc {
+        stage_names,
+        stage_out_bytes,
+        input_bytes,
+        branches,
+    };
+    desc.validate().expect("generator must produce valid descs");
+    desc
+}
+
+/// A random delay profile matching `desc` (cloud times in [1us, 10ms],
+/// edge = gamma * cloud).
+pub fn random_profile(g: &mut Gen, desc: &BranchyNetDesc, gamma: f64) -> DelayProfile {
+    let t_c: Vec<f64> = (0..desc.num_stages())
+        .map(|_| g.f64_in(1e-6, 1e-2))
+        .collect();
+    let branch_t_c = g.f64_in(1e-7, 1e-3);
+    DelayProfile::from_cloud_times(t_c, branch_t_c, gamma)
+}
+
+/// Deterministic deep chain for benchmarks: `n` stages, branches every
+/// `branch_every` stages with the given conditional exit probability.
+pub fn deep_chain(n: usize, branch_every: usize, exit_prob: f64, seed: u64) -> (BranchyNetDesc, DelayProfile) {
+    let mut rng = Pcg32::seeded(seed);
+    let stage_names = (1..=n).map(|i| format!("s{i}")).collect();
+    let stage_out_bytes = (0..n).map(|_| rng.range_u64(64, 1 << 18)).collect();
+    let branches = (1..n)
+        .filter(|i| branch_every > 0 && i % branch_every == 0)
+        .map(|after_stage| BranchDesc {
+            after_stage,
+            exit_prob,
+        })
+        .collect();
+    let desc = BranchyNetDesc {
+        stage_names,
+        stage_out_bytes,
+        input_bytes: 12_288,
+        branches,
+    };
+    desc.validate().unwrap();
+    let t_c: Vec<f64> = (0..n).map(|_| rng.range_f64(1e-5, 1e-3)).collect();
+    let profile = DelayProfile::from_cloud_times(t_c, 1e-5, 100.0);
+    (desc, profile)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_descs_are_valid() {
+        crate::testing::property("random descs validate", 100, |g| {
+            let n = g.usize_in(1, 40);
+            let desc = random_desc(g, n, 5);
+            desc.validate().unwrap();
+            let profile = random_profile(g, &desc, 10.0);
+            profile.validate(desc.num_stages()).unwrap();
+        });
+    }
+
+    #[test]
+    fn deep_chain_shape() {
+        let (desc, profile) = deep_chain(100, 10, 0.3, 1);
+        assert_eq!(desc.num_stages(), 100);
+        assert_eq!(desc.branches.len(), 9); // 10, 20, ..., 90
+        profile.validate(100).unwrap();
+    }
+
+    #[test]
+    fn deep_chain_no_branches() {
+        let (desc, _) = deep_chain(10, 0, 0.3, 2);
+        assert!(desc.branches.is_empty());
+    }
+}

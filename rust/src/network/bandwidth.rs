@@ -1,0 +1,125 @@
+//! Bandwidth profiles and the link delay model.
+//!
+//! The paper evaluates with average uplink rates of 1.10 Mbps (3G),
+//! 5.85 Mbps (4G) and 18.80 Mbps (Wi-Fi), taken from DADS [6], and models
+//! the communication time of layer v_i as `t_i^net = alpha_i / B`.
+
+use anyhow::{bail, Result};
+
+/// The paper's named uplink profiles (§VI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    ThreeG,
+    FourG,
+    WiFi,
+}
+
+impl Profile {
+    pub const ALL: [Profile; 3] = [Profile::ThreeG, Profile::FourG, Profile::WiFi];
+
+    /// Average uplink rate in Mbps (paper §VI, after [6]).
+    pub fn uplink_mbps(&self) -> f64 {
+        match self {
+            Profile::ThreeG => 1.10,
+            Profile::FourG => 5.85,
+            Profile::WiFi => 18.80,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Profile::ThreeG => "3G",
+            Profile::FourG => "4G",
+            Profile::WiFi => "WiFi",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Profile> {
+        match s.to_ascii_lowercase().as_str() {
+            "3g" => Ok(Profile::ThreeG),
+            "4g" => Ok(Profile::FourG),
+            "wifi" | "wi-fi" => Ok(Profile::WiFi),
+            _ => bail!("unknown network profile '{s}' (expected 3g|4g|wifi)"),
+        }
+    }
+}
+
+/// Deterministic link delay model: serialization at `uplink_mbps` plus a
+/// fixed one-way base latency. This is what the *planner* uses; the
+/// serving-path [`super::channel::Channel`] adds jitter on top.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    pub uplink_mbps: f64,
+    /// One-way base latency in seconds (0 reproduces the paper exactly —
+    /// its model is pure serialization delay).
+    pub rtt_s: f64,
+}
+
+impl LinkModel {
+    pub fn new(uplink_mbps: f64, rtt_s: f64) -> LinkModel {
+        assert!(uplink_mbps > 0.0, "bandwidth must be positive");
+        assert!(rtt_s >= 0.0);
+        LinkModel { uplink_mbps, rtt_s }
+    }
+
+    pub fn from_profile(p: Profile) -> LinkModel {
+        LinkModel::new(p.uplink_mbps(), 0.0)
+    }
+
+    /// t^net = alpha / B (+ base latency): seconds to upload `bytes`.
+    #[inline]
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 / (self.uplink_mbps * 1e6) + self.rtt_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_rates() {
+        assert_eq!(Profile::ThreeG.uplink_mbps(), 1.10);
+        assert_eq!(Profile::FourG.uplink_mbps(), 5.85);
+        assert_eq!(Profile::WiFi.uplink_mbps(), 18.80);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Profile::parse("3g").unwrap(), Profile::ThreeG);
+        assert_eq!(Profile::parse("Wi-Fi").unwrap(), Profile::WiFi);
+        assert!(Profile::parse("5g").is_err());
+    }
+
+    #[test]
+    fn transfer_time_formula() {
+        // 12288-byte raw image over 3G: 12288*8 / 1.10e6 s ≈ 89.37 ms.
+        let l = LinkModel::from_profile(Profile::ThreeG);
+        let t = l.transfer_time(12_288);
+        assert!((t - 12_288.0 * 8.0 / 1.10e6).abs() < 1e-12);
+        assert!((t - 0.08937).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rtt_added_once() {
+        let l = LinkModel::new(8.0, 0.05);
+        // 1e6 bytes at 8 Mbps = 1 s + 50 ms RTT.
+        assert!((l.transfer_time(1_000_000) - 1.05).abs() < 1e-9);
+        assert!((l.transfer_time(0) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faster_profile_shorter_time() {
+        let bytes = 57_600;
+        let t3 = LinkModel::from_profile(Profile::ThreeG).transfer_time(bytes);
+        let t4 = LinkModel::from_profile(Profile::FourG).transfer_time(bytes);
+        let tw = LinkModel::from_profile(Profile::WiFi).transfer_time(bytes);
+        assert!(t3 > t4 && t4 > tw);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_bandwidth_panics() {
+        LinkModel::new(0.0, 0.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Simulated edge→cloud channel for the serving path.
+//!
+//! The planner uses the deterministic [`super::bandwidth::LinkModel`];
+//! the *runtime* channel adds what a real uplink has: a time-varying rate
+//! (optionally trace-driven), log-normal-ish jitter, and an actual
+//! blocking delay (`std::thread::sleep`) so end-to-end serving latencies
+//! are physically consistent with the model the partitioner optimized.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::rng::Pcg32;
+
+use super::bandwidth::LinkModel;
+use super::trace::BandwidthTrace;
+
+#[derive(Debug)]
+struct ChannelState {
+    rng: Pcg32,
+    transferred_bytes: u64,
+    transfers: u64,
+    busy_s: f64,
+}
+
+/// Thread-safe simulated uplink.
+#[derive(Debug)]
+pub struct Channel {
+    trace: BandwidthTrace,
+    rtt_s: f64,
+    /// Multiplicative jitter stddev (0 = deterministic).
+    jitter: f64,
+    /// If false, delays are accounted but not slept — for fast tests.
+    real_time: bool,
+    epoch: Instant,
+    state: Mutex<ChannelState>,
+}
+
+impl Channel {
+    pub fn new(trace: BandwidthTrace, rtt_s: f64, jitter: f64, seed: u64) -> Channel {
+        assert!((0.0..1.0).contains(&jitter));
+        assert!(rtt_s >= 0.0);
+        Channel {
+            trace,
+            rtt_s,
+            jitter,
+            real_time: true,
+            epoch: Instant::now(),
+            state: Mutex::new(ChannelState {
+                rng: Pcg32::seeded(seed),
+                transferred_bytes: 0,
+                transfers: 0,
+                busy_s: 0.0,
+            }),
+        }
+    }
+
+    pub fn from_link(link: LinkModel) -> Channel {
+        Channel::new(BandwidthTrace::constant(link.uplink_mbps), link.rtt_s, 0.0, 0)
+    }
+
+    /// Disable real sleeping (simulation-time mode for tests/benches).
+    pub fn simulated_time(mut self) -> Channel {
+        self.real_time = false;
+        self
+    }
+
+    /// Current nominal link model (bandwidth from the trace at now).
+    pub fn current_link(&self) -> LinkModel {
+        let t = self.epoch.elapsed().as_secs_f64();
+        LinkModel::new(self.trace.mbps_at(t), self.rtt_s)
+    }
+
+    /// Compute the delay a transfer of `bytes` experiences right now.
+    pub fn sample_delay(&self, bytes: u64) -> Duration {
+        let base = self.current_link().transfer_time(bytes);
+        let mut st = self.state.lock().unwrap();
+        let factor = if self.jitter > 0.0 {
+            (1.0 + st.rng.normal(0.0, self.jitter)).max(0.1)
+        } else {
+            1.0
+        };
+        st.transferred_bytes += bytes;
+        st.transfers += 1;
+        let d = base * factor;
+        st.busy_s += d;
+        Duration::from_secs_f64(d)
+    }
+
+    /// Transfer `bytes`: blocks for the sampled delay (or just accounts
+    /// it in simulated-time mode) and returns the delay.
+    pub fn transfer(&self, bytes: u64) -> Duration {
+        let d = self.sample_delay(bytes);
+        if self.real_time {
+            std::thread::sleep(d);
+        }
+        d
+    }
+
+    /// (transferred_bytes, transfer_count, total_busy_seconds).
+    pub fn stats(&self) -> (u64, u64, f64) {
+        let st = self.state.lock().unwrap();
+        (st.transferred_bytes, st.transfers, st.busy_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::bandwidth::Profile;
+
+    #[test]
+    fn deterministic_without_jitter() {
+        let ch = Channel::from_link(LinkModel::from_profile(Profile::FourG)).simulated_time();
+        let d1 = ch.transfer(57_600);
+        let d2 = ch.transfer(57_600);
+        assert_eq!(d1, d2);
+        let want = 57_600.0 * 8.0 / 5.85e6;
+        assert!((d1.as_secs_f64() - want).abs() < 1e-9);
+        let (bytes, count, busy) = ch.stats();
+        assert_eq!(bytes, 115_200);
+        assert_eq!(count, 2);
+        assert!((busy - 2.0 * want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jitter_varies_but_stays_positive() {
+        let ch = Channel::new(BandwidthTrace::constant(5.85), 0.0, 0.3, 42).simulated_time();
+        let delays: Vec<f64> = (0..50).map(|_| ch.transfer(10_000).as_secs_f64()).collect();
+        assert!(delays.iter().all(|&d| d > 0.0));
+        let distinct = delays.windows(2).filter(|w| w[0] != w[1]).count();
+        assert!(distinct > 40, "jitter should vary delays");
+        // Mean within 20% of nominal.
+        let nominal = 10_000.0 * 8.0 / 5.85e6;
+        let mean = delays.iter().sum::<f64>() / delays.len() as f64;
+        assert!((mean / nominal - 1.0).abs() < 0.2, "mean {mean} vs {nominal}");
+    }
+
+    #[test]
+    fn rtt_added() {
+        let ch = Channel::new(BandwidthTrace::constant(8.0), 0.05, 0.0, 0).simulated_time();
+        let d = ch.transfer(0);
+        assert!((d.as_secs_f64() - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn real_time_mode_actually_sleeps() {
+        let ch = Channel::new(BandwidthTrace::constant(1.0), 0.0, 0.0, 0);
+        let t0 = Instant::now();
+        ch.transfer(2_500); // 2500*8/1e6 = 20 ms
+        assert!(t0.elapsed() >= Duration::from_millis(18));
+    }
+}

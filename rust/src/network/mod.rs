@@ -1,0 +1,11 @@
+//! Network substrate: the paper's bandwidth profiles (§VI), a link delay
+//! model, time-varying bandwidth traces, and the simulated edge→cloud
+//! channel used by the serving coordinator.
+
+pub mod bandwidth;
+pub mod channel;
+pub mod trace;
+
+pub use bandwidth::{LinkModel, Profile};
+pub use channel::Channel;
+pub use trace::BandwidthTrace;

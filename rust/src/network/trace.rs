@@ -1,0 +1,151 @@
+//! Time-varying bandwidth traces: piecewise-constant uplink rate over
+//! time, loaded from CSV (`t_seconds,mbps`) or generated synthetically.
+//! Drives the adaptive re-planning example (the "network conditions
+//! change" scenario Neurosurgeon [3] motivates and §VII points to).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Pcg32;
+
+/// Piecewise-constant bandwidth over time.
+#[derive(Debug, Clone)]
+pub struct BandwidthTrace {
+    /// (start_time_s, mbps), sorted by time; first entry must be t = 0.
+    points: Vec<(f64, f64)>,
+}
+
+impl BandwidthTrace {
+    pub fn new(points: Vec<(f64, f64)>) -> Result<BandwidthTrace> {
+        if points.is_empty() {
+            bail!("trace must have at least one point");
+        }
+        if points[0].0 != 0.0 {
+            bail!("trace must start at t = 0");
+        }
+        for w in points.windows(2) {
+            if w[1].0 <= w[0].0 {
+                bail!("trace times must be strictly increasing");
+            }
+        }
+        if points.iter().any(|&(_, b)| b <= 0.0 || !b.is_finite()) {
+            bail!("trace bandwidths must be positive and finite");
+        }
+        Ok(BandwidthTrace { points })
+    }
+
+    pub fn constant(mbps: f64) -> BandwidthTrace {
+        BandwidthTrace::new(vec![(0.0, mbps)]).unwrap()
+    }
+
+    /// Load "t_seconds,mbps" CSV ('#' comments allowed).
+    pub fn load(path: &Path) -> Result<BandwidthTrace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<BandwidthTrace> {
+        let mut points = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (t, b) = line
+                .split_once(',')
+                .with_context(|| format!("trace line {}: expected 't,mbps'", i + 1))?;
+            points.push((
+                t.trim()
+                    .parse()
+                    .with_context(|| format!("trace line {}: bad time", i + 1))?,
+                b.trim()
+                    .parse()
+                    .with_context(|| format!("trace line {}: bad bandwidth", i + 1))?,
+            ));
+        }
+        BandwidthTrace::new(points)
+    }
+
+    /// Bandwidth at absolute time `t` (clamped to the trace ends).
+    pub fn mbps_at(&self, t: f64) -> f64 {
+        match self
+            .points
+            .partition_point(|&(pt, _)| pt <= t.max(0.0))
+        {
+            0 => self.points[0].1,
+            i => self.points[i - 1].1,
+        }
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.points.last().unwrap().0
+    }
+
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+
+    /// Synthetic random-walk trace: `steps` segments of `dt` seconds,
+    /// multiplicative jitter around `base_mbps`, clamped to [lo, hi].
+    pub fn random_walk(
+        base_mbps: f64,
+        dt: f64,
+        steps: usize,
+        lo: f64,
+        hi: f64,
+        seed: u64,
+    ) -> BandwidthTrace {
+        assert!(steps >= 1 && dt > 0.0 && lo > 0.0 && hi >= lo);
+        let mut rng = Pcg32::seeded(seed);
+        let mut points = Vec::with_capacity(steps);
+        let mut b = base_mbps;
+        for i in 0..steps {
+            points.push((i as f64 * dt, b));
+            b = (b * (1.0 + rng.normal(0.0, 0.25))).clamp(lo, hi);
+        }
+        BandwidthTrace::new(points).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_semantics() {
+        let t = BandwidthTrace::new(vec![(0.0, 5.0), (10.0, 1.0), (20.0, 18.0)]).unwrap();
+        assert_eq!(t.mbps_at(-5.0), 5.0);
+        assert_eq!(t.mbps_at(0.0), 5.0);
+        assert_eq!(t.mbps_at(9.999), 5.0);
+        assert_eq!(t.mbps_at(10.0), 1.0);
+        assert_eq!(t.mbps_at(100.0), 18.0);
+        assert_eq!(t.duration(), 20.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = BandwidthTrace::parse("# demo\n0, 5.85\n30, 1.10\n\n60, 18.8 # wifi\n").unwrap();
+        assert_eq!(t.points().len(), 3);
+        assert_eq!(t.mbps_at(45.0), 1.10);
+    }
+
+    #[test]
+    fn rejects_bad_traces() {
+        assert!(BandwidthTrace::new(vec![]).is_err());
+        assert!(BandwidthTrace::new(vec![(1.0, 5.0)]).is_err()); // not at 0
+        assert!(BandwidthTrace::new(vec![(0.0, 5.0), (0.0, 6.0)]).is_err());
+        assert!(BandwidthTrace::new(vec![(0.0, -1.0)]).is_err());
+        assert!(BandwidthTrace::parse("0 5.85").is_err());
+    }
+
+    #[test]
+    fn random_walk_bounds() {
+        let t = BandwidthTrace::random_walk(5.85, 1.0, 200, 0.5, 20.0, 7);
+        assert_eq!(t.points().len(), 200);
+        for &(_, b) in t.points() {
+            assert!((0.5..=20.0).contains(&b));
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Baseline partitioning strategies from the paper's related work (§II):
+//!
+//! * **Neurosurgeon** [3] — partitions a *plain* DNN: it has no notion of
+//!   side branches, so it plans with p = 0 (Eq. 3) even when the deployed
+//!   network is a BranchyNet. The gap between its plan and the paper's
+//!   solver quantifies the value of modeling exit probability.
+//! * **edge-only / cloud-only** — the static strategies of Fig. 2(a)/(b).
+
+use crate::config::settings::Strategy;
+use crate::model::BranchyNetDesc;
+use crate::network::bandwidth::LinkModel;
+use crate::timing::{DelayProfile, Estimator};
+
+use super::plan::PartitionPlan;
+
+/// Branch-blind planning: choose the split minimizing the *plain-DNN*
+/// time (Eq. 3), then report the *actual* expected time of that split on
+/// the real BranchyNet (what a Neurosurgeon deployment would experience).
+pub fn neurosurgeon(
+    desc: &BranchyNetDesc,
+    profile: &DelayProfile,
+    link: LinkModel,
+    paper_mode: bool,
+) -> PartitionPlan {
+    let est = Estimator::new(desc, profile, link);
+    let est = if paper_mode { est.paper_mode() } else { est };
+
+    let mut best_split = 0usize;
+    let mut best_plain = f64::INFINITY;
+    for s in 0..est.num_splits() {
+        let t = est.plain_dnn_time(s);
+        if t < best_plain || (t == best_plain && s > best_split) {
+            best_plain = t;
+            best_split = s;
+        }
+    }
+    let actual = est.expected_time(best_split);
+    let mut plan = PartitionPlan::from_split(best_split, actual, Strategy::Neurosurgeon, desc);
+    plan.strategy = Strategy::Neurosurgeon;
+    plan
+}
+
+/// Static strategy at a fixed split (0 = cloud-only, N = edge-only),
+/// costed with the full expectation model.
+pub fn static_split(est: &Estimator<'_>, split: usize, strategy: Strategy) -> PartitionPlan {
+    PartitionPlan::from_split(split, est.expected_time(split), strategy, est.desc())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::BranchDesc;
+    use crate::partition::brute;
+
+    fn fixture(p: f64) -> (BranchyNetDesc, DelayProfile) {
+        let desc = BranchyNetDesc {
+            stage_names: (1..=4).map(|i| format!("s{i}")).collect(),
+            stage_out_bytes: vec![50_000, 20_000, 4_000, 8],
+            input_bytes: 12_288,
+            branches: vec![BranchDesc {
+                after_stage: 1,
+                exit_prob: p,
+            }],
+        };
+        let profile =
+            DelayProfile::from_cloud_times(vec![1e-3, 2e-3, 1e-3, 5e-4], 2e-4, 50.0);
+        (desc, profile)
+    }
+
+    #[test]
+    fn neurosurgeon_ignores_probability() {
+        // Its chosen split must be identical for p = 0 and p = 0.9.
+        let link = LinkModel::new(5.85, 0.0);
+        let (d0, prof) = fixture(0.0);
+        let (d9, _) = fixture(0.9);
+        let n0 = neurosurgeon(&d0, &prof, link, true);
+        let n9 = neurosurgeon(&d9, &prof, link, true);
+        assert_eq!(n0.split_after, n9.split_after);
+    }
+
+    #[test]
+    fn neurosurgeon_never_beats_the_solver() {
+        // The paper's solver optimizes the true objective; Neurosurgeon
+        // optimizes a surrogate. On the true objective it can only tie or
+        // lose.
+        for p in [0.0, 0.3, 0.6, 0.9, 1.0] {
+            for mbps in [1.10, 5.85, 18.80] {
+                let (desc, profile) = fixture(p);
+                let link = LinkModel::new(mbps, 0.0);
+                let est = Estimator::new(&desc, &profile, link).paper_mode();
+                let opt = brute::solve(&est);
+                let ns = neurosurgeon(&desc, &profile, link, true);
+                assert!(
+                    opt.expected_time_s <= ns.expected_time_s + 1e-12,
+                    "p={p} mbps={mbps}: solver {} > neurosurgeon {}",
+                    opt.expected_time_s,
+                    ns.expected_time_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn neurosurgeon_equals_solver_when_p_zero() {
+        let (desc, profile) = fixture(0.0);
+        let link = LinkModel::new(5.85, 0.0);
+        let est = Estimator::new(&desc, &profile, link).paper_mode();
+        let opt = brute::solve(&est);
+        let ns = neurosurgeon(&desc, &profile, link, true);
+        assert!((opt.expected_time_s - ns.expected_time_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn static_strategies() {
+        let (desc, profile) = fixture(0.5);
+        let link = LinkModel::new(5.85, 0.0);
+        let est = Estimator::new(&desc, &profile, link).paper_mode();
+        let edge = static_split(&est, 4, Strategy::EdgeOnly);
+        let cloud = static_split(&est, 0, Strategy::CloudOnly);
+        assert!(edge.is_edge_only(4));
+        assert!(cloud.is_cloud_only());
+        assert_eq!(edge.transfer_bytes, 0);
+        assert_eq!(cloud.transfer_bytes, 12_288);
+    }
+}

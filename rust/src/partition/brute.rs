@@ -1,0 +1,100 @@
+//! Brute-force baseline: evaluate Eq. 6 at every split point and take the
+//! argmin. O(N²) total (each estimator query is O(N)) — the obviously
+//! correct oracle that the shortest-path solver is property-tested
+//! against, and the scaling baseline for the solver bench.
+
+use crate::config::settings::Strategy;
+use crate::timing::Estimator;
+
+use super::plan::PartitionPlan;
+
+/// Exhaustively minimize expected inference time over all splits.
+/// Ties break toward the *larger* split (more work on the edge), matching
+/// the epsilon tie-break direction of the graph solver.
+pub fn solve(est: &Estimator<'_>) -> PartitionPlan {
+    let mut best_split = 0usize;
+    let mut best_time = f64::INFINITY;
+    for s in 0..est.num_splits() {
+        let t = est.expected_time(s);
+        if t < best_time || (t == best_time && s > best_split) {
+            best_time = t;
+            best_split = s;
+        }
+    }
+    PartitionPlan::from_split(best_split, best_time, Strategy::BruteForce, est.desc())
+}
+
+/// Like [`solve`] but returns the full cost curve too (used by the
+/// Fig. 4 driver, which plots E[T] rather than just the argmin).
+pub fn solve_with_curve(est: &Estimator<'_>) -> (PartitionPlan, Vec<f64>) {
+    let curve = est.all_times();
+    let plan = solve(est);
+    (plan, curve)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BranchDesc, BranchyNetDesc};
+    use crate::network::bandwidth::LinkModel;
+    use crate::timing::DelayProfile;
+
+    #[test]
+    fn picks_global_minimum() {
+        let desc = BranchyNetDesc {
+            stage_names: vec!["a".into(), "b".into(), "c".into()],
+            stage_out_bytes: vec![1_000_000, 10, 5],
+            input_bytes: 500,
+            branches: vec![BranchDesc {
+                after_stage: 1,
+                exit_prob: 0.0,
+            }],
+        };
+        // Edge 10x slower; stage 2 output is tiny -> split after 2 only
+        // if edge compute is worth it. Make cloud times huge so edge wins.
+        let profile = DelayProfile::from_cloud_times(vec![1e-6, 1e-6, 1e-6], 0.0, 10.0);
+        let link = LinkModel::new(0.008, 0.0); // 1 byte = 1 ms: transfers dominate
+        let est = Estimator::new(&desc, &profile, link).paper_mode();
+        let plan = solve(&est);
+        // alpha: input 500 -> 0.5s; s1: 1e6 -> 1000s; s2: 10 -> 10ms; s3: edge-only.
+        // Edge compute is microseconds, so edge-only wins.
+        assert_eq!(plan.split_after, 3);
+    }
+
+    #[test]
+    fn tie_breaks_toward_edge() {
+        // All-zero costs: every split ties at 0 -> pick N.
+        let desc = BranchyNetDesc {
+            stage_names: vec!["a".into(), "b".into()],
+            stage_out_bytes: vec![0, 0],
+            input_bytes: 1,
+            branches: vec![],
+        };
+        let profile = DelayProfile::from_cloud_times(vec![0.0, 0.0], 0.0, 1.0);
+        let link = LinkModel::new(1e12, 0.0); // ~0 transfer time for 0/1 bytes
+        let est = Estimator::new(&desc, &profile, link).paper_mode();
+        let plan = solve(&est);
+        assert_eq!(plan.split_after, 2);
+    }
+
+    #[test]
+    fn curve_has_min_at_plan() {
+        let desc = BranchyNetDesc {
+            stage_names: (1..=4).map(|i| format!("s{i}")).collect(),
+            stage_out_bytes: vec![100, 200, 50, 8],
+            input_bytes: 300,
+            branches: vec![BranchDesc {
+                after_stage: 2,
+                exit_prob: 0.5,
+            }],
+        };
+        let profile =
+            DelayProfile::from_cloud_times(vec![1e-4, 2e-4, 3e-4, 1e-4], 1e-5, 50.0);
+        let est = Estimator::new(&desc, &profile, LinkModel::new(5.85, 0.0));
+        let (plan, curve) = solve_with_curve(&est);
+        assert_eq!(curve.len(), 5);
+        let min = curve.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(plan.expected_time_s, min);
+        assert_eq!(curve[plan.split_after], min);
+    }
+}

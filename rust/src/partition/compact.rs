@@ -1,0 +1,181 @@
+//! Compact O(N) shortest-path construction — the optimized solver.
+//!
+//! Observation: in `G'_BDNN`, once a path cuts to the cloud after stage
+//! `s`, the remaining cost is a *constant* for that cut:
+//! `S(s) * (t_net(alpha_s) + sum_{i>s} t_i^c) + epsilon`. No decision is
+//! ever made inside the cloud chains, so the per-class cloud suffixes of
+//! the faithful construction (`gprime`) can be folded into a single
+//! cut-link weight, shrinking the graph from O(N * (m+1)) nodes with
+//! allocated labels to exactly `2N + m + 2` unlabeled nodes — while
+//! provably preserving every path cost (property-tested against both the
+//! faithful graph and brute force in `rust/tests/partition_optimality.rs`).
+//!
+//! This is what `solver::solve` uses on the hot path; `gprime::build`
+//! remains as the paper-faithful construction and as documentation of the
+//! reduction, and the solver bench reports both (ablation: faithful vs
+//! compact).
+
+use crate::graph::{dijkstra, Graph, NodeId};
+use crate::model::BranchyNetDesc;
+use crate::network::bandwidth::LinkModel;
+use crate::timing::exitprob::ExitChain;
+use crate::timing::profile::{CloudSuffix, DelayProfile};
+
+pub struct Compact {
+    pub graph: Graph,
+    pub input: NodeId,
+    pub output: NodeId,
+    /// cut_target[s] = the node the cut-after-s link points at (a
+    /// per-cut terminal), used to decode the chosen split.
+    cut_terminal: Vec<NodeId>,
+    edge_exit: NodeId,
+}
+
+pub fn build(
+    desc: &BranchyNetDesc,
+    profile: &DelayProfile,
+    link: LinkModel,
+    epsilon: f64,
+    include_branch_cost: bool,
+) -> Compact {
+    debug_assert!(desc.validate().is_ok());
+    debug_assert!(profile.validate(desc.num_stages()).is_ok());
+    assert!(epsilon > 0.0, "epsilon must be positive (paper §V)");
+
+    let n = desc.num_stages();
+    let chain = ExitChain::new(desc);
+    let suffix = CloudSuffix::new(profile);
+
+    let mut g = Graph::with_capacity(2 * n + chain.num_branches() + 2 + n);
+    let input = g.add_node("");
+    let output = g.add_node("");
+
+    let mut v_e = Vec::with_capacity(n);
+    let mut v_star = Vec::with_capacity(n);
+    for _ in 0..n {
+        v_e.push(g.add_node(""));
+        v_star.push(g.add_node(""));
+    }
+    g.add_edge(input, v_e[0], 0.0);
+    for i in 1..=n {
+        let w = chain.survival_before_stage(i) * profile.t_edge[i - 1];
+        g.add_edge(v_e[i - 1], v_star[i - 1], w);
+        if i < n {
+            if let Some(j) = chain.positions().iter().position(|&p| p == i) {
+                let b = g.add_node("");
+                g.add_edge(v_star[i - 1], b, 0.0);
+                let w_branch = if include_branch_cost {
+                    chain.survival_after(j) * profile.branch_t_edge
+                } else {
+                    0.0
+                };
+                g.add_edge(b, v_e[i], w_branch);
+            } else {
+                g.add_edge(v_star[i - 1], v_e[i], 0.0);
+            }
+        }
+    }
+    let edge_exit = v_star[n - 1];
+    g.add_edge(edge_exit, output, 0.0);
+
+    // Folded cut links: one terminal node per cut (so the path identifies
+    // the split), carrying the whole transfer + cloud suffix + epsilon.
+    let mut cut_terminal = Vec::with_capacity(n);
+    for s in 0..n {
+        let source = if s == 0 { input } else { v_star[s - 1] };
+        let surv = chain.survival_at_split(s);
+        let w = surv * (link.transfer_time(desc.transfer_bytes(s)) + suffix.from_split(s));
+        let term = g.add_node("");
+        g.add_edge(source, term, w);
+        g.add_edge(term, output, epsilon);
+        cut_terminal.push(term);
+    }
+
+    Compact {
+        graph: g,
+        input,
+        output,
+        cut_terminal,
+        edge_exit,
+    }
+}
+
+impl Compact {
+    /// Decode the split from a shortest path (node sequence).
+    pub fn decode_split(&self, path_nodes: &[NodeId]) -> usize {
+        let n = self.cut_terminal.len();
+        if path_nodes.len() >= 2 {
+            let penultimate = path_nodes[path_nodes.len() - 2];
+            if penultimate == self.edge_exit {
+                return n; // edge-only
+            }
+            if let Some(s) = self.cut_terminal.iter().position(|&t| t == penultimate) {
+                return s;
+            }
+        }
+        n
+    }
+}
+
+/// Solve via the compact graph; returns (split_after, path_cost).
+pub fn solve_split(
+    desc: &BranchyNetDesc,
+    profile: &DelayProfile,
+    link: LinkModel,
+    epsilon: f64,
+    include_branch_cost: bool,
+) -> (usize, f64) {
+    let c = build(desc, profile, link, epsilon, include_branch_cost);
+    let sp = dijkstra::shortest_path(&c.graph, c.input, c.output)
+        .expect("compact graph is connected by construction");
+    (c.decode_split(&sp.nodes), sp.cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic;
+    use crate::partition::gprime;
+    use crate::testing::property;
+
+    #[test]
+    fn compact_equals_faithful_on_random_instances() {
+        property("compact == faithful G'", 300, |g| {
+            let n = g.usize_in(1, 20);
+            let desc = synthetic::random_desc(g, n, 4);
+            let gamma = g.f64_in(1.0, 1000.0);
+            let profile = synthetic::random_profile(g, &desc, gamma);
+            let link = LinkModel::new(g.f64_in(0.05, 50.0), g.f64_in(0.0, 0.02));
+            let branch_cost = g.bool(0.5);
+
+            let (split_c, cost_c) = solve_split(&desc, &profile, link, 1e-9, branch_cost);
+            let gp = gprime::build(&desc, &profile, link, 1e-9, branch_cost);
+            let sp = dijkstra::shortest_path(&gp.graph, gp.input, gp.output).unwrap();
+            let split_f = gp.decode_split(&sp.nodes);
+
+            // Costs must agree exactly up to fp noise (splits can differ
+            // only on exact ties).
+            assert!(
+                (cost_c - sp.cost).abs() <= 1e-12 * cost_c.max(1.0) + 1e-15,
+                "compact {cost_c} vs faithful {} (n={n})",
+                sp.cost
+            );
+            if (cost_c - sp.cost).abs() > 0.0 {
+                return;
+            }
+            let _ = (split_c, split_f);
+        });
+    }
+
+    #[test]
+    fn compact_size_is_linear() {
+        let mut g = crate::testing::Gen::replay(5);
+        for n in [1usize, 10, 100, 1000] {
+            let desc = synthetic::random_desc(&mut g, n, 8);
+            let profile = synthetic::random_profile(&mut g, &desc, 10.0);
+            let c = build(&desc, &profile, LinkModel::new(1.0, 0.0), 1e-9, false);
+            let m = desc.branches.len();
+            assert_eq!(c.graph.len(), 2 + 2 * n + m + n, "n={n} m={m}");
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! Construction of `G'_BDNN` (paper §V, Figure 3, Eqs. 7–8): the weighted
+//! DAG whose shortest `input -> output` path encodes the optimal split.
+//!
+//! Structure (for N stages, following the paper's Figure 3):
+//!
+//! ```text
+//! input ─0─► v1e ─t1e─► v1*e ─···─► vNe ─tNe─► vN*e ─0─► output
+//!   │                    │ \___ b_k nodes sit between v_k*e and v_{k+1}e
+//!   │                    │      when a branch follows stage k
+//!   │                    └──t_net(alpha_k)──► v_{k+1}^c(class) ─► ... ─► v*c ─ε─► output
+//!   └──t_net(alpha_0)──► v1^c(0) ─t1c─► v2^c(0) ─► ... (cloud-only)
+//! ```
+//!
+//! * every edge vertex `v_i^e` gets an auxiliary `v_i^{*e}` so the cut
+//!   can leave *after* stage i's compute but *before* branch b_i — this
+//!   encodes the paper's rule that a branch exactly at the cut is
+//!   discarded (B = {b_1..b_{s-1}});
+//! * Eq. 8's probability weighting: every link weight is scaled by the
+//!   survival probability at that point in the chain, i.e. the product of
+//!   `(1 - p_k)` over branches already crossed. (The paper states this
+//!   for its single-branch example as "weights after the side branch are
+//!   weighted by the probability"; survival scaling is the general form
+//!   that makes path cost == Eq. 5's expectation.)
+//! * **cloud chain classes**: the expectation multiplies transfer *and
+//!   all cloud work* by the survival at the cut, so cloud chains entered
+//!   after crossing j branches need weights scaled by S_j. A single
+//!   shared cloud chain (as drawn in the paper's 3-node example) cannot
+//!   carry two scalings at once, so we instantiate one cloud-suffix chain
+//!   per survival class — O(N * (m+1)) nodes for m branches, still
+//!   trivially polynomial. For the paper's single-branch B-AlexNet this
+//!   is exactly two chains: pre-branch (unscaled) and post-branch
+//!   (scaled by 1-p), which is what Eq. 8 describes.
+//! * the `epsilon` link before `output` on each cloud exit reproduces the
+//!   paper's tie-breaker: when survival hits 0 (p = 1), all post-branch
+//!   weights vanish and epsilon makes the shortest path prefer staying on
+//!   the edge rather than a spurious zero-cost cloud hop.
+
+use crate::graph::{Graph, NodeId};
+use crate::model::BranchyNetDesc;
+use crate::network::bandwidth::LinkModel;
+use crate::timing::exitprob::ExitChain;
+use crate::timing::profile::DelayProfile;
+
+/// The constructed graph plus the bookkeeping needed to decode a shortest
+/// path back into a split point.
+#[derive(Debug)]
+pub struct GPrime {
+    pub graph: Graph,
+    pub input: NodeId,
+    pub output: NodeId,
+    /// cut_links[s] = the node the cut-after-stage-s transfer link leaves
+    /// from (v_s^{*e}, or `input` for s = 0). Used to decode paths.
+    cut_sources: Vec<NodeId>,
+    /// edge_exit = v_N^{*e} (the edge-only terminal hop source).
+    edge_exit: NodeId,
+}
+
+/// Build `G'_BDNN`. `include_branch_cost` mirrors the estimator's mode:
+/// when true, branch vertices carry the branch evaluation time on their
+/// outgoing link; when false (paper mode) they are zero-cost.
+pub fn build(
+    desc: &BranchyNetDesc,
+    profile: &DelayProfile,
+    link: LinkModel,
+    epsilon: f64,
+    include_branch_cost: bool,
+) -> GPrime {
+    desc.validate().expect("invalid desc");
+    profile
+        .validate(desc.num_stages())
+        .expect("profile mismatch");
+    assert!(epsilon > 0.0, "epsilon must be positive (paper §V)");
+
+    let n = desc.num_stages();
+    let chain = ExitChain::new(desc);
+    let m = chain.num_branches();
+
+    let mut g = Graph::with_capacity(2 * n + m + 2 + (m + 1) * n);
+    let input = g.add_node("input");
+    let output = g.add_node("output");
+
+    // ---- edge chain: v_i^e and v_i^{*e}, with b_k between v_k^{*e} and
+    // v_{k+1}^e where a branch exists.
+    let mut v_e = Vec::with_capacity(n);
+    let mut v_star = Vec::with_capacity(n);
+    for i in 1..=n {
+        v_e.push(g.add_node(format!("v{i}e")));
+        v_star.push(g.add_node(format!("v{i}*e")));
+    }
+    // input -> v1e: zero weight (edge-only entry, Eq. 7 last case analog).
+    g.add_edge(input, v_e[0], 0.0);
+    for i in 1..=n {
+        // v_i^e -> v_i^{*e}: the compute cost of stage i on the edge,
+        // survival-weighted (Eq. 7 first case x Eq. 8).
+        let w = chain.survival_before_stage(i) * profile.t_edge[i - 1];
+        g.add_edge(v_e[i - 1], v_star[i - 1], w);
+        if i < n {
+            // Continue on the edge: through b_i if a branch follows stage i.
+            if let Some(j) = chain.positions().iter().position(|&p| p == i) {
+                let b = g.add_node(format!("b{i}"));
+                g.add_edge(v_star[i - 1], b, 0.0);
+                let w_branch = if include_branch_cost {
+                    chain.survival_after(j) * profile.branch_t_edge
+                } else {
+                    0.0
+                };
+                g.add_edge(b, v_e[i], w_branch);
+            } else {
+                g.add_edge(v_star[i - 1], v_e[i], 0.0);
+            }
+        }
+    }
+    // Edge-only exit: v_N^{*e} -> output, free.
+    let edge_exit = v_star[n - 1];
+    g.add_edge(edge_exit, output, 0.0);
+
+    // ---- cloud chains, one per survival class. Class j covers cuts s
+    // with `active_branches(s) == j`; its chain holds stages entered at
+    // s+1 for the smallest such s, but suffix sharing within a class is
+    // safe because the scaling factor is constant. We lazily create class
+    // chains from their earliest entry stage.
+    //
+    // cut s enters the cloud at stage s+1 with class j = active_branches(s).
+    let mut class_nodes: Vec<Vec<Option<NodeId>>> = vec![vec![None; n + 2]; m + 1];
+    let mut class_exit: Vec<Option<NodeId>> = vec![None; m + 1];
+    let mut cut_sources = Vec::with_capacity(n + 1);
+
+    // Helper to materialize cloud chain of class `j` from stage `from`
+    // (1-based) to the output, returning the entry node.
+    let ensure_cloud_suffix = |g: &mut Graph,
+                                   class_nodes: &mut Vec<Vec<Option<NodeId>>>,
+                                   class_exit: &mut Vec<Option<NodeId>>,
+                                   j: usize,
+                                   from: usize|
+     -> NodeId {
+        debug_assert!(from >= 1 && from <= n + 1);
+        let surv = chain.survival_after(j);
+        // Terminal v*c for this class.
+        if class_exit[j].is_none() {
+            let exit = g.add_node(format!("v*c({j})"));
+            // The epsilon tie-breaker link (Eq. 7 fourth case).
+            g.add_edge(exit, output, epsilon);
+            class_exit[j] = Some(exit);
+        }
+        let exit = class_exit[j].unwrap();
+        // Build the suffix backwards from the output, reusing any nodes a
+        // later cut already materialized (suffix sharing within a class
+        // is safe: the scaling factor is constant per class).
+        let mut next: NodeId = exit;
+        for i in (from..=n).rev() {
+            if let Some(node) = class_nodes[j][i] {
+                next = node;
+                continue;
+            }
+            let node = g.add_node(format!("v{i}c({j})"));
+            // v_i^c -> next: the compute cost of stage i in the cloud,
+            // scaled by this class's survival (Eq. 7 second case x Eq. 8).
+            g.add_edge(node, next, surv * profile.t_cloud[i - 1]);
+            class_nodes[j][i] = Some(node);
+            next = node;
+        }
+        if from == n + 1 {
+            exit
+        } else {
+            class_nodes[j][from].unwrap()
+        }
+    };
+
+    for s in 0..=n {
+        let source = if s == 0 { input } else { v_star[s - 1] };
+        cut_sources.push(source);
+        if s == n {
+            continue; // edge-only has no transfer link
+        }
+        let j = chain.active_branches(s);
+        let surv = chain.survival_after(j);
+        let entry = ensure_cloud_suffix(&mut g, &mut class_nodes, &mut class_exit, j, s + 1);
+        // Transfer link (Eq. 7 third case x Eq. 8): alpha_s / B, scaled.
+        let w = surv * link.transfer_time(desc.transfer_bytes(s));
+        g.add_edge(source, entry, w);
+    }
+
+    GPrime {
+        graph: g,
+        input,
+        output,
+        cut_sources,
+        edge_exit,
+    }
+}
+
+impl GPrime {
+    /// Decode a shortest path (node sequence) into the split point it
+    /// represents: the last `v_s^{*e}` (or `input`) from which the path
+    /// leaves the edge chain — or N if it exits via the edge-only hop.
+    pub fn decode_split(&self, path_nodes: &[NodeId]) -> usize {
+        let n = self.cut_sources.len() - 1;
+        // Edge-only: path ends output directly after v_N^{*e}.
+        if path_nodes.len() >= 2 {
+            let last_hop_src = path_nodes[path_nodes.len() - 2];
+            if last_hop_src == self.edge_exit {
+                return n;
+            }
+        }
+        // Otherwise: find the cut — the unique adjacent pair
+        // (cut_sources[s], non-edge node).
+        for s in (0..=n).rev() {
+            let src = self.cut_sources[s];
+            if let Some(pos) = path_nodes.iter().position(|&x| x == src) {
+                // Is the next node a cloud node (i.e. not the edge chain)?
+                if pos + 1 < path_nodes.len() {
+                    let label = self.graph.label(path_nodes[pos + 1]);
+                    if label.contains('c') || label == "output" && s == n {
+                        return s;
+                    }
+                }
+            }
+        }
+        // input -> v1c(0) ... (cloud-only) is covered by s = 0 above;
+        // reaching here means the path never left the edge chain.
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dijkstra;
+    use crate::model::{BranchDesc, BranchyNetDesc};
+    use crate::timing::Estimator;
+
+    fn desc(p: f64) -> BranchyNetDesc {
+        BranchyNetDesc {
+            stage_names: vec!["v1".into(), "v2".into(), "v3".into()],
+            stage_out_bytes: vec![1000, 500, 8],
+            input_bytes: 800,
+            branches: vec![BranchDesc {
+                after_stage: 1,
+                exit_prob: p,
+            }],
+        }
+    }
+
+    fn profile() -> DelayProfile {
+        DelayProfile::from_cloud_times(vec![1e-3, 2e-3, 3e-3], 4e-4, 10.0)
+    }
+
+    const EPS: f64 = 1e-9;
+
+    #[test]
+    fn graph_is_a_dag_with_expected_size() {
+        let d = desc(0.5);
+        let p = profile();
+        let gp = build(&d, &p, LinkModel::new(8.0, 0.0), EPS, false);
+        assert!(gp.graph.is_dag());
+        // input, output, 3x(v_e, v*e), 1 branch, cloud class 0 (stages
+        // 1..3 + exit) and class 1 (stages 3..3 + exit) = 2+6+1+4+2 = 15.
+        assert_eq!(gp.graph.len(), 15);
+    }
+
+    #[test]
+    fn path_costs_match_estimator_for_every_split() {
+        // The fundamental equivalence: for each split s, the cost of the
+        // corresponding path in G' equals E[T(s)] (+epsilon if via cloud).
+        for p in [0.0, 0.3, 0.7, 1.0] {
+            let d = desc(p);
+            let prof = profile();
+            let link = LinkModel::new(8.0, 0.0);
+            let est = Estimator::new(&d, &prof, link).paper_mode();
+            let gp = build(&d, &prof, link, EPS, false);
+            let sp = dijkstra::shortest_path(&gp.graph, gp.input, gp.output).unwrap();
+            let split = gp.decode_split(&sp.nodes);
+            let want = est.expected_time(split);
+            let slack = if split == d.num_stages() { 0.0 } else { EPS };
+            assert!(
+                (sp.cost - want - slack).abs() < 1e-12,
+                "p={p} split={split}: path {} vs estimator {want}",
+                sp.cost
+            );
+            // And the path must be optimal wrt the estimator:
+            let best = (0..=3)
+                .map(|s| est.expected_time(s))
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                sp.cost <= best + EPS + 1e-12,
+                "p={p}: shortest path {} worse than best split {best}",
+                sp.cost
+            );
+        }
+    }
+
+    #[test]
+    fn p_one_prefers_edge_via_epsilon() {
+        // With p = 1 everything after b1 is free, so the edge path
+        // (cost t1_e) ties with a cut at s = 2 (cost t1_e + 0 transfer +
+        // 0 cloud). The epsilon tie-breaker must keep the path on the
+        // edge chain (paper §V). Use a slow network so cloud-only does
+        // not win outright.
+        let d = desc(1.0);
+        let prof = profile();
+        let gp = build(&d, &prof, LinkModel::new(0.01, 0.0), EPS, false);
+        let sp = dijkstra::shortest_path(&gp.graph, gp.input, gp.output).unwrap();
+        let split = gp.decode_split(&sp.nodes);
+        assert_eq!(split, 3, "epsilon must break the tie toward edge-only");
+        assert!((sp.cost - prof.t_edge[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn branch_cost_included_when_asked() {
+        let d = desc(0.5);
+        let prof = profile();
+        let link = LinkModel::new(8.0, 0.0);
+        let with = build(&d, &prof, link, EPS, true);
+        let without = build(&d, &prof, link, EPS, false);
+        let c_with = dijkstra::shortest_path(&with.graph, with.input, with.output)
+            .unwrap()
+            .cost;
+        let c_without = dijkstra::shortest_path(&without.graph, without.input, without.output)
+            .unwrap()
+            .cost;
+        assert!(c_with >= c_without);
+    }
+
+    #[test]
+    fn no_branches_degenerates_to_plain_dnn_graph() {
+        let d = BranchyNetDesc {
+            stage_names: vec!["a".into(), "b".into()],
+            stage_out_bytes: vec![100, 10],
+            input_bytes: 50,
+            branches: vec![],
+        };
+        let prof = DelayProfile::from_cloud_times(vec![1e-3, 1e-3], 0.0, 5.0);
+        let link = LinkModel::new(1.0, 0.0);
+        let gp = build(&d, &prof, link, EPS, false);
+        let est = Estimator::new(&d, &prof, link).paper_mode();
+        let sp = dijkstra::shortest_path(&gp.graph, gp.input, gp.output).unwrap();
+        let split = gp.decode_split(&sp.nodes);
+        let slack = if split == 2 { 0.0 } else { EPS };
+        assert!((sp.cost - est.expected_time(split) - slack).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "epsilon")]
+    fn zero_epsilon_rejected() {
+        let d = desc(0.5);
+        let p = profile();
+        build(&d, &p, LinkModel::new(8.0, 0.0), 0.0, false);
+    }
+}

@@ -1,0 +1,70 @@
+//! BranchyNet partitioning — the paper's contribution (§V).
+//!
+//! * [`gprime`] — constructs the weighted graph `G'_BDNN` whose shortest
+//!   `input -> output` path *is* the optimal edge/cloud split (Eqs. 7–8);
+//! * [`solver`] — Dijkstra over `G'_BDNN`, decoding the path back into a
+//!   [`PartitionPlan`];
+//! * [`brute`] — the exhaustive baseline evaluating Eq. 6 at every split
+//!   (the oracle the property tests compare the solver against, and the
+//!   "Li et al. [7]-style search" baseline of §II);
+//! * [`baselines`] — Neurosurgeon-style branch-blind planning (p = 0),
+//!   plus static edge-only / cloud-only strategies;
+//! * [`plan`] — the `PartitionPlan` everything produces and the
+//!   coordinator consumes.
+
+pub mod baselines;
+pub mod brute;
+pub mod compact;
+pub mod gprime;
+pub mod plan;
+pub mod solver;
+
+pub use plan::PartitionPlan;
+pub use solver::solve;
+
+use crate::config::settings::Strategy;
+use crate::model::BranchyNetDesc;
+use crate::network::bandwidth::LinkModel;
+use crate::timing::{DelayProfile, Estimator};
+
+/// Plan with the given strategy. The estimator settings (paper mode or
+/// serving mode) are chosen by the caller via `paper_mode`.
+pub fn plan_with_strategy(
+    strategy: Strategy,
+    desc: &BranchyNetDesc,
+    profile: &DelayProfile,
+    link: LinkModel,
+    epsilon: f64,
+    paper_mode: bool,
+) -> PartitionPlan {
+    fn make_estimator<'a>(
+        d: &'a BranchyNetDesc,
+        p: &'a DelayProfile,
+        link: LinkModel,
+        paper_mode: bool,
+    ) -> Estimator<'a> {
+        let e = Estimator::new(d, p, link);
+        if paper_mode {
+            e.paper_mode()
+        } else {
+            e
+        }
+    }
+    match strategy {
+        Strategy::ShortestPath => {
+            solver::solve(desc, profile, link, epsilon, paper_mode)
+        }
+        Strategy::BruteForce => brute::solve(&make_estimator(desc, profile, link, paper_mode)),
+        Strategy::Neurosurgeon => baselines::neurosurgeon(desc, profile, link, paper_mode),
+        Strategy::EdgeOnly => baselines::static_split(
+            &make_estimator(desc, profile, link, paper_mode),
+            desc.num_stages(),
+            Strategy::EdgeOnly,
+        ),
+        Strategy::CloudOnly => baselines::static_split(
+            &make_estimator(desc, profile, link, paper_mode),
+            0,
+            Strategy::CloudOnly,
+        ),
+    }
+}

@@ -1,0 +1,138 @@
+//! The partition plan: which stages run where, what gets transferred,
+//! and what the model predicts it costs.
+
+use crate::config::settings::Strategy;
+use crate::model::BranchyNetDesc;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionPlan {
+    /// Split point: stages 1..=split_after run on the edge, the rest in
+    /// the cloud. 0 = cloud-only, N = edge-only.
+    pub split_after: usize,
+    /// Predicted E[T_inf] in seconds (the quantity that was minimized).
+    pub expected_time_s: f64,
+    /// Strategy that produced this plan.
+    pub strategy: Strategy,
+    /// 1-based positions of side branches that are *active* (on the edge
+    /// side of the cut and before it — paper §IV-B).
+    pub active_branches: Vec<usize>,
+    /// Bytes transferred per sample when no early exit happens.
+    pub transfer_bytes: u64,
+}
+
+impl PartitionPlan {
+    pub fn from_split(
+        split_after: usize,
+        expected_time_s: f64,
+        strategy: Strategy,
+        desc: &BranchyNetDesc,
+    ) -> PartitionPlan {
+        let n = desc.num_stages();
+        assert!(split_after <= n);
+        PartitionPlan {
+            split_after,
+            expected_time_s,
+            strategy,
+            active_branches: desc
+                .branches
+                .iter()
+                .filter(|b| b.after_stage < split_after)
+                .map(|b| b.after_stage)
+                .collect(),
+            transfer_bytes: if split_after == n {
+                0
+            } else {
+                desc.transfer_bytes(split_after)
+            },
+        }
+    }
+
+    pub fn is_cloud_only(&self) -> bool {
+        self.split_after == 0
+    }
+
+    pub fn is_edge_only(&self, num_stages: usize) -> bool {
+        self.split_after == num_stages
+    }
+
+    /// Human-readable split-point name: "input" (cloud-only) or a stage
+    /// name — matches the paper's Fig. 5 x-axis labels.
+    pub fn split_label(&self, desc: &BranchyNetDesc) -> String {
+        if self.split_after == 0 {
+            "input".to_string()
+        } else {
+            desc.stage_names[self.split_after - 1].clone()
+        }
+    }
+
+    /// Sets V_e and V_c as (stage index) vectors — the paper's partition
+    /// sets, for reporting. V_e includes active branch markers "b@k".
+    pub fn partition_sets(&self, desc: &BranchyNetDesc) -> (Vec<String>, Vec<String>) {
+        let mut v_e = Vec::new();
+        for i in 1..=self.split_after {
+            v_e.push(desc.stage_names[i - 1].clone());
+            if self.active_branches.contains(&i) {
+                v_e.push(format!("b@{i}"));
+            }
+        }
+        let v_c = desc.stage_names[self.split_after..].to_vec();
+        (v_e, v_c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BranchDesc, BranchyNetDesc};
+
+    fn desc() -> BranchyNetDesc {
+        BranchyNetDesc {
+            stage_names: vec!["conv1".into(), "conv2".into(), "fc".into()],
+            stage_out_bytes: vec![100, 50, 8],
+            input_bytes: 80,
+            branches: vec![BranchDesc {
+                after_stage: 1,
+                exit_prob: 0.5,
+            }],
+        }
+    }
+
+    #[test]
+    fn active_branch_rule() {
+        let d = desc();
+        // split 1: branch at 1 is NOT active (needs position < split).
+        let p = PartitionPlan::from_split(1, 0.1, Strategy::ShortestPath, &d);
+        assert!(p.active_branches.is_empty());
+        // split 2: active.
+        let p = PartitionPlan::from_split(2, 0.1, Strategy::ShortestPath, &d);
+        assert_eq!(p.active_branches, vec![1]);
+    }
+
+    #[test]
+    fn transfer_bytes_and_labels() {
+        let d = desc();
+        let p0 = PartitionPlan::from_split(0, 0.1, Strategy::CloudOnly, &d);
+        assert_eq!(p0.transfer_bytes, 80);
+        assert_eq!(p0.split_label(&d), "input");
+        assert!(p0.is_cloud_only());
+
+        let p3 = PartitionPlan::from_split(3, 0.1, Strategy::EdgeOnly, &d);
+        assert_eq!(p3.transfer_bytes, 0);
+        assert_eq!(p3.split_label(&d), "fc");
+        assert!(p3.is_edge_only(3));
+    }
+
+    #[test]
+    fn partition_sets_disjoint_and_complete() {
+        let d = desc();
+        for s in 0..=3 {
+            let p = PartitionPlan::from_split(s, 0.0, Strategy::BruteForce, &d);
+            let (v_e, v_c) = p.partition_sets(&d);
+            let stages_e: Vec<&String> = v_e.iter().filter(|n| !n.starts_with("b@")).collect();
+            assert_eq!(stages_e.len() + v_c.len(), 3, "split {s}");
+            for n in &stages_e {
+                assert!(!v_c.contains(n), "stage {n} in both sets");
+            }
+        }
+    }
+}

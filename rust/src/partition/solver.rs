@@ -1,0 +1,143 @@
+//! The paper's solver: build `G'_BDNN`, run Dijkstra, decode the path
+//! into a [`PartitionPlan`]. Polynomial time — O((m+1)·N) graph nodes and
+//! O(E log V) search — versus the brute-force oracle's O(N²) estimator
+//! sweep (and versus Li et al. [7]'s exponential branch×partition search
+//! that §II argues against).
+
+use crate::config::settings::Strategy;
+use crate::graph::dijkstra;
+use crate::model::BranchyNetDesc;
+use crate::network::bandwidth::LinkModel;
+use crate::timing::{DelayProfile, Estimator};
+
+use super::plan::PartitionPlan;
+use super::{compact, gprime};
+
+/// Solve the partitioning problem via shortest path (paper §V).
+///
+/// `paper_mode = true` omits branch-evaluation cost (Eq. 5 exactly);
+/// `false` includes it (the serving planner default).
+///
+/// Uses the compact O(N) construction (`partition::compact`, §Perf step
+/// L3-1) — property-tested equivalent to the paper-faithful
+/// [`gprime::build`] graph, which [`solve_faithful`] still exposes.
+pub fn solve(
+    desc: &BranchyNetDesc,
+    profile: &DelayProfile,
+    link: LinkModel,
+    epsilon: f64,
+    paper_mode: bool,
+) -> PartitionPlan {
+    let (split, _cost) = compact::solve_split(desc, profile, link, epsilon, !paper_mode);
+
+    // Report the *model* expected time (path cost minus the epsilon
+    // tie-breaker if the path exits via a cloud cut).
+    let est = Estimator::new(desc, profile, link);
+    let est = if paper_mode { est.paper_mode() } else { est };
+    let expected = est.expected_time(split);
+
+    PartitionPlan::from_split(split, expected, Strategy::ShortestPath, desc)
+}
+
+/// The paper-faithful variant: builds the full `G'_BDNN` of §V (explicit
+/// per-class cloud chains) and runs Dijkstra on it. Same answer as
+/// [`solve`]; kept for the solver bench ablation and as executable
+/// documentation of the reduction.
+pub fn solve_faithful(
+    desc: &BranchyNetDesc,
+    profile: &DelayProfile,
+    link: LinkModel,
+    epsilon: f64,
+    paper_mode: bool,
+) -> PartitionPlan {
+    let gp = gprime::build(desc, profile, link, epsilon, !paper_mode);
+    let sp = dijkstra::shortest_path(&gp.graph, gp.input, gp.output)
+        .expect("G'_BDNN is connected by construction");
+    let split = gp.decode_split(&sp.nodes);
+    let est = Estimator::new(desc, profile, link);
+    let est = if paper_mode { est.paper_mode() } else { est };
+    let expected = est.expected_time(split);
+    PartitionPlan::from_split(split, expected, Strategy::ShortestPath, desc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BranchDesc, BranchyNetDesc};
+
+    fn fixture() -> (BranchyNetDesc, DelayProfile) {
+        let desc = BranchyNetDesc {
+            stage_names: (1..=5).map(|i| format!("s{i}")).collect(),
+            // Non-monotonic alphas as in B-AlexNet.
+            stage_out_bytes: vec![57_600, 18_816, 25_088, 3_456, 8],
+            input_bytes: 12_288,
+            branches: vec![BranchDesc {
+                after_stage: 1,
+                exit_prob: 0.6,
+            }],
+        };
+        let profile = DelayProfile::from_cloud_times(
+            vec![1e-3, 2e-3, 1.5e-3, 8e-4, 2e-4],
+            3e-4,
+            100.0,
+        );
+        (desc, profile)
+    }
+
+    #[test]
+    fn solver_matches_exhaustive_minimum() {
+        let (desc, profile) = fixture();
+        for mbps in [1.10, 5.85, 18.80] {
+            let link = LinkModel::new(mbps, 0.0);
+            let plan = solve(&desc, &profile, link, 1e-9, true);
+            let est = Estimator::new(&desc, &profile, link).paper_mode();
+            let best = (0..=5)
+                .map(|s| est.expected_time(s))
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                (plan.expected_time_s - best).abs() <= 1e-12 + 1e-9,
+                "mbps={mbps}: plan {} vs best {best}",
+                plan.expected_time_s
+            );
+        }
+    }
+
+    #[test]
+    fn slow_network_and_fast_edge_prefer_edge() {
+        let (desc, profile) = fixture();
+        // gamma = 1: edge as fast as cloud; crawling network.
+        let p1 = profile.with_gamma(1.0);
+        let plan = solve(&desc, &p1, LinkModel::new(0.01, 0.0), 1e-9, true);
+        assert!(plan.is_edge_only(5), "{plan:?}");
+    }
+
+    #[test]
+    fn fast_network_and_slow_edge_prefer_cloud() {
+        let (desc, profile) = fixture();
+        let p = profile.with_gamma(10_000.0);
+        let plan = solve(&desc, &p, LinkModel::new(10_000.0, 0.0), 1e-9, true);
+        assert!(plan.is_cloud_only(), "{plan:?}");
+    }
+
+    #[test]
+    fn p_one_never_chooses_cloud_suffix_after_branch() {
+        let (mut desc, profile) = fixture();
+        desc.branches[0].exit_prob = 1.0;
+        // Slow network: cloud-only (upload + full cloud chain) must lose
+        // to the edge path, whose cost with p = 1 is exactly t1_e.
+        let plan = solve(&desc, &profile, LinkModel::new(0.05, 0.0), 1e-9, true);
+        assert!(plan.split_after >= 2, "{plan:?}");
+        assert!((plan.expected_time_s - profile.t_edge[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p_one_fast_network_cloud_only_can_still_win() {
+        // Counterpoint: with p = 1 but a very expensive edge and a fast
+        // network, uploading the raw input beats even one edge stage.
+        let (mut desc, profile) = fixture();
+        desc.branches[0].exit_prob = 1.0;
+        let p = profile.with_gamma(10_000.0);
+        let plan = solve(&desc, &p, LinkModel::new(10_000.0, 0.0), 1e-9, true);
+        assert!(plan.is_cloud_only(), "{plan:?}");
+    }
+}

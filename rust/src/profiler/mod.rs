@@ -1,0 +1,286 @@
+//! Per-layer profiler: measures `t_i^c` — the processing time of every
+//! stage (and the side branch) on this machine's PJRT runtime — exactly
+//! the role Google Colab played in the paper's §VI. Results serialize to
+//! `profile.json` so planning runs don't re-measure.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::json::Json;
+use crate::runtime::{HostTensor, InferenceEngine};
+use crate::timing::DelayProfile;
+use crate::util::stats::trimmed_mean;
+
+/// Measurement parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ProfileOptions {
+    /// Warmup executions per stage (excluded from stats).
+    pub warmup: usize,
+    /// Measured executions per stage.
+    pub iters: usize,
+    /// Tail-trim fraction for the trimmed mean.
+    pub trim: f64,
+    /// Batch size to profile at (per-sample time = t / batch).
+    pub batch: usize,
+}
+
+impl Default for ProfileOptions {
+    fn default() -> Self {
+        ProfileOptions {
+            warmup: 3,
+            iters: 15,
+            trim: 0.1,
+            batch: 1,
+        }
+    }
+}
+
+/// One stage's measurement.
+#[derive(Debug, Clone)]
+pub struct StageMeasurement {
+    pub name: String,
+    /// Trimmed-mean seconds per *sample*.
+    pub t_cloud_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+/// Full measurement report.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    pub stages: Vec<StageMeasurement>,
+    pub branch: StageMeasurement,
+    pub batch: usize,
+    pub iters: usize,
+}
+
+impl ProfileReport {
+    /// Convert to the planning profile with the paper's gamma model.
+    pub fn to_delay_profile(&self, gamma: f64) -> DelayProfile {
+        DelayProfile::from_cloud_times(
+            self.stages.iter().map(|s| s.t_cloud_s).collect(),
+            self.branch.t_cloud_s,
+            gamma,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batch", Json::num(self.batch as f64)),
+            ("iters", Json::num(self.iters as f64)),
+            (
+                "stages",
+                Json::arr(
+                    self.stages
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("name", Json::str(s.name.clone())),
+                                ("t_cloud_s", Json::num(s.t_cloud_s)),
+                                ("min_s", Json::num(s.min_s)),
+                                ("max_s", Json::num(s.max_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "branch",
+                Json::obj(vec![
+                    ("name", Json::str(self.branch.name.clone())),
+                    ("t_cloud_s", Json::num(self.branch.t_cloud_s)),
+                    ("min_s", Json::num(self.branch.min_s)),
+                    ("max_s", Json::num(self.branch.max_s)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<ProfileReport> {
+        let doc = Json::parse(
+            &std::fs::read_to_string(path)
+                .with_context(|| format!("reading {}", path.display()))?,
+        )?;
+        Self::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<ProfileReport> {
+        let stage_of = |j: &Json| -> Result<StageMeasurement> {
+            Ok(StageMeasurement {
+                name: j
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("measurement missing name"))?
+                    .to_string(),
+                t_cloud_s: j
+                    .get("t_cloud_s")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("measurement missing t_cloud_s"))?,
+                min_s: j.get("min_s").and_then(Json::as_f64).unwrap_or(0.0),
+                max_s: j.get("max_s").and_then(Json::as_f64).unwrap_or(0.0),
+            })
+        };
+        Ok(ProfileReport {
+            stages: doc
+                .get("stages")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("profile missing stages"))?
+                .iter()
+                .map(stage_of)
+                .collect::<Result<_>>()?,
+            branch: stage_of(
+                doc.get("branch")
+                    .ok_or_else(|| anyhow!("profile missing branch"))?,
+            )?,
+            batch: doc.get("batch").and_then(Json::as_usize).unwrap_or(1),
+            iters: doc.get("iters").and_then(Json::as_usize).unwrap_or(0),
+        })
+    }
+}
+
+fn time_fn(
+    warmup: usize,
+    iters: usize,
+    trim: f64,
+    mut f: impl FnMut() -> Result<()>,
+) -> Result<(f64, f64, f64)> {
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f()?;
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = trimmed_mean(&samples, trim);
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    Ok((mean, min, max))
+}
+
+/// Measure every stage + the branch of the engine's manifest.
+pub fn measure(engine: &InferenceEngine, opts: ProfileOptions) -> Result<ProfileReport> {
+    let m = engine.manifest();
+    let b = opts.batch;
+    anyhow::ensure!(
+        m.batch_sizes.contains(&b),
+        "profile batch {b} not exported"
+    );
+
+    let mut stages = Vec::with_capacity(m.num_stages());
+    let mut input_shape = vec![b];
+    input_shape.extend(&m.input_shape);
+    let mut x = HostTensor::zeros(input_shape);
+
+    for i in 1..=m.num_stages() {
+        let name = m.stages[i - 1].name.clone();
+        let (mean, min, max) = time_fn(opts.warmup, opts.iters, opts.trim, || {
+            engine.run_stages(i, i, &x).map(|_| ())
+        })?;
+        log::info!("profiled {name}: {:.3} ms/batch", mean * 1e3);
+        stages.push(StageMeasurement {
+            name,
+            t_cloud_s: mean / b as f64,
+            min_s: min / b as f64,
+            max_s: max / b as f64,
+        });
+        // Feed the real activation forward so shapes stay correct.
+        x = engine.run_stages(i, i, &x)?;
+        if i == m.branch.after_stage {
+            // nothing: branch profiled below on saved activations
+        }
+    }
+
+    // Branch: profile on activations at its attach point.
+    let mut bx = HostTensor::zeros({
+        let mut s = vec![b];
+        s.extend(&m.branch.in_shape);
+        s
+    });
+    bx = engine
+        .run_stages(1, m.branch.after_stage, &{
+            let mut s = vec![b];
+            s.extend(&m.input_shape);
+            HostTensor::zeros(s)
+        })
+        .unwrap_or(bx);
+    let (mean, min, max) = time_fn(opts.warmup, opts.iters, opts.trim, || {
+        engine.run_branch(&bx).map(|_| ())
+    })?;
+    let branch = StageMeasurement {
+        name: m.branch.name.clone(),
+        t_cloud_s: mean / b as f64,
+        min_s: min / b as f64,
+        max_s: max / b as f64,
+    };
+
+    Ok(ProfileReport {
+        stages,
+        branch,
+        batch: b,
+        iters: opts.iters,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_roundtrip() {
+        let r = ProfileReport {
+            stages: vec![
+                StageMeasurement {
+                    name: "conv1".into(),
+                    t_cloud_s: 1.5e-3,
+                    min_s: 1e-3,
+                    max_s: 2e-3,
+                },
+                StageMeasurement {
+                    name: "fc".into(),
+                    t_cloud_s: 2e-4,
+                    min_s: 1e-4,
+                    max_s: 3e-4,
+                },
+            ],
+            branch: StageMeasurement {
+                name: "b1".into(),
+                t_cloud_s: 1e-4,
+                min_s: 9e-5,
+                max_s: 2e-4,
+            },
+            batch: 8,
+            iters: 15,
+        };
+        let parsed = ProfileReport::from_json(&Json::parse(&r.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(parsed.stages.len(), 2);
+        assert_eq!(parsed.stages[0].name, "conv1");
+        assert!((parsed.stages[0].t_cloud_s - 1.5e-3).abs() < 1e-12);
+        assert_eq!(parsed.batch, 8);
+
+        let dp = parsed.to_delay_profile(100.0);
+        assert!((dp.t_edge[0] - 0.15).abs() < 1e-9);
+        assert!((dp.branch_t_edge - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_fn_counts_iters() {
+        let mut calls = 0;
+        let (mean, min, max) = time_fn(2, 10, 0.1, || {
+            calls += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(calls, 12);
+        assert!(mean >= 0.0 && min <= mean && mean <= max.max(mean));
+    }
+}

@@ -1,0 +1,133 @@
+//! Artifact store: lazily compiles HLO-text artifacts on the PJRT client
+//! and caches the loaded executables keyed by file name.
+//!
+//! Compilation happens once per (artifact, process); the serving hot path
+//! only ever hits the cache. `warmup` precompiles everything a plan needs
+//! so the first request doesn't pay XLA compile time.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::settings::Flavor;
+use crate::model::Manifest;
+
+use super::tensor::HostTensor;
+
+/// A compiled artifact plus metadata.
+pub struct LoadedExecutable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_time_s: f64,
+}
+
+impl LoadedExecutable {
+    /// Run with a single input tensor; unwraps the 1-tuple output
+    /// convention (`return_tuple=True` at lowering).
+    pub fn run1(&self, input: &HostTensor) -> Result<HostTensor> {
+        let lit = input.to_literal()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching output literal")?
+            .to_tuple1()
+            .context("unwrapping 1-tuple output")?;
+        HostTensor::from_literal(&out)
+    }
+
+    /// Run producing two outputs (the branch artifact: probs, entropy).
+    pub fn run2(&self, input: &HostTensor) -> Result<(HostTensor, HostTensor)> {
+        let lit = input.to_literal()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .with_context(|| format!("executing {}", self.name))?;
+        let (a, b) = result[0][0]
+            .to_literal_sync()
+            .context("fetching output literal")?
+            .to_tuple2()
+            .context("unwrapping 2-tuple output")?;
+        Ok((HostTensor::from_literal(&a)?, HostTensor::from_literal(&b)?))
+    }
+}
+
+/// Lazily-compiling artifact cache over one PJRT client.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedExecutable>>>,
+}
+
+impl ArtifactStore {
+    /// Create with a fresh CPU PJRT client rooted at the artifacts dir.
+    pub fn open(dir: &std::path::Path) -> Result<ArtifactStore> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(ArtifactStore {
+            client,
+            dir: dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+
+    /// Fetch (compiling if needed) an artifact by file name.
+    pub fn get(&self, name: &str) -> Result<std::sync::Arc<LoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(name);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let compile_time_s = t0.elapsed().as_secs_f64();
+        log::debug!("compiled {name} in {compile_time_s:.3}s");
+        let loaded = std::sync::Arc::new(LoadedExecutable {
+            name: name.to_string(),
+            exe,
+            compile_time_s,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Precompile every stage/branch artifact of one flavor at the given
+    /// batch sizes. Returns total compile seconds.
+    pub fn warmup(&self, manifest: &Manifest, flavor: Flavor, batches: &[usize]) -> Result<f64> {
+        let mut total = 0.0;
+        for stage in &manifest.stages {
+            for &b in batches {
+                total += self.get(stage.artifact(flavor, b)?)?.compile_time_s;
+            }
+        }
+        for &b in batches {
+            total += self.get(manifest.branch.artifact(flavor, b)?)?.compile_time_s;
+        }
+        Ok(total)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,283 @@
+//! Inference engine: a Send + Sync handle to a dedicated executor thread
+//! that owns the (non-Send) PJRT client and artifact cache.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and must stay on one
+//! thread; the serving coordinator, TCP connections and benches all need
+//! to call it from many threads. Each `InferenceEngine` therefore spawns
+//! one executor thread owning an [`ArtifactStore`] and services requests
+//! over a channel. This also mirrors the paper's deployment: the *edge
+//! device* and the *cloud server* are separate compute resources — the
+//! coordinator gives each node its own engine (its own PJRT client), so
+//! edge and cloud stages execute concurrently like the real pipeline.
+//!
+//! `run_stages(a..=b)` composes per-stage executables to realize any
+//! partition; `run_branch` evaluates the side branch's fused
+//! (probs, entropy) head.
+
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::settings::Flavor;
+use crate::model::Manifest;
+
+use super::artifact::ArtifactStore;
+use super::tensor::HostTensor;
+
+/// Output of a branch evaluation for one batch.
+#[derive(Debug, Clone)]
+pub struct BranchOutput {
+    /// (B, num_classes) class probabilities.
+    pub probs: HostTensor,
+    /// (B,) entropy in nats.
+    pub entropy: Vec<f32>,
+}
+
+enum Job {
+    RunStages {
+        from: usize,
+        to: usize,
+        input: HostTensor,
+        reply: mpsc::Sender<Result<HostTensor>>,
+    },
+    RunFull {
+        input: HostTensor,
+        reply: mpsc::Sender<Result<HostTensor>>,
+    },
+    RunBranch {
+        input: HostTensor,
+        reply: mpsc::Sender<Result<BranchOutput>>,
+    },
+    Warmup {
+        reply: mpsc::Sender<Result<f64>>,
+    },
+    CachedCount {
+        reply: mpsc::Sender<usize>,
+    },
+}
+
+#[derive(Clone)]
+pub struct InferenceEngine {
+    tx: Arc<Mutex<mpsc::Sender<Job>>>,
+    manifest: Arc<Manifest>,
+    flavor: Flavor,
+}
+
+impl InferenceEngine {
+    /// Spawn the executor thread (which creates its own PJRT CPU client)
+    /// and return the handle. `name` labels the thread ("edge", "cloud").
+    pub fn open(
+        dir: &std::path::Path,
+        manifest: Manifest,
+        flavor: Flavor,
+        name: &str,
+    ) -> Result<InferenceEngine> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let dir = dir.to_path_buf();
+        let worker_manifest = manifest.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name(format!("pjrt-{name}"))
+            .spawn(move || {
+                let store = match ArtifactStore::open(&dir) {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                executor_loop(store, worker_manifest, flavor, rx);
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during startup"))??;
+        Ok(InferenceEngine {
+            tx: Arc::new(Mutex::new(tx)),
+            manifest: Arc::new(manifest),
+            flavor,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn flavor(&self) -> Flavor {
+        self.flavor
+    }
+
+    fn send(&self, job: Job) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(job)
+            .map_err(|_| anyhow!("engine executor thread is gone"))
+    }
+
+    /// Run main-branch stages `from..=to` (1-based, inclusive) on a
+    /// batched activation tensor whose leading dim must be an exported
+    /// batch size.
+    pub fn run_stages(&self, from: usize, to: usize, input: &HostTensor) -> Result<HostTensor> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::RunStages {
+            from,
+            to,
+            input: input.clone(),
+            reply,
+        })?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    /// Full main-branch forward via the monolithic artifact (cloud-only
+    /// fast path + the stage-vs-monolith fusion ablation).
+    pub fn run_full(&self, input: &HostTensor) -> Result<HostTensor> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::RunFull {
+            input: input.clone(),
+            reply,
+        })?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    /// Evaluate the side branch on stage-`after_stage` activations.
+    pub fn run_branch(&self, activations: &HostTensor) -> Result<BranchOutput> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::RunBranch {
+            input: activations.clone(),
+            reply,
+        })?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    /// Precompile all artifacts of this flavor; returns compile seconds.
+    pub fn warmup(&self) -> Result<f64> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::Warmup { reply })?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    pub fn cached_count(&self) -> usize {
+        let (reply, rx) = mpsc::channel();
+        if self.send(Job::CachedCount { reply }).is_err() {
+            return 0;
+        }
+        rx.recv().unwrap_or(0)
+    }
+
+    /// Largest exported batch size (the executable the batcher fills).
+    pub fn max_batch(&self) -> usize {
+        *self.manifest.batch_sizes.iter().max().unwrap()
+    }
+
+    /// Argmax class per sample of a (B, C) probability/logit tensor.
+    pub fn argmax_classes(probs: &HostTensor) -> Vec<usize> {
+        (0..probs.batch())
+            .map(|i| {
+                // First maximum wins ties (deterministic, matches numpy).
+                let row = probs.sample(i);
+                let mut best = 0usize;
+                for (j, &v) in row.iter().enumerate().skip(1) {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+fn executor_loop(
+    store: ArtifactStore,
+    manifest: Manifest,
+    flavor: Flavor,
+    rx: mpsc::Receiver<Job>,
+) {
+    let check_batch = |n: usize| -> Result<()> {
+        if !manifest.batch_sizes.contains(&n) {
+            bail!(
+                "batch size {n} not exported (have {:?})",
+                manifest.batch_sizes
+            );
+        }
+        Ok(())
+    };
+
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::RunStages {
+                from,
+                to,
+                input,
+                reply,
+            } => {
+                let result = (|| -> Result<HostTensor> {
+                    let n = manifest.num_stages();
+                    if from < 1 || to > n || from > to {
+                        bail!("invalid stage range {from}..={to} (1..={n})");
+                    }
+                    check_batch(input.batch())?;
+                    let mut x = input;
+                    for i in from..=to {
+                        let stage = &manifest.stages[i - 1];
+                        let exe = store.get(stage.artifact(flavor, x.batch())?)?;
+                        x = exe.run1(&x)?;
+                    }
+                    Ok(x)
+                })();
+                let _ = reply.send(result);
+            }
+            Job::RunFull { input, reply } => {
+                let result = (|| -> Result<HostTensor> {
+                    check_batch(input.batch())?;
+                    let exe = store.get(manifest.full_artifact(flavor, input.batch())?)?;
+                    exe.run1(&input)
+                })();
+                let _ = reply.send(result);
+            }
+            Job::RunBranch { input, reply } => {
+                let result = (|| -> Result<BranchOutput> {
+                    check_batch(input.batch())?;
+                    let exe =
+                        store.get(manifest.branch.artifact(flavor, input.batch())?)?;
+                    let (probs, ent) = exe.run2(&input)?;
+                    Ok(BranchOutput {
+                        entropy: ent.data().to_vec(),
+                        probs,
+                    })
+                })();
+                let _ = reply.send(result);
+            }
+            Job::Warmup { reply } => {
+                let result = (|| -> Result<f64> {
+                    let mut total =
+                        store.warmup(&manifest, flavor, &manifest.batch_sizes)?;
+                    for &b in &manifest.batch_sizes {
+                        if let Ok(name) = manifest.full_artifact(flavor, b) {
+                            total += store.get(name)?.compile_time_s;
+                        }
+                    }
+                    Ok(total)
+                })();
+                let _ = reply.send(result);
+            }
+            Job::CachedCount { reply } => {
+                let _ = reply.send(store.cached_count());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_rows() {
+        let t = HostTensor::new(vec![3, 2], vec![0.9, 0.1, 0.2, 0.8, 0.5, 0.5]).unwrap();
+        assert_eq!(InferenceEngine::argmax_classes(&t), vec![0, 1, 0]);
+    }
+}

@@ -1,0 +1,56 @@
+//! Fixture loading: the raw-f32 tensors `aot.py` dumped for round-trip
+//! tests and the Fig. 6 experiment.
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::manifest::FixtureInfo;
+use crate::util::bytes::read_f32_file;
+
+use super::tensor::HostTensor;
+
+/// Load a fixture into a tensor, validating size against its shape.
+pub fn load(info: &FixtureInfo) -> Result<HostTensor> {
+    let data = read_f32_file(&info.path)
+        .with_context(|| format!("reading fixture {}", info.path.display()))?;
+    let want: usize = info.shape.iter().product();
+    if data.len() != want {
+        bail!(
+            "fixture {} has {} f32s, shape {:?} wants {}",
+            info.path.display(),
+            data.len(),
+            info.shape,
+            want
+        );
+    }
+    HostTensor::new(info.shape.clone(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::write_f32_file;
+    use std::path::PathBuf;
+
+    #[test]
+    fn roundtrip_and_validation() {
+        let dir = std::env::temp_dir().join("branchyserve_fixture_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p: PathBuf = dir.join("t.bin");
+        write_f32_file(&p, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+
+        let ok = load(&FixtureInfo {
+            path: p.clone(),
+            shape: vec![2, 3],
+        })
+        .unwrap();
+        assert_eq!(ok.shape(), &[2, 3]);
+        assert_eq!(ok.data()[4], 5.0);
+
+        let bad = load(&FixtureInfo {
+            path: p.clone(),
+            shape: vec![7],
+        });
+        assert!(bad.is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+}

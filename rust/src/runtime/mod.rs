@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
+//! them on the CPU PJRT client from the Rust request path.
+//!
+//! Python never runs here — `make artifacts` produced the HLO text once;
+//! this module parses it (`HloModuleProto::from_text_file`), compiles it
+//! (`PjRtClient::compile`) and executes it with activation tensors.
+
+pub mod artifact;
+pub mod engine;
+pub mod fixture;
+pub mod tensor;
+
+pub use artifact::ArtifactStore;
+pub use engine::{BranchOutput, InferenceEngine};
+pub use tensor::HostTensor;

@@ -1,0 +1,203 @@
+//! Host-side f32 tensor: the activation format flowing between pipeline
+//! stages, the network channel, and the PJRT boundary.
+
+use anyhow::{bail, Context, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} wants {} elements, data has {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    /// Leading (batch) dimension.
+    pub fn batch(&self) -> usize {
+        *self.shape.first().unwrap_or(&0)
+    }
+
+    /// Per-sample element count (product of non-batch dims).
+    pub fn sample_elems(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
+    /// Slice of sample `i`'s elements.
+    pub fn sample(&self, i: usize) -> &[f32] {
+        let k = self.sample_elems();
+        &self.data[i * k..(i + 1) * k]
+    }
+
+    /// Stack per-sample tensors into a batch (all must share shape).
+    pub fn stack(samples: &[HostTensor]) -> Result<HostTensor> {
+        let first = samples.first().context("stack of zero tensors")?;
+        let mut data = Vec::with_capacity(samples.len() * first.len());
+        for s in samples {
+            if s.shape != first.shape {
+                bail!("stack shape mismatch: {:?} vs {:?}", s.shape, first.shape);
+            }
+            data.extend_from_slice(&s.data);
+        }
+        let mut shape = vec![samples.len()];
+        shape.extend_from_slice(&first.shape);
+        HostTensor::new(shape, data)
+    }
+
+    /// Split a batched tensor into per-sample tensors (dropping the batch
+    /// dim from each).
+    pub fn unstack(&self) -> Vec<HostTensor> {
+        let k = self.sample_elems();
+        let sample_shape: Vec<usize> = self.shape[1..].to_vec();
+        (0..self.batch())
+            .map(|i| HostTensor {
+                shape: sample_shape.clone(),
+                data: self.data[i * k..(i + 1) * k].to_vec(),
+            })
+            .collect()
+    }
+
+    /// Take the first `n` samples of a batched tensor.
+    pub fn take_batch(&self, n: usize) -> HostTensor {
+        assert!(n <= self.batch());
+        let k = self.sample_elems();
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        HostTensor {
+            shape,
+            data: self.data[..n * k].to_vec(),
+        }
+    }
+
+    /// Pad the batch dimension to `n` by repeating the last sample (the
+    /// batcher's shape-specialization filler; padded outputs are dropped).
+    pub fn pad_batch(&self, n: usize) -> HostTensor {
+        assert!(n >= self.batch() && self.batch() > 0);
+        let mut data = self.data.clone();
+        let last = self.sample(self.batch() - 1).to_vec();
+        for _ in self.batch()..n {
+            data.extend_from_slice(&last);
+        }
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        HostTensor { shape, data }
+    }
+
+    // ---------------------------------------------------------------- XLA
+
+    /// Convert to an XLA literal of matching shape.
+    ///
+    /// Single-copy path (§Perf L3-2): build the literal directly from the
+    /// raw bytes instead of `vec1(..).reshape(..)`, which copies twice.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.shape,
+            bytes,
+        )
+        .context("creating literal from raw data")
+    }
+
+    /// Build from an XLA literal (f32 arrays only).
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().context("literal to f32 vec")?;
+        HostTensor::new(dims, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_validates_shape() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let a = HostTensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = HostTensor::new(vec![2, 2], vec![5., 6., 7., 8.]).unwrap();
+        let batch = HostTensor::stack(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(batch.shape(), &[2, 2, 2]);
+        assert_eq!(batch.batch(), 2);
+        let parts = batch.unstack();
+        assert_eq!(parts, vec![a, b]);
+    }
+
+    #[test]
+    fn stack_rejects_mismatched() {
+        let a = HostTensor::zeros(vec![2, 2]);
+        let b = HostTensor::zeros(vec![3]);
+        assert!(HostTensor::stack(&[a, b]).is_err());
+        assert!(HostTensor::stack(&[]).is_err());
+    }
+
+    #[test]
+    fn pad_and_take_batch() {
+        let t = HostTensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let padded = t.pad_batch(4);
+        assert_eq!(padded.shape(), &[4, 3]);
+        assert_eq!(padded.sample(2), &[4., 5., 6.]); // repeated last
+        assert_eq!(padded.sample(3), &[4., 5., 6.]);
+        let back = padded.take_batch(2);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn sample_views() {
+        let t = HostTensor::new(vec![2, 2, 2], (0..8).map(|i| i as f32).collect()).unwrap();
+        assert_eq!(t.sample_elems(), 4);
+        assert_eq!(t.sample(1), &[4., 5., 6., 7.]);
+        assert_eq!(t.size_bytes(), 32);
+    }
+}

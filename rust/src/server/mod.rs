@@ -1,0 +1,10 @@
+//! TCP serving front-end: a length-prefixed binary protocol over std
+//! TcpListener (tokio is unavailable offline; a thread-per-connection
+//! accept loop in front of the coordinator's own batching pipeline is
+//! fully adequate for this workload).
+
+pub mod protocol;
+pub mod tcp;
+
+pub use protocol::{Request, Response};
+pub use tcp::{Server, ServerHandle};

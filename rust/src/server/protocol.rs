@@ -1,0 +1,287 @@
+//! Wire protocol: little-endian, length-prefixed frames.
+//!
+//! Frame layout (both directions):
+//!   u32 magic "BSV1" (0x31565342) | u32 body_len | body
+//!
+//! Request body:  u8 kind | payload
+//!   kind 0 PING    — empty payload
+//!   kind 1 INFER   — u32 ndims | u32 dims[ndims] | f32 data[prod(dims)]
+//!   kind 2 METRICS — empty payload
+//! Response body: u8 kind | payload
+//!   kind 0 PONG    — empty
+//!   kind 1 RESULT  — u64 id | u32 class | u8 exited | f32 entropy |
+//!                    f64 latency_s
+//!   kind 2 METRICS — u32 len | JSON bytes
+//!   kind 255 ERROR — u32 len | UTF-8 message
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::HostTensor;
+
+pub const MAGIC: u32 = 0x3156_5342; // "BSV1" LE
+/// Sanity cap on frame size (64 MiB) — rejects garbage/hostile lengths.
+pub const MAX_BODY: u32 = 64 << 20;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Ping,
+    Infer(HostTensor),
+    Metrics,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Pong,
+    Result {
+        id: u64,
+        class: u32,
+        exited_early: bool,
+        entropy: f32,
+        latency_s: f64,
+    },
+    Metrics(String),
+    Error(String),
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> Result<()> {
+    if body.len() > MAX_BODY as usize {
+        bail!("frame too large: {}", body.len());
+    }
+    let mut head = Vec::with_capacity(8);
+    put_u32(&mut head, MAGIC);
+    put_u32(&mut head, body.len() as u32);
+    w.write_all(&head)?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut head = [0u8; 8];
+    r.read_exact(&mut head).context("reading frame header")?;
+    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        bail!("bad magic {magic:#x}");
+    }
+    let len = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    if len > MAX_BODY {
+        bail!("frame length {len} exceeds cap");
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body).context("reading frame body")?;
+    Ok(body)
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            Request::Ping => b.push(0),
+            Request::Infer(t) => {
+                b.push(1);
+                put_u32(&mut b, t.shape().len() as u32);
+                for &d in t.shape() {
+                    put_u32(&mut b, d as u32);
+                }
+                for v in t.data() {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Request::Metrics => b.push(2),
+        }
+        b
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Request> {
+        let (&kind, rest) = body.split_first().context("empty request body")?;
+        match kind {
+            0 => Ok(Request::Ping),
+            1 => {
+                if rest.len() < 4 {
+                    bail!("truncated INFER header");
+                }
+                let ndims = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+                if ndims > 8 {
+                    bail!("too many dims: {ndims}");
+                }
+                let need = 4 + ndims * 4;
+                if rest.len() < need {
+                    bail!("truncated INFER dims");
+                }
+                let mut shape = Vec::with_capacity(ndims);
+                for i in 0..ndims {
+                    shape.push(u32::from_le_bytes(
+                        rest[4 + i * 4..8 + i * 4].try_into().unwrap(),
+                    ) as usize);
+                }
+                let n: usize = shape.iter().product();
+                let data_bytes = &rest[need..];
+                if data_bytes.len() != n * 4 {
+                    bail!(
+                        "INFER payload {} bytes, shape {:?} wants {}",
+                        data_bytes.len(),
+                        shape,
+                        n * 4
+                    );
+                }
+                let data: Vec<f32> = data_bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Ok(Request::Infer(HostTensor::new(shape, data)?))
+            }
+            2 => Ok(Request::Metrics),
+            k => bail!("unknown request kind {k}"),
+        }
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            Response::Pong => b.push(0),
+            Response::Result {
+                id,
+                class,
+                exited_early,
+                entropy,
+                latency_s,
+            } => {
+                b.push(1);
+                b.extend_from_slice(&id.to_le_bytes());
+                put_u32(&mut b, *class);
+                b.push(u8::from(*exited_early));
+                b.extend_from_slice(&entropy.to_le_bytes());
+                b.extend_from_slice(&latency_s.to_le_bytes());
+            }
+            Response::Metrics(json) => {
+                b.push(2);
+                put_u32(&mut b, json.len() as u32);
+                b.extend_from_slice(json.as_bytes());
+            }
+            Response::Error(msg) => {
+                b.push(255);
+                put_u32(&mut b, msg.len() as u32);
+                b.extend_from_slice(msg.as_bytes());
+            }
+        }
+        b
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Response> {
+        let (&kind, rest) = body.split_first().context("empty response body")?;
+        match kind {
+            0 => Ok(Response::Pong),
+            1 => {
+                if rest.len() != 8 + 4 + 1 + 4 + 8 {
+                    bail!("bad RESULT length {}", rest.len());
+                }
+                Ok(Response::Result {
+                    id: u64::from_le_bytes(rest[0..8].try_into().unwrap()),
+                    class: u32::from_le_bytes(rest[8..12].try_into().unwrap()),
+                    exited_early: rest[12] != 0,
+                    entropy: f32::from_le_bytes(rest[13..17].try_into().unwrap()),
+                    latency_s: f64::from_le_bytes(rest[17..25].try_into().unwrap()),
+                })
+            }
+            2 | 255 => {
+                if rest.len() < 4 {
+                    bail!("truncated string frame");
+                }
+                let len = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+                if rest.len() != 4 + len {
+                    bail!("string frame length mismatch");
+                }
+                let s = String::from_utf8(rest[4..].to_vec()).context("invalid UTF-8")?;
+                Ok(if kind == 2 {
+                    Response::Metrics(s)
+                } else {
+                    Response::Error(s)
+                })
+            }
+            k => bail!("unknown response kind {k}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(r: &Request) -> Request {
+        Request::decode(&r.encode()).unwrap()
+    }
+
+    fn roundtrip_resp(r: &Response) -> Response {
+        Response::decode(&r.encode()).unwrap()
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        assert_eq!(roundtrip_req(&Request::Ping), Request::Ping);
+        assert_eq!(roundtrip_req(&Request::Metrics), Request::Metrics);
+        let t = HostTensor::new(vec![2, 3], vec![1., -2., 3.5, 0., 5., 6.]).unwrap();
+        assert_eq!(roundtrip_req(&Request::Infer(t.clone())), Request::Infer(t));
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        assert_eq!(roundtrip_resp(&Response::Pong), Response::Pong);
+        let r = Response::Result {
+            id: 42,
+            class: 1,
+            exited_early: true,
+            entropy: 0.25,
+            latency_s: 0.0123,
+        };
+        assert_eq!(roundtrip_resp(&r), r);
+        assert_eq!(
+            roundtrip_resp(&Response::Metrics("{\"a\":1}".into())),
+            Response::Metrics("{\"a\":1}".into())
+        );
+        assert_eq!(
+            roundtrip_resp(&Response::Error("boom".into())),
+            Response::Error("boom".into())
+        );
+    }
+
+    #[test]
+    fn frame_roundtrip_and_validation() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        let mut cursor = std::io::Cursor::new(buf.clone());
+        assert_eq!(read_frame(&mut cursor).unwrap(), b"hello");
+
+        // Corrupt magic:
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(read_frame(&mut std::io::Cursor::new(bad)).is_err());
+
+        // Hostile length:
+        let mut hostile = Vec::new();
+        put_u32(&mut hostile, MAGIC);
+        put_u32(&mut hostile, u32::MAX);
+        assert!(read_frame(&mut std::io::Cursor::new(hostile)).is_err());
+    }
+
+    #[test]
+    fn malformed_bodies_rejected() {
+        assert!(Request::decode(&[]).is_err());
+        assert!(Request::decode(&[9]).is_err());
+        assert!(Request::decode(&[1, 1, 0, 0, 0]).is_err()); // truncated dims
+        // INFER with mismatched payload:
+        let mut b = vec![1u8];
+        put_u32(&mut b, 1);
+        put_u32(&mut b, 4); // shape [4] -> wants 16 payload bytes
+        b.extend_from_slice(&[0u8; 8]);
+        assert!(Request::decode(&b).is_err());
+        assert!(Response::decode(&[1, 0, 0]).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! TCP accept loop + a blocking client, speaking `protocol` frames in
+//! front of a running [`Coordinator`].
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Coordinator;
+use crate::runtime::HostTensor;
+
+use super::protocol::{read_frame, write_frame, Request, Response};
+
+pub struct Server {
+    coordinator: Arc<Coordinator>,
+}
+
+/// Handle for stopping a running server.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the accept loop with one last connection so it re-checks.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Server {
+    pub fn new(coordinator: Arc<Coordinator>) -> Server {
+        Server { coordinator }
+    }
+
+    /// Bind and serve in background threads. Port 0 picks a free port.
+    pub fn start(self, port: u16) -> Result<ServerHandle> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", port)).context("binding server socket")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        log::info!("serving on {addr}");
+
+        let stop2 = stop.clone();
+        let coordinator = self.coordinator;
+        let accept_thread = std::thread::Builder::new()
+            .name("accept-loop".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let c = coordinator.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("conn".into())
+                                .spawn(move || {
+                                    if let Err(e) = handle_connection(stream, &c) {
+                                        log::debug!("connection ended: {e:#}");
+                                    }
+                                });
+                        }
+                        Err(e) => log::warn!("accept error: {e}"),
+                    }
+                }
+            })?;
+
+        Ok(ServerHandle {
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+}
+
+fn handle_connection(stream: TcpStream, coordinator: &Coordinator) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+
+    loop {
+        let body = match read_frame(&mut reader) {
+            Ok(b) => b,
+            Err(_) => return Ok(()), // peer closed
+        };
+        let response = match Request::decode(&body) {
+            Err(e) => Response::Error(format!("{e:#}")),
+            Ok(Request::Ping) => Response::Pong,
+            Ok(Request::Metrics) => {
+                let snap = coordinator.metrics();
+                Response::Metrics(format!(
+                    "{{\"completed\":{},\"edge_exits\":{},\"rejected\":{},\
+                     \"throughput_rps\":{:.3},\"p50_s\":{:.6},\"p99_s\":{:.6}}}",
+                    snap.completed,
+                    snap.edge_exits,
+                    snap.rejected,
+                    snap.throughput_rps,
+                    snap.p50_s,
+                    snap.p99_s
+                ))
+            }
+            Ok(Request::Infer(tensor)) => match coordinator.infer_sync(tensor) {
+                Ok(r) => Response::Result {
+                    id: r.id,
+                    class: r.class as u32,
+                    exited_early: r.exited_early(),
+                    entropy: r.entropy,
+                    latency_s: r.latency_s,
+                },
+                Err(e) => Response::Error(format!("{e:#}")),
+            },
+        };
+        write_frame(&mut writer, &response.encode())?;
+    }
+}
+
+/// Blocking client for examples/tests/load generation.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting")?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        write_frame(&mut self.writer, &req.encode())?;
+        let body = read_frame(&mut self.reader)?;
+        Response::decode(&body)
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        match self.call(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => anyhow::bail!("expected PONG, got {other:?}"),
+        }
+    }
+
+    pub fn infer(&mut self, image: HostTensor) -> Result<Response> {
+        self.call(&Request::Infer(image))
+    }
+}

@@ -1,0 +1,165 @@
+//! Property-test mini-framework (proptest is unavailable offline).
+//!
+//! Usage:
+//! ```no_run
+//! use branchyserve::testing::{property, Gen};
+//! property("sum is commutative", 200, |g| {
+//!     let a = g.f64_in(-1e6, 1e6);
+//!     let b = g.f64_in(-1e6, 1e6);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case draws from a seeded PCG32; on panic the harness re-raises
+//! with the case number and seed so the failure is reproducible with
+//! `Gen::replay(seed)`.
+
+use crate::util::rng::Pcg32;
+
+/// Case-local generator handed to property closures.
+pub struct Gen {
+    rng: Pcg32,
+    seed: u64,
+}
+
+impl Gen {
+    pub fn replay(seed: u64) -> Gen {
+        Gen {
+            rng: Pcg32::seeded(seed),
+            seed,
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Probability in [0, 1] with occasional exact endpoints — the
+    /// endpoints are where the paper's model degenerates (p=0 plain DNN,
+    /// p=1 always-exit), so generators visit them deliberately.
+    pub fn probability(&mut self) -> f64 {
+        match self.rng.below(10) {
+            0 => 0.0,
+            1 => 1.0,
+            _ => self.rng.f64(),
+        }
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with the failing seed on the
+/// first failure. `BRANCHYSERVE_PROP_SEED` pins the base seed;
+/// `BRANCHYSERVE_PROP_CASES` overrides the case count (e.g. a nightly soak).
+pub fn property<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u64,
+    prop: F,
+) {
+    let base_seed = std::env::var("BRANCHYSERVE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_0000u64);
+    let cases = std::env::var("BRANCHYSERVE_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::replay(seed);
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed:#x}):\n{msg}\n\
+                 reproduce with Gen::replay({seed:#x})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        property("reflexivity", 50, |g| {
+            let x = g.f64_in(-10.0, 10.0);
+            assert_eq!(x, x);
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let result = std::panic::catch_unwind(|| {
+            property("always fails after threshold", 100, |g| {
+                let v = g.usize_in(0, 100);
+                assert!(v < 1000, "drawn {v}");
+            });
+        });
+        assert!(result.is_ok(), "property should hold");
+
+        let result = std::panic::catch_unwind(|| {
+            property("fails", 100, |g| {
+                let v = g.usize_in(0, 100);
+                assert!(v < 50, "drawn {v}");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("reproduce"), "{msg}");
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut a = Gen::replay(99);
+        let mut b = Gen::replay(99);
+        for _ in 0..10 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn probability_hits_endpoints() {
+        let mut g = Gen::replay(3);
+        let draws: Vec<f64> = (0..200).map(|_| g.probability()).collect();
+        assert!(draws.iter().any(|&p| p == 0.0));
+        assert!(draws.iter().any(|&p| p == 1.0));
+        assert!(draws.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+}

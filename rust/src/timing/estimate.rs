@@ -1,0 +1,269 @@
+//! Closed-form expected inference time — Eqs. 3, 5 and 6 of the paper,
+//! generalized from one side branch to any number of them.
+//!
+//! For a split after stage `s` (s = 0: cloud-only; s = N: edge-only),
+//! with active branches (position k < s, per §IV-B) and survival
+//! probabilities S(.) from [`super::exitprob::ExitChain`]:
+//!
+//! ```text
+//! E[T(s)] =   sum_{i=1..s}  S(before stage i) * t_i^e        edge compute
+//!           [+ sum_{active j} S(before branch j) * t_b^e]    branch compute*
+//!           + S(split s) * ( t_net(alpha_s) + sum_{i>s} t_i^c )
+//! ```
+//!
+//! *the bracketed branch-compute term is optional: the paper's Eq. 5
+//! omits it (branch cost folded into nothing), so `paper_mode()` — used
+//! by the Fig. 4/5 reproductions — disables it, while the serving planner
+//! enables it. With a single branch at k and the term disabled this is
+//! exactly Eq. 5; with p = 0 it degenerates to Eq. 3 (plain DNN); with
+//! s <= k it is Eq. 3 via "branch inactive" (Eq. 6's case split).
+
+use crate::model::BranchyNetDesc;
+use crate::network::bandwidth::LinkModel;
+
+use super::exitprob::ExitChain;
+use super::profile::{CloudSuffix, DelayProfile};
+
+/// Expected-inference-time evaluator for one (network, profile, desc)
+/// triple. Construction is O(N); each `expected_time` query is O(s).
+#[derive(Debug)]
+pub struct Estimator<'a> {
+    desc: &'a BranchyNetDesc,
+    profile: &'a DelayProfile,
+    link: LinkModel,
+    chain: ExitChain,
+    cloud_suffix: CloudSuffix,
+    include_branch_cost: bool,
+}
+
+impl<'a> Estimator<'a> {
+    pub fn new(
+        desc: &'a BranchyNetDesc,
+        profile: &'a DelayProfile,
+        link: LinkModel,
+    ) -> Estimator<'a> {
+        desc.validate().expect("invalid BranchyNet description");
+        profile
+            .validate(desc.num_stages())
+            .expect("profile/desc mismatch");
+        Estimator {
+            desc,
+            profile,
+            link,
+            chain: ExitChain::new(desc),
+            cloud_suffix: CloudSuffix::new(profile),
+            include_branch_cost: true,
+        }
+    }
+
+    /// Reproduce the paper's Eq. 5 exactly: side-branch evaluation itself
+    /// costs nothing.
+    pub fn paper_mode(mut self) -> Estimator<'a> {
+        self.include_branch_cost = false;
+        self
+    }
+
+    pub fn exit_chain(&self) -> &ExitChain {
+        &self.chain
+    }
+
+    pub fn desc(&self) -> &BranchyNetDesc {
+        self.desc
+    }
+
+    pub fn num_splits(&self) -> usize {
+        self.desc.num_stages() + 1
+    }
+
+    /// E[T_inf] for a split after stage `split` (0..=N).
+    pub fn expected_time(&self, split: usize) -> f64 {
+        let n = self.desc.num_stages();
+        assert!(split <= n, "split {split} out of range 0..={n}");
+
+        // Edge compute, survival-weighted per stage.
+        let mut t = 0.0;
+        for i in 1..=split {
+            t += self.chain.survival_before_stage(i) * self.profile.t_edge[i - 1];
+        }
+        // Branch compute (optional; active branches only: position < split).
+        if self.include_branch_cost {
+            for (j, &pos) in self.chain.positions().iter().enumerate() {
+                if pos < split {
+                    t += self.chain.survival_after(j) * self.profile.branch_t_edge;
+                }
+            }
+        }
+        // Transfer + cloud, weighted by the survival at the cut.
+        if split < n {
+            let surv = self.chain.survival_at_split(split);
+            if surv > 0.0 {
+                let alpha = self.desc.transfer_bytes(split);
+                t += surv
+                    * (self.link.transfer_time(alpha) + self.cloud_suffix.from_split(split));
+            }
+        }
+        t
+    }
+
+    /// Eq. 3: inference time if the network had no branches (p = 0).
+    pub fn plain_dnn_time(&self, split: usize) -> f64 {
+        let n = self.desc.num_stages();
+        assert!(split <= n);
+        let mut t = self.profile.edge_prefix(split);
+        if split < n {
+            t += self.link.transfer_time(self.desc.transfer_bytes(split))
+                + self.cloud_suffix.from_split(split);
+        }
+        t
+    }
+
+    pub fn cloud_only_time(&self) -> f64 {
+        self.expected_time(0)
+    }
+
+    pub fn edge_only_time(&self) -> f64 {
+        self.expected_time(self.desc.num_stages())
+    }
+
+    /// All split costs (index = split-after value).
+    pub fn all_times(&self) -> Vec<f64> {
+        (0..self.num_splits()).map(|s| self.expected_time(s)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BranchDesc, BranchyNetDesc};
+
+    /// 3 stages, one branch after stage 1 — the paper's Fig. 3 example.
+    fn desc(p: f64) -> BranchyNetDesc {
+        BranchyNetDesc {
+            stage_names: vec!["v1".into(), "v2".into(), "v3".into()],
+            stage_out_bytes: vec![1000, 500, 8],
+            input_bytes: 800,
+            branches: vec![BranchDesc {
+                after_stage: 1,
+                exit_prob: p,
+            }],
+        }
+    }
+
+    fn profile() -> DelayProfile {
+        DelayProfile::from_cloud_times(vec![1e-3, 2e-3, 3e-3], 4e-4, 10.0)
+    }
+
+    fn link() -> LinkModel {
+        LinkModel::new(8.0, 0.0) // 1 byte = 1 us
+    }
+
+    #[test]
+    fn cloud_only_is_eq3() {
+        let d = desc(0.7);
+        let p = profile();
+        let e = Estimator::new(&d, &p, link()).paper_mode();
+        // No edge stages -> branch never runs; upload raw input.
+        let want = 800.0 * 8.0 / 8e6 + (1e-3 + 2e-3 + 3e-3);
+        assert!((e.expected_time(0) - want).abs() < 1e-12);
+        assert_eq!(e.expected_time(0), e.cloud_only_time());
+    }
+
+    #[test]
+    fn split_at_branch_position_has_no_exit_effect() {
+        // s = 1 and branch at k = 1: branch discarded (Eq. 6 first case).
+        let d = desc(0.9);
+        let p = profile();
+        let e = Estimator::new(&d, &p, link()).paper_mode();
+        let want = 1e-2 + 1000.0 * 8.0 / 8e6 + (2e-3 + 3e-3);
+        assert!((e.expected_time(1) - want).abs() < 1e-12);
+        // ... identical to the p = 0 network at this split:
+        let d0 = desc(0.0);
+        let e0 = Estimator::new(&d0, &p, link()).paper_mode();
+        assert!((e.expected_time(1) - e0.expected_time(1)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn eq5_hand_computed_split2() {
+        // s = 2, branch at 1 active with p = 0.5:
+        //   t1_e + 0.5 * t2_e + 0.5 * (t_net(alpha_2) + t3_c)
+        let d = desc(0.5);
+        let p = profile();
+        let e = Estimator::new(&d, &p, link()).paper_mode();
+        let want = 1e-2 + 0.5 * 2e-2 + 0.5 * (500.0 * 8.0 / 8e6 + 3e-3);
+        assert!((e.expected_time(2) - want).abs() < 1e-12, "{}", e.expected_time(2));
+    }
+
+    #[test]
+    fn p_zero_reduces_to_plain_dnn_everywhere() {
+        let d = desc(0.0);
+        let p = profile();
+        let e = Estimator::new(&d, &p, link()).paper_mode();
+        for s in 0..=3 {
+            assert!(
+                (e.expected_time(s) - e.plain_dnn_time(s)).abs() < 1e-15,
+                "split {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn p_one_pays_nothing_after_branch() {
+        let d = desc(1.0);
+        let p = profile();
+        let e = Estimator::new(&d, &p, link()).paper_mode();
+        // s = 3 (edge-only): t1_e + 1.0*t2_e*0 ... stage 2,3 never run.
+        assert!((e.expected_time(3) - 1e-2).abs() < 1e-12);
+        // s = 2: transfer and cloud are never paid either.
+        assert!((e.expected_time(2) - 1e-2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn branch_cost_mode_adds_weighted_branch_time() {
+        let d = desc(0.5);
+        let p = profile();
+        let paper = Estimator::new(&d, &p, link()).paper_mode();
+        let real = Estimator::new(&d, &p, link());
+        // Branch active only for splits >= 2; its cost is t_b^e * S(before b) = 4e-3 * 1.
+        assert!((real.expected_time(1) - paper.expected_time(1)).abs() < 1e-15);
+        assert!(
+            (real.expected_time(2) - paper.expected_time(2) - 4e-3).abs() < 1e-12
+        );
+        assert!(
+            (real.expected_time(3) - paper.expected_time(3) - 4e-3).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn probability_monotonicity() {
+        // For any fixed split past the branch, higher exit probability
+        // can only reduce expected time (less downstream work).
+        let p = profile();
+        let l = link();
+        let mut prev = f64::INFINITY;
+        for q in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let d = desc(q);
+            let e = Estimator::new(&d, &p, l).paper_mode();
+            let t = e.expected_time(2);
+            assert!(t <= prev + 1e-15, "p={q}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn all_times_shape() {
+        let d = desc(0.3);
+        let p = profile();
+        let e = Estimator::new(&d, &p, link());
+        let ts = e.all_times();
+        assert_eq!(ts.len(), 4);
+        assert!(ts.iter().all(|t| t.is_finite() && *t >= 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn split_out_of_range_panics() {
+        let d = desc(0.3);
+        let p = profile();
+        Estimator::new(&d, &p, link()).expected_time(4);
+    }
+}

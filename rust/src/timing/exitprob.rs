@@ -1,0 +1,176 @@
+//! Exit-probability chain — the paper's Eq. 4.
+//!
+//! For side branches b_1..b_m with *conditional* exit probabilities p_k
+//! (P[exit at b_k | reached b_k]), the unconditional probability of
+//! exiting at b_k is
+//!
+//! ```text
+//! p_Y(k) = p_k * prod_{i<k} (1 - p_i)
+//! ```
+//!
+//! and the survival probability past the first j branches is
+//! S_j = prod_{i<=j} (1 - p_i). These weight the edge/cloud/transfer
+//! delays in Eq. 5 and the link weights in G'_BDNN (Eq. 8).
+
+use crate::model::BranchyNetDesc;
+
+/// Survival/exit probabilities for a BranchyNet description.
+#[derive(Debug, Clone)]
+pub struct ExitChain {
+    /// Branch positions (1-based stage index each branch follows), sorted.
+    positions: Vec<usize>,
+    /// Conditional exit probability of each branch.
+    cond: Vec<f64>,
+    /// survival[j] = P[sample not classified by the first j branches].
+    /// survival[0] = 1.
+    survival: Vec<f64>,
+}
+
+impl ExitChain {
+    pub fn new(desc: &BranchyNetDesc) -> ExitChain {
+        let mut branches: Vec<(usize, f64)> = desc
+            .branches
+            .iter()
+            .map(|b| (b.after_stage, b.exit_prob))
+            .collect();
+        branches.sort_by_key(|&(pos, _)| pos);
+        let positions: Vec<usize> = branches.iter().map(|&(p, _)| p).collect();
+        let cond: Vec<f64> = branches.iter().map(|&(_, p)| p).collect();
+        let mut survival = Vec::with_capacity(cond.len() + 1);
+        survival.push(1.0);
+        for &p in &cond {
+            let last = *survival.last().unwrap();
+            survival.push(last * (1.0 - p));
+        }
+        ExitChain {
+            positions,
+            cond,
+            survival,
+        }
+    }
+
+    pub fn num_branches(&self) -> usize {
+        self.positions.len()
+    }
+
+    pub fn positions(&self) -> &[usize] {
+        &self.positions
+    }
+
+    /// Unconditional exit probability at the j-th branch (0-based) — Eq. 4.
+    pub fn exit_prob(&self, j: usize) -> f64 {
+        self.survival[j] * self.cond[j]
+    }
+
+    /// P[not exited at any of the first j branches] (S_j; j may be m).
+    pub fn survival_after(&self, j: usize) -> f64 {
+        self.survival[j]
+    }
+
+    /// Survival probability at the input of stage `i` (1-based): the
+    /// product over branches strictly before stage i (position < i).
+    pub fn survival_before_stage(&self, i: usize) -> f64 {
+        let j = self.positions.partition_point(|&pos| pos < i);
+        self.survival[j]
+    }
+
+    /// Survival probability relevant to a cut after stage `s`: branches
+    /// with position < s are active (paper §IV-B: B = {b_1..b_{s-1}};
+    /// a branch exactly at the cut is discarded).
+    pub fn survival_at_split(&self, s: usize) -> f64 {
+        let j = self.positions.partition_point(|&pos| pos < s);
+        self.survival[j]
+    }
+
+    /// Number of active branches for a split after stage `s`.
+    pub fn active_branches(&self, s: usize) -> usize {
+        self.positions.partition_point(|&pos| pos < s)
+    }
+
+    /// Total exit probability over all branches (must be <= 1).
+    pub fn total_exit_prob(&self) -> f64 {
+        1.0 - self.survival[self.num_branches()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BranchDesc, BranchyNetDesc};
+
+    fn desc(branches: Vec<(usize, f64)>) -> BranchyNetDesc {
+        BranchyNetDesc {
+            stage_names: (1..=6).map(|i| format!("s{i}")).collect(),
+            stage_out_bytes: vec![10; 6],
+            input_bytes: 10,
+            branches: branches
+                .into_iter()
+                .map(|(after_stage, exit_prob)| BranchDesc {
+                    after_stage,
+                    exit_prob,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn eq4_matches_hand_computation() {
+        // p = (0.5, 0.4, 0.1) at stages 1, 3, 4.
+        let c = ExitChain::new(&desc(vec![(1, 0.5), (3, 0.4), (4, 0.1)]));
+        assert!((c.exit_prob(0) - 0.5).abs() < 1e-12);
+        assert!((c.exit_prob(1) - 0.5 * 0.4).abs() < 1e-12);
+        assert!((c.exit_prob(2) - 0.5 * 0.6 * 0.1).abs() < 1e-12);
+        // Exit probs + final survival sum to 1.
+        let total: f64 = (0..3).map(|j| c.exit_prob(j)).sum::<f64>() + c.survival_after(3);
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn survival_before_stage_boundaries() {
+        let c = ExitChain::new(&desc(vec![(2, 0.5)]));
+        // Branch after stage 2: stages 1,2 see survival 1; stage 3+ sees 0.5.
+        assert_eq!(c.survival_before_stage(1), 1.0);
+        assert_eq!(c.survival_before_stage(2), 1.0);
+        assert_eq!(c.survival_before_stage(3), 0.5);
+        assert_eq!(c.survival_before_stage(6), 0.5);
+    }
+
+    #[test]
+    fn split_at_branch_position_discards_that_branch() {
+        // Paper: B = {b_1..b_{s-1}} — a branch exactly at the cut point
+        // is not processed on the edge.
+        let c = ExitChain::new(&desc(vec![(2, 0.5)]));
+        assert_eq!(c.survival_at_split(2), 1.0); // cut after stage 2: b@2 inactive
+        assert_eq!(c.survival_at_split(3), 0.5); // cut after stage 3: b@2 active
+        assert_eq!(c.active_branches(2), 0);
+        assert_eq!(c.active_branches(3), 1);
+    }
+
+    #[test]
+    fn unsorted_branches_are_sorted() {
+        let c = ExitChain::new(&desc(vec![(4, 0.1), (1, 0.5)]));
+        assert_eq!(c.positions(), &[1, 4]);
+        assert!((c.exit_prob(1) - 0.5 * 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extreme_probabilities() {
+        let c = ExitChain::new(&desc(vec![(1, 1.0), (2, 0.7)]));
+        assert_eq!(c.exit_prob(0), 1.0);
+        assert_eq!(c.exit_prob(1), 0.0); // nothing survives past b1
+        assert_eq!(c.survival_after(2), 0.0);
+        assert!((c.total_exit_prob() - 1.0).abs() < 1e-12);
+
+        let c = ExitChain::new(&desc(vec![(1, 0.0)]));
+        assert_eq!(c.total_exit_prob(), 0.0);
+        assert_eq!(c.survival_at_split(5), 1.0);
+    }
+
+    #[test]
+    fn no_branches() {
+        let c = ExitChain::new(&desc(vec![]));
+        assert_eq!(c.num_branches(), 0);
+        assert_eq!(c.survival_before_stage(3), 1.0);
+        assert_eq!(c.total_exit_prob(), 0.0);
+    }
+}

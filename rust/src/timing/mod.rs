@@ -1,0 +1,20 @@
+//! The paper's inference-time model (§IV):
+//!
+//! * [`profile`] — the `(t_i^e, t_i^c)` delay vectors (Eq. 1–2 inputs);
+//! * [`exitprob`] — the exit-probability chain `p_Y(k)` (Eq. 4);
+//! * [`estimate`] — closed-form expected inference time `E[T_inf(s)]`
+//!   for every split point (Eq. 3, 5, 6), generalized to any number of
+//!   side branches.
+//!
+//! The estimator is the single source of truth for "what does a partition
+//! cost": the brute-force baseline evaluates it directly, and the
+//! G'_BDNN shortest-path construction (`partition::gprime`) is proven
+//! equivalent to it by property tests.
+
+pub mod estimate;
+pub mod exitprob;
+pub mod montecarlo;
+pub mod profile;
+
+pub use estimate::Estimator;
+pub use profile::DelayProfile;

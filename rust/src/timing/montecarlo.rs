@@ -1,0 +1,195 @@
+//! Monte-Carlo validation of the closed-form expectation (Eq. 5/6).
+//!
+//! The estimator's algebra is easy to get subtly wrong (survival factors,
+//! the discarded-branch-at-the-cut rule, branch-cost accounting), so this
+//! module simulates the *per-sample stochastic process the model
+//! describes* — walk the edge stages, draw a Bernoulli exit at each
+//! active branch, pay transfer + cloud only on survival — and checks that
+//! the sample mean converges to `Estimator::expected_time`. It also
+//! yields the latency *distribution* (variance, quantiles), which the
+//! closed form does not provide and the serving SLO analysis wants.
+
+use crate::model::BranchyNetDesc;
+use crate::network::bandwidth::LinkModel;
+use crate::timing::profile::DelayProfile;
+use crate::util::rng::Pcg32;
+use crate::util::stats::Welford;
+
+/// Simulation result for one split point.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub split_after: usize,
+    pub samples: u64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    /// Fraction of samples that exited at some side branch.
+    pub exit_fraction: f64,
+}
+
+/// Simulate `samples` independent inferences through split `split_after`.
+///
+/// `include_branch_cost` mirrors the estimator's mode. Deterministic in
+/// `seed`.
+pub fn simulate(
+    desc: &BranchyNetDesc,
+    profile: &DelayProfile,
+    link: LinkModel,
+    split_after: usize,
+    include_branch_cost: bool,
+    samples: u64,
+    seed: u64,
+) -> SimResult {
+    desc.validate().expect("invalid desc");
+    profile
+        .validate(desc.num_stages())
+        .expect("profile mismatch");
+    let n = desc.num_stages();
+    assert!(split_after <= n);
+
+    // Sorted active branches (position < split, per §IV-B).
+    let mut branches: Vec<(usize, f64)> = desc
+        .branches
+        .iter()
+        .filter(|b| b.after_stage < split_after)
+        .map(|b| (b.after_stage, b.exit_prob))
+        .collect();
+    branches.sort_by_key(|&(pos, _)| pos);
+
+    let cloud_suffix: f64 = profile.t_cloud[split_after..].iter().sum();
+    let transfer = if split_after < n {
+        link.transfer_time(desc.transfer_bytes(split_after))
+    } else {
+        0.0
+    };
+
+    let mut rng = Pcg32::seeded(seed);
+    let mut acc = Welford::new();
+    let mut exits = 0u64;
+
+    for _ in 0..samples {
+        let mut t = 0.0;
+        let mut exited = false;
+        let mut b_iter = branches.iter().peekable();
+        for i in 1..=split_after {
+            t += profile.t_edge[i - 1];
+            if let Some(&&(pos, p)) = b_iter.peek() {
+                if pos == i {
+                    b_iter.next();
+                    if include_branch_cost {
+                        t += profile.branch_t_edge;
+                    }
+                    if rng.bool(p) {
+                        exited = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if !exited && split_after < n {
+            t += transfer + cloud_suffix;
+        }
+        if exited {
+            exits += 1;
+        }
+        acc.push(t);
+    }
+
+    SimResult {
+        split_after,
+        samples,
+        mean_s: acc.mean(),
+        std_s: acc.stddev(),
+        min_s: acc.min(),
+        max_s: acc.max(),
+        exit_fraction: exits as f64 / samples as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic;
+    use crate::testing::property;
+    use crate::timing::Estimator;
+
+    #[test]
+    fn sample_mean_converges_to_closed_form() {
+        property("Monte Carlo == Eq. 5/6", 40, |g| {
+            let n = g.usize_in(1, 12);
+            let desc = synthetic::random_desc(g, n, 3);
+            let gamma = g.f64_in(1.0, 200.0);
+            let profile = synthetic::random_profile(g, &desc, gamma);
+            let link = LinkModel::new(g.f64_in(0.1, 50.0), 0.0);
+            let split = g.usize_in(0, n);
+            let branch_cost = g.bool(0.5);
+
+            let est = Estimator::new(&desc, &profile, link);
+            let est = if branch_cost { est } else { est.paper_mode() };
+            let want = est.expected_time(split);
+
+            let sim = simulate(&desc, &profile, link, split, branch_cost, 40_000, g.u64());
+            // 40k samples: allow 5 sigma-of-the-mean plus tiny abs slack.
+            let tol = 5.0 * sim.std_s / (sim.samples as f64).sqrt() + 1e-12;
+            assert!(
+                (sim.mean_s - want).abs() <= tol.max(1e-9 * want.abs()),
+                "split {split}: sim {} vs closed form {want} (tol {tol})",
+                sim.mean_s
+            );
+        });
+    }
+
+    #[test]
+    fn exit_fraction_matches_total_exit_probability() {
+        property("exit fraction == 1 - survival", 30, |g| {
+            let n = g.usize_in(2, 12);
+            let desc = synthetic::random_desc(g, n, 3);
+            let profile = synthetic::random_profile(g, &desc, 10.0);
+            let link = LinkModel::new(1.0, 0.0);
+            let split = g.usize_in(0, n);
+            let est = Estimator::new(&desc, &profile, link);
+            let want = 1.0 - est.exit_chain().survival_at_split(split);
+            let sim = simulate(&desc, &profile, link, split, false, 30_000, g.u64());
+            assert!(
+                (sim.exit_fraction - want).abs() < 0.02,
+                "split {split}: simulated {} vs analytic {want}",
+                sim.exit_fraction
+            );
+        });
+    }
+
+    #[test]
+    fn deterministic_cases_have_zero_variance() {
+        let mut g = crate::testing::Gen::replay(2);
+        let mut desc = synthetic::random_desc(&mut g, 5, 1);
+        // No active branch -> every sample takes the identical path.
+        desc.branches.clear();
+        let profile = synthetic::random_profile(&mut g, &desc, 10.0);
+        let link = LinkModel::new(1.0, 0.0);
+        let sim = simulate(&desc, &profile, link, 3, false, 1000, 7);
+        assert_eq!(sim.std_s, 0.0);
+        assert_eq!(sim.exit_fraction, 0.0);
+    }
+
+    #[test]
+    fn variance_peaks_at_intermediate_probability() {
+        // With one branch, latency is a two-point distribution; its
+        // variance p(1-p)*gap^2 is maximal at p = 0.5.
+        let mut g = crate::testing::Gen::replay(3);
+        let base = synthetic::random_desc(&mut g, 6, 0);
+        let profile = synthetic::random_profile(&mut g, &base, 10.0);
+        let link = LinkModel::new(1.0, 0.0);
+        let mut stds = Vec::new();
+        for p in [0.05, 0.5, 0.95] {
+            let mut desc = base.clone();
+            desc.branches = vec![crate::model::BranchDesc {
+                after_stage: 2,
+                exit_prob: p,
+            }];
+            let sim = simulate(&desc, &profile, link, 6, false, 50_000, 11);
+            stds.push(sim.std_s);
+        }
+        assert!(stds[1] > stds[0] && stds[1] > stds[2], "{stds:?}");
+    }
+}

@@ -1,0 +1,160 @@
+//! Per-stage delay vectors: `t_i^e` (edge) and `t_i^c` (cloud), plus the
+//! side-branch evaluation cost.
+//!
+//! The paper obtains `t_c` by measuring each layer on the cloud device
+//! (§VI; our `profiler` does the same against the PJRT runtime) and sets
+//! `t_i^e = gamma * t_i^c` with the processing factor gamma spanning edge
+//! hardware classes (Jetson ~ low gamma, Raspberry Pi ~ high gamma).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct DelayProfile {
+    /// Processing time of stage i on the edge device, seconds (t_i^e).
+    pub t_edge: Vec<f64>,
+    /// Processing time of stage i on the cloud server, seconds (t_i^c).
+    pub t_cloud: Vec<f64>,
+    /// Side-branch evaluation time on the edge device, seconds.
+    ///
+    /// The paper's Eq. 5 folds branch compute into the layer times (it
+    /// never appears as a separate term); keeping it separate lets the
+    /// estimator either reproduce the paper exactly
+    /// (`include_branch_cost = false`) or model the real serving system
+    /// (`true`). Applied per side branch.
+    pub branch_t_edge: f64,
+    /// The gamma used to derive `t_edge`, kept for reporting.
+    pub gamma: f64,
+}
+
+impl DelayProfile {
+    /// Build from measured cloud times with the paper's proportionality
+    /// model `t_e = gamma * t_c` (§VI).
+    pub fn from_cloud_times(t_cloud: Vec<f64>, branch_t_cloud: f64, gamma: f64) -> DelayProfile {
+        assert!(gamma >= 1.0, "gamma must be >= 1, got {gamma}");
+        DelayProfile {
+            t_edge: t_cloud.iter().map(|t| t * gamma).collect(),
+            branch_t_edge: branch_t_cloud * gamma,
+            t_cloud,
+            gamma,
+        }
+    }
+
+    /// Re-derive for a different gamma (cheap; used by the Fig. 5 sweep).
+    pub fn with_gamma(&self, gamma: f64) -> DelayProfile {
+        assert!(gamma >= 1.0);
+        DelayProfile {
+            t_edge: self.t_cloud.iter().map(|t| t * gamma).collect(),
+            branch_t_edge: self.branch_t_edge / self.gamma * gamma,
+            t_cloud: self.t_cloud.clone(),
+            gamma,
+        }
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.t_cloud.len()
+    }
+
+    /// Total cloud time of stages `s+1..=N` (the T_c of Eq. 2 for a split
+    /// after stage s). O(N); hot paths use [`CloudSuffix`].
+    pub fn cloud_suffix(&self, split_after: usize) -> f64 {
+        self.t_cloud[split_after..].iter().sum()
+    }
+
+    /// Total edge time of stages `1..=s` ignoring exits (Eq. 1's T_e).
+    pub fn edge_prefix(&self, split_after: usize) -> f64 {
+        self.t_edge[..split_after].iter().sum()
+    }
+
+    pub fn validate(&self, n_stages: usize) -> Result<()> {
+        if self.t_edge.len() != n_stages || self.t_cloud.len() != n_stages {
+            bail!(
+                "profile has {} edge / {} cloud stages, expected {n_stages}",
+                self.t_edge.len(),
+                self.t_cloud.len()
+            );
+        }
+        for (i, (&e, &c)) in self.t_edge.iter().zip(&self.t_cloud).enumerate() {
+            if !(e.is_finite() && e >= 0.0 && c.is_finite() && c >= 0.0) {
+                bail!("stage {} has invalid times edge={e} cloud={c}", i + 1);
+            }
+        }
+        if !(self.branch_t_edge.is_finite() && self.branch_t_edge >= 0.0) {
+            bail!("invalid branch time {}", self.branch_t_edge);
+        }
+        Ok(())
+    }
+}
+
+/// Precomputed suffix sums of cloud times for O(1) `T_c(s)` lookups in
+/// the brute-force baseline and the graph construction.
+#[derive(Debug, Clone)]
+pub struct CloudSuffix {
+    /// suffix[s] = sum of t_cloud[s..]; suffix[N] = 0.
+    suffix: Vec<f64>,
+}
+
+impl CloudSuffix {
+    pub fn new(profile: &DelayProfile) -> CloudSuffix {
+        let n = profile.num_stages();
+        let mut suffix = vec![0.0; n + 1];
+        for i in (0..n).rev() {
+            suffix[i] = suffix[i + 1] + profile.t_cloud[i];
+        }
+        CloudSuffix { suffix }
+    }
+
+    #[inline]
+    pub fn from_split(&self, split_after: usize) -> f64 {
+        self.suffix[split_after]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> DelayProfile {
+        DelayProfile::from_cloud_times(vec![1e-3, 2e-3, 4e-3], 5e-4, 10.0)
+    }
+
+    #[test]
+    fn gamma_scaling() {
+        let p = profile();
+        assert_eq!(p.t_edge, vec![1e-2, 2e-2, 4e-2]);
+        assert_eq!(p.branch_t_edge, 5e-3);
+        let q = p.with_gamma(100.0);
+        assert!((q.t_edge[0] - 0.1).abs() < 1e-12);
+        assert!((q.branch_t_edge - 5e-2).abs() < 1e-12);
+        assert_eq!(q.t_cloud, p.t_cloud); // cloud unchanged
+    }
+
+    #[test]
+    fn prefix_suffix_sums() {
+        let p = profile();
+        assert!((p.cloud_suffix(0) - 7e-3).abs() < 1e-12);
+        assert!((p.cloud_suffix(2) - 4e-3).abs() < 1e-12);
+        assert_eq!(p.cloud_suffix(3), 0.0);
+        assert_eq!(p.edge_prefix(0), 0.0);
+        assert!((p.edge_prefix(3) - 7e-2).abs() < 1e-12);
+
+        let cs = CloudSuffix::new(&p);
+        for s in 0..=3 {
+            assert!((cs.from_split(s) - p.cloud_suffix(s)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn validation() {
+        profile().validate(3).unwrap();
+        assert!(profile().validate(4).is_err());
+        let mut p = profile();
+        p.t_edge[1] = f64::NAN;
+        assert!(p.validate(3).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn gamma_below_one_panics() {
+        DelayProfile::from_cloud_times(vec![1e-3], 0.0, 0.5);
+    }
+}

@@ -1,0 +1,114 @@
+//! Byte-size formatting/parsing and little-endian f32 buffer I/O used by
+//! the fixture loader and the tensor type.
+
+use std::path::Path;
+
+/// Human-readable base-2 size: 1536 -> "1.50 KiB".
+pub fn format_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if n < 1024 {
+        return format!("{n} B");
+    }
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Parse "64", "4KiB", "2.5 MiB", "1MB" (decimal suffixes are base-10).
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s.find(|c: char| !(c.is_ascii_digit() || c == '.'))?;
+    let (num, unit) = if split == 0 {
+        return None;
+    } else {
+        s.split_at(split)
+    };
+    let v: f64 = num.parse().ok()?;
+    let mult: f64 = match unit.trim().to_ascii_lowercase().as_str() {
+        "b" | "" => 1.0,
+        "kib" => 1024.0,
+        "mib" => 1024.0 * 1024.0,
+        "gib" => 1024.0f64.powi(3),
+        "kb" => 1e3,
+        "mb" => 1e6,
+        "gb" => 1e9,
+        _ => return None,
+    };
+    Some((v * mult) as u64)
+}
+
+/// Full-string integer-or-suffixed parse (handles plain "123" too).
+pub fn parse_bytes_or_int(s: &str) -> Option<u64> {
+    s.trim().parse::<u64>().ok().or_else(|| parse_bytes(s))
+}
+
+/// Read a raw little-endian f32 file (the Python fixture format).
+pub fn read_f32_file(path: &Path) -> std::io::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() % 4 != 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("{} length {} not a multiple of 4", path.display(), bytes.len()),
+        ));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a raw little-endian f32 file.
+pub fn write_f32_file(path: &Path, data: &[f32]) -> std::io::Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_roundtrip_points() {
+        assert_eq!(format_bytes(0), "0 B");
+        assert_eq!(format_bytes(1023), "1023 B");
+        assert_eq!(format_bytes(1536), "1.50 KiB");
+        assert_eq!(format_bytes(57_600), "56.25 KiB");
+    }
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!(parse_bytes_or_int("123"), Some(123));
+        assert_eq!(parse_bytes("4KiB"), Some(4096));
+        assert_eq!(parse_bytes("2.5 MiB"), Some(2_621_440));
+        assert_eq!(parse_bytes("1MB"), Some(1_000_000));
+        assert_eq!(parse_bytes("nope"), None);
+    }
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("branchyserve_bytes_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let data = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        write_f32_file(&p, &data).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), data);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn f32_file_bad_length() {
+        let dir = std::env::temp_dir().join("branchyserve_bytes_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [0u8; 7]).unwrap();
+        assert!(read_f32_file(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+}

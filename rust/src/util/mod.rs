@@ -1,0 +1,12 @@
+//! Small self-contained utilities: deterministic PRNG, statistics,
+//! logging, and byte/time formatting.
+//!
+//! These exist because the build environment is fully offline (DESIGN.md
+//! §3): `rand`, `env_logger` etc. are unavailable, so the substrates are
+//! implemented here and tested like everything else.
+
+pub mod bytes;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod timefmt;

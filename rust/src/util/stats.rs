@@ -1,0 +1,309 @@
+//! Streaming and batch statistics used by the profiler, the metrics
+//! subsystem and the bench harness: mean/variance (Welford), percentiles,
+//! trimmed means, confidence intervals, and a fixed-bucket latency
+//! histogram cheap enough for the request hot path.
+
+/// Online mean/variance accumulator (Welford's algorithm).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Half-width of the ~95% CI of the mean (normal approximation).
+    pub fn ci95_half_width(&self) -> f64 {
+        if self.n < 2 {
+            return f64::INFINITY;
+        }
+        1.96 * self.stddev() / (self.n as f64).sqrt()
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean = mean;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Percentile of a sample by linear interpolation (type-7, numpy default).
+/// `q` in [0, 100]. Sorts a copy; use for offline reporting, not hot paths.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&q));
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
+    let n = v.len();
+    if n == 1 {
+        return v[0];
+    }
+    let pos = q / 100.0 * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    v[lo] + (v[hi] - v[lo]) * frac
+}
+
+/// Mean after dropping the `trim` fraction from each tail — the profiler's
+/// defense against scheduler noise spikes.
+pub fn trimmed_mean(xs: &[f64], trim: f64) -> f64 {
+    assert!((0.0..0.5).contains(&trim));
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let k = (v.len() as f64 * trim).floor() as usize;
+    let kept = &v[k..v.len() - k];
+    kept.iter().sum::<f64>() / kept.len() as f64
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Fixed-boundary log-scale histogram for latencies in seconds.
+/// Buckets: [0, 1us), [1us, ~1.26us), ... decade split into 10 — cheap
+/// `push` (a log10 + index) suitable for the serving hot path.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    total: u64,
+}
+
+const HIST_MIN: f64 = 1e-6; // 1 us
+const HIST_DECADES: usize = 8; // up to 100 s
+const HIST_PER_DECADE: usize = 10;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: vec![0; HIST_DECADES * HIST_PER_DECADE],
+            underflow: 0,
+            overflow: 0,
+            total: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(secs: f64) -> Option<usize> {
+        if secs < HIST_MIN {
+            return None;
+        }
+        let idx = ((secs / HIST_MIN).log10() * HIST_PER_DECADE as f64) as usize;
+        Some(idx)
+    }
+
+    pub fn push(&mut self, secs: f64) {
+        self.total += 1;
+        match Self::bucket_of(secs) {
+            None => self.underflow += 1,
+            Some(i) if i >= self.counts.len() => self.overflow += 1,
+            Some(i) => self.counts[i] += 1,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Bucket lower edge in seconds.
+    fn edge(i: usize) -> f64 {
+        HIST_MIN * 10f64.powf(i as f64 / HIST_PER_DECADE as f64)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper edge of the
+    /// bucket containing the q-th sample) — within one bucket (~26%) of
+    /// truth, fine for dashboards.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = self.underflow;
+        if seen >= target {
+            return HIST_MIN;
+        }
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::edge(i + 1);
+            }
+        }
+        f64::INFINITY
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.total += other.total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let m = mean(&xs);
+        let var = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.mean() - m).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 10.0);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = Welford::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-10);
+        assert!((a.variance() - all.variance()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_outlier() {
+        let xs = [1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1000.0];
+        assert!((trimmed_mean(&xs, 0.1) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_truth() {
+        let mut h = LatencyHistogram::new();
+        let mut r = crate::util::rng::Pcg32::seeded(11);
+        let mut xs = Vec::new();
+        for _ in 0..50_000 {
+            let v = r.exponential(100.0); // mean 10ms
+            h.push(v);
+            xs.push(v);
+        }
+        for q in [0.5, 0.9, 0.99] {
+            let truth = percentile(&xs, q * 100.0);
+            let est = h.quantile(q);
+            assert!(
+                est >= truth * 0.7 && est <= truth * 1.4,
+                "q={q} est={est} truth={truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_extremes() {
+        let mut h = LatencyHistogram::new();
+        h.push(1e-9);
+        h.push(1e6);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(0.0), HIST_MIN);
+        assert_eq!(h.quantile(1.0), f64::INFINITY);
+    }
+}

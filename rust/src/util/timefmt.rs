@@ -1,0 +1,60 @@
+//! Duration formatting for reports: pick the natural unit.
+
+use std::time::Duration;
+
+/// "1.234 ms", "56.7 us", "2.3 s" — three significant-ish digits.
+pub fn format_secs(secs: f64) -> String {
+    if !secs.is_finite() {
+        return format!("{secs}");
+    }
+    let abs = secs.abs();
+    if abs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if abs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if abs >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+pub fn format_duration(d: Duration) -> String {
+    format_secs(d.as_secs_f64())
+}
+
+/// Throughput: "12.3 req/s" style with unit scaling.
+pub fn format_rate(per_sec: f64) -> String {
+    if per_sec >= 1e6 {
+        format!("{:.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} k/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.2} /s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn units() {
+        assert_eq!(format_secs(2.5), "2.500 s");
+        assert_eq!(format_secs(0.0125), "12.500 ms");
+        assert_eq!(format_secs(42e-6), "42.000 us");
+        assert_eq!(format_secs(3e-9), "3.0 ns");
+    }
+
+    #[test]
+    fn rates() {
+        assert_eq!(format_rate(12.3), "12.30 /s");
+        assert_eq!(format_rate(4_200.0), "4.20 k/s");
+        assert_eq!(format_rate(2_000_000.0), "2.00 M/s");
+    }
+
+    #[test]
+    fn non_finite() {
+        assert_eq!(format_secs(f64::INFINITY), "inf");
+    }
+}

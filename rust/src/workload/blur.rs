@@ -1,0 +1,154 @@
+//! Separable Gaussian blur on CHW tensors — the Rust twin of
+//! `data.gaussian_blur` (same OpenCV sigma convention, same reflect
+//! padding), so the serving path can degrade image quality on the fly
+//! for the Fig. 6 serving-mode experiment.
+
+use crate::runtime::HostTensor;
+
+/// OpenCV-convention sigma for a kernel size.
+pub fn sigma_for(ksize: usize) -> f64 {
+    0.3 * ((ksize as f64 - 1.0) * 0.5 - 1.0) + 0.8
+}
+
+/// Normalized 1-D Gaussian taps.
+pub fn kernel1d(ksize: usize) -> Vec<f32> {
+    let sigma = sigma_for(ksize);
+    let r = (ksize - 1) / 2;
+    let mut k: Vec<f32> = (0..ksize)
+        .map(|i| {
+            let t = i as f64 - r as f64;
+            (-t * t / (2.0 * sigma * sigma)).exp() as f32
+        })
+        .collect();
+    let sum: f32 = k.iter().sum();
+    for v in &mut k {
+        *v /= sum;
+    }
+    k
+}
+
+/// Reflect-pad index (repeated reflection for kernels larger than axis).
+fn reflect(mut i: i64, n: i64) -> usize {
+    // Mirror without repeating the edge sample (np.pad mode="reflect").
+    loop {
+        if i < 0 {
+            i = -i;
+        } else if i >= n {
+            i = 2 * (n - 1) - i;
+        } else {
+            return i as usize;
+        }
+    }
+}
+
+/// Blur a CHW tensor. `ksize <= 1` is the identity.
+pub fn gaussian_blur(t: &HostTensor, ksize: usize) -> HostTensor {
+    if ksize <= 1 {
+        return t.clone();
+    }
+    let shape = t.shape().to_vec();
+    assert_eq!(shape.len(), 3, "expected CHW");
+    let (c, h, w) = (shape[0], shape[1], shape[2]);
+    let k = kernel1d(ksize);
+    let r = (ksize - 1) as i64 / 2;
+
+    let src = t.data();
+    let mut mid = vec![0f32; c * h * w];
+    // Vertical pass.
+    for ch in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = 0f32;
+                for (ki, &tap) in k.iter().enumerate() {
+                    let yy = reflect(y as i64 + ki as i64 - r, h as i64);
+                    acc += tap * src[ch * h * w + yy * w + x];
+                }
+                mid[ch * h * w + y * w + x] = acc;
+            }
+        }
+    }
+    // Horizontal pass.
+    let mut out = vec![0f32; c * h * w];
+    for ch in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = 0f32;
+                for (ki, &tap) in k.iter().enumerate() {
+                    let xx = reflect(x as i64 + ki as i64 - r, w as i64);
+                    acc += tap * mid[ch * h * w + y * w + xx];
+                }
+                out[ch * h * w + y * w + x] = acc;
+            }
+        }
+    }
+    HostTensor::new(shape, out).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::images::ImageSource;
+
+    #[test]
+    fn kernel_normalized_and_symmetric() {
+        for ks in [3, 5, 15, 65] {
+            let k = kernel1d(ks);
+            assert_eq!(k.len(), ks);
+            let sum: f32 = k.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            for i in 0..ks / 2 {
+                assert!((k[i] - k[ks - 1 - i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_below_threshold() {
+        let mut src = ImageSource::new(3);
+        let (img, _) = src.sample();
+        assert_eq!(gaussian_blur(&img, 0), img);
+        assert_eq!(gaussian_blur(&img, 1), img);
+    }
+
+    #[test]
+    fn variance_decreases_with_ksize() {
+        let mut src = ImageSource::new(4);
+        let (img, _) = src.sample();
+        let var = |t: &HostTensor| {
+            let d = t.data();
+            let m: f32 = d.iter().sum::<f32>() / d.len() as f32;
+            d.iter().map(|v| (v - m) * (v - m)).sum::<f32>() / d.len() as f32
+        };
+        let v0 = var(&img);
+        let v5 = var(&gaussian_blur(&img, 5));
+        let v15 = var(&gaussian_blur(&img, 15));
+        let v65 = var(&gaussian_blur(&img, 65));
+        assert!(v0 > v5 && v5 > v15 && v15 > v65, "{v0} {v5} {v15} {v65}");
+    }
+
+    #[test]
+    fn mean_preserved() {
+        let mut src = ImageSource::new(5);
+        let (img, _) = src.sample();
+        let mean = |t: &HostTensor| t.data().iter().sum::<f32>() / t.len() as f32;
+        assert!((mean(&img) - mean(&gaussian_blur(&img, 15))).abs() < 0.05);
+    }
+
+    #[test]
+    fn reflect_indexing() {
+        assert_eq!(reflect(-1, 5), 1);
+        assert_eq!(reflect(-2, 5), 2);
+        assert_eq!(reflect(5, 5), 3);
+        assert_eq!(reflect(6, 5), 2);
+        assert_eq!(reflect(0, 5), 0);
+        // Kernel larger than the axis: repeated reflection terminates.
+        assert_eq!(reflect(13, 5), 3);
+        assert_eq!(reflect(-9, 5), 1);
+    }
+
+    #[test]
+    fn matches_python_convention_sigma() {
+        assert!((sigma_for(5) - 1.1).abs() < 1e-12);
+        assert!((sigma_for(65) - 10.1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,155 @@
+//! Synthetic 3x32x32 image source mirroring `python/compile/data.py`:
+//! class 0 = low-frequency Gaussian blobs, class 1 = oriented sinusoid
+//! stripes, tinted + noised + standardized identically, so the trained
+//! artifacts classify Rust-generated workloads just as well as the
+//! Python-generated fixtures.
+
+use crate::runtime::HostTensor;
+use crate::util::rng::Pcg32;
+
+pub const IMG: usize = 32;
+pub const CHANNELS: usize = 3;
+
+pub struct ImageSource {
+    rng: Pcg32,
+}
+
+impl ImageSource {
+    pub fn new(seed: u64) -> ImageSource {
+        ImageSource {
+            rng: Pcg32::seeded(seed),
+        }
+    }
+
+    /// One labeled sample: (CHW tensor, class).
+    pub fn sample(&mut self) -> (HostTensor, usize) {
+        let label = self.rng.bool(0.5) as usize;
+        let base = if label == 1 {
+            self.stripes()
+        } else {
+            self.blobs()
+        };
+        // Cross-contamination like data.py: mix in a faint other-class.
+        let other = if label == 1 {
+            self.blobs()
+        } else {
+            self.stripes()
+        };
+        let mix = self.rng.range_f64(0.0, 0.35) as f32;
+        let mixed: Vec<f32> = base
+            .iter()
+            .zip(&other)
+            .map(|(&b, &o)| (1.0 - mix) * b + mix * o)
+            .collect();
+
+        let mut data = Vec::with_capacity(CHANNELS * IMG * IMG);
+        for _c in 0..CHANNELS {
+            let tint = self.rng.range_f64(0.6, 1.0) as f32;
+            for &v in &mixed {
+                let noise = self.rng.normal(0.0, 0.12) as f32;
+                data.push(((v * tint + noise) - 0.45) / 0.3);
+            }
+        }
+        (
+            HostTensor::new(vec![CHANNELS, IMG, IMG], data).unwrap(),
+            label,
+        )
+    }
+
+    pub fn batch(&mut self, n: usize) -> (Vec<HostTensor>, Vec<usize>) {
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (x, y) = self.sample();
+            xs.push(x);
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    fn blobs(&mut self) -> Vec<f32> {
+        let mut img = vec![0f32; IMG * IMG];
+        let n_blobs = 3 + self.rng.below(4);
+        for _ in 0..n_blobs {
+            let cy = self.rng.range_f64(4.0, (IMG - 4) as f64);
+            let cx = self.rng.range_f64(4.0, (IMG - 4) as f64);
+            let sig = self.rng.range_f64(3.0, 7.0);
+            let amp = self.rng.range_f64(0.5, 1.0) as f32;
+            for y in 0..IMG {
+                for x in 0..IMG {
+                    let d2 = (y as f64 - cy).powi(2) + (x as f64 - cx).powi(2);
+                    img[y * IMG + x] += amp * (-d2 / (2.0 * sig * sig)).exp() as f32;
+                }
+            }
+        }
+        img
+    }
+
+    fn stripes(&mut self) -> Vec<f32> {
+        let theta = self.rng.range_f64(0.0, std::f64::consts::PI);
+        let freq = self.rng.range_f64(0.6, 1.4);
+        let phase = self.rng.range_f64(0.0, std::f64::consts::TAU);
+        let (s, c) = theta.sin_cos();
+        let mut img = vec![0f32; IMG * IMG];
+        for y in 0..IMG {
+            for x in 0..IMG {
+                let proj = c * x as f64 + s * y as f64;
+                img[y * IMG + x] = (0.5 + 0.5 * (freq * proj + phase).sin()) as f32;
+            }
+        }
+        img
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let mut a = ImageSource::new(9);
+        let mut b = ImageSource::new(9);
+        let (xa, ya) = a.sample();
+        let (xb, yb) = b.sample();
+        assert_eq!(xa, xb);
+        assert_eq!(ya, yb);
+        assert_eq!(xa.shape(), &[3, 32, 32]);
+    }
+
+    #[test]
+    fn both_classes_generated() {
+        let mut src = ImageSource::new(1);
+        let (_, ys) = src.batch(64);
+        assert!(ys.iter().any(|&y| y == 0));
+        assert!(ys.iter().any(|&y| y == 1));
+    }
+
+    #[test]
+    fn stripes_have_higher_gradient_energy() {
+        let mut src = ImageSource::new(2);
+        let (xs, ys) = src.batch(128);
+        let hf = |t: &HostTensor| -> f32 {
+            let d = t.data();
+            let mut e = 0.0;
+            // channel 0 horizontal gradients
+            for y in 0..IMG {
+                for x in 0..IMG - 1 {
+                    let v = d[y * IMG + x + 1] - d[y * IMG + x];
+                    e += v * v;
+                }
+            }
+            e
+        };
+        let (mut e0, mut n0, mut e1, mut n1) = (0.0, 0, 0.0, 0);
+        for (x, y) in xs.iter().zip(&ys) {
+            if *y == 0 {
+                e0 += hf(x);
+                n0 += 1;
+            } else {
+                e1 += hf(x);
+                n1 += 1;
+            }
+        }
+        assert!(e1 / n1 as f32 > 1.5 * (e0 / n0 as f32));
+    }
+}

@@ -1,0 +1,178 @@
+//! Open-loop Poisson load generator driving a [`Coordinator`] directly
+//! (the serve example drives the TCP front-end instead).
+//!
+//! Open-loop means arrivals are independent of completions — the honest
+//! way to measure a serving system's latency under load (closed-loop
+//! generators hide queueing collapse).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Coordinator, InferenceResponse};
+use crate::util::rng::Pcg32;
+use crate::util::stats::percentile;
+
+use super::images::ImageSource;
+
+pub struct LoadGen {
+    pub rate_rps: f64,
+    pub duration: Duration,
+    pub seed: u64,
+}
+
+/// Outcome of a load run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub offered: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub edge_exits: u64,
+    pub correct: u64,
+    /// Latencies of completed requests, seconds.
+    pub latencies: Vec<f64>,
+    pub wall_s: f64,
+}
+
+impl LoadReport {
+    pub fn p(&self, q: f64) -> f64 {
+        if self.latencies.is_empty() {
+            f64::NAN
+        } else {
+            percentile(&self.latencies, q)
+        }
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        if self.latencies.is_empty() {
+            f64::NAN
+        } else {
+            self.latencies.iter().sum::<f64>() / self.latencies.len() as f64
+        }
+    }
+
+    pub fn throughput(&self) -> f64 {
+        self.completed as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.completed == 0 {
+            f64::NAN
+        } else {
+            self.correct as f64 / self.completed as f64
+        }
+    }
+
+    pub fn exit_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.edge_exits as f64 / self.completed as f64
+        }
+    }
+}
+
+impl LoadGen {
+    /// Drive the coordinator with Poisson arrivals; block until all
+    /// accepted requests complete (or the 30 s grace period lapses).
+    pub fn run(&self, coordinator: &Coordinator) -> LoadReport {
+        let mut rng = Pcg32::seeded(self.seed);
+        let mut source = ImageSource::new(self.seed.wrapping_add(1));
+        let start = Instant::now();
+        let mut offered = 0u64;
+        let mut accepted = 0u64;
+        let mut rejected = 0u64;
+        let mut pending: Vec<(mpsc::Receiver<InferenceResponse>, usize)> = Vec::new();
+
+        let mut next_arrival = start;
+        while start.elapsed() < self.duration {
+            let now = Instant::now();
+            if now < next_arrival {
+                std::thread::sleep(next_arrival - now);
+            }
+            next_arrival += Duration::from_secs_f64(rng.exponential(self.rate_rps));
+            offered += 1;
+            let (img, label) = source.sample();
+            match coordinator.submit(img) {
+                Ok((_, rx)) => {
+                    accepted += 1;
+                    pending.push((rx, label));
+                }
+                Err(_) => rejected += 1,
+            }
+        }
+
+        // Collect completions.
+        let mut latencies = Vec::with_capacity(pending.len());
+        let mut completed = 0u64;
+        let mut edge_exits = 0u64;
+        let mut correct = 0u64;
+        let grace = Duration::from_secs(30);
+        for (rx, label) in pending {
+            match rx.recv_timeout(grace) {
+                Ok(resp) => {
+                    completed += 1;
+                    if resp.exited_early() {
+                        edge_exits += 1;
+                    }
+                    if resp.class == label {
+                        correct += 1;
+                    }
+                    latencies.push(resp.latency_s);
+                }
+                Err(_) => {}
+            }
+        }
+
+        LoadReport {
+            offered,
+            accepted,
+            rejected,
+            completed,
+            edge_exits,
+            correct,
+            latencies,
+            wall_s: start.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_statistics() {
+        let r = LoadReport {
+            offered: 10,
+            accepted: 9,
+            rejected: 1,
+            completed: 8,
+            edge_exits: 4,
+            correct: 6,
+            latencies: (1..=8).map(|i| i as f64 * 0.01).collect(),
+            wall_s: 2.0,
+        };
+        assert!((r.mean_latency() - 0.045).abs() < 1e-12);
+        assert!((r.throughput() - 4.0).abs() < 1e-12);
+        assert!((r.accuracy() - 0.75).abs() < 1e-12);
+        assert!((r.exit_rate() - 0.5).abs() < 1e-12);
+        assert!(r.p(50.0) > 0.0);
+    }
+
+    #[test]
+    fn empty_report_is_sane() {
+        let r = LoadReport {
+            offered: 0,
+            accepted: 0,
+            rejected: 0,
+            completed: 0,
+            edge_exits: 0,
+            correct: 0,
+            latencies: vec![],
+            wall_s: 1.0,
+        };
+        assert!(r.mean_latency().is_nan());
+        assert_eq!(r.exit_rate(), 0.0);
+    }
+}

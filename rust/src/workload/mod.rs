@@ -1,0 +1,10 @@
+//! Workload generation: synthetic image sources (matching the Python
+//! dataset's texture classes), Gaussian blur (the Fig. 6 distortion), and
+//! an open-loop Poisson load generator.
+
+pub mod blur;
+pub mod images;
+pub mod loadgen;
+
+pub use images::ImageSource;
+pub use loadgen::{LoadGen, LoadReport};

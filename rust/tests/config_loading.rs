@@ -1,0 +1,121 @@
+//! Settings loading: TOML file -> typed Settings, validation failures,
+//! CLI integration.
+
+use std::io::Write;
+
+use branchyserve::cli::{Cli, Command, Flag, Parsed};
+use branchyserve::config::settings::{Flavor, Settings, Strategy};
+
+fn write_temp(name: &str, content: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("branchyserve_cfg_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(content.as_bytes()).unwrap();
+    path
+}
+
+#[test]
+fn full_config_file_roundtrip() {
+    let path = write_temp(
+        "full.toml",
+        r#"
+# serving config for the 3G demo
+[model]
+artifacts_dir = "artifacts"
+flavor = "pl"
+
+[network]
+kind = "3g"
+uplink_mbps = 1.10
+rtt_ms = 35.5
+
+[edge]
+gamma = 250
+
+[branch]
+entropy_threshold = 0.45
+exit_probability = 0.62
+
+[partition]
+strategy = "neurosurgeon"
+epsilon = 1e-10
+
+[serve]
+port = 9099
+max_batch = 4
+batch_timeout_ms = 1.5
+queue_capacity = 64
+"#,
+    );
+    let s = Settings::load(Some(&path)).unwrap();
+    assert_eq!(s.model.flavor, Flavor::Pallas);
+    assert_eq!(s.network.kind, "3g");
+    assert!((s.network.rtt_s - 0.0355).abs() < 1e-12);
+    assert_eq!(s.edge.gamma, 250.0);
+    assert_eq!(s.branch.exit_probability, Some(0.62));
+    assert_eq!(s.partition.strategy, Strategy::Neurosurgeon);
+    assert_eq!(s.partition.epsilon, 1e-10);
+    assert_eq!(s.serve.port, 9099);
+    assert_eq!(s.serve.max_batch, 4);
+    assert_eq!(s.serve.queue_capacity, 64);
+}
+
+#[test]
+fn partial_config_keeps_defaults() {
+    let path = write_temp("partial.toml", "[edge]\ngamma = 42\n");
+    let s = Settings::load(Some(&path)).unwrap();
+    assert_eq!(s.edge.gamma, 42.0);
+    // Everything else: defaults.
+    let d = Settings::default();
+    assert_eq!(s.serve.port, d.serve.port);
+    assert_eq!(s.network.uplink_mbps, d.network.uplink_mbps);
+}
+
+#[test]
+fn invalid_values_rejected_at_load() {
+    for (name, body) in [
+        ("bad_gamma.toml", "[edge]\ngamma = 0.2\n"),
+        ("bad_thr.toml", "[branch]\nentropy_threshold = 3.0\n"),
+        ("bad_p.toml", "[branch]\nexit_probability = -0.1\n"),
+        ("bad_eps.toml", "[partition]\nepsilon = 0.5\n"),
+        ("bad_strategy.toml", "[partition]\nstrategy = \"magic\"\n"),
+        ("bad_port.toml", "[serve]\nport = 99999\n"),
+        ("bad_toml.toml", "this is not toml"),
+    ] {
+        let path = write_temp(name, body);
+        assert!(Settings::load(Some(&path)).is_err(), "{name} should fail");
+    }
+}
+
+#[test]
+fn missing_file_is_an_error() {
+    assert!(Settings::load(Some(std::path::Path::new("/nonexistent/x.toml"))).is_err());
+}
+
+#[test]
+fn cli_and_config_compose() {
+    // Mirror of main.rs's dispatch: config file + flag overrides.
+    let path = write_temp("compose.toml", "[edge]\ngamma = 10\n[serve]\nport = 7000\n");
+    let cli = Cli {
+        program: "t",
+        about: "t",
+        global_flags: vec![Flag::value("config", "cfg")],
+        commands: vec![Command::new("serve", "s").flag(Flag::value("gamma", "g"))],
+    };
+    let parsed = cli
+        .parse(
+            ["--config", path.to_str().unwrap(), "serve", "--gamma", "99"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+    let Parsed::Run(inv) = parsed else { panic!() };
+    let mut s = Settings::load(inv.get("config").map(std::path::Path::new)).unwrap();
+    assert_eq!(s.edge.gamma, 10.0);
+    if let Some(g) = inv.get_f64("gamma").unwrap() {
+        s.edge.gamma = g;
+    }
+    assert_eq!(s.edge.gamma, 99.0);
+    assert_eq!(s.serve.port, 7000);
+}

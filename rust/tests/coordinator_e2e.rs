@@ -1,0 +1,249 @@
+//! Coordinator end-to-end over the real artifacts: early-exit semantics,
+//! plan realization (edge-only / cloud-only / mid split), metric
+//! consistency, backpressure, live re-planning. Requires `make artifacts`.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use branchyserve::config::settings::{Flavor, Strategy};
+use branchyserve::coordinator::{Coordinator, CoordinatorConfig};
+use branchyserve::model::Manifest;
+use branchyserve::network::bandwidth::LinkModel;
+use branchyserve::network::{BandwidthTrace, Channel};
+use branchyserve::partition::PartitionPlan;
+use branchyserve::runtime::InferenceEngine;
+use branchyserve::workload::ImageSource;
+
+fn setup() -> Option<(Manifest, InferenceEngine, InferenceEngine)> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let manifest = Manifest::load(dir).unwrap();
+    let edge = InferenceEngine::open(dir, manifest.clone(), Flavor::Ref, "t-edge").unwrap();
+    let cloud = InferenceEngine::open(dir, manifest.clone(), Flavor::Ref, "t-cloud").unwrap();
+    Some((manifest, edge, cloud))
+}
+
+fn plan_for(manifest: &Manifest, split: usize, strategy: Strategy) -> PartitionPlan {
+    PartitionPlan::from_split(split, 0.0, strategy, &manifest.to_desc(0.5))
+}
+
+fn fast_channel() -> Arc<Channel> {
+    // Simulated-time channel: accounts delay but never sleeps.
+    Arc::new(Channel::new(BandwidthTrace::constant(1000.0), 0.0, 0.0, 0).simulated_time())
+}
+
+fn coordinator_with(
+    manifest: &Manifest,
+    edge: InferenceEngine,
+    cloud: InferenceEngine,
+    split: usize,
+    threshold: f32,
+) -> Coordinator {
+    Coordinator::start(
+        edge,
+        cloud,
+        fast_channel(),
+        plan_for(manifest, split, Strategy::ShortestPath),
+        CoordinatorConfig {
+            entropy_threshold: threshold,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            queue_capacity: 512,
+        },
+    )
+}
+
+#[test]
+fn mid_split_with_exits_classifies_correctly() {
+    let Some((manifest, edge, cloud)) = setup() else {
+        return;
+    };
+    // Split after stage 2: branch (after stage 1) is active.
+    let c = coordinator_with(&manifest, edge, cloud, 2, 0.4);
+    let mut source = ImageSource::new(31);
+    let mut correct = 0;
+    let mut exits = 0;
+    let n = 32;
+    let mut pend = Vec::new();
+    for _ in 0..n {
+        let (img, label) = source.sample();
+        let (_, rx) = c.submit(img).unwrap();
+        pend.push((rx, label));
+    }
+    for (rx, label) in pend {
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        if r.class == label {
+            correct += 1;
+        }
+        if r.exited_early() {
+            exits += 1;
+            assert!(r.entropy < 0.4, "exited with entropy {}", r.entropy);
+            assert_eq!(r.transfer_s, 0.0, "exited samples must not transfer");
+            assert_eq!(r.cloud_s, 0.0);
+        } else {
+            assert!(
+                r.entropy.is_nan() || r.entropy >= 0.4,
+                "non-exited sample with entropy {}",
+                r.entropy
+            );
+        }
+    }
+    assert!(correct >= n * 9 / 10, "accuracy {correct}/{n}");
+    assert!(exits > 0, "threshold 0.4 should exit many clean samples");
+    let m = c.shutdown();
+    assert_eq!(m.completed, n as u64);
+    assert_eq!(m.edge_exits, exits as u64);
+    assert_eq!(m.completed, m.edge_exits + m.cloud_completions);
+}
+
+#[test]
+fn cloud_only_plan_never_exits_early() {
+    let Some((manifest, edge, cloud)) = setup() else {
+        return;
+    };
+    let c = coordinator_with(&manifest, edge, cloud, 0, 0.69);
+    let mut source = ImageSource::new(32);
+    for _ in 0..8 {
+        let (img, _) = source.sample();
+        let r = c.infer_sync(img).unwrap();
+        assert!(!r.exited_early());
+        assert!(r.entropy.is_nan(), "cloud-only must not evaluate the branch");
+    }
+    let m = c.shutdown();
+    assert_eq!(m.edge_exits, 0);
+    assert!(m.transferred_bytes > 0, "cloud-only must upload inputs");
+}
+
+#[test]
+fn edge_only_plan_completes_without_transfer() {
+    let Some((manifest, edge, cloud)) = setup() else {
+        return;
+    };
+    let n_stages = manifest.num_stages();
+    let c = coordinator_with(&manifest, edge, cloud, n_stages, 0.2);
+    let mut source = ImageSource::new(33);
+    for _ in 0..8 {
+        let (img, _) = source.sample();
+        let r = c.infer_sync(img).unwrap();
+        assert_eq!(r.transfer_s, 0.0);
+        assert_eq!(r.cloud_s, 0.0);
+    }
+    let m = c.shutdown();
+    assert_eq!(m.transferred_bytes, 0);
+    assert_eq!(m.cloud_completions, 0);
+}
+
+#[test]
+fn threshold_extremes_control_exit_rate() {
+    let Some((manifest, edge, cloud)) = setup() else {
+        return;
+    };
+    // Threshold ~ln2: every sample exits at the branch.
+    let c = coordinator_with(&manifest, edge.clone(), cloud.clone(), 3, 0.6932);
+    let mut source = ImageSource::new(34);
+    for _ in 0..8 {
+        let (img, _) = source.sample();
+        assert!(c.infer_sync(img).unwrap().exited_early());
+    }
+    c.shutdown();
+
+    // Threshold 0: nothing exits.
+    let c = coordinator_with(&manifest, edge, cloud, 3, 0.0);
+    let mut source = ImageSource::new(35);
+    for _ in 0..8 {
+        let (img, _) = source.sample();
+        assert!(!c.infer_sync(img).unwrap().exited_early());
+    }
+    c.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_over_capacity() {
+    let Some((manifest, edge, cloud)) = setup() else {
+        return;
+    };
+    let c = Coordinator::start(
+        edge,
+        cloud,
+        fast_channel(),
+        plan_for(&manifest, 2, Strategy::ShortestPath),
+        CoordinatorConfig {
+            entropy_threshold: 0.4,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(50),
+            queue_capacity: 4,
+        },
+    );
+    let mut source = ImageSource::new(36);
+    let mut rejected = 0;
+    let mut pend = Vec::new();
+    for _ in 0..64 {
+        let (img, _) = source.sample();
+        match c.submit(img) {
+            Ok((_, rx)) => pend.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "tiny queue must shed load");
+    for rx in pend {
+        let _ = rx.recv_timeout(Duration::from_secs(60));
+    }
+    let m = c.shutdown();
+    assert!(m.rejected >= rejected as u64);
+}
+
+#[test]
+fn live_replanning_switches_path() {
+    let Some((manifest, edge, cloud)) = setup() else {
+        return;
+    };
+    let c = coordinator_with(&manifest, edge, cloud, 0, 0.5);
+    let mut source = ImageSource::new(37);
+    let (img, _) = source.sample();
+    let r = c.infer_sync(img.clone()).unwrap();
+    assert!(!r.exited_early()); // cloud-only
+
+    // Switch to edge-only live.
+    c.set_plan(plan_for(&manifest, manifest.num_stages(), Strategy::EdgeOnly));
+    let r2 = c.infer_sync(img).unwrap();
+    assert_eq!(r2.transfer_s, 0.0, "after replan, no transfer expected");
+    c.shutdown();
+}
+
+#[test]
+fn batched_submissions_all_answered_once() {
+    let Some((manifest, edge, cloud)) = setup() else {
+        return;
+    };
+    let c = coordinator_with(&manifest, edge, cloud, 2, 0.35);
+    let mut source = ImageSource::new(38);
+    let mut pend = Vec::new();
+    for _ in 0..50 {
+        let (img, _) = source.sample();
+        pend.push(c.submit(img).unwrap());
+    }
+    let mut seen = std::collections::HashSet::new();
+    for (id, rx) in pend {
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(r.id, id);
+        assert!(seen.insert(r.id), "duplicate response for {id}");
+        // Exactly one response per request:
+        assert!(rx.try_recv().is_err());
+    }
+    let m = c.shutdown();
+    assert_eq!(m.completed, 50);
+}
+
+#[test]
+fn channel_link_model_consistency() {
+    // The link the planner assumed and the channel's current link agree.
+    let link = LinkModel::new(5.85, 0.01);
+    let ch = Channel::from_link(link);
+    let now = ch.current_link();
+    assert!((now.uplink_mbps - 5.85).abs() < 1e-12);
+    assert!((now.rtt_s - 0.01).abs() < 1e-12);
+}

@@ -1,0 +1,212 @@
+//! Paper shape claims as fast tests (no artifacts needed): the Fig. 4/5
+//! qualitative statements must hold for any B-AlexNet-like profile, so we
+//! assert them on a synthetic profile shaped like the measured one.
+
+use branchyserve::experiments::{ablation, fig4, fig5};
+use branchyserve::model::{BranchDesc, BranchyNetDesc};
+use branchyserve::network::bandwidth::{LinkModel, Profile};
+use branchyserve::timing::DelayProfile;
+
+/// B-AlexNet-shaped fixture: real alpha profile, plausible cloud times.
+fn fixture() -> (BranchyNetDesc, DelayProfile) {
+    let desc = BranchyNetDesc {
+        stage_names: [
+            "conv1", "conv2", "conv3", "conv4", "conv5", "fc1", "fc2", "fc3",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+        stage_out_bytes: vec![57_600, 18_816, 25_088, 25_088, 3_456, 1_024, 512, 8],
+        input_bytes: 12_288,
+        branches: vec![BranchDesc {
+            after_stage: 1,
+            exit_prob: 0.0,
+        }],
+    };
+    let profile = DelayProfile::from_cloud_times(
+        vec![8.4e-4, 1.2e-3, 3.3e-4, 4.5e-4, 3.6e-4, 5.2e-5, 4.0e-5, 4.7e-5],
+        4.0e-4,
+        10.0,
+    );
+    (desc, profile)
+}
+
+#[test]
+fn fig4_optimal_time_non_increasing_in_probability() {
+    let (desc, profile) = fixture();
+    for c in fig4::run(&desc, &profile, 21, 1e-9) {
+        for w in c.points.windows(2) {
+            assert!(
+                w[1].1 <= w[0].1 + 1e-12,
+                "gamma={} {:?}: E[T] rose with p",
+                c.gamma,
+                c.network
+            );
+        }
+    }
+}
+
+#[test]
+fn fig4_bandwidth_sensitivity_ordering() {
+    let (desc, profile) = fixture();
+    let curves = fig4::run(&desc, &profile, 21, 1e-9);
+    let red = |net: Profile| {
+        curves
+            .iter()
+            .find(|c| c.gamma == 10.0 && c.network == net)
+            .unwrap()
+            .reduction_pct()
+    };
+    assert!(red(Profile::ThreeG) > red(Profile::FourG));
+    assert!(red(Profile::FourG) > red(Profile::WiFi));
+}
+
+#[test]
+fn fig4_probability_one_equalizes_at_strong_edge() {
+    let (desc, profile) = fixture();
+    let curves = fig4::run(&desc, &profile, 11, 1e-9);
+    let last = |net: Profile| {
+        curves
+            .iter()
+            .find(|c| c.gamma == 10.0 && c.network == net)
+            .unwrap()
+            .points
+            .last()
+            .unwrap()
+            .1
+    };
+    let (a, b, c) = (
+        last(Profile::ThreeG),
+        last(Profile::FourG),
+        last(Profile::WiFi),
+    );
+    assert!((a - b).abs() < 1e-12 && (b - c).abs() < 1e-12);
+}
+
+#[test]
+fn fig4_weak_edge_has_cloud_only_plateau() {
+    // Paper Fig. 4(b): for gamma=100 and fast networks, low probabilities
+    // give a constant (cloud-only) inference time.
+    let (desc, profile) = fixture();
+    let curves = fig4::run(&desc, &profile, 21, 1e-9);
+    let wifi = curves
+        .iter()
+        .find(|c| c.gamma == 1000.0 && c.network == Profile::WiFi)
+        .unwrap();
+    assert!(wifi
+        .points
+        .windows(2)
+        .take(5)
+        .all(|w| (w[0].1 - w[1].1).abs() < 1e-15));
+    assert_eq!(wifi.points[0].2, 0, "low-p optimum should be cloud-only");
+}
+
+#[test]
+fn fig5_partition_marches_to_input_with_gamma() {
+    let (desc, profile) = fixture();
+    let gammas = fig5::gamma_grid(30, 5000.0);
+    for c in fig5::run(&desc, &profile, &gammas, 1e-9) {
+        let splits: Vec<usize> = c.points.iter().map(|&(_, s, _)| s).collect();
+        for w in splits.windows(2) {
+            assert!(
+                w[1] <= w[0],
+                "{:?} p={}: {splits:?}",
+                c.network,
+                c.probability
+            );
+        }
+    }
+}
+
+#[test]
+fn fig5_fourg_switches_to_cloud_before_threeg() {
+    let (desc, profile) = fixture();
+    let gammas = fig5::gamma_grid(40, 10_000.0);
+    let curves = fig5::run(&desc, &profile, &gammas, 1e-9);
+    let first_cloud = |net: Profile, p: f64| {
+        curves
+            .iter()
+            .find(|c| c.network == net && c.probability == p)
+            .unwrap()
+            .points
+            .iter()
+            .find(|&&(_, s, _)| s == 0)
+            .map(|&(g, _, _)| g)
+    };
+    for &p in &[0.2, 0.5, 0.8] {
+        if let (Some(g3), Some(g4)) = (
+            first_cloud(Profile::ThreeG, p),
+            first_cloud(Profile::FourG, p),
+        ) {
+            assert!(g4 <= g3 + 1e-9, "p={p}: 4G {g4} vs 3G {g3}");
+        }
+    }
+}
+
+#[test]
+fn fig5_probability_affects_the_chosen_layer() {
+    // The paper's headline: probability is a real factor in partitioning.
+    // Somewhere in the gamma sweep, p=0.2 and p=1.0 must disagree.
+    let (desc, profile) = fixture();
+    let gammas = fig5::gamma_grid(40, 5000.0);
+    let curves = fig5::run(&desc, &profile, &gammas, 1e-9);
+    let of = |p: f64| {
+        curves
+            .iter()
+            .find(|c| c.network == Profile::ThreeG && c.probability == p)
+            .unwrap()
+    };
+    let low = of(0.2);
+    let high = of(1.0);
+    assert!(
+        low.points
+            .iter()
+            .zip(&high.points)
+            .any(|(a, b)| a.1 != b.1),
+        "probability never changed the partition choice"
+    );
+}
+
+#[test]
+fn ablation_strategy_gap_positive_somewhere() {
+    // Modeling the branch must actually help in at least one scenario
+    // (otherwise the paper's contribution is vacuous on this profile).
+    let (desc, profile) = fixture();
+    let gaps = ablation::strategy_gap(&desc, &profile, &[0.5, 0.9], &[10.0, 100.0]);
+    assert!(
+        gaps.iter().any(|g| g.max_speedup() > 1.05),
+        "no scenario showed >5% gain over the best baseline"
+    );
+}
+
+#[test]
+fn ablation_epsilon_insensitive() {
+    let (mut desc, profile) = fixture();
+    desc.branches[0].exit_prob = 0.6;
+    for net in Profile::ALL {
+        let res = ablation::epsilon_sensitivity(
+            &desc,
+            &profile,
+            LinkModel::from_profile(net),
+            &[1e-12, 1e-9, 1e-6],
+        );
+        assert!(res.windows(2).all(|w| w[0].1 == w[1].1), "{net:?}: {res:?}");
+    }
+}
+
+#[test]
+fn ablation_branch_placement_finds_an_optimum() {
+    let (desc, profile) = fixture();
+    let res = ablation::branch_placement(
+        &desc,
+        &profile,
+        LinkModel::from_profile(Profile::ThreeG),
+        0.6,
+    );
+    assert_eq!(res.len(), desc.num_stages() - 1);
+    let best = res
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    assert!(best.1.is_finite() && best.1 > 0.0);
+}

@@ -1,0 +1,224 @@
+//! The core paper invariant, property-tested: the shortest-path solver
+//! over G'_BDNN returns exactly the minimum of the expected-inference-
+//! time estimator (Eq. 6) over all splits — i.e. BranchyNet partitioning
+//! really is reducible to shortest path. Cross-checked against brute
+//! force on thousands of random BranchyNets, plus baseline dominance and
+//! partition-set sanity.
+
+use branchyserve::config::settings::Strategy;
+use branchyserve::graph::{bellman_ford, dijkstra};
+use branchyserve::model::synthetic;
+use branchyserve::network::bandwidth::LinkModel;
+use branchyserve::partition::{baselines, brute, gprime, plan::PartitionPlan, solver};
+use branchyserve::testing::{property, Gen};
+use branchyserve::timing::Estimator;
+
+const EPS: f64 = 1e-9;
+
+fn random_link(g: &mut Gen) -> LinkModel {
+    LinkModel::new(g.f64_in(0.05, 100.0), g.f64_in(0.0, 0.05))
+}
+
+#[test]
+fn solver_matches_brute_force_on_random_branchynets() {
+    property("solver == brute force", 500, |g| {
+        let n = g.usize_in(1, 24);
+        let desc = synthetic::random_desc(g, n, 4);
+        let gamma = g.f64_in(1.0, 2000.0);
+        let profile = synthetic::random_profile(g, &desc, gamma);
+        let link = random_link(g);
+        let paper_mode = g.bool(0.5);
+
+        let plan = solver::solve(&desc, &profile, link, EPS, paper_mode);
+        let est = Estimator::new(&desc, &profile, link);
+        let est = if paper_mode { est.paper_mode() } else { est };
+        let best = (0..=n)
+            .map(|s| est.expected_time(s))
+            .fold(f64::INFINITY, f64::min);
+
+        // Equal up to fp noise + the epsilon tie-breaker.
+        let tol = EPS + 1e-9 * best.abs().max(1.0) + 1e-12;
+        assert!(
+            (plan.expected_time_s - best).abs() <= tol,
+            "solver {} vs brute {best} (n={n}, gamma={gamma:.1}, paper={paper_mode})",
+            plan.expected_time_s
+        );
+        // And the reported split must actually achieve the reported time.
+        let achieved = est.expected_time(plan.split_after);
+        assert!(
+            (achieved - plan.expected_time_s).abs() <= tol,
+            "plan reports {} but split {} achieves {achieved}",
+            plan.expected_time_s,
+            plan.split_after
+        );
+    });
+}
+
+#[test]
+fn gprime_shortest_path_agrees_with_bellman_ford() {
+    property("dijkstra == bellman-ford on G'", 200, |g| {
+        let n = g.usize_in(1, 16);
+        let desc = synthetic::random_desc(g, n, 3);
+        let gamma_ = g.f64_in(1.0, 500.0);
+        let profile = synthetic::random_profile(g, &desc, gamma_);
+        let link = random_link(g);
+        let gp = gprime::build(&desc, &profile, link, EPS, g.bool(0.5));
+        let a = dijkstra::shortest_path(&gp.graph, gp.input, gp.output).unwrap();
+        let b = bellman_ford::shortest_path(&gp.graph, gp.input, gp.output).unwrap();
+        assert!(
+            (a.cost - b.cost).abs() < 1e-12 * a.cost.max(1.0) + 1e-15,
+            "dijkstra {} vs bellman-ford {}",
+            a.cost,
+            b.cost
+        );
+    });
+}
+
+#[test]
+fn gprime_is_always_a_dag_with_bounded_size() {
+    property("G' structure", 200, |g| {
+        let n = g.usize_in(1, 20);
+        let desc = synthetic::random_desc(g, n, 5);
+        let profile = synthetic::random_profile(g, &desc, 10.0);
+        let gp = gprime::build(&desc, &profile, LinkModel::new(1.0, 0.0), EPS, false);
+        assert!(gp.graph.is_dag());
+        let m = desc.branches.len();
+        // 2 virtual + 2n edge + m branch + (m+1)(n+1) cloud upper bound.
+        let bound = 2 + 2 * n + m + (m + 1) * (n + 1);
+        assert!(
+            gp.graph.len() <= bound,
+            "{} nodes > bound {bound} (n={n}, m={m})",
+            gp.graph.len()
+        );
+    });
+}
+
+#[test]
+fn neurosurgeon_never_beats_solver_and_matches_at_p0() {
+    property("baseline dominance", 300, |g| {
+        let n = g.usize_in(1, 16);
+        let mut desc = synthetic::random_desc(g, n, 3);
+        let gamma_ = g.f64_in(1.0, 1000.0);
+        let profile = synthetic::random_profile(g, &desc, gamma_);
+        let link = random_link(g);
+
+        let opt = solver::solve(&desc, &profile, link, EPS, true);
+        let ns = baselines::neurosurgeon(&desc, &profile, link, true);
+        assert!(
+            opt.expected_time_s <= ns.expected_time_s + 1e-9,
+            "neurosurgeon beat the solver: {} < {}",
+            ns.expected_time_s,
+            opt.expected_time_s
+        );
+
+        // With all probabilities zeroed they coincide.
+        for b in &mut desc.branches {
+            b.exit_prob = 0.0;
+        }
+        let opt0 = solver::solve(&desc, &profile, link, EPS, true);
+        let ns0 = baselines::neurosurgeon(&desc, &profile, link, true);
+        assert!(
+            (opt0.expected_time_s - ns0.expected_time_s).abs() <= EPS + 1e-12,
+            "p=0: solver {} vs neurosurgeon {}",
+            opt0.expected_time_s,
+            ns0.expected_time_s
+        );
+    });
+}
+
+#[test]
+fn static_strategies_bracket_the_solver() {
+    property("edge/cloud-only dominance", 300, |g| {
+        let n = g.usize_in(1, 16);
+        let desc = synthetic::random_desc(g, n, 3);
+        let gamma_ = g.f64_in(1.0, 1000.0);
+        let profile = synthetic::random_profile(g, &desc, gamma_);
+        let link = random_link(g);
+        let est = Estimator::new(&desc, &profile, link).paper_mode();
+        let opt = brute::solve(&est);
+        let edge = baselines::static_split(&est, n, Strategy::EdgeOnly);
+        let cloud = baselines::static_split(&est, 0, Strategy::CloudOnly);
+        assert!(opt.expected_time_s <= edge.expected_time_s + 1e-12);
+        assert!(opt.expected_time_s <= cloud.expected_time_s + 1e-12);
+    });
+}
+
+#[test]
+fn partition_sets_are_a_partition() {
+    property("V_e and V_c partition V", 300, |g| {
+        let n = g.usize_in(1, 20);
+        let desc = synthetic::random_desc(g, n, 4);
+        let profile = synthetic::random_profile(g, &desc, 10.0);
+        let plan = solver::solve(&desc, &profile, random_link(g), EPS, true);
+        let (v_e, v_c) = plan.partition_sets(&desc);
+        let stages_e: Vec<&String> = v_e.iter().filter(|s| !s.starts_with("b@")).collect();
+        assert_eq!(stages_e.len() + v_c.len(), n);
+        for s in &stages_e {
+            assert!(!v_c.contains(s), "{s} on both sides");
+        }
+        // Branch markers only appear for branches strictly before the cut.
+        for b in v_e.iter().filter(|s| s.starts_with("b@")) {
+            let pos: usize = b[2..].parse().unwrap();
+            assert!(pos < plan.split_after);
+        }
+    });
+}
+
+#[test]
+fn probability_extremes_degenerate_correctly() {
+    property("p extremes", 200, |g| {
+        let n = g.usize_in(2, 12);
+        let mut desc = synthetic::random_desc(g, n, 1);
+        if desc.branches.is_empty() {
+            return;
+        }
+        let gamma_ = g.f64_in(1.0, 100.0);
+        let profile = synthetic::random_profile(g, &desc, gamma_);
+        let link = random_link(g);
+
+        // p = 0: identical to the branch-free network.
+        desc.branches[0].exit_prob = 0.0;
+        let with_branch = solver::solve(&desc, &profile, link, EPS, true);
+        let mut no_branch = desc.clone();
+        no_branch.branches.clear();
+        let plain = solver::solve(&no_branch, &profile, link, EPS, true);
+        assert!(
+            (with_branch.expected_time_s - plain.expected_time_s).abs() <= EPS + 1e-12,
+            "p=0 should equal branch-free: {} vs {}",
+            with_branch.expected_time_s,
+            plain.expected_time_s
+        );
+
+        // p = 1: expected time never exceeds the edge prefix through the
+        // branch (everything afterwards is free).
+        desc.branches[0].exit_prob = 1.0;
+        let k = desc.branches[0].after_stage;
+        let plan1 = solver::solve(&desc, &profile, link, EPS, true);
+        let prefix: f64 = profile.t_edge[..k].iter().sum();
+        assert!(
+            plan1.expected_time_s <= prefix + EPS + 1e-12,
+            "p=1 plan {} exceeds edge prefix {prefix}",
+            plan1.expected_time_s
+        );
+    });
+}
+
+#[test]
+fn plan_with_strategy_dispatch() {
+    let mut g = Gen::replay(1);
+    let desc = synthetic::random_desc(&mut g, 6, 2);
+    let profile = synthetic::random_profile(&mut g, &desc, 50.0);
+    let link = LinkModel::new(5.85, 0.0);
+    for st in [
+        Strategy::ShortestPath,
+        Strategy::BruteForce,
+        Strategy::Neurosurgeon,
+        Strategy::EdgeOnly,
+        Strategy::CloudOnly,
+    ] {
+        let plan: PartitionPlan =
+            branchyserve::partition::plan_with_strategy(st, &desc, &profile, link, EPS, true);
+        assert_eq!(plan.strategy, st);
+        assert!(plan.expected_time_s.is_finite());
+    }
+}

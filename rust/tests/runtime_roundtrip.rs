@@ -1,0 +1,224 @@
+//! Numerics round-trip over the real artifacts: the Rust PJRT runtime
+//! must reproduce the Python-computed fixtures bit-for-bit (same XLA CPU
+//! backend, same HLO) — stage by stage, branch head, monolith, and across
+//! kernel flavors. Requires `make artifacts`.
+
+use std::path::Path;
+
+use branchyserve::config::settings::Flavor;
+use branchyserve::model::Manifest;
+use branchyserve::runtime::{fixture, HostTensor, InferenceEngine};
+
+fn setup(flavor: Flavor) -> Option<(Manifest, InferenceEngine)> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let manifest = Manifest::load(dir).expect("manifest loads");
+    let engine =
+        InferenceEngine::open(dir, manifest.clone(), flavor, "roundtrip").expect("engine");
+    Some((manifest, engine))
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut max_diff = 0f32;
+    for (a, b) in got.iter().zip(want) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff <= tol, "{what}: max diff {max_diff} > {tol}");
+}
+
+#[test]
+fn ref_flavor_stagewise_matches_python_fixtures() {
+    let Some((manifest, engine)) = setup(Flavor::Ref) else {
+        return;
+    };
+    let input = fixture::load(&manifest.fixture("input_b8").unwrap()).unwrap();
+    let mut x = input;
+    for i in 1..=manifest.num_stages() {
+        x = engine.run_stages(i, i, &x).unwrap();
+        let expected = fixture::load(
+            &manifest
+                .fixture(&format!("expected_stage{i:02}_b8"))
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(x.shape(), expected.shape(), "stage {i} shape");
+        // Same backend + same HLO -> exact equality is expected; allow a
+        // hair of slack for run-to-run nondeterminism in reductions.
+        assert_close(x.data(), expected.data(), 1e-5, &format!("stage {i}"));
+    }
+}
+
+#[test]
+fn branch_head_matches_python_probs_and_entropy() {
+    let Some((manifest, engine)) = setup(Flavor::Ref) else {
+        return;
+    };
+    let input = fixture::load(&manifest.fixture("input_b8").unwrap()).unwrap();
+    let acts = engine
+        .run_stages(1, manifest.branch.after_stage, &input)
+        .unwrap();
+    let out = engine.run_branch(&acts).unwrap();
+    let probs = fixture::load(&manifest.fixture("expected_branch_probs_b8").unwrap()).unwrap();
+    let entropy =
+        fixture::load(&manifest.fixture("expected_branch_entropy_b8").unwrap()).unwrap();
+    assert_close(out.probs.data(), probs.data(), 1e-5, "branch probs");
+    assert_close(&out.entropy, entropy.data(), 1e-5, "branch entropy");
+    // Entropy within [0, ln C].
+    let max_nats = manifest.entropy_max_nats as f32;
+    for &e in &out.entropy {
+        assert!((0.0..=max_nats + 1e-5).contains(&e), "entropy {e}");
+    }
+}
+
+#[test]
+fn composed_stages_equal_monolithic_full_model() {
+    let Some((manifest, engine)) = setup(Flavor::Ref) else {
+        return;
+    };
+    let input = fixture::load(&manifest.fixture("input_b8").unwrap()).unwrap();
+    let composed = engine.run_stages(1, manifest.num_stages(), &input).unwrap();
+    let full = engine.run_full(&input).unwrap();
+    assert_eq!(composed.shape(), full.shape());
+    assert_close(composed.data(), full.data(), 1e-4, "composed vs monolith");
+}
+
+#[test]
+fn pallas_flavor_matches_ref_flavor() {
+    let Some((manifest, engine_ref)) = setup(Flavor::Ref) else {
+        return;
+    };
+    let Some((_, engine_pl)) = setup(Flavor::Pallas) else {
+        return;
+    };
+    let input = fixture::load(&manifest.fixture("input_b8").unwrap()).unwrap();
+    let a = engine_ref
+        .run_stages(1, manifest.num_stages(), &input)
+        .unwrap();
+    let b = engine_pl
+        .run_stages(1, manifest.num_stages(), &input)
+        .unwrap();
+    // Different contraction orders (blocked pallas vs fused XLA) -> small
+    // fp drift through 8 stages.
+    assert_close(a.data(), b.data(), 2e-2, "pl vs ref logits");
+    // Predicted classes must agree.
+    assert_eq!(
+        InferenceEngine::argmax_classes(&a),
+        InferenceEngine::argmax_classes(&b)
+    );
+}
+
+#[test]
+fn every_exported_batch_size_executes() {
+    let Some((manifest, engine)) = setup(Flavor::Ref) else {
+        return;
+    };
+    for &b in &manifest.batch_sizes {
+        let mut shape = vec![b];
+        shape.extend(&manifest.input_shape);
+        let x = HostTensor::zeros(shape);
+        let out = engine.run_stages(1, 1, &x).unwrap();
+        assert_eq!(out.batch(), b);
+    }
+    // Unexported batch size must be rejected, not miscomputed.
+    let mut shape = vec![3];
+    shape.extend(&manifest.input_shape);
+    assert!(engine.run_stages(1, 1, &HostTensor::zeros(shape)).is_err());
+}
+
+#[test]
+fn trained_model_classifies_fixture_labels() {
+    let Some((manifest, engine)) = setup(Flavor::Ref) else {
+        return;
+    };
+    let input = fixture::load(&manifest.fixture("input_b8").unwrap()).unwrap();
+    let logits = engine.run_stages(1, manifest.num_stages(), &input).unwrap();
+    let classes = InferenceEngine::argmax_classes(&logits);
+    let labels_path = Path::new("artifacts/fixtures/labels_b8.json");
+    let labels: Vec<usize> = branchyserve::config::json::Json::parse(
+        &std::fs::read_to_string(labels_path).unwrap(),
+    )
+    .unwrap()
+    .as_usize_vec()
+    .unwrap();
+    let correct = classes
+        .iter()
+        .zip(&labels)
+        .filter(|(a, b)| a == b)
+        .count();
+    assert!(
+        correct >= 7,
+        "trained model got {correct}/8 on its own fixtures ({classes:?} vs {labels:?})"
+    );
+}
+
+#[test]
+fn invalid_stage_ranges_rejected() {
+    let Some((manifest, engine)) = setup(Flavor::Ref) else {
+        return;
+    };
+    let mut shape = vec![1];
+    shape.extend(&manifest.input_shape);
+    let x = HostTensor::zeros(shape);
+    assert!(engine.run_stages(0, 1, &x).is_err());
+    assert!(engine.run_stages(2, 1, &x).is_err());
+    assert!(engine
+        .run_stages(1, manifest.num_stages() + 1, &x)
+        .is_err());
+}
+
+#[test]
+fn missing_artifacts_dir_gives_actionable_error() {
+    let err = Manifest::load(Path::new("/nonexistent/artifacts")).unwrap_err();
+    assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
+}
+
+#[test]
+fn corrupt_hlo_artifact_fails_cleanly() {
+    // A store pointed at a dir with a garbage .hlo.txt must error on
+    // compile, not crash, and must keep serving other artifacts.
+    let Some((manifest, _)) = setup(Flavor::Ref) else {
+        return;
+    };
+    let dir = std::env::temp_dir().join("branchyserve_corrupt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "HloModule utterly { garbage").unwrap();
+    // Copy one good artifact alongside.
+    let good = manifest.stages[0].artifact(Flavor::Ref, 1).unwrap();
+    std::fs::copy(Path::new("artifacts").join(good), dir.join(good)).unwrap();
+
+    let store = branchyserve::runtime::ArtifactStore::open(&dir).unwrap();
+    assert!(store.get("bad.hlo.txt").is_err());
+    assert!(store.get("missing.hlo.txt").is_err());
+    assert!(store.get(good).is_ok());
+    assert_eq!(store.cached_count(), 1);
+}
+
+#[test]
+fn profiler_measures_on_real_artifacts() {
+    let Some((_, engine)) = setup(Flavor::Ref) else {
+        return;
+    };
+    let opts = branchyserve::profiler::ProfileOptions {
+        warmup: 1,
+        iters: 3,
+        trim: 0.0,
+        batch: 1,
+    };
+    let report = branchyserve::profiler::measure(&engine, opts).unwrap();
+    assert_eq!(report.stages.len(), engine.manifest().num_stages());
+    for s in &report.stages {
+        assert!(s.t_cloud_s > 0.0 && s.min_s <= s.t_cloud_s);
+    }
+    assert!(report.branch.t_cloud_s > 0.0);
+    // Save/load round-trip through the JSON substrate.
+    let path = std::env::temp_dir().join("branchyserve_profile_test.json");
+    report.save(&path).unwrap();
+    let loaded = branchyserve::profiler::ProfileReport::load(&path).unwrap();
+    assert_eq!(loaded.stages.len(), report.stages.len());
+    assert!((loaded.stages[0].t_cloud_s - report.stages[0].t_cloud_s).abs() < 1e-12);
+    std::fs::remove_file(&path).ok();
+}

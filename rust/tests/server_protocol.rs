@@ -1,0 +1,133 @@
+//! TCP front-end integration: ping/infer/metrics over a live socket,
+//! concurrent clients, malformed input handling. Requires `make artifacts`.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use branchyserve::config::settings::{Flavor, Strategy};
+use branchyserve::coordinator::{Coordinator, CoordinatorConfig};
+use branchyserve::model::Manifest;
+use branchyserve::network::{BandwidthTrace, Channel};
+use branchyserve::partition::PartitionPlan;
+use branchyserve::runtime::{HostTensor, InferenceEngine};
+use branchyserve::server::tcp::Client;
+use branchyserve::server::{Request, Response, Server};
+use branchyserve::workload::ImageSource;
+
+fn start_server() -> Option<(branchyserve::server::ServerHandle, std::net::SocketAddr)> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let manifest = Manifest::load(dir).unwrap();
+    let edge = InferenceEngine::open(dir, manifest.clone(), Flavor::Ref, "srv-edge").unwrap();
+    let cloud = InferenceEngine::open(dir, manifest.clone(), Flavor::Ref, "srv-cloud").unwrap();
+    let plan = PartitionPlan::from_split(2, 0.0, Strategy::ShortestPath, &manifest.to_desc(0.5));
+    let coordinator = Arc::new(Coordinator::start(
+        edge,
+        cloud,
+        Arc::new(Channel::new(BandwidthTrace::constant(1000.0), 0.0, 0.0, 0).simulated_time()),
+        plan,
+        CoordinatorConfig {
+            entropy_threshold: 0.4,
+            batch_timeout: Duration::from_millis(1),
+            ..Default::default()
+        },
+    ));
+    let handle = Server::new(coordinator).start(0).unwrap();
+    let addr = handle.addr();
+    Some((handle, addr))
+}
+
+#[test]
+fn ping_infer_metrics_roundtrip() {
+    let Some((handle, addr)) = start_server() else {
+        return;
+    };
+    let mut client = Client::connect(addr).unwrap();
+    client.ping().unwrap();
+
+    let mut source = ImageSource::new(77);
+    for _ in 0..4 {
+        let (img, _) = source.sample();
+        match client.infer(img).unwrap() {
+            Response::Result {
+                class, latency_s, ..
+            } => {
+                assert!(class < 2);
+                assert!(latency_s > 0.0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    match client.call(&Request::Metrics).unwrap() {
+        Response::Metrics(json) => {
+            let v = branchyserve::config::json::Json::parse(&json).unwrap();
+            assert_eq!(v.get("completed").unwrap().as_u64(), Some(4));
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    handle.stop();
+}
+
+#[test]
+fn concurrent_clients() {
+    let Some((handle, addr)) = start_server() else {
+        return;
+    };
+    let mut joins = Vec::new();
+    for c in 0..6 {
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            let mut source = ImageSource::new(500 + c);
+            let mut ok = 0;
+            for _ in 0..5 {
+                let (img, _) = source.sample();
+                if matches!(client.infer(img).unwrap(), Response::Result { .. }) {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    assert_eq!(total, 30);
+    handle.stop();
+}
+
+#[test]
+fn wrong_shape_infer_returns_error_frame() {
+    let Some((handle, addr)) = start_server() else {
+        return;
+    };
+    let mut client = Client::connect(addr).unwrap();
+    // 2x2 image: HostTensor is valid, but the engine rejects the shape.
+    let bogus = HostTensor::new(vec![2, 2], vec![0.0; 4]).unwrap();
+    match client.infer(bogus).unwrap() {
+        Response::Error(msg) => assert!(!msg.is_empty()),
+        other => panic!("expected error, got {other:?}"),
+    }
+    // Connection still usable afterwards.
+    client.ping().unwrap();
+    handle.stop();
+}
+
+#[test]
+fn garbage_bytes_close_connection_not_server() {
+    let Some((handle, addr)) = start_server() else {
+        return;
+    };
+    {
+        let mut raw = std::net::TcpStream::connect(addr).unwrap();
+        raw.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        // Server drops this connection; no panic.
+    }
+    // Server still serves fresh clients.
+    let mut client = Client::connect(addr).unwrap();
+    client.ping().unwrap();
+    handle.stop();
+}

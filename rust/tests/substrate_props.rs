@@ -1,0 +1,198 @@
+//! Property tests over the hand-rolled substrates (DESIGN.md §3): the
+//! JSON codec, the wire protocol and the batcher must survive randomized
+//! round-trips and concurrent stress — they replace battle-tested crates,
+//! so they get fuzz-style coverage here.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use branchyserve::config::json::Json;
+use branchyserve::coordinator::batcher::Batcher;
+use branchyserve::runtime::HostTensor;
+use branchyserve::server::protocol::{read_frame, write_frame, Request, Response};
+use branchyserve::testing::{property, Gen};
+
+// ---------------------------------------------------------------- JSON
+
+fn random_json(g: &mut Gen, depth: usize) -> Json {
+    let kind = if depth == 0 {
+        g.usize_in(0, 3)
+    } else {
+        g.usize_in(0, 5)
+    };
+    match kind {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool(0.5)),
+        2 => {
+            // Finite, round-trippable numbers.
+            let v = g.f64_in(-1e12, 1e12);
+            Json::Num(if g.bool(0.5) { v.round() } else { v })
+        }
+        3 => Json::Str(random_string(g)),
+        4 => Json::Arr((0..g.usize_in(0, 5)).map(|_| random_json(g, depth - 1)).collect()),
+        _ => {
+            let mut m = BTreeMap::new();
+            for _ in 0..g.usize_in(0, 5) {
+                m.insert(random_string(g), random_json(g, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+fn random_string(g: &mut Gen) -> String {
+    let len = g.usize_in(0, 12);
+    (0..len)
+        .map(|_| {
+            match g.usize_in(0, 6) {
+                0 => '"',
+                1 => '\\',
+                2 => '\n',
+                3 => 'é',
+                4 => '😀',
+                _ => (b'a' + g.usize_in(0, 25) as u8) as char,
+            }
+        })
+        .collect()
+}
+
+fn json_approx_eq(a: &Json, b: &Json) -> bool {
+    match (a, b) {
+        (Json::Num(x), Json::Num(y)) => {
+            (x - y).abs() <= 1e-9 * x.abs().max(y.abs()).max(1.0)
+        }
+        (Json::Arr(x), Json::Arr(y)) => {
+            x.len() == y.len() && x.iter().zip(y).all(|(p, q)| json_approx_eq(p, q))
+        }
+        (Json::Obj(x), Json::Obj(y)) => {
+            x.len() == y.len()
+                && x.iter()
+                    .zip(y)
+                    .all(|((k1, v1), (k2, v2))| k1 == k2 && json_approx_eq(v1, v2))
+        }
+        _ => a == b,
+    }
+}
+
+#[test]
+fn json_roundtrips_random_documents() {
+    property("json compact+pretty roundtrip", 300, |g| {
+        let doc = random_json(g, 3);
+        let compact = Json::parse(&doc.to_string()).unwrap();
+        assert!(json_approx_eq(&doc, &compact), "compact: {doc} vs {compact}");
+        let pretty = Json::parse(&doc.to_string_pretty()).unwrap();
+        assert!(json_approx_eq(&doc, &pretty), "pretty: {doc} vs {pretty}");
+    });
+}
+
+#[test]
+fn json_parser_never_panics_on_garbage() {
+    property("json parser totality", 500, |g| {
+        let len = g.usize_in(0, 40);
+        let garbage: String = (0..len)
+            .map(|_| {
+                let set = b"{}[]\",:0123456789.eE+-truefalsn \t\n\\u";
+                set[g.usize_in(0, set.len() - 1)] as char
+            })
+            .collect();
+        // Must return Ok or Err, never panic.
+        let _ = Json::parse(&garbage);
+    });
+}
+
+// ------------------------------------------------------------ protocol
+
+#[test]
+fn protocol_roundtrips_random_tensors() {
+    property("INFER roundtrip", 200, |g| {
+        let ndims = g.usize_in(1, 4);
+        let dims: Vec<usize> = (0..ndims).map(|_| g.usize_in(1, 6)).collect();
+        let n: usize = dims.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| g.f64_in(-1e6, 1e6) as f32).collect();
+        let t = HostTensor::new(dims, data).unwrap();
+        let req = Request::Infer(t.clone());
+        match Request::decode(&req.encode()).unwrap() {
+            Request::Infer(back) => assert_eq!(back, t),
+            other => panic!("{other:?}"),
+        }
+    });
+}
+
+#[test]
+fn protocol_decoder_never_panics_on_random_bytes() {
+    property("protocol decode totality", 500, |g| {
+        let len = g.usize_in(0, 64);
+        let bytes: Vec<u8> = (0..len).map(|_| g.usize_in(0, 255) as u8).collect();
+        let _ = Request::decode(&bytes);
+        let _ = Response::decode(&bytes);
+    });
+}
+
+#[test]
+fn frame_layer_roundtrips_and_rejects_truncation() {
+    property("frame roundtrip", 200, |g| {
+        let len = g.usize_in(0, 256);
+        let body: Vec<u8> = (0..len).map(|_| g.usize_in(0, 255) as u8).collect();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &body).unwrap();
+        assert_eq!(
+            read_frame(&mut std::io::Cursor::new(buf.clone())).unwrap(),
+            body
+        );
+        // Any strict prefix must fail cleanly.
+        if !buf.is_empty() {
+            let cut = g.usize_in(0, buf.len() - 1);
+            assert!(read_frame(&mut std::io::Cursor::new(&buf[..cut])).is_err());
+        }
+    });
+}
+
+// ------------------------------------------------------------- batcher
+
+#[test]
+fn batcher_conserves_items_under_concurrency() {
+    // N producers, M consumers: every submitted item is delivered exactly
+    // once, no batch exceeds max_batch.
+    let batcher: Arc<Batcher<u64>> = Arc::new(Batcher::new(10_000, 7, Duration::from_millis(1)));
+    let producers = 4;
+    let per_producer = 500u64;
+
+    let mut handles = Vec::new();
+    for p in 0..producers {
+        let b = batcher.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per_producer {
+                b.submit(p * 1_000_000 + i).unwrap();
+            }
+        }));
+    }
+    let mut consumers = Vec::new();
+    for _ in 0..3 {
+        let b = batcher.clone();
+        consumers.push(std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(batch) = b.next_batch() {
+                assert!(batch.len() <= 7 && !batch.is_empty());
+                got.extend(batch);
+            }
+            got
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Let consumers drain, then close.
+    while !batcher.is_empty() {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    batcher.close();
+    let mut all: Vec<u64> = Vec::new();
+    for c in consumers {
+        all.extend(c.join().unwrap());
+    }
+    assert_eq!(all.len() as u64, producers * per_producer);
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len() as u64, producers * per_producer, "duplicates detected");
+}
