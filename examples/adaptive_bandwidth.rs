@@ -1,9 +1,12 @@
 //! Adaptive re-planning under a time-varying uplink — the scenario
 //! Neurosurgeon [3] motivates and the paper's model enables: as the
 //! bandwidth trace moves between 3G-like and Wi-Fi-like regimes, the
-//! coordinator re-solves the shortest-path problem and swaps the active
-//! partition plan live (no restart, in-flight batches finish on the old
-//! plan).
+//! [`branchyserve::planner::AdaptivePlanner`] re-solves the partitioning
+//! problem against its precomputed prefix-sum state (cached by
+//! log-bucketed bandwidth, with hysteresis against flapping) and swaps
+//! the coordinator's active plan live — no restart, in-flight batches
+//! finish on the old plan, and every applied switch is counted in the
+//! coordinator metrics.
 //!
 //!     cargo run --release --example adaptive_bandwidth
 
@@ -16,7 +19,7 @@ use branchyserve::coordinator::{Coordinator, CoordinatorConfig};
 use branchyserve::model::Manifest;
 use branchyserve::network::bandwidth::LinkModel;
 use branchyserve::network::{BandwidthTrace, Channel};
-use branchyserve::partition::solver;
+use branchyserve::planner::{AdaptiveConfig, AdaptivePlanner, Planner};
 use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
 use branchyserve::runtime::InferenceEngine;
 use branchyserve::util::timefmt::format_secs;
@@ -47,12 +50,16 @@ fn main() -> anyhow::Result<()> {
     ])?;
     let channel = Arc::new(Channel::new(trace.clone(), 0.0, 0.0, 3));
 
+    // One planner owns all link-independent state; the initial solve and
+    // every replan below are O(N) sweeps against it.
+    let planner = Planner::new(&desc, &delay, 1e-9, false);
     let initial_link = LinkModel::new(trace.mbps_at(0.0), 0.0);
-    let initial = solver::solve(&desc, &delay, initial_link, 1e-9, false);
+    let initial = planner.plan_for(initial_link);
     println!(
-        "initial plan @ {:.2} Mbps: split after '{}'",
+        "initial plan @ {:.2} Mbps: split after '{}' (E[T] {})",
         trace.mbps_at(0.0),
-        initial.split_label(&desc)
+        initial.split_label(&desc),
+        format_secs(initial.expected_time_s)
     );
 
     let coordinator = Arc::new(Coordinator::start(
@@ -66,34 +73,17 @@ fn main() -> anyhow::Result<()> {
         },
     ));
 
-    // Re-planner thread: every 500 ms, observe the channel's current
-    // bandwidth and re-solve; swap the plan if the split moved.
-    let replanner = {
-        let coordinator = coordinator.clone();
-        let desc = desc.clone();
-        let delay = delay.clone();
-        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let handle = std::thread::spawn(move || {
-            let mut last_split = usize::MAX;
-            while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
-                let link = coordinator.channel().current_link();
-                let plan = solver::solve(&desc, &delay, link, 1e-9, false);
-                if plan.split_after != last_split {
-                    println!(
-                        "[replan] {:.2} Mbps -> split after '{}' (E[T] {})",
-                        link.uplink_mbps,
-                        plan.split_label(&desc),
-                        format_secs(plan.expected_time_s)
-                    );
-                    last_split = plan.split_after;
-                    coordinator.set_plan(plan);
-                }
-                std::thread::sleep(Duration::from_millis(500));
-            }
-        });
-        (stop, handle)
-    };
+    // Replan loop: every 500 ms, observe the channel's current bandwidth,
+    // solve through the plan cache, and swap the plan when the hysteresis
+    // test accepts the new split.
+    let replanner = AdaptivePlanner::spawn(
+        planner,
+        coordinator.clone(),
+        AdaptiveConfig {
+            interval: Duration::from_millis(500),
+            ..Default::default()
+        },
+    );
 
     // Load through all three phases.
     let t0 = Instant::now();
@@ -114,8 +104,11 @@ fn main() -> anyhow::Result<()> {
         format_secs(report.p(95.0)),
     );
 
-    replanner.0.store(true, std::sync::atomic::Ordering::Relaxed);
-    replanner.1.join().ok();
+    let stats = replanner.stop();
+    println!(
+        "replanner: {} observations, {} plan switches, plan cache {} hits / {} misses",
+        stats.replans, stats.switches, stats.cache_hits, stats.cache_misses
+    );
     println!("final metrics: {}", coordinator.metrics().summary());
     Ok(())
 }

@@ -18,7 +18,7 @@ use branchyserve::coordinator::{Coordinator, CoordinatorConfig};
 use branchyserve::model::Manifest;
 use branchyserve::network::bandwidth::{LinkModel, Profile};
 use branchyserve::network::Channel;
-use branchyserve::partition::solver;
+use branchyserve::planner::Planner;
 use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
 use branchyserve::runtime::{HostTensor, InferenceEngine};
 use branchyserve::server::tcp::Client;
@@ -74,7 +74,7 @@ fn main() -> anyhow::Result<()> {
     println!("calibrated exit probability at threshold {threshold}: {p_est:.3}");
 
     let desc = manifest.to_desc(p_est);
-    let plan = solver::solve(&desc, &delay, link, 1e-9, false);
+    let plan = Planner::new(&desc, &delay, 1e-9, false).plan_for(link);
     println!(
         "plan [{} gamma={gamma}]: split after '{}', predicted E[T] = {}",
         net.name(),

@@ -1,6 +1,9 @@
 //! Fig. 4-style sweep through the public API: how the optimal expected
 //! inference time and the chosen split react to the side-branch exit
-//! probability, per network technology, at a chosen gamma.
+//! probability, per network technology, at a chosen gamma. The sweep
+//! runs through `experiments::fig4`, which plans via the
+//! [`branchyserve::planner::Planner`] — one precompute per grid point,
+//! one O(N) sweep per network.
 //!
 //!     cargo run --release --example sweep_probability
 

@@ -17,6 +17,7 @@ use branchyserve::harness::{bench, print_table, BenchResult, Table};
 use branchyserve::network::bandwidth::{LinkModel, Profile};
 use branchyserve::network::Channel;
 use branchyserve::partition::{self, PartitionPlan};
+use branchyserve::planner::Planner;
 use branchyserve::server::protocol::{Request, Response};
 use branchyserve::util::timefmt::{format_rate, format_secs};
 use branchyserve::workload::{ImageSource, LoadGen};
@@ -64,15 +65,9 @@ fn main() -> anyhow::Result<()> {
     }
     print_table("closed-loop single-request latency (gamma=5, 3G)", &rows);
 
-    // --- open-loop load sweep on the optimal plan
-    let plan = partition::plan_with_strategy(
-        Strategy::ShortestPath,
-        &desc,
-        &profile,
-        link,
-        1e-9,
-        false,
-    );
+    // --- open-loop load sweep on the optimal plan (planned through the
+    // planner subsystem, the serving-path default)
+    let plan = Planner::new(&desc, &profile, 1e-9, false).plan_for(link);
     let mut table = Table::new(&[
         "offered rps", "completed", "rejected", "throughput", "exit %", "mean", "p95", "p99",
     ]);

@@ -1,0 +1,142 @@
+//! Planner replanning throughput: cold full solve (graph construction +
+//! Dijkstra per call) vs the planner's precomputed O(N) sweep vs the
+//! log-bucketed plan cache, driven by a random-walk bandwidth trace —
+//! i.e. "replans per second" as the adaptive loop would experience it.
+//! This is the perf baseline for the planner subsystem; the acceptance
+//! bar is cached/incremental replanning ≥ 10× faster than the cold
+//! full-solve path.
+//!
+//!     cargo bench --bench planner
+
+use std::time::Duration;
+
+use branchyserve::harness::{bench, print_table, BenchResult};
+use branchyserve::model::synthetic;
+use branchyserve::network::bandwidth::LinkModel;
+use branchyserve::network::BandwidthTrace;
+use branchyserve::partition::compact;
+use branchyserve::planner::Planner;
+use branchyserve::util::timefmt::format_rate;
+
+fn main() {
+    branchyserve::util::logger::init();
+
+    // The bandwidth samples an adaptive loop would see: a multiplicative
+    // random walk around 4G, clamped to [0.2, 50] Mbps.
+    let trace = BandwidthTrace::random_walk(5.85, 0.1, 4096, 0.2, 50.0, 9);
+    let links: Vec<LinkModel> = trace
+        .points()
+        .iter()
+        .map(|&(_, mbps)| LinkModel::new(mbps, 0.0))
+        .collect();
+
+    let mut rows: Vec<BenchResult> = Vec::new();
+    let mut ratios: Vec<(usize, f64, f64)> = Vec::new();
+
+    for &n in &[64usize, 256, 1024, 4096] {
+        let (desc, profile) = synthetic::deep_chain(n, 8, 0.3, 42);
+
+        // Cold: rebuild the solver inputs (compact graph) and run
+        // Dijkstra for every bandwidth sample — the pre-planner shape
+        // of `solver::solve(.., paper_mode = false)`, i.e. serving mode
+        // (include_branch_cost = true) to match the planner rows below.
+        let mut ic = {
+            let mut i = 0usize;
+            move || {
+                i = (i + 1) % 4096;
+                i
+            }
+        };
+        let cold = bench(
+            &format!("cold graph+dijkstra  n={n}"),
+            Duration::from_millis(200),
+            || {
+                let link = links[ic()];
+                let (split, _) = compact::solve_split(&desc, &profile, link, 1e-9, true);
+                std::hint::black_box(split);
+            },
+        );
+
+        // Incremental: one precompute, O(N) sweep per sample.
+        let planner = Planner::new(&desc, &profile, 1e-9, false);
+        let mut ii = {
+            let mut i = 0usize;
+            move || {
+                i = (i + 1) % 4096;
+                i
+            }
+        };
+        let incremental = bench(
+            &format!("planner plan_for     n={n}"),
+            Duration::from_millis(200),
+            || {
+                let link = links[ii()];
+                let plan = planner.plan_for(link);
+                std::hint::black_box(plan.split_after);
+            },
+        );
+
+        // Cached: bucket lookups after the first pass over the trace.
+        for &link in &links {
+            let _ = planner.plan_cached(link); // warm the buckets
+        }
+        let mut ik = {
+            let mut i = 0usize;
+            move || {
+                i = (i + 1) % 4096;
+                i
+            }
+        };
+        let cached = bench(
+            &format!("planner plan_cached  n={n}"),
+            Duration::from_millis(200),
+            || {
+                let link = links[ik()];
+                let plan = planner.plan_cached(link);
+                std::hint::black_box(plan.split_after);
+            },
+        );
+
+        ratios.push((
+            n,
+            cold.mean_s / incremental.mean_s,
+            cold.mean_s / cached.mean_s,
+        ));
+        rows.push(cold);
+        rows.push(incremental);
+        rows.push(cached);
+        let (hits, misses) = planner.cache_stats();
+        println!(
+            "n={n}: plan cache {hits} hits / {misses} misses over the trace \
+             ({} distinct buckets)",
+            misses
+        );
+    }
+    print_table("replanning across a random-walk bandwidth trace", &rows);
+
+    println!("\n=== replans/sec (trace-driven) ===");
+    for (row, &(n, r_inc, r_cached)) in rows.chunks(3).zip(&ratios) {
+        println!(
+            "n={n:<5} cold {:>12}  incremental {:>12} ({r_inc:6.1}x)  cached {:>12} ({r_cached:6.1}x)",
+            format_rate(1.0 / row[0].mean_s),
+            format_rate(1.0 / row[1].mean_s),
+            format_rate(1.0 / row[2].mean_s),
+        );
+    }
+
+    // Acceptance bar: at production-ish depth the precomputed sweep and
+    // the cache must both beat the cold path by >= 10x.
+    let &(n, r_inc, r_cached) = ratios
+        .iter()
+        .find(|&&(n, _, _)| n == 1024)
+        .expect("n=1024 measured");
+    assert!(
+        r_inc >= 10.0,
+        "incremental replanning only {r_inc:.1}x faster than cold at n={n}"
+    );
+    assert!(
+        r_cached >= 10.0,
+        "cached replanning only {r_cached:.1}x faster than cold at n={n}"
+    );
+    println!("\nplanner >= 10x cold-solve at n=1024: OK ({r_inc:.1}x / {r_cached:.1}x)");
+}

@@ -1,7 +1,9 @@
-//! Solver performance: G'_BDNN construction + Dijkstra vs the O(N^2)
-//! brute-force baseline, across chain depth and branch density. The
-//! paper's complexity argument (§V: polynomial shortest path vs
-//! exhaustive search) made concrete.
+//! Solver performance ablation across chain depth and branch density:
+//! the planner's precomputed O(N) sweep vs the compact graph + Dijkstra
+//! vs the paper-faithful `G'_BDNN` construction vs the O(N²) brute
+//! force. The paper's complexity argument (§V: polynomial shortest path
+//! vs exhaustive search) made concrete, plus the planner refactor's
+//! claim that replanning needs no graph at all.
 //!
 //!     cargo bench --bench solver
 
@@ -10,7 +12,8 @@ use std::time::Duration;
 use branchyserve::harness::{bench, print_table, BenchResult};
 use branchyserve::model::synthetic;
 use branchyserve::network::bandwidth::LinkModel;
-use branchyserve::partition::{brute, solver};
+use branchyserve::partition::{brute, compact, solver};
+use branchyserve::planner::Planner;
 use branchyserve::timing::Estimator;
 
 fn main() {
@@ -28,11 +31,28 @@ fn main() {
             };
 
             rows.push(bench(
-                &format!("compact graph n={n} ({label_suffix})"),
+                &format!("planner cold  n={n} ({label_suffix})"),
                 Duration::from_millis(150),
                 || {
                     let plan = solver::solve(&desc, &profile, link, 1e-9, true);
                     std::hint::black_box(plan.split_after);
+                },
+            ));
+            let planner = Planner::new(&desc, &profile, 1e-9, true);
+            rows.push(bench(
+                &format!("planner warm  n={n} ({label_suffix})"),
+                Duration::from_millis(150),
+                || {
+                    let plan = planner.plan_for(link);
+                    std::hint::black_box(plan.split_after);
+                },
+            ));
+            rows.push(bench(
+                &format!("compact graph n={n} ({label_suffix})"),
+                Duration::from_millis(150),
+                || {
+                    let (split, _) = compact::solve_split(&desc, &profile, link, 1e-9, false);
+                    std::hint::black_box(split);
                 },
             ));
             rows.push(bench(

@@ -167,8 +167,14 @@ impl Coordinator {
 
     /// Swap the active partition plan (adaptive re-planning). In-flight
     /// batches finish under the old plan; new batches use the new one.
+    /// A switch that actually moves the split is counted in
+    /// `metrics.plan_switches`.
     pub fn set_plan(&self, plan: PartitionPlan) {
-        *self.plan.write().unwrap() = plan;
+        let mut current = self.plan.write().unwrap();
+        if current.split_after != plan.split_after {
+            self.metrics.plan_switches.fetch_add(1, Ordering::Relaxed);
+        }
+        *current = plan;
     }
 
     pub fn channel(&self) -> &Channel {

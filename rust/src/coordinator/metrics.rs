@@ -18,6 +18,9 @@ pub struct Metrics {
     pub transferred_bytes: AtomicU64,
     pub edge_batches: AtomicU64,
     pub cloud_batches: AtomicU64,
+    /// Live partition-plan switches applied by adaptive replanning
+    /// (incremented by `Coordinator::set_plan` when the split moves).
+    pub plan_switches: AtomicU64,
     latency: Mutex<LatencyHistogram>,
     latency_samples: Mutex<Vec<f64>>,
 }
@@ -51,6 +54,7 @@ impl Metrics {
             transferred_bytes: self.transferred_bytes.load(Ordering::Relaxed),
             edge_batches: self.edge_batches.load(Ordering::Relaxed),
             cloud_batches: self.cloud_batches.load(Ordering::Relaxed),
+            plan_switches: self.plan_switches.load(Ordering::Relaxed),
             throughput_rps: completed as f64 / elapsed,
             mean_latency_s: if samples.is_empty() {
                 f64::NAN
@@ -76,6 +80,7 @@ pub struct MetricsSnapshot {
     pub transferred_bytes: u64,
     pub edge_batches: u64,
     pub cloud_batches: u64,
+    pub plan_switches: u64,
     pub throughput_rps: f64,
     pub mean_latency_s: f64,
     pub p50_s: f64,
@@ -96,7 +101,7 @@ impl MetricsSnapshot {
     pub fn summary(&self) -> String {
         format!(
             "completed {} ({} early-exit, {:.1}%), rejected {}, throughput {}, \
-             latency mean {} p50 {} p99 {}, transferred {} bytes",
+             latency mean {} p50 {} p99 {}, transferred {} bytes, plan switches {}",
             self.completed,
             self.edge_exits,
             self.exit_rate() * 100.0,
@@ -106,6 +111,7 @@ impl MetricsSnapshot {
             format_secs(self.p50_s),
             format_secs(self.p99_s),
             self.transferred_bytes,
+            self.plan_switches,
         )
     }
 }

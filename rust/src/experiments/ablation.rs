@@ -13,7 +13,8 @@
 use crate::config::settings::Strategy;
 use crate::model::{BranchDesc, BranchyNetDesc};
 use crate::network::bandwidth::{LinkModel, Profile};
-use crate::partition::{self, solver};
+use crate::partition;
+use crate::planner::Planner;
 use crate::timing::DelayProfile;
 
 /// One strategy-gap cell.
@@ -95,12 +96,12 @@ pub fn epsilon_sensitivity(
     link: LinkModel,
     epsilons: &[f64],
 ) -> Vec<(f64, usize)> {
+    // Epsilon only enters the tie-break, so one precompute serves the
+    // whole sweep.
+    let planner = Planner::new(desc, profile, 1e-9, true);
     epsilons
         .iter()
-        .map(|&eps| {
-            let plan = solver::solve(desc, profile, link, eps, true);
-            (eps, plan.split_after)
-        })
+        .map(|&eps| (eps, planner.plan_with_epsilon(link, eps).split_after))
         .collect()
 }
 
@@ -121,7 +122,7 @@ pub fn branch_placement(
                 after_stage: pos,
                 exit_prob,
             }];
-            let plan = solver::solve(&desc, profile, link, 1e-9, true);
+            let plan = Planner::new(&desc, profile, 1e-9, true).plan_for(link);
             (pos, plan.expected_time_s, plan.split_after)
         })
         .collect()

@@ -8,7 +8,7 @@
 
 use crate::model::BranchyNetDesc;
 use crate::network::bandwidth::{LinkModel, Profile};
-use crate::partition::solver;
+use crate::planner::Planner;
 use crate::timing::DelayProfile;
 
 pub const GAMMAS: [f64; 3] = [10.0, 100.0, 1000.0];
@@ -44,23 +44,28 @@ pub fn run(
     let mut curves = Vec::new();
     for &gamma in &GAMMAS {
         let prof = profile.with_gamma(gamma);
-        for net in Profile::ALL {
-            let link = LinkModel::from_profile(net);
-            let mut curve = Curve {
+        // One planner per (gamma, p): its link-independent prefix state
+        // is shared by all three networks at that grid point.
+        let mut per_net: Vec<Vec<(f64, f64, usize)>> =
+            vec![Vec::with_capacity(points); Profile::ALL.len()];
+        for i in 0..points {
+            let p = i as f64 / (points - 1) as f64;
+            let mut desc = desc_template.clone();
+            for b in &mut desc.branches {
+                b.exit_prob = p;
+            }
+            let planner = Planner::new(&desc, &prof, epsilon, true);
+            for (ni, &net) in Profile::ALL.iter().enumerate() {
+                let plan = planner.plan_for(LinkModel::from_profile(net));
+                per_net[ni].push((p, plan.expected_time_s, plan.split_after));
+            }
+        }
+        for (ni, &net) in Profile::ALL.iter().enumerate() {
+            curves.push(Curve {
                 gamma,
                 network: net,
-                points: Vec::with_capacity(points),
-            };
-            for i in 0..points {
-                let p = i as f64 / (points - 1) as f64;
-                let mut desc = desc_template.clone();
-                for b in &mut desc.branches {
-                    b.exit_prob = p;
-                }
-                let plan = solver::solve(&desc, &prof, link, epsilon, true);
-                curve.points.push((p, plan.expected_time_s, plan.split_after));
-            }
-            curves.push(curve);
+                points: std::mem::take(&mut per_net[ni]),
+            });
         }
     }
     curves

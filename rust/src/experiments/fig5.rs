@@ -8,7 +8,7 @@
 
 use crate::model::BranchyNetDesc;
 use crate::network::bandwidth::{LinkModel, Profile};
-use crate::partition::solver;
+use crate::planner::Planner;
 use crate::timing::DelayProfile;
 
 pub const PROBABILITIES: [f64; 4] = [0.2, 0.5, 0.8, 1.0];
@@ -35,26 +35,33 @@ pub fn run(
     gammas: &[f64],
     epsilon: f64,
 ) -> Vec<Curve> {
-    let mut curves = Vec::new();
-    for net in [Profile::ThreeG, Profile::FourG] {
-        let link = LinkModel::from_profile(net);
-        for &p in &PROBABILITIES {
-            let mut desc = desc_template.clone();
-            for b in &mut desc.branches {
-                b.exit_prob = p;
-            }
-            let mut curve = Curve {
+    const NETS: [Profile; 2] = [Profile::ThreeG, Profile::FourG];
+    let mut curves: Vec<Curve> = NETS
+        .iter()
+        .flat_map(|&net| {
+            PROBABILITIES.iter().map(move |&p| Curve {
                 network: net,
                 probability: p,
                 points: Vec::with_capacity(gammas.len()),
-            };
-            for &gamma in gammas {
-                let prof = profile.with_gamma(gamma);
-                let plan = solver::solve(&desc, &prof, link, epsilon, true);
+            })
+        })
+        .collect();
+    for (pi, &p) in PROBABILITIES.iter().enumerate() {
+        let mut desc = desc_template.clone();
+        for b in &mut desc.branches {
+            b.exit_prob = p;
+        }
+        for &gamma in gammas {
+            let prof = profile.with_gamma(gamma);
+            // One planner per (p, gamma), shared by both networks.
+            let planner = Planner::new(&desc, &prof, epsilon, true);
+            for (ni, &net) in NETS.iter().enumerate() {
+                let plan = planner.plan_for(LinkModel::from_profile(net));
                 let label = plan.split_label(&desc);
-                curve.points.push((gamma, plan.split_after, label));
+                curves[ni * PROBABILITIES.len() + pi]
+                    .points
+                    .push((gamma, plan.split_after, label));
             }
-            curves.push(curve);
         }
     }
     curves

@@ -17,6 +17,9 @@
 //! * [`network`] — bandwidth profiles (3G/4G/Wi-Fi), traces, simulated channels;
 //! * [`runtime`] — PJRT CPU execution of the AOT-compiled HLO artifacts;
 //! * [`profiler`] — per-layer `t_i^c` measurement;
+//! * [`planner`] — precomputed, cached, incremental replanning: the single
+//!   owner of "model + profile + epsilon + strategy → plan", with an
+//!   adaptive replan loop for time-varying uplinks;
 //! * [`coordinator`] — router, dynamic batcher, early-exit scheduler, metrics;
 //! * [`server`] / [`workload`] — TCP serving loop and load generation;
 //! * [`experiments`] — drivers regenerating the paper's Figures 4, 5, 6.
@@ -33,6 +36,7 @@ pub mod harness;
 pub mod model;
 pub mod network;
 pub mod partition;
+pub mod planner;
 pub mod profiler;
 pub mod runtime;
 pub mod server;

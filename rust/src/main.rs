@@ -22,6 +22,7 @@ use branchyserve::model::Manifest;
 use branchyserve::network::bandwidth::{LinkModel, Profile};
 use branchyserve::network::{BandwidthTrace, Channel};
 use branchyserve::partition;
+use branchyserve::planner::{AdaptiveConfig, AdaptivePlanner, Planner};
 use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
 use branchyserve::runtime::InferenceEngine;
 use branchyserve::server::Server;
@@ -161,10 +162,9 @@ fn load_or_measure_profile(
 fn link_from(inv: &Invocation, settings: &Settings) -> Result<LinkModel> {
     match inv.get("network") {
         Some(name) => Ok(LinkModel::from_profile(Profile::parse(name)?)),
-        None => Ok(LinkModel::new(
-            settings.network.uplink_mbps,
-            settings.network.rtt_s,
-        )),
+        // Config values should fail fast on nonsense, not silently
+        // clamp like measured samples do.
+        None => LinkModel::try_new(settings.network.uplink_mbps, settings.network.rtt_s),
     }
 }
 
@@ -277,8 +277,8 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
     let link = link_from(inv, settings)?;
     let p = get_f64(inv, "probability")?.unwrap_or(0.5);
     let desc = engine.manifest().to_desc(p);
-    let plan =
-        partition::solver::solve(&desc, &profile, link, settings.partition.epsilon, false);
+    let planner = Planner::new(&desc, &profile, settings.partition.epsilon, false);
+    let plan = planner.plan_for(link);
     println!(
         "plan: split after '{}' (E[T] = {})",
         plan.split_label(&desc),
@@ -304,6 +304,16 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             queue_capacity: settings.serve.queue_capacity,
         },
     ));
+    // A configured bandwidth trace means the uplink moves over time:
+    // keep replanning against it (cached, with hysteresis) and swap the
+    // coordinator's plan live.
+    let _adaptive = settings.network.trace.as_ref().map(|path| {
+        println!(
+            "bandwidth trace {} — adaptive replanning enabled",
+            path.display()
+        );
+        AdaptivePlanner::spawn(planner, coordinator.clone(), AdaptiveConfig::default())
+    });
     let port = get_usize(inv, "port")?.unwrap_or(7878) as u16;
     let handle = Server::new(coordinator.clone()).start(port)?;
     println!("serving on {} — Ctrl-C to stop", handle.addr());

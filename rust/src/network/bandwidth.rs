@@ -44,6 +44,25 @@ impl Profile {
     }
 }
 
+/// Floor applied by [`LinkModel::new`] to degenerate bandwidth samples:
+/// 1 kbit/s. A measured 0 Mbps (dead uplink in a trace) or a NaN from a
+/// broken estimator becomes "effectively offline but finite", so
+/// trace-driven replanning keeps running — the planner simply concludes
+/// everything should stay on the edge — instead of panicking and
+/// killing the replan thread.
+pub const MIN_UPLINK_MBPS: f64 = 1e-3;
+
+/// Ceiling applied by [`LinkModel::new`]: 1 Tbit/s. A +inf sample (e.g.
+/// a rate computed over a zero elapsed interval) means "arbitrarily
+/// fast", so it clamps *up* to an effectively-free link — not down to
+/// the dead-link floor.
+pub const MAX_UPLINK_MBPS: f64 = 1e6;
+
+/// RTT ceiling applied by [`LinkModel::new`]: 60 s. Symmetric with the
+/// bandwidth rule: a +inf RTT means "arbitrarily slow" and clamps up
+/// to an effectively-unusable latency; only NaN falls back to 0.
+pub const MAX_RTT_S: f64 = 60.0;
+
 /// Deterministic link delay model: serialization at `uplink_mbps` plus a
 /// fixed one-way base latency. This is what the *planner* uses; the
 /// serving-path [`super::channel::Channel`] adds jitter on top.
@@ -56,10 +75,37 @@ pub struct LinkModel {
 }
 
 impl LinkModel {
+    /// Clamping constructor: NaN or non-positive bandwidth clamps to
+    /// [`MIN_UPLINK_MBPS`] (dead link), +inf or anything above the
+    /// ceiling clamps to [`MAX_UPLINK_MBPS`] (free link); NaN or
+    /// negative RTT clamps to 0, +inf or anything above [`MAX_RTT_S`]
+    /// to that ceiling. Use [`LinkModel::try_new`] to reject bad
+    /// inputs instead.
     pub fn new(uplink_mbps: f64, rtt_s: f64) -> LinkModel {
-        assert!(uplink_mbps > 0.0, "bandwidth must be positive");
-        assert!(rtt_s >= 0.0);
+        let uplink_mbps = if uplink_mbps.is_nan() {
+            MIN_UPLINK_MBPS
+        } else {
+            uplink_mbps.clamp(MIN_UPLINK_MBPS, MAX_UPLINK_MBPS)
+        };
+        let rtt_s = if rtt_s.is_nan() {
+            0.0
+        } else {
+            rtt_s.clamp(0.0, MAX_RTT_S)
+        };
         LinkModel { uplink_mbps, rtt_s }
+    }
+
+    /// Strict constructor: errors on non-finite/non-positive bandwidth
+    /// or non-finite/negative RTT (for config validation paths that
+    /// should fail fast rather than silently clamp).
+    pub fn try_new(uplink_mbps: f64, rtt_s: f64) -> Result<LinkModel> {
+        if !(uplink_mbps.is_finite() && uplink_mbps > 0.0) {
+            bail!("bandwidth must be positive and finite, got {uplink_mbps}");
+        }
+        if !(rtt_s.is_finite() && rtt_s >= 0.0) {
+            bail!("rtt must be non-negative and finite, got {rtt_s}");
+        }
+        Ok(LinkModel { uplink_mbps, rtt_s })
     }
 
     pub fn from_profile(p: Profile) -> LinkModel {
@@ -118,8 +164,35 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn zero_bandwidth_panics() {
-        LinkModel::new(0.0, 0.0);
+    fn degenerate_bandwidth_clamps_to_floor() {
+        assert_eq!(LinkModel::new(0.0, 0.0).uplink_mbps, MIN_UPLINK_MBPS);
+        assert_eq!(LinkModel::new(-3.0, 0.0).uplink_mbps, MIN_UPLINK_MBPS);
+        assert_eq!(LinkModel::new(f64::NAN, 0.0).uplink_mbps, MIN_UPLINK_MBPS);
+        // +inf means "arbitrarily fast", so it clamps UP, not down.
+        assert_eq!(
+            LinkModel::new(f64::INFINITY, 0.0).uplink_mbps,
+            MAX_UPLINK_MBPS
+        );
+        assert_eq!(LinkModel::new(1e9, 0.0).uplink_mbps, MAX_UPLINK_MBPS);
+        assert_eq!(LinkModel::new(5.0, f64::NAN).rtt_s, 0.0);
+        assert_eq!(LinkModel::new(5.0, -0.1).rtt_s, 0.0);
+        // +inf RTT means "arbitrarily slow": clamps up, not to zero.
+        assert_eq!(LinkModel::new(5.0, f64::INFINITY).rtt_s, MAX_RTT_S);
+        // A dead-uplink sample still yields finite transfer times.
+        assert!(LinkModel::new(0.0, 0.0).transfer_time(12_288).is_finite());
+        // In-range values are untouched.
+        assert_eq!(LinkModel::new(5.85, 0.02).uplink_mbps, 5.85);
+    }
+
+    #[test]
+    fn try_new_rejects_bad_links() {
+        assert!(LinkModel::try_new(0.0, 0.0).is_err());
+        assert!(LinkModel::try_new(-1.0, 0.0).is_err());
+        assert!(LinkModel::try_new(f64::NAN, 0.0).is_err());
+        assert!(LinkModel::try_new(f64::INFINITY, 0.0).is_err());
+        assert!(LinkModel::try_new(5.85, -1.0).is_err());
+        assert!(LinkModel::try_new(5.85, f64::NAN).is_err());
+        let l = LinkModel::try_new(5.85, 0.01).unwrap();
+        assert_eq!((l.uplink_mbps, l.rtt_s), (5.85, 0.01));
     }
 }

@@ -11,6 +11,11 @@
 //!   plus static edge-only / cloud-only strategies;
 //! * [`plan`] — the `PartitionPlan` everything produces and the
 //!   coordinator consumes.
+//!
+//! The hot solve path lives in [`crate::planner`]: `solver::solve` (and
+//! the `ShortestPath` arm below) delegate to its precomputed O(N)
+//! sweep; the graph constructions here remain as the paper-faithful
+//! oracle (`solver::solve_faithful`) and the compact ablation.
 
 pub mod baselines;
 pub mod brute;
@@ -52,7 +57,7 @@ pub fn plan_with_strategy(
     }
     match strategy {
         Strategy::ShortestPath => {
-            solver::solve(desc, profile, link, epsilon, paper_mode)
+            crate::planner::Planner::new(desc, profile, epsilon, paper_mode).plan_for(link)
         }
         Strategy::BruteForce => brute::solve(&make_estimator(desc, profile, link, paper_mode)),
         Strategy::Neurosurgeon => baselines::neurosurgeon(desc, profile, link, paper_mode),

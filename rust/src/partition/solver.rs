@@ -1,26 +1,30 @@
-//! The paper's solver: build `G'_BDNN`, run Dijkstra, decode the path
-//! into a [`PartitionPlan`]. Polynomial time — O((m+1)·N) graph nodes and
-//! O(E log V) search — versus the brute-force oracle's O(N²) estimator
-//! sweep (and versus Li et al. [7]'s exponential branch×partition search
-//! that §II argues against).
+//! The paper's solver surface. The one-shot entry point [`solve`] now
+//! delegates to [`crate::planner::Planner`] — a precomputed O(N)
+//! arithmetic sweep with no graph construction at all — while
+//! [`solve_faithful`] keeps the paper's literal reduction (`G'_BDNN` +
+//! Dijkstra, §V) as the oracle the planner is property-tested against
+//! (and versus Li et al. [7]'s exponential branch×partition search that
+//! §II argues against).
 
 use crate::config::settings::Strategy;
 use crate::graph::dijkstra;
 use crate::model::BranchyNetDesc;
 use crate::network::bandwidth::LinkModel;
+use crate::planner::Planner;
 use crate::timing::{DelayProfile, Estimator};
 
+use super::gprime;
 use super::plan::PartitionPlan;
-use super::{compact, gprime};
 
-/// Solve the partitioning problem via shortest path (paper §V).
+/// Solve the partitioning problem (paper §V semantics).
 ///
 /// `paper_mode = true` omits branch-evaluation cost (Eq. 5 exactly);
 /// `false` includes it (the serving planner default).
 ///
-/// Uses the compact O(N) construction (`partition::compact`, §Perf step
-/// L3-1) — property-tested equivalent to the paper-faithful
-/// [`gprime::build`] graph, which [`solve_faithful`] still exposes.
+/// One-shot convenience over [`Planner`]: builds the planner's
+/// link-independent state and runs a single sweep. Callers that replan
+/// across many links should construct a [`Planner`] once and call
+/// `plan_for` / `plan_cached` instead.
 pub fn solve(
     desc: &BranchyNetDesc,
     profile: &DelayProfile,
@@ -28,15 +32,7 @@ pub fn solve(
     epsilon: f64,
     paper_mode: bool,
 ) -> PartitionPlan {
-    let (split, _cost) = compact::solve_split(desc, profile, link, epsilon, !paper_mode);
-
-    // Report the *model* expected time (path cost minus the epsilon
-    // tie-breaker if the path exits via a cloud cut).
-    let est = Estimator::new(desc, profile, link);
-    let est = if paper_mode { est.paper_mode() } else { est };
-    let expected = est.expected_time(split);
-
-    PartitionPlan::from_split(split, expected, Strategy::ShortestPath, desc)
+    Planner::new(desc, profile, epsilon, paper_mode).plan_for(link)
 }
 
 /// The paper-faithful variant: builds the full `G'_BDNN` of §V (explicit

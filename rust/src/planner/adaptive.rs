@@ -1,0 +1,365 @@
+//! Adaptive replanning: the "re-solve on every bandwidth sample" loop,
+//! promoted out of `examples/adaptive_bandwidth.rs` into the subsystem.
+//!
+//! Split in two so the decision logic is testable without threads or
+//! artifacts:
+//!
+//! * [`ReplanState`] — a pure state machine: feed it link observations,
+//!   it returns `Some(plan)` when the active plan should change. It
+//!   plans through the [`Planner`]'s bucket cache and applies
+//!   hysteresis: a new split is adopted only if its predicted expected
+//!   time beats the current split's (at the *observed* link) by a
+//!   configurable relative margin, and a minimum dwell time has passed
+//!   since the last switch — so the split doesn't flap between
+//!   adjacent buckets when the uplink hovers at a decision boundary.
+//! * [`AdaptivePlanner`] — the thread wrapper: polls a link source
+//!   (e.g. the coordinator's [`crate::network::Channel`]) on an
+//!   interval and pushes accepted plans into a sink (e.g.
+//!   [`Coordinator::set_plan`], which counts plan switches in
+//!   `coordinator::metrics`).
+//!
+//! Degenerate bandwidth samples (a measured 0 Mbps, NaN from a broken
+//! estimator) cannot kill the loop: `LinkModel::new` clamps to a
+//! documented floor instead of panicking.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Coordinator;
+use crate::network::bandwidth::LinkModel;
+use crate::partition::plan::PartitionPlan;
+
+use super::Planner;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveConfig {
+    /// How often the link source is polled.
+    pub interval: Duration,
+    /// Hysteresis: relative E[T] improvement the candidate split must
+    /// offer over the current one before a switch happens.
+    pub min_improvement: f64,
+    /// Hysteresis: minimum time between two plan switches.
+    pub min_dwell: Duration,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            interval: Duration::from_millis(500),
+            min_improvement: 0.02,
+            min_dwell: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Counters reported by the replan loop.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplanStats {
+    /// Link observations evaluated.
+    pub replans: u64,
+    /// Plan switches actually emitted.
+    pub switches: u64,
+    /// Plan-cache hits / misses (from the planner's [`super::PlanCache`]).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Pure replanning state machine. Time is passed in explicitly
+/// (seconds since an arbitrary epoch) so tests don't need a clock.
+#[derive(Debug)]
+pub struct ReplanState {
+    planner: Planner,
+    cfg: AdaptiveConfig,
+    current_split: Option<usize>,
+    last_switch_s: f64,
+    replans: u64,
+    switches: u64,
+}
+
+impl ReplanState {
+    pub fn new(planner: Planner, cfg: AdaptiveConfig) -> ReplanState {
+        Self::with_initial_split(planner, cfg, None)
+    }
+
+    /// Seed with the split that is already active (e.g. the plan the
+    /// coordinator was started with), so the first observation only
+    /// counts as a switch if it actually moves the split — keeping
+    /// [`ReplanStats::switches`] in agreement with the coordinator's
+    /// `metrics.plan_switches`.
+    pub fn with_initial_split(
+        planner: Planner,
+        cfg: AdaptiveConfig,
+        current_split: Option<usize>,
+    ) -> ReplanState {
+        ReplanState {
+            planner,
+            cfg,
+            current_split,
+            last_switch_s: f64::NEG_INFINITY,
+            replans: 0,
+            switches: 0,
+        }
+    }
+
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    pub fn current_split(&self) -> Option<usize> {
+        self.current_split
+    }
+
+    /// Evaluate one bandwidth observation. Returns the plan to apply
+    /// when the hysteresis test says the split should move.
+    pub fn observe(&mut self, link: LinkModel, now_s: f64) -> Option<PartitionPlan> {
+        self.replans += 1;
+        let candidate = self.planner.plan_cached(link);
+        let switch = match self.current_split {
+            None => true,
+            Some(cur) if cur == candidate.split_after => false,
+            Some(cur) => {
+                // Compare both splits at the *observed* link, not the
+                // bucket representative the cached plan was solved at.
+                let cur_cost = self.planner.expected_time(cur, link);
+                let new_cost = self.planner.expected_time(candidate.split_after, link);
+                let dwell_ok =
+                    now_s - self.last_switch_s >= self.cfg.min_dwell.as_secs_f64();
+                dwell_ok
+                    && cur_cost.is_finite()
+                    && cur_cost > 0.0
+                    && (cur_cost - new_cost) >= self.cfg.min_improvement * cur_cost
+            }
+        };
+        if switch {
+            self.current_split = Some(candidate.split_after);
+            self.last_switch_s = now_s;
+            self.switches += 1;
+            Some(candidate)
+        } else {
+            None
+        }
+    }
+
+    pub fn stats(&self) -> ReplanStats {
+        let (cache_hits, cache_misses) = self.planner.cache_stats();
+        ReplanStats {
+            replans: self.replans,
+            switches: self.switches,
+            cache_hits,
+            cache_misses,
+        }
+    }
+}
+
+/// Handle to a running replan thread. [`AdaptiveHandle::stop`] joins it
+/// and returns the loop's counters.
+pub struct AdaptiveHandle {
+    stop: Arc<AtomicBool>,
+    handle: JoinHandle<ReplanStats>,
+}
+
+impl AdaptiveHandle {
+    pub fn stop(self) -> ReplanStats {
+        self.stop.store(true, Ordering::Relaxed);
+        match self.handle.join() {
+            Ok(stats) => stats,
+            Err(_) => {
+                // A panicked loop means replanning silently stopped at
+                // some point — say so instead of returning zeros as if
+                // the loop ran cleanly.
+                log::error!("replanner thread panicked; its stats are lost");
+                ReplanStats::default()
+            }
+        }
+    }
+}
+
+/// The background replan loop.
+pub struct AdaptivePlanner;
+
+impl AdaptivePlanner {
+    /// Poll the coordinator's channel and swap its plan live. In-flight
+    /// batches finish under the old plan (see `Coordinator::set_plan`);
+    /// the coordinator's metrics count the switches.
+    pub fn spawn(
+        planner: Planner,
+        coordinator: Arc<Coordinator>,
+        cfg: AdaptiveConfig,
+    ) -> AdaptiveHandle {
+        let initial_split = Some(coordinator.plan().split_after);
+        let source = {
+            let coordinator = coordinator.clone();
+            move || coordinator.channel().current_link()
+        };
+        let sink = move |plan: PartitionPlan| coordinator.set_plan(plan);
+        Self::spawn_with(planner, cfg, initial_split, source, sink)
+    }
+
+    /// Generic variant: any link source and plan sink. Used by the
+    /// coordinator wrapper above and directly by tests/benches.
+    /// `initial_split` is the split already active at the sink, if any.
+    pub fn spawn_with(
+        planner: Planner,
+        cfg: AdaptiveConfig,
+        initial_split: Option<usize>,
+        mut source: impl FnMut() -> LinkModel + Send + 'static,
+        mut sink: impl FnMut(PartitionPlan) + Send + 'static,
+    ) -> AdaptiveHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("replanner".into())
+            .spawn(move || {
+                let mut state = ReplanState::with_initial_split(planner, cfg, initial_split);
+                let t0 = Instant::now();
+                while !stop2.load(Ordering::Relaxed) {
+                    let link = source();
+                    if let Some(plan) = state.observe(link, t0.elapsed().as_secs_f64()) {
+                        log::info!(
+                            "[replan] {:.2} Mbps -> split after {} (E[T] {:.4}s)",
+                            link.uplink_mbps,
+                            plan.split_after,
+                            plan.expected_time_s
+                        );
+                        sink(plan);
+                    }
+                    // Sleep in short slices so stop() returns promptly.
+                    let mut slept = Duration::ZERO;
+                    while slept < cfg.interval && !stop2.load(Ordering::Relaxed) {
+                        let step = (cfg.interval - slept).min(Duration::from_millis(50));
+                        std::thread::sleep(step);
+                        slept += step;
+                    }
+                }
+                state.stats()
+            })
+            .expect("spawn replanner thread");
+        AdaptiveHandle { stop, handle }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BranchDesc, BranchyNetDesc};
+    use crate::timing::DelayProfile;
+
+    /// Fixture where 1 Mbps prefers the edge and a very fast uplink
+    /// prefers cloud-only.
+    fn planner() -> Planner {
+        let desc = BranchyNetDesc {
+            stage_names: (1..=5).map(|i| format!("s{i}")).collect(),
+            stage_out_bytes: vec![57_600, 18_816, 25_088, 3_456, 8],
+            input_bytes: 12_288,
+            branches: vec![BranchDesc {
+                after_stage: 1,
+                exit_prob: 0.5,
+            }],
+        };
+        let profile = DelayProfile::from_cloud_times(
+            vec![1e-4, 2e-4, 1.5e-4, 8e-5, 2e-5],
+            3e-5,
+            100.0,
+        );
+        Planner::new(&desc, &profile, 1e-9, false)
+    }
+
+    fn cfg() -> AdaptiveConfig {
+        AdaptiveConfig {
+            interval: Duration::from_millis(1),
+            min_improvement: 0.02,
+            min_dwell: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn first_observation_always_sets_a_plan() {
+        let mut st = ReplanState::new(planner(), cfg());
+        let p = st.observe(LinkModel::new(1.0, 0.0), 0.0);
+        assert!(p.is_some());
+        assert_eq!(st.current_split(), Some(p.unwrap().split_after));
+        assert_eq!(st.stats().switches, 1);
+    }
+
+    #[test]
+    fn seeded_initial_split_counts_no_spurious_switch() {
+        // Seeded with the split that is already active, an observation
+        // agreeing with it must not count as a switch — so the loop's
+        // counter matches the coordinator's metrics.plan_switches.
+        let p = planner();
+        let active = p.plan_for(LinkModel::new(1.0, 0.0)).split_after;
+        let mut st = ReplanState::with_initial_split(p, cfg(), Some(active));
+        assert!(st.observe(LinkModel::new(1.0, 0.0), 0.0).is_none());
+        assert_eq!(st.stats().switches, 0);
+    }
+
+    #[test]
+    fn small_jitter_within_a_bucket_does_not_flap() {
+        let mut st = ReplanState::new(planner(), cfg());
+        st.observe(LinkModel::new(1.0, 0.0), 0.0).unwrap();
+        // ±1% jitter stays in the same log bucket -> same cached plan.
+        for (i, mbps) in [1.01, 0.99, 1.005, 1.0].iter().enumerate() {
+            assert!(
+                st.observe(LinkModel::new(*mbps, 0.0), 1.0 + i as f64).is_none(),
+                "{mbps} Mbps should not flap the plan"
+            );
+        }
+        let s = st.stats();
+        assert_eq!(s.switches, 1);
+        assert_eq!(s.replans, 5);
+        assert!(s.cache_hits >= 3, "jitter should hit the cache: {s:?}");
+    }
+
+    #[test]
+    fn large_swing_switches_and_counts() {
+        let mut st = ReplanState::new(planner(), cfg());
+        let p1 = st.observe(LinkModel::new(1.0, 0.0), 0.0).unwrap();
+        let p2 = st.observe(LinkModel::new(50_000.0, 0.0), 1.0).unwrap();
+        assert_ne!(p1.split_after, p2.split_after);
+        assert!(p2.is_cloud_only(), "{p2:?}");
+        assert_eq!(st.stats().switches, 2);
+    }
+
+    #[test]
+    fn dwell_time_suppresses_rapid_switches() {
+        let mut c = cfg();
+        c.min_dwell = Duration::from_secs(10);
+        let mut st = ReplanState::new(planner(), c);
+        st.observe(LinkModel::new(1.0, 0.0), 0.0).unwrap();
+        // A genuinely better plan exists, but the dwell gate holds it.
+        assert!(st.observe(LinkModel::new(50_000.0, 0.0), 1.0).is_none());
+        // After the dwell expires it goes through.
+        assert!(st.observe(LinkModel::new(50_000.0, 0.0), 11.0).is_some());
+    }
+
+    #[test]
+    fn degenerate_bandwidth_does_not_panic() {
+        let mut st = ReplanState::new(planner(), cfg());
+        // A dead uplink sample: clamped by LinkModel, loop survives.
+        let p = st.observe(LinkModel::new(0.0, 0.0), 0.0);
+        assert!(p.is_some());
+        assert!(st.observe(LinkModel::new(f64::NAN, 0.0), 1.0).is_none());
+    }
+
+    #[test]
+    fn spawn_with_drives_sink_and_stops() {
+        use std::sync::Mutex;
+        let applied: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+        let applied2 = applied.clone();
+        let handle = AdaptivePlanner::spawn_with(
+            planner(),
+            cfg(),
+            None,
+            || LinkModel::new(1.0, 0.0),
+            move |plan| applied2.lock().unwrap().push(plan.split_after),
+        );
+        // Give the loop a few ticks.
+        std::thread::sleep(Duration::from_millis(30));
+        let stats = handle.stop();
+        assert!(stats.replans >= 1);
+        assert_eq!(stats.switches, 1, "constant link must switch exactly once");
+        assert_eq!(applied.lock().unwrap().len(), 1);
+    }
+}

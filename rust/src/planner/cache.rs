@@ -1,0 +1,209 @@
+//! Plan cache keyed by quantized link state.
+//!
+//! Bandwidth is quantized on a log grid (`buckets_per_decade` buckets
+//! per factor-of-10, default 24 ≈ 10% per bucket) and the RTT at 1 µs
+//! resolution. All links mapping to the same key share one plan,
+//! computed at the bucket's *representative* bandwidth — deterministic
+//! regardless of which sample arrived first. Log bucketing matches the
+//! model's sensitivity: `E[T]` depends on bandwidth only through
+//! `alpha/B`, so a fixed *relative* quantization bounds the relative
+//! cost error of a cached plan by the bucket width.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::network::bandwidth::LinkModel;
+use crate::partition::plan::PartitionPlan;
+
+/// Default log-bucket resolution: 24 buckets per decade, i.e. adjacent
+/// buckets differ by 10^(1/24) ≈ 1.10 in bandwidth (and in RTT).
+pub const DEFAULT_BUCKETS_PER_DECADE: u32 = 24;
+
+/// Size bound: the map is cleared (counted in `evictions`) when it
+/// would exceed this many plans. With ~24 buckets/decade the whole
+/// plausible (bandwidth × RTT) plane is a few hundred buckets, so the
+/// bound only trips for pathological link sources.
+pub const MAX_CACHED_PLANS: usize = 4096;
+
+/// RTTs below this (including the common exact 0) share one sentinel
+/// bucket instead of feeding `log10` a zero.
+const MIN_RTT_S: f64 = 1e-6;
+
+/// Cache key: log-bucketed Mbps × log-bucketed RTT. RTT gets the same
+/// *relative* quantization as bandwidth — keying it at fixed absolute
+/// resolution would make every jittering RTT sample a distinct miss.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub bw_bucket: i64,
+    pub rtt_bucket: i64,
+}
+
+/// Thread-safe memo of plans by quantized link, with hit/miss counters.
+#[derive(Debug)]
+pub struct PlanCache {
+    buckets_per_decade: f64,
+    map: Mutex<HashMap<CacheKey, PartitionPlan>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new(DEFAULT_BUCKETS_PER_DECADE)
+    }
+}
+
+impl PlanCache {
+    pub fn new(buckets_per_decade: u32) -> PlanCache {
+        assert!(buckets_per_decade >= 1);
+        PlanCache {
+            buckets_per_decade: buckets_per_decade as f64,
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Quantize a link. `LinkModel` guarantees a positive finite
+    /// bandwidth (it clamps at construction), so the log is finite.
+    /// RTTs under [`MIN_RTT_S`] share one sentinel bucket.
+    pub fn key_for(&self, link: LinkModel) -> CacheKey {
+        let rtt_bucket = if link.rtt_s < MIN_RTT_S {
+            i64::MIN
+        } else {
+            (link.rtt_s.log10() * self.buckets_per_decade).round() as i64
+        };
+        CacheKey {
+            bw_bucket: (link.uplink_mbps.log10() * self.buckets_per_decade).round() as i64,
+            rtt_bucket,
+        }
+    }
+
+    /// The canonical link a key stands for (bucket center).
+    pub fn representative(&self, key: CacheKey) -> LinkModel {
+        let rtt_s = if key.rtt_bucket == i64::MIN {
+            0.0
+        } else {
+            10f64.powf(key.rtt_bucket as f64 / self.buckets_per_decade)
+        };
+        LinkModel::new(
+            10f64.powf(key.bw_bucket as f64 / self.buckets_per_decade),
+            rtt_s,
+        )
+    }
+
+    /// Look up the plan for `link`'s bucket, computing it at the bucket
+    /// representative on a miss.
+    pub fn get_or_insert_with(
+        &self,
+        link: LinkModel,
+        compute: impl FnOnce(LinkModel) -> PartitionPlan,
+    ) -> PartitionPlan {
+        let key = self.key_for(link);
+        if let Some(plan) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return plan.clone();
+        }
+        let plan = compute(self.representative(key));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().unwrap();
+        if map.len() >= MAX_CACHED_PLANS && !map.contains_key(&key) {
+            // Pathological link source filled the plane: start over
+            // rather than grow without bound.
+            map.clear();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        map.entry(key).or_insert(plan).clone()
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// How many times the size bound flushed the whole map.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.lock().unwrap().is_empty()
+    }
+
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::settings::Strategy;
+    use crate::model::BranchyNetDesc;
+
+    fn dummy_plan(split: usize) -> PartitionPlan {
+        let desc = BranchyNetDesc {
+            stage_names: vec!["a".into(), "b".into(), "c".into()],
+            stage_out_bytes: vec![10, 10, 10],
+            input_bytes: 10,
+            branches: vec![],
+        };
+        PartitionPlan::from_split(split, 0.1, Strategy::ShortestPath, &desc)
+    }
+
+    #[test]
+    fn nearby_bandwidths_share_a_bucket() {
+        let c = PlanCache::default();
+        let k1 = c.key_for(LinkModel::new(5.85, 0.0));
+        let k2 = c.key_for(LinkModel::new(5.87, 0.0));
+        assert_eq!(k1, k2);
+        // The paper's three profiles land in distinct buckets.
+        let k3g = c.key_for(LinkModel::new(1.10, 0.0));
+        let k4g = c.key_for(LinkModel::new(5.85, 0.0));
+        let kwifi = c.key_for(LinkModel::new(18.80, 0.0));
+        assert!(k3g != k4g && k4g != kwifi);
+        // RTT participates in the key.
+        assert_ne!(
+            c.key_for(LinkModel::new(5.85, 0.01)),
+            c.key_for(LinkModel::new(5.85, 0.02))
+        );
+    }
+
+    #[test]
+    fn representative_is_inside_its_own_bucket() {
+        let c = PlanCache::default();
+        for mbps in [0.01, 0.5, 1.1, 5.85, 18.8, 100.0, 2500.0] {
+            let key = c.key_for(LinkModel::new(mbps, 0.003));
+            let rep = c.representative(key);
+            assert_eq!(c.key_for(rep), key, "mbps={mbps}");
+            // Representative within one bucket width of the sample.
+            let ratio = rep.uplink_mbps / mbps;
+            assert!((0.9..=1.12).contains(&ratio), "mbps={mbps} rep={ratio}");
+        }
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let c = PlanCache::default();
+        let l = LinkModel::new(5.85, 0.0);
+        let p1 = c.get_or_insert_with(l, |_| dummy_plan(1));
+        assert_eq!(c.stats(), (0, 1));
+        // Hit returns the cached plan, even if compute would differ now.
+        let p2 = c.get_or_insert_with(l, |_| dummy_plan(2));
+        assert_eq!(c.stats(), (1, 1));
+        assert_eq!(p1, p2);
+        assert_eq!(c.len(), 1);
+        c.clear();
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,385 @@
+//! The planner subsystem: one owner of "model + profile + epsilon +
+//! strategy → plan", built for *continuous* replanning as the uplink
+//! fluctuates (the on-demand co-inference regime Edgent argues for:
+//! cheap re-optimization on every bandwidth sample, not a one-shot
+//! solve).
+//!
+//! # Why a prefix-sum sweep solves the paper's shortest-path problem
+//!
+//! The paper reduces BranchyNet partitioning to a shortest `input →
+//! output` path in `G'_BDNN` (Eqs. 7–8). The compact construction
+//! (`partition::compact`) already observes that once a path cuts to the
+//! cloud after stage `s`, no further decision exists — the remaining
+//! cost is a constant for that cut. The [`Planner`] takes the final
+//! step: it never builds a graph at all. For a split after stage `s`
+//! (0 = cloud-only, N = edge-only), Eq. 5 generalized to any number of
+//! branches is
+//!
+//! ```text
+//! E[T(s)] =  A(s)  +  S(s) · ( alpha_s/B + rtt + C(s) )
+//!
+//! A(s) = Σ_{i≤s} S(before i) · t_i^e   [+ Σ_{b_j < s} S_j · t_b^e]
+//! S(s) = Π_{b_j < s} (1 − p_j)            (survival at the cut, Eq. 4)
+//! C(s) = Σ_{i>s} t_i^c                    (cloud suffix, Eq. 2)
+//! ```
+//!
+//! Everything except `alpha_s/B + rtt` is **link-independent**:
+//! `A(·)` is a survival-weighted prefix sum over edge stage times,
+//! `C(·)` a suffix sum over cloud stage times, and `S(·)` the running
+//! survival product — all computed once at construction in O(N·m) and
+//! stored. A `plan_for(link)` query is then a pure O(N) arithmetic
+//! sweep: evaluate `E[T(s)]` for every `s`, add the paper's epsilon
+//! tie-breaker to the cut options (so exact ties resolve toward the
+//! edge, exactly as the `(v*c, output)` epsilon link does in §V), and
+//! take the argmin. No graph rebuild, no Dijkstra heap, no allocation
+//! beyond the returned plan.
+//!
+//! The sweep reproduces [`crate::timing::Estimator::expected_time`]
+//! operation-for-operation (same fold order), so the reported
+//! `expected_time_s` is bit-identical to what the paper-faithful
+//! oracle [`crate::partition::solver::solve_faithful`] reports for the
+//! same split — property-tested in `rust/tests/planner_equivalence.rs`.
+//!
+//! On top of the sweep sit two replanning layers:
+//!
+//! * [`cache::PlanCache`] — plans memoized by *log-bucketed* bandwidth
+//!   (default ~24 buckets per decade ≈ 10% quantization) with hit/miss
+//!   counters, so a jittering-but-stable uplink costs a hash lookup;
+//! * [`adaptive`] — the replan loop promoted out of
+//!   `examples/adaptive_bandwidth.rs`: it consumes bandwidth estimates
+//!   (e.g. `network::trace` through a `Channel`), applies hysteresis so
+//!   the split doesn't flap between adjacent buckets, and drives
+//!   [`crate::coordinator::Coordinator::set_plan`], which records plan
+//!   switches in `coordinator::metrics`.
+
+pub mod adaptive;
+pub mod cache;
+
+pub use adaptive::{AdaptiveConfig, AdaptiveHandle, AdaptivePlanner, ReplanState, ReplanStats};
+pub use cache::PlanCache;
+
+use crate::config::settings::Strategy;
+use crate::model::BranchyNetDesc;
+use crate::network::bandwidth::LinkModel;
+use crate::partition::plan::PartitionPlan;
+use crate::timing::exitprob::ExitChain;
+use crate::timing::profile::DelayProfile;
+
+/// Precomputed link-independent planning state for one
+/// (model, profile, epsilon, mode) tuple. Construction is O(N·m); each
+/// [`Planner::plan_for`] is an O(N) sweep and each
+/// [`Planner::expected_time`] query is O(1).
+///
+/// The planner owns clones of the description and the derived vectors,
+/// so it is `Send + Sync` and can be moved into a replan thread.
+#[derive(Debug)]
+pub struct Planner {
+    desc: BranchyNetDesc,
+    epsilon: f64,
+    paper_mode: bool,
+    n: usize,
+    /// A(s): survival-weighted edge compute through stage s, plus (in
+    /// serving mode) the survival-weighted branch-evaluation terms —
+    /// folded in the same order as `Estimator::expected_time`.
+    edge_cost: Vec<f64>,
+    /// S(s): survival probability at a cut after stage s.
+    surv: Vec<f64>,
+    /// C(s): cloud time of stages s+1..=N.
+    cloud_suffix: Vec<f64>,
+    /// alpha_s: bytes transferred for a cut after stage s (s < N).
+    alpha_bytes: Vec<u64>,
+    cache: PlanCache,
+}
+
+impl Planner {
+    /// Precompute all link-independent state. `paper_mode = true`
+    /// reproduces Eq. 5 exactly (no branch-evaluation cost); `false` is
+    /// the serving default — the same convention as
+    /// [`crate::partition::solver::solve`].
+    ///
+    /// Panics on an invalid description/profile pair or a non-positive
+    /// epsilon, like the estimator and the graph constructions do.
+    pub fn new(
+        desc: &BranchyNetDesc,
+        profile: &DelayProfile,
+        epsilon: f64,
+        paper_mode: bool,
+    ) -> Planner {
+        desc.validate().expect("invalid BranchyNet description");
+        profile
+            .validate(desc.num_stages())
+            .expect("profile/desc mismatch");
+        assert!(
+            epsilon > 0.0 && epsilon.is_finite(),
+            "epsilon must be positive (paper §V)"
+        );
+
+        let n = desc.num_stages();
+        let chain = ExitChain::new(desc);
+        let include_branch_cost = !paper_mode;
+
+        // Prefix sums of survival-weighted edge times. Incremental
+        // left-fold, so edge_cost[s] carries exactly the partial sums
+        // the estimator's edge loop would produce for split s.
+        let mut edge_cost = vec![0.0f64; n + 1];
+        for i in 1..=n {
+            edge_cost[i] =
+                edge_cost[i - 1] + chain.survival_before_stage(i) * profile.t_edge[i - 1];
+        }
+        // Branch-evaluation terms are folded *after* the edge sum
+        // (mirroring the estimator's second loop) so the fp result
+        // stays identical to a direct `expected_time` evaluation.
+        if include_branch_cost {
+            for s in 0..=n {
+                let mut t = edge_cost[s];
+                for (j, &pos) in chain.positions().iter().enumerate() {
+                    if pos < s {
+                        t += chain.survival_after(j) * profile.branch_t_edge;
+                    }
+                }
+                edge_cost[s] = t;
+            }
+        }
+
+        let surv: Vec<f64> = (0..=n).map(|s| chain.survival_at_split(s)).collect();
+
+        // Suffix sums of cloud times, accumulated back-to-front exactly
+        // like `timing::profile::CloudSuffix`.
+        let mut cloud_suffix = vec![0.0f64; n + 1];
+        for i in (0..n).rev() {
+            cloud_suffix[i] = cloud_suffix[i + 1] + profile.t_cloud[i];
+        }
+
+        let alpha_bytes: Vec<u64> = (0..n).map(|s| desc.transfer_bytes(s)).collect();
+
+        Planner {
+            desc: desc.clone(),
+            epsilon,
+            paper_mode,
+            n,
+            edge_cost,
+            surv,
+            cloud_suffix,
+            alpha_bytes,
+            cache: PlanCache::default(),
+        }
+    }
+
+    pub fn desc(&self) -> &BranchyNetDesc {
+        &self.desc
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.n
+    }
+
+    pub fn epsilon(&self) -> f64 {
+        self.epsilon
+    }
+
+    pub fn paper_mode(&self) -> bool {
+        self.paper_mode
+    }
+
+    /// E[T_inf] for a split after stage `split` under `link` — O(1),
+    /// and bit-identical to `Estimator::expected_time` for the same
+    /// mode (same terms, same fold order).
+    pub fn expected_time(&self, split: usize, link: LinkModel) -> f64 {
+        assert!(split <= self.n, "split {split} out of range 0..={}", self.n);
+        let mut t = self.edge_cost[split];
+        if split < self.n {
+            let surv = self.surv[split];
+            if surv > 0.0 {
+                t += surv
+                    * (link.transfer_time(self.alpha_bytes[split]) + self.cloud_suffix[split]);
+            }
+        }
+        t
+    }
+
+    /// Solve for the optimal split under `link`: an O(N) sweep over the
+    /// precomputed state. Cut options carry the epsilon tie-breaker
+    /// (paper §V), so exact ties resolve toward keeping work on the
+    /// edge — the same direction as the graph solvers and the
+    /// brute-force oracle.
+    pub fn plan_for(&self, link: LinkModel) -> PartitionPlan {
+        self.plan_with_epsilon(link, self.epsilon)
+    }
+
+    /// [`Planner::plan_for`] with an explicit tie-breaker. The
+    /// precomputed state is epsilon-independent, so epsilon-sensitivity
+    /// sweeps (the ablation) pay one precompute and K O(N) sweeps
+    /// instead of K full constructions. Bypasses the plan cache.
+    pub fn plan_with_epsilon(&self, link: LinkModel, epsilon: f64) -> PartitionPlan {
+        assert!(
+            epsilon > 0.0 && epsilon.is_finite(),
+            "epsilon must be positive (paper §V)"
+        );
+        let mut best_split = 0usize;
+        let mut best_model = f64::INFINITY;
+        let mut best_decision = f64::INFINITY;
+        for s in 0..=self.n {
+            let model = self.expected_time(s, link);
+            let decision = if s < self.n { model + epsilon } else { model };
+            // `<=`: on an exact tie the larger split (more edge work) wins.
+            if decision <= best_decision {
+                best_decision = decision;
+                best_model = model;
+                best_split = s;
+            }
+        }
+        PartitionPlan::from_split(best_split, best_model, Strategy::ShortestPath, &self.desc)
+    }
+
+    /// Like [`Planner::plan_for`], but memoized by quantized bandwidth:
+    /// the link is log-bucketed (see [`PlanCache`]) and the plan is
+    /// computed once per bucket, at the bucket's representative
+    /// bandwidth. Repeated samples from a jittering-but-stable uplink
+    /// are cache hits.
+    pub fn plan_cached(&self, link: LinkModel) -> PartitionPlan {
+        self.cache.get_or_insert_with(link, |rep| self.plan_for(rep))
+    }
+
+    /// The representative link `plan_cached` would actually solve for.
+    pub fn cache_representative(&self, link: LinkModel) -> LinkModel {
+        self.cache.representative(self.cache.key_for(link))
+    }
+
+    /// (hits, misses) of the plan cache.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.cache.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{synthetic, BranchDesc};
+    use crate::partition::brute;
+    use crate::testing::property;
+    use crate::timing::Estimator;
+
+    fn fixture(p: f64) -> (BranchyNetDesc, DelayProfile) {
+        let desc = BranchyNetDesc {
+            stage_names: (1..=5).map(|i| format!("s{i}")).collect(),
+            stage_out_bytes: vec![57_600, 18_816, 25_088, 3_456, 8],
+            input_bytes: 12_288,
+            branches: vec![BranchDesc {
+                after_stage: 1,
+                exit_prob: p,
+            }],
+        };
+        let profile = DelayProfile::from_cloud_times(
+            vec![1e-3, 2e-3, 1.5e-3, 8e-4, 2e-4],
+            3e-4,
+            100.0,
+        );
+        (desc, profile)
+    }
+
+    #[test]
+    fn expected_time_is_bit_identical_to_estimator() {
+        property("planner == estimator, bitwise", 150, |g| {
+            let n = g.usize_in(1, 30);
+            let desc = synthetic::random_desc(g, n, 4);
+            let gamma = g.f64_in(1.0, 1000.0);
+            let profile = synthetic::random_profile(g, &desc, gamma);
+            let link = LinkModel::new(g.f64_in(0.05, 100.0), g.f64_in(0.0, 0.05));
+            let paper = g.bool(0.5);
+
+            let planner = Planner::new(&desc, &profile, 1e-9, paper);
+            let est = Estimator::new(&desc, &profile, link);
+            let est = if paper { est.paper_mode() } else { est };
+            for s in 0..=n {
+                let a = planner.expected_time(s, link);
+                let b = est.expected_time(s);
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "split {s}: planner {a} vs estimator {b} (n={n}, paper={paper})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn plan_for_matches_brute_force_within_epsilon() {
+        const EPS: f64 = 1e-9;
+        property("planner == brute force", 200, |g| {
+            let n = g.usize_in(1, 24);
+            let desc = synthetic::random_desc(g, n, 3);
+            let profile = synthetic::random_profile(g, &desc, g.f64_in(1.0, 2000.0));
+            let link = LinkModel::new(g.f64_in(0.05, 100.0), g.f64_in(0.0, 0.02));
+            let paper = g.bool(0.5);
+
+            let planner = Planner::new(&desc, &profile, EPS, paper);
+            let plan = planner.plan_for(link);
+            let est = Estimator::new(&desc, &profile, link);
+            let est = if paper { est.paper_mode() } else { est };
+            let bf = brute::solve(&est);
+            assert!(
+                (plan.expected_time_s - bf.expected_time_s).abs()
+                    <= EPS + 1e-12 * bf.expected_time_s.max(1.0),
+                "planner {} vs brute {} (n={n})",
+                plan.expected_time_s,
+                bf.expected_time_s
+            );
+            // The reported split must achieve the reported time exactly.
+            assert_eq!(
+                planner.expected_time(plan.split_after, link).to_bits(),
+                plan.expected_time_s.to_bits()
+            );
+        });
+    }
+
+    #[test]
+    fn p_one_tie_resolves_toward_edge() {
+        // With p = 1 every cut at or past the branch costs exactly the
+        // edge prefix through the branch; the epsilon tie-breaker must
+        // keep the work on the edge (no spurious zero-cost cloud hop).
+        let (desc, profile) = fixture(1.0);
+        let planner = Planner::new(&desc, &profile, 1e-9, true);
+        let plan = planner.plan_for(LinkModel::new(0.05, 0.0));
+        assert!(plan.is_edge_only(5), "{plan:?}");
+        assert_eq!(plan.expected_time_s.to_bits(), profile.t_edge[0].to_bits());
+    }
+
+    #[test]
+    fn cached_plans_hit_within_a_bucket() {
+        let (desc, profile) = fixture(0.5);
+        let planner = Planner::new(&desc, &profile, 1e-9, false);
+
+        let a = planner.plan_cached(LinkModel::new(5.85, 0.0));
+        let (h, m) = planner.cache_stats();
+        assert_eq!((h, m), (0, 1));
+
+        // Same bucket (~10% wide): a hit, byte-identical plan.
+        let b = planner.plan_cached(LinkModel::new(5.87, 0.0));
+        let (h, m) = planner.cache_stats();
+        assert_eq!((h, m), (1, 1));
+        assert_eq!(a, b);
+
+        // A different decade: a miss.
+        let _ = planner.plan_cached(LinkModel::new(58.5, 0.0));
+        let (h, m) = planner.cache_stats();
+        assert_eq!((h, m), (1, 2));
+
+        // The cached plan is the exact plan at the bucket representative.
+        let rep = planner.cache_representative(LinkModel::new(5.87, 0.0));
+        assert_eq!(b, planner.plan_for(rep));
+    }
+
+    #[test]
+    fn serving_mode_adds_branch_cost() {
+        let (desc, profile) = fixture(0.5);
+        let link = LinkModel::new(5.85, 0.0);
+        let paper = Planner::new(&desc, &profile, 1e-9, true);
+        let serving = Planner::new(&desc, &profile, 1e-9, false);
+        // Branch active only for splits >= 2.
+        assert_eq!(
+            paper.expected_time(1, link).to_bits(),
+            serving.expected_time(1, link).to_bits()
+        );
+        assert!(serving.expected_time(2, link) > paper.expected_time(2, link));
+    }
+}

@@ -1,0 +1,204 @@
+//! The planner refactor's core obligation: the precomputed, cached,
+//! incremental `Planner` must agree with the paper-faithful oracle
+//! (`solver::solve_faithful`, the literal `G'_BDNN` + Dijkstra of §V)
+//! on randomized BranchyNets (0–3 branches, non-monotonic alphas from
+//! the synthetic generator) across dense bandwidth sweeps — including
+//! the cache-hit paths, whose plans must be byte-identical to an
+//! uncached solve at the bucket representative.
+
+use std::time::Duration;
+
+use branchyserve::model::synthetic;
+use branchyserve::network::bandwidth::LinkModel;
+use branchyserve::partition::solver;
+use branchyserve::planner::{AdaptiveConfig, Planner, ReplanState};
+use branchyserve::testing::{property, Gen};
+
+const EPS: f64 = 1e-9;
+
+#[test]
+fn planner_matches_faithful_solver_on_random_instances() {
+    property("planner == solve_faithful", 200, |g| {
+        let n = g.usize_in(1, 24);
+        let desc = synthetic::random_desc(g, n, 3); // 0..=3 branches
+        let gamma = g.f64_in(1.0, 2000.0);
+        let profile = synthetic::random_profile(g, &desc, gamma);
+        let paper = g.bool(0.5);
+        let planner = Planner::new(&desc, &profile, EPS, paper);
+
+        for _ in 0..8 {
+            let link = LinkModel::new(g.f64_in(0.05, 100.0), g.f64_in(0.0, 0.02));
+            let ours = planner.plan_for(link);
+            let oracle = solver::solve_faithful(&desc, &profile, link, EPS, paper);
+
+            // Optimal expected times agree up to the epsilon tie-breaker
+            // plus fp noise between the two summation orders.
+            let tol = EPS + 1e-9 * oracle.expected_time_s.abs().max(1.0);
+            assert!(
+                (ours.expected_time_s - oracle.expected_time_s).abs() <= tol,
+                "planner {} vs faithful {} (n={n}, gamma={gamma:.1}, paper={paper})",
+                ours.expected_time_s,
+                oracle.expected_time_s
+            );
+            // Whenever the two resolve to the same split — everywhere
+            // except fp-exact ties, where the tie direction is the
+            // solver's to choose — the plans must be byte-identical:
+            // same expected time bits, same active branches, same
+            // transfer bytes, same strategy.
+            if ours.split_after == oracle.split_after {
+                assert_eq!(ours, oracle, "same split must mean identical plans");
+                assert_eq!(
+                    ours.expected_time_s.to_bits(),
+                    oracle.expected_time_s.to_bits()
+                );
+            }
+        }
+    });
+}
+
+/// Fixed corpus instance with deliberately non-monotonic alphas (the
+/// B-AlexNet shape: outputs grow again at conv3) for the dense sweep.
+fn sweep_instance(
+    branches: usize,
+) -> (
+    branchyserve::model::BranchyNetDesc,
+    branchyserve::timing::DelayProfile,
+) {
+    use branchyserve::model::{BranchDesc, BranchyNetDesc};
+    use branchyserve::timing::DelayProfile;
+    let all = [(1usize, 0.5f64), (3, 0.3), (5, 0.8)];
+    let desc = BranchyNetDesc {
+        stage_names: (1..=8).map(|i| format!("s{i}")).collect(),
+        stage_out_bytes: vec![57_600, 18_816, 25_088, 25_088, 3_456, 1_024, 512, 8],
+        input_bytes: 12_288,
+        branches: all[..branches]
+            .iter()
+            .map(|&(after_stage, exit_prob)| BranchDesc {
+                after_stage,
+                exit_prob,
+            })
+            .collect(),
+    };
+    let profile = DelayProfile::from_cloud_times(
+        vec![8.4e-4, 1.2e-3, 3.3e-4, 4.5e-4, 3.6e-4, 5.2e-5, 4.0e-5, 4.7e-5],
+        4.0e-4,
+        50.0,
+    );
+    (desc, profile)
+}
+
+#[test]
+fn thousand_point_bandwidth_sweep_including_cache_hits() {
+    for branches in [0usize, 1, 3] {
+        let (desc, profile) = sweep_instance(branches);
+        let planner = Planner::new(&desc, &profile, EPS, true);
+
+        // 1000 points, log-spaced over 0.05..500 Mbps (4 decades).
+        let links: Vec<LinkModel> = (0..1000)
+            .map(|i| LinkModel::new(0.05 * 10f64.powf(4.0 * i as f64 / 999.0), 0.0))
+            .collect();
+
+        for &link in &links {
+            // Exact path vs the faithful oracle.
+            let exact = planner.plan_for(link);
+            let oracle = solver::solve_faithful(&desc, &profile, link, EPS, true);
+            let tol = EPS + 1e-9 * oracle.expected_time_s.abs().max(1.0);
+            assert!(
+                (exact.expected_time_s - oracle.expected_time_s).abs() <= tol,
+                "branches={branches} @ {:.3} Mbps: planner {} vs faithful {}",
+                link.uplink_mbps,
+                exact.expected_time_s,
+                oracle.expected_time_s
+            );
+            if exact.split_after == oracle.split_after {
+                assert_eq!(exact, oracle);
+            }
+
+            // Cached path: byte-identical to an uncached solve at the
+            // bucket representative...
+            let cached = planner.plan_cached(link);
+            let rep = planner.cache_representative(link);
+            assert_eq!(cached, planner.plan_for(rep));
+            // ...and near-optimal at the true link: bounded by the
+            // bucket's relative width (~10%), squared through the
+            // cost ratio, so 15% is a safe envelope.
+            let cached_cost_here = planner.expected_time(cached.split_after, link);
+            assert!(
+                cached_cost_here <= exact.expected_time_s * 1.15 + EPS,
+                "branches={branches} @ {:.3} Mbps: cached split {} costs {} vs optimal {}",
+                link.uplink_mbps,
+                cached.split_after,
+                cached_cost_here,
+                exact.expected_time_s
+            );
+        }
+
+        // The sweep crosses ~4 decades at ~24 buckets/decade: the cache
+        // must have absorbed the bulk of the 1000 queries.
+        let (hits, misses) = planner.cache_stats();
+        assert_eq!(hits + misses, 1000, "every query goes through the cache");
+        assert!(
+            (50..=150).contains(&(misses as usize)),
+            "expected ~97 distinct buckets over 4 decades, got {misses}"
+        );
+
+        // A second identical sweep must be 100% hits.
+        for &link in &links {
+            let _ = planner.plan_cached(link);
+        }
+        let (hits2, misses2) = planner.cache_stats();
+        assert_eq!(misses2, misses, "revisit must not miss");
+        assert_eq!(hits2, hits + 1000);
+    }
+}
+
+#[test]
+fn replan_state_tracks_a_trace_without_flapping() {
+    // Drive the pure replan state machine through a Wi-Fi -> 3G -> 4G
+    // trace with ±2% jitter: it must settle on one split per phase
+    // (hysteresis), not oscillate within a phase. gamma = 20 puts the
+    // 3G phase in the edge-only regime and the 4G/Wi-Fi phases in the
+    // cloud-only regime, so the trace genuinely moves the split.
+    let (desc, profile) = sweep_instance(1);
+    let profile = profile.with_gamma(20.0);
+    let planner = Planner::new(&desc, &profile, EPS, false);
+    let mut state = ReplanState::new(
+        planner,
+        AdaptiveConfig {
+            interval: Duration::from_millis(1),
+            min_improvement: 0.02,
+            min_dwell: Duration::ZERO,
+        },
+    );
+
+    let mut g = Gen::replay(0x77ACE);
+    let mut switches_per_phase = Vec::new();
+    let mut now = 0.0f64;
+    for &phase_mbps in &[18.80f64, 1.10, 5.85] {
+        let mut switches = 0u64;
+        for _ in 0..200 {
+            let jitter = 1.0 + g.f64_in(-0.02, 0.02);
+            if state
+                .observe(LinkModel::new(phase_mbps * jitter, 0.0), now)
+                .is_some()
+            {
+                switches += 1;
+            }
+            now += 0.5;
+        }
+        switches_per_phase.push(switches);
+    }
+    // At most one adoption per phase; jitter never flaps the plan.
+    assert!(
+        switches_per_phase.iter().all(|&s| s <= 1),
+        "{switches_per_phase:?}"
+    );
+    // And the bandwidth collapse from Wi-Fi to 3G must have moved it.
+    let stats = state.stats();
+    assert!(stats.switches >= 2, "{stats:?}");
+    assert_eq!(stats.replans, 600);
+    assert!(
+        stats.cache_hits > 500,
+        "per-phase jitter should be cache hits: {stats:?}"
+    );
+}
