@@ -1,0 +1,173 @@
+//! Sharded multi-class fleet demo: one fleet serving a 3G/4G/WiFi client
+//! mix, each class behind its own planner (so each runs its own
+//! partition point), each class group sharded across several edge/cloud
+//! pipelines. Runs on the simulated backend — no artifacts needed:
+//!
+//!     cargo run --release --example fleet_mixed_links
+//!
+//! Environment knobs: RATE_RPS (total offered, default 90), DURATION_S
+//! (5), SHARDS (2), CLOUD_WORKERS (2), STAGE_COST_US (200),
+//! THRESHOLD (0.35), GAMMA (50).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use branchyserve::fleet::{ClassRegistry, Fleet, FleetConfig, LinkClass, RoutePolicy};
+use branchyserve::model::Manifest;
+use branchyserve::profiler::{self, ProfileOptions};
+use branchyserve::runtime::InferenceEngine;
+use branchyserve::util::rng::Pcg32;
+use branchyserve::util::timefmt::{format_rate, format_secs};
+use branchyserve::workload::ImageSource;
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    branchyserve::util::logger::init();
+    let rate = env_f64("RATE_RPS", 90.0);
+    let duration = Duration::from_secs_f64(env_f64("DURATION_S", 5.0));
+    let shards = env_f64("SHARDS", 2.0) as usize;
+    let cloud_workers = env_f64("CLOUD_WORKERS", 2.0) as usize;
+    let stage_cost = Duration::from_micros(env_f64("STAGE_COST_US", 200.0) as u64);
+    let threshold = env_f64("THRESHOLD", 0.35) as f32;
+    let gamma = env_f64("GAMMA", 50.0);
+
+    // Simulated model, kept small so 3G transfers stay sub-second.
+    let manifest = Manifest::synthetic_sim(
+        "sim-balexnet",
+        vec![3, 32, 32],
+        &[2048, 1024, 512, 128, 2],
+        1,
+        2,
+        vec![1, 2, 4, 8],
+    )?;
+
+    // Measure the sim's per-stage times like a deployment would profile
+    // its cloud node.
+    let probe = InferenceEngine::open_sim_with_cost(manifest.clone(), "profile", stage_cost)?;
+    let delay = profiler::measure(&probe, ProfileOptions::default())?.to_delay_profile(gamma);
+
+    let registry = ClassRegistry::builtin(); // 3G / 4G / WiFi
+    let m = manifest.clone();
+    let fleet = Arc::new(Fleet::start(
+        registry,
+        &manifest,
+        &delay,
+        FleetConfig {
+            shards_per_class: shards,
+            cloud_workers_per_shard: cloud_workers,
+            routing: RoutePolicy::LeastLoaded,
+            entropy_threshold: threshold,
+            batch_timeout: Duration::from_millis(2),
+            ..Default::default()
+        },
+        move |label| {
+            Ok((
+                InferenceEngine::open_sim_with_cost(m.clone(), &format!("{label}-edge"), stage_cost)?,
+                InferenceEngine::open_sim_with_cost(
+                    m.clone(),
+                    &format!("{label}-cloud"),
+                    stage_cost,
+                )?,
+            ))
+        },
+    )?);
+
+    println!("fleet: 3 classes x {shards} shard(s) x {cloud_workers} cloud worker(s)");
+    for c in &fleet.report().classes {
+        println!(
+            "  {:>5} @ {:>6.2} Mbps -> split after stage {}",
+            c.name, c.link.uplink_mbps, c.split_after
+        );
+    }
+
+    // Open-loop Poisson mix: 20% 3G, 50% 4G, 30% WiFi.
+    let mix = [("3G", 0.20), ("4G", 0.50), ("WiFi", 0.30)];
+    let n_clients = 6usize;
+    let per_client = rate / n_clients as f64;
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let fleet = fleet.clone();
+        let classes: Vec<(LinkClass, f64)> = mix
+            .iter()
+            .map(|&(name, share)| (fleet.class_by_name(name).unwrap(), share))
+            .collect();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg32::seeded(300 + c as u64);
+            let mut source = ImageSource::new(400 + c as u64);
+            let start = Instant::now();
+            let mut next = start;
+            let mut pending = Vec::new();
+            let mut rejected = 0u64;
+            while start.elapsed() < duration {
+                let now = Instant::now();
+                if now < next {
+                    std::thread::sleep(next - now);
+                }
+                next += Duration::from_secs_f64(rng.exponential(per_client));
+                // Sample the class mix.
+                let mut u = rng.f64();
+                let mut class = classes[0].0;
+                for &(id, share) in &classes {
+                    class = id;
+                    if u < share {
+                        break;
+                    }
+                    u -= share;
+                }
+                let (img, _) = source.sample();
+                match fleet.submit(class, img) {
+                    Ok((_, rx)) => pending.push(rx),
+                    Err(_) => rejected += 1,
+                }
+            }
+            let mut completed = 0u64;
+            for rx in pending {
+                if rx.recv_timeout(Duration::from_secs(30)).is_ok() {
+                    completed += 1;
+                }
+            }
+            (completed, rejected)
+        }));
+    }
+
+    let mut completed = 0u64;
+    let mut rejected = 0u64;
+    for h in handles {
+        let (c, r) = h.join().expect("client thread");
+        completed += c;
+        rejected += r;
+    }
+
+    println!("\n=== mixed-link fleet report ===");
+    println!(
+        "offered {} for {:.1}s -> completed {completed}, rejected {rejected}, measured {}",
+        format_rate(rate),
+        duration.as_secs_f64(),
+        format_rate(completed as f64 / duration.as_secs_f64()),
+    );
+    let report = fleet.report();
+    println!("{}", report.summary());
+    for c in &report.classes {
+        println!(
+            "  {:>5}: split {} | mean {} | exits {:.1}% | shards completed {:?}",
+            c.name,
+            c.split_after,
+            format_secs(c.aggregate.mean_latency_s),
+            c.aggregate.exit_rate() * 100.0,
+            c.shards.iter().map(|s| s.completed).collect::<Vec<_>>(),
+        );
+    }
+
+    let final_report = match Arc::try_unwrap(fleet) {
+        Ok(f) => f.shutdown(),
+        Err(arc) => arc.report(),
+    };
+    println!("\nfinal: {}", final_report.total.summary());
+    Ok(())
+}

@@ -94,6 +94,7 @@ fn main() -> anyhow::Result<()> {
             max_batch: exec_b,
             batch_timeout: Duration::from_millis(2),
             queue_capacity: 4096,
+            ..Default::default()
         },
     ));
     let server = Server::new(coordinator.clone()).start(0)?;

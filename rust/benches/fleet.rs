@@ -1,0 +1,140 @@
+//! Fleet throughput scaling: aggregate completions/sec as the edge shard
+//! count grows 1 → 2 → 4 on the simulated model. The synthetic per-stage
+//! compute cost is sleep-based, so the scaling signal measures pipeline
+//! parallelism (what sharding buys) rather than host core count.
+//!
+//!     cargo bench --bench fleet          # full run
+//!     SMOKE=1 cargo bench --bench fleet  # CI smoke: shorter windows
+//!
+//! Acceptance bar: throughput must increase monotonically from 1 to 4
+//! shards (each doubling at least +20%).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use branchyserve::fleet::{ClassProfile, ClassRegistry, Fleet, FleetConfig, RoutePolicy};
+use branchyserve::model::Manifest;
+use branchyserve::runtime::InferenceEngine;
+use branchyserve::timing::DelayProfile;
+use branchyserve::util::timefmt::format_rate;
+use branchyserve::workload::ImageSource;
+
+fn main() -> anyhow::Result<()> {
+    branchyserve::util::logger::init();
+    let smoke = std::env::var("SMOKE").is_ok();
+    let stage_cost = Duration::from_micros(300);
+    let window = Duration::from_millis(if smoke { 500 } else { 1500 });
+
+    // Output sizes chosen so every cut's transfer dwarfs the remaining
+    // edge work on a 3G uplink: the plan is edge-only and shard scaling
+    // measures pure edge-pipeline parallelism.
+    let manifest = Manifest::synthetic_sim(
+        "sim-fleet-bench",
+        vec![3, 32, 32],
+        &[4096, 2048, 1024, 2],
+        1,
+        2,
+        vec![1, 2, 4, 8],
+    )?;
+    let profile = DelayProfile::from_cloud_times(vec![2e-4; 4], 5e-5, 20.0);
+
+    let mut rows: Vec<(usize, u64, f64, Vec<u64>)> = Vec::new();
+    for &shards in &[1usize, 2, 4] {
+        let m = manifest.clone();
+        let fleet = Arc::new(Fleet::start(
+            ClassRegistry::single(ClassProfile::custom("3g", 1.10, 0.0)?),
+            &manifest,
+            &profile,
+            FleetConfig {
+                shards_per_class: shards,
+                cloud_workers_per_shard: 2,
+                // Deterministic spread: this bench gates CI, and
+                // round-robin removes any routing luck from the signal.
+                routing: RoutePolicy::RoundRobin,
+                entropy_threshold: 0.0, // nothing exits: full pipeline work
+                batch_timeout: Duration::from_millis(1),
+                real_time_channel: false,
+                ..Default::default()
+            },
+            move |label| {
+                Ok((
+                    InferenceEngine::open_sim_with_cost(
+                        m.clone(),
+                        &format!("{label}-e"),
+                        stage_cost,
+                    )?,
+                    InferenceEngine::open_sim_with_cost(
+                        m.clone(),
+                        &format!("{label}-c"),
+                        stage_cost,
+                    )?,
+                ))
+            },
+        )?);
+        let plan = fleet.plan_of(fleet.class_by_name("3g").unwrap())?;
+        assert!(
+            plan.is_edge_only(4),
+            "bench premise broken: expected an edge-only plan, got split {}",
+            plan.split_after
+        );
+
+        // Closed loop: 8 clients per shard keep every batcher saturated.
+        let completed = Arc::new(AtomicU64::new(0));
+        let start = Instant::now();
+        let deadline = start + window;
+        let clients: Vec<_> = (0..8 * shards)
+            .map(|c| {
+                let fleet = fleet.clone();
+                let completed = completed.clone();
+                std::thread::spawn(move || {
+                    let class = fleet.class_by_name("3g").unwrap();
+                    let (img, _) = ImageSource::new(900 + c as u64).sample();
+                    while Instant::now() < deadline {
+                        if fleet.infer_sync(class, img.clone()).is_ok() {
+                            completed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in clients {
+            h.join().expect("client thread");
+        }
+        let wall = start.elapsed().as_secs_f64();
+        let report = fleet.shutdown();
+        let done = completed.load(Ordering::Relaxed);
+        let per_shard: Vec<u64> = report.classes[0].shards.iter().map(|s| s.completed).collect();
+        rows.push((shards, done, done as f64 / wall, per_shard));
+    }
+
+    println!("\n=== fleet throughput scaling (sim model, 3G class, edge-only plan) ===");
+    println!("{:>7} {:>12} {:>14}  per-shard completions", "shards", "completed", "throughput");
+    for (shards, done, tput, per_shard) in &rows {
+        println!(
+            "{shards:>7} {done:>12} {:>14}  {per_shard:?}",
+            format_rate(*tput)
+        );
+    }
+
+    // Monotonic scaling 1 -> 2 -> 4 with a real margin at each doubling.
+    for pair in rows.windows(2) {
+        let (s0, _, t0, _) = &pair[0];
+        let (s1, _, t1, _) = &pair[1];
+        assert!(
+            t1 > &(t0 * 1.2),
+            "throughput did not scale {s0} -> {s1} shards: {t0:.0} rps -> {t1:.0} rps"
+        );
+    }
+    // Every shard of the widest fleet actually served traffic.
+    let widest = &rows.last().unwrap().3;
+    assert!(
+        widest.iter().all(|&c| c > 0),
+        "routing left shards idle: {widest:?}"
+    );
+    println!(
+        "\n1 -> 4 shards: {:.2}x aggregate throughput — scaling OK",
+        rows[2].2 / rows[0].2
+    );
+    Ok(())
+}

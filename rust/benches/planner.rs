@@ -20,6 +20,12 @@ use branchyserve::util::timefmt::format_rate;
 
 fn main() {
     branchyserve::util::logger::init();
+    // SMOKE=1 (CI): shorter timing windows, same assertions.
+    let window = if std::env::var("SMOKE").is_ok() {
+        Duration::from_millis(60)
+    } else {
+        Duration::from_millis(200)
+    };
 
     // The bandwidth samples an adaptive loop would see: a multiplicative
     // random walk around 4G, clamped to [0.2, 50] Mbps.
@@ -49,7 +55,7 @@ fn main() {
         };
         let cold = bench(
             &format!("cold graph+dijkstra  n={n}"),
-            Duration::from_millis(200),
+            window,
             || {
                 let link = links[ic()];
                 let (split, _) = compact::solve_split(&desc, &profile, link, 1e-9, true);
@@ -68,7 +74,7 @@ fn main() {
         };
         let incremental = bench(
             &format!("planner plan_for     n={n}"),
-            Duration::from_millis(200),
+            window,
             || {
                 let link = links[ii()];
                 let plan = planner.plan_for(link);
@@ -89,7 +95,7 @@ fn main() {
         };
         let cached = bench(
             &format!("planner plan_cached  n={n}"),
-            Duration::from_millis(200),
+            window,
             || {
                 let link = links[ik()];
                 let plan = planner.plan_cached(link);

@@ -126,6 +126,28 @@ pub struct ServeSettings {
     pub queue_capacity: usize,
 }
 
+/// `[fleet]`: how many pipelines the serving path fans out to.
+#[derive(Debug, Clone)]
+pub struct FleetSettings {
+    /// Edge/cloud pipeline pairs per link class.
+    pub shards: usize,
+    /// Cloud worker threads per shard.
+    pub cloud_workers: usize,
+    /// Shard routing policy: "round-robin" | "hash" | "least-loaded".
+    pub routing: String,
+}
+
+/// One `[[link_class]]` entry: a named client population with its own
+/// uplink (and hence its own partition plan).
+#[derive(Debug, Clone)]
+pub struct LinkClassSettings {
+    pub name: String,
+    pub uplink_mbps: f64,
+    pub rtt_s: f64,
+    /// Planning exit-probability override for this class.
+    pub exit_probability: Option<f64>,
+}
+
 #[derive(Debug, Clone)]
 pub struct Settings {
     pub model: ModelSettings,
@@ -134,6 +156,9 @@ pub struct Settings {
     pub branch: BranchSettings,
     pub partition: PartitionSettings,
     pub serve: ServeSettings,
+    pub fleet: FleetSettings,
+    /// Empty = a single default class derived from `network`.
+    pub link_classes: Vec<LinkClassSettings>,
 }
 
 impl Default for Settings {
@@ -164,6 +189,12 @@ impl Default for Settings {
                 batch_timeout_ms: 2.0,
                 queue_capacity: 1024,
             },
+            fleet: FleetSettings {
+                shards: 1,
+                cloud_workers: 1,
+                routing: "least-loaded".into(),
+            },
+            link_classes: Vec::new(),
         }
     }
 }
@@ -230,6 +261,49 @@ impl Settings {
         if let Some(v) = doc.path("serve.queue_capacity").and_then(Json::as_usize) {
             self.serve.queue_capacity = v;
         }
+        if let Some(v) = doc.path("fleet.shards").and_then(Json::as_usize) {
+            self.fleet.shards = v;
+        }
+        if let Some(v) = doc.path("fleet.cloud_workers").and_then(Json::as_usize) {
+            self.fleet.cloud_workers = v;
+        }
+        if let Some(v) = doc.path("fleet.routing").and_then(Json::as_str) {
+            self.fleet.routing = v.to_string();
+        }
+        if let Some(arr) = doc.get("link_class").and_then(Json::as_arr) {
+            self.link_classes.clear();
+            for (i, entry) in arr.iter().enumerate() {
+                let name = entry
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("link_class[{i}].name is required"))?
+                    .to_string();
+                // A bare builtin name ("3g"/"4g"/"wifi") may omit the rate.
+                let builtin = crate::network::bandwidth::Profile::parse(&name).ok();
+                let uplink_mbps = entry
+                    .get("uplink_mbps")
+                    .and_then(Json::as_f64)
+                    .or_else(|| builtin.map(|p| p.uplink_mbps()))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "link_class[{i}] ('{name}'): uplink_mbps is required for \
+                             non-builtin classes"
+                        )
+                    })?;
+                let rtt_s = entry
+                    .get("rtt_ms")
+                    .and_then(Json::as_f64)
+                    .map(|ms| ms / 1e3)
+                    .unwrap_or(0.0);
+                let exit_probability = entry.get("exit_probability").and_then(Json::as_f64);
+                self.link_classes.push(LinkClassSettings {
+                    name,
+                    uplink_mbps,
+                    rtt_s,
+                    exit_probability,
+                });
+            }
+        }
         Ok(())
     }
 
@@ -267,6 +341,55 @@ impl Settings {
         }
         if self.serve.batch_timeout_ms < 0.0 {
             bail!("serve.batch_timeout_ms must be >= 0");
+        }
+        if !(1..=64).contains(&self.fleet.shards) {
+            bail!("fleet.shards must be in 1..=64; got {}", self.fleet.shards);
+        }
+        if !(1..=64).contains(&self.fleet.cloud_workers) {
+            bail!(
+                "fleet.cloud_workers must be in 1..=64; got {}",
+                self.fleet.cloud_workers
+            );
+        }
+        if let Err(e) = crate::fleet::router::RoutePolicy::parse(&self.fleet.routing) {
+            bail!("fleet.routing: {e}");
+        }
+        if self.link_classes.len() > 256 {
+            bail!(
+                "at most 256 link_class entries (u8 wire tag); got {}",
+                self.link_classes.len()
+            );
+        }
+        let mut seen = std::collections::HashSet::new();
+        for (i, c) in self.link_classes.iter().enumerate() {
+            if c.name.trim().is_empty() {
+                bail!("link_class[{i}].name must be non-empty");
+            }
+            if !seen.insert(c.name.to_ascii_lowercase()) {
+                bail!("link_class[{i}].name duplicates '{}'", c.name);
+            }
+            if !(c.uplink_mbps.is_finite() && c.uplink_mbps > 0.0) {
+                bail!(
+                    "link_class[{i}] ('{}'): uplink_mbps must be positive and finite; got {}",
+                    c.name,
+                    c.uplink_mbps
+                );
+            }
+            if !(c.rtt_s.is_finite() && c.rtt_s >= 0.0) {
+                bail!(
+                    "link_class[{i}] ('{}'): rtt_ms must be non-negative and finite; got {}",
+                    c.name,
+                    c.rtt_s * 1e3
+                );
+            }
+            if let Some(p) = c.exit_probability {
+                if !(0.0..=1.0).contains(&p) {
+                    bail!(
+                        "link_class[{i}] ('{}'): exit_probability must be in [0, 1]; got {p}",
+                        c.name
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -339,6 +462,91 @@ max_batch = 4
         let mut s = Settings::default();
         s.partition.epsilon = 0.1;
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_and_link_class_overlay() {
+        let doc = toml::parse(
+            r#"
+[fleet]
+shards = 4
+cloud_workers = 2
+routing = "hash"
+
+[[link_class]]
+name = "3g"
+
+[[link_class]]
+name = "satellite"
+uplink_mbps = 0.35
+rtt_ms = 280
+exit_probability = 0.8
+"#,
+        )
+        .unwrap();
+        let mut s = Settings::default();
+        s.apply(&doc).unwrap();
+        s.validate().unwrap();
+        assert_eq!(s.fleet.shards, 4);
+        assert_eq!(s.fleet.cloud_workers, 2);
+        assert_eq!(s.fleet.routing, "hash");
+        assert_eq!(s.link_classes.len(), 2);
+        // Builtin name: paper rate filled in automatically.
+        assert_eq!(s.link_classes[0].name, "3g");
+        assert!((s.link_classes[0].uplink_mbps - 1.10).abs() < 1e-12);
+        assert!((s.link_classes[1].rtt_s - 0.28).abs() < 1e-12);
+        assert_eq!(s.link_classes[1].exit_probability, Some(0.8));
+    }
+
+    #[test]
+    fn fleet_validation_errors_name_the_field() {
+        let mut s = Settings::default();
+        s.fleet.shards = 0;
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("fleet.shards"), "{e}");
+
+        let mut s = Settings::default();
+        s.fleet.routing = "magic".into();
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("fleet.routing"), "{e}");
+
+        let mut s = Settings::default();
+        s.link_classes.push(LinkClassSettings {
+            name: "x".into(),
+            uplink_mbps: -2.0,
+            rtt_s: 0.0,
+            exit_probability: None,
+        });
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("link_class[0]") && e.contains("uplink_mbps"), "{e}");
+
+        let mut s = Settings::default();
+        for name in ["a", "A"] {
+            s.link_classes.push(LinkClassSettings {
+                name: name.into(),
+                uplink_mbps: 5.0,
+                rtt_s: 0.0,
+                exit_probability: None,
+            });
+        }
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("link_class[1].name"), "{e}");
+
+        let mut s = Settings::default();
+        s.link_classes.push(LinkClassSettings {
+            name: "x".into(),
+            uplink_mbps: 5.0,
+            rtt_s: 0.0,
+            exit_probability: Some(1.5),
+        });
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("exit_probability"), "{e}");
+
+        // A non-builtin class without a rate fails at overlay time.
+        let doc = toml::parse("[[link_class]]\nname = \"mystery\"\n").unwrap();
+        let mut s = Settings::default();
+        let e = s.apply(&doc).unwrap_err().to_string();
+        assert!(e.contains("link_class[0]") && e.contains("uplink_mbps"), "{e}");
     }
 
     #[test]

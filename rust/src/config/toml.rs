@@ -1,11 +1,13 @@
 //! TOML-subset parser for config files (`branchyserve --config serve.toml`).
 //!
-//! Supported: `[section]` / `[a.b]` tables, `key = value` with string,
-//! integer, float, boolean and homogeneous-array values, `#` comments.
-//! Unsupported (rejected, not silently misread): multiline strings,
-//! datetimes, inline tables, arrays of tables. That subset covers every
-//! config this project ships; values land in the same `Json` tree the
-//! JSON parser produces so `Settings` has one extraction path.
+//! Supported: `[section]` / `[a.b]` tables, `[[entry]]` arrays of tables
+//! (each header appends one element; keys land in the newest element —
+//! how `[[link_class]]` fleet configs are written), `key = value` with
+//! string, integer, float, boolean and homogeneous-array values, `#`
+//! comments. Unsupported (rejected, not silently misread): multiline
+//! strings, datetimes, inline tables. That subset covers every config
+//! this project ships; values land in the same `Json` tree the JSON
+//! parser produces so `Settings` has one extraction path.
 
 use std::collections::BTreeMap;
 
@@ -33,20 +35,42 @@ pub fn parse(text: &str) -> Result<Json, TomlError> {
             msg: msg.to_string(),
         };
 
+        if let Some(rest) = line.strip_prefix("[[") {
+            // Array-of-tables header: append one element, point the
+            // cursor at it.
+            let inner = rest
+                .strip_suffix("]]")
+                .ok_or_else(|| err("unclosed '[['"))?;
+            let path = split_header(inner).map_err(|m| err(&m))?;
+            let (last, parents) = path.split_last().expect("split_header is non-empty");
+            let parent = resolve_table(&mut root, parents).map_err(|m| err(&m))?;
+            match parent
+                .entry(last.clone())
+                .or_insert_with(|| Json::Arr(Vec::new()))
+            {
+                Json::Arr(items) => items.push(Json::Obj(BTreeMap::new())),
+                _ => return Err(err(&format!("'{last}' is not an array of tables"))),
+            }
+            current_path = path;
+            continue;
+        }
+
         if let Some(rest) = line.strip_prefix('[') {
-            if line.starts_with("[[") {
-                return Err(err("arrays of tables are not supported"));
-            }
             let inner = rest.strip_suffix(']').ok_or_else(|| err("unclosed '['"))?;
-            if inner.is_empty() {
-                return Err(err("empty table name"));
+            let path = split_header(inner).map_err(|m| err(&m))?;
+            // Materialize the table even if empty. Parent segments may
+            // pass through array-of-tables elements, but the named table
+            // itself must be a plain table — `[a]` cannot reopen `[[a]]`.
+            let (last, parents) = path.split_last().expect("split_header is non-empty");
+            let parent = resolve_table(&mut root, parents).map_err(|m| err(&m))?;
+            match parent
+                .entry(last.clone())
+                .or_insert_with(|| Json::Obj(BTreeMap::new()))
+            {
+                Json::Obj(_) => {}
+                _ => return Err(err(&format!("'{last}' is not a table"))),
             }
-            current_path = inner.split('.').map(|s| s.trim().to_string()).collect();
-            if current_path.iter().any(|s| s.is_empty() || !is_bare_key(s)) {
-                return Err(err("invalid table name"));
-            }
-            // Materialize the table even if empty.
-            ensure_table(&mut root, &current_path).map_err(|m| err(&m))?;
+            current_path = path;
             continue;
         }
 
@@ -60,12 +84,23 @@ pub fn parse(text: &str) -> Result<Json, TomlError> {
             return Err(err("missing value"));
         }
         let value = parse_value(vtext).map_err(|m| err(&m))?;
-        let table = ensure_table(&mut root, &current_path).map_err(|m| err(&m))?;
+        let table = resolve_table(&mut root, &current_path).map_err(|m| err(&m))?;
         if table.insert(key.to_string(), value).is_some() {
             return Err(err(&format!("duplicate key '{key}'")));
         }
     }
     Ok(Json::Obj(root))
+}
+
+fn split_header(inner: &str) -> Result<Vec<String>, String> {
+    if inner.trim().is_empty() {
+        return Err("empty table name".to_string());
+    }
+    let path: Vec<String> = inner.split('.').map(|s| s.trim().to_string()).collect();
+    if path.iter().any(|s| s.is_empty() || !is_bare_key(s)) {
+        return Err("invalid table name".to_string());
+    }
+    Ok(path)
 }
 
 fn is_bare_key(s: &str) -> bool {
@@ -92,7 +127,11 @@ fn strip_comment(line: &str) -> &str {
     line
 }
 
-fn ensure_table<'a>(
+/// Walk `path` creating plain tables for missing segments. A segment
+/// holding an array of tables resolves to its *newest* element — that is
+/// how `[a]` headers and `k = v` lines nested under a `[[a]]` entry find
+/// their home.
+fn resolve_table<'a>(
     root: &'a mut BTreeMap<String, Json>,
     path: &[String],
 ) -> Result<&'a mut BTreeMap<String, Json>, String> {
@@ -103,6 +142,10 @@ fn ensure_table<'a>(
             .or_insert_with(|| Json::Obj(BTreeMap::new()));
         match entry {
             Json::Obj(m) => cur = m,
+            Json::Arr(items) => match items.last_mut() {
+                Some(Json::Obj(m)) => cur = m,
+                _ => return Err(format!("'{part}' is not an array of tables")),
+            },
             _ => return Err(format!("'{part}' is both a value and a table")),
         }
     }
@@ -251,16 +294,51 @@ names = ["a", "b,c"]
     #[test]
     fn rejects_unsupported_and_malformed() {
         for bad in [
-            "[[tables]]",
             "k =",
             "= 3",
             "k = nope",
             "[a.]",
+            "[[a.]]",
+            "[[a]",
             "k = \"unterminated",
             "k = 1\nk = 2",
         ] {
             assert!(parse(bad).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn arrays_of_tables() {
+        let doc = r#"
+[fleet]
+shards = 4
+
+[[link_class]]
+name = "3g"
+uplink_mbps = 1.10
+
+[[link_class]]
+name = "wifi"
+uplink_mbps = 18.8
+rtt_ms = 5
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.path("fleet.shards").unwrap().as_u64(), Some(4));
+        let classes = v.get("link_class").unwrap().as_arr().unwrap();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[0].get("name").unwrap().as_str(), Some("3g"));
+        assert_eq!(classes[1].get("rtt_ms").unwrap().as_f64(), Some(5.0));
+        // Keys after a [[header]] land in the newest element only.
+        assert!(classes[0].get("rtt_ms").is_none());
+    }
+
+    #[test]
+    fn array_of_tables_conflicts_rejected() {
+        // A plain table cannot reopen an array-of-tables name...
+        assert!(parse("[[a]]\nx = 1\n[a]\ny = 2").is_err());
+        // ...nor can an array header reuse a plain table or value name.
+        assert!(parse("[a]\nx = 1\n[[a]]\ny = 2").is_err());
+        assert!(parse("a = 3\n[[a]]\ny = 2").is_err());
     }
 
     #[test]

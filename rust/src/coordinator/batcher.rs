@@ -69,48 +69,45 @@ impl<T> Batcher<T> {
     /// Blocking batch pull; `None` only after `close` with a drained queue.
     pub fn next_batch(&self) -> Option<Vec<T>> {
         let mut st = self.state.lock().unwrap();
-        'restart: loop {
+        loop {
             // Wait for the first item (or close).
-            loop {
-                if !st.queue.is_empty() {
-                    break;
-                }
+            while st.queue.is_empty() {
                 if st.closed {
                     return None;
                 }
                 st = self.not_empty.wait(st).unwrap();
             }
-            // Deadline anchored at the oldest queued item.
-            let deadline = st.queue.front().unwrap().0 + self.batch_timeout;
+            // Collect until the batch fills or the oldest queued item's
+            // deadline lapses. The deadline is re-derived from the
+            // *current* front every iteration: with sibling consumers
+            // (M cloud workers share one queue) the item we anchored on
+            // may have been drained by another worker while we slept,
+            // and a deadline cached from a consumed item would flush a
+            // fresh item's batch early.
             loop {
-                if st.queue.len() >= self.max_batch || st.closed {
-                    break;
+                if st.queue.is_empty() {
+                    if st.closed {
+                        return None;
+                    }
+                    break; // sibling drained it; back to the outer wait
                 }
+                if st.queue.len() >= self.max_batch || st.closed {
+                    return Some(Self::drain_locked(&mut st, self.max_batch));
+                }
+                let deadline = st.queue.front().unwrap().0 + self.batch_timeout;
                 let now = Instant::now();
                 if now >= deadline {
-                    break;
+                    return Some(Self::drain_locked(&mut st, self.max_batch));
                 }
-                let (next, timeout) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+                let (next, _) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
                 st = next;
-                if timeout.timed_out() {
-                    break;
-                }
-                // With multiple consumers, a sibling may have drained the
-                // queue while we slept; re-anchor on the (new) oldest item.
-                if st.queue.is_empty() {
-                    continue 'restart;
-                }
             }
-            // Same race on the deadline/timeout exits.
-            if st.queue.is_empty() {
-                if st.closed {
-                    return None;
-                }
-                continue 'restart;
-            }
-            let n = st.queue.len().min(self.max_batch);
-            return Some(st.queue.drain(..n).map(|(_, item)| item).collect());
         }
+    }
+
+    fn drain_locked(st: &mut State<T>, max_batch: usize) -> Vec<T> {
+        let n = st.queue.len().min(max_batch);
+        st.queue.drain(..n).map(|(_, item)| item).collect()
     }
 
     pub fn close(&self) {
@@ -205,5 +202,88 @@ mod tests {
         std::thread::sleep(Duration::from_millis(10));
         b.close();
         assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn deadline_anchored_at_first_item_not_extended_by_later_ones() {
+        // Items trickle in faster than the timeout; the batch must flush
+        // at (first item + timeout), not slide to the newest arrival.
+        let b = Arc::new(Batcher::new(100, 64, Duration::from_millis(60)));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || {
+            let batch = b2.next_batch().unwrap();
+            (batch, Instant::now())
+        });
+        let t0 = Instant::now();
+        for i in 0..10 {
+            b.submit(i).unwrap();
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        let (batch, flushed_at) = h.join().unwrap();
+        let dt = flushed_at - t0;
+        assert!(!batch.is_empty() && batch[0] == 0);
+        assert!(
+            batch.len() < 10,
+            "a per-item deadline would have collected all 10: {batch:?}"
+        );
+        assert!(dt >= Duration::from_millis(55), "flushed too early: {dt:?}");
+        assert!(
+            dt < Duration::from_millis(140),
+            "deadline slid with later arrivals: {dt:?}"
+        );
+    }
+
+    #[test]
+    fn close_flushes_worker_waiting_on_deadline() {
+        // A worker holding a partial batch inside the (very long)
+        // deadline wait must be woken by close() and return the batch —
+        // not sleep out the timeout or lose the items.
+        let b = Arc::new(Batcher::new(10, 8, Duration::from_secs(100)));
+        b.submit(7u32).unwrap();
+        let b2 = b.clone();
+        let t0 = Instant::now();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert_eq!(h.join().unwrap().unwrap(), vec![7]);
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        // Drained and closed: the next pull reports shutdown.
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn sibling_consumers_share_one_queue_without_losing_items() {
+        // Two workers on one queue (the M-cloud-workers shape): every
+        // item is delivered exactly once across the pair.
+        let b = Arc::new(Batcher::new(1000, 4, Duration::from_millis(2)));
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let b2 = b.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(batch) = b2.next_batch() {
+                        got.extend(batch);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for i in 0..200u32 {
+            b.submit(i).unwrap();
+            if i % 16 == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        // Let the queue drain before closing.
+        while !b.is_empty() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        b.close();
+        let mut all: Vec<u32> = workers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..200).collect::<Vec<_>>());
     }
 }

@@ -48,6 +48,11 @@ pub struct CoordinatorConfig {
     pub max_batch: usize,
     pub batch_timeout: Duration,
     pub queue_capacity: usize,
+    /// Cloud worker threads sharing this pipeline's transfer queue.
+    /// More than one lets cloud compute (and the simulated transfer
+    /// waits) overlap across batches; all workers share one engine
+    /// handle, so with a single PJRT client compute still serializes.
+    pub cloud_workers: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -57,6 +62,7 @@ impl Default for CoordinatorConfig {
             max_batch: 8,
             batch_timeout: Duration::from_millis(2),
             queue_capacity: 1024,
+            cloud_workers: 1,
         }
     }
 }
@@ -126,14 +132,14 @@ impl Coordinator {
                     .expect("spawn edge worker"),
             );
         }
-        {
-            let engine = cloud_engine;
+        for i in 0..cfg.cloud_workers.max(1) {
+            let engine = cloud_engine.clone();
             let plan = plan.clone();
             let cloud_queue = cloud_queue.clone();
             let metrics = metrics.clone();
             workers.push(
                 std::thread::Builder::new()
-                    .name("cloud-worker".into())
+                    .name(format!("cloud-worker-{i}"))
                     .spawn(move || cloud_loop(engine, plan, cloud_queue, metrics))
                     .expect("spawn cloud worker"),
             );
@@ -179,6 +185,17 @@ impl Coordinator {
 
     pub fn channel(&self) -> &Channel {
         &self.channel
+    }
+
+    /// Requests waiting in the admission queue — the load signal a
+    /// least-loaded fleet router keys on.
+    pub fn queue_depth(&self) -> usize {
+        self.ingress.len()
+    }
+
+    /// Transferred samples waiting for a cloud worker.
+    pub fn cloud_queue_depth(&self) -> usize {
+        self.cloud_queue.len()
     }
 
     /// Submit one image; the response arrives on the returned receiver.

@@ -22,7 +22,6 @@ pub struct Metrics {
     /// (incremented by `Coordinator::set_plan` when the split moves).
     pub plan_switches: AtomicU64,
     latency: Mutex<LatencyHistogram>,
-    latency_samples: Mutex<Vec<f64>>,
 }
 
 impl Metrics {
@@ -33,18 +32,23 @@ impl Metrics {
     #[inline]
     pub fn record_latency(&self, secs: f64) {
         self.latency.lock().unwrap().push(secs);
-        let mut v = self.latency_samples.lock().unwrap();
-        // Reservoir cap to bound memory on long runs.
-        if v.len() < 100_000 {
-            v.push(secs);
-        }
     }
 
     pub fn snapshot(&self, since: Instant) -> MetricsSnapshot {
         let elapsed = since.elapsed().as_secs_f64().max(1e-9);
         let completed = self.completed.load(Ordering::Relaxed);
-        let samples = self.latency_samples.lock().unwrap().clone();
+        // Fixed-size clone (~80 buckets + scalars): snapshots stay cheap
+        // no matter how long the shard has been serving, and a fleet can
+        // merge them losslessly.
         let hist = self.latency.lock().unwrap().clone();
+        // A window that served nothing reports zeros, not NaN: snapshots
+        // of idle shards get aggregated, serialized and formatted, and a
+        // NaN poisons every one of those paths.
+        let (p50_s, p99_s) = if hist.count() == 0 {
+            (0.0, 0.0)
+        } else {
+            (hist.quantile(0.5), hist.quantile(0.99))
+        };
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
@@ -56,15 +60,11 @@ impl Metrics {
             cloud_batches: self.cloud_batches.load(Ordering::Relaxed),
             plan_switches: self.plan_switches.load(Ordering::Relaxed),
             throughput_rps: completed as f64 / elapsed,
-            mean_latency_s: if samples.is_empty() {
-                f64::NAN
-            } else {
-                samples.iter().sum::<f64>() / samples.len() as f64
-            },
-            p50_s: hist.quantile(0.5),
-            p99_s: hist.quantile(0.99),
+            mean_latency_s: hist.mean(),
+            p50_s,
+            p99_s,
             elapsed_s: elapsed,
-            samples,
+            latency_hist: hist,
         }
     }
 }
@@ -86,10 +86,76 @@ pub struct MetricsSnapshot {
     pub p50_s: f64,
     pub p99_s: f64,
     pub elapsed_s: f64,
-    pub samples: Vec<f64>,
+    /// Full-run latency distribution (fixed-size log histogram; merging
+    /// these is how fleet aggregates stay accurate over long runs).
+    pub latency_hist: LatencyHistogram,
 }
 
 impl MetricsSnapshot {
+    /// An all-zero snapshot (the identity element of [`Self::aggregate`]).
+    pub fn zero() -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: 0,
+            rejected: 0,
+            completed: 0,
+            edge_exits: 0,
+            cloud_completions: 0,
+            transferred_bytes: 0,
+            edge_batches: 0,
+            cloud_batches: 0,
+            plan_switches: 0,
+            throughput_rps: 0.0,
+            mean_latency_s: 0.0,
+            p50_s: 0.0,
+            p99_s: 0.0,
+            elapsed_s: 0.0,
+            latency_hist: LatencyHistogram::new(),
+        }
+    }
+
+    /// Combine per-shard (or per-class) snapshots into one view:
+    /// counters add, the latency histograms merge losslessly (so the
+    /// aggregate's mean/p50/p99 cover the *whole* run, exactly like each
+    /// shard's own), and throughput is total completions over the
+    /// longest window (the shards ran concurrently, not back to back).
+    /// Empty input — and shards that served nothing — aggregate to
+    /// zeros, not NaN.
+    pub fn aggregate(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
+        let mut out = MetricsSnapshot::zero();
+        for p in parts {
+            out.submitted += p.submitted;
+            out.rejected += p.rejected;
+            out.completed += p.completed;
+            out.edge_exits += p.edge_exits;
+            out.cloud_completions += p.cloud_completions;
+            out.transferred_bytes += p.transferred_bytes;
+            out.edge_batches += p.edge_batches;
+            out.cloud_batches += p.cloud_batches;
+            out.plan_switches += p.plan_switches;
+            out.elapsed_s = out.elapsed_s.max(p.elapsed_s);
+            out.latency_hist.merge(&p.latency_hist);
+        }
+        if out.elapsed_s > 0.0 {
+            out.throughput_rps = out.completed as f64 / out.elapsed_s;
+        }
+        out.mean_latency_s = out.latency_hist.mean();
+        if out.latency_hist.count() > 0 {
+            out.p50_s = out.latency_hist.quantile(0.5);
+            out.p99_s = out.latency_hist.quantile(0.99);
+        }
+        out
+    }
+
+    /// Flat JSON for the server's METRICS response.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"completed\":{},\"edge_exits\":{},\"rejected\":{},\
+             \"throughput_rps\":{:.3},\"p50_s\":{:.6},\"p99_s\":{:.6}}}",
+            self.completed, self.edge_exits, self.rejected, self.throughput_rps, self.p50_s,
+            self.p99_s
+        )
+    }
+
     pub fn exit_rate(&self) -> f64 {
         if self.completed == 0 {
             0.0
@@ -141,9 +207,50 @@ mod tests {
 
     #[test]
     fn empty_snapshot_is_sane() {
+        // A shard that has served nothing yet must report clean zeros —
+        // no NaN in any statistic, a renderable summary, valid JSON.
         let m = Metrics::new();
         let s = m.snapshot(Instant::now());
         assert_eq!(s.exit_rate(), 0.0);
-        assert!(s.mean_latency_s.is_nan());
+        assert_eq!(s.mean_latency_s, 0.0);
+        assert_eq!(s.p50_s, 0.0);
+        assert_eq!(s.p99_s, 0.0);
+        assert!(!s.summary().contains("NaN"), "{}", s.summary());
+        assert!(s.to_json().contains("\"completed\":0"));
+    }
+
+    #[test]
+    fn aggregate_pools_counters_and_latencies() {
+        let t0 = Instant::now();
+        let a = Metrics::new();
+        a.completed.fetch_add(4, Ordering::Relaxed);
+        a.edge_exits.fetch_add(1, Ordering::Relaxed);
+        for v in [0.010, 0.020, 0.030, 0.040] {
+            a.record_latency(v);
+        }
+        let b = Metrics::new();
+        b.completed.fetch_add(2, Ordering::Relaxed);
+        for v in [0.050, 0.060] {
+            b.record_latency(v);
+        }
+        let idle = Metrics::new(); // zero-request shard rides along
+
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let parts = [a.snapshot(t0), b.snapshot(t0), idle.snapshot(t0)];
+        let total = MetricsSnapshot::aggregate(&parts);
+        assert_eq!(total.completed, 6);
+        assert_eq!(total.edge_exits, 1);
+        assert_eq!(total.latency_hist.count(), 6);
+        assert!((total.mean_latency_s - 0.035).abs() < 1e-12);
+        assert!(total.p50_s > 0.0 && total.p99_s >= total.p50_s);
+        // Concurrent windows: elapsed is the max, not the sum.
+        let max_elapsed = parts.iter().map(|p| p.elapsed_s).fold(0.0, f64::max);
+        assert_eq!(total.elapsed_s, max_elapsed);
+        assert!((total.throughput_rps - 6.0 / max_elapsed).abs() < 1e-9);
+
+        // Identity: aggregating nothing is the zero snapshot.
+        let z = MetricsSnapshot::aggregate(&[]);
+        assert_eq!(z.completed, 0);
+        assert_eq!(z.mean_latency_s, 0.0);
     }
 }

@@ -1,0 +1,207 @@
+//! Link classes: the named client populations a fleet serves (3G / 4G /
+//! WiFi out of the box, or TOML-defined), each with its own nominal
+//! uplink, optional bandwidth trace, and optional planning
+//! exit-probability override.
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
+
+use crate::config::settings::LinkClassSettings;
+use crate::network::bandwidth::{LinkModel, Profile};
+use crate::network::trace::BandwidthTrace;
+
+/// Wire-level identity of a link class: an index into the fleet's
+/// [`ClassRegistry`], small enough to ride in the request protocol's
+/// one-byte class tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LinkClass(pub u8);
+
+impl LinkClass {
+    /// The class untagged (legacy `INFER`) requests land in.
+    pub const DEFAULT: LinkClass = LinkClass(0);
+
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Everything the fleet knows about one client class.
+#[derive(Debug, Clone)]
+pub struct ClassProfile {
+    pub name: String,
+    /// Nominal uplink, used for the initial per-class plan and as the
+    /// class channel's constant rate when no trace is given.
+    pub link: LinkModel,
+    /// Optional time-varying uplink driving the class channel (and, when
+    /// the fleet's adaptive replanning is on, per-class replans).
+    pub trace: Option<BandwidthTrace>,
+    /// Planning exit-probability override for this class; `None` uses
+    /// the fleet default. A class with an override cannot share the
+    /// planner prefix sums (they depend on p), so it gets its own.
+    pub exit_probability: Option<f64>,
+}
+
+impl ClassProfile {
+    /// One of the paper's named profiles: "3g", "4g", "wifi".
+    pub fn named(name: &str) -> Result<ClassProfile> {
+        let p = Profile::parse(name)?;
+        Ok(ClassProfile {
+            name: p.name().to_string(),
+            link: LinkModel::from_profile(p),
+            trace: None,
+            exit_probability: None,
+        })
+    }
+
+    /// A custom class; rejects degenerate links (config path — fail
+    /// fast, don't clamp).
+    pub fn custom(name: &str, uplink_mbps: f64, rtt_s: f64) -> Result<ClassProfile> {
+        if name.trim().is_empty() {
+            bail!("link class name must be non-empty");
+        }
+        Ok(ClassProfile {
+            name: name.to_string(),
+            link: LinkModel::try_new(uplink_mbps, rtt_s)?,
+            trace: None,
+            exit_probability: None,
+        })
+    }
+
+    pub fn with_trace(mut self, trace: BandwidthTrace) -> ClassProfile {
+        self.trace = Some(trace);
+        self
+    }
+
+    pub fn with_exit_probability(mut self, p: f64) -> Result<ClassProfile> {
+        if !(0.0..=1.0).contains(&p) {
+            bail!("exit probability {p} not in [0, 1]");
+        }
+        self.exit_probability = Some(p);
+        Ok(self)
+    }
+}
+
+/// Ordered set of class profiles; a profile's position is its wire id.
+#[derive(Debug, Clone)]
+pub struct ClassRegistry {
+    classes: Vec<ClassProfile>,
+}
+
+impl ClassRegistry {
+    pub fn new(classes: Vec<ClassProfile>) -> Result<ClassRegistry> {
+        if classes.is_empty() {
+            bail!("a fleet needs at least one link class");
+        }
+        if classes.len() > u8::MAX as usize + 1 {
+            bail!(
+                "at most 256 link classes fit the u8 wire tag; got {}",
+                classes.len()
+            );
+        }
+        let mut seen = HashSet::new();
+        for c in &classes {
+            if c.name.trim().is_empty() {
+                bail!("link class name must be non-empty");
+            }
+            if !seen.insert(c.name.to_ascii_lowercase()) {
+                bail!("duplicate link class '{}'", c.name);
+            }
+        }
+        Ok(ClassRegistry { classes })
+    }
+
+    /// A one-class fleet (the degenerate single-pipeline deployment).
+    pub fn single(profile: ClassProfile) -> ClassRegistry {
+        ClassRegistry {
+            classes: vec![profile],
+        }
+    }
+
+    /// The paper's three uplink profiles as one fleet.
+    pub fn builtin() -> ClassRegistry {
+        ClassRegistry::new(vec![
+            ClassProfile::named("3g").unwrap(),
+            ClassProfile::named("4g").unwrap(),
+            ClassProfile::named("wifi").unwrap(),
+        ])
+        .unwrap()
+    }
+
+    /// From config `[[link_class]]` entries (field values were already
+    /// validated by `Settings::validate`).
+    pub fn from_settings(entries: &[LinkClassSettings]) -> Result<ClassRegistry> {
+        let mut classes = Vec::with_capacity(entries.len());
+        for e in entries {
+            let mut c = ClassProfile::custom(&e.name, e.uplink_mbps, e.rtt_s)?;
+            c.exit_probability = e.exit_probability;
+            classes.push(c);
+        }
+        ClassRegistry::new(classes)
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ClassProfile> {
+        self.classes.iter()
+    }
+
+    pub fn get(&self, class: LinkClass) -> Option<&ClassProfile> {
+        self.classes.get(class.index())
+    }
+
+    /// Case-insensitive name lookup.
+    pub fn id_of(&self, name: &str) -> Option<LinkClass> {
+        self.classes
+            .iter()
+            .position(|c| c.name.eq_ignore_ascii_case(name))
+            .map(|i| LinkClass(i as u8))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_has_paper_profiles_in_order() {
+        let r = ClassRegistry::builtin();
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.id_of("3G"), Some(LinkClass(0)));
+        assert_eq!(r.id_of("4g"), Some(LinkClass(1)));
+        assert_eq!(r.id_of("WiFi"), Some(LinkClass(2)));
+        assert_eq!(r.id_of("5g"), None);
+        assert!((r.get(LinkClass(0)).unwrap().link.uplink_mbps - 1.10).abs() < 1e-12);
+        assert!(r.get(LinkClass(9)).is_none());
+    }
+
+    #[test]
+    fn registry_rejects_duplicates_and_empties() {
+        assert!(ClassRegistry::new(vec![]).is_err());
+        let dup = vec![
+            ClassProfile::named("4g").unwrap(),
+            ClassProfile::custom("4G", 5.0, 0.0).unwrap(),
+        ];
+        assert!(ClassRegistry::new(dup).is_err());
+    }
+
+    #[test]
+    fn custom_profile_validates_link_and_probability() {
+        assert!(ClassProfile::custom("", 5.0, 0.0).is_err());
+        assert!(ClassProfile::custom("x", 0.0, 0.0).is_err());
+        assert!(ClassProfile::custom("x", 5.0, -1.0).is_err());
+        let c = ClassProfile::custom("sat", 0.5, 0.3).unwrap();
+        assert_eq!(c.link.rtt_s, 0.3);
+        assert!(c.clone().with_exit_probability(1.5).is_err());
+        assert_eq!(
+            c.with_exit_probability(0.7).unwrap().exit_probability,
+            Some(0.7)
+        );
+    }
+}

@@ -1,0 +1,154 @@
+//! Fleet-wide observability: per-shard snapshots rolled up per class,
+//! per-class reports rolled up into one fleet total.
+
+use crate::config::json::Json;
+use crate::coordinator::MetricsSnapshot;
+use crate::network::bandwidth::LinkModel;
+
+use super::class::LinkClass;
+
+/// One link class's view: the active split, every shard's snapshot, and
+/// their aggregate.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub class: LinkClass,
+    pub name: String,
+    pub link: LinkModel,
+    /// Active partition point (stages `1..=split_after` on the edge).
+    pub split_after: usize,
+    pub shards: Vec<MetricsSnapshot>,
+    pub aggregate: MetricsSnapshot,
+}
+
+/// Point-in-time view of the whole fleet.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub classes: Vec<ClassReport>,
+    pub total: MetricsSnapshot,
+}
+
+impl FleetReport {
+    pub fn from_classes(classes: Vec<ClassReport>) -> FleetReport {
+        let aggregates: Vec<MetricsSnapshot> =
+            classes.iter().map(|c| c.aggregate.clone()).collect();
+        FleetReport {
+            classes,
+            total: MetricsSnapshot::aggregate(&aggregates),
+        }
+    }
+
+    /// Multi-line human-readable report: one line per class, one total.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for c in &self.classes {
+            out.push_str(&format!(
+                "[{} @ {:.2} Mbps, split after {}, {} shard(s)] {}\n",
+                c.name,
+                c.link.uplink_mbps,
+                c.split_after,
+                c.shards.len(),
+                c.aggregate.summary()
+            ));
+        }
+        out.push_str(&format!("[fleet total] {}", self.total.summary()));
+        out
+    }
+
+    /// JSON with the same flat totals a single pipeline reports (so
+    /// existing metrics consumers keep working) plus per-class detail.
+    /// Both levels splice [`MetricsSnapshot::to_json`] rather than
+    /// re-listing its fields, so the two formats cannot drift apart.
+    pub fn to_json(&self) -> String {
+        // "{...}" -> "..." for embedding in an enclosing object.
+        let flat_fields = |s: &MetricsSnapshot| {
+            s.to_json()
+                .trim_start_matches('{')
+                .trim_end_matches('}')
+                .to_string()
+        };
+        let classes = self
+            .classes
+            .iter()
+            .map(|c| {
+                format!(
+                    "{{\"name\":{},\"split_after\":{},\"shards\":{},{}}}",
+                    Json::Str(c.name.clone()),
+                    c.split_after,
+                    c.shards.len(),
+                    flat_fields(&c.aggregate),
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{{},\"classes\":[{}]}}",
+            flat_fields(&self.total),
+            classes
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(completed: u64, latency: f64) -> MetricsSnapshot {
+        let mut s = MetricsSnapshot::zero();
+        s.completed = completed;
+        s.elapsed_s = 2.0;
+        s.throughput_rps = completed as f64 / 2.0;
+        for _ in 0..completed {
+            s.latency_hist.push(latency);
+        }
+        s.mean_latency_s = s.latency_hist.mean();
+        s
+    }
+
+    fn report() -> FleetReport {
+        let shards_a = vec![snap(3, 0.01), snap(1, 0.03)];
+        let shards_b = vec![snap(0, 0.0)];
+        FleetReport::from_classes(vec![
+            ClassReport {
+                class: LinkClass(0),
+                name: "3G".into(),
+                link: LinkModel::new(1.10, 0.0),
+                split_after: 5,
+                aggregate: MetricsSnapshot::aggregate(&shards_a),
+                shards: shards_a,
+            },
+            ClassReport {
+                class: LinkClass(1),
+                name: "WiFi".into(),
+                link: LinkModel::new(18.80, 0.0),
+                split_after: 0,
+                aggregate: MetricsSnapshot::aggregate(&shards_b),
+                shards: shards_b,
+            },
+        ])
+    }
+
+    #[test]
+    fn totals_roll_up_across_classes() {
+        let r = report();
+        assert_eq!(r.total.completed, 4);
+        assert_eq!(r.classes[0].aggregate.completed, 4);
+        assert_eq!(r.classes[1].aggregate.completed, 0);
+        // The idle class contributes zeros, never NaN.
+        assert_eq!(r.classes[1].aggregate.mean_latency_s, 0.0);
+        let s = r.summary();
+        assert!(s.contains("3G") && s.contains("WiFi") && s.contains("fleet total"));
+        assert!(!s.contains("NaN"), "{s}");
+    }
+
+    #[test]
+    fn json_is_parseable_with_flat_totals_and_class_detail() {
+        let j = report().to_json();
+        let v = Json::parse(&j).unwrap();
+        assert_eq!(v.get("completed").unwrap().as_u64(), Some(4));
+        let classes = v.get("classes").unwrap().as_arr().unwrap();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[0].get("name").unwrap().as_str(), Some("3G"));
+        assert_eq!(classes[0].get("split_after").unwrap().as_u64(), Some(5));
+        assert_eq!(classes[1].get("completed").unwrap().as_u64(), Some(0));
+    }
+}

@@ -1,0 +1,454 @@
+//! The sharded multi-class serving fleet: per-link-class planners behind
+//! a routing coordinator of coordinators.
+//!
+//! # Why this exists
+//!
+//! The paper's optimal partition depends on the *link* (Eq. 5's
+//! `alpha_s/B + rtt` term is the only link-dependent part), so a
+//! deployment serving a mixed client population cannot hold one plan: a
+//! 3G client's optimum keeps work on the edge while a WiFi client's
+//! ships it to the cloud. Neurosurgeon-style per-condition partitioning
+//! and Edgent's on-demand co-inference both put plan selection at
+//! request admission, per link profile — this module is that seam, plus
+//! horizontal scale.
+//!
+//! # Shape
+//!
+//! ```text
+//!              FleetRouter (round-robin / hash / least-loaded)
+//! request ──class tag──► ClassGroup[c] ──pick shard──► Coordinator
+//!                         │                            (batcher → edge worker
+//!                         │                             → channel → M cloud workers)
+//!                         ├── ClassPlanner[c]: Planner fork (shared prefix
+//!                         │     sums, per-class PlanCache)
+//!                         ├── Channel[c]: the class's uplink (constant or
+//!                         │     trace-driven)
+//!                         └── AdaptivePlanner[c] (optional): hysteresis
+//!                               replan loop driving set_plan on every
+//!                               shard of the class
+//! ```
+//!
+//! * **Classes, not requests, own plans.** Every shard of a class runs
+//!   the same partition plan, computed by that class's [`ClassPlanner`]
+//!   and — when adaptive replanning is on — refreshed from the class
+//!   channel's live bandwidth with the planner subsystem's hysteresis
+//!   (see [`crate::planner::adaptive`]). Two classes served
+//!   concurrently execute under *different* split points; per-request
+//!   planning (picking a split per sample from the instantaneous
+//!   estimate) is the next refinement and plugs in at exactly this
+//!   seam.
+//! * **Sharding is per class.** A class group holds N independent
+//!   [`Coordinator`] pipelines (each its own batcher, edge worker and M
+//!   cloud workers); the [`FleetRouter`] picks one per request. This
+//!   scales the serving path horizontally without touching coordinator
+//!   internals — a shard never sees more than one plan at a time.
+//! * **One planner precompute.** All classes sharing the fleet's
+//!   default exit probability [`Planner::fork`] one set of prefix sums;
+//!   only a class with its own `exit_probability` override pays a fresh
+//!   O(N·m) precompute (the sums depend on p).
+//! * **Observability rolls up.** [`FleetReport`]: per-shard
+//!   [`MetricsSnapshot`]s → per-class aggregate → fleet total, all
+//!   NaN-free even for shards that served nothing.
+
+pub mod class;
+pub mod metrics;
+pub mod planner;
+pub mod router;
+
+pub use class::{ClassProfile, ClassRegistry, LinkClass};
+pub use metrics::{ClassReport, FleetReport};
+pub use planner::ClassPlanner;
+pub use router::{FleetRouter, RoutePolicy};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, InferenceResponse, MetricsSnapshot};
+use crate::model::Manifest;
+use crate::network::trace::BandwidthTrace;
+use crate::network::Channel;
+use crate::partition::plan::PartitionPlan;
+use crate::planner::{AdaptiveConfig, AdaptiveHandle, AdaptivePlanner, Planner};
+use crate::runtime::{HostTensor, InferenceEngine};
+use crate::server::ServeBackend;
+use crate::timing::DelayProfile;
+
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Edge/cloud pipeline pairs per link class.
+    pub shards_per_class: usize,
+    /// Cloud worker threads per shard (sharing the shard's transfer queue).
+    pub cloud_workers_per_shard: usize,
+    pub routing: RoutePolicy,
+    /// Entropy gate for the side branch, nats.
+    pub entropy_threshold: f32,
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+    pub queue_capacity: usize,
+    /// Planning exit probability for classes without an override.
+    pub default_exit_prob: f64,
+    /// The paper's epsilon tie-breaker (§V).
+    pub epsilon: f64,
+    /// When set, every class runs a hysteresis replan loop against its
+    /// channel's live bandwidth, pushing accepted plans to all shards.
+    pub adaptive: Option<AdaptiveConfig>,
+    /// Multiplicative jitter stddev on the class channels (0 = none).
+    pub channel_jitter: f64,
+    /// False = channels account delays without sleeping (tests/benches).
+    pub real_time_channel: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            shards_per_class: 1,
+            cloud_workers_per_shard: 1,
+            routing: RoutePolicy::LeastLoaded,
+            entropy_threshold: 0.3,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(2),
+            queue_capacity: 1024,
+            default_exit_prob: 0.5,
+            epsilon: 1e-9,
+            adaptive: None,
+            channel_jitter: 0.0,
+            real_time_channel: true,
+        }
+    }
+}
+
+struct ClassGroup {
+    profile: ClassProfile,
+    planner: ClassPlanner,
+    channel: Arc<Channel>,
+    shards: Vec<Arc<Coordinator>>,
+    /// Per-group router: each class keeps its own round-robin cursor so
+    /// correlated cross-class arrival patterns can't alias with the
+    /// shard count and pin a class to one shard.
+    router: FleetRouter,
+    adaptive: Option<AdaptiveHandle>,
+}
+
+/// A running fleet. `Send + Sync`; share it behind an [`Arc`] (the TCP
+/// front-end does) and call [`Fleet::shutdown`] once every other handle
+/// is gone.
+pub struct Fleet {
+    registry: ClassRegistry,
+    groups: Vec<ClassGroup>,
+    route_key: AtomicU64,
+}
+
+impl Fleet {
+    /// Start `registry.len() × cfg.shards_per_class` pipelines.
+    /// `make_engines(label)` provisions one shard's (edge, cloud) engine
+    /// pair — e.g. `InferenceEngine::open` twice on the PJRT backend, or
+    /// [`InferenceEngine::open_sim`] for the simulated one. `profile`
+    /// carries the measured per-stage delays the planners sweep over.
+    pub fn start(
+        registry: ClassRegistry,
+        manifest: &Manifest,
+        profile: &DelayProfile,
+        cfg: FleetConfig,
+        make_engines: impl Fn(&str) -> Result<(InferenceEngine, InferenceEngine)>,
+    ) -> Result<Fleet> {
+        if cfg.shards_per_class == 0 || cfg.shards_per_class > 64 {
+            bail!("shards_per_class must be in 1..=64; got {}", cfg.shards_per_class);
+        }
+        if cfg.cloud_workers_per_shard == 0 || cfg.cloud_workers_per_shard > 64 {
+            bail!(
+                "cloud_workers_per_shard must be in 1..=64; got {}",
+                cfg.cloud_workers_per_shard
+            );
+        }
+
+        // One precompute for every class at the default exit probability;
+        // override classes build their own sums.
+        let base_planner = Planner::new(
+            &manifest.to_desc(cfg.default_exit_prob),
+            profile,
+            cfg.epsilon,
+            false,
+        );
+
+        let mut groups = Vec::with_capacity(registry.len());
+        for (idx, prof) in registry.iter().enumerate() {
+            let link_class = LinkClass(idx as u8);
+            let planner = match prof.exit_probability {
+                Some(p) => Planner::new(&manifest.to_desc(p), profile, cfg.epsilon, false),
+                None => base_planner.fork(),
+            };
+            let class_planner = ClassPlanner::new(link_class, prof.name.clone(), planner);
+            let plan = class_planner.plan(prof.link);
+
+            let trace = prof
+                .trace
+                .clone()
+                .unwrap_or_else(|| BandwidthTrace::constant(prof.link.uplink_mbps));
+            let mut channel =
+                Channel::new(trace, prof.link.rtt_s, cfg.channel_jitter, idx as u64 + 1);
+            if !cfg.real_time_channel {
+                channel = channel.simulated_time();
+            }
+            let channel = Arc::new(channel);
+
+            let mut shards = Vec::with_capacity(cfg.shards_per_class);
+            for s in 0..cfg.shards_per_class {
+                let label = format!("{}-s{}", prof.name, s);
+                let (edge, cloud) = make_engines(&label)?;
+                shards.push(Arc::new(Coordinator::start(
+                    edge,
+                    cloud,
+                    channel.clone(),
+                    plan.clone(),
+                    CoordinatorConfig {
+                        entropy_threshold: cfg.entropy_threshold,
+                        max_batch: cfg.max_batch,
+                        batch_timeout: cfg.batch_timeout,
+                        queue_capacity: cfg.queue_capacity,
+                        cloud_workers: cfg.cloud_workers_per_shard,
+                    },
+                )));
+            }
+
+            let adaptive = cfg.adaptive.map(|acfg| {
+                let shard_sinks = shards.clone();
+                let source_channel = channel.clone();
+                AdaptivePlanner::spawn_with(
+                    class_planner.fork_planner(),
+                    acfg,
+                    Some(plan.split_after),
+                    move || source_channel.current_link(),
+                    move |new_plan: PartitionPlan| {
+                        for shard in &shard_sinks {
+                            shard.set_plan(new_plan.clone());
+                        }
+                    },
+                )
+            });
+
+            groups.push(ClassGroup {
+                profile: prof.clone(),
+                planner: class_planner,
+                channel,
+                shards,
+                router: FleetRouter::new(cfg.routing),
+                adaptive,
+            });
+        }
+
+        Ok(Fleet {
+            registry,
+            groups,
+            route_key: AtomicU64::new(1),
+        })
+    }
+
+    pub fn registry(&self) -> &ClassRegistry {
+        &self.registry
+    }
+
+    pub fn class_by_name(&self, name: &str) -> Option<LinkClass> {
+        self.registry.id_of(name)
+    }
+
+    fn group(&self, class: LinkClass) -> Result<&ClassGroup> {
+        self.groups.get(class.index()).ok_or_else(|| {
+            anyhow!(
+                "unknown link class id {} (fleet has {} classes)",
+                class.0,
+                self.groups.len()
+            )
+        })
+    }
+
+    /// The plan the class's shards are currently executing.
+    pub fn plan_of(&self, class: LinkClass) -> Result<PartitionPlan> {
+        Ok(self.group(class)?.shards[0].plan())
+    }
+
+    /// This class's planner (for cross-checking plans in tests/tools).
+    pub fn planner_of(&self, class: LinkClass) -> Result<&ClassPlanner> {
+        Ok(&self.group(class)?.planner)
+    }
+
+    /// The class's simulated uplink.
+    pub fn channel_of(&self, class: LinkClass) -> Result<&Channel> {
+        Ok(self.group(class)?.channel.as_ref())
+    }
+
+    /// Route one request: pick a shard of the class's group and submit.
+    /// The routing key is a per-request counter, so hash routing spreads
+    /// uniformly; use [`Fleet::submit_keyed`] for session affinity.
+    pub fn submit(
+        &self,
+        class: LinkClass,
+        image: HostTensor,
+    ) -> Result<(u64, mpsc::Receiver<InferenceResponse>)> {
+        self.submit_keyed(class, self.route_key.fetch_add(1, Ordering::Relaxed), image)
+    }
+
+    /// [`Fleet::submit`] with an explicit routing key: under hash
+    /// routing, equal keys (e.g. a client/session id) always land on the
+    /// same shard. Round-robin and least-loaded ignore the key.
+    pub fn submit_keyed(
+        &self,
+        class: LinkClass,
+        key: u64,
+        image: HostTensor,
+    ) -> Result<(u64, mpsc::Receiver<InferenceResponse>)> {
+        let group = self.group(class)?;
+        let n = group.shards.len();
+        let shard = if n == 1 {
+            0
+        } else if group.router.policy() == RoutePolicy::LeastLoaded {
+            // Queue depths are only gathered when the policy reads them:
+            // they cost one lock per shard on the admission path.
+            let depths: Vec<usize> = group.shards.iter().map(|s| s.queue_depth()).collect();
+            group.router.pick(key, &depths)
+        } else {
+            group.router.pick_index(key, n)
+        };
+        group.shards[shard].submit(image)
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn infer_sync(&self, class: LinkClass, image: HostTensor) -> Result<InferenceResponse> {
+        let (_, rx) = self.submit(class, image)?;
+        rx.recv().map_err(|_| anyhow!("response channel dropped"))
+    }
+
+    /// Live per-class / per-shard / total metrics.
+    pub fn report(&self) -> FleetReport {
+        let classes = self
+            .groups
+            .iter()
+            .map(|g| {
+                let shards: Vec<MetricsSnapshot> =
+                    g.shards.iter().map(|s| s.metrics()).collect();
+                ClassReport {
+                    class: g.planner.class(),
+                    name: g.profile.name.clone(),
+                    link: g.profile.link,
+                    split_after: g.shards[0].plan().split_after,
+                    aggregate: MetricsSnapshot::aggregate(&shards),
+                    shards,
+                }
+            })
+            .collect();
+        FleetReport::from_classes(classes)
+    }
+
+    /// Stop the replan loops, drain and join every shard, and return the
+    /// final report.
+    pub fn shutdown(mut self) -> FleetReport {
+        // Replan loops first: joining them drops their shard handles, so
+        // the Arc::try_unwrap below sees the last reference.
+        for g in &mut self.groups {
+            if let Some(handle) = g.adaptive.take() {
+                handle.stop();
+            }
+        }
+        let mut classes = Vec::with_capacity(self.groups.len());
+        for g in self.groups.drain(..) {
+            let split_after = g.shards[0].plan().split_after;
+            let mut shards = Vec::with_capacity(g.shards.len());
+            for shard in g.shards {
+                match Arc::try_unwrap(shard) {
+                    Ok(coordinator) => shards.push(coordinator.shutdown()),
+                    // An external handle still holds the shard (e.g. a
+                    // caller clone): report its metrics without joining.
+                    Err(arc) => shards.push(arc.metrics()),
+                }
+            }
+            classes.push(ClassReport {
+                class: g.planner.class(),
+                name: g.profile.name.clone(),
+                link: g.profile.link,
+                split_after,
+                aggregate: MetricsSnapshot::aggregate(&shards),
+                shards,
+            });
+        }
+        FleetReport::from_classes(classes)
+    }
+}
+
+impl ServeBackend for Fleet {
+    fn serve_infer(&self, class: Option<u8>, image: HostTensor) -> Result<InferenceResponse> {
+        self.infer_sync(LinkClass(class.unwrap_or(LinkClass::DEFAULT.0)), image)
+    }
+
+    fn metrics_json(&self) -> String {
+        self.report().to_json()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim_fleet(cfg: FleetConfig) -> Fleet {
+        let manifest =
+            Manifest::synthetic_sim("sim-fleet", vec![4], &[16, 8, 2], 1, 2, vec![1, 2, 4, 8])
+                .unwrap();
+        let profile = DelayProfile::from_cloud_times(vec![1e-4, 1e-4, 1e-4], 2e-5, 50.0);
+        let m = manifest.clone();
+        Fleet::start(
+            ClassRegistry::single(ClassProfile::custom("only", 5.85, 0.0).unwrap()),
+            &manifest,
+            &profile,
+            cfg,
+            move |label| {
+                Ok((
+                    InferenceEngine::open_sim(m.clone(), &format!("{label}-e"))?,
+                    InferenceEngine::open_sim(m.clone(), &format!("{label}-c"))?,
+                ))
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn single_class_fleet_serves_and_shuts_down() {
+        let fleet = sim_fleet(FleetConfig {
+            real_time_channel: false,
+            batch_timeout: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let class = fleet.class_by_name("ONLY").unwrap();
+        for _ in 0..4 {
+            let x = HostTensor::new(vec![4], vec![0.3, -0.1, 0.8, 0.2]).unwrap();
+            let r = fleet.infer_sync(class, x).unwrap();
+            assert!(r.class < 2);
+        }
+        // Unknown class id is a routable error, not a panic.
+        assert!(fleet
+            .infer_sync(LinkClass(7), HostTensor::zeros(vec![4]))
+            .is_err());
+        let report = fleet.shutdown();
+        assert_eq!(report.total.completed, 4);
+        assert_eq!(report.classes.len(), 1);
+        assert_eq!(report.classes[0].shards.len(), 1);
+    }
+
+    #[test]
+    fn start_rejects_degenerate_shard_counts() {
+        let manifest =
+            Manifest::synthetic_sim("sim-bad", vec![4], &[8, 2], 1, 2, vec![1]).unwrap();
+        let profile = DelayProfile::from_cloud_times(vec![1e-4, 1e-4], 2e-5, 10.0);
+        let r = Fleet::start(
+            ClassRegistry::builtin(),
+            &manifest,
+            &profile,
+            FleetConfig {
+                shards_per_class: 0,
+                ..Default::default()
+            },
+            |_| unreachable!("no shards should be provisioned"),
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! Per-class planning: each link class owns a [`Planner`] fork — shared
+//! precomputed prefix sums, private log-bucketed [`PlanCache`] — so a
+//! WiFi burst and a 3G burst never evict each other's plans, and cache
+//! hit rates are observable per class.
+//!
+//! [`PlanCache`]: crate::planner::PlanCache
+
+use crate::network::bandwidth::LinkModel;
+use crate::partition::plan::PartitionPlan;
+use crate::planner::Planner;
+
+use super::class::LinkClass;
+
+#[derive(Debug)]
+pub struct ClassPlanner {
+    class: LinkClass,
+    name: String,
+    planner: Planner,
+}
+
+impl ClassPlanner {
+    pub fn new(class: LinkClass, name: impl Into<String>, planner: Planner) -> ClassPlanner {
+        ClassPlanner {
+            class,
+            name: name.into(),
+            planner,
+        }
+    }
+
+    pub fn class(&self) -> LinkClass {
+        self.class
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Plan for a link observation through this class's bucket cache.
+    pub fn plan(&self, link: LinkModel) -> PartitionPlan {
+        self.planner.plan_cached(link)
+    }
+
+    /// O(1) model query at the observed link (used by hysteresis
+    /// comparisons and tests cross-checking executed splits).
+    pub fn expected_time(&self, split: usize, link: LinkModel) -> f64 {
+        self.planner.expected_time(split, link)
+    }
+
+    /// (hits, misses) of this class's plan cache.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.planner.cache_stats()
+    }
+
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    /// A planner for this class's adaptive replan thread (same shared
+    /// core, separate cache — the thread takes ownership).
+    pub fn fork_planner(&self) -> Planner {
+        self.planner.fork()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BranchDesc, BranchyNetDesc};
+    use crate::timing::DelayProfile;
+
+    fn base() -> Planner {
+        let desc = BranchyNetDesc {
+            stage_names: (1..=4).map(|i| format!("s{i}")).collect(),
+            stage_out_bytes: vec![40_000, 20_000, 8_000, 8],
+            input_bytes: 12_288,
+            branches: vec![BranchDesc {
+                after_stage: 1,
+                exit_prob: 0.5,
+            }],
+        };
+        let profile =
+            DelayProfile::from_cloud_times(vec![1e-4, 2e-4, 1.5e-4, 5e-5], 2e-5, 100.0);
+        Planner::new(&desc, &profile, 1e-9, false)
+    }
+
+    #[test]
+    fn class_planners_share_sums_with_independent_caches() {
+        let b = base();
+        let slow = ClassPlanner::new(LinkClass(0), "3G", b.fork());
+        let fast = ClassPlanner::new(LinkClass(1), "WiFi", b.fork());
+        assert!(slow.planner().shares_core_with(fast.planner()));
+
+        let p_slow = slow.plan(LinkModel::new(1.10, 0.0));
+        let p_fast = fast.plan(LinkModel::new(50_000.0, 0.0));
+        // A starved uplink keeps work on the edge; a huge one ships it out.
+        assert!(p_slow.split_after > p_fast.split_after);
+        assert!(p_fast.is_cloud_only());
+
+        // Each class's cache only saw its own lookup.
+        assert_eq!(slow.cache_stats(), (0, 1));
+        assert_eq!(fast.cache_stats(), (0, 1));
+        let _ = slow.plan(LinkModel::new(1.11, 0.0)); // same bucket: hit
+        assert_eq!(slow.cache_stats(), (1, 1));
+        assert_eq!(fast.cache_stats(), (0, 1));
+    }
+}

@@ -1,0 +1,166 @@
+//! Shard selection within a link class: round-robin, stable hashing, or
+//! least-loaded (by admission-queue depth).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::splitmix64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Rotate through the shards.
+    RoundRobin,
+    /// Stable for a given routing key: equal keys always land on the
+    /// same shard. Affinity therefore depends on what the caller feeds
+    /// as the key — `Fleet::submit_keyed` gives per-client stickiness,
+    /// while `Fleet::submit` hashes a per-request counter, which
+    /// degenerates to uniform random spread.
+    Hash,
+    /// Pick the shard with the shallowest admission queue (ties go to
+    /// the lowest index).
+    LeastLoaded,
+}
+
+impl RoutePolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::Hash => "hash",
+            RoutePolicy::LeastLoaded => "least-loaded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "rr" => Ok(RoutePolicy::RoundRobin),
+            "hash" => Ok(RoutePolicy::Hash),
+            "least-loaded" | "ll" => Ok(RoutePolicy::LeastLoaded),
+            _ => bail!("unknown routing policy '{s}' (expected round-robin|hash|least-loaded)"),
+        }
+    }
+}
+
+/// One class group's shard picker. The round-robin cursor is part of the
+/// router, so give each class group its *own* router — a cursor shared
+/// across groups lets correlated multi-class arrival patterns (A,B,A,B…)
+/// alias with the shard count and pin every class to one shard.
+#[derive(Debug)]
+pub struct FleetRouter {
+    policy: RoutePolicy,
+    rr: AtomicU64,
+}
+
+impl FleetRouter {
+    pub fn new(policy: RoutePolicy) -> FleetRouter {
+        FleetRouter {
+            policy,
+            rr: AtomicU64::new(0),
+        }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Pick a shard among `depths.len()` candidates; `depths` carries
+    /// each shard's current admission-queue depth and `key` seeds hash
+    /// routing. Panics on zero candidates (a class group always has at
+    /// least one shard).
+    pub fn pick(&self, key: u64, depths: &[usize]) -> usize {
+        match self.policy {
+            RoutePolicy::LeastLoaded => {
+                assert!(!depths.is_empty(), "cannot route into an empty shard group");
+                depths
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|&(_, &d)| d)
+                    .map(|(i, _)| i)
+                    .unwrap()
+            }
+            _ => self.pick_index(key, depths.len()),
+        }
+    }
+
+    /// Depth-free pick for the policies that never inspect load
+    /// (round-robin, hash) — lets the admission path skip gathering
+    /// queue depths. A least-loaded router falls back to round-robin
+    /// here so a misuse still spreads.
+    pub fn pick_index(&self, key: u64, n: usize) -> usize {
+        assert!(n > 0, "cannot route into an empty shard group");
+        if n == 1 {
+            return 0;
+        }
+        match self.policy {
+            RoutePolicy::Hash => {
+                let mut s = key;
+                (splitmix64(&mut s) % n as u64) as usize
+            }
+            RoutePolicy::RoundRobin | RoutePolicy::LeastLoaded => {
+                (self.rr.fetch_add(1, Ordering::Relaxed) % n as u64) as usize
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for p in [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::Hash,
+            RoutePolicy::LeastLoaded,
+        ] {
+            assert_eq!(RoutePolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert_eq!(RoutePolicy::parse("RR").unwrap(), RoutePolicy::RoundRobin);
+        assert!(RoutePolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let r = FleetRouter::new(RoutePolicy::RoundRobin);
+        let depths = [0usize; 3];
+        let picks: Vec<usize> = (0..6).map(|_| r.pick(0, &depths)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn hash_is_stable_and_spreads() {
+        let r = FleetRouter::new(RoutePolicy::Hash);
+        let depths = [0usize; 4];
+        for key in 0..32u64 {
+            assert_eq!(r.pick(key, &depths), r.pick(key, &depths));
+        }
+        let mut hit = [false; 4];
+        for key in 0..256u64 {
+            hit[r.pick(key, &depths)] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "256 keys must reach all 4 shards");
+    }
+
+    #[test]
+    fn least_loaded_picks_min_with_low_index_ties() {
+        let r = FleetRouter::new(RoutePolicy::LeastLoaded);
+        assert_eq!(r.pick(0, &[5, 2, 7]), 1);
+        assert_eq!(r.pick(0, &[3, 1, 1]), 1);
+        assert_eq!(r.pick(0, &[0, 0, 0]), 0);
+        assert_eq!(r.pick(0, &[9]), 0);
+    }
+
+    #[test]
+    fn pick_index_matches_pick_for_depth_free_policies() {
+        let rr = FleetRouter::new(RoutePolicy::RoundRobin);
+        assert_eq!(
+            (0..6).map(|_| rr.pick_index(0, 3)).collect::<Vec<_>>(),
+            vec![0, 1, 2, 0, 1, 2]
+        );
+        let hash = FleetRouter::new(RoutePolicy::Hash);
+        for key in 0..16u64 {
+            assert_eq!(hash.pick_index(key, 4), hash.pick(key, &[0; 4]));
+        }
+    }
+}

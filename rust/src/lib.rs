@@ -21,16 +21,21 @@
 //!   owner of "model + profile + epsilon + strategy → plan", with an
 //!   adaptive replan loop for time-varying uplinks;
 //! * [`coordinator`] — router, dynamic batcher, early-exit scheduler, metrics;
+//! * [`fleet`] — sharded multi-class serving: per-link-class planners
+//!   (3G/4G/WiFi or TOML-defined) behind a routing fleet coordinator;
 //! * [`server`] / [`workload`] — TCP serving loop and load generation;
 //! * [`experiments`] — drivers regenerating the paper's Figures 4, 5, 6.
 //!
 //! Python/JAX/Pallas exist only at build time (`make artifacts`); the
-//! request path is pure Rust.
+//! request path is pure Rust. Without the `xla-pjrt` feature the
+//! [`runtime`] falls back to a deterministic simulated backend, so the
+//! whole serving stack still runs end-to-end offline.
 
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod fleet;
 pub mod graph;
 pub mod harness;
 pub mod model;

@@ -15,14 +15,14 @@ use anyhow::Result;
 
 use branchyserve::cli::{Cli, Command, Flag, Invocation, Parsed};
 use branchyserve::config::settings::{Flavor, Settings, Strategy};
-use branchyserve::coordinator::{Coordinator, CoordinatorConfig};
 use branchyserve::experiments::{ablation, fig4, fig5, fig6};
+use branchyserve::fleet::{ClassProfile, ClassRegistry, Fleet, FleetConfig, RoutePolicy};
 use branchyserve::harness::Table;
 use branchyserve::model::Manifest;
 use branchyserve::network::bandwidth::{LinkModel, Profile};
-use branchyserve::network::{BandwidthTrace, Channel};
+use branchyserve::network::BandwidthTrace;
 use branchyserve::partition;
-use branchyserve::planner::{AdaptiveConfig, AdaptivePlanner, Planner};
+use branchyserve::planner::AdaptiveConfig;
 use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
 use branchyserve::runtime::InferenceEngine;
 use branchyserve::server::Server;
@@ -50,13 +50,20 @@ fn cli() -> Cli {
                 .flag(Flag::value("strategy", "shortest-path|brute|neurosurgeon|edge|cloud").default("shortest-path"))
                 .flag(Flag::value("profile", "profile JSON (else measured now)"))
                 .flag(Flag::switch("all", "print every strategy for comparison")),
-            Command::new("serve", "run the TCP serving front-end")
+            Command::new("serve", "run the sharded multi-class TCP serving fleet")
                 .flag(Flag::value("port", "TCP port (0 = auto)").default("7878"))
-                .flag(Flag::value("network", "3g|4g|wifi").default("4g"))
+                .flag(Flag::value("network", "default class when no [[link_class]] config: 3g|4g|wifi").default("4g"))
                 .flag(Flag::value("gamma", "edge processing factor").default("100"))
-                .flag(Flag::value("probability", "planning exit probability").default("0.5"))
+                // No CLI default: a default here would mask the
+                // [branch] exit_probability config fallback.
+                .flag(Flag::value("probability", "planning exit probability (default 0.5)"))
                 .flag(Flag::value("threshold", "entropy exit threshold (nats)").default("0.3"))
-                .flag(Flag::value("profile", "profile JSON (else measured now)")),
+                .flag(Flag::value("profile", "profile JSON (else measured now)"))
+                .flag(Flag::value("shards", "edge/cloud pipeline pairs per link class"))
+                .flag(Flag::value("cloud-workers", "cloud worker threads per shard"))
+                .flag(Flag::value("routing", "round-robin|hash|least-loaded"))
+                .flag(Flag::switch("sim", "serve the simulated model (no artifacts needed)"))
+                .flag(Flag::value("sim-stage-cost-us", "synthetic per-stage compute cost, us").default("200")),
             Command::new("fig4", "inference time vs exit probability (paper Fig. 4)")
                 .flag(Flag::value("points", "probability grid points").default("21"))
                 .flag(Flag::value("profile", "profile JSON (else measured now)"))
@@ -252,74 +259,186 @@ fn cmd_plan(inv: &Invocation, settings: &Settings) -> Result<()> {
     Ok(())
 }
 
+/// The simulated B-AlexNet stand-in the `--sim` serving path runs.
+fn sim_manifest() -> Manifest {
+    Manifest::synthetic_sim(
+        "sim-balexnet",
+        vec![3, 32, 32],
+        &[2048, 1024, 512, 128, 2],
+        1,
+        2,
+        vec![1, 2, 4, 8],
+    )
+    .expect("static sim manifest spec is valid")
+}
+
 fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
-    // Two engines = two PJRT clients = the edge node and the cloud node.
-    let manifest = Manifest::load(&settings.model.artifacts_dir)?;
-    let edge = InferenceEngine::open(
-        &settings.model.artifacts_dir,
-        manifest.clone(),
-        settings.model.flavor,
-        "edge",
-    )?;
-    let cloud = InferenceEngine::open(
-        &settings.model.artifacts_dir,
-        manifest,
-        settings.model.flavor,
-        "cloud",
-    )?;
-    let compile_s = edge.warmup()? + cloud.warmup()?;
-    log::info!("precompiled artifacts in {compile_s:.2}s");
-    let engine = edge.clone();
-
-    let report = load_or_measure_profile(inv, settings, Some(&engine))?;
+    let sim = inv.has("sim");
     let gamma = get_f64(inv, "gamma")?.unwrap_or(settings.edge.gamma);
-    let profile = report.to_delay_profile(gamma);
-    let link = link_from(inv, settings)?;
-    let p = get_f64(inv, "probability")?.unwrap_or(0.5);
-    let desc = engine.manifest().to_desc(p);
-    let planner = Planner::new(&desc, &profile, settings.partition.epsilon, false);
-    let plan = planner.plan_for(link);
-    println!(
-        "plan: split after '{}' (E[T] = {})",
-        plan.split_label(&desc),
-        format_secs(plan.expected_time_s)
-    );
-
-    let trace = match &settings.network.trace {
-        Some(path) => BandwidthTrace::load(path)?,
-        None => BandwidthTrace::constant(link.uplink_mbps),
-    };
-    let channel = Arc::new(Channel::new(trace, link.rtt_s, 0.0, 1));
     let threshold =
         get_f64(inv, "threshold")?.unwrap_or(settings.branch.entropy_threshold) as f32;
-    let coordinator = Arc::new(Coordinator::start(
-        edge,
-        cloud,
-        channel,
-        plan,
-        CoordinatorConfig {
+    let default_p = get_f64(inv, "probability")?
+        .or(settings.branch.exit_probability)
+        .unwrap_or(0.5);
+    let shards = get_usize(inv, "shards")?.unwrap_or(settings.fleet.shards);
+    let cloud_workers =
+        get_usize(inv, "cloud-workers")?.unwrap_or(settings.fleet.cloud_workers);
+    let routing = match inv.get("routing") {
+        Some(r) => RoutePolicy::parse(r)?,
+        None => RoutePolicy::parse(&settings.fleet.routing)?,
+    };
+    let sim_cost =
+        Duration::from_micros(get_usize(inv, "sim-stage-cost-us")?.unwrap_or(200) as u64);
+
+    // Model + one engine pair per shard. Sim shards share nothing; PJRT
+    // shards each get their own pair of PJRT clients.
+    let manifest = if sim {
+        sim_manifest()
+    } else {
+        Manifest::load(&settings.model.artifacts_dir)?
+    };
+    type EngineFactory = Box<dyn Fn(&str) -> Result<(InferenceEngine, InferenceEngine)>>;
+    let make_engines: EngineFactory = if sim {
+        let m = manifest.clone();
+        Box::new(move |label: &str| {
+            Ok((
+                InferenceEngine::open_sim_with_cost(m.clone(), &format!("{label}-edge"), sim_cost)?,
+                InferenceEngine::open_sim_with_cost(
+                    m.clone(),
+                    &format!("{label}-cloud"),
+                    sim_cost,
+                )?,
+            ))
+        })
+    } else {
+        let dir = settings.model.artifacts_dir.clone();
+        let flavor = settings.model.flavor;
+        let m = manifest.clone();
+        Box::new(move |label: &str| {
+            let edge = InferenceEngine::open(&dir, m.clone(), flavor, &format!("{label}-edge"))?;
+            let cloud = InferenceEngine::open(&dir, m.clone(), flavor, &format!("{label}-cloud"))?;
+            let compile_s = edge.warmup()? + cloud.warmup()?;
+            log::info!("[{label}] precompiled artifacts in {compile_s:.2}s");
+            Ok((edge, cloud))
+        })
+    };
+
+    // Per-stage delays: saved/measured profile for real artifacts,
+    // measured on a probe engine for the sim. When a PJRT measurement is
+    // needed, the probe pair is handed to the fleet as its first shard
+    // instead of leaking a third warmed-up PJRT client.
+    let spare_pair: std::cell::RefCell<Option<(InferenceEngine, InferenceEngine)>> =
+        std::cell::RefCell::new(None);
+    let report = if sim {
+        let probe = InferenceEngine::open_sim_with_cost(manifest.clone(), "profile", sim_cost)?;
+        profiler::measure(&probe, ProfileOptions::default())?
+    } else {
+        let saved = inv.get("profile").map(PathBuf::from).or_else(|| {
+            let cached = settings.model.artifacts_dir.join("profile.json");
+            cached.exists().then_some(cached)
+        });
+        match saved {
+            Some(path) => ProfileReport::load(&path)?,
+            None => {
+                log::info!(
+                    "no saved profile; measuring on the first shard's edge engine \
+                     (use `branchyserve profile` to cache)"
+                );
+                let pair = make_engines("shard-probe")?;
+                let r = profiler::measure(&pair.0, ProfileOptions::default())?;
+                *spare_pair.borrow_mut() = Some(pair);
+                r
+            }
+        }
+    };
+    let delay = report.to_delay_profile(gamma);
+
+    // Link classes: `[[link_class]]` config entries, or one default
+    // class from --network / [network].
+    let registry = if settings.link_classes.is_empty() {
+        let link = link_from(inv, settings)?;
+        let name = inv
+            .get("network")
+            .map(str::to_string)
+            .unwrap_or_else(|| settings.network.kind.clone());
+        let mut class = ClassProfile {
+            name,
+            link,
+            trace: None,
+            exit_probability: None,
+        };
+        if let Some(path) = &settings.network.trace {
+            println!(
+                "bandwidth trace {} — adaptive replanning enabled",
+                path.display()
+            );
+            class = class.with_trace(BandwidthTrace::load(path)?);
+        }
+        ClassRegistry::single(class)
+    } else {
+        if settings.network.trace.is_some() {
+            // Say so loudly: the old single-pipeline path honored the
+            // trace, and per-class TOML traces don't exist yet.
+            log::warn!(
+                "[network] trace is ignored when [[link_class]] entries are \
+                 configured (per-class traces are not expressible in TOML yet)"
+            );
+            println!(
+                "warning: [network] trace ignored with [[link_class]] — \
+                 adaptive replanning disabled"
+            );
+        }
+        ClassRegistry::from_settings(&settings.link_classes)?
+    };
+    let adaptive = registry
+        .iter()
+        .any(|c| c.trace.is_some())
+        .then(AdaptiveConfig::default);
+
+    let fleet = Arc::new(Fleet::start(
+        registry,
+        &manifest,
+        &delay,
+        FleetConfig {
+            shards_per_class: shards,
+            cloud_workers_per_shard: cloud_workers,
+            routing,
             entropy_threshold: threshold,
             max_batch: settings.serve.max_batch,
             batch_timeout: Duration::from_secs_f64(settings.serve.batch_timeout_ms / 1e3),
             queue_capacity: settings.serve.queue_capacity,
+            default_exit_prob: default_p,
+            epsilon: settings.partition.epsilon,
+            adaptive,
+            channel_jitter: 0.0,
+            real_time_channel: true,
         },
-    ));
-    // A configured bandwidth trace means the uplink moves over time:
-    // keep replanning against it (cached, with hysteresis) and swap the
-    // coordinator's plan live.
-    let _adaptive = settings.network.trace.as_ref().map(|path| {
+        |label: &str| {
+            // The profiling probe becomes the first shard.
+            if let Some(pair) = spare_pair.borrow_mut().take() {
+                return Ok(pair);
+            }
+            make_engines(label)
+        },
+    )?);
+
+    for c in &fleet.report().classes {
         println!(
-            "bandwidth trace {} — adaptive replanning enabled",
-            path.display()
+            "class {:>10} @ {:>9.2} Mbps -> split after {:>2} ({} shard(s) x {} cloud worker(s))",
+            c.name,
+            c.link.uplink_mbps,
+            c.split_after,
+            c.shards.len(),
+            cloud_workers,
         );
-        AdaptivePlanner::spawn(planner, coordinator.clone(), AdaptiveConfig::default())
-    });
+    }
+
     let port = get_usize(inv, "port")?.unwrap_or(7878) as u16;
-    let handle = Server::new(coordinator.clone()).start(port)?;
+    let handle = Server::new(fleet.clone()).start(port)?;
     println!("serving on {} — Ctrl-C to stop", handle.addr());
     loop {
         std::thread::sleep(Duration::from_secs(10));
-        println!("{}", coordinator.metrics().summary());
+        println!("{}", fleet.report().summary());
     }
 }
 

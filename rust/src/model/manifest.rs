@@ -292,6 +292,87 @@ impl Manifest {
             .ok_or_else(|| anyhow!("no fig6_labels in manifest"))
     }
 
+    /// Build an in-code manifest for the simulated runtime
+    /// ([`crate::runtime::SimNet`]): a chain of flat stages with no
+    /// on-disk artifacts. `stage_out_elems` gives each stage's flat
+    /// output size; the last entry must equal `num_classes` so the final
+    /// stage acts as the classifier head. Artifact lookups on the result
+    /// error — only the sim backend can execute it.
+    pub fn synthetic_sim(
+        model: &str,
+        input_shape: Vec<usize>,
+        stage_out_elems: &[usize],
+        branch_after: usize,
+        num_classes: usize,
+        batch_sizes: Vec<usize>,
+    ) -> Result<Manifest> {
+        if stage_out_elems.is_empty() {
+            bail!("synthetic manifest needs at least one stage");
+        }
+        if stage_out_elems.iter().any(|&k| k == 0) {
+            bail!("stage output sizes must be positive");
+        }
+        if num_classes < 2 {
+            bail!("num_classes must be >= 2");
+        }
+        if *stage_out_elems.last().unwrap() != num_classes {
+            bail!(
+                "last stage must emit num_classes = {num_classes} values, got {}",
+                stage_out_elems.last().unwrap()
+            );
+        }
+        if branch_after == 0 || branch_after >= stage_out_elems.len() {
+            bail!(
+                "branch_after {branch_after} out of range 1..{}",
+                stage_out_elems.len()
+            );
+        }
+        if batch_sizes.is_empty() || batch_sizes.contains(&0) {
+            bail!("batch_sizes must be non-empty and positive");
+        }
+        let input_elems: usize = input_shape.iter().product();
+        if input_shape.is_empty() || input_elems == 0 {
+            bail!("input_shape must have positive dimensions");
+        }
+        let mut stages = Vec::with_capacity(stage_out_elems.len());
+        let mut in_shape = input_shape.clone();
+        for (i, &k) in stage_out_elems.iter().enumerate() {
+            let out_shape = vec![k];
+            stages.push(StageInfo {
+                index: i + 1,
+                name: format!("sim{}", i + 1),
+                kind: "sim".to_string(),
+                in_shape: in_shape.clone(),
+                out_shape: out_shape.clone(),
+                out_bytes_per_sample: (k * 4) as u64,
+                flops_per_sample: 0,
+                artifacts: Json::Null,
+            });
+            in_shape = out_shape;
+        }
+        let branch = BranchInfo {
+            after_stage: branch_after,
+            name: "sim-b1".to_string(),
+            in_shape: stages[branch_after - 1].out_shape.clone(),
+            num_classes,
+            flops_per_sample: 0,
+            artifacts: Json::Null,
+        };
+        Ok(Manifest {
+            dir: PathBuf::from("<sim>"),
+            model: model.to_string(),
+            num_classes,
+            input_bytes_per_sample: (input_elems * 4) as u64,
+            input_shape,
+            batch_sizes,
+            entropy_max_nats: (num_classes as f64).ln(),
+            stages,
+            branch,
+            full_artifacts: Json::Null,
+            fixtures: Json::Null,
+        })
+    }
+
     /// Abstract description for the partitioner, with a given conditional
     /// exit probability for the (single) side branch.
     pub fn to_desc(&self, exit_prob: f64) -> BranchyNetDesc {
@@ -406,5 +487,34 @@ pub(crate) mod tests {
     fn rejects_missing_fields() {
         let doc = Json::parse(r#"{"model": "x"}"#).unwrap();
         assert!(Manifest::from_json(Path::new("/tmp"), &doc).is_err());
+    }
+
+    #[test]
+    fn synthetic_sim_manifest_is_consistent() {
+        let m = Manifest::synthetic_sim("sim-x", vec![3, 8, 8], &[32, 16, 2], 1, 2, vec![1, 4])
+            .unwrap();
+        assert_eq!(m.num_stages(), 3);
+        assert_eq!(m.input_bytes_per_sample, 3 * 8 * 8 * 4);
+        assert_eq!(m.stages[0].out_shape, vec![32]);
+        assert_eq!(m.stages[1].in_shape, vec![32]);
+        assert_eq!(m.branch.in_shape, vec![32]);
+        assert_eq!(m.stages[2].out_shape, vec![2]);
+        // No artifacts back it: lookups must error, not panic.
+        assert!(m.stages[0].artifact(Flavor::Ref, 1).is_err());
+        assert!(m.full_artifact(Flavor::Ref, 1).is_err());
+        let d = m.to_desc(0.5);
+        d.validate().unwrap();
+        assert_eq!(d.transfer_bytes(1), 32 * 4);
+    }
+
+    #[test]
+    fn synthetic_sim_rejects_bad_specs() {
+        // Last stage must be the classifier head.
+        assert!(Manifest::synthetic_sim("x", vec![4], &[8, 3], 1, 2, vec![1]).is_err());
+        // Branch after the last stage is pointless.
+        assert!(Manifest::synthetic_sim("x", vec![4], &[8, 2], 2, 2, vec![1]).is_err());
+        assert!(Manifest::synthetic_sim("x", vec![4], &[], 1, 2, vec![1]).is_err());
+        assert!(Manifest::synthetic_sim("x", vec![4], &[8, 2], 1, 2, vec![]).is_err());
+        assert!(Manifest::synthetic_sim("x", vec![], &[8, 2], 1, 2, vec![1]).is_err());
     }
 }

@@ -58,6 +58,8 @@ pub mod cache;
 pub use adaptive::{AdaptiveConfig, AdaptiveHandle, AdaptivePlanner, ReplanState, ReplanStats};
 pub use cache::PlanCache;
 
+use std::sync::Arc;
+
 use crate::config::settings::Strategy;
 use crate::model::BranchyNetDesc;
 use crate::network::bandwidth::LinkModel;
@@ -65,17 +67,12 @@ use crate::partition::plan::PartitionPlan;
 use crate::timing::exitprob::ExitChain;
 use crate::timing::profile::DelayProfile;
 
-/// Precomputed link-independent planning state for one
-/// (model, profile, epsilon, mode) tuple. Construction is O(N·m); each
-/// [`Planner::plan_for`] is an O(N) sweep and each
-/// [`Planner::expected_time`] query is O(1).
-///
-/// The planner owns clones of the description and the derived vectors,
-/// so it is `Send + Sync` and can be moved into a replan thread.
+/// The immutable precomputed state shared by a planner and all its
+/// [`Planner::fork`]s: everything below is a pure function of
+/// (model, profile, mode), independent of both the link and epsilon.
 #[derive(Debug)]
-pub struct Planner {
+struct PlannerCore {
     desc: BranchyNetDesc,
-    epsilon: f64,
     paper_mode: bool,
     n: usize,
     /// A(s): survival-weighted edge compute through stage s, plus (in
@@ -88,6 +85,22 @@ pub struct Planner {
     cloud_suffix: Vec<f64>,
     /// alpha_s: bytes transferred for a cut after stage s (s < N).
     alpha_bytes: Vec<u64>,
+}
+
+/// Precomputed link-independent planning state for one
+/// (model, profile, epsilon, mode) tuple. Construction is O(N·m); each
+/// [`Planner::plan_for`] is an O(N) sweep and each
+/// [`Planner::expected_time`] query is O(1).
+///
+/// The prefix/suffix sums live behind an [`Arc`], so a fleet holding one
+/// planner per link class pays the O(N·m) precompute once and
+/// [`Planner::fork`]s it per class — each fork gets its own
+/// [`PlanCache`] (plans are link-dependent; the sums are not). The
+/// planner is `Send + Sync` and can be moved into a replan thread.
+#[derive(Debug)]
+pub struct Planner {
+    core: Arc<PlannerCore>,
+    epsilon: f64,
     cache: PlanCache,
 }
 
@@ -153,24 +166,43 @@ impl Planner {
         let alpha_bytes: Vec<u64> = (0..n).map(|s| desc.transfer_bytes(s)).collect();
 
         Planner {
-            desc: desc.clone(),
+            core: Arc::new(PlannerCore {
+                desc: desc.clone(),
+                paper_mode,
+                n,
+                edge_cost,
+                surv,
+                cloud_suffix,
+                alpha_bytes,
+            }),
             epsilon,
-            paper_mode,
-            n,
-            edge_cost,
-            surv,
-            cloud_suffix,
-            alpha_bytes,
             cache: PlanCache::default(),
         }
     }
 
+    /// A planner sharing this one's precomputed prefix/suffix sums (the
+    /// `Arc`'d core) but with its own empty [`PlanCache`] and cache
+    /// counters — one per link class in a serving fleet.
+    pub fn fork(&self) -> Planner {
+        Planner {
+            core: self.core.clone(),
+            epsilon: self.epsilon,
+            cache: PlanCache::default(),
+        }
+    }
+
+    /// True if `other` shares this planner's precomputed core (i.e. one
+    /// is a [`Planner::fork`] of the other).
+    pub fn shares_core_with(&self, other: &Planner) -> bool {
+        Arc::ptr_eq(&self.core, &other.core)
+    }
+
     pub fn desc(&self) -> &BranchyNetDesc {
-        &self.desc
+        &self.core.desc
     }
 
     pub fn num_stages(&self) -> usize {
-        self.n
+        self.core.n
     }
 
     pub fn epsilon(&self) -> f64 {
@@ -178,20 +210,21 @@ impl Planner {
     }
 
     pub fn paper_mode(&self) -> bool {
-        self.paper_mode
+        self.core.paper_mode
     }
 
     /// E[T_inf] for a split after stage `split` under `link` — O(1),
     /// and bit-identical to `Estimator::expected_time` for the same
     /// mode (same terms, same fold order).
     pub fn expected_time(&self, split: usize, link: LinkModel) -> f64 {
-        assert!(split <= self.n, "split {split} out of range 0..={}", self.n);
-        let mut t = self.edge_cost[split];
-        if split < self.n {
-            let surv = self.surv[split];
+        let core = &*self.core;
+        assert!(split <= core.n, "split {split} out of range 0..={}", core.n);
+        let mut t = core.edge_cost[split];
+        if split < core.n {
+            let surv = core.surv[split];
             if surv > 0.0 {
                 t += surv
-                    * (link.transfer_time(self.alpha_bytes[split]) + self.cloud_suffix[split]);
+                    * (link.transfer_time(core.alpha_bytes[split]) + core.cloud_suffix[split]);
             }
         }
         t
@@ -215,12 +248,13 @@ impl Planner {
             epsilon > 0.0 && epsilon.is_finite(),
             "epsilon must be positive (paper §V)"
         );
+        let n = self.core.n;
         let mut best_split = 0usize;
         let mut best_model = f64::INFINITY;
         let mut best_decision = f64::INFINITY;
-        for s in 0..=self.n {
+        for s in 0..=n {
             let model = self.expected_time(s, link);
-            let decision = if s < self.n { model + epsilon } else { model };
+            let decision = if s < n { model + epsilon } else { model };
             // `<=`: on an exact tie the larger split (more edge work) wins.
             if decision <= best_decision {
                 best_decision = decision;
@@ -228,7 +262,7 @@ impl Planner {
                 best_split = s;
             }
         }
-        PartitionPlan::from_split(best_split, best_model, Strategy::ShortestPath, &self.desc)
+        PartitionPlan::from_split(best_split, best_model, Strategy::ShortestPath, &self.core.desc)
     }
 
     /// Like [`Planner::plan_for`], but memoized by quantized bandwidth:
@@ -367,6 +401,35 @@ mod tests {
         // The cached plan is the exact plan at the bucket representative.
         let rep = planner.cache_representative(LinkModel::new(5.87, 0.0));
         assert_eq!(b, planner.plan_for(rep));
+    }
+
+    #[test]
+    fn fork_shares_sums_but_not_the_cache() {
+        let (desc, profile) = fixture(0.5);
+        let base = Planner::new(&desc, &profile, 1e-9, false);
+        let fork = base.fork();
+        assert!(base.shares_core_with(&fork));
+
+        // Identical math, bit for bit.
+        let link = LinkModel::new(5.85, 0.01);
+        for s in 0..=base.num_stages() {
+            assert_eq!(
+                base.expected_time(s, link).to_bits(),
+                fork.expected_time(s, link).to_bits()
+            );
+        }
+        assert_eq!(base.plan_for(link), fork.plan_for(link));
+
+        // Cache state is per-instance: a fork's lookups never touch the
+        // base planner's counters.
+        let _ = fork.plan_cached(link);
+        let _ = fork.plan_cached(link);
+        assert_eq!(fork.cache_stats(), (1, 1));
+        assert_eq!(base.cache_stats(), (0, 0));
+
+        // A fresh construction is not the same core.
+        let other = Planner::new(&desc, &profile, 1e-9, false);
+        assert!(!base.shares_core_with(&other));
     }
 
     #[test]

@@ -1,27 +1,31 @@
 //! Inference engine: a Send + Sync handle to a dedicated executor thread
-//! that owns the (non-Send) PJRT client and artifact cache.
+//! that owns the (non-Send) compute backend.
 //!
-//! The `xla` crate's `PjRtClient` is `Rc`-based and must stay on one
-//! thread; the serving coordinator, TCP connections and benches all need
-//! to call it from many threads. Each `InferenceEngine` therefore spawns
-//! one executor thread owning an [`ArtifactStore`] and services requests
-//! over a channel. This also mirrors the paper's deployment: the *edge
-//! device* and the *cloud server* are separate compute resources — the
-//! coordinator gives each node its own engine (its own PJRT client), so
-//! edge and cloud stages execute concurrently like the real pipeline.
+//! With `feature = "xla-pjrt"` the backend is a PJRT client + artifact
+//! cache (the `xla` crate's `PjRtClient` is `Rc`-based and must stay on
+//! one thread); without it the backend is the pure-Rust [`super::sim::SimNet`].
+//! Either way the serving coordinator, TCP connections and benches call
+//! the engine from many threads over a channel. This also mirrors the
+//! paper's deployment: the *edge device* and the *cloud server* are
+//! separate compute resources — the coordinator gives each node its own
+//! engine (its own executor), so edge and cloud stages execute
+//! concurrently like the real pipeline.
 //!
 //! `run_stages(a..=b)` composes per-stage executables to realize any
 //! partition; `run_branch` evaluates the side branch's fused
 //! (probs, entropy) head.
 
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::settings::Flavor;
 use crate::model::Manifest;
 
+#[cfg(feature = "xla-pjrt")]
 use super::artifact::ArtifactStore;
+use super::sim::SimNet;
 use super::tensor::HostTensor;
 
 /// Output of a branch evaluation for one batch.
@@ -31,6 +35,13 @@ pub struct BranchOutput {
     pub probs: HostTensor,
     /// (B,) entropy in nats.
     pub entropy: Vec<f32>,
+}
+
+/// The executor thread's compute implementation.
+enum Backend {
+    #[cfg(feature = "xla-pjrt")]
+    Pjrt(ArtifactStore),
+    Sim(SimNet),
 }
 
 enum Job {
@@ -64,32 +75,85 @@ pub struct InferenceEngine {
 }
 
 impl InferenceEngine {
-    /// Spawn the executor thread (which creates its own PJRT CPU client)
-    /// and return the handle. `name` labels the thread ("edge", "cloud").
+    /// Spawn a PJRT-backed engine (executor thread creates its own PJRT
+    /// CPU client rooted at the artifacts dir). `name` labels the thread
+    /// ("edge", "cloud"). Requires `feature = "xla-pjrt"`; without it
+    /// this errors — use [`InferenceEngine::open_sim`] instead.
+    #[cfg(feature = "xla-pjrt")]
     pub fn open(
         dir: &std::path::Path,
         manifest: Manifest,
         flavor: Flavor,
         name: &str,
     ) -> Result<InferenceEngine> {
-        let (tx, rx) = mpsc::channel::<Job>();
         let dir = dir.to_path_buf();
+        Self::spawn_with_backend(manifest, flavor, name, move || {
+            Ok(Backend::Pjrt(ArtifactStore::open(&dir)?))
+        })
+    }
+
+    /// PJRT-less build: opening on-disk artifacts is impossible — error
+    /// with a pointer at the simulated backend instead.
+    #[cfg(not(feature = "xla-pjrt"))]
+    pub fn open(
+        dir: &std::path::Path,
+        manifest: Manifest,
+        flavor: Flavor,
+        name: &str,
+    ) -> Result<InferenceEngine> {
+        let _ = (dir, manifest, flavor, name);
+        bail!(
+            "this build has no PJRT backend (feature `xla-pjrt` disabled); \
+             use InferenceEngine::open_sim for the simulated runtime"
+        )
+    }
+
+    /// Spawn an engine backed by the deterministic simulated runtime
+    /// (always available; no artifacts on disk). Pair with
+    /// [`Manifest::synthetic_sim`].
+    pub fn open_sim(manifest: Manifest, name: &str) -> Result<InferenceEngine> {
+        Self::open_sim_with_cost(manifest, name, Duration::ZERO)
+    }
+
+    /// [`InferenceEngine::open_sim`] with a synthetic per-stage compute
+    /// cost, so throughput/scaling experiments have something to amortize.
+    pub fn open_sim_with_cost(
+        manifest: Manifest,
+        name: &str,
+        stage_cost: Duration,
+    ) -> Result<InferenceEngine> {
+        let sim_manifest = manifest.clone();
+        Self::spawn_with_backend(manifest, Flavor::Ref, name, move || {
+            Ok(Backend::Sim(SimNet::with_stage_cost(
+                sim_manifest,
+                stage_cost,
+            )))
+        })
+    }
+
+    fn spawn_with_backend(
+        manifest: Manifest,
+        flavor: Flavor,
+        name: &str,
+        make: impl FnOnce() -> Result<Backend> + Send + 'static,
+    ) -> Result<InferenceEngine> {
+        let (tx, rx) = mpsc::channel::<Job>();
         let worker_manifest = manifest.clone();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         std::thread::Builder::new()
-            .name(format!("pjrt-{name}"))
+            .name(format!("engine-{name}"))
             .spawn(move || {
-                let store = match ArtifactStore::open(&dir) {
-                    Ok(s) => {
+                let backend = match make() {
+                    Ok(b) => {
                         let _ = ready_tx.send(Ok(()));
-                        s
+                        b
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 };
-                executor_loop(store, worker_manifest, flavor, rx);
+                executor_loop(backend, worker_manifest, flavor, rx);
             })?;
         ready_rx
             .recv()
@@ -152,7 +216,8 @@ impl InferenceEngine {
         rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
     }
 
-    /// Precompile all artifacts of this flavor; returns compile seconds.
+    /// Precompile all artifacts of this flavor; returns compile seconds
+    /// (0 on the simulated backend — nothing to compile).
     pub fn warmup(&self) -> Result<f64> {
         let (reply, rx) = mpsc::channel();
         self.send(Job::Warmup { reply })?;
@@ -190,12 +255,99 @@ impl InferenceEngine {
     }
 }
 
-fn executor_loop(
-    store: ArtifactStore,
-    manifest: Manifest,
+#[cfg_attr(not(feature = "xla-pjrt"), allow(unused_variables))]
+fn backend_run_stages(
+    backend: &Backend,
+    manifest: &Manifest,
     flavor: Flavor,
-    rx: mpsc::Receiver<Job>,
-) {
+    from: usize,
+    to: usize,
+    input: HostTensor,
+) -> Result<HostTensor> {
+    let n = manifest.num_stages();
+    if from < 1 || to > n || from > to {
+        bail!("invalid stage range {from}..={to} (1..={n})");
+    }
+    match backend {
+        #[cfg(feature = "xla-pjrt")]
+        Backend::Pjrt(store) => {
+            let mut x = input;
+            for i in from..=to {
+                let stage = &manifest.stages[i - 1];
+                let exe = store.get(stage.artifact(flavor, x.batch())?)?;
+                x = exe.run1(&x)?;
+            }
+            Ok(x)
+        }
+        Backend::Sim(sim) => sim.run_stages(from, to, &input),
+    }
+}
+
+#[cfg_attr(not(feature = "xla-pjrt"), allow(unused_variables))]
+fn backend_run_full(
+    backend: &Backend,
+    manifest: &Manifest,
+    flavor: Flavor,
+    input: HostTensor,
+) -> Result<HostTensor> {
+    match backend {
+        #[cfg(feature = "xla-pjrt")]
+        Backend::Pjrt(store) => {
+            let exe = store.get(manifest.full_artifact(flavor, input.batch())?)?;
+            exe.run1(&input)
+        }
+        Backend::Sim(sim) => sim.run_full(&input),
+    }
+}
+
+#[cfg_attr(not(feature = "xla-pjrt"), allow(unused_variables))]
+fn backend_run_branch(
+    backend: &Backend,
+    manifest: &Manifest,
+    flavor: Flavor,
+    input: HostTensor,
+) -> Result<BranchOutput> {
+    match backend {
+        #[cfg(feature = "xla-pjrt")]
+        Backend::Pjrt(store) => {
+            let exe = store.get(manifest.branch.artifact(flavor, input.batch())?)?;
+            let (probs, ent) = exe.run2(&input)?;
+            Ok(BranchOutput {
+                entropy: ent.data().to_vec(),
+                probs,
+            })
+        }
+        Backend::Sim(sim) => sim.run_branch(&input),
+    }
+}
+
+#[cfg_attr(not(feature = "xla-pjrt"), allow(unused_variables))]
+fn backend_warmup(backend: &Backend, manifest: &Manifest, flavor: Flavor) -> Result<f64> {
+    match backend {
+        #[cfg(feature = "xla-pjrt")]
+        Backend::Pjrt(store) => {
+            let mut total = store.warmup(manifest, flavor, &manifest.batch_sizes)?;
+            for &b in &manifest.batch_sizes {
+                if let Ok(name) = manifest.full_artifact(flavor, b) {
+                    total += store.get(name)?.compile_time_s;
+                }
+            }
+            Ok(total)
+        }
+        Backend::Sim(_) => Ok(0.0),
+    }
+}
+
+fn backend_cached_count(backend: &Backend, manifest: &Manifest) -> usize {
+    match backend {
+        #[cfg(feature = "xla-pjrt")]
+        Backend::Pjrt(store) => store.cached_count(),
+        // Everything the sim "compiles" is always resident.
+        Backend::Sim(_) => manifest.num_stages() + 1,
+    }
+}
+
+fn executor_loop(backend: Backend, manifest: Manifest, flavor: Flavor, rx: mpsc::Receiver<Job>) {
     let check_batch = |n: usize| -> Result<()> {
         if !manifest.batch_sizes.contains(&n) {
             bail!(
@@ -214,58 +366,25 @@ fn executor_loop(
                 input,
                 reply,
             } => {
-                let result = (|| -> Result<HostTensor> {
-                    let n = manifest.num_stages();
-                    if from < 1 || to > n || from > to {
-                        bail!("invalid stage range {from}..={to} (1..={n})");
-                    }
-                    check_batch(input.batch())?;
-                    let mut x = input;
-                    for i in from..=to {
-                        let stage = &manifest.stages[i - 1];
-                        let exe = store.get(stage.artifact(flavor, x.batch())?)?;
-                        x = exe.run1(&x)?;
-                    }
-                    Ok(x)
-                })();
+                let result = check_batch(input.batch())
+                    .and_then(|()| backend_run_stages(&backend, &manifest, flavor, from, to, input));
                 let _ = reply.send(result);
             }
             Job::RunFull { input, reply } => {
-                let result = (|| -> Result<HostTensor> {
-                    check_batch(input.batch())?;
-                    let exe = store.get(manifest.full_artifact(flavor, input.batch())?)?;
-                    exe.run1(&input)
-                })();
+                let result = check_batch(input.batch())
+                    .and_then(|()| backend_run_full(&backend, &manifest, flavor, input));
                 let _ = reply.send(result);
             }
             Job::RunBranch { input, reply } => {
-                let result = (|| -> Result<BranchOutput> {
-                    check_batch(input.batch())?;
-                    let exe =
-                        store.get(manifest.branch.artifact(flavor, input.batch())?)?;
-                    let (probs, ent) = exe.run2(&input)?;
-                    Ok(BranchOutput {
-                        entropy: ent.data().to_vec(),
-                        probs,
-                    })
-                })();
+                let result = check_batch(input.batch())
+                    .and_then(|()| backend_run_branch(&backend, &manifest, flavor, input));
                 let _ = reply.send(result);
             }
             Job::Warmup { reply } => {
-                let result = (|| -> Result<f64> {
-                    let mut total =
-                        store.warmup(&manifest, flavor, &manifest.batch_sizes)?;
-                    for &b in &manifest.batch_sizes {
-                        if let Ok(name) = manifest.full_artifact(flavor, b) {
-                            total += store.get(name)?.compile_time_s;
-                        }
-                    }
-                    Ok(total)
-                })();
-                let _ = reply.send(result);
+                let _ = reply.send(backend_warmup(&backend, &manifest, flavor));
             }
             Job::CachedCount { reply } => {
-                let _ = reply.send(store.cached_count());
+                let _ = reply.send(backend_cached_count(&backend, &manifest));
             }
         }
     }
@@ -279,5 +398,28 @@ mod tests {
     fn argmax_rows() {
         let t = HostTensor::new(vec![3, 2], vec![0.9, 0.1, 0.2, 0.8, 0.5, 0.5]).unwrap();
         assert_eq!(InferenceEngine::argmax_classes(&t), vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn sim_engine_end_to_end() {
+        let manifest =
+            Manifest::synthetic_sim("sim-e", vec![4], &[8, 2], 1, 2, vec![1, 2]).unwrap();
+        let engine = InferenceEngine::open_sim(manifest, "test").unwrap();
+        assert_eq!(engine.warmup().unwrap(), 0.0);
+        assert_eq!(engine.cached_count(), 3);
+        assert_eq!(engine.max_batch(), 2);
+
+        let x = HostTensor::new(vec![2, 4], vec![0.1, 0.9, 0.2, 0.8, 0.5, 0.5, 0.5, 0.5]).unwrap();
+        let acts = engine.run_stages(1, 1, &x).unwrap();
+        assert_eq!(acts.shape(), &[2, 8]);
+        let out = engine.run_stages(2, 2, &acts).unwrap();
+        assert_eq!(out.shape(), &[2, 2]);
+        assert_eq!(engine.run_full(&x).unwrap(), out);
+        let branch = engine.run_branch(&acts).unwrap();
+        assert_eq!(branch.entropy.len(), 2);
+
+        // Unexported batch size rejected before the backend runs.
+        let bad = HostTensor::zeros(vec![3, 4]);
+        assert!(engine.run_stages(1, 1, &bad).is_err());
     }
 }

@@ -1,15 +1,28 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
-//! them on the CPU PJRT client from the Rust request path.
+//! Execution runtime: the compute behind the serving path, with two
+//! interchangeable backends behind one [`InferenceEngine`] handle.
 //!
-//! Python never runs here — `make artifacts` produced the HLO text once;
-//! this module parses it (`HloModuleProto::from_text_file`), compiles it
-//! (`PjRtClient::compile`) and executes it with activation tensors.
+//! * **PJRT** (`feature = "xla-pjrt"`): loads the AOT-compiled HLO-text
+//!   artifacts `make artifacts` produced and executes them on a CPU PJRT
+//!   client (`HloModuleProto::from_text_file` → `PjRtClient::compile`).
+//!   Python never runs on the request path. Off by default because the
+//!   `xla` crate is not in the offline vendor set.
+//! * **Sim** ([`sim::SimNet`], always available): a deterministic
+//!   pure-Rust stand-in that realizes the same manifest contract
+//!   (per-stage shapes, batched execution, a branch head emitting
+//!   (probs, entropy)) with cheap arithmetic and an optional synthetic
+//!   per-stage compute cost. It exists so the serving stack — batcher,
+//!   coordinator, fleet, TCP front-end, benches — runs end-to-end in
+//!   environments without artifacts or XLA.
 
+#[cfg(feature = "xla-pjrt")]
 pub mod artifact;
 pub mod engine;
 pub mod fixture;
+pub mod sim;
 pub mod tensor;
 
+#[cfg(feature = "xla-pjrt")]
 pub use artifact::ArtifactStore;
 pub use engine::{BranchOutput, InferenceEngine};
+pub use sim::SimNet;
 pub use tensor::HostTensor;

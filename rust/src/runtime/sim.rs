@@ -1,0 +1,275 @@
+//! Simulated compute backend: a deterministic pure-Rust BranchyNet that
+//! honors the manifest contract (stage shape chain, batched execution,
+//! a branch head producing (probs, entropy)) without artifacts or XLA.
+//!
+//! The arithmetic is not a neural network — it is a cheap deterministic
+//! transform that propagates two per-sample statistics (mean level and
+//! high-frequency energy, the feature separating the synthetic workload's
+//! two classes) so downstream behavior is data-dependent the way the real
+//! model's is: the branch's entropy varies per sample, extreme entropy
+//! thresholds exit everything/nothing, and stage outputs always match the
+//! manifest's declared shapes.
+//!
+//! An optional per-stage compute cost (implemented as a sleep, so it
+//! scales with pipeline parallelism rather than with host core count)
+//! makes throughput experiments on the sharded fleet meaningful.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::model::Manifest;
+
+use super::engine::BranchOutput;
+use super::tensor::HostTensor;
+
+/// Sigmoid sharpness of the simulated branch head.
+const SIM_SCALE: f32 = 2.0;
+/// High-frequency-energy pivot separating the two synthetic classes.
+const SIM_PIVOT: f32 = 0.5;
+
+/// Deterministic [0, 1) weight for (stage, element) pairs.
+fn hash01(a: u64, b: u64) -> f32 {
+    let mut s = a
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(b.wrapping_mul(0x243F_6A88_85A3_08D3));
+    let z = crate::util::rng::splitmix64(&mut s);
+    (z >> 40) as f32 / (1u64 << 24) as f32
+}
+
+/// (mean, mean |x[j+1] - x[j]|) of one sample's elements.
+fn features(xs: &[f32]) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let m = xs.iter().sum::<f32>() / xs.len() as f32;
+    let hf = if xs.len() < 2 {
+        0.0
+    } else {
+        xs.windows(2).map(|w| (w[1] - w[0]).abs()).sum::<f32>() / (xs.len() - 1) as f32
+    };
+    (m, hf)
+}
+
+fn class_logits(hf: f32, num_classes: usize) -> Vec<f32> {
+    let score = (SIM_SCALE * (hf - SIM_PIVOT)).clamp(-10.0, 10.0);
+    (0..num_classes)
+        .map(|c| match c {
+            0 => -0.5 * score,
+            1 => 0.5 * score,
+            _ => -3.0,
+        })
+        .collect()
+}
+
+fn softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&l| (l - max).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+fn entropy_nats(p: &[f32]) -> f32 {
+    -p.iter()
+        .filter(|&&v| v > 0.0)
+        .map(|&v| v * v.ln())
+        .sum::<f32>()
+}
+
+/// The simulated model. `Send` so the engine's executor thread can own it.
+#[derive(Debug, Clone)]
+pub struct SimNet {
+    manifest: Manifest,
+    /// Synthetic compute cost charged per stage invocation (per batch,
+    /// like a real accelerator amortizes over the batch).
+    stage_cost: Duration,
+}
+
+impl SimNet {
+    pub fn new(manifest: Manifest) -> SimNet {
+        SimNet::with_stage_cost(manifest, Duration::ZERO)
+    }
+
+    pub fn with_stage_cost(manifest: Manifest, stage_cost: Duration) -> SimNet {
+        SimNet {
+            manifest,
+            stage_cost,
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn charge_stage_cost(&self) {
+        if !self.stage_cost.is_zero() {
+            std::thread::sleep(self.stage_cost);
+        }
+    }
+
+    /// Main-branch stages `from..=to` (1-based, inclusive) on a batched
+    /// activation tensor.
+    pub fn run_stages(&self, from: usize, to: usize, input: &HostTensor) -> Result<HostTensor> {
+        let n = self.manifest.num_stages();
+        if from < 1 || to > n || from > to {
+            bail!("invalid stage range {from}..={to} (1..={n})");
+        }
+        let mut x = input.clone();
+        for i in from..=to {
+            let stage = &self.manifest.stages[i - 1];
+            if x.shape()[1..] != stage.in_shape[..] {
+                bail!(
+                    "stage {} expects per-sample shape {:?}, got {:?}",
+                    stage.name,
+                    stage.in_shape,
+                    &x.shape()[1..]
+                );
+            }
+            x = self.stage_forward(i, &x, &stage.out_shape);
+            self.charge_stage_cost();
+        }
+        Ok(x)
+    }
+
+    /// Full main-branch forward (the monolithic-artifact fast path).
+    pub fn run_full(&self, input: &HostTensor) -> Result<HostTensor> {
+        self.run_stages(1, self.manifest.num_stages(), input)
+    }
+
+    /// Branch head on activations at the branch's attach point.
+    pub fn run_branch(&self, activations: &HostTensor) -> Result<BranchOutput> {
+        let want = &self.manifest.branch.in_shape;
+        if activations.shape()[1..] != want[..] {
+            bail!(
+                "branch {} expects per-sample shape {:?}, got {:?}",
+                self.manifest.branch.name,
+                want,
+                &activations.shape()[1..]
+            );
+        }
+        let b = activations.batch();
+        let c = self.manifest.num_classes;
+        let mut probs = Vec::with_capacity(b * c);
+        let mut entropy = Vec::with_capacity(b);
+        for s in 0..b {
+            let (_, hf) = features(activations.sample(s));
+            let p = softmax(&class_logits(hf, c));
+            entropy.push(entropy_nats(&p));
+            probs.extend(p);
+        }
+        self.charge_stage_cost();
+        Ok(BranchOutput {
+            probs: HostTensor::new(vec![b, c], probs)?,
+            entropy,
+        })
+    }
+
+    fn stage_forward(&self, stage_idx: usize, x: &HostTensor, out_shape: &[usize]) -> HostTensor {
+        let b = x.batch();
+        let k_out: usize = out_shape.iter().product();
+        // The final stage emits class logits so edge-only/cloud-tail
+        // argmax behaves like a classifier head.
+        let is_head =
+            stage_idx == self.manifest.num_stages() && k_out == self.manifest.num_classes;
+        let mut data = Vec::with_capacity(b * k_out);
+        for s in 0..b {
+            let xs = x.sample(s);
+            let (m, hf) = features(xs);
+            if is_head {
+                data.extend(class_logits(hf, self.manifest.num_classes));
+            } else {
+                for k in 0..k_out {
+                    let w = hash01(stage_idx as u64, k as u64);
+                    let sign = if k % 2 == 0 { 1.0 } else { -1.0 };
+                    let carry = if xs.is_empty() { 0.0 } else { xs[k % xs.len()] };
+                    // Mean rides along; HF energy is re-encoded as the
+                    // amplitude of an alternating ripple so it survives
+                    // every stage; a strided carry keeps raw data mixed in.
+                    data.push(0.6 * m + 0.2 + hf * sign * (0.8 + 0.4 * w) + 0.05 * carry);
+                }
+            }
+        }
+        let mut shape = vec![b];
+        shape.extend_from_slice(out_shape);
+        HostTensor::new(shape, data).expect("sim output length matches declared shape")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn manifest() -> Manifest {
+        Manifest::synthetic_sim(
+            "sim-test",
+            vec![3, 8, 8],
+            &[64, 32, 2],
+            1,
+            2,
+            vec![1, 2, 4],
+        )
+        .unwrap()
+    }
+
+    fn input(b: usize, seed: f32) -> HostTensor {
+        let n = 3 * 8 * 8;
+        let data: Vec<f32> = (0..b * n)
+            .map(|i| ((i as f32 * 0.37 + seed).sin()) * 0.5)
+            .collect();
+        HostTensor::new(vec![b, 3, 8, 8], data).unwrap()
+    }
+
+    #[test]
+    fn deterministic_and_shape_correct() {
+        let sim = SimNet::new(manifest());
+        let x = input(2, 1.0);
+        let a = sim.run_stages(1, 3, &x).unwrap();
+        let b = sim.run_stages(1, 3, &x).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.shape(), &[2, 2]); // final stage: class logits
+        let mid = sim.run_stages(1, 2, &x).unwrap();
+        assert_eq!(mid.shape(), &[2, 32]);
+        assert_eq!(sim.run_full(&x).unwrap(), a);
+    }
+
+    #[test]
+    fn stage_chain_composes() {
+        let sim = SimNet::new(manifest());
+        let x = input(1, 2.0);
+        let direct = sim.run_stages(1, 3, &x).unwrap();
+        let a = sim.run_stages(1, 1, &x).unwrap();
+        let b = sim.run_stages(2, 3, &a).unwrap();
+        assert_eq!(direct, b);
+    }
+
+    #[test]
+    fn branch_entropy_strictly_inside_binary_range() {
+        let sim = SimNet::new(manifest());
+        let acts = sim.run_stages(1, 1, &input(4, 3.0)).unwrap();
+        let out = sim.run_branch(&acts).unwrap();
+        assert_eq!(out.probs.shape(), &[4, 2]);
+        assert_eq!(out.entropy.len(), 4);
+        for &e in &out.entropy {
+            assert!(e > 0.0 && e < 0.6932, "entropy {e} outside (0, ln 2)");
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let sim = SimNet::new(manifest());
+        let bad = HostTensor::zeros(vec![1, 5]);
+        assert!(sim.run_stages(1, 1, &bad).is_err());
+        assert!(sim.run_branch(&bad).is_err());
+        assert!(sim.run_stages(0, 1, &input(1, 0.0)).is_err());
+        assert!(sim.run_stages(1, 9, &input(1, 0.0)).is_err());
+    }
+
+    #[test]
+    fn stage_cost_is_charged_per_stage() {
+        let sim = SimNet::with_stage_cost(manifest(), Duration::from_millis(5));
+        let t0 = Instant::now();
+        sim.run_stages(1, 3, &input(1, 0.0)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+}

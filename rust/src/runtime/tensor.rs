@@ -132,6 +132,7 @@ impl HostTensor {
     ///
     /// Single-copy path (§Perf L3-2): build the literal directly from the
     /// raw bytes instead of `vec1(..).reshape(..)`, which copies twice.
+    #[cfg(feature = "xla-pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let bytes: &[u8] = unsafe {
             std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
@@ -145,6 +146,7 @@ impl HostTensor {
     }
 
     /// Build from an XLA literal (f32 arrays only).
+    #[cfg(feature = "xla-pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
         let shape = lit.array_shape().context("literal has no array shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();

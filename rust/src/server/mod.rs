@@ -1,10 +1,12 @@
 //! TCP serving front-end: a length-prefixed binary protocol over std
 //! TcpListener (tokio is unavailable offline; a thread-per-connection
 //! accept loop in front of the coordinator's own batching pipeline is
-//! fully adequate for this workload).
+//! fully adequate for this workload). The accept loop is generic over
+//! [`ServeBackend`], so the same wire front-end serves a single
+//! coordinator pipeline or a multi-class fleet.
 
 pub mod protocol;
 pub mod tcp;
 
 pub use protocol::{Request, Response};
-pub use tcp::{Server, ServerHandle};
+pub use tcp::{Client, ServeBackend, Server, ServerHandle};

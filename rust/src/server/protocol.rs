@@ -4,9 +4,13 @@
 //!   u32 magic "BSV1" (0x31565342) | u32 body_len | body
 //!
 //! Request body:  u8 kind | payload
-//!   kind 0 PING    — empty payload
-//!   kind 1 INFER   — u32 ndims | u32 dims[ndims] | f32 data[prod(dims)]
-//!   kind 2 METRICS — empty payload
+//!   kind 0 PING        — empty payload
+//!   kind 1 INFER       — u32 ndims | u32 dims[ndims] | f32 data[prod(dims)]
+//!   kind 2 METRICS     — empty payload
+//!   kind 3 INFER_CLASS — u8 link_class | u32 ndims | u32 dims[ndims] |
+//!                        f32 data[prod(dims)]
+//!                        (link_class indexes the fleet's class registry;
+//!                        kind 1 is equivalent to class 0)
 //! Response body: u8 kind | payload
 //!   kind 0 PONG    — empty
 //!   kind 1 RESULT  — u64 id | u32 class | u8 exited | f32 entropy |
@@ -27,8 +31,11 @@ pub const MAX_BODY: u32 = 64 << 20;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Ping,
+    /// Untagged inference — served as link class 0.
     Infer(HostTensor),
     Metrics,
+    /// Inference tagged with the client's link class (fleet routing).
+    InferClass { class: u8, image: HostTensor },
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -78,6 +85,49 @@ pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
     Ok(body)
 }
 
+fn put_tensor(b: &mut Vec<u8>, t: &HostTensor) {
+    put_u32(b, t.shape().len() as u32);
+    for &d in t.shape() {
+        put_u32(b, d as u32);
+    }
+    for v in t.data() {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn take_tensor(rest: &[u8]) -> Result<HostTensor> {
+    if rest.len() < 4 {
+        bail!("truncated INFER header");
+    }
+    let ndims = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+    if ndims > 8 {
+        bail!("too many dims: {ndims}");
+    }
+    let need = 4 + ndims * 4;
+    if rest.len() < need {
+        bail!("truncated INFER dims");
+    }
+    let mut shape = Vec::with_capacity(ndims);
+    for i in 0..ndims {
+        shape.push(u32::from_le_bytes(rest[4 + i * 4..8 + i * 4].try_into().unwrap()) as usize);
+    }
+    let n: usize = shape.iter().product();
+    let data_bytes = &rest[need..];
+    if data_bytes.len() != n * 4 {
+        bail!(
+            "INFER payload {} bytes, shape {:?} wants {}",
+            data_bytes.len(),
+            shape,
+            n * 4
+        );
+    }
+    let data: Vec<f32> = data_bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    HostTensor::new(shape, data)
+}
+
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Vec::new();
@@ -85,15 +135,14 @@ impl Request {
             Request::Ping => b.push(0),
             Request::Infer(t) => {
                 b.push(1);
-                put_u32(&mut b, t.shape().len() as u32);
-                for &d in t.shape() {
-                    put_u32(&mut b, d as u32);
-                }
-                for v in t.data() {
-                    b.extend_from_slice(&v.to_le_bytes());
-                }
+                put_tensor(&mut b, t);
             }
             Request::Metrics => b.push(2),
+            Request::InferClass { class, image } => {
+                b.push(3);
+                b.push(*class);
+                put_tensor(&mut b, image);
+            }
         }
         b
     }
@@ -102,41 +151,17 @@ impl Request {
         let (&kind, rest) = body.split_first().context("empty request body")?;
         match kind {
             0 => Ok(Request::Ping),
-            1 => {
-                if rest.len() < 4 {
-                    bail!("truncated INFER header");
-                }
-                let ndims = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
-                if ndims > 8 {
-                    bail!("too many dims: {ndims}");
-                }
-                let need = 4 + ndims * 4;
-                if rest.len() < need {
-                    bail!("truncated INFER dims");
-                }
-                let mut shape = Vec::with_capacity(ndims);
-                for i in 0..ndims {
-                    shape.push(u32::from_le_bytes(
-                        rest[4 + i * 4..8 + i * 4].try_into().unwrap(),
-                    ) as usize);
-                }
-                let n: usize = shape.iter().product();
-                let data_bytes = &rest[need..];
-                if data_bytes.len() != n * 4 {
-                    bail!(
-                        "INFER payload {} bytes, shape {:?} wants {}",
-                        data_bytes.len(),
-                        shape,
-                        n * 4
-                    );
-                }
-                let data: Vec<f32> = data_bytes
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                    .collect();
-                Ok(Request::Infer(HostTensor::new(shape, data)?))
-            }
+            1 => Ok(Request::Infer(take_tensor(rest)?)),
             2 => Ok(Request::Metrics),
+            3 => {
+                let (&class, rest) = rest
+                    .split_first()
+                    .context("truncated INFER_CLASS tag")?;
+                Ok(Request::InferClass {
+                    class,
+                    image: take_tensor(rest)?,
+                })
+            }
             k => bail!("unknown request kind {k}"),
         }
     }
@@ -229,6 +254,27 @@ mod tests {
         assert_eq!(roundtrip_req(&Request::Metrics), Request::Metrics);
         let t = HostTensor::new(vec![2, 3], vec![1., -2., 3.5, 0., 5., 6.]).unwrap();
         assert_eq!(roundtrip_req(&Request::Infer(t.clone())), Request::Infer(t));
+    }
+
+    #[test]
+    fn classed_request_roundtrips() {
+        let t = HostTensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        for class in [0u8, 1, 2, 255] {
+            let req = Request::InferClass {
+                class,
+                image: t.clone(),
+            };
+            assert_eq!(roundtrip_req(&req), req);
+        }
+        // The class tag must change the wire bytes (it is not implied).
+        let tagged = Request::InferClass {
+            class: 2,
+            image: t.clone(),
+        };
+        assert_ne!(tagged.encode(), Request::Infer(t).encode());
+        // Truncated tag / tensor rejected.
+        assert!(Request::decode(&[3]).is_err());
+        assert!(Request::decode(&[3, 1, 4, 0]).is_err());
     }
 
     #[test]

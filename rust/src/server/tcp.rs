@@ -1,5 +1,6 @@
 //! TCP accept loop + a blocking client, speaking `protocol` frames in
-//! front of a running [`Coordinator`].
+//! front of any [`ServeBackend`] — a single [`Coordinator`] pipeline or
+//! a whole [`crate::fleet::Fleet`].
 
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -8,13 +9,34 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, InferenceResponse};
 use crate::runtime::HostTensor;
 
 use super::protocol::{read_frame, write_frame, Request, Response};
 
-pub struct Server {
-    coordinator: Arc<Coordinator>,
+/// What the TCP front-end needs from whatever is serving behind it.
+pub trait ServeBackend: Send + Sync + 'static {
+    /// Serve one inference. `class` carries the protocol's link-class
+    /// tag (`None` for an untagged legacy INFER); single-pipeline
+    /// backends may ignore it.
+    fn serve_infer(&self, class: Option<u8>, image: HostTensor) -> Result<InferenceResponse>;
+
+    /// JSON body of the METRICS response.
+    fn metrics_json(&self) -> String;
+}
+
+impl ServeBackend for Coordinator {
+    fn serve_infer(&self, _class: Option<u8>, image: HostTensor) -> Result<InferenceResponse> {
+        self.infer_sync(image)
+    }
+
+    fn metrics_json(&self) -> String {
+        self.metrics().to_json()
+    }
+}
+
+pub struct Server<B: ServeBackend> {
+    backend: Arc<B>,
 }
 
 /// Handle for stopping a running server.
@@ -39,9 +61,9 @@ impl ServerHandle {
     }
 }
 
-impl Server {
-    pub fn new(coordinator: Arc<Coordinator>) -> Server {
-        Server { coordinator }
+impl<B: ServeBackend> Server<B> {
+    pub fn new(backend: Arc<B>) -> Server<B> {
+        Server { backend }
     }
 
     /// Bind and serve in background threads. Port 0 picks a free port.
@@ -53,7 +75,7 @@ impl Server {
         log::info!("serving on {addr}");
 
         let stop2 = stop.clone();
-        let coordinator = self.coordinator;
+        let backend = self.backend;
         let accept_thread = std::thread::Builder::new()
             .name("accept-loop".into())
             .spawn(move || {
@@ -63,11 +85,11 @@ impl Server {
                     }
                     match conn {
                         Ok(stream) => {
-                            let c = coordinator.clone();
+                            let b = backend.clone();
                             let _ = std::thread::Builder::new()
                                 .name("conn".into())
                                 .spawn(move || {
-                                    if let Err(e) = handle_connection(stream, &c) {
+                                    if let Err(e) = handle_connection(stream, b.as_ref()) {
                                         log::debug!("connection ended: {e:#}");
                                     }
                                 });
@@ -85,7 +107,20 @@ impl Server {
     }
 }
 
-fn handle_connection(stream: TcpStream, coordinator: &Coordinator) -> Result<()> {
+fn infer_response(backend: &impl ServeBackend, class: Option<u8>, image: HostTensor) -> Response {
+    match backend.serve_infer(class, image) {
+        Ok(r) => Response::Result {
+            id: r.id,
+            class: r.class as u32,
+            exited_early: r.exited_early(),
+            entropy: r.entropy,
+            latency_s: r.latency_s,
+        },
+        Err(e) => Response::Error(format!("{e:#}")),
+    }
+}
+
+fn handle_connection(stream: TcpStream, backend: &impl ServeBackend) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
@@ -98,29 +133,11 @@ fn handle_connection(stream: TcpStream, coordinator: &Coordinator) -> Result<()>
         let response = match Request::decode(&body) {
             Err(e) => Response::Error(format!("{e:#}")),
             Ok(Request::Ping) => Response::Pong,
-            Ok(Request::Metrics) => {
-                let snap = coordinator.metrics();
-                Response::Metrics(format!(
-                    "{{\"completed\":{},\"edge_exits\":{},\"rejected\":{},\
-                     \"throughput_rps\":{:.3},\"p50_s\":{:.6},\"p99_s\":{:.6}}}",
-                    snap.completed,
-                    snap.edge_exits,
-                    snap.rejected,
-                    snap.throughput_rps,
-                    snap.p50_s,
-                    snap.p99_s
-                ))
+            Ok(Request::Metrics) => Response::Metrics(backend.metrics_json()),
+            Ok(Request::Infer(tensor)) => infer_response(backend, None, tensor),
+            Ok(Request::InferClass { class, image }) => {
+                infer_response(backend, Some(class), image)
             }
-            Ok(Request::Infer(tensor)) => match coordinator.infer_sync(tensor) {
-                Ok(r) => Response::Result {
-                    id: r.id,
-                    class: r.class as u32,
-                    exited_early: r.exited_early(),
-                    entropy: r.entropy,
-                    latency_s: r.latency_s,
-                },
-                Err(e) => Response::Error(format!("{e:#}")),
-            },
         };
         write_frame(&mut writer, &response.encode())?;
     }
@@ -157,5 +174,10 @@ impl Client {
 
     pub fn infer(&mut self, image: HostTensor) -> Result<Response> {
         self.call(&Request::Infer(image))
+    }
+
+    /// Inference tagged with the client's link class (fleet routing).
+    pub fn infer_class(&mut self, class: u8, image: HostTensor) -> Result<Response> {
+        self.call(&Request::InferClass { class, image })
     }
 }

@@ -136,13 +136,17 @@ pub fn median(xs: &[f64]) -> f64 {
 
 /// Fixed-boundary log-scale histogram for latencies in seconds.
 /// Buckets: [0, 1us), [1us, ~1.26us), ... decade split into 10 — cheap
-/// `push` (a log10 + index) suitable for the serving hot path.
+/// `push` (a log10 + index) suitable for the serving hot path. Also
+/// accumulates the exact sum, so `mean()` is unbounded-run accurate
+/// (unlike a capped raw-sample vector) and histograms merge losslessly
+/// across shards.
 #[derive(Debug, Clone)]
 pub struct LatencyHistogram {
     counts: Vec<u64>,
     underflow: u64,
     overflow: u64,
     total: u64,
+    sum_s: f64,
 }
 
 const HIST_MIN: f64 = 1e-6; // 1 us
@@ -162,6 +166,7 @@ impl LatencyHistogram {
             underflow: 0,
             overflow: 0,
             total: 0,
+            sum_s: 0.0,
         }
     }
 
@@ -176,6 +181,7 @@ impl LatencyHistogram {
 
     pub fn push(&mut self, secs: f64) {
         self.total += 1;
+        self.sum_s += secs;
         match Self::bucket_of(secs) {
             None => self.underflow += 1,
             Some(i) if i >= self.counts.len() => self.overflow += 1,
@@ -185,6 +191,19 @@ impl LatencyHistogram {
 
     pub fn count(&self) -> u64 {
         self.total
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum_s
+    }
+
+    /// Exact mean over everything ever pushed (0 when empty, never NaN).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_s / self.total as f64
+        }
     }
 
     /// Bucket lower edge in seconds.
@@ -221,6 +240,7 @@ impl LatencyHistogram {
         self.underflow += other.underflow;
         self.overflow += other.overflow;
         self.total += other.total;
+        self.sum_s += other.sum_s;
     }
 }
 
@@ -305,5 +325,21 @@ mod tests {
         assert_eq!(h.count(), 2);
         assert_eq!(h.quantile(0.0), HIST_MIN);
         assert_eq!(h.quantile(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn histogram_mean_and_merge_are_exact() {
+        let mut a = LatencyHistogram::new();
+        assert_eq!(a.mean(), 0.0); // empty: zero, not NaN
+        for v in [0.010, 0.020, 0.030] {
+            a.push(v);
+        }
+        assert!((a.mean() - 0.020).abs() < 1e-15);
+        let mut b = LatencyHistogram::new();
+        b.push(0.040);
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert!((a.sum() - 0.100).abs() < 1e-15);
+        assert!((a.mean() - 0.025).abs() < 1e-15);
     }
 }

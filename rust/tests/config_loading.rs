@@ -89,6 +89,67 @@ fn invalid_values_rejected_at_load() {
 }
 
 #[test]
+fn fleet_config_file_roundtrip() {
+    let path = write_temp(
+        "fleet.toml",
+        r#"
+[fleet]
+shards = 3
+cloud_workers = 2
+routing = "round-robin"
+
+[[link_class]]
+name = "3g"
+
+[[link_class]]
+name = "4g"
+
+[[link_class]]
+name = "wifi"
+rtt_ms = 2
+"#,
+    );
+    let s = Settings::load(Some(&path)).unwrap();
+    assert_eq!(s.fleet.shards, 3);
+    assert_eq!(s.fleet.cloud_workers, 2);
+    assert_eq!(s.fleet.routing, "round-robin");
+    assert_eq!(s.link_classes.len(), 3);
+    assert!((s.link_classes[1].uplink_mbps - 5.85).abs() < 1e-12);
+    assert!((s.link_classes[2].rtt_s - 0.002).abs() < 1e-12);
+
+    // And the fleet registry builds straight from it.
+    let reg = branchyserve::fleet::ClassRegistry::from_settings(&s.link_classes).unwrap();
+    assert_eq!(reg.len(), 3);
+    assert!(reg.id_of("wifi").is_some());
+}
+
+#[test]
+fn fleet_config_validation_names_offending_field() {
+    for (name, body, needle) in [
+        ("bad_shards.toml", "[fleet]\nshards = 0\n", "fleet.shards"),
+        (
+            "bad_routing.toml",
+            "[fleet]\nrouting = \"psychic\"\n",
+            "fleet.routing",
+        ),
+        (
+            "bad_class.toml",
+            "[[link_class]]\nname = \"x\"\nuplink_mbps = -1\n",
+            "uplink_mbps",
+        ),
+        (
+            "dup_class.toml",
+            "[[link_class]]\nname = \"a\"\nuplink_mbps = 1\n\n[[link_class]]\nname = \"a\"\nuplink_mbps = 2\n",
+            "link_class[1].name",
+        ),
+    ] {
+        let path = write_temp(name, body);
+        let err = Settings::load(Some(&path)).unwrap_err().to_string();
+        assert!(err.contains(needle), "{name}: {err}");
+    }
+}
+
+#[test]
 fn missing_file_is_an_error() {
     assert!(Settings::load(Some(std::path::Path::new("/nonexistent/x.toml"))).is_err());
 }

@@ -53,6 +53,7 @@ fn coordinator_with(
             max_batch: 8,
             batch_timeout: Duration::from_millis(1),
             queue_capacity: 512,
+            ..Default::default()
         },
     )
 }
@@ -176,6 +177,7 @@ fn backpressure_rejects_over_capacity() {
             max_batch: 8,
             batch_timeout: Duration::from_millis(50),
             queue_capacity: 4,
+            ..Default::default()
         },
     );
     let mut source = ImageSource::new(36);

@@ -1,0 +1,269 @@
+//! Fleet integration: per-class partition points executed concurrently,
+//! shard routing, zero-traffic metrics hygiene, adaptive per-class
+//! replanning, and the TCP front-end's class tag. Runs entirely on the
+//! simulated runtime — no artifacts required.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use branchyserve::fleet::{ClassProfile, ClassRegistry, Fleet, FleetConfig, RoutePolicy};
+use branchyserve::model::Manifest;
+use branchyserve::network::bandwidth::LinkModel;
+use branchyserve::network::BandwidthTrace;
+use branchyserve::planner::{AdaptiveConfig, Planner};
+use branchyserve::runtime::InferenceEngine;
+use branchyserve::server::{Response, Server};
+use branchyserve::timing::DelayProfile;
+use branchyserve::workload::ImageSource;
+
+const N_STAGES: usize = 5;
+
+fn sim_manifest() -> Manifest {
+    Manifest::synthetic_sim(
+        "sim-fleet-test",
+        vec![3, 32, 32],
+        &[512, 256, 128, 64, 2],
+        1,
+        2,
+        vec![1, 2, 4, 8],
+    )
+    .unwrap()
+}
+
+fn sim_profile() -> DelayProfile {
+    // Edge stage 5 ms, cloud stage 0.1 ms: a starved uplink prefers the
+    // edge, a huge one the cloud — by an order of magnitude either way.
+    DelayProfile::from_cloud_times(vec![1e-4; N_STAGES], 2e-5, 50.0)
+}
+
+fn start_fleet(registry: ClassRegistry, cfg: FleetConfig) -> Fleet {
+    let manifest = sim_manifest();
+    let profile = sim_profile();
+    let m = manifest.clone();
+    Fleet::start(registry, &manifest, &profile, cfg, move |label| {
+        Ok((
+            InferenceEngine::open_sim(m.clone(), &format!("{label}-e"))?,
+            InferenceEngine::open_sim(m.clone(), &format!("{label}-c"))?,
+        ))
+    })
+    .unwrap()
+}
+
+fn fast_cfg() -> FleetConfig {
+    FleetConfig {
+        batch_timeout: Duration::from_millis(1),
+        real_time_channel: false,
+        entropy_threshold: 0.0, // deterministic: nothing exits early
+        ..Default::default()
+    }
+}
+
+fn slow_fast_registry() -> ClassRegistry {
+    ClassRegistry::new(vec![
+        ClassProfile::custom("slow", 0.05, 0.0).unwrap(),
+        ClassProfile::custom("fast", 100_000.0, 0.0).unwrap(),
+    ])
+    .unwrap()
+}
+
+/// The acceptance test: a slow-class and a fast-class request served
+/// concurrently execute under *different* partition points, each
+/// matching its per-class planner's output.
+#[test]
+fn concurrent_classes_execute_under_different_partition_points() {
+    let fleet = start_fleet(slow_fast_registry(), fast_cfg());
+    let slow = fleet.class_by_name("slow").unwrap();
+    let fast = fleet.class_by_name("fast").unwrap();
+
+    // Cross-check the active plans against an independently constructed
+    // planner (same desc/profile/epsilon the fleet planned with).
+    let reference = Planner::new(&sim_manifest().to_desc(0.5), &sim_profile(), 1e-9, false);
+    let want_slow = reference.plan_for(LinkModel::try_new(0.05, 0.0).unwrap());
+    let want_fast = reference.plan_for(LinkModel::try_new(100_000.0, 0.0).unwrap());
+
+    let slow_plan = fleet.plan_of(slow).unwrap();
+    let fast_plan = fleet.plan_of(fast).unwrap();
+    assert_eq!(slow_plan.split_after, want_slow.split_after);
+    assert_eq!(fast_plan.split_after, want_fast.split_after);
+    assert!(slow_plan.is_edge_only(N_STAGES), "{slow_plan:?}");
+    assert!(fast_plan.is_cloud_only(), "{fast_plan:?}");
+    assert_ne!(slow_plan.split_after, fast_plan.split_after);
+
+    // Interleave submissions so both classes are in flight at once.
+    let mut source = ImageSource::new(71);
+    let mut pending = Vec::new();
+    for _ in 0..8 {
+        let (img, _) = source.sample();
+        pending.push(("slow", fleet.submit(slow, img.clone()).unwrap()));
+        pending.push(("fast", fleet.submit(fast, img).unwrap()));
+    }
+    for (kind, (_, rx)) in pending {
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        match kind {
+            // Edge-only execution: nothing crosses the uplink.
+            "slow" => {
+                assert_eq!(r.transfer_s, 0.0, "slow-class sample paid a transfer");
+                assert_eq!(r.cloud_s, 0.0, "slow-class sample paid cloud compute");
+            }
+            // Cloud-only execution: the raw input was uploaded.
+            _ => assert!(r.transfer_s > 0.0, "fast-class sample skipped the uplink"),
+        }
+    }
+
+    let report = fleet.shutdown();
+    assert_eq!(report.total.completed, 16);
+    let by_name = |n: &str| {
+        report
+            .classes
+            .iter()
+            .find(|c| c.name == n)
+            .unwrap_or_else(|| panic!("missing class {n}"))
+    };
+    let slow_report = by_name("slow");
+    let fast_report = by_name("fast");
+    assert_eq!(slow_report.aggregate.completed, 8);
+    assert_eq!(fast_report.aggregate.completed, 8);
+    assert_eq!(slow_report.split_after, want_slow.split_after);
+    assert_eq!(fast_report.split_after, want_fast.split_after);
+    assert_eq!(slow_report.aggregate.transferred_bytes, 0);
+    assert!(fast_report.aggregate.transferred_bytes > 0);
+}
+
+#[test]
+fn round_robin_routing_spreads_load_across_all_shards() {
+    let registry = ClassRegistry::single(ClassProfile::custom("only", 0.05, 0.0).unwrap());
+    let fleet = start_fleet(
+        registry,
+        FleetConfig {
+            shards_per_class: 4,
+            routing: RoutePolicy::RoundRobin,
+            ..fast_cfg()
+        },
+    );
+    let class = fleet.class_by_name("only").unwrap();
+    let mut source = ImageSource::new(72);
+    let pending: Vec<_> = (0..32)
+        .map(|_| fleet.submit(class, source.sample().0).unwrap())
+        .collect();
+    for (_, rx) in pending {
+        rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    }
+    let report = fleet.shutdown();
+    let per_shard: Vec<u64> = report.classes[0].shards.iter().map(|s| s.completed).collect();
+    assert_eq!(per_shard.iter().sum::<u64>(), 32);
+    assert_eq!(per_shard.len(), 4);
+    assert!(
+        per_shard.iter().all(|&c| c == 8),
+        "round-robin must spread evenly: {per_shard:?}"
+    );
+}
+
+#[test]
+fn idle_fleet_reports_clean_zeros() {
+    let fleet = start_fleet(
+        slow_fast_registry(),
+        FleetConfig {
+            shards_per_class: 2,
+            ..fast_cfg()
+        },
+    );
+    let report = fleet.report();
+    assert_eq!(report.total.completed, 0);
+    assert_eq!(report.total.mean_latency_s, 0.0);
+    let s = report.summary();
+    assert!(!s.contains("NaN"), "{s}");
+    let json = report.to_json();
+    let v = branchyserve::config::json::Json::parse(&json).unwrap();
+    assert_eq!(v.get("completed").unwrap().as_u64(), Some(0));
+    assert_eq!(v.get("classes").unwrap().as_arr().unwrap().len(), 2);
+    fleet.shutdown();
+}
+
+#[test]
+fn adaptive_loop_replans_a_class_when_its_uplink_changes() {
+    // One class whose uplink goes from starved to effectively free 300ms
+    // in: the per-class replan loop must move every shard of the class
+    // from edge-only to cloud-only.
+    let trace = BandwidthTrace::new(vec![(0.0, 0.05), (0.3, 100_000.0)]).unwrap();
+    let registry = ClassRegistry::single(
+        ClassProfile::custom("mobile", 0.05, 0.0)
+            .unwrap()
+            .with_trace(trace),
+    );
+    let fleet = start_fleet(
+        registry,
+        FleetConfig {
+            shards_per_class: 2,
+            adaptive: Some(AdaptiveConfig {
+                interval: Duration::from_millis(20),
+                min_improvement: 0.01,
+                min_dwell: Duration::ZERO,
+            }),
+            ..fast_cfg()
+        },
+    );
+    let class = fleet.class_by_name("mobile").unwrap();
+    assert!(fleet.plan_of(class).unwrap().is_edge_only(N_STAGES));
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if fleet.plan_of(class).unwrap().is_cloud_only() {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "adaptive loop never switched the class plan"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let report = fleet.shutdown();
+    for (i, shard) in report.classes[0].shards.iter().enumerate() {
+        assert!(
+            shard.plan_switches >= 1,
+            "shard {i} never saw a plan switch"
+        );
+    }
+}
+
+#[test]
+fn tcp_front_end_routes_class_tags_to_the_fleet() {
+    let fleet = Arc::new(start_fleet(slow_fast_registry(), fast_cfg()));
+    let handle = Server::new(fleet.clone()).start(0).unwrap();
+    let mut client = branchyserve::server::Client::connect(handle.addr()).unwrap();
+    client.ping().unwrap();
+
+    let mut source = ImageSource::new(73);
+    let fast_id = fleet.class_by_name("fast").unwrap().0;
+
+    // Tagged: routed to the fast (cloud-only) class.
+    let (img, _) = source.sample();
+    match client.infer_class(fast_id, img).unwrap() {
+        Response::Result { class, .. } => assert!(class < 2),
+        other => panic!("unexpected {other:?}"),
+    }
+    // Untagged legacy INFER: served as class 0.
+    let (img, _) = source.sample();
+    assert!(matches!(
+        client.infer(img).unwrap(),
+        Response::Result { .. }
+    ));
+    // Unknown class tag: an error frame, not a dead connection.
+    let (img, _) = source.sample();
+    match client.infer_class(9, img).unwrap() {
+        Response::Error(msg) => assert!(msg.contains("unknown link class"), "{msg}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    client.ping().unwrap();
+
+    // Fleet metrics over the wire: flat totals + per-class detail.
+    match client.call(&branchyserve::server::Request::Metrics).unwrap() {
+        Response::Metrics(json) => {
+            let v = branchyserve::config::json::Json::parse(&json).unwrap();
+            assert_eq!(v.get("completed").unwrap().as_u64(), Some(2));
+            let classes = v.get("classes").unwrap().as_arr().unwrap();
+            assert_eq!(classes.len(), 2);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    handle.stop();
+}

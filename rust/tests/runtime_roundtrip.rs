@@ -176,6 +176,7 @@ fn missing_artifacts_dir_gives_actionable_error() {
     assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
 }
 
+#[cfg(feature = "xla-pjrt")]
 #[test]
 fn corrupt_hlo_artifact_fails_cleanly() {
     // A store pointed at a dir with a garbage .hlo.txt must error on
