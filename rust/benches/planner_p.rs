@@ -1,0 +1,111 @@
+//! p-view rebuild throughput: the cost of re-pointing a planner at new
+//! exit probabilities. This is the operation online exit-rate feedback
+//! performs on every drift trigger and the fleet performs once per link
+//! class at startup, so it must be *much* cheaper than the full
+//! `Planner::new` path it replaces (desc clone + re-validation + the
+//! p-independent precompute) — the acceptance bar is `with_exit_probs`
+//! ≥ 10× faster than cold construction at production-ish depth.
+//!
+//!     cargo bench --bench planner_p
+
+use std::time::Duration;
+
+use branchyserve::harness::{bench, print_table, BenchResult};
+use branchyserve::model::synthetic;
+use branchyserve::network::bandwidth::LinkModel;
+use branchyserve::planner::Planner;
+use branchyserve::util::timefmt::format_rate;
+
+fn main() {
+    branchyserve::util::logger::init();
+    // SMOKE=1 (CI): shorter timing windows, same assertions.
+    let window = if std::env::var("SMOKE").is_ok() {
+        Duration::from_millis(60)
+    } else {
+        Duration::from_millis(200)
+    };
+
+    // Rotate through a spread of exit probabilities so every rebuild
+    // derives a genuinely different view.
+    let probs_grid: Vec<f64> = (0..64).map(|i| i as f64 / 63.0).collect();
+
+    let mut rows: Vec<BenchResult> = Vec::new();
+    let mut ratios: Vec<(usize, f64)> = Vec::new();
+
+    for &n in &[64usize, 256, 1024, 4096] {
+        // A few branches (every n/4 stages), like real BranchyNets — the
+        // O(N·m) survival folds are shared by both paths; what differs
+        // is everything with_exit_probs *skips*.
+        let (desc, profile) = synthetic::deep_chain(n, n / 4, 0.3, 42);
+        let m = desc.branches.len();
+
+        let mut ic = probs_grid.iter().cycle();
+        let cold = bench(&format!("cold Planner::new     n={n}"), window, || {
+            let p = *ic.next().unwrap();
+            let mut d = desc.clone();
+            for b in &mut d.branches {
+                b.exit_prob = p;
+            }
+            let planner = Planner::new(&d, &profile, 1e-9, false);
+            std::hint::black_box(planner.num_stages());
+        });
+
+        // The view path: same StaticCore, one O(N·m) derive per call.
+        let base = Planner::new(&desc, &profile, 1e-9, false);
+        let mut iv = probs_grid.iter().cycle();
+        let rebuild = bench(&format!("with_exit_probs       n={n}"), window, || {
+            let p = *iv.next().unwrap();
+            let view = base.with_exit_probs(&vec![p; m]);
+            std::hint::black_box(view.num_stages());
+        });
+
+        // Sanity: the cheap path must agree with the cold one bit for
+        // bit (the property test proves this exhaustively; this guards
+        // the bench itself against drift).
+        {
+            let p = 0.37;
+            let mut d = desc.clone();
+            for b in &mut d.branches {
+                b.exit_prob = p;
+            }
+            let fresh = Planner::new(&d, &profile, 1e-9, false);
+            let cheap = base.with_exit_probs(&vec![p; m]);
+            let link = LinkModel::new(5.85, 0.01);
+            for s in 0..=n {
+                assert_eq!(
+                    cheap.expected_time(s, link).to_bits(),
+                    fresh.expected_time(s, link).to_bits(),
+                    "view drift at split {s}, n={n}"
+                );
+            }
+        }
+
+        ratios.push((n, cold.mean_s / rebuild.mean_s));
+        rows.push(cold);
+        rows.push(rebuild);
+    }
+    print_table("p-view rebuild vs cold planner construction", &rows);
+
+    println!("\n=== rebuilds/sec ===");
+    for (row, &(n, ratio)) in rows.chunks(2).zip(&ratios) {
+        println!(
+            "n={n:<5} cold {:>12}  with_exit_probs {:>12} ({ratio:6.1}x)",
+            format_rate(1.0 / row[0].mean_s),
+            format_rate(1.0 / row[1].mean_s),
+        );
+    }
+
+    // Acceptance bar: at production-ish depth the view rebuild must beat
+    // cold construction by >= 10x — otherwise the two-layer split isn't
+    // paying for itself and the exit-feedback loop is too expensive to
+    // run inline.
+    let &(n, ratio) = ratios
+        .iter()
+        .find(|&&(n, _)| n == 1024)
+        .expect("n=1024 measured");
+    assert!(
+        ratio >= 10.0,
+        "with_exit_probs only {ratio:.1}x faster than cold Planner::new at n={n}"
+    );
+    println!("\nwith_exit_probs >= 10x cold construction at n=1024: OK ({ratio:.1}x)");
+}

@@ -126,7 +126,8 @@ pub struct ServeSettings {
     pub queue_capacity: usize,
 }
 
-/// `[fleet]`: how many pipelines the serving path fans out to.
+/// `[fleet]`: how many pipelines the serving path fans out to, and the
+/// per-request / feedback planning knobs.
 #[derive(Debug, Clone)]
 pub struct FleetSettings {
     /// Edge/cloud pipeline pairs per link class.
@@ -135,6 +136,16 @@ pub struct FleetSettings {
     pub cloud_workers: usize,
     /// Shard routing policy: "round-robin" | "hash" | "least-loaded".
     pub routing: String,
+    /// Solve each request's split at the class channel's instantaneous
+    /// link estimate (plan override per sample) instead of only at
+    /// adaptive-replan boundaries.
+    pub per_request_planning: bool,
+    /// Track each class's observed exit rate and re-derive its planner
+    /// view when the estimate drifts.
+    pub online_estimation: bool,
+    /// Absolute |p̂ − p_planned| drift that triggers a view rebuild
+    /// (only meaningful with `online_estimation`).
+    pub drift_threshold: f64,
 }
 
 /// One `[[link_class]]` entry: a named client population with its own
@@ -193,6 +204,9 @@ impl Default for Settings {
                 shards: 1,
                 cloud_workers: 1,
                 routing: "least-loaded".into(),
+                per_request_planning: false,
+                online_estimation: false,
+                drift_threshold: 0.1,
             },
             link_classes: Vec::new(),
         }
@@ -269,6 +283,15 @@ impl Settings {
         }
         if let Some(v) = doc.path("fleet.routing").and_then(Json::as_str) {
             self.fleet.routing = v.to_string();
+        }
+        if let Some(v) = doc.path("fleet.per_request_planning").and_then(Json::as_bool) {
+            self.fleet.per_request_planning = v;
+        }
+        if let Some(v) = doc.path("fleet.online_estimation").and_then(Json::as_bool) {
+            self.fleet.online_estimation = v;
+        }
+        if let Some(v) = doc.path("fleet.drift_threshold").and_then(Json::as_f64) {
+            self.fleet.drift_threshold = v;
         }
         if let Some(arr) = doc.get("link_class").and_then(Json::as_arr) {
             self.link_classes.clear();
@@ -353,6 +376,12 @@ impl Settings {
         }
         if let Err(e) = crate::fleet::router::RoutePolicy::parse(&self.fleet.routing) {
             bail!("fleet.routing: {e}");
+        }
+        if !(self.fleet.drift_threshold > 0.0 && self.fleet.drift_threshold < 1.0) {
+            bail!(
+                "fleet.drift_threshold must be in (0, 1); got {}",
+                self.fleet.drift_threshold
+            );
         }
         if self.link_classes.len() > 256 {
             bail!(
@@ -472,6 +501,9 @@ max_batch = 4
 shards = 4
 cloud_workers = 2
 routing = "hash"
+per_request_planning = true
+online_estimation = true
+drift_threshold = 0.25
 
 [[link_class]]
 name = "3g"
@@ -490,6 +522,9 @@ exit_probability = 0.8
         assert_eq!(s.fleet.shards, 4);
         assert_eq!(s.fleet.cloud_workers, 2);
         assert_eq!(s.fleet.routing, "hash");
+        assert!(s.fleet.per_request_planning);
+        assert!(s.fleet.online_estimation);
+        assert!((s.fleet.drift_threshold - 0.25).abs() < 1e-12);
         assert_eq!(s.link_classes.len(), 2);
         // Builtin name: paper rate filled in automatically.
         assert_eq!(s.link_classes[0].name, "3g");
@@ -509,6 +544,15 @@ exit_probability = 0.8
         s.fleet.routing = "magic".into();
         let e = s.validate().unwrap_err().to_string();
         assert!(e.contains("fleet.routing"), "{e}");
+
+        let mut s = Settings::default();
+        s.fleet.drift_threshold = 0.0;
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("fleet.drift_threshold"), "{e}");
+
+        let mut s = Settings::default();
+        s.fleet.drift_threshold = 1.0;
+        assert!(s.validate().is_err());
 
         let mut s = Settings::default();
         s.link_classes.push(LinkClassSettings {

@@ -14,6 +14,16 @@
 //! stamps each survivor with a "transfer completes at" instant; the cloud
 //! worker waits for that instant before computing. Edge compute is never
 //! blocked by the (simulated) uplink.
+//!
+//! Plans are resolved **per request**: a request may carry its own
+//! [`PartitionPlan`] override (per-request planning — the fleet solved
+//! the split at the instantaneous link estimate at admission); requests
+//! without one execute under the coordinator's current plan. The edge
+//! worker groups each batch by effective split so one executable batch
+//! never mixes splits, and every transferred sample is stamped with the
+//! split it was cut at — the cloud worker runs `split+1..=N` from the
+//! stamp, so a concurrent plan switch can never make a sample skip or
+//! repeat a stage mid-flight.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, RwLock};
@@ -29,6 +39,12 @@ use super::batcher::{Batcher, SubmitError};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::{ExitPoint, InferenceRequest, InferenceResponse};
 
+/// Called once per branch-gate decision with `true` when the sample
+/// exited early at the side branch — the hook the fleet's online
+/// exit-rate estimation feeds on. Invoked on the edge worker thread;
+/// keep it cheap.
+pub type ExitObserver = Arc<dyn Fn(bool) + Send + Sync>;
+
 /// Work item crossing the edge->cloud boundary.
 struct TransferredSample {
     id: u64,
@@ -38,6 +54,9 @@ struct TransferredSample {
     entropy: f32,
     edge_s: f64,
     transfer_s: f64,
+    /// The split this sample was cut at: the cloud runs `split+1..=N`
+    /// regardless of what the coordinator's plan says by then.
+    split: usize,
     /// The (simulated) instant the upload completes.
     ready_at: Instant,
 }
@@ -93,6 +112,23 @@ impl Coordinator {
         plan: PartitionPlan,
         cfg: CoordinatorConfig,
     ) -> Coordinator {
+        Self::start_observed(edge_engine, cloud_engine, channel, plan, cfg, None)
+    }
+
+    /// [`Coordinator::start`] with an exit observer: `observer` is
+    /// called once per branch-gate decision (`true` = early exit), the
+    /// signal an online exit-rate estimator consumes. Samples that never
+    /// reach the branch (cloud-only plans, splits at or before the
+    /// branch) produce no observations — an unevaluated branch has no
+    /// observable exit behaviour.
+    pub fn start_observed(
+        edge_engine: InferenceEngine,
+        cloud_engine: InferenceEngine,
+        channel: Arc<Channel>,
+        plan: PartitionPlan,
+        cfg: CoordinatorConfig,
+        observer: Option<ExitObserver>,
+    ) -> Coordinator {
         let plan = Arc::new(RwLock::new(plan));
         let ingress = Arc::new(Batcher::new(
             cfg.queue_capacity,
@@ -115,6 +151,7 @@ impl Coordinator {
             let cloud_queue = cloud_queue.clone();
             let metrics = metrics.clone();
             let threshold = cfg.entropy_threshold;
+            let observer = observer.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name("edge-worker".into())
@@ -127,6 +164,7 @@ impl Coordinator {
                             cloud_queue,
                             metrics,
                             threshold,
+                            observer,
                         )
                     })
                     .expect("spawn edge worker"),
@@ -134,13 +172,12 @@ impl Coordinator {
         }
         for i in 0..cfg.cloud_workers.max(1) {
             let engine = cloud_engine.clone();
-            let plan = plan.clone();
             let cloud_queue = cloud_queue.clone();
             let metrics = metrics.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("cloud-worker-{i}"))
-                    .spawn(move || cloud_loop(engine, plan, cloud_queue, metrics))
+                    .spawn(move || cloud_loop(engine, cloud_queue, metrics))
                     .expect("spawn cloud worker"),
             );
         }
@@ -200,13 +237,38 @@ impl Coordinator {
 
     /// Submit one image; the response arrives on the returned receiver.
     pub fn submit(&self, image: HostTensor) -> Result<(u64, mpsc::Receiver<InferenceResponse>)> {
+        self.submit_with_plan(image, None)
+    }
+
+    /// Submit one image with a per-request plan override: this sample
+    /// executes under `plan` (solved by the caller at the instantaneous
+    /// link estimate) regardless of the coordinator's current plan. The
+    /// edge worker groups batches by effective split, so overridden and
+    /// default samples sharing a batch window each run their own split.
+    pub fn submit_planned(
+        &self,
+        image: HostTensor,
+        plan: PartitionPlan,
+    ) -> Result<(u64, mpsc::Receiver<InferenceResponse>)> {
+        self.submit_with_plan(image, Some(plan))
+    }
+
+    fn submit_with_plan(
+        &self,
+        image: HostTensor,
+        plan: Option<PartitionPlan>,
+    ) -> Result<(u64, mpsc::Receiver<InferenceResponse>)> {
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if plan.is_some() {
+            self.metrics.plan_overrides.fetch_add(1, Ordering::Relaxed);
+        }
         let req = InferenceRequest {
             id,
             image,
             enqueued: Instant::now(),
             reply: tx,
+            plan,
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match self.ingress.submit(req) {
@@ -263,6 +325,7 @@ fn edge_loop(
     cloud_queue: Arc<Batcher<TransferredSample>>,
     metrics: Arc<Metrics>,
     threshold: f32,
+    observer: Option<ExitObserver>,
 ) {
     let manifest = engine.manifest().clone();
     let sizes = manifest.batch_sizes.clone();
@@ -271,22 +334,39 @@ fn edge_loop(
     while let Some(batch) = ingress.next_batch() {
         metrics.edge_batches.fetch_add(1, Ordering::Relaxed);
         let current = plan.read().unwrap().clone();
-        // Chunk to the largest exported executable size.
-        let mut batch = batch;
-        while !batch.is_empty() {
-            let take = batch.len().min(max_exec);
-            let chunk: Vec<InferenceRequest> = batch.drain(..take).collect();
-            if let Err(e) = process_edge_chunk(
-                &engine,
-                &channel,
-                &current,
-                chunk,
-                &cloud_queue,
-                &metrics,
-                threshold,
-                &sizes,
-            ) {
-                log::error!("edge chunk failed: {e:#}");
+        // Group by effective plan (per-request overrides vs the current
+        // plan): one executable batch never mixes split points. Requests
+        // without overrides — the common case — form a single group, so
+        // this is a no-op for fleets without per-request planning.
+        let mut groups: Vec<(PartitionPlan, Vec<InferenceRequest>)> = Vec::new();
+        for mut req in batch {
+            let p = req.plan.take().unwrap_or_else(|| current.clone());
+            match groups
+                .iter_mut()
+                .find(|(g, _)| g.split_after == p.split_after)
+            {
+                Some((_, reqs)) => reqs.push(req),
+                None => groups.push((p, vec![req])),
+            }
+        }
+        for (group_plan, mut batch) in groups {
+            // Chunk to the largest exported executable size.
+            while !batch.is_empty() {
+                let take = batch.len().min(max_exec);
+                let chunk: Vec<InferenceRequest> = batch.drain(..take).collect();
+                if let Err(e) = process_edge_chunk(
+                    &engine,
+                    &channel,
+                    &group_plan,
+                    chunk,
+                    &cloud_queue,
+                    &metrics,
+                    threshold,
+                    &sizes,
+                    observer.as_ref(),
+                ) {
+                    log::error!("edge chunk failed: {e:#}");
+                }
             }
         }
     }
@@ -302,6 +382,7 @@ fn process_edge_chunk(
     metrics: &Metrics,
     threshold: f32,
     sizes: &[usize],
+    observer: Option<&ExitObserver>,
 ) -> Result<()> {
     let n = chunk.len();
     let manifest = engine.manifest();
@@ -330,7 +411,14 @@ fn process_edge_chunk(
         let mut survivors = Vec::new();
         for (idx, req_i) in alive.iter().copied().enumerate() {
             entropies[req_i] = out.entropy[idx];
-            if out.entropy[idx] < threshold {
+            let exited = out.entropy[idx] < threshold;
+            // Every gate decision is an exit-rate observation — exits
+            // and survivors alike; the latter are known non-exits the
+            // moment the gate passes them, wherever they finish.
+            if let Some(obs) = observer {
+                obs(exited);
+            }
+            if exited {
                 // Early exit: answer from the branch.
                 let req = &chunk[req_i];
                 metrics.edge_exits.fetch_add(1, Ordering::Relaxed);
@@ -422,6 +510,7 @@ fn process_edge_chunk(
             entropy: entropies[req_i],
             edge_s,
             transfer_s,
+            split: s,
             ready_at,
         };
         if let Err(SubmitError::Full(item)) = cloud_queue.submit(item) {
@@ -435,7 +524,6 @@ fn process_edge_chunk(
 
 fn cloud_loop(
     engine: InferenceEngine,
-    plan: Arc<RwLock<PartitionPlan>>,
     cloud_queue: Arc<Batcher<TransferredSample>>,
     metrics: Arc<Metrics>,
 ) {
@@ -445,50 +533,66 @@ fn cloud_loop(
 
     while let Some(batch) = cloud_queue.next_batch() {
         metrics.cloud_batches.fetch_add(1, Ordering::Relaxed);
-        // Honor the (simulated) transfer completion time.
-        if let Some(latest) = batch.iter().map(|t| t.ready_at).max() {
-            let now = Instant::now();
-            if latest > now {
-                std::thread::sleep(latest - now);
+        // Each sample carries the split it was cut at, so a batch drawn
+        // from the shared queue may mix splits (per-request planning, or
+        // a plan switch racing in-flight transfers). Group and run each
+        // split's samples together — never under a split they weren't
+        // cut at.
+        let mut groups: Vec<(usize, Vec<TransferredSample>)> = Vec::new();
+        for item in batch {
+            match groups.iter_mut().find(|(s, _)| *s == item.split) {
+                Some((_, items)) => items.push(item),
+                None => groups.push((item.split, vec![item])),
             }
         }
-        let s = plan.read().unwrap().split_after;
-        let from = s + 1;
-        if from > num_stages {
-            continue; // plan changed to edge-only mid-flight; drop
-        }
-        let t0 = Instant::now();
-        let result = (|| -> Result<()> {
-            let tensors: Vec<HostTensor> =
-                batch.iter().map(|t| t.activation.clone()).collect();
-            let stacked = HostTensor::stack(&tensors)?;
-            let exec_b = bucket_up(&sizes, batch.len());
-            let x = stacked.pad_batch(exec_b);
-            let out = engine.run_stages(from, num_stages, &x)?;
-            let classes = InferenceEngine::argmax_classes(&out);
-            let cloud_s = t0.elapsed().as_secs_f64();
-            for (idx, item) in batch.iter().enumerate() {
-                metrics.completed.fetch_add(1, Ordering::Relaxed);
-                metrics
-                    .cloud_completions
-                    .fetch_add(1, Ordering::Relaxed);
-                let latency = item.enqueued.elapsed().as_secs_f64();
-                metrics.record_latency(latency);
-                let _ = item.reply.send(InferenceResponse {
-                    id: item.id,
-                    class: classes[idx],
-                    exit: ExitPoint::MainOutput,
-                    entropy: item.entropy,
-                    latency_s: latency,
-                    edge_s: item.edge_s,
-                    transfer_s: item.transfer_s,
-                    cloud_s,
-                });
+        // Earliest-ready group first, so one late transfer never delays
+        // a group whose upload already finished.
+        groups.sort_by_key(|(_, items)| items.iter().map(|t| t.ready_at).max());
+        for (split, group) in groups {
+            // Honor the (simulated) transfer completion time of *this*
+            // group only — a fast-link sample must not wait out a
+            // slow-link sample that merely shared the batch window.
+            if let Some(latest) = group.iter().map(|t| t.ready_at).max() {
+                let now = Instant::now();
+                if latest > now {
+                    std::thread::sleep(latest - now);
+                }
             }
-            Ok(())
-        })();
-        if let Err(e) = result {
-            log::error!("cloud batch failed: {e:#}");
+            let from = split + 1;
+            debug_assert!(from <= num_stages, "edge-only sample transferred");
+            let t0 = Instant::now();
+            let result = (|| -> Result<()> {
+                let tensors: Vec<HostTensor> =
+                    group.iter().map(|t| t.activation.clone()).collect();
+                let stacked = HostTensor::stack(&tensors)?;
+                let exec_b = bucket_up(&sizes, group.len());
+                let x = stacked.pad_batch(exec_b);
+                let out = engine.run_stages(from, num_stages, &x)?;
+                let classes = InferenceEngine::argmax_classes(&out);
+                let cloud_s = t0.elapsed().as_secs_f64();
+                for (idx, item) in group.iter().enumerate() {
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    metrics
+                        .cloud_completions
+                        .fetch_add(1, Ordering::Relaxed);
+                    let latency = item.enqueued.elapsed().as_secs_f64();
+                    metrics.record_latency(latency);
+                    let _ = item.reply.send(InferenceResponse {
+                        id: item.id,
+                        class: classes[idx],
+                        exit: ExitPoint::MainOutput,
+                        entropy: item.entropy,
+                        latency_s: latency,
+                        edge_s: item.edge_s,
+                        transfer_s: item.transfer_s,
+                        cloud_s,
+                    });
+                }
+                Ok(())
+            })();
+            if let Err(e) = result {
+                log::error!("cloud batch failed: {e:#}");
+            }
         }
     }
 }
@@ -496,6 +600,9 @@ fn cloud_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::settings::Strategy;
+    use crate::model::Manifest;
+    use crate::network::trace::BandwidthTrace;
 
     #[test]
     fn bucket_up_semantics() {
@@ -505,5 +612,122 @@ mod tests {
         assert_eq!(bucket_up(&sizes, 4), 4);
         assert_eq!(bucket_up(&sizes, 5), 8);
         assert_eq!(bucket_up(&sizes, 9), 8); // chunked upstream
+    }
+
+    fn sim_setup() -> (Manifest, InferenceEngine, InferenceEngine, Arc<Channel>) {
+        let manifest =
+            Manifest::synthetic_sim("sim-eng", vec![4], &[16, 8, 2], 1, 2, vec![1, 2, 4, 8])
+                .unwrap();
+        let edge = InferenceEngine::open_sim(manifest.clone(), "eng-e").unwrap();
+        let cloud = InferenceEngine::open_sim(manifest.clone(), "eng-c").unwrap();
+        let channel =
+            Arc::new(Channel::new(BandwidthTrace::constant(100.0), 0.0, 0.0, 1).simulated_time());
+        (manifest, edge, cloud, channel)
+    }
+
+    fn plan_at(manifest: &Manifest, split: usize) -> PartitionPlan {
+        PartitionPlan::from_split(split, 0.0, Strategy::ShortestPath, &manifest.to_desc(0.5))
+    }
+
+    fn cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            entropy_threshold: 0.0, // nothing exits unless a test raises it
+            batch_timeout: Duration::from_millis(1),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn per_request_overrides_execute_their_own_split() {
+        let (manifest, edge, cloud, channel) = sim_setup();
+        let n_stages = manifest.num_stages();
+        // Base plan: edge-only. Odd requests override to cloud-only.
+        let c = Coordinator::start(edge, cloud, channel, plan_at(&manifest, n_stages), cfg());
+        let mut pending = Vec::new();
+        for i in 0..8 {
+            let img = HostTensor::new(vec![4], vec![0.1 * i as f32, -0.2, 0.3, 0.4]).unwrap();
+            let handle = if i % 2 == 1 {
+                c.submit_planned(img, plan_at(&manifest, 0)).unwrap()
+            } else {
+                c.submit(img).unwrap()
+            };
+            pending.push((i, handle));
+        }
+        for (i, (_, rx)) in pending {
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            if i % 2 == 1 {
+                assert!(r.transfer_s > 0.0, "override sample {i} skipped the uplink");
+            } else {
+                assert_eq!(r.transfer_s, 0.0, "default sample {i} paid a transfer");
+                assert_eq!(r.cloud_s, 0.0, "default sample {i} paid cloud compute");
+            }
+        }
+        // The base plan never moved, and every override was counted.
+        assert!(c.plan().is_edge_only(n_stages));
+        let m = c.shutdown();
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.plan_overrides, 4);
+        assert_eq!(m.plan_switches, 0);
+    }
+
+    #[test]
+    fn exit_observer_sees_every_gate_decision() {
+        let exits = Arc::new(AtomicU64::new(0));
+        let survivals = Arc::new(AtomicU64::new(0));
+        let (e2, s2) = (exits.clone(), survivals.clone());
+        let observer: ExitObserver = Arc::new(move |exited| {
+            if exited {
+                e2.fetch_add(1, Ordering::Relaxed);
+            } else {
+                s2.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+
+        // Threshold above the entropy ceiling: every gated sample exits.
+        let (manifest, edge, cloud, channel) = sim_setup();
+        let c = Coordinator::start_observed(
+            edge,
+            cloud,
+            channel,
+            plan_at(&manifest, 2), // branch (after stage 1) active
+            CoordinatorConfig {
+                entropy_threshold: 10.0,
+                ..cfg()
+            },
+            Some(observer.clone()),
+        );
+        for _ in 0..5 {
+            let r = c.infer_sync(HostTensor::zeros(vec![4])).unwrap();
+            assert!(r.exited_early());
+        }
+        let m = c.shutdown();
+        assert_eq!(m.edge_exits, 5);
+        assert_eq!(exits.load(Ordering::Relaxed), 5);
+        assert_eq!(survivals.load(Ordering::Relaxed), 0);
+
+        // Threshold zero: every gated sample survives — and a cloud-only
+        // plan produces no observations at all (no branch, no signal).
+        let (manifest, edge, cloud, channel) = sim_setup();
+        let c = Coordinator::start_observed(
+            edge,
+            cloud,
+            channel,
+            plan_at(&manifest, 2),
+            cfg(),
+            Some(observer.clone()),
+        );
+        for _ in 0..3 {
+            let r = c.infer_sync(HostTensor::zeros(vec![4])).unwrap();
+            assert!(!r.exited_early());
+        }
+        c.set_plan(plan_at(&manifest, 0));
+        let _ = c.infer_sync(HostTensor::zeros(vec![4])).unwrap();
+        c.shutdown();
+        assert_eq!(exits.load(Ordering::Relaxed), 5, "no new exits");
+        assert_eq!(
+            survivals.load(Ordering::Relaxed),
+            3,
+            "cloud-only sample must not be observed"
+        );
     }
 }

@@ -21,6 +21,9 @@ pub struct Metrics {
     /// Live partition-plan switches applied by adaptive replanning
     /// (incremented by `Coordinator::set_plan` when the split moves).
     pub plan_switches: AtomicU64,
+    /// Requests admitted with a per-request plan override
+    /// (`Coordinator::submit_planned` — fleet per-request planning).
+    pub plan_overrides: AtomicU64,
     latency: Mutex<LatencyHistogram>,
 }
 
@@ -59,6 +62,7 @@ impl Metrics {
             edge_batches: self.edge_batches.load(Ordering::Relaxed),
             cloud_batches: self.cloud_batches.load(Ordering::Relaxed),
             plan_switches: self.plan_switches.load(Ordering::Relaxed),
+            plan_overrides: self.plan_overrides.load(Ordering::Relaxed),
             throughput_rps: completed as f64 / elapsed,
             mean_latency_s: hist.mean(),
             p50_s,
@@ -81,6 +85,8 @@ pub struct MetricsSnapshot {
     pub edge_batches: u64,
     pub cloud_batches: u64,
     pub plan_switches: u64,
+    /// Requests admitted with a per-request plan override.
+    pub plan_overrides: u64,
     pub throughput_rps: f64,
     pub mean_latency_s: f64,
     pub p50_s: f64,
@@ -104,6 +110,7 @@ impl MetricsSnapshot {
             edge_batches: 0,
             cloud_batches: 0,
             plan_switches: 0,
+            plan_overrides: 0,
             throughput_rps: 0.0,
             mean_latency_s: 0.0,
             p50_s: 0.0,
@@ -132,6 +139,7 @@ impl MetricsSnapshot {
             out.edge_batches += p.edge_batches;
             out.cloud_batches += p.cloud_batches;
             out.plan_switches += p.plan_switches;
+            out.plan_overrides += p.plan_overrides;
             out.elapsed_s = out.elapsed_s.max(p.elapsed_s);
             out.latency_hist.merge(&p.latency_hist);
         }

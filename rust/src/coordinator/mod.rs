@@ -20,6 +20,6 @@ pub mod engine;
 pub mod metrics;
 pub mod request;
 
-pub use engine::{Coordinator, CoordinatorConfig};
+pub use engine::{Coordinator, CoordinatorConfig, ExitObserver};
 pub use metrics::MetricsSnapshot;
 pub use request::{InferenceRequest, InferenceResponse};

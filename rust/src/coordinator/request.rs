@@ -3,6 +3,7 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::partition::plan::PartitionPlan;
 use crate::runtime::HostTensor;
 
 /// Where a sample's classification came from.
@@ -23,6 +24,10 @@ pub struct InferenceRequest {
     pub enqueued: Instant,
     /// Response channel (one response per request).
     pub reply: mpsc::Sender<InferenceResponse>,
+    /// Per-request partition plan override (per-request planning: the
+    /// fleet solved this sample's split at the instantaneous link).
+    /// `None` executes under the coordinator's current plan.
+    pub plan: Option<PartitionPlan>,
 }
 
 #[derive(Debug, Clone)]

@@ -33,8 +33,9 @@ impl Curve {
     }
 }
 
-/// Run the full Fig. 4 sweep. `desc_of(p)` stamps the probability into
-/// the BranchyNet description; `profile` carries measured cloud times.
+/// Run the full Fig. 4 sweep: the grid probability is applied to every
+/// branch of `desc_template` via cheap planner p-views; `profile`
+/// carries measured cloud times.
 pub fn run(
     desc_template: &BranchyNetDesc,
     profile: &DelayProfile,
@@ -44,17 +45,16 @@ pub fn run(
     let mut curves = Vec::new();
     for &gamma in &GAMMAS {
         let prof = profile.with_gamma(gamma);
-        // One planner per (gamma, p): its link-independent prefix state
-        // is shared by all three networks at that grid point.
+        // One full precompute per gamma; each probability grid point is
+        // a cheap p-view over the shared static core (bit-identical to
+        // a fresh construction at that p), shared by all three networks.
+        let base = Planner::new(desc_template, &prof, epsilon, true);
+        let n_branches = desc_template.branches.len();
         let mut per_net: Vec<Vec<(f64, f64, usize)>> =
             vec![Vec::with_capacity(points); Profile::ALL.len()];
         for i in 0..points {
             let p = i as f64 / (points - 1) as f64;
-            let mut desc = desc_template.clone();
-            for b in &mut desc.branches {
-                b.exit_prob = p;
-            }
-            let planner = Planner::new(&desc, &prof, epsilon, true);
+            let planner = base.with_exit_probs(&vec![p; n_branches]);
             for (ni, &net) in Profile::ALL.iter().enumerate() {
                 let plan = planner.plan_for(LinkModel::from_profile(net));
                 per_net[ni].push((p, plan.expected_time_s, plan.split_after));

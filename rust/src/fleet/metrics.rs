@@ -7,6 +7,29 @@ use crate::network::bandwidth::LinkModel;
 
 use super::class::LinkClass;
 
+/// Planner-side observability for one class: what p it is planning
+/// with, what the exit-rate estimator believes, and how hard the plan
+/// cache / view-rebuild machinery is working.
+#[derive(Debug, Clone, Default)]
+pub struct ClassPlannerStats {
+    /// Conditional exit probability of the current planner view (the
+    /// first branch's; fleets serve single-branch manifests today).
+    pub exit_prob_planned: f64,
+    /// Online EWMA estimate p̂ of the observed exit rate; `None` when
+    /// online estimation is disabled for the fleet.
+    pub p_hat: Option<f64>,
+    /// Branch-gate observations the estimator has consumed.
+    pub estimator_observations: u64,
+    /// Times the exit view was re-derived (estimator drift triggers or
+    /// direct `set_exit_probs` calls).
+    pub view_rebuilds: u64,
+    /// Plan-cache hits / misses of the class planner.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Times a view swap flushed the class's plan cache.
+    pub cache_invalidations: u64,
+}
+
 /// One link class's view: the active split, every shard's snapshot, and
 /// their aggregate.
 #[derive(Debug, Clone)]
@@ -16,6 +39,7 @@ pub struct ClassReport {
     pub link: LinkModel,
     /// Active partition point (stages `1..=split_after` on the edge).
     pub split_after: usize,
+    pub planner: ClassPlannerStats,
     pub shards: Vec<MetricsSnapshot>,
     pub aggregate: MetricsSnapshot,
 }
@@ -41,11 +65,17 @@ impl FleetReport {
     pub fn summary(&self) -> String {
         let mut out = String::new();
         for c in &self.classes {
+            let p_hat = match c.planner.p_hat {
+                Some(p) => format!(", p̂ {:.3} ({} obs)", p, c.planner.estimator_observations),
+                None => String::new(),
+            };
             out.push_str(&format!(
-                "[{} @ {:.2} Mbps, split after {}, {} shard(s)] {}\n",
+                "[{} @ {:.2} Mbps, split after {}, p {:.3}{}, {} shard(s)] {}\n",
                 c.name,
                 c.link.uplink_mbps,
                 c.split_after,
+                c.planner.exit_prob_planned,
+                p_hat,
                 c.shards.len(),
                 c.aggregate.summary()
             ));
@@ -70,11 +100,26 @@ impl FleetReport {
             .classes
             .iter()
             .map(|c| {
+                let p_hat = match c.planner.p_hat {
+                    Some(p) => format!("{p:.6}"),
+                    None => "null".to_string(),
+                };
                 format!(
-                    "{{\"name\":{},\"split_after\":{},\"shards\":{},{}}}",
+                    "{{\"name\":{},\"split_after\":{},\"shards\":{},\
+                     \"exit_prob_planned\":{:.6},\"p_hat\":{},\
+                     \"estimator_observations\":{},\"view_rebuilds\":{},\
+                     \"cache_hits\":{},\"cache_misses\":{},\
+                     \"cache_invalidations\":{},{}}}",
                     Json::Str(c.name.clone()),
                     c.split_after,
                     c.shards.len(),
+                    c.planner.exit_prob_planned,
+                    p_hat,
+                    c.planner.estimator_observations,
+                    c.planner.view_rebuilds,
+                    c.planner.cache_hits,
+                    c.planner.cache_misses,
+                    c.planner.cache_invalidations,
                     flat_fields(&c.aggregate),
                 )
             })
@@ -113,6 +158,15 @@ mod tests {
                 name: "3G".into(),
                 link: LinkModel::new(1.10, 0.0),
                 split_after: 5,
+                planner: ClassPlannerStats {
+                    exit_prob_planned: 0.35,
+                    p_hat: Some(0.62),
+                    estimator_observations: 4,
+                    view_rebuilds: 2,
+                    cache_hits: 10,
+                    cache_misses: 3,
+                    cache_invalidations: 2,
+                },
                 aggregate: MetricsSnapshot::aggregate(&shards_a),
                 shards: shards_a,
             },
@@ -121,6 +175,10 @@ mod tests {
                 name: "WiFi".into(),
                 link: LinkModel::new(18.80, 0.0),
                 split_after: 0,
+                planner: ClassPlannerStats {
+                    exit_prob_planned: 0.5,
+                    ..Default::default()
+                },
                 aggregate: MetricsSnapshot::aggregate(&shards_b),
                 shards: shards_b,
             },
@@ -150,5 +208,24 @@ mod tests {
         assert_eq!(classes[0].get("name").unwrap().as_str(), Some("3G"));
         assert_eq!(classes[0].get("split_after").unwrap().as_u64(), Some(5));
         assert_eq!(classes[1].get("completed").unwrap().as_u64(), Some(0));
+        // Planner observability: planned p, estimated p̂, cache and
+        // view-rebuild counters, all per class.
+        let p0 = &classes[0];
+        assert!(
+            (p0.get("exit_prob_planned").unwrap().as_f64().unwrap() - 0.35).abs() < 1e-9
+        );
+        assert!((p0.get("p_hat").unwrap().as_f64().unwrap() - 0.62).abs() < 1e-9);
+        assert_eq!(p0.get("estimator_observations").unwrap().as_u64(), Some(4));
+        assert_eq!(p0.get("view_rebuilds").unwrap().as_u64(), Some(2));
+        assert_eq!(p0.get("cache_hits").unwrap().as_u64(), Some(10));
+        assert_eq!(p0.get("cache_misses").unwrap().as_u64(), Some(3));
+        assert_eq!(p0.get("cache_invalidations").unwrap().as_u64(), Some(2));
+        // Estimation off: p_hat is JSON null, not 0 (an estimate of 0
+        // and "no estimate" are different facts).
+        assert!(matches!(classes[1].get("p_hat"), Some(Json::Null)));
+        // And the human summary surfaces p̂ only where it exists.
+        let s = report().summary();
+        assert!(s.contains("p̂ 0.620"), "{s}");
+        assert!(s.contains("p 0.500"), "{s}");
     }
 }

@@ -28,27 +28,45 @@
 //!                               shard of the class
 //! ```
 //!
-//! * **Classes, not requests, own plans.** Every shard of a class runs
-//!   the same partition plan, computed by that class's [`ClassPlanner`]
-//!   and — when adaptive replanning is on — refreshed from the class
-//!   channel's live bandwidth with the planner subsystem's hysteresis
-//!   (see [`crate::planner::adaptive`]). Two classes served
-//!   concurrently execute under *different* split points; per-request
-//!   planning (picking a split per sample from the instantaneous
-//!   estimate) is the next refinement and plugs in at exactly this
-//!   seam.
+//! * **Classes own base plans; requests may override.** Every shard of
+//!   a class runs the class's base partition plan, computed by that
+//!   class's [`ClassPlanner`] and — when adaptive replanning is on —
+//!   refreshed from the class channel's live bandwidth with the planner
+//!   subsystem's hysteresis (see [`crate::planner::adaptive`]). With
+//!   `per_request_planning` enabled, [`Fleet::submit`] additionally
+//!   solves each sample's split at the channel's *instantaneous* link
+//!   estimate (an O(1) epoch-checked cache lookup in the common case)
+//!   and attaches it as a per-request plan override — so two requests
+//!   admitted moments apart under a moving uplink execute different
+//!   splits, without waiting for an adaptive-replan boundary.
 //! * **Sharding is per class.** A class group holds N independent
 //!   [`Coordinator`] pipelines (each its own batcher, edge worker and M
 //!   cloud workers); the [`FleetRouter`] picks one per request. This
 //!   scales the serving path horizontally without touching coordinator
-//!   internals — a shard never sees more than one plan at a time.
-//! * **One planner precompute.** All classes sharing the fleet's
-//!   default exit probability [`Planner::fork`] one set of prefix sums;
-//!   only a class with its own `exit_probability` override pays a fresh
-//!   O(N·m) precompute (the sums depend on p).
+//!   internals — the edge worker groups each batch by effective split,
+//!   so overridden and default samples coexist safely.
+//! * **One p-independent precompute, one view per class.** Every class
+//!   shares a single `StaticCore` (the p-independent planner layer) via
+//!   [`Planner::with_exit_probs`]; each class's survival-weighted view
+//!   is derived in one O(N·m) pass — including classes with an
+//!   `exit_probability` override, which used to pay a full fresh
+//!   precompute.
+//! * **Exit rates feed back.** With `estimation` enabled, every shard's
+//!   branch gate reports exit/survive observations to the class's
+//!   [`ExitRateEstimator`]; when the EWMA p̂ drifts beyond the
+//!   configured threshold, the class planner's view is re-derived at p̂
+//!   (epoch-invalidating its plan cache) and the new plan is pushed to
+//!   every shard — the configured prior stops mattering once traffic
+//!   speaks for itself. Known limit: exit behaviour is only observable
+//!   while the executed split keeps the branch active; once feedback
+//!   moves a class to a split at or before the branch (e.g. cloud-only),
+//!   observations stop and p̂ freezes there — recovering from that state
+//!   needs branch-probing traffic (see ROADMAP).
 //! * **Observability rolls up.** [`FleetReport`]: per-shard
 //!   [`MetricsSnapshot`]s → per-class aggregate → fleet total, all
-//!   NaN-free even for shards that served nothing.
+//!   NaN-free even for shards that served nothing — plus per-class
+//!   planner stats (planned p, estimated p̂, cache hit/miss/invalidation
+//!   and view-rebuild counters).
 
 pub mod class;
 pub mod metrics;
@@ -56,22 +74,26 @@ pub mod planner;
 pub mod router;
 
 pub use class::{ClassProfile, ClassRegistry, LinkClass};
-pub use metrics::{ClassReport, FleetReport};
+pub use metrics::{ClassPlannerStats, ClassReport, FleetReport};
 pub use planner::ClassPlanner;
 pub use router::{FleetRouter, RoutePolicy};
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::{Coordinator, CoordinatorConfig, InferenceResponse, MetricsSnapshot};
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, ExitObserver, InferenceResponse, MetricsSnapshot,
+};
 use crate::model::Manifest;
 use crate::network::trace::BandwidthTrace;
 use crate::network::Channel;
 use crate::partition::plan::PartitionPlan;
-use crate::planner::{AdaptiveConfig, AdaptiveHandle, AdaptivePlanner, Planner};
+use crate::planner::{
+    AdaptiveConfig, AdaptiveHandle, AdaptivePlanner, EstimatorConfig, ExitRateEstimator, Planner,
+};
 use crate::runtime::{HostTensor, InferenceEngine};
 use crate::server::ServeBackend;
 use crate::timing::DelayProfile;
@@ -95,6 +117,15 @@ pub struct FleetConfig {
     /// When set, every class runs a hysteresis replan loop against its
     /// channel's live bandwidth, pushing accepted plans to all shards.
     pub adaptive: Option<AdaptiveConfig>,
+    /// When set, every class tracks its observed exit rate (EWMA over
+    /// branch-gate decisions) and re-derives its planner view — and its
+    /// shards' plans — when the estimate drifts beyond the configured
+    /// threshold.
+    pub estimation: Option<EstimatorConfig>,
+    /// Solve each request's split at the channel's instantaneous link
+    /// estimate and attach it as a per-request plan override, instead
+    /// of only replanning at adaptive boundaries.
+    pub per_request_planning: bool,
     /// Multiplicative jitter stddev on the class channels (0 = none).
     pub channel_jitter: f64,
     /// False = channels account delays without sleeping (tests/benches).
@@ -114,6 +145,8 @@ impl Default for FleetConfig {
             default_exit_prob: 0.5,
             epsilon: 1e-9,
             adaptive: None,
+            estimation: None,
+            per_request_planning: false,
             channel_jitter: 0.0,
             real_time_channel: true,
         }
@@ -122,7 +155,16 @@ impl Default for FleetConfig {
 
 struct ClassGroup {
     profile: ClassProfile,
-    planner: ClassPlanner,
+    /// `Arc`: the exit-observer closures running on shard edge-worker
+    /// threads hold the same planner to rebuild its view on drift.
+    planner: Arc<ClassPlanner>,
+    /// The class's exit-rate tracker (None = estimation disabled).
+    estimator: Option<Arc<Mutex<ExitRateEstimator>>>,
+    /// The shard handles the exit observer pushes rebuilt plans to.
+    /// Cleared at shutdown: the observer closures live on shard worker
+    /// threads, so this is a cycle (shard → observer → shard) that must
+    /// be broken before `Arc::try_unwrap` can join the shards.
+    plan_sinks: Arc<RwLock<Vec<Arc<Coordinator>>>>,
     channel: Arc<Channel>,
     shards: Vec<Arc<Coordinator>>,
     /// Per-group router: each class keeps its own round-robin cursor so
@@ -132,12 +174,35 @@ struct ClassGroup {
     adaptive: Option<AdaptiveHandle>,
 }
 
+impl ClassGroup {
+    fn planner_stats(&self) -> ClassPlannerStats {
+        let (cache_hits, cache_misses) = self.planner.cache_stats();
+        let (p_hat, estimator_observations) = match &self.estimator {
+            Some(est) => {
+                let est = est.lock().unwrap();
+                (Some(est.p_hat()), est.observations())
+            }
+            None => (None, 0),
+        };
+        ClassPlannerStats {
+            exit_prob_planned: self.planner.exit_probs().first().copied().unwrap_or(0.0),
+            p_hat,
+            estimator_observations,
+            view_rebuilds: self.planner.view_rebuilds(),
+            cache_hits,
+            cache_misses,
+            cache_invalidations: self.planner.cache_invalidations(),
+        }
+    }
+}
+
 /// A running fleet. `Send + Sync`; share it behind an [`Arc`] (the TCP
 /// front-end does) and call [`Fleet::shutdown`] once every other handle
 /// is gone.
 pub struct Fleet {
     registry: ClassRegistry,
     groups: Vec<ClassGroup>,
+    per_request_planning: bool,
     route_key: AtomicU64,
 }
 
@@ -164,23 +229,31 @@ impl Fleet {
             );
         }
 
-        // One precompute for every class at the default exit probability;
-        // override classes build their own sums.
+        // One p-independent precompute (`StaticCore`) for the whole
+        // fleet; every class — override or not — derives its own cheap
+        // exit-probability view from it. No class pays the full desc
+        // clone + validation + graph-free precompute twice, and no two
+        // classes share a live view (a per-class p-update must never
+        // leak into a sibling).
         let base_planner = Planner::new(
             &manifest.to_desc(cfg.default_exit_prob),
             profile,
             cfg.epsilon,
             false,
         );
+        if let Some(ecfg) = &cfg.estimation {
+            ecfg.validate()?;
+        }
 
         let mut groups = Vec::with_capacity(registry.len());
         for (idx, prof) in registry.iter().enumerate() {
             let link_class = LinkClass(idx as u8);
-            let planner = match prof.exit_probability {
-                Some(p) => Planner::new(&manifest.to_desc(p), profile, cfg.epsilon, false),
-                None => base_planner.fork(),
-            };
-            let class_planner = ClassPlanner::new(link_class, prof.name.clone(), planner);
+            let p_class = prof.exit_probability.unwrap_or(cfg.default_exit_prob);
+            let class_planner = Arc::new(ClassPlanner::new(
+                link_class,
+                prof.name.clone(),
+                base_planner.with_exit_probs(&[p_class]),
+            ));
             let plan = class_planner.plan(prof.link);
 
             let trace = prof
@@ -194,11 +267,52 @@ impl Fleet {
             }
             let channel = Arc::new(channel);
 
+            // Exit-rate feedback: the observer runs on each shard's edge
+            // worker at the branch gate. The shard list doesn't exist
+            // yet when the shards (and their observers) are started, so
+            // the sink slot is filled in right below.
+            let estimator = cfg
+                .estimation
+                .map(|ecfg| Arc::new(Mutex::new(ExitRateEstimator::new(ecfg, p_class))));
+            let plan_sinks: Arc<RwLock<Vec<Arc<Coordinator>>>> =
+                Arc::new(RwLock::new(Vec::new()));
+            let observer: Option<ExitObserver> = estimator.clone().map(|est| {
+                let planner = class_planner.clone();
+                let channel = channel.clone();
+                let sinks = plan_sinks.clone();
+                Arc::new(move |exited: bool| {
+                    // The rebuild runs *inside* the estimator lock so
+                    // concurrent shards' drift triggers serialize: the
+                    // installed view/plans always correspond to the
+                    // estimator's latest planned p (no out-of-order
+                    // installs). Nothing below takes the estimator
+                    // lock, so there is no cycle.
+                    let mut est = est.lock().unwrap();
+                    if let Some(p_hat) = est.observe(exited) {
+                        // Re-derive the view at p̂ (O(N·m), epoch bump
+                        // invalidates the class's plan cache) and move
+                        // every shard's base plan to the new optimum at
+                        // the current link.
+                        planner.set_exit_probs(&[p_hat]);
+                        let new_plan = planner.plan(channel.current_link());
+                        log::info!(
+                            "[{}] exit-rate drift: p̂ {:.3} -> split after {}",
+                            planner.name(),
+                            p_hat,
+                            new_plan.split_after
+                        );
+                        for shard in sinks.read().unwrap().iter() {
+                            shard.set_plan(new_plan.clone());
+                        }
+                    }
+                }) as ExitObserver
+            });
+
             let mut shards = Vec::with_capacity(cfg.shards_per_class);
             for s in 0..cfg.shards_per_class {
                 let label = format!("{}-s{}", prof.name, s);
                 let (edge, cloud) = make_engines(&label)?;
-                shards.push(Arc::new(Coordinator::start(
+                shards.push(Arc::new(Coordinator::start_observed(
                     edge,
                     cloud,
                     channel.clone(),
@@ -210,8 +324,10 @@ impl Fleet {
                         queue_capacity: cfg.queue_capacity,
                         cloud_workers: cfg.cloud_workers_per_shard,
                     },
+                    observer.clone(),
                 )));
             }
+            *plan_sinks.write().unwrap() = shards.clone();
 
             let adaptive = cfg.adaptive.map(|acfg| {
                 let shard_sinks = shards.clone();
@@ -232,6 +348,8 @@ impl Fleet {
             groups.push(ClassGroup {
                 profile: prof.clone(),
                 planner: class_planner,
+                estimator,
+                plan_sinks,
                 channel,
                 shards,
                 router: FleetRouter::new(cfg.routing),
@@ -242,6 +360,7 @@ impl Fleet {
         Ok(Fleet {
             registry,
             groups,
+            per_request_planning: cfg.per_request_planning,
             route_key: AtomicU64::new(1),
         })
     }
@@ -271,7 +390,7 @@ impl Fleet {
 
     /// This class's planner (for cross-checking plans in tests/tools).
     pub fn planner_of(&self, class: LinkClass) -> Result<&ClassPlanner> {
-        Ok(&self.group(class)?.planner)
+        Ok(&*self.group(class)?.planner)
     }
 
     /// The class's simulated uplink.
@@ -293,6 +412,12 @@ impl Fleet {
     /// [`Fleet::submit`] with an explicit routing key: under hash
     /// routing, equal keys (e.g. a client/session id) always land on the
     /// same shard. Round-robin and least-loaded ignore the key.
+    ///
+    /// With per-request planning enabled, the sample's split is solved
+    /// here, at admission, against the class channel's *instantaneous*
+    /// link estimate — an O(1) `expected_time` sweep through the
+    /// planner's epoch-checked bucket cache — and rides along as a plan
+    /// override; the shard's base plan is untouched.
     pub fn submit_keyed(
         &self,
         class: LinkClass,
@@ -311,7 +436,12 @@ impl Fleet {
         } else {
             group.router.pick_index(key, n)
         };
-        group.shards[shard].submit(image)
+        if self.per_request_planning {
+            let plan = group.planner.plan(group.channel.current_link());
+            group.shards[shard].submit_planned(image, plan)
+        } else {
+            group.shards[shard].submit(image)
+        }
     }
 
     /// Convenience: submit and block for the response.
@@ -320,7 +450,9 @@ impl Fleet {
         rx.recv().map_err(|_| anyhow!("response channel dropped"))
     }
 
-    /// Live per-class / per-shard / total metrics.
+    /// Live per-class / per-shard / total metrics, including each
+    /// class's planner-side stats (planned p, estimated p̂, cache and
+    /// view-rebuild counters).
     pub fn report(&self) -> FleetReport {
         let classes = self
             .groups
@@ -333,6 +465,7 @@ impl Fleet {
                     name: g.profile.name.clone(),
                     link: g.profile.link,
                     split_after: g.shards[0].plan().split_after,
+                    planner: g.planner_stats(),
                     aggregate: MetricsSnapshot::aggregate(&shards),
                     shards,
                 }
@@ -345,17 +478,20 @@ impl Fleet {
     /// final report.
     pub fn shutdown(mut self) -> FleetReport {
         // Replan loops first: joining them drops their shard handles, so
-        // the Arc::try_unwrap below sees the last reference.
+        // the Arc::try_unwrap below sees the last reference. The exit
+        // observers' plan-sink slots hold shard handles too (a cycle
+        // through the shard worker threads) — clear them as well.
         for g in &mut self.groups {
             if let Some(handle) = g.adaptive.take() {
                 handle.stop();
             }
+            g.plan_sinks.write().unwrap().clear();
         }
         let mut classes = Vec::with_capacity(self.groups.len());
-        for g in self.groups.drain(..) {
+        for mut g in self.groups.drain(..) {
             let split_after = g.shards[0].plan().split_after;
             let mut shards = Vec::with_capacity(g.shards.len());
-            for shard in g.shards {
+            for shard in g.shards.drain(..) {
                 match Arc::try_unwrap(shard) {
                     Ok(coordinator) => shards.push(coordinator.shutdown()),
                     // An external handle still holds the shard (e.g. a
@@ -368,6 +504,9 @@ impl Fleet {
                 name: g.profile.name.clone(),
                 link: g.profile.link,
                 split_after,
+                // After the drain/join, so gate observations that landed
+                // while shards were draining are counted.
+                planner: g.planner_stats(),
                 aggregate: MetricsSnapshot::aggregate(&shards),
                 shards,
             });

@@ -1,7 +1,10 @@
-//! Per-class planning: each link class owns a [`Planner`] fork — shared
-//! precomputed prefix sums, private log-bucketed [`PlanCache`] — so a
-//! WiFi burst and a 3G burst never evict each other's plans, and cache
-//! hit rates are observable per class.
+//! Per-class planning: each link class owns a [`Planner`] that shares
+//! the fleet-wide p-independent `StaticCore` but carries its **own**
+//! exit-probability view and its own log-bucketed [`PlanCache`] — so a
+//! WiFi burst and a 3G burst never evict each other's plans, a per-class
+//! exit-rate update never leaks into a sibling class, and cache hit
+//! rates, view rebuilds and epoch invalidations are observable per
+//! class.
 //!
 //! [`PlanCache`]: crate::planner::PlanCache
 
@@ -35,7 +38,8 @@ impl ClassPlanner {
         &self.name
     }
 
-    /// Plan for a link observation through this class's bucket cache.
+    /// Plan for a link observation through this class's bucket cache
+    /// (epoch-checked: a p-update re-solves the bucket).
     pub fn plan(&self, link: LinkModel) -> PartitionPlan {
         self.planner.plan_cached(link)
     }
@@ -46,17 +50,43 @@ impl ClassPlanner {
         self.planner.expected_time(split, link)
     }
 
+    /// Swap this class's exit-probability view in place (O(N·m), shared
+    /// with every fork handed out for this class) and invalidate its
+    /// plan cache via the view epoch. Fed by the fleet's online
+    /// exit-rate estimation; also callable directly by operators/tools.
+    pub fn set_exit_probs(&self, probs: &[f64]) {
+        self.planner.set_exit_probs(probs);
+    }
+
+    /// The conditional exit probabilities the class is currently
+    /// planning with, in branch-position order.
+    pub fn exit_probs(&self) -> Vec<f64> {
+        self.planner.exit_probs()
+    }
+
+    /// How many times this class's view was re-derived from exit-rate
+    /// feedback (or direct `set_exit_probs` calls).
+    pub fn view_rebuilds(&self) -> u64 {
+        self.planner.view_rebuilds()
+    }
+
     /// (hits, misses) of this class's plan cache.
     pub fn cache_stats(&self) -> (u64, u64) {
         self.planner.cache_stats()
+    }
+
+    /// How many times a view swap flushed this class's plan cache.
+    pub fn cache_invalidations(&self) -> u64 {
+        self.planner.cache_invalidations()
     }
 
     pub fn planner(&self) -> &Planner {
         &self.planner
     }
 
-    /// A planner for this class's adaptive replan thread (same shared
-    /// core, separate cache — the thread takes ownership).
+    /// A planner for this class's adaptive replan thread: same shared
+    /// core **and live view** (the thread sees every p-update), separate
+    /// cache — the thread takes ownership.
     pub fn fork_planner(&self) -> Planner {
         self.planner.fork()
     }
@@ -86,8 +116,8 @@ mod tests {
     #[test]
     fn class_planners_share_sums_with_independent_caches() {
         let b = base();
-        let slow = ClassPlanner::new(LinkClass(0), "3G", b.fork());
-        let fast = ClassPlanner::new(LinkClass(1), "WiFi", b.fork());
+        let slow = ClassPlanner::new(LinkClass(0), "3G", b.with_exit_probs(&[0.5]));
+        let fast = ClassPlanner::new(LinkClass(1), "WiFi", b.with_exit_probs(&[0.5]));
         assert!(slow.planner().shares_core_with(fast.planner()));
 
         let p_slow = slow.plan(LinkModel::new(1.10, 0.0));
@@ -102,5 +132,34 @@ mod tests {
         let _ = slow.plan(LinkModel::new(1.11, 0.0)); // same bucket: hit
         assert_eq!(slow.cache_stats(), (1, 1));
         assert_eq!(fast.cache_stats(), (0, 1));
+    }
+
+    #[test]
+    fn per_class_p_updates_do_not_leak_across_classes() {
+        let b = base();
+        let a = ClassPlanner::new(LinkClass(0), "a", b.with_exit_probs(&[0.5]));
+        let c = ClassPlanner::new(LinkClass(1), "c", b.with_exit_probs(&[0.5]));
+        let link = LinkModel::new(5.85, 0.0);
+        let _ = a.plan(link);
+        let _ = c.plan(link);
+
+        a.set_exit_probs(&[0.05]);
+        assert_eq!(a.exit_probs(), vec![0.05]);
+        assert_eq!(c.exit_probs(), vec![0.5], "sibling class untouched");
+        assert_eq!(a.view_rebuilds(), 1);
+        assert_eq!(c.view_rebuilds(), 0);
+
+        // a's cache re-solves once; c's cache still hits.
+        let _ = a.plan(link);
+        let _ = c.plan(link);
+        assert_eq!(a.cache_stats(), (0, 2));
+        assert_eq!(a.cache_invalidations(), 1);
+        assert_eq!(c.cache_stats(), (1, 1));
+        assert_eq!(c.cache_invalidations(), 0);
+
+        // But a's own adaptive-thread fork *does* see a's update.
+        let fork = a.fork_planner();
+        assert_eq!(fork.exit_probs(), vec![0.05]);
+        assert!(fork.shares_view_with(a.planner()));
     }
 }

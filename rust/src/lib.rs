@@ -18,8 +18,10 @@
 //! * [`runtime`] — PJRT CPU execution of the AOT-compiled HLO artifacts;
 //! * [`profiler`] — per-layer `t_i^c` measurement;
 //! * [`planner`] — precomputed, cached, incremental replanning: the single
-//!   owner of "model + profile + epsilon + strategy → plan", with an
-//!   adaptive replan loop for time-varying uplinks;
+//!   owner of "model + profile + epsilon + strategy → plan", with a
+//!   two-layer core (p-independent `StaticCore`, cheap swappable exit-
+//!   probability views), an adaptive replan loop for time-varying
+//!   uplinks, and an exit-rate estimator for drift-triggered p updates;
 //! * [`coordinator`] — router, dynamic batcher, early-exit scheduler, metrics;
 //! * [`fleet`] — sharded multi-class serving: per-link-class planners
 //!   (3G/4G/WiFi or TOML-defined) behind a routing fleet coordinator;

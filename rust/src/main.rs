@@ -22,7 +22,7 @@ use branchyserve::model::Manifest;
 use branchyserve::network::bandwidth::{LinkModel, Profile};
 use branchyserve::network::BandwidthTrace;
 use branchyserve::partition;
-use branchyserve::planner::AdaptiveConfig;
+use branchyserve::planner::{AdaptiveConfig, EstimatorConfig};
 use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
 use branchyserve::runtime::InferenceEngine;
 use branchyserve::server::Server;
@@ -62,6 +62,18 @@ fn cli() -> Cli {
                 .flag(Flag::value("shards", "edge/cloud pipeline pairs per link class"))
                 .flag(Flag::value("cloud-workers", "cloud worker threads per shard"))
                 .flag(Flag::value("routing", "round-robin|hash|least-loaded"))
+                .flag(Flag::switch(
+                    "per-request",
+                    "plan each request at the instantaneous link estimate",
+                ))
+                .flag(Flag::switch(
+                    "estimate-exit-rate",
+                    "track observed exit rates and replan on drift",
+                ))
+                .flag(Flag::value(
+                    "drift-threshold",
+                    "exit-rate drift that triggers a replan",
+                ))
                 .flag(Flag::switch("sim", "serve the simulated model (no artifacts needed)"))
                 .flag(Flag::value("sim-stage-cost-us", "synthetic per-stage compute cost, us").default("200")),
             Command::new("fig4", "inference time vs exit probability (paper Fig. 4)")
@@ -287,6 +299,18 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
         Some(r) => RoutePolicy::parse(r)?,
         None => RoutePolicy::parse(&settings.fleet.routing)?,
     };
+    let per_request = inv.has("per-request") || settings.fleet.per_request_planning;
+    let estimation = if inv.has("estimate-exit-rate") || settings.fleet.online_estimation {
+        let cfg = EstimatorConfig {
+            drift_threshold: get_f64(inv, "drift-threshold")?
+                .unwrap_or(settings.fleet.drift_threshold),
+            ..EstimatorConfig::default()
+        };
+        cfg.validate()?;
+        Some(cfg)
+    } else {
+        None
+    };
     let sim_cost =
         Duration::from_micros(get_usize(inv, "sim-stage-cost-us")?.unwrap_or(200) as u64);
 
@@ -410,6 +434,8 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             default_exit_prob: default_p,
             epsilon: settings.partition.epsilon,
             adaptive,
+            estimation,
+            per_request_planning: per_request,
             channel_jitter: 0.0,
             real_time_channel: true,
         },
@@ -432,6 +458,14 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             cloud_workers,
         );
     }
+    println!(
+        "per-request planning: {}   exit-rate estimation: {}",
+        if per_request { "on" } else { "off" },
+        match estimation {
+            Some(cfg) => format!("on (drift threshold {})", cfg.drift_threshold),
+            None => "off".to_string(),
+        },
+    );
 
     let port = get_usize(inv, "port")?.unwrap_or(7878) as u16;
     let handle = Server::new(fleet.clone()).start(port)?;

@@ -374,17 +374,49 @@ impl Manifest {
     }
 
     /// Abstract description for the partitioner, with a given conditional
-    /// exit probability for the (single) side branch.
+    /// exit probability for the (single) side branch. Thin wrapper over
+    /// [`Manifest::to_desc_with_probs`].
     pub fn to_desc(&self, exit_prob: f64) -> BranchyNetDesc {
-        BranchyNetDesc {
+        // The arity always matches (one branch, one p), so the only
+        // reachable failure here is an out-of-range probability.
+        self.to_desc_with_probs(&[exit_prob])
+            .unwrap_or_else(|e| panic!("to_desc({exit_prob}): {e}"))
+    }
+
+    /// [`Manifest::to_desc`] generalized to per-branch conditional exit
+    /// probabilities, one per side branch in branch-position order —
+    /// the slice shape `Planner::with_exit_probs` consumes. Today's
+    /// manifests carry exactly one branch, so `probs.len()` must be 1;
+    /// the signature is the stable seam for multi-branch manifests.
+    pub fn to_desc_with_probs(&self, probs: &[f64]) -> anyhow::Result<BranchyNetDesc> {
+        // One BranchInfo per manifest for now; written as a slice so the
+        // check generalizes when the manifest grows more branches.
+        let branch_positions = [self.branch.after_stage];
+        if probs.len() != branch_positions.len() {
+            anyhow::bail!(
+                "manifest has {} branch(es) but {} exit probabilities were given",
+                branch_positions.len(),
+                probs.len()
+            );
+        }
+        for &p in probs {
+            if !(0.0..=1.0).contains(&p) {
+                anyhow::bail!("exit probability {p} not in [0, 1]");
+            }
+        }
+        Ok(BranchyNetDesc {
             stage_names: self.stages.iter().map(|s| s.name.clone()).collect(),
             stage_out_bytes: self.stages.iter().map(|s| s.out_bytes_per_sample).collect(),
             input_bytes: self.input_bytes_per_sample,
-            branches: vec![BranchDesc {
-                after_stage: self.branch.after_stage,
-                exit_prob,
-            }],
-        }
+            branches: branch_positions
+                .iter()
+                .zip(probs)
+                .map(|(&after_stage, &exit_prob)| BranchDesc {
+                    after_stage,
+                    exit_prob,
+                })
+                .collect(),
+        })
     }
 }
 
@@ -473,6 +505,23 @@ pub(crate) mod tests {
         assert_eq!(d.transfer_bytes(0), 12288);
         assert_eq!(d.transfer_bytes(1), 57600);
         assert_eq!(d.branches[0].exit_prob, 0.4);
+    }
+
+    #[test]
+    fn to_desc_with_probs_validates_shape_and_range() {
+        let m = sample();
+        // The single-p wrapper and the slice form agree exactly.
+        let d = m.to_desc_with_probs(&[0.4]).unwrap();
+        assert_eq!(d, m.to_desc(0.4));
+        assert_eq!(d.branches.len(), 1);
+        assert_eq!(d.branches[0].after_stage, 1);
+        // Wrong arity: one probability per branch, no more, no fewer.
+        assert!(m.to_desc_with_probs(&[]).is_err());
+        assert!(m.to_desc_with_probs(&[0.3, 0.3]).is_err());
+        // Out-of-range probabilities are a caller bug, caught here.
+        assert!(m.to_desc_with_probs(&[1.5]).is_err());
+        assert!(m.to_desc_with_probs(&[-0.1]).is_err());
+        assert!(m.to_desc_with_probs(&[f64::NAN]).is_err());
     }
 
     #[test]

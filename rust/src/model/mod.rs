@@ -16,7 +16,7 @@ pub use manifest::{BranchInfo, Manifest, StageInfo};
 /// branches after given stages, and per-stage output sizes. This is the
 /// abstract description both the real manifest and synthetic generators
 /// produce, so the solver is independent of artifact details.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BranchyNetDesc {
     /// Stage names, input side excluded ("conv1", ..., "fc3").
     pub stage_names: Vec<String>,
@@ -29,7 +29,7 @@ pub struct BranchyNetDesc {
     pub branches: Vec<BranchDesc>,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BranchDesc {
     /// 1-based main-branch stage index the branch is attached after.
     pub after_stage: usize,

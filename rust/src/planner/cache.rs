@@ -1,4 +1,4 @@
-//! Plan cache keyed by quantized link state.
+//! Plan cache keyed by quantized link state, invalidated by view epoch.
 //!
 //! Bandwidth is quantized on a log grid (`buckets_per_decade` buckets
 //! per factor-of-10, default 24 ≈ 10% per bucket) and the RTT at 1 µs
@@ -8,6 +8,14 @@
 //! model's sensitivity: `E[T]` depends on bandwidth only through
 //! `alpha/B`, so a fixed *relative* quantization bounds the relative
 //! cost error of a cached plan by the bucket width.
+//!
+//! Cached plans are only valid for the exit-probability view they were
+//! solved under, so the cache carries the **view epoch** it last saw:
+//! [`PlanCache::get_or_insert_at_epoch`] flushes the whole map the
+//! first time it observes a new epoch (counted in `invalidations`), so
+//! after a `Planner::set_exit_probs` every bucket misses exactly once
+//! and re-solves under the new p — no stale plan can survive a
+//! p-update.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -39,14 +47,19 @@ pub struct CacheKey {
     pub rtt_bucket: i64,
 }
 
-/// Thread-safe memo of plans by quantized link, with hit/miss counters.
+/// Thread-safe memo of plans by quantized link, with hit/miss counters
+/// and whole-map invalidation on view-epoch changes.
 #[derive(Debug)]
 pub struct PlanCache {
     buckets_per_decade: f64,
     map: Mutex<HashMap<CacheKey, PartitionPlan>>,
+    /// The view epoch the cached plans were solved under. Only mutated
+    /// while holding the map lock, so epoch and contents stay coherent.
+    epoch: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    invalidations: AtomicU64,
 }
 
 impl Default for PlanCache {
@@ -61,10 +74,22 @@ impl PlanCache {
         PlanCache {
             buckets_per_decade: buckets_per_decade as f64,
             map: Mutex::new(HashMap::new()),
+            epoch: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
         }
+    }
+
+    /// Align a *fresh, empty* cache with an already-advanced view epoch
+    /// (e.g. a `Planner::fork` taken after p-updates) without counting
+    /// a spurious invalidation on first use.
+    pub fn seed_epoch(&self, epoch: u64) {
+        let map = self.map.lock().unwrap();
+        debug_assert!(map.is_empty(), "seed_epoch is for empty caches");
+        drop(map);
+        self.epoch.store(epoch, Ordering::Relaxed);
     }
 
     /// Quantize a link. `LinkModel` guarantees a positive finite
@@ -95,21 +120,53 @@ impl PlanCache {
         )
     }
 
-    /// Look up the plan for `link`'s bucket, computing it at the bucket
-    /// representative on a miss.
+    /// Look up the plan for `link`'s bucket at the cache's current view
+    /// epoch, computing it at the bucket representative on a miss.
     pub fn get_or_insert_with(
         &self,
         link: LinkModel,
         compute: impl FnOnce(LinkModel) -> PartitionPlan,
     ) -> PartitionPlan {
+        self.get_or_insert_at_epoch(link, self.epoch.load(Ordering::Relaxed), compute)
+    }
+
+    /// Epoch-checked lookup: if `epoch` is *newer* than the one the
+    /// cached plans were solved under, the whole map is flushed first
+    /// (counted in `invalidations`) — so every bucket misses exactly
+    /// once after a view swap and re-solves via `compute` under the new
+    /// view. Epochs are monotonic: a caller holding an older epoch (it
+    /// loaded the counter just before a concurrent swap) neither
+    /// flushes the freshly repopulated map nor rolls the stored epoch
+    /// backwards — the live view is the newer one, so serving or
+    /// computing under it is correct; the straggler just never inserts.
+    pub fn get_or_insert_at_epoch(
+        &self,
+        link: LinkModel,
+        epoch: u64,
+        compute: impl FnOnce(LinkModel) -> PartitionPlan,
+    ) -> PartitionPlan {
         let key = self.key_for(link);
-        if let Some(plan) = self.map.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return plan.clone();
+        {
+            let mut map = self.map.lock().unwrap();
+            if epoch > self.epoch.load(Ordering::Relaxed) {
+                map.clear();
+                self.epoch.store(epoch, Ordering::Relaxed);
+                self.invalidations.fetch_add(1, Ordering::Relaxed);
+            }
+            if let Some(plan) = map.get(&key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return plan.clone();
+            }
         }
         let plan = compute(self.representative(key));
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.map.lock().unwrap();
+        if self.epoch.load(Ordering::Relaxed) != epoch {
+            // The view moved while we were solving (or we were already
+            // behind it): hand the plan out once but don't poison the
+            // map the current epoch owns.
+            return plan;
+        }
         if map.len() >= MAX_CACHED_PLANS && !map.contains_key(&key) {
             // Pathological link source filled the plane: start over
             // rather than grow without bound.
@@ -130,6 +187,16 @@ impl PlanCache {
     /// How many times the size bound flushed the whole map.
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// How many times a view-epoch change flushed the whole map.
+    pub fn invalidations(&self) -> u64 {
+        self.invalidations.load(Ordering::Relaxed)
+    }
+
+    /// The view epoch the cached plans were solved under.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
     }
 
     pub fn len(&self) -> usize {
@@ -205,5 +272,95 @@ mod tests {
         assert_eq!(c.len(), 1);
         c.clear();
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn epoch_change_invalidates_then_resolves_once() {
+        let c = PlanCache::default();
+        let l = LinkModel::new(5.85, 0.0);
+        let other = LinkModel::new(58.5, 0.0);
+
+        // Two buckets populated and hit under epoch 0.
+        let _ = c.get_or_insert_at_epoch(l, 0, |_| dummy_plan(1));
+        let _ = c.get_or_insert_at_epoch(other, 0, |_| dummy_plan(2));
+        let hit = c.get_or_insert_at_epoch(l, 0, |_| dummy_plan(9));
+        assert_eq!(hit, dummy_plan(1));
+        assert_eq!(c.stats(), (1, 2));
+        assert_eq!(c.len(), 2);
+        assert_eq!((c.epoch(), c.invalidations()), (0, 0));
+
+        // New epoch: the previously hit bucket must miss exactly once
+        // and re-solve (the compute result under the "new p" wins)...
+        let resolved = c.get_or_insert_at_epoch(l, 1, |_| dummy_plan(3));
+        assert_eq!(resolved, dummy_plan(3), "stale plan served after swap");
+        assert_eq!(c.stats(), (1, 3));
+        assert_eq!((c.epoch(), c.invalidations()), (1, 1));
+        // ...and the flush is whole-map: the other bucket re-solves too.
+        let resolved2 = c.get_or_insert_at_epoch(other, 1, |_| dummy_plan(4));
+        assert_eq!(resolved2, dummy_plan(4));
+        assert_eq!(c.stats(), (1, 4));
+        assert_eq!(c.invalidations(), 1, "one swap = one flush");
+
+        // Steady state at the new epoch: hits again.
+        let hit2 = c.get_or_insert_at_epoch(l, 1, |_| dummy_plan(9));
+        assert_eq!(hit2, dummy_plan(3));
+        assert_eq!(c.stats(), (2, 4));
+    }
+
+    #[test]
+    fn seeded_epoch_does_not_count_an_invalidation() {
+        let c = PlanCache::default();
+        c.seed_epoch(7);
+        let l = LinkModel::new(5.85, 0.0);
+        let _ = c.get_or_insert_at_epoch(l, 7, |_| dummy_plan(1));
+        let _ = c.get_or_insert_at_epoch(l, 7, |_| dummy_plan(2));
+        assert_eq!(c.stats(), (1, 1));
+        assert_eq!(c.invalidations(), 0);
+    }
+
+    #[test]
+    fn stale_epoch_caller_does_not_flush_or_roll_back() {
+        // A straggler that loaded the epoch counter just before a swap
+        // must not wipe the freshly repopulated cache or move the
+        // stored epoch backwards (epochs are monotonic).
+        let c = PlanCache::default();
+        let l = LinkModel::new(5.85, 0.0);
+        let _ = c.get_or_insert_at_epoch(l, 1, |_| dummy_plan(1)); // current epoch 1
+        assert_eq!((c.epoch(), c.len()), (1, 1));
+
+        // Straggler at epoch 0: no flush, no rollback, serves the live
+        // entry (the live view is the newer one).
+        let got = c.get_or_insert_at_epoch(l, 0, |_| dummy_plan(9));
+        assert_eq!(got, dummy_plan(1));
+        assert_eq!((c.epoch(), c.len()), (1, 1));
+        assert_eq!(c.invalidations(), 1, "only the 0->1 advance counts");
+
+        // Straggler missing on an uncached bucket computes but does not
+        // insert under the current epoch.
+        let other = LinkModel::new(58.5, 0.0);
+        let got = c.get_or_insert_at_epoch(other, 0, |_| dummy_plan(2));
+        assert_eq!(got, dummy_plan(2));
+        assert_eq!(c.len(), 1, "stale compute must not populate the map");
+        // The current-epoch caller re-solves it for real.
+        let got = c.get_or_insert_at_epoch(other, 1, |_| dummy_plan(3));
+        assert_eq!(got, dummy_plan(3));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn racing_epoch_bump_does_not_poison_the_map() {
+        // A compute that finishes after the epoch has already moved on
+        // must not be inserted under the new epoch.
+        let c = PlanCache::default();
+        let l = LinkModel::new(5.85, 0.0);
+        let stale = c.get_or_insert_at_epoch(l, 0, |_| {
+            // Simulate a concurrent swap landing mid-compute.
+            c.seed_epoch(1);
+            dummy_plan(1)
+        });
+        assert_eq!(stale, dummy_plan(1), "caller still gets its plan once");
+        // The stale plan was not cached: the next query re-solves.
+        let fresh = c.get_or_insert_at_epoch(l, 1, |_| dummy_plan(2));
+        assert_eq!(fresh, dummy_plan(2));
     }
 }

@@ -1,0 +1,229 @@
+//! Online exit-rate estimation: the feedback half of the p-parameterized
+//! planner core.
+//!
+//! The paper treats the branch exit probability `p` as a given, but in
+//! a deployment it is an *observable*: every sample that reaches the
+//! side branch either exits (entropy under the threshold) or survives.
+//! The optimal split depends on `p` through Eq. 4's survival product
+//! exactly as it depends on bandwidth through `alpha/B` — so a planner
+//! frozen at a configured prior keeps executing a split optimized for
+//! traffic that isn't arriving. Edge-AI-style runtime co-optimization
+//! (Li et al., 1910.05316) couples exit behaviour with partition choice
+//! at runtime; this module is that loop's state machine.
+//!
+//! [`ExitRateEstimator`] is deliberately *pure* (no threads, no clocks):
+//! feed it one boolean per branch-gate decision, it maintains an EWMA
+//! `p̂` and answers "has the estimate drifted far enough from the p the
+//! planner is currently using to justify a view rebuild?". The caller
+//! (the fleet's coordinator completion path) then swaps the planner's
+//! [`ExitView`](crate::planner::Planner::set_exit_probs) and re-plans —
+//! the estimator only decides *when*, which keeps the policy testable
+//! without a serving stack.
+//!
+//! Hysteresis is built in: a rebuild is triggered only after
+//! `min_observations` samples (a cold EWMA is noise) and only when
+//! `|p̂ − p_planned|` exceeds `drift_threshold`; after a trigger the
+//! planned p snaps to `p̂`, so the drift gate re-arms from zero instead
+//! of re-firing on every subsequent sample.
+//!
+//! One structural caveat the caller owns: observations exist only while
+//! the executed plan keeps the branch active. If feedback drives the
+//! split to or before the branch (cloud-only being the extreme), the
+//! gate stops running, the estimator starves, and p̂ freezes at the
+//! value that caused the move — a one-way door until something probes
+//! the branch again (periodic probe traffic is the planned fix; see
+//! ROADMAP).
+
+use anyhow::{bail, Result};
+
+/// Tuning for one class's exit-rate feedback loop.
+#[derive(Debug, Clone, Copy)]
+pub struct EstimatorConfig {
+    /// EWMA weight per observation: `p̂ += alpha · (x − p̂)`. Smaller =
+    /// smoother and slower; 0.05 tracks a shift within ~60 samples.
+    pub alpha: f64,
+    /// Absolute drift `|p̂ − p_planned|` that triggers a view rebuild.
+    pub drift_threshold: f64,
+    /// Observations required before the first rebuild may fire.
+    pub min_observations: u64,
+}
+
+impl Default for EstimatorConfig {
+    fn default() -> Self {
+        EstimatorConfig {
+            alpha: 0.05,
+            drift_threshold: 0.1,
+            min_observations: 32,
+        }
+    }
+}
+
+impl EstimatorConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.alpha > 0.0 && self.alpha <= 1.0) {
+            bail!("estimator alpha must be in (0, 1]; got {}", self.alpha);
+        }
+        if !(self.drift_threshold > 0.0 && self.drift_threshold < 1.0) {
+            bail!(
+                "estimator drift_threshold must be in (0, 1); got {}",
+                self.drift_threshold
+            );
+        }
+        Ok(())
+    }
+}
+
+/// EWMA exit-rate tracker with a drift gate. One per link class.
+#[derive(Debug, Clone)]
+pub struct ExitRateEstimator {
+    cfg: EstimatorConfig,
+    /// Current EWMA estimate of the conditional exit probability.
+    p_hat: f64,
+    /// The p the planner's live view was last (re)built at.
+    planned_p: f64,
+    observations: u64,
+    rebuilds: u64,
+}
+
+impl ExitRateEstimator {
+    /// Start from the configured prior (the p the class's planner was
+    /// constructed with), so an accurate prior produces zero rebuilds.
+    pub fn new(cfg: EstimatorConfig, prior_p: f64) -> ExitRateEstimator {
+        cfg.validate().expect("invalid estimator config");
+        assert!(
+            (0.0..=1.0).contains(&prior_p),
+            "prior exit probability {prior_p} not in [0, 1]"
+        );
+        ExitRateEstimator {
+            cfg,
+            p_hat: prior_p,
+            planned_p: prior_p,
+            observations: 0,
+            rebuilds: 0,
+        }
+    }
+
+    /// Record one branch-gate decision (`true` = the sample exited at
+    /// the side branch). Returns `Some(p̂)` when the drift gate fires —
+    /// the caller should rebuild the planner view at that p; the
+    /// estimator has already snapped its planned p to it.
+    pub fn observe(&mut self, exited: bool) -> Option<f64> {
+        let x = if exited { 1.0 } else { 0.0 };
+        self.p_hat += self.cfg.alpha * (x - self.p_hat);
+        self.observations += 1;
+        if self.observations >= self.cfg.min_observations
+            && (self.p_hat - self.planned_p).abs() > self.cfg.drift_threshold
+        {
+            self.planned_p = self.p_hat;
+            self.rebuilds += 1;
+            Some(self.p_hat)
+        } else {
+            None
+        }
+    }
+
+    /// Current EWMA estimate of the exit probability.
+    pub fn p_hat(&self) -> f64 {
+        self.p_hat
+    }
+
+    /// The p the planner view was last built at (prior until the first
+    /// rebuild fires).
+    pub fn planned_p(&self) -> f64 {
+        self.planned_p
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// How many times the drift gate has fired.
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds
+    }
+
+    pub fn config(&self) -> EstimatorConfig {
+        self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(alpha: f64, drift: f64, min_obs: u64) -> EstimatorConfig {
+        EstimatorConfig {
+            alpha,
+            drift_threshold: drift,
+            min_observations: min_obs,
+        }
+    }
+
+    #[test]
+    fn accurate_prior_never_rebuilds() {
+        // True rate 0.5 alternating, prior 0.5: the EWMA hovers at the
+        // prior and the gate stays closed forever.
+        let mut e = ExitRateEstimator::new(cfg(0.1, 0.2, 4), 0.5);
+        for i in 0..500 {
+            assert_eq!(e.observe(i % 2 == 0), None, "obs {i}");
+        }
+        assert!((e.p_hat() - 0.5).abs() < 0.06, "p̂ = {}", e.p_hat());
+        assert_eq!(e.rebuilds(), 0);
+        assert_eq!(e.observations(), 500);
+    }
+
+    #[test]
+    fn drift_fires_once_then_rearms_at_the_new_p() {
+        // Prior 0.8, observed rate 0: p̂ decays geometrically; the gate
+        // must hold until min_observations, fire, snap planned_p to p̂,
+        // and not re-fire until the estimate moves another full
+        // threshold away.
+        let mut e = ExitRateEstimator::new(cfg(0.2, 0.3, 8), 0.8);
+        let mut fired_at = Vec::new();
+        for i in 0..40 {
+            if let Some(p) = e.observe(false) {
+                fired_at.push((i, p));
+            }
+        }
+        assert!(!fired_at.is_empty(), "gate never fired");
+        // 0.8·0.8^k drops below 0.5 at k=3, but min_observations holds
+        // the gate until observation index 7 (the 8th sample).
+        assert_eq!(fired_at[0].0, 7, "{fired_at:?}");
+        assert!(fired_at[0].1 < 0.5);
+        // Each subsequent firing is a further full threshold below the
+        // previous planned p — geometric decay toward 0 can cross 0.3
+        // at most once more from p̂ ≈ 0.13.
+        assert!(fired_at.len() <= 2, "{fired_at:?}");
+        assert_eq!(e.rebuilds() as usize, fired_at.len());
+        assert_eq!(e.planned_p(), fired_at.last().unwrap().1);
+        assert!(e.p_hat() < 0.05, "p̂ should approach 0: {}", e.p_hat());
+    }
+
+    #[test]
+    fn upward_drift_converges_toward_observed_rate() {
+        let mut e = ExitRateEstimator::new(cfg(0.1, 0.15, 16), 0.1);
+        let mut rebuild_ps = Vec::new();
+        for _ in 0..200 {
+            if let Some(p) = e.observe(true) {
+                rebuild_ps.push(p);
+            }
+        }
+        assert!(e.p_hat() > 0.95, "p̂ = {}", e.p_hat());
+        assert!(e.rebuilds() >= 2, "expected staged rebuilds upward");
+        assert!(
+            rebuild_ps.windows(2).all(|w| w[1] > w[0]),
+            "rebuild sequence must be monotone upward: {rebuild_ps:?}"
+        );
+        assert!((e.planned_p() - e.p_hat()).abs() <= 0.15 + 1e-12);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(cfg(0.0, 0.1, 1).validate().is_err());
+        assert!(cfg(1.5, 0.1, 1).validate().is_err());
+        assert!(cfg(0.1, 0.0, 1).validate().is_err());
+        assert!(cfg(0.1, 1.0, 1).validate().is_err());
+        assert!(cfg(1.0, 0.99, 0).validate().is_ok());
+        EstimatorConfig::default().validate().unwrap();
+    }
+}

@@ -1,8 +1,10 @@
 //! The planner subsystem: one owner of "model + profile + epsilon +
-//! strategy → plan", built for *continuous* replanning as the uplink
-//! fluctuates (the on-demand co-inference regime Edgent argues for:
-//! cheap re-optimization on every bandwidth sample, not a one-shot
-//! solve).
+//! strategy → plan", built for *continuous* replanning as both the
+//! uplink **and** the observed exit behaviour fluctuate (the on-demand
+//! co-inference regime Edgent argues for: cheap re-optimization on
+//! every bandwidth sample — and, since the split depends on the branch
+//! exit probability `p` just as much as on bandwidth, cheap
+//! re-optimization on every drift of the observed exit rate too).
 //!
 //! # Why a prefix-sum sweep solves the paper's shortest-path problem
 //!
@@ -23,83 +25,220 @@
 //! C(s) = Σ_{i>s} t_i^c                    (cloud suffix, Eq. 2)
 //! ```
 //!
-//! Everything except `alpha_s/B + rtt` is **link-independent**:
-//! `A(·)` is a survival-weighted prefix sum over edge stage times,
-//! `C(·)` a suffix sum over cloud stage times, and `S(·)` the running
-//! survival product — all computed once at construction in O(N·m) and
-//! stored. A `plan_for(link)` query is then a pure O(N) arithmetic
-//! sweep: evaluate `E[T(s)]` for every `s`, add the paper's epsilon
-//! tie-breaker to the cut options (so exact ties resolve toward the
-//! edge, exactly as the `(v*c, output)` epsilon link does in §V), and
-//! take the argmin. No graph rebuild, no Dijkstra heap, no allocation
-//! beyond the returned plan.
+//! # The two-layer core: `StaticCore` + `ExitView`
+//!
+//! The precomputed state splits along its *dependencies*:
+//!
+//! * **`StaticCore`** — everything that is a pure function of the model
+//!   description and the measured profile: raw per-stage edge times,
+//!   the cloud suffix sums `C(·)`, the transfer sizes `alpha_s`, the
+//!   branch positions and `branch_t_edge`. Immutable, validated once,
+//!   shared by every [`Planner::fork`] and every p-variant behind one
+//!   `Arc` — a fleet pays for it exactly once per (model, profile).
+//! * **`ExitView`** — everything that additionally depends on the
+//!   branch exit probabilities `p`: the survival-weighted prefix sums
+//!   `A(·)` and the survival products `S(·)`. Deriving a view is one
+//!   O(N·m) pass over the core with **no desc clone, no re-validation
+//!   and no graph work** — so [`Planner::with_exit_probs`] (a sibling
+//!   planner at different p) and [`Planner::set_exit_probs`] (swap the
+//!   live view in place, e.g. from an online exit-rate estimator) are
+//!   both cheap enough to run inside a serving loop. Every view swap
+//!   bumps an **epoch counter**; plan caches are epoch-checked so no
+//!   stale plan survives a p-update (see [`cache::PlanCache`]).
+//!
+//! A `plan_for(link)` query is a pure O(N) arithmetic sweep over the
+//! two layers: evaluate `E[T(s)]` for every `s`, add the paper's
+//! epsilon tie-breaker to the cut options (so exact ties resolve toward
+//! the edge, exactly as the `(v*c, output)` epsilon link does in §V),
+//! and take the argmin. No graph rebuild, no Dijkstra heap, no
+//! allocation beyond the returned plan.
 //!
 //! The sweep reproduces [`crate::timing::Estimator::expected_time`]
 //! operation-for-operation (same fold order), so the reported
 //! `expected_time_s` is bit-identical to what the paper-faithful
 //! oracle [`crate::partition::solver::solve_faithful`] reports for the
-//! same split — property-tested in `rust/tests/planner_equivalence.rs`.
+//! same split — and a view derived by `with_exit_probs(p)` is
+//! bit-identical to a fresh `Planner::new` at the same p. Both are
+//! property-tested in `rust/tests/planner_equivalence.rs`.
 //!
-//! On top of the sweep sit two replanning layers:
+//! On top of the sweep sit three feedback layers:
 //!
 //! * [`cache::PlanCache`] — plans memoized by *log-bucketed* bandwidth
 //!   (default ~24 buckets per decade ≈ 10% quantization) with hit/miss
-//!   counters, so a jittering-but-stable uplink costs a hash lookup;
-//! * [`adaptive`] — the replan loop promoted out of
-//!   `examples/adaptive_bandwidth.rs`: it consumes bandwidth estimates
-//!   (e.g. `network::trace` through a `Channel`), applies hysteresis so
-//!   the split doesn't flap between adjacent buckets, and drives
-//!   [`crate::coordinator::Coordinator::set_plan`], which records plan
-//!   switches in `coordinator::metrics`.
+//!   counters and epoch-based invalidation, so a jittering-but-stable
+//!   uplink costs a hash lookup and a p-update costs one re-solve per
+//!   bucket;
+//! * [`adaptive`] — the bandwidth replan loop: it consumes bandwidth
+//!   estimates (e.g. `network::trace` through a `Channel`), applies
+//!   hysteresis so the split doesn't flap between adjacent buckets,
+//!   and drives [`crate::coordinator::Coordinator::set_plan`];
+//! * [`estimator`] — the exit-rate feedback state machine: an EWMA
+//!   over per-request exited-early observations that triggers a view
+//!   rebuild when the estimate drifts beyond a configurable threshold
+//!   (the fleet feeds it from the coordinator's branch gate).
 
 pub mod adaptive;
 pub mod cache;
+pub mod estimator;
 
 pub use adaptive::{AdaptiveConfig, AdaptiveHandle, AdaptivePlanner, ReplanState, ReplanStats};
 pub use cache::PlanCache;
+pub use estimator::{EstimatorConfig, ExitRateEstimator};
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 use crate::config::settings::Strategy;
 use crate::model::BranchyNetDesc;
 use crate::network::bandwidth::LinkModel;
 use crate::partition::plan::PartitionPlan;
-use crate::timing::exitprob::ExitChain;
 use crate::timing::profile::DelayProfile;
 
-/// The immutable precomputed state shared by a planner and all its
-/// [`Planner::fork`]s: everything below is a pure function of
-/// (model, profile, mode), independent of both the link and epsilon.
+/// The immutable p-independent precompute shared by a planner, all its
+/// [`Planner::fork`]s and all its [`Planner::with_exit_probs`]
+/// siblings: a pure function of (model, profile, mode) — raw stage
+/// times, transfer sizes and branch geometry, nothing survival-weighted.
 #[derive(Debug)]
-struct PlannerCore {
+struct StaticCore {
     desc: BranchyNetDesc,
     paper_mode: bool,
     n: usize,
-    /// A(s): survival-weighted edge compute through stage s, plus (in
-    /// serving mode) the survival-weighted branch-evaluation terms —
-    /// folded in the same order as `Estimator::expected_time`.
-    edge_cost: Vec<f64>,
-    /// S(s): survival probability at a cut after stage s.
-    surv: Vec<f64>,
+    /// Raw per-stage edge times (profile.t_edge), unweighted.
+    t_edge: Vec<f64>,
+    /// Branch-evaluation time on the edge (serving mode only).
+    branch_t_edge: f64,
+    /// 1-based branch positions, sorted ascending.
+    branch_positions: Vec<usize>,
+    /// For each split s, how many branches are *active* (position < s):
+    /// precomputed so a view derivation does no binary searches.
+    active_at: Vec<usize>,
     /// C(s): cloud time of stages s+1..=N.
     cloud_suffix: Vec<f64>,
     /// alpha_s: bytes transferred for a cut after stage s (s < N).
     alpha_bytes: Vec<u64>,
 }
 
-/// Precomputed link-independent planning state for one
-/// (model, profile, epsilon, mode) tuple. Construction is O(N·m); each
-/// [`Planner::plan_for`] is an O(N) sweep and each
+/// The p-dependent layer: survival-weighted folds over a [`StaticCore`],
+/// derived in one O(N·m) pass by [`ExitView::derive`]. Bit-identical to
+/// what a fresh construction at the same p computes (same fold order).
+#[derive(Debug)]
+struct ExitView {
+    /// Conditional exit probability per branch, in branch-position order.
+    exit_probs: Vec<f64>,
+    /// A(s): survival-weighted edge compute through stage s, plus (in
+    /// serving mode) the survival-weighted branch-evaluation terms —
+    /// folded in the same order as `Estimator::expected_time`.
+    edge_cost: Vec<f64>,
+    /// S(s): survival probability at a cut after stage s.
+    surv: Vec<f64>,
+}
+
+impl ExitView {
+    /// One O(N·m) pass: survival chain, then the edge-cost fold, then
+    /// the survival-at-split table. The arithmetic (operations *and*
+    /// their order) mirrors `Estimator::expected_time` exactly, which is
+    /// what makes `with_exit_probs(p)` bit-identical to `Planner::new`
+    /// at the same p.
+    fn derive(core: &StaticCore, probs: &[f64]) -> ExitView {
+        assert_eq!(
+            probs.len(),
+            core.branch_positions.len(),
+            "expected {} exit probabilities (one per branch), got {}",
+            core.branch_positions.len(),
+            probs.len()
+        );
+        for &p in probs {
+            assert!(
+                (0.0..=1.0).contains(&p),
+                "exit probability {p} not in [0, 1]"
+            );
+        }
+        let n = core.n;
+        // survival[j] = P[not exited at any of the first j branches].
+        let mut survival = Vec::with_capacity(probs.len() + 1);
+        survival.push(1.0f64);
+        for &p in probs {
+            let last = *survival.last().unwrap();
+            survival.push(last * (1.0 - p));
+        }
+
+        // Prefix sums of survival-weighted edge times. Incremental
+        // left-fold, so edge_cost[s] carries exactly the partial sums
+        // the estimator's edge loop would produce for split s.
+        let mut edge_cost = vec![0.0f64; n + 1];
+        for i in 1..=n {
+            edge_cost[i] = edge_cost[i - 1] + survival[core.active_at[i]] * core.t_edge[i - 1];
+        }
+        // Branch-evaluation terms are folded *after* the edge sum
+        // (mirroring the estimator's second loop) so the fp result
+        // stays identical to a direct `expected_time` evaluation.
+        if !core.paper_mode {
+            for s in 0..=n {
+                let mut t = edge_cost[s];
+                // One term per *active* branch (position < s), in branch
+                // order, each weighted by the survival of reaching it.
+                for &reach in &survival[..core.active_at[s]] {
+                    t += reach * core.branch_t_edge;
+                }
+                edge_cost[s] = t;
+            }
+        }
+
+        let surv: Vec<f64> = (0..=n).map(|s| survival[core.active_at[s]]).collect();
+
+        ExitView {
+            exit_probs: probs.to_vec(),
+            edge_cost,
+            surv,
+        }
+    }
+}
+
+/// The live, swappable view slot shared by a planner and its forks:
+/// the current [`ExitView`] plus the epoch counter that invalidates
+/// plan caches when the view changes.
+#[derive(Debug)]
+struct SharedView {
+    view: RwLock<Arc<ExitView>>,
+    /// Bumped on every [`Planner::set_exit_probs`]; plan caches compare
+    /// against it so a stale bucket can never serve a pre-update plan.
+    epoch: AtomicU64,
+    /// How many times the view has been re-derived in place.
+    rebuilds: AtomicU64,
+}
+
+impl SharedView {
+    fn new(view: ExitView) -> SharedView {
+        SharedView {
+            view: RwLock::new(Arc::new(view)),
+            epoch: AtomicU64::new(0),
+            rebuilds: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Precomputed planning state for one (model, profile, epsilon, mode)
+/// tuple at the current exit probabilities. Construction is O(N·m);
+/// each [`Planner::plan_for`] is an O(N) sweep and each
 /// [`Planner::expected_time`] query is O(1).
 ///
-/// The prefix/suffix sums live behind an [`Arc`], so a fleet holding one
-/// planner per link class pays the O(N·m) precompute once and
-/// [`Planner::fork`]s it per class — each fork gets its own
-/// [`PlanCache`] (plans are link-dependent; the sums are not). The
-/// planner is `Send + Sync` and can be moved into a replan thread.
+/// The p-independent sums live behind one `Arc`'d [`StaticCore`]; the
+/// p-dependent folds behind a swappable [`ExitView`]:
+///
+/// * [`Planner::fork`] — same core, **same live view** (a fork sees
+///   every [`Planner::set_exit_probs`] on the original, and vice
+///   versa), its own [`PlanCache`]. One per consumer of a class.
+/// * [`Planner::with_exit_probs`] — same core, **new independent view**
+///   at different p, its own cache. One per link class in a fleet.
+/// * [`Planner::set_exit_probs`] — re-derive the live view in place
+///   (O(N·m), no desc clone, no validation, no graph work) and bump the
+///   view epoch so every sharing planner's cache re-solves its buckets.
+///
+/// The planner is `Send + Sync` and can be moved into a replan thread.
 #[derive(Debug)]
 pub struct Planner {
-    core: Arc<PlannerCore>,
+    core: Arc<StaticCore>,
+    shared: Arc<SharedView>,
     epsilon: f64,
     cache: PlanCache,
 }
@@ -128,33 +267,19 @@ impl Planner {
         );
 
         let n = desc.num_stages();
-        let chain = ExitChain::new(desc);
-        let include_branch_cost = !paper_mode;
-
-        // Prefix sums of survival-weighted edge times. Incremental
-        // left-fold, so edge_cost[s] carries exactly the partial sums
-        // the estimator's edge loop would produce for split s.
-        let mut edge_cost = vec![0.0f64; n + 1];
-        for i in 1..=n {
-            edge_cost[i] =
-                edge_cost[i - 1] + chain.survival_before_stage(i) * profile.t_edge[i - 1];
-        }
-        // Branch-evaluation terms are folded *after* the edge sum
-        // (mirroring the estimator's second loop) so the fp result
-        // stays identical to a direct `expected_time` evaluation.
-        if include_branch_cost {
-            for s in 0..=n {
-                let mut t = edge_cost[s];
-                for (j, &pos) in chain.positions().iter().enumerate() {
-                    if pos < s {
-                        t += chain.survival_after(j) * profile.branch_t_edge;
-                    }
-                }
-                edge_cost[s] = t;
-            }
-        }
-
-        let surv: Vec<f64> = (0..=n).map(|s| chain.survival_at_split(s)).collect();
+        // Sort branches by position (stable, like `ExitChain`): the
+        // survival chain and every probs slice use this order.
+        let mut branches: Vec<(usize, f64)> = desc
+            .branches
+            .iter()
+            .map(|b| (b.after_stage, b.exit_prob))
+            .collect();
+        branches.sort_by_key(|&(pos, _)| pos);
+        let branch_positions: Vec<usize> = branches.iter().map(|&(p, _)| p).collect();
+        let probs: Vec<f64> = branches.iter().map(|&(_, p)| p).collect();
+        let active_at: Vec<usize> = (0..=n)
+            .map(|s| branch_positions.partition_point(|&pos| pos < s))
+            .collect();
 
         // Suffix sums of cloud times, accumulated back-to-front exactly
         // like `timing::profile::CloudSuffix`.
@@ -165,36 +290,105 @@ impl Planner {
 
         let alpha_bytes: Vec<u64> = (0..n).map(|s| desc.transfer_bytes(s)).collect();
 
+        let core = Arc::new(StaticCore {
+            desc: desc.clone(),
+            paper_mode,
+            n,
+            t_edge: profile.t_edge.clone(),
+            branch_t_edge: profile.branch_t_edge,
+            branch_positions,
+            active_at,
+            cloud_suffix,
+            alpha_bytes,
+        });
+        let view = ExitView::derive(&core, &probs);
+
         Planner {
-            core: Arc::new(PlannerCore {
-                desc: desc.clone(),
-                paper_mode,
-                n,
-                edge_cost,
-                surv,
-                cloud_suffix,
-                alpha_bytes,
-            }),
+            core,
+            shared: Arc::new(SharedView::new(view)),
             epsilon,
             cache: PlanCache::default(),
         }
     }
 
-    /// A planner sharing this one's precomputed prefix/suffix sums (the
-    /// `Arc`'d core) but with its own empty [`PlanCache`] and cache
-    /// counters — one per link class in a serving fleet.
+    /// A planner sharing this one's precomputed core **and live view**
+    /// (a [`Planner::set_exit_probs`] on either is seen by both) but
+    /// with its own empty [`PlanCache`] and cache counters — one per
+    /// consumer thread of the same link class.
     pub fn fork(&self) -> Planner {
+        let cache = PlanCache::default();
+        cache.seed_epoch(self.shared.epoch.load(Ordering::Acquire));
         Planner {
             core: self.core.clone(),
+            shared: self.shared.clone(),
+            epsilon: self.epsilon,
+            cache,
+        }
+    }
+
+    /// A planner sharing this one's [`StaticCore`] but with an
+    /// **independent** [`ExitView`] derived at `probs` (one conditional
+    /// probability per branch, in branch-position order): one O(N·m)
+    /// pass — no desc clone, no re-validation, no graph work — and
+    /// bit-identical to a fresh [`Planner::new`] at the same p. One per
+    /// link class in a fleet.
+    ///
+    /// Panics if `probs` has the wrong length or values outside [0, 1].
+    pub fn with_exit_probs(&self, probs: &[f64]) -> Planner {
+        let view = ExitView::derive(&self.core, probs);
+        Planner {
+            core: self.core.clone(),
+            shared: Arc::new(SharedView::new(view)),
             epsilon: self.epsilon,
             cache: PlanCache::default(),
         }
     }
 
-    /// True if `other` shares this planner's precomputed core (i.e. one
-    /// is a [`Planner::fork`] of the other).
+    /// Re-derive the live view at `probs` and swap it in, in place —
+    /// this planner *and every fork sharing the view* observe the new
+    /// probabilities on their next query, and the bumped view epoch
+    /// makes every sharing [`PlanCache`] re-solve its buckets (a
+    /// previously hit bucket misses exactly once, then re-populates
+    /// under the new p). O(N·m); cheap enough for a serving loop.
+    ///
+    /// Panics if `probs` has the wrong length or values outside [0, 1].
+    pub fn set_exit_probs(&self, probs: &[f64]) {
+        let view = Arc::new(ExitView::derive(&self.core, probs));
+        *self.shared.view.write().unwrap() = view;
+        self.shared.rebuilds.fetch_add(1, Ordering::Relaxed);
+        // Release-order after the view install: an epoch observer that
+        // sees the new epoch also sees the new view.
+        self.shared.epoch.fetch_add(1, Ordering::Release);
+    }
+
+    /// The conditional exit probabilities of the current view, in
+    /// branch-position order.
+    pub fn exit_probs(&self) -> Vec<f64> {
+        self.view().exit_probs.clone()
+    }
+
+    /// The current view epoch: 0 at construction, +1 per
+    /// [`Planner::set_exit_probs`] on this planner or any fork.
+    pub fn view_epoch(&self) -> u64 {
+        self.shared.epoch.load(Ordering::Acquire)
+    }
+
+    /// How many times the live view has been re-derived in place.
+    pub fn view_rebuilds(&self) -> u64 {
+        self.shared.rebuilds.load(Ordering::Relaxed)
+    }
+
+    /// True if `other` shares this planner's p-independent core (i.e.
+    /// one is a [`Planner::fork`] or [`Planner::with_exit_probs`]
+    /// sibling of the other).
     pub fn shares_core_with(&self, other: &Planner) -> bool {
         Arc::ptr_eq(&self.core, &other.core)
+    }
+
+    /// True if `other` additionally shares the *live view* — i.e. a
+    /// [`Planner::set_exit_probs`] on one is seen by the other.
+    pub fn shares_view_with(&self, other: &Planner) -> bool {
+        Arc::ptr_eq(&self.shared, &other.shared)
     }
 
     pub fn desc(&self) -> &BranchyNetDesc {
@@ -213,21 +407,32 @@ impl Planner {
         self.core.paper_mode
     }
 
-    /// E[T_inf] for a split after stage `split` under `link` — O(1),
-    /// and bit-identical to `Estimator::expected_time` for the same
-    /// mode (same terms, same fold order).
-    pub fn expected_time(&self, split: usize, link: LinkModel) -> f64 {
+    fn view(&self) -> Arc<ExitView> {
+        self.shared.view.read().unwrap().clone()
+    }
+
+    /// The sweep kernel: E[T(split)] under `link` for one pinned view.
+    #[inline]
+    fn expected_time_in(&self, view: &ExitView, split: usize, link: LinkModel) -> f64 {
         let core = &*self.core;
         assert!(split <= core.n, "split {split} out of range 0..={}", core.n);
-        let mut t = core.edge_cost[split];
+        let mut t = view.edge_cost[split];
         if split < core.n {
-            let surv = core.surv[split];
+            let surv = view.surv[split];
             if surv > 0.0 {
                 t += surv
                     * (link.transfer_time(core.alpha_bytes[split]) + core.cloud_suffix[split]);
             }
         }
         t
+    }
+
+    /// E[T_inf] for a split after stage `split` under `link` — O(1),
+    /// and bit-identical to `Estimator::expected_time` for the same
+    /// mode and exit probabilities (same terms, same fold order).
+    pub fn expected_time(&self, split: usize, link: LinkModel) -> f64 {
+        let view = self.view();
+        self.expected_time_in(&view, split, link)
     }
 
     /// Solve for the optimal split under `link`: an O(N) sweep over the
@@ -242,18 +447,21 @@ impl Planner {
     /// [`Planner::plan_for`] with an explicit tie-breaker. The
     /// precomputed state is epsilon-independent, so epsilon-sensitivity
     /// sweeps (the ablation) pay one precompute and K O(N) sweeps
-    /// instead of K full constructions. Bypasses the plan cache.
+    /// instead of K full constructions. Bypasses the plan cache. The
+    /// view is pinned once for the whole sweep, so a concurrent
+    /// [`Planner::set_exit_probs`] can never mix two p's in one plan.
     pub fn plan_with_epsilon(&self, link: LinkModel, epsilon: f64) -> PartitionPlan {
         assert!(
             epsilon > 0.0 && epsilon.is_finite(),
             "epsilon must be positive (paper §V)"
         );
+        let view = self.view();
         let n = self.core.n;
         let mut best_split = 0usize;
         let mut best_model = f64::INFINITY;
         let mut best_decision = f64::INFINITY;
         for s in 0..=n {
-            let model = self.expected_time(s, link);
+            let model = self.expected_time_in(&view, s, link);
             let decision = if s < n { model + epsilon } else { model };
             // `<=`: on an exact tie the larger split (more edge work) wins.
             if decision <= best_decision {
@@ -269,9 +477,12 @@ impl Planner {
     /// the link is log-bucketed (see [`PlanCache`]) and the plan is
     /// computed once per bucket, at the bucket's representative
     /// bandwidth. Repeated samples from a jittering-but-stable uplink
-    /// are cache hits.
+    /// are cache hits; a view swap ([`Planner::set_exit_probs`])
+    /// invalidates every bucket via the view epoch.
     pub fn plan_cached(&self, link: LinkModel) -> PartitionPlan {
-        self.cache.get_or_insert_with(link, |rep| self.plan_for(rep))
+        let epoch = self.shared.epoch.load(Ordering::Acquire);
+        self.cache
+            .get_or_insert_at_epoch(link, epoch, |rep| self.plan_for(rep))
     }
 
     /// The representative link `plan_cached` would actually solve for.
@@ -282,6 +493,12 @@ impl Planner {
     /// (hits, misses) of the plan cache.
     pub fn cache_stats(&self) -> (u64, u64) {
         self.cache.stats()
+    }
+
+    /// How many times this planner's cache was flushed by a view-epoch
+    /// change.
+    pub fn cache_invalidations(&self) -> u64 {
+        self.cache.invalidations()
     }
 }
 
@@ -409,6 +626,7 @@ mod tests {
         let base = Planner::new(&desc, &profile, 1e-9, false);
         let fork = base.fork();
         assert!(base.shares_core_with(&fork));
+        assert!(base.shares_view_with(&fork));
 
         // Identical math, bit for bit.
         let link = LinkModel::new(5.85, 0.01);
@@ -430,6 +648,115 @@ mod tests {
         // A fresh construction is not the same core.
         let other = Planner::new(&desc, &profile, 1e-9, false);
         assert!(!base.shares_core_with(&other));
+    }
+
+    #[test]
+    fn with_exit_probs_is_bit_identical_to_fresh_construction() {
+        property("with_exit_probs == Planner::new at same p", 150, |g| {
+            let n = g.usize_in(1, 30);
+            let mut desc = synthetic::random_desc(g, n, 4);
+            let profile = synthetic::random_profile(g, &desc, g.f64_in(1.0, 1000.0));
+            let paper = g.bool(0.5);
+            let base = Planner::new(&desc, &profile, 1e-9, paper);
+
+            // New probabilities, in branch-position order.
+            let probs: Vec<f64> = (0..desc.branches.len()).map(|_| g.probability()).collect();
+            let rebuilt = base.with_exit_probs(&probs);
+            assert!(base.shares_core_with(&rebuilt));
+            assert!(!base.shares_view_with(&rebuilt));
+
+            // Oracle: a fresh, fully validated construction at the same p.
+            desc.branches.sort_by_key(|b| b.after_stage);
+            for (b, &p) in desc.branches.iter_mut().zip(&probs) {
+                b.exit_prob = p;
+            }
+            let fresh = Planner::new(&desc, &profile, 1e-9, paper);
+
+            for _ in 0..4 {
+                let link = LinkModel::new(g.f64_in(0.05, 100.0), g.f64_in(0.0, 0.05));
+                for s in 0..=n {
+                    assert_eq!(
+                        rebuilt.expected_time(s, link).to_bits(),
+                        fresh.expected_time(s, link).to_bits(),
+                        "split {s} (n={n}, paper={paper}, probs={probs:?})"
+                    );
+                }
+                assert_eq!(rebuilt.plan_for(link), fresh.plan_for(link));
+            }
+        });
+    }
+
+    #[test]
+    fn set_exit_probs_swaps_the_view_for_every_fork() {
+        let (desc, profile) = fixture(0.9);
+        let base = Planner::new(&desc, &profile, 1e-9, false);
+        let fork = base.fork();
+        let link = LinkModel::new(5.85, 0.0);
+        assert_eq!(base.exit_probs(), vec![0.9]);
+        assert_eq!(base.view_epoch(), 0);
+
+        let before = base.expected_time(3, link);
+        base.set_exit_probs(&[0.1]);
+        assert_eq!(base.exit_probs(), vec![0.1]);
+        assert_eq!(fork.exit_probs(), vec![0.1], "fork must see the swap");
+        assert_eq!(base.view_epoch(), 1);
+        assert_eq!(fork.view_epoch(), 1);
+        assert_eq!(base.view_rebuilds(), 1);
+
+        // The swapped view is bit-identical to a fresh planner at p=0.1.
+        let (desc01, _) = fixture(0.1);
+        let fresh = Planner::new(&desc01, &profile, 1e-9, false);
+        for s in 0..=base.num_stages() {
+            assert_eq!(
+                base.expected_time(s, link).to_bits(),
+                fresh.expected_time(s, link).to_bits()
+            );
+            assert_eq!(
+                fork.expected_time(s, link).to_bits(),
+                fresh.expected_time(s, link).to_bits()
+            );
+        }
+        assert_ne!(base.expected_time(3, link).to_bits(), before.to_bits());
+
+        // An independent sibling at its own p is untouched.
+        let sibling = base.with_exit_probs(&[0.5]);
+        base.set_exit_probs(&[0.7]);
+        assert_eq!(sibling.exit_probs(), vec![0.5]);
+        assert_eq!(sibling.view_epoch(), 0);
+    }
+
+    #[test]
+    fn view_swap_invalidates_cached_plans() {
+        let (desc, profile) = fixture(0.9);
+        let planner = Planner::new(&desc, &profile, 1e-9, false);
+        // A starved uplink: the optimum is edge-only, whose cost is
+        // survival-weighted — so the re-solved plan provably reflects
+        // the new p (a cloud-only optimum would cost the same at any p).
+        let link = LinkModel::new(0.01, 0.0);
+
+        let p_old = planner.plan_cached(link);
+        let _ = planner.plan_cached(link);
+        assert_eq!(planner.cache_stats(), (1, 1));
+        assert_eq!(planner.cache_invalidations(), 0);
+
+        planner.set_exit_probs(&[0.0]);
+        // The previously hit bucket must miss exactly once and re-solve
+        // under the new p...
+        let p_new = planner.plan_cached(link);
+        assert_eq!(planner.cache_stats(), (1, 2));
+        assert_eq!(planner.cache_invalidations(), 1);
+        assert_eq!(
+            p_new,
+            planner.plan_for(planner.cache_representative(link)),
+            "re-solve must use the new view"
+        );
+        assert_ne!(
+            p_old.expected_time_s.to_bits(),
+            p_new.expected_time_s.to_bits()
+        );
+        // ...then hit again.
+        let _ = planner.plan_cached(link);
+        assert_eq!(planner.cache_stats(), (2, 2));
     }
 
     #[test]

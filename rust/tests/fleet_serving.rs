@@ -1,7 +1,8 @@
 //! Fleet integration: per-class partition points executed concurrently,
 //! shard routing, zero-traffic metrics hygiene, adaptive per-class
-//! replanning, and the TCP front-end's class tag. Runs entirely on the
-//! simulated runtime — no artifacts required.
+//! replanning, online exit-rate feedback, per-request planning, and the
+//! TCP front-end's class tag. Runs entirely on the simulated runtime —
+//! no artifacts required.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -10,7 +11,7 @@ use branchyserve::fleet::{ClassProfile, ClassRegistry, Fleet, FleetConfig, Route
 use branchyserve::model::Manifest;
 use branchyserve::network::bandwidth::LinkModel;
 use branchyserve::network::BandwidthTrace;
-use branchyserve::planner::{AdaptiveConfig, Planner};
+use branchyserve::planner::{AdaptiveConfig, EstimatorConfig, Planner};
 use branchyserve::runtime::InferenceEngine;
 use branchyserve::server::{Response, Server};
 use branchyserve::timing::DelayProfile;
@@ -223,6 +224,182 @@ fn adaptive_loop_replans_a_class_when_its_uplink_changes() {
             "shard {i} never saw a plan switch"
         );
     }
+}
+
+/// Fixture for the exit-feedback test: stage 1's output is expensive to
+/// ship (10240 elems = 40960 B) while later activations are small, so
+/// with a high exit probability the optimum cuts *after* the branch
+/// (split 2: most traffic never pays the transfer), while with a low
+/// one it ships the raw input (cloud-only). Exactly the regime where a
+/// wrong prior executes the wrong split.
+fn feedback_manifest() -> Manifest {
+    Manifest::synthetic_sim(
+        "sim-feedback",
+        vec![3, 32, 32],
+        &[10_240, 256, 128, 64, 2],
+        1,
+        2,
+        vec![1, 2, 4, 8],
+    )
+    .unwrap()
+}
+
+fn feedback_profile() -> DelayProfile {
+    // Edge stage 10 ms (gamma 100 on 0.1 ms cloud stages), branch eval
+    // 2 ms on the edge.
+    DelayProfile::from_cloud_times(vec![1e-4; 5], 2e-5, 100.0)
+}
+
+/// The exit-rate feedback acceptance test: a class configured with a
+/// high exit-probability prior (0.8) plans a mid-network split, but the
+/// workload never exits early (entropy threshold 0) — the observed exit
+/// rate is 0. The estimator's p̂ must converge down and the class's
+/// *executed* partition point must move to the low-p optimum
+/// (cloud-only), without adaptive bandwidth replanning being involved.
+#[test]
+fn online_exit_rate_feedback_moves_the_executed_split() {
+    let manifest = feedback_manifest();
+    let profile = feedback_profile();
+    let link = LinkModel::try_new(5.85, 0.0).unwrap();
+
+    // Preconditions, from an independent planner: the prior plans split
+    // 2 (branch active — the gate produces observations), the observed
+    // rate plans cloud-only.
+    let prior = Planner::new(&manifest.to_desc(0.8), &profile, 1e-9, false);
+    let want_prior = prior.plan_for(link);
+    assert_eq!(want_prior.split_after, 2, "fixture drifted: {want_prior:?}");
+    let want_converged = prior.with_exit_probs(&[0.1]).plan_for(link);
+    assert!(want_converged.is_cloud_only(), "{want_converged:?}");
+
+    let m = manifest.clone();
+    let fleet = Fleet::start(
+        ClassRegistry::single(ClassProfile::custom("mobile", 5.85, 0.0).unwrap()),
+        &manifest,
+        &profile,
+        FleetConfig {
+            default_exit_prob: 0.8,
+            estimation: Some(EstimatorConfig {
+                alpha: 0.25,
+                drift_threshold: 0.25,
+                min_observations: 8,
+            }),
+            ..fast_cfg()
+        },
+        move |label| {
+            Ok((
+                InferenceEngine::open_sim(m.clone(), &format!("{label}-e"))?,
+                InferenceEngine::open_sim(m.clone(), &format!("{label}-c"))?,
+            ))
+        },
+    )
+    .unwrap();
+    let class = fleet.class_by_name("mobile").unwrap();
+    assert_eq!(fleet.plan_of(class).unwrap().split_after, 2);
+
+    // Drive enough non-exiting traffic through the branch gate for the
+    // drift gate to fire (min_observations = 8). The rebuild happens
+    // synchronously on the edge worker, so by the time the 8th response
+    // is back the shard's plan has already moved.
+    let mut source = ImageSource::new(74);
+    for _ in 0..8 {
+        let r = fleet.infer_sync(class, source.sample().0).unwrap();
+        assert!(!r.exited_early(), "threshold 0 must never exit");
+    }
+    let moved = fleet.plan_of(class).unwrap();
+    assert!(
+        moved.is_cloud_only(),
+        "executed split must follow p̂ down: {moved:?}"
+    );
+
+    // Post-convergence traffic executes the new split: raw input over
+    // the uplink, and the (now inactive) branch never gates it.
+    for _ in 0..3 {
+        let r = fleet.infer_sync(class, source.sample().0).unwrap();
+        assert!(r.transfer_s > 0.0, "cloud-only sample skipped the uplink");
+        assert!(r.entropy.is_nan(), "cloud-only sample saw the branch gate");
+    }
+
+    let report = fleet.shutdown();
+    let c = &report.classes[0];
+    assert_eq!(c.split_after, want_converged.split_after);
+    let p = &c.planner;
+    assert!(p.view_rebuilds >= 1, "no view rebuild recorded: {p:?}");
+    assert!(p.cache_invalidations >= 1, "cache survived the swap: {p:?}");
+    assert!(
+        p.exit_prob_planned < 0.2,
+        "planned p still near the prior: {p:?}"
+    );
+    let p_hat = p.p_hat.expect("estimation was enabled");
+    assert!(p_hat < 0.15, "p̂ did not converge toward 0: {p_hat}");
+    assert_eq!(p.estimator_observations, 8, "one observation per gated sample");
+    // And the JSON surface carries the new observability.
+    let json = report.to_json();
+    assert!(json.contains("\"p_hat\":"), "{json}");
+    assert!(json.contains("\"view_rebuilds\":"), "{json}");
+}
+
+/// The per-request planning acceptance test: one class whose uplink
+/// trace collapses from starved to effectively free mid-run. With
+/// per-request planning on, requests admitted before the flip execute
+/// edge-only while requests admitted after it execute cloud-only — with
+/// both outstanding at once and the class's *base* plan never moving
+/// (no adaptive loop is running; the overrides do all the work).
+#[test]
+fn per_request_planning_executes_instantaneous_link_splits() {
+    let trace = BandwidthTrace::new(vec![(0.0, 0.05), (0.5, 100_000.0)]).unwrap();
+    let registry = ClassRegistry::single(
+        ClassProfile::custom("mobile", 0.05, 0.0)
+            .unwrap()
+            .with_trace(trace),
+    );
+    let fleet = start_fleet(
+        registry,
+        FleetConfig {
+            per_request_planning: true,
+            ..fast_cfg()
+        },
+    );
+    let class = fleet.class_by_name("mobile").unwrap();
+    let base = fleet.plan_of(class).unwrap();
+    assert!(base.is_edge_only(N_STAGES), "{base:?}");
+
+    // Phase 1: starved uplink — per-request plans must keep work local.
+    let mut source = ImageSource::new(75);
+    let mut slow_pending = Vec::new();
+    for _ in 0..4 {
+        slow_pending.push(fleet.submit(class, source.sample().0).unwrap());
+    }
+
+    // Phase 2: after the trace flips, the *same class* plans cloud-only
+    // per request. The slow-phase receivers stay undrained, so both
+    // phases' responses are outstanding together.
+    std::thread::sleep(Duration::from_millis(700));
+    let mut fast_pending = Vec::new();
+    for _ in 0..4 {
+        fast_pending.push(fleet.submit(class, source.sample().0).unwrap());
+    }
+
+    for (_, rx) in slow_pending {
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(r.transfer_s, 0.0, "slow-phase sample paid a transfer");
+        assert_eq!(r.cloud_s, 0.0, "slow-phase sample paid cloud compute");
+    }
+    for (_, rx) in fast_pending {
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(r.transfer_s > 0.0, "fast-phase sample skipped the uplink");
+    }
+
+    // The base plan never moved: the splits came from request overrides.
+    assert!(fleet.plan_of(class).unwrap().is_edge_only(N_STAGES));
+    let report = fleet.shutdown();
+    let c = &report.classes[0];
+    assert_eq!(
+        c.aggregate.plan_overrides, 8,
+        "every request must carry a per-request plan"
+    );
+    // Both link regimes hit the planner: at least two distinct buckets.
+    assert!(c.planner.cache_misses >= 2, "{:?}", c.planner);
+    assert!(c.aggregate.transferred_bytes > 0);
 }
 
 #[test]

@@ -1,10 +1,12 @@
-//! The planner refactor's core obligation: the precomputed, cached,
+//! The planner refactor's core obligations: the precomputed, cached,
 //! incremental `Planner` must agree with the paper-faithful oracle
 //! (`solver::solve_faithful`, the literal `G'_BDNN` + Dijkstra of §V)
 //! on randomized BranchyNets (0–3 branches, non-monotonic alphas from
 //! the synthetic generator) across dense bandwidth sweeps — including
 //! the cache-hit paths, whose plans must be byte-identical to an
-//! uncached solve at the bucket representative.
+//! uncached solve at the bucket representative — and the two-layer
+//! core's p-views (`with_exit_probs` / `set_exit_probs`) must be
+//! bit-identical to full constructions at the same p.
 
 use std::time::Duration;
 
@@ -15,6 +17,69 @@ use branchyserve::planner::{AdaptiveConfig, Planner, ReplanState};
 use branchyserve::testing::{property, Gen};
 
 const EPS: f64 = 1e-9;
+
+/// The acceptance property of the p-parameterized core: a view derived
+/// by `with_exit_probs(p)` — one O(N·m) pass, no desc clone, no
+/// re-validation, no graph work — must report `expected_time` bits
+/// identical to a fresh, fully validated `Planner::new` at the same p,
+/// for every split, across randomized networks and links. The same must
+/// hold through a chain of in-place `set_exit_probs` swaps.
+#[test]
+fn exit_prob_views_are_bit_identical_to_full_construction() {
+    property("with_exit_probs == Planner::new at p", 250, |g| {
+        let n = g.usize_in(1, 40);
+        let mut desc = synthetic::random_desc(g, n, 5);
+        let profile = synthetic::random_profile(g, &desc, g.f64_in(1.0, 2000.0));
+        let paper = g.bool(0.5);
+        let base = Planner::new(&desc, &profile, EPS, paper);
+
+        // Random target probabilities, including the 0/1 extremes.
+        let probs: Vec<f64> = (0..desc.branches.len())
+            .map(|_| match g.usize_in(0, 9) {
+                0 => 0.0,
+                1 => 1.0,
+                _ => g.probability(),
+            })
+            .collect();
+
+        // The cheap path vs the oracle: a fresh full construction from
+        // a desc rewritten at the same probabilities.
+        let rebuilt = base.with_exit_probs(&probs);
+        desc.branches.sort_by_key(|b| b.after_stage);
+        for (b, &p) in desc.branches.iter_mut().zip(&probs) {
+            b.exit_prob = p;
+        }
+        let fresh = Planner::new(&desc, &profile, EPS, paper);
+
+        // And the in-place swap path must land on the same view.
+        let swapped = base.fork();
+        swapped.set_exit_probs(&probs);
+
+        for _ in 0..6 {
+            let link = LinkModel::new(g.f64_in(0.01, 50_000.0), g.f64_in(0.0, 0.1));
+            for s in 0..=n {
+                let want = fresh.expected_time(s, link).to_bits();
+                assert_eq!(
+                    rebuilt.expected_time(s, link).to_bits(),
+                    want,
+                    "with_exit_probs split {s} (n={n}, paper={paper}, probs={probs:?})"
+                );
+                assert_eq!(
+                    swapped.expected_time(s, link).to_bits(),
+                    want,
+                    "set_exit_probs split {s} (n={n}, paper={paper}, probs={probs:?})"
+                );
+            }
+            let want_plan = fresh.plan_for(link);
+            assert_eq!(rebuilt.plan_for(link), want_plan);
+            assert_eq!(swapped.plan_for(link), want_plan);
+            assert_eq!(
+                rebuilt.plan_for(link).expected_time_s.to_bits(),
+                want_plan.expected_time_s.to_bits()
+            );
+        }
+    });
+}
 
 #[test]
 fn planner_matches_faithful_solver_on_random_instances() {
