@@ -75,6 +75,23 @@ impl Strategy {
     }
 }
 
+/// Validate a `HOST:PORT` endpoint string — shared by the TOML
+/// (`[fleet] cloud_addr`) and CLI (`--cloud-addr`) paths so a typo
+/// fails fast on both instead of silently degrading to local-only
+/// serving.
+pub fn validate_host_port(addr: &str) -> Result<()> {
+    match addr.rsplit_once(':') {
+        // Port 0 is "pick one for me" on a listener; as a *target* it
+        // can never be connected to, so reject it here too.
+        Some((host, port))
+            if !host.is_empty() && matches!(port.parse::<u16>(), Ok(p) if p != 0) =>
+        {
+            Ok(())
+        }
+        _ => bail!("expected HOST:PORT; got '{addr}'"),
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ModelSettings {
     pub artifacts_dir: PathBuf,
@@ -146,6 +163,15 @@ pub struct FleetSettings {
     /// Absolute |p̂ − p_planned| drift that triggers a view rebuild
     /// (only meaningful with `online_estimation`).
     pub drift_threshold: f64,
+    /// Exit-rate probing: fraction of per-request overrides rerouted
+    /// through a branch-active split so the estimator keeps observing
+    /// when the executed split has the branch inactive. Requires
+    /// `per_request_planning`; 0 disables.
+    pub probe_fraction: f64,
+    /// `HOST:PORT` of a remote cloud-stage server (`branchyserve
+    /// cloud-serve`). When set, the serving fleet ships transferred
+    /// activations there instead of running cloud stages in-process.
+    pub cloud_addr: Option<String>,
 }
 
 /// One `[[link_class]]` entry: a named client population with its own
@@ -207,6 +233,8 @@ impl Default for Settings {
                 per_request_planning: false,
                 online_estimation: false,
                 drift_threshold: 0.1,
+                probe_fraction: 0.0,
+                cloud_addr: None,
             },
             link_classes: Vec::new(),
         }
@@ -292,6 +320,12 @@ impl Settings {
         }
         if let Some(v) = doc.path("fleet.drift_threshold").and_then(Json::as_f64) {
             self.fleet.drift_threshold = v;
+        }
+        if let Some(v) = doc.path("fleet.probe_fraction").and_then(Json::as_f64) {
+            self.fleet.probe_fraction = v;
+        }
+        if let Some(v) = doc.path("fleet.cloud_addr").and_then(Json::as_str) {
+            self.fleet.cloud_addr = Some(v.to_string());
         }
         if let Some(arr) = doc.get("link_class").and_then(Json::as_arr) {
             self.link_classes.clear();
@@ -382,6 +416,23 @@ impl Settings {
                 "fleet.drift_threshold must be in (0, 1); got {}",
                 self.fleet.drift_threshold
             );
+        }
+        if !(0.0..=1.0).contains(&self.fleet.probe_fraction) {
+            bail!(
+                "fleet.probe_fraction must be in [0, 1]; got {}",
+                self.fleet.probe_fraction
+            );
+        }
+        if self.fleet.probe_fraction > 0.0 && !self.fleet.per_request_planning {
+            bail!(
+                "fleet.probe_fraction requires fleet.per_request_planning = true \
+                 (probes ride on per-request plan overrides)"
+            );
+        }
+        if let Some(addr) = &self.fleet.cloud_addr {
+            if let Err(e) = validate_host_port(addr) {
+                bail!("fleet.cloud_addr: {e}");
+            }
         }
         if self.link_classes.len() > 256 {
             bail!(
@@ -504,6 +555,8 @@ routing = "hash"
 per_request_planning = true
 online_estimation = true
 drift_threshold = 0.25
+probe_fraction = 0.05
+cloud_addr = "cloud.internal:7879"
 
 [[link_class]]
 name = "3g"
@@ -525,6 +578,8 @@ exit_probability = 0.8
         assert!(s.fleet.per_request_planning);
         assert!(s.fleet.online_estimation);
         assert!((s.fleet.drift_threshold - 0.25).abs() < 1e-12);
+        assert!((s.fleet.probe_fraction - 0.05).abs() < 1e-12);
+        assert_eq!(s.fleet.cloud_addr.as_deref(), Some("cloud.internal:7879"));
         assert_eq!(s.link_classes.len(), 2);
         // Builtin name: paper rate filled in automatically.
         assert_eq!(s.link_classes[0].name, "3g");
@@ -553,6 +608,28 @@ exit_probability = 0.8
         let mut s = Settings::default();
         s.fleet.drift_threshold = 1.0;
         assert!(s.validate().is_err());
+
+        let mut s = Settings::default();
+        s.fleet.per_request_planning = true;
+        s.fleet.probe_fraction = 1.5;
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("fleet.probe_fraction"), "{e}");
+
+        // Probing without per-request planning has nothing to ride on.
+        let mut s = Settings::default();
+        s.fleet.probe_fraction = 0.1;
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("per_request_planning"), "{e}");
+
+        for bad in ["cloud.internal", ":7879", "host:notaport", "host:99999", "host:0"] {
+            let mut s = Settings::default();
+            s.fleet.cloud_addr = Some(bad.into());
+            let e = s.validate().unwrap_err().to_string();
+            assert!(e.contains("fleet.cloud_addr"), "'{bad}': {e}");
+        }
+        let mut s = Settings::default();
+        s.fleet.cloud_addr = Some("10.0.0.7:7879".into());
+        s.validate().unwrap();
 
         let mut s = Settings::default();
         s.link_classes.push(LinkClassSettings {

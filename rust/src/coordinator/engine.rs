@@ -1,6 +1,7 @@
 //! Coordinator engine: edge worker + cloud worker threads around the
-//! dynamic batcher, realizing a [`PartitionPlan`] over the PJRT runtime
-//! with a simulated uplink in between.
+//! dynamic batcher, realizing a [`PartitionPlan`] over the runtime —
+//! with a simulated uplink in between, or (via [`CloudExec::Remote`]) a
+//! real network link to a cloud-stage server on another machine.
 //!
 //! Early-exit pipeline semantics (the real BranchyNet control flow, not
 //! the batched-both-paths shortcut the Python reference uses):
@@ -31,13 +32,60 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::model::Manifest;
 use crate::network::Channel;
 use crate::partition::PartitionPlan;
 use crate::runtime::{HostTensor, InferenceEngine};
+use crate::server::protocol::{BRANCH_GATED, BRANCH_PENDING};
+use crate::server::remote::RemoteCloudEngine;
 
 use super::batcher::{Batcher, SubmitError};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::{ExitPoint, InferenceRequest, InferenceResponse};
+
+/// The cloud half of the pipeline: where the suffix stages of
+/// transferred samples execute. In-process for the single-machine
+/// (simulated-uplink) deployment; remote when the partition is
+/// physically real — then a local engine rides along as the fallback so
+/// the edge keeps serving through cloud outages.
+#[derive(Clone)]
+pub enum CloudExec {
+    /// Suffix stages run in-process on this engine.
+    Local(InferenceEngine),
+    /// Suffix stages ship to a remote
+    /// [`CloudStageServer`](crate::server::CloudStageServer) as
+    /// INFER_PARTIAL frames; on any remote failure (connect/IO error,
+    /// backoff window, in-flight saturation) the group runs on
+    /// `fallback` instead, counted in `metrics.remote_fallbacks`.
+    ///
+    /// The uplink is then real, so the coordinator skips the simulated
+    /// channel wait for transferred groups and reports each sample's
+    /// `transfer_s` as the *measured* wire time of its round-trip
+    /// (round-trip minus server compute). The class channel keeps its
+    /// planning role — it is the model of the uplink the splits are
+    /// solved against.
+    Remote {
+        remote: Arc<RemoteCloudEngine>,
+        fallback: InferenceEngine,
+    },
+}
+
+impl From<InferenceEngine> for CloudExec {
+    fn from(engine: InferenceEngine) -> CloudExec {
+        CloudExec::Local(engine)
+    }
+}
+
+impl CloudExec {
+    /// The manifest the cloud side executes (the local or fallback
+    /// engine's — a remote server is assumed to serve the same model).
+    pub fn manifest(&self) -> &Manifest {
+        match self {
+            CloudExec::Local(e) => e.manifest(),
+            CloudExec::Remote { fallback, .. } => fallback.manifest(),
+        }
+    }
+}
 
 /// Called once per branch-gate decision with `true` when the sample
 /// exited early at the side branch — the hook the fleet's online
@@ -101,18 +149,21 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the pipeline. `edge_engine` and `cloud_engine` are the two
-    /// nodes' compute handles — pass two distinct engines for true
-    /// pipelining (separate PJRT clients), or two clones of one engine to
-    /// share a single client (compute then serializes).
+    /// Start the pipeline. `edge_engine` and `cloud` are the two nodes'
+    /// compute handles — pass two distinct engines for true pipelining
+    /// (separate PJRT clients), two clones of one engine to share a
+    /// single client (compute then serializes), or a
+    /// [`CloudExec::Remote`] to run the suffix stages on another
+    /// machine (a plain [`InferenceEngine`] converts into
+    /// [`CloudExec::Local`]).
     pub fn start(
         edge_engine: InferenceEngine,
-        cloud_engine: InferenceEngine,
+        cloud: impl Into<CloudExec>,
         channel: Arc<Channel>,
         plan: PartitionPlan,
         cfg: CoordinatorConfig,
     ) -> Coordinator {
-        Self::start_observed(edge_engine, cloud_engine, channel, plan, cfg, None)
+        Self::start_observed(edge_engine, cloud, channel, plan, cfg, None)
     }
 
     /// [`Coordinator::start`] with an exit observer: `observer` is
@@ -123,12 +174,13 @@ impl Coordinator {
     /// observable exit behaviour.
     pub fn start_observed(
         edge_engine: InferenceEngine,
-        cloud_engine: InferenceEngine,
+        cloud: impl Into<CloudExec>,
         channel: Arc<Channel>,
         plan: PartitionPlan,
         cfg: CoordinatorConfig,
         observer: Option<ExitObserver>,
     ) -> Coordinator {
+        let cloud = cloud.into();
         let plan = Arc::new(RwLock::new(plan));
         let ingress = Arc::new(Batcher::new(
             cfg.queue_capacity,
@@ -171,13 +223,13 @@ impl Coordinator {
             );
         }
         for i in 0..cfg.cloud_workers.max(1) {
-            let engine = cloud_engine.clone();
+            let exec = cloud.clone();
             let cloud_queue = cloud_queue.clone();
             let metrics = metrics.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("cloud-worker-{i}"))
-                    .spawn(move || cloud_loop(engine, cloud_queue, metrics))
+                    .spawn(move || cloud_loop(exec, cloud_queue, metrics))
                     .expect("spawn cloud worker"),
             );
         }
@@ -306,16 +358,6 @@ impl Coordinator {
     }
 }
 
-/// Pick the smallest exported batch size >= n (or the max exported).
-fn bucket_up(sizes: &[usize], n: usize) -> usize {
-    sizes
-        .iter()
-        .copied()
-        .filter(|&b| b >= n)
-        .min()
-        .unwrap_or_else(|| sizes.iter().copied().max().unwrap())
-}
-
 #[allow(clippy::too_many_arguments)]
 fn edge_loop(
     engine: InferenceEngine,
@@ -327,9 +369,7 @@ fn edge_loop(
     threshold: f32,
     observer: Option<ExitObserver>,
 ) {
-    let manifest = engine.manifest().clone();
-    let sizes = manifest.batch_sizes.clone();
-    let max_exec = sizes.iter().copied().max().unwrap();
+    let max_exec = engine.max_batch();
 
     while let Some(batch) = ingress.next_batch() {
         metrics.edge_batches.fetch_add(1, Ordering::Relaxed);
@@ -362,7 +402,6 @@ fn edge_loop(
                     &cloud_queue,
                     &metrics,
                     threshold,
-                    &sizes,
                     observer.as_ref(),
                 ) {
                     log::error!("edge chunk failed: {e:#}");
@@ -381,7 +420,6 @@ fn process_edge_chunk(
     cloud_queue: &Batcher<TransferredSample>,
     metrics: &Metrics,
     threshold: f32,
-    sizes: &[usize],
     observer: Option<&ExitObserver>,
 ) -> Result<()> {
     let n = chunk.len();
@@ -394,7 +432,7 @@ fn process_edge_chunk(
     let t_edge0 = Instant::now();
     let images: Vec<HostTensor> = chunk.iter().map(|r| r.image.clone()).collect();
     let stacked = HostTensor::stack(&images)?;
-    let exec_b = bucket_up(sizes, n);
+    let exec_b = engine.bucket_batch(n);
     let mut x = stacked.pad_batch(exec_b);
 
     // Survivor bookkeeping: request index -> still alive.
@@ -453,7 +491,7 @@ fn process_edge_chunk(
         };
         alive = survivors;
         let stacked = HostTensor::stack(&kept)?;
-        let exec_b = bucket_up(sizes, alive.len());
+        let exec_b = engine.bucket_batch(alive.len());
         x = stacked.pad_batch(exec_b);
         if s > branch_pos {
             x = engine.run_stages(branch_pos + 1, s, &x)?;
@@ -523,13 +561,18 @@ fn process_edge_chunk(
 }
 
 fn cloud_loop(
-    engine: InferenceEngine,
+    exec: CloudExec,
     cloud_queue: Arc<Batcher<TransferredSample>>,
     metrics: Arc<Metrics>,
 ) {
-    let manifest = engine.manifest().clone();
-    let sizes = manifest.batch_sizes.clone();
+    let manifest = exec.manifest().clone();
     let num_stages = manifest.num_stages();
+    let branch_pos = manifest.branch.after_stage;
+    // With an in-process cloud the uplink is simulated: honor the
+    // stamped transfer-completion instants. With a remote cloud the
+    // genuine TCP round-trip *is* the transfer — sleeping the model's
+    // delay on top would double-count the network.
+    let simulate_uplink = matches!(&exec, CloudExec::Local(_));
 
     while let Some(batch) = cloud_queue.next_batch() {
         metrics.cloud_batches.fetch_add(1, Ordering::Relaxed);
@@ -552,49 +595,122 @@ fn cloud_loop(
             // Honor the (simulated) transfer completion time of *this*
             // group only — a fast-link sample must not wait out a
             // slow-link sample that merely shared the batch window.
-            if let Some(latest) = group.iter().map(|t| t.ready_at).max() {
-                let now = Instant::now();
-                if latest > now {
-                    std::thread::sleep(latest - now);
+            if simulate_uplink {
+                if let Some(latest) = group.iter().map(|t| t.ready_at).max() {
+                    let now = Instant::now();
+                    if latest > now {
+                        std::thread::sleep(latest - now);
+                    }
                 }
             }
-            let from = split + 1;
-            debug_assert!(from <= num_stages, "edge-only sample transferred");
-            let t0 = Instant::now();
-            let result = (|| -> Result<()> {
-                let tensors: Vec<HostTensor> =
-                    group.iter().map(|t| t.activation.clone()).collect();
-                let stacked = HostTensor::stack(&tensors)?;
-                let exec_b = bucket_up(&sizes, group.len());
-                let x = stacked.pad_batch(exec_b);
-                let out = engine.run_stages(from, num_stages, &x)?;
-                let classes = InferenceEngine::argmax_classes(&out);
-                let cloud_s = t0.elapsed().as_secs_f64();
-                for (idx, item) in group.iter().enumerate() {
-                    metrics.completed.fetch_add(1, Ordering::Relaxed);
-                    metrics
-                        .cloud_completions
-                        .fetch_add(1, Ordering::Relaxed);
-                    let latency = item.enqueued.elapsed().as_secs_f64();
-                    metrics.record_latency(latency);
-                    let _ = item.reply.send(InferenceResponse {
-                        id: item.id,
-                        class: classes[idx],
-                        exit: ExitPoint::MainOutput,
-                        entropy: item.entropy,
-                        latency_s: latency,
-                        edge_s: item.edge_s,
-                        transfer_s: item.transfer_s,
-                        cloud_s,
-                    });
+            debug_assert!(split < num_stages, "edge-only sample transferred");
+            match run_cloud_group(&exec, branch_pos, split, &group, &metrics) {
+                Ok((classes, cloud_s, wire_s)) => {
+                    for (idx, item) in group.iter().enumerate() {
+                        metrics.completed.fetch_add(1, Ordering::Relaxed);
+                        metrics
+                            .cloud_completions
+                            .fetch_add(1, Ordering::Relaxed);
+                        let latency = item.enqueued.elapsed().as_secs_f64();
+                        metrics.record_latency(latency);
+                        let _ = item.reply.send(InferenceResponse {
+                            id: item.id,
+                            class: classes[idx],
+                            exit: ExitPoint::MainOutput,
+                            entropy: item.entropy,
+                            latency_s: latency,
+                            edge_s: item.edge_s,
+                            // Remote-served samples report the measured
+                            // wire time; simulated ones the modeled one.
+                            transfer_s: wire_s.unwrap_or(item.transfer_s),
+                            cloud_s,
+                        });
+                    }
                 }
-                Ok(())
-            })();
-            if let Err(e) = result {
-                log::error!("cloud batch failed: {e:#}");
+                Err(e) => log::error!("cloud batch failed: {e:#}"),
             }
         }
     }
+}
+
+/// Execute one split-group's suffix stages `split+1..=N`: over the wire
+/// when a remote cloud is configured (falling back to the local engine
+/// on any remote failure, counted in `metrics.remote_fallbacks`),
+/// in-process otherwise. Returns one class per sample, the cloud
+/// compute seconds (server-measured for the remote path — network time
+/// is not compute time), and the wire seconds actually paid:
+/// `Some(round-trip − server compute)` for remote-served groups,
+/// `Some(0.0)` for remote-mode fallbacks (nothing crossed the wire),
+/// `None` for the in-process path (the edge-stamped simulated transfer
+/// applies).
+fn run_cloud_group(
+    exec: &CloudExec,
+    branch_pos: usize,
+    split: usize,
+    group: &[TransferredSample],
+    metrics: &Metrics,
+) -> Result<(Vec<usize>, f64, Option<f64>)> {
+    let tensors: Vec<HostTensor> = group.iter().map(|t| t.activation.clone()).collect();
+    let stacked = HostTensor::stack(&tensors)?;
+    match exec {
+        CloudExec::Local(engine) => {
+            let (classes, cloud_s) = local_suffix(engine, split, &stacked, group.len())?;
+            Ok((classes, cloud_s, None))
+        }
+        CloudExec::Remote { remote, fallback } => {
+            // Samples cut after the branch already passed the gate on
+            // the edge (the active-branch rule: position < split);
+            // samples cut at or before it never saw a gate.
+            let branch_state = if split > branch_pos {
+                BRANCH_GATED
+            } else {
+                BRANCH_PENDING
+            };
+            let t0 = Instant::now();
+            match remote.infer_partial(split, branch_state, &stacked) {
+                Ok(out) if out.samples.len() == group.len() => {
+                    metrics.remote_batches.fetch_add(1, Ordering::Relaxed);
+                    let wire_s = (t0.elapsed().as_secs_f64() - out.cloud_s).max(0.0);
+                    let classes = out.samples.iter().map(|s| s.class as usize).collect();
+                    Ok((classes, out.cloud_s, Some(wire_s)))
+                }
+                // Fallback groups never touched the wire and (remote
+                // mode) never slept a simulated delay either: their
+                // transfer time is genuinely zero, not the modeled one.
+                Ok(out) => {
+                    metrics.remote_fallbacks.fetch_add(1, Ordering::Relaxed);
+                    log::warn!(
+                        "cloud server answered {} records for {} samples; running locally",
+                        out.samples.len(),
+                        group.len()
+                    );
+                    let (classes, cloud_s) =
+                        local_suffix(fallback, split, &stacked, group.len())?;
+                    Ok((classes, cloud_s, Some(0.0)))
+                }
+                Err(e) => {
+                    metrics.remote_fallbacks.fetch_add(1, Ordering::Relaxed);
+                    log::warn!("cloud offload failed ({e:#}); running split {split} group locally");
+                    let (classes, cloud_s) =
+                        local_suffix(fallback, split, &stacked, group.len())?;
+                    Ok((classes, cloud_s, Some(0.0)))
+                }
+            }
+        }
+    }
+}
+
+/// The in-process suffix path: run `split+1..=N` on the group via the
+/// shared [`InferenceEngine::run_suffix_classes`], timing the compute.
+fn local_suffix(
+    engine: &InferenceEngine,
+    split: usize,
+    stacked: &HostTensor,
+    n: usize,
+) -> Result<(Vec<usize>, f64)> {
+    let t0 = Instant::now();
+    let classes = engine.run_suffix_classes(split + 1, stacked, n)?;
+    Ok((classes, t0.elapsed().as_secs_f64()))
 }
 
 #[cfg(test)]
@@ -603,16 +719,6 @@ mod tests {
     use crate::config::settings::Strategy;
     use crate::model::Manifest;
     use crate::network::trace::BandwidthTrace;
-
-    #[test]
-    fn bucket_up_semantics() {
-        let sizes = [1usize, 4, 8];
-        assert_eq!(bucket_up(&sizes, 1), 1);
-        assert_eq!(bucket_up(&sizes, 2), 4);
-        assert_eq!(bucket_up(&sizes, 4), 4);
-        assert_eq!(bucket_up(&sizes, 5), 8);
-        assert_eq!(bucket_up(&sizes, 9), 8); // chunked upstream
-    }
 
     fn sim_setup() -> (Manifest, InferenceEngine, InferenceEngine, Arc<Channel>) {
         let manifest =

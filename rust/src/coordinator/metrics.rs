@@ -24,6 +24,11 @@ pub struct Metrics {
     /// Requests admitted with a per-request plan override
     /// (`Coordinator::submit_planned` — fleet per-request planning).
     pub plan_overrides: AtomicU64,
+    /// Split-groups served by a remote cloud-stage server.
+    pub remote_batches: AtomicU64,
+    /// Split-groups that fell back to local execution after a remote
+    /// failure (connect/IO error, backoff window, in-flight cap).
+    pub remote_fallbacks: AtomicU64,
     latency: Mutex<LatencyHistogram>,
 }
 
@@ -63,6 +68,8 @@ impl Metrics {
             cloud_batches: self.cloud_batches.load(Ordering::Relaxed),
             plan_switches: self.plan_switches.load(Ordering::Relaxed),
             plan_overrides: self.plan_overrides.load(Ordering::Relaxed),
+            remote_batches: self.remote_batches.load(Ordering::Relaxed),
+            remote_fallbacks: self.remote_fallbacks.load(Ordering::Relaxed),
             throughput_rps: completed as f64 / elapsed,
             mean_latency_s: hist.mean(),
             p50_s,
@@ -87,6 +94,11 @@ pub struct MetricsSnapshot {
     pub plan_switches: u64,
     /// Requests admitted with a per-request plan override.
     pub plan_overrides: u64,
+    /// Split-groups served by a remote cloud-stage server.
+    pub remote_batches: u64,
+    /// Split-groups that fell back to local execution after a remote
+    /// failure.
+    pub remote_fallbacks: u64,
     pub throughput_rps: f64,
     pub mean_latency_s: f64,
     pub p50_s: f64,
@@ -111,6 +123,8 @@ impl MetricsSnapshot {
             cloud_batches: 0,
             plan_switches: 0,
             plan_overrides: 0,
+            remote_batches: 0,
+            remote_fallbacks: 0,
             throughput_rps: 0.0,
             mean_latency_s: 0.0,
             p50_s: 0.0,
@@ -140,6 +154,8 @@ impl MetricsSnapshot {
             out.cloud_batches += p.cloud_batches;
             out.plan_switches += p.plan_switches;
             out.plan_overrides += p.plan_overrides;
+            out.remote_batches += p.remote_batches;
+            out.remote_fallbacks += p.remote_fallbacks;
             out.elapsed_s = out.elapsed_s.max(p.elapsed_s);
             out.latency_hist.merge(&p.latency_hist);
         }
@@ -158,8 +174,15 @@ impl MetricsSnapshot {
     pub fn to_json(&self) -> String {
         format!(
             "{{\"completed\":{},\"edge_exits\":{},\"rejected\":{},\
+             \"remote_batches\":{},\"remote_fallbacks\":{},\
              \"throughput_rps\":{:.3},\"p50_s\":{:.6},\"p99_s\":{:.6}}}",
-            self.completed, self.edge_exits, self.rejected, self.throughput_rps, self.p50_s,
+            self.completed,
+            self.edge_exits,
+            self.rejected,
+            self.remote_batches,
+            self.remote_fallbacks,
+            self.throughput_rps,
+            self.p50_s,
             self.p99_s
         )
     }
@@ -173,9 +196,17 @@ impl MetricsSnapshot {
     }
 
     pub fn summary(&self) -> String {
+        let remote = if self.remote_batches + self.remote_fallbacks > 0 {
+            format!(
+                ", remote cloud batches {} ({} fell back local)",
+                self.remote_batches, self.remote_fallbacks
+            )
+        } else {
+            String::new()
+        };
         format!(
             "completed {} ({} early-exit, {:.1}%), rejected {}, throughput {}, \
-             latency mean {} p50 {} p99 {}, transferred {} bytes, plan switches {}",
+             latency mean {} p50 {} p99 {}, transferred {} bytes, plan switches {}{}",
             self.completed,
             self.edge_exits,
             self.exit_rate() * 100.0,
@@ -186,6 +217,7 @@ impl MetricsSnapshot {
             format_secs(self.p99_s),
             self.transferred_bytes,
             self.plan_switches,
+            remote,
         )
     }
 }

@@ -14,12 +14,18 @@
 //! stages anyway). The partition plan decides how much work each node
 //! does; `split_after = 0` degenerates to pure cloud serving (the edge
 //! node forwards raw inputs), `= N` to pure edge serving.
+//!
+//! The cloud worker's compute is a [`CloudExec`]: an in-process engine
+//! (single-machine deployment, simulated uplink), or a remote
+//! cloud-stage server reached over the wire protocol — then the
+//! partition spans real machines and the local engine only runs as a
+//! fallback when the network path fails.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod request;
 
-pub use engine::{Coordinator, CoordinatorConfig, ExitObserver};
+pub use engine::{CloudExec, Coordinator, CoordinatorConfig, ExitObserver};
 pub use metrics::MetricsSnapshot;
 pub use request::{InferenceRequest, InferenceResponse};

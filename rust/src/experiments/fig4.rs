@@ -4,7 +4,7 @@
 //!
 //! "These results are obtained based on the solution of our optimization
 //! problem when varying the probability" (§VI) — i.e. each point is the
-//! *optimal* E[T_inf] at that (p, gamma, B), not a fixed partition's.
+//! *optimal* `E[T_inf]` at that (p, gamma, B), not a fixed partition's.
 
 use crate::model::BranchyNetDesc;
 use crate::network::bandwidth::{LinkModel, Profile};
@@ -19,12 +19,12 @@ pub const DEFAULT_POINTS: usize = 21;
 pub struct Curve {
     pub gamma: f64,
     pub network: Profile,
-    /// (p, optimal E[T] seconds, chosen split_after).
+    /// (p, optimal `E[T]` seconds, chosen split_after).
     pub points: Vec<(f64, f64, usize)>,
 }
 
 impl Curve {
-    /// Percent reduction of E[T] from p = 0 to p = 1 — the quantity the
+    /// Percent reduction of `E[T]` from p = 0 to p = 1 — the quantity the
     /// paper quotes as 87.27% / 82.98% / 70% for 3G/4G/Wi-Fi at gamma=10.
     pub fn reduction_pct(&self) -> f64 {
         let t0 = self.points.first().unwrap().1;

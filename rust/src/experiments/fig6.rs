@@ -24,7 +24,7 @@ pub struct LevelResult {
 }
 
 impl LevelResult {
-    /// P[exit] at a given entropy threshold — one Fig. 6 curve point.
+    /// `P[exit]` at a given entropy threshold — one Fig. 6 curve point.
     pub fn exit_probability(&self, threshold: f64) -> f64 {
         let n = self.entropies.len();
         if n == 0 {

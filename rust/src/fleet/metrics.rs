@@ -28,6 +28,10 @@ pub struct ClassPlannerStats {
     pub cache_misses: u64,
     /// Times a view swap flushed the class's plan cache.
     pub cache_invalidations: u64,
+    /// Per-request plans rerouted through the branch-active probe split
+    /// so the exit-rate estimator keeps observing (0 when probing is
+    /// off or the solved splits already keep the branch active).
+    pub probe_overrides: u64,
 }
 
 /// One link class's view: the active split, every shard's snapshot, and
@@ -109,7 +113,7 @@ impl FleetReport {
                      \"exit_prob_planned\":{:.6},\"p_hat\":{},\
                      \"estimator_observations\":{},\"view_rebuilds\":{},\
                      \"cache_hits\":{},\"cache_misses\":{},\
-                     \"cache_invalidations\":{},{}}}",
+                     \"cache_invalidations\":{},\"probe_overrides\":{},{}}}",
                     Json::Str(c.name.clone()),
                     c.split_after,
                     c.shards.len(),
@@ -120,6 +124,7 @@ impl FleetReport {
                     c.planner.cache_hits,
                     c.planner.cache_misses,
                     c.planner.cache_invalidations,
+                    c.planner.probe_overrides,
                     flat_fields(&c.aggregate),
                 )
             })
@@ -166,6 +171,7 @@ mod tests {
                     cache_hits: 10,
                     cache_misses: 3,
                     cache_invalidations: 2,
+                    probe_overrides: 1,
                 },
                 aggregate: MetricsSnapshot::aggregate(&shards_a),
                 shards: shards_a,
@@ -220,6 +226,7 @@ mod tests {
         assert_eq!(p0.get("cache_hits").unwrap().as_u64(), Some(10));
         assert_eq!(p0.get("cache_misses").unwrap().as_u64(), Some(3));
         assert_eq!(p0.get("cache_invalidations").unwrap().as_u64(), Some(2));
+        assert_eq!(p0.get("probe_overrides").unwrap().as_u64(), Some(1));
         // Estimation off: p_hat is JSON null, not 0 (an estimate of 0
         // and "no estimate" are different facts).
         assert!(matches!(classes[1].get("p_hat"), Some(Json::Null)));

@@ -57,16 +57,25 @@
 //!   configured threshold, the class planner's view is re-derived at p̂
 //!   (epoch-invalidating its plan cache) and the new plan is pushed to
 //!   every shard — the configured prior stops mattering once traffic
-//!   speaks for itself. Known limit: exit behaviour is only observable
-//!   while the executed split keeps the branch active; once feedback
-//!   moves a class to a split at or before the branch (e.g. cloud-only),
-//!   observations stop and p̂ freezes there — recovering from that state
-//!   needs branch-probing traffic (see ROADMAP).
+//!   speaks for itself. Exit behaviour is only observable while the
+//!   executed split keeps the branch active, so once feedback moves a
+//!   class to a split at or before the branch (e.g. cloud-only) the
+//!   gate goes silent; `probe_fraction` keeps the estimator alive by
+//!   rerouting a small fraction of such requests through the smallest
+//!   branch-active split (riding on per-request overrides), which is
+//!   what lets p̂ recover *upward* after an overshoot.
+//! * **The cloud half can be another machine.** With `cloud_addr` set,
+//!   every shard's cloud worker ships its transferred split-groups as
+//!   INFER_PARTIAL frames to a remote cloud-stage server
+//!   ([`crate::server::CloudStageServer`]) through one fleet-shared
+//!   [`RemoteCloudEngine`] (pooled connections, reconnect with backoff,
+//!   in-flight cap); remote failures fall back to the shard's local
+//!   engine and are counted in the metrics.
 //! * **Observability rolls up.** [`FleetReport`]: per-shard
 //!   [`MetricsSnapshot`]s → per-class aggregate → fleet total, all
 //!   NaN-free even for shards that served nothing — plus per-class
-//!   planner stats (planned p, estimated p̂, cache hit/miss/invalidation
-//!   and view-rebuild counters).
+//!   planner stats (planned p, estimated p̂, cache hit/miss/invalidation,
+//!   view-rebuild and probe counters).
 
 pub mod class;
 pub mod metrics;
@@ -84,8 +93,9 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::config::settings::Strategy;
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, ExitObserver, InferenceResponse, MetricsSnapshot,
+    CloudExec, Coordinator, CoordinatorConfig, ExitObserver, InferenceResponse, MetricsSnapshot,
 };
 use crate::model::Manifest;
 use crate::network::trace::BandwidthTrace;
@@ -95,6 +105,7 @@ use crate::planner::{
     AdaptiveConfig, AdaptiveHandle, AdaptivePlanner, EstimatorConfig, ExitRateEstimator, Planner,
 };
 use crate::runtime::{HostTensor, InferenceEngine};
+use crate::server::remote::{RemoteCloudConfig, RemoteCloudEngine, RemoteCloudStats};
 use crate::server::ServeBackend;
 use crate::timing::DelayProfile;
 
@@ -126,6 +137,20 @@ pub struct FleetConfig {
     /// estimate and attach it as a per-request plan override, instead
     /// of only replanning at adaptive boundaries.
     pub per_request_planning: bool,
+    /// Exit-rate probing (requires `per_request_planning`): route this
+    /// fraction of requests whose solved split would keep the side
+    /// branch *inactive* through the smallest branch-active split
+    /// instead, so the branch gate keeps producing observations. This
+    /// is how online estimation recovers *upward*: once feedback moves
+    /// a class to a split at or before the branch, the gate stops
+    /// firing and p̂ would otherwise freeze there forever. 0 = off.
+    pub probe_fraction: f64,
+    /// When set (`HOST:PORT`), every shard's cloud worker ships its
+    /// transferred split-groups to this remote cloud-stage server
+    /// (`branchyserve cloud-serve`) instead of running them in-process;
+    /// the shard's own cloud engine becomes the fallback for remote
+    /// failures. All shards share one pooled connection set.
+    pub cloud_addr: Option<String>,
     /// Multiplicative jitter stddev on the class channels (0 = none).
     pub channel_jitter: f64,
     /// False = channels account delays without sleeping (tests/benches).
@@ -147,6 +172,8 @@ impl Default for FleetConfig {
             adaptive: None,
             estimation: None,
             per_request_planning: false,
+            probe_fraction: 0.0,
+            cloud_addr: None,
             channel_jitter: 0.0,
             real_time_channel: true,
         }
@@ -172,6 +199,11 @@ struct ClassGroup {
     /// shard count and pin a class to one shard.
     router: FleetRouter,
     adaptive: Option<AdaptiveHandle>,
+    /// Requests considered for exit-rate probing (solved split kept the
+    /// branch inactive while probing was enabled).
+    probe_counter: AtomicU64,
+    /// Requests actually rerouted through the branch-active probe split.
+    probe_overrides: AtomicU64,
 }
 
 impl ClassGroup {
@@ -192,8 +224,18 @@ impl ClassGroup {
             cache_hits,
             cache_misses,
             cache_invalidations: self.planner.cache_invalidations(),
+            probe_overrides: self.probe_overrides.load(Ordering::Relaxed),
         }
     }
+}
+
+/// Probing parameters, resolved once at fleet start: every `every`-th
+/// branch-inactive per-request plan is rerouted through `split` (the
+/// smallest branch-active split — minimal extra edge work for one gate
+/// observation).
+struct ProbeConfig {
+    every: u64,
+    split: usize,
 }
 
 /// A running fleet. `Send + Sync`; share it behind an [`Arc`] (the TCP
@@ -203,6 +245,11 @@ pub struct Fleet {
     registry: ClassRegistry,
     groups: Vec<ClassGroup>,
     per_request_planning: bool,
+    probe: Option<ProbeConfig>,
+    /// 1-based position of the manifest's side branch.
+    branch_pos: usize,
+    /// The shared remote cloud client, when `cloud_addr` is configured.
+    remote: Option<Arc<RemoteCloudEngine>>,
     route_key: AtomicU64,
 }
 
@@ -227,6 +274,70 @@ impl Fleet {
                 "cloud_workers_per_shard must be in 1..=64; got {}",
                 cfg.cloud_workers_per_shard
             );
+        }
+        if !(0.0..=1.0).contains(&cfg.probe_fraction) {
+            bail!(
+                "probe_fraction must be in [0, 1]; got {}",
+                cfg.probe_fraction
+            );
+        }
+        if cfg.probe_fraction > 0.0 && !cfg.per_request_planning {
+            bail!("probe_fraction requires per_request_planning (probes ride on overrides)");
+        }
+
+        let branch_pos = manifest.branch.after_stage;
+        // Probing needs a branch-active split to route through; a branch
+        // after the last stage can never be activated by a finite cut.
+        let probe = if cfg.per_request_planning
+            && cfg.probe_fraction > 0.0
+            && branch_pos < manifest.num_stages()
+        {
+            Some(ProbeConfig {
+                // ceil: never probe *more* often than the asked fraction.
+                every: (1.0 / cfg.probe_fraction).ceil().max(1.0) as u64,
+                split: branch_pos + 1,
+            })
+        } else {
+            None
+        };
+        if probe.is_some() && cfg.estimation.is_none() {
+            // Legal (the gate observations still surface in metrics and
+            // an estimator can be enabled later) but probably not what
+            // the operator meant: probes cost latency, and nothing is
+            // learning from them.
+            log::warn!(
+                "probe_fraction {} is set but online estimation is off — probed requests \
+                 reroute through a branch-active split with no estimator consuming the signal",
+                cfg.probe_fraction
+            );
+        }
+
+        // The remote cloud client is shared by every shard (one pooled
+        // connection set and one backoff state per fleet, not per
+        // pipeline). Construction is lazy — a fleet starts fine while
+        // its cloud is down and falls back to local execution.
+        let remote = cfg
+            .cloud_addr
+            .as_ref()
+            .map(|addr| Arc::new(RemoteCloudEngine::new(RemoteCloudConfig::new(addr.clone()))));
+        if let Some(r) = &remote {
+            // Reachability probe on a detached thread: its only output
+            // is a log line, and a stalled resolver or a 2s connect
+            // timeout must not delay fleet startup (the whole point of
+            // the lazy client is that the edge serves while the cloud
+            // is down).
+            let probe = r.clone();
+            std::thread::Builder::new()
+                .name("cloud-probe".into())
+                .spawn(move || match probe.ping() {
+                    Ok(()) => log::info!("cloud-stage server {} is reachable", probe.addr()),
+                    Err(e) => log::warn!(
+                        "cloud-stage server {} unreachable at startup ({e:#}); \
+                         serving with local fallback until it comes up",
+                        probe.addr()
+                    ),
+                })
+                .ok();
         }
 
         // One p-independent precompute (`StaticCore`) for the whole
@@ -312,9 +423,16 @@ impl Fleet {
             for s in 0..cfg.shards_per_class {
                 let label = format!("{}-s{}", prof.name, s);
                 let (edge, cloud) = make_engines(&label)?;
+                let cloud_exec = match &remote {
+                    Some(r) => CloudExec::Remote {
+                        remote: r.clone(),
+                        fallback: cloud,
+                    },
+                    None => CloudExec::Local(cloud),
+                };
                 shards.push(Arc::new(Coordinator::start_observed(
                     edge,
-                    cloud,
+                    cloud_exec,
                     channel.clone(),
                     plan.clone(),
                     CoordinatorConfig {
@@ -354,6 +472,8 @@ impl Fleet {
                 shards,
                 router: FleetRouter::new(cfg.routing),
                 adaptive,
+                probe_counter: AtomicU64::new(0),
+                probe_overrides: AtomicU64::new(0),
             });
         }
 
@@ -361,6 +481,9 @@ impl Fleet {
             registry,
             groups,
             per_request_planning: cfg.per_request_planning,
+            probe,
+            branch_pos,
+            remote,
             route_key: AtomicU64::new(1),
         })
     }
@@ -398,9 +521,51 @@ impl Fleet {
         Ok(self.group(class)?.channel.as_ref())
     }
 
+    /// Wire-level counters of the shared remote cloud client; `None`
+    /// when the fleet runs its cloud stages in-process.
+    pub fn remote_stats(&self) -> Option<RemoteCloudStats> {
+        self.remote.as_ref().map(|r| r.stats())
+    }
+
     /// Route one request: pick a shard of the class's group and submit.
     /// The routing key is a per-request counter, so hash routing spreads
     /// uniformly; use [`Fleet::submit_keyed`] for session affinity.
+    ///
+    /// # Example
+    ///
+    /// A one-class fleet on the simulated runtime (no artifacts
+    /// needed), serving a single request end to end:
+    ///
+    /// ```
+    /// use branchyserve::fleet::{ClassProfile, ClassRegistry, Fleet, FleetConfig};
+    /// use branchyserve::model::Manifest;
+    /// use branchyserve::runtime::{HostTensor, InferenceEngine};
+    /// use branchyserve::timing::DelayProfile;
+    ///
+    /// let manifest =
+    ///     Manifest::synthetic_sim("doc-fleet", vec![4], &[16, 8, 2], 1, 2, vec![1, 2, 4])?;
+    /// let profile = DelayProfile::from_cloud_times(vec![1e-4; 3], 2e-5, 50.0);
+    /// let registry = ClassRegistry::single(ClassProfile::custom("4g", 5.85, 0.0)?);
+    /// let m = manifest.clone();
+    /// let fleet = Fleet::start(
+    ///     registry,
+    ///     &manifest,
+    ///     &profile,
+    ///     FleetConfig { real_time_channel: false, ..Default::default() },
+    ///     move |label| {
+    ///         Ok((
+    ///             InferenceEngine::open_sim(m.clone(), &format!("{label}-edge"))?,
+    ///             InferenceEngine::open_sim(m.clone(), &format!("{label}-cloud"))?,
+    ///         ))
+    ///     },
+    /// )?;
+    /// let class = fleet.class_by_name("4g").unwrap();
+    /// let (_id, rx) = fleet.submit(class, HostTensor::zeros(vec![4]))?;
+    /// let response = rx.recv()?;
+    /// assert!(response.class < 2);
+    /// fleet.shutdown();
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn submit(
         &self,
         class: LinkClass,
@@ -437,7 +602,27 @@ impl Fleet {
             group.router.pick_index(key, n)
         };
         if self.per_request_planning {
-            let plan = group.planner.plan(group.channel.current_link());
+            let link = group.channel.current_link();
+            let mut plan = group.planner.plan(link);
+            // Exit-rate probing: when the solved split keeps the branch
+            // inactive (no gate ⇒ no observations ⇒ p̂ frozen), reroute
+            // every `every`-th such request through the smallest
+            // branch-active split so the estimator keeps learning.
+            if let Some(probe) = &self.probe {
+                if plan.split_after <= self.branch_pos {
+                    let k = group.probe_counter.fetch_add(1, Ordering::Relaxed);
+                    if k % probe.every == 0 {
+                        let t = group.planner.expected_time(probe.split, link);
+                        plan = PartitionPlan::from_split(
+                            probe.split,
+                            t,
+                            Strategy::ShortestPath,
+                            group.planner.planner().desc(),
+                        );
+                        group.probe_overrides.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
             group.shards[shard].submit_planned(image, plan)
         } else {
             group.shards[shard].submit(image)

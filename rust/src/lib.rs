@@ -10,7 +10,9 @@
 //! *expected* inference time (including the probability of early exit at
 //! a side branch) is minimized — is implemented in [`partition`]: the
 //! `G'_BDNN` graph construction (§V, Eqs. 7–8) plus Dijkstra. Around it
-//! sits a full serving system:
+//! sits a five-layer serving system (partition → planner → coordinator
+//! → fleet → server; `ARCHITECTURE.md` at the repo root is the prose
+//! map of how they fit together):
 //!
 //! * [`model`] — the B-AlexNet stage graph loaded from `artifacts/manifest.json`;
 //! * [`timing`] — the inference-time model (Eqs. 1–6);
@@ -22,11 +24,24 @@
 //!   two-layer core (p-independent `StaticCore`, cheap swappable exit-
 //!   probability views), an adaptive replan loop for time-varying
 //!   uplinks, and an exit-rate estimator for drift-triggered p updates;
-//! * [`coordinator`] — router, dynamic batcher, early-exit scheduler, metrics;
+//! * [`coordinator`] — router, dynamic batcher, early-exit scheduler,
+//!   metrics; its cloud half is a [`coordinator::CloudExec`]: in-process,
+//!   or a remote cloud-stage server with local fallback;
 //! * [`fleet`] — sharded multi-class serving: per-link-class planners
-//!   (3G/4G/WiFi or TOML-defined) behind a routing fleet coordinator;
-//! * [`server`] / [`workload`] — TCP serving loop and load generation;
+//!   (3G/4G/WiFi or TOML-defined) behind a routing fleet coordinator,
+//!   with per-request planning, online exit-rate estimation and
+//!   branch-probing recovery;
+//! * [`server`] / [`workload`] — the wire protocol (including the
+//!   partial-inference frames that carry cut activations between
+//!   machines), the TCP accept loop, the cloud-stage server and the
+//!   remote cloud client, plus load generation;
 //! * [`experiments`] — drivers regenerating the paper's Figures 4, 5, 6.
+//!
+//! The partition is physically realizable: `branchyserve serve
+//! --cloud-addr HOST:PORT` runs the edge half against `branchyserve
+//! cloud-serve` on another machine, with intermediate activations
+//! crossing a real network at exactly the planned split (see
+//! `docs/serving.md` for the two-terminal demo).
 //!
 //! Python/JAX/Pallas exist only at build time (`make artifacts`); the
 //! request path is pure Rust. Without the `xla-pjrt` feature the

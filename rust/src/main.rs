@@ -4,6 +4,8 @@
 //!   profile  — measure per-stage t_i^c on this machine's PJRT runtime
 //!   plan     — solve the partitioning problem, print the plan + sets
 //!   serve    — run the TCP serving front-end with a chosen plan
+//!   cloud-serve — run the remote cloud-stage server (the other half of
+//!               a physically partitioned deployment; see --cloud-addr)
 //!   fig4/fig5/fig6 — regenerate the paper's figures as tables/CSV
 //!   ablation — strategy-gap / epsilon / branch-placement studies
 
@@ -14,7 +16,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use branchyserve::cli::{Cli, Command, Flag, Invocation, Parsed};
-use branchyserve::config::settings::{Flavor, Settings, Strategy};
+use branchyserve::config::settings::{validate_host_port, Flavor, Settings, Strategy};
 use branchyserve::experiments::{ablation, fig4, fig5, fig6};
 use branchyserve::fleet::{ClassProfile, ClassRegistry, Fleet, FleetConfig, RoutePolicy};
 use branchyserve::harness::Table;
@@ -25,7 +27,7 @@ use branchyserve::partition;
 use branchyserve::planner::{AdaptiveConfig, EstimatorConfig};
 use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
 use branchyserve::runtime::InferenceEngine;
-use branchyserve::server::Server;
+use branchyserve::server::{CloudStageServer, Server};
 use branchyserve::util::logger;
 use branchyserve::util::timefmt::format_secs;
 
@@ -74,6 +76,23 @@ fn cli() -> Cli {
                     "drift-threshold",
                     "exit-rate drift that triggers a replan",
                 ))
+                .flag(Flag::value(
+                    "probe-fraction",
+                    "fraction of per-request plans probed through a branch-active split",
+                ))
+                .flag(Flag::value(
+                    "cloud-addr",
+                    "HOST:PORT of a cloud-serve instance; cloud stages run there",
+                ))
+                .flag(Flag::value("bind", "listen address").default("127.0.0.1"))
+                .flag(Flag::switch("sim", "serve the simulated model (no artifacts needed)"))
+                .flag(Flag::value("sim-stage-cost-us", "synthetic per-stage compute cost, us").default("200")),
+            Command::new(
+                "cloud-serve",
+                "run the remote cloud-stage server (suffix layers over TCP)",
+            )
+                .flag(Flag::value("port", "TCP port (0 = auto)").default("7879"))
+                .flag(Flag::value("bind", "listen address").default("0.0.0.0"))
                 .flag(Flag::switch("sim", "serve the simulated model (no artifacts needed)"))
                 .flag(Flag::value("sim-stage-cost-us", "synthetic per-stage compute cost, us").default("200")),
             Command::new("fig4", "inference time vs exit probability (paper Fig. 4)")
@@ -127,6 +146,7 @@ fn dispatch(inv: &Invocation) -> Result<()> {
         "profile" => cmd_profile(inv, &settings),
         "plan" => cmd_plan(inv, &settings),
         "serve" => cmd_serve(inv, &settings),
+        "cloud-serve" => cmd_cloud_serve(inv, &settings),
         "fig4" => cmd_fig4(inv, &settings),
         "fig5" => cmd_fig5(inv, &settings),
         "fig6" => cmd_fig6(inv, &settings),
@@ -300,6 +320,19 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
         None => RoutePolicy::parse(&settings.fleet.routing)?,
     };
     let per_request = inv.has("per-request") || settings.fleet.per_request_planning;
+    let probe_fraction =
+        get_f64(inv, "probe-fraction")?.unwrap_or(settings.fleet.probe_fraction);
+    let cloud_addr = inv
+        .get("cloud-addr")
+        .map(str::to_string)
+        .or_else(|| settings.fleet.cloud_addr.clone());
+    if let Some(addr) = &cloud_addr {
+        // The TOML path was validated at load; the CLI value needs the
+        // same check or a typo silently serves local-only forever.
+        if let Err(e) = validate_host_port(addr) {
+            anyhow::bail!("--cloud-addr: {e}");
+        }
+    }
     let estimation = if inv.has("estimate-exit-rate") || settings.fleet.online_estimation {
         let cfg = EstimatorConfig {
             drift_threshold: get_f64(inv, "drift-threshold")?
@@ -436,6 +469,8 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             adaptive,
             estimation,
             per_request_planning: per_request,
+            probe_fraction,
+            cloud_addr: cloud_addr.clone(),
             channel_jitter: 0.0,
             real_time_channel: true,
         },
@@ -459,20 +494,79 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
         );
     }
     println!(
-        "per-request planning: {}   exit-rate estimation: {}",
+        "per-request planning: {}   exit-rate estimation: {}   probe fraction: {}",
         if per_request { "on" } else { "off" },
         match estimation {
             Some(cfg) => format!("on (drift threshold {})", cfg.drift_threshold),
             None => "off".to_string(),
         },
+        probe_fraction,
     );
+    match &cloud_addr {
+        Some(addr) => println!(
+            "cloud stages: remote @ {addr} (local fallback on failure) — \
+             run `branchyserve cloud-serve` there"
+        ),
+        None => println!("cloud stages: in-process"),
+    }
 
     let port = get_usize(inv, "port")?.unwrap_or(7878) as u16;
-    let handle = Server::new(fleet.clone()).start(port)?;
+    let bind = inv.get("bind").unwrap_or("127.0.0.1");
+    let handle = Server::new(fleet.clone()).start_on(bind, port)?;
     println!("serving on {} — Ctrl-C to stop", handle.addr());
     loop {
         std::thread::sleep(Duration::from_secs(10));
         println!("{}", fleet.report().summary());
+    }
+}
+
+/// The cloud half of a physically partitioned deployment: an accept
+/// loop over a [`CloudStageServer`] that executes the suffix stages
+/// `split+1..=N` of every INFER_PARTIAL frame an edge `serve
+/// --cloud-addr` instance ships to it. No planner runs here — each
+/// frame carries its own cut.
+fn cmd_cloud_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
+    let sim = inv.has("sim");
+    let sim_cost =
+        Duration::from_micros(get_usize(inv, "sim-stage-cost-us")?.unwrap_or(200) as u64);
+    let engine = if sim {
+        InferenceEngine::open_sim_with_cost(sim_manifest(), "cloud", sim_cost)?
+    } else {
+        let manifest = Manifest::load(&settings.model.artifacts_dir)?;
+        let engine = InferenceEngine::open(
+            &settings.model.artifacts_dir,
+            manifest,
+            settings.model.flavor,
+            "cloud",
+        )?;
+        let compile_s = engine.warmup()?;
+        log::info!("precompiled artifacts in {compile_s:.2}s");
+        engine
+    };
+    println!(
+        "cloud-stage server: {} stages, batch sizes {:?}",
+        engine.manifest().num_stages(),
+        engine.manifest().batch_sizes,
+    );
+
+    let server = Arc::new(CloudStageServer::new(engine));
+    let port = get_usize(inv, "port")?.unwrap_or(7879) as u16;
+    let bind = inv.get("bind").unwrap_or("0.0.0.0");
+    let handle = Server::new(server.clone()).start_on(bind, port)?;
+    println!(
+        "cloud-serving on {} — point an edge at it with \
+         `branchyserve serve --cloud-addr HOST:{}` — Ctrl-C to stop",
+        handle.addr(),
+        handle.addr().port(),
+    );
+    loop {
+        std::thread::sleep(Duration::from_secs(10));
+        let (batches, samples, gated, full, errors) = server.counters();
+        println!(
+            "partial batches {batches} ({samples} samples, {gated} gated), \
+             full infers {full}, errors {errors}, splits served {:?}",
+            server.splits_served(),
+        );
     }
 }
 

@@ -25,7 +25,7 @@ pub fn solve(est: &Estimator<'_>) -> PartitionPlan {
 }
 
 /// Like [`solve`] but returns the full cost curve too (used by the
-/// Fig. 4 driver, which plots E[T] rather than just the argmin).
+/// Fig. 4 driver, which plots `E[T]` rather than just the argmin).
 pub fn solve_with_curve(est: &Estimator<'_>) -> (PartitionPlan, Vec<f64>) {
     let curve = est.all_times();
     let plan = solve(est);

@@ -9,7 +9,7 @@ pub struct PartitionPlan {
     /// Split point: stages 1..=split_after run on the edge, the rest in
     /// the cloud. 0 = cloud-only, N = edge-only.
     pub split_after: usize,
-    /// Predicted E[T_inf] in seconds (the quantity that was minimized).
+    /// Predicted `E[T_inf]` in seconds (the quantity that was minimized).
     pub expected_time_s: f64,
     /// Strategy that produced this plan.
     pub strategy: Strategy,

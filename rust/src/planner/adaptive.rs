@@ -37,7 +37,7 @@ use super::Planner;
 pub struct AdaptiveConfig {
     /// How often the link source is polled.
     pub interval: Duration,
-    /// Hysteresis: relative E[T] improvement the candidate split must
+    /// Hysteresis: relative `E[T]` improvement the candidate split must
     /// offer over the current one before a switch happens.
     pub min_improvement: f64,
     /// Hysteresis: minimum time between two plan switches.

@@ -94,7 +94,7 @@ impl PlanCache {
 
     /// Quantize a link. `LinkModel` guarantees a positive finite
     /// bandwidth (it clamps at construction), so the log is finite.
-    /// RTTs under [`MIN_RTT_S`] share one sentinel bucket.
+    /// RTTs under `MIN_RTT_S` (1 µs) share one sentinel bucket.
     pub fn key_for(&self, link: LinkModel) -> CacheKey {
         let rtt_bucket = if link.rtt_s < MIN_RTT_S {
             i64::MIN

@@ -222,8 +222,8 @@ impl SharedView {
 /// each [`Planner::plan_for`] is an O(N) sweep and each
 /// [`Planner::expected_time`] query is O(1).
 ///
-/// The p-independent sums live behind one `Arc`'d [`StaticCore`]; the
-/// p-dependent folds behind a swappable [`ExitView`]:
+/// The p-independent sums live behind one `Arc`'d `StaticCore`; the
+/// p-dependent folds behind a swappable `ExitView`:
 ///
 /// * [`Planner::fork`] — same core, **same live view** (a fork sees
 ///   every [`Planner::set_exit_probs`] on the original, and vice
@@ -326,14 +326,45 @@ impl Planner {
         }
     }
 
-    /// A planner sharing this one's [`StaticCore`] but with an
-    /// **independent** [`ExitView`] derived at `probs` (one conditional
+    /// A planner sharing this one's `StaticCore` but with an
+    /// **independent** `ExitView` derived at `probs` (one conditional
     /// probability per branch, in branch-position order): one O(N·m)
     /// pass — no desc clone, no re-validation, no graph work — and
     /// bit-identical to a fresh [`Planner::new`] at the same p. One per
     /// link class in a fleet.
     ///
     /// Panics if `probs` has the wrong length or values outside [0, 1].
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use branchyserve::model::{BranchDesc, BranchyNetDesc};
+    /// use branchyserve::network::bandwidth::LinkModel;
+    /// use branchyserve::planner::Planner;
+    /// use branchyserve::timing::DelayProfile;
+    ///
+    /// let desc = BranchyNetDesc {
+    ///     stage_names: vec!["conv1".into(), "conv2".into(), "fc".into()],
+    ///     stage_out_bytes: vec![40_000, 8_000, 8],
+    ///     input_bytes: 12_288,
+    ///     branches: vec![BranchDesc { after_stage: 1, exit_prob: 0.5 }],
+    /// };
+    /// let profile = DelayProfile::from_cloud_times(vec![1e-4, 2e-4, 5e-5], 2e-5, 100.0);
+    /// let base = Planner::new(&desc, &profile, 1e-9, false);
+    ///
+    /// // A sibling view for a class whose traffic exits 90% of the
+    /// // time: the expensive precompute is shared, only the cheap
+    /// // survival-weighted folds are re-derived.
+    /// let optimistic = base.with_exit_probs(&[0.9]);
+    /// assert!(base.shares_core_with(&optimistic));
+    /// assert!(!base.shares_view_with(&optimistic));
+    /// assert_eq!(optimistic.exit_probs(), vec![0.9]);
+    ///
+    /// // Both plan independently at their own p.
+    /// let link = LinkModel::new(5.85, 0.0);
+    /// let _plan = optimistic.plan_for(link);
+    /// assert_eq!(base.exit_probs(), vec![0.5], "base view untouched");
+    /// ```
     pub fn with_exit_probs(&self, probs: &[f64]) -> Planner {
         let view = ExitView::derive(&self.core, probs);
         Planner {
@@ -427,7 +458,7 @@ impl Planner {
         t
     }
 
-    /// E[T_inf] for a split after stage `split` under `link` — O(1),
+    /// `E[T_inf]` for a split after stage `split` under `link` — O(1),
     /// and bit-identical to `Estimator::expected_time` for the same
     /// mode and exit probabilities (same terms, same fold order).
     pub fn expected_time(&self, split: usize, link: LinkModel) -> f64 {

@@ -237,6 +237,50 @@ impl InferenceEngine {
         *self.manifest.batch_sizes.iter().max().unwrap()
     }
 
+    /// Smallest exported batch size that fits `n` samples (or the
+    /// largest exported size when `n` exceeds every export — callers
+    /// chunk to [`InferenceEngine::max_batch`] first). The bucket a
+    /// caller pads a partial batch up to before executing.
+    pub fn bucket_batch(&self, n: usize) -> usize {
+        self.manifest
+            .batch_sizes
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .unwrap_or_else(|| self.max_batch())
+    }
+
+    /// The shared cloud-suffix path: pad a batched activation of `n`
+    /// real samples to an exported batch size — chunking to
+    /// [`InferenceEngine::max_batch`] first when `n` exceeds every
+    /// export — run stages `from..=N`, and return one argmax class per
+    /// (unpadded) sample. Used by both the in-process cloud worker and
+    /// the remote cloud-stage server so the two execution paths cannot
+    /// drift (an oversized group must chunk, not panic, on either).
+    pub fn run_suffix_classes(
+        &self,
+        from: usize,
+        stacked: &HostTensor,
+        n: usize,
+    ) -> Result<Vec<usize>> {
+        let max_exec = self.max_batch();
+        if n <= max_exec {
+            let x = stacked.pad_batch(self.bucket_batch(n));
+            let out = self.run_stages(from, self.manifest.num_stages(), &x)?;
+            let mut classes = Self::argmax_classes(&out);
+            classes.truncate(n);
+            return Ok(classes);
+        }
+        let samples = stacked.unstack();
+        let mut classes = Vec::with_capacity(n);
+        for chunk in samples.chunks(max_exec) {
+            let restacked = HostTensor::stack(chunk)?;
+            classes.extend(self.run_suffix_classes(from, &restacked, chunk.len())?);
+        }
+        Ok(classes)
+    }
+
     /// Argmax class per sample of a (B, C) probability/logit tensor.
     pub fn argmax_classes(probs: &HostTensor) -> Vec<usize> {
         (0..probs.batch())
@@ -408,6 +452,10 @@ mod tests {
         assert_eq!(engine.warmup().unwrap(), 0.0);
         assert_eq!(engine.cached_count(), 3);
         assert_eq!(engine.max_batch(), 2);
+        assert_eq!(engine.bucket_batch(1), 1);
+        assert_eq!(engine.bucket_batch(2), 2);
+        // Beyond every export: callers chunk to max_batch first.
+        assert_eq!(engine.bucket_batch(3), 2);
 
         let x = HostTensor::new(vec![2, 4], vec![0.1, 0.9, 0.2, 0.8, 0.5, 0.5, 0.5, 0.5]).unwrap();
         let acts = engine.run_stages(1, 1, &x).unwrap();
@@ -421,5 +469,18 @@ mod tests {
         // Unexported batch size rejected before the backend runs.
         let bad = HostTensor::zeros(vec![3, 4]);
         assert!(engine.run_stages(1, 1, &bad).is_err());
+
+        // Shared cloud-suffix path: an oversized group (3 > max export
+        // 2) chunks instead of panicking, and each sample's class
+        // matches a singleton run.
+        let b3 =
+            HostTensor::new(vec![3, 4], (0..12).map(|i| i as f32 * 0.1).collect()).unwrap();
+        let classes = engine.run_suffix_classes(1, &b3, 3).unwrap();
+        assert_eq!(classes.len(), 3);
+        for (i, t) in b3.unstack().iter().enumerate() {
+            let one = HostTensor::stack(std::slice::from_ref(t)).unwrap();
+            let out = engine.run_stages(1, 2, &one).unwrap();
+            assert_eq!(classes[i], InferenceEngine::argmax_classes(&out)[0]);
+        }
     }
 }

@@ -1,0 +1,273 @@
+//! The remote cloud-stage server: the *other half* of a physically
+//! partitioned BranchyNet.
+//!
+//! A [`CloudStageServer`] owns one [`InferenceEngine`] over the full
+//! manifest but executes only what each INFER_PARTIAL frame asks for:
+//! the suffix stages `split+1..=N` of an activation batch the edge cut
+//! after stage `split`. It never needs the live partition plan — every
+//! frame carries its own cut (the same invariant the in-process
+//! coordinator relies on: transferred samples are stamped with the
+//! split they were cut at), so edge-side replanning, per-request
+//! overrides and mid-flight plan switches all work unchanged across
+//! machines.
+//!
+//! The side-branch gate stays on the edge: samples that exited early
+//! were answered there and never cross the wire, so this server runs
+//! main-branch stages only and reports `exited = false` for every
+//! sample. The `branch_state` byte it receives is recorded (gated vs
+//! ungated batches) for observability.
+//!
+//! Serve it behind the ordinary accept loop: it implements
+//! [`ServeBackend`], so `Server::new(Arc::new(css)).start_on(...)`
+//! gives you the wire front-end, and plain `INFER` frames still work
+//! (served as full cloud-only inference — a partial cut at `split = 0`
+//! in one hop).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::request::ExitPoint;
+use crate::coordinator::InferenceResponse;
+use crate::runtime::{HostTensor, InferenceEngine};
+
+use super::protocol::{BRANCH_GATED, PartialSample};
+use super::tcp::{PartialOutput, ServeBackend};
+
+/// A wire-facing backend that executes only the cloud suffix of the
+/// partition. See the [module docs](self) for the contract.
+pub struct CloudStageServer {
+    engine: InferenceEngine,
+    /// Partial batches served, indexed by the split they were cut at
+    /// (`0..N-1`; a cut at `N` is edge-only and never transfers).
+    splits_served: Vec<AtomicU64>,
+    partial_batches: AtomicU64,
+    partial_samples: AtomicU64,
+    /// Batches whose samples already passed the edge's branch gate.
+    gated_batches: AtomicU64,
+    /// Full (non-partial) INFER requests served.
+    full_infers: AtomicU64,
+    /// Rejected partial requests (bad split, empty batch, engine error).
+    errors: AtomicU64,
+    next_id: AtomicU64,
+    started: Instant,
+}
+
+impl CloudStageServer {
+    pub fn new(engine: InferenceEngine) -> CloudStageServer {
+        let n = engine.manifest().num_stages();
+        CloudStageServer {
+            splits_served: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            engine,
+            partial_batches: AtomicU64::new(0),
+            partial_samples: AtomicU64::new(0),
+            gated_batches: AtomicU64::new(0),
+            full_infers: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            next_id: AtomicU64::new(1),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn engine(&self) -> &InferenceEngine {
+        &self.engine
+    }
+
+    /// Per-split partial-batch counts: `counts[s]` is how many batches
+    /// arrived cut after stage `s`. The loopback integration test keys
+    /// on this to prove transfers happen exactly at the planned split.
+    pub fn splits_served(&self) -> Vec<u64> {
+        self.splits_served
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// (partial_batches, partial_samples, gated_batches, full_infers,
+    /// errors).
+    pub fn counters(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.partial_batches.load(Ordering::Relaxed),
+            self.partial_samples.load(Ordering::Relaxed),
+            self.gated_batches.load(Ordering::Relaxed),
+            self.full_infers.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+        )
+    }
+
+    /// The fallible body of [`ServeBackend::serve_partial`]; the trait
+    /// method wraps it to count rejections.
+    fn partial(
+        &self,
+        split: usize,
+        branch_state: u8,
+        activation: &HostTensor,
+    ) -> Result<PartialOutput> {
+        let num_stages = self.engine.manifest().num_stages();
+        if split >= num_stages {
+            bail!(
+                "split {split} leaves no cloud suffix (model has {num_stages} stages; \
+                 an edge-only cut never transfers)"
+            );
+        }
+        let n = activation.batch();
+        if n == 0 {
+            bail!("empty INFER_PARTIAL batch");
+        }
+        let t0 = Instant::now();
+        let classes = self.run_suffix(split + 1, activation)?;
+        let cloud_s = t0.elapsed().as_secs_f64();
+        self.partial_batches.fetch_add(1, Ordering::Relaxed);
+        self.partial_samples.fetch_add(n as u64, Ordering::Relaxed);
+        self.splits_served[split].fetch_add(1, Ordering::Relaxed);
+        if branch_state == BRANCH_GATED {
+            self.gated_batches.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(PartialOutput {
+            samples: classes
+                .into_iter()
+                .map(|class| PartialSample {
+                    class: class as u32,
+                    exited: false,
+                    entropy: 0.0,
+                })
+                .collect(),
+            cloud_s,
+        })
+    }
+
+    /// Run `from..=N` on a batch and return one argmax class per input
+    /// sample — a thin front for [`InferenceEngine::run_suffix_classes`]
+    /// (pad + chunk + argmax), shared with the in-process cloud worker.
+    fn run_suffix(&self, from: usize, activation: &HostTensor) -> Result<Vec<usize>> {
+        self.engine
+            .run_suffix_classes(from, activation, activation.batch())
+    }
+}
+
+impl ServeBackend for CloudStageServer {
+    /// A plain INFER against the cloud-stage server is full cloud-only
+    /// inference: the degenerate `split = 0` partial in one hop.
+    fn serve_infer(&self, _class: Option<u8>, image: HostTensor) -> Result<InferenceResponse> {
+        let t0 = Instant::now();
+        let batched = HostTensor::stack(std::slice::from_ref(&image))?;
+        let classes = self.run_suffix(1, &batched)?;
+        self.full_infers.fetch_add(1, Ordering::Relaxed);
+        let cloud_s = t0.elapsed().as_secs_f64();
+        Ok(InferenceResponse {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            class: classes[0],
+            exit: ExitPoint::MainOutput,
+            entropy: f32::NAN,
+            latency_s: cloud_s,
+            edge_s: 0.0,
+            transfer_s: 0.0,
+            cloud_s,
+        })
+    }
+
+    fn serve_partial(
+        &self,
+        split: usize,
+        branch_state: u8,
+        activation: HostTensor,
+    ) -> Result<PartialOutput> {
+        let result = self.partial(split, branch_state, &activation);
+        if result.is_err() {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        result
+    }
+
+    fn metrics_json(&self) -> String {
+        let (batches, samples, gated, full, errors) = self.counters();
+        let splits = self
+            .splits_served()
+            .iter()
+            .map(u64::to_string)
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{\"partial_batches\":{batches},\"partial_samples\":{samples},\
+             \"gated_batches\":{gated},\"full_infers\":{full},\"errors\":{errors},\
+             \"splits_served\":[{splits}],\"uptime_s\":{:.3}}}",
+            self.started.elapsed().as_secs_f64()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+
+    fn server() -> CloudStageServer {
+        let manifest =
+            Manifest::synthetic_sim("sim-cloud", vec![4], &[16, 8, 2], 1, 2, vec![1, 2, 4])
+                .unwrap();
+        let engine = InferenceEngine::open_sim(manifest, "cloud-test").unwrap();
+        CloudStageServer::new(engine)
+    }
+
+    #[test]
+    fn partial_suffix_matches_direct_engine_run() {
+        let srv = server();
+        // A batch of 3 (not an exported size: exercises pad + truncate)
+        // cut after stage 1: activations are stage-1 outputs, shape [3, 16].
+        let input = HostTensor::new(
+            vec![3, 4],
+            vec![0.1, -0.2, 0.3, 0.4, 1.0, 0.0, -1.0, 0.5, 0.7, 0.7, 0.7, 0.7],
+        )
+        .unwrap();
+        let padded = input.pad_batch(4);
+        let acts = srv.engine().run_stages(1, 1, &padded).unwrap().take_batch(3);
+
+        let out = srv.serve_partial(1, BRANCH_GATED, acts.clone()).unwrap();
+        assert_eq!(out.samples.len(), 3);
+        assert!(out.samples.iter().all(|s| !s.exited));
+
+        // Oracle: the engine run straight through.
+        let full = srv.engine().run_stages(2, 3, &acts.pad_batch(4)).unwrap();
+        let want = InferenceEngine::argmax_classes(&full);
+        for (s, w) in out.samples.iter().zip(&want) {
+            assert_eq!(s.class as usize, *w);
+        }
+
+        assert_eq!(srv.splits_served(), vec![0, 1, 0]);
+        let (batches, samples, gated, _, errors) = srv.counters();
+        assert_eq!((batches, samples, gated, errors), (1, 3, 1, 0));
+    }
+
+    #[test]
+    fn rejects_edge_only_and_empty_batches() {
+        let srv = server();
+        // split = N: nothing left to run in the cloud.
+        let t = HostTensor::zeros(vec![1, 2]);
+        assert!(srv.serve_partial(3, BRANCH_GATED, t).is_err());
+        // Out-of-range split.
+        let t = HostTensor::zeros(vec![1, 2]);
+        assert!(srv.serve_partial(9, BRANCH_GATED, t).is_err());
+        // Empty batch.
+        let t = HostTensor::zeros(vec![0, 4]);
+        assert!(srv.serve_partial(0, BRANCH_GATED, t).is_err());
+        let (_, _, _, _, errors) = srv.counters();
+        assert_eq!(errors, 3);
+        assert_eq!(srv.splits_served(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn serve_infer_is_cloud_only_full_inference() {
+        let srv = server();
+        let img = HostTensor::new(vec![4], vec![0.3, -0.1, 0.8, 0.2]).unwrap();
+        let r = srv.serve_infer(None, img.clone()).unwrap();
+        assert!(r.class < 2);
+        // Oracle: full run on a batch of one.
+        let batched = HostTensor::stack(&[img]).unwrap();
+        let out = srv.engine().run_stages(1, 3, &batched).unwrap();
+        assert_eq!(r.class, InferenceEngine::argmax_classes(&out)[0]);
+        let (_, _, _, full, _) = srv.counters();
+        assert_eq!(full, 1);
+        assert!(srv.metrics_json().contains("\"full_infers\":1"));
+    }
+}

@@ -1,12 +1,33 @@
-//! TCP serving front-end: a length-prefixed binary protocol over std
-//! TcpListener (tokio is unavailable offline; a thread-per-connection
+//! The wire layer: a length-prefixed binary protocol over std
+//! `TcpListener` (tokio is unavailable offline; a thread-per-connection
 //! accept loop in front of the coordinator's own batching pipeline is
-//! fully adequate for this workload). The accept loop is generic over
-//! [`ServeBackend`], so the same wire front-end serves a single
-//! coordinator pipeline or a multi-class fleet.
+//! fully adequate for this workload), and both halves of a physically
+//! partitioned deployment speaking it.
+//!
+//! * [`protocol`] — the frame format: PING / INFER / INFER_CLASS /
+//!   METRICS plus the partial-inference pair (INFER_PARTIAL →
+//!   PARTIAL_RESULT) that carries cut activations between machines.
+//! * [`tcp`] — the accept loop, generic over [`ServeBackend`], so the
+//!   same front-end serves a single coordinator pipeline, a multi-class
+//!   fleet, or a cloud-stage server; plus the blocking [`Client`].
+//! * [`cloud`] — [`CloudStageServer`]: executes only the suffix stages
+//!   `split+1..=N` of each INFER_PARTIAL frame. Every frame carries its
+//!   own cut, so the server never needs the live partition plan.
+//! * [`remote`] — [`RemoteCloudEngine`]: the edge-side client the
+//!   coordinator's cloud workers call instead of an in-process engine
+//!   (pooled connections, reconnect with backoff, in-flight cap; the
+//!   coordinator falls back to local execution when it fails).
+//!
+//! One binary plays either role: `branchyserve serve --cloud-addr
+//! HOST:PORT` runs the edge half against `branchyserve cloud-serve` on
+//! another machine.
 
+pub mod cloud;
 pub mod protocol;
+pub mod remote;
 pub mod tcp;
 
-pub use protocol::{Request, Response};
-pub use tcp::{Client, ServeBackend, Server, ServerHandle};
+pub use cloud::CloudStageServer;
+pub use protocol::{PartialSample, Request, Response};
+pub use remote::{RemoteCloudConfig, RemoteCloudEngine, RemoteCloudStats};
+pub use tcp::{Client, PartialOutput, ServeBackend, Server, ServerHandle};

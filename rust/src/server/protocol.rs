@@ -1,22 +1,37 @@
 //! Wire protocol: little-endian, length-prefixed frames.
 //!
+//! ```text
 //! Frame layout (both directions):
 //!   u32 magic "BSV1" (0x31565342) | u32 body_len | body
 //!
 //! Request body:  u8 kind | payload
-//!   kind 0 PING        — empty payload
-//!   kind 1 INFER       — u32 ndims | u32 dims[ndims] | f32 data[prod(dims)]
-//!   kind 2 METRICS     — empty payload
-//!   kind 3 INFER_CLASS — u8 link_class | u32 ndims | u32 dims[ndims] |
-//!                        f32 data[prod(dims)]
-//!                        (link_class indexes the fleet's class registry;
-//!                        kind 1 is equivalent to class 0)
+//!   kind 0 PING          — empty payload
+//!   kind 1 INFER         — u32 ndims | u32 dims[ndims] | f32 data[prod(dims)]
+//!   kind 2 METRICS       — empty payload
+//!   kind 3 INFER_CLASS   — u8 link_class | u32 ndims | u32 dims[ndims] |
+//!                          f32 data[prod(dims)]
+//!                          (link_class indexes the fleet's class registry;
+//!                          kind 1 is equivalent to class 0)
+//!   kind 4 INFER_PARTIAL — u32 split | u8 branch_state | u32 ndims |
+//!                          u32 dims[ndims] | f32 data[prod(dims)]
+//!                          (edge→cloud offload: the tensor is a batched
+//!                          activation cut after stage `split`; the server
+//!                          runs stages split+1..=N. branch_state: 0 = the
+//!                          side-branch gate never ran for these samples
+//!                          (inactive under the cut plan), 1 = it ran on
+//!                          the edge and every sample here survived)
 //! Response body: u8 kind | payload
-//!   kind 0 PONG    — empty
-//!   kind 1 RESULT  — u64 id | u32 class | u8 exited | f32 entropy |
-//!                    f64 latency_s
-//!   kind 2 METRICS — u32 len | JSON bytes
-//!   kind 255 ERROR — u32 len | UTF-8 message
+//!   kind 0 PONG           — empty
+//!   kind 1 RESULT         — u64 id | u32 class | u8 exited | f32 entropy |
+//!                           f64 latency_s
+//!   kind 2 METRICS        — u32 len | JSON bytes
+//!   kind 3 PARTIAL_RESULT — u32 n | n × (u32 class | u8 exited |
+//!                           f32 entropy) | f64 cloud_s
+//!                           (one record per sample of the INFER_PARTIAL
+//!                           batch, in order; cloud_s is the server-side
+//!                           compute time for the whole batch)
+//!   kind 255 ERROR        — u32 len | UTF-8 message
+//! ```
 
 use std::io::{Read, Write};
 
@@ -28,6 +43,29 @@ pub const MAGIC: u32 = 0x3156_5342; // "BSV1" LE
 /// Sanity cap on frame size (64 MiB) — rejects garbage/hostile lengths.
 pub const MAX_BODY: u32 = 64 << 20;
 
+/// `branch_state`: the side-branch gate has not been evaluated for the
+/// samples in this INFER_PARTIAL frame (the cut plan kept it inactive).
+pub const BRANCH_PENDING: u8 = 0;
+/// `branch_state`: the gate ran on the edge and every sample survived
+/// (exited samples were answered there and never cross the wire).
+pub const BRANCH_GATED: u8 = 1;
+
+/// Sanity cap on PARTIAL_RESULT record counts (a batch never remotely
+/// approaches this; rejects hostile lengths before allocation).
+const MAX_PARTIAL_SAMPLES: usize = 65_536;
+
+/// One sample's outcome in a PARTIAL_RESULT frame. `exited`/`entropy`
+/// are meaningful only when the server itself gated the sample (today's
+/// suffix-only [`super::CloudStageServer`] never does: `exited` is
+/// always false and `entropy` 0.0 — the edge keeps the authoritative
+/// entropy it measured at the gate).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartialSample {
+    pub class: u32,
+    pub exited: bool,
+    pub entropy: f32,
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Ping,
@@ -36,6 +74,15 @@ pub enum Request {
     Metrics,
     /// Inference tagged with the client's link class (fleet routing).
     InferClass { class: u8, image: HostTensor },
+    /// Partial inference (edge→cloud offload): `activation` is a batched
+    /// tensor cut after stage `split`; the server runs the suffix
+    /// `split+1..=N`. `branch_state` is [`BRANCH_PENDING`] or
+    /// [`BRANCH_GATED`].
+    InferPartial {
+        split: u32,
+        branch_state: u8,
+        activation: HostTensor,
+    },
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -49,6 +96,12 @@ pub enum Response {
         latency_s: f64,
     },
     Metrics(String),
+    /// One record per sample of an INFER_PARTIAL batch, in order, plus
+    /// the server-side compute seconds for the whole batch.
+    PartialResult {
+        samples: Vec<PartialSample>,
+        cloud_s: f64,
+    },
     Error(String),
 }
 
@@ -128,6 +181,18 @@ fn take_tensor(rest: &[u8]) -> Result<HostTensor> {
     HostTensor::new(shape, data)
 }
 
+/// Encode an INFER_PARTIAL request body straight from a borrowed
+/// tensor. The remote cloud client's hot path uses this to avoid
+/// cloning the batched activation into an owned [`Request`] first;
+/// `Request::encode` delegates here so the two can't drift.
+pub fn encode_infer_partial(split: u32, branch_state: u8, activation: &HostTensor) -> Vec<u8> {
+    let mut b = vec![4u8];
+    put_u32(&mut b, split);
+    b.push(branch_state);
+    put_tensor(&mut b, activation);
+    b
+}
+
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Vec::new();
@@ -142,6 +207,13 @@ impl Request {
                 b.push(3);
                 b.push(*class);
                 put_tensor(&mut b, image);
+            }
+            Request::InferPartial {
+                split,
+                branch_state,
+                activation,
+            } => {
+                return encode_infer_partial(*split, *branch_state, activation);
             }
         }
         b
@@ -160,6 +232,21 @@ impl Request {
                 Ok(Request::InferClass {
                     class,
                     image: take_tensor(rest)?,
+                })
+            }
+            4 => {
+                if rest.len() < 5 {
+                    bail!("truncated INFER_PARTIAL header");
+                }
+                let split = u32::from_le_bytes(rest[0..4].try_into().unwrap());
+                let branch_state = rest[4];
+                if branch_state > BRANCH_GATED {
+                    bail!("invalid branch_state {branch_state}");
+                }
+                Ok(Request::InferPartial {
+                    split,
+                    branch_state,
+                    activation: take_tensor(&rest[5..])?,
                 })
             }
             k => bail!("unknown request kind {k}"),
@@ -191,6 +278,16 @@ impl Response {
                 put_u32(&mut b, json.len() as u32);
                 b.extend_from_slice(json.as_bytes());
             }
+            Response::PartialResult { samples, cloud_s } => {
+                b.push(3);
+                put_u32(&mut b, samples.len() as u32);
+                for s in samples {
+                    put_u32(&mut b, s.class);
+                    b.push(u8::from(s.exited));
+                    b.extend_from_slice(&s.entropy.to_le_bytes());
+                }
+                b.extend_from_slice(&cloud_s.to_le_bytes());
+            }
             Response::Error(msg) => {
                 b.push(255);
                 put_u32(&mut b, msg.len() as u32);
@@ -215,6 +312,36 @@ impl Response {
                     entropy: f32::from_le_bytes(rest[13..17].try_into().unwrap()),
                     latency_s: f64::from_le_bytes(rest[17..25].try_into().unwrap()),
                 })
+            }
+            3 => {
+                if rest.len() < 4 {
+                    bail!("truncated PARTIAL_RESULT header");
+                }
+                let n = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+                if n > MAX_PARTIAL_SAMPLES {
+                    bail!("PARTIAL_RESULT sample count {n} exceeds cap");
+                }
+                // 9 bytes per record (u32 class | u8 exited | f32 entropy)
+                // plus the trailing f64 cloud_s.
+                if rest.len() != 4 + n * 9 + 8 {
+                    bail!("bad PARTIAL_RESULT length {} for {n} samples", rest.len());
+                }
+                let mut samples = Vec::with_capacity(n);
+                for r in rest[4..4 + n * 9].chunks_exact(9) {
+                    let exited = match r[4] {
+                        0 => false,
+                        1 => true,
+                        v => bail!("invalid exited flag {v}"),
+                    };
+                    samples.push(PartialSample {
+                        class: u32::from_le_bytes(r[0..4].try_into().unwrap()),
+                        exited,
+                        entropy: f32::from_le_bytes(r[5..9].try_into().unwrap()),
+                    });
+                }
+                let cloud_s =
+                    f64::from_le_bytes(rest[4 + n * 9..].try_into().unwrap());
+                Ok(Response::PartialResult { samples, cloud_s })
             }
             2 | 255 => {
                 if rest.len() < 4 {
@@ -315,6 +442,101 @@ mod tests {
         put_u32(&mut hostile, MAGIC);
         put_u32(&mut hostile, u32::MAX);
         assert!(read_frame(&mut std::io::Cursor::new(hostile)).is_err());
+    }
+
+    #[test]
+    fn partial_request_roundtrips() {
+        let t = HostTensor::new(vec![2, 3], vec![1., -2., 3.5, 0., 5., 6.]).unwrap();
+        for (split, state) in [(0u32, BRANCH_PENDING), (3, BRANCH_GATED), (17, BRANCH_GATED)] {
+            let req = Request::InferPartial {
+                split,
+                branch_state: state,
+                activation: t.clone(),
+            };
+            assert_eq!(roundtrip_req(&req), req);
+        }
+        // The split and branch state must change the wire bytes.
+        let a = Request::InferPartial {
+            split: 1,
+            branch_state: BRANCH_PENDING,
+            activation: t.clone(),
+        };
+        let b = Request::InferPartial {
+            split: 2,
+            branch_state: BRANCH_PENDING,
+            activation: t.clone(),
+        };
+        let c = Request::InferPartial {
+            split: 1,
+            branch_state: BRANCH_GATED,
+            activation: t.clone(),
+        };
+        assert_ne!(a.encode(), b.encode());
+        assert_ne!(a.encode(), c.encode());
+
+        // Truncated header / invalid branch state / truncated tensor.
+        assert!(Request::decode(&[4]).is_err());
+        assert!(Request::decode(&[4, 1, 0, 0, 0]).is_err());
+        assert!(Request::decode(&[4, 1, 0, 0, 0, 2, 1, 0, 0, 0]).is_err());
+        let mut trunc = a.encode();
+        trunc.truncate(trunc.len() - 1);
+        assert!(Request::decode(&trunc).is_err());
+    }
+
+    #[test]
+    fn partial_result_roundtrips() {
+        let empty = Response::PartialResult {
+            samples: vec![],
+            cloud_s: 0.0,
+        };
+        assert_eq!(roundtrip_resp(&empty), empty);
+        let r = Response::PartialResult {
+            samples: vec![
+                PartialSample {
+                    class: 1,
+                    exited: false,
+                    entropy: 0.0,
+                },
+                PartialSample {
+                    class: 0,
+                    exited: true,
+                    entropy: 0.125,
+                },
+            ],
+            cloud_s: 0.0042,
+        };
+        assert_eq!(roundtrip_resp(&r), r);
+    }
+
+    #[test]
+    fn partial_result_rejects_malformed_bodies() {
+        // Truncated header.
+        assert!(Response::decode(&[3]).is_err());
+        assert!(Response::decode(&[3, 1, 0]).is_err());
+        // Count/body length mismatch (claims 2 samples, carries 1).
+        let one = Response::PartialResult {
+            samples: vec![PartialSample {
+                class: 7,
+                exited: false,
+                entropy: 0.5,
+            }],
+            cloud_s: 1.0,
+        };
+        let mut body = one.encode();
+        body[1..5].copy_from_slice(&2u32.to_le_bytes());
+        assert!(Response::decode(&body).is_err());
+        // Hostile sample count: rejected before allocation.
+        let mut hostile = vec![3u8];
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Response::decode(&hostile).is_err());
+        // Invalid exited flag.
+        let mut bad = one.encode();
+        bad[9] = 7; // kind | u32 n | u32 class | exited byte
+        assert!(Response::decode(&bad).is_err());
+        // Truncated tail (missing part of cloud_s).
+        let mut trunc = one.encode();
+        trunc.truncate(trunc.len() - 3);
+        assert!(Response::decode(&trunc).is_err());
     }
 
     #[test]

@@ -1,0 +1,520 @@
+//! The remote cloud engine: the edge side of a physically partitioned
+//! deployment.
+//!
+//! A [`RemoteCloudEngine`] turns a [`super::CloudStageServer`] across
+//! the network into something the coordinator's cloud workers can call
+//! like a local engine: it ships each transferred split-group as one
+//! INFER_PARTIAL frame and returns the server's per-sample classes and
+//! compute time. It is deliberately dumb about *planning* — every frame
+//! carries its own cut, so it never needs the live partition plan.
+//!
+//! Failure posture (the edge must keep serving when the cloud is not
+//! reachable — the caller falls back to local execution):
+//!
+//! * **Pooled connections** — idle `TcpStream`s are reused across
+//!   batches (one in-flight request per connection; the pool grows on
+//!   demand up to `pool_capacity` idle entries).
+//! * **Reconnect with backoff** — after a connect/IO failure the engine
+//!   fast-fails every call until the backoff window expires
+//!   (exponential from `backoff_initial` to `backoff_max`, reset on the
+//!   first success), so a dead cloud costs the serving path one failed
+//!   connect per window instead of one per batch.
+//! * **In-flight cap** — at most `max_inflight` concurrent requests;
+//!   calls beyond the cap fail immediately (and the caller runs the
+//!   batch locally) rather than queueing behind a slow remote.
+//! * **Rejection breaker** — a healthy link that keeps answering with
+//!   application ERROR frames (wrong server kind, mismatched model) is
+//!   a misconfiguration, not a transient: after
+//!   [`REJECTION_BREAKER`] consecutive rejections the engine enters a
+//!   `backoff_max` window too, so a misconfigured cloud doesn't cost a
+//!   full tensor round-trip per batch forever.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::HostTensor;
+
+use super::protocol::{encode_infer_partial, read_frame, write_frame, Request, Response};
+use super::tcp::PartialOutput;
+
+#[derive(Debug, Clone)]
+pub struct RemoteCloudConfig {
+    /// `HOST:PORT` of the cloud-stage server.
+    pub addr: String,
+    /// Max concurrent requests; calls beyond this fail fast (the
+    /// coordinator then executes the batch on the local fallback).
+    pub max_inflight: usize,
+    /// Idle connections kept for reuse.
+    pub pool_capacity: usize,
+    pub connect_timeout: Duration,
+    /// Per-call read/write timeout — must cover the server's compute
+    /// time for one batch.
+    pub io_timeout: Duration,
+    pub backoff_initial: Duration,
+    pub backoff_max: Duration,
+}
+
+impl RemoteCloudConfig {
+    pub fn new(addr: impl Into<String>) -> RemoteCloudConfig {
+        RemoteCloudConfig {
+            addr: addr.into(),
+            max_inflight: 8,
+            pool_capacity: 8,
+            connect_timeout: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(30),
+            backoff_initial: Duration::from_millis(100),
+            backoff_max: Duration::from_secs(5),
+        }
+    }
+}
+
+/// One pooled connection. The reader/writer pair persists with the
+/// stream: the protocol is strict request/response with a single
+/// outstanding call per connection, so buffered read-ahead can never
+/// swallow another call's bytes.
+struct PooledConn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+/// Consecutive application-level ERROR frames after which the engine
+/// backs off as if the link had failed — the server is reachable but
+/// persistently rejecting (wrong server kind, mismatched model), and
+/// shipping a full activation per batch to learn that again is waste.
+pub const REJECTION_BREAKER: u32 = 3;
+
+#[derive(Debug, Default)]
+struct Backoff {
+    until: Option<Instant>,
+    consecutive: u32,
+    /// Consecutive application-level rejections (ERROR frames).
+    rejections: u32,
+}
+
+/// Counters for observability; all monotonic.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RemoteCloudStats {
+    /// INFER_PARTIAL round-trips attempted (excludes fast-fails).
+    pub requests: u64,
+    /// Connect/IO/protocol failures.
+    pub failures: u64,
+    /// Calls rejected without touching the network (backoff window).
+    pub fast_fails: u64,
+    /// Calls rejected at the in-flight cap.
+    pub saturated: u64,
+    /// TCP connections established (reconnects included).
+    pub connects: u64,
+    /// Calls whose pooled connection had died idle and were retried on
+    /// a freshly dialed one (not failures — the retry usually wins).
+    pub stale_retries: u64,
+}
+
+pub struct RemoteCloudEngine {
+    cfg: RemoteCloudConfig,
+    pool: Mutex<Vec<PooledConn>>,
+    inflight: AtomicUsize,
+    backoff: Mutex<Backoff>,
+    requests: AtomicU64,
+    failures: AtomicU64,
+    fast_fails: AtomicU64,
+    saturated: AtomicU64,
+    connects: AtomicU64,
+    stale_retries: AtomicU64,
+}
+
+/// RAII release of one in-flight slot.
+struct InflightGuard<'a>(&'a AtomicUsize);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl RemoteCloudEngine {
+    /// Construction is lazy: no connection is attempted until the first
+    /// call, so an edge node starts (and serves, via local fallback)
+    /// while its cloud is still down.
+    pub fn new(mut cfg: RemoteCloudConfig) -> RemoteCloudEngine {
+        cfg.max_inflight = cfg.max_inflight.max(1);
+        cfg.pool_capacity = cfg.pool_capacity.max(1);
+        RemoteCloudEngine {
+            cfg,
+            pool: Mutex::new(Vec::new()),
+            inflight: AtomicUsize::new(0),
+            backoff: Mutex::new(Backoff::default()),
+            requests: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            fast_fails: AtomicU64::new(0),
+            saturated: AtomicU64::new(0),
+            connects: AtomicU64::new(0),
+            stale_retries: AtomicU64::new(0),
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.cfg.addr
+    }
+
+    pub fn stats(&self) -> RemoteCloudStats {
+        RemoteCloudStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
+            fast_fails: self.fast_fails.load(Ordering::Relaxed),
+            saturated: self.saturated.load(Ordering::Relaxed),
+            connects: self.connects.load(Ordering::Relaxed),
+            stale_retries: self.stale_retries.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Round-trip a PING (health probe; used at startup for a loud
+    /// "cloud reachable/unreachable" log line). Subject to the same
+    /// backoff bookkeeping as inference calls.
+    pub fn ping(&self) -> Result<()> {
+        let (mut conn, _pooled) = match self.checkout() {
+            Ok(c) => c,
+            Err(e) => {
+                self.note_failure();
+                return Err(e);
+            }
+        };
+        match Self::call(&mut conn, &Request::Ping) {
+            Ok(Response::Pong) => {
+                self.note_success();
+                self.checkin(conn);
+                Ok(())
+            }
+            Ok(other) => {
+                self.note_failure();
+                bail!("expected PONG, got {other:?}")
+            }
+            Err(e) => {
+                self.note_failure();
+                Err(e)
+            }
+        }
+    }
+
+    /// Ship one split-group to the cloud-stage server: run stages
+    /// `split+1..=N` on `activation` (a batched tensor cut after stage
+    /// `split`) and return one record per sample. Fails fast when the
+    /// engine is in backoff or at the in-flight cap — the caller is
+    /// expected to fall back to local execution.
+    pub fn infer_partial(
+        &self,
+        split: usize,
+        branch_state: u8,
+        activation: &HostTensor,
+    ) -> Result<PartialOutput> {
+        if let Some(remaining) = self.backoff_remaining() {
+            self.fast_fails.fetch_add(1, Ordering::Relaxed);
+            bail!(
+                "cloud backend {} in backoff for another {remaining:.0?}",
+                self.cfg.addr
+            );
+        }
+        if !self.try_acquire() {
+            self.saturated.fetch_add(1, Ordering::Relaxed);
+            bail!(
+                "cloud backend {} saturated ({} requests in flight)",
+                self.cfg.addr,
+                self.cfg.max_inflight
+            );
+        }
+        let _slot = InflightGuard(&self.inflight);
+
+        let (mut conn, mut pooled) = match self.checkout() {
+            Ok(c) => c,
+            Err(e) => {
+                self.note_failure();
+                return Err(e);
+            }
+        };
+        // Encoded once, straight from the borrowed tensor — no owned
+        // Request, no activation clone on the hot path.
+        let body = encode_infer_partial(split as u32, branch_state, activation);
+        loop {
+            self.requests.fetch_add(1, Ordering::Relaxed);
+            match Self::call_raw(&mut conn, &body) {
+                Ok(Response::PartialResult { samples, cloud_s }) => {
+                    self.note_success();
+                    self.checkin(conn);
+                    return Ok(PartialOutput { samples, cloud_s });
+                }
+                // An ERROR frame means the link is healthy but the
+                // server rejected the batch (bad split, engine error):
+                // keep the connection, report the failure up, and trip
+                // the rejection breaker if it keeps happening.
+                Ok(Response::Error(msg)) => {
+                    self.checkin(conn);
+                    self.note_rejection();
+                    bail!("cloud server rejected partial batch: {msg}")
+                }
+                Ok(other) => {
+                    self.note_failure();
+                    bail!("unexpected response to INFER_PARTIAL: {other:?}")
+                }
+                // A pooled stream may have died idle (server restart,
+                // NAT timeout) — that says nothing about the server's
+                // current health, so retry exactly once on a freshly
+                // dialed connection before declaring a failure.
+                Err(e) if pooled => {
+                    log::debug!("pooled cloud connection was stale ({e:#}); redialing");
+                    self.stale_retries.fetch_add(1, Ordering::Relaxed);
+                    drop(conn);
+                    conn = match self.dial() {
+                        Ok(c) => c,
+                        Err(de) => {
+                            self.note_failure();
+                            return Err(de);
+                        }
+                    };
+                    pooled = false;
+                }
+                Err(e) => {
+                    self.note_failure();
+                    return Err(
+                        e.context(format!("cloud round-trip to {} failed", self.cfg.addr))
+                    );
+                }
+            }
+        }
+    }
+
+    fn call(conn: &mut PooledConn, req: &Request) -> Result<Response> {
+        Self::call_raw(conn, &req.encode())
+    }
+
+    fn call_raw(conn: &mut PooledConn, body: &[u8]) -> Result<Response> {
+        write_frame(&mut conn.writer, body)?;
+        let reply = read_frame(&mut conn.reader)?;
+        Response::decode(&reply)
+    }
+
+    fn try_acquire(&self) -> bool {
+        self.inflight
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                (n < self.cfg.max_inflight).then_some(n + 1)
+            })
+            .is_ok()
+    }
+
+    /// Seconds left in the backoff window, if one is active.
+    fn backoff_remaining(&self) -> Option<Duration> {
+        let b = self.backoff.lock().unwrap();
+        let until = b.until?;
+        let now = Instant::now();
+        if now < until {
+            Some(until - now)
+        } else {
+            None
+        }
+    }
+
+    /// A connection to run one call on, and whether it came from the
+    /// idle pool (pooled streams may have died idle; the caller retries
+    /// those once on a fresh dial).
+    fn checkout(&self) -> Result<(PooledConn, bool)> {
+        if let Some(conn) = self.pool.lock().unwrap().pop() {
+            return Ok((conn, true));
+        }
+        Ok((self.dial()?, false))
+    }
+
+    /// Dial a fresh connection, trying every resolved address until one
+    /// connects — a dual-stack hostname must not strand the edge on an
+    /// IPv6 address when the cloud server only listens on IPv4 (or vice
+    /// versa).
+    fn dial(&self) -> Result<PooledConn> {
+        let addrs: Vec<SocketAddr> = self
+            .cfg
+            .addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving cloud address '{}'", self.cfg.addr))?
+            .collect();
+        if addrs.is_empty() {
+            bail!("cloud address '{}' resolved to nothing", self.cfg.addr);
+        }
+        let mut last_err = None;
+        for addr in &addrs {
+            match TcpStream::connect_timeout(addr, self.cfg.connect_timeout) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    stream.set_read_timeout(Some(self.cfg.io_timeout)).ok();
+                    stream.set_write_timeout(Some(self.cfg.io_timeout)).ok();
+                    self.connects.fetch_add(1, Ordering::Relaxed);
+                    return Ok(PooledConn {
+                        reader: BufReader::new(
+                            stream.try_clone().context("cloning cloud stream")?,
+                        ),
+                        writer: BufWriter::new(stream),
+                    });
+                }
+                Err(e) => last_err = Some((*addr, e)),
+            }
+        }
+        let (addr, e) = last_err.expect("addrs is non-empty");
+        Err(anyhow::Error::new(e).context(format!(
+            "connecting to cloud server {addr} ({} resolved address(es) tried)",
+            addrs.len()
+        )))
+    }
+
+    fn checkin(&self, conn: PooledConn) {
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < self.cfg.pool_capacity {
+            pool.push(conn);
+        }
+        // Beyond capacity: drop, closing the stream.
+    }
+
+    fn note_success(&self) {
+        let mut b = self.backoff.lock().unwrap();
+        b.consecutive = 0;
+        b.rejections = 0;
+        b.until = None;
+    }
+
+    /// The link round-tripped but the server answered ERROR. The
+    /// connection stays pooled and the failure counters stay untouched;
+    /// persistent rejection still engages a full backoff window so a
+    /// misconfigured cloud isn't paid for per batch.
+    fn note_rejection(&self) {
+        let mut b = self.backoff.lock().unwrap();
+        b.consecutive = 0;
+        b.rejections = b.rejections.saturating_add(1);
+        if b.rejections >= REJECTION_BREAKER {
+            log::warn!(
+                "cloud backend {} rejected {} consecutive batches; backing off {:?} \
+                 (is it a cloud-serve instance with the same model?)",
+                self.cfg.addr,
+                b.rejections,
+                self.cfg.backoff_max
+            );
+            b.until = Some(Instant::now() + self.cfg.backoff_max);
+        }
+    }
+
+    fn note_failure(&self) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+        // A failed connection is useless to siblings too: drop the idle
+        // pool so the next successful call starts from fresh streams.
+        self.pool.lock().unwrap().clear();
+        let mut b = self.backoff.lock().unwrap();
+        b.consecutive = b.consecutive.saturating_add(1);
+        // 100ms, 200ms, 400ms, ... capped at backoff_max.
+        let doublings = (b.consecutive - 1).min(6);
+        let delay = self
+            .cfg
+            .backoff_initial
+            .saturating_mul(1u32 << doublings)
+            .min(self.cfg.backoff_max);
+        b.until = Some(Instant::now() + delay);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use std::sync::Arc;
+
+    use crate::model::Manifest;
+    use crate::runtime::InferenceEngine;
+    use crate::server::cloud::CloudStageServer;
+    use crate::server::tcp::Server;
+
+    fn unreachable_engine() -> RemoteCloudEngine {
+        // Port 1 on loopback: connection refused immediately.
+        RemoteCloudEngine::new(RemoteCloudConfig {
+            backoff_initial: Duration::from_millis(50),
+            ..RemoteCloudConfig::new("127.0.0.1:1")
+        })
+    }
+
+    #[test]
+    fn dead_server_fails_then_backs_off() {
+        let eng = unreachable_engine();
+        let act = HostTensor::zeros(vec![1, 4]);
+        assert!(eng.infer_partial(0, 0, &act).is_err());
+        let s = eng.stats();
+        assert_eq!(s.failures, 1);
+        assert_eq!(s.requests, 0, "connect failed before any round-trip");
+
+        // Within the backoff window: fast-fail without touching the net.
+        assert!(eng.infer_partial(0, 0, &act).is_err());
+        assert_eq!(eng.stats().fast_fails, 1);
+        assert_eq!(eng.stats().failures, 1, "no second connect attempt");
+
+        // After the window expires the engine tries (and fails) again,
+        // doubling the backoff.
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(eng.infer_partial(0, 0, &act).is_err());
+        assert_eq!(eng.stats().failures, 2);
+    }
+
+    #[test]
+    fn unresolvable_host_is_an_error_not_a_panic() {
+        let eng = RemoteCloudEngine::new(RemoteCloudConfig::new("no.such.host.invalid:7879"));
+        let act = HostTensor::zeros(vec![1, 4]);
+        assert!(eng.infer_partial(0, 0, &act).is_err());
+        assert!(eng.stats().failures >= 1);
+    }
+
+    #[test]
+    fn stale_pooled_connection_retries_on_a_fresh_dial() {
+        let manifest =
+            Manifest::synthetic_sim("sim-stale", vec![4], &[16, 8, 2], 1, 2, vec![1, 2]).unwrap();
+        let css = Arc::new(CloudStageServer::new(
+            InferenceEngine::open_sim(manifest, "stale-srv").unwrap(),
+        ));
+        let handle = Server::new(css).start(0).unwrap();
+        let eng = RemoteCloudEngine::new(RemoteCloudConfig::new(handle.addr().to_string()));
+
+        // Poison the idle pool with a connection that has already died
+        // (the server-restart / NAT-timeout scenario).
+        {
+            let dead = TcpStream::connect(handle.addr()).unwrap();
+            dead.shutdown(std::net::Shutdown::Both).ok();
+            let conn = PooledConn {
+                reader: BufReader::new(dead.try_clone().unwrap()),
+                writer: BufWriter::new(dead),
+            };
+            eng.pool.lock().unwrap().push(conn);
+        }
+
+        // The call must survive via one fresh dial — no failure, no
+        // backoff, no fallback signal to the caller.
+        let act = HostTensor::zeros(vec![1, 4]);
+        let out = eng.infer_partial(0, 0, &act).unwrap();
+        assert_eq!(out.samples.len(), 1);
+        let s = eng.stats();
+        assert_eq!(s.stale_retries, 1);
+        assert_eq!(s.failures, 0, "a stale pooled stream is not a server failure");
+        assert_eq!(s.requests, 2, "one attempt on the stale conn, one fresh");
+        handle.stop();
+    }
+
+    #[test]
+    fn inflight_cap_rejects_excess_without_blocking() {
+        let eng = RemoteCloudEngine::new(RemoteCloudConfig {
+            max_inflight: 1,
+            ..RemoteCloudConfig::new("127.0.0.1:1")
+        });
+        // Hold the only slot, then observe the saturated fast-path.
+        assert!(eng.try_acquire());
+        let act = HostTensor::zeros(vec![1, 4]);
+        let err = eng.infer_partial(0, 0, &act).unwrap_err().to_string();
+        assert!(err.contains("saturated"), "{err}");
+        assert_eq!(eng.stats().saturated, 1);
+        eng.inflight.fetch_sub(1, Ordering::AcqRel);
+        // Slot released: the next call reaches the (dead) network path.
+        assert!(eng.infer_partial(0, 0, &act).is_err());
+        assert_eq!(eng.stats().failures, 1);
+    }
+}

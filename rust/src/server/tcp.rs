@@ -12,7 +12,15 @@ use anyhow::{Context, Result};
 use crate::coordinator::{Coordinator, InferenceResponse};
 use crate::runtime::HostTensor;
 
-use super::protocol::{read_frame, write_frame, Request, Response};
+use super::protocol::{read_frame, write_frame, PartialSample, Request, Response};
+
+/// What a backend returns for one INFER_PARTIAL batch: one record per
+/// input sample, in order, plus the backend's compute seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartialOutput {
+    pub samples: Vec<PartialSample>,
+    pub cloud_s: f64,
+}
 
 /// What the TCP front-end needs from whatever is serving behind it.
 pub trait ServeBackend: Send + Sync + 'static {
@@ -20,6 +28,21 @@ pub trait ServeBackend: Send + Sync + 'static {
     /// tag (`None` for an untagged legacy INFER); single-pipeline
     /// backends may ignore it.
     fn serve_infer(&self, class: Option<u8>, image: HostTensor) -> Result<InferenceResponse>;
+
+    /// Serve one INFER_PARTIAL batch: run stages `split+1..=N` on a
+    /// batched activation the edge cut after stage `split`. Only
+    /// cloud-stage backends ([`super::CloudStageServer`]) implement
+    /// this; edge-facing backends keep the default, which answers with
+    /// an ERROR frame.
+    fn serve_partial(
+        &self,
+        split: usize,
+        branch_state: u8,
+        activation: HostTensor,
+    ) -> Result<PartialOutput> {
+        let _ = (split, branch_state, activation);
+        anyhow::bail!("this backend does not serve partial inference (not a cloud-stage server)")
+    }
 
     /// JSON body of the METRICS response.
     fn metrics_json(&self) -> String;
@@ -66,10 +89,18 @@ impl<B: ServeBackend> Server<B> {
         Server { backend }
     }
 
-    /// Bind and serve in background threads. Port 0 picks a free port.
+    /// Bind loopback and serve in background threads. Port 0 picks a
+    /// free port. Use [`Server::start_on`] to serve other machines.
     pub fn start(self, port: u16) -> Result<ServerHandle> {
-        let listener =
-            TcpListener::bind(("127.0.0.1", port)).context("binding server socket")?;
+        self.start_on("127.0.0.1", port)
+    }
+
+    /// [`Server::start`] with an explicit bind address — `"0.0.0.0"`
+    /// accepts connections from other hosts (a cloud-stage server
+    /// fronting a remote edge needs this; loopback is the safe default
+    /// for single-machine serving).
+    pub fn start_on(self, bind: &str, port: u16) -> Result<ServerHandle> {
+        let listener = TcpListener::bind((bind, port)).context("binding server socket")?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         log::info!("serving on {addr}");
@@ -138,6 +169,17 @@ fn handle_connection(stream: TcpStream, backend: &impl ServeBackend) -> Result<(
             Ok(Request::InferClass { class, image }) => {
                 infer_response(backend, Some(class), image)
             }
+            Ok(Request::InferPartial {
+                split,
+                branch_state,
+                activation,
+            }) => match backend.serve_partial(split as usize, branch_state, activation) {
+                Ok(out) => Response::PartialResult {
+                    samples: out.samples,
+                    cloud_s: out.cloud_s,
+                },
+                Err(e) => Response::Error(format!("{e:#}")),
+            },
         };
         write_frame(&mut writer, &response.encode())?;
     }
@@ -179,5 +221,20 @@ impl Client {
     /// Inference tagged with the client's link class (fleet routing).
     pub fn infer_class(&mut self, class: u8, image: HostTensor) -> Result<Response> {
         self.call(&Request::InferClass { class, image })
+    }
+
+    /// Partial inference against a cloud-stage server: run stages
+    /// `split+1..=N` on a batched activation cut after stage `split`.
+    pub fn infer_partial(
+        &mut self,
+        split: u32,
+        branch_state: u8,
+        activation: HostTensor,
+    ) -> Result<Response> {
+        self.call(&Request::InferPartial {
+            split,
+            branch_state,
+            activation,
+        })
     }
 }

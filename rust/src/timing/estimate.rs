@@ -75,7 +75,7 @@ impl<'a> Estimator<'a> {
         self.desc.num_stages() + 1
     }
 
-    /// E[T_inf] for a split after stage `split` (0..=N).
+    /// `E[T_inf]` for a split after stage `split` (0..=N).
     pub fn expected_time(&self, split: usize) -> f64 {
         let n = self.desc.num_stages();
         assert!(split <= n, "split {split} out of range 0..={n}");

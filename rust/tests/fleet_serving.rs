@@ -402,6 +402,128 @@ fn per_request_planning_executes_instantaneous_link_splits() {
     assert!(c.aggregate.transferred_bytes > 0);
 }
 
+/// Exit-rate probing, mechanically: a fast uplink plans cloud-only per
+/// request (branch inactive), so with `probe_fraction = 0.5` every
+/// second request must be rerouted through the smallest branch-active
+/// split — observable as a real entropy in its response — while the
+/// rest execute their solved plan untouched.
+#[test]
+fn probe_fraction_routes_branch_active_overrides() {
+    let registry = ClassRegistry::single(ClassProfile::custom("fast", 100_000.0, 0.0).unwrap());
+    let fleet = start_fleet(
+        registry,
+        FleetConfig {
+            per_request_planning: true,
+            probe_fraction: 0.5,
+            ..fast_cfg()
+        },
+    );
+    let class = fleet.class_by_name("fast").unwrap();
+    let mut source = ImageSource::new(76);
+    let mut gated = 0;
+    for _ in 0..8 {
+        let r = fleet.infer_sync(class, source.sample().0).unwrap();
+        if !r.entropy.is_nan() {
+            gated += 1; // only probed samples see the branch gate
+        }
+        // Probed (split 2) and un-probed (cloud-only) samples both
+        // transfer — the probe split is still before the model's end.
+        assert!(r.transfer_s > 0.0, "sample skipped the uplink");
+    }
+    assert_eq!(gated, 4, "every 2nd branch-inactive plan must probe");
+
+    let report = fleet.shutdown();
+    let c = &report.classes[0];
+    assert_eq!(c.planner.probe_overrides, 4);
+    assert_eq!(
+        c.aggregate.plan_overrides, 8,
+        "probes ride on per-request overrides, they don't add new ones"
+    );
+    assert!(report.to_json().contains("\"probe_overrides\":4"), "{}", report.to_json());
+}
+
+/// The recovery story the ROADMAP asked for: a pessimistic prior plans
+/// cloud-only, so the branch gate never fires and p̂ would freeze at
+/// the prior forever — but the observed traffic actually exits almost
+/// always. Probes route a fraction of requests through a branch-active
+/// split, the estimator sees their exits, p̂ recovers *upward*, and the
+/// class's executed split moves to the high-p optimum.
+#[test]
+fn probing_lets_p_hat_recover_upward() {
+    let manifest = feedback_manifest();
+    let profile = feedback_profile();
+    let link = LinkModel::try_new(5.85, 0.0).unwrap();
+
+    // Preconditions from an independent planner: the prior (p = 0.05)
+    // plans cloud-only (branch inactive); the true behaviour (p high)
+    // plans split 2.
+    let prior = Planner::new(&manifest.to_desc(0.05), &profile, 1e-9, false);
+    assert!(prior.plan_for(link).is_cloud_only(), "fixture drifted");
+    let want = prior.with_exit_probs(&[0.9]).plan_for(link);
+    assert_eq!(want.split_after, 2, "fixture drifted: {want:?}");
+
+    let m = manifest.clone();
+    let fleet = Fleet::start(
+        ClassRegistry::single(ClassProfile::custom("mobile", 5.85, 0.0).unwrap()),
+        &manifest,
+        &profile,
+        FleetConfig {
+            default_exit_prob: 0.05,
+            entropy_threshold: 10.0, // everything that reaches the gate exits
+            per_request_planning: true,
+            probe_fraction: 0.25,
+            estimation: Some(EstimatorConfig {
+                alpha: 0.5,
+                drift_threshold: 0.25,
+                min_observations: 4,
+            }),
+            batch_timeout: Duration::from_millis(1),
+            real_time_channel: false,
+            ..Default::default()
+        },
+        move |label| {
+            Ok((
+                InferenceEngine::open_sim(m.clone(), &format!("{label}-e"))?,
+                InferenceEngine::open_sim(m.clone(), &format!("{label}-c"))?,
+            ))
+        },
+    )
+    .unwrap();
+    let class = fleet.class_by_name("mobile").unwrap();
+    assert!(fleet.plan_of(class).unwrap().is_cloud_only());
+
+    // 16 serial requests: every 4th branch-inactive plan is probed, its
+    // sample exits at the gate, and the 4th observation trips the drift
+    // gate (min_observations = 4) — rebuilding the view at p̂ and moving
+    // every shard's base plan. The rebuild runs synchronously on the
+    // edge worker, so later requests already execute the new split.
+    let mut source = ImageSource::new(77);
+    let mut exits = 0;
+    for _ in 0..16 {
+        let r = fleet.infer_sync(class, source.sample().0).unwrap();
+        if r.exited_early() {
+            exits += 1;
+        }
+    }
+    assert!(exits >= 4, "probes never reached the gate: {exits} exits");
+    let moved = fleet.plan_of(class).unwrap();
+    assert_eq!(
+        moved.split_after, want.split_after,
+        "executed split must follow p̂ up: {moved:?}"
+    );
+
+    let report = fleet.shutdown();
+    let p = &report.classes[0].planner;
+    assert!(p.probe_overrides >= 4, "{p:?}");
+    assert!(p.view_rebuilds >= 1, "{p:?}");
+    let p_hat = p.p_hat.expect("estimation was enabled");
+    assert!(p_hat > 0.5, "p̂ did not recover upward: {p_hat}");
+    assert!(
+        p.exit_prob_planned > 0.5,
+        "planned p still near the pessimistic prior: {p:?}"
+    );
+}
+
 #[test]
 fn tcp_front_end_routes_class_tags_to_the_fleet() {
     let fleet = Arc::new(start_fleet(slow_fast_registry(), fast_cfg()));

@@ -1,0 +1,307 @@
+//! Multi-host cloud offload over loopback: coordinators whose cloud
+//! workers speak INFER_PARTIAL to a [`CloudStageServer`] on a second
+//! listener. Proves (a) the edge half transfers exactly at the planned
+//! split, (b) end-to-end results are bit-identical to the in-process
+//! sim backend, (c) a dead remote falls back to local execution without
+//! dropping a single request, and (d) the fleet's `cloud_addr` wiring
+//! spans two listeners end to end. Runs entirely on the simulated
+//! runtime — no artifacts required.
+//!
+//! [`CloudStageServer`]: branchyserve::server::CloudStageServer
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use branchyserve::config::settings::Strategy;
+use branchyserve::coordinator::{CloudExec, Coordinator, CoordinatorConfig};
+use branchyserve::fleet::{ClassProfile, ClassRegistry, Fleet, FleetConfig};
+use branchyserve::model::Manifest;
+use branchyserve::network::{BandwidthTrace, Channel};
+use branchyserve::partition::PartitionPlan;
+use branchyserve::runtime::{HostTensor, InferenceEngine};
+use branchyserve::server::protocol::BRANCH_GATED;
+use branchyserve::server::{
+    Client, CloudStageServer, RemoteCloudConfig, RemoteCloudEngine, Response, Server,
+};
+use branchyserve::timing::DelayProfile;
+
+const N_STAGES: usize = 3;
+
+fn manifest() -> Manifest {
+    Manifest::synthetic_sim("sim-remote", vec![4], &[16, 8, 2], 1, 2, vec![1, 2, 4, 8]).unwrap()
+}
+
+fn channel() -> Arc<Channel> {
+    Arc::new(Channel::new(BandwidthTrace::constant(100.0), 0.0, 0.0, 1).simulated_time())
+}
+
+fn plan_at(m: &Manifest, split: usize) -> PartitionPlan {
+    PartitionPlan::from_split(split, 0.0, Strategy::ShortestPath, &m.to_desc(0.5))
+}
+
+fn cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        entropy_threshold: 0.0, // nothing exits: every sample crosses the wire
+        batch_timeout: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+fn images(n: usize) -> Vec<HostTensor> {
+    (0..n)
+        .map(|i| {
+            let base = i as f32 * 0.37 - 1.0;
+            HostTensor::new(vec![4], vec![base, base * -0.5, 0.25 + base, 1.0 - base]).unwrap()
+        })
+        .collect()
+}
+
+/// The acceptance test: edge coordinator + remote cloud-stage server on
+/// a second loopback listener produce bit-identical results to the
+/// in-process sim pipeline, with every transfer observed at the planned
+/// split and none anywhere else.
+#[test]
+fn loopback_cloud_matches_in_process_bit_for_bit() {
+    let m = manifest();
+    let split = 2; // branch (after stage 1) active; cloud runs stage 3
+
+    let css = Arc::new(CloudStageServer::new(
+        InferenceEngine::open_sim(m.clone(), "par-srv").unwrap(),
+    ));
+    let cloud_listener = Server::new(css.clone()).start(0).unwrap();
+
+    let remote = Arc::new(RemoteCloudEngine::new(RemoteCloudConfig::new(
+        cloud_listener.addr().to_string(),
+    )));
+    let remote_coord = Coordinator::start(
+        InferenceEngine::open_sim(m.clone(), "par-edge").unwrap(),
+        CloudExec::Remote {
+            remote: remote.clone(),
+            fallback: InferenceEngine::open_sim(m.clone(), "par-fb").unwrap(),
+        },
+        channel(),
+        plan_at(&m, split),
+        cfg(),
+    );
+
+    // Oracle: the ordinary in-process pipeline, same plan and threshold.
+    let local_coord = Coordinator::start(
+        InferenceEngine::open_sim(m.clone(), "par-ledge").unwrap(),
+        InferenceEngine::open_sim(m.clone(), "par-lcloud").unwrap(),
+        channel(),
+        plan_at(&m, split),
+        cfg(),
+    );
+
+    for img in images(12) {
+        let r = remote_coord.infer_sync(img.clone()).unwrap();
+        let l = local_coord.infer_sync(img).unwrap();
+        assert_eq!(r.class, l.class, "remote and in-process classes diverged");
+        assert_eq!(
+            r.entropy.to_bits(),
+            l.entropy.to_bits(),
+            "gate entropies diverged"
+        );
+        assert!(!r.exited_early() && !l.exited_early());
+        assert!(r.transfer_s > 0.0, "sample never crossed the uplink");
+    }
+
+    // Transfers happened exactly at the planned split — nowhere else.
+    let splits = css.splits_served();
+    assert!(splits[split] > 0, "{splits:?}");
+    for (s, &count) in splits.iter().enumerate() {
+        if s != split {
+            assert_eq!(count, 0, "unexpected transfer cut at split {s}: {splits:?}");
+        }
+    }
+    let (batches, samples, gated, _, errors) = css.counters();
+    assert_eq!(samples, 12);
+    assert_eq!(gated, batches, "split 2 > branch 1: every batch is pre-gated");
+    assert_eq!(errors, 0);
+
+    let rm = remote_coord.shutdown();
+    assert_eq!(rm.completed, 12);
+    assert_eq!(rm.remote_batches, batches);
+    assert_eq!(rm.remote_fallbacks, 0, "no fallback on a healthy loopback");
+    let stats = remote.stats();
+    assert_eq!(stats.requests, batches);
+    assert_eq!(stats.failures, 0);
+    assert!(stats.connects >= 1);
+
+    local_coord.shutdown();
+    cloud_listener.stop();
+}
+
+/// A dead cloud address: every request still completes, served by the
+/// local fallback engine with answers identical to a pure in-process
+/// pipeline, and the fallbacks are counted.
+#[test]
+fn dead_cloud_falls_back_to_local_execution() {
+    let m = manifest();
+    // Port 1 on loopback refuses immediately; short backoff keeps the
+    // test brisk while still exercising the fast-fail path.
+    let remote = Arc::new(RemoteCloudEngine::new(RemoteCloudConfig {
+        backoff_initial: Duration::from_millis(20),
+        ..RemoteCloudConfig::new("127.0.0.1:1")
+    }));
+    let coord = Coordinator::start(
+        InferenceEngine::open_sim(m.clone(), "fb-edge").unwrap(),
+        CloudExec::Remote {
+            remote: remote.clone(),
+            fallback: InferenceEngine::open_sim(m.clone(), "fb-cloud").unwrap(),
+        },
+        channel(),
+        plan_at(&m, 0), // cloud-only: every sample depends on the fallback
+        cfg(),
+    );
+    let local = Coordinator::start(
+        InferenceEngine::open_sim(m.clone(), "fb-ledge").unwrap(),
+        InferenceEngine::open_sim(m.clone(), "fb-lcloud").unwrap(),
+        channel(),
+        plan_at(&m, 0),
+        cfg(),
+    );
+
+    for img in images(6) {
+        let r = coord.infer_sync(img.clone()).unwrap();
+        let l = local.infer_sync(img).unwrap();
+        assert_eq!(r.class, l.class, "fallback answer diverged from local");
+        // Nothing crossed the wire and no simulated delay was slept:
+        // a fallback sample must not report a phantom transfer.
+        assert_eq!(r.transfer_s, 0.0, "{r:?}");
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed, 6, "a dead cloud must not drop requests");
+    assert_eq!(snap.remote_batches, 0);
+    assert!(snap.remote_fallbacks >= 1, "{snap:?}");
+    assert_eq!(snap.remote_fallbacks, snap.cloud_batches);
+    assert!(remote.stats().failures >= 1);
+    local.shutdown();
+}
+
+/// Raw wire-level INFER_PARTIAL against the cloud listener, plus the
+/// rejection paths: a suffix-less split gets an ERROR frame (connection
+/// stays usable), and an edge-facing backend refuses partials.
+#[test]
+fn wire_partial_roundtrip_and_rejections() {
+    let m = manifest();
+    let css = Arc::new(CloudStageServer::new(
+        InferenceEngine::open_sim(m.clone(), "wire-srv").unwrap(),
+    ));
+    let handle = Server::new(css.clone()).start(0).unwrap();
+    let mut client = Client::connect(handle.addr()).unwrap();
+    client.ping().unwrap();
+
+    // A batch of 2 stage-1 activations, computed on an oracle engine.
+    let probe = InferenceEngine::open_sim(m.clone(), "wire-probe").unwrap();
+    let x = HostTensor::new(vec![2, 4], vec![0.1, 0.9, -0.2, 0.8, 0.5, 0.5, 0.5, 0.5]).unwrap();
+    let acts = probe.run_stages(1, 1, &x).unwrap();
+    match client.infer_partial(1, BRANCH_GATED, acts.clone()).unwrap() {
+        Response::PartialResult { samples, cloud_s } => {
+            assert_eq!(samples.len(), 2);
+            assert!(cloud_s >= 0.0);
+            let out = probe.run_stages(2, N_STAGES, &acts).unwrap();
+            let want = InferenceEngine::argmax_classes(&out);
+            for (s, w) in samples.iter().zip(&want) {
+                assert_eq!(s.class as usize, *w);
+                assert!(!s.exited, "suffix-only server never gates");
+            }
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // split = N leaves no suffix: ERROR frame, connection survives.
+    match client
+        .infer_partial(N_STAGES as u32, BRANCH_GATED, HostTensor::zeros(vec![1, 2]))
+        .unwrap()
+    {
+        Response::Error(msg) => assert!(msg.contains("no cloud suffix"), "{msg}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    client.ping().unwrap();
+    handle.stop();
+
+    // An edge-facing backend (a coordinator) refuses INFER_PARTIAL.
+    let edge_coord = Arc::new(Coordinator::start(
+        InferenceEngine::open_sim(m.clone(), "wire-edge").unwrap(),
+        InferenceEngine::open_sim(m.clone(), "wire-cloud").unwrap(),
+        channel(),
+        plan_at(&m, N_STAGES),
+        cfg(),
+    ));
+    let edge_handle = Server::new(edge_coord).start(0).unwrap();
+    let mut client = Client::connect(edge_handle.addr()).unwrap();
+    match client
+        .infer_partial(1, BRANCH_GATED, HostTensor::zeros(vec![1, 16]))
+        .unwrap()
+    {
+        Response::Error(msg) => {
+            assert!(msg.contains("does not serve partial"), "{msg}")
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    edge_handle.stop();
+}
+
+/// The two-listener fleet deployment: wire client → edge TCP front-end
+/// → fleet shard → INFER_PARTIAL over loopback → cloud-stage listener.
+#[test]
+fn fleet_cloud_addr_offloads_over_the_wire() {
+    let m = manifest();
+    let css = Arc::new(CloudStageServer::new(
+        InferenceEngine::open_sim(m.clone(), "fl-srv").unwrap(),
+    ));
+    let cloud_listener = Server::new(css.clone()).start(0).unwrap();
+
+    let profile = DelayProfile::from_cloud_times(vec![1e-4; N_STAGES], 2e-5, 50.0);
+    let mc = m.clone();
+    let fleet = Arc::new(
+        Fleet::start(
+            // An effectively free uplink plans cloud-only: every sample
+            // crosses both listeners.
+            ClassRegistry::single(ClassProfile::custom("fast", 100_000.0, 0.0).unwrap()),
+            &m,
+            &profile,
+            FleetConfig {
+                cloud_addr: Some(cloud_listener.addr().to_string()),
+                entropy_threshold: 0.0,
+                batch_timeout: Duration::from_millis(1),
+                real_time_channel: false,
+                ..Default::default()
+            },
+            move |label| {
+                Ok((
+                    InferenceEngine::open_sim(mc.clone(), &format!("{label}-e"))?,
+                    InferenceEngine::open_sim(mc.clone(), &format!("{label}-c"))?,
+                ))
+            },
+        )
+        .unwrap(),
+    );
+    let class = fleet.class_by_name("fast").unwrap();
+    assert!(fleet.plan_of(class).unwrap().is_cloud_only());
+
+    let edge_listener = Server::new(fleet.clone()).start(0).unwrap();
+    let mut client = Client::connect(edge_listener.addr()).unwrap();
+    for img in images(6) {
+        match client.infer(img).unwrap() {
+            Response::Result { class, .. } => assert!(class < 2),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    drop(client);
+
+    let stats = fleet.remote_stats().expect("cloud_addr was configured");
+    assert!(stats.requests >= 1);
+    assert_eq!(stats.failures, 0);
+    assert!(css.splits_served()[0] > 0, "cloud-only cuts ship the raw input");
+
+    let report = fleet.report();
+    assert_eq!(report.total.completed, 6);
+    assert!(report.total.remote_batches >= 1);
+    assert_eq!(report.total.remote_fallbacks, 0);
+    assert!(report.total.transferred_bytes > 0);
+
+    edge_listener.stop();
+    cloud_listener.stop();
+}
