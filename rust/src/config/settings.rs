@@ -172,6 +172,58 @@ pub struct FleetSettings {
     /// cloud-serve`). When set, the serving fleet ships transferred
     /// activations there instead of running cloud stages in-process.
     pub cloud_addr: Option<String>,
+    /// Grow/shrink each class's shard group from observed load
+    /// (queue depth, admission rejections) between
+    /// `min_shards..=max_shards`; `shards` is the starting size.
+    pub autoscale: bool,
+    /// Autoscale floor (>= 1).
+    pub min_shards: usize,
+    /// Autoscale ceiling (<= 64).
+    pub max_shards: usize,
+    /// Mean admission-queue depth per shard that triggers a scale-up.
+    pub scale_up_depth: f64,
+    /// Mean depth per shard below which an idle class scales down
+    /// (must be < scale_up_depth; the gap is the hysteresis band).
+    pub scale_down_depth: f64,
+    /// Control-loop sampling tick, milliseconds.
+    pub scale_interval_ms: f64,
+    /// Samples aggregated into one scaling decision.
+    pub scale_window: usize,
+    /// Minimum time between two resizes of one class, milliseconds.
+    pub scale_cooldown_ms: f64,
+}
+
+impl FleetSettings {
+    /// Assemble the autoscaler's config from the `[fleet]` knobs,
+    /// validating as it goes (millisecond fields must be checked before
+    /// they become `Duration`s — a negative would panic there). Callers
+    /// gate on `self.autoscale` themselves; the CLI overlays
+    /// `--min-shards`/`--max-shards` on the result.
+    pub fn autoscale_config(&self) -> Result<crate::fleet::AutoscaleConfig> {
+        if !(self.scale_interval_ms.is_finite() && self.scale_interval_ms > 0.0) {
+            bail!(
+                "fleet.scale_interval_ms must be positive and finite; got {}",
+                self.scale_interval_ms
+            );
+        }
+        if !(self.scale_cooldown_ms.is_finite() && self.scale_cooldown_ms >= 0.0) {
+            bail!(
+                "fleet.scale_cooldown_ms must be non-negative and finite; got {}",
+                self.scale_cooldown_ms
+            );
+        }
+        let cfg = crate::fleet::AutoscaleConfig {
+            min_shards: self.min_shards,
+            max_shards: self.max_shards,
+            scale_up_depth: self.scale_up_depth,
+            scale_down_depth: self.scale_down_depth,
+            interval: std::time::Duration::from_secs_f64(self.scale_interval_ms / 1e3),
+            window: self.scale_window,
+            cooldown: std::time::Duration::from_secs_f64(self.scale_cooldown_ms / 1e3),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
 }
 
 /// One `[[link_class]]` entry: a named client population with its own
@@ -235,6 +287,14 @@ impl Default for Settings {
                 drift_threshold: 0.1,
                 probe_fraction: 0.0,
                 cloud_addr: None,
+                autoscale: false,
+                min_shards: 1,
+                max_shards: 8,
+                scale_up_depth: 4.0,
+                scale_down_depth: 0.5,
+                scale_interval_ms: 100.0,
+                scale_window: 5,
+                scale_cooldown_ms: 2000.0,
             },
             link_classes: Vec::new(),
         }
@@ -326,6 +386,30 @@ impl Settings {
         }
         if let Some(v) = doc.path("fleet.cloud_addr").and_then(Json::as_str) {
             self.fleet.cloud_addr = Some(v.to_string());
+        }
+        if let Some(v) = doc.path("fleet.autoscale").and_then(Json::as_bool) {
+            self.fleet.autoscale = v;
+        }
+        if let Some(v) = doc.path("fleet.min_shards").and_then(Json::as_usize) {
+            self.fleet.min_shards = v;
+        }
+        if let Some(v) = doc.path("fleet.max_shards").and_then(Json::as_usize) {
+            self.fleet.max_shards = v;
+        }
+        if let Some(v) = doc.path("fleet.scale_up_depth").and_then(Json::as_f64) {
+            self.fleet.scale_up_depth = v;
+        }
+        if let Some(v) = doc.path("fleet.scale_down_depth").and_then(Json::as_f64) {
+            self.fleet.scale_down_depth = v;
+        }
+        if let Some(v) = doc.path("fleet.scale_interval_ms").and_then(Json::as_f64) {
+            self.fleet.scale_interval_ms = v;
+        }
+        if let Some(v) = doc.path("fleet.scale_window").and_then(Json::as_usize) {
+            self.fleet.scale_window = v;
+        }
+        if let Some(v) = doc.path("fleet.scale_cooldown_ms").and_then(Json::as_f64) {
+            self.fleet.scale_cooldown_ms = v;
         }
         if let Some(arr) = doc.get("link_class").and_then(Json::as_arr) {
             self.link_classes.clear();
@@ -432,6 +516,18 @@ impl Settings {
         if let Some(addr) = &self.fleet.cloud_addr {
             if let Err(e) = validate_host_port(addr) {
                 bail!("fleet.cloud_addr: {e}");
+            }
+        }
+        if self.fleet.autoscale {
+            let acfg = self.fleet.autoscale_config()?;
+            if !(acfg.min_shards..=acfg.max_shards).contains(&self.fleet.shards) {
+                bail!(
+                    "fleet.shards ({}) must lie within fleet.min_shards..=fleet.max_shards \
+                     ({}..={}) when fleet.autoscale is on",
+                    self.fleet.shards,
+                    acfg.min_shards,
+                    acfg.max_shards
+                );
             }
         }
         if self.link_classes.len() > 256 {
@@ -557,6 +653,14 @@ online_estimation = true
 drift_threshold = 0.25
 probe_fraction = 0.05
 cloud_addr = "cloud.internal:7879"
+autoscale = true
+min_shards = 2
+max_shards = 6
+scale_up_depth = 8.0
+scale_down_depth = 1.0
+scale_interval_ms = 50
+scale_window = 3
+scale_cooldown_ms = 500
 
 [[link_class]]
 name = "3g"
@@ -580,6 +684,14 @@ exit_probability = 0.8
         assert!((s.fleet.drift_threshold - 0.25).abs() < 1e-12);
         assert!((s.fleet.probe_fraction - 0.05).abs() < 1e-12);
         assert_eq!(s.fleet.cloud_addr.as_deref(), Some("cloud.internal:7879"));
+        assert!(s.fleet.autoscale);
+        let acfg = s.fleet.autoscale_config().unwrap();
+        assert_eq!((acfg.min_shards, acfg.max_shards), (2, 6));
+        assert!((acfg.scale_up_depth - 8.0).abs() < 1e-12);
+        assert!((acfg.scale_down_depth - 1.0).abs() < 1e-12);
+        assert_eq!(acfg.interval, std::time::Duration::from_millis(50));
+        assert_eq!(acfg.window, 3);
+        assert_eq!(acfg.cooldown, std::time::Duration::from_millis(500));
         assert_eq!(s.link_classes.len(), 2);
         // Builtin name: paper rate filled in automatically.
         assert_eq!(s.link_classes[0].name, "3g");
@@ -620,6 +732,40 @@ exit_probability = 0.8
         s.fleet.probe_fraction = 0.1;
         let e = s.validate().unwrap_err().to_string();
         assert!(e.contains("per_request_planning"), "{e}");
+
+        // Autoscale: starting size must lie inside the scaling range.
+        let mut s = Settings::default();
+        s.fleet.autoscale = true;
+        s.fleet.shards = 1;
+        s.fleet.min_shards = 2;
+        s.fleet.max_shards = 4;
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("fleet.shards") && e.contains("min_shards"), "{e}");
+        s.fleet.shards = 2;
+        s.validate().unwrap();
+        // Off, the range is not enforced (it is inert).
+        s.fleet.autoscale = false;
+        s.fleet.shards = 1;
+        s.validate().unwrap();
+
+        // A collapsed hysteresis band fails loudly, naming the fields.
+        let mut s = Settings::default();
+        s.fleet.autoscale = true;
+        s.fleet.scale_down_depth = s.fleet.scale_up_depth;
+        assert!(s.validate().is_err());
+
+        // Negative milliseconds must fail validation, not panic at the
+        // Duration conversion.
+        let mut s = Settings::default();
+        s.fleet.autoscale = true;
+        s.fleet.scale_cooldown_ms = -1.0;
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("scale_cooldown_ms"), "{e}");
+        let mut s = Settings::default();
+        s.fleet.autoscale = true;
+        s.fleet.scale_interval_ms = 0.0;
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("scale_interval_ms"), "{e}");
 
         for bad in ["cloud.internal", ":7879", "host:notaport", "host:99999", "host:0"] {
             let mut s = Settings::default();

@@ -27,7 +27,7 @@
 //! repeat a stage mid-flight.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, RwLock};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -145,7 +145,10 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     started: Instant,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Mutex so [`Coordinator::drain`] can join through a shared handle
+    /// (`&self`) — the autoscaler retires one shard of a live set
+    /// without ever owning it.
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl Coordinator {
@@ -244,7 +247,7 @@ impl Coordinator {
             metrics,
             next_id: AtomicU64::new(1),
             started: Instant::now(),
-            workers,
+            workers: Mutex::new(workers),
         }
     }
 
@@ -285,6 +288,13 @@ impl Coordinator {
     /// Transferred samples waiting for a cloud worker.
     pub fn cloud_queue_depth(&self) -> usize {
         self.cloud_queue.len()
+    }
+
+    /// Cumulative admitted-then-rejected requests (one atomic load —
+    /// the autoscaler's sampling tick reads this per shard, so it must
+    /// not pay a full metrics snapshot).
+    pub fn rejected_total(&self) -> u64 {
+        self.metrics.rejected.load(Ordering::Relaxed)
     }
 
     /// Submit one image; the response arrives on the returned receiver.
@@ -329,7 +339,13 @@ impl Coordinator {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(anyhow!("admission queue full"))
             }
-            Err(SubmitError::Closed(_)) => Err(anyhow!("coordinator shut down")),
+            Err(SubmitError::Closed(_)) => {
+                // Terminal, but not backpressure (the autoscaler reads
+                // `rejected` as a load signal): counted in `failed` so
+                // the drain ledger stays balanced.
+                self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow!("coordinator shut down"))
+            }
         }
     }
 
@@ -343,18 +359,48 @@ impl Coordinator {
         self.metrics.snapshot(self.started)
     }
 
-    /// Drain and stop the workers.
-    pub fn shutdown(mut self) -> MetricsSnapshot {
-        // Wait for the ingress queue to drain before closing.
-        while !self.ingress.is_empty() || !self.cloud_queue.is_empty() {
+    /// Drain and stop this pipeline through a *shared* handle: wait
+    /// until every admitted request has been answered (or rejected),
+    /// close the queues, join the workers, and return the final
+    /// metrics. The caller must have stopped routing new requests here
+    /// first — the fleet's shard set does that by removing the shard
+    /// under its write lock — or the wait never converges. Idempotent:
+    /// a second call finds no in-flight work and no workers to join.
+    ///
+    /// The in-flight check is on the request ledger (`submitted ==
+    /// completed + rejected + failed`), not queue emptiness: a sample
+    /// the edge worker has popped but not yet answered or re-queued for
+    /// the cloud is in neither queue, and closing under it would drop
+    /// it.
+    pub fn drain(&self) -> MetricsSnapshot {
+        loop {
+            // The terminal counters read before `submitted`: a racing
+            // submit can only make the ledger look *less* settled,
+            // never prematurely balanced.
+            let done = self.metrics.completed.load(Ordering::Relaxed)
+                + self.metrics.rejected.load(Ordering::Relaxed)
+                + self.metrics.failed.load(Ordering::Relaxed);
+            if self.metrics.submitted.load(Ordering::Relaxed) == done
+                && self.ingress.is_empty()
+                && self.cloud_queue.is_empty()
+            {
+                break;
+            }
             std::thread::sleep(Duration::from_millis(2));
         }
         self.ingress.close();
         self.cloud_queue.close();
-        for w in self.workers.drain(..) {
+        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        for w in workers {
             let _ = w.join();
         }
         self.metrics.snapshot(self.started)
+    }
+
+    /// Drain and stop the workers (owning-handle convenience over
+    /// [`Coordinator::drain`]).
+    pub fn shutdown(self) -> MetricsSnapshot {
+        self.drain()
     }
 }
 
@@ -394,6 +440,8 @@ fn edge_loop(
             while !batch.is_empty() {
                 let take = batch.len().min(max_exec);
                 let chunk: Vec<InferenceRequest> = batch.drain(..take).collect();
+                let n = chunk.len();
+                let mut answered = 0usize;
                 if let Err(e) = process_edge_chunk(
                     &engine,
                     &channel,
@@ -403,8 +451,18 @@ fn edge_loop(
                     &metrics,
                     threshold,
                     observer.as_ref(),
+                    &mut answered,
                 ) {
                     log::error!("edge chunk failed: {e:#}");
+                    // Every fallible step precedes the transfer loop, so
+                    // a failed chunk reached the cloud queue with nothing:
+                    // its unanswered requests are terminal (their reply
+                    // senders just dropped). Account them as failed so
+                    // the drain ledger settles — `rejected` stays a pure
+                    // load signal for the autoscaler.
+                    metrics
+                        .failed
+                        .fetch_add((n - answered) as u64, Ordering::Relaxed);
                 }
             }
         }
@@ -421,6 +479,7 @@ fn process_edge_chunk(
     metrics: &Metrics,
     threshold: f32,
     observer: Option<&ExitObserver>,
+    answered: &mut usize,
 ) -> Result<()> {
     let n = chunk.len();
     let manifest = engine.manifest();
@@ -459,6 +518,7 @@ fn process_edge_chunk(
             if exited {
                 // Early exit: answer from the branch.
                 let req = &chunk[req_i];
+                *answered += 1;
                 metrics.edge_exits.fetch_add(1, Ordering::Relaxed);
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
                 let latency = req.enqueued.elapsed().as_secs_f64();
@@ -627,7 +687,17 @@ fn cloud_loop(
                         });
                     }
                 }
-                Err(e) => log::error!("cloud batch failed: {e:#}"),
+                Err(e) => {
+                    log::error!("cloud batch failed: {e:#}");
+                    // Terminal for the whole group (both the remote path
+                    // and its local fallback failed): no replies are
+                    // coming, so balance the drain ledger. `failed`, not
+                    // `rejected` — a broken cloud must not read as
+                    // admission pressure and grow the shard set.
+                    metrics
+                        .failed
+                        .fetch_add(group.len() as u64, Ordering::Relaxed);
+                }
             }
         }
     }
@@ -774,6 +844,46 @@ mod tests {
         assert_eq!(m.completed, 8);
         assert_eq!(m.plan_overrides, 4);
         assert_eq!(m.plan_switches, 0);
+    }
+
+    #[test]
+    fn drain_through_shared_handle_answers_everything_first() {
+        let (manifest, edge, cloud, channel) = sim_setup();
+        let c = Arc::new(Coordinator::start(
+            edge,
+            cloud,
+            channel,
+            plan_at(&manifest, 2),
+            cfg(),
+        ));
+        let mut pending = Vec::new();
+        for _ in 0..6 {
+            pending.push(c.submit(HostTensor::zeros(vec![4])).unwrap());
+        }
+        // Drain via one clone while another handle stays live (the
+        // autoscaler's shrink shape: the shard was popped from the
+        // routed set but other owners may exist).
+        let snap = c.clone().drain();
+        assert_eq!(snap.completed, 6);
+        assert_eq!(
+            snap.submitted,
+            snap.completed + snap.rejected + snap.failed
+        );
+        for (_, rx) in pending {
+            rx.recv_timeout(Duration::from_secs(1))
+                .expect("drained request lost its answer");
+        }
+        // Post-drain submits fail closed — counted as `failed` (not
+        // `rejected`: shutdown is not load) so the ledger stays
+        // balanced for any later drain call.
+        assert!(c.submit(HostTensor::zeros(vec![4])).is_err());
+        let m = c.metrics();
+        assert_eq!(m.submitted, 7);
+        assert_eq!(m.rejected, 0);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.completed + m.rejected + m.failed, 7);
+        // Idempotent: nothing left to wait for or join.
+        assert_eq!(c.drain().completed, 6);
     }
 
     #[test]

@@ -11,7 +11,15 @@ use crate::util::timefmt::{format_rate, format_secs};
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub submitted: AtomicU64,
+    /// Requests shed by backpressure: admission-queue or transfer-queue
+    /// overflow. This is the autoscaler's scale-up signal, so it must
+    /// mean *load* — terminal failures live in `failed` instead.
     pub rejected: AtomicU64,
+    /// Requests that terminated without an answer for non-load reasons:
+    /// submits after close, and the (rare) batch whose compute failed
+    /// outright. `submitted == completed + rejected + failed` is the
+    /// ledger `Coordinator::drain` settles on.
+    pub failed: AtomicU64,
     pub completed: AtomicU64,
     pub edge_exits: AtomicU64,
     pub cloud_completions: AtomicU64,
@@ -60,6 +68,7 @@ impl Metrics {
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
             completed,
             edge_exits: self.edge_exits.load(Ordering::Relaxed),
             cloud_completions: self.cloud_completions.load(Ordering::Relaxed),
@@ -84,7 +93,10 @@ impl Metrics {
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
+    /// Backpressure sheds (queue overflow) — the load signal.
     pub rejected: u64,
+    /// Terminal non-load failures (post-close submits, failed batches).
+    pub failed: u64,
     pub completed: u64,
     pub edge_exits: u64,
     pub cloud_completions: u64,
@@ -115,6 +127,7 @@ impl MetricsSnapshot {
         MetricsSnapshot {
             submitted: 0,
             rejected: 0,
+            failed: 0,
             completed: 0,
             edge_exits: 0,
             cloud_completions: 0,
@@ -146,6 +159,7 @@ impl MetricsSnapshot {
         for p in parts {
             out.submitted += p.submitted;
             out.rejected += p.rejected;
+            out.failed += p.failed;
             out.completed += p.completed;
             out.edge_exits += p.edge_exits;
             out.cloud_completions += p.cloud_completions;
@@ -173,12 +187,13 @@ impl MetricsSnapshot {
     /// Flat JSON for the server's METRICS response.
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"completed\":{},\"edge_exits\":{},\"rejected\":{},\
+            "{{\"completed\":{},\"edge_exits\":{},\"rejected\":{},\"failed\":{},\
              \"remote_batches\":{},\"remote_fallbacks\":{},\
              \"throughput_rps\":{:.3},\"p50_s\":{:.6},\"p99_s\":{:.6}}}",
             self.completed,
             self.edge_exits,
             self.rejected,
+            self.failed,
             self.remote_batches,
             self.remote_fallbacks,
             self.throughput_rps,
@@ -204,8 +219,14 @@ impl MetricsSnapshot {
         } else {
             String::new()
         };
+        // Failures are rare and alarming; only show them when nonzero.
+        let failed = if self.failed > 0 {
+            format!(" (+{} failed)", self.failed)
+        } else {
+            String::new()
+        };
         format!(
-            "completed {} ({} early-exit, {:.1}%), rejected {}, throughput {}, \
+            "completed {} ({} early-exit, {:.1}%), rejected {}{failed}, throughput {}, \
              latency mean {} p50 {} p99 {}, transferred {} bytes, plan switches {}{}",
             self.completed,
             self.edge_exits,

@@ -1,0 +1,683 @@
+//! Per-class shard autoscaling: an elastic [`ShardGroup`] plus the
+//! [`Autoscaler`] control loop that resizes it from observed load.
+//!
+//! # Why this exists
+//!
+//! The planner minimizes a *single* inference's expected time; it says
+//! nothing about how many parallel pipelines a class needs. With a fixed
+//! `shards_per_class`, a 3G-class burst either queues unboundedly or
+//! saturates the admission queues while the WiFi shards idle beside it.
+//! Neurosurgeon and Edgent both adapt the deployment to observed load,
+//! not just link state — this module is that adaptation for the shard
+//! dimension: the signals the fleet already produces (per-shard
+//! admission-queue depth, admission rejections, remote-cloud
+//! saturation) are sampled into a windowed [`LoadSignal`], and a pure
+//! hysteresis rule ([`AutoscaleConfig::decide`]) drives
+//! [`ShardGroup::grow`] / [`ShardGroup::shrink`] between
+//! `min_shards..=max_shards`.
+//!
+//! # Elasticity without dropped requests
+//!
+//! [`ShardGroup`] is the live shard set every consumer reads through
+//! one `RwLock`: the fleet's admission path holds the read lock across
+//! *pick shard → submit*, so a shard can never be retired between being
+//! chosen and receiving the request. Growing builds the new
+//! [`Coordinator`] outside the lock (engine construction may compile
+//! kernels) and pushes it in one write; shrinking pops the victim under
+//! the write lock *first* — making it unreachable to routing, plan
+//! pushes and metrics — and only then drains it
+//! ([`Coordinator::drain`]: wait for every admitted request to be
+//! answered, close the queues, join the workers). The victim's final
+//! snapshot is retained so class aggregates never lose completed work.
+//!
+//! # Not flapping
+//!
+//! Three mechanisms, in order of activation: the *window* (a decision
+//! looks at `window` consecutive samples, so one spiky tick decides
+//! nothing), the *hysteresis band* (`scale_down_depth` must sit well
+//! below `scale_up_depth`; mean depths inside the band hold), and the
+//! *cooldown* (after any resize the class holds for `cooldown`, letting
+//! the previous decision's effect reach the signals before the next).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock, RwLockReadGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{Coordinator, MetricsSnapshot};
+
+/// Every knob of one class's scaler. `shards_per_class` is the starting
+/// point and must lie within `min_shards..=max_shards`.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Never shrink below this many shards (>= 1).
+    pub min_shards: usize,
+    /// Never grow beyond this many shards (<= 64, the fleet's hard cap).
+    pub max_shards: usize,
+    /// Mean admission-queue depth per shard at or above which the class
+    /// grows. Any admission rejection in the window also grows,
+    /// regardless of depth — a rejection is a dropped request, the one
+    /// signal that must never need a second window to act on.
+    pub scale_up_depth: f64,
+    /// Mean depth per shard at or below which the class shrinks (when
+    /// the window also saw zero rejections). Must be strictly below
+    /// `scale_up_depth`; the gap is the hysteresis band.
+    pub scale_down_depth: f64,
+    /// Sampling tick of the control loop.
+    pub interval: Duration,
+    /// Samples aggregated into one [`LoadSignal`] before a decision.
+    pub window: usize,
+    /// Minimum time between two resizes of the same class.
+    pub cooldown: Duration,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 8,
+            scale_up_depth: 4.0,
+            scale_down_depth: 0.5,
+            interval: Duration::from_millis(100),
+            window: 5,
+            cooldown: Duration::from_secs(2),
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.min_shards == 0 {
+            bail!("autoscale min_shards must be >= 1");
+        }
+        if self.max_shards > 64 {
+            bail!(
+                "autoscale max_shards must be <= 64 (the fleet's shard cap); got {}",
+                self.max_shards
+            );
+        }
+        if self.min_shards > self.max_shards {
+            bail!(
+                "autoscale min_shards ({}) must be <= max_shards ({})",
+                self.min_shards,
+                self.max_shards
+            );
+        }
+        if !(self.scale_up_depth.is_finite() && self.scale_up_depth > 0.0) {
+            bail!(
+                "autoscale scale_up_depth must be positive and finite; got {}",
+                self.scale_up_depth
+            );
+        }
+        if !(self.scale_down_depth.is_finite() && self.scale_down_depth >= 0.0) {
+            bail!(
+                "autoscale scale_down_depth must be non-negative and finite; got {}",
+                self.scale_down_depth
+            );
+        }
+        if self.scale_down_depth >= self.scale_up_depth {
+            bail!(
+                "autoscale scale_down_depth ({}) must be strictly below scale_up_depth \
+                 ({}) — the gap is the hysteresis band that stops flapping",
+                self.scale_down_depth,
+                self.scale_up_depth
+            );
+        }
+        if self.interval.is_zero() {
+            bail!("autoscale interval must be > 0");
+        }
+        if self.window == 0 {
+            bail!("autoscale window must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// The pure scaling rule: window signal + current shard count →
+    /// decision. Bounds and hysteresis live here; timing (window
+    /// assembly, cooldown) lives in the [`Autoscaler`] loop so this
+    /// stays unit-testable without threads.
+    pub fn decide(&self, signal: &LoadSignal, shards: usize) -> ScaleDecision {
+        if shards < self.max_shards {
+            if signal.rejections > 0 {
+                return ScaleDecision::Grow(format!(
+                    "{} admission rejection(s) in window",
+                    signal.rejections
+                ));
+            }
+            if signal.mean_depth_per_shard >= self.scale_up_depth {
+                return ScaleDecision::Grow(format!(
+                    "mean queue depth {:.1}/shard >= {:.1}",
+                    signal.mean_depth_per_shard, self.scale_up_depth
+                ));
+            }
+        }
+        if shards > self.min_shards
+            && signal.rejections == 0
+            // Remote saturation vetoes a shrink: a backed-up shared
+            // cloud stalls work *behind* the admission queue, so quiet
+            // admission depths are deceiving — shed capacity only when
+            // the whole pipeline, cloud path included, is actually idle.
+            // (It is deliberately not a grow trigger: the remote is
+            // shared, so more shards would add load, not capacity.)
+            && signal.remote_pressure == 0
+            && signal.mean_depth_per_shard <= self.scale_down_depth
+        {
+            return ScaleDecision::Shrink(format!(
+                "mean queue depth {:.1}/shard <= {:.1} (peak {})",
+                signal.mean_depth_per_shard, self.scale_down_depth, signal.peak_depth
+            ));
+        }
+        ScaleDecision::Hold
+    }
+}
+
+/// What one class's scaler decided for one window.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScaleDecision {
+    /// Add a shard; the string is the trigger, kept for `ScalerStats`.
+    Grow(String),
+    /// Retire a shard; the string is the trigger.
+    Shrink(String),
+    Hold,
+}
+
+/// One control-loop tick's raw reading of a class, taken by the fleet
+/// (it owns the shard handles). Counters are cumulative; the
+/// [`Autoscaler`] differences them across window boundaries.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoadSample {
+    /// Live shards at sampling time.
+    pub shards: usize,
+    /// Sum of the live shards' admission-queue depths.
+    pub depth_total: usize,
+    /// Cumulative admission rejections (live + retired shards).
+    pub rejected_total: u64,
+    /// Cumulative remote-cloud pressure (`saturated + fast_fails` of
+    /// the fleet's shared remote client); 0 with an in-process cloud.
+    pub remote_total: u64,
+}
+
+/// One decision window's aggregate — the input to
+/// [`AutoscaleConfig::decide`], and what `last trigger` strings quote.
+#[derive(Debug, Clone, Default)]
+pub struct LoadSignal {
+    /// Mean over the window of (total depth / live shards).
+    pub mean_depth_per_shard: f64,
+    /// Largest total depth any sample of the window saw; quoted in
+    /// shrink triggers so `last_trigger` shows how quiet "quiet" was.
+    pub peak_depth: usize,
+    /// Admission rejections that happened during the window.
+    pub rejections: u64,
+    /// Remote-cloud saturation/fast-fail events during the window.
+    /// Vetoes a scale-down (work is stalled *behind* the admission
+    /// queue, so quiet depths are deceiving) but is not a grow trigger
+    /// — the remote is shared, so more shards would add load to it, not
+    /// capacity.
+    pub remote_pressure: u64,
+}
+
+impl LoadSignal {
+    /// Fold a window of samples; `prev` carries the cumulative counters
+    /// at the previous window's end (saturating: a counter may appear
+    /// to step back when a retired shard's tally moves between the live
+    /// and retired sums mid-sample).
+    pub fn from_window(window: &[LoadSample], prev: &LoadSample) -> LoadSignal {
+        if window.is_empty() {
+            return LoadSignal::default();
+        }
+        let mean = window
+            .iter()
+            .map(|s| s.depth_total as f64 / s.shards.max(1) as f64)
+            .sum::<f64>()
+            / window.len() as f64;
+        let last = window.last().unwrap();
+        LoadSignal {
+            mean_depth_per_shard: mean,
+            peak_depth: window.iter().map(|s| s.depth_total).max().unwrap_or(0),
+            rejections: last.rejected_total.saturating_sub(prev.rejected_total),
+            remote_pressure: last.remote_total.saturating_sub(prev.remote_total),
+        }
+    }
+}
+
+/// Scaling observability for one class, reported in `ClassReport`
+/// (summary + JSON) whether autoscaling is on or off.
+#[derive(Debug, Clone, Default)]
+pub struct ScalerStats {
+    /// False = the shard set is fixed at its startup size.
+    pub enabled: bool,
+    pub min_shards: usize,
+    pub max_shards: usize,
+    /// Live shards right now.
+    pub current_shards: usize,
+    /// Shards retired by shrinks over the class's lifetime.
+    pub retired_shards: usize,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// What caused the most recent resize, e.g. `"grow: 3 admission
+    /// rejection(s) in window"`. `None` until the first resize.
+    pub last_trigger: Option<String>,
+}
+
+/// A class's live, elastic shard set. All consumers — the router's
+/// admission path, adaptive/estimator plan pushes, metrics rollup, the
+/// autoscaler — read one `RwLock`'d vector, so every reader sees a
+/// consistent set mid-resize. Never empty: shrinking below one shard is
+/// refused. (No `Debug`: [`Coordinator`] handles aren't printable.)
+pub struct ShardGroup {
+    shards: RwLock<Vec<Arc<Coordinator>>>,
+    /// Monotonic shard-label counter; indices are never reused, so
+    /// `class-s3` in a log always means the same pipeline.
+    next_label: AtomicU64,
+    scale_ups: AtomicU64,
+    scale_downs: AtomicU64,
+    /// Final snapshots of retired shards: their completed work must not
+    /// vanish from class aggregates when they do.
+    retired: Mutex<Vec<MetricsSnapshot>>,
+    last_trigger: Mutex<Option<String>>,
+}
+
+impl ShardGroup {
+    /// An empty group; fill it with [`ShardGroup::install_initial`].
+    /// Two-phase startup because exit observers must capture the group
+    /// before the shards (whose workers run the observers) exist.
+    pub fn new() -> ShardGroup {
+        ShardGroup {
+            shards: RwLock::new(Vec::new()),
+            next_label: AtomicU64::new(0),
+            scale_ups: AtomicU64::new(0),
+            scale_downs: AtomicU64::new(0),
+            retired: Mutex::new(Vec::new()),
+            last_trigger: Mutex::new(None),
+        }
+    }
+
+    /// Install the startup shard set (not counted as scale-ups) and
+    /// anchor the label counter past it.
+    pub fn install_initial(&self, shards: Vec<Arc<Coordinator>>) {
+        self.next_label.store(shards.len() as u64, Ordering::Relaxed);
+        *self.shards.write().unwrap() = shards;
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the live shard handles (for plan pushes and metrics;
+    /// the admission path uses [`ShardGroup::read`] instead so the set
+    /// cannot change between picking a shard and submitting to it).
+    pub fn handles(&self) -> Vec<Arc<Coordinator>> {
+        self.shards.read().unwrap().clone()
+    }
+
+    /// Read-locked view of the live set. Hold the guard across *pick →
+    /// submit*: a shrink's write lock then cannot retire the picked
+    /// shard before the request lands in its admission queue.
+    pub fn read(&self) -> RwLockReadGuard<'_, Vec<Arc<Coordinator>>> {
+        self.shards.read().unwrap()
+    }
+
+    /// Add one shard built by `make_shard(label_index)`, refusing to
+    /// exceed `cap` shards — the class's `max_shards` when autoscaling,
+    /// the fleet-wide 64 otherwise; the autoscaler and the manual
+    /// `Fleet::grow_class` path therefore respect the same ceiling.
+    /// Construction runs *outside* the lock (engines may compile
+    /// kernels for seconds); the install is one push under the write
+    /// lock, where the cap is re-checked so concurrent grows cannot
+    /// overshoot it. Returns the new shard count.
+    pub fn grow(
+        &self,
+        trigger: &str,
+        cap: usize,
+        make_shard: impl FnOnce(u64) -> Result<Arc<Coordinator>>,
+    ) -> Result<usize> {
+        if self.len() >= cap {
+            bail!("already at the {cap}-shard cap"); // don't build an engine to discard
+        }
+        let idx = self.next_label.fetch_add(1, Ordering::Relaxed);
+        let shard = make_shard(idx)?;
+        {
+            let mut shards = self.shards.write().unwrap();
+            if shards.len() < cap {
+                shards.push(shard);
+                let n = shards.len();
+                drop(shards);
+                self.scale_ups.fetch_add(1, Ordering::Relaxed);
+                *self.last_trigger.lock().unwrap() = Some(format!("grow: {trigger}"));
+                return Ok(n);
+            }
+        }
+        // Lost the install race to a concurrent grow: the shard we just
+        // built has live worker threads — retire it cleanly, not by
+        // dropping it (its workers would block on their queues forever).
+        shard.drain();
+        bail!("already at the {cap}-shard cap (a concurrent grow won the race)")
+    }
+
+    /// Retire the highest-index shard, refusing to go below `floor`
+    /// shards (the class's `min_shards` when autoscaling; never below
+    /// one regardless — an empty group is unroutable): pop it under the
+    /// write lock (new requests can no longer route to it), then drain
+    /// it — every request it already admitted is answered before its
+    /// workers join. Returns the new shard count.
+    pub fn shrink(&self, trigger: &str, floor: usize) -> Result<usize> {
+        let floor = floor.max(1);
+        let (victim, n) = {
+            let mut shards = self.shards.write().unwrap();
+            if shards.len() <= floor {
+                bail!("cannot shrink a class below {floor} shard(s)");
+            }
+            let victim = shards.pop().unwrap();
+            (victim, shards.len())
+        };
+        let snapshot = victim.drain();
+        self.retired.lock().unwrap().push(snapshot);
+        self.scale_downs.fetch_add(1, Ordering::Relaxed);
+        *self.last_trigger.lock().unwrap() = Some(format!("shrink: {trigger}"));
+        Ok(n)
+    }
+
+    /// Final snapshots of every shard retired so far.
+    pub fn retired_snapshots(&self) -> Vec<MetricsSnapshot> {
+        self.retired.lock().unwrap().clone()
+    }
+
+    /// Cumulative admission rejections across retired shards (the
+    /// autoscaler's sampler adds the live shards' own counters).
+    pub fn retired_rejected(&self) -> u64 {
+        self.retired.lock().unwrap().iter().map(|s| s.rejected).sum()
+    }
+
+    /// Assemble this group's [`ScalerStats`]; `bounds` is the active
+    /// autoscale range, `None` when the scaler is off.
+    pub fn stats(&self, bounds: Option<(usize, usize)>) -> ScalerStats {
+        let current = self.len();
+        ScalerStats {
+            enabled: bounds.is_some(),
+            min_shards: bounds.map(|(lo, _)| lo).unwrap_or(current),
+            max_shards: bounds.map(|(_, hi)| hi).unwrap_or(current),
+            current_shards: current,
+            retired_shards: self.retired.lock().unwrap().len(),
+            scale_ups: self.scale_ups.load(Ordering::Relaxed),
+            scale_downs: self.scale_downs.load(Ordering::Relaxed),
+            last_trigger: self.last_trigger.lock().unwrap().clone(),
+        }
+    }
+
+    /// Drain every live shard and return their final snapshots
+    /// (fleet shutdown). The group is left empty; the observer/adaptive
+    /// closures still holding the group see no shards, which breaks the
+    /// group → shard → worker-closure → group reference cycle.
+    pub fn drain_all(&self) -> Vec<MetricsSnapshot> {
+        let shards = std::mem::take(&mut *self.shards.write().unwrap());
+        shards.iter().map(|s| s.drain()).collect()
+    }
+}
+
+impl Default for ShardGroup {
+    fn default() -> Self {
+        ShardGroup::new()
+    }
+}
+
+/// Handle to one class's running control loop; [`AutoscalerHandle::stop`]
+/// wakes and joins it.
+pub struct AutoscalerHandle {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl AutoscalerHandle {
+    pub fn stop(self) {
+        *self.stop.0.lock().unwrap() = true;
+        self.stop.1.notify_all();
+        let _ = self.thread.join();
+    }
+}
+
+/// The per-class control loop: every `interval` it takes a
+/// [`LoadSample`] via `sample`, every `window` samples it folds them
+/// into a [`LoadSignal`], asks [`AutoscaleConfig::decide`], and — if
+/// outside the cooldown — executes the decision via `grow` / `shrink`
+/// (closures supplied by the fleet, which owns engine construction and
+/// the shard set). Resize failures are logged and retried at the next
+/// window, never fatal to serving.
+pub struct Autoscaler;
+
+impl Autoscaler {
+    pub fn spawn(
+        name: String,
+        cfg: AutoscaleConfig,
+        sample: impl Fn() -> LoadSample + Send + 'static,
+        grow: impl Fn(&str) -> Result<usize> + Send + 'static,
+        shrink: impl Fn(&str) -> Result<usize> + Send + 'static,
+    ) -> AutoscalerHandle {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("autoscale-{name}"))
+            .spawn(move || {
+                let mut window: Vec<LoadSample> = Vec::with_capacity(cfg.window);
+                let mut prev = sample();
+                let mut cooldown_until = Instant::now();
+                let (lock, cvar) = &*stop2;
+                loop {
+                    // Interruptible tick: stop() must not wait a window.
+                    let mut stopped = lock.lock().unwrap();
+                    while !*stopped {
+                        let (next, timeout) =
+                            cvar.wait_timeout(stopped, cfg.interval).unwrap();
+                        stopped = next;
+                        if timeout.timed_out() {
+                            break;
+                        }
+                    }
+                    if *stopped {
+                        return;
+                    }
+                    drop(stopped);
+
+                    let s = sample();
+                    window.push(s);
+                    // During the cooldown the window keeps accumulating
+                    // instead of being folded and discarded: the
+                    // rejection delta is computed against `prev`, which
+                    // only advances when a decision actually runs, so
+                    // rejections that land mid-cooldown still force the
+                    // first post-cooldown decision to grow. (The window
+                    // length is bounded by cooldown/interval.)
+                    if window.len() < cfg.window || Instant::now() < cooldown_until {
+                        continue;
+                    }
+                    let signal = LoadSignal::from_window(&window, &prev);
+                    prev = *window.last().unwrap();
+                    window.clear();
+
+                    match cfg.decide(&signal, s.shards) {
+                        ScaleDecision::Grow(trigger) => {
+                            match grow(&trigger) {
+                                Ok(n) => {
+                                    log::info!("[{name}] scaled up to {n} shard(s): {trigger}");
+                                    cooldown_until = Instant::now() + cfg.cooldown;
+                                }
+                                Err(e) => log::warn!("[{name}] scale-up failed: {e:#}"),
+                            }
+                        }
+                        ScaleDecision::Shrink(trigger) => {
+                            match shrink(&trigger) {
+                                Ok(n) => {
+                                    log::info!("[{name}] scaled down to {n} shard(s): {trigger}");
+                                    cooldown_until = Instant::now() + cfg.cooldown;
+                                }
+                                Err(e) => log::warn!("[{name}] scale-down failed: {e:#}"),
+                            }
+                        }
+                        ScaleDecision::Hold => {}
+                    }
+                }
+            })
+            .expect("spawn autoscaler");
+        AutoscalerHandle { stop, thread }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            scale_up_depth: 4.0,
+            scale_down_depth: 0.5,
+            ..Default::default()
+        }
+    }
+
+    fn signal(mean: f64, rejections: u64) -> LoadSignal {
+        LoadSignal {
+            mean_depth_per_shard: mean,
+            peak_depth: mean.ceil() as usize,
+            rejections,
+            remote_pressure: 0,
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        cfg().validate().unwrap();
+        AutoscaleConfig::default().validate().unwrap();
+        for bad in [
+            AutoscaleConfig { min_shards: 0, ..cfg() },
+            AutoscaleConfig { max_shards: 65, ..cfg() },
+            AutoscaleConfig { min_shards: 5, max_shards: 4, ..cfg() },
+            AutoscaleConfig { scale_up_depth: 0.0, ..cfg() },
+            AutoscaleConfig { scale_down_depth: -1.0, ..cfg() },
+            // An inverted (or collapsed) hysteresis band flaps.
+            AutoscaleConfig { scale_down_depth: 4.0, ..cfg() },
+            AutoscaleConfig { interval: Duration::ZERO, ..cfg() },
+            AutoscaleConfig { window: 0, ..cfg() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} must not validate");
+        }
+    }
+
+    #[test]
+    fn decide_hysteresis_band_holds() {
+        let c = cfg();
+        // Above the up threshold: grow; below the down threshold:
+        // shrink; anywhere in the band between: hold.
+        assert!(matches!(c.decide(&signal(5.0, 0), 2), ScaleDecision::Grow(_)));
+        assert!(matches!(c.decide(&signal(4.0, 0), 2), ScaleDecision::Grow(_)));
+        assert_eq!(c.decide(&signal(2.0, 0), 2), ScaleDecision::Hold);
+        assert_eq!(c.decide(&signal(0.6, 0), 2), ScaleDecision::Hold);
+        assert!(matches!(c.decide(&signal(0.2, 0), 2), ScaleDecision::Shrink(_)));
+    }
+
+    #[test]
+    fn decide_respects_bounds() {
+        let c = cfg();
+        // Saturated load at max_shards: hold, not grow.
+        assert_eq!(c.decide(&signal(100.0, 9), 4), ScaleDecision::Hold);
+        // Idle at min_shards: hold, not shrink.
+        assert_eq!(c.decide(&signal(0.0, 0), 1), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn rejections_force_growth_even_at_zero_depth() {
+        // A rejected request is a dropped request: the queue may look
+        // empty the moment we sample it and still have overflowed
+        // between samples.
+        let c = cfg();
+        match c.decide(&signal(0.0, 3), 1) {
+            ScaleDecision::Grow(t) => assert!(t.contains("rejection"), "{t}"),
+            other => panic!("{other:?}"),
+        }
+        // And rejections veto a shrink.
+        assert_eq!(c.decide(&signal(0.0, 1), 4), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn remote_pressure_vetoes_shrink_but_never_grows() {
+        // A saturated shared remote stalls work behind the admission
+        // queue: quiet depths must not shed capacity, but growing would
+        // only add load to the shared bottleneck.
+        let c = cfg();
+        let sig = LoadSignal {
+            remote_pressure: 3,
+            ..signal(0.0, 0)
+        };
+        assert_eq!(c.decide(&sig, 4), ScaleDecision::Hold);
+        assert_eq!(c.decide(&sig, 1), ScaleDecision::Hold);
+        // Pressure gone: the same quiet class shrinks again, and the
+        // trigger quotes the window's peak so operators see how quiet.
+        match c.decide(&signal(0.0, 0), 4) {
+            ScaleDecision::Shrink(t) => assert!(t.contains("peak 0"), "{t}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn signal_folds_window_and_differences_counters() {
+        let prev = LoadSample {
+            shards: 2,
+            depth_total: 0,
+            rejected_total: 10,
+            remote_total: 5,
+        };
+        let window = [
+            LoadSample { shards: 2, depth_total: 8, rejected_total: 10, remote_total: 5 },
+            LoadSample { shards: 2, depth_total: 4, rejected_total: 12, remote_total: 9 },
+        ];
+        let s = LoadSignal::from_window(&window, &prev);
+        assert!((s.mean_depth_per_shard - 3.0).abs() < 1e-12, "{s:?}");
+        assert_eq!(s.peak_depth, 8);
+        assert_eq!(s.rejections, 2);
+        assert_eq!(s.remote_pressure, 4);
+        // Counters that stepped back (shrink moved a shard's tally
+        // between the live and retired sums) saturate to zero.
+        let back = [LoadSample { shards: 1, depth_total: 0, rejected_total: 7, remote_total: 0 }];
+        let s = LoadSignal::from_window(&back, &prev);
+        assert_eq!(s.rejections, 0);
+        assert_eq!(s.remote_pressure, 0);
+        // Empty windows are inert.
+        let s = LoadSignal::from_window(&[], &prev);
+        assert_eq!(s.mean_depth_per_shard, 0.0);
+        assert_eq!(s.rejections, 0);
+    }
+
+    #[test]
+    fn shard_group_labels_are_never_reused() {
+        // Pure bookkeeping test (no coordinators): grow with a failing
+        // factory burns the label but adds nothing — the next grow's
+        // label is still fresh, so logs never alias two pipelines.
+        let g = ShardGroup::new();
+        g.install_initial(Vec::new());
+        let mut seen = Vec::new();
+        let r = g.grow("t", 4, |idx| {
+            seen.push(idx);
+            bail!("factory down")
+        });
+        assert!(r.is_err());
+        let r = g.grow("t", 4, |idx| {
+            seen.push(idx);
+            bail!("factory still down")
+        });
+        assert!(r.is_err());
+        assert_eq!(seen, vec![0, 1]);
+        assert_eq!(g.stats(None).scale_ups, 0, "failed grows are not scale-ups");
+        assert!(g.stats(Some((1, 4))).enabled);
+        // At (or above) the cap, grow refuses *before* building an
+        // engine — the factory must not run.
+        let r = g.grow("t", 0, |_| unreachable!("capped grow must not build"));
+        assert!(r.is_err());
+        // An empty group refuses to shrink whatever the floor says.
+        assert!(g.shrink("t", 0).is_err());
+    }
+}

@@ -5,6 +5,7 @@ use crate::config::json::Json;
 use crate::coordinator::MetricsSnapshot;
 use crate::network::bandwidth::LinkModel;
 
+use super::autoscale::ScalerStats;
 use super::class::LinkClass;
 
 /// Planner-side observability for one class: what p it is planning
@@ -44,6 +45,16 @@ pub struct ClassReport {
     /// Active partition point (stages `1..=split_after` on the edge).
     pub split_after: usize,
     pub planner: ClassPlannerStats,
+    /// Shard-count elasticity: current/min/max shards, resize counters
+    /// and the last trigger (`enabled = false` for a fixed fleet).
+    pub scaler: ScalerStats,
+    /// Instantaneous admission-queue depth per live shard, sampled when
+    /// the report was taken — the signal the autoscaler keys on, so an
+    /// operator can see *why* a resize fired (or is about to).
+    pub queue_depths: Vec<usize>,
+    /// Live shards' snapshots. The `aggregate` additionally folds in
+    /// shards already retired by scale-downs, so class totals never
+    /// lose completed work to elasticity.
     pub shards: Vec<MetricsSnapshot>,
     pub aggregate: MetricsSnapshot,
 }
@@ -73,14 +84,26 @@ impl FleetReport {
                 Some(p) => format!(", p̂ {:.3} ({} obs)", p, c.planner.estimator_observations),
                 None => String::new(),
             };
+            let scaler = if c.scaler.enabled {
+                format!(
+                    " in {}..={}, +{}/-{} resizes",
+                    c.scaler.min_shards,
+                    c.scaler.max_shards,
+                    c.scaler.scale_ups,
+                    c.scaler.scale_downs
+                )
+            } else {
+                String::new()
+            };
             out.push_str(&format!(
-                "[{} @ {:.2} Mbps, split after {}, p {:.3}{}, {} shard(s)] {}\n",
+                "[{} @ {:.2} Mbps, split after {}, p {:.3}{}, {} shard(s){}] {}\n",
                 c.name,
                 c.link.uplink_mbps,
                 c.split_after,
                 c.planner.exit_prob_planned,
                 p_hat,
                 c.shards.len(),
+                scaler,
                 c.aggregate.summary()
             ));
         }
@@ -108,8 +131,22 @@ impl FleetReport {
                     Some(p) => format!("{p:.6}"),
                     None => "null".to_string(),
                 };
+                let depths = c
+                    .queue_depths
+                    .iter()
+                    .map(usize::to_string)
+                    .collect::<Vec<_>>()
+                    .join(",");
+                let last_trigger = match &c.scaler.last_trigger {
+                    Some(t) => Json::Str(t.clone()).to_string(),
+                    None => "null".to_string(),
+                };
                 format!(
                     "{{\"name\":{},\"split_after\":{},\"shards\":{},\
+                     \"queue_depths\":[{}],\
+                     \"autoscale\":{{\"enabled\":{},\"min_shards\":{},\
+                     \"max_shards\":{},\"retired_shards\":{},\"scale_ups\":{},\
+                     \"scale_downs\":{},\"last_trigger\":{}}},\
                      \"exit_prob_planned\":{:.6},\"p_hat\":{},\
                      \"estimator_observations\":{},\"view_rebuilds\":{},\
                      \"cache_hits\":{},\"cache_misses\":{},\
@@ -117,6 +154,14 @@ impl FleetReport {
                     Json::Str(c.name.clone()),
                     c.split_after,
                     c.shards.len(),
+                    depths,
+                    c.scaler.enabled,
+                    c.scaler.min_shards,
+                    c.scaler.max_shards,
+                    c.scaler.retired_shards,
+                    c.scaler.scale_ups,
+                    c.scaler.scale_downs,
+                    last_trigger,
                     c.planner.exit_prob_planned,
                     p_hat,
                     c.planner.estimator_observations,
@@ -173,6 +218,17 @@ mod tests {
                     cache_invalidations: 2,
                     probe_overrides: 1,
                 },
+                scaler: ScalerStats {
+                    enabled: true,
+                    min_shards: 1,
+                    max_shards: 4,
+                    current_shards: 2,
+                    retired_shards: 1,
+                    scale_ups: 3,
+                    scale_downs: 2,
+                    last_trigger: Some("grow: 2 admission rejection(s) in window".into()),
+                },
+                queue_depths: vec![5, 0],
                 aggregate: MetricsSnapshot::aggregate(&shards_a),
                 shards: shards_a,
             },
@@ -185,6 +241,13 @@ mod tests {
                     exit_prob_planned: 0.5,
                     ..Default::default()
                 },
+                scaler: ScalerStats {
+                    min_shards: 1,
+                    max_shards: 1,
+                    current_shards: 1,
+                    ..Default::default()
+                },
+                queue_depths: vec![0],
                 aggregate: MetricsSnapshot::aggregate(&shards_b),
                 shards: shards_b,
             },
@@ -230,9 +293,36 @@ mod tests {
         // Estimation off: p_hat is JSON null, not 0 (an estimate of 0
         // and "no estimate" are different facts).
         assert!(matches!(classes[1].get("p_hat"), Some(Json::Null)));
-        // And the human summary surfaces p̂ only where it exists.
+        // Per-shard queue depths: the signal a resize keyed on must be
+        // visible to operators, one entry per live shard.
+        let depths = p0.get("queue_depths").unwrap().as_arr().unwrap();
+        assert_eq!(depths.len(), 2);
+        assert_eq!(depths[0].as_u64(), Some(5));
+        assert_eq!(depths[1].as_u64(), Some(0));
+        // Scaler observability nests under "autoscale".
+        let scaler = p0.get("autoscale").unwrap();
+        assert_eq!(scaler.get("enabled").unwrap().as_bool(), Some(true));
+        assert_eq!(scaler.get("min_shards").unwrap().as_u64(), Some(1));
+        assert_eq!(scaler.get("max_shards").unwrap().as_u64(), Some(4));
+        assert_eq!(scaler.get("retired_shards").unwrap().as_u64(), Some(1));
+        assert_eq!(scaler.get("scale_ups").unwrap().as_u64(), Some(3));
+        assert_eq!(scaler.get("scale_downs").unwrap().as_u64(), Some(2));
+        assert!(scaler
+            .get("last_trigger")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("rejection"));
+        // Fixed fleet: enabled false, last trigger null (not "").
+        let fixed = classes[1].get("autoscale").unwrap();
+        assert_eq!(fixed.get("enabled").unwrap().as_bool(), Some(false));
+        assert!(matches!(fixed.get("last_trigger"), Some(Json::Null)));
+        // And the human summary surfaces p̂ only where it exists, plus
+        // the resize counters only for elastic classes.
         let s = report().summary();
         assert!(s.contains("p̂ 0.620"), "{s}");
         assert!(s.contains("p 0.500"), "{s}");
+        assert!(s.contains("in 1..=4, +3/-2 resizes"), "{s}");
+        assert!(!s.contains("WiFi @ 18.80 Mbps, split after 0, p 0.500, 1 shard(s) in"), "{s}");
     }
 }

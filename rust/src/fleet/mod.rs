@@ -23,9 +23,12 @@
 //!                         │     sums, per-class PlanCache)
 //!                         ├── Channel[c]: the class's uplink (constant or
 //!                         │     trace-driven)
-//!                         └── AdaptivePlanner[c] (optional): hysteresis
-//!                               replan loop driving set_plan on every
-//!                               shard of the class
+//!                         ├── AdaptivePlanner[c] (optional): hysteresis
+//!                         │     replan loop driving set_plan on every
+//!                         │     shard of the class
+//!                         └── Autoscaler[c] (optional): control loop
+//!                               growing/shrinking the class's ShardGroup
+//!                               from queue-depth and rejection signals
 //! ```
 //!
 //! * **Classes own base plans; requests may override.** Every shard of
@@ -45,6 +48,18 @@
 //!   scales the serving path horizontally without touching coordinator
 //!   internals — the edge worker groups each batch by effective split,
 //!   so overridden and default samples coexist safely.
+//! * **Shard groups are elastic.** The shard set is a live
+//!   [`ShardGroup`] every consumer — routing, plan pushes, metrics —
+//!   reads consistently mid-resize. With autoscaling enabled, a
+//!   per-class [`Autoscaler`] control loop samples the signals the
+//!   fleet already produces (per-shard admission-queue depth, admission
+//!   rejections, remote-cloud saturation) into a windowed
+//!   [`LoadSignal`] and drives [`ShardGroup::grow`] /
+//!   [`ShardGroup::shrink`] between `min_shards..=max_shards` with
+//!   hysteresis and a cooldown. Growing forks a new [`Coordinator`]
+//!   from the class's shared planner core at the current plan;
+//!   shrinking drains the victim before its workers join, so no
+//!   admitted request is ever dropped.
 //! * **One p-independent precompute, one view per class.** Every class
 //!   shares a single `StaticCore` (the p-independent planner layer) via
 //!   [`Planner::with_exit_probs`]; each class's survival-weighted view
@@ -77,18 +92,23 @@
 //!   planner stats (planned p, estimated p̂, cache hit/miss/invalidation,
 //!   view-rebuild and probe counters).
 
+pub mod autoscale;
 pub mod class;
 pub mod metrics;
 pub mod planner;
 pub mod router;
 
+pub use autoscale::{
+    AutoscaleConfig, Autoscaler, AutoscalerHandle, LoadSample, LoadSignal, ScaleDecision,
+    ScalerStats, ShardGroup,
+};
 pub use class::{ClassProfile, ClassRegistry, LinkClass};
 pub use metrics::{ClassPlannerStats, ClassReport, FleetReport};
 pub use planner::ClassPlanner;
 pub use router::{FleetRouter, RoutePolicy};
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
@@ -128,6 +148,12 @@ pub struct FleetConfig {
     /// When set, every class runs a hysteresis replan loop against its
     /// channel's live bandwidth, pushing accepted plans to all shards.
     pub adaptive: Option<AdaptiveConfig>,
+    /// When set, every class runs an [`Autoscaler`] control loop that
+    /// grows/shrinks its shard group between
+    /// `min_shards..=max_shards` from queue-depth and rejection
+    /// signals. `shards_per_class` is the starting size and must lie
+    /// within that range.
+    pub autoscale: Option<AutoscaleConfig>,
     /// When set, every class tracks its observed exit rate (EWMA over
     /// branch-gate decisions) and re-derives its planner view — and its
     /// shards' plans — when the estimate drifts beyond the configured
@@ -170,6 +196,7 @@ impl Default for FleetConfig {
             default_exit_prob: 0.5,
             epsilon: 1e-9,
             adaptive: None,
+            autoscale: None,
             estimation: None,
             per_request_planning: false,
             probe_fraction: 0.0,
@@ -180,6 +207,12 @@ impl Default for FleetConfig {
     }
 }
 
+/// Builds one shard of a class on demand: the autoscaler's grow path
+/// and `Fleet::grow_class` both go through this, so a grown shard is
+/// provisioned exactly like a startup one (same engine factory, same
+/// remote/observer wiring) and starts on the class's *current* plan.
+type SpawnShard = Arc<dyn Fn(u64) -> Result<Arc<Coordinator>> + Send + Sync>;
+
 struct ClassGroup {
     profile: ClassProfile,
     /// `Arc`: the exit-observer closures running on shard edge-worker
@@ -187,18 +220,23 @@ struct ClassGroup {
     planner: Arc<ClassPlanner>,
     /// The class's exit-rate tracker (None = estimation disabled).
     estimator: Option<Arc<Mutex<ExitRateEstimator>>>,
-    /// The shard handles the exit observer pushes rebuilt plans to.
-    /// Cleared at shutdown: the observer closures live on shard worker
-    /// threads, so this is a cycle (shard → observer → shard) that must
-    /// be broken before `Arc::try_unwrap` can join the shards.
-    plan_sinks: Arc<RwLock<Vec<Arc<Coordinator>>>>,
     channel: Arc<Channel>,
-    shards: Vec<Arc<Coordinator>>,
+    /// The live, elastic shard set. `Arc`: the exit observer and the
+    /// adaptive replan loop push plans to whatever shards are live at
+    /// push time, and the autoscaler resizes it — all from shard/loop
+    /// threads. Emptied (via `drain_all`) at shutdown, which also breaks
+    /// the group → shard → worker-closure → group reference cycle.
+    shards: Arc<ShardGroup>,
+    spawn_shard: SpawnShard,
+    /// Active autoscale bounds, kept for `ScalerStats` reporting
+    /// (`None` = fixed-size shard set).
+    autoscale: Option<AutoscaleConfig>,
     /// Per-group router: each class keeps its own round-robin cursor so
     /// correlated cross-class arrival patterns can't alias with the
     /// shard count and pin a class to one shard.
     router: FleetRouter,
     adaptive: Option<AdaptiveHandle>,
+    autoscaler: Option<AutoscalerHandle>,
     /// Requests considered for exit-rate probing (solved split kept the
     /// branch inactive while probing was enabled).
     probe_counter: AtomicU64,
@@ -207,6 +245,11 @@ struct ClassGroup {
 }
 
 impl ClassGroup {
+    fn scaler_stats(&self) -> ScalerStats {
+        self.shards
+            .stats(self.autoscale.as_ref().map(|a| (a.min_shards, a.max_shards)))
+    }
+
     fn planner_stats(&self) -> ClassPlannerStats {
         let (cache_hits, cache_misses) = self.planner.cache_stats();
         let (p_hat, estimator_observations) = match &self.estimator {
@@ -259,15 +302,36 @@ impl Fleet {
     /// pair — e.g. `InferenceEngine::open` twice on the PJRT backend, or
     /// [`InferenceEngine::open_sim`] for the simulated one. `profile`
     /// carries the measured per-stage delays the planners sweep over.
+    ///
+    /// The factory is retained for the fleet's lifetime (hence `Send +
+    /// Sync + 'static`): autoscaling and [`Fleet::grow_class`] provision
+    /// new shards through it long after startup.
     pub fn start(
         registry: ClassRegistry,
         manifest: &Manifest,
         profile: &DelayProfile,
         cfg: FleetConfig,
-        make_engines: impl Fn(&str) -> Result<(InferenceEngine, InferenceEngine)>,
+        make_engines: impl Fn(&str) -> Result<(InferenceEngine, InferenceEngine)>
+            + Send
+            + Sync
+            + 'static,
     ) -> Result<Fleet> {
+        let make_engines: Arc<
+            dyn Fn(&str) -> Result<(InferenceEngine, InferenceEngine)> + Send + Sync,
+        > = Arc::new(make_engines);
         if cfg.shards_per_class == 0 || cfg.shards_per_class > 64 {
             bail!("shards_per_class must be in 1..=64; got {}", cfg.shards_per_class);
+        }
+        if let Some(acfg) = &cfg.autoscale {
+            acfg.validate()?;
+            if !(acfg.min_shards..=acfg.max_shards).contains(&cfg.shards_per_class) {
+                bail!(
+                    "shards_per_class ({}) must lie within the autoscale range {}..={}",
+                    cfg.shards_per_class,
+                    acfg.min_shards,
+                    acfg.max_shards
+                );
+            }
         }
         if cfg.cloud_workers_per_shard == 0 || cfg.cloud_workers_per_shard > 64 {
             bail!(
@@ -379,18 +443,18 @@ impl Fleet {
             let channel = Arc::new(channel);
 
             // Exit-rate feedback: the observer runs on each shard's edge
-            // worker at the branch gate. The shard list doesn't exist
-            // yet when the shards (and their observers) are started, so
-            // the sink slot is filled in right below.
+            // worker at the branch gate. It pushes rebuilt plans to
+            // whatever shards are live at push time — the shard group is
+            // created (empty) before the shards so the observer can
+            // capture it.
             let estimator = cfg
                 .estimation
                 .map(|ecfg| Arc::new(Mutex::new(ExitRateEstimator::new(ecfg, p_class))));
-            let plan_sinks: Arc<RwLock<Vec<Arc<Coordinator>>>> =
-                Arc::new(RwLock::new(Vec::new()));
+            let shard_group = Arc::new(ShardGroup::new());
             let observer: Option<ExitObserver> = estimator.clone().map(|est| {
                 let planner = class_planner.clone();
                 let channel = channel.clone();
-                let sinks = plan_sinks.clone();
+                let sinks = shard_group.clone();
                 Arc::new(move |exited: bool| {
                     // The rebuild runs *inside* the estimator lock so
                     // concurrent shards' drift triggers serialize: the
@@ -412,43 +476,65 @@ impl Fleet {
                             p_hat,
                             new_plan.split_after
                         );
-                        for shard in sinks.read().unwrap().iter() {
+                        for shard in sinks.handles() {
                             shard.set_plan(new_plan.clone());
                         }
                     }
                 }) as ExitObserver
             });
 
+            // One closure provisions one shard; startup, the
+            // autoscaler's grow path and `Fleet::grow_class` all share
+            // it, so a grown shard is wired exactly like a startup one.
+            let spawn_shard: SpawnShard = {
+                let make = make_engines.clone();
+                let name = prof.name.clone();
+                let channel = channel.clone();
+                let planner = class_planner.clone();
+                let remote = remote.clone();
+                let observer = observer.clone();
+                let ccfg = CoordinatorConfig {
+                    entropy_threshold: cfg.entropy_threshold,
+                    max_batch: cfg.max_batch,
+                    batch_timeout: cfg.batch_timeout,
+                    queue_capacity: cfg.queue_capacity,
+                    cloud_workers: cfg.cloud_workers_per_shard,
+                };
+                Arc::new(move |shard_idx: u64| {
+                    let label = format!("{name}-s{shard_idx}");
+                    let (edge, cloud) = make(&label)?;
+                    let cloud_exec = match &remote {
+                        Some(r) => CloudExec::Remote {
+                            remote: r.clone(),
+                            fallback: cloud,
+                        },
+                        None => CloudExec::Local(cloud),
+                    };
+                    // The class's *current* plan: the epoch-checked
+                    // cached solve at the live link reflects every
+                    // estimator/adaptive update so far, so a grown
+                    // shard starts on the same split its siblings were
+                    // last pushed.
+                    let plan = planner.plan(channel.current_link());
+                    Ok(Arc::new(Coordinator::start_observed(
+                        edge,
+                        cloud_exec,
+                        channel.clone(),
+                        plan,
+                        ccfg.clone(),
+                        observer.clone(),
+                    )))
+                })
+            };
+
             let mut shards = Vec::with_capacity(cfg.shards_per_class);
             for s in 0..cfg.shards_per_class {
-                let label = format!("{}-s{}", prof.name, s);
-                let (edge, cloud) = make_engines(&label)?;
-                let cloud_exec = match &remote {
-                    Some(r) => CloudExec::Remote {
-                        remote: r.clone(),
-                        fallback: cloud,
-                    },
-                    None => CloudExec::Local(cloud),
-                };
-                shards.push(Arc::new(Coordinator::start_observed(
-                    edge,
-                    cloud_exec,
-                    channel.clone(),
-                    plan.clone(),
-                    CoordinatorConfig {
-                        entropy_threshold: cfg.entropy_threshold,
-                        max_batch: cfg.max_batch,
-                        batch_timeout: cfg.batch_timeout,
-                        queue_capacity: cfg.queue_capacity,
-                        cloud_workers: cfg.cloud_workers_per_shard,
-                    },
-                    observer.clone(),
-                )));
+                shards.push(spawn_shard(s as u64)?);
             }
-            *plan_sinks.write().unwrap() = shards.clone();
+            shard_group.install_initial(shards);
 
             let adaptive = cfg.adaptive.map(|acfg| {
-                let shard_sinks = shards.clone();
+                let sinks = shard_group.clone();
                 let source_channel = channel.clone();
                 AdaptivePlanner::spawn_with(
                     class_planner.fork_planner(),
@@ -456,10 +542,52 @@ impl Fleet {
                     Some(plan.split_after),
                     move || source_channel.current_link(),
                     move |new_plan: PartitionPlan| {
-                        for shard in &shard_sinks {
+                        for shard in sinks.handles() {
                             shard.set_plan(new_plan.clone());
                         }
                     },
+                )
+            });
+
+            let autoscaler = cfg.autoscale.clone().map(|acfg| {
+                let sample_group = shard_group.clone();
+                let sample_remote = remote.clone();
+                let grow_group = shard_group.clone();
+                let grow_spawn = spawn_shard.clone();
+                let grow_cap = acfg.max_shards;
+                let shrink_group = shard_group.clone();
+                let shrink_floor = acfg.min_shards;
+                Autoscaler::spawn(
+                    prof.name.clone(),
+                    acfg,
+                    move || {
+                        // Retired first, live second: a shard popped by a
+                        // racing shrink then appears in *neither* sum
+                        // (the counter steps back, which from_window
+                        // saturates away) — never in both, which would
+                        // fabricate a rejection delta and force a
+                        // phantom grow.
+                        let retired_rejected = sample_group.retired_rejected();
+                        let handles = sample_group.handles();
+                        LoadSample {
+                            shards: handles.len(),
+                            depth_total: handles.iter().map(|s| s.queue_depth()).sum(),
+                            rejected_total: handles
+                                .iter()
+                                .map(|s| s.rejected_total())
+                                .sum::<u64>()
+                                + retired_rejected,
+                            remote_total: sample_remote
+                                .as_ref()
+                                .map(|r| {
+                                    let st = r.stats();
+                                    st.saturated + st.fast_fails
+                                })
+                                .unwrap_or(0),
+                        }
+                    },
+                    move |trigger| grow_group.grow(trigger, grow_cap, &*grow_spawn),
+                    move |trigger| shrink_group.shrink(trigger, shrink_floor),
                 )
             });
 
@@ -467,11 +595,13 @@ impl Fleet {
                 profile: prof.clone(),
                 planner: class_planner,
                 estimator,
-                plan_sinks,
                 channel,
-                shards,
+                shards: shard_group,
+                spawn_shard,
+                autoscale: cfg.autoscale.clone(),
                 router: FleetRouter::new(cfg.routing),
                 adaptive,
+                autoscaler,
                 probe_counter: AtomicU64::new(0),
                 probe_overrides: AtomicU64::new(0),
             });
@@ -508,7 +638,43 @@ impl Fleet {
 
     /// The plan the class's shards are currently executing.
     pub fn plan_of(&self, class: LinkClass) -> Result<PartitionPlan> {
-        Ok(self.group(class)?.shards[0].plan())
+        // A shard group is never empty (shrinks refuse to empty it).
+        Ok(self.group(class)?.shards.read()[0].plan())
+    }
+
+    /// Live shard count of a class.
+    pub fn shards_of(&self, class: LinkClass) -> Result<usize> {
+        Ok(self.group(class)?.shards.len())
+    }
+
+    /// Scaling observability for a class (current/min/max shards,
+    /// scale-up/down counters, last trigger).
+    pub fn scaler_stats_of(&self, class: LinkClass) -> Result<ScalerStats> {
+        Ok(self.group(class)?.scaler_stats())
+    }
+
+    /// Manually add a shard to a class — the same provisioning path the
+    /// autoscaler's grow decision takes (same engine factory, observer
+    /// and remote wiring; the new shard starts on the class's current
+    /// plan). Returns the new shard count. Bounded by the class's
+    /// autoscale `max_shards` when autoscaling is on (the scaler could
+    /// never walk an overshoot back under load), by the fleet-wide 64
+    /// otherwise.
+    pub fn grow_class(&self, class: LinkClass) -> Result<usize> {
+        let group = self.group(class)?;
+        let cap = group.autoscale.as_ref().map(|a| a.max_shards).unwrap_or(64);
+        group.shards.grow("manual", cap, &*group.spawn_shard)
+    }
+
+    /// Manually retire a class's highest-index shard: it is removed
+    /// from routing first, then drained (every admitted request is
+    /// answered) before its workers join. Returns the new shard count;
+    /// refuses to drop below the class's autoscale `min_shards` (one
+    /// shard on a fixed fleet).
+    pub fn shrink_class(&self, class: LinkClass) -> Result<usize> {
+        let group = self.group(class)?;
+        let floor = group.autoscale.as_ref().map(|a| a.min_shards).unwrap_or(1);
+        group.shards.shrink("manual", floor)
     }
 
     /// This class's planner (for cross-checking plans in tests/tools).
@@ -590,13 +756,20 @@ impl Fleet {
         image: HostTensor,
     ) -> Result<(u64, mpsc::Receiver<InferenceResponse>)> {
         let group = self.group(class)?;
-        let n = group.shards.len();
+        // The read guard spans *pick → submit*: a concurrent shrink
+        // (write lock) cannot retire the picked shard before the
+        // request lands in its admission queue, so no request is ever
+        // routed into a draining pipeline.
+        let shards = group.shards.read();
+        let n = shards.len();
         let shard = if n == 1 {
             0
         } else if group.router.policy() == RoutePolicy::LeastLoaded {
             // Queue depths are only gathered when the policy reads them:
-            // they cost one lock per shard on the admission path.
-            let depths: Vec<usize> = group.shards.iter().map(|s| s.queue_depth()).collect();
+            // they cost one lock per shard on the admission path. The
+            // depths are read from this same consistent view of the
+            // set, so a mid-resize pick never indexes out of bounds.
+            let depths: Vec<usize> = shards.iter().map(|s| s.queue_depth()).collect();
             group.router.pick(key, &depths)
         } else {
             group.router.pick_index(key, n)
@@ -623,9 +796,9 @@ impl Fleet {
                     }
                 }
             }
-            group.shards[shard].submit_planned(image, plan)
+            shards[shard].submit_planned(image, plan)
         } else {
-            group.shards[shard].submit(image)
+            shards[shard].submit(image)
         }
     }
 
@@ -643,15 +816,25 @@ impl Fleet {
             .groups
             .iter()
             .map(|g| {
+                let handles = g.shards.handles();
                 let shards: Vec<MetricsSnapshot> =
-                    g.shards.iter().map(|s| s.metrics()).collect();
+                    handles.iter().map(|s| s.metrics()).collect();
+                let queue_depths: Vec<usize> =
+                    handles.iter().map(|s| s.queue_depth()).collect();
+                // Retired shards' completed work stays in the class
+                // aggregate after a shrink — elasticity must never make
+                // served traffic disappear from the books.
+                let mut all = shards.clone();
+                all.extend(g.shards.retired_snapshots());
                 ClassReport {
                     class: g.planner.class(),
                     name: g.profile.name.clone(),
                     link: g.profile.link,
-                    split_after: g.shards[0].plan().split_after,
+                    split_after: handles[0].plan().split_after,
                     planner: g.planner_stats(),
-                    aggregate: MetricsSnapshot::aggregate(&shards),
+                    scaler: g.scaler_stats(),
+                    queue_depths,
+                    aggregate: MetricsSnapshot::aggregate(&all),
                     shards,
                 }
             })
@@ -659,31 +842,29 @@ impl Fleet {
         FleetReport::from_classes(classes)
     }
 
-    /// Stop the replan loops, drain and join every shard, and return the
-    /// final report.
+    /// Stop the autoscalers and replan loops, drain and join every
+    /// shard, and return the final report.
     pub fn shutdown(mut self) -> FleetReport {
-        // Replan loops first: joining them drops their shard handles, so
-        // the Arc::try_unwrap below sees the last reference. The exit
-        // observers' plan-sink slots hold shard handles too (a cycle
-        // through the shard worker threads) — clear them as well.
+        // Control loops first: no resize or replan may race the drain.
+        // Joining the shard workers (drain_all below) then drops the
+        // observer closures, which is what breaks the group → shard →
+        // worker-closure → group reference cycle.
         for g in &mut self.groups {
+            if let Some(handle) = g.autoscaler.take() {
+                handle.stop();
+            }
             if let Some(handle) = g.adaptive.take() {
                 handle.stop();
             }
-            g.plan_sinks.write().unwrap().clear();
         }
         let mut classes = Vec::with_capacity(self.groups.len());
-        for mut g in self.groups.drain(..) {
-            let split_after = g.shards[0].plan().split_after;
-            let mut shards = Vec::with_capacity(g.shards.len());
-            for shard in g.shards.drain(..) {
-                match Arc::try_unwrap(shard) {
-                    Ok(coordinator) => shards.push(coordinator.shutdown()),
-                    // An external handle still holds the shard (e.g. a
-                    // caller clone): report its metrics without joining.
-                    Err(arc) => shards.push(arc.metrics()),
-                }
-            }
+        for g in self.groups.drain(..) {
+            let split_after = g.shards.read()[0].plan().split_after;
+            let scaler = g.scaler_stats();
+            let shards = g.shards.drain_all();
+            let queue_depths = vec![0; shards.len()]; // drained by construction
+            let mut all = shards.clone();
+            all.extend(g.shards.retired_snapshots());
             classes.push(ClassReport {
                 class: g.planner.class(),
                 name: g.profile.name.clone(),
@@ -692,7 +873,9 @@ impl Fleet {
                 // After the drain/join, so gate observations that landed
                 // while shards were draining are counted.
                 planner: g.planner_stats(),
-                aggregate: MetricsSnapshot::aggregate(&shards),
+                scaler,
+                queue_depths,
+                aggregate: MetricsSnapshot::aggregate(&all),
                 shards,
             });
         }

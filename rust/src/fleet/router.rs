@@ -152,6 +152,46 @@ mod tests {
     }
 
     #[test]
+    fn picks_remap_in_bounds_across_resizes() {
+        // One router instance survives its group growing and shrinking
+        // (the autoscaler path): every policy must keep its picks
+        // inside whatever candidate count the *current* call presents,
+        // and hash must still cover the grown set.
+        let hash = FleetRouter::new(RoutePolicy::Hash);
+        for n in [1usize, 2, 3, 5, 8, 3, 1] {
+            let mut hit = vec![false; n];
+            for key in 0..256u64 {
+                let p = hash.pick_index(key, n);
+                assert!(p < n, "hash picked {p} of {n}");
+                hit[p] = true;
+            }
+            assert!(hit.iter().all(|&h| h), "256 keys must cover {n} shards");
+        }
+        // Equal keys stay together between resizes at a given size.
+        assert_eq!(hash.pick_index(42, 5), hash.pick_index(42, 5));
+
+        // Round-robin's cursor is absolute, so a resize mid-cycle still
+        // lands in bounds (the modulus follows the live count).
+        let rr = FleetRouter::new(RoutePolicy::RoundRobin);
+        for _ in 0..5 {
+            assert!(rr.pick_index(0, 2) < 2);
+        }
+        for _ in 0..7 {
+            assert!(rr.pick_index(0, 3) < 3);
+        }
+        for _ in 0..3 {
+            assert_eq!(rr.pick_index(0, 1), 0);
+        }
+
+        // Least-loaded reads whatever depth slice the post-resize set
+        // produced — fewer or more candidates than the last call.
+        let ll = FleetRouter::new(RoutePolicy::LeastLoaded);
+        assert_eq!(ll.pick(0, &[3, 1, 2, 9]), 1);
+        assert_eq!(ll.pick(0, &[4, 2]), 1);
+        assert_eq!(ll.pick(0, &[7]), 0);
+    }
+
+    #[test]
     fn pick_index_matches_pick_for_depth_free_policies() {
         let rr = FleetRouter::new(RoutePolicy::RoundRobin);
         assert_eq!(

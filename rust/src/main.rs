@@ -65,6 +65,12 @@ fn cli() -> Cli {
                 .flag(Flag::value("cloud-workers", "cloud worker threads per shard"))
                 .flag(Flag::value("routing", "round-robin|hash|least-loaded"))
                 .flag(Flag::switch(
+                    "autoscale",
+                    "grow/shrink each class's shards from queue depth and rejections",
+                ))
+                .flag(Flag::value("min-shards", "autoscale floor (default 1)"))
+                .flag(Flag::value("max-shards", "autoscale ceiling (default 8)"))
+                .flag(Flag::switch(
                     "per-request",
                     "plan each request at the instantaneous link estimate",
                 ))
@@ -320,6 +326,33 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
         None => RoutePolicy::parse(&settings.fleet.routing)?,
     };
     let per_request = inv.has("per-request") || settings.fleet.per_request_planning;
+    let autoscale = if inv.has("autoscale") || settings.fleet.autoscale {
+        let mut acfg = settings.fleet.autoscale_config()?;
+        if let Some(lo) = get_usize(inv, "min-shards")? {
+            acfg.min_shards = lo;
+        }
+        if let Some(hi) = get_usize(inv, "max-shards")? {
+            acfg.max_shards = hi;
+        }
+        acfg.validate()?;
+        if !(acfg.min_shards..=acfg.max_shards).contains(&shards) {
+            anyhow::bail!(
+                "--shards {} must lie within --min-shards..=--max-shards ({}..={})",
+                shards,
+                acfg.min_shards,
+                acfg.max_shards
+            );
+        }
+        Some(acfg)
+    } else {
+        if get_usize(inv, "min-shards")?.is_some() || get_usize(inv, "max-shards")?.is_some() {
+            anyhow::bail!(
+                "--min-shards/--max-shards require --autoscale (or [fleet] autoscale = true); \
+                 without it the shard count is fixed at --shards"
+            );
+        }
+        None
+    };
     let probe_fraction =
         get_f64(inv, "probe-fraction")?.unwrap_or(settings.fleet.probe_fraction);
     let cloud_addr = inv
@@ -354,7 +387,10 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
     } else {
         Manifest::load(&settings.model.artifacts_dir)?
     };
-    type EngineFactory = Box<dyn Fn(&str) -> Result<(InferenceEngine, InferenceEngine)>>;
+    // `Send + Sync`: the fleet retains the factory so the autoscaler
+    // can provision shards long after startup, from its own thread.
+    type EngineFactory =
+        Box<dyn Fn(&str) -> Result<(InferenceEngine, InferenceEngine)> + Send + Sync>;
     let make_engines: EngineFactory = if sim {
         let m = manifest.clone();
         Box::new(move |label: &str| {
@@ -383,9 +419,11 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
     // Per-stage delays: saved/measured profile for real artifacts,
     // measured on a probe engine for the sim. When a PJRT measurement is
     // needed, the probe pair is handed to the fleet as its first shard
-    // instead of leaking a third warmed-up PJRT client.
-    let spare_pair: std::cell::RefCell<Option<(InferenceEngine, InferenceEngine)>> =
-        std::cell::RefCell::new(None);
+    // instead of leaking a third warmed-up PJRT client. Mutex (not
+    // RefCell): the fleet's factory closure must be `Sync` now that
+    // autoscaling can invoke it from the control-loop thread.
+    let spare_pair: std::sync::Mutex<Option<(InferenceEngine, InferenceEngine)>> =
+        std::sync::Mutex::new(None);
     let report = if sim {
         let probe = InferenceEngine::open_sim_with_cost(manifest.clone(), "profile", sim_cost)?;
         profiler::measure(&probe, ProfileOptions::default())?
@@ -403,7 +441,7 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
                 );
                 let pair = make_engines("shard-probe")?;
                 let r = profiler::measure(&pair.0, ProfileOptions::default())?;
-                *spare_pair.borrow_mut() = Some(pair);
+                *spare_pair.lock().unwrap() = Some(pair);
                 r
             }
         }
@@ -467,6 +505,7 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             default_exit_prob: default_p,
             epsilon: settings.partition.epsilon,
             adaptive,
+            autoscale: autoscale.clone(),
             estimation,
             per_request_planning: per_request,
             probe_fraction,
@@ -474,9 +513,9 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             channel_jitter: 0.0,
             real_time_channel: true,
         },
-        |label: &str| {
+        move |label: &str| {
             // The profiling probe becomes the first shard.
-            if let Some(pair) = spare_pair.borrow_mut().take() {
+            if let Some(pair) = spare_pair.lock().unwrap().take() {
                 return Ok(pair);
             }
             make_engines(label)
@@ -502,6 +541,14 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
         },
         probe_fraction,
     );
+    match &autoscale {
+        Some(a) => println!(
+            "autoscale: on ({}..={} shards per class, up at depth {}, down at {}, \
+             cooldown {:?})",
+            a.min_shards, a.max_shards, a.scale_up_depth, a.scale_down_depth, a.cooldown,
+        ),
+        None => println!("autoscale: off (fixed {shards} shard(s) per class)"),
+    }
     match &cloud_addr {
         Some(addr) => println!(
             "cloud stages: remote @ {addr} (local fallback on failure) — \

@@ -1,0 +1,357 @@
+//! Autoscaling integration: a sustained single-class burst grows that
+//! class to `max_shards` while an idle class shrinks to `min_shards`,
+//! with zero dropped requests and answers bit-identical to a fixed-fleet
+//! oracle — plus router behavior across resizes (hash remap,
+//! least-loaded on the post-resize set, shrink mid-stream). Runs
+//! entirely on the simulated runtime.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use branchyserve::coordinator::InferenceResponse;
+use branchyserve::fleet::{
+    AutoscaleConfig, ClassProfile, ClassRegistry, Fleet, FleetConfig, RoutePolicy,
+};
+use branchyserve::model::Manifest;
+use branchyserve::runtime::{HostTensor, InferenceEngine};
+use branchyserve::timing::DelayProfile;
+use branchyserve::workload::ImageSource;
+
+const N_STAGES: usize = 5;
+/// Per-stage synthetic compute: slow enough that an instantaneous burst
+/// builds real queue depth, fast enough to keep the test snappy.
+const STAGE_COST: Duration = Duration::from_micros(400);
+
+fn sim_manifest() -> Manifest {
+    Manifest::synthetic_sim(
+        "sim-autoscale-test",
+        vec![3, 32, 32],
+        &[512, 256, 128, 64, 2],
+        1,
+        2,
+        vec![1, 2, 4, 8],
+    )
+    .unwrap()
+}
+
+fn sim_profile() -> DelayProfile {
+    DelayProfile::from_cloud_times(vec![1e-4; N_STAGES], 2e-5, 50.0)
+}
+
+/// A fleet over slow-uplink classes (edge-only plans: nothing crosses
+/// the simulated channel, so timing is pure pipeline compute).
+fn start_fleet(class_names: &[&str], cfg: FleetConfig) -> Fleet {
+    let registry = ClassRegistry::new(
+        class_names
+            .iter()
+            .map(|n| ClassProfile::custom(n, 0.05, 0.0).unwrap())
+            .collect(),
+    )
+    .unwrap();
+    let manifest = sim_manifest();
+    let profile = sim_profile();
+    let m = manifest.clone();
+    Fleet::start(registry, &manifest, &profile, cfg, move |label| {
+        Ok((
+            InferenceEngine::open_sim_with_cost(m.clone(), &format!("{label}-e"), STAGE_COST)?,
+            InferenceEngine::open_sim_with_cost(m.clone(), &format!("{label}-c"), STAGE_COST)?,
+        ))
+    })
+    .unwrap()
+}
+
+fn fast_cfg() -> FleetConfig {
+    FleetConfig {
+        batch_timeout: Duration::from_millis(1),
+        real_time_channel: false,
+        entropy_threshold: 0.0, // deterministic: nothing exits early
+        queue_capacity: 8192,   // the burst must queue, never reject
+        ..Default::default()
+    }
+}
+
+/// Tight autoscale knobs so the whole story plays out in well under a
+/// second: decisions every ~6 ms, resizes at most every 25 ms.
+fn fast_autoscale() -> AutoscaleConfig {
+    AutoscaleConfig {
+        min_shards: 1,
+        max_shards: 4,
+        scale_up_depth: 4.0,
+        scale_down_depth: 0.5,
+        interval: Duration::from_millis(3),
+        window: 2,
+        cooldown: Duration::from_millis(25),
+    }
+}
+
+fn recv_all(pending: Vec<(u64, mpsc::Receiver<InferenceResponse>)>) -> Vec<InferenceResponse> {
+    pending
+        .into_iter()
+        .map(|(_, rx)| rx.recv_timeout(Duration::from_secs(60)).expect("request dropped"))
+        .collect()
+}
+
+/// The acceptance test: burst one class of an elastic two-class fleet.
+/// The bursty class must reach `max_shards`, the idle one must settle
+/// at `min_shards`, every submitted request must complete, the answers
+/// must be bit-identical to a fixed-size oracle fleet fed the same
+/// inputs, and the `ScalerStats` counters must reconcile with the
+/// observed shard counts.
+#[test]
+fn burst_grows_to_max_while_idle_shrinks_to_min_with_oracle_identical_results() {
+    let acfg = fast_autoscale();
+    let (min, max) = (acfg.min_shards, acfg.max_shards);
+    let initial = 2;
+    let fleet = start_fleet(
+        &["burst", "idle"],
+        FleetConfig {
+            shards_per_class: initial,
+            autoscale: Some(acfg),
+            ..fast_cfg()
+        },
+    );
+    let burst = fleet.class_by_name("burst").unwrap();
+    let idle = fleet.class_by_name("idle").unwrap();
+    assert_eq!(fleet.shards_of(burst).unwrap(), initial);
+    assert_eq!(fleet.shards_of(idle).unwrap(), initial);
+
+    // Sustained burst: keep queueing work until the class has grown to
+    // max_shards (the drained-too-fast case just feeds more), recording
+    // every submitted image so the oracle can replay them.
+    let mut source = ImageSource::new(80);
+    let mut images: Vec<HostTensor> = Vec::new();
+    let mut pending = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        for _ in 0..200 {
+            let (img, _) = source.sample();
+            pending.push(fleet.submit(burst, img.clone()).expect("admission rejected"));
+            images.push(img);
+        }
+        if fleet.shards_of(burst).unwrap() >= max {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "burst class never reached max_shards: {:?}",
+            fleet.scaler_stats_of(burst).unwrap()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(fleet.shards_of(burst).unwrap(), max);
+
+    // Every burst request completes — growth never drops work.
+    let responses = recv_all(pending);
+
+    // The idle class saw nothing: it must shrink to the floor. (The
+    // burst class, now also idle, eventually follows — same rule.)
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while fleet.shards_of(idle).unwrap() > min || fleet.shards_of(burst).unwrap() > min {
+        assert!(
+            Instant::now() < deadline,
+            "idle classes never shrank to min_shards: idle {:?}, burst {:?}",
+            fleet.scaler_stats_of(idle).unwrap(),
+            fleet.scaler_stats_of(burst).unwrap()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let report = fleet.shutdown();
+    let by_name = |n: &str| report.classes.iter().find(|c| c.name == n).unwrap();
+    let burst_report = by_name("burst");
+    let idle_report = by_name("idle");
+
+    // Scaler counters reconcile exactly with what we observed: the
+    // shard count walked initial → max → min, so ups − downs = min −
+    // initial, with at least (max − initial) ups along the way.
+    for (report, label) in [(burst_report, "burst"), (idle_report, "idle")] {
+        let s = &report.scaler;
+        assert!(s.enabled);
+        assert_eq!((s.min_shards, s.max_shards), (min, max), "{label}");
+        assert_eq!(s.current_shards, min, "{label}");
+        assert_eq!(s.current_shards, report.shards.len(), "{label}");
+        assert_eq!(
+            s.scale_ups as i64 - s.scale_downs as i64,
+            min as i64 - initial as i64,
+            "{label}: ups/downs don't reconcile with the observed sizes: {s:?}"
+        );
+        assert_eq!(s.retired_shards as u64, s.scale_downs, "{label}");
+        assert!(s.last_trigger.is_some(), "{label} resized without a trigger");
+    }
+    assert!(
+        burst_report.scaler.scale_ups >= (max - initial) as u64,
+        "{:?}",
+        burst_report.scaler
+    );
+    assert_eq!(idle_report.scaler.scale_ups, 0, "{:?}", idle_report.scaler);
+
+    // Zero requests dropped or rejected, and retired shards' completed
+    // work still counts in the class aggregate.
+    assert_eq!(burst_report.aggregate.completed as usize, images.len());
+    assert_eq!(burst_report.aggregate.rejected, 0);
+    assert_eq!(idle_report.aggregate.completed, 0);
+
+    // Oracle: a fixed-size fleet served the identical inputs — every
+    // answer (class and entropy) must be bit-identical, elastic or not.
+    let oracle = start_fleet(
+        &["burst", "idle"],
+        FleetConfig {
+            shards_per_class: initial,
+            ..fast_cfg()
+        },
+    );
+    let oracle_class = oracle.class_by_name("burst").unwrap();
+    let oracle_pending: Vec<_> = images
+        .iter()
+        .map(|img| oracle.submit(oracle_class, img.clone()).unwrap())
+        .collect();
+    let oracle_responses = recv_all(oracle_pending);
+    oracle.shutdown();
+    assert_eq!(responses.len(), oracle_responses.len());
+    for (i, (got, want)) in responses.iter().zip(&oracle_responses).enumerate() {
+        assert_eq!(got.class, want.class, "answer {i} diverged from the oracle");
+        assert_eq!(
+            got.entropy.to_bits(),
+            want.entropy.to_bits(),
+            "entropy {i} diverged from the oracle"
+        );
+    }
+}
+
+/// Hash routing across a grow: keys map in-bounds on every set size,
+/// stay stable between resizes, and the grown shards actually receive
+/// traffic.
+#[test]
+fn hash_routing_remaps_cleanly_after_grow() {
+    let fleet = start_fleet(
+        &["only"],
+        FleetConfig {
+            shards_per_class: 2,
+            routing: RoutePolicy::Hash,
+            ..fast_cfg()
+        },
+    );
+    let class = fleet.class_by_name("only").unwrap();
+    let mut source = ImageSource::new(81);
+
+    let mut pending = Vec::new();
+    for key in 0..64u64 {
+        pending.push(fleet.submit_keyed(class, key, source.sample().0).unwrap());
+    }
+    recv_all(pending);
+
+    assert_eq!(fleet.grow_class(class).unwrap(), 3);
+    assert_eq!(fleet.grow_class(class).unwrap(), 4);
+
+    let mut pending = Vec::new();
+    for key in 0..64u64 {
+        pending.push(fleet.submit_keyed(class, key, source.sample().0).unwrap());
+    }
+    recv_all(pending);
+
+    let report = fleet.shutdown();
+    let per_shard: Vec<u64> = report.classes[0].shards.iter().map(|s| s.completed).collect();
+    assert_eq!(per_shard.len(), 4);
+    assert_eq!(per_shard.iter().sum::<u64>(), 128);
+    assert!(
+        per_shard[2] + per_shard[3] > 0,
+        "64 keys over 4 shards never landed on a grown shard: {per_shard:?}"
+    );
+    let s = &report.classes[0].scaler;
+    assert_eq!((s.scale_ups, s.scale_downs), (2, 0));
+    assert_eq!(s.last_trigger.as_deref(), Some("grow: manual"));
+}
+
+/// Least-loaded routing reads queue depths from the post-resize set: a
+/// burst after growing 1 → 3 must spread across all three shards
+/// (depth-ordered picks), not pin to the original shard.
+#[test]
+fn least_loaded_reads_depths_from_the_post_resize_set() {
+    let fleet = start_fleet(
+        &["only"],
+        FleetConfig {
+            shards_per_class: 1,
+            routing: RoutePolicy::LeastLoaded,
+            ..fast_cfg()
+        },
+    );
+    let class = fleet.class_by_name("only").unwrap();
+    assert_eq!(fleet.grow_class(class).unwrap(), 2);
+    assert_eq!(fleet.grow_class(class).unwrap(), 3);
+
+    // Instantaneous burst: each submit sees the previous ones' depths,
+    // so least-loaded walks the whole (post-grow) set.
+    let mut source = ImageSource::new(82);
+    let mut pending = Vec::new();
+    for _ in 0..48 {
+        pending.push(fleet.submit(class, source.sample().0).unwrap());
+    }
+    recv_all(pending);
+
+    let report = fleet.shutdown();
+    let per_shard: Vec<u64> = report.classes[0].shards.iter().map(|s| s.completed).collect();
+    assert_eq!(per_shard.iter().sum::<u64>(), 48);
+    assert!(
+        per_shard.iter().all(|&c| c > 0),
+        "least-loaded left a post-grow shard idle: {per_shard:?}"
+    );
+}
+
+/// Shrinking under live traffic: requests keep flowing while two
+/// shrinks retire two of three shards. The admission path holds the
+/// shard-set read lock across pick → submit, so no request can be
+/// routed into a draining shard — every single one must complete, and
+/// the retired shards' work must stay on the books.
+#[test]
+fn shrink_mid_stream_never_drops_requests() {
+    let fleet = std::sync::Arc::new(start_fleet(
+        &["only"],
+        FleetConfig {
+            shards_per_class: 3,
+            routing: RoutePolicy::RoundRobin,
+            ..fast_cfg()
+        },
+    ));
+    let class = fleet.class_by_name("only").unwrap();
+
+    let submitter = {
+        let fleet = fleet.clone();
+        std::thread::spawn(move || {
+            let mut source = ImageSource::new(83);
+            let mut pending = Vec::new();
+            for i in 0..300 {
+                pending.push(fleet.submit(class, source.sample().0).unwrap());
+                if i % 16 == 0 {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            pending
+        })
+    };
+
+    // Retire two shards while the stream is in flight.
+    std::thread::sleep(Duration::from_millis(5));
+    assert_eq!(fleet.shrink_class(class).unwrap(), 2);
+    assert_eq!(fleet.shrink_class(class).unwrap(), 1);
+    // Never below one shard.
+    assert!(fleet.shrink_class(class).is_err());
+
+    let pending = submitter.join().unwrap();
+    assert_eq!(recv_all(pending).len(), 300);
+
+    let fleet = match std::sync::Arc::try_unwrap(fleet) {
+        Ok(f) => f,
+        Err(_) => panic!("submitter kept its fleet handle"),
+    };
+    let report = fleet.shutdown();
+    let c = &report.classes[0];
+    assert_eq!(c.shards.len(), 1);
+    assert_eq!(
+        c.aggregate.completed, 300,
+        "retired shards' completions fell off the books"
+    );
+    assert_eq!(c.aggregate.rejected, 0);
+    assert_eq!(c.scaler.scale_downs, 2);
+    assert_eq!(c.scaler.retired_shards, 2);
+    assert_eq!(c.queue_depths.len(), 1);
+}

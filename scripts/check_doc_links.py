@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Verify every relative link in the repo's Markdown files resolves.
+
+Scans all tracked *.md files (git ls-files) for inline links/images
+(`[text](target)`) and reference definitions (`[label]: target`),
+skips absolute URLs (http/https/mailto) and pure in-page anchors
+(`#...`), strips `#fragment` suffixes, and checks that the remaining
+path exists relative to the file that links it.
+
+Exit status: 0 when every link resolves, 1 otherwise (one line per
+broken link: `file:line: broken link -> target`). Run from anywhere
+inside the repo; CI runs it from the repo root.
+"""
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+# Inline links/images: [text](target) — target taken up to the first
+# unescaped ')', tolerating titles: [t](path "title").
+INLINE = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+# Reference definitions at line start: [label]: target
+REFDEF = re.compile(r"^\s{0,3}\[[^\]]+\]:\s+<?(\S+?)>?(?:\s+\"[^\"]*\")?\s*$")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://", "#")
+
+
+def tracked_markdown(root: Path) -> list[Path]:
+    out = subprocess.run(
+        ["git", "ls-files", "*.md", "**/*.md"],
+        cwd=root,
+        capture_output=True,
+        text=True,
+        check=True,
+    )
+    return [root / line for line in out.stdout.splitlines() if line]
+
+
+def iter_links(text: str):
+    fenced = False
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        # Links inside fenced code blocks are examples, not navigation.
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if fenced:
+            continue
+        m = REFDEF.match(line)
+        if m:
+            yield lineno, m.group(1)
+            continue
+        for m in INLINE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def main() -> int:
+    root = Path(
+        subprocess.run(
+            ["git", "rev-parse", "--show-toplevel"],
+            capture_output=True,
+            text=True,
+            check=True,
+        ).stdout.strip()
+    )
+    broken = []
+    checked = 0
+    for md in tracked_markdown(root):
+        text = md.read_text(encoding="utf-8")
+        for lineno, target in iter_links(text):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            checked += 1
+            if not resolved.exists():
+                broken.append(f"{md.relative_to(root)}:{lineno}: broken link -> {target}")
+    for line in broken:
+        print(line, file=sys.stderr)
+    print(f"checked {checked} relative link(s) in tracked markdown: "
+          f"{'OK' if not broken else f'{len(broken)} broken'}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
