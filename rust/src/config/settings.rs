@@ -10,6 +10,7 @@ use anyhow::{bail, Context, Result};
 
 use super::json::Json;
 use super::toml;
+use crate::network::encoding::WireEncoding;
 
 /// Which kernel flavor of the artifacts to execute (DESIGN.md: both are
 /// exported; 'pl' is the Pallas-lowered path, 'ref' the XLA-fused one).
@@ -172,6 +173,11 @@ pub struct FleetSettings {
     /// cloud-serve`). When set, the serving fleet ships transferred
     /// activations there instead of running cloud stages in-process.
     pub cloud_addr: Option<String>,
+    /// Activation wire encoding for remote cloud offload: `raw` (f32,
+    /// bit-exact), `q8` (8-bit linear quantization, 4x smaller) or `q4`
+    /// (4-bit, ~8x smaller). The planner prices transfers at this
+    /// encoding's wire size, so changing it can move the optimal split.
+    pub wire_encoding: WireEncoding,
     /// Grow/shrink each class's shard group from observed load
     /// (queue depth, admission rejections) between
     /// `min_shards..=max_shards`; `shards` is the starting size.
@@ -235,6 +241,9 @@ pub struct LinkClassSettings {
     pub rtt_s: f64,
     /// Planning exit-probability override for this class.
     pub exit_probability: Option<f64>,
+    /// Per-class cloud-stage server override (`HOST:PORT`); `None`
+    /// falls back to the fleet-wide `fleet.cloud_addr`.
+    pub cloud_addr: Option<String>,
 }
 
 #[derive(Debug, Clone)]
@@ -287,6 +296,7 @@ impl Default for Settings {
                 drift_threshold: 0.1,
                 probe_fraction: 0.0,
                 cloud_addr: None,
+                wire_encoding: WireEncoding::Raw,
                 autoscale: false,
                 min_shards: 1,
                 max_shards: 8,
@@ -387,6 +397,10 @@ impl Settings {
         if let Some(v) = doc.path("fleet.cloud_addr").and_then(Json::as_str) {
             self.fleet.cloud_addr = Some(v.to_string());
         }
+        if let Some(v) = doc.path("fleet.wire_encoding").and_then(Json::as_str) {
+            self.fleet.wire_encoding =
+                WireEncoding::parse(v).context("fleet.wire_encoding")?;
+        }
         if let Some(v) = doc.path("fleet.autoscale").and_then(Json::as_bool) {
             self.fleet.autoscale = v;
         }
@@ -437,11 +451,16 @@ impl Settings {
                     .map(|ms| ms / 1e3)
                     .unwrap_or(0.0);
                 let exit_probability = entry.get("exit_probability").and_then(Json::as_f64);
+                let cloud_addr = entry
+                    .get("cloud_addr")
+                    .and_then(Json::as_str)
+                    .map(str::to_string);
                 self.link_classes.push(LinkClassSettings {
                     name,
                     uplink_mbps,
                     rtt_s,
                     exit_probability,
+                    cloud_addr,
                 });
             }
         }
@@ -566,6 +585,11 @@ impl Settings {
                     );
                 }
             }
+            if let Some(addr) = &c.cloud_addr {
+                if let Err(e) = validate_host_port(addr) {
+                    bail!("link_class[{i}] ('{}').cloud_addr: {e}", c.name);
+                }
+            }
         }
         Ok(())
     }
@@ -653,6 +677,7 @@ online_estimation = true
 drift_threshold = 0.25
 probe_fraction = 0.05
 cloud_addr = "cloud.internal:7879"
+wire_encoding = "q8"
 autoscale = true
 min_shards = 2
 max_shards = 6
@@ -670,6 +695,7 @@ name = "satellite"
 uplink_mbps = 0.35
 rtt_ms = 280
 exit_probability = 0.8
+cloud_addr = "sat-cloud.internal:7880"
 "#,
         )
         .unwrap();
@@ -684,6 +710,7 @@ exit_probability = 0.8
         assert!((s.fleet.drift_threshold - 0.25).abs() < 1e-12);
         assert!((s.fleet.probe_fraction - 0.05).abs() < 1e-12);
         assert_eq!(s.fleet.cloud_addr.as_deref(), Some("cloud.internal:7879"));
+        assert_eq!(s.fleet.wire_encoding, WireEncoding::Q8);
         assert!(s.fleet.autoscale);
         let acfg = s.fleet.autoscale_config().unwrap();
         assert_eq!((acfg.min_shards, acfg.max_shards), (2, 6));
@@ -698,6 +725,12 @@ exit_probability = 0.8
         assert!((s.link_classes[0].uplink_mbps - 1.10).abs() < 1e-12);
         assert!((s.link_classes[1].rtt_s - 0.28).abs() < 1e-12);
         assert_eq!(s.link_classes[1].exit_probability, Some(0.8));
+        // Per-class cloud override rides next to the fleet-wide one.
+        assert_eq!(s.link_classes[0].cloud_addr, None);
+        assert_eq!(
+            s.link_classes[1].cloud_addr.as_deref(),
+            Some("sat-cloud.internal:7880")
+        );
     }
 
     #[test]
@@ -783,6 +816,7 @@ exit_probability = 0.8
             uplink_mbps: -2.0,
             rtt_s: 0.0,
             exit_probability: None,
+            cloud_addr: None,
         });
         let e = s.validate().unwrap_err().to_string();
         assert!(e.contains("link_class[0]") && e.contains("uplink_mbps"), "{e}");
@@ -794,6 +828,7 @@ exit_probability = 0.8
                 uplink_mbps: 5.0,
                 rtt_s: 0.0,
                 exit_probability: None,
+                cloud_addr: None,
             });
         }
         let e = s.validate().unwrap_err().to_string();
@@ -805,9 +840,28 @@ exit_probability = 0.8
             uplink_mbps: 5.0,
             rtt_s: 0.0,
             exit_probability: Some(1.5),
+            cloud_addr: None,
         });
         let e = s.validate().unwrap_err().to_string();
         assert!(e.contains("exit_probability"), "{e}");
+
+        // A malformed per-class cloud endpoint names its entry.
+        let mut s = Settings::default();
+        s.link_classes.push(LinkClassSettings {
+            name: "edgey".into(),
+            uplink_mbps: 5.0,
+            rtt_s: 0.0,
+            exit_probability: None,
+            cloud_addr: Some("nocolon".into()),
+        });
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("link_class[0]") && e.contains("cloud_addr"), "{e}");
+
+        // An unknown wire encoding fails at overlay time, naming the key.
+        let doc = toml::parse("[fleet]\nwire_encoding = \"q2\"\n").unwrap();
+        let mut s = Settings::default();
+        let e = format!("{:#}", s.apply(&doc).unwrap_err());
+        assert!(e.contains("fleet.wire_encoding"), "{e}");
 
         // A non-builtin class without a rate fails at overlay time.
         let doc = toml::parse("[[link_class]]\nname = \"mystery\"\n").unwrap();

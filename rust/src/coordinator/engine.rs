@@ -33,7 +33,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::model::Manifest;
-use crate::network::Channel;
+use crate::network::{Channel, WireEncoding};
 use crate::partition::PartitionPlan;
 use crate::runtime::{HostTensor, InferenceEngine};
 use crate::server::protocol::{BRANCH_GATED, BRANCH_PENDING};
@@ -120,6 +120,13 @@ pub struct CoordinatorConfig {
     /// waits) overlap across batches; all workers share one engine
     /// handle, so with a single PJRT client compute still serializes.
     pub cloud_workers: usize,
+    /// Wire encoding the activation transfer is priced at: the
+    /// simulated channel charges
+    /// [`WireEncoding::payload_bytes`] of the raw activation per
+    /// sample — the same size map a remote engine configured with this
+    /// encoding actually ships, so simulated and physical deployments
+    /// pay the same wire.
+    pub wire_encoding: WireEncoding,
 }
 
 impl Default for CoordinatorConfig {
@@ -130,6 +137,7 @@ impl Default for CoordinatorConfig {
             batch_timeout: Duration::from_millis(2),
             queue_capacity: 1024,
             cloud_workers: 1,
+            wire_encoding: WireEncoding::Raw,
         }
     }
 }
@@ -206,6 +214,7 @@ impl Coordinator {
             let cloud_queue = cloud_queue.clone();
             let metrics = metrics.clone();
             let threshold = cfg.entropy_threshold;
+            let encoding = cfg.wire_encoding;
             let observer = observer.clone();
             workers.push(
                 std::thread::Builder::new()
@@ -219,6 +228,7 @@ impl Coordinator {
                             cloud_queue,
                             metrics,
                             threshold,
+                            encoding,
                             observer,
                         )
                     })
@@ -413,6 +423,7 @@ fn edge_loop(
     cloud_queue: Arc<Batcher<TransferredSample>>,
     metrics: Arc<Metrics>,
     threshold: f32,
+    encoding: WireEncoding,
     observer: Option<ExitObserver>,
 ) {
     let max_exec = engine.max_batch();
@@ -450,6 +461,7 @@ fn edge_loop(
                     &cloud_queue,
                     &metrics,
                     threshold,
+                    encoding,
                     observer.as_ref(),
                     &mut answered,
                 ) {
@@ -478,6 +490,7 @@ fn process_edge_chunk(
     cloud_queue: &Batcher<TransferredSample>,
     metrics: &Metrics,
     threshold: f32,
+    encoding: WireEncoding,
     observer: Option<&ExitObserver>,
     answered: &mut usize,
 ) -> Result<()> {
@@ -585,10 +598,13 @@ fn process_edge_chunk(
     }
 
     // Transfer survivors to the cloud (pipelined: stamp ready_at).
+    // The channel is charged what the wire encoding actually ships per
+    // sample, not the raw f32 size — q8/q4 shrink the simulated upload
+    // exactly as they shrink a physical one.
     let per_sample = x.unstack();
     let sample_bytes: u64 = per_sample
         .first()
-        .map(|t| t.size_bytes())
+        .map(|t| encoding.payload_bytes(t.size_bytes()))
         .unwrap_or(0);
     let total_bytes = sample_bytes * alive.len() as u64;
     let delay = channel.sample_delay(total_bytes);
@@ -884,6 +900,35 @@ mod tests {
         assert_eq!(m.completed + m.rejected + m.failed, 7);
         // Idempotent: nothing left to wait for or join.
         assert_eq!(c.drain().completed, 6);
+    }
+
+    #[test]
+    fn simulated_channel_charges_encoded_bytes_not_raw() {
+        // Split 1 on the sim model transfers a 16-element (64-byte raw)
+        // activation per sample; the channel must be billed what the
+        // configured encoding would actually put on the wire.
+        for (enc, want_per_sample) in [
+            (WireEncoding::Raw, 64u64),
+            (WireEncoding::Q8, 8 + 16),
+            (WireEncoding::Q4, 8 + 8),
+        ] {
+            let (manifest, edge, cloud, channel) = sim_setup();
+            let c = Coordinator::start(
+                edge,
+                cloud,
+                channel,
+                plan_at(&manifest, 1),
+                CoordinatorConfig {
+                    wire_encoding: enc,
+                    ..cfg()
+                },
+            );
+            for _ in 0..3 {
+                c.infer_sync(HostTensor::zeros(vec![4])).unwrap();
+            }
+            let m = c.shutdown();
+            assert_eq!(m.transferred_bytes, 3 * want_per_sample, "{enc:?}");
+        }
     }
 
     #[test]

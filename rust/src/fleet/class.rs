@@ -40,6 +40,11 @@ pub struct ClassProfile {
     /// the fleet default. A class with an override cannot share the
     /// planner prefix sums (they depend on p), so it gets its own.
     pub exit_probability: Option<f64>,
+    /// Cloud-stage server this class offloads to; `None` uses the
+    /// fleet-wide `cloud_addr` (or in-process cloud if that is unset
+    /// too). Lets a geographically split fleet keep each class's
+    /// suffix stages near its clients.
+    pub cloud_addr: Option<String>,
 }
 
 impl ClassProfile {
@@ -51,6 +56,7 @@ impl ClassProfile {
             link: LinkModel::from_profile(p),
             trace: None,
             exit_probability: None,
+            cloud_addr: None,
         })
     }
 
@@ -65,11 +71,19 @@ impl ClassProfile {
             link: LinkModel::try_new(uplink_mbps, rtt_s)?,
             trace: None,
             exit_probability: None,
+            cloud_addr: None,
         })
     }
 
     pub fn with_trace(mut self, trace: BandwidthTrace) -> ClassProfile {
         self.trace = Some(trace);
+        self
+    }
+
+    /// Offload this class to its own cloud-stage server instead of the
+    /// fleet-wide one.
+    pub fn with_cloud_addr(mut self, addr: impl Into<String>) -> ClassProfile {
+        self.cloud_addr = Some(addr.into());
         self
     }
 
@@ -135,6 +149,7 @@ impl ClassRegistry {
         for e in entries {
             let mut c = ClassProfile::custom(&e.name, e.uplink_mbps, e.rtt_s)?;
             c.exit_probability = e.exit_probability;
+            c.cloud_addr = e.cloud_addr.clone();
             classes.push(c);
         }
         ClassRegistry::new(classes)

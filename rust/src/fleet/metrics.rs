@@ -4,6 +4,7 @@
 use crate::config::json::Json;
 use crate::coordinator::MetricsSnapshot;
 use crate::network::bandwidth::LinkModel;
+use crate::network::encoding::WireEncoding;
 
 use super::autoscale::ScalerStats;
 use super::class::LinkClass;
@@ -44,6 +45,12 @@ pub struct ClassReport {
     pub link: LinkModel,
     /// Active partition point (stages `1..=split_after` on the edge).
     pub split_after: usize,
+    /// Activation wire encoding the class ships to its cloud stage (and
+    /// that its planner prices the transfer term at).
+    pub wire_encoding: WireEncoding,
+    /// Effective cloud-stage endpoint: the class's own override, else
+    /// the fleet-wide `cloud_addr`; `None` = in-process cloud.
+    pub cloud_addr: Option<String>,
     pub planner: ClassPlannerStats,
     /// Shard-count elasticity: current/min/max shards, resize counters
     /// and the last trigger (`enabled = false` for a fixed fleet).
@@ -95,11 +102,17 @@ impl FleetReport {
             } else {
                 String::new()
             };
+            let cloud = match &c.cloud_addr {
+                Some(a) => format!(" -> {a}"),
+                None => String::new(),
+            };
             out.push_str(&format!(
-                "[{} @ {:.2} Mbps, split after {}, p {:.3}{}, {} shard(s){}] {}\n",
+                "[{} @ {:.2} Mbps, split after {}, wire {}{}, p {:.3}{}, {} shard(s){}] {}\n",
                 c.name,
                 c.link.uplink_mbps,
                 c.split_after,
+                c.wire_encoding,
+                cloud,
                 c.planner.exit_prob_planned,
                 p_hat,
                 c.shards.len(),
@@ -141,8 +154,14 @@ impl FleetReport {
                     Some(t) => Json::Str(t.clone()).to_string(),
                     None => "null".to_string(),
                 };
+                let cloud_addr = match &c.cloud_addr {
+                    Some(a) => Json::Str(a.clone()).to_string(),
+                    None => "null".to_string(),
+                };
                 format!(
-                    "{{\"name\":{},\"split_after\":{},\"shards\":{},\
+                    "{{\"name\":{},\"split_after\":{},\
+                     \"wire_encoding\":\"{}\",\"cloud_addr\":{},\
+                     \"shards\":{},\
                      \"queue_depths\":[{}],\
                      \"autoscale\":{{\"enabled\":{},\"min_shards\":{},\
                      \"max_shards\":{},\"retired_shards\":{},\"scale_ups\":{},\
@@ -153,6 +172,8 @@ impl FleetReport {
                      \"cache_invalidations\":{},\"probe_overrides\":{},{}}}",
                     Json::Str(c.name.clone()),
                     c.split_after,
+                    c.wire_encoding,
+                    cloud_addr,
                     c.shards.len(),
                     depths,
                     c.scaler.enabled,
@@ -208,6 +229,8 @@ mod tests {
                 name: "3G".into(),
                 link: LinkModel::new(1.10, 0.0),
                 split_after: 5,
+                wire_encoding: WireEncoding::Q8,
+                cloud_addr: Some("cloud.internal:7879".into()),
                 planner: ClassPlannerStats {
                     exit_prob_planned: 0.35,
                     p_hat: Some(0.62),
@@ -237,6 +260,8 @@ mod tests {
                 name: "WiFi".into(),
                 link: LinkModel::new(18.80, 0.0),
                 split_after: 0,
+                wire_encoding: WireEncoding::Raw,
+                cloud_addr: None,
                 planner: ClassPlannerStats {
                     exit_prob_planned: 0.5,
                     ..Default::default()
@@ -277,6 +302,15 @@ mod tests {
         assert_eq!(classes[0].get("name").unwrap().as_str(), Some("3G"));
         assert_eq!(classes[0].get("split_after").unwrap().as_u64(), Some(5));
         assert_eq!(classes[1].get("completed").unwrap().as_u64(), Some(0));
+        // Wire path: encoding always present; cloud_addr null when the
+        // cloud half runs in-process.
+        assert_eq!(classes[0].get("wire_encoding").unwrap().as_str(), Some("q8"));
+        assert_eq!(
+            classes[0].get("cloud_addr").unwrap().as_str(),
+            Some("cloud.internal:7879")
+        );
+        assert_eq!(classes[1].get("wire_encoding").unwrap().as_str(), Some("raw"));
+        assert!(matches!(classes[1].get("cloud_addr"), Some(Json::Null)));
         // Planner observability: planned p, estimated p̂, cache and
         // view-rebuild counters, all per class.
         let p0 = &classes[0];
@@ -323,6 +357,11 @@ mod tests {
         assert!(s.contains("p̂ 0.620"), "{s}");
         assert!(s.contains("p 0.500"), "{s}");
         assert!(s.contains("in 1..=4, +3/-2 resizes"), "{s}");
-        assert!(!s.contains("WiFi @ 18.80 Mbps, split after 0, p 0.500, 1 shard(s) in"), "{s}");
+        assert!(s.contains("wire q8 -> cloud.internal:7879"), "{s}");
+        assert!(s.contains("wire raw,"), "{s}");
+        assert!(
+            !s.contains("WiFi @ 18.80 Mbps, split after 0, wire raw, p 0.500, 1 shard(s) in"),
+            "{s}"
+        );
     }
 }

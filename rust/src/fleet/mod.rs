@@ -81,11 +81,21 @@
 //!   what lets p̂ recover *upward* after an overshoot.
 //! * **The cloud half can be another machine.** With `cloud_addr` set,
 //!   every shard's cloud worker ships its transferred split-groups as
-//!   INFER_PARTIAL frames to a remote cloud-stage server
-//!   ([`crate::server::CloudStageServer`]) through one fleet-shared
-//!   [`RemoteCloudEngine`] (pooled connections, reconnect with backoff,
-//!   in-flight cap); remote failures fall back to the shard's local
-//!   engine and are counted in the metrics.
+//!   sequence-tagged INFER_PARTIAL frames to a remote cloud-stage
+//!   server ([`crate::server::CloudStageServer`]) through a pipelined
+//!   [`RemoteCloudEngine`] (pooled connections, many in-flight frames
+//!   per connection, reconnect with backoff, in-flight cap); remote
+//!   failures fall back to the shard's local engine and are counted in
+//!   the metrics. A class may override the endpoint with its own
+//!   `cloud_addr` (geo-split fleets keep each class's suffix stages
+//!   near its clients); classes sharing an endpoint share one engine —
+//!   and its connection pool — via an address-keyed dedup map.
+//! * **Activations cross the wire encoded.** `wire_encoding` picks the
+//!   transfer codec (raw f32 / q8 / q4); the remote engine encodes,
+//!   the cloud stage dequantizes, the simulated channel charges the
+//!   encoded size, and every class planner prices its transfer term at
+//!   the same [`WireEncoding::payload_bytes`] map — so the optimum the
+//!   fleet plans is the optimum of the bytes it actually ships.
 //! * **Observability rolls up.** [`FleetReport`]: per-shard
 //!   [`MetricsSnapshot`]s → per-class aggregate → fleet total, all
 //!   NaN-free even for shards that served nothing — plus per-class
@@ -119,7 +129,7 @@ use crate::coordinator::{
 };
 use crate::model::Manifest;
 use crate::network::trace::BandwidthTrace;
-use crate::network::Channel;
+use crate::network::{Channel, WireEncoding};
 use crate::partition::plan::PartitionPlan;
 use crate::planner::{
     AdaptiveConfig, AdaptiveHandle, AdaptivePlanner, EstimatorConfig, ExitRateEstimator, Planner,
@@ -175,8 +185,15 @@ pub struct FleetConfig {
     /// transferred split-groups to this remote cloud-stage server
     /// (`branchyserve cloud-serve`) instead of running them in-process;
     /// the shard's own cloud engine becomes the fallback for remote
-    /// failures. All shards share one pooled connection set.
+    /// failures. A class's [`ClassProfile::cloud_addr`] overrides this
+    /// per class; classes resolving to the same endpoint share one
+    /// pooled connection set.
     pub cloud_addr: Option<String>,
+    /// Wire encoding of activations shipped to remote cloud stages
+    /// (raw f32 / q8 / q4). Also the encoding every class planner
+    /// prices its transfer term at and the simulated channel charges,
+    /// so planned and shipped bytes agree.
+    pub wire_encoding: WireEncoding,
     /// Multiplicative jitter stddev on the class channels (0 = none).
     pub channel_jitter: f64,
     /// False = channels account delays without sleeping (tests/benches).
@@ -201,6 +218,7 @@ impl Default for FleetConfig {
             per_request_planning: false,
             probe_fraction: 0.0,
             cloud_addr: None,
+            wire_encoding: WireEncoding::Raw,
             channel_jitter: 0.0,
             real_time_channel: true,
         }
@@ -215,6 +233,9 @@ type SpawnShard = Arc<dyn Fn(u64) -> Result<Arc<Coordinator>> + Send + Sync>;
 
 struct ClassGroup {
     profile: ClassProfile,
+    /// Effective cloud endpoint (the class's override, else the
+    /// fleet-wide default); `None` = in-process cloud.
+    cloud_addr: Option<String>,
     /// `Arc`: the exit-observer closures running on shard edge-worker
     /// threads hold the same planner to rebuild its view on drift.
     planner: Arc<ClassPlanner>,
@@ -291,8 +312,11 @@ pub struct Fleet {
     probe: Option<ProbeConfig>,
     /// 1-based position of the manifest's side branch.
     branch_pos: usize,
-    /// The shared remote cloud client, when `cloud_addr` is configured.
-    remote: Option<Arc<RemoteCloudEngine>>,
+    /// One remote cloud client per distinct configured endpoint
+    /// (fleet-wide and per-class overrides, deduped by address).
+    remotes: Vec<Arc<RemoteCloudEngine>>,
+    /// The activation transfer codec every engine/planner was built at.
+    wire_encoding: WireEncoding,
     route_key: AtomicU64,
 }
 
@@ -376,21 +400,26 @@ impl Fleet {
             );
         }
 
-        // The remote cloud client is shared by every shard (one pooled
-        // connection set and one backoff state per fleet, not per
-        // pipeline). Construction is lazy — a fleet starts fine while
-        // its cloud is down and falls back to local execution.
-        let remote = cfg
-            .cloud_addr
-            .as_ref()
-            .map(|addr| Arc::new(RemoteCloudEngine::new(RemoteCloudConfig::new(addr.clone()))));
-        if let Some(r) = &remote {
+        // One remote cloud client per distinct endpoint, shared by
+        // every class (and shard) resolving to it — one pooled
+        // connection set and one backoff state per *server*, not per
+        // pipeline. Construction is lazy: a fleet starts fine while a
+        // cloud is down and falls back to local execution.
+        let mut engines: Vec<Arc<RemoteCloudEngine>> = Vec::new();
+        let mut engine_for = |addr: &str| -> Arc<RemoteCloudEngine> {
+            if let Some(e) = engines.iter().find(|e| e.addr() == addr) {
+                return e.clone();
+            }
+            let mut rcfg = RemoteCloudConfig::new(addr.to_string());
+            rcfg.encoding = cfg.wire_encoding;
+            let engine = Arc::new(RemoteCloudEngine::new(rcfg));
+            engines.push(engine.clone());
             // Reachability probe on a detached thread: its only output
             // is a log line, and a stalled resolver or a 2s connect
             // timeout must not delay fleet startup (the whole point of
             // the lazy client is that the edge serves while the cloud
             // is down).
-            let probe = r.clone();
+            let probe = engine.clone();
             std::thread::Builder::new()
                 .name("cloud-probe".into())
                 .spawn(move || match probe.ping() {
@@ -402,7 +431,8 @@ impl Fleet {
                     ),
                 })
                 .ok();
-        }
+            engine
+        };
 
         // One p-independent precompute (`StaticCore`) for the whole
         // fleet; every class — override or not — derives its own cheap
@@ -410,12 +440,18 @@ impl Fleet {
         // clone + validation + graph-free precompute twice, and no two
         // classes share a live view (a per-class p-update must never
         // leak into a sibling).
-        let base_planner = Planner::new(
+        let mut base_planner = Planner::new(
             &manifest.to_desc(cfg.default_exit_prob),
             profile,
             cfg.epsilon,
             false,
         );
+        if cfg.wire_encoding != WireEncoding::Raw {
+            // Re-bake the shared core's alpha at the configured codec's
+            // wire sizes, so every class view derived below prices its
+            // transfer term at the bytes the fleet actually ships.
+            base_planner = base_planner.with_wire_encoding(cfg.wire_encoding);
+        }
         if let Some(ecfg) = &cfg.estimation {
             ecfg.validate()?;
         }
@@ -424,6 +460,11 @@ impl Fleet {
         for (idx, prof) in registry.iter().enumerate() {
             let link_class = LinkClass(idx as u8);
             let p_class = prof.exit_probability.unwrap_or(cfg.default_exit_prob);
+            // This class's cloud endpoint: its own override, else the
+            // fleet-wide default; classes resolving to the same address
+            // share one engine through the dedup map above.
+            let cloud_addr = prof.cloud_addr.clone().or_else(|| cfg.cloud_addr.clone());
+            let remote = cloud_addr.as_deref().map(&mut engine_for);
             let class_planner = Arc::new(ClassPlanner::new(
                 link_class,
                 prof.name.clone(),
@@ -499,6 +540,7 @@ impl Fleet {
                     batch_timeout: cfg.batch_timeout,
                     queue_capacity: cfg.queue_capacity,
                     cloud_workers: cfg.cloud_workers_per_shard,
+                    wire_encoding: cfg.wire_encoding,
                 };
                 Arc::new(move |shard_idx: u64| {
                     let label = format!("{name}-s{shard_idx}");
@@ -593,6 +635,7 @@ impl Fleet {
 
             groups.push(ClassGroup {
                 profile: prof.clone(),
+                cloud_addr,
                 planner: class_planner,
                 estimator,
                 channel,
@@ -613,7 +656,8 @@ impl Fleet {
             per_request_planning: cfg.per_request_planning,
             probe,
             branch_pos,
-            remote,
+            remotes: engines,
+            wire_encoding: cfg.wire_encoding,
             route_key: AtomicU64::new(1),
         })
     }
@@ -687,10 +731,33 @@ impl Fleet {
         Ok(self.group(class)?.channel.as_ref())
     }
 
-    /// Wire-level counters of the shared remote cloud client; `None`
-    /// when the fleet runs its cloud stages in-process.
+    /// Wire-level counters of the remote cloud clients, summed across
+    /// every distinct endpoint (`inflight_peak` takes the max — peaks
+    /// on different servers don't add); `None` when the fleet runs its
+    /// cloud stages in-process.
     pub fn remote_stats(&self) -> Option<RemoteCloudStats> {
-        self.remote.as_ref().map(|r| r.stats())
+        if self.remotes.is_empty() {
+            return None;
+        }
+        let mut total = RemoteCloudStats::default();
+        for r in &self.remotes {
+            let s = r.stats();
+            total.requests += s.requests;
+            total.failures += s.failures;
+            total.fast_fails += s.fast_fails;
+            total.saturated += s.saturated;
+            total.connects += s.connects;
+            total.stale_retries += s.stale_retries;
+            total.bytes_sent += s.bytes_sent;
+            total.bytes_received += s.bytes_received;
+            total.inflight_peak = total.inflight_peak.max(s.inflight_peak);
+        }
+        Some(total)
+    }
+
+    /// The activation transfer codec this fleet ships (and plans) with.
+    pub fn wire_encoding(&self) -> WireEncoding {
+        self.wire_encoding
     }
 
     /// Route one request: pick a shard of the class's group and submit.
@@ -831,6 +898,8 @@ impl Fleet {
                     name: g.profile.name.clone(),
                     link: g.profile.link,
                     split_after: handles[0].plan().split_after,
+                    wire_encoding: self.wire_encoding,
+                    cloud_addr: g.cloud_addr.clone(),
                     planner: g.planner_stats(),
                     scaler: g.scaler_stats(),
                     queue_depths,
@@ -870,6 +939,8 @@ impl Fleet {
                 name: g.profile.name.clone(),
                 link: g.profile.link,
                 split_after,
+                wire_encoding: self.wire_encoding,
+                cloud_addr: g.cloud_addr.clone(),
                 // After the drain/join, so gate observations that landed
                 // while shards were draining are counted.
                 planner: g.planner_stats(),
@@ -939,6 +1010,63 @@ mod tests {
         assert_eq!(report.total.completed, 4);
         assert_eq!(report.classes.len(), 1);
         assert_eq!(report.classes[0].shards.len(), 1);
+    }
+
+    #[test]
+    fn per_class_cloud_endpoints_dedupe_and_surface_in_the_report() {
+        let manifest = Manifest::synthetic_sim(
+            "sim-fleet-addr",
+            vec![4],
+            &[16, 8, 2],
+            1,
+            2,
+            vec![1, 2, 4, 8],
+        )
+        .unwrap();
+        let profile = DelayProfile::from_cloud_times(vec![1e-4, 1e-4, 1e-4], 2e-5, 50.0);
+        let registry = ClassRegistry::new(vec![
+            ClassProfile::custom("a", 1.10, 0.0).unwrap(),
+            ClassProfile::custom("b", 5.85, 0.0)
+                .unwrap()
+                .with_cloud_addr("127.0.0.1:19"),
+            ClassProfile::custom("c", 18.8, 0.0).unwrap(),
+        ])
+        .unwrap();
+        let m = manifest.clone();
+        let fleet = Fleet::start(
+            registry,
+            &manifest,
+            &profile,
+            FleetConfig {
+                real_time_channel: false,
+                cloud_addr: Some("127.0.0.1:9".into()),
+                wire_encoding: WireEncoding::Q8,
+                ..Default::default()
+            },
+            move |label| {
+                Ok((
+                    InferenceEngine::open_sim(m.clone(), &format!("{label}-e"))?,
+                    InferenceEngine::open_sim(m.clone(), &format!("{label}-c"))?,
+                ))
+            },
+        )
+        .unwrap();
+        // 'a' and 'c' share the fleet-wide endpoint's engine (one
+        // pooled connection set per server); 'b' gets its own.
+        assert_eq!(fleet.remotes.len(), 2);
+        assert!(fleet.remotes.iter().all(|e| e.encoding() == WireEncoding::Q8));
+        assert_eq!(fleet.wire_encoding(), WireEncoding::Q8);
+        // Nothing was served over the wire, but the aggregate exists.
+        assert!(fleet.remote_stats().is_some());
+        let report = fleet.report();
+        assert_eq!(report.classes[0].cloud_addr.as_deref(), Some("127.0.0.1:9"));
+        assert_eq!(report.classes[1].cloud_addr.as_deref(), Some("127.0.0.1:19"));
+        assert_eq!(report.classes[2].cloud_addr.as_deref(), Some("127.0.0.1:9"));
+        assert!(report
+            .classes
+            .iter()
+            .all(|c| c.wire_encoding == WireEncoding::Q8));
+        fleet.shutdown();
     }
 
     #[test]

@@ -22,7 +22,7 @@ use branchyserve::fleet::{ClassProfile, ClassRegistry, Fleet, FleetConfig, Route
 use branchyserve::harness::Table;
 use branchyserve::model::Manifest;
 use branchyserve::network::bandwidth::{LinkModel, Profile};
-use branchyserve::network::BandwidthTrace;
+use branchyserve::network::{BandwidthTrace, WireEncoding};
 use branchyserve::partition;
 use branchyserve::planner::{AdaptiveConfig, EstimatorConfig};
 use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
@@ -89,6 +89,10 @@ fn cli() -> Cli {
                 .flag(Flag::value(
                     "cloud-addr",
                     "HOST:PORT of a cloud-serve instance; cloud stages run there",
+                ))
+                .flag(Flag::value(
+                    "wire-encoding",
+                    "activation transfer codec to the cloud stage: raw|q8|q4",
                 ))
                 .flag(Flag::value("bind", "listen address").default("127.0.0.1"))
                 .flag(Flag::switch("sim", "serve the simulated model (no artifacts needed)"))
@@ -366,6 +370,10 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             anyhow::bail!("--cloud-addr: {e}");
         }
     }
+    let wire_encoding = match inv.get("wire-encoding") {
+        Some(s) => WireEncoding::parse(s)?,
+        None => settings.fleet.wire_encoding,
+    };
     let estimation = if inv.has("estimate-exit-rate") || settings.fleet.online_estimation {
         let cfg = EstimatorConfig {
             drift_threshold: get_f64(inv, "drift-threshold")?
@@ -461,6 +469,7 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             link,
             trace: None,
             exit_probability: None,
+            cloud_addr: None,
         };
         if let Some(path) = &settings.network.trace {
             println!(
@@ -510,6 +519,7 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             per_request_planning: per_request,
             probe_fraction,
             cloud_addr: cloud_addr.clone(),
+            wire_encoding,
             channel_jitter: 0.0,
             real_time_channel: true,
         },
@@ -523,13 +533,18 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
     )?);
 
     for c in &fleet.report().classes {
+        let cloud = match &c.cloud_addr {
+            Some(a) => format!(" -> {a}"),
+            None => String::new(),
+        };
         println!(
-            "class {:>10} @ {:>9.2} Mbps -> split after {:>2} ({} shard(s) x {} cloud worker(s))",
+            "class {:>10} @ {:>9.2} Mbps -> split after {:>2} ({} shard(s) x {} cloud worker(s)){}",
             c.name,
             c.link.uplink_mbps,
             c.split_after,
             c.shards.len(),
             cloud_workers,
+            cloud,
         );
     }
     println!(
@@ -556,6 +571,7 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
         ),
         None => println!("cloud stages: in-process"),
     }
+    println!("activation wire encoding: {wire_encoding} (planner prices transfers at this codec)");
 
     let port = get_usize(inv, "port")?.unwrap_or(7878) as u16;
     let bind = inv.get("bind").unwrap_or("127.0.0.1");

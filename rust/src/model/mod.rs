@@ -53,6 +53,20 @@ impl BranchyNetDesc {
         }
     }
 
+    /// alpha_s as it actually crosses the uplink under a wire encoding:
+    /// [`transfer_bytes`](Self::transfer_bytes) pushed through the
+    /// encoding's deterministic size map. The planner charges this, the
+    /// codec ships it — both via
+    /// [`WireEncoding::payload_bytes`](crate::network::encoding::WireEncoding::payload_bytes),
+    /// so the cost model and the wire can't disagree.
+    pub fn transfer_wire_bytes(
+        &self,
+        split_after: usize,
+        encoding: crate::network::encoding::WireEncoding,
+    ) -> u64 {
+        encoding.payload_bytes(self.transfer_bytes(split_after))
+    }
+
     /// Branch attached after stage `i`, if any.
     pub fn branch_after(&self, i: usize) -> Option<&BranchDesc> {
         self.branches.iter().find(|b| b.after_stage == i)
@@ -129,6 +143,19 @@ mod tests {
         assert_eq!(d.transfer_bytes(0), 80); // raw input
         assert_eq!(d.transfer_bytes(1), 100);
         assert_eq!(d.transfer_bytes(3), 10);
+    }
+
+    #[test]
+    fn transfer_wire_bytes_applies_the_encoding_size_map() {
+        use crate::network::encoding::WireEncoding;
+        let d = tiny();
+        assert_eq!(d.transfer_wire_bytes(1, WireEncoding::Raw), 100);
+        assert_eq!(d.transfer_wire_bytes(1, WireEncoding::Q8), 8 + 25);
+        assert_eq!(d.transfer_wire_bytes(1, WireEncoding::Q4), 8 + 13);
+        assert_eq!(
+            d.transfer_wire_bytes(0, WireEncoding::Q8),
+            WireEncoding::Q8.payload_bytes(80)
+        );
     }
 
     #[test]

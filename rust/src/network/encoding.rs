@@ -1,0 +1,139 @@
+//! Wire encodings for the edge→cloud activation transfer.
+//!
+//! The paper's whole argument is that the transfer term `alpha_s / B`
+//! dominates E[T(s)] on constrained uplinks, which makes the byte count
+//! itself a planning dimension: quantizing the activation payload
+//! shrinks alpha, and a smaller alpha can relocate the optimal split
+//! (Edgent, arXiv:1806.07840, makes the same observation). This module
+//! defines the encoding identities shared by the codec
+//! ([`crate::server::protocol`]) and the planner
+//! ([`crate::planner`] / [`crate::timing`]): **the planner must charge
+//! exactly the bytes the codec ships**, so both sides call
+//! [`WireEncoding::payload_bytes`] and can never drift apart.
+//!
+//! Payload layouts (after the per-tensor dims header):
+//!
+//! | encoding | payload                                   | bytes (n f32 elems) |
+//! |----------|-------------------------------------------|---------------------|
+//! | raw      | `f32 data[n]` (bit-exact)                 | `4n`                |
+//! | q8       | `f32 scale \| f32 zero \| u8 q[n]`        | `8 + n`             |
+//! | q4       | `f32 scale \| f32 zero \| u8 packed[⌈n/2⌉]` | `8 + ⌈n/2⌉`       |
+//!
+//! Quantization is per-tensor linear: `scale = (max − min) / levels`,
+//! `zero = min`, `q = round((v − zero) / scale)`; dequantized values
+//! are `zero + q·scale`, so the round-trip error is at most `scale / 2`
+//! — 1/510 of the value range for q8, 1/30 for q4 (both comfortably
+//! inside the 1/255 and 1/15 bounds the tests assert).
+//!
+//! The codec additionally knows a *sparse* q8 variant (zero bitmap +
+//! q8 of the nonzeros) it may substitute when the activation is mostly
+//! post-ReLU zeros and the sparse form is strictly smaller; the dense
+//! `8 + n` figure here is therefore an upper bound on what q8 actually
+//! ships, which keeps the planner's cost model conservative.
+
+use anyhow::{bail, Result};
+
+/// How an INFER_PARTIAL activation payload is encoded on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum WireEncoding {
+    /// Bit-exact little-endian f32 — the pre-compression wire format.
+    #[default]
+    Raw,
+    /// 8-bit per-tensor linear quantization (scale + zero-point).
+    Q8,
+    /// 4-bit per-tensor linear quantization, two values per byte.
+    Q4,
+}
+
+impl WireEncoding {
+    /// Every encoding, in wire-tag order — handy for iteration in
+    /// benches and per-encoding counters.
+    pub const ALL: [WireEncoding; 3] = [WireEncoding::Raw, WireEncoding::Q8, WireEncoding::Q4];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WireEncoding::Raw => "raw",
+            WireEncoding::Q8 => "q8",
+            WireEncoding::Q4 => "q4",
+        }
+    }
+
+    /// Parse a config/CLI spelling (`[fleet] wire_encoding` /
+    /// `--wire-encoding`).
+    pub fn parse(s: &str) -> Result<WireEncoding> {
+        match s.to_ascii_lowercase().as_str() {
+            "raw" | "f32" => Ok(WireEncoding::Raw),
+            "q8" | "int8" => Ok(WireEncoding::Q8),
+            "q4" | "int4" => Ok(WireEncoding::Q4),
+            _ => bail!("unknown wire encoding '{s}' (expected 'raw', 'q8' or 'q4')"),
+        }
+    }
+
+    /// Payload bytes shipped for an activation whose raw f32 form is
+    /// `raw_bytes` — the encoding-parameterized alpha the planner
+    /// charges. Deterministic and shared with the codec: for `n = ⌈raw
+    /// / 4⌉` elements, raw ships `4n`, q8 ships `8 + n` (scale + zero +
+    /// one byte per value), q4 ships `8 + ⌈n/2⌉` (two values per byte).
+    pub fn payload_bytes(&self, raw_bytes: u64) -> u64 {
+        let elems = raw_bytes.div_ceil(4);
+        match self {
+            WireEncoding::Raw => raw_bytes,
+            WireEncoding::Q8 => 8 + elems,
+            WireEncoding::Q4 => 8 + elems.div_ceil(2),
+        }
+    }
+}
+
+impl std::fmt::Display for WireEncoding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_aliases_case_insensitively() {
+        assert_eq!(WireEncoding::parse("raw").unwrap(), WireEncoding::Raw);
+        assert_eq!(WireEncoding::parse("F32").unwrap(), WireEncoding::Raw);
+        assert_eq!(WireEncoding::parse("q8").unwrap(), WireEncoding::Q8);
+        assert_eq!(WireEncoding::parse("INT8").unwrap(), WireEncoding::Q8);
+        assert_eq!(WireEncoding::parse("q4").unwrap(), WireEncoding::Q4);
+        assert!(WireEncoding::parse("gzip").is_err());
+        assert_eq!(WireEncoding::default(), WireEncoding::Raw);
+    }
+
+    #[test]
+    fn payload_bytes_match_the_documented_layouts() {
+        // 1024 f32 elements = 4096 raw bytes.
+        assert_eq!(WireEncoding::Raw.payload_bytes(4096), 4096);
+        assert_eq!(WireEncoding::Q8.payload_bytes(4096), 8 + 1024);
+        assert_eq!(WireEncoding::Q4.payload_bytes(4096), 8 + 512);
+        // Odd element count: q4 rounds the nibble pair up.
+        assert_eq!(WireEncoding::Q4.payload_bytes(3 * 4), 8 + 2);
+        // Degenerate empty tensor.
+        for e in WireEncoding::ALL {
+            assert_eq!(e.payload_bytes(0), if e == WireEncoding::Raw { 0 } else { 8 });
+        }
+    }
+
+    #[test]
+    fn compression_is_monotone_for_real_payloads() {
+        for raw in [4u64, 400, 4096, 1 << 20] {
+            let r = WireEncoding::Raw.payload_bytes(raw);
+            let q8 = WireEncoding::Q8.payload_bytes(raw);
+            let q4 = WireEncoding::Q4.payload_bytes(raw);
+            if raw >= 16 {
+                assert!(q8 < r, "raw {raw}");
+                assert!(q4 < q8, "raw {raw}");
+            }
+        }
+        // The asymptotic ratios the bench banks on: ~4x for q8, ~8x q4.
+        let raw = 1 << 20;
+        assert!(WireEncoding::Raw.payload_bytes(raw) as f64
+            / WireEncoding::Q8.payload_bytes(raw) as f64
+            > 3.9);
+    }
+}

@@ -1,11 +1,14 @@
 //! Network substrate: the paper's bandwidth profiles (§VI), a link delay
-//! model, time-varying bandwidth traces, and the simulated edge→cloud
-//! channel used by the serving coordinator.
+//! model, time-varying bandwidth traces, the simulated edge→cloud
+//! channel used by the serving coordinator, and the wire encodings of
+//! the activation transfer.
 
 pub mod bandwidth;
 pub mod channel;
+pub mod encoding;
 pub mod trace;
 
 pub use bandwidth::{LinkModel, Profile};
 pub use channel::Channel;
+pub use encoding::WireEncoding;
 pub use trace::BandwidthTrace;

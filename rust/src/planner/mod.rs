@@ -25,6 +25,24 @@
 //! C(s) = Σ_{i>s} t_i^c                    (cloud suffix, Eq. 2)
 //! ```
 //!
+//! # Bits-aware alpha
+//!
+//! `alpha_s` is not a property of the model alone — it is what the
+//! deployment actually puts on the wire. With a quantized transfer
+//! codec (`network::encoding`), the 4-byte f32 activations ship as 1-
+//! or ½-byte codes plus an 8-byte scale/zero header, so the transfer
+//! term shrinks ~4x (q8) or ~8x (q4) and the optimal split can
+//! *relocate* — typically toward the cloud, since shipping earlier
+//! (bigger) activations stops being prohibitive. [`StaticCore`] bakes
+//! `alpha_s = desc.transfer_wire_bytes(s, encoding)` at construction;
+//! [`Planner::with_wire_encoding`] re-bakes the core under a different
+//! encoding (sharing the live exit view), and both the planner and
+//! [`crate::timing::Estimator::with_encoding`] price sizes through the
+//! single [`crate::network::WireEncoding::payload_bytes`] map the codec
+//! ships with — so the cost model and the wire can't disagree, and the
+//! planner stays bit-identical to the brute-force oracle at every
+//! encoding (property-tested below).
+//!
 //! # The two-layer core: `StaticCore` + `ExitView`
 //!
 //! The precomputed state splits along its *dependencies*:
@@ -91,6 +109,7 @@ use std::sync::{Arc, RwLock};
 use crate::config::settings::Strategy;
 use crate::model::BranchyNetDesc;
 use crate::network::bandwidth::LinkModel;
+use crate::network::encoding::WireEncoding;
 use crate::partition::plan::PartitionPlan;
 use crate::timing::profile::DelayProfile;
 
@@ -114,8 +133,13 @@ struct StaticCore {
     active_at: Vec<usize>,
     /// C(s): cloud time of stages s+1..=N.
     cloud_suffix: Vec<f64>,
-    /// alpha_s: bytes transferred for a cut after stage s (s < N).
+    /// alpha_s as it crosses the uplink for a cut after stage s
+    /// (s < N): `desc.transfer_wire_bytes(s, wire_encoding)` — the raw
+    /// activation size pushed through the configured encoding's size
+    /// map, so compressed deployments plan against what they ship.
     alpha_bytes: Vec<u64>,
+    /// The encoding `alpha_bytes` was baked under.
+    wire_encoding: WireEncoding,
 }
 
 /// The p-dependent layer: survival-weighted folds over a [`StaticCore`],
@@ -300,6 +324,7 @@ impl Planner {
             active_at,
             cloud_suffix,
             alpha_bytes,
+            wire_encoding: WireEncoding::Raw,
         });
         let view = ExitView::derive(&core, &probs);
 
@@ -373,6 +398,45 @@ impl Planner {
             epsilon: self.epsilon,
             cache: PlanCache::default(),
         }
+    }
+
+    /// A planner whose transfer sizes are re-baked under `encoding`:
+    /// `alpha_s` becomes [`BranchyNetDesc::transfer_wire_bytes`]`(s,
+    /// encoding)`, so [`Planner::plan_for`] solves for the split that is
+    /// optimal *given* what the codec actually ships. The exit view
+    /// stays **shared live** (alpha is p-independent): a
+    /// [`Planner::set_exit_probs`] on either planner is seen by both.
+    /// O(N) — only the alpha table is recomputed; every other core
+    /// field is cloned.
+    pub fn with_wire_encoding(&self, encoding: WireEncoding) -> Planner {
+        let old = &*self.core;
+        let core = Arc::new(StaticCore {
+            desc: old.desc.clone(),
+            paper_mode: old.paper_mode,
+            n: old.n,
+            t_edge: old.t_edge.clone(),
+            branch_t_edge: old.branch_t_edge,
+            branch_positions: old.branch_positions.clone(),
+            active_at: old.active_at.clone(),
+            cloud_suffix: old.cloud_suffix.clone(),
+            alpha_bytes: (0..old.n)
+                .map(|s| old.desc.transfer_wire_bytes(s, encoding))
+                .collect(),
+            wire_encoding: encoding,
+        });
+        let cache = PlanCache::default();
+        cache.seed_epoch(self.shared.epoch.load(Ordering::Acquire));
+        Planner {
+            core,
+            shared: self.shared.clone(),
+            epsilon: self.epsilon,
+            cache,
+        }
+    }
+
+    /// The wire encoding this planner's transfer sizes are baked under.
+    pub fn wire_encoding(&self) -> WireEncoding {
+        self.core.wire_encoding
     }
 
     /// Re-derive the live view at `probs` and swap it in, in place —
@@ -612,6 +676,90 @@ mod tests {
                 plan.expected_time_s.to_bits()
             );
         });
+    }
+
+    #[test]
+    fn encoded_planner_is_bit_identical_to_encoded_brute_force() {
+        const EPS: f64 = 1e-9;
+        property("planner(enc) == brute(estimator(enc)), bitwise", 120, |g| {
+            let n = g.usize_in(1, 24);
+            let desc = synthetic::random_desc(g, n, 3);
+            let profile = synthetic::random_profile(g, &desc, g.f64_in(1.0, 2000.0));
+            let link = LinkModel::new(g.f64_in(0.05, 100.0), g.f64_in(0.0, 0.02));
+            let paper = g.bool(0.5);
+
+            let base = Planner::new(&desc, &profile, EPS, paper);
+            for enc in WireEncoding::ALL {
+                let planner = base.with_wire_encoding(enc);
+                assert_eq!(planner.wire_encoding(), enc);
+                let est = Estimator::new(&desc, &profile, link).with_encoding(enc);
+                let est = if paper { est.paper_mode() } else { est };
+                // The sweep kernel must agree with the encoding-aware
+                // oracle bit for bit at every split...
+                for s in 0..=n {
+                    assert_eq!(
+                        planner.expected_time(s, link).to_bits(),
+                        est.expected_time(s).to_bits(),
+                        "split {s} under {enc} (n={n}, paper={paper})"
+                    );
+                }
+                // ...and the solved plan must match the brute-force
+                // argmin over that oracle up to the epsilon tie-break,
+                // achieving its reported time exactly.
+                let plan = planner.plan_for(link);
+                let bf = brute::solve(&est);
+                assert!(
+                    (plan.expected_time_s - bf.expected_time_s).abs()
+                        <= EPS + 1e-12 * bf.expected_time_s.max(1.0),
+                    "{enc}: planner {} vs brute {} (n={n})",
+                    plan.expected_time_s,
+                    bf.expected_time_s
+                );
+                assert_eq!(
+                    planner.expected_time(plan.split_after, link).to_bits(),
+                    plan.expected_time_s.to_bits()
+                );
+            }
+            // Raw is the identity: same alphas as the base planner.
+            let raw = base.with_wire_encoding(WireEncoding::Raw);
+            for s in 0..=n {
+                assert_eq!(
+                    raw.expected_time(s, link).to_bits(),
+                    base.expected_time(s, link).to_bits()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn compression_relocates_the_optimal_split_on_a_transfer_dominated_link() {
+        // Two stages, megabyte activations, a 1 Mbps uplink, and a
+        // cloud 20x faster than the edge: raw transfer costs ~8 s, so
+        // the optimum is to stay on the edge (~2 s) — unless the codec
+        // shrinks the upload enough to make the fast cloud reachable.
+        let desc = BranchyNetDesc {
+            stage_names: vec!["s1".into(), "s2".into()],
+            stage_out_bytes: vec![1_000_000, 8],
+            input_bytes: 1_000_000,
+            branches: vec![],
+        };
+        // gamma = 20: t_edge = [0.01, 2.0], t_cloud = [0.0005, 0.1].
+        let profile = DelayProfile::from_cloud_times(vec![0.0005, 0.1], 0.0, 20.0);
+        let link = LinkModel::new(1.0, 0.0);
+
+        let base = Planner::new(&desc, &profile, 1e-9, false);
+        // Raw: 8 s + cloud > 2.01 s edge-only.
+        assert_eq!(base.plan_for(link).split_after, 2, "raw: stay on the edge");
+        // q8 (4x): 2.0 s transfer + 0.1 s cloud still loses to 2.01 s
+        // edge-only — compression alone does not automatically move the
+        // split; the solver has to *prove* it pays.
+        let q8 = base.with_wire_encoding(WireEncoding::Q8);
+        assert_eq!(q8.plan_for(link).split_after, 2, "q8: still not worth it");
+        // q4 (8x): ~1 s transfer + fast cloud beats the edge; the
+        // optimum relocates all the way to cloud-only.
+        let q4 = base.with_wire_encoding(WireEncoding::Q4);
+        assert_eq!(q4.plan_for(link).split_after, 0, "q4: offload everything");
+        assert!(q4.plan_for(link).expected_time_s < base.plan_for(link).expected_time_s);
     }
 
     #[test]

@@ -30,6 +30,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::request::ExitPoint;
 use crate::coordinator::InferenceResponse;
+use crate::network::encoding::WireEncoding;
 use crate::runtime::{HostTensor, InferenceEngine};
 
 use super::protocol::{BRANCH_GATED, PartialSample};
@@ -50,6 +51,13 @@ pub struct CloudStageServer {
     full_infers: AtomicU64,
     /// Rejected partial requests (bad split, empty batch, engine error).
     errors: AtomicU64,
+    /// Partial batches served per wire encoding, indexed raw/q8/q4 —
+    /// the cloud-side view of the compression win.
+    enc_served: [AtomicU64; 3],
+    /// Framed bytes in/out of this backend (8-byte headers included),
+    /// counted by the connection loop via [`ServeBackend::note_io`].
+    bytes_received: AtomicU64,
+    bytes_sent: AtomicU64,
     next_id: AtomicU64,
     started: Instant,
 }
@@ -65,6 +73,9 @@ impl CloudStageServer {
             gated_batches: AtomicU64::new(0),
             full_infers: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            enc_served: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+            bytes_received: AtomicU64::new(0),
+            bytes_sent: AtomicU64::new(0),
             next_id: AtomicU64::new(1),
             started: Instant::now(),
         }
@@ -93,6 +104,24 @@ impl CloudStageServer {
             self.gated_batches.load(Ordering::Relaxed),
             self.full_infers.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Partial batches served per wire encoding: `[raw, q8, q4]`
+    /// (sparse q8 counts as q8 — it is an opportunistic sub-mode).
+    pub fn served_by_encoding(&self) -> [u64; 3] {
+        [
+            self.enc_served[0].load(Ordering::Relaxed),
+            self.enc_served[1].load(Ordering::Relaxed),
+            self.enc_served[2].load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Framed bytes (received, sent) across all connections.
+    pub fn bytes_io(&self) -> (u64, u64) {
+        (
+            self.bytes_received.load(Ordering::Relaxed),
+            self.bytes_sent.load(Ordering::Relaxed),
         )
     }
 
@@ -173,11 +202,36 @@ impl ServeBackend for CloudStageServer {
         branch_state: u8,
         activation: HostTensor,
     ) -> Result<PartialOutput> {
+        self.serve_partial_encoded(split, branch_state, WireEncoding::Raw, activation)
+    }
+
+    fn serve_partial_encoded(
+        &self,
+        split: usize,
+        branch_state: u8,
+        encoding: WireEncoding,
+        activation: HostTensor,
+    ) -> Result<PartialOutput> {
         let result = self.partial(split, branch_state, &activation);
-        if result.is_err() {
-            self.errors.fetch_add(1, Ordering::Relaxed);
+        match &result {
+            Ok(_) => {
+                let idx = match encoding {
+                    WireEncoding::Raw => 0,
+                    WireEncoding::Q8 => 1,
+                    WireEncoding::Q4 => 2,
+                };
+                self.enc_served[idx].fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+            }
         }
         result
+    }
+
+    fn note_io(&self, bytes_received: u64, bytes_sent: u64) {
+        self.bytes_received.fetch_add(bytes_received, Ordering::Relaxed);
+        self.bytes_sent.fetch_add(bytes_sent, Ordering::Relaxed);
     }
 
     fn metrics_json(&self) -> String {
@@ -188,10 +242,14 @@ impl ServeBackend for CloudStageServer {
             .map(u64::to_string)
             .collect::<Vec<_>>()
             .join(",");
+        let [enc_raw, enc_q8, enc_q4] = self.served_by_encoding();
+        let (rx, tx) = self.bytes_io();
         format!(
             "{{\"partial_batches\":{batches},\"partial_samples\":{samples},\
              \"gated_batches\":{gated},\"full_infers\":{full},\"errors\":{errors},\
-             \"splits_served\":[{splits}],\"uptime_s\":{:.3}}}",
+             \"splits_served\":[{splits}],\
+             \"served_by_encoding\":{{\"raw\":{enc_raw},\"q8\":{enc_q8},\"q4\":{enc_q4}}},\
+             \"bytes_received\":{rx},\"bytes_sent\":{tx},\"uptime_s\":{:.3}}}",
             self.started.elapsed().as_secs_f64()
         )
     }
@@ -254,6 +312,36 @@ mod tests {
         let (_, _, _, _, errors) = srv.counters();
         assert_eq!(errors, 3);
         assert_eq!(srv.splits_served(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn per_encoding_counters_and_byte_accounting_reach_the_metrics_json() {
+        let srv = server();
+        let acts = HostTensor::zeros(vec![2, 16]);
+        srv.serve_partial_encoded(1, BRANCH_GATED, WireEncoding::Raw, acts.clone())
+            .unwrap();
+        srv.serve_partial_encoded(1, BRANCH_GATED, WireEncoding::Q8, acts.clone())
+            .unwrap();
+        srv.serve_partial_encoded(1, BRANCH_GATED, WireEncoding::Q8, acts.clone())
+            .unwrap();
+        srv.serve_partial_encoded(1, BRANCH_GATED, WireEncoding::Q4, acts.clone())
+            .unwrap();
+        // A rejected request counts as an error, not a served encoding.
+        assert!(srv
+            .serve_partial_encoded(3, BRANCH_GATED, WireEncoding::Q8, acts)
+            .is_err());
+        assert_eq!(srv.served_by_encoding(), [1, 2, 1]);
+        let (_, _, _, _, errors) = srv.counters();
+        assert_eq!(errors, 1);
+
+        srv.note_io(1000, 250);
+        srv.note_io(24, 8);
+        assert_eq!(srv.bytes_io(), (1024, 258));
+
+        let json = srv.metrics_json();
+        assert!(json.contains("\"served_by_encoding\":{\"raw\":1,\"q8\":2,\"q4\":1}"));
+        assert!(json.contains("\"bytes_received\":1024"));
+        assert!(json.contains("\"bytes_sent\":258"));
     }
 
     #[test]

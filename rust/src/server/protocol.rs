@@ -20,6 +20,31 @@
 //!                          side-branch gate never ran for these samples
 //!                          (inactive under the cut plan), 1 = it ran on
 //!                          the edge and every sample here survived)
+//!   kind 5 INFER_PARTIAL_SEQ — u32 seq | u32 split | u8 branch_state |
+//!                          encoded tensor (below)
+//!                          (pipelined variant of kind 4: `seq` is echoed
+//!                          in the matching PARTIAL_RESULT_SEQ/ERROR_SEQ
+//!                          so a client may stream many frames per
+//!                          connection and match answers out of lockstep;
+//!                          the activation payload carries a one-byte
+//!                          encoding tag for quantized transfer)
+//!
+//! Encoded tensor (kind 5 payloads): u8 encoding | u32 ndims |
+//! u32 dims[ndims] | payload, where payload is
+//!   encoding 0 raw — f32 data[n]                        (bit-exact)
+//!   encoding 1 q8  — f32 scale | f32 zero | u8 q[n]
+//!   encoding 2 q4  — f32 scale | f32 zero | u8 packed[⌈n/2⌉]
+//!                    (low nibble first; a final odd high nibble is padding)
+//!   encoding 3 q8s — u32 nnz | f32 scale | f32 zero | bitmap[⌈n/8⌉] |
+//!                    u8 q[nnz]
+//!                    (sparse q8 for post-ReLU activations: bit i set ⇔
+//!                    element i is nonzero and quantized; clear ⇔ exactly
+//!                    0.0. The encoder substitutes this for q8 when it is
+//!                    strictly smaller; decoders treat it as q8.)
+//! Dequantization is `zero + q·scale` per element (see
+//! [`crate::network::encoding`] for the size identities the planner
+//! shares).
+//!
 //! Response body: u8 kind | payload
 //!   kind 0 PONG           — empty
 //!   kind 1 RESULT         — u64 id | u32 class | u8 exited | f32 entropy |
@@ -30,6 +55,12 @@
 //!                           (one record per sample of the INFER_PARTIAL
 //!                           batch, in order; cloud_s is the server-side
 //!                           compute time for the whole batch)
+//!   kind 4 PARTIAL_RESULT_SEQ — u32 seq | u32 n | n × (u32 class |
+//!                           u8 exited | f32 entropy) | f64 cloud_s
+//!                           (kind 3 with the request's seq echoed first)
+//!   kind 254 ERROR_SEQ    — u32 seq | u32 len | UTF-8 message
+//!                           (an ERROR bound to one in-flight kind-5
+//!                           request instead of the whole connection)
 //!   kind 255 ERROR        — u32 len | UTF-8 message
 //! ```
 
@@ -37,6 +68,7 @@ use std::io::{Read, Write};
 
 use anyhow::{bail, Context, Result};
 
+use crate::network::encoding::WireEncoding;
 use crate::runtime::HostTensor;
 
 pub const MAGIC: u32 = 0x3156_5342; // "BSV1" LE
@@ -53,6 +85,15 @@ pub const BRANCH_GATED: u8 = 1;
 /// Sanity cap on PARTIAL_RESULT record counts (a batch never remotely
 /// approaches this; rejects hostile lengths before allocation).
 const MAX_PARTIAL_SAMPLES: usize = 65_536;
+
+/// Encoded-tensor tag bytes (kind-5 activation payloads).
+pub const ENC_RAW: u8 = 0;
+pub const ENC_Q8: u8 = 1;
+pub const ENC_Q4: u8 = 2;
+/// Sparse q8: zero bitmap + quantized nonzeros. Never requested
+/// directly — the encoder substitutes it for [`ENC_Q8`] when the
+/// activation is mostly zeros and the sparse form is strictly smaller.
+pub const ENC_Q8_SPARSE: u8 = 3;
 
 /// One sample's outcome in a PARTIAL_RESULT frame. `exited`/`entropy`
 /// are meaningful only when the server itself gated the sample (today's
@@ -83,6 +124,20 @@ pub enum Request {
         branch_state: u8,
         activation: HostTensor,
     },
+    /// Pipelined partial inference: [`Request::InferPartial`] plus a
+    /// client-chosen `seq` the server echoes in its answer, and a
+    /// wire-encoded (possibly quantized) activation payload. On decode
+    /// `activation` is already dequantized; `encoding` records what
+    /// crossed the wire (the sparse q8 form decodes as
+    /// [`WireEncoding::Q8`]). Quantized round-trips are lossy, so only
+    /// raw frames re-encode to identical bytes.
+    InferPartialSeq {
+        seq: u32,
+        split: u32,
+        branch_state: u8,
+        encoding: WireEncoding,
+        activation: HostTensor,
+    },
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -102,6 +157,17 @@ pub enum Response {
         samples: Vec<PartialSample>,
         cloud_s: f64,
     },
+    /// [`Response::PartialResult`] answering a pipelined kind-5 request,
+    /// with that request's `seq` echoed so the client can match it to
+    /// one of its in-flight waiters.
+    PartialResultSeq {
+        seq: u32,
+        samples: Vec<PartialSample>,
+        cloud_s: f64,
+    },
+    /// An error bound to one in-flight kind-5 request (the connection —
+    /// and its other in-flight requests — stay healthy).
+    ErrorSeq { seq: u32, message: String },
     Error(String),
 }
 
@@ -138,17 +204,23 @@ pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
     Ok(body)
 }
 
-fn put_tensor(b: &mut Vec<u8>, t: &HostTensor) {
+fn put_dims(b: &mut Vec<u8>, t: &HostTensor) {
     put_u32(b, t.shape().len() as u32);
     for &d in t.shape() {
         put_u32(b, d as u32);
     }
+}
+
+fn put_tensor(b: &mut Vec<u8>, t: &HostTensor) {
+    put_dims(b, t);
     for v in t.data() {
         b.extend_from_slice(&v.to_le_bytes());
     }
 }
 
-fn take_tensor(rest: &[u8]) -> Result<HostTensor> {
+/// Parse the shared `u32 ndims | u32 dims[]` header; returns the shape,
+/// its element count, and the remaining payload bytes.
+fn take_dims(rest: &[u8]) -> Result<(Vec<usize>, usize, &[u8])> {
     if rest.len() < 4 {
         bail!("truncated INFER header");
     }
@@ -165,7 +237,10 @@ fn take_tensor(rest: &[u8]) -> Result<HostTensor> {
         shape.push(u32::from_le_bytes(rest[4 + i * 4..8 + i * 4].try_into().unwrap()) as usize);
     }
     let n: usize = shape.iter().product();
-    let data_bytes = &rest[need..];
+    Ok((shape, n, &rest[need..]))
+}
+
+fn take_f32_payload(shape: Vec<usize>, n: usize, data_bytes: &[u8]) -> Result<HostTensor> {
     if data_bytes.len() != n * 4 {
         bail!(
             "INFER payload {} bytes, shape {:?} wants {}",
@@ -181,6 +256,190 @@ fn take_tensor(rest: &[u8]) -> Result<HostTensor> {
     HostTensor::new(shape, data)
 }
 
+fn take_tensor(rest: &[u8]) -> Result<HostTensor> {
+    let (shape, n, data_bytes) = take_dims(rest)?;
+    take_f32_payload(shape, n, data_bytes)
+}
+
+/// Per-tensor linear quantization range. `None` when the data contains
+/// a non-finite value (the encoder then falls back to a raw payload —
+/// a NaN must cross the wire bit-exactly, not be clamped into a level).
+fn finite_minmax(data: &[f32]) -> Option<(f32, f32)> {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in data {
+        if !v.is_finite() {
+            return None;
+        }
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if data.is_empty() {
+        Some((0.0, 0.0))
+    } else {
+        Some((lo, hi))
+    }
+}
+
+/// Quantize one value onto `0..=levels` with the *stored* (f32) scale,
+/// so encode and decode agree on the grid exactly.
+fn quantize(v: f32, zero: f32, scale: f32, levels: u32) -> u8 {
+    if scale <= 0.0 {
+        return 0;
+    }
+    (((v - zero) / scale).round().clamp(0.0, levels as f32)) as u8
+}
+
+fn push_levels_header(b: &mut Vec<u8>, lo: f32, hi: f32, levels: u32) -> f32 {
+    let scale = (hi - lo) / levels as f32;
+    b.extend_from_slice(&scale.to_le_bytes());
+    b.extend_from_slice(&lo.to_le_bytes());
+    scale
+}
+
+/// Append an encoded-tensor payload (`u8 encoding | dims | payload`).
+/// Under [`WireEncoding::Q8`] the encoder substitutes the sparse form
+/// when it is strictly smaller; non-finite data always ships raw.
+pub fn put_tensor_encoded(b: &mut Vec<u8>, t: &HostTensor, enc: WireEncoding) {
+    let data = t.data();
+    let range = if enc == WireEncoding::Raw {
+        None
+    } else {
+        finite_minmax(data)
+    };
+    let Some((lo, hi)) = range else {
+        b.push(ENC_RAW);
+        put_tensor(b, t);
+        return;
+    };
+    let n = data.len();
+    match enc {
+        WireEncoding::Raw => unreachable!("raw handled above"),
+        WireEncoding::Q8 => {
+            let nnz = data.iter().filter(|v| **v != 0.0).count();
+            // Sparse: 12-byte header + bitmap + nnz vs dense 8 + n.
+            if 12 + n.div_ceil(8) + nnz < 8 + n {
+                b.push(ENC_Q8_SPARSE);
+                put_dims(b, t);
+                put_u32(b, nnz as u32);
+                let (nlo, nhi) = finite_minmax(
+                    &data.iter().copied().filter(|v| *v != 0.0).collect::<Vec<_>>(),
+                )
+                .expect("finite checked above");
+                let scale = push_levels_header(b, nlo, nhi, 255);
+                let mut bitmap = vec![0u8; n.div_ceil(8)];
+                for (i, &v) in data.iter().enumerate() {
+                    if v != 0.0 {
+                        bitmap[i / 8] |= 1 << (i % 8);
+                    }
+                }
+                b.extend_from_slice(&bitmap);
+                for &v in data.iter().filter(|v| **v != 0.0) {
+                    b.push(quantize(v, nlo, scale, 255));
+                }
+            } else {
+                b.push(ENC_Q8);
+                put_dims(b, t);
+                let scale = push_levels_header(b, lo, hi, 255);
+                for &v in data {
+                    b.push(quantize(v, lo, scale, 255));
+                }
+            }
+        }
+        WireEncoding::Q4 => {
+            b.push(ENC_Q4);
+            put_dims(b, t);
+            let scale = push_levels_header(b, lo, hi, 15);
+            for pair in data.chunks(2) {
+                let lo_nib = quantize(pair[0], lo, scale, 15);
+                let hi_nib = pair.get(1).map_or(0, |v| quantize(*v, lo, scale, 15));
+                b.push(lo_nib | (hi_nib << 4));
+            }
+        }
+    }
+}
+
+/// Decode an encoded-tensor payload into a dequantized [`HostTensor`]
+/// plus the [`WireEncoding`] that crossed the wire (sparse q8 reports
+/// as [`WireEncoding::Q8`]).
+pub fn take_tensor_encoded(rest: &[u8]) -> Result<(HostTensor, WireEncoding)> {
+    let (&enc, rest) = rest.split_first().context("truncated encoded tensor")?;
+    if enc == ENC_RAW {
+        return Ok((take_tensor(rest)?, WireEncoding::Raw));
+    }
+    let (shape, n, payload) = take_dims(rest)?;
+    match enc {
+        ENC_Q8 => {
+            if payload.len() != 8 + n {
+                bail!("bad q8 payload {} bytes for {n} elems", payload.len());
+            }
+            let scale = f32::from_le_bytes(payload[0..4].try_into().unwrap());
+            let zero = f32::from_le_bytes(payload[4..8].try_into().unwrap());
+            let data = payload[8..].iter().map(|&q| zero + q as f32 * scale).collect();
+            Ok((HostTensor::new(shape, data)?, WireEncoding::Q8))
+        }
+        ENC_Q4 => {
+            if payload.len() != 8 + n.div_ceil(2) {
+                bail!("bad q4 payload {} bytes for {n} elems", payload.len());
+            }
+            let scale = f32::from_le_bytes(payload[0..4].try_into().unwrap());
+            let zero = f32::from_le_bytes(payload[4..8].try_into().unwrap());
+            let mut data = Vec::with_capacity(n);
+            for (i, &byte) in payload[8..].iter().enumerate() {
+                data.push(zero + (byte & 0x0F) as f32 * scale);
+                if 2 * i + 1 < n {
+                    data.push(zero + (byte >> 4) as f32 * scale);
+                }
+            }
+            Ok((HostTensor::new(shape, data)?, WireEncoding::Q4))
+        }
+        ENC_Q8_SPARSE => {
+            let bitmap_len = n.div_ceil(8);
+            if payload.len() < 12 + bitmap_len {
+                bail!("truncated sparse q8 payload");
+            }
+            let nnz = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+            if nnz > n {
+                bail!("sparse q8 claims {nnz} nonzeros in {n} elems");
+            }
+            if payload.len() != 12 + bitmap_len + nnz {
+                bail!(
+                    "bad sparse q8 payload {} bytes for {n} elems / {nnz} nonzeros",
+                    payload.len()
+                );
+            }
+            let scale = f32::from_le_bytes(payload[4..8].try_into().unwrap());
+            let zero = f32::from_le_bytes(payload[8..12].try_into().unwrap());
+            let bitmap = &payload[12..12 + bitmap_len];
+            let qs = &payload[12 + bitmap_len..];
+            let mut data = Vec::with_capacity(n);
+            let mut taken = 0usize;
+            for i in 0..n {
+                if bitmap[i / 8] & (1 << (i % 8)) != 0 {
+                    if taken >= nnz {
+                        bail!("sparse q8 bitmap has more bits set than nnz {nnz}");
+                    }
+                    data.push(zero + qs[taken] as f32 * scale);
+                    taken += 1;
+                } else {
+                    data.push(0.0);
+                }
+            }
+            if taken != nnz {
+                bail!("sparse q8 bitmap has {taken} bits set, header says {nnz}");
+            }
+            // Padding bits past element n-1 must be clear.
+            for i in n..bitmap_len * 8 {
+                if bitmap[i / 8] & (1 << (i % 8)) != 0 {
+                    bail!("sparse q8 bitmap sets padding bit {i}");
+                }
+            }
+            Ok((HostTensor::new(shape, data)?, WireEncoding::Q8))
+        }
+        k => bail!("unknown tensor encoding {k}"),
+    }
+}
+
 /// Encode an INFER_PARTIAL request body straight from a borrowed
 /// tensor. The remote cloud client's hot path uses this to avoid
 /// cloning the batched activation into an owned [`Request`] first;
@@ -191,6 +450,67 @@ pub fn encode_infer_partial(split: u32, branch_state: u8, activation: &HostTenso
     b.push(branch_state);
     put_tensor(&mut b, activation);
     b
+}
+
+/// Encode a pipelined INFER_PARTIAL_SEQ request body straight from a
+/// borrowed tensor — the remote engine's hot path, same no-clone
+/// contract as [`encode_infer_partial`]; `Request::encode` delegates
+/// here so the two can't drift.
+pub fn encode_infer_partial_seq(
+    seq: u32,
+    split: u32,
+    branch_state: u8,
+    encoding: WireEncoding,
+    activation: &HostTensor,
+) -> Vec<u8> {
+    let mut b = vec![5u8];
+    put_u32(&mut b, seq);
+    put_u32(&mut b, split);
+    b.push(branch_state);
+    put_tensor_encoded(&mut b, activation, encoding);
+    b
+}
+
+/// Shared body of PARTIAL_RESULT (kind 3) and PARTIAL_RESULT_SEQ
+/// (kind 4, after the seq): `u32 n | n records | f64 cloud_s`.
+fn put_partial_body(b: &mut Vec<u8>, samples: &[PartialSample], cloud_s: f64) {
+    put_u32(b, samples.len() as u32);
+    for s in samples {
+        put_u32(b, s.class);
+        b.push(u8::from(s.exited));
+        b.extend_from_slice(&s.entropy.to_le_bytes());
+    }
+    b.extend_from_slice(&cloud_s.to_le_bytes());
+}
+
+fn take_partial_body(rest: &[u8]) -> Result<(Vec<PartialSample>, f64)> {
+    if rest.len() < 4 {
+        bail!("truncated PARTIAL_RESULT header");
+    }
+    let n = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+    if n > MAX_PARTIAL_SAMPLES {
+        bail!("PARTIAL_RESULT sample count {n} exceeds cap");
+    }
+    // 9 bytes per record (u32 class | u8 exited | f32 entropy)
+    // plus the trailing f64 cloud_s.
+    if rest.len() != 4 + n * 9 + 8 {
+        bail!("bad PARTIAL_RESULT length {} for {n} samples", rest.len());
+    }
+    let mut samples = Vec::with_capacity(n);
+    for r in rest[4..4 + n * 9].chunks_exact(9) {
+        let exited = match r[4] {
+            0 => false,
+            1 => true,
+            v => bail!("invalid exited flag {v}"),
+        };
+        samples.push(PartialSample {
+            class: u32::from_le_bytes(r[0..4].try_into().unwrap()),
+            exited,
+            entropy: f32::from_le_bytes(r[5..9].try_into().unwrap()),
+        });
+    }
+    let cloud_s = f64::from_le_bytes(rest[4 + n * 9..].try_into().unwrap());
+    Ok((samples, cloud_s))
 }
 
 impl Request {
@@ -214,6 +534,21 @@ impl Request {
                 activation,
             } => {
                 return encode_infer_partial(*split, *branch_state, activation);
+            }
+            Request::InferPartialSeq {
+                seq,
+                split,
+                branch_state,
+                encoding,
+                activation,
+            } => {
+                return encode_infer_partial_seq(
+                    *seq,
+                    *split,
+                    *branch_state,
+                    *encoding,
+                    activation,
+                );
             }
         }
         b
@@ -249,6 +584,25 @@ impl Request {
                     activation: take_tensor(&rest[5..])?,
                 })
             }
+            5 => {
+                if rest.len() < 9 {
+                    bail!("truncated INFER_PARTIAL_SEQ header");
+                }
+                let seq = u32::from_le_bytes(rest[0..4].try_into().unwrap());
+                let split = u32::from_le_bytes(rest[4..8].try_into().unwrap());
+                let branch_state = rest[8];
+                if branch_state > BRANCH_GATED {
+                    bail!("invalid branch_state {branch_state}");
+                }
+                let (activation, encoding) = take_tensor_encoded(&rest[9..])?;
+                Ok(Request::InferPartialSeq {
+                    seq,
+                    split,
+                    branch_state,
+                    encoding,
+                    activation,
+                })
+            }
             k => bail!("unknown request kind {k}"),
         }
     }
@@ -280,13 +634,22 @@ impl Response {
             }
             Response::PartialResult { samples, cloud_s } => {
                 b.push(3);
-                put_u32(&mut b, samples.len() as u32);
-                for s in samples {
-                    put_u32(&mut b, s.class);
-                    b.push(u8::from(s.exited));
-                    b.extend_from_slice(&s.entropy.to_le_bytes());
-                }
-                b.extend_from_slice(&cloud_s.to_le_bytes());
+                put_partial_body(&mut b, samples, *cloud_s);
+            }
+            Response::PartialResultSeq {
+                seq,
+                samples,
+                cloud_s,
+            } => {
+                b.push(4);
+                put_u32(&mut b, *seq);
+                put_partial_body(&mut b, samples, *cloud_s);
+            }
+            Response::ErrorSeq { seq, message } => {
+                b.push(254);
+                put_u32(&mut b, *seq);
+                put_u32(&mut b, message.len() as u32);
+                b.extend_from_slice(message.as_bytes());
             }
             Response::Error(msg) => {
                 b.push(255);
@@ -314,34 +677,33 @@ impl Response {
                 })
             }
             3 => {
-                if rest.len() < 4 {
-                    bail!("truncated PARTIAL_RESULT header");
-                }
-                let n = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
-                if n > MAX_PARTIAL_SAMPLES {
-                    bail!("PARTIAL_RESULT sample count {n} exceeds cap");
-                }
-                // 9 bytes per record (u32 class | u8 exited | f32 entropy)
-                // plus the trailing f64 cloud_s.
-                if rest.len() != 4 + n * 9 + 8 {
-                    bail!("bad PARTIAL_RESULT length {} for {n} samples", rest.len());
-                }
-                let mut samples = Vec::with_capacity(n);
-                for r in rest[4..4 + n * 9].chunks_exact(9) {
-                    let exited = match r[4] {
-                        0 => false,
-                        1 => true,
-                        v => bail!("invalid exited flag {v}"),
-                    };
-                    samples.push(PartialSample {
-                        class: u32::from_le_bytes(r[0..4].try_into().unwrap()),
-                        exited,
-                        entropy: f32::from_le_bytes(r[5..9].try_into().unwrap()),
-                    });
-                }
-                let cloud_s =
-                    f64::from_le_bytes(rest[4 + n * 9..].try_into().unwrap());
+                let (samples, cloud_s) = take_partial_body(rest)?;
                 Ok(Response::PartialResult { samples, cloud_s })
+            }
+            4 => {
+                if rest.len() < 4 {
+                    bail!("truncated PARTIAL_RESULT_SEQ header");
+                }
+                let seq = u32::from_le_bytes(rest[0..4].try_into().unwrap());
+                let (samples, cloud_s) = take_partial_body(&rest[4..])?;
+                Ok(Response::PartialResultSeq {
+                    seq,
+                    samples,
+                    cloud_s,
+                })
+            }
+            254 => {
+                if rest.len() < 8 {
+                    bail!("truncated ERROR_SEQ header");
+                }
+                let seq = u32::from_le_bytes(rest[0..4].try_into().unwrap());
+                let len = u32::from_le_bytes(rest[4..8].try_into().unwrap()) as usize;
+                if rest.len() != 8 + len {
+                    bail!("ERROR_SEQ length mismatch");
+                }
+                let message =
+                    String::from_utf8(rest[8..].to_vec()).context("invalid UTF-8")?;
+                Ok(Response::ErrorSeq { seq, message })
             }
             2 | 255 => {
                 if rest.len() < 4 {
@@ -551,5 +913,237 @@ mod tests {
         b.extend_from_slice(&[0u8; 8]);
         assert!(Request::decode(&b).is_err());
         assert!(Response::decode(&[1, 0, 0]).is_err());
+    }
+
+    fn encoded_roundtrip(t: &HostTensor, enc: WireEncoding) -> (HostTensor, WireEncoding, usize) {
+        let mut b = Vec::new();
+        put_tensor_encoded(&mut b, t, enc);
+        let size = b.len();
+        let (back, wire_enc) = take_tensor_encoded(&b).unwrap();
+        assert_eq!(back.shape(), t.shape());
+        (back, wire_enc, size)
+    }
+
+    #[test]
+    fn raw_encoding_is_bit_exact() {
+        let t = HostTensor::new(
+            vec![2, 3],
+            vec![1.0, -2.5, f32::NAN, f32::INFINITY, 0.0, 1e-30],
+        )
+        .unwrap();
+        let (back, enc, _) = encoded_roundtrip(&t, WireEncoding::Raw);
+        assert_eq!(enc, WireEncoding::Raw);
+        for (a, b) in t.data().iter().zip(back.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn q8_roundtrip_error_is_within_1_255_of_range() {
+        // A spread of values over [-3, 5]: range 8.
+        let data: Vec<f32> = (0..257).map(|i| -3.0 + (i as f32) * 8.0 / 256.0).collect();
+        let t = HostTensor::new(vec![257], data).unwrap();
+        let (back, enc, size) = encoded_roundtrip(&t, WireEncoding::Q8);
+        assert_eq!(enc, WireEncoding::Q8);
+        // Dense q8: encoding byte + dims header + 8 + n.
+        assert_eq!(size, 1 + 4 + 4 + 8 + 257);
+        let bound = 8.0 / 255.0;
+        for (a, b) in t.data().iter().zip(back.data()) {
+            assert!((a - b).abs() <= bound, "{a} -> {b}");
+        }
+        // Extremes land exactly on grid points (zero-point is min).
+        assert!((back.data()[0] - -3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn q4_roundtrip_error_is_within_1_15_of_range() {
+        let data: Vec<f32> = (0..33).map(|i| (i as f32) * 0.125 - 2.0).collect(); // range 4
+        let t = HostTensor::new(vec![33], data).unwrap();
+        let (back, enc, size) = encoded_roundtrip(&t, WireEncoding::Q4);
+        assert_eq!(enc, WireEncoding::Q4);
+        // Odd element count: 17 packed bytes.
+        assert_eq!(size, 1 + 4 + 4 + 8 + 17);
+        let bound = 4.0 / 15.0;
+        for (a, b) in t.data().iter().zip(back.data()) {
+            assert!((a - b).abs() <= bound, "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn constant_tensor_quantizes_exactly() {
+        // Degenerate range (max == min): scale 0, every value decodes
+        // to the zero-point exactly.
+        let t = HostTensor::new(vec![4], vec![2.5; 4]).unwrap();
+        for enc in [WireEncoding::Q8, WireEncoding::Q4] {
+            let (back, _, _) = encoded_roundtrip(&t, enc);
+            assert_eq!(back.data(), t.data());
+        }
+    }
+
+    #[test]
+    fn sparse_q8_kicks_in_for_post_relu_zeros_and_is_smaller() {
+        // 90% exact zeros, nonzeros in [1, 2]: the ReLU shape.
+        let data: Vec<f32> = (0..400)
+            .map(|i| if i % 10 == 0 { 1.0 + (i as f32) / 400.0 } else { 0.0 })
+            .collect();
+        let t = HostTensor::new(vec![400], data).unwrap();
+        let mut sparse = Vec::new();
+        put_tensor_encoded(&mut sparse, &t, WireEncoding::Q8);
+        assert_eq!(sparse[0], ENC_Q8_SPARSE, "mostly-zero tensor should ship sparse");
+        // Strictly smaller than the dense q8 form would have been.
+        assert!(sparse.len() < 1 + 4 + 4 + 8 + 400);
+        let (back, enc) = take_tensor_encoded(&sparse).unwrap();
+        assert_eq!(enc, WireEncoding::Q8, "sparse decodes as q8");
+        let range = 1.0; // nonzero range [1, 2]
+        for (a, b) in t.data().iter().zip(back.data()) {
+            if *a == 0.0 {
+                assert_eq!(*b, 0.0, "zeros must decode exactly");
+            } else {
+                assert!((a - b).abs() <= range / 255.0, "{a} -> {b}");
+            }
+        }
+        // A dense tensor must NOT pick the sparse form.
+        let dense = HostTensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let mut b = Vec::new();
+        put_tensor_encoded(&mut b, &dense, WireEncoding::Q8);
+        assert_eq!(b[0], ENC_Q8);
+    }
+
+    #[test]
+    fn non_finite_data_falls_back_to_raw() {
+        let t = HostTensor::new(vec![2], vec![f32::NAN, 1.0]).unwrap();
+        for enc in [WireEncoding::Q8, WireEncoding::Q4] {
+            let mut b = Vec::new();
+            put_tensor_encoded(&mut b, &t, enc);
+            assert_eq!(b[0], ENC_RAW);
+            let (back, got) = take_tensor_encoded(&b).unwrap();
+            assert_eq!(got, WireEncoding::Raw);
+            assert!(back.data()[0].is_nan());
+            assert_eq!(back.data()[1], 1.0);
+        }
+    }
+
+    #[test]
+    fn seq_request_roundtrips_raw_and_decodes_quantized() {
+        let t = HostTensor::new(vec![2, 3], vec![1., -2., 3.5, 0., 5., 6.]).unwrap();
+        // Raw: lossless, full equality.
+        let req = Request::InferPartialSeq {
+            seq: 9,
+            split: 2,
+            branch_state: BRANCH_GATED,
+            encoding: WireEncoding::Raw,
+            activation: t.clone(),
+        };
+        assert_eq!(roundtrip_req(&req), req);
+        // The seq must change the wire bytes.
+        let other = Request::InferPartialSeq {
+            seq: 10,
+            split: 2,
+            branch_state: BRANCH_GATED,
+            encoding: WireEncoding::Raw,
+            activation: t.clone(),
+        };
+        assert_ne!(req.encode(), other.encode());
+        // Quantized: seq/split/state/encoding survive; data within bound.
+        let q = Request::InferPartialSeq {
+            seq: 77,
+            split: 1,
+            branch_state: BRANCH_PENDING,
+            encoding: WireEncoding::Q8,
+            activation: t.clone(),
+        };
+        match roundtrip_req(&q) {
+            Request::InferPartialSeq {
+                seq,
+                split,
+                branch_state,
+                encoding,
+                activation,
+            } => {
+                assert_eq!((seq, split, branch_state), (77, 1, BRANCH_PENDING));
+                assert_eq!(encoding, WireEncoding::Q8);
+                let range = 8.0; // [-2, 6]
+                for (a, b) in t.data().iter().zip(activation.data()) {
+                    assert!((a - b).abs() <= range / 255.0);
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // The quantized frame is genuinely smaller than the raw one.
+        let big = HostTensor::new(vec![256], (0..256).map(|i| i as f32).collect()).unwrap();
+        let raw_len = encode_infer_partial_seq(0, 1, 0, WireEncoding::Raw, &big).len();
+        let q8_len = encode_infer_partial_seq(0, 1, 0, WireEncoding::Q8, &big).len();
+        let q4_len = encode_infer_partial_seq(0, 1, 0, WireEncoding::Q4, &big).len();
+        assert!(q8_len < raw_len / 3, "{q8_len} vs {raw_len}");
+        assert!(q4_len < q8_len);
+    }
+
+    #[test]
+    fn seq_frames_reject_malformed_bodies() {
+        // Truncated seq header (needs 9 bytes + tensor).
+        assert!(Request::decode(&[5]).is_err());
+        assert!(Request::decode(&[5, 1, 0, 0, 0]).is_err());
+        assert!(Request::decode(&[5, 1, 0, 0, 0, 2, 0, 0, 0]).is_err());
+        // Invalid branch state.
+        assert!(Request::decode(&[5, 1, 0, 0, 0, 2, 0, 0, 0, 9, 0]).is_err());
+        // Unknown encoding byte (kind | seq | split | state | enc tag).
+        let t = HostTensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let mut body = encode_infer_partial_seq(1, 1, 0, WireEncoding::Raw, &t);
+        body[10] = 200; // the encoding tag
+        assert!(Request::decode(&body).is_err());
+        // Truncated quantized payload.
+        let mut trunc = encode_infer_partial_seq(1, 1, 0, WireEncoding::Q8, &t);
+        trunc.truncate(trunc.len() - 1);
+        assert!(Request::decode(&trunc).is_err());
+        // Sparse q8 with a lying nnz header.
+        let zeros =
+            HostTensor::new(vec![64], vec![0.0; 64]).unwrap();
+        let mut sparse = encode_infer_partial_seq(1, 1, 0, WireEncoding::Q8, &zeros);
+        assert_eq!(sparse[10], ENC_Q8_SPARSE);
+        // nnz lives right after the encoding byte + dims (1 dim here).
+        let nnz_at = 10 + 1 + 4 + 4;
+        sparse[nnz_at..nnz_at + 4].copy_from_slice(&200u32.to_le_bytes());
+        assert!(Request::decode(&sparse).is_err());
+    }
+
+    #[test]
+    fn seq_responses_roundtrip_and_reject_malformed() {
+        let r = Response::PartialResultSeq {
+            seq: 41,
+            samples: vec![PartialSample {
+                class: 1,
+                exited: false,
+                entropy: 0.25,
+            }],
+            cloud_s: 0.5,
+        };
+        assert_eq!(roundtrip_resp(&r), r);
+        let e = Response::ErrorSeq {
+            seq: 41,
+            message: "nope".into(),
+        };
+        assert_eq!(roundtrip_resp(&e), e);
+        // Seq responses must differ from their unsequenced twins on the
+        // wire (the demultiplexer depends on it).
+        let plain = Response::PartialResult {
+            samples: vec![PartialSample {
+                class: 1,
+                exited: false,
+                entropy: 0.25,
+            }],
+            cloud_s: 0.5,
+        };
+        assert_ne!(r.encode(), plain.encode());
+        // Truncated / mismatched lengths.
+        assert!(Response::decode(&[4]).is_err());
+        assert!(Response::decode(&[4, 1, 0, 0, 0]).is_err());
+        assert!(Response::decode(&[254, 1, 0, 0, 0]).is_err());
+        let mut bad = e.encode();
+        bad.truncate(bad.len() - 1);
+        assert!(Response::decode(&bad).is_err());
+        let mut wrong = r.encode();
+        // Claim 2 samples while carrying 1.
+        wrong[5..9].copy_from_slice(&2u32.to_le_bytes());
+        assert!(Response::decode(&wrong).is_err());
     }
 }

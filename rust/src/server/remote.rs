@@ -4,16 +4,26 @@
 //! A [`RemoteCloudEngine`] turns a [`super::CloudStageServer`] across
 //! the network into something the coordinator's cloud workers can call
 //! like a local engine: it ships each transferred split-group as one
-//! INFER_PARTIAL frame and returns the server's per-sample classes and
-//! compute time. It is deliberately dumb about *planning* — every frame
-//! carries its own cut, so it never needs the live partition plan.
+//! seq-tagged INFER_PARTIAL_SEQ frame and returns the server's
+//! per-sample classes and compute time. It is deliberately dumb about
+//! *planning* — every frame carries its own cut, so it never needs the
+//! live partition plan.
+//!
+//! **Pipelined, not lockstep.** Each pooled connection carries up to
+//! the in-flight cap of concurrent requests: callers stream frames
+//! through a shared writer, and a per-connection reader thread matches
+//! every response to its waiter by the echoed `seq`. A slow batch no
+//! longer serializes the batches behind it — under concurrency the wire
+//! stays full instead of idling for a round-trip per batch. The
+//! activation payload crosses the wire in the configured
+//! [`WireEncoding`] (raw f32, q8, or q4 — the server dequantizes).
 //!
 //! Failure posture (the edge must keep serving when the cloud is not
 //! reachable — the caller falls back to local execution):
 //!
-//! * **Pooled connections** — idle `TcpStream`s are reused across
-//!   batches (one in-flight request per connection; the pool grows on
-//!   demand up to `pool_capacity` idle entries).
+//! * **Pooled connections** — persistent streams shared across calls;
+//!   the least-loaded healthy connection takes the next frame, and the
+//!   pool grows on demand up to `pool_capacity` connections.
 //! * **Reconnect with backoff** — after a connect/IO failure the engine
 //!   fast-fails every call until the backoff window expires
 //!   (exponential from `backoff_initial` to `backoff_max`, reset on the
@@ -23,37 +33,51 @@
 //!   calls beyond the cap fail immediately (and the caller runs the
 //!   batch locally) rather than queueing behind a slow remote.
 //! * **Rejection breaker** — a healthy link that keeps answering with
-//!   application ERROR frames (wrong server kind, mismatched model) is
-//!   a misconfiguration, not a transient: after
-//!   [`REJECTION_BREAKER`] consecutive rejections the engine enters a
-//!   `backoff_max` window too, so a misconfigured cloud doesn't cost a
-//!   full tensor round-trip per batch forever.
+//!   ERROR_SEQ frames (wrong server kind, mismatched model) is a
+//!   misconfiguration, not a transient: after [`REJECTION_BREAKER`]
+//!   consecutive rejections the engine enters a `backoff_max` window
+//!   too, so a misconfigured cloud doesn't cost a full tensor
+//!   round-trip per batch forever. Rejections stay scoped to their seq:
+//!   the other in-flight requests on the connection are untouched.
+//!
+//! Per-call deadlines are enforced by the waiter (`recv_timeout` on the
+//! reply channel), not by a socket read timeout — the reader thread
+//! must be allowed to block forever on an *idle* connection without
+//! declaring it dead.
 
-use std::io::{BufReader, BufWriter};
+use std::collections::HashMap;
+use std::io::BufWriter;
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::network::encoding::WireEncoding;
 use crate::runtime::HostTensor;
 
-use super::protocol::{encode_infer_partial, read_frame, write_frame, Request, Response};
+use super::protocol::{
+    encode_infer_partial_seq, read_frame, write_frame, Request, Response,
+};
 use super::tcp::PartialOutput;
 
 #[derive(Debug, Clone)]
 pub struct RemoteCloudConfig {
     /// `HOST:PORT` of the cloud-stage server.
     pub addr: String,
+    /// Wire encoding of the activation payload (the server dequantizes;
+    /// results come back as plain classes either way).
+    pub encoding: WireEncoding,
     /// Max concurrent requests; calls beyond this fail fast (the
     /// coordinator then executes the batch on the local fallback).
     pub max_inflight: usize,
-    /// Idle connections kept for reuse.
+    /// Connections kept in the pool (each carries many in-flight
+    /// requests; more connections mainly buy TCP-level parallelism).
     pub pool_capacity: usize,
     pub connect_timeout: Duration,
-    /// Per-call read/write timeout — must cover the server's compute
-    /// time for one batch.
+    /// Per-call deadline — must cover the server's compute time for one
+    /// batch plus the queueing ahead of it on the shared connection.
     pub io_timeout: Duration,
     pub backoff_initial: Duration,
     pub backoff_max: Duration,
@@ -63,6 +87,7 @@ impl RemoteCloudConfig {
     pub fn new(addr: impl Into<String>) -> RemoteCloudConfig {
         RemoteCloudConfig {
             addr: addr.into(),
+            encoding: WireEncoding::Raw,
             max_inflight: 8,
             pool_capacity: 8,
             connect_timeout: Duration::from_secs(2),
@@ -73,33 +98,56 @@ impl RemoteCloudConfig {
     }
 }
 
-/// One pooled connection. The reader/writer pair persists with the
-/// stream: the protocol is strict request/response with a single
-/// outstanding call per connection, so buffered read-ahead can never
-/// swallow another call's bytes.
-struct PooledConn {
-    reader: BufReader<TcpStream>,
-    writer: BufWriter<TcpStream>,
+/// What the reader thread hands a waiter: the server's answer for that
+/// seq. `Err` is an application-level rejection (ERROR_SEQ) — the
+/// connection itself is still healthy. Connection-level failures are
+/// signalled by dropping the sender (the waiter sees `Disconnected`).
+type Reply = std::result::Result<PartialOutput, String>;
+
+/// One pooled connection: a shared writer callers stream frames
+/// through, and a pending map the reader thread resolves by seq.
+struct Conn {
+    /// Kept to `shutdown()` the socket when the connection is declared
+    /// broken — that is what unblocks the reader thread.
+    stream: TcpStream,
+    writer: Mutex<BufWriter<TcpStream>>,
+    pending: Mutex<HashMap<u32, mpsc::SyncSender<Reply>>>,
+    /// Requests currently in flight on *this* connection (checkout
+    /// picks the least-loaded one).
+    inflight: AtomicUsize,
+    broken: AtomicBool,
 }
 
-/// Consecutive application-level ERROR frames after which the engine
-/// backs off as if the link had failed — the server is reachable but
-/// persistently rejecting (wrong server kind, mismatched model), and
-/// shipping a full activation per batch to learn that again is waste.
+impl Conn {
+    /// Declare the connection dead: no new checkouts, reader unblocked
+    /// (socket shutdown), every waiter released (senders dropped).
+    fn mark_broken(&self) {
+        self.broken.store(true, Ordering::SeqCst);
+        self.stream.shutdown(std::net::Shutdown::Both).ok();
+        self.pending.lock().unwrap().clear();
+    }
+}
+
+/// Consecutive application-level rejections (ERROR_SEQ frames) after
+/// which the engine backs off as if the link had failed — the server is
+/// reachable but persistently rejecting (wrong server kind, mismatched
+/// model), and shipping a full activation per batch to learn that again
+/// is waste.
 pub const REJECTION_BREAKER: u32 = 3;
 
 #[derive(Debug, Default)]
 struct Backoff {
     until: Option<Instant>,
     consecutive: u32,
-    /// Consecutive application-level rejections (ERROR frames).
+    /// Consecutive application-level rejections (ERROR_SEQ frames).
     rejections: u32,
 }
 
-/// Counters for observability; all monotonic.
+/// Counters for observability; all monotonic except `inflight_peak`
+/// (a high-water mark).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct RemoteCloudStats {
-    /// INFER_PARTIAL round-trips attempted (excludes fast-fails).
+    /// INFER_PARTIAL_SEQ frames attempted (excludes fast-fails).
     pub requests: u64,
     /// Connect/IO/protocol failures.
     pub failures: u64,
@@ -112,12 +160,20 @@ pub struct RemoteCloudStats {
     /// Calls whose pooled connection had died idle and were retried on
     /// a freshly dialed one (not failures — the retry usually wins).
     pub stale_retries: u64,
+    /// Framed bytes written to the wire (8-byte headers included).
+    pub bytes_sent: u64,
+    /// Framed bytes read off the wire (8-byte headers included).
+    pub bytes_received: u64,
+    /// High-water mark of concurrent in-flight requests — the direct
+    /// measure of how much pipelining actually happened.
+    pub inflight_peak: u64,
 }
 
 pub struct RemoteCloudEngine {
     cfg: RemoteCloudConfig,
-    pool: Mutex<Vec<PooledConn>>,
+    pool: Mutex<Vec<Arc<Conn>>>,
     inflight: AtomicUsize,
+    next_seq: AtomicU32,
     backoff: Mutex<Backoff>,
     requests: AtomicU64,
     failures: AtomicU64,
@@ -125,9 +181,14 @@ pub struct RemoteCloudEngine {
     saturated: AtomicU64,
     connects: AtomicU64,
     stale_retries: AtomicU64,
+    bytes_sent: AtomicU64,
+    /// `Arc` so per-connection reader threads can count into it without
+    /// borrowing the engine.
+    bytes_received: Arc<AtomicU64>,
+    inflight_peak: AtomicU64,
 }
 
-/// RAII release of one in-flight slot.
+/// RAII release of one engine-level in-flight slot.
 struct InflightGuard<'a>(&'a AtomicUsize);
 
 impl Drop for InflightGuard<'_> {
@@ -147,6 +208,7 @@ impl RemoteCloudEngine {
             cfg,
             pool: Mutex::new(Vec::new()),
             inflight: AtomicUsize::new(0),
+            next_seq: AtomicU32::new(1),
             backoff: Mutex::new(Backoff::default()),
             requests: AtomicU64::new(0),
             failures: AtomicU64::new(0),
@@ -154,11 +216,19 @@ impl RemoteCloudEngine {
             saturated: AtomicU64::new(0),
             connects: AtomicU64::new(0),
             stale_retries: AtomicU64::new(0),
+            bytes_sent: AtomicU64::new(0),
+            bytes_received: Arc::new(AtomicU64::new(0)),
+            inflight_peak: AtomicU64::new(0),
         }
     }
 
     pub fn addr(&self) -> &str {
         &self.cfg.addr
+    }
+
+    /// The wire encoding this engine ships activations in.
+    pub fn encoding(&self) -> WireEncoding {
+        self.cfg.encoding
     }
 
     pub fn stats(&self) -> RemoteCloudStats {
@@ -169,29 +239,22 @@ impl RemoteCloudEngine {
             saturated: self.saturated.load(Ordering::Relaxed),
             connects: self.connects.load(Ordering::Relaxed),
             stale_retries: self.stale_retries.load(Ordering::Relaxed),
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            bytes_received: self.bytes_received.load(Ordering::Relaxed),
+            inflight_peak: self.inflight_peak.load(Ordering::Relaxed),
         }
     }
 
     /// Round-trip a PING (health probe; used at startup for a loud
-    /// "cloud reachable/unreachable" log line). Subject to the same
-    /// backoff bookkeeping as inference calls.
+    /// "cloud reachable/unreachable" log line). Runs lockstep on its
+    /// own short-lived connection — pooled connections' read side
+    /// belongs to their reader threads. Subject to the same backoff
+    /// bookkeeping as inference calls.
     pub fn ping(&self) -> Result<()> {
-        let (mut conn, _pooled) = match self.checkout() {
-            Ok(c) => c,
-            Err(e) => {
-                self.note_failure();
-                return Err(e);
-            }
-        };
-        match Self::call(&mut conn, &Request::Ping) {
-            Ok(Response::Pong) => {
+        match self.ping_once() {
+            Ok(()) => {
                 self.note_success();
-                self.checkin(conn);
                 Ok(())
-            }
-            Ok(other) => {
-                self.note_failure();
-                bail!("expected PONG, got {other:?}")
             }
             Err(e) => {
                 self.note_failure();
@@ -200,11 +263,31 @@ impl RemoteCloudEngine {
         }
     }
 
+    fn ping_once(&self) -> Result<()> {
+        let stream = self.dial_stream()?;
+        stream.set_read_timeout(Some(self.cfg.io_timeout)).ok();
+        let mut reader = std::io::BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        let body = Request::Ping.encode();
+        write_frame(&mut writer, &body)?;
+        self.bytes_sent
+            .fetch_add(body.len() as u64 + 8, Ordering::Relaxed);
+        let reply = read_frame(&mut reader)?;
+        self.bytes_received
+            .fetch_add(reply.len() as u64 + 8, Ordering::Relaxed);
+        match Response::decode(&reply)? {
+            Response::Pong => Ok(()),
+            other => bail!("expected PONG, got {other:?}"),
+        }
+    }
+
     /// Ship one split-group to the cloud-stage server: run stages
     /// `split+1..=N` on `activation` (a batched tensor cut after stage
-    /// `split`) and return one record per sample. Fails fast when the
-    /// engine is in backoff or at the in-flight cap — the caller is
-    /// expected to fall back to local execution.
+    /// `split`) and return one record per sample. The payload crosses
+    /// the wire in the configured encoding; concurrent calls pipeline
+    /// on shared connections. Fails fast when the engine is in backoff
+    /// or at the in-flight cap — the caller is expected to fall back to
+    /// local execution.
     pub fn infer_partial(
         &self,
         split: usize,
@@ -228,6 +311,19 @@ impl RemoteCloudEngine {
         }
         let _slot = InflightGuard(&self.inflight);
 
+        // Encoded once, straight from the borrowed tensor — quantized
+        // per the configured encoding, no owned Request, no activation
+        // clone on the hot path. The same body (same seq) is reused on
+        // a stale retry: the fresh connection has an empty pending map.
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let body = encode_infer_partial_seq(
+            seq,
+            split as u32,
+            branch_state,
+            self.cfg.encoding,
+            activation,
+        );
+
         let (mut conn, mut pooled) = match self.checkout() {
             Ok(c) => c,
             Err(e) => {
@@ -235,38 +331,30 @@ impl RemoteCloudEngine {
                 return Err(e);
             }
         };
-        // Encoded once, straight from the borrowed tensor — no owned
-        // Request, no activation clone on the hot path.
-        let body = encode_infer_partial(split as u32, branch_state, activation);
         loop {
             self.requests.fetch_add(1, Ordering::Relaxed);
-            match Self::call_raw(&mut conn, &body) {
-                Ok(Response::PartialResult { samples, cloud_s }) => {
+            match self.attempt(&conn, seq, &body) {
+                Attempt::Done(out) => {
                     self.note_success();
-                    self.checkin(conn);
-                    return Ok(PartialOutput { samples, cloud_s });
+                    return Ok(out);
                 }
-                // An ERROR frame means the link is healthy but the
-                // server rejected the batch (bad split, engine error):
-                // keep the connection, report the failure up, and trip
-                // the rejection breaker if it keeps happening.
-                Ok(Response::Error(msg)) => {
-                    self.checkin(conn);
+                // An ERROR_SEQ frame means the link is healthy but the
+                // server rejected this batch (bad split, engine error):
+                // the connection keeps serving its other in-flight
+                // requests; report the failure up and trip the
+                // rejection breaker if it keeps happening.
+                Attempt::Rejected(msg) => {
                     self.note_rejection();
                     bail!("cloud server rejected partial batch: {msg}")
-                }
-                Ok(other) => {
-                    self.note_failure();
-                    bail!("unexpected response to INFER_PARTIAL: {other:?}")
                 }
                 // A pooled stream may have died idle (server restart,
                 // NAT timeout) — that says nothing about the server's
                 // current health, so retry exactly once on a freshly
                 // dialed connection before declaring a failure.
-                Err(e) if pooled => {
+                Attempt::ConnDead(e) if pooled => {
                     log::debug!("pooled cloud connection was stale ({e:#}); redialing");
                     self.stale_retries.fetch_add(1, Ordering::Relaxed);
-                    drop(conn);
+                    self.evict(&conn);
                     conn = match self.dial() {
                         Ok(c) => c,
                         Err(de) => {
@@ -276,7 +364,8 @@ impl RemoteCloudEngine {
                     };
                     pooled = false;
                 }
-                Err(e) => {
+                Attempt::ConnDead(e) => {
+                    self.evict(&conn);
                     self.note_failure();
                     return Err(
                         e.context(format!("cloud round-trip to {} failed", self.cfg.addr))
@@ -286,22 +375,61 @@ impl RemoteCloudEngine {
         }
     }
 
-    fn call(conn: &mut PooledConn, req: &Request) -> Result<Response> {
-        Self::call_raw(conn, &req.encode())
-    }
+    /// One pipelined exchange on one connection: register the waiter,
+    /// stream the frame through the shared writer, block on the reply
+    /// channel until the reader thread resolves this seq.
+    fn attempt(&self, conn: &Arc<Conn>, seq: u32, body: &[u8]) -> Attempt {
+        let (tx, rx) = mpsc::sync_channel::<Reply>(1);
+        conn.pending.lock().unwrap().insert(seq, tx);
+        conn.inflight.fetch_add(1, Ordering::AcqRel);
+        let _conn_slot = InflightGuard(&conn.inflight);
 
-    fn call_raw(conn: &mut PooledConn, body: &[u8]) -> Result<Response> {
-        write_frame(&mut conn.writer, body)?;
-        let reply = read_frame(&mut conn.reader)?;
-        Response::decode(&reply)
+        let write_result = {
+            let mut w = conn.writer.lock().unwrap();
+            write_frame(&mut *w, body)
+        };
+        if let Err(e) = write_result {
+            conn.pending.lock().unwrap().remove(&seq);
+            conn.mark_broken();
+            return Attempt::ConnDead(e);
+        }
+        self.bytes_sent
+            .fetch_add(body.len() as u64 + 8, Ordering::Relaxed);
+
+        match rx.recv_timeout(self.cfg.io_timeout) {
+            Ok(Ok(out)) => Attempt::Done(out),
+            Ok(Err(msg)) => Attempt::Rejected(msg),
+            // Sender dropped: the reader thread declared the connection
+            // dead and drained the pending map.
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Attempt::ConnDead(anyhow::anyhow!("connection closed mid-request"))
+            }
+            // Deadline blown with the connection still nominally up: a
+            // stuck server or a half-dead link. Kill the connection so
+            // its other waiters fail fast too instead of each burning a
+            // full timeout.
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                conn.pending.lock().unwrap().remove(&seq);
+                conn.mark_broken();
+                Attempt::ConnDead(anyhow::anyhow!(
+                    "no response within {:?}",
+                    self.cfg.io_timeout
+                ))
+            }
+        }
     }
 
     fn try_acquire(&self) -> bool {
-        self.inflight
+        let acquired = self
+            .inflight
             .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
                 (n < self.cfg.max_inflight).then_some(n + 1)
-            })
-            .is_ok()
+            });
+        if let Ok(prev) = acquired {
+            self.inflight_peak
+                .fetch_max(prev as u64 + 1, Ordering::Relaxed);
+        }
+        acquired.is_ok()
     }
 
     /// Seconds left in the backoff window, if one is active.
@@ -316,21 +444,45 @@ impl RemoteCloudEngine {
         }
     }
 
-    /// A connection to run one call on, and whether it came from the
-    /// idle pool (pooled streams may have died idle; the caller retries
-    /// those once on a fresh dial).
-    fn checkout(&self) -> Result<(PooledConn, bool)> {
-        if let Some(conn) = self.pool.lock().unwrap().pop() {
-            return Ok((conn, true));
+    /// A connection to run one call on, and whether it was already in
+    /// the pool (pooled streams may have died idle; the caller retries
+    /// those once on a fresh dial). Policy: prune broken connections,
+    /// reuse an idle one if any, grow the pool while a healthy
+    /// connection is busy and there is capacity, otherwise share the
+    /// least-loaded one — that is the pipelining case.
+    fn checkout(&self) -> Result<(Arc<Conn>, bool)> {
+        {
+            let mut pool = self.pool.lock().unwrap();
+            pool.retain(|c| !c.broken.load(Ordering::SeqCst));
+            let best = pool
+                .iter()
+                .min_by_key(|c| c.inflight.load(Ordering::Acquire))
+                .cloned();
+            if let Some(best) = best {
+                if best.inflight.load(Ordering::Acquire) == 0
+                    || pool.len() >= self.cfg.pool_capacity
+                {
+                    return Ok((best, true));
+                }
+            }
         }
         Ok((self.dial()?, false))
     }
 
-    /// Dial a fresh connection, trying every resolved address until one
+    /// Drop a dead connection from the pool (it may already be gone).
+    fn evict(&self, conn: &Arc<Conn>) {
+        conn.mark_broken();
+        self.pool
+            .lock()
+            .unwrap()
+            .retain(|c| !Arc::ptr_eq(c, conn));
+    }
+
+    /// Dial a raw stream, trying every resolved address until one
     /// connects — a dual-stack hostname must not strand the edge on an
     /// IPv6 address when the cloud server only listens on IPv4 (or vice
     /// versa).
-    fn dial(&self) -> Result<PooledConn> {
+    fn dial_stream(&self) -> Result<TcpStream> {
         let addrs: Vec<SocketAddr> = self
             .cfg
             .addr
@@ -345,15 +497,12 @@ impl RemoteCloudEngine {
             match TcpStream::connect_timeout(addr, self.cfg.connect_timeout) {
                 Ok(stream) => {
                     stream.set_nodelay(true).ok();
-                    stream.set_read_timeout(Some(self.cfg.io_timeout)).ok();
+                    // No read timeout: the reader thread must block
+                    // forever on an idle connection. Per-call deadlines
+                    // are the waiter's recv_timeout.
                     stream.set_write_timeout(Some(self.cfg.io_timeout)).ok();
                     self.connects.fetch_add(1, Ordering::Relaxed);
-                    return Ok(PooledConn {
-                        reader: BufReader::new(
-                            stream.try_clone().context("cloning cloud stream")?,
-                        ),
-                        writer: BufWriter::new(stream),
-                    });
+                    return Ok(stream);
                 }
                 Err(e) => last_err = Some((*addr, e)),
             }
@@ -365,12 +514,32 @@ impl RemoteCloudEngine {
         )))
     }
 
-    fn checkin(&self, conn: PooledConn) {
+    /// Dial a fresh pipelined connection: spawn its reader thread and
+    /// add it to the pool (if there is room) so concurrent callers can
+    /// share it immediately.
+    fn dial(&self) -> Result<Arc<Conn>> {
+        let stream = self.dial_stream()?;
+        let conn = Arc::new(Conn {
+            writer: Mutex::new(BufWriter::new(
+                stream.try_clone().context("cloning cloud stream")?,
+            )),
+            pending: Mutex::new(HashMap::new()),
+            inflight: AtomicUsize::new(0),
+            broken: AtomicBool::new(false),
+            stream,
+        });
+        let reader_conn = conn.clone();
+        let reader_stream = conn.stream.try_clone().context("cloning cloud stream")?;
+        let bytes_received = self.bytes_received.clone();
+        std::thread::Builder::new()
+            .name("cloud-rx".into())
+            .spawn(move || reader_loop(reader_stream, reader_conn, bytes_received))
+            .context("spawning cloud reader thread")?;
         let mut pool = self.pool.lock().unwrap();
         if pool.len() < self.cfg.pool_capacity {
-            pool.push(conn);
+            pool.push(conn.clone());
         }
-        // Beyond capacity: drop, closing the stream.
+        Ok(conn)
     }
 
     fn note_success(&self) {
@@ -380,7 +549,7 @@ impl RemoteCloudEngine {
         b.until = None;
     }
 
-    /// The link round-tripped but the server answered ERROR. The
+    /// The link round-tripped but the server answered ERROR_SEQ. The
     /// connection stays pooled and the failure counters stay untouched;
     /// persistent rejection still engages a full backoff window so a
     /// misconfigured cloud isn't paid for per batch.
@@ -402,9 +571,15 @@ impl RemoteCloudEngine {
 
     fn note_failure(&self) {
         self.failures.fetch_add(1, Ordering::Relaxed);
-        // A failed connection is useless to siblings too: drop the idle
-        // pool so the next successful call starts from fresh streams.
-        self.pool.lock().unwrap().clear();
+        // A failed connection is useless to siblings too: drop the pool
+        // so the next successful call starts from fresh streams.
+        {
+            let mut pool = self.pool.lock().unwrap();
+            for c in pool.iter() {
+                c.mark_broken();
+            }
+            pool.clear();
+        }
         let mut b = self.backoff.lock().unwrap();
         b.consecutive = b.consecutive.saturating_add(1);
         // 100ms, 200ms, 400ms, ... capped at backoff_max.
@@ -418,11 +593,74 @@ impl RemoteCloudEngine {
     }
 }
 
+enum Attempt {
+    Done(PartialOutput),
+    /// Application-level ERROR_SEQ: the connection is healthy.
+    Rejected(String),
+    /// The connection is dead (write failed, stream closed, deadline
+    /// blown); retry once on a fresh one if it came from the pool.
+    ConnDead(anyhow::Error),
+}
+
+/// Per-connection reader: demultiplexes seq-tagged responses to their
+/// waiters. Exits — marking the connection broken and releasing every
+/// waiter — on stream close, decode failure, or a protocol violation
+/// (unknown seq, non-seq frame): once the response stream can't be
+/// trusted to match requests, every in-flight call on the connection
+/// must fail rather than risk crossed answers.
+fn reader_loop(stream: TcpStream, conn: Arc<Conn>, bytes_received: Arc<AtomicU64>) {
+    let mut reader = std::io::BufReader::new(stream);
+    loop {
+        let reply = match read_frame(&mut reader) {
+            Ok(r) => r,
+            Err(_) => break, // closed or shut down
+        };
+        bytes_received.fetch_add(reply.len() as u64 + 8, Ordering::Relaxed);
+        match Response::decode(&reply) {
+            Ok(Response::PartialResultSeq {
+                seq,
+                samples,
+                cloud_s,
+            }) => match conn.pending.lock().unwrap().remove(&seq) {
+                Some(tx) => {
+                    let _ = tx.send(Ok(PartialOutput { samples, cloud_s }));
+                }
+                None => {
+                    log::warn!("cloud server answered unknown seq {seq}; dropping connection");
+                    break;
+                }
+            },
+            Ok(Response::ErrorSeq { seq, message }) => {
+                match conn.pending.lock().unwrap().remove(&seq) {
+                    Some(tx) => {
+                        let _ = tx.send(Err(message));
+                    }
+                    None => {
+                        log::warn!(
+                            "cloud server rejected unknown seq {seq}; dropping connection"
+                        );
+                        break;
+                    }
+                }
+            }
+            Ok(other) => {
+                log::warn!("unexpected response on pipelined connection: {other:?}");
+                break;
+            }
+            Err(e) => {
+                log::warn!("undecodable response on pipelined connection: {e:#}");
+                break;
+            }
+        }
+    }
+    conn.mark_broken();
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    use std::sync::Arc;
+    use std::io::BufReader;
 
     use crate::model::Manifest;
     use crate::runtime::InferenceEngine;
@@ -437,6 +675,16 @@ mod tests {
         })
     }
 
+    fn live_server() -> (crate::server::tcp::ServerHandle, Arc<CloudStageServer>) {
+        let manifest =
+            Manifest::synthetic_sim("sim-stale", vec![4], &[16, 8, 2], 1, 2, vec![1, 2]).unwrap();
+        let css = Arc::new(CloudStageServer::new(
+            InferenceEngine::open_sim(manifest, "stale-srv").unwrap(),
+        ));
+        let handle = Server::new(css.clone()).start(0).unwrap();
+        (handle, css)
+    }
+
     #[test]
     fn dead_server_fails_then_backs_off() {
         let eng = unreachable_engine();
@@ -444,7 +692,7 @@ mod tests {
         assert!(eng.infer_partial(0, 0, &act).is_err());
         let s = eng.stats();
         assert_eq!(s.failures, 1);
-        assert_eq!(s.requests, 0, "connect failed before any round-trip");
+        assert_eq!(s.requests, 0, "connect failed before any frame went out");
 
         // Within the backoff window: fast-fail without touching the net.
         assert!(eng.infer_partial(0, 0, &act).is_err());
@@ -468,23 +716,27 @@ mod tests {
 
     #[test]
     fn stale_pooled_connection_retries_on_a_fresh_dial() {
-        let manifest =
-            Manifest::synthetic_sim("sim-stale", vec![4], &[16, 8, 2], 1, 2, vec![1, 2]).unwrap();
-        let css = Arc::new(CloudStageServer::new(
-            InferenceEngine::open_sim(manifest, "stale-srv").unwrap(),
-        ));
-        let handle = Server::new(css).start(0).unwrap();
-        let eng = RemoteCloudEngine::new(RemoteCloudConfig::new(handle.addr().to_string()));
+        let (handle, _css) = live_server();
+        let eng = RemoteCloudEngine::new(RemoteCloudConfig {
+            // Bound the worst case if the stale write lands in an OS
+            // buffer instead of erroring outright.
+            io_timeout: Duration::from_secs(2),
+            ..RemoteCloudConfig::new(handle.addr().to_string())
+        });
 
-        // Poison the idle pool with a connection that has already died
-        // (the server-restart / NAT-timeout scenario).
+        // Poison the pool with a connection whose stream has already
+        // died (the server-restart / NAT-timeout scenario). No reader
+        // thread: a NAT-dead stream looks healthy until it's used.
         {
             let dead = TcpStream::connect(handle.addr()).unwrap();
             dead.shutdown(std::net::Shutdown::Both).ok();
-            let conn = PooledConn {
-                reader: BufReader::new(dead.try_clone().unwrap()),
-                writer: BufWriter::new(dead),
-            };
+            let conn = Arc::new(Conn {
+                writer: Mutex::new(BufWriter::new(dead.try_clone().unwrap())),
+                pending: Mutex::new(HashMap::new()),
+                inflight: AtomicUsize::new(0),
+                broken: AtomicBool::new(false),
+                stream: dead,
+            });
             eng.pool.lock().unwrap().push(conn);
         }
 
@@ -516,5 +768,111 @@ mod tests {
         // Slot released: the next call reaches the (dead) network path.
         assert!(eng.infer_partial(0, 0, &act).is_err());
         assert_eq!(eng.stats().failures, 1);
+        assert_eq!(eng.stats().inflight_peak, 1);
+    }
+
+    #[test]
+    fn concurrent_calls_pipeline_on_one_connection() {
+        let (handle, css) = live_server();
+        let eng = Arc::new(RemoteCloudEngine::new(RemoteCloudConfig {
+            pool_capacity: 1, // force every call onto the same stream
+            encoding: WireEncoding::Q8,
+            ..RemoteCloudConfig::new(handle.addr().to_string())
+        }));
+
+        // Warm the pool with one lockstep call so every concurrent
+        // worker below finds (and shares) the same established
+        // connection instead of racing to dial.
+        eng.infer_partial(0, 0, &HostTensor::zeros(vec![1, 4]))
+            .unwrap();
+
+        // Each worker ships a batch of a distinct size; getting its own
+        // batch size back proves the seq demultiplexer didn't cross
+        // answers between in-flight requests.
+        let workers: Vec<_> = (1..=4usize)
+            .map(|n| {
+                let eng = eng.clone();
+                std::thread::spawn(move || {
+                    let act = HostTensor::zeros(vec![n, 4]);
+                    let out = eng.infer_partial(0, 0, &act).unwrap();
+                    assert_eq!(out.samples.len(), n, "answer crossed to a different seq");
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+
+        let s = eng.stats();
+        assert_eq!(s.requests, 5);
+        assert_eq!(s.failures, 0);
+        assert_eq!(s.connects, 1, "pool_capacity 1: one shared connection");
+        assert!(s.bytes_sent > 0 && s.bytes_received > 0);
+        // The server saw every batch tagged q8.
+        assert_eq!(css.served_by_encoding(), [0, 5, 0]);
+        handle.stop();
+    }
+
+    #[test]
+    fn rejections_stay_scoped_to_their_seq_then_trip_the_breaker() {
+        let (handle, _css) = live_server();
+        let eng = RemoteCloudEngine::new(RemoteCloudConfig::new(handle.addr().to_string()));
+        let good = HostTensor::zeros(vec![1, 4]);
+        let bad_split = 3; // split = N: the server rejects (no suffix)
+
+        for i in 0..REJECTION_BREAKER {
+            let err = eng
+                .infer_partial(bad_split, 0, &good)
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("rejected"), "rejection {i}: {err}");
+        }
+        // The breaker is now open: calls fast-fail without the network.
+        let before = eng.stats();
+        assert!(eng.infer_partial(0, 0, &good).is_err());
+        let after = eng.stats();
+        assert_eq!(after.fast_fails, before.fast_fails + 1);
+        assert_eq!(after.requests, before.requests, "no frame went out");
+        assert_eq!(after.failures, 0, "rejections are not failures");
+        handle.stop();
+    }
+
+    #[test]
+    fn misbehaving_server_with_unknown_seq_errors_instead_of_hanging() {
+        use std::io::Write;
+        use std::net::TcpListener;
+
+        // A fake cloud server that answers every request with a
+        // response tagged with a seq nobody sent.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = std::io::BufWriter::new(stream);
+            let _ = read_frame(&mut reader).unwrap();
+            let bogus = Response::PartialResultSeq {
+                seq: 0xDEAD_BEEF,
+                samples: vec![],
+                cloud_s: 0.0,
+            }
+            .encode();
+            write_frame(&mut writer, &bogus).unwrap();
+            writer.flush().ok();
+        });
+
+        let eng = RemoteCloudEngine::new(RemoteCloudConfig {
+            io_timeout: Duration::from_secs(5),
+            ..RemoteCloudConfig::new(addr.to_string())
+        });
+        let act = HostTensor::zeros(vec![1, 4]);
+        let t0 = Instant::now();
+        assert!(eng.infer_partial(0, 0, &act).is_err());
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "must fail via connection teardown, not sit out the deadline"
+        );
+        assert_eq!(eng.stats().failures, 1);
+        srv.join().unwrap();
     }
 }

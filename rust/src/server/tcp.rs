@@ -10,6 +10,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{Coordinator, InferenceResponse};
+use crate::network::encoding::WireEncoding;
 use crate::runtime::HostTensor;
 
 use super::protocol::{read_frame, write_frame, PartialSample, Request, Response};
@@ -42,6 +43,29 @@ pub trait ServeBackend: Send + Sync + 'static {
     ) -> Result<PartialOutput> {
         let _ = (split, branch_state, activation);
         anyhow::bail!("this backend does not serve partial inference (not a cloud-stage server)")
+    }
+
+    /// [`ServeBackend::serve_partial`] for frames that carried a wire
+    /// encoding tag (pipelined kind-5 requests — the activation arrives
+    /// here already dequantized). The default forwards to
+    /// `serve_partial`; cloud-stage backends override to keep
+    /// per-encoding served counters.
+    fn serve_partial_encoded(
+        &self,
+        split: usize,
+        branch_state: u8,
+        encoding: WireEncoding,
+        activation: HostTensor,
+    ) -> Result<PartialOutput> {
+        let _ = encoding;
+        self.serve_partial(split, branch_state, activation)
+    }
+
+    /// Byte accounting hook: called by the connection loop with the
+    /// framed request/response sizes (header included) after each
+    /// exchange. Default: not counted.
+    fn note_io(&self, bytes_received: u64, bytes_sent: u64) {
+        let _ = (bytes_received, bytes_sent);
     }
 
     /// JSON body of the METRICS response.
@@ -173,15 +197,50 @@ fn handle_connection(stream: TcpStream, backend: &impl ServeBackend) -> Result<(
                 split,
                 branch_state,
                 activation,
-            }) => match backend.serve_partial(split as usize, branch_state, activation) {
+            }) => match backend.serve_partial_encoded(
+                split as usize,
+                branch_state,
+                WireEncoding::Raw,
+                activation,
+            ) {
                 Ok(out) => Response::PartialResult {
                     samples: out.samples,
                     cloud_s: out.cloud_s,
                 },
                 Err(e) => Response::Error(format!("{e:#}")),
             },
+            // Pipelined: answers are written in arrival order on this
+            // connection (the client's reader matches on the echoed
+            // seq, so ordering is a non-requirement it gets for free),
+            // and errors stay scoped to their seq instead of poisoning
+            // the other in-flight requests.
+            Ok(Request::InferPartialSeq {
+                seq,
+                split,
+                branch_state,
+                encoding,
+                activation,
+            }) => match backend.serve_partial_encoded(
+                split as usize,
+                branch_state,
+                encoding,
+                activation,
+            ) {
+                Ok(out) => Response::PartialResultSeq {
+                    seq,
+                    samples: out.samples,
+                    cloud_s: out.cloud_s,
+                },
+                Err(e) => Response::ErrorSeq {
+                    seq,
+                    message: format!("{e:#}"),
+                },
+            },
         };
-        write_frame(&mut writer, &response.encode())?;
+        let encoded = response.encode();
+        write_frame(&mut writer, &encoded)?;
+        // 8-byte frame headers included on both directions.
+        backend.note_io(body.len() as u64 + 8, encoded.len() as u64 + 8);
     }
 }
 
@@ -234,6 +293,27 @@ impl Client {
         self.call(&Request::InferPartial {
             split,
             branch_state,
+            activation,
+        })
+    }
+
+    /// Seq-tagged partial inference with an explicit wire encoding —
+    /// still lockstep from this blocking client (one call, one answer);
+    /// the pipelined demultiplexer lives in
+    /// [`super::RemoteCloudEngine`].
+    pub fn infer_partial_seq(
+        &mut self,
+        seq: u32,
+        split: u32,
+        branch_state: u8,
+        encoding: WireEncoding,
+        activation: HostTensor,
+    ) -> Result<Response> {
+        self.call(&Request::InferPartialSeq {
+            seq,
+            split,
+            branch_state,
+            encoding,
             activation,
         })
     }

@@ -20,12 +20,18 @@
 
 use crate::model::BranchyNetDesc;
 use crate::network::bandwidth::LinkModel;
+use crate::network::encoding::WireEncoding;
 
 use super::exitprob::ExitChain;
 use super::profile::{CloudSuffix, DelayProfile};
 
 /// Expected-inference-time evaluator for one (network, profile, desc)
 /// triple. Construction is O(N); each `expected_time` query is O(s).
+///
+/// The transfer term charges `alpha_s` *as it crosses the wire*:
+/// [`BranchyNetDesc::transfer_wire_bytes`] under the configured
+/// [`WireEncoding`] (raw by default — bit-identical to the pre-encoding
+/// estimator). See [`Estimator::with_encoding`].
 #[derive(Debug)]
 pub struct Estimator<'a> {
     desc: &'a BranchyNetDesc,
@@ -34,6 +40,7 @@ pub struct Estimator<'a> {
     chain: ExitChain,
     cloud_suffix: CloudSuffix,
     include_branch_cost: bool,
+    encoding: WireEncoding,
 }
 
 impl<'a> Estimator<'a> {
@@ -53,6 +60,7 @@ impl<'a> Estimator<'a> {
             chain: ExitChain::new(desc),
             cloud_suffix: CloudSuffix::new(profile),
             include_branch_cost: true,
+            encoding: WireEncoding::Raw,
         }
     }
 
@@ -61,6 +69,22 @@ impl<'a> Estimator<'a> {
     pub fn paper_mode(mut self) -> Estimator<'a> {
         self.include_branch_cost = false;
         self
+    }
+
+    /// Price the activation transfer under `encoding`: every alpha in
+    /// the cost model becomes
+    /// [`BranchyNetDesc::transfer_wire_bytes`]`(s, encoding)` — the
+    /// exact size the codec puts on the wire, so the optimum this
+    /// estimator (and every solver built on it) reports is the optimum
+    /// of the deployment actually shipping that encoding.
+    pub fn with_encoding(mut self, encoding: WireEncoding) -> Estimator<'a> {
+        self.encoding = encoding;
+        self
+    }
+
+    /// The wire encoding the transfer term is priced at.
+    pub fn encoding(&self) -> WireEncoding {
+        self.encoding
     }
 
     pub fn exit_chain(&self) -> &ExitChain {
@@ -97,7 +121,7 @@ impl<'a> Estimator<'a> {
         if split < n {
             let surv = self.chain.survival_at_split(split);
             if surv > 0.0 {
-                let alpha = self.desc.transfer_bytes(split);
+                let alpha = self.desc.transfer_wire_bytes(split, self.encoding);
                 t += surv
                     * (self.link.transfer_time(alpha) + self.cloud_suffix.from_split(split));
             }
@@ -111,7 +135,9 @@ impl<'a> Estimator<'a> {
         assert!(split <= n);
         let mut t = self.profile.edge_prefix(split);
         if split < n {
-            t += self.link.transfer_time(self.desc.transfer_bytes(split))
+            t += self
+                .link
+                .transfer_time(self.desc.transfer_wire_bytes(split, self.encoding))
                 + self.cloud_suffix.from_split(split);
         }
         t

@@ -3,9 +3,11 @@
 //! listener. Proves (a) the edge half transfers exactly at the planned
 //! split, (b) end-to-end results are bit-identical to the in-process
 //! sim backend, (c) a dead remote falls back to local execution without
-//! dropping a single request, and (d) the fleet's `cloud_addr` wiring
-//! spans two listeners end to end. Runs entirely on the simulated
-//! runtime — no artifacts required.
+//! dropping a single request, (d) the fleet's `cloud_addr` wiring
+//! spans two listeners end to end, and (e) the quantized (q8) pipelined
+//! path answers like the in-process oracle while shipping strictly
+//! fewer bytes. Runs entirely on the simulated runtime — no artifacts
+//! required.
 //!
 //! [`CloudStageServer`]: branchyserve::server::CloudStageServer
 
@@ -16,7 +18,7 @@ use branchyserve::config::settings::Strategy;
 use branchyserve::coordinator::{CloudExec, Coordinator, CoordinatorConfig};
 use branchyserve::fleet::{ClassProfile, ClassRegistry, Fleet, FleetConfig};
 use branchyserve::model::Manifest;
-use branchyserve::network::{BandwidthTrace, Channel};
+use branchyserve::network::{BandwidthTrace, Channel, WireEncoding};
 use branchyserve::partition::PartitionPlan;
 use branchyserve::runtime::{HostTensor, InferenceEngine};
 use branchyserve::server::protocol::BRANCH_GATED;
@@ -127,6 +129,109 @@ fn loopback_cloud_matches_in_process_bit_for_bit() {
     assert_eq!(stats.requests, batches);
     assert_eq!(stats.failures, 0);
     assert!(stats.connects >= 1);
+
+    local_coord.shutdown();
+    cloud_listener.stop();
+}
+
+/// The quantized wire path end to end: a coordinator shipping q8
+/// activations through the pipelined client to a loopback cloud stage
+/// answers exactly like the unquantized in-process oracle (the q8 step
+/// on these activations is ~1/510 of their range — far inside the sim
+/// model's logit gaps), while every frame reaches the server encoded
+/// and both sides' byte counters agree.
+#[test]
+fn loopback_q8_pipeline_matches_in_process_oracle() {
+    let m = manifest();
+    let split = 2; // branch (after stage 1) active; cloud runs stage 3
+
+    let css = Arc::new(CloudStageServer::new(
+        InferenceEngine::open_sim(m.clone(), "q8-srv").unwrap(),
+    ));
+    let cloud_listener = Server::new(css.clone()).start(0).unwrap();
+
+    let remote = Arc::new(RemoteCloudEngine::new(RemoteCloudConfig {
+        encoding: WireEncoding::Q8,
+        ..RemoteCloudConfig::new(cloud_listener.addr().to_string())
+    }));
+    let remote_coord = Coordinator::start(
+        InferenceEngine::open_sim(m.clone(), "q8-edge").unwrap(),
+        CloudExec::Remote {
+            remote: remote.clone(),
+            fallback: InferenceEngine::open_sim(m.clone(), "q8-fb").unwrap(),
+        },
+        channel(),
+        plan_at(&m, split),
+        CoordinatorConfig {
+            wire_encoding: WireEncoding::Q8,
+            ..cfg()
+        },
+    );
+    let local_coord = Coordinator::start(
+        InferenceEngine::open_sim(m.clone(), "q8-ledge").unwrap(),
+        InferenceEngine::open_sim(m.clone(), "q8-lcloud").unwrap(),
+        channel(),
+        plan_at(&m, split),
+        cfg(),
+    );
+
+    for img in images(12) {
+        let r = remote_coord.infer_sync(img.clone()).unwrap();
+        let l = local_coord.infer_sync(img).unwrap();
+        assert_eq!(r.class, l.class, "q8 flipped a class the oracle disagrees on");
+        // The branch gate runs on the edge, before the codec: its
+        // entropy never sees quantization and stays bit-identical.
+        assert_eq!(
+            r.entropy.to_bits(),
+            l.entropy.to_bits(),
+            "gate entropies diverged"
+        );
+        assert!(!r.exited_early() && !l.exited_early());
+    }
+
+    // Every batch reached the server as q8; none as raw or q4, and the
+    // rejected-batch counter stayed untouched.
+    let [enc_raw, enc_q8, enc_q4] = css.served_by_encoding();
+    assert_eq!((enc_raw, enc_q4), (0, 0), "unexpected encodings served");
+    assert!(enc_q8 >= 1);
+    let (_, samples, _, _, errors) = css.counters();
+    assert_eq!(samples, 12);
+    assert_eq!(errors, 0);
+
+    // Both ends of the wire agree on what crossed it. The server books
+    // an exchange's bytes *after* writing its response, so its counters
+    // may trail the client's read by one scheduling beat — poll briefly
+    // before comparing.
+    let stats = remote.stats();
+    assert_eq!(stats.failures, 0);
+    assert!(stats.bytes_sent > 0 && stats.bytes_received > 0);
+    let deadline = std::time::Instant::now() + Duration::from_secs(2);
+    loop {
+        let (srv_in, srv_out) = css.bytes_io();
+        if (srv_in, srv_out) == (stats.bytes_sent, stats.bytes_received)
+            || std::time::Instant::now() > deadline
+        {
+            assert_eq!(
+                (srv_in, srv_out),
+                (stats.bytes_sent, stats.bytes_received),
+                "client/server byte accounting diverged"
+            );
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let rm = remote_coord.shutdown();
+    assert_eq!(rm.completed, 12);
+    assert_eq!(rm.remote_fallbacks, 0, "no fallback on a healthy loopback");
+    // Transfer accounting charges the q8 wire size: 8 codec-header
+    // bytes + 1 byte/elem instead of 4 bytes/elem of raw f32.
+    assert!(rm.transferred_bytes > 0);
+    assert!(
+        rm.transferred_bytes < 12 * 8 * 4,
+        "q8 accounting should undercut raw f32: {}",
+        rm.transferred_bytes
+    );
 
     local_coord.shutdown();
     cloud_listener.stop();

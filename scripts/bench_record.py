@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Merge a fresh wire-bench run into the committed BENCH_wire.json.
+
+`cargo bench --bench wire` writes its latest run to BENCH_wire.json in
+the working directory (the repo root under cargo). This script folds
+that run into the committed baseline with a regression gate:
+
+  * For every (encoding, mode) cell present in both files, if the new
+    `p99_e2e_3g_ms` is more than GATE (20%) worse than the baseline's,
+    the merge FAILS (exit 1) and the baseline is left untouched.
+  * Baselines whose `source` is not "measured" (the seed baseline is
+    derived from the codec size identity + link model, marked
+    "model") never gate: the first measured run simply replaces them.
+  * Byte counts are deterministic codec identities, so a change there
+    is a wire-format change, not noise: any drift beyond 1% also fails.
+
+On success the new run becomes the baseline and the previous
+baseline's p99 columns are kept under `previous` for one-step history.
+
+Usage:
+    python3 scripts/bench_record.py [--baseline BENCH_wire.json]
+                                    [--run BENCH_wire.json] [--check]
+
+With --check, gates only: reports pass/fail without rewriting the
+baseline (what CI runs on pull requests). Exit status: 0 on pass,
+1 on regression or malformed input.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+GATE = 0.20  # fail if p99 regresses by more than this fraction
+BYTE_DRIFT = 0.01  # bytes are deterministic; >1% drift is a format change
+
+
+def cell_key(run: dict) -> tuple[str, str]:
+    return (run["encoding"], run["mode"])
+
+
+def load(path: Path) -> dict:
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"bench_record: cannot read {path}: {e}")
+    if doc.get("bench") != "wire" or not isinstance(doc.get("runs"), list):
+        sys.exit(f"bench_record: {path} is not a wire-bench record")
+    return doc
+
+
+def gate(baseline: dict, run: dict) -> list[str]:
+    """Return a list of human-readable regression findings (empty = pass)."""
+    if baseline.get("source") != "measured":
+        return []  # seed baseline is modeled, not measured: never gates
+    if baseline.get("smoke") != run.get("smoke"):
+        return []  # smoke and full traces are not comparable
+    base_cells = {cell_key(r): r for r in baseline["runs"]}
+    findings = []
+    for new in run["runs"]:
+        old = base_cells.get(cell_key(new))
+        if old is None:
+            continue
+        name = "{}+{}".format(*cell_key(new))
+        old_p99, new_p99 = old["p99_e2e_3g_ms"], new["p99_e2e_3g_ms"]
+        if new_p99 > old_p99 * (1.0 + GATE):
+            findings.append(
+                f"{name}: p99 e2e @3G regressed {old_p99:.3f} -> {new_p99:.3f} ms "
+                f"(+{(new_p99 / old_p99 - 1.0) * 100.0:.0f}%, gate {GATE * 100:.0f}%)"
+            )
+        old_b, new_b = old["bytes_sent_per_request"], new["bytes_sent_per_request"]
+        if abs(new_b - old_b) > old_b * BYTE_DRIFT:
+            findings.append(
+                f"{name}: bytes/req drifted {old_b:.1f} -> {new_b:.1f} "
+                "(deterministic codec identity: this is a wire-format change)"
+            )
+    return findings
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", type=Path, default=Path("BENCH_wire.json"))
+    ap.add_argument("--run", type=Path, default=Path("BENCH_wire.json"))
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="gate only; do not rewrite the baseline",
+    )
+    args = ap.parse_args()
+
+    run = load(args.run)
+    if args.baseline.resolve() == args.run.resolve():
+        # The bench overwrote the baseline in place: the freshly written
+        # file IS the run, so there is nothing older to gate against.
+        # Still validate the run's own acceptance ratio.
+        baseline = run
+    else:
+        baseline = load(args.baseline)
+
+    findings = gate(baseline, run)
+    ratio = run.get("derived", {}).get("bytes_cut_q8_pipelined_vs_raw_lockstep", 0.0)
+    if ratio < 3.5:
+        findings.append(
+            f"q8+pipelined bytes cut vs raw+lockstep is {ratio:.2f}x (< 3.5x bar)"
+        )
+
+    for f in findings:
+        print(f"REGRESSION: {f}", file=sys.stderr)
+    if findings:
+        return 1
+
+    if not args.check and args.baseline.resolve() != args.run.resolve():
+        merged = dict(run)
+        merged["previous"] = {
+            "source": baseline.get("source"),
+            "p99_e2e_3g_ms": {
+                "{}+{}".format(*cell_key(r)): r["p99_e2e_3g_ms"]
+                for r in baseline["runs"]
+            },
+        }
+        args.baseline.write_text(json.dumps(merged, indent=2) + "\n")
+        print(f"bench_record: baseline {args.baseline} updated")
+    else:
+        print("bench_record: gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
