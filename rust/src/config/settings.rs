@@ -197,6 +197,11 @@ pub struct FleetSettings {
     pub scale_window: usize,
     /// Minimum time between two resizes of one class, milliseconds.
     pub scale_cooldown_ms: f64,
+    /// Fleet-wide shard budget: the sum of live shards across every
+    /// class may never exceed this. `None` = unbounded. Grows that
+    /// would bust the budget are denied (the class's `last_trigger`
+    /// records the budget denial).
+    pub max_total_shards: Option<usize>,
 }
 
 impl FleetSettings {
@@ -244,6 +249,12 @@ pub struct LinkClassSettings {
     /// Per-class cloud-stage server override (`HOST:PORT`); `None`
     /// falls back to the fleet-wide `fleet.cloud_addr`.
     pub cloud_addr: Option<String>,
+    /// Per-class autoscale floor override; `None` falls back to
+    /// `fleet.min_shards`.
+    pub min_shards: Option<usize>,
+    /// Per-class autoscale ceiling override; `None` falls back to
+    /// `fleet.max_shards`.
+    pub max_shards: Option<usize>,
 }
 
 #[derive(Debug, Clone)]
@@ -305,6 +316,7 @@ impl Default for Settings {
                 scale_interval_ms: 100.0,
                 scale_window: 5,
                 scale_cooldown_ms: 2000.0,
+                max_total_shards: None,
             },
             link_classes: Vec::new(),
         }
@@ -425,6 +437,9 @@ impl Settings {
         if let Some(v) = doc.path("fleet.scale_cooldown_ms").and_then(Json::as_f64) {
             self.fleet.scale_cooldown_ms = v;
         }
+        if let Some(v) = doc.path("fleet.max_total_shards").and_then(Json::as_usize) {
+            self.fleet.max_total_shards = Some(v);
+        }
         if let Some(arr) = doc.get("link_class").and_then(Json::as_arr) {
             self.link_classes.clear();
             for (i, entry) in arr.iter().enumerate() {
@@ -455,12 +470,16 @@ impl Settings {
                     .get("cloud_addr")
                     .and_then(Json::as_str)
                     .map(str::to_string);
+                let min_shards = entry.get("min_shards").and_then(Json::as_usize);
+                let max_shards = entry.get("max_shards").and_then(Json::as_usize);
                 self.link_classes.push(LinkClassSettings {
                     name,
                     uplink_mbps,
                     rtt_s,
                     exit_probability,
                     cloud_addr,
+                    min_shards,
+                    max_shards,
                 });
             }
         }
@@ -590,6 +609,49 @@ impl Settings {
                     bail!("link_class[{i}] ('{}').cloud_addr: {e}", c.name);
                 }
             }
+            // Per-class autoscale bounds: validated against the same
+            // 1..=64 envelope as the fleet-wide values, with the
+            // fallbacks applied so a partial override cannot invert
+            // the range it inherits the other half of.
+            let lo = c.min_shards.unwrap_or(self.fleet.min_shards);
+            let hi = c.max_shards.unwrap_or(self.fleet.max_shards);
+            if !(1..=64).contains(&lo) || !(1..=64).contains(&hi) {
+                bail!(
+                    "link_class[{i}] ('{}'): min_shards/max_shards must be in 1..=64; \
+                     got {lo}..={hi}",
+                    c.name
+                );
+            }
+            if lo > hi {
+                bail!(
+                    "link_class[{i}] ('{}'): min_shards ({lo}) exceeds max_shards ({hi}) \
+                     after [fleet] fallbacks",
+                    c.name
+                );
+            }
+            if self.fleet.autoscale && !(lo..=hi).contains(&self.fleet.shards) {
+                bail!(
+                    "link_class[{i}] ('{}'): starting fleet.shards ({}) must lie within \
+                     this class's autoscale range {lo}..={hi}",
+                    c.name,
+                    self.fleet.shards
+                );
+            }
+        }
+        if let Some(cap) = self.fleet.max_total_shards {
+            let classes = self.link_classes.len().max(1);
+            let starting = classes * self.fleet.shards;
+            if cap < starting {
+                bail!(
+                    "fleet.max_total_shards ({cap}) is below the starting fleet size \
+                     ({classes} class(es) x {} shard(s) = {starting})",
+                    self.fleet.shards
+                );
+            }
+            // No separate floor-sum check is needed: per-entry
+            // validation already forces `shards >= min` for every class
+            // when autoscaling, so the starting size bounds the floor
+            // sum from above.
         }
         Ok(())
     }
@@ -817,6 +879,8 @@ cloud_addr = "sat-cloud.internal:7880"
             rtt_s: 0.0,
             exit_probability: None,
             cloud_addr: None,
+            min_shards: None,
+            max_shards: None,
         });
         let e = s.validate().unwrap_err().to_string();
         assert!(e.contains("link_class[0]") && e.contains("uplink_mbps"), "{e}");
@@ -829,6 +893,8 @@ cloud_addr = "sat-cloud.internal:7880"
                 rtt_s: 0.0,
                 exit_probability: None,
                 cloud_addr: None,
+                min_shards: None,
+                max_shards: None,
             });
         }
         let e = s.validate().unwrap_err().to_string();
@@ -841,6 +907,8 @@ cloud_addr = "sat-cloud.internal:7880"
             rtt_s: 0.0,
             exit_probability: Some(1.5),
             cloud_addr: None,
+            min_shards: None,
+            max_shards: None,
         });
         let e = s.validate().unwrap_err().to_string();
         assert!(e.contains("exit_probability"), "{e}");
@@ -853,6 +921,8 @@ cloud_addr = "sat-cloud.internal:7880"
             rtt_s: 0.0,
             exit_probability: None,
             cloud_addr: Some("nocolon".into()),
+            min_shards: None,
+            max_shards: None,
         });
         let e = s.validate().unwrap_err().to_string();
         assert!(e.contains("link_class[0]") && e.contains("cloud_addr"), "{e}");
@@ -868,6 +938,71 @@ cloud_addr = "sat-cloud.internal:7880"
         let mut s = Settings::default();
         let e = s.apply(&doc).unwrap_err().to_string();
         assert!(e.contains("link_class[0]") && e.contains("uplink_mbps"), "{e}");
+    }
+
+    #[test]
+    fn per_class_shard_bounds_and_fleet_budget() {
+        let doc = toml::parse(
+            r#"
+[fleet]
+autoscale = true
+shards = 2
+min_shards = 1
+max_shards = 8
+max_total_shards = 10
+
+[[link_class]]
+name = "3g"
+min_shards = 2
+max_shards = 3
+
+[[link_class]]
+name = "wifi"
+"#,
+        )
+        .unwrap();
+        let mut s = Settings::default();
+        s.apply(&doc).unwrap();
+        s.validate().unwrap();
+        assert_eq!(s.fleet.max_total_shards, Some(10));
+        assert_eq!(s.link_classes[0].min_shards, Some(2));
+        assert_eq!(s.link_classes[0].max_shards, Some(3));
+        // The second class inherits the [fleet] values.
+        assert_eq!(s.link_classes[1].min_shards, None);
+        assert_eq!(s.link_classes[1].max_shards, None);
+
+        // An inverted per-class range (after fallbacks) names its entry.
+        let mut bad = s.clone();
+        bad.link_classes[0].min_shards = Some(5);
+        bad.link_classes[0].max_shards = Some(3);
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("link_class[0]") && e.contains("min_shards"), "{e}");
+
+        // A partial override is checked against the inherited half:
+        // min 9 > fleet max 8.
+        let mut bad = s.clone();
+        bad.link_classes[1].min_shards = Some(9);
+        bad.link_classes[1].max_shards = None;
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("link_class[1]"), "{e}");
+
+        // The starting size must fit every class's range.
+        let mut bad = s.clone();
+        bad.link_classes[0].min_shards = Some(3);
+        bad.link_classes[0].max_shards = Some(4);
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("link_class[0]") && e.contains("range 3..=4"), "{e}");
+
+        // Budget below the starting fleet size fails loudly.
+        let mut bad = s.clone();
+        bad.fleet.max_total_shards = Some(3);
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("max_total_shards") && e.contains("starting"), "{e}");
+
+        // A budget exactly at the starting size is the tightest valid one.
+        let mut tight = s.clone();
+        tight.fleet.max_total_shards = Some(4);
+        tight.validate().unwrap();
     }
 
     #[test]

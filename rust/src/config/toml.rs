@@ -152,26 +152,10 @@ fn resolve_table<'a>(
     Ok(cur)
 }
 
+/// Parse a value expression: a scalar, or a (possibly nested) array
+/// whose elements re-enter this function.
 fn parse_value(s: &str) -> Result<Json, String> {
     let s = s.trim();
-    if let Some(rest) = s.strip_prefix('"') {
-        let inner = rest
-            .strip_suffix('"')
-            .ok_or_else(|| "unterminated string".to_string())?;
-        return unescape(inner);
-    }
-    if let Some(rest) = s.strip_prefix('\'') {
-        let inner = rest
-            .strip_suffix('\'')
-            .ok_or_else(|| "unterminated literal string".to_string())?;
-        return Ok(Json::Str(inner.to_string()));
-    }
-    if s == "true" {
-        return Ok(Json::Bool(true));
-    }
-    if s == "false" {
-        return Ok(Json::Bool(false));
-    }
     if let Some(inner) = s.strip_prefix('[') {
         let inner = inner
             .strip_suffix(']')
@@ -186,6 +170,31 @@ fn parse_value(s: &str) -> Result<Json, String> {
         }
         return Ok(Json::Arr(items));
     }
+    parse_scalar(s)
+}
+
+/// The one typed-value coercion path. Every non-array value — basic or
+/// literal string, boolean, number — funnels through here, whether it
+/// sits on the right of `key = value` or inside an array, so the two
+/// positions cannot drift in what they accept or how they complain.
+fn parse_scalar(s: &str) -> Result<Json, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return unescape(inner);
+    }
+    if let Some(rest) = s.strip_prefix('\'') {
+        let inner = rest
+            .strip_suffix('\'')
+            .ok_or_else(|| "unterminated literal string".to_string())?;
+        return Ok(Json::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Json::Bool(true)),
+        "false" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
     // Number: allow underscores per TOML.
     let cleaned: String = s.chars().filter(|&c| c != '_').collect();
     if let Ok(v) = cleaned.parse::<f64>() {
@@ -193,7 +202,9 @@ fn parse_value(s: &str) -> Result<Json, String> {
             return Ok(Json::Num(v));
         }
     }
-    Err(format!("cannot parse value '{s}'"))
+    Err(format!(
+        "cannot parse value '{s}' (expected a quoted string, boolean, number, or array)"
+    ))
 }
 
 /// Split array elements on top-level commas (strings may contain commas).
@@ -344,6 +355,23 @@ rtt_ms = 5
     #[test]
     fn value_vs_table_conflict() {
         assert!(parse("a = 1\n[a.b]\nc = 2").is_err());
+    }
+
+    #[test]
+    fn scalar_coercion_identical_in_value_and_array_position() {
+        // Both positions funnel through parse_scalar: same types out,
+        // same actionable complaint on garbage.
+        let v = parse("a = 'lit'\nb = [true, 2.5, \"q\"]").unwrap();
+        assert_eq!(v.get("a").unwrap().as_str(), Some("lit"));
+        let arr = v.get("b").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_bool(), Some(true));
+        assert_eq!(arr[1].as_f64(), Some(2.5));
+        assert_eq!(arr[2].as_str(), Some("q"));
+        for bad in ["k = nope", "k = [1, nope]"] {
+            let e = parse(bad).unwrap_err();
+            assert_eq!(e.line, 1);
+            assert!(e.msg.contains("expected a quoted string"), "{e}");
+        }
     }
 
     #[test]

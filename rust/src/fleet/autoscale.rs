@@ -382,6 +382,14 @@ impl ShardGroup {
         Ok(n)
     }
 
+    /// Record a trigger that did *not* resize the group — e.g. a grow
+    /// denied by the fleet-wide shard budget. `last_trigger` is the
+    /// operator's one-line answer to "why is this class this size?",
+    /// and a denial is as much an answer as a resize.
+    pub fn note_trigger(&self, trigger: &str) {
+        *self.last_trigger.lock().unwrap() = Some(trigger.to_string());
+    }
+
     /// Final snapshots of every shard retired so far.
     pub fn retired_snapshots(&self) -> Vec<MetricsSnapshot> {
         self.retired.lock().unwrap().clone()

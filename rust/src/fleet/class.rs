@@ -45,6 +45,12 @@ pub struct ClassProfile {
     /// too). Lets a geographically split fleet keep each class's
     /// suffix stages near its clients.
     pub cloud_addr: Option<String>,
+    /// Per-class autoscale floor override; `None` inherits the fleet's
+    /// `min_shards`.
+    pub min_shards: Option<usize>,
+    /// Per-class autoscale ceiling override; `None` inherits the
+    /// fleet's `max_shards`.
+    pub max_shards: Option<usize>,
 }
 
 impl ClassProfile {
@@ -57,6 +63,8 @@ impl ClassProfile {
             trace: None,
             exit_probability: None,
             cloud_addr: None,
+            min_shards: None,
+            max_shards: None,
         })
     }
 
@@ -72,6 +80,8 @@ impl ClassProfile {
             trace: None,
             exit_probability: None,
             cloud_addr: None,
+            min_shards: None,
+            max_shards: None,
         })
     }
 
@@ -150,6 +160,8 @@ impl ClassRegistry {
             let mut c = ClassProfile::custom(&e.name, e.uplink_mbps, e.rtt_s)?;
             c.exit_probability = e.exit_probability;
             c.cloud_addr = e.cloud_addr.clone();
+            c.min_shards = e.min_shards;
+            c.max_shards = e.max_shards;
             classes.push(c);
         }
         ClassRegistry::new(classes)

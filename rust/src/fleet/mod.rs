@@ -117,13 +117,14 @@ pub use metrics::{ClassPlannerStats, ClassReport, FleetReport};
 pub use planner::ClassPlanner;
 pub use router::{FleetRouter, RoutePolicy};
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::settings::Strategy;
+use crate::network::bandwidth::LinkModel;
 use crate::coordinator::{
     CloudExec, Coordinator, CoordinatorConfig, ExitObserver, InferenceResponse, MetricsSnapshot,
 };
@@ -162,8 +163,22 @@ pub struct FleetConfig {
     /// grows/shrinks its shard group between
     /// `min_shards..=max_shards` from queue-depth and rejection
     /// signals. `shards_per_class` is the starting size and must lie
-    /// within that range.
+    /// within that range. A class may override the bounds via
+    /// [`ClassProfile::min_shards`] / [`ClassProfile::max_shards`].
     pub autoscale: Option<AutoscaleConfig>,
+    /// Enforce the autoscale bounds and the shard budget but do *not*
+    /// spawn the per-class control loops: an external driver (the
+    /// scenario harness) samples [`Fleet::load_sample_of`] and executes
+    /// decisions through [`Fleet::grow_class_triggered`] /
+    /// [`Fleet::shrink_class_triggered`] on its own clock. Ignored when
+    /// `autoscale` is `None`.
+    pub autoscale_external: bool,
+    /// Fleet-wide shard budget: the sum of live shards across every
+    /// class may never exceed this, whatever the per-class ceilings
+    /// would individually allow. A grow that would bust it is denied
+    /// and the class's `last_trigger` records the budget denial.
+    /// `None` = unbounded.
+    pub max_total_shards: Option<usize>,
     /// When set, every class tracks its observed exit rate (EWMA over
     /// branch-gate decisions) and re-derives its planner view — and its
     /// shards' plans — when the estimate drifts beyond the configured
@@ -214,6 +229,8 @@ impl Default for FleetConfig {
             epsilon: 1e-9,
             adaptive: None,
             autoscale: None,
+            autoscale_external: false,
+            max_total_shards: None,
             estimation: None,
             per_request_planning: false,
             probe_fraction: 0.0,
@@ -230,6 +247,88 @@ impl Default for FleetConfig {
 /// provisioned exactly like a startup one (same engine factory, same
 /// remote/observer wiring) and starts on the class's *current* plan.
 type SpawnShard = Arc<dyn Fn(u64) -> Result<Arc<Coordinator>> + Send + Sync>;
+
+/// What a triggered grow did. The scenario harness asserts on denials
+/// (a diurnal peak *should* hit the budget), so both denial kinds are
+/// ordinary outcomes, not errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GrowOutcome {
+    /// A shard was added; carries the new shard count.
+    Grew(usize),
+    /// Denied by the class's own `max_shards` ceiling.
+    AtClassCap,
+    /// Denied by the fleet-wide `max_total_shards` budget.
+    AtBudget,
+}
+
+/// The fleet-wide shard budget, shared by every class's grow/shrink
+/// path (autoscaler decisions, manual resizes, harness triggers). A
+/// grow reserves a slot *before* building an engine and returns it if
+/// the grow fails; a shrink releases its victim's slot.
+struct ShardBudget {
+    cap: usize,
+    used: AtomicUsize,
+}
+
+impl ShardBudget {
+    fn try_acquire(&self) -> bool {
+        self.used
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                (n < self.cap).then_some(n + 1)
+            })
+            .is_ok()
+    }
+
+    fn release(&self) {
+        self.used.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn denial(&self) -> String {
+        format!("budget: fleet max_total_shards ({}) reached", self.cap)
+    }
+}
+
+/// Grow `group` through the budget (if any): reserve a slot, build and
+/// install the shard, return the slot on failure. A budget denial is
+/// recorded as the group's `last_trigger` — it answers "why didn't
+/// this class scale?" just like a resize answers "why did it?".
+fn grow_with_budget(
+    group: &ShardGroup,
+    budget: Option<&ShardBudget>,
+    trigger: &str,
+    cap: usize,
+    spawn: &(dyn Fn(u64) -> Result<Arc<Coordinator>> + Send + Sync),
+) -> Result<usize> {
+    if let Some(b) = budget {
+        if !b.try_acquire() {
+            let msg = b.denial();
+            group.note_trigger(&msg);
+            bail!("grow denied — {msg}");
+        }
+    }
+    match group.grow(trigger, cap, spawn) {
+        Ok(n) => Ok(n),
+        Err(e) => {
+            if let Some(b) = budget {
+                b.release();
+            }
+            Err(e)
+        }
+    }
+}
+
+fn shrink_with_budget(
+    group: &ShardGroup,
+    budget: Option<&ShardBudget>,
+    trigger: &str,
+    floor: usize,
+) -> Result<usize> {
+    let n = group.shrink(trigger, floor)?;
+    if let Some(b) = budget {
+        b.release();
+    }
+    Ok(n)
+}
 
 struct ClassGroup {
     profile: ClassProfile,
@@ -249,8 +348,13 @@ struct ClassGroup {
     /// the group → shard → worker-closure → group reference cycle.
     shards: Arc<ShardGroup>,
     spawn_shard: SpawnShard,
-    /// Active autoscale bounds, kept for `ScalerStats` reporting
-    /// (`None` = fixed-size shard set).
+    /// This class's remote cloud client (shared with siblings on the
+    /// same endpoint); `None` = in-process cloud. Kept so external
+    /// drivers can sample remote pressure per class.
+    remote: Option<Arc<RemoteCloudEngine>>,
+    /// Active autoscale bounds — the fleet defaults with this class's
+    /// overrides applied — kept for cap/floor enforcement and
+    /// `ScalerStats` reporting (`None` = fixed-size shard set).
     autoscale: Option<AutoscaleConfig>,
     /// Per-group router: each class keeps its own round-robin cursor so
     /// correlated cross-class arrival patterns can't alias with the
@@ -317,6 +421,8 @@ pub struct Fleet {
     remotes: Vec<Arc<RemoteCloudEngine>>,
     /// The activation transfer codec every engine/planner was built at.
     wire_encoding: WireEncoding,
+    /// Fleet-wide shard budget; `None` = unbounded.
+    budget: Option<Arc<ShardBudget>>,
     route_key: AtomicU64,
 }
 
@@ -354,6 +460,17 @@ impl Fleet {
                     cfg.shards_per_class,
                     acfg.min_shards,
                     acfg.max_shards
+                );
+            }
+        }
+        if let Some(cap) = cfg.max_total_shards {
+            let starting = registry.len() * cfg.shards_per_class;
+            if cap < starting {
+                bail!(
+                    "max_total_shards ({cap}) is below the starting fleet size \
+                     ({} class(es) x {} shard(s) = {starting})",
+                    registry.len(),
+                    cfg.shards_per_class
                 );
             }
         }
@@ -456,9 +573,47 @@ impl Fleet {
             ecfg.validate()?;
         }
 
+        // The budget starts fully charged for the startup shards; every
+        // later grow/shrink settles against it.
+        let budget = cfg.max_total_shards.map(|cap| {
+            Arc::new(ShardBudget {
+                cap,
+                used: AtomicUsize::new(registry.len() * cfg.shards_per_class),
+            })
+        });
+
         let mut groups = Vec::with_capacity(registry.len());
         for (idx, prof) in registry.iter().enumerate() {
             let link_class = LinkClass(idx as u8);
+            // Resolve this class's autoscale bounds: the fleet defaults
+            // with the profile's overrides applied, re-validated (an
+            // override can invert the range or strand the starting
+            // size outside it).
+            let autoscale = match &cfg.autoscale {
+                Some(base) => {
+                    let mut a = base.clone();
+                    if let Some(lo) = prof.min_shards {
+                        a.min_shards = lo;
+                    }
+                    if let Some(hi) = prof.max_shards {
+                        a.max_shards = hi;
+                    }
+                    a.validate()
+                        .map_err(|e| anyhow!("link class '{}': {e:#}", prof.name))?;
+                    if !(a.min_shards..=a.max_shards).contains(&cfg.shards_per_class) {
+                        bail!(
+                            "link class '{}': shards_per_class ({}) must lie within \
+                             its autoscale range {}..={}",
+                            prof.name,
+                            cfg.shards_per_class,
+                            a.min_shards,
+                            a.max_shards
+                        );
+                    }
+                    Some(a)
+                }
+                None => None,
+            };
             let p_class = prof.exit_probability.unwrap_or(cfg.default_exit_prob);
             // This class's cloud endpoint: its own override, else the
             // fleet-wide default; classes resolving to the same address
@@ -591,13 +746,16 @@ impl Fleet {
                 )
             });
 
-            let autoscaler = cfg.autoscale.clone().map(|acfg| {
+            let spawn_loop = autoscale.clone().filter(|_| !cfg.autoscale_external);
+            let autoscaler = spawn_loop.map(|acfg| {
                 let sample_group = shard_group.clone();
                 let sample_remote = remote.clone();
                 let grow_group = shard_group.clone();
                 let grow_spawn = spawn_shard.clone();
+                let grow_budget = budget.clone();
                 let grow_cap = acfg.max_shards;
                 let shrink_group = shard_group.clone();
+                let shrink_budget = budget.clone();
                 let shrink_floor = acfg.min_shards;
                 Autoscaler::spawn(
                     prof.name.clone(),
@@ -628,8 +786,23 @@ impl Fleet {
                                 .unwrap_or(0),
                         }
                     },
-                    move |trigger| grow_group.grow(trigger, grow_cap, &*grow_spawn),
-                    move |trigger| shrink_group.shrink(trigger, shrink_floor),
+                    move |trigger| {
+                        grow_with_budget(
+                            &grow_group,
+                            grow_budget.as_deref(),
+                            trigger,
+                            grow_cap,
+                            &*grow_spawn,
+                        )
+                    },
+                    move |trigger| {
+                        shrink_with_budget(
+                            &shrink_group,
+                            shrink_budget.as_deref(),
+                            trigger,
+                            shrink_floor,
+                        )
+                    },
                 )
             });
 
@@ -641,7 +814,8 @@ impl Fleet {
                 channel,
                 shards: shard_group,
                 spawn_shard,
-                autoscale: cfg.autoscale.clone(),
+                remote,
+                autoscale,
                 router: FleetRouter::new(cfg.routing),
                 adaptive,
                 autoscaler,
@@ -658,6 +832,7 @@ impl Fleet {
             branch_pos,
             remotes: engines,
             wire_encoding: cfg.wire_encoding,
+            budget,
             route_key: AtomicU64::new(1),
         })
     }
@@ -691,6 +866,14 @@ impl Fleet {
         Ok(self.group(class)?.shards.len())
     }
 
+    /// `E[T_inf]` the class's planner prices for `split` at `link` —
+    /// the scenario harness costs its virtual queue twin through this,
+    /// so twin latencies and the plans the fleet executes come from the
+    /// same model (same terms, same fold order).
+    pub fn expected_time_of(&self, class: LinkClass, split: usize, link: LinkModel) -> Result<f64> {
+        Ok(self.group(class)?.planner.expected_time(split, link))
+    }
+
     /// Scaling observability for a class (current/min/max shards,
     /// scale-up/down counters, last trigger).
     pub fn scaler_stats_of(&self, class: LinkClass) -> Result<ScalerStats> {
@@ -707,7 +890,57 @@ impl Fleet {
     pub fn grow_class(&self, class: LinkClass) -> Result<usize> {
         let group = self.group(class)?;
         let cap = group.autoscale.as_ref().map(|a| a.max_shards).unwrap_or(64);
-        group.shards.grow("manual", cap, &*group.spawn_shard)
+        grow_with_budget(
+            &group.shards,
+            self.budget.as_deref(),
+            "manual",
+            cap,
+            &*group.spawn_shard,
+        )
+    }
+
+    /// [`Fleet::grow_class`] with an explicit trigger string and denial
+    /// outcomes instead of errors — the drive API an external scaler
+    /// (the scenario harness) executes its decisions through. A denial
+    /// builds no engine; a budget denial additionally records itself as
+    /// the class's `last_trigger`.
+    pub fn grow_class_triggered(&self, class: LinkClass, trigger: &str) -> Result<GrowOutcome> {
+        let group = self.group(class)?;
+        let cap = group.autoscale.as_ref().map(|a| a.max_shards).unwrap_or(64);
+        if group.shards.len() >= cap {
+            return Ok(GrowOutcome::AtClassCap);
+        }
+        if let Some(b) = &self.budget {
+            if !b.try_acquire() {
+                group.shards.note_trigger(&b.denial());
+                return Ok(GrowOutcome::AtBudget);
+            }
+        }
+        match group.shards.grow(trigger, cap, &*group.spawn_shard) {
+            Ok(n) => Ok(GrowOutcome::Grew(n)),
+            Err(e) => {
+                if let Some(b) = &self.budget {
+                    b.release();
+                }
+                // A concurrent grow can win the locked re-check between
+                // the len() peek above and the install; that is the cap
+                // denial it looks like, not a provisioning failure.
+                if group.shards.len() >= cap {
+                    Ok(GrowOutcome::AtClassCap)
+                } else {
+                    Err(e)
+                }
+            }
+        }
+    }
+
+    /// [`Fleet::shrink_class`] with an explicit trigger string — the
+    /// external scaler's shrink path. Releases the victim's budget
+    /// slot; errors when the class already sits at its floor.
+    pub fn shrink_class_triggered(&self, class: LinkClass, trigger: &str) -> Result<usize> {
+        let group = self.group(class)?;
+        let floor = group.autoscale.as_ref().map(|a| a.min_shards).unwrap_or(1);
+        shrink_with_budget(&group.shards, self.budget.as_deref(), trigger, floor)
     }
 
     /// Manually retire a class's highest-index shard: it is removed
@@ -716,9 +949,73 @@ impl Fleet {
     /// refuses to drop below the class's autoscale `min_shards` (one
     /// shard on a fixed fleet).
     pub fn shrink_class(&self, class: LinkClass) -> Result<usize> {
+        self.shrink_class_triggered(class, "manual")
+    }
+
+    /// One raw load reading of a class — the same sampling the
+    /// autoscaler control loop performs, exposed so an external driver
+    /// can assemble windows and run [`AutoscaleConfig::decide`] on its
+    /// own clock.
+    pub fn load_sample_of(&self, class: LinkClass) -> Result<LoadSample> {
         let group = self.group(class)?;
-        let floor = group.autoscale.as_ref().map(|a| a.min_shards).unwrap_or(1);
-        group.shards.shrink("manual", floor)
+        // Retired first, live second — same ordering argument as the
+        // control loop's sampler (see `Fleet::start`).
+        let retired_rejected = group.shards.retired_rejected();
+        let handles = group.shards.handles();
+        Ok(LoadSample {
+            shards: handles.len(),
+            depth_total: handles.iter().map(|s| s.queue_depth()).sum(),
+            rejected_total: handles.iter().map(|s| s.rejected_total()).sum::<u64>()
+                + retired_rejected,
+            remote_total: group
+                .remote
+                .as_ref()
+                .map(|r| {
+                    let st = r.stats();
+                    st.saturated + st.fast_fails
+                })
+                .unwrap_or(0),
+        })
+    }
+
+    /// The class's resolved autoscale config (fleet defaults with the
+    /// class's overrides applied); `None` when autoscaling is off.
+    pub fn autoscale_of(&self, class: LinkClass) -> Result<Option<AutoscaleConfig>> {
+        Ok(self.group(class)?.autoscale.clone())
+    }
+
+    /// Re-point a class at a new nominal uplink mid-run (the scenario
+    /// harness's link-churn event): re-solve the class's base plan at
+    /// the new link and push it to every live shard. The class
+    /// *channel* is deliberately untouched — it keeps charging its
+    /// startup trace — so this models a control-plane retune whose
+    /// effect shows up in planning, not in the simulated wire clock.
+    /// Returns the new split.
+    pub fn retune_class(&self, class: LinkClass, uplink_mbps: f64, rtt_s: f64) -> Result<usize> {
+        let group = self.group(class)?;
+        let link = LinkModel::try_new(uplink_mbps, rtt_s)?;
+        let plan = group.planner.plan(link);
+        let split = plan.split_after;
+        for shard in group.shards.handles() {
+            shard.set_plan(plan.clone());
+        }
+        log::info!(
+            "[{}] retuned to {uplink_mbps} Mbit/s (rtt {rtt_s}s): split after {split}",
+            group.profile.name
+        );
+        Ok(split)
+    }
+
+    /// Toggle every remote cloud endpoint's availability (the scenario
+    /// harness's brownout/outage windows). `false` makes each remote
+    /// client fail instantly — without touching its backoff/breaker
+    /// state — so offloads fall back to the shards' local engines;
+    /// `true` restores the wire path immediately. No-op for fleets
+    /// whose cloud stages run in-process.
+    pub fn set_cloud_available(&self, up: bool) {
+        for r in &self.remotes {
+            r.set_available(up);
+        }
     }
 
     /// This class's planner (for cross-checking plans in tests/tools).
@@ -1066,6 +1363,61 @@ mod tests {
             .classes
             .iter()
             .all(|c| c.wire_encoding == WireEncoding::Q8));
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn per_class_bounds_and_fleet_budget_govern_grows() {
+        let manifest =
+            Manifest::synthetic_sim("sim-budget", vec![4], &[16, 8, 2], 1, 2, vec![1, 2, 4, 8])
+                .unwrap();
+        let profile = DelayProfile::from_cloud_times(vec![1e-4, 1e-4, 1e-4], 2e-5, 50.0);
+        let mut a = ClassProfile::custom("a", 1.10, 0.0).unwrap();
+        a.max_shards = Some(2);
+        let registry =
+            ClassRegistry::new(vec![a, ClassProfile::custom("b", 5.85, 0.0).unwrap()]).unwrap();
+        let m = manifest.clone();
+        let fleet = Fleet::start(
+            registry,
+            &manifest,
+            &profile,
+            FleetConfig {
+                real_time_channel: false,
+                autoscale: Some(AutoscaleConfig {
+                    min_shards: 1,
+                    max_shards: 4,
+                    ..Default::default()
+                }),
+                // No control loops: this test is the external driver.
+                autoscale_external: true,
+                max_total_shards: Some(3),
+                ..Default::default()
+            },
+            move |label| {
+                Ok((
+                    InferenceEngine::open_sim(m.clone(), &format!("{label}-e"))?,
+                    InferenceEngine::open_sim(m.clone(), &format!("{label}-c"))?,
+                ))
+            },
+        )
+        .unwrap();
+        let a = fleet.class_by_name("a").unwrap();
+        let b = fleet.class_by_name("b").unwrap();
+        // 'a' grows to its own (overridden) ceiling of 2, then is
+        // denied by that ceiling, not the budget.
+        assert_eq!(fleet.grow_class_triggered(a, "t").unwrap(), GrowOutcome::Grew(2));
+        assert_eq!(fleet.grow_class_triggered(a, "t").unwrap(), GrowOutcome::AtClassCap);
+        // 'b' may go to 4 by its own range, but the fleet budget (3)
+        // is spent: 2 + 1. The denial is recorded as its last trigger.
+        assert_eq!(fleet.grow_class_triggered(b, "t").unwrap(), GrowOutcome::AtBudget);
+        let st = fleet.scaler_stats_of(b).unwrap();
+        assert!(st.last_trigger.unwrap().contains("budget"), "budget denial not recorded");
+        assert_eq!((st.min_shards, st.max_shards), (1, 4));
+        let st = fleet.scaler_stats_of(a).unwrap();
+        assert_eq!((st.min_shards, st.max_shards, st.current_shards), (1, 2, 2));
+        // Shrinking 'a' returns its slot; 'b' can then grow.
+        assert_eq!(fleet.shrink_class_triggered(a, "t").unwrap(), 1);
+        assert_eq!(fleet.grow_class_triggered(b, "t").unwrap(), GrowOutcome::Grew(2));
         fleet.shutdown();
     }
 

@@ -35,6 +35,10 @@
 //!   partial-inference frames that carry cut activations between
 //!   machines), the TCP accept loop, the cloud-stage server and the
 //!   remote cloud client, plus load generation;
+//! * [`scenario`] — the scenario harness: a declarative `.toml` DSL for
+//!   scripted load curves, link churn, cloud brownouts and exit-rate
+//!   drift, replayed against a real fleet in deterministic virtual time
+//!   and judged by an SLO block (`branchyserve scenario run`);
 //! * [`experiments`] — drivers regenerating the paper's Figures 4, 5, 6.
 //!
 //! The partition is physically realizable: `branchyserve serve
@@ -61,6 +65,7 @@ pub mod partition;
 pub mod planner;
 pub mod profiler;
 pub mod runtime;
+pub mod scenario;
 pub mod server;
 pub mod testing;
 pub mod timing;

@@ -27,6 +27,7 @@ use branchyserve::partition;
 use branchyserve::planner::{AdaptiveConfig, EstimatorConfig};
 use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
 use branchyserve::runtime::InferenceEngine;
+use branchyserve::scenario::{self, ScenarioSpec};
 use branchyserve::server::{CloudStageServer, Server};
 use branchyserve::util::logger;
 use branchyserve::util::timefmt::format_secs;
@@ -105,6 +106,15 @@ fn cli() -> Cli {
                 .flag(Flag::value("bind", "listen address").default("0.0.0.0"))
                 .flag(Flag::switch("sim", "serve the simulated model (no artifacts needed)"))
                 .flag(Flag::value("sim-stage-cost-us", "synthetic per-stage compute cost, us").default("200")),
+            Command::new(
+                "scenario",
+                "replay a declarative scenario file against a deterministic fleet twin",
+            )
+            .flag(Flag::value("seed", "override the file's [scenario] seed"))
+            .flag(Flag::value(
+                "out",
+                "benchmark JSON path (default BENCH_scenario_<name>.json)",
+            )),
             Command::new("fig4", "inference time vs exit probability (paper Fig. 4)")
                 .flag(Flag::value("points", "probability grid points").default("21"))
                 .flag(Flag::value("profile", "profile JSON (else measured now)"))
@@ -157,6 +167,7 @@ fn dispatch(inv: &Invocation) -> Result<()> {
         "plan" => cmd_plan(inv, &settings),
         "serve" => cmd_serve(inv, &settings),
         "cloud-serve" => cmd_cloud_serve(inv, &settings),
+        "scenario" => cmd_scenario(inv),
         "fig4" => cmd_fig4(inv, &settings),
         "fig5" => cmd_fig5(inv, &settings),
         "fig6" => cmd_fig6(inv, &settings),
@@ -470,6 +481,8 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             trace: None,
             exit_probability: None,
             cloud_addr: None,
+            min_shards: None,
+            max_shards: None,
         };
         if let Some(path) = &settings.network.trace {
             println!(
@@ -515,6 +528,8 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             epsilon: settings.partition.epsilon,
             adaptive,
             autoscale: autoscale.clone(),
+            autoscale_external: false,
+            max_total_shards: settings.fleet.max_total_shards,
             estimation,
             per_request_planning: per_request,
             probe_fraction,
@@ -631,6 +646,47 @@ fn cmd_cloud_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             server.splits_served(),
         );
     }
+}
+
+/// `scenario run <file.toml>` — replay a declarative scenario against
+/// a real fleet in deterministic virtual time, write the
+/// `BENCH_scenario_<name>.json`, and print the SLO verdicts. Exits
+/// nonzero when any SLO check fails — *after* writing the JSON, so CI
+/// always gets the artifact to diff.
+fn cmd_scenario(inv: &Invocation) -> Result<()> {
+    let usage = "usage: branchyserve scenario run <file.toml> [--seed N] [--out PATH]";
+    let (verb, file) = match inv.positionals.as_slice() {
+        [verb, file] => (verb.as_str(), file.as_str()),
+        _ => anyhow::bail!("{usage}"),
+    };
+    if verb != "run" {
+        anyhow::bail!("unknown scenario verb '{verb}' — {usage}");
+    }
+
+    let spec = ScenarioSpec::load(Path::new(file))?;
+    let seed = get_usize(inv, "seed")?.map(|s| s as u64);
+    let outcome = scenario::run(&spec, seed)?;
+
+    let out_path = match inv.get("out") {
+        Some(p) => PathBuf::from(p),
+        None => PathBuf::from(format!("BENCH_scenario_{}.json", outcome.name)),
+    };
+    std::fs::write(&out_path, outcome.json.to_string_pretty() + "\n")?;
+
+    println!("scenario '{}' (seed {}) — {}", outcome.name, outcome.seed, out_path.display());
+    let mut table = Table::new(&["check", "verdict", "detail"]);
+    for c in &outcome.checks {
+        let verdict = if c.pass { "PASS" } else { "FAIL" };
+        table.row(vec![c.name.clone(), verdict.to_string(), c.detail.clone()]);
+    }
+    print!("{}", table.render());
+
+    if !outcome.passed {
+        let failed = outcome.checks.iter().filter(|c| !c.pass).count();
+        anyhow::bail!("{failed} SLO check(s) failed (JSON written to {})", out_path.display());
+    }
+    println!("all {} SLO checks passed", outcome.checks.len());
+    Ok(())
 }
 
 fn cmd_fig4(inv: &Invocation, settings: &Settings) -> Result<()> {

@@ -1,0 +1,19 @@
+//! Scenario harness: a deterministic fleet digital twin driven by a
+//! declarative scenario DSL.
+//!
+//! [`spec`] parses and validates `.toml` scenario files (timed load
+//! curves, link churn, traffic reassignment, cloud brownouts, exit-rate
+//! drift, plus an SLO block); [`runner`] replays them against a *real*
+//! fleet in lockstep virtual time and emits a
+//! `BENCH_scenario_<name>.json` whose only nondeterministic field is
+//! the `"wall"` object — same seed, same file ⇒ bit-identical output.
+//!
+//! Canonical scenarios live in `scenarios/` at the repo root and double
+//! as integration tests (`rust/tests/scenario_canonical.rs`); run one
+//! with `branchyserve scenario run scenarios/diurnal.toml`.
+
+pub mod runner;
+pub mod spec;
+
+pub use runner::{run, ScenarioOutcome, SloCheck};
+pub use spec::{Event, EventKind, ScenarioSpec, SloSpec, WorkloadSpec};

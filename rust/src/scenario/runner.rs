@@ -1,0 +1,943 @@
+//! Replays a [`ScenarioSpec`] against a **real** fleet — real
+//! coordinators, real planners, real autoscale enforcement, a real
+//! loopback cloud-stage server when asked — in lockstep *virtual* time.
+//!
+//! Determinism contract: wall clocks never decide anything.
+//!
+//! - A virtual clock advances in fixed ticks. Each tick the harness
+//!   draws that tick's Poisson arrivals from a seeded RNG, submits them
+//!   to the fleet, and then receives **every** response before the next
+//!   tick begins. The pipeline is quiescent at every tick boundary, so
+//!   plan switches, estimator observations and scaling decisions land
+//!   at reproducible points in the sample stream.
+//! - Latency and queueing are accounted by a *virtual queue twin*: one
+//!   busy-until horizon per shard, serviced at the class planner's own
+//!   `expected_time(split, link)`. Real execution (sim engines, zero
+//!   stage cost) validates the ledger — every accepted request must
+//!   come back — while the twin produces the latencies the SLOs judge.
+//! - Scaling is harness-driven: the fleet runs with
+//!   `autoscale_external`, the harness samples the twin's depths on the
+//!   autoscaler's own interval/window/cooldown schedule (in virtual
+//!   time) and executes decisions through
+//!   [`Fleet::grow_class_triggered`] / [`Fleet::shrink_class_triggered`]
+//!   — so per-class ceilings and the fleet-wide budget are enforced by
+//!   the *real* fleet, deterministically.
+//! - The fleet is pinned to `max_batch = 1`, round-robin routing, one
+//!   cloud worker per shard and a non-real-time channel. That makes
+//!   batch-level counters sample-level, keeps routing independent of
+//!   wall-clock queue depths, and serializes the remote path so
+//!   brownout fallbacks are counted identically on every run.
+//!
+//! The emitted `BENCH_scenario_<name>.json` contains only deterministic
+//! quantities except the single `"wall"` object — strip it and two runs
+//! with the same seed compare bit-identical.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::json::Json;
+use crate::coordinator::InferenceResponse;
+use crate::fleet::{
+    AutoscaleConfig, ClassRegistry, Fleet, FleetConfig, FleetReport, GrowOutcome, LinkClass,
+    LoadSample, LoadSignal, RoutePolicy, ScaleDecision,
+};
+use crate::model::Manifest;
+use crate::network::bandwidth::LinkModel;
+use crate::planner::EstimatorConfig;
+use crate::runtime::InferenceEngine;
+use crate::server::{CloudStageServer, Server, ServerHandle};
+use crate::timing::DelayProfile;
+use crate::util::rng::Pcg32;
+use crate::util::stats::percentile;
+use crate::workload::images::ImageSource;
+
+use super::spec::{EventKind, ScenarioSpec};
+
+/// The synthetic model every scenario serves: five flat stages with the
+/// side branch after stage 1, fed by the 3×32×32 image source.
+const STAGE_OUT: [usize; 5] = [512, 256, 128, 64, 2];
+/// Per-stage cloud time of the synthetic delay profile, seconds; edge
+/// times are `gamma ×` this ([`DelayProfile::from_cloud_times`]).
+const STAGE_CLOUD_S: f64 = 1e-4;
+const BRANCH_CLOUD_S: f64 = 2e-5;
+/// Wall-clock ceiling on one response; a quiesce that takes this long
+/// means the pipeline lost a request, which is a harness bug.
+const RECV_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// One SLO check's verdict, as emitted under `slo.checks[]`.
+#[derive(Debug, Clone)]
+pub struct SloCheck {
+    pub name: String,
+    pub pass: bool,
+    pub detail: String,
+}
+
+/// A finished run: verdicts plus the full benchmark JSON.
+#[derive(Debug)]
+pub struct ScenarioOutcome {
+    pub name: String,
+    pub seed: u64,
+    pub passed: bool,
+    pub checks: Vec<SloCheck>,
+    pub json: Json,
+}
+
+/// Linear rate ramp in progress.
+struct Ramp {
+    from: f64,
+    to: f64,
+    t0: f64,
+    t1: f64,
+}
+
+/// Everything the harness tracks per link class.
+struct ClassState {
+    id: LinkClass,
+    name: String,
+    rate: f64,
+    ramp: Option<Ramp>,
+    /// Reroute this fraction of future arrivals to another class index.
+    reassign: Option<(usize, f64)>,
+    source: ImageSource,
+    /// The *virtual* link — starts at the class profile, moved by
+    /// `set_bandwidth` (which retunes the real fleet in the same step).
+    link: LinkModel,
+    split: usize,
+    /// Split trajectory: `(t_s, split)`, first entry at t = 0.
+    splits: Vec<(f64, usize)>,
+    /// Virtual queue twin: busy-until horizon per shard, seconds.
+    twin: Vec<f64>,
+    offered: u64,
+    accepted: u64,
+    rejected: u64,
+    completed: u64,
+    edge_exits: u64,
+    /// Virtual latencies, seconds.
+    latencies: Vec<f64>,
+    /// Resolved autoscale config (fleet defaults + class overrides);
+    /// `None` = fixed-size class.
+    acfg: Option<AutoscaleConfig>,
+    window: Vec<LoadSample>,
+    prev: LoadSample,
+    next_sample_t: f64,
+    cooldown_until: f64,
+    scale_ups: u64,
+    scale_downs: u64,
+    grow_denied_cap: u64,
+    grow_denied_budget: u64,
+    high_water: usize,
+    low_water: usize,
+}
+
+impl ClassState {
+    fn rate_at(&self, t: f64) -> f64 {
+        match &self.ramp {
+            Some(r) if t < r.t1 => {
+                let f = ((t - r.t0) / (r.t1 - r.t0)).clamp(0.0, 1.0);
+                r.from + f * (r.to - r.from)
+            }
+            Some(r) => r.to,
+            None => self.rate,
+        }
+    }
+
+    /// Twin service time at virtual time `t`: the class planner's
+    /// expected time for the executing split at the virtual link. A
+    /// brownout is priced as edge-only execution (the real pipeline
+    /// falls back to running the suffix locally).
+    fn service_s(&self, fleet: &Fleet, cloud_up: bool, num_stages: usize) -> Result<f64> {
+        let split = if cloud_up { self.split } else { num_stages };
+        let s = fleet.expected_time_of(self.id, split, self.link)?;
+        if !(s.is_finite() && s > 0.0) {
+            bail!("class '{}': non-positive expected time {s}", self.name);
+        }
+        Ok(s)
+    }
+
+    fn twin_depth(&self, t: f64, service: f64) -> usize {
+        self.twin
+            .iter()
+            .map(|&busy| {
+                if busy > t {
+                    ((busy - t) / service).ceil() as usize
+                } else {
+                    0
+                }
+            })
+            .sum()
+    }
+}
+
+/// Accumulates one metrics window.
+#[derive(Default)]
+struct WindowAcc {
+    offered: u64,
+    accepted: u64,
+    rejected: u64,
+    completed: u64,
+    latencies: Vec<f64>,
+}
+
+/// Seconds → milliseconds, rounded to 3 decimals (stable to print).
+fn ms3(s: f64) -> f64 {
+    (s * 1e6).round() / 1e3
+}
+
+fn p_or_zero(lats: &[f64], q: f64) -> f64 {
+    if lats.is_empty() {
+        0.0
+    } else {
+        percentile(lats, q)
+    }
+}
+
+/// Run a scenario. `seed_override` (the CLI's `--seed`) replaces the
+/// file's `[scenario] seed`. Two runs with the same spec and seed emit
+/// bit-identical JSON apart from the `"wall"` object.
+pub fn run(spec: &ScenarioSpec, seed_override: Option<u64>) -> Result<ScenarioOutcome> {
+    let wall_start = Instant::now();
+    let seed = seed_override.unwrap_or(spec.seed);
+    let settings = &spec.settings;
+    let num_stages = STAGE_OUT.len();
+
+    let manifest = Manifest::synthetic_sim(
+        "scenario-sim",
+        vec![3, 32, 32],
+        &STAGE_OUT,
+        1,
+        2,
+        vec![1],
+    )?;
+    let delay = DelayProfile::from_cloud_times(
+        vec![STAGE_CLOUD_S; num_stages],
+        BRANCH_CLOUD_S,
+        settings.edge.gamma,
+    );
+    let registry = ClassRegistry::from_settings(&settings.link_classes)?;
+
+    // Loopback cloud: a real cloud-stage server on 127.0.0.1 that every
+    // class offloads to, so brownouts exercise the real remote path
+    // (wire protocol, administrative refusal, local fallback).
+    let cloud_handle: Option<ServerHandle> = if spec.loopback_cloud {
+        let engine = InferenceEngine::open_sim(manifest.clone(), "scenario-cloudstage")?;
+        Some(Server::new(Arc::new(CloudStageServer::new(engine))).start(0)?)
+    } else {
+        None
+    };
+    let cloud_addr = cloud_handle.as_ref().map(|h| h.addr().to_string());
+
+    let autoscale = if settings.fleet.autoscale {
+        Some(settings.fleet.autoscale_config()?)
+    } else {
+        None
+    };
+    let fleet_manifest = manifest.clone();
+    let fleet = Fleet::start(
+        registry,
+        &manifest,
+        &delay,
+        FleetConfig {
+            shards_per_class: settings.fleet.shards,
+            // One cloud worker serializes the remote path: per-sample
+            // transfer order (and hence fallback counts) is fixed.
+            cloud_workers_per_shard: 1,
+            // Round-robin is load-independent; least-loaded reads
+            // wall-clock queue depths and would tie routing to timing.
+            routing: RoutePolicy::RoundRobin,
+            entropy_threshold: settings.branch.entropy_threshold as f32,
+            // One sample per batch: batch-level counters become
+            // sample-level, and the batcher never waits on a timeout.
+            max_batch: 1,
+            batch_timeout: Duration::from_millis(1),
+            queue_capacity: settings.serve.queue_capacity,
+            default_exit_prob: settings.branch.exit_probability.unwrap_or(0.5),
+            epsilon: settings.partition.epsilon,
+            adaptive: None,
+            autoscale: autoscale.clone(),
+            // The harness is the control loop; the fleet only enforces.
+            autoscale_external: true,
+            max_total_shards: settings.fleet.max_total_shards,
+            estimation: settings.fleet.online_estimation.then(|| EstimatorConfig {
+                drift_threshold: settings.fleet.drift_threshold,
+                ..EstimatorConfig::default()
+            }),
+            per_request_planning: false,
+            probe_fraction: 0.0,
+            cloud_addr,
+            wire_encoding: settings.fleet.wire_encoding,
+            channel_jitter: 0.0,
+            real_time_channel: false,
+        },
+        move |label: &str| {
+            Ok((
+                InferenceEngine::open_sim(fleet_manifest.clone(), &format!("{label}-edge"))?,
+                InferenceEngine::open_sim(fleet_manifest.clone(), &format!("{label}-cloud"))?,
+            ))
+        },
+    )?;
+    if settings.fleet.online_estimation && settings.fleet.shards > 1 {
+        log::warn!(
+            "scenario: online estimation with {} shards — observation order across \
+             shards is scheduling-dependent; use shards = 1 for bit-identical runs",
+            settings.fleet.shards
+        );
+    }
+
+    // ------------------------------------------------- per-class state
+    let start_shards = settings.fleet.shards;
+    let mut classes: Vec<ClassState> = Vec::with_capacity(settings.link_classes.len());
+    for (ci, lc) in settings.link_classes.iter().enumerate() {
+        let id = fleet
+            .class_by_name(&lc.name)
+            .ok_or_else(|| anyhow!("class '{}' vanished from the fleet", lc.name))?;
+        let workload = spec
+            .workloads
+            .iter()
+            .find(|w| w.class.eq_ignore_ascii_case(&lc.name));
+        let mut source = ImageSource::new(seed.wrapping_add(ci as u64));
+        source.set_mix(workload.map(|w| w.class1_fraction).unwrap_or(0.5));
+        let split = fleet.plan_of(id)?.split_after;
+        let acfg = fleet.autoscale_of(id)?;
+        let interval = acfg
+            .as_ref()
+            .map(|a| a.interval.as_secs_f64())
+            .unwrap_or(f64::INFINITY);
+        classes.push(ClassState {
+            id,
+            name: lc.name.clone(),
+            rate: workload.map(|w| w.rate_rps).unwrap_or(0.0),
+            ramp: None,
+            reassign: None,
+            source,
+            link: LinkModel::try_new(lc.uplink_mbps, lc.rtt_s)?,
+            split,
+            splits: vec![(0.0, split)],
+            twin: vec![0.0; start_shards],
+            offered: 0,
+            accepted: 0,
+            rejected: 0,
+            completed: 0,
+            edge_exits: 0,
+            latencies: Vec::new(),
+            acfg,
+            window: Vec::new(),
+            prev: LoadSample::default(),
+            next_sample_t: interval,
+            cooldown_until: 0.0,
+            scale_ups: 0,
+            scale_downs: 0,
+            grow_denied_cap: 0,
+            grow_denied_budget: 0,
+            high_water: start_shards,
+            low_water: start_shards,
+        });
+    }
+
+    // --------------------------------------------------- the tick loop
+    let tick_s = spec.tick_ms / 1e3;
+    let n_ticks = (spec.duration_s / tick_s).ceil() as u64;
+    let queue_cap = settings.serve.queue_capacity;
+    let mut arrivals_rng = Pcg32::new(seed, 1);
+    let mut reassign_rng = Pcg32::new(seed, 2);
+    let mut cloud_up = true;
+    let mut next_event = 0usize;
+    let mut win = WindowAcc::default();
+    let mut windows: Vec<Json> = Vec::new();
+    let mut window_idx = 0u64;
+    let mut pending: Vec<(usize, Receiver<InferenceResponse>)> = Vec::new();
+
+    for k in 0..n_ticks {
+        let t0 = k as f64 * tick_s;
+        let t_end = t0 + tick_s;
+
+        // Events due at or before this tick's start.
+        while next_event < spec.events.len() && spec.events[next_event].at_s <= t0 + 1e-9 {
+            let ev = &spec.events[next_event];
+            apply_event(&ev.kind, ev.at_s, &mut classes, &fleet, &mut cloud_up)?;
+            next_event += 1;
+        }
+
+        // This tick's arrivals, class by class in declaration order.
+        #[allow(clippy::needless_range_loop)]
+        for ci in 0..classes.len() {
+            let rate = classes[ci].rate_at(t0);
+            if rate <= 0.0 {
+                continue;
+            }
+            let n = arrivals_rng.poisson(rate * tick_s);
+            let mut offsets: Vec<f64> = (0..n).map(|_| arrivals_rng.f64() * tick_s).collect();
+            offsets.sort_by(f64::total_cmp);
+            for off in offsets {
+                let tau = t0 + off;
+                let (image, _label) = classes[ci].source.sample();
+                let eff = match classes[ci].reassign {
+                    Some((to, f)) if reassign_rng.bool(f) => to,
+                    _ => ci,
+                };
+                let service = classes[eff].service_s(&fleet, cloud_up, num_stages)?;
+                let c = &mut classes[eff];
+                c.offered += 1;
+                win.offered += 1;
+                // Pick the twin shard exactly like round-robin doesn't:
+                // earliest-free wins, which is what the latency bound
+                // cares about. Rejection applies the real per-shard
+                // queue capacity to the twin's backlog.
+                let (si, busy) = c
+                    .twin
+                    .iter()
+                    .copied()
+                    .enumerate()
+                    .min_by(|a, b| a.1.total_cmp(&b.1))
+                    .expect("shard groups are never empty");
+                let depth = if busy > tau {
+                    ((busy - tau) / service).ceil() as usize
+                } else {
+                    0
+                };
+                if depth >= queue_cap {
+                    c.rejected += 1;
+                    win.rejected += 1;
+                    continue;
+                }
+                let finish = busy.max(tau) + service;
+                c.twin[si] = finish;
+                c.accepted += 1;
+                win.accepted += 1;
+                c.latencies.push(finish - tau);
+                win.latencies.push(finish - tau);
+                let (_id, rx) = fleet.submit(c.id, image)?;
+                pending.push((eff, rx));
+            }
+        }
+
+        // Quiesce: every submitted sample answers before time advances.
+        for (ci, rx) in pending.drain(..) {
+            let resp = rx.recv_timeout(RECV_TIMEOUT).map_err(|_| {
+                anyhow!(
+                    "scenario pipeline stalled: class '{}' sample unanswered after {:?}",
+                    classes[ci].name,
+                    RECV_TIMEOUT
+                )
+            })?;
+            classes[ci].completed += 1;
+            win.completed += 1;
+            if resp.exited_early() {
+                classes[ci].edge_exits += 1;
+            }
+        }
+
+        // Estimator-driven replans landed during the quiesce; pick up
+        // any split movement at the tick boundary.
+        for c in &mut classes {
+            let s = fleet.plan_of(c.id)?.split_after;
+            if s != c.split {
+                c.split = s;
+                c.splits.push((t_end, s));
+            }
+        }
+
+        // Scaling decisions due by the end of this tick.
+        for c in &mut classes {
+            drive_scaler(c, &fleet, t_end, cloud_up, num_stages)?;
+        }
+
+        // Window boundary?
+        while t_end + 1e-9 >= (window_idx + 1) as f64 * spec.window_s {
+            window_idx += 1;
+            flush_window(
+                &mut win,
+                &mut windows,
+                window_idx as f64 * spec.window_s,
+                &classes,
+            );
+        }
+    }
+    if next_event < spec.events.len() {
+        log::warn!(
+            "scenario: {} event(s) after the last tick start never fired",
+            spec.events.len() - next_event
+        );
+    }
+    let events_applied = next_event;
+    if win.offered > 0 || win.completed > 0 {
+        flush_window(&mut win, &mut windows, spec.duration_s, &classes);
+    }
+
+    let report = fleet.shutdown();
+    if let Some(h) = cloud_handle {
+        h.stop();
+    }
+
+    let checks = evaluate_slo(spec, &classes, &report);
+    let passed = checks.iter().all(|c| c.pass);
+    let json = emit_json(
+        spec,
+        seed,
+        &classes,
+        &report,
+        &checks,
+        passed,
+        &windows,
+        events_applied,
+        wall_start.elapsed().as_secs_f64(),
+    );
+    Ok(ScenarioOutcome {
+        name: spec.name.clone(),
+        seed,
+        passed,
+        checks,
+        json,
+    })
+}
+
+fn apply_event(
+    kind: &EventKind,
+    at_s: f64,
+    classes: &mut [ClassState],
+    fleet: &Fleet,
+    cloud_up: &mut bool,
+) -> Result<()> {
+    let idx_of = |classes: &[ClassState], name: &str| -> Result<usize> {
+        classes
+            .iter()
+            .position(|c| c.name.eq_ignore_ascii_case(name))
+            .ok_or_else(|| anyhow!("event references unknown class '{name}'"))
+    };
+    match kind {
+        EventKind::SetRate { class, rate_rps } => {
+            let ci = idx_of(classes, class)?;
+            classes[ci].rate = *rate_rps;
+            classes[ci].ramp = None;
+        }
+        EventKind::RampRate {
+            class,
+            rate_rps,
+            over_s,
+        } => {
+            let ci = idx_of(classes, class)?;
+            let from = classes[ci].rate_at(at_s);
+            classes[ci].rate = *rate_rps;
+            classes[ci].ramp = Some(Ramp {
+                from,
+                to: *rate_rps,
+                t0: at_s,
+                t1: at_s + over_s,
+            });
+        }
+        EventKind::SetBandwidth { class, mbps } => {
+            let ci = idx_of(classes, class)?;
+            let rtt = classes[ci].link.rtt_s;
+            classes[ci].link = LinkModel::try_new(*mbps, rtt)?;
+            let split = fleet.retune_class(classes[ci].id, *mbps, rtt)?;
+            if split != classes[ci].split {
+                classes[ci].split = split;
+                classes[ci].splits.push((at_s, split));
+            }
+        }
+        EventKind::Reassign { from, to, fraction } => {
+            let fi = idx_of(classes, from)?;
+            let ti = idx_of(classes, to)?;
+            classes[fi].reassign = (*fraction > 0.0).then_some((ti, *fraction));
+        }
+        EventKind::CloudDown => {
+            fleet.set_cloud_available(false);
+            *cloud_up = false;
+        }
+        EventKind::CloudUp => {
+            fleet.set_cloud_available(true);
+            *cloud_up = true;
+        }
+        EventKind::SetExitBias {
+            class,
+            class1_fraction,
+        } => {
+            let ci = idx_of(classes, class)?;
+            classes[ci].source.set_mix(*class1_fraction);
+        }
+    }
+    Ok(())
+}
+
+/// Sample the twin on the autoscaler's schedule and execute decisions
+/// through the real fleet — the same window/cooldown state machine
+/// [`crate::fleet::Autoscaler`] runs, on the virtual clock.
+fn drive_scaler(
+    c: &mut ClassState,
+    fleet: &Fleet,
+    now: f64,
+    cloud_up: bool,
+    num_stages: usize,
+) -> Result<()> {
+    let Some(acfg) = c.acfg.clone() else {
+        return Ok(());
+    };
+    let interval = acfg.interval.as_secs_f64();
+    let cooldown = acfg.cooldown.as_secs_f64();
+    while c.next_sample_t <= now + 1e-9 {
+        let t = c.next_sample_t;
+        c.next_sample_t += interval;
+        let service = c.service_s(fleet, cloud_up, num_stages)?;
+        c.window.push(LoadSample {
+            shards: c.twin.len(),
+            depth_total: c.twin_depth(t, service),
+            rejected_total: c.rejected,
+            remote_total: 0,
+        });
+        if c.window.len() < acfg.window || t < c.cooldown_until {
+            continue;
+        }
+        let signal = LoadSignal::from_window(&c.window, &c.prev);
+        c.prev = *c.window.last().expect("window is non-empty here");
+        c.window.clear();
+        match acfg.decide(&signal, c.twin.len()) {
+            ScaleDecision::Grow(trigger) => match fleet.grow_class_triggered(c.id, &trigger)? {
+                GrowOutcome::Grew(n) => {
+                    c.twin.push(0.0);
+                    debug_assert_eq!(n, c.twin.len());
+                    c.scale_ups += 1;
+                    c.high_water = c.high_water.max(n);
+                    c.cooldown_until = t + cooldown;
+                }
+                GrowOutcome::AtClassCap => c.grow_denied_cap += 1,
+                GrowOutcome::AtBudget => c.grow_denied_budget += 1,
+            },
+            ScaleDecision::Shrink(trigger) => {
+                // The twin forgives the victim's (near-empty — shrink
+                // only fires on quiet windows) virtual backlog; the
+                // real victim drains fully before retiring.
+                if let Ok(n) = fleet.shrink_class_triggered(c.id, &trigger) {
+                    c.twin.pop();
+                    debug_assert_eq!(n, c.twin.len());
+                    c.scale_downs += 1;
+                    c.low_water = c.low_water.min(n);
+                    c.cooldown_until = t + cooldown;
+                }
+            }
+            ScaleDecision::Hold => {}
+        }
+    }
+    Ok(())
+}
+
+fn flush_window(win: &mut WindowAcc, out: &mut Vec<Json>, t_s: f64, classes: &[ClassState]) {
+    let w = std::mem::take(win);
+    let shards: usize = classes.iter().map(|c| c.twin.len()).sum();
+    out.push(Json::obj(vec![
+        ("t_s", Json::num((t_s * 1e3).round() / 1e3)),
+        ("offered", Json::num(w.offered as f64)),
+        ("accepted", Json::num(w.accepted as f64)),
+        ("rejected", Json::num(w.rejected as f64)),
+        ("completed", Json::num(w.completed as f64)),
+        ("p99_ms", Json::num(ms3(p_or_zero(&w.latencies, 99.0)))),
+        ("shards", Json::num(shards as f64)),
+    ]));
+}
+
+fn evaluate_slo(
+    spec: &ScenarioSpec,
+    classes: &[ClassState],
+    report: &FleetReport,
+) -> Vec<SloCheck> {
+    let mut checks = Vec::new();
+    let mut check = |name: &str, pass: bool, detail: String| {
+        checks.push(SloCheck {
+            name: name.to_string(),
+            pass,
+            detail,
+        });
+    };
+    let slo = &spec.slo;
+    let offered: u64 = classes.iter().map(|c| c.offered).sum();
+    let accepted: u64 = classes.iter().map(|c| c.accepted).sum();
+    let rejected: u64 = classes.iter().map(|c| c.rejected).sum();
+    let completed: u64 = classes.iter().map(|c| c.completed).sum();
+    let all_lats: Vec<f64> = classes.iter().flat_map(|c| c.latencies.iter().copied()).collect();
+
+    // Built-in: the real ledger must balance — every accepted sample
+    // was answered by the fleet, nothing shed or failed for real.
+    if slo.zero_drops {
+        let pass = completed == accepted
+            && report.total.rejected == 0
+            && report.total.failed == 0;
+        check(
+            "zero_drops",
+            pass,
+            format!(
+                "accepted {accepted}, completed {completed}, fleet rejected {}, failed {}",
+                report.total.rejected, report.total.failed
+            ),
+        );
+    }
+    if let Some(target) = slo.p99_ms {
+        let p99 = ms3(p_or_zero(&all_lats, 99.0));
+        check(
+            "p99_ms",
+            p99 <= target,
+            format!("virtual p99 {p99} ms vs target {target} ms"),
+        );
+    }
+    if let Some(target) = slo.max_rejection_rate {
+        let rate = if offered == 0 {
+            0.0
+        } else {
+            rejected as f64 / offered as f64
+        };
+        check(
+            "max_rejection_rate",
+            rate <= target,
+            format!("rejected {rejected}/{offered} = {rate:.4} vs ceiling {target}"),
+        );
+    }
+    if let Some(floor) = slo.min_completed {
+        check(
+            "min_completed",
+            completed >= floor,
+            format!("completed {completed} vs floor {floor}"),
+        );
+    }
+    if slo.expect_rejections {
+        check(
+            "expect_rejections",
+            rejected > 0,
+            format!("{rejected} admission rejection(s)"),
+        );
+    }
+    if slo.expect_fallbacks {
+        let fallbacks: u64 = report.classes.iter().map(|c| c.aggregate.remote_fallbacks).sum();
+        let remote: u64 = report.classes.iter().map(|c| c.aggregate.remote_batches).sum();
+        check(
+            "expect_fallbacks",
+            fallbacks > 0,
+            format!("{fallbacks} remote→local fallback(s), {remote} remote completion(s)"),
+        );
+    }
+    if slo.expect_budget_denial {
+        let denied: u64 = classes.iter().map(|c| c.grow_denied_budget).sum();
+        let recorded = report.classes.iter().any(|c| {
+            c.scaler
+                .last_trigger
+                .as_deref()
+                .is_some_and(|t| t.contains("budget"))
+        });
+        check(
+            "expect_budget_denial",
+            denied > 0 && recorded,
+            format!("{denied} budget denial(s); last_trigger records budget: {recorded}"),
+        );
+    }
+    if let Some(name) = &slo.expect_max_shards_reached {
+        let c = classes.iter().find(|c| c.name.eq_ignore_ascii_case(name));
+        let (pass, detail) = match c {
+            Some(c) => {
+                let cap = c.acfg.as_ref().map(|a| a.max_shards).unwrap_or(0);
+                (
+                    c.high_water == cap && cap > 0,
+                    format!("class '{}' high water {} vs ceiling {}", c.name, c.high_water, cap),
+                )
+            }
+            None => (false, format!("class '{name}' not found")),
+        };
+        check("expect_max_shards_reached", pass, detail);
+    }
+    if let Some(name) = &slo.expect_split_change {
+        let c = classes.iter().find(|c| c.name.eq_ignore_ascii_case(name));
+        let (pass, detail) = match c {
+            Some(c) => (
+                c.splits.len() >= 2,
+                format!(
+                    "class '{}' split trajectory {:?}",
+                    c.name,
+                    c.splits.iter().map(|&(_, s)| s).collect::<Vec<_>>()
+                ),
+            ),
+            None => (false, format!("class '{name}' not found")),
+        };
+        check("expect_split_change", pass, detail);
+    }
+    if let Some(floor) = slo.min_estimator_observations {
+        let obs: u64 = report
+            .classes
+            .iter()
+            .map(|c| c.planner.estimator_observations)
+            .sum();
+        check(
+            "min_estimator_observations",
+            obs >= floor,
+            format!("{obs} gate observation(s) vs floor {floor}"),
+        );
+    }
+    // Built-in: the bounds the scenario configured actually held.
+    if classes.iter().any(|c| c.acfg.is_some()) {
+        let mut pass = true;
+        let mut parts = Vec::new();
+        for c in classes.iter().filter(|c| c.acfg.is_some()) {
+            let a = c.acfg.as_ref().expect("filtered on is_some");
+            pass &= c.low_water >= a.min_shards && c.high_water <= a.max_shards;
+            parts.push(format!(
+                "{}: {}..{} within {}..={}",
+                c.name, c.low_water, c.high_water, a.min_shards, a.max_shards
+            ));
+        }
+        check("scaler_bounds", pass, parts.join("; "));
+    }
+    checks
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_json(
+    spec: &ScenarioSpec,
+    seed: u64,
+    classes: &[ClassState],
+    report: &FleetReport,
+    checks: &[SloCheck],
+    passed: bool,
+    windows: &[Json],
+    events_applied: usize,
+    wall_s: f64,
+) -> Json {
+    let all_lats: Vec<f64> = classes.iter().flat_map(|c| c.latencies.iter().copied()).collect();
+    let offered: u64 = classes.iter().map(|c| c.offered).sum();
+    let accepted: u64 = classes.iter().map(|c| c.accepted).sum();
+    let rejected: u64 = classes.iter().map(|c| c.rejected).sum();
+    let completed: u64 = classes.iter().map(|c| c.completed).sum();
+    let edge_exits: u64 = classes.iter().map(|c| c.edge_exits).sum();
+    let fallbacks: u64 = report.classes.iter().map(|c| c.aggregate.remote_fallbacks).sum();
+    let mean = if all_lats.is_empty() {
+        0.0
+    } else {
+        all_lats.iter().sum::<f64>() / all_lats.len() as f64
+    };
+    let max = all_lats.iter().copied().fold(0.0f64, f64::max);
+
+    let class_json: Vec<Json> = classes
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            let r = &report.classes[i];
+            let mut fields = vec![
+                ("name", Json::str(c.name.clone())),
+                ("offered", Json::num(c.offered as f64)),
+                ("accepted", Json::num(c.accepted as f64)),
+                ("rejected", Json::num(c.rejected as f64)),
+                ("completed", Json::num(c.completed as f64)),
+                ("edge_exits", Json::num(c.edge_exits as f64)),
+                ("remote_batches", Json::num(r.aggregate.remote_batches as f64)),
+                (
+                    "remote_fallbacks",
+                    Json::num(r.aggregate.remote_fallbacks as f64),
+                ),
+                ("p99_ms", Json::num(ms3(p_or_zero(&c.latencies, 99.0)))),
+                (
+                    "splits",
+                    Json::arr(
+                        c.splits
+                            .iter()
+                            .map(|&(t, s)| {
+                                Json::arr(vec![
+                                    Json::num((t * 1e3).round() / 1e3),
+                                    Json::num(s as f64),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "scaler",
+                    Json::obj(vec![
+                        ("enabled", Json::Bool(c.acfg.is_some())),
+                        (
+                            "min_shards",
+                            Json::num(c.acfg.as_ref().map(|a| a.min_shards).unwrap_or(0) as f64),
+                        ),
+                        (
+                            "max_shards",
+                            Json::num(c.acfg.as_ref().map(|a| a.max_shards).unwrap_or(0) as f64),
+                        ),
+                        ("final_shards", Json::num(c.twin.len() as f64)),
+                        ("high_water", Json::num(c.high_water as f64)),
+                        ("low_water", Json::num(c.low_water as f64)),
+                        ("scale_ups", Json::num(c.scale_ups as f64)),
+                        ("scale_downs", Json::num(c.scale_downs as f64)),
+                        ("grow_denied_cap", Json::num(c.grow_denied_cap as f64)),
+                        (
+                            "grow_denied_budget",
+                            Json::num(c.grow_denied_budget as f64),
+                        ),
+                        (
+                            "last_trigger",
+                            match &r.scaler.last_trigger {
+                                Some(t) => Json::str(t.clone()),
+                                None => Json::Null,
+                            },
+                        ),
+                    ]),
+                ),
+                (
+                    "estimator_observations",
+                    Json::num(r.planner.estimator_observations as f64),
+                ),
+            ];
+            if let Some(p) = r.planner.p_hat {
+                fields.push(("p_hat_final", Json::num((p * 1e6).round() / 1e6)));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+
+    Json::obj(vec![
+        ("bench", Json::str("scenario")),
+        ("scenario", Json::str(spec.name.clone())),
+        ("source", Json::str("measured")),
+        ("seed", Json::num(seed as f64)),
+        ("duration_s", Json::num(spec.duration_s)),
+        ("tick_ms", Json::num(spec.tick_ms)),
+        (
+            "slo",
+            Json::obj(vec![
+                ("pass", Json::Bool(passed)),
+                (
+                    "checks",
+                    Json::arr(
+                        checks
+                            .iter()
+                            .map(|c| {
+                                Json::obj(vec![
+                                    ("name", Json::str(c.name.clone())),
+                                    ("pass", Json::Bool(c.pass)),
+                                    ("detail", Json::str(c.detail.clone())),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "totals",
+            Json::obj(vec![
+                ("offered", Json::num(offered as f64)),
+                ("accepted", Json::num(accepted as f64)),
+                ("rejected", Json::num(rejected as f64)),
+                ("completed", Json::num(completed as f64)),
+                ("edge_exits", Json::num(edge_exits as f64)),
+                ("cloud_fallbacks", Json::num(fallbacks as f64)),
+                ("p50_ms", Json::num(ms3(p_or_zero(&all_lats, 50.0)))),
+                ("p99_ms", Json::num(ms3(p_or_zero(&all_lats, 99.0)))),
+                ("mean_ms", Json::num(ms3(mean))),
+                ("max_ms", Json::num(ms3(max))),
+            ]),
+        ),
+        ("classes", Json::arr(class_json)),
+        ("windows", Json::arr(windows.to_vec())),
+        ("events_applied", Json::num(events_applied as f64)),
+        // The single nondeterministic field: strip "wall" before
+        // comparing two same-seed runs for bit-identity.
+        (
+            "wall",
+            Json::obj(vec![("run_s", Json::num((wall_s * 1e3).round() / 1e3))]),
+        ),
+    ])
+}

@@ -1,0 +1,578 @@
+//! The scenario DSL: a `.toml` file describing a timed, fully
+//! deterministic traffic-and-faults script plus the SLO block the run
+//! is judged by.
+//!
+//! A scenario file is a *superset* of an ordinary config file. The
+//! fleet half — `[fleet]`, `[serve]`, `[branch]`, `[[link_class]]`, … —
+//! is read by [`Settings`] exactly as `branchyserve serve --config`
+//! would read it; the scenario-only tables are parsed here:
+//!
+//! - `[scenario]` — name, virtual duration, tick/window sizes, master
+//!   seed, and whether to stand up a real loopback cloud-stage server.
+//! - `[[workload]]` — one Poisson arrival process per link class, with
+//!   its initial rate and label mix.
+//! - `[[event]]` — the script: timed `kind = "..."` entries that bend
+//!   load curves, churn links, reassign traffic, toggle the cloud, or
+//!   drift the exit rate.
+//! - `[slo]` — pass/fail assertions evaluated over the finished run.
+//!
+//! Validation is front-loaded and loud: every rejection names the
+//! offending event index, the value it saw, and what would have been
+//! accepted, so a scenario that parses is a scenario that can run.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::json::Json;
+use crate::config::settings::Settings;
+use crate::config::toml;
+
+/// A parsed, validated scenario: the script plus the fleet settings it
+/// runs against.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Scenario name; becomes `BENCH_scenario_<name>.json`, so it is
+    /// restricted to `[a-z0-9_-]`.
+    pub name: String,
+    /// Virtual run length, seconds.
+    pub duration_s: f64,
+    /// Virtual tick, milliseconds. Arrivals are generated per tick and
+    /// the pipeline is quiesced at every tick boundary.
+    pub tick_ms: f64,
+    /// Metrics window, seconds (one `windows[]` row per window).
+    pub window_s: f64,
+    /// Master seed; `scenario run --seed` overrides it.
+    pub seed: u64,
+    /// Start a real loopback cloud-stage server and point every class
+    /// at it. Required by `cloud_down` / `cloud_up` events — a brownout
+    /// of an in-process cloud is not a thing.
+    pub loopback_cloud: bool,
+    pub workloads: Vec<WorkloadSpec>,
+    /// The script, ordered by `at_s` (validated non-decreasing).
+    pub events: Vec<Event>,
+    pub slo: SloSpec,
+    /// The fleet half of the file, overlaid on [`Settings::default`].
+    pub settings: Settings,
+}
+
+/// One `[[workload]]` entry: the arrival process driving one class.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// `[[link_class]]` name this process submits to.
+    pub class: String,
+    /// Initial Poisson arrival rate, requests/second.
+    pub rate_rps: f64,
+    /// Initial fraction of class-1 (stripes) images, 0..=1.
+    pub class1_fraction: f64,
+}
+
+/// One `[[event]]` entry: something happens at `at_s`.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub at_s: f64,
+    pub kind: EventKind,
+}
+
+/// Everything the script can do. The `kind = "..."` strings are the
+/// snake_case names of these variants.
+#[derive(Debug, Clone)]
+pub enum EventKind {
+    /// Step a class's arrival rate.
+    SetRate { class: String, rate_rps: f64 },
+    /// Ramp a class's rate linearly from its current value to
+    /// `rate_rps` over `over_s` seconds (diurnal curves are two of
+    /// these back to back).
+    RampRate {
+        class: String,
+        rate_rps: f64,
+        over_s: f64,
+    },
+    /// Re-tune a class's uplink mid-stream: the virtual link changes
+    /// and the fleet re-solves the class's partition at the new rate.
+    SetBandwidth { class: String, mbps: f64 },
+    /// Reroute `fraction` of a class's *future* arrivals to another
+    /// class (mid-stream class reassignment).
+    Reassign {
+        from: String,
+        to: String,
+        fraction: f64,
+    },
+    /// Begin a cloud brownout: every remote engine refuses instantly.
+    CloudDown,
+    /// End the brownout.
+    CloudUp,
+    /// Drift the label mix of a class's workload generator — the lever
+    /// that moves the *observed* exit rate under online estimation.
+    SetExitBias { class: String, class1_fraction: f64 },
+}
+
+impl EventKind {
+    /// The `kind = "..."` string of this variant.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::SetRate { .. } => "set_rate",
+            EventKind::RampRate { .. } => "ramp_rate",
+            EventKind::SetBandwidth { .. } => "set_bandwidth",
+            EventKind::Reassign { .. } => "reassign",
+            EventKind::CloudDown => "cloud_down",
+            EventKind::CloudUp => "cloud_up",
+            EventKind::SetExitBias { .. } => "set_exit_bias",
+        }
+    }
+}
+
+const KNOWN_KINDS: &str =
+    "set_rate, ramp_rate, set_bandwidth, reassign, cloud_down, cloud_up, set_exit_bias";
+
+/// `[slo]`: the assertions a finished run is judged by. Everything is
+/// optional; an empty block only checks the built-in ledger invariants.
+#[derive(Debug, Clone, Default)]
+pub struct SloSpec {
+    /// Virtual p99 latency ceiling, milliseconds.
+    pub p99_ms: Option<f64>,
+    /// Ceiling on rejected/offered over the whole run, 0..=1.
+    pub max_rejection_rate: Option<f64>,
+    /// Require the real ledger to balance: no shed, no failure, every
+    /// accepted request answered. Defaults to true.
+    pub zero_drops: bool,
+    /// Floor on completed requests over the whole run.
+    pub min_completed: Option<u64>,
+    /// Require at least one admission rejection (overload scenarios
+    /// must actually overload).
+    pub expect_rejections: bool,
+    /// Require at least one remote→local cloud fallback (brownout
+    /// scenarios must actually brown out).
+    pub expect_fallbacks: bool,
+    /// Require a grow to have been denied by `fleet.max_total_shards`,
+    /// with the denial recorded as a class's `last_trigger`.
+    pub expect_budget_denial: bool,
+    /// Require this class to have hit its own `max_shards` ceiling.
+    pub expect_max_shards_reached: Option<String>,
+    /// Require this class's split to have moved at least once.
+    pub expect_split_change: Option<String>,
+    /// Floor on branch-gate observations consumed by the exit-rate
+    /// estimators (summed over classes).
+    pub min_estimator_observations: Option<u64>,
+}
+
+// ------------------------------------------------------------ helpers
+
+fn req(t: &Json, key: &str, at: &str) -> Result<Json> {
+    t.get(key)
+        .cloned()
+        .ok_or_else(|| anyhow!("{at}: missing required key '{key}'"))
+}
+
+fn req_f64(t: &Json, key: &str, at: &str) -> Result<f64> {
+    req(t, key, at)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("{at}: '{key}' must be a number"))
+}
+
+fn req_str(t: &Json, key: &str, at: &str) -> Result<String> {
+    Ok(req(t, key, at)?
+        .as_str()
+        .ok_or_else(|| anyhow!("{at}: '{key}' must be a string"))?
+        .to_string())
+}
+
+fn opt_f64(t: &Json, key: &str, at: &str) -> Result<Option<f64>> {
+    match t.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow!("{at}: '{key}' must be a number")),
+    }
+}
+
+fn opt_u64(t: &Json, key: &str, at: &str) -> Result<Option<u64>> {
+    match opt_f64(t, key, at)? {
+        None => Ok(None),
+        Some(v) if v >= 0.0 && v.fract() == 0.0 => Ok(Some(v as u64)),
+        Some(v) => bail!("{at}: '{key}' must be a non-negative integer, got {v}"),
+    }
+}
+
+fn opt_bool(t: &Json, key: &str, at: &str) -> Result<Option<bool>> {
+    match t.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_bool()
+            .map(Some)
+            .ok_or_else(|| anyhow!("{at}: '{key}' must be a boolean")),
+    }
+}
+
+fn opt_str(t: &Json, key: &str, at: &str) -> Result<Option<String>> {
+    match t.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .ok_or_else(|| anyhow!("{at}: '{key}' must be a string")),
+    }
+}
+
+// ------------------------------------------------------------ parsing
+
+impl ScenarioSpec {
+    /// Read and fully validate a scenario file.
+    pub fn load(path: &Path) -> Result<ScenarioSpec> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading scenario file {}", path.display()))?;
+        ScenarioSpec::parse_str(&text)
+            .with_context(|| format!("in scenario file {}", path.display()))
+    }
+
+    /// Parse and fully validate scenario TOML text.
+    pub fn parse_str(text: &str) -> Result<ScenarioSpec> {
+        let doc = toml::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut settings = Settings::default();
+        settings.apply(&doc)?;
+        settings.validate()?;
+        ScenarioSpec::from_doc(&doc, settings)
+    }
+
+    fn from_doc(doc: &Json, settings: Settings) -> Result<ScenarioSpec> {
+        let sc = doc
+            .get("scenario")
+            .ok_or_else(|| anyhow!("missing [scenario] table"))?;
+        let name = req_str(sc, "name", "[scenario]")?;
+        let duration_s = req_f64(sc, "duration_s", "[scenario]")?;
+        let tick_ms = opt_f64(sc, "tick_ms", "[scenario]")?.unwrap_or(20.0);
+        let window_s = opt_f64(sc, "window_s", "[scenario]")?.unwrap_or(1.0);
+        let seed = opt_u64(sc, "seed", "[scenario]")?.unwrap_or(42);
+        let loopback_cloud = opt_bool(sc, "loopback_cloud", "[scenario]")?.unwrap_or(false);
+
+        let workloads = match doc.get("workload") {
+            None => Vec::new(),
+            Some(w) => {
+                let arr = w
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("[[workload]] must be an array of tables"))?;
+                let mut out = Vec::with_capacity(arr.len());
+                for (i, t) in arr.iter().enumerate() {
+                    let at = format!("workload[{i}]");
+                    out.push(WorkloadSpec {
+                        class: req_str(t, "class", &at)?,
+                        rate_rps: req_f64(t, "rate_rps", &at)?,
+                        class1_fraction: opt_f64(t, "class1_fraction", &at)?.unwrap_or(0.5),
+                    });
+                }
+                out
+            }
+        };
+
+        let events = match doc.get("event") {
+            None => Vec::new(),
+            Some(e) => {
+                let arr = e
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("[[event]] must be an array of tables"))?;
+                let mut out = Vec::with_capacity(arr.len());
+                for (i, t) in arr.iter().enumerate() {
+                    out.push(parse_event(i, t)?);
+                }
+                out
+            }
+        };
+
+        let slo = match doc.get("slo") {
+            None => SloSpec {
+                zero_drops: true,
+                ..SloSpec::default()
+            },
+            Some(t) => SloSpec {
+                p99_ms: opt_f64(t, "p99_ms", "[slo]")?,
+                max_rejection_rate: opt_f64(t, "max_rejection_rate", "[slo]")?,
+                zero_drops: opt_bool(t, "zero_drops", "[slo]")?.unwrap_or(true),
+                min_completed: opt_u64(t, "min_completed", "[slo]")?,
+                expect_rejections: opt_bool(t, "expect_rejections", "[slo]")?.unwrap_or(false),
+                expect_fallbacks: opt_bool(t, "expect_fallbacks", "[slo]")?.unwrap_or(false),
+                expect_budget_denial: opt_bool(t, "expect_budget_denial", "[slo]")?
+                    .unwrap_or(false),
+                expect_max_shards_reached: opt_str(t, "expect_max_shards_reached", "[slo]")?,
+                expect_split_change: opt_str(t, "expect_split_change", "[slo]")?,
+                min_estimator_observations: opt_u64(t, "min_estimator_observations", "[slo]")?,
+            },
+        };
+
+        let spec = ScenarioSpec {
+            name,
+            duration_s,
+            tick_ms,
+            window_s,
+            seed,
+            loopback_cloud,
+            workloads,
+            events,
+            slo,
+            settings,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// The class names a scenario may reference: the `[[link_class]]`
+    /// entries, in declaration order (= [`crate::fleet::LinkClass`]
+    /// index order).
+    pub fn class_names(&self) -> Vec<&str> {
+        self.settings
+            .link_classes
+            .iter()
+            .map(|c| c.name.as_str())
+            .collect()
+    }
+
+    fn check_class(&self, name: &str, at: &str) -> Result<()> {
+        if self
+            .settings
+            .link_classes
+            .iter()
+            .any(|c| c.name.eq_ignore_ascii_case(name))
+        {
+            return Ok(());
+        }
+        bail!(
+            "{at}: unknown link class '{name}' (configured classes: {})",
+            self.class_names().join(", ")
+        );
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.name.is_empty()
+            || !self
+                .name
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '-')
+        {
+            bail!(
+                "[scenario]: name '{}' must be non-empty [a-z0-9_-] \
+                 (it names BENCH_scenario_<name>.json)",
+                self.name
+            );
+        }
+        if !(self.duration_s.is_finite() && self.duration_s > 0.0) {
+            bail!("[scenario]: duration_s must be positive, got {}", self.duration_s);
+        }
+        if !(self.tick_ms.is_finite() && self.tick_ms > 0.0) {
+            bail!("[scenario]: tick_ms must be positive, got {}", self.tick_ms);
+        }
+        if !(self.window_s.is_finite() && self.window_s * 1e3 >= self.tick_ms) {
+            bail!(
+                "[scenario]: window_s ({}) must be at least one tick ({} ms)",
+                self.window_s,
+                self.tick_ms
+            );
+        }
+        if self.settings.link_classes.is_empty() {
+            bail!(
+                "a scenario needs at least one [[link_class]] entry — the default \
+                 single-class fallback is for `serve`, not for scripted runs"
+            );
+        }
+        if self.workloads.is_empty() {
+            bail!("a scenario needs at least one [[workload]] entry");
+        }
+        for (i, w) in self.workloads.iter().enumerate() {
+            let at = format!("workload[{i}]");
+            self.check_class(&w.class, &at)?;
+            if !(w.rate_rps.is_finite() && w.rate_rps >= 0.0) {
+                bail!("{at}: rate_rps must be >= 0, got {}", w.rate_rps);
+            }
+            if !(0.0..=1.0).contains(&w.class1_fraction) {
+                bail!("{at}: class1_fraction must be in 0..=1, got {}", w.class1_fraction);
+            }
+            if self.workloads[..i]
+                .iter()
+                .any(|p| p.class.eq_ignore_ascii_case(&w.class))
+            {
+                bail!("{at}: duplicate workload for class '{}'", w.class);
+            }
+        }
+        self.validate_events()?;
+        self.validate_slo()
+    }
+
+    fn validate_events(&self) -> Result<()> {
+        let mut prev_at = 0.0f64;
+        // Some(t) while a brownout opened at `t` is still unclosed.
+        let mut down_since: Option<f64> = None;
+        for (i, ev) in self.events.iter().enumerate() {
+            let at = format!("event[{i}] ({})", ev.kind.name());
+            if !(ev.at_s.is_finite() && ev.at_s >= 0.0 && ev.at_s <= self.duration_s) {
+                bail!(
+                    "{at}: at_s = {} outside the scenario's 0..={} s",
+                    ev.at_s,
+                    self.duration_s
+                );
+            }
+            if i > 0 && ev.at_s < prev_at {
+                bail!(
+                    "{at}: out of order — at_s = {} but event[{}] is at {} \
+                     (events must be sorted by at_s)",
+                    ev.at_s,
+                    i - 1,
+                    prev_at
+                );
+            }
+            prev_at = ev.at_s;
+            match &ev.kind {
+                EventKind::SetRate { class, rate_rps } => {
+                    self.check_class(class, &at)?;
+                    if !(rate_rps.is_finite() && *rate_rps >= 0.0) {
+                        bail!("{at}: rate_rps must be >= 0, got {rate_rps}");
+                    }
+                }
+                EventKind::RampRate {
+                    class,
+                    rate_rps,
+                    over_s,
+                } => {
+                    self.check_class(class, &at)?;
+                    if !(rate_rps.is_finite() && *rate_rps >= 0.0) {
+                        bail!("{at}: rate_rps must be >= 0, got {rate_rps}");
+                    }
+                    if !(over_s.is_finite() && *over_s > 0.0) {
+                        bail!("{at}: over_s must be positive, got {over_s}");
+                    }
+                }
+                EventKind::SetBandwidth { class, mbps } => {
+                    self.check_class(class, &at)?;
+                    if !(mbps.is_finite() && *mbps > 0.0) {
+                        bail!("{at}: mbps must be positive, got {mbps}");
+                    }
+                }
+                EventKind::Reassign { from, to, fraction } => {
+                    self.check_class(from, &at)?;
+                    self.check_class(to, &at)?;
+                    if from.eq_ignore_ascii_case(to) {
+                        bail!("{at}: cannot reassign class '{from}' to itself");
+                    }
+                    if !(0.0..=1.0).contains(fraction) {
+                        bail!("{at}: fraction must be in 0..=1, got {fraction}");
+                    }
+                }
+                EventKind::CloudDown => {
+                    if !self.loopback_cloud {
+                        bail!(
+                            "{at}: cloud_down requires [scenario] loopback_cloud = true \
+                             (an in-process cloud cannot brown out)"
+                        );
+                    }
+                    if let Some(since) = down_since {
+                        bail!(
+                            "{at}: overlapping brownout windows — cloud already down \
+                             since the cloud_down at {since} s (close it with cloud_up first)"
+                        );
+                    }
+                    down_since = Some(ev.at_s);
+                }
+                EventKind::CloudUp => {
+                    if !self.loopback_cloud {
+                        bail!("{at}: cloud_up requires [scenario] loopback_cloud = true");
+                    }
+                    if down_since.take().is_none() {
+                        bail!("{at}: cloud_up without a preceding cloud_down — the cloud is up");
+                    }
+                }
+                EventKind::SetExitBias {
+                    class,
+                    class1_fraction,
+                } => {
+                    self.check_class(class, &at)?;
+                    if !(0.0..=1.0).contains(class1_fraction) {
+                        bail!("{at}: class1_fraction must be in 0..=1, got {class1_fraction}");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_slo(&self) -> Result<()> {
+        let s = &self.slo;
+        if let Some(p) = s.p99_ms {
+            if !(p.is_finite() && p > 0.0) {
+                bail!("[slo]: p99_ms must be positive, got {p}");
+            }
+        }
+        if let Some(r) = s.max_rejection_rate {
+            if !(0.0..=1.0).contains(&r) {
+                bail!("[slo]: max_rejection_rate must be in 0..=1, got {r}");
+            }
+        }
+        if let Some(c) = &s.expect_max_shards_reached {
+            self.check_class(c, "[slo] expect_max_shards_reached")?;
+            if !self.settings.fleet.autoscale {
+                bail!(
+                    "[slo]: expect_max_shards_reached needs [fleet] autoscale = true — \
+                     a fixed fleet never moves toward its ceiling"
+                );
+            }
+        }
+        if let Some(c) = &s.expect_split_change {
+            self.check_class(c, "[slo] expect_split_change")?;
+        }
+        if s.expect_budget_denial {
+            if self.settings.fleet.max_total_shards.is_none() {
+                bail!(
+                    "[slo]: expect_budget_denial needs [fleet] max_total_shards — \
+                     without a budget nothing can be denied by it"
+                );
+            }
+            if !self.settings.fleet.autoscale {
+                bail!("[slo]: expect_budget_denial needs [fleet] autoscale = true");
+            }
+        }
+        if s.expect_fallbacks && !self.loopback_cloud {
+            bail!(
+                "[slo]: expect_fallbacks needs [scenario] loopback_cloud = true — \
+                 an in-process cloud has no remote path to fall back from"
+            );
+        }
+        if s.min_estimator_observations.is_some() && !self.settings.fleet.online_estimation {
+            bail!(
+                "[slo]: min_estimator_observations needs [fleet] online_estimation = true"
+            );
+        }
+        Ok(())
+    }
+}
+
+fn parse_event(i: usize, t: &Json) -> Result<Event> {
+    let at = format!("event[{i}]");
+    let at_s = req_f64(t, "at_s", &at)?;
+    let kind_s = req_str(t, "kind", &at)?;
+    let kind = match kind_s.as_str() {
+        "set_rate" => EventKind::SetRate {
+            class: req_str(t, "class", &at)?,
+            rate_rps: req_f64(t, "rate_rps", &at)?,
+        },
+        "ramp_rate" => EventKind::RampRate {
+            class: req_str(t, "class", &at)?,
+            rate_rps: req_f64(t, "rate_rps", &at)?,
+            over_s: req_f64(t, "over_s", &at)?,
+        },
+        "set_bandwidth" => EventKind::SetBandwidth {
+            class: req_str(t, "class", &at)?,
+            mbps: req_f64(t, "mbps", &at)?,
+        },
+        "reassign" => EventKind::Reassign {
+            from: req_str(t, "from", &at)?,
+            to: req_str(t, "to", &at)?,
+            fraction: req_f64(t, "fraction", &at)?,
+        },
+        "cloud_down" => EventKind::CloudDown,
+        "cloud_up" => EventKind::CloudUp,
+        "set_exit_bias" => EventKind::SetExitBias {
+            class: req_str(t, "class", &at)?,
+            class1_fraction: req_f64(t, "class1_fraction", &at)?,
+        },
+        other => bail!("{at}: unknown event kind '{other}' (known kinds: {KNOWN_KINDS})"),
+    };
+    Ok(Event { at_s, kind })
+}

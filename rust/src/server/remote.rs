@@ -171,6 +171,13 @@ pub struct RemoteCloudStats {
 
 pub struct RemoteCloudEngine {
     cfg: RemoteCloudConfig,
+    /// Administrative availability switch (default on). Off = every
+    /// call fails immediately *without* touching the backoff/breaker
+    /// or connection state, so flipping it back restores the wire path
+    /// on the very next call. This is how the scenario harness scripts
+    /// cloud brownout/outage windows deterministically — real network
+    /// failure handling (backoff, reconnect) stays untouched.
+    available: AtomicBool,
     pool: Mutex<Vec<Arc<Conn>>>,
     inflight: AtomicUsize,
     next_seq: AtomicU32,
@@ -206,6 +213,7 @@ impl RemoteCloudEngine {
         cfg.pool_capacity = cfg.pool_capacity.max(1);
         RemoteCloudEngine {
             cfg,
+            available: AtomicBool::new(true),
             pool: Mutex::new(Vec::new()),
             inflight: AtomicUsize::new(0),
             next_seq: AtomicU32::new(1),
@@ -224,6 +232,20 @@ impl RemoteCloudEngine {
 
     pub fn addr(&self) -> &str {
         &self.cfg.addr
+    }
+
+    /// Administratively mark the endpoint up/down (see the `available`
+    /// field). Down = instant failure on every call, so cloud workers
+    /// fall back to their local engines; up = the wire path is live
+    /// again immediately (no backoff to age out).
+    pub fn set_available(&self, up: bool) {
+        self.available.store(up, Ordering::Relaxed);
+    }
+
+    /// Whether the endpoint is administratively up (it may still be
+    /// unreachable — this switch is scripted, not probed).
+    pub fn is_available(&self) -> bool {
+        self.available.load(Ordering::Relaxed)
     }
 
     /// The wire encoding this engine ships activations in.
@@ -294,6 +316,15 @@ impl RemoteCloudEngine {
         branch_state: u8,
         activation: &HostTensor,
     ) -> Result<PartialOutput> {
+        if !self.is_available() {
+            // Before any counter or backoff bookkeeping: an
+            // administrative outage is scripted, not observed, and must
+            // leave the failure-handling state exactly as it found it.
+            bail!(
+                "cloud backend {} administratively unavailable",
+                self.cfg.addr
+            );
+        }
         if let Some(remaining) = self.backoff_remaining() {
             self.fast_fails.fetch_add(1, Ordering::Relaxed);
             bail!(

@@ -12,18 +12,31 @@ pub const CHANNELS: usize = 3;
 
 pub struct ImageSource {
     rng: Pcg32,
+    /// Probability a sample is class 1 (stripes). 0.5 mirrors
+    /// `data.py`; the scenario harness drifts it mid-run to shift the
+    /// observed exit rate (stripes exit the side branch far more often
+    /// than blobs once the gate is trained on them).
+    class1_fraction: f64,
 }
 
 impl ImageSource {
     pub fn new(seed: u64) -> ImageSource {
         ImageSource {
             rng: Pcg32::seeded(seed),
+            class1_fraction: 0.5,
         }
+    }
+
+    /// Change the class mix mid-stream. The label draw consumes one RNG
+    /// draw whatever the fraction, so two sources with the same seed
+    /// and the same *schedule* of `set_mix` calls stay bit-identical.
+    pub fn set_mix(&mut self, class1_fraction: f64) {
+        self.class1_fraction = class1_fraction.clamp(0.0, 1.0);
     }
 
     /// One labeled sample: (CHW tensor, class).
     pub fn sample(&mut self) -> (HostTensor, usize) {
-        let label = self.rng.bool(0.5) as usize;
+        let label = self.rng.bool(self.class1_fraction) as usize;
         let base = if label == 1 {
             self.stripes()
         } else {
@@ -114,6 +127,23 @@ mod tests {
         assert_eq!(xa, xb);
         assert_eq!(ya, yb);
         assert_eq!(xa.shape(), &[3, 32, 32]);
+    }
+
+    #[test]
+    fn mix_shifts_labels_without_breaking_determinism() {
+        let mut a = ImageSource::new(9);
+        let mut b = ImageSource::new(9);
+        a.set_mix(1.0);
+        b.set_mix(1.0);
+        let (xa, ya) = a.sample();
+        let (xb, yb) = b.sample();
+        assert_eq!((xa, ya), (xb, yb));
+        // Extreme fractions pin the label entirely.
+        let mut src = ImageSource::new(3);
+        src.set_mix(1.0);
+        assert!(src.batch(16).1.iter().all(|&y| y == 1));
+        src.set_mix(0.0);
+        assert!(src.batch(16).1.iter().all(|&y| y == 0));
     }
 
     #[test]

@@ -1,0 +1,135 @@
+//! The five canonical scenarios under `scenarios/` replayed end to end
+//! against the real fleet: every SLO check passes, and two runs with
+//! the same seed emit bit-identical benchmark JSON once the only
+//! intentionally nondeterministic field (`"wall"`) is stripped.
+
+use std::path::{Path, PathBuf};
+
+use branchyserve::config::json::Json;
+use branchyserve::scenario::{self, ScenarioOutcome, ScenarioSpec};
+
+fn scenario_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("scenarios")
+        .join(format!("{name}.toml"))
+}
+
+/// Serialize a run's JSON with the `"wall"` object removed — the
+/// determinism contract is bit-identity over everything else.
+fn deterministic_form(json: &Json) -> String {
+    match json.clone() {
+        Json::Obj(mut map) => {
+            map.remove("wall");
+            Json::Obj(map).to_string_pretty()
+        }
+        other => panic!("scenario JSON root must be an object, got {other:?}"),
+    }
+}
+
+/// Run a canonical scenario twice with its file seed: assert every SLO
+/// check passed and both runs agree bitwise, then hand back the first
+/// outcome for scenario-specific assertions.
+fn run_canonical(name: &str) -> ScenarioOutcome {
+    let spec = ScenarioSpec::load(&scenario_path(name)).unwrap();
+    let first = scenario::run(&spec, None).unwrap();
+    for c in &first.checks {
+        assert!(c.pass, "{name}: SLO check '{}' failed: {}", c.name, c.detail);
+    }
+    assert!(first.passed);
+
+    let second = scenario::run(&spec, None).unwrap();
+    assert_eq!(
+        deterministic_form(&first.json),
+        deterministic_form(&second.json),
+        "{name}: two same-seed runs must be bit-identical modulo \"wall\""
+    );
+    first
+}
+
+fn total(outcome: &ScenarioOutcome, key: &str) -> f64 {
+    outcome
+        .json
+        .get("totals")
+        .and_then(|t| t.get(key))
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("missing totals.{key}"))
+}
+
+#[test]
+fn diurnal_ramps_deterministically_and_records_the_budget_denial() {
+    let o = run_canonical("diurnal");
+    // The peak must actually exercise the fleet, not tiptoe around it.
+    assert!(total(&o, "offered") > 10_000.0);
+    assert_eq!(total(&o, "accepted"), total(&o, "completed"));
+}
+
+#[test]
+fn flash_crowd_sheds_load_at_the_class_ceiling() {
+    let o = run_canonical("flash_crowd");
+    assert!(total(&o, "rejected") > 0.0, "a flash crowd must overload admission");
+    // Shed or not, the real ledger balances.
+    assert_eq!(total(&o, "accepted"), total(&o, "completed"));
+}
+
+#[test]
+fn link_churn_moves_the_split_and_back() {
+    let o = run_canonical("link_churn");
+    let splits: Vec<f64> = o
+        .json
+        .get("classes")
+        .and_then(Json::as_arr)
+        .and_then(|cs| cs[0].get("splits"))
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .map(|pair| {
+                    pair.as_arr()
+                        .and_then(|p| p[1].as_f64())
+                        .expect("split entries are [t, split] pairs")
+                })
+                .collect()
+        })
+        .expect("classes[0].splits");
+    assert!(
+        splits.len() >= 3,
+        "expected edge -> cloud -> edge split trajectory, got {splits:?}"
+    );
+}
+
+#[test]
+fn cloud_brownout_falls_back_without_dropping_anything() {
+    let o = run_canonical("cloud_brownout");
+    assert!(
+        total(&o, "cloud_fallbacks") > 0.0,
+        "a brownout with no remote->local fallbacks never browned out"
+    );
+    assert_eq!(total(&o, "rejected"), 0.0);
+    assert_eq!(total(&o, "offered"), total(&o, "completed"));
+}
+
+#[test]
+fn exit_drift_feeds_the_estimator() {
+    let o = run_canonical("exit_drift");
+    let obs = o
+        .json
+        .get("classes")
+        .and_then(Json::as_arr)
+        .and_then(|cs| cs[0].get("estimator_observations"))
+        .and_then(Json::as_f64)
+        .expect("classes[0].estimator_observations");
+    assert!(obs >= 200.0, "estimator consumed only {obs} gate observations");
+}
+
+#[test]
+fn a_different_seed_is_a_different_run() {
+    let spec = ScenarioSpec::load(&scenario_path("link_churn")).unwrap();
+    let a = scenario::run(&spec, Some(1)).unwrap();
+    let b = scenario::run(&spec, Some(2)).unwrap();
+    assert_eq!(a.seed, 1);
+    assert_eq!(b.seed, 2);
+    assert_ne!(
+        deterministic_form(&a.json),
+        deterministic_form(&b.json),
+        "different seeds must draw different arrival streams"
+    );
+}

@@ -1,0 +1,461 @@
+//! Scenario DSL parsing and validation: well-formed files parse into
+//! the expected spec, and every malformed shape is rejected with an
+//! error that names the offending entry.
+
+use branchyserve::scenario::{EventKind, ScenarioSpec};
+
+/// A minimal valid scenario; tests splice extra tables onto it.
+const BASE: &str = r#"
+[scenario]
+name = "unit"
+duration_s = 10.0
+
+[[link_class]]
+name = "4g"
+
+[[workload]]
+class = "4g"
+rate_rps = 5.0
+"#;
+
+fn parse(extra: &str) -> anyhow::Result<ScenarioSpec> {
+    ScenarioSpec::parse_str(&format!("{BASE}{extra}"))
+}
+
+fn err_of(extra: &str) -> String {
+    match parse(extra) {
+        Ok(_) => panic!("expected a validation error, scenario parsed:\n{extra}"),
+        Err(e) => format!("{e:#}"),
+    }
+}
+
+#[test]
+fn minimal_scenario_parses_with_defaults() {
+    let spec = parse("").unwrap();
+    assert_eq!(spec.name, "unit");
+    assert_eq!(spec.duration_s, 10.0);
+    assert_eq!(spec.tick_ms, 20.0);
+    assert_eq!(spec.window_s, 1.0);
+    assert_eq!(spec.seed, 42);
+    assert!(!spec.loopback_cloud);
+    assert_eq!(spec.workloads.len(), 1);
+    assert_eq!(spec.workloads[0].class1_fraction, 0.5);
+    assert!(spec.events.is_empty());
+    // The default SLO still checks the ledger.
+    assert!(spec.slo.zero_drops);
+    assert!(spec.slo.p99_ms.is_none());
+}
+
+#[test]
+fn events_parse_into_kinds_in_order() {
+    let spec = parse(
+        r#"
+[[event]]
+at_s = 1.0
+kind = "set_rate"
+class = "4g"
+rate_rps = 50.0
+
+[[event]]
+at_s = 2.0
+kind = "ramp_rate"
+class = "4g"
+rate_rps = 10.0
+over_s = 3.0
+
+[[event]]
+at_s = 6.0
+kind = "set_bandwidth"
+class = "4g"
+mbps = 0.8
+
+[[event]]
+at_s = 7.0
+kind = "set_exit_bias"
+class = "4g"
+class1_fraction = 0.9
+"#,
+    )
+    .unwrap();
+    let kinds: Vec<&str> = spec.events.iter().map(|e| e.kind.name()).collect();
+    assert_eq!(kinds, ["set_rate", "ramp_rate", "set_bandwidth", "set_exit_bias"]);
+    assert!(matches!(
+        &spec.events[1].kind,
+        EventKind::RampRate { over_s, .. } if *over_s == 3.0
+    ));
+}
+
+#[test]
+fn unknown_event_kind_is_named_with_the_known_list() {
+    let e = err_of(
+        r#"
+[[event]]
+at_s = 1.0
+kind = "set_weather"
+"#,
+    );
+    assert!(e.contains("event[0]") && e.contains("set_weather"), "{e}");
+    assert!(e.contains("known kinds") && e.contains("ramp_rate"), "{e}");
+}
+
+#[test]
+fn event_missing_required_key_is_rejected() {
+    let e = err_of(
+        r#"
+[[event]]
+at_s = 1.0
+kind = "set_rate"
+class = "4g"
+"#,
+    );
+    assert!(e.contains("event[0]") && e.contains("rate_rps"), "{e}");
+}
+
+#[test]
+fn out_of_order_timestamps_are_rejected() {
+    let e = err_of(
+        r#"
+[[event]]
+at_s = 5.0
+kind = "set_rate"
+class = "4g"
+rate_rps = 50.0
+
+[[event]]
+at_s = 2.0
+kind = "set_rate"
+class = "4g"
+rate_rps = 10.0
+"#,
+    );
+    assert!(e.contains("event[1]") && e.contains("out of order"), "{e}");
+}
+
+#[test]
+fn event_beyond_duration_is_rejected() {
+    let e = err_of(
+        r#"
+[[event]]
+at_s = 11.0
+kind = "set_rate"
+class = "4g"
+rate_rps = 1.0
+"#,
+    );
+    assert!(e.contains("outside") && e.contains("10"), "{e}");
+}
+
+#[test]
+fn unknown_class_names_are_rejected_everywhere() {
+    // In an event...
+    let e = err_of(
+        r#"
+[[event]]
+at_s = 1.0
+kind = "set_rate"
+class = "5g"
+rate_rps = 1.0
+"#,
+    );
+    assert!(e.contains("unknown link class '5g'"), "{e}");
+    assert!(e.contains("4g"), "should list configured classes: {e}");
+
+    // ...in a workload...
+    let e = ScenarioSpec::parse_str(
+        r#"
+[scenario]
+name = "unit"
+duration_s = 10.0
+
+[[link_class]]
+name = "4g"
+
+[[workload]]
+class = "lte"
+rate_rps = 5.0
+"#,
+    )
+    .unwrap_err();
+    assert!(format!("{e:#}").contains("unknown link class 'lte'"), "{e:#}");
+
+    // ...and in the SLO block.
+    let e = err_of(
+        r#"
+[slo]
+expect_split_change = "5g"
+"#,
+    );
+    assert!(e.contains("expect_split_change") && e.contains("5g"), "{e}");
+}
+
+#[test]
+fn reassign_to_self_is_rejected() {
+    let e = err_of(
+        r#"
+[[event]]
+at_s = 1.0
+kind = "reassign"
+from = "4g"
+to = "4g"
+fraction = 0.5
+"#,
+    );
+    assert!(e.contains("itself"), "{e}");
+}
+
+#[test]
+fn cloud_events_require_loopback_cloud() {
+    let e = err_of(
+        r#"
+[[event]]
+at_s = 1.0
+kind = "cloud_down"
+"#,
+    );
+    assert!(e.contains("loopback_cloud"), "{e}");
+}
+
+#[test]
+fn overlapping_brownout_windows_are_rejected() {
+    let e = ScenarioSpec::parse_str(
+        r#"
+[scenario]
+name = "unit"
+duration_s = 10.0
+loopback_cloud = true
+
+[[link_class]]
+name = "4g"
+
+[[workload]]
+class = "4g"
+rate_rps = 5.0
+
+[[event]]
+at_s = 1.0
+kind = "cloud_down"
+
+[[event]]
+at_s = 2.0
+kind = "cloud_down"
+"#,
+    )
+    .unwrap_err();
+    let e = format!("{e:#}");
+    assert!(e.contains("overlapping brownout"), "{e}");
+    assert!(e.contains("1 s"), "should name when the open window began: {e}");
+}
+
+#[test]
+fn cloud_up_without_a_brownout_is_rejected() {
+    let e = ScenarioSpec::parse_str(
+        r#"
+[scenario]
+name = "unit"
+duration_s = 10.0
+loopback_cloud = true
+
+[[link_class]]
+name = "4g"
+
+[[workload]]
+class = "4g"
+rate_rps = 5.0
+
+[[event]]
+at_s = 1.0
+kind = "cloud_up"
+"#,
+    )
+    .unwrap_err();
+    assert!(format!("{e:#}").contains("without a preceding cloud_down"), "{e:#}");
+}
+
+#[test]
+fn a_closed_brownout_can_reopen() {
+    let spec = ScenarioSpec::parse_str(
+        r#"
+[scenario]
+name = "unit"
+duration_s = 10.0
+loopback_cloud = true
+
+[[link_class]]
+name = "4g"
+
+[[workload]]
+class = "4g"
+rate_rps = 5.0
+
+[[event]]
+at_s = 1.0
+kind = "cloud_down"
+
+[[event]]
+at_s = 2.0
+kind = "cloud_up"
+
+[[event]]
+at_s = 3.0
+kind = "cloud_down"
+"#,
+    )
+    .unwrap();
+    assert_eq!(spec.events.len(), 3);
+}
+
+#[test]
+fn duplicate_workloads_are_rejected() {
+    let e = err_of(
+        r#"
+[[workload]]
+class = "4g"
+rate_rps = 1.0
+"#,
+    );
+    assert!(e.contains("duplicate workload"), "{e}");
+}
+
+#[test]
+fn a_scenario_needs_a_workload_and_a_link_class() {
+    let e = ScenarioSpec::parse_str(
+        r#"
+[scenario]
+name = "unit"
+duration_s = 10.0
+
+[[link_class]]
+name = "4g"
+"#,
+    )
+    .unwrap_err();
+    assert!(format!("{e:#}").contains("[[workload]]"), "{e:#}");
+
+    let e = ScenarioSpec::parse_str(
+        r#"
+[scenario]
+name = "unit"
+duration_s = 10.0
+"#,
+    )
+    .unwrap_err();
+    assert!(format!("{e:#}").contains("[[link_class]]"), "{e:#}");
+}
+
+#[test]
+fn bad_scenario_scalars_are_rejected() {
+    // Name must be filesystem-safe.
+    let e = ScenarioSpec::parse_str(
+        r#"
+[scenario]
+name = "Has Spaces"
+duration_s = 10.0
+
+[[link_class]]
+name = "4g"
+
+[[workload]]
+class = "4g"
+rate_rps = 5.0
+"#,
+    )
+    .unwrap_err();
+    assert!(format!("{e:#}").contains("a-z0-9_-"), "{e:#}");
+
+    // Window shorter than a tick cannot accumulate anything.
+    let e = ScenarioSpec::parse_str(
+        r#"
+[scenario]
+name = "unit"
+duration_s = 10.0
+tick_ms = 50.0
+window_s = 0.01
+
+[[link_class]]
+name = "4g"
+
+[[workload]]
+class = "4g"
+rate_rps = 5.0
+"#,
+    )
+    .unwrap_err();
+    assert!(format!("{e:#}").contains("window_s"), "{e:#}");
+}
+
+#[test]
+fn slo_expectations_require_their_mechanisms() {
+    // Budget denial without a budget.
+    let e = err_of(
+        r#"
+[slo]
+expect_budget_denial = true
+"#,
+    );
+    assert!(e.contains("max_total_shards"), "{e}");
+
+    // Fallbacks without a loopback cloud.
+    let e = err_of(
+        r#"
+[slo]
+expect_fallbacks = true
+"#,
+    );
+    assert!(e.contains("loopback_cloud"), "{e}");
+
+    // Estimator floor without online estimation.
+    let e = err_of(
+        r#"
+[slo]
+min_estimator_observations = 10
+"#,
+    );
+    assert!(e.contains("online_estimation"), "{e}");
+
+    // Ceiling expectations without an autoscaler.
+    let e = err_of(
+        r#"
+[slo]
+expect_max_shards_reached = "4g"
+"#,
+    );
+    assert!(e.contains("autoscale"), "{e}");
+}
+
+#[test]
+fn the_fleet_half_is_read_as_ordinary_settings() {
+    let spec = parse(
+        r#"
+[edge]
+gamma = 33.0
+
+[serve]
+queue_capacity = 16
+"#,
+    )
+    .unwrap();
+    assert_eq!(spec.settings.edge.gamma, 33.0);
+    assert_eq!(spec.settings.serve.queue_capacity, 16);
+    assert_eq!(spec.class_names(), ["4g"]);
+}
+
+#[test]
+fn canonical_scenarios_on_disk_all_validate() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios");
+    let mut found = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        found += 1;
+        let spec = ScenarioSpec::load(&path)
+            .unwrap_or_else(|e| panic!("{} failed to validate: {e:#}", path.display()));
+        assert_eq!(
+            format!("{}.toml", spec.name),
+            path.file_name().unwrap().to_str().unwrap(),
+            "scenario name must match its file name"
+        );
+    }
+    assert!(found >= 5, "expected the five canonical scenarios, found {found}");
+}

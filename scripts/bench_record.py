@@ -1,21 +1,30 @@
 #!/usr/bin/env python3
-"""Merge a fresh wire-bench run into the committed BENCH_wire.json.
+"""Merge a fresh bench run into its committed BENCH_*.json baseline.
 
-`cargo bench --bench wire` writes its latest run to BENCH_wire.json in
-the working directory (the repo root under cargo). This script folds
-that run into the committed baseline with a regression gate:
+Two record kinds share the same gate-then-merge lifecycle, told apart
+by the record's "bench" field:
 
+wire ("bench": "wire", from `cargo bench --bench wire`):
   * For every (encoding, mode) cell present in both files, if the new
     `p99_e2e_3g_ms` is more than GATE (20%) worse than the baseline's,
     the merge FAILS (exit 1) and the baseline is left untouched.
-  * Baselines whose `source` is not "measured" (the seed baseline is
-    derived from the codec size identity + link model, marked
-    "model") never gate: the first measured run simply replaces them.
   * Byte counts are deterministic codec identities, so a change there
     is a wire-format change, not noise: any drift beyond 1% also fails.
+  * The run's q8+pipelined vs raw+lockstep bytes-cut ratio must hold
+    its >= 3.5x acceptance bar.
+
+scenario ("bench": "scenario", from `branchyserve scenario run`):
+  * The run's own SLO verdict must be a pass — a scenario that failed
+    its assertions is not a baseline candidate.
+  * If the baseline is measured and describes the same scenario, a
+    `totals.p99_ms` more than GATE (20%) worse fails the merge.
+
+Either kind: baselines whose `source` is not "measured" (seed baselines
+are derived from the timing/codec model, marked "model") never gate —
+the first measured run simply replaces them.
 
 On success the new run becomes the baseline and the previous
-baseline's p99 columns are kept under `previous` for one-step history.
+baseline's p99 figures are kept under `previous` for one-step history.
 
 Usage:
     python3 scripts/bench_record.py [--baseline BENCH_wire.json]
@@ -33,6 +42,7 @@ from pathlib import Path
 
 GATE = 0.20  # fail if p99 regresses by more than this fraction
 BYTE_DRIFT = 0.01  # bytes are deterministic; >1% drift is a format change
+KINDS = ("wire", "scenario")
 
 
 def cell_key(run: dict) -> tuple[str, str]:
@@ -44,12 +54,15 @@ def load(path: Path) -> dict:
         doc = json.loads(path.read_text())
     except (OSError, json.JSONDecodeError) as e:
         sys.exit(f"bench_record: cannot read {path}: {e}")
-    if doc.get("bench") != "wire" or not isinstance(doc.get("runs"), list):
+    kind = doc.get("bench")
+    if kind not in KINDS:
+        sys.exit(f"bench_record: {path} is not a bench record (kinds: {KINDS})")
+    if kind == "wire" and not isinstance(doc.get("runs"), list):
         sys.exit(f"bench_record: {path} is not a wire-bench record")
     return doc
 
 
-def gate(baseline: dict, run: dict) -> list[str]:
+def gate_wire(baseline: dict, run: dict) -> list[str]:
     """Return a list of human-readable regression findings (empty = pass)."""
     if baseline.get("source") != "measured":
         return []  # seed baseline is modeled, not measured: never gates
@@ -77,6 +90,48 @@ def gate(baseline: dict, run: dict) -> list[str]:
     return findings
 
 
+def gate_scenario(baseline: dict, run: dict) -> list[str]:
+    findings = []
+    name = run.get("scenario", "?")
+    if not run.get("slo", {}).get("pass", False):
+        failed = [
+            c.get("name", "?")
+            for c in run.get("slo", {}).get("checks", [])
+            if not c.get("pass", False)
+        ]
+        findings.append(
+            f"scenario '{name}': SLO verdict is FAIL ({', '.join(failed) or 'no checks'})"
+        )
+    if baseline.get("source") != "measured":
+        return findings  # seed baseline is modeled, not measured: never gates
+    if baseline.get("scenario") != name:
+        return findings  # different scenarios are not comparable
+    old_p99 = baseline.get("totals", {}).get("p99_ms")
+    new_p99 = run.get("totals", {}).get("p99_ms")
+    if old_p99 and new_p99 and new_p99 > old_p99 * (1.0 + GATE):
+        findings.append(
+            f"scenario '{name}': virtual p99 regressed {old_p99:.3f} -> "
+            f"{new_p99:.3f} ms "
+            f"(+{(new_p99 / old_p99 - 1.0) * 100.0:.0f}%, gate {GATE * 100:.0f}%)"
+        )
+    return findings
+
+
+def previous_of(baseline: dict) -> dict:
+    if baseline.get("bench") == "scenario":
+        return {
+            "source": baseline.get("source"),
+            "p99_ms": baseline.get("totals", {}).get("p99_ms"),
+        }
+    return {
+        "source": baseline.get("source"),
+        "p99_e2e_3g_ms": {
+            "{}+{}".format(*cell_key(r)): r["p99_e2e_3g_ms"]
+            for r in baseline["runs"]
+        },
+    }
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", type=Path, default=Path("BENCH_wire.json"))
@@ -92,17 +147,28 @@ def main() -> int:
     if args.baseline.resolve() == args.run.resolve():
         # The bench overwrote the baseline in place: the freshly written
         # file IS the run, so there is nothing older to gate against.
-        # Still validate the run's own acceptance ratio.
+        # Still validate the run's own acceptance bars.
         baseline = run
     else:
         baseline = load(args.baseline)
+        if baseline.get("bench") != run.get("bench"):
+            sys.exit(
+                "bench_record: baseline is a {} record but the run is a {}".format(
+                    baseline.get("bench"), run.get("bench")
+                )
+            )
 
-    findings = gate(baseline, run)
-    ratio = run.get("derived", {}).get("bytes_cut_q8_pipelined_vs_raw_lockstep", 0.0)
-    if ratio < 3.5:
-        findings.append(
-            f"q8+pipelined bytes cut vs raw+lockstep is {ratio:.2f}x (< 3.5x bar)"
+    if run.get("bench") == "scenario":
+        findings = gate_scenario(baseline, run)
+    else:
+        findings = gate_wire(baseline, run)
+        ratio = run.get("derived", {}).get(
+            "bytes_cut_q8_pipelined_vs_raw_lockstep", 0.0
         )
+        if ratio < 3.5:
+            findings.append(
+                f"q8+pipelined bytes cut vs raw+lockstep is {ratio:.2f}x (< 3.5x bar)"
+            )
 
     for f in findings:
         print(f"REGRESSION: {f}", file=sys.stderr)
@@ -111,13 +177,7 @@ def main() -> int:
 
     if not args.check and args.baseline.resolve() != args.run.resolve():
         merged = dict(run)
-        merged["previous"] = {
-            "source": baseline.get("source"),
-            "p99_e2e_3g_ms": {
-                "{}+{}".format(*cell_key(r)): r["p99_e2e_3g_ms"]
-                for r in baseline["runs"]
-            },
-        }
+        merged["previous"] = previous_of(baseline)
         args.baseline.write_text(json.dumps(merged, indent=2) + "\n")
         print(f"bench_record: baseline {args.baseline} updated")
     else:
