@@ -1,0 +1,322 @@
+//! Front-end bench: accepted connections and sustained req/s with ~1k
+//! concurrent loopback connections, thread-per-connection vs the epoll
+//! reactor, behind the same [`Server`] API.
+//!
+//! The backend is a canned-answer [`ServeBackend`] that classifies
+//! every frame instantly, so both cells measure the *front end* —
+//! accept, framing, dispatch, write-back — not model execution. Every
+//! client thread holds K open connections and drives them in rounds:
+//! write `DEPTH` INFER frames per connection in one segment, then read
+//! the `DEPTH` answers back, for every connection, `rounds` times. All
+//! connections stay open for the whole cell, so `conn_peak` proves the
+//! concurrency level actually held.
+//!
+//! Connection count adapts to `RLIMIT_NOFILE` (client and server ends
+//! live in one process, so each connection costs two fds); the clamp is
+//! printed when it bites. `SMOKE=1` shrinks the fleet for CI.
+//!
+//! Writes `BENCH_serve.json` (repo root) in the shape
+//! `scripts/bench_record.py` merges and gates on.
+//!
+//! Acceptance (hard asserts):
+//!   * every cell serves its full request count, answers decode as
+//!     RESULT, and `conn_peak` >= the concurrency target;
+//!   * full run, Linux: reactor sustains >= 2x the thread-per-conn
+//!     req/s.
+
+use std::io::{BufReader, Write as _};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+use branchyserve::coordinator::request::ExitPoint;
+use branchyserve::coordinator::InferenceResponse;
+use branchyserve::runtime::HostTensor;
+use branchyserve::server::protocol::{read_frame, write_frame};
+use branchyserve::server::{
+    Request, Response, ServeBackend, Server, ServerConfig, ServerHandle, ServerStatsSnapshot,
+};
+use branchyserve::util::stats::percentile;
+
+/// Client threads; each owns `conns / CLIENT_THREADS` connections.
+const CLIENT_THREADS: usize = 8;
+/// INFER frames written per connection per round, in one segment.
+const DEPTH: usize = 4;
+/// Reactor threads for the reactor cell.
+const REACTOR_THREADS: usize = 2;
+/// fds reserved for everything that is not a benched connection
+/// (listener, epoll, eventfds, stdio, slack).
+const FD_SLACK: u64 = 96;
+
+/// Canned-answer backend: the cheapest possible [`ServeBackend`], so
+/// the bench isolates front-end cost. The entropy echoes the first
+/// element of the decoded image, which keeps the decode honest.
+struct EchoBackend {
+    served: AtomicU64,
+}
+
+impl EchoBackend {
+    fn new() -> Self {
+        Self {
+            served: AtomicU64::new(0),
+        }
+    }
+}
+
+impl ServeBackend for EchoBackend {
+    fn serve_infer(&self, class: Option<u8>, image: HostTensor) -> Result<InferenceResponse> {
+        let id = self.served.fetch_add(1, Ordering::Relaxed);
+        Ok(InferenceResponse {
+            id,
+            class: class.unwrap_or(0) as usize,
+            exit: ExitPoint::EdgeBranch,
+            entropy: image.data().first().copied().unwrap_or(0.0),
+            latency_s: 0.0,
+            edge_s: 0.0,
+            transfer_s: 0.0,
+            cloud_s: 0.0,
+        })
+    }
+
+    fn metrics_json(&self) -> String {
+        format!("{{\"served\": {}}}", self.served.load(Ordering::Relaxed))
+    }
+}
+
+struct Cell {
+    mode: &'static str,
+    conns: usize,
+    requests: u64,
+    wall_s: f64,
+    req_per_s: f64,
+    p99_round_ms: f64,
+    stats: ServerStatsSnapshot,
+}
+
+/// Soft RLIMIT_NOFILE via /proc (Linux); `None` elsewhere — the
+/// portable cell sizes then trust the requested count.
+fn soft_fd_limit() -> Option<u64> {
+    let limits = std::fs::read_to_string("/proc/self/limits").ok()?;
+    let line = limits.lines().find(|l| l.starts_with("Max open files"))?;
+    line.split_whitespace().nth(3)?.parse().ok()
+}
+
+/// One INFER frame (header + body) as raw bytes, tiny on purpose: the
+/// bench stresses connection count, not payload size.
+fn framed_request() -> Result<Vec<u8>> {
+    let image = HostTensor::new(vec![4], vec![0.25, -0.5, 0.75, -1.0])?;
+    let body = Request::Infer(image).encode();
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &body)?;
+    Ok(buf)
+}
+
+fn run_cell(mode: &'static str, cfg: ServerConfig, conns: usize, rounds: usize) -> Result<Cell> {
+    let handle: ServerHandle = Server::with_config(Arc::new(EchoBackend::new()), cfg).start(0)?;
+    let addr = handle.addr();
+    let frame = framed_request()?;
+
+    let per_thread = conns / CLIENT_THREADS;
+    let barrier = Arc::new(Barrier::new(CLIENT_THREADS + 1));
+    let round_times: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+
+    let mut joins = Vec::new();
+    for _ in 0..CLIENT_THREADS {
+        let frame = frame.clone();
+        let barrier = barrier.clone();
+        let round_times = round_times.clone();
+        joins.push(std::thread::spawn(move || -> Result<u64> {
+            // One burst segment per connection per round: DEPTH frames
+            // back to back, which a multiplexing front end must parse
+            // out of a single readable event.
+            let burst = frame.repeat(DEPTH);
+            let mut streams = Vec::with_capacity(per_thread);
+            for _ in 0..per_thread {
+                let s = TcpStream::connect(addr)?;
+                s.set_nodelay(true)?;
+                streams.push(BufReader::new(s));
+            }
+            // Every connection is open before any cell traffic starts.
+            barrier.wait();
+            let mut served = 0u64;
+            let mut laps = Vec::with_capacity(rounds);
+            for _ in 0..rounds {
+                let r0 = Instant::now();
+                for s in &mut streams {
+                    s.get_mut().write_all(&burst)?;
+                }
+                for s in &mut streams {
+                    for _ in 0..DEPTH {
+                        let body = read_frame(s)?;
+                        match Response::decode(&body)? {
+                            Response::Result { .. } => served += 1,
+                            other => anyhow::bail!("expected RESULT, got {other:?}"),
+                        }
+                    }
+                }
+                laps.push(r0.elapsed().as_secs_f64() * 1e3);
+            }
+            round_times.lock().unwrap().extend(laps);
+            Ok(served)
+        }));
+    }
+
+    barrier.wait(); // all conns connected — the timed window is pure traffic
+    let t0 = Instant::now();
+    let mut requests = 0u64;
+    for j in joins {
+        requests += j.join().expect("client thread panicked")?;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let stats = handle.stats().snapshot();
+    handle.stop();
+
+    let expected = (per_thread * CLIENT_THREADS * rounds * DEPTH) as u64;
+    assert_eq!(
+        requests, expected,
+        "{mode}: every request must come back as RESULT"
+    );
+    assert!(
+        stats.conn_peak >= (per_thread * CLIENT_THREADS) as u64,
+        "{mode}: conn_peak {} never reached the concurrency target {}",
+        stats.conn_peak,
+        per_thread * CLIENT_THREADS
+    );
+
+    let laps = round_times.lock().unwrap();
+    Ok(Cell {
+        mode,
+        conns: per_thread * CLIENT_THREADS,
+        requests,
+        wall_s,
+        req_per_s: requests as f64 / wall_s,
+        p99_round_ms: percentile(laps.as_slice(), 99.0),
+        stats,
+    })
+}
+
+fn json_run(c: &Cell) -> String {
+    format!(
+        concat!(
+            "    {{\"mode\": \"{}\", \"conns\": {}, \"requests\": {}, ",
+            "\"wall_s\": {:.3}, \"req_per_s\": {:.1}, \"p99_round_ms\": {:.3}, ",
+            "\"accepted\": {}, \"conn_peak\": {}, \"throttled\": {}, \"conns_shed\": {}}}"
+        ),
+        c.mode,
+        c.conns,
+        c.requests,
+        c.wall_s,
+        c.req_per_s,
+        c.p99_round_ms,
+        c.stats.accepted,
+        c.stats.conn_peak,
+        c.stats.throttled,
+        c.stats.conns_shed,
+    )
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::var("SMOKE").is_ok();
+    let target_conns: usize = if smoke { 128 } else { 1000 };
+    let rounds: usize = if smoke { 10 } else { 40 };
+
+    // Both ends of every connection live in this process: two fds each.
+    let mut conns = target_conns;
+    if let Some(limit) = soft_fd_limit() {
+        let budget = (limit.saturating_sub(FD_SLACK) / 2) as usize;
+        if budget < conns {
+            println!("fd limit {limit}: clamping {conns} -> {budget} connections");
+            conns = budget;
+        }
+    }
+    conns = (conns / CLIENT_THREADS).max(1) * CLIENT_THREADS;
+
+    println!(
+        "serve bench: {conns} conns x {rounds} rounds x depth {DEPTH}, \
+         {CLIENT_THREADS} client threads{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+    println!(
+        "{:<16} {:>7} {:>10} {:>9} {:>12} {:>14} {:>10}",
+        "mode", "conns", "requests", "wall (s)", "req/s", "p99 round(ms)", "conn_peak"
+    );
+
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut plan: Vec<(&'static str, ServerConfig)> = vec![("threads", ServerConfig::default())];
+    if cfg!(target_os = "linux") {
+        plan.push((
+            "reactor",
+            ServerConfig {
+                reactor: true,
+                reactor_threads: REACTOR_THREADS,
+                ..ServerConfig::default()
+            },
+        ));
+    } else {
+        println!("reactor cell skipped: epoll front end is Linux-only");
+    }
+    for (mode, cfg) in plan {
+        let c = run_cell(mode, cfg, conns, rounds)?;
+        println!(
+            "{:<16} {:>7} {:>10} {:>9.3} {:>12.1} {:>14.3} {:>10}",
+            c.mode, c.conns, c.requests, c.wall_s, c.req_per_s, c.p99_round_ms, c.stats.conn_peak
+        );
+        cells.push(c);
+    }
+
+    let speedup = match (
+        cells.iter().find(|c| c.mode == "threads"),
+        cells.iter().find(|c| c.mode == "reactor"),
+    ) {
+        (Some(t), Some(r)) => {
+            let s = r.req_per_s / t.req_per_s;
+            println!("reactor vs thread-per-conn: {s:.2}x req/s");
+            // The 2x bar is the full-scale claim: at smoke scale (128
+            // conns) thread-per-conn has not hit its context-switch
+            // wall yet, so only sanity-check that the reactor keeps up.
+            if smoke {
+                assert!(
+                    s >= 0.5,
+                    "reactor fell below half of thread-per-conn even at smoke scale ({s:.2}x)"
+                );
+            } else {
+                assert!(
+                    s >= 2.0,
+                    "reactor must sustain >= 2x thread-per-conn req/s at {} conns, got {s:.2}x",
+                    t.conns
+                );
+            }
+            Some(s)
+        }
+        _ => None,
+    };
+
+    let runs: Vec<String> = cells.iter().map(json_run).collect();
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"serve\",\n",
+            "  \"source\": \"measured\",\n",
+            "  \"smoke\": {},\n",
+            "  \"config\": {{\"conns\": {}, \"rounds\": {}, \"depth\": {}, ",
+            "\"client_threads\": {}, \"reactor_threads\": {}}},\n",
+            "  \"runs\": [\n{}\n  ],\n",
+            "  \"derived\": {{\"reactor_speedup\": {}}}\n",
+            "}}\n"
+        ),
+        smoke,
+        conns,
+        rounds,
+        DEPTH,
+        CLIENT_THREADS,
+        REACTOR_THREADS,
+        runs.join(",\n"),
+        speedup.map_or("null".to_string(), |s| format!("{s:.2}")),
+    );
+    std::fs::write("BENCH_serve.json", &json)?;
+    println!("wrote BENCH_serve.json");
+    Ok(())
+}

@@ -202,6 +202,18 @@ pub struct FleetSettings {
     /// would bust the budget are denied (the class's `last_trigger`
     /// records the budget denial).
     pub max_total_shards: Option<usize>,
+    /// Serve with the event-driven epoll front end (Linux; elsewhere
+    /// the portable thread-per-connection path runs with a warning).
+    pub reactor: bool,
+    /// Reactor event-loop threads (>= 1).
+    pub reactor_threads: usize,
+    /// Accept-time connection cap on both serving paths; connections
+    /// over it are answered one THROTTLE frame and closed. 0 = no cap.
+    pub max_conns: usize,
+    /// Per-connection in-flight request window on the reactor path
+    /// (>= 1); frames past it are answered THROTTLE without touching
+    /// admission.
+    pub conn_window: usize,
 }
 
 impl FleetSettings {
@@ -317,6 +329,10 @@ impl Default for Settings {
                 scale_window: 5,
                 scale_cooldown_ms: 2000.0,
                 max_total_shards: None,
+                reactor: false,
+                reactor_threads: 1,
+                max_conns: 0,
+                conn_window: 32,
             },
             link_classes: Vec::new(),
         }
@@ -440,6 +456,18 @@ impl Settings {
         if let Some(v) = doc.path("fleet.max_total_shards").and_then(Json::as_usize) {
             self.fleet.max_total_shards = Some(v);
         }
+        if let Some(v) = doc.path("fleet.reactor").and_then(Json::as_bool) {
+            self.fleet.reactor = v;
+        }
+        if let Some(v) = doc.path("fleet.reactor_threads").and_then(Json::as_usize) {
+            self.fleet.reactor_threads = v;
+        }
+        if let Some(v) = doc.path("fleet.max_conns").and_then(Json::as_usize) {
+            self.fleet.max_conns = v;
+        }
+        if let Some(v) = doc.path("fleet.conn_window").and_then(Json::as_usize) {
+            self.fleet.conn_window = v;
+        }
         if let Some(arr) = doc.get("link_class").and_then(Json::as_arr) {
             self.link_classes.clear();
             for (i, entry) in arr.iter().enumerate() {
@@ -555,6 +583,15 @@ impl Settings {
             if let Err(e) = validate_host_port(addr) {
                 bail!("fleet.cloud_addr: {e}");
             }
+        }
+        if !(1..=64).contains(&self.fleet.reactor_threads) {
+            bail!(
+                "fleet.reactor_threads must be in 1..=64; got {}",
+                self.fleet.reactor_threads
+            );
+        }
+        if self.fleet.conn_window == 0 {
+            bail!("fleet.conn_window must be >= 1 (0 would throttle every request)");
         }
         if self.fleet.autoscale {
             let acfg = self.fleet.autoscale_config()?;
@@ -748,6 +785,10 @@ scale_down_depth = 1.0
 scale_interval_ms = 50
 scale_window = 3
 scale_cooldown_ms = 500
+reactor = true
+reactor_threads = 4
+max_conns = 2000
+conn_window = 64
 
 [[link_class]]
 name = "3g"
@@ -773,6 +814,10 @@ cloud_addr = "sat-cloud.internal:7880"
         assert!((s.fleet.probe_fraction - 0.05).abs() < 1e-12);
         assert_eq!(s.fleet.cloud_addr.as_deref(), Some("cloud.internal:7879"));
         assert_eq!(s.fleet.wire_encoding, WireEncoding::Q8);
+        assert!(s.fleet.reactor);
+        assert_eq!(s.fleet.reactor_threads, 4);
+        assert_eq!(s.fleet.max_conns, 2000);
+        assert_eq!(s.fleet.conn_window, 64);
         assert!(s.fleet.autoscale);
         let acfg = s.fleet.autoscale_config().unwrap();
         assert_eq!((acfg.min_shards, acfg.max_shards), (2, 6));
@@ -861,6 +906,23 @@ cloud_addr = "sat-cloud.internal:7880"
         s.fleet.scale_interval_ms = 0.0;
         let e = s.validate().unwrap_err().to_string();
         assert!(e.contains("scale_interval_ms"), "{e}");
+
+        // Front-end knobs: a zero window or thread count fails loudly.
+        let mut s = Settings::default();
+        s.fleet.reactor_threads = 0;
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("fleet.reactor_threads"), "{e}");
+        let mut s = Settings::default();
+        s.fleet.reactor_threads = 65;
+        assert!(s.validate().is_err());
+        let mut s = Settings::default();
+        s.fleet.conn_window = 0;
+        let e = s.validate().unwrap_err().to_string();
+        assert!(e.contains("fleet.conn_window"), "{e}");
+        // max_conns = 0 is the documented "no cap" value.
+        let mut s = Settings::default();
+        s.fleet.max_conns = 0;
+        s.validate().unwrap();
 
         for bad in ["cloud.internal", ":7879", "host:notaport", "host:99999", "host:0"] {
             let mut s = Settings::default();

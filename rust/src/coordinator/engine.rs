@@ -41,7 +41,20 @@ use crate::server::remote::RemoteCloudEngine;
 
 use super::batcher::{Batcher, SubmitError};
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::request::{ExitPoint, InferenceRequest, InferenceResponse};
+use super::request::{ExitPoint, InferenceRequest, InferenceResponse, ReplyTo};
+
+/// Typed admission failure, for front ends that must distinguish
+/// backpressure (answer a THROTTLE frame, count `rejected`) from a
+/// terminal condition (answer an ERROR, count `failed`). The string
+/// errors the blocking [`Coordinator::submit`] path returns are derived
+/// from these, so the two can't drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The admission queue is full — transient; retry after backoff.
+    Busy,
+    /// The coordinator is shut down — terminal.
+    Closed,
+}
 
 /// The cloud half of the pipeline: where the suffix stages of
 /// transferred samples execute. In-process for the single-machine
@@ -96,7 +109,7 @@ pub type ExitObserver = Arc<dyn Fn(bool) + Send + Sync>;
 /// Work item crossing the edge->cloud boundary.
 struct TransferredSample {
     id: u64,
-    reply: mpsc::Sender<InferenceResponse>,
+    reply: ReplyTo,
     enqueued: Instant,
     activation: HostTensor,
     entropy: f32,
@@ -331,6 +344,24 @@ impl Coordinator {
         plan: Option<PartitionPlan>,
     ) -> Result<(u64, mpsc::Receiver<InferenceResponse>)> {
         let (tx, rx) = mpsc::channel();
+        match self.submit_reply(image, plan, ReplyTo::Channel(tx)) {
+            Ok(id) => Ok((id, rx)),
+            Err(AdmitError::Busy) => Err(anyhow!("admission queue full")),
+            Err(AdmitError::Closed) => Err(anyhow!("coordinator shut down")),
+        }
+    }
+
+    /// Submit one image to an arbitrary reply destination, with a typed
+    /// rejection. Every submit path funnels through here, so the
+    /// metrics ledger (`submitted`, `rejected`, `failed`) is accounted
+    /// identically whether the caller is a blocking channel waiter or a
+    /// multiplexing reactor sink.
+    pub fn submit_reply(
+        &self,
+        image: HostTensor,
+        plan: Option<PartitionPlan>,
+        reply: ReplyTo,
+    ) -> std::result::Result<u64, AdmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         if plan.is_some() {
             self.metrics.plan_overrides.fetch_add(1, Ordering::Relaxed);
@@ -339,22 +370,22 @@ impl Coordinator {
             id,
             image,
             enqueued: Instant::now(),
-            reply: tx,
+            reply,
             plan,
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match self.ingress.submit(req) {
-            Ok(()) => Ok((id, rx)),
+            Ok(()) => Ok(id),
             Err(SubmitError::Full(_)) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(anyhow!("admission queue full"))
+                Err(AdmitError::Busy)
             }
             Err(SubmitError::Closed(_)) => {
                 // Terminal, but not backpressure (the autoscaler reads
                 // `rejected` as a load signal): counted in `failed` so
                 // the drain ledger stays balanced.
                 self.metrics.failed.fetch_add(1, Ordering::Relaxed);
-                Err(anyhow!("coordinator shut down"))
+                Err(AdmitError::Closed)
             }
         }
     }
@@ -536,7 +567,7 @@ fn process_edge_chunk(
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
                 let latency = req.enqueued.elapsed().as_secs_f64();
                 metrics.record_latency(latency);
-                let _ = req.reply.send(InferenceResponse {
+                req.reply.send(InferenceResponse {
                     id: req.id,
                     class: classes[idx],
                     exit: ExitPoint::EdgeBranch,
@@ -583,7 +614,7 @@ fn process_edge_chunk(
             metrics.completed.fetch_add(1, Ordering::Relaxed);
             let latency = req.enqueued.elapsed().as_secs_f64();
             metrics.record_latency(latency);
-            let _ = req.reply.send(InferenceResponse {
+            req.reply.send(InferenceResponse {
                 id: req.id,
                 class: classes[idx],
                 exit: ExitPoint::MainOutput,
@@ -689,7 +720,7 @@ fn cloud_loop(
                             .fetch_add(1, Ordering::Relaxed);
                         let latency = item.enqueued.elapsed().as_secs_f64();
                         metrics.record_latency(latency);
-                        let _ = item.reply.send(InferenceResponse {
+                        item.reply.send(InferenceResponse {
                             id: item.id,
                             class: classes[idx],
                             exit: ExitPoint::MainOutput,

@@ -1,10 +1,58 @@
 //! Request/response types flowing through the coordinator.
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::partition::plan::PartitionPlan;
 use crate::runtime::HostTensor;
+
+/// A shared completion funnel: many in-flight requests deliver into one
+/// consumer. The reactor front end implements this with a lock-guarded
+/// queue plus an eventfd wake so thousands of connections multiplex
+/// onto one readiness loop instead of one blocked thread each.
+pub trait CompletionSink: Send + Sync {
+    /// Deliver one finished request. `tag` is the submitter's own
+    /// correlation key (echoed from [`ReplyTo::Sink`]), independent of
+    /// the coordinator-assigned response id — shard-local ids are not
+    /// unique across a fleet, tags are.
+    fn complete(&self, tag: u64, resp: InferenceResponse);
+}
+
+/// Where a request's answer goes. The blocking path keeps its
+/// per-request channel; the reactor path funnels tagged completions
+/// into a shared sink.
+#[derive(Clone)]
+pub enum ReplyTo {
+    /// One dedicated channel per request; the submitter blocks on (or
+    /// polls) its own receiver.
+    Channel(mpsc::Sender<InferenceResponse>),
+    /// Shared sink: the completion is delivered as `(tag, response)` to
+    /// a consumer multiplexing many requests.
+    Sink { sink: Arc<dyn CompletionSink>, tag: u64 },
+}
+
+impl ReplyTo {
+    /// Deliver the response. Send failures (a blocking submitter that
+    /// gave up and dropped its receiver) are deliberately ignored, as
+    /// they always were on the channel path.
+    pub fn send(&self, resp: InferenceResponse) {
+        match self {
+            ReplyTo::Channel(tx) => {
+                let _ = tx.send(resp);
+            }
+            ReplyTo::Sink { sink, tag } => sink.complete(*tag, resp),
+        }
+    }
+}
+
+impl std::fmt::Debug for ReplyTo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReplyTo::Channel(_) => f.write_str("ReplyTo::Channel"),
+            ReplyTo::Sink { tag, .. } => write!(f, "ReplyTo::Sink(tag={tag})"),
+        }
+    }
+}
 
 /// Where a sample's classification came from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,8 +70,8 @@ pub struct InferenceRequest {
     /// One sample, CHW (no batch dim).
     pub image: HostTensor,
     pub enqueued: Instant,
-    /// Response channel (one response per request).
-    pub reply: mpsc::Sender<InferenceResponse>,
+    /// Response destination (one response per request).
+    pub reply: ReplyTo,
     /// Per-request partition plan override (per-request planning: the
     /// fleet solved this sample's split at the instantaneous link).
     /// `None` executes under the coordinator's current plan.

@@ -5,6 +5,7 @@ use crate::config::json::Json;
 use crate::coordinator::MetricsSnapshot;
 use crate::network::bandwidth::LinkModel;
 use crate::network::encoding::WireEncoding;
+use crate::server::ServerStatsSnapshot;
 
 use super::autoscale::ScalerStats;
 use super::class::LinkClass;
@@ -71,6 +72,10 @@ pub struct ClassReport {
 pub struct FleetReport {
     pub classes: Vec<ClassReport>,
     pub total: MetricsSnapshot,
+    /// Front-end connection counters of the `Server` registered with
+    /// this fleet; `None` when the fleet is driven without one
+    /// (library use, the scenario harness, tests).
+    pub server: Option<ServerStatsSnapshot>,
 }
 
 impl FleetReport {
@@ -80,6 +85,7 @@ impl FleetReport {
         FleetReport {
             classes,
             total: MetricsSnapshot::aggregate(&aggregates),
+            server: None,
         }
     }
 
@@ -121,6 +127,12 @@ impl FleetReport {
             ));
         }
         out.push_str(&format!("[fleet total] {}", self.total.summary()));
+        if let Some(s) = &self.server {
+            out.push_str(&format!(
+                "\n[server] {} accepted, {} active (peak {}), {} throttled, {} shed",
+                s.accepted, s.active, s.conn_peak, s.throttled, s.conns_shed
+            ));
+        }
         out
     }
 
@@ -196,9 +208,18 @@ impl FleetReport {
             })
             .collect::<Vec<_>>()
             .join(",");
+        let server = match &self.server {
+            Some(s) => format!(
+                "{{\"accepted\":{},\"active\":{},\"conn_peak\":{},\
+                 \"throttled\":{},\"conns_shed\":{}}}",
+                s.accepted, s.active, s.conn_peak, s.throttled, s.conns_shed
+            ),
+            None => "null".to_string(),
+        };
         format!(
-            "{{{},\"classes\":[{}]}}",
+            "{{{},\"server\":{},\"classes\":[{}]}}",
             flat_fields(&self.total),
+            server,
             classes
         )
     }
@@ -290,6 +311,34 @@ mod tests {
         let s = r.summary();
         assert!(s.contains("3G") && s.contains("WiFi") && s.contains("fleet total"));
         assert!(!s.contains("NaN"), "{s}");
+    }
+
+    #[test]
+    fn server_counters_splice_into_json_and_summary() {
+        let mut r = report();
+        // Fleet driven without a front-end server: explicit null.
+        let v = Json::parse(&r.to_json()).unwrap();
+        assert!(matches!(v.get("server"), Some(Json::Null)));
+        assert!(!r.summary().contains("[server]"));
+        r.server = Some(ServerStatsSnapshot {
+            accepted: 100,
+            active: 7,
+            conn_peak: 42,
+            throttled: 9,
+            conns_shed: 3,
+        });
+        let v = Json::parse(&r.to_json()).unwrap();
+        let s = v.get("server").unwrap();
+        assert_eq!(s.get("accepted").unwrap().as_u64(), Some(100));
+        assert_eq!(s.get("active").unwrap().as_u64(), Some(7));
+        assert_eq!(s.get("conn_peak").unwrap().as_u64(), Some(42));
+        assert_eq!(s.get("throttled").unwrap().as_u64(), Some(9));
+        assert_eq!(s.get("conns_shed").unwrap().as_u64(), Some(3));
+        let text = r.summary();
+        assert!(
+            text.contains("[server] 100 accepted, 7 active (peak 42), 9 throttled, 3 shed"),
+            "{text}"
+        );
     }
 
     #[test]

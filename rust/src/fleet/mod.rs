@@ -126,7 +126,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::settings::Strategy;
 use crate::network::bandwidth::LinkModel;
 use crate::coordinator::{
-    CloudExec, Coordinator, CoordinatorConfig, ExitObserver, InferenceResponse, MetricsSnapshot,
+    AdmitError, CloudExec, Coordinator, CoordinatorConfig, ExitObserver, InferenceResponse,
+    MetricsSnapshot, ReplyTo,
 };
 use crate::model::Manifest;
 use crate::network::trace::BandwidthTrace;
@@ -137,8 +138,21 @@ use crate::planner::{
 };
 use crate::runtime::{HostTensor, InferenceEngine};
 use crate::server::remote::{RemoteCloudConfig, RemoteCloudEngine, RemoteCloudStats};
-use crate::server::ServeBackend;
+use crate::server::{ServeBackend, ServerStats, Submission};
 use crate::timing::DelayProfile;
+
+/// Typed fleet admission failure, for front ends that must map
+/// backpressure to a protocol THROTTLE frame and everything else to an
+/// ERROR. The blocking [`Fleet::submit`] path derives its string errors
+/// from these, so the two can't drift.
+#[derive(Debug)]
+pub enum AdmitRejection {
+    /// The picked shard's admission queue is full — transient; the
+    /// client should back off and retry.
+    Busy,
+    /// Terminal: unknown class, or the shard is shut down.
+    Failed(anyhow::Error),
+}
 
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
@@ -424,6 +438,10 @@ pub struct Fleet {
     /// Fleet-wide shard budget; `None` = unbounded.
     budget: Option<Arc<ShardBudget>>,
     route_key: AtomicU64,
+    /// Counters of the front-end `Server` currently serving this fleet
+    /// (registered at server start); spliced into the report JSON so
+    /// one metrics read covers the whole ingress path.
+    server_stats: Mutex<Option<Arc<ServerStats>>>,
 }
 
 impl Fleet {
@@ -834,6 +852,7 @@ impl Fleet {
             wire_encoding: cfg.wire_encoding,
             budget,
             route_key: AtomicU64::new(1),
+            server_stats: Mutex::new(None),
         })
     }
 
@@ -1119,7 +1138,44 @@ impl Fleet {
         key: u64,
         image: HostTensor,
     ) -> Result<(u64, mpsc::Receiver<InferenceResponse>)> {
-        let group = self.group(class)?;
+        let (tx, rx) = mpsc::channel();
+        match self.admit_keyed(class, key, image, ReplyTo::Channel(tx)) {
+            Ok(id) => Ok((id, rx)),
+            Err(AdmitRejection::Busy) => Err(anyhow!("admission queue full")),
+            Err(AdmitRejection::Failed(e)) => Err(e),
+        }
+    }
+
+    /// Non-blocking admission with a typed rejection and an arbitrary
+    /// reply destination — the reactor front end's entry point. The
+    /// routing key is drawn from the same per-request counter as
+    /// [`Fleet::submit`].
+    pub fn admit(
+        &self,
+        class: LinkClass,
+        image: HostTensor,
+        reply: ReplyTo,
+    ) -> std::result::Result<u64, AdmitRejection> {
+        self.admit_keyed(
+            class,
+            self.route_key.fetch_add(1, Ordering::Relaxed),
+            image,
+            reply,
+        )
+    }
+
+    /// Shared admission core: shard pick, per-request planning and
+    /// probe rerouting, then a typed submit into the picked shard.
+    /// Every submit path — blocking channel or reactor sink — funnels
+    /// through here.
+    pub fn admit_keyed(
+        &self,
+        class: LinkClass,
+        key: u64,
+        image: HostTensor,
+        reply: ReplyTo,
+    ) -> std::result::Result<u64, AdmitRejection> {
+        let group = self.group(class).map_err(AdmitRejection::Failed)?;
         // The read guard spans *pick → submit*: a concurrent shrink
         // (write lock) cannot retire the picked shard before the
         // request lands in its admission queue, so no request is ever
@@ -1138,7 +1194,7 @@ impl Fleet {
         } else {
             group.router.pick_index(key, n)
         };
-        if self.per_request_planning {
+        let plan = if self.per_request_planning {
             let link = group.channel.current_link();
             let mut plan = group.planner.plan(link);
             // Exit-rate probing: when the solved split keeps the branch
@@ -1160,10 +1216,18 @@ impl Fleet {
                     }
                 }
             }
-            shards[shard].submit_planned(image, plan)
+            Some(plan)
         } else {
-            shards[shard].submit(image)
-        }
+            None
+        };
+        shards[shard]
+            .submit_reply(image, plan, reply)
+            .map_err(|e| match e {
+                AdmitError::Busy => AdmitRejection::Busy,
+                AdmitError::Closed => {
+                    AdmitRejection::Failed(anyhow!("coordinator shut down"))
+                }
+            })
     }
 
     /// Convenience: submit and block for the response.
@@ -1205,7 +1269,9 @@ impl Fleet {
                 }
             })
             .collect();
-        FleetReport::from_classes(classes)
+        let mut report = FleetReport::from_classes(classes);
+        report.server = self.server_stats.lock().unwrap().as_ref().map(|s| s.snapshot());
+        report
     }
 
     /// Stop the autoscalers and replan loops, drain and join every
@@ -1247,13 +1313,28 @@ impl Fleet {
                 shards,
             });
         }
-        FleetReport::from_classes(classes)
+        let mut report = FleetReport::from_classes(classes);
+        report.server = self.server_stats.lock().unwrap().as_ref().map(|s| s.snapshot());
+        report
     }
 }
 
 impl ServeBackend for Fleet {
     fn serve_infer(&self, class: Option<u8>, image: HostTensor) -> Result<InferenceResponse> {
         self.infer_sync(LinkClass(class.unwrap_or(LinkClass::DEFAULT.0)), image)
+    }
+
+    fn submit_infer(&self, class: Option<u8>, image: HostTensor, reply: ReplyTo) -> Submission {
+        let lc = LinkClass(class.unwrap_or(LinkClass::DEFAULT.0));
+        match self.admit(lc, image, reply) {
+            Ok(id) => Submission::Queued(id),
+            Err(AdmitRejection::Busy) => Submission::Busy,
+            Err(AdmitRejection::Failed(e)) => Submission::Ready(Err(e)),
+        }
+    }
+
+    fn register_server_stats(&self, stats: Arc<ServerStats>) {
+        *self.server_stats.lock().unwrap() = Some(stats);
     }
 
     fn metrics_json(&self) -> String {

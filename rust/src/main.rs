@@ -28,7 +28,7 @@ use branchyserve::planner::{AdaptiveConfig, EstimatorConfig};
 use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
 use branchyserve::runtime::InferenceEngine;
 use branchyserve::scenario::{self, ScenarioSpec};
-use branchyserve::server::{CloudStageServer, Server};
+use branchyserve::server::{CloudStageServer, Server, ServerConfig};
 use branchyserve::util::logger;
 use branchyserve::util::timefmt::format_secs;
 
@@ -96,6 +96,19 @@ fn cli() -> Cli {
                     "activation transfer codec to the cloud stage: raw|q8|q4",
                 ))
                 .flag(Flag::value("bind", "listen address").default("127.0.0.1"))
+                .flag(Flag::switch(
+                    "reactor",
+                    "serve with the event-driven epoll front end (Linux)",
+                ))
+                .flag(Flag::value("reactor-threads", "reactor event-loop threads (default 1)"))
+                .flag(Flag::value(
+                    "max-conns",
+                    "shed connections over this cap with THROTTLE (0 = unlimited)",
+                ))
+                .flag(Flag::value(
+                    "conn-window",
+                    "per-connection in-flight request window, reactor path (default 32)",
+                ))
                 .flag(Flag::switch("sim", "serve the simulated model (no artifacts needed)"))
                 .flag(Flag::value("sim-stage-cost-us", "synthetic per-stage compute cost, us").default("200")),
             Command::new(
@@ -104,6 +117,10 @@ fn cli() -> Cli {
             )
                 .flag(Flag::value("port", "TCP port (0 = auto)").default("7879"))
                 .flag(Flag::value("bind", "listen address").default("0.0.0.0"))
+                .flag(Flag::value(
+                    "max-conns",
+                    "shed connections over this cap with THROTTLE (0 = unlimited)",
+                ))
                 .flag(Flag::switch("sim", "serve the simulated model (no artifacts needed)"))
                 .flag(Flag::value("sim-stage-cost-us", "synthetic per-stage compute cost, us").default("200")),
             Command::new(
@@ -590,12 +607,29 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
 
     let port = get_usize(inv, "port")?.unwrap_or(7878) as u16;
     let bind = inv.get("bind").unwrap_or("127.0.0.1");
-    let handle = Server::new(fleet.clone()).start_on(bind, port)?;
-    println!("serving on {} — Ctrl-C to stop", handle.addr());
+    let server_cfg = server_config_from(inv, settings)?;
+    let reactor = server_cfg.reactor;
+    let handle = Server::with_config(fleet.clone(), server_cfg).start_on(bind, port)?;
+    println!(
+        "serving on {} ({}) — Ctrl-C to stop",
+        handle.addr(),
+        if reactor { "reactor" } else { "thread-per-connection" },
+    );
     loop {
         std::thread::sleep(Duration::from_secs(10));
         println!("{}", fleet.report().summary());
     }
+}
+
+/// Front-end tuning from CLI flags over `[fleet]` config defaults.
+fn server_config_from(inv: &Invocation, settings: &Settings) -> Result<ServerConfig> {
+    Ok(ServerConfig {
+        reactor: inv.has("reactor") || settings.fleet.reactor,
+        reactor_threads: get_usize(inv, "reactor-threads")?
+            .unwrap_or(settings.fleet.reactor_threads),
+        max_conns: get_usize(inv, "max-conns")?.unwrap_or(settings.fleet.max_conns),
+        conn_window: get_usize(inv, "conn-window")?.unwrap_or(settings.fleet.conn_window),
+    })
 }
 
 /// The cloud half of a physically partitioned deployment: an accept
@@ -630,7 +664,11 @@ fn cmd_cloud_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
     let server = Arc::new(CloudStageServer::new(engine));
     let port = get_usize(inv, "port")?.unwrap_or(7879) as u16;
     let bind = inv.get("bind").unwrap_or("0.0.0.0");
-    let handle = Server::new(server.clone()).start_on(bind, port)?;
+    let cfg = ServerConfig {
+        max_conns: get_usize(inv, "max-conns")?.unwrap_or(settings.fleet.max_conns),
+        ..ServerConfig::default()
+    };
+    let handle = Server::with_config(server.clone(), cfg).start_on(bind, port)?;
     println!(
         "cloud-serving on {} — point an edge at it with \
          `branchyserve serve --cloud-addr HOST:{}` — Ctrl-C to stop",

@@ -1,17 +1,46 @@
 //! Host-side f32 tensor: the activation format flowing between pipeline
 //! stages, the network channel, and the PJRT boundary.
+//!
+//! Storage is a shared `Arc<[f32]>`: cloning a tensor is a refcount
+//! bump, so the serving path (wire decode → admission queue →
+//! coordinator hops → cloud transfer queue) shares one allocation per
+//! sample instead of copying the payload at every channel hop. Shapes
+//! stay small `Vec`s; all mutating operations (`stack`, `pad_batch`,
+//! …) build fresh buffers, so sharing is never observable.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-/// Dense row-major f32 tensor.
+/// Dense row-major f32 tensor over shared storage.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HostTensor {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    data: Arc<[f32]>,
 }
 
 impl HostTensor {
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} wants {} elements, data has {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(HostTensor {
+            shape,
+            data: data.into(),
+        })
+    }
+
+    /// Wrap an already-shared buffer without copying it — the wire
+    /// decoder's entry point: the frame parser collects payload floats
+    /// straight into an `Arc<[f32]>` and every later hop clones the
+    /// handle.
+    pub fn from_shared(shape: Vec<usize>, data: Arc<[f32]>) -> Result<HostTensor> {
         let n: usize = shape.iter().product();
         if n != data.len() {
             bail!(
@@ -28,7 +57,7 @@ impl HostTensor {
         let n = shape.iter().product();
         HostTensor {
             shape,
-            data: vec![0.0; n],
+            data: vec![0.0; n].into(),
         }
     }
 
@@ -40,8 +69,11 @@ impl HostTensor {
         &self.data
     }
 
+    /// Copy the elements out into an owned `Vec`. The storage is
+    /// shared, so this always allocates; prefer [`HostTensor::data`]
+    /// when a borrow will do.
     pub fn into_data(self) -> Vec<f32> {
-        self.data
+        self.data.to_vec()
     }
 
     pub fn len(&self) -> usize {
@@ -95,7 +127,7 @@ impl HostTensor {
         (0..self.batch())
             .map(|i| HostTensor {
                 shape: sample_shape.clone(),
-                data: self.data[i * k..(i + 1) * k].to_vec(),
+                data: self.data[i * k..(i + 1) * k].into(),
             })
             .collect()
     }
@@ -108,7 +140,7 @@ impl HostTensor {
         shape[0] = n;
         HostTensor {
             shape,
-            data: self.data[..n * k].to_vec(),
+            data: self.data[..n * k].into(),
         }
     }
 
@@ -116,14 +148,17 @@ impl HostTensor {
     /// batcher's shape-specialization filler; padded outputs are dropped).
     pub fn pad_batch(&self, n: usize) -> HostTensor {
         assert!(n >= self.batch() && self.batch() > 0);
-        let mut data = self.data.clone();
+        let mut data = self.data.to_vec();
         let last = self.sample(self.batch() - 1).to_vec();
         for _ in self.batch()..n {
             data.extend_from_slice(&last);
         }
         let mut shape = self.shape.clone();
         shape[0] = n;
-        HostTensor { shape, data }
+        HostTensor {
+            shape,
+            data: data.into(),
+        }
     }
 
     // ---------------------------------------------------------------- XLA
@@ -163,6 +198,22 @@ mod tests {
     fn construction_validates_shape() {
         assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
         assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let shared: Arc<[f32]> = vec![0.0; 6].into();
+        assert!(HostTensor::from_shared(vec![2, 3], shared.clone()).is_ok());
+        assert!(HostTensor::from_shared(vec![7], shared).is_err());
+    }
+
+    #[test]
+    fn clones_share_storage() {
+        let t = HostTensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let c = t.clone();
+        // The clone is a handle to the same allocation, not a copy —
+        // this is the zero-copy admission contract.
+        assert!(std::ptr::eq(t.data().as_ptr(), c.data().as_ptr()));
+        assert_eq!(t, c);
+        // into_data copies out without disturbing other handles.
+        assert_eq!(c.into_data(), vec![1., 2., 3., 4.]);
+        assert_eq!(t.data(), &[1., 2., 3., 4.]);
     }
 
     #[test]

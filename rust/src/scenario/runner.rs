@@ -928,6 +928,18 @@ fn emit_json(
                 ("p99_ms", Json::num(ms3(p_or_zero(&all_lats, 99.0)))),
                 ("mean_ms", Json::num(ms3(mean))),
                 ("max_ms", Json::num(ms3(max))),
+                // Front-end counters: the harness drives the fleet
+                // in-process (no TCP front end registers stats), so
+                // these stay 0 here — present so scenario baselines and
+                // served-fleet reports share one totals shape.
+                (
+                    "throttled",
+                    Json::num(report.server.map_or(0, |s| s.throttled) as f64),
+                ),
+                (
+                    "conn_peak",
+                    Json::num(report.server.map_or(0, |s| s.conn_peak) as f64),
+                ),
             ]),
         ),
         ("classes", Json::arr(class_json)),

@@ -1,15 +1,26 @@
-//! The wire layer: a length-prefixed binary protocol over std
-//! `TcpListener` (tokio is unavailable offline; a thread-per-connection
-//! accept loop in front of the coordinator's own batching pipeline is
-//! fully adequate for this workload), and both halves of a physically
-//! partitioned deployment speaking it.
+//! The wire layer: a length-prefixed binary protocol over std TCP
+//! (tokio is unavailable offline), two serving front ends behind one
+//! [`Server`] API, and both halves of a physically partitioned
+//! deployment speaking the protocol.
 //!
 //! * [`protocol`] — the frame format: PING / INFER / INFER_CLASS /
 //!   METRICS plus the partial-inference pair (INFER_PARTIAL →
-//!   PARTIAL_RESULT) that carries cut activations between machines.
-//! * [`tcp`] — the accept loop, generic over [`ServeBackend`], so the
-//!   same front-end serves a single coordinator pipeline, a multi-class
-//!   fleet, or a cloud-stage server; plus the blocking [`Client`].
+//!   PARTIAL_RESULT) that carries cut activations between machines, and
+//!   the THROTTLE backpressure frame (kind 5).
+//! * [`tcp`] — the [`Server`] API, generic over [`ServeBackend`], so
+//!   the same front end serves a single coordinator pipeline, a
+//!   multi-class fleet, or a cloud-stage server; plus the blocking
+//!   [`Client`]. Its own serving path is the portable
+//!   thread-per-connection loop (handler threads tracked and joined on
+//!   stop, accepts past `max_conns` shed with THROTTLE).
+//! * [`reactor`] (Linux) — the event-driven path behind
+//!   `ServerConfig::reactor`: one epoll readiness loop per reactor
+//!   thread multiplexing every connection, decode-in-place framing into
+//!   shared-buffer samples, non-blocking shard admission with
+//!   completions delivered through an eventfd doorbell, and bounded
+//!   per-connection in-flight windows answered with THROTTLE when
+//!   exceeded. Built on [`sys`], raw epoll/eventfd bindings (the vendor
+//!   set is frozen — no `libc`/`mio`).
 //! * [`cloud`] — [`CloudStageServer`]: executes only the suffix stages
 //!   `split+1..=N` of each INFER_PARTIAL frame. Every frame carries its
 //!   own cut, so the server never needs the live partition plan.
@@ -24,10 +35,17 @@
 
 pub mod cloud;
 pub mod protocol;
+#[cfg(target_os = "linux")]
+pub(crate) mod reactor;
 pub mod remote;
+#[cfg(target_os = "linux")]
+pub mod sys;
 pub mod tcp;
 
 pub use cloud::CloudStageServer;
 pub use protocol::{PartialSample, Request, Response};
 pub use remote::{RemoteCloudConfig, RemoteCloudEngine, RemoteCloudStats};
-pub use tcp::{Client, PartialOutput, ServeBackend, Server, ServerHandle};
+pub use tcp::{
+    Client, PartialOutput, ServeBackend, Server, ServerConfig, ServerHandle, ServerStats,
+    ServerStatsSnapshot, Submission, THROTTLE_RETRY_AFTER_MS,
+};

@@ -58,6 +58,14 @@
 //!   kind 4 PARTIAL_RESULT_SEQ — u32 seq | u32 n | n × (u32 class |
 //!                           u8 exited | f32 entropy) | f64 cloud_s
 //!                           (kind 3 with the request's seq echoed first)
+//!   kind 5 THROTTLE       — u32 retry_after_ms
+//!                           (explicit backpressure: the request it answers
+//!                           was NOT processed — the connection exceeded its
+//!                           in-flight window, the server is over
+//!                           --max-conns, or the shard admission queue
+//!                           rejected. The client should back off at least
+//!                           retry_after_ms before resending; the
+//!                           connection itself stays healthy)
 //!   kind 254 ERROR_SEQ    — u32 seq | u32 len | UTF-8 message
 //!                           (an ERROR bound to one in-flight kind-5
 //!                           request instead of the whole connection)
@@ -168,6 +176,12 @@ pub enum Response {
     /// An error bound to one in-flight kind-5 request (the connection —
     /// and its other in-flight requests — stay healthy).
     ErrorSeq { seq: u32, message: String },
+    /// Explicit backpressure: the request this frame answers was **not**
+    /// processed (connection over its in-flight window, server over
+    /// `--max-conns`, or shard admission queue full). The client should
+    /// wait at least `retry_after_ms` before resending; the connection
+    /// stays healthy.
+    Throttle { retry_after_ms: u32 },
     Error(String),
 }
 
@@ -249,11 +263,16 @@ fn take_f32_payload(shape: Vec<usize>, n: usize, data_bytes: &[u8]) -> Result<Ho
             n * 4
         );
     }
-    let data: Vec<f32> = data_bytes
+    // Decode-in-place contract: parse straight out of the read buffer
+    // into the tensor's shared allocation. `ChunksExact` sizes the
+    // collect exactly, so this is the one and only f32 buffer the
+    // sample ever owns — admission and coordinator hops clone the
+    // `Arc`, not the data.
+    let data: std::sync::Arc<[f32]> = data_bytes
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
         .collect();
-    HostTensor::new(shape, data)
+    HostTensor::from_shared(shape, data)
 }
 
 fn take_tensor(rest: &[u8]) -> Result<HostTensor> {
@@ -645,6 +664,10 @@ impl Response {
                 put_u32(&mut b, *seq);
                 put_partial_body(&mut b, samples, *cloud_s);
             }
+            Response::Throttle { retry_after_ms } => {
+                b.push(5);
+                put_u32(&mut b, *retry_after_ms);
+            }
             Response::ErrorSeq { seq, message } => {
                 b.push(254);
                 put_u32(&mut b, *seq);
@@ -690,6 +713,14 @@ impl Response {
                     seq,
                     samples,
                     cloud_s,
+                })
+            }
+            5 => {
+                if rest.len() != 4 {
+                    bail!("bad THROTTLE length {}", rest.len());
+                }
+                Ok(Response::Throttle {
+                    retry_after_ms: u32::from_le_bytes(rest[0..4].try_into().unwrap()),
                 })
             }
             254 => {
@@ -899,6 +930,30 @@ mod tests {
         let mut trunc = one.encode();
         trunc.truncate(trunc.len() - 3);
         assert!(Response::decode(&trunc).is_err());
+    }
+
+    #[test]
+    fn throttle_roundtrips() {
+        for retry_after_ms in [0u32, 1, 25, 60_000, u32::MAX] {
+            let r = Response::Throttle { retry_after_ms };
+            assert_eq!(roundtrip_resp(&r), r);
+        }
+        // The hint must change the wire bytes.
+        let a = Response::Throttle { retry_after_ms: 10 };
+        let b = Response::Throttle { retry_after_ms: 20 };
+        assert_ne!(a.encode(), b.encode());
+        // THROTTLE must be distinguishable from every other kind byte.
+        assert_eq!(a.encode()[0], 5);
+    }
+
+    #[test]
+    fn throttle_rejects_malformed_bodies() {
+        // Truncated hint.
+        assert!(Response::decode(&[5]).is_err());
+        assert!(Response::decode(&[5, 1]).is_err());
+        assert!(Response::decode(&[5, 1, 0, 0]).is_err());
+        // Trailing garbage after the hint.
+        assert!(Response::decode(&[5, 1, 0, 0, 0, 9]).is_err());
     }
 
     #[test]

@@ -1,0 +1,661 @@
+//! Event-driven serving front end: a small number of reactor threads
+//! drive every client connection through one epoll readiness loop each,
+//! instead of one blocked OS thread per connection.
+//!
+//! ```text
+//!            ┌────────────── reactor thread 0 ───────────────┐
+//!  accept ──►│ epoll: listener | eventfd | conns…            │
+//!            │   read → decode-in-place → submit_infer ──────┼──► shard
+//!            │   completions (tag, resp) ◄── eventfd wake ───┼─── queues
+//!            │   ordered slots → write buffer → EPOLLOUT     │
+//!            └───────────────────────────────────────────────┘
+//!              (threads 1..N: same loop, conns handed off
+//!               round-robin over an mpsc + eventfd doorbell)
+//! ```
+//!
+//! Design points:
+//!
+//! * **Decode-in-place framing.** Each connection owns a grow-only read
+//!   buffer; frames are parsed at an offset without re-allocating per
+//!   request, and tensor payloads are collected straight into the
+//!   sample's shared `Arc<[f32]>` (see `protocol::take_f32_payload`) so
+//!   admission and every coordinator hop clone a refcount, not floats.
+//! * **Never block the loop.** INFER/INFER_CLASS go through
+//!   [`ServeBackend::submit_infer`] — a queue admission returning
+//!   immediately — and finished inferences come back as `(tag,
+//!   response)` completions through a lock-guarded queue plus an
+//!   eventfd doorbell. PING/METRICS and the partial-inference kinds are
+//!   answered inline via [`super::tcp::respond_sync`] (cloud-stage
+//!   suffix compute is the server's whole job; fleets answer partials
+//!   with the same ERROR the thread path sends).
+//! * **Responses stay ordered per connection.** Each connection keeps a
+//!   FIFO of slots (ready bytes or a pending tag); the write buffer
+//!   only ever consumes the ready prefix, so out-of-order shard
+//!   completions cannot reorder answers on the wire.
+//! * **Backpressure is explicit.** A frame past the connection's
+//!   in-flight window, or one the shard admission queue rejects, is
+//!   answered with a THROTTLE frame (kind 5, retry-after hint) — never
+//!   silently queued or dropped. Accepts past `max_conns` are shed the
+//!   same way, with one THROTTLE before close.
+
+#![cfg(target_os = "linux")]
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::{CompletionSink, InferenceResponse, ReplyTo};
+
+use super::protocol::{Request, Response, MAGIC, MAX_BODY};
+use super::sys::{Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP};
+use super::tcp::{
+    respond_sync, result_response, shed_connection, ServeBackend, ServerConfig, ServerStats,
+    Submission, THROTTLE_RETRY_AFTER_MS,
+};
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const TOKEN_FIRST_CONN: u64 = 2;
+/// Per-readiness read granularity. Level-triggered epoll re-fires while
+/// bytes remain, so a short chunk costs another loop pass, not a stall.
+const READ_CHUNK: usize = 64 * 1024;
+const EVENT_BATCH: usize = 256;
+
+/// The completion funnel of one reactor thread: shard workers push
+/// `(tag, response)` and ring the thread's doorbell; the loop drains on
+/// the next wakeup. One of these exists per thread so a completion
+/// never crosses reactor threads.
+struct Completions {
+    queue: Mutex<VecDeque<(u64, InferenceResponse)>>,
+    waker: Arc<EventFd>,
+}
+
+impl CompletionSink for Completions {
+    fn complete(&self, tag: u64, resp: InferenceResponse) {
+        self.queue.lock().unwrap().push_back((tag, resp));
+        self.waker.wake();
+    }
+}
+
+/// One per-connection answer slot, in request order. The writer only
+/// consumes the ready prefix.
+enum Slot {
+    /// Framed response bytes, ready to ship.
+    Ready(Vec<u8>),
+    /// Waiting on the completion carrying this tag.
+    Pending(u64),
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Grow-only read buffer; `rpos` is the parse offset into it.
+    rbuf: Vec<u8>,
+    rpos: usize,
+    /// Pending output (already framed); `wpos` is the flush offset.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Ordered answers: ready bytes or in-flight tags.
+    slots: VecDeque<Slot>,
+    /// Async submissions awaiting completion (ready slots excluded).
+    inflight: usize,
+    /// Whether EPOLLOUT is currently part of the registered interest.
+    wants_out: bool,
+    /// Peer sent EOF but answers are still owed: read interest is
+    /// dropped (a level-triggered EOF would spin the loop) and the
+    /// connection closes once everything owed has flushed.
+    read_closed: bool,
+    /// Forces one interest re-registration on the next flush.
+    interest_dirty: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            rpos: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            slots: VecDeque::new(),
+            inflight: 0,
+            wants_out: false,
+            read_closed: false,
+            interest_dirty: false,
+        }
+    }
+}
+
+fn frame_bytes(body: &[u8]) -> Vec<u8> {
+    let mut f = Vec::with_capacity(8 + body.len());
+    f.extend_from_slice(&MAGIC.to_le_bytes());
+    f.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    f.extend_from_slice(body);
+    f
+}
+
+fn throttle_frame() -> Vec<u8> {
+    frame_bytes(
+        &Response::Throttle {
+            retry_after_ms: THROTTLE_RETRY_AFTER_MS,
+        }
+        .encode(),
+    )
+}
+
+pub(super) struct ReactorHandle {
+    stop: Arc<AtomicBool>,
+    wakers: Vec<Arc<EventFd>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ReactorHandle {
+    pub(super) fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for w in &self.wakers {
+            w.wake();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start `cfg.reactor_threads` readiness loops over `listener`. Thread
+/// 0 owns the listener and deals accepted connections round-robin;
+/// every thread serves its own connection set to completion.
+pub(super) fn start<B: ServeBackend>(
+    backend: Arc<B>,
+    listener: TcpListener,
+    cfg: ServerConfig,
+    stats: Arc<ServerStats>,
+) -> Result<ReactorHandle> {
+    listener.set_nonblocking(true)?;
+    let n = cfg.reactor_threads;
+    let stop = Arc::new(AtomicBool::new(false));
+    let wakers: Vec<Arc<EventFd>> = (0..n)
+        .map(|_| EventFd::new().map(Arc::new))
+        .collect::<std::io::Result<_>>()?;
+
+    // Handoff lanes into threads 1..n (thread 0 registers directly).
+    let mut senders: Vec<mpsc::Sender<TcpStream>> = Vec::new();
+    let mut receivers: Vec<mpsc::Receiver<TcpStream>> = Vec::new();
+    for _ in 1..n {
+        let (tx, rx) = mpsc::channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+
+    let mut threads = Vec::with_capacity(n);
+    for i in (0..n).rev() {
+        // Reverse order so thread 0 (which needs every waker for
+        // handoff doorbells) is built last, after the workers took
+        // their receivers.
+        let worker = Worker {
+            backend: backend.clone(),
+            stats: stats.clone(),
+            stop: stop.clone(),
+            waker: wakers[i].clone(),
+            listener: if i == 0 { Some(listener.try_clone()?) } else { None },
+            handoff: if i == 0 { None } else { Some(receivers.remove(i - 1)) },
+            lanes: if i == 0 {
+                senders
+                    .iter()
+                    .cloned()
+                    .zip(wakers[1..].iter().cloned())
+                    .collect()
+            } else {
+                Vec::new()
+            },
+            max_conns: cfg.max_conns,
+            conn_window: cfg.conn_window,
+        };
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("reactor-{i}"))
+                .spawn(move || worker.run())?,
+        );
+    }
+
+    Ok(ReactorHandle {
+        stop,
+        wakers,
+        threads,
+    })
+}
+
+struct Worker<B: ServeBackend> {
+    backend: Arc<B>,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    waker: Arc<EventFd>,
+    /// Thread 0 only.
+    listener: Option<TcpListener>,
+    /// Threads 1..n only: connections handed over by thread 0.
+    handoff: Option<mpsc::Receiver<TcpStream>>,
+    /// Thread 0 only: handoff senders + doorbells of threads 1..n.
+    lanes: Vec<(mpsc::Sender<TcpStream>, Arc<EventFd>)>,
+    max_conns: usize,
+    conn_window: usize,
+}
+
+/// What one connection event amounted to.
+enum ConnFate {
+    Alive,
+    Closed,
+}
+
+impl<B: ServeBackend> Worker<B> {
+    fn run(self) {
+        if let Err(e) = self.run_inner() {
+            log::error!("reactor thread failed: {e:#}");
+        }
+    }
+
+    fn run_inner(&self) -> Result<()> {
+        let epoll = Epoll::new()?;
+        epoll.add(self.waker.as_raw_fd(), EPOLLIN, TOKEN_WAKER)?;
+        if let Some(l) = &self.listener {
+            epoll.add(l.as_raw_fd(), EPOLLIN, TOKEN_LISTENER)?;
+        }
+        let sink = Arc::new(Completions {
+            queue: Mutex::new(VecDeque::new()),
+            waker: self.waker.clone(),
+        });
+
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        // tag -> connection token, for routing completions. Tags are
+        // thread-local and never reused; a tag whose connection died is
+        // simply absent.
+        let mut tags: HashMap<u64, u64> = HashMap::new();
+        let mut next_token = TOKEN_FIRST_CONN;
+        let mut next_tag: u64 = 0;
+        let mut rr: usize = 0;
+        let mut events = [EpollEvent::zeroed(); EVENT_BATCH];
+
+        while !self.stop.load(Ordering::SeqCst) {
+            let n = epoll.wait(&mut events, -1)?;
+            for ev in &events[..n] {
+                let token = { ev.token };
+                let fired = { ev.events };
+                match token {
+                    TOKEN_LISTENER => {
+                        self.accept_ready(&epoll, &mut conns, &mut next_token, &mut rr)
+                    }
+                    TOKEN_WAKER => {
+                        self.waker.drain();
+                        if self.stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        // Connections handed over by thread 0.
+                        if let Some(rx) = &self.handoff {
+                            while let Ok(stream) = rx.try_recv() {
+                                register_conn(&epoll, &mut conns, &mut next_token, stream);
+                            }
+                        }
+                        // Finished inferences.
+                        loop {
+                            let item = sink.queue.lock().unwrap().pop_front();
+                            let Some((tag, resp)) = item else { break };
+                            self.deliver(&epoll, &mut conns, &mut tags, tag, resp);
+                        }
+                    }
+                    token => {
+                        let fate = match conns.get_mut(&token) {
+                            None => continue, // closed earlier this batch
+                            Some(conn) => {
+                                if fired & (EPOLLERR | EPOLLHUP) != 0 {
+                                    ConnFate::Closed
+                                } else {
+                                    self.conn_ready(
+                                        &epoll, conn, fired, &sink, &mut tags, token,
+                                        &mut next_tag,
+                                    )
+                                }
+                            }
+                        };
+                        if matches!(fate, ConnFate::Closed) {
+                            close_conn(&epoll, &mut conns, &mut tags, token, &self.stats);
+                        }
+                    }
+                }
+            }
+        }
+        // Teardown: every live connection closes with the server.
+        for _ in conns.values() {
+            self.stats.connection_closed();
+        }
+        Ok(())
+    }
+
+    /// Drain the (nonblocking) listener: shed over `max_conns`, deal
+    /// the rest round-robin across the reactor threads.
+    fn accept_ready(
+        &self,
+        epoll: &Epoll,
+        conns: &mut HashMap<u64, Conn>,
+        next_token: &mut u64,
+        rr: &mut usize,
+    ) {
+        loop {
+            match self.listener.as_ref().expect("listener thread").accept() {
+                Ok((stream, _)) => {
+                    if self.max_conns > 0
+                        && self.stats.active.load(Ordering::Relaxed) >= self.max_conns as u64
+                    {
+                        shed_connection(stream, &self.stats);
+                        continue;
+                    }
+                    self.stats.connection_opened();
+                    stream.set_nodelay(true).ok();
+                    if stream.set_nonblocking(true).is_err() {
+                        self.stats.connection_closed();
+                        continue;
+                    }
+                    let lane = *rr % (self.lanes.len() + 1);
+                    *rr += 1;
+                    if lane == 0 {
+                        register_conn(epoll, conns, next_token, stream);
+                    } else {
+                        let (tx, doorbell) = &self.lanes[lane - 1];
+                        if tx.send(stream).is_ok() {
+                            doorbell.wake();
+                        } else {
+                            self.stats.connection_closed();
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    log::warn!("accept error: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Readiness on one connection: read + parse everything available,
+    /// then flush what became writable.
+    #[allow(clippy::too_many_arguments)]
+    fn conn_ready(
+        &self,
+        epoll: &Epoll,
+        conn: &mut Conn,
+        fired: u32,
+        sink: &Arc<Completions>,
+        tags: &mut HashMap<u64, u64>,
+        token: u64,
+        next_tag: &mut u64,
+    ) -> ConnFate {
+        if fired & (EPOLLIN | EPOLLRDHUP) != 0 {
+            match self.read_and_parse(conn, sink, tags, token, next_tag) {
+                ConnFate::Closed => return ConnFate::Closed,
+                ConnFate::Alive => {}
+            }
+        }
+        flush_conn(epoll, conn, token)
+    }
+
+    /// Pull bytes into the grow-only buffer and parse every complete
+    /// frame at the current offset.
+    fn read_and_parse(
+        &self,
+        conn: &mut Conn,
+        sink: &Arc<Completions>,
+        tags: &mut HashMap<u64, u64>,
+        token: u64,
+        next_tag: &mut u64,
+    ) -> ConnFate {
+        let mut saw_eof = false;
+        loop {
+            let old = conn.rbuf.len();
+            conn.rbuf.resize(old + READ_CHUNK, 0);
+            match conn.stream.read(&mut conn.rbuf[old..]) {
+                Ok(0) => {
+                    conn.rbuf.truncate(old);
+                    saw_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.rbuf.truncate(old + n);
+                    if n < READ_CHUNK {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    conn.rbuf.truncate(old);
+                    break;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                    conn.rbuf.truncate(old);
+                }
+                Err(_) => {
+                    conn.rbuf.truncate(old);
+                    return ConnFate::Closed;
+                }
+            }
+        }
+
+        // Parse frames in place at the offset.
+        while conn.rbuf.len() - conn.rpos >= 8 {
+            let head = &conn.rbuf[conn.rpos..conn.rpos + 8];
+            let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+            let len = u32::from_le_bytes(head[4..8].try_into().unwrap());
+            if magic != MAGIC || len > MAX_BODY {
+                return ConnFate::Closed; // hostile/garbled peer
+            }
+            let len = len as usize;
+            if conn.rbuf.len() - conn.rpos < 8 + len {
+                break; // frame incomplete — wait for more bytes
+            }
+            let start = conn.rpos + 8;
+            // Request::decode returns an owned Request (tensors collect
+            // into their shared Arc here), so no borrow of rbuf
+            // outlives this statement.
+            let decoded = Request::decode(&conn.rbuf[start..start + len]);
+            conn.rpos += 8 + len;
+            self.backend.note_io(len as u64 + 8, 0);
+            self.handle_request(conn, decoded, sink, tags, token, next_tag);
+        }
+        // Compact the consumed prefix; capacity is retained, so the
+        // buffer stays grow-only across the connection's lifetime.
+        if conn.rpos > 0 {
+            conn.rbuf.drain(..conn.rpos);
+            conn.rpos = 0;
+        }
+
+        if saw_eof {
+            if conn.inflight == 0 && conn.slots.is_empty() && conn.wbuf.is_empty() {
+                return ConnFate::Closed;
+            }
+            // EOF with answers still owed: stop watching reads (a
+            // level-triggered EOF stays readable and would spin the
+            // loop) and let the flush path close once everything owed
+            // is on the wire.
+            conn.read_closed = true;
+            conn.interest_dirty = true;
+        }
+        ConnFate::Alive
+    }
+
+    fn handle_request(
+        &self,
+        conn: &mut Conn,
+        decoded: Result<Request>,
+        sink: &Arc<Completions>,
+        tags: &mut HashMap<u64, u64>,
+        token: u64,
+        next_tag: &mut u64,
+    ) {
+        let req = match decoded {
+            Err(e) => {
+                self.push_ready(conn, &Response::Error(format!("{e:#}")).encode());
+                return;
+            }
+            Ok(r) => r,
+        };
+        let (class, image) = match req {
+            Request::Infer(t) => (None, t),
+            Request::InferClass { class, image } => (Some(class), image),
+            other => {
+                // PING / METRICS / partial kinds: answered inline via
+                // the same dispatch the thread path uses.
+                self.push_ready(conn, &respond_sync(self.backend.as_ref(), other).encode());
+                return;
+            }
+        };
+        if conn.inflight >= self.conn_window {
+            self.push_throttle(conn);
+            return;
+        }
+        let tag = *next_tag;
+        *next_tag += 1;
+        let reply = ReplyTo::Sink {
+            sink: sink.clone() as Arc<dyn CompletionSink>,
+            tag,
+        };
+        match self.backend.submit_infer(class, image, reply) {
+            Submission::Queued(_id) => {
+                tags.insert(tag, token);
+                conn.inflight += 1;
+                conn.slots.push_back(Slot::Pending(tag));
+            }
+            Submission::Ready(Ok(r)) => self.push_ready(conn, &result_response(&r).encode()),
+            Submission::Ready(Err(e)) => {
+                self.push_ready(conn, &Response::Error(format!("{e:#}")).encode())
+            }
+            Submission::Busy => self.push_throttle(conn),
+        }
+    }
+
+    fn push_ready(&self, conn: &mut Conn, body: &[u8]) {
+        self.backend.note_io(0, body.len() as u64 + 8);
+        conn.slots.push_back(Slot::Ready(frame_bytes(body)));
+    }
+
+    fn push_throttle(&self, conn: &mut Conn) {
+        self.stats.throttled.fetch_add(1, Ordering::Relaxed);
+        let frame = throttle_frame();
+        self.backend.note_io(0, frame.len() as u64);
+        conn.slots.push_back(Slot::Ready(frame));
+    }
+
+    /// Route one completion to its connection's pending slot and flush.
+    fn deliver(
+        &self,
+        epoll: &Epoll,
+        conns: &mut HashMap<u64, Conn>,
+        tags: &mut HashMap<u64, u64>,
+        tag: u64,
+        resp: InferenceResponse,
+    ) {
+        let Some(token) = tags.remove(&tag) else {
+            return; // connection closed while the request was in flight
+        };
+        let Some(conn) = conns.get_mut(&token) else {
+            return;
+        };
+        if let Some(slot) = conn
+            .slots
+            .iter_mut()
+            .find(|s| matches!(s, Slot::Pending(t) if *t == tag))
+        {
+            let body = result_response(&resp).encode();
+            self.backend.note_io(0, body.len() as u64 + 8);
+            *slot = Slot::Ready(frame_bytes(&body));
+        }
+        conn.inflight = conn.inflight.saturating_sub(1);
+        if matches!(flush_conn(epoll, conn, token), ConnFate::Closed) {
+            close_conn(epoll, conns, tags, token, &self.stats);
+        }
+    }
+}
+
+fn register_conn(
+    epoll: &Epoll,
+    conns: &mut HashMap<u64, Conn>,
+    next_token: &mut u64,
+    stream: TcpStream,
+) {
+    let token = *next_token;
+    *next_token += 1;
+    if epoll
+        .add(stream.as_raw_fd(), EPOLLIN | EPOLLRDHUP, token)
+        .is_ok()
+    {
+        conns.insert(token, Conn::new(stream));
+    }
+}
+
+fn close_conn(
+    epoll: &Epoll,
+    conns: &mut HashMap<u64, Conn>,
+    tags: &mut HashMap<u64, u64>,
+    token: u64,
+    stats: &ServerStats,
+) {
+    if let Some(conn) = conns.remove(&token) {
+        let _ = epoll.delete(conn.stream.as_raw_fd());
+        // Orphan this connection's in-flight tags: late completions
+        // will find no route and be dropped.
+        for slot in &conn.slots {
+            if let Slot::Pending(tag) = slot {
+                tags.remove(tag);
+            }
+        }
+        stats.connection_closed();
+    }
+}
+
+/// Move the ready slot prefix into the write buffer, write as much as
+/// the socket takes, and keep EPOLLOUT registered exactly while bytes
+/// remain.
+fn flush_conn(epoll: &Epoll, conn: &mut Conn, token: u64) -> ConnFate {
+    while let Some(Slot::Ready(_)) = conn.slots.front() {
+        let Some(Slot::Ready(bytes)) = conn.slots.pop_front() else {
+            unreachable!("front checked above");
+        };
+        conn.wbuf.extend_from_slice(&bytes);
+    }
+    while conn.wpos < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => return ConnFate::Closed,
+            Ok(n) => conn.wpos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return ConnFate::Closed,
+        }
+    }
+    if conn.wpos == conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+    }
+    if conn.read_closed && conn.inflight == 0 && conn.slots.is_empty() && conn.wbuf.is_empty() {
+        return ConnFate::Closed; // half-closed peer, nothing owed
+    }
+    let wants_out = !conn.wbuf.is_empty();
+    if wants_out != conn.wants_out || conn.interest_dirty {
+        let mut interest = if conn.read_closed {
+            0 // ERR/HUP still fire with an empty interest set
+        } else {
+            EPOLLIN | EPOLLRDHUP
+        };
+        if wants_out {
+            interest |= EPOLLOUT;
+        }
+        if epoll
+            .modify(conn.stream.as_raw_fd(), interest, token)
+            .is_err()
+        {
+            return ConnFate::Closed;
+        }
+        conn.wants_out = wants_out;
+        conn.interest_dirty = false;
+    }
+    ConnFate::Alive
+}

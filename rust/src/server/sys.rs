@@ -1,0 +1,236 @@
+//! Raw Linux epoll/eventfd bindings for the reactor front end.
+//!
+//! The vendor set is frozen (no `libc`/`mio` crates), so the handful of
+//! syscalls the readiness loop needs are declared here directly against
+//! the C library std already links. Everything is wrapped in two small
+//! RAII types — [`Epoll`] and [`EventFd`] — so the `unsafe` surface
+//! stays inside this file; errno is read via
+//! `std::io::Error::last_os_error()` like std itself does.
+//!
+//! Level-triggered only: the reactor re-arms nothing and never misses a
+//! wakeup, at the cost of spurious readiness — which its
+//! read-until-`WouldBlock` loops absorb.
+
+#![cfg(target_os = "linux")]
+
+use std::io;
+use std::os::fd::RawFd;
+use std::os::raw::{c_int, c_uint, c_void};
+
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+/// Peer shut down its write half — the read loop will see EOF.
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+const EPOLL_CLOEXEC: c_int = 0x80000;
+const EFD_CLOEXEC: c_int = 0x80000;
+const EFD_NONBLOCK: c_int = 0x800;
+
+/// `struct epoll_event`. The kernel ABI packs it on x86-64 (12 bytes);
+/// other architectures use natural alignment (16 bytes).
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    pub events: u32,
+    /// Caller-chosen token identifying the registered fd.
+    pub token: u64,
+}
+
+impl EpollEvent {
+    pub fn zeroed() -> EpollEvent {
+        EpollEvent { events: 0, token: 0 }
+    }
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(epfd: c_int, events: *mut EpollEvent, maxevents: c_int, timeout: c_int)
+        -> c_int;
+    fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    fn close(fd: c_int) -> c_int;
+}
+
+fn cvt(ret: c_int) -> io::Result<c_int> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+/// An epoll instance (closed on drop).
+pub struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    pub fn new() -> io::Result<Epoll> {
+        let fd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, token };
+        cvt(unsafe { epoll_ctl(self.fd, op, fd, &mut ev) })?;
+        Ok(())
+    }
+
+    /// Register `fd` under `token` for `events` (level-triggered).
+    pub fn add(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    /// Change the interest set of an already-registered fd.
+    pub fn modify(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        // The event argument is ignored for DEL (non-NULL only for
+        // pre-2.6.9 kernels, which std does not support either).
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Block up to `timeout_ms` (-1 = forever) for readiness; fills
+    /// `events` and returns how many fired. EINTR retries internally.
+    pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let n = unsafe {
+                epoll_wait(
+                    self.fd,
+                    events.as_mut_ptr(),
+                    events.len() as c_int,
+                    timeout_ms,
+                )
+            };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+/// A nonblocking eventfd: the reactor's cross-thread doorbell. Any
+/// thread may [`EventFd::wake`]; the owning reactor thread registers it
+/// in its epoll set and [`EventFd::drain`]s on readiness.
+pub struct EventFd {
+    fd: RawFd,
+}
+
+impl EventFd {
+    pub fn new() -> io::Result<EventFd> {
+        let fd = cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?;
+        Ok(EventFd { fd })
+    }
+
+    pub fn as_raw_fd(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Add 1 to the counter, waking any epoll_wait watching this fd.
+    /// Best-effort: an EAGAIN (counter at u64::MAX − 1, impossible in
+    /// practice) still leaves the fd readable, so the wakeup is never
+    /// lost.
+    pub fn wake(&self) {
+        let one: u64 = 1;
+        unsafe {
+            write(self.fd, (&one as *const u64).cast::<c_void>(), 8);
+        }
+    }
+
+    /// Reset the counter so the (level-triggered) fd goes quiet until
+    /// the next wake.
+    pub fn drain(&self) {
+        let mut buf: u64 = 0;
+        unsafe {
+            read(self.fd, (&mut buf as *mut u64).cast::<c_void>(), 8);
+        }
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+// eventfd wakes cross threads by design; the fd is just an integer.
+unsafe impl Send for EventFd {}
+unsafe impl Sync for EventFd {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eventfd_wakes_epoll_and_drains_quiet() {
+        let ep = Epoll::new().unwrap();
+        let efd = EventFd::new().unwrap();
+        ep.add(efd.as_raw_fd(), EPOLLIN, 7).unwrap();
+        // Nothing pending: a zero-timeout wait sees nothing.
+        let mut events = [EpollEvent::zeroed(); 4];
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+        // A wake (from any thread) makes it readable under our token.
+        let waker = std::thread::spawn(move || efd.wake());
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!({ events[0].token }, 7);
+        assert_ne!({ events[0].events } & EPOLLIN, 0);
+        waker.join().unwrap();
+    }
+
+    #[test]
+    fn epoll_tracks_socket_readiness() {
+        use std::io::Write;
+        use std::net::{TcpListener, TcpStream};
+        use std::os::fd::AsRawFd;
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let ep = Epoll::new().unwrap();
+        ep.add(server.as_raw_fd(), EPOLLIN | EPOLLRDHUP, 42).unwrap();
+        let mut events = [EpollEvent::zeroed(); 4];
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0, "idle socket is quiet");
+
+        client.write_all(b"x").unwrap();
+        client.flush().unwrap();
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!({ events[0].token }, 42);
+        assert_ne!({ events[0].events } & EPOLLIN, 0);
+
+        // Interest can be switched to write readiness (MOD) and back.
+        ep.modify(server.as_raw_fd(), EPOLLOUT, 42).unwrap();
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_ne!({ events[0].events } & EPOLLOUT, 0);
+        ep.delete(server.as_raw_fd()).unwrap();
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0, "deleted fd is gone");
+    }
+}

@@ -1,19 +1,40 @@
-//! TCP accept loop + a blocking client, speaking `protocol` frames in
+//! TCP front end + a blocking client, speaking `protocol` frames in
 //! front of any [`ServeBackend`] — a single [`Coordinator`] pipeline or
 //! a whole [`crate::fleet::Fleet`].
+//!
+//! Two serving paths share the [`Server`] API and one dispatch table:
+//!
+//! * **Thread-per-connection** (this module): portable fallback. One
+//!   blocking handler thread per accepted connection; handler threads
+//!   are tracked and joined on [`ServerHandle::stop`], and accepts past
+//!   `max_conns` are shed with a THROTTLE frame instead of spawning
+//!   unbounded threads.
+//! * **Reactor** ([`super::reactor`], Linux): one epoll readiness loop
+//!   (or `reactor_threads` of them) multiplexing every connection,
+//!   decode-in-place framing, bounded per-connection in-flight windows
+//!   and queue-rejection backpressure as THROTTLE frames.
+//!
+//! Both paths answer byte-identical responses for the same request
+//! stream — the reactor reuses [`respond_sync`] / [`result_response`]
+//! from here, so the dispatch can't drift.
 
-use std::io::{BufReader, BufWriter};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Coordinator, InferenceResponse};
+use crate::coordinator::{AdmitError, Coordinator, InferenceResponse, ReplyTo};
 use crate::network::encoding::WireEncoding;
 use crate::runtime::HostTensor;
 
 use super::protocol::{read_frame, write_frame, PartialSample, Request, Response};
+
+/// Retry hint carried by every server-originated THROTTLE frame, ms.
+/// Small on purpose: backpressure here is queue-depth, not outage, and
+/// a client that waits one batch window usually gets in.
+pub const THROTTLE_RETRY_AFTER_MS: u32 = 25;
 
 /// What a backend returns for one INFER_PARTIAL batch: one record per
 /// input sample, in order, plus the backend's compute seconds.
@@ -23,12 +44,129 @@ pub struct PartialOutput {
     pub cloud_s: f64,
 }
 
+/// Outcome of a non-blocking [`ServeBackend::submit_infer`] admission.
+#[derive(Debug)]
+pub enum Submission {
+    /// Admitted: the response will arrive at the submitted [`ReplyTo`]
+    /// sink under the caller's tag. Carries the backend request id.
+    Queued(u64),
+    /// Completed synchronously (backends without an admission queue —
+    /// the default implementation). `Err` maps to an ERROR frame.
+    Ready(Result<InferenceResponse>),
+    /// Transient backpressure (admission queue full) — the front end
+    /// answers a THROTTLE frame and the request was *not* processed.
+    Busy,
+}
+
+/// Front-end connection counters, shared by both serving paths and —
+/// via [`ServeBackend::register_server_stats`] — surfaced inside the
+/// backend's own metrics JSON.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    /// Connections accepted and handed to a handler (shed ones excluded).
+    pub accepted: AtomicU64,
+    /// Connections currently open.
+    pub active: AtomicU64,
+    /// High-water mark of `active`.
+    pub conn_peak: AtomicU64,
+    /// THROTTLE frames sent (window exceeded or admission queue full).
+    pub throttled: AtomicU64,
+    /// Connections refused at accept time by `max_conns`.
+    pub conns_shed: AtomicU64,
+}
+
+/// Plain-data copy of [`ServerStats`] (one relaxed load per counter).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServerStatsSnapshot {
+    pub accepted: u64,
+    pub active: u64,
+    pub conn_peak: u64,
+    pub throttled: u64,
+    pub conns_shed: u64,
+}
+
+impl ServerStats {
+    /// Count one accepted connection; updates `active` and `conn_peak`.
+    pub fn connection_opened(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+        let now = self.active.fetch_add(1, Ordering::Relaxed) + 1;
+        self.conn_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    pub fn connection_closed(&self) {
+        self.active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ServerStatsSnapshot {
+        ServerStatsSnapshot {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            active: self.active.load(Ordering::Relaxed),
+            conn_peak: self.conn_peak.load(Ordering::Relaxed),
+            throttled: self.throttled.load(Ordering::Relaxed),
+            conns_shed: self.conns_shed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Decrements `active` when the connection handler exits, however it
+/// exits.
+struct ActiveGuard(Arc<ServerStats>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.connection_closed();
+    }
+}
+
+/// Front-end tuning shared by both serving paths.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Serve with the event-driven reactor (Linux). Elsewhere the flag
+    /// logs a warning and the portable thread-per-connection path runs.
+    pub reactor: bool,
+    /// Reactor threads (≥ 1). Thread 0 owns the listener and hands
+    /// accepted connections to the others round-robin.
+    pub reactor_threads: usize,
+    /// Accept-time connection cap, enforced on both paths; 0 =
+    /// unlimited. Over the cap a connection is answered one THROTTLE
+    /// frame and closed, counted in `conns_shed`.
+    pub max_conns: usize,
+    /// Per-connection in-flight request window (reactor path only —
+    /// the thread path is lockstep, window 1 by construction). Frames
+    /// past the window are answered THROTTLE without touching
+    /// admission.
+    pub conn_window: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            reactor: false,
+            reactor_threads: 1,
+            max_conns: 0,
+            conn_window: 32,
+        }
+    }
+}
+
 /// What the TCP front-end needs from whatever is serving behind it.
 pub trait ServeBackend: Send + Sync + 'static {
     /// Serve one inference. `class` carries the protocol's link-class
     /// tag (`None` for an untagged legacy INFER); single-pipeline
     /// backends may ignore it.
     fn serve_infer(&self, class: Option<u8>, image: HostTensor) -> Result<InferenceResponse>;
+
+    /// Non-blocking admission for multiplexing front ends: queue the
+    /// request and deliver its response to `reply` later. The default
+    /// computes inline via [`ServeBackend::serve_infer`] and returns
+    /// [`Submission::Ready`] — correct for backends without an
+    /// admission queue; queue-backed backends ([`Coordinator`],
+    /// [`crate::fleet::Fleet`]) override with a true async submit so a
+    /// reactor thread never blocks on inference.
+    fn submit_infer(&self, class: Option<u8>, image: HostTensor, reply: ReplyTo) -> Submission {
+        let _ = reply;
+        Submission::Ready(self.serve_infer(class, image))
+    }
 
     /// Serve one INFER_PARTIAL batch: run stages `split+1..=N` on a
     /// batched activation the edge cut after stage `split`. Only
@@ -68,6 +206,13 @@ pub trait ServeBackend: Send + Sync + 'static {
         let _ = (bytes_received, bytes_sent);
     }
 
+    /// Called once by a starting [`Server`] so the backend can splice
+    /// the front end's connection counters into its own metrics JSON.
+    /// Default: not surfaced.
+    fn register_server_stats(&self, stats: Arc<ServerStats>) {
+        let _ = stats;
+    }
+
     /// JSON body of the METRICS response.
     fn metrics_json(&self) -> String;
 }
@@ -77,6 +222,16 @@ impl ServeBackend for Coordinator {
         self.infer_sync(image)
     }
 
+    fn submit_infer(&self, _class: Option<u8>, image: HostTensor, reply: ReplyTo) -> Submission {
+        match self.submit_reply(image, None, reply) {
+            Ok(id) => Submission::Queued(id),
+            Err(AdmitError::Busy) => Submission::Busy,
+            Err(AdmitError::Closed) => {
+                Submission::Ready(Err(anyhow::anyhow!("coordinator shut down")))
+            }
+        }
+    }
+
     fn metrics_json(&self) -> String {
         self.metrics().to_json()
     }
@@ -84,13 +239,32 @@ impl ServeBackend for Coordinator {
 
 pub struct Server<B: ServeBackend> {
     backend: Arc<B>,
+    config: ServerConfig,
+}
+
+/// One tracked thread-per-connection handler: the join handle plus a
+/// second OS handle to its socket, so `stop()` can shut the socket down
+/// and unblock the handler's `read_frame` before joining.
+struct ConnSlot {
+    handle: std::thread::JoinHandle<()>,
+    stream: TcpStream,
+}
+
+enum HandleInner {
+    Threads {
+        stop: Arc<AtomicBool>,
+        accept_thread: Option<std::thread::JoinHandle<()>>,
+        conns: Arc<Mutex<Vec<ConnSlot>>>,
+    },
+    #[cfg(target_os = "linux")]
+    Reactor(super::reactor::ReactorHandle),
 }
 
 /// Handle for stopping a running server.
 pub struct ServerHandle {
     addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<ServerStats>,
+    inner: HandleInner,
 }
 
 impl ServerHandle {
@@ -98,19 +272,55 @@ impl ServerHandle {
         self.addr
     }
 
+    /// The front end's live connection counters.
+    pub fn stats(&self) -> &Arc<ServerStats> {
+        &self.stats
+    }
+
+    /// Stop accepting, unblock and join every handler thread (or the
+    /// reactor threads). Returns promptly even with idle connections
+    /// open: open sockets are shut down first, so no handler is left
+    /// blocked in a read.
     pub fn stop(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        // Poke the accept loop with one last connection so it re-checks.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
+        match &mut self.inner {
+            HandleInner::Threads {
+                stop,
+                accept_thread,
+                conns,
+            } => {
+                stop.store(true, Ordering::SeqCst);
+                // Poke the accept loop with one last connection so it
+                // re-checks the flag.
+                let _ = TcpStream::connect(self.addr);
+                if let Some(t) = accept_thread.take() {
+                    let _ = t.join();
+                }
+                let slots = std::mem::take(&mut *conns.lock().unwrap());
+                // Shutdown first — every blocked read_frame returns —
+                // then join; two passes so one slow handler never delays
+                // another's wakeup.
+                for s in &slots {
+                    let _ = s.stream.shutdown(Shutdown::Both);
+                }
+                for s in slots {
+                    let _ = s.handle.join();
+                }
+            }
+            #[cfg(target_os = "linux")]
+            HandleInner::Reactor(r) => r.stop(),
         }
     }
 }
 
 impl<B: ServeBackend> Server<B> {
     pub fn new(backend: Arc<B>) -> Server<B> {
-        Server { backend }
+        Server::with_config(backend, ServerConfig::default())
+    }
+
+    pub fn with_config(backend: Arc<B>, mut config: ServerConfig) -> Server<B> {
+        config.reactor_threads = config.reactor_threads.max(1);
+        config.conn_window = config.conn_window.max(1);
+        Server { backend, config }
     }
 
     /// Bind loopback and serve in background threads. Port 0 picks a
@@ -126,11 +336,41 @@ impl<B: ServeBackend> Server<B> {
     pub fn start_on(self, bind: &str, port: u16) -> Result<ServerHandle> {
         let listener = TcpListener::bind((bind, port)).context("binding server socket")?;
         let addr = listener.local_addr()?;
+        let stats = Arc::new(ServerStats::default());
+        self.backend.register_server_stats(stats.clone());
+
+        if self.config.reactor {
+            #[cfg(target_os = "linux")]
+            {
+                log::info!(
+                    "serving on {addr} (reactor, {} thread(s))",
+                    self.config.reactor_threads
+                );
+                let handle = super::reactor::start(
+                    self.backend,
+                    listener,
+                    self.config,
+                    stats.clone(),
+                )?;
+                return Ok(ServerHandle {
+                    addr,
+                    stats,
+                    inner: HandleInner::Reactor(handle),
+                });
+            }
+            #[cfg(not(target_os = "linux"))]
+            log::warn!("--reactor needs Linux epoll; falling back to thread-per-connection");
+        }
+
+        log::info!("serving on {addr} (thread-per-connection)");
         let stop = Arc::new(AtomicBool::new(false));
-        log::info!("serving on {addr}");
+        let conns: Arc<Mutex<Vec<ConnSlot>>> = Arc::new(Mutex::new(Vec::new()));
 
         let stop2 = stop.clone();
+        let conns2 = conns.clone();
+        let stats2 = stats.clone();
         let backend = self.backend;
+        let max_conns = self.config.max_conns;
         let accept_thread = std::thread::Builder::new()
             .name("accept-loop".into())
             .spawn(move || {
@@ -140,14 +380,37 @@ impl<B: ServeBackend> Server<B> {
                     }
                     match conn {
                         Ok(stream) => {
+                            let mut slots = conns2.lock().unwrap();
+                            // Reap finished handlers so the slot list —
+                            // and the active-connection count the cap
+                            // reads — tracks live connections only.
+                            slots.retain(|s| !s.handle.is_finished());
+                            if max_conns > 0 && slots.len() >= max_conns {
+                                drop(slots);
+                                shed_connection(stream, &stats2);
+                                continue;
+                            }
+                            let Ok(shutdown_handle) = stream.try_clone() else {
+                                continue;
+                            };
+                            stats2.connection_opened();
+                            let guard = ActiveGuard(stats2.clone());
                             let b = backend.clone();
-                            let _ = std::thread::Builder::new()
+                            let spawned = std::thread::Builder::new()
                                 .name("conn".into())
                                 .spawn(move || {
+                                    let _guard = guard;
                                     if let Err(e) = handle_connection(stream, b.as_ref()) {
                                         log::debug!("connection ended: {e:#}");
                                     }
                                 });
+                            match spawned {
+                                Ok(handle) => slots.push(ConnSlot {
+                                    handle,
+                                    stream: shutdown_handle,
+                                }),
+                                Err(e) => log::warn!("spawning handler failed: {e}"),
+                            }
                         }
                         Err(e) => log::warn!("accept error: {e}"),
                     }
@@ -156,22 +419,100 @@ impl<B: ServeBackend> Server<B> {
 
         Ok(ServerHandle {
             addr,
-            stop,
-            accept_thread: Some(accept_thread),
+            stats,
+            inner: HandleInner::Threads {
+                stop,
+                accept_thread: Some(accept_thread),
+                conns,
+            },
         })
+    }
+}
+
+/// Refuse a connection over `max_conns`: answer one best-effort
+/// THROTTLE frame (the socket was just accepted, so its empty send
+/// buffer takes the 13 bytes without blocking) and close.
+pub(super) fn shed_connection(stream: TcpStream, stats: &ServerStats) {
+    stats.conns_shed.fetch_add(1, Ordering::Relaxed);
+    let mut w = BufWriter::new(stream);
+    let _ = write_frame(
+        &mut w,
+        &Response::Throttle {
+            retry_after_ms: THROTTLE_RETRY_AFTER_MS,
+        }
+        .encode(),
+    );
+    let _ = w.flush();
+}
+
+/// Convert a finished inference into its wire response. Both serving
+/// paths answer through this one function, so their RESULT bytes are
+/// identical by construction.
+pub(super) fn result_response(r: &InferenceResponse) -> Response {
+    Response::Result {
+        id: r.id,
+        class: r.class as u32,
+        exited_early: r.exited_early(),
+        entropy: r.entropy,
+        latency_s: r.latency_s,
     }
 }
 
 fn infer_response(backend: &impl ServeBackend, class: Option<u8>, image: HostTensor) -> Response {
     match backend.serve_infer(class, image) {
-        Ok(r) => Response::Result {
-            id: r.id,
-            class: r.class as u32,
-            exited_early: r.exited_early(),
-            entropy: r.entropy,
-            latency_s: r.latency_s,
-        },
+        Ok(r) => result_response(&r),
         Err(e) => Response::Error(format!("{e:#}")),
+    }
+}
+
+/// Synchronous dispatch of one decoded request — the thread path's
+/// whole table, and the reactor's table for everything it does not
+/// admit asynchronously (PING, METRICS, the partial-inference kinds).
+pub(super) fn respond_sync(backend: &impl ServeBackend, req: Request) -> Response {
+    match req {
+        Request::Ping => Response::Pong,
+        Request::Metrics => Response::Metrics(backend.metrics_json()),
+        Request::Infer(tensor) => infer_response(backend, None, tensor),
+        Request::InferClass { class, image } => infer_response(backend, Some(class), image),
+        Request::InferPartial {
+            split,
+            branch_state,
+            activation,
+        } => match backend.serve_partial_encoded(
+            split as usize,
+            branch_state,
+            WireEncoding::Raw,
+            activation,
+        ) {
+            Ok(out) => Response::PartialResult {
+                samples: out.samples,
+                cloud_s: out.cloud_s,
+            },
+            Err(e) => Response::Error(format!("{e:#}")),
+        },
+        // Pipelined: answers are written in arrival order on this
+        // connection (the client's reader matches on the echoed seq,
+        // so ordering is a non-requirement it gets for free), and
+        // errors stay scoped to their seq instead of poisoning the
+        // other in-flight requests.
+        Request::InferPartialSeq {
+            seq,
+            split,
+            branch_state,
+            encoding,
+            activation,
+        } => match backend.serve_partial_encoded(split as usize, branch_state, encoding, activation)
+        {
+            Ok(out) => Response::PartialResultSeq {
+                seq,
+                samples: out.samples,
+                cloud_s: out.cloud_s,
+            },
+            Err(e) => Response::ErrorSeq {
+                seq,
+                message: format!("{e:#}"),
+            },
+        },
     }
 }
 
@@ -187,55 +528,7 @@ fn handle_connection(stream: TcpStream, backend: &impl ServeBackend) -> Result<(
         };
         let response = match Request::decode(&body) {
             Err(e) => Response::Error(format!("{e:#}")),
-            Ok(Request::Ping) => Response::Pong,
-            Ok(Request::Metrics) => Response::Metrics(backend.metrics_json()),
-            Ok(Request::Infer(tensor)) => infer_response(backend, None, tensor),
-            Ok(Request::InferClass { class, image }) => {
-                infer_response(backend, Some(class), image)
-            }
-            Ok(Request::InferPartial {
-                split,
-                branch_state,
-                activation,
-            }) => match backend.serve_partial_encoded(
-                split as usize,
-                branch_state,
-                WireEncoding::Raw,
-                activation,
-            ) {
-                Ok(out) => Response::PartialResult {
-                    samples: out.samples,
-                    cloud_s: out.cloud_s,
-                },
-                Err(e) => Response::Error(format!("{e:#}")),
-            },
-            // Pipelined: answers are written in arrival order on this
-            // connection (the client's reader matches on the echoed
-            // seq, so ordering is a non-requirement it gets for free),
-            // and errors stay scoped to their seq instead of poisoning
-            // the other in-flight requests.
-            Ok(Request::InferPartialSeq {
-                seq,
-                split,
-                branch_state,
-                encoding,
-                activation,
-            }) => match backend.serve_partial_encoded(
-                split as usize,
-                branch_state,
-                encoding,
-                activation,
-            ) {
-                Ok(out) => Response::PartialResultSeq {
-                    seq,
-                    samples: out.samples,
-                    cloud_s: out.cloud_s,
-                },
-                Err(e) => Response::ErrorSeq {
-                    seq,
-                    message: format!("{e:#}"),
-                },
-            },
+            Ok(req) => respond_sync(backend, req),
         };
         let encoded = response.encode();
         write_frame(&mut writer, &encoded)?;
@@ -280,6 +573,27 @@ impl Client {
     /// Inference tagged with the client's link class (fleet routing).
     pub fn infer_class(&mut self, class: u8, image: HostTensor) -> Result<Response> {
         self.call(&Request::InferClass { class, image })
+    }
+
+    /// [`Client::infer`] honoring the THROTTLE contract: on a THROTTLE
+    /// answer, sleep the server's `retry_after_ms` hint and resend, up
+    /// to `max_retries` times before giving up with the last frame.
+    pub fn infer_with_backoff(
+        &mut self,
+        image: HostTensor,
+        max_retries: usize,
+    ) -> Result<Response> {
+        for _ in 0..=max_retries {
+            match self.call(&Request::Infer(image.clone()))? {
+                Response::Throttle { retry_after_ms } => {
+                    std::thread::sleep(std::time::Duration::from_millis(retry_after_ms as u64));
+                }
+                other => return Ok(other),
+            }
+        }
+        Ok(Response::Throttle {
+            retry_after_ms: THROTTLE_RETRY_AFTER_MS,
+        })
     }
 
     /// Partial inference against a cloud-stage server: run stages

@@ -1,19 +1,30 @@
-//! TCP front-end integration: ping/infer/metrics over a live socket,
-//! concurrent clients, malformed input handling. Requires `make artifacts`.
+//! TCP front-end integration. The first half drives a real-artifact
+//! coordinator (ping/infer/metrics over a live socket, concurrent
+//! clients, malformed input) and requires `make artifacts`. The second
+//! half runs entirely on the simulated runtime — shutdown hygiene,
+//! `max_conns` shedding, THROTTLE backpressure, and the
+//! reactor-vs-thread-per-connection bit-identity proof need no
+//! artifacts.
 
-use std::io::Write;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use branchyserve::config::settings::{Flavor, Strategy};
 use branchyserve::coordinator::{Coordinator, CoordinatorConfig};
+use branchyserve::fleet::{ClassProfile, ClassRegistry, Fleet, FleetConfig};
 use branchyserve::model::Manifest;
 use branchyserve::network::{BandwidthTrace, Channel};
 use branchyserve::partition::PartitionPlan;
 use branchyserve::runtime::{HostTensor, InferenceEngine};
+use branchyserve::server::protocol::{read_frame, write_frame};
 use branchyserve::server::tcp::Client;
-use branchyserve::server::{Request, Response, Server};
+use branchyserve::server::{
+    Request, Response, Server, ServerConfig, THROTTLE_RETRY_AFTER_MS,
+};
+use branchyserve::timing::DelayProfile;
 use branchyserve::workload::ImageSource;
 
 fn start_server() -> Option<(branchyserve::server::ServerHandle, std::net::SocketAddr)> {
@@ -130,4 +141,345 @@ fn garbage_bytes_close_connection_not_server() {
     let mut client = Client::connect(addr).unwrap();
     client.ping().unwrap();
     handle.stop();
+}
+
+// ---------------------------------------------------------------------
+// Simulated-runtime front-end tests (no artifacts required).
+// ---------------------------------------------------------------------
+
+const SIM_STAGES: usize = 3;
+
+fn front_manifest() -> Manifest {
+    Manifest::synthetic_sim("sim-front", vec![4], &[16, 8, 2], 1, 2, vec![1, 2, 4, 8]).unwrap()
+}
+
+fn front_profile() -> DelayProfile {
+    DelayProfile::from_cloud_times(vec![1e-4; SIM_STAGES], 2e-5, 50.0)
+}
+
+/// Two-class sim fleet ("slow" plans edge-only, "fast" cloud-only) with
+/// a controllable synthetic stage cost.
+fn sim_fleet(stage_cost: Duration) -> Fleet {
+    let manifest = front_manifest();
+    let m = manifest.clone();
+    Fleet::start(
+        ClassRegistry::new(vec![
+            ClassProfile::custom("slow", 0.05, 0.0).unwrap(),
+            ClassProfile::custom("fast", 100_000.0, 0.0).unwrap(),
+        ])
+        .unwrap(),
+        &manifest,
+        &front_profile(),
+        FleetConfig {
+            batch_timeout: Duration::from_millis(1),
+            real_time_channel: false,
+            entropy_threshold: 0.0, // deterministic: nothing exits early
+            ..Default::default()
+        },
+        move |label| {
+            Ok((
+                InferenceEngine::open_sim_with_cost(m.clone(), &format!("{label}-e"), stage_cost)?,
+                InferenceEngine::open_sim_with_cost(m.clone(), &format!("{label}-c"), stage_cost)?,
+            ))
+        },
+    )
+    .unwrap()
+}
+
+fn inputs(n: usize) -> Vec<HostTensor> {
+    (0..n)
+        .map(|i| {
+            let base = i as f32 * 0.41 - 1.2;
+            HostTensor::new(vec![4], vec![base, base * -0.7, 0.3 + base, 1.1 - base]).unwrap()
+        })
+        .collect()
+}
+
+/// Drive one connection lockstep (write a frame, read its answer) and
+/// return the raw response bodies.
+fn exchange(addr: SocketAddr, reqs: &[Request]) -> Vec<Vec<u8>> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut out = Vec::with_capacity(reqs.len());
+    for r in reqs {
+        write_frame(&mut stream, &r.encode()).unwrap();
+        out.push(read_frame(&mut reader).unwrap());
+    }
+    out
+}
+
+/// Re-encode a response body with its wall-clock fields zeroed, so two
+/// serving paths can be compared bit-for-bit on everything that is
+/// deterministic (ids, classes, entropies, flags, error text, layout).
+fn normalized(body: &[u8]) -> Vec<u8> {
+    let mut resp = Response::decode(body).unwrap();
+    match &mut resp {
+        Response::Result { latency_s, .. } => *latency_s = 0.0,
+        Response::PartialResult { cloud_s, .. } => *cloud_s = 0.0,
+        Response::PartialResultSeq { cloud_s, .. } => *cloud_s = 0.0,
+        _ => {}
+    }
+    resp.encode()
+}
+
+/// Satellite regression: `stop()` must return promptly even with idle
+/// connections still open — handler threads are tracked, their sockets
+/// shut down, and every one joined (no detached-thread leak, no hang on
+/// a blocked `read_frame`).
+#[test]
+fn stop_returns_promptly_with_idle_connections_open() {
+    let fleet = Arc::new(sim_fleet(Duration::ZERO));
+    let handle = Server::new(fleet.clone()).start(0).unwrap();
+    let mut idle = Vec::new();
+    for _ in 0..3 {
+        let mut c = Client::connect(handle.addr()).unwrap();
+        c.ping().unwrap(); // handler thread confirmed live
+        idle.push(c); // ...and then left idle, blocking in read_frame
+    }
+    let t0 = Instant::now();
+    handle.stop();
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "stop() hung on idle connections: {elapsed:?}"
+    );
+}
+
+/// `max_conns` on the thread-per-connection path: the connection over
+/// the cap gets one THROTTLE frame and a close, the counter records it,
+/// and the fleet's metrics JSON carries the front-end counters.
+#[test]
+fn max_conns_shed_answers_throttle_and_counts() {
+    let fleet = Arc::new(sim_fleet(Duration::ZERO));
+    let handle = Server::with_config(
+        fleet.clone(),
+        ServerConfig {
+            max_conns: 2,
+            ..ServerConfig::default()
+        },
+    )
+    .start(0)
+    .unwrap();
+
+    let mut c1 = Client::connect(handle.addr()).unwrap();
+    c1.ping().unwrap();
+    let mut c2 = Client::connect(handle.addr()).unwrap();
+    c2.ping().unwrap();
+
+    // Third connection: shed with THROTTLE, then EOF.
+    let shed = TcpStream::connect(handle.addr()).unwrap();
+    let mut shed_reader = BufReader::new(shed);
+    let resp = Response::decode(&read_frame(&mut shed_reader).unwrap()).unwrap();
+    assert_eq!(
+        resp,
+        Response::Throttle {
+            retry_after_ms: THROTTLE_RETRY_AFTER_MS
+        }
+    );
+    assert!(
+        read_frame(&mut shed_reader).is_err(),
+        "shed connection must be closed after the THROTTLE frame"
+    );
+
+    let snap = handle.stats().snapshot();
+    assert_eq!(snap.conns_shed, 1);
+    assert_eq!(snap.accepted, 2);
+    assert_eq!(snap.active, 2);
+    assert_eq!(snap.conn_peak, 2);
+
+    // The backend registered the same counters: METRICS carries them.
+    match c1.call(&Request::Metrics).unwrap() {
+        Response::Metrics(json) => {
+            assert!(json.contains("\"conns_shed\":1"), "{json}");
+            assert!(json.contains("\"accepted\":2"), "{json}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    handle.stop();
+}
+
+/// THROTTLE survives the framed wire byte-exactly, and malformed bodies
+/// are rejected instead of misparsed.
+#[test]
+fn throttle_frames_survive_the_wire_and_reject_garbage() {
+    let mut buf = Vec::new();
+    write_frame(
+        &mut buf,
+        &Response::Throttle {
+            retry_after_ms: 1234,
+        }
+        .encode(),
+    )
+    .unwrap();
+    let body = read_frame(&mut &buf[..]).unwrap();
+    assert_eq!(
+        Response::decode(&body).unwrap(),
+        Response::Throttle {
+            retry_after_ms: 1234
+        }
+    );
+    // Truncated and trailing-garbage THROTTLE bodies fail loudly.
+    assert!(Response::decode(&[5]).is_err());
+    assert!(Response::decode(&[5, 1, 0]).is_err());
+    assert!(Response::decode(&[5, 1, 0, 0, 0, 9]).is_err());
+}
+
+/// The tentpole's correctness proof, fleet half: the reactor answers
+/// the exact same bytes as the thread-per-connection path for an
+/// identical INFER / INFER_CLASS request stream (wall-clock latency
+/// normalized out — everything else, ids and error text included, must
+/// match bit-for-bit).
+#[cfg(target_os = "linux")]
+#[test]
+fn reactor_responses_are_bit_identical_to_thread_per_conn() {
+    let thread_fleet = Arc::new(sim_fleet(Duration::ZERO));
+    let reactor_fleet = Arc::new(sim_fleet(Duration::ZERO));
+    let thread_srv = Server::new(thread_fleet.clone()).start(0).unwrap();
+    let reactor_srv = Server::with_config(
+        reactor_fleet.clone(),
+        ServerConfig {
+            reactor: true,
+            reactor_threads: 2,
+            ..ServerConfig::default()
+        },
+    )
+    .start(0)
+    .unwrap();
+
+    let mut stream = vec![Request::Ping];
+    for (i, img) in inputs(6).into_iter().enumerate() {
+        stream.push(match i % 3 {
+            0 => Request::Infer(img),
+            1 => Request::InferClass { class: 0, image: img },
+            _ => Request::InferClass { class: 1, image: img },
+        });
+    }
+    // An unknown class tag answers a deterministic ERROR frame — the
+    // two paths must even fail identically.
+    stream.push(Request::InferClass {
+        class: 9,
+        image: inputs(1).pop().unwrap(),
+    });
+
+    let a = exchange(thread_srv.addr(), &stream);
+    let b = exchange(reactor_srv.addr(), &stream);
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(normalized(x), normalized(y), "frame {i} diverged");
+    }
+
+    thread_srv.stop();
+    reactor_srv.stop();
+}
+
+/// Bit-identity, cloud-stage half: INFER_PARTIAL and INFER_PARTIAL_SEQ
+/// (the kinds a remote edge ships) answer identically through both
+/// front ends.
+#[cfg(target_os = "linux")]
+#[test]
+fn reactor_partial_responses_match_thread_per_conn() {
+    use branchyserve::network::WireEncoding;
+    use branchyserve::server::protocol::{BRANCH_GATED, BRANCH_PENDING};
+    use branchyserve::server::CloudStageServer;
+
+    let thread_css = Arc::new(CloudStageServer::new(
+        InferenceEngine::open_sim(front_manifest(), "bit-css-t").unwrap(),
+    ));
+    let reactor_css = Arc::new(CloudStageServer::new(
+        InferenceEngine::open_sim(front_manifest(), "bit-css-r").unwrap(),
+    ));
+    let thread_srv = Server::new(thread_css).start(0).unwrap();
+    let reactor_srv = Server::with_config(
+        reactor_css,
+        ServerConfig {
+            reactor: true,
+            ..ServerConfig::default()
+        },
+    )
+    .start(0)
+    .unwrap();
+
+    // Activations shaped for the sim model's cut widths (16 after
+    // stage 1, 8 after stage 2).
+    let act = |n: usize, w: usize| {
+        let data: Vec<f32> = (0..n * w).map(|i| (i as f32) * 0.13 - 0.9).collect();
+        HostTensor::new(vec![n, w], data).unwrap()
+    };
+    let stream = vec![
+        Request::InferPartial {
+            split: 1,
+            branch_state: BRANCH_PENDING,
+            activation: act(2, 16),
+        },
+        Request::InferPartialSeq {
+            seq: 7,
+            split: 2,
+            branch_state: BRANCH_GATED,
+            encoding: WireEncoding::Raw,
+            activation: act(1, 8),
+        },
+        Request::Ping,
+    ];
+
+    let a = exchange(thread_srv.addr(), &stream);
+    let b = exchange(reactor_srv.addr(), &stream);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(normalized(x), normalized(y), "frame {i} diverged");
+    }
+
+    thread_srv.stop();
+    reactor_srv.stop();
+}
+
+/// Per-connection window backpressure on the reactor: pipelining past
+/// `conn_window` answers THROTTLE for the overflow while the admitted
+/// request still completes — and responses stay in request order.
+#[cfg(target_os = "linux")]
+#[test]
+fn reactor_window_throttles_pipelined_overflow() {
+    // Slow stages so the first inference is still in flight when the
+    // overflow frames (sent in the same TCP segment) are parsed.
+    let fleet = Arc::new(sim_fleet(Duration::from_millis(20)));
+    let handle = Server::with_config(
+        fleet.clone(),
+        ServerConfig {
+            reactor: true,
+            conn_window: 1,
+            ..ServerConfig::default()
+        },
+    )
+    .start(0)
+    .unwrap();
+
+    let img = inputs(1).pop().unwrap();
+    let mut burst = Vec::new();
+    for _ in 0..4 {
+        write_frame(&mut burst, &Request::Infer(img.clone()).encode()).unwrap();
+    }
+    let mut stream = TcpStream::connect(handle.addr()).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream.write_all(&burst).unwrap(); // one segment: 4 pipelined frames
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // Request order is preserved: the admitted inference answers first,
+    // then the three over-window THROTTLEs queued behind it.
+    let first = Response::decode(&read_frame(&mut reader).unwrap()).unwrap();
+    assert!(matches!(first, Response::Result { .. }), "{first:?}");
+    for i in 0..3 {
+        let r = Response::decode(&read_frame(&mut reader).unwrap()).unwrap();
+        assert_eq!(
+            r,
+            Response::Throttle {
+                retry_after_ms: THROTTLE_RETRY_AFTER_MS
+            },
+            "overflow frame {i}"
+        );
+    }
+    assert_eq!(handle.stats().snapshot().throttled, 3);
+
+    // The reactor path also stops promptly with this connection open.
+    let t0 = Instant::now();
+    handle.stop();
+    assert!(t0.elapsed() < Duration::from_secs(5), "{:?}", t0.elapsed());
 }

@@ -19,6 +19,14 @@ scenario ("bench": "scenario", from `branchyserve scenario run`):
   * If the baseline is measured and describes the same scenario, a
     `totals.p99_ms` more than GATE (20%) worse fails the merge.
 
+serve ("bench": "serve", from `cargo bench --bench serve`):
+  * For every front-end mode present in both files (thread-per-conn,
+    reactor), req/s is higher-is-better: a new `req_per_s` below
+    (1 - GATE) of the baseline's fails the merge.
+  * A full (non-smoke) run must hold the reactor's >= 2x req/s
+    acceptance bar over thread-per-conn (`derived.reactor_speedup`);
+    smoke runs are too small for the ratio to mean anything.
+
 Either kind: baselines whose `source` is not "measured" (seed baselines
 are derived from the timing/codec model, marked "model") never gate —
 the first measured run simply replaces them.
@@ -42,7 +50,8 @@ from pathlib import Path
 
 GATE = 0.20  # fail if p99 regresses by more than this fraction
 BYTE_DRIFT = 0.01  # bytes are deterministic; >1% drift is a format change
-KINDS = ("wire", "scenario")
+KINDS = ("wire", "scenario", "serve")
+SERVE_SPEEDUP_BAR = 2.0  # reactor vs thread-per-conn req/s, full runs only
 
 
 def cell_key(run: dict) -> tuple[str, str]:
@@ -57,8 +66,8 @@ def load(path: Path) -> dict:
     kind = doc.get("bench")
     if kind not in KINDS:
         sys.exit(f"bench_record: {path} is not a bench record (kinds: {KINDS})")
-    if kind == "wire" and not isinstance(doc.get("runs"), list):
-        sys.exit(f"bench_record: {path} is not a wire-bench record")
+    if kind in ("wire", "serve") and not isinstance(doc.get("runs"), list):
+        sys.exit(f"bench_record: {path} is not a {kind}-bench record")
     return doc
 
 
@@ -117,11 +126,37 @@ def gate_scenario(baseline: dict, run: dict) -> list[str]:
     return findings
 
 
+def gate_serve(baseline: dict, run: dict) -> list[str]:
+    """req/s is higher-is-better; modes are compared independently."""
+    if baseline.get("source") != "measured":
+        return []  # seed baseline is modeled, not measured: never gates
+    if baseline.get("smoke") != run.get("smoke"):
+        return []  # smoke and full fleets are not comparable
+    base_modes = {r["mode"]: r for r in baseline["runs"]}
+    findings = []
+    for new in run["runs"]:
+        old = base_modes.get(new["mode"])
+        if old is None:
+            continue
+        old_rps, new_rps = old["req_per_s"], new["req_per_s"]
+        if new_rps < old_rps * (1.0 - GATE):
+            findings.append(
+                f"{new['mode']}: req/s regressed {old_rps:.1f} -> {new_rps:.1f} "
+                f"(-{(1.0 - new_rps / old_rps) * 100.0:.0f}%, gate {GATE * 100:.0f}%)"
+            )
+    return findings
+
+
 def previous_of(baseline: dict) -> dict:
     if baseline.get("bench") == "scenario":
         return {
             "source": baseline.get("source"),
             "p99_ms": baseline.get("totals", {}).get("p99_ms"),
+        }
+    if baseline.get("bench") == "serve":
+        return {
+            "source": baseline.get("source"),
+            "req_per_s": {r["mode"]: r["req_per_s"] for r in baseline["runs"]},
         }
     return {
         "source": baseline.get("source"),
@@ -160,6 +195,14 @@ def main() -> int:
 
     if run.get("bench") == "scenario":
         findings = gate_scenario(baseline, run)
+    elif run.get("bench") == "serve":
+        findings = gate_serve(baseline, run)
+        speedup = run.get("derived", {}).get("reactor_speedup")
+        if not run.get("smoke") and speedup is not None and speedup < SERVE_SPEEDUP_BAR:
+            findings.append(
+                f"reactor speedup over thread-per-conn is {speedup:.2f}x "
+                f"(< {SERVE_SPEEDUP_BAR:.1f}x bar)"
+            )
     else:
         findings = gate_wire(baseline, run)
         ratio = run.get("derived", {}).get(
