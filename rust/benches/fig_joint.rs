@@ -1,0 +1,142 @@
+//! Joint configuration search figure: the fixed-architecture optimum
+//! vs `Planner::plan_joint` (branch placement × partition × precision)
+//! across a bandwidth × exit-probability grid, at equal-or-better
+//! accuracy proxy. Records to BENCH_joint.json for the CI gate
+//! (`scripts/bench_record.py`, kind "joint").
+//!
+//!     cargo bench --bench fig_joint          # full grid
+//!     SMOKE=1 cargo bench --bench fig_joint  # CI smoke: fewer cells
+//!
+//! Acceptance bars (hard asserts): the joint plan never loses to the
+//! fixed plan in any cell, and at least one cell is strictly better.
+//! The grid is analytic (model evaluation, no wall clock), so the
+//! recorded numbers are deterministic across machines.
+
+use branchyserve::experiments::fig_joint;
+use branchyserve::harness::Table;
+use branchyserve::model::{BranchDesc, BranchyNetDesc};
+use branchyserve::timing::DelayProfile;
+use branchyserve::util::timefmt::format_secs;
+
+/// The repo's B-AlexNet-shaped reference net (same fixture as the
+/// ablation and fig4 shape tests): non-monotonic activation sizes, one
+/// early exit after stage 1, edge 10x slower than cloud.
+fn fixture() -> (BranchyNetDesc, DelayProfile) {
+    let desc = BranchyNetDesc {
+        stage_names: (1..=8).map(|i| format!("s{i}")).collect(),
+        stage_out_bytes: vec![57_600, 18_816, 25_088, 25_088, 3_456, 1_024, 512, 8],
+        input_bytes: 12_288,
+        branches: vec![BranchDesc {
+            after_stage: 1,
+            exit_prob: 0.0,
+        }],
+    };
+    let profile = DelayProfile::from_cloud_times(
+        vec![1e-3, 1.5e-3, 1.2e-3, 1.2e-3, 8e-4, 3e-4, 1e-4, 5e-5],
+        2e-4,
+        10.0,
+    );
+    (desc, profile)
+}
+
+fn main() -> anyhow::Result<()> {
+    branchyserve::util::logger::init();
+    let smoke = std::env::var("SMOKE").is_ok();
+    let (desc, profile) = fixture();
+    let (bandwidths, probs) = if smoke {
+        (vec![1.10, 18.80], vec![0.0, 0.6])
+    } else {
+        (
+            fig_joint::DEFAULT_BANDWIDTHS_MBPS.to_vec(),
+            fig_joint::DEFAULT_PROBS.to_vec(),
+        )
+    };
+    let cells = fig_joint::run(&desc, &profile, &bandwidths, &probs, 1e-9);
+
+    let mut table = Table::new(&[
+        "Mbps", "p", "fixed s", "fixed E[T]", "joint s", "enc", "branches", "joint E[T]", "gain %",
+    ]);
+    for c in &cells {
+        table.row(vec![
+            format!("{:.2}", c.mbps),
+            format!("{:.1}", c.p),
+            c.fixed_split.to_string(),
+            format_secs(c.fixed_time),
+            c.joint_split.to_string(),
+            c.joint_encoding.as_str().to_string(),
+            format!("{:?}", c.joint_branches),
+            format_secs(c.joint_time),
+            format!("{:.2}", c.improvement_pct()),
+        ]);
+    }
+    println!("### Joint search vs fixed architecture (accuracy floor = fixed proxy)");
+    println!("{}", table.render());
+
+    let never_loses = cells.iter().all(|c| c.joint_time <= c.fixed_time);
+    let wins = cells.iter().filter(|c| c.strictly_better()).count();
+    let max_gain = cells
+        .iter()
+        .map(|c| c.improvement_pct())
+        .fold(0.0, f64::max);
+    println!(
+        "cells: {}  strict wins: {wins}  max gain: {max_gain:.2}%",
+        cells.len()
+    );
+
+    // Acceptance bars — these hold by construction (the fixed
+    // configuration is a candidate), so a failure is a search bug.
+    assert!(never_loses, "joint plan lost to the fixed plan somewhere");
+    assert!(
+        wins >= 1,
+        "joint search found no strict win anywhere on the grid"
+    );
+
+    let cell_rows: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            format!(
+                concat!(
+                    "    {{\"mbps\": {}, \"p\": {}, \"fixed_split\": {}, ",
+                    "\"fixed_ms\": {:.6}, \"joint_split\": {}, \"encoding\": \"{}\", ",
+                    "\"branches\": [{}], \"joint_ms\": {:.6}, \"improvement_pct\": {:.3}}}"
+                ),
+                c.mbps,
+                c.p,
+                c.fixed_split,
+                c.fixed_time * 1e3,
+                c.joint_split,
+                c.joint_encoding.as_str(),
+                c.joint_branches
+                    .iter()
+                    .map(|p| p.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", "),
+                c.joint_time * 1e3,
+                c.improvement_pct(),
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"joint\",\n",
+            "  \"source\": \"measured\",\n",
+            "  \"smoke\": {},\n",
+            "  \"cells\": [\n{}\n  ],\n",
+            "  \"derived\": {{\n",
+            "    \"joint_never_loses\": {},\n",
+            "    \"cells_strictly_better\": {},\n",
+            "    \"max_improvement_pct\": {:.3}\n",
+            "  }}\n",
+            "}}\n"
+        ),
+        smoke,
+        cell_rows.join(",\n"),
+        never_loses,
+        wins,
+        max_gain
+    );
+    std::fs::write("BENCH_joint.json", &json)?;
+    println!("wrote BENCH_joint.json ({} cells)", cells.len());
+    Ok(())
+}

@@ -133,6 +133,22 @@ pub struct PartitionSettings {
     pub epsilon: f64,
 }
 
+/// `[planner]`: joint configuration search (branch placement ×
+/// partition × precision) — whether classes run it when they (re)plan,
+/// and the accuracy floor it must respect.
+#[derive(Debug, Clone)]
+pub struct PlannerSettings {
+    /// Run `Planner::plan_joint` at class startup: keep the class's
+    /// branch set but adopt the (wire encoding, split) pair that
+    /// minimizes expected time at the class link. Per-class
+    /// `joint_search` overrides this.
+    pub joint_search: bool,
+    /// Minimum final survival mass `Π (1 − p_k)` a candidate branch
+    /// set must keep — the joint search may never buy latency below
+    /// this accuracy proxy. 0 disables the floor.
+    pub min_accuracy_proxy: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct ServeSettings {
     pub port: u16,
@@ -267,6 +283,9 @@ pub struct LinkClassSettings {
     /// Per-class autoscale ceiling override; `None` falls back to
     /// `fleet.max_shards`.
     pub max_shards: Option<usize>,
+    /// Per-class joint-search override; `None` falls back to
+    /// `planner.joint_search`.
+    pub joint_search: Option<bool>,
 }
 
 #[derive(Debug, Clone)]
@@ -276,6 +295,7 @@ pub struct Settings {
     pub edge: EdgeSettings,
     pub branch: BranchSettings,
     pub partition: PartitionSettings,
+    pub planner: PlannerSettings,
     pub serve: ServeSettings,
     pub fleet: FleetSettings,
     /// Empty = a single default class derived from `network`.
@@ -303,6 +323,10 @@ impl Default for Settings {
             partition: PartitionSettings {
                 strategy: Strategy::ShortestPath,
                 epsilon: 1e-9,
+            },
+            planner: PlannerSettings {
+                joint_search: false,
+                min_accuracy_proxy: 0.0,
             },
             serve: ServeSettings {
                 port: 7878,
@@ -388,6 +412,12 @@ impl Settings {
         }
         if let Some(v) = doc.path("partition.epsilon").and_then(Json::as_f64) {
             self.partition.epsilon = v;
+        }
+        if let Some(v) = doc.path("planner.joint_search").and_then(Json::as_bool) {
+            self.planner.joint_search = v;
+        }
+        if let Some(v) = doc.path("planner.min_accuracy_proxy").and_then(Json::as_f64) {
+            self.planner.min_accuracy_proxy = v;
         }
         if let Some(v) = doc.path("serve.port").and_then(Json::as_u64) {
             self.serve.port = u16::try_from(v).context("serve.port out of range")?;
@@ -500,6 +530,7 @@ impl Settings {
                     .map(str::to_string);
                 let min_shards = entry.get("min_shards").and_then(Json::as_usize);
                 let max_shards = entry.get("max_shards").and_then(Json::as_usize);
+                let joint_search = entry.get("joint_search").and_then(Json::as_bool);
                 self.link_classes.push(LinkClassSettings {
                     name,
                     uplink_mbps,
@@ -508,6 +539,7 @@ impl Settings {
                     cloud_addr,
                     min_shards,
                     max_shards,
+                    joint_search,
                 });
             }
         }
@@ -541,6 +573,14 @@ impl Settings {
             bail!(
                 "partition.epsilon must be tiny and positive (paper §V); got {}",
                 self.partition.epsilon
+            );
+        }
+        if !(self.planner.min_accuracy_proxy.is_finite()
+            && (0.0..=1.0).contains(&self.planner.min_accuracy_proxy))
+        {
+            bail!(
+                "planner.min_accuracy_proxy must be in [0, 1]; got {}",
+                self.planner.min_accuracy_proxy
             );
         }
         if self.serve.max_batch == 0 || self.serve.queue_capacity == 0 {
@@ -761,12 +801,28 @@ max_batch = 4
         let mut s = Settings::default();
         s.partition.epsilon = 0.1;
         assert!(s.validate().is_err());
+
+        // The joint-search accuracy floor must be a probability.
+        for bad in [-0.1, 1.5, f64::NAN, f64::INFINITY] {
+            let mut s = Settings::default();
+            s.planner.min_accuracy_proxy = bad;
+            let e = s.validate().unwrap_err().to_string();
+            assert!(e.contains("planner.min_accuracy_proxy"), "{bad}: {e}");
+        }
+        let mut s = Settings::default();
+        s.planner.joint_search = true;
+        s.planner.min_accuracy_proxy = 1.0;
+        s.validate().unwrap();
     }
 
     #[test]
     fn fleet_and_link_class_overlay() {
         let doc = toml::parse(
             r#"
+[planner]
+joint_search = true
+min_accuracy_proxy = 0.35
+
 [fleet]
 shards = 4
 cloud_workers = 2
@@ -799,12 +855,15 @@ uplink_mbps = 0.35
 rtt_ms = 280
 exit_probability = 0.8
 cloud_addr = "sat-cloud.internal:7880"
+joint_search = false
 "#,
         )
         .unwrap();
         let mut s = Settings::default();
         s.apply(&doc).unwrap();
         s.validate().unwrap();
+        assert!(s.planner.joint_search);
+        assert!((s.planner.min_accuracy_proxy - 0.35).abs() < 1e-12);
         assert_eq!(s.fleet.shards, 4);
         assert_eq!(s.fleet.cloud_workers, 2);
         assert_eq!(s.fleet.routing, "hash");
@@ -838,6 +897,9 @@ cloud_addr = "sat-cloud.internal:7880"
             s.link_classes[1].cloud_addr.as_deref(),
             Some("sat-cloud.internal:7880")
         );
+        // Per-class joint_search: absent = inherit, present = override.
+        assert_eq!(s.link_classes[0].joint_search, None);
+        assert_eq!(s.link_classes[1].joint_search, Some(false));
     }
 
     #[test]
@@ -943,6 +1005,7 @@ cloud_addr = "sat-cloud.internal:7880"
             cloud_addr: None,
             min_shards: None,
             max_shards: None,
+            joint_search: None,
         });
         let e = s.validate().unwrap_err().to_string();
         assert!(e.contains("link_class[0]") && e.contains("uplink_mbps"), "{e}");
@@ -957,6 +1020,7 @@ cloud_addr = "sat-cloud.internal:7880"
                 cloud_addr: None,
                 min_shards: None,
                 max_shards: None,
+                joint_search: None,
             });
         }
         let e = s.validate().unwrap_err().to_string();
@@ -971,6 +1035,7 @@ cloud_addr = "sat-cloud.internal:7880"
             cloud_addr: None,
             min_shards: None,
             max_shards: None,
+            joint_search: None,
         });
         let e = s.validate().unwrap_err().to_string();
         assert!(e.contains("exit_probability"), "{e}");
@@ -985,6 +1050,7 @@ cloud_addr = "sat-cloud.internal:7880"
             cloud_addr: Some("nocolon".into()),
             min_shards: None,
             max_shards: None,
+            joint_search: None,
         });
         let e = s.validate().unwrap_err().to_string();
         assert!(e.contains("link_class[0]") && e.contains("cloud_addr"), "{e}");

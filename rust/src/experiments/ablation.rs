@@ -8,13 +8,15 @@
 //!   non-degenerate decision across orders of magnitude;
 //! * **branch-cost sensitivity** — paper mode vs serving mode planning;
 //! * **branch placement** — sweep the side branch position (the paper's
-//!   stated future work, §VII).
+//!   stated future work, §VII); [`branch_set_candidates`] generalizes
+//!   the sweep into the move/add/drop candidate stream the joint
+//!   search ([`crate::planner::Planner::plan_joint`]) consumes.
 
 use crate::config::settings::Strategy;
 use crate::model::{BranchDesc, BranchyNetDesc};
 use crate::network::bandwidth::{LinkModel, Profile};
 use crate::partition;
-use crate::planner::Planner;
+use crate::planner::{JointSearchSpace, Planner};
 use crate::timing::DelayProfile;
 
 /// One strategy-gap cell.
@@ -108,6 +110,11 @@ pub fn epsilon_sensitivity(
 /// Sweep the branch position over every interior stage, reporting the
 /// optimal expected time for each placement — the paper's future-work
 /// "heuristics for side branch placement" (§VII) seeded as data.
+///
+/// One `Planner` core serves every placement: each candidate position
+/// is priced through the joint search's cheap derived view instead of
+/// a full per-candidate `Planner::new` (bit-identical either way,
+/// pinned by a unit test below). Rows come back in position order.
 pub fn branch_placement(
     desc_template: &BranchyNetDesc,
     profile: &DelayProfile,
@@ -115,17 +122,84 @@ pub fn branch_placement(
     exit_prob: f64,
 ) -> Vec<(usize, f64, usize)> {
     let n = desc_template.num_stages();
-    (1..n)
-        .map(|pos| {
-            let mut desc = desc_template.clone();
-            desc.branches = vec![BranchDesc {
-                after_stage: pos,
-                exit_prob,
-            }];
-            let plan = Planner::new(&desc, profile, 1e-9, true).plan_for(link);
-            (pos, plan.expected_time_s, plan.split_after)
-        })
-        .collect()
+    if n <= 1 {
+        return Vec::new();
+    }
+    let planner = Planner::new(desc_template, profile, 1e-9, true);
+    let space = JointSearchSpace {
+        branch_sets: (1..n)
+            .map(|pos| {
+                vec![BranchDesc {
+                    after_stage: pos,
+                    exit_prob,
+                }]
+            })
+            .collect(),
+        encodings: vec![planner.wire_encoding()],
+        min_accuracy_proxy: 0.0,
+    };
+    let joint = planner.plan_joint(link, &space);
+    let mut rows: Vec<(usize, f64, usize)> = joint
+        .ranked
+        .iter()
+        .map(|c| (c.branch_set[0].after_stage, c.expected_time, c.split))
+        .collect();
+    rows.sort_by_key(|&(pos, _, _)| pos);
+    rows
+}
+
+/// Candidate branch architectures for the joint search, derived from a
+/// template: the template's own branch set first, then every
+/// single-branch **move** (each branch relocated to each vacant
+/// interior slot, keeping its probability), then every **add** (a new
+/// branch at `exit_prob` in each vacant slot), then every **drop**.
+/// Branch sets are position-sorted, the order is deterministic, and
+/// the first occurrence wins on duplicates — the joint search's
+/// candidate stream is stable across runs (pinned by a unit test).
+pub fn branch_set_candidates(
+    desc_template: &BranchyNetDesc,
+    exit_prob: f64,
+) -> Vec<Vec<BranchDesc>> {
+    fn push_unique(out: &mut Vec<Vec<BranchDesc>>, mut set: Vec<BranchDesc>) {
+        set.sort_by_key(|b| b.after_stage);
+        if !out.contains(&set) {
+            out.push(set);
+        }
+    }
+    let n = desc_template.num_stages();
+    let mut own = desc_template.branches.clone();
+    own.sort_by_key(|b| b.after_stage);
+    let occupied = |pos: usize| own.iter().any(|b| b.after_stage == pos);
+
+    let mut out = Vec::new();
+    push_unique(&mut out, own.clone());
+    for j in 0..own.len() {
+        for pos in 1..n {
+            if occupied(pos) {
+                continue;
+            }
+            let mut set = own.clone();
+            set[j].after_stage = pos;
+            push_unique(&mut out, set);
+        }
+    }
+    for pos in 1..n {
+        if occupied(pos) {
+            continue;
+        }
+        let mut set = own.clone();
+        set.push(BranchDesc {
+            after_stage: pos,
+            exit_prob,
+        });
+        push_unique(&mut out, set);
+    }
+    for j in 0..own.len() {
+        let mut set = own.clone();
+        set.remove(j);
+        push_unique(&mut out, set);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -189,5 +263,68 @@ mod tests {
         let res = branch_placement(&desc, &profile, LinkModel::from_profile(Profile::ThreeG), 0.6);
         assert_eq!(res.len(), 7);
         assert!(res.iter().all(|&(_, t, _)| t.is_finite() && t > 0.0));
+    }
+
+    #[test]
+    fn branch_placement_is_bit_identical_to_per_candidate_construction() {
+        // The cheap-view refactor must answer exactly what the old
+        // full-`Planner::new`-per-position implementation answered.
+        let (desc, profile) = fixture();
+        for net in Profile::ALL {
+            let link = LinkModel::from_profile(net);
+            let res = branch_placement(&desc, &profile, link, 0.6);
+            for &(pos, t, split) in &res {
+                let mut one = desc.clone();
+                one.branches = vec![BranchDesc {
+                    after_stage: pos,
+                    exit_prob: 0.6,
+                }];
+                let plan = Planner::new(&one, &profile, 1e-9, true).plan_for(link);
+                assert_eq!(split, plan.split_after, "pos {pos} {net:?}");
+                assert_eq!(
+                    t.to_bits(),
+                    plan.expected_time_s.to_bits(),
+                    "pos {pos} {net:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn candidate_stream_order_is_pinned_and_deterministic() {
+        let b = |after_stage: usize, exit_prob: f64| BranchDesc {
+            after_stage,
+            exit_prob,
+        };
+        let desc = BranchyNetDesc {
+            stage_names: (1..=4).map(|i| format!("s{i}")).collect(),
+            stage_out_bytes: vec![40_000, 20_000, 8_000, 8],
+            input_bytes: 12_288,
+            branches: vec![b(1, 0.5), b(3, 0.2)],
+        };
+        let got = branch_set_candidates(&desc, 0.3);
+        // Own set, then moves (branch order x vacant position order),
+        // then adds, then drops — exactly this, in exactly this order.
+        let want = vec![
+            vec![b(1, 0.5), b(3, 0.2)],
+            vec![b(2, 0.5), b(3, 0.2)],
+            vec![b(1, 0.5), b(2, 0.2)],
+            vec![b(1, 0.5), b(2, 0.3), b(3, 0.2)],
+            vec![b(3, 0.2)],
+            vec![b(1, 0.5)],
+        ];
+        assert_eq!(got, want);
+        assert_eq!(got, branch_set_candidates(&desc, 0.3), "stable across runs");
+
+        // A branch-free template: itself (the plain DNN), then one add
+        // per interior slot.
+        let plain = BranchyNetDesc {
+            branches: vec![],
+            ..desc.clone()
+        };
+        assert_eq!(
+            branch_set_candidates(&plain, 0.3),
+            vec![vec![], vec![b(1, 0.3)], vec![b(2, 0.3)], vec![b(3, 0.3)]]
+        );
     }
 }

@@ -11,3 +11,4 @@ pub mod ablation;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
+pub mod fig_joint;

@@ -51,6 +51,10 @@ pub struct ClassProfile {
     /// Per-class autoscale ceiling override; `None` inherits the
     /// fleet's `max_shards`.
     pub max_shards: Option<usize>,
+    /// Per-class joint-search override (`Planner::plan_joint` at class
+    /// startup, adopting the winning wire encoding); `None` inherits
+    /// the fleet's `joint_search`.
+    pub joint_search: Option<bool>,
 }
 
 impl ClassProfile {
@@ -65,6 +69,7 @@ impl ClassProfile {
             cloud_addr: None,
             min_shards: None,
             max_shards: None,
+            joint_search: None,
         })
     }
 
@@ -82,6 +87,7 @@ impl ClassProfile {
             cloud_addr: None,
             min_shards: None,
             max_shards: None,
+            joint_search: None,
         })
     }
 
@@ -162,6 +168,7 @@ impl ClassRegistry {
             c.cloud_addr = e.cloud_addr.clone();
             c.min_shards = e.min_shards;
             c.max_shards = e.max_shards;
+            c.joint_search = e.joint_search;
             classes.push(c);
         }
         ClassRegistry::new(classes)

@@ -133,8 +133,10 @@ use crate::model::Manifest;
 use crate::network::trace::BandwidthTrace;
 use crate::network::{Channel, WireEncoding};
 use crate::partition::plan::PartitionPlan;
+use crate::planner::joint::accuracy_proxy;
 use crate::planner::{
-    AdaptiveConfig, AdaptiveHandle, AdaptivePlanner, EstimatorConfig, ExitRateEstimator, Planner,
+    AdaptiveConfig, AdaptiveHandle, AdaptivePlanner, EstimatorConfig, ExitRateEstimator,
+    JointSearchSpace, Planner,
 };
 use crate::runtime::{HostTensor, InferenceEngine};
 use crate::server::remote::{RemoteCloudConfig, RemoteCloudEngine, RemoteCloudStats};
@@ -223,6 +225,14 @@ pub struct FleetConfig {
     /// prices its transfer term at and the simulated channel charges,
     /// so planned and shipped bytes agree.
     pub wire_encoding: WireEncoding,
+    /// Run [`Planner::plan_joint`] per class at startup (branch set
+    /// held fixed at the manifest's) and adopt the winning wire
+    /// encoding + split for that class's planner and shards. A class
+    /// may override via [`ClassProfile::joint_search`].
+    pub joint_search: bool,
+    /// Accuracy-proxy floor handed to the startup joint search
+    /// (survival mass of the deferred path); 0 disables pruning.
+    pub min_accuracy_proxy: f64,
     /// Multiplicative jitter stddev on the class channels (0 = none).
     pub channel_jitter: f64,
     /// False = channels account delays without sleeping (tests/benches).
@@ -250,6 +260,8 @@ impl Default for FleetConfig {
             probe_fraction: 0.0,
             cloud_addr: None,
             wire_encoding: WireEncoding::Raw,
+            joint_search: false,
+            min_accuracy_proxy: 0.0,
             channel_jitter: 0.0,
             real_time_channel: true,
         }
@@ -376,6 +388,10 @@ struct ClassGroup {
     router: FleetRouter,
     adaptive: Option<AdaptiveHandle>,
     autoscaler: Option<AutoscalerHandle>,
+    /// The codec this class's planner prices and its shards ship at:
+    /// the fleet-wide `wire_encoding`, unless the startup joint search
+    /// adopted a better one for this class's link.
+    wire_encoding: WireEncoding,
     /// Requests considered for exit-rate probing (solved split kept the
     /// branch inactive while probing was enabled).
     probe_counter: AtomicU64,
@@ -507,6 +523,14 @@ impl Fleet {
         if cfg.probe_fraction > 0.0 && !cfg.per_request_planning {
             bail!("probe_fraction requires per_request_planning (probes ride on overrides)");
         }
+        if !(cfg.min_accuracy_proxy.is_finite()
+            && (0.0..=1.0).contains(&cfg.min_accuracy_proxy))
+        {
+            bail!(
+                "min_accuracy_proxy must be in [0, 1]; got {}",
+                cfg.min_accuracy_proxy
+            );
+        }
 
         let branch_pos = manifest.branch.after_stage;
         // Probing needs a branch-active split to route through; a branch
@@ -540,15 +564,27 @@ impl Fleet {
         // connection set and one backoff state per *server*, not per
         // pipeline. Construction is lazy: a fleet starts fine while a
         // cloud is down and falls back to local execution.
-        let mut engines: Vec<Arc<RemoteCloudEngine>> = Vec::new();
-        let mut engine_for = |addr: &str| -> Arc<RemoteCloudEngine> {
-            if let Some(e) = engines.iter().find(|e| e.addr() == addr) {
+        let mut engines: Vec<(WireEncoding, Arc<RemoteCloudEngine>)> = Vec::new();
+        let mut engine_for = |addr: &str, encoding: WireEncoding| -> Arc<RemoteCloudEngine> {
+            if let Some((enc, e)) = engines.iter().find(|(_, e)| e.addr() == addr) {
+                if *enc != encoding {
+                    // Engines are deduped per endpoint, so the first
+                    // class to resolve an address fixes its codec; a
+                    // sibling that adopted a different one still plans
+                    // at its own alpha but ships at the shared codec.
+                    log::warn!(
+                        "cloud-stage server {addr} already shares a client encoding {}; \
+                         a class requesting {} reuses it",
+                        enc.as_str(),
+                        encoding.as_str()
+                    );
+                }
                 return e.clone();
             }
             let mut rcfg = RemoteCloudConfig::new(addr.to_string());
-            rcfg.encoding = cfg.wire_encoding;
+            rcfg.encoding = encoding;
             let engine = Arc::new(RemoteCloudEngine::new(rcfg));
-            engines.push(engine.clone());
+            engines.push((encoding, engine.clone()));
             // Reachability probe on a detached thread: its only output
             // is a log line, and a stalled resolver or a 2s connect
             // timeout must not delay fleet startup (the whole point of
@@ -637,11 +673,66 @@ impl Fleet {
             // fleet-wide default; classes resolving to the same address
             // share one engine through the dedup map above.
             let cloud_addr = prof.cloud_addr.clone().or_else(|| cfg.cloud_addr.clone());
-            let remote = cloud_addr.as_deref().map(&mut engine_for);
+            // Startup joint search (fleet-wide flag, per-class
+            // override): with the deployed branch set held fixed — a
+            // serving fleet cannot re-train branches — sweep every
+            // wire codec × split at this class's nominal link and
+            // re-bake the class planner at the winner, so planned and
+            // shipped bytes keep agreeing per class.
+            let mut planner_for_class = base_planner.with_exit_probs(&[p_class]);
+            let mut class_encoding = cfg.wire_encoding;
+            if prof.joint_search.unwrap_or(cfg.joint_search) {
+                let mut space = JointSearchSpace::restricted(&planner_for_class);
+                space.encodings = WireEncoding::ALL.to_vec();
+                if accuracy_proxy(&space.branch_sets[0]) < cfg.min_accuracy_proxy {
+                    // The sole candidate is the deployed set; flooring
+                    // it out would leave nothing to serve. Search
+                    // unfloored instead of panicking in `plan_joint`.
+                    log::warn!(
+                        "[{}] joint search: deployed branch set misses the accuracy \
+                         floor {} — searching without the floor",
+                        prof.name,
+                        cfg.min_accuracy_proxy
+                    );
+                } else {
+                    space.min_accuracy_proxy = cfg.min_accuracy_proxy;
+                }
+                let joint = planner_for_class.plan_joint(prof.link, &space);
+                if joint.encoding != class_encoding {
+                    let fixed_ms = joint
+                        .ranked
+                        .iter()
+                        .find(|c| c.encoding == class_encoding)
+                        .map_or(f64::NAN, |c| c.expected_time * 1e3);
+                    log::info!(
+                        "[{}] joint search: adopting {} at split after {} \
+                         ({:.3} ms vs {:.3} ms under {})",
+                        prof.name,
+                        joint.encoding.as_str(),
+                        joint.split,
+                        joint.expected_time * 1e3,
+                        fixed_ms,
+                        class_encoding.as_str()
+                    );
+                    planner_for_class = planner_for_class.with_wire_encoding(joint.encoding);
+                    class_encoding = joint.encoding;
+                } else {
+                    log::info!(
+                        "[{}] joint search: kept {} (split after {}, E[T] {:.3} ms)",
+                        prof.name,
+                        joint.encoding.as_str(),
+                        joint.split,
+                        joint.expected_time * 1e3
+                    );
+                }
+            }
+            let remote = cloud_addr
+                .as_deref()
+                .map(|addr| engine_for(addr, class_encoding));
             let class_planner = Arc::new(ClassPlanner::new(
                 link_class,
                 prof.name.clone(),
-                base_planner.with_exit_probs(&[p_class]),
+                planner_for_class,
             ));
             let plan = class_planner.plan(prof.link);
 
@@ -713,7 +804,7 @@ impl Fleet {
                     batch_timeout: cfg.batch_timeout,
                     queue_capacity: cfg.queue_capacity,
                     cloud_workers: cfg.cloud_workers_per_shard,
-                    wire_encoding: cfg.wire_encoding,
+                    wire_encoding: class_encoding,
                 };
                 Arc::new(move |shard_idx: u64| {
                     let label = format!("{name}-s{shard_idx}");
@@ -837,6 +928,7 @@ impl Fleet {
                 router: FleetRouter::new(cfg.routing),
                 adaptive,
                 autoscaler,
+                wire_encoding: class_encoding,
                 probe_counter: AtomicU64::new(0),
                 probe_overrides: AtomicU64::new(0),
             });
@@ -848,7 +940,7 @@ impl Fleet {
             per_request_planning: cfg.per_request_planning,
             probe,
             branch_pos,
-            remotes: engines,
+            remotes: engines.into_iter().map(|(_, e)| e).collect(),
             wire_encoding: cfg.wire_encoding,
             budget,
             route_key: AtomicU64::new(1),
@@ -883,6 +975,13 @@ impl Fleet {
     /// Live shard count of a class.
     pub fn shards_of(&self, class: LinkClass) -> Result<usize> {
         Ok(self.group(class)?.shards.len())
+    }
+
+    /// The codec the class's planner prices and its shards ship at —
+    /// the fleet-wide default unless the startup joint search adopted
+    /// a different one for this class's link.
+    pub fn encoding_of(&self, class: LinkClass) -> Result<WireEncoding> {
+        Ok(self.group(class)?.wire_encoding)
     }
 
     /// `E[T_inf]` the class's planner prices for `split` at `link` —
@@ -1071,7 +1170,9 @@ impl Fleet {
         Some(total)
     }
 
-    /// The activation transfer codec this fleet ships (and plans) with.
+    /// The fleet-wide activation transfer codec. Individual classes may
+    /// ship a different one when the startup joint search adopted it —
+    /// see [`Fleet::encoding_of`].
     pub fn wire_encoding(&self) -> WireEncoding {
         self.wire_encoding
     }
@@ -1259,7 +1360,7 @@ impl Fleet {
                     name: g.profile.name.clone(),
                     link: g.profile.link,
                     split_after: handles[0].plan().split_after,
-                    wire_encoding: self.wire_encoding,
+                    wire_encoding: g.wire_encoding,
                     cloud_addr: g.cloud_addr.clone(),
                     planner: g.planner_stats(),
                     scaler: g.scaler_stats(),
@@ -1302,7 +1403,7 @@ impl Fleet {
                 name: g.profile.name.clone(),
                 link: g.profile.link,
                 split_after,
-                wire_encoding: self.wire_encoding,
+                wire_encoding: g.wire_encoding,
                 cloud_addr: g.cloud_addr.clone(),
                 // After the drain/join, so gate observations that landed
                 // while shards were draining are counted.
@@ -1445,6 +1546,100 @@ mod tests {
             .iter()
             .all(|c| c.wire_encoding == WireEncoding::Q8));
         fleet.shutdown();
+    }
+
+    #[test]
+    fn joint_search_adopts_per_class_encoding_at_startup() {
+        // A fat first stage makes the transfer term dominate on the
+        // slow class's link, so a quantized codec strictly beats raw
+        // there at every split that ships anything.
+        let manifest = Manifest::synthetic_sim(
+            "sim-joint",
+            vec![64],
+            &[4096, 8, 2],
+            1,
+            2,
+            vec![1, 2, 4, 8],
+        )
+        .unwrap();
+        let profile = DelayProfile::from_cloud_times(vec![1e-4, 1e-4, 1e-4], 2e-5, 200.0);
+        let mut opted_out = ClassProfile::custom("fast", 18.8, 0.0).unwrap();
+        opted_out.joint_search = Some(false);
+        let registry = ClassRegistry::new(vec![
+            ClassProfile::custom("slow", 1.10, 0.0).unwrap(),
+            opted_out,
+        ])
+        .unwrap();
+
+        // Ground truth from the same planner construction the fleet
+        // performs: p = default_exit_prob, full encoding sweep.
+        let base =
+            Planner::new(&manifest.to_desc(0.5), &profile, 1e-9, false).with_exit_probs(&[0.5]);
+        let mut space = JointSearchSpace::restricted(&base);
+        space.encodings = WireEncoding::ALL.to_vec();
+        let joint = base.plan_joint(LinkModel::new(1.10, 0.0), &space);
+        assert_eq!(joint.encoding, WireEncoding::Q4, "fixture no longer favors q4");
+
+        let m = manifest.clone();
+        let fleet = Fleet::start(
+            registry,
+            &manifest,
+            &profile,
+            FleetConfig {
+                real_time_channel: false,
+                joint_search: true,
+                ..Default::default()
+            },
+            move |label| {
+                Ok((
+                    InferenceEngine::open_sim(m.clone(), &format!("{label}-e"))?,
+                    InferenceEngine::open_sim(m.clone(), &format!("{label}-c"))?,
+                ))
+            },
+        )
+        .unwrap();
+        let slow = fleet.class_by_name("slow").unwrap();
+        let fast = fleet.class_by_name("fast").unwrap();
+        assert_eq!(fleet.encoding_of(slow).unwrap(), WireEncoding::Q4);
+        assert_eq!(fleet.plan_of(slow).unwrap().split_after, joint.split);
+        // The per-class opt-out wins over the fleet flag.
+        assert_eq!(fleet.encoding_of(fast).unwrap(), WireEncoding::Raw);
+        // The fleet-wide default is untouched; per-class codecs surface
+        // in the report.
+        assert_eq!(fleet.wire_encoding(), WireEncoding::Raw);
+        let report = fleet.report();
+        assert_eq!(report.classes[0].wire_encoding, WireEncoding::Q4);
+        assert_eq!(report.classes[1].wire_encoding, WireEncoding::Raw);
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn start_rejects_bad_accuracy_floor() {
+        let manifest =
+            Manifest::synthetic_sim("sim-floor", vec![4], &[16, 8, 2], 1, 2, vec![1])
+                .unwrap();
+        let profile = DelayProfile::from_cloud_times(vec![1e-4, 1e-4, 1e-4], 2e-5, 50.0);
+        for bad in [-0.1, 1.5, f64::NAN] {
+            let m = manifest.clone();
+            let err = Fleet::start(
+                ClassRegistry::single(ClassProfile::custom("only", 5.85, 0.0).unwrap()),
+                &manifest,
+                &profile,
+                FleetConfig {
+                    real_time_channel: false,
+                    min_accuracy_proxy: bad,
+                    ..Default::default()
+                },
+                move |label| {
+                    Ok((
+                        InferenceEngine::open_sim(m.clone(), &format!("{label}-e"))?,
+                        InferenceEngine::open_sim(m.clone(), &format!("{label}-c"))?,
+                    ))
+                },
+            )
+            .unwrap_err();
+            assert!(err.to_string().contains("min_accuracy_proxy"), "{err:#}");
+        }
     }
 
     #[test]

@@ -20,11 +20,11 @@ use branchyserve::config::settings::{validate_host_port, Flavor, Settings, Strat
 use branchyserve::experiments::{ablation, fig4, fig5, fig6};
 use branchyserve::fleet::{ClassProfile, ClassRegistry, Fleet, FleetConfig, RoutePolicy};
 use branchyserve::harness::Table;
-use branchyserve::model::Manifest;
+use branchyserve::model::{BranchDesc, Manifest};
 use branchyserve::network::bandwidth::{LinkModel, Profile};
 use branchyserve::network::{BandwidthTrace, WireEncoding};
 use branchyserve::partition;
-use branchyserve::planner::{AdaptiveConfig, EstimatorConfig};
+use branchyserve::planner::{AdaptiveConfig, EstimatorConfig, JointSearchSpace, Planner};
 use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
 use branchyserve::runtime::InferenceEngine;
 use branchyserve::scenario::{self, ScenarioSpec};
@@ -52,7 +52,11 @@ fn cli() -> Cli {
                 .flag(Flag::value("probability", "side-branch exit probability").default("0.5"))
                 .flag(Flag::value("strategy", "shortest-path|brute|neurosurgeon|edge|cloud").default("shortest-path"))
                 .flag(Flag::value("profile", "profile JSON (else measured now)"))
-                .flag(Flag::switch("all", "print every strategy for comparison")),
+                .flag(Flag::switch("all", "print every strategy for comparison"))
+                .flag(Flag::switch(
+                    "joint",
+                    "also run the joint search: branch placement x wire encoding x split",
+                )),
             Command::new("serve", "run the sharded multi-class TCP serving fleet")
                 .flag(Flag::value("port", "TCP port (0 = auto)").default("7878"))
                 .flag(Flag::value("network", "default class when no [[link_class]] config: 3g|4g|wifi").default("4g"))
@@ -326,7 +330,54 @@ fn cmd_plan(inv: &Invocation, settings: &Settings) -> Result<()> {
         }
     }
     println!("{}", table.render());
+    if inv.has("joint") {
+        let planner = Planner::new(&desc, &profile, settings.partition.epsilon, true);
+        let space = JointSearchSpace {
+            branch_sets: ablation::branch_set_candidates(&desc, p),
+            encodings: WireEncoding::ALL.to_vec(),
+            min_accuracy_proxy: settings.planner.min_accuracy_proxy,
+        };
+        let joint = planner.plan_joint(link, &space);
+        let fixed = planner.plan_for(link);
+        println!(
+            "joint search: {} branch set(s) x {} encoding(s), accuracy floor {} \
+             ({} set(s) pruned)",
+            space.branch_sets.len(),
+            space.encodings.len(),
+            space.min_accuracy_proxy,
+            joint.pruned,
+        );
+        let mut jt = Table::new(&["rank", "branches", "encoding", "split after", "E[T]", "proxy"]);
+        for (i, c) in joint.ranked.iter().take(10).enumerate() {
+            jt.row(vec![
+                (i + 1).to_string(),
+                format_branch_set(&c.branch_set),
+                c.encoding.as_str().to_string(),
+                c.split.to_string(),
+                format_secs(c.expected_time),
+                format!("{:.3}", c.accuracy_proxy),
+            ]);
+        }
+        println!("{}", jt.render());
+        println!(
+            "joint best {} vs fixed plan {} ({:+.2}%)",
+            format_secs(joint.expected_time),
+            format_secs(fixed.expected_time_s),
+            (joint.expected_time / fixed.expected_time_s - 1.0) * 100.0,
+        );
+    }
     Ok(())
+}
+
+/// `@pos(p)` list for a joint-search candidate, `-` for branch-free.
+fn format_branch_set(set: &[BranchDesc]) -> String {
+    if set.is_empty() {
+        return "-".to_string();
+    }
+    set.iter()
+        .map(|b| format!("@{}({})", b.after_stage, b.exit_prob))
+        .collect::<Vec<_>>()
+        .join(" ")
 }
 
 /// The simulated B-AlexNet stand-in the `--sim` serving path runs.
@@ -500,6 +551,7 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             cloud_addr: None,
             min_shards: None,
             max_shards: None,
+            joint_search: None,
         };
         if let Some(path) = &settings.network.trace {
             println!(
@@ -552,6 +604,8 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             probe_fraction,
             cloud_addr: cloud_addr.clone(),
             wire_encoding,
+            joint_search: settings.planner.joint_search,
+            min_accuracy_proxy: settings.planner.min_accuracy_proxy,
             channel_jitter: 0.0,
             real_time_channel: true,
         },
@@ -570,10 +624,12 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             None => String::new(),
         };
         println!(
-            "class {:>10} @ {:>9.2} Mbps -> split after {:>2} ({} shard(s) x {} cloud worker(s)){}",
+            "class {:>10} @ {:>9.2} Mbps -> split after {:>2}, {} wire \
+             ({} shard(s) x {} cloud worker(s)){}",
             c.name,
             c.link.uplink_mbps,
             c.split_after,
+            c.wire_encoding,
             c.shards.len(),
             cloud_workers,
             cloud,
@@ -604,6 +660,17 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
         None => println!("cloud stages: in-process"),
     }
     println!("activation wire encoding: {wire_encoding} (planner prices transfers at this codec)");
+    println!(
+        "startup joint search: {}",
+        if settings.planner.joint_search {
+            format!(
+                "on (encoding x split per class, accuracy floor {})",
+                settings.planner.min_accuracy_proxy
+            )
+        } else {
+            "off (enable with [planner] joint_search = true)".to_string()
+        }
+    );
 
     let port = get_usize(inv, "port")?.unwrap_or(7878) as u16;
     let bind = inv.get("bind").unwrap_or("127.0.0.1");

@@ -1,0 +1,515 @@
+//! Joint configuration search: branch placement × partition × precision.
+//!
+//! The paper optimizes one axis — the partition point — for a *fixed*
+//! BranchyNet shipping f32 activations. But the shortest-path
+//! equivalence the planner collapses into a sweep (see the module doc
+//! of [`crate::planner`]) holds for every (branch-set, wire-encoding)
+//! configuration independently: each candidate defines its own layered
+//! graph over the *same* physical stages, and the layered graphs differ
+//! only in the survival weights (branch geometry) and the `alpha_s`
+//! transfer sizes (encoding). [`Planner::plan_joint`] therefore
+//! searches the whole space at sweep cost:
+//!
+//! * **one shared [`StaticCore`]** — raw stage times, cloud suffix,
+//!   branch-evaluation cost — validated once, reused by every
+//!   candidate (no desc clone, no re-validation, no graph work);
+//! * **one alpha table per encoding** (the core's own table is reused
+//!   for its baked encoding) — `transfer_wire_bytes` through the same
+//!   size map the codec ships with;
+//! * **one `ExitView` per branch-set candidate** — derived by the same
+//!   generalized fold `with_exit_probs` uses, so a candidate equal to
+//!   the planner's live configuration prices **bit-identically** to
+//!   [`Planner::plan_for`] (property-tested in
+//!   `rust/tests/planner_equivalence.rs`);
+//! * an **accuracy proxy floor**: a branch set's proxy is its final
+//!   survival mass `Π (1 − p_k)` — the fraction of traffic that still
+//!   reaches the full network's exit (the same quantity
+//!   `ablation::branch_placement` reports). Sets below
+//!   `min_accuracy_proxy` are pruned before any sweep runs, so the
+//!   search can never "win" latency by exiting everything early.
+//!
+//! The exhaustive-oracle layer (`rust/tests/joint_optimality.rs`)
+//! enumerates every (branch-set, encoding, split) triple on small nets
+//! and holds the result bit-identical to the brute-force argmin.
+
+use crate::model::{BranchDesc, BranchyNetDesc};
+use crate::network::bandwidth::LinkModel;
+use crate::network::encoding::WireEncoding;
+
+use super::{ExitView, Planner};
+
+/// The candidate space [`Planner::plan_joint`] searches: the cross
+/// product of `branch_sets` × `encodings` × every split, filtered by
+/// the accuracy-proxy floor.
+///
+/// Branch sets are given as [`BranchDesc`] lists (any order; each is
+/// sorted by position internally, like `Planner::new` sorts the desc's
+/// branches). An empty list is a valid candidate: the plain DNN with no
+/// early exit (proxy 1.0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JointSearchSpace {
+    /// Branch-set candidates, evaluated in order (first match wins
+    /// exact latency ties).
+    pub branch_sets: Vec<Vec<BranchDesc>>,
+    /// Wire encodings to price each branch set under, evaluated in
+    /// order within a branch set.
+    pub encodings: Vec<WireEncoding>,
+    /// Minimum final survival mass `Π (1 − p_k)` a branch set must
+    /// keep to be considered. 0.0 admits everything; 1.0 admits only
+    /// branch-free (or p = 0) sets.
+    pub min_accuracy_proxy: f64,
+}
+
+impl JointSearchSpace {
+    /// The degenerate space: exactly the planner's current branch set
+    /// (live-view probabilities) under its baked wire encoding, no
+    /// floor. `plan_joint` over this space returns `plan_for`'s split
+    /// and expected time bit-for-bit — the joint search collapses to
+    /// the paper's optimizer.
+    pub fn restricted(planner: &Planner) -> JointSearchSpace {
+        let probs = planner.exit_probs();
+        let branch_set = planner
+            .core
+            .branch_positions
+            .iter()
+            .zip(&probs)
+            .map(|(&after_stage, &exit_prob)| BranchDesc {
+                after_stage,
+                exit_prob,
+            })
+            .collect();
+        JointSearchSpace {
+            branch_sets: vec![branch_set],
+            encodings: vec![planner.wire_encoding()],
+            min_accuracy_proxy: 0.0,
+        }
+    }
+}
+
+/// One evaluated (branch-set, encoding) candidate: its optimal split
+/// under the queried link, the expected time that split achieves, and
+/// the branch set's accuracy proxy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JointCandidate {
+    /// The candidate's branches, sorted by position.
+    pub branch_set: Vec<BranchDesc>,
+    pub encoding: WireEncoding,
+    /// Optimal split for this candidate (0 = cloud-only, N = edge-only),
+    /// under the same epsilon tie-break as [`Planner::plan_for`].
+    pub split: usize,
+    /// `E[T]` at that split — the model value, without the tie-break
+    /// epsilon, exactly as `plan_for` reports it.
+    pub expected_time: f64,
+    /// Final survival mass `Π (1 − p_k)` of the branch set.
+    pub accuracy_proxy: f64,
+}
+
+/// The joint search result: the latency-optimal surviving candidate
+/// plus the full ranked table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JointPlan {
+    /// Winning branch set, sorted by position.
+    pub branch_set: Vec<BranchDesc>,
+    /// Winning wire encoding.
+    pub encoding: WireEncoding,
+    /// Winning split (0 = cloud-only, N = edge-only).
+    pub split: usize,
+    /// `E[T]` of the winner at its split.
+    pub expected_time: f64,
+    /// Accuracy proxy of the winning branch set.
+    pub accuracy_proxy: f64,
+    /// Every surviving candidate, best first (stable on exact ties, so
+    /// equal-latency candidates rank in enumeration order).
+    pub ranked: Vec<JointCandidate>,
+    /// How many branch-set candidates the accuracy floor rejected.
+    pub pruned: usize,
+}
+
+impl JointPlan {
+    /// The model description realized by the winner: `template` with
+    /// its branches replaced by the winning branch set. What a
+    /// deployment adopting this plan would serve.
+    pub fn realized_desc(&self, template: &BranchyNetDesc) -> BranchyNetDesc {
+        let mut desc = template.clone();
+        desc.branches = self.branch_set.clone();
+        desc
+    }
+}
+
+/// Final survival mass of a branch set: `Π (1 − p_k)` folded in
+/// position order — the identical left fold the survival chain uses, so
+/// the proxy equals the planner's `S(N)` bit for bit.
+pub fn accuracy_proxy(branch_set: &[BranchDesc]) -> f64 {
+    let mut sorted: Vec<&BranchDesc> = branch_set.iter().collect();
+    sorted.sort_by_key(|b| b.after_stage);
+    let mut mass = 1.0f64;
+    for b in sorted {
+        mass *= 1.0 - b.exit_prob;
+    }
+    mass
+}
+
+impl Planner {
+    /// Search (branch-set × wire-encoding × split) for the
+    /// latency-optimal configuration under `link`.
+    ///
+    /// Cost: one O(N) alpha table per encoding not already baked into
+    /// the core, one O(N·m) view derivation per branch set that clears
+    /// the accuracy floor, and one O(N) sweep per surviving
+    /// (branch-set, encoding) pair — the desc is validated zero times.
+    /// Each sweep applies the same epsilon tie-break as
+    /// [`Planner::plan_for`] (cut options carry `+epsilon`; exact ties
+    /// resolve toward the edge), and across candidates exact
+    /// expected-time ties resolve toward the earlier candidate in
+    /// `space` order — so the result is deterministic for a fixed
+    /// space.
+    ///
+    /// Panics on an empty space, a malformed branch set (position
+    /// outside `1..N`, duplicate positions, probability outside
+    /// `[0, 1]`), a `min_accuracy_proxy` outside `[0, 1]`, or when the
+    /// floor prunes every candidate.
+    pub fn plan_joint(&self, link: LinkModel, space: &JointSearchSpace) -> JointPlan {
+        let core = &*self.core;
+        let n = core.n;
+        assert!(
+            !space.branch_sets.is_empty(),
+            "joint search space has no branch-set candidates"
+        );
+        assert!(
+            !space.encodings.is_empty(),
+            "joint search space has no encodings"
+        );
+        assert!(
+            (0.0..=1.0).contains(&space.min_accuracy_proxy),
+            "min_accuracy_proxy {} not in [0, 1]",
+            space.min_accuracy_proxy
+        );
+
+        // One alpha table per encoding, shared across branch sets
+        // (alpha is branch-independent). The core's own table *is* the
+        // table for its baked encoding — reusing it keeps the
+        // restricted search bit-identical to `plan_for`.
+        let alphas: Vec<Vec<u64>> = space
+            .encodings
+            .iter()
+            .map(|&enc| {
+                if enc == core.wire_encoding {
+                    core.alpha_bytes.clone()
+                } else {
+                    (0..n)
+                        .map(|s| core.desc.transfer_wire_bytes(s, enc))
+                        .collect()
+                }
+            })
+            .collect();
+
+        let mut ranked: Vec<JointCandidate> = Vec::new();
+        let mut pruned = 0usize;
+        for set in &space.branch_sets {
+            // Sort by position (stable, like `Planner::new`) and check
+            // the same structural invariants desc validation enforces —
+            // without touching the desc.
+            let mut branches: Vec<BranchDesc> = set.clone();
+            branches.sort_by_key(|b| b.after_stage);
+            for b in &branches {
+                assert!(
+                    b.after_stage >= 1 && b.after_stage < n,
+                    "branch position {} outside 1..{n}",
+                    b.after_stage
+                );
+            }
+            for w in branches.windows(2) {
+                assert_ne!(
+                    w[0].after_stage, w[1].after_stage,
+                    "duplicate branch position {}",
+                    w[0].after_stage
+                );
+            }
+            let positions: Vec<usize> = branches.iter().map(|b| b.after_stage).collect();
+            let probs: Vec<f64> = branches.iter().map(|b| b.exit_prob).collect();
+            let active_at: Vec<usize> = (0..=n)
+                .map(|s| positions.partition_point(|&pos| pos < s))
+                .collect();
+            // The candidate's layered graph, collapsed: the same
+            // survival-weighted folds `with_exit_probs` derives, over
+            // the candidate's geometry.
+            let view = ExitView::derive_for(core, &active_at, &probs);
+            // S(N): the fraction of traffic still answered by the full
+            // network — the accuracy proxy.
+            let proxy = view.surv[n];
+            if proxy < space.min_accuracy_proxy {
+                pruned += 1;
+                continue;
+            }
+
+            for (alpha, &encoding) in alphas.iter().zip(&space.encodings) {
+                let (split, expected_time) = sweep(core, &view, alpha, link, self.epsilon);
+                ranked.push(JointCandidate {
+                    branch_set: branches.clone(),
+                    encoding,
+                    split,
+                    expected_time,
+                    accuracy_proxy: proxy,
+                });
+            }
+        }
+        assert!(
+            !ranked.is_empty(),
+            "accuracy floor {} pruned every branch-set candidate",
+            space.min_accuracy_proxy
+        );
+        // Stable: exact ties keep enumeration order, so the search is
+        // deterministic for a fixed space.
+        ranked.sort_by(|a, b| a.expected_time.total_cmp(&b.expected_time));
+        let best = ranked[0].clone();
+        JointPlan {
+            branch_set: best.branch_set,
+            encoding: best.encoding,
+            split: best.split,
+            expected_time: best.expected_time,
+            accuracy_proxy: best.accuracy_proxy,
+            ranked,
+            pruned,
+        }
+    }
+}
+
+/// The argmin sweep of `plan_with_epsilon`, parameterized by the
+/// candidate's view and alpha table: same terms, same fold order, same
+/// `<=` tie-break toward the larger split. Returns (split, model time).
+fn sweep(
+    core: &super::StaticCore,
+    view: &ExitView,
+    alpha: &[u64],
+    link: LinkModel,
+    epsilon: f64,
+) -> (usize, f64) {
+    let n = core.n;
+    let mut best_split = 0usize;
+    let mut best_model = f64::INFINITY;
+    let mut best_decision = f64::INFINITY;
+    for s in 0..=n {
+        let mut model = view.edge_cost[s];
+        if s < n {
+            let surv = view.surv[s];
+            if surv > 0.0 {
+                model += surv * (link.transfer_time(alpha[s]) + core.cloud_suffix[s]);
+            }
+        }
+        let decision = if s < n { model + epsilon } else { model };
+        // `<=`: on an exact tie the larger split (more edge work) wins.
+        if decision <= best_decision {
+            best_decision = decision;
+            best_model = model;
+            best_split = s;
+        }
+    }
+    (best_split, best_model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::profile::DelayProfile;
+
+    fn branch(after_stage: usize, exit_prob: f64) -> BranchDesc {
+        BranchDesc {
+            after_stage,
+            exit_prob,
+        }
+    }
+
+    fn fixture(p: f64) -> (BranchyNetDesc, DelayProfile) {
+        let desc = BranchyNetDesc {
+            stage_names: (1..=5).map(|i| format!("s{i}")).collect(),
+            stage_out_bytes: vec![57_600, 18_816, 25_088, 3_456, 8],
+            input_bytes: 12_288,
+            branches: vec![branch(1, p)],
+        };
+        let profile = DelayProfile::from_cloud_times(
+            vec![1e-3, 2e-3, 1.5e-3, 8e-4, 2e-4],
+            3e-4,
+            100.0,
+        );
+        (desc, profile)
+    }
+
+    #[test]
+    fn restricted_space_degenerates_to_plan_for() {
+        let (desc, profile) = fixture(0.6);
+        for paper in [true, false] {
+            let planner = Planner::new(&desc, &profile, 1e-9, paper);
+            for mbps in [0.05, 1.10, 5.85, 18.80, 500.0] {
+                let link = LinkModel::new(mbps, 0.01);
+                let fixed = planner.plan_for(link);
+                let joint = planner.plan_joint(link, &JointSearchSpace::restricted(&planner));
+                assert_eq!(joint.split, fixed.split_after, "mbps={mbps} paper={paper}");
+                assert_eq!(
+                    joint.expected_time.to_bits(),
+                    fixed.expected_time_s.to_bits(),
+                    "mbps={mbps} paper={paper}"
+                );
+                assert_eq!(joint.branch_set, desc.branches);
+                assert_eq!(joint.encoding, WireEncoding::Raw);
+                assert_eq!(joint.ranked.len(), 1);
+                assert_eq!(joint.pruned, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn restricted_space_tracks_live_view_and_baked_encoding() {
+        // After a p-update *and* an encoding re-bake, the restricted
+        // space must describe the planner as it prices now — not as it
+        // was constructed.
+        let (desc, profile) = fixture(0.6);
+        let planner = Planner::new(&desc, &profile, 1e-9, false).with_wire_encoding(WireEncoding::Q8);
+        planner.set_exit_probs(&[0.25]);
+        let space = JointSearchSpace::restricted(&planner);
+        assert_eq!(space.branch_sets, vec![vec![branch(1, 0.25)]]);
+        assert_eq!(space.encodings, vec![WireEncoding::Q8]);
+
+        let link = LinkModel::new(1.10, 0.0);
+        let fixed = planner.plan_for(link);
+        let joint = planner.plan_joint(link, &space);
+        assert_eq!(joint.split, fixed.split_after);
+        assert_eq!(joint.expected_time.to_bits(), fixed.expected_time_s.to_bits());
+    }
+
+    #[test]
+    fn quantized_encoding_wins_a_transfer_dominated_link() {
+        // Same setup as the planner's compression-relocation test: raw
+        // transfer is prohibitive, q4 makes the fast cloud reachable.
+        // The joint search must discover that on its own.
+        let desc = BranchyNetDesc {
+            stage_names: vec!["s1".into(), "s2".into()],
+            stage_out_bytes: vec![1_000_000, 8],
+            input_bytes: 1_000_000,
+            branches: vec![],
+        };
+        let profile = DelayProfile::from_cloud_times(vec![0.0005, 0.1], 0.0, 20.0);
+        let link = LinkModel::new(1.0, 0.0);
+        let planner = Planner::new(&desc, &profile, 1e-9, false);
+
+        let space = JointSearchSpace {
+            branch_sets: vec![vec![]],
+            encodings: WireEncoding::ALL.to_vec(),
+            min_accuracy_proxy: 0.0,
+        };
+        let joint = planner.plan_joint(link, &space);
+        assert_eq!(joint.encoding, WireEncoding::Q4);
+        assert_eq!(joint.split, 0, "q4 makes cloud-only optimal");
+        assert_eq!(joint.accuracy_proxy, 1.0, "no branch: full accuracy");
+        let fixed = planner.plan_for(link);
+        assert!(joint.expected_time < fixed.expected_time_s);
+        // The ranked table covers all three encodings, best first.
+        assert_eq!(joint.ranked.len(), 3);
+        for pair in joint.ranked.windows(2) {
+            assert!(pair[0].expected_time <= pair[1].expected_time);
+        }
+    }
+
+    #[test]
+    fn accuracy_floor_prunes_before_latency_ranks() {
+        // An aggressive early exit (p = 0.95) is the latency winner on
+        // a slow link, but keeps only 5% of traffic for the full net.
+        // With a 0.5 floor it must be pruned, not out-ranked.
+        let (desc, profile) = fixture(0.6);
+        let planner = Planner::new(&desc, &profile, 1e-9, true);
+        let link = LinkModel::new(0.05, 0.0);
+        let space = JointSearchSpace {
+            branch_sets: vec![vec![branch(1, 0.95)], vec![branch(1, 0.4)]],
+            encodings: vec![WireEncoding::Raw],
+            min_accuracy_proxy: 0.5,
+        };
+        let joint = planner.plan_joint(link, &space);
+        assert_eq!(joint.pruned, 1);
+        assert_eq!(joint.ranked.len(), 1);
+        assert_eq!(joint.branch_set, vec![branch(1, 0.4)]);
+        assert!((joint.accuracy_proxy - 0.6).abs() < 1e-12);
+
+        // Floor 0.0: nothing pruned, and the aggressive exit wins.
+        let open = JointSearchSpace {
+            min_accuracy_proxy: 0.0,
+            ..space
+        };
+        let joint = planner.plan_joint(link, &open);
+        assert_eq!(joint.pruned, 0);
+        assert_eq!(joint.branch_set, vec![branch(1, 0.95)]);
+    }
+
+    #[test]
+    fn exact_ties_rank_in_enumeration_order() {
+        let (desc, profile) = fixture(0.6);
+        let planner = Planner::new(&desc, &profile, 1e-9, true);
+        let link = LinkModel::new(5.85, 0.0);
+        // The same branch set twice: identical expected times; the
+        // first enumeration must win and stay first in the table.
+        let space = JointSearchSpace {
+            branch_sets: vec![vec![branch(2, 0.5)], vec![branch(2, 0.5)]],
+            encodings: vec![WireEncoding::Raw],
+            min_accuracy_proxy: 0.0,
+        };
+        let a = planner.plan_joint(link, &space);
+        let b = planner.plan_joint(link, &space);
+        assert_eq!(a, b, "deterministic across runs");
+        assert_eq!(a.ranked.len(), 2);
+        assert_eq!(
+            a.ranked[0].expected_time.to_bits(),
+            a.ranked[1].expected_time.to_bits()
+        );
+    }
+
+    #[test]
+    fn accuracy_proxy_is_the_survival_left_fold() {
+        let set = vec![branch(3, 0.3), branch(1, 0.5)];
+        // Sorted by position: (1 - 0.5) then (1 - 0.3).
+        assert_eq!(
+            accuracy_proxy(&set).to_bits(),
+            ((1.0f64 - 0.5) * (1.0 - 0.3)).to_bits()
+        );
+        assert_eq!(accuracy_proxy(&[]), 1.0);
+    }
+
+    #[test]
+    fn realized_desc_swaps_branches_only() {
+        let (desc, profile) = fixture(0.6);
+        let planner = Planner::new(&desc, &profile, 1e-9, true);
+        let space = JointSearchSpace {
+            branch_sets: vec![vec![branch(2, 0.7)]],
+            encodings: vec![WireEncoding::Raw],
+            min_accuracy_proxy: 0.0,
+        };
+        let joint = planner.plan_joint(LinkModel::new(1.10, 0.0), &space);
+        let realized = joint.realized_desc(&desc);
+        assert_eq!(realized.branches, vec![branch(2, 0.7)]);
+        assert_eq!(realized.stage_out_bytes, desc.stage_out_bytes);
+        realized.validate().expect("realized desc must be servable");
+    }
+
+    #[test]
+    #[should_panic(expected = "pruned every branch-set candidate")]
+    fn all_pruned_panics() {
+        let (desc, profile) = fixture(0.6);
+        let planner = Planner::new(&desc, &profile, 1e-9, true);
+        let space = JointSearchSpace {
+            branch_sets: vec![vec![branch(1, 0.9)]],
+            encodings: vec![WireEncoding::Raw],
+            min_accuracy_proxy: 0.5,
+        };
+        let _ = planner.plan_joint(LinkModel::new(5.85, 0.0), &space);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate branch position")]
+    fn duplicate_positions_panic() {
+        let (desc, profile) = fixture(0.6);
+        let planner = Planner::new(&desc, &profile, 1e-9, true);
+        let space = JointSearchSpace {
+            branch_sets: vec![vec![branch(2, 0.5), branch(2, 0.6)]],
+            encodings: vec![WireEncoding::Raw],
+            min_accuracy_proxy: 0.0,
+        };
+        let _ = planner.plan_joint(LinkModel::new(5.85, 0.0), &space);
+    }
+}

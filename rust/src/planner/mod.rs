@@ -93,15 +93,22 @@
 //! * [`estimator`] — the exit-rate feedback state machine: an EWMA
 //!   over per-request exited-early observations that triggers a view
 //!   rebuild when the estimate drifts beyond a configurable threshold
-//!   (the fleet feeds it from the coordinator's branch gate).
+//!   (the fleet feeds it from the coordinator's branch gate);
+//! * [`joint`] — the joint configuration search
+//!   ([`Planner::plan_joint`]): the same O(N) sweep run once per
+//!   (branch-set, wire-encoding) candidate over one shared
+//!   `StaticCore`, pruned by an accuracy-proxy floor — the first
+//!   optimizer here that moves more than the split axis.
 
 pub mod adaptive;
 pub mod cache;
 pub mod estimator;
+pub mod joint;
 
 pub use adaptive::{AdaptiveConfig, AdaptiveHandle, AdaptivePlanner, ReplanState, ReplanStats};
 pub use cache::PlanCache;
 pub use estimator::{EstimatorConfig, ExitRateEstimator};
+pub use joint::{JointCandidate, JointPlan, JointSearchSpace};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
@@ -171,6 +178,20 @@ impl ExitView {
             core.branch_positions.len(),
             probs.len()
         );
+        ExitView::derive_for(core, &core.active_at, probs)
+    }
+
+    /// [`ExitView::derive`] generalized to a *candidate* branch geometry
+    /// over the same core: `active_at` must be the `partition_point`
+    /// table of the candidate's sorted 1-based positions (so
+    /// `active_at[s]` counts candidate branches strictly before split
+    /// `s`) and `probs` its conditional exit probabilities in the same
+    /// order. The joint search ([`joint`]) uses this to price branch-set
+    /// candidates without cloning or re-validating the desc; with the
+    /// core's own tables it is exactly `derive` (same operations, same
+    /// fold order — that identity is what keeps the restricted joint
+    /// search bit-identical to [`Planner::plan_for`]).
+    fn derive_for(core: &StaticCore, active_at: &[usize], probs: &[f64]) -> ExitView {
         for &p in probs {
             assert!(
                 (0.0..=1.0).contains(&p),
@@ -178,6 +199,12 @@ impl ExitView {
             );
         }
         let n = core.n;
+        assert_eq!(active_at.len(), n + 1, "active_at must cover splits 0..=N");
+        assert_eq!(
+            active_at[n],
+            probs.len(),
+            "every branch position must lie strictly before stage N"
+        );
         // survival[j] = P[not exited at any of the first j branches].
         let mut survival = Vec::with_capacity(probs.len() + 1);
         survival.push(1.0f64);
@@ -191,7 +218,7 @@ impl ExitView {
         // the estimator's edge loop would produce for split s.
         let mut edge_cost = vec![0.0f64; n + 1];
         for i in 1..=n {
-            edge_cost[i] = edge_cost[i - 1] + survival[core.active_at[i]] * core.t_edge[i - 1];
+            edge_cost[i] = edge_cost[i - 1] + survival[active_at[i]] * core.t_edge[i - 1];
         }
         // Branch-evaluation terms are folded *after* the edge sum
         // (mirroring the estimator's second loop) so the fp result
@@ -201,14 +228,14 @@ impl ExitView {
                 let mut t = edge_cost[s];
                 // One term per *active* branch (position < s), in branch
                 // order, each weighted by the survival of reaching it.
-                for &reach in &survival[..core.active_at[s]] {
+                for &reach in &survival[..active_at[s]] {
                     t += reach * core.branch_t_edge;
                 }
                 edge_cost[s] = t;
             }
         }
 
-        let surv: Vec<f64> = (0..=n).map(|s| survival[core.active_at[s]]).collect();
+        let surv: Vec<f64> = (0..=n).map(|s| survival[active_at[s]]).collect();
 
         ExitView {
             exit_probs: probs.to_vec(),

@@ -1,0 +1,386 @@
+//! Exhaustive-oracle layer for the joint configuration search
+//! (`Planner::plan_joint`): on nets small enough to brute-force, the
+//! joint result must be **bit-identical** to the argmin over every
+//! (branch-set, wire-encoding, split) triple, where each triple is
+//! priced independently by the standalone `Estimator` — a fresh, fully
+//! validated desc per candidate, nothing shared with the planner's
+//! cheap-view machinery under test.
+//!
+//! The oracle replicates the search's two documented tie-breaks and
+//! nothing else: within a candidate, cut options carry `+epsilon` and
+//! `<=` resolves exact ties toward the larger split; across candidates,
+//! strict `<` keeps the earlier candidate in enumeration order. The
+//! grids are seeded and include the degenerate corners the planner
+//! clamps — 0 Mbps uplinks, infinite RTT — and exit probabilities at
+//! exactly 0 and 1.
+//!
+//! A second oracle cross-checks the pricing itself: re-pricing a
+//! candidate at its *encoded* byte sizes through the paper-faithful
+//! `G'_BDNN` + Dijkstra solver must agree with the enumerated optimum.
+
+use branchyserve::model::{synthetic, BranchDesc, BranchyNetDesc};
+use branchyserve::network::bandwidth::LinkModel;
+use branchyserve::network::encoding::WireEncoding;
+use branchyserve::partition::solver;
+use branchyserve::planner::joint::accuracy_proxy;
+use branchyserve::planner::{JointSearchSpace, Planner};
+use branchyserve::testing::{property, Gen};
+use branchyserve::timing::{DelayProfile, Estimator};
+
+const EPS: f64 = 1e-9;
+
+/// Degenerate corners included in every link grid: a dead uplink
+/// (clamped to the model's 1e-3 Mbps floor), a starved 3G-ish link, the
+/// paper's profiles, and an effectively infinite pipe.
+const BANDWIDTHS_MBPS: [f64; 6] = [0.0, 1e-3, 0.5, 1.10, 18.80, 1e5];
+/// RTT corners, including an infinite RTT (clamped by the link model).
+const RTTS_S: [f64; 5] = [0.0, 0.005, 0.1, 60.0, f64::INFINITY];
+
+/// The brute-force winner over every (branch-set, encoding, split)
+/// triple, plus the bookkeeping `plan_joint` must also reproduce.
+struct Oracle {
+    branch_set: Vec<BranchDesc>,
+    encoding: WireEncoding,
+    split: usize,
+    expected_time: f64,
+    accuracy_proxy: f64,
+    pruned: usize,
+    survivors: usize,
+}
+
+/// Price one (branch-set, encoding) candidate by exhaustive split
+/// enumeration through a fresh `Estimator` on a fresh desc — the
+/// independent implementation of the cost model. Applies the same
+/// epsilon decision rule as `plan_for`: cut options (s < N) carry
+/// `+epsilon`, `<=` resolves exact ties toward the larger split.
+fn enumerate_splits(
+    desc_b: &BranchyNetDesc,
+    profile: &DelayProfile,
+    link: LinkModel,
+    encoding: WireEncoding,
+    epsilon: f64,
+    paper_mode: bool,
+) -> (usize, f64) {
+    let mut est = Estimator::new(desc_b, profile, link).with_encoding(encoding);
+    if paper_mode {
+        est = est.paper_mode();
+    }
+    let n = desc_b.num_stages();
+    let mut best_split = 0usize;
+    let mut best_model = f64::INFINITY;
+    let mut best_decision = f64::INFINITY;
+    for s in 0..=n {
+        let model = est.expected_time(s);
+        let decision = if s < n { model + epsilon } else { model };
+        if decision <= best_decision {
+            best_decision = decision;
+            best_model = model;
+            best_split = s;
+        }
+    }
+    (best_split, best_model)
+}
+
+/// The full brute force: every triple, in `space` enumeration order,
+/// strict `<` across candidates (first wins exact ties). Returns None
+/// when the floor prunes everything (`plan_joint` panics there — the
+/// callers below never construct that case without expecting it).
+fn brute_force(
+    desc_template: &BranchyNetDesc,
+    profile: &DelayProfile,
+    link: LinkModel,
+    space: &JointSearchSpace,
+    epsilon: f64,
+    paper_mode: bool,
+) -> Option<Oracle> {
+    let mut best: Option<Oracle> = None;
+    let mut pruned = 0usize;
+    let mut survivors = 0usize;
+    for set in &space.branch_sets {
+        let mut branches = set.clone();
+        branches.sort_by_key(|b| b.after_stage);
+        let proxy = accuracy_proxy(&branches);
+        if proxy < space.min_accuracy_proxy {
+            pruned += 1;
+            continue;
+        }
+        let mut desc_b = desc_template.clone();
+        desc_b.branches = branches.clone();
+        for &encoding in &space.encodings {
+            survivors += 1;
+            let (split, time) = enumerate_splits(&desc_b, profile, link, encoding, epsilon, paper_mode);
+            let wins = match &best {
+                None => true,
+                Some(b) => time < b.expected_time,
+            };
+            if wins {
+                best = Some(Oracle {
+                    branch_set: branches.clone(),
+                    encoding,
+                    split,
+                    expected_time: time,
+                    accuracy_proxy: proxy,
+                    pruned: 0,
+                    survivors: 0,
+                });
+            }
+        }
+    }
+    best.map(|mut b| {
+        b.pruned = pruned;
+        b.survivors = survivors;
+        b
+    })
+}
+
+fn assert_matches_oracle(
+    planner: &Planner,
+    link: LinkModel,
+    space: &JointSearchSpace,
+    want: &Oracle,
+    ctx: &str,
+) {
+    let joint = planner.plan_joint(link, space);
+    assert_eq!(joint.branch_set, want.branch_set, "branch set ({ctx})");
+    assert_eq!(joint.encoding, want.encoding, "encoding ({ctx})");
+    assert_eq!(joint.split, want.split, "split ({ctx})");
+    assert_eq!(
+        joint.expected_time.to_bits(),
+        want.expected_time.to_bits(),
+        "expected time {} vs oracle {} ({ctx})",
+        joint.expected_time,
+        want.expected_time
+    );
+    assert_eq!(
+        joint.accuracy_proxy.to_bits(),
+        want.accuracy_proxy.to_bits(),
+        "accuracy proxy ({ctx})"
+    );
+    assert_eq!(joint.pruned, want.pruned, "pruned count ({ctx})");
+    assert_eq!(
+        joint.ranked.len(),
+        want.survivors,
+        "ranked table must cover every surviving (set, encoding) pair ({ctx})"
+    );
+    for pair in joint.ranked.windows(2) {
+        assert!(
+            pair[0].expected_time <= pair[1].expected_time,
+            "ranked table out of order ({ctx})"
+        );
+    }
+}
+
+/// Random candidate branch sets: up to `max_sets` sets of 0..=3
+/// branches at distinct interior positions, probabilities from the
+/// endpoint-hitting generator (exact 0.0 and 1.0 occur).
+fn random_branch_sets(g: &mut Gen, n: usize, max_sets: usize) -> Vec<Vec<BranchDesc>> {
+    let n_sets = g.usize_in(1, max_sets);
+    (0..n_sets)
+        .map(|_| {
+            let mut slots: Vec<usize> = (1..n).collect();
+            for i in (1..slots.len()).rev() {
+                let j = g.usize_in(0, i);
+                slots.swap(i, j);
+            }
+            let k = g.usize_in(0, slots.len().min(3));
+            slots[..k]
+                .iter()
+                .map(|&after_stage| BranchDesc {
+                    after_stage,
+                    exit_prob: g.probability(),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The tentpole obligation: on seeded random instances — net, profile,
+/// candidate sets, accuracy floor, epsilon, link (degenerate corners
+/// included) — `plan_joint` is bit-identical to the brute-force argmin
+/// over every triple.
+#[test]
+fn joint_is_bit_identical_to_the_exhaustive_argmin() {
+    property("plan_joint == brute force", 120, |g| {
+        let n = g.usize_in(2, 10);
+        let desc = synthetic::random_desc(g, n, 3);
+        let profile = synthetic::random_profile(g, &desc, g.f64_in(1.0, 500.0));
+        let paper = g.bool(0.5);
+        let epsilon = *g.choose(&[1e-12, 1e-9, 1e-3]);
+        let planner = Planner::new(&desc, &profile, epsilon, paper);
+
+        let branch_sets = random_branch_sets(g, n, 3);
+        let mut space = JointSearchSpace {
+            branch_sets,
+            encodings: WireEncoding::ALL.to_vec(),
+            min_accuracy_proxy: if g.bool(0.5) { 0.0 } else { g.f64_in(0.0, 1.0) },
+        };
+        // Keep at least one survivor: `plan_joint` treats an
+        // all-pruning floor as a caller error (it panics).
+        let max_proxy = space
+            .branch_sets
+            .iter()
+            .map(|s| accuracy_proxy(s))
+            .fold(f64::NEG_INFINITY, f64::max);
+        if max_proxy < space.min_accuracy_proxy {
+            space.min_accuracy_proxy = 0.0;
+        }
+
+        let link = LinkModel::new(*g.choose(&BANDWIDTHS_MBPS), *g.choose(&RTTS_S));
+        let want = brute_force(&desc, &profile, link, &space, epsilon, paper)
+            .expect("floor was adjusted to keep a survivor");
+        let ctx = format!(
+            "n={n} paper={paper} eps={epsilon} link={:.4}Mbps/{:.3}s floor={}",
+            link.uplink_mbps, link.rtt_s, space.min_accuracy_proxy
+        );
+        assert_matches_oracle(&planner, link, &space, &want, &ctx);
+    });
+}
+
+/// The same obligation on a pinned grid of degenerate corners — no
+/// randomness, every combination visited: dead/infinite links ×
+/// zero/infinite RTT × exit probabilities at exactly 0 and 1 × both
+/// planner modes. Failures here reproduce without a seed.
+#[test]
+fn degenerate_corners_match_the_oracle_exhaustively() {
+    let b = |after_stage: usize, exit_prob: f64| BranchDesc {
+        after_stage,
+        exit_prob,
+    };
+    let desc = BranchyNetDesc {
+        stage_names: (1..=6).map(|i| format!("s{i}")).collect(),
+        stage_out_bytes: vec![57_600, 18_816, 25_088, 3_456, 1_024, 8],
+        input_bytes: 12_288,
+        branches: vec![b(1, 0.5)],
+    };
+    let profile = DelayProfile::from_cloud_times(
+        vec![1e-3, 1.5e-3, 1.2e-3, 8e-4, 3e-4, 5e-5],
+        2e-4,
+        10.0,
+    );
+    let space = JointSearchSpace {
+        branch_sets: vec![
+            vec![],                      // plain DNN, proxy 1.0
+            vec![b(1, 0.0), b(3, 1.0)],  // a dead branch and a total one
+            vec![b(2, 0.5)],
+            vec![b(5, 1.0)],             // everything exits at the last slot
+        ],
+        encodings: WireEncoding::ALL.to_vec(),
+        min_accuracy_proxy: 0.0,
+    };
+    for paper in [true, false] {
+        let planner = Planner::new(&desc, &profile, EPS, paper);
+        for &mbps in &BANDWIDTHS_MBPS {
+            for &rtt in &RTTS_S {
+                let link = LinkModel::new(mbps, rtt);
+                let want = brute_force(&desc, &profile, link, &space, EPS, paper)
+                    .expect("floor 0 never prunes");
+                let ctx = format!("paper={paper} mbps={mbps} rtt={rtt}");
+                assert_matches_oracle(&planner, link, &space, &want, &ctx);
+            }
+        }
+    }
+}
+
+/// Pricing cross-check through an independent solver: a candidate's
+/// encoded transfer sizes, baked *into the desc as raw bytes*, must
+/// make (a) the Raw-priced `Estimator` bit-identical to the
+/// encoding-priced one on the original desc at every split, and (b)
+/// the paper-faithful `G'_BDNN` + Dijkstra solver agree with the
+/// enumerated optimum up to the epsilon tie-break.
+#[test]
+fn faithful_solver_agrees_on_encoded_byte_sizes() {
+    property("solve_faithful == enumerated optimum at encoded bytes", 60, |g| {
+        let n = g.usize_in(2, 10);
+        let desc = synthetic::random_desc(g, n, 3);
+        let profile = synthetic::random_profile(g, &desc, g.f64_in(1.0, 500.0));
+        let paper = g.bool(0.5);
+        let link = LinkModel::new(*g.choose(&BANDWIDTHS_MBPS), *g.choose(&RTTS_S));
+
+        for set in random_branch_sets(g, n, 2) {
+            let mut desc_b = desc.clone();
+            desc_b.branches = {
+                let mut s = set.clone();
+                s.sort_by_key(|b| b.after_stage);
+                s
+            };
+            for &encoding in &WireEncoding::ALL {
+                // The byte-mapped desc: every transferable size pushed
+                // through the encoding's size map, so Raw pricing on it
+                // *is* encoded pricing on the original.
+                let mut mapped = desc_b.clone();
+                mapped.input_bytes = encoding.payload_bytes(desc_b.input_bytes);
+                for bytes in &mut mapped.stage_out_bytes {
+                    *bytes = encoding.payload_bytes(*bytes);
+                }
+
+                let mut enc_est = Estimator::new(&desc_b, &profile, link).with_encoding(encoding);
+                let mut raw_est = Estimator::new(&mapped, &profile, link);
+                if paper {
+                    enc_est = enc_est.paper_mode();
+                    raw_est = raw_est.paper_mode();
+                }
+                for s in 0..=n {
+                    assert_eq!(
+                        raw_est.expected_time(s).to_bits(),
+                        enc_est.expected_time(s).to_bits(),
+                        "byte-mapped Raw pricing must equal encoded pricing \
+                         (split {s}, {encoding:?}, n={n})"
+                    );
+                }
+
+                let (best_split, best_time) =
+                    enumerate_splits(&desc_b, &profile, link, encoding, EPS, paper);
+                let faithful = solver::solve_faithful(&mapped, &profile, link, EPS, paper);
+                // Same optimum up to the tie-break epsilon plus fp noise
+                // between the two summation orders; identical split
+                // means identical bits.
+                let tol = EPS + 1e-9 * faithful.expected_time_s.abs().max(1.0);
+                assert!(
+                    (faithful.expected_time_s - best_time).abs() <= tol,
+                    "faithful {} vs enumerated {} ({encoding:?}, n={n})",
+                    faithful.expected_time_s,
+                    best_time
+                );
+                if faithful.split_after == best_split {
+                    assert_eq!(
+                        faithful.expected_time_s.to_bits(),
+                        best_time.to_bits(),
+                        "same split must price identically ({encoding:?}, n={n})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// The floor bookkeeping against the oracle: with a floor sitting
+/// strictly between two candidates' proxies, exactly the low-proxy set
+/// is pruned and the survivor wins regardless of latency order.
+#[test]
+fn floor_prunes_exactly_the_low_proxy_sets() {
+    let b = |after_stage: usize, exit_prob: f64| BranchDesc {
+        after_stage,
+        exit_prob,
+    };
+    let desc = BranchyNetDesc {
+        stage_names: (1..=5).map(|i| format!("s{i}")).collect(),
+        stage_out_bytes: vec![57_600, 18_816, 25_088, 3_456, 8],
+        input_bytes: 12_288,
+        branches: vec![b(1, 0.5)],
+    };
+    let profile =
+        DelayProfile::from_cloud_times(vec![1e-3, 2e-3, 1.5e-3, 8e-4, 2e-4], 3e-4, 100.0);
+    let planner = Planner::new(&desc, &profile, EPS, true);
+    let space = JointSearchSpace {
+        branch_sets: vec![vec![b(1, 0.9)], vec![b(2, 0.3)], vec![b(1, 0.95)]],
+        encodings: WireEncoding::ALL.to_vec(),
+        min_accuracy_proxy: 0.5,
+    };
+    for &mbps in &BANDWIDTHS_MBPS {
+        let link = LinkModel::new(mbps, 0.01);
+        let want = brute_force(&desc, &profile, link, &space, EPS, true).unwrap();
+        assert_eq!(want.pruned, 2, "proxies 0.1 and 0.05 sit under the 0.5 floor");
+        assert_eq!(want.survivors, WireEncoding::ALL.len());
+        assert_matches_oracle(&planner, link, &space, &want, &format!("mbps={mbps}"));
+    }
+}

@@ -12,8 +12,9 @@ use std::time::Duration;
 
 use branchyserve::model::synthetic;
 use branchyserve::network::bandwidth::LinkModel;
+use branchyserve::network::encoding::WireEncoding;
 use branchyserve::partition::solver;
-use branchyserve::planner::{AdaptiveConfig, Planner, ReplanState};
+use branchyserve::planner::{AdaptiveConfig, JointSearchSpace, Planner, ReplanState};
 use branchyserve::testing::{property, Gen};
 
 const EPS: f64 = 1e-9;
@@ -77,6 +78,54 @@ fn exit_prob_views_are_bit_identical_to_full_construction() {
                 rebuilt.plan_for(link).expected_time_s.to_bits(),
                 want_plan.expected_time_s.to_bits()
             );
+        }
+    });
+}
+
+/// The joint search's degeneration obligation: restricted to the
+/// planner's current branch set (live-view probabilities) under its
+/// baked wire encoding, `plan_joint` must collapse to the paper's
+/// one-axis optimizer — `plan_for`'s split and expected time, bit for
+/// bit — across randomized nets, p-updates, encoding re-bakes, and
+/// links.
+#[test]
+fn restricted_joint_space_degenerates_to_plan_for() {
+    property("plan_joint(restricted) == plan_for", 200, |g| {
+        let n = g.usize_in(1, 30);
+        let desc = synthetic::random_desc(g, n, 4);
+        let profile = synthetic::random_profile(g, &desc, g.f64_in(1.0, 2000.0));
+        let paper = g.bool(0.5);
+        let mut planner = Planner::new(&desc, &profile, EPS, paper);
+
+        // Exercise the restricted space against a mutated planner, not
+        // just the constructed one: random encoding re-bake and random
+        // in-place p-swap.
+        let encoding = *g.choose(&WireEncoding::ALL);
+        if encoding != WireEncoding::Raw {
+            planner = planner.with_wire_encoding(encoding);
+        }
+        if g.bool(0.5) && !desc.branches.is_empty() {
+            let probs: Vec<f64> = (0..desc.branches.len()).map(|_| g.probability()).collect();
+            planner.set_exit_probs(&probs);
+        }
+
+        let space = JointSearchSpace::restricted(&planner);
+        assert_eq!(space.encodings, vec![planner.wire_encoding()]);
+        for _ in 0..4 {
+            let link = LinkModel::new(g.f64_in(0.01, 50_000.0), g.f64_in(0.0, 0.1));
+            let fixed = planner.plan_for(link);
+            let joint = planner.plan_joint(link, &space);
+            assert_eq!(
+                joint.split, fixed.split_after,
+                "n={n} paper={paper} enc={encoding:?}"
+            );
+            assert_eq!(
+                joint.expected_time.to_bits(),
+                fixed.expected_time_s.to_bits(),
+                "n={n} paper={paper} enc={encoding:?}"
+            );
+            assert_eq!(joint.ranked.len(), 1);
+            assert_eq!(joint.pruned, 0);
         }
     });
 }

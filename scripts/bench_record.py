@@ -27,6 +27,15 @@ serve ("bench": "serve", from `cargo bench --bench serve`):
     acceptance bar over thread-per-conn (`derived.reactor_speedup`);
     smoke runs are too small for the ratio to mean anything.
 
+joint ("bench": "joint", from `cargo bench --bench fig_joint`):
+  * Run-intrinsic bars, checked whatever the baseline: the joint
+    (encoding x split) plan must never lose to the fixed plan on any
+    grid cell (`derived.joint_never_loses` and per-cell joint_ms <=
+    fixed_ms) and must strictly beat it on at least one
+    (`derived.cells_strictly_better` >= 1).
+  * For every (mbps, p) cell present in both files, a new `joint_ms`
+    more than GATE (20%) worse than the baseline's fails the merge.
+
 Either kind: baselines whose `source` is not "measured" (seed baselines
 are derived from the timing/codec model, marked "model") never gate —
 the first measured run simply replaces them.
@@ -50,7 +59,7 @@ from pathlib import Path
 
 GATE = 0.20  # fail if p99 regresses by more than this fraction
 BYTE_DRIFT = 0.01  # bytes are deterministic; >1% drift is a format change
-KINDS = ("wire", "scenario", "serve")
+KINDS = ("wire", "scenario", "serve", "joint")
 SERVE_SPEEDUP_BAR = 2.0  # reactor vs thread-per-conn req/s, full runs only
 
 
@@ -68,6 +77,8 @@ def load(path: Path) -> dict:
         sys.exit(f"bench_record: {path} is not a bench record (kinds: {KINDS})")
     if kind in ("wire", "serve") and not isinstance(doc.get("runs"), list):
         sys.exit(f"bench_record: {path} is not a {kind}-bench record")
+    if kind == "joint" and not isinstance(doc.get("cells"), list):
+        sys.exit(f"bench_record: {path} is not a joint-bench record")
     return doc
 
 
@@ -147,6 +158,39 @@ def gate_serve(baseline: dict, run: dict) -> list[str]:
     return findings
 
 
+def gate_joint(baseline: dict, run: dict) -> list[str]:
+    """The joint plan may never lose to the fixed one; joint_ms gates."""
+    findings = []
+    derived = run.get("derived", {})
+    if not derived.get("joint_never_loses", False):
+        findings.append("derived.joint_never_loses is false: joint lost somewhere")
+    if derived.get("cells_strictly_better", 0) < 1:
+        findings.append("joint search found no strict win on the whole grid")
+    for c in run["cells"]:
+        if c["joint_ms"] > c["fixed_ms"]:
+            findings.append(
+                f"cell ({c['mbps']} Mbps, p={c['p']}): joint {c['joint_ms']:.3f} ms "
+                f"lost to the fixed plan's {c['fixed_ms']:.3f} ms"
+            )
+    if baseline.get("source") != "measured":
+        return findings  # seed baseline is modeled, not measured: never gates
+    if baseline.get("smoke") != run.get("smoke"):
+        return findings  # smoke and full grids are not comparable
+    base_cells = {(c["mbps"], c["p"]): c for c in baseline["cells"]}
+    for new in run["cells"]:
+        old = base_cells.get((new["mbps"], new["p"]))
+        if old is None:
+            continue
+        old_ms, new_ms = old["joint_ms"], new["joint_ms"]
+        if new_ms > old_ms * (1.0 + GATE):
+            findings.append(
+                f"cell ({new['mbps']} Mbps, p={new['p']}): joint E[T] regressed "
+                f"{old_ms:.3f} -> {new_ms:.3f} ms "
+                f"(+{(new_ms / old_ms - 1.0) * 100.0:.0f}%, gate {GATE * 100:.0f}%)"
+            )
+    return findings
+
+
 def previous_of(baseline: dict) -> dict:
     if baseline.get("bench") == "scenario":
         return {
@@ -157,6 +201,13 @@ def previous_of(baseline: dict) -> dict:
         return {
             "source": baseline.get("source"),
             "req_per_s": {r["mode"]: r["req_per_s"] for r in baseline["runs"]},
+        }
+    if baseline.get("bench") == "joint":
+        return {
+            "source": baseline.get("source"),
+            "joint_ms": {
+                f"{c['mbps']}@{c['p']}": c["joint_ms"] for c in baseline["cells"]
+            },
         }
     return {
         "source": baseline.get("source"),
@@ -195,6 +246,8 @@ def main() -> int:
 
     if run.get("bench") == "scenario":
         findings = gate_scenario(baseline, run)
+    elif run.get("bench") == "joint":
+        findings = gate_joint(baseline, run)
     elif run.get("bench") == "serve":
         findings = gate_serve(baseline, run)
         speedup = run.get("derived", {}).get("reactor_speedup")

@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Verify Cargo.toml's explicit target lists cover rust/tests and rust/benches.
+
+The manifest sets autotests/autobenches = false, so a test or bench
+file that is not registered with an explicit [[test]]/[[bench]] entry
+silently never runs — CI stays green while the suite shrinks. This
+check is bidirectional:
+
+  * every tracked rust/tests/*.rs has a [[test]] entry whose `path`
+    points at it, and every tracked rust/benches/*.rs (shared helper
+    modules under rust/benches/common/ excluded) has a [[bench]] entry;
+  * every [[test]]/[[bench]] `path` under those directories points at a
+    file that exists (a rename must not strand a stale entry).
+
+Exit status: 0 when the lists match, 1 otherwise (one line per
+mismatch). Run from anywhere inside the repo; CI runs it from the root.
+"""
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+# One explicit target block: [[test]] / [[bench]] followed by its
+# key = "value" lines (name/path/harness) up to the next section.
+TARGET = re.compile(
+    r"^\[\[(test|bench)\]\]\s*$(?P<body>(?:\n(?!\[).*)*)", re.MULTILINE
+)
+PATH_KEY = re.compile(r'^\s*path\s*=\s*"([^"]+)"\s*$', re.MULTILINE)
+
+
+def tracked(root: Path, pattern: str) -> set[str]:
+    out = subprocess.run(
+        ["git", "ls-files", pattern],
+        cwd=root,
+        capture_output=True,
+        text=True,
+        check=True,
+    )
+    return {line for line in out.stdout.splitlines() if line}
+
+
+def declared_paths(manifest_text: str) -> dict[str, set[str]]:
+    found: dict[str, set[str]] = {"test": set(), "bench": set()}
+    for m in TARGET.finditer(manifest_text):
+        kind = m.group(1)
+        paths = PATH_KEY.findall(m.group("body"))
+        if len(paths) != 1:
+            print(
+                f"Cargo.toml: [[{kind}]] block without exactly one path key",
+                file=sys.stderr,
+            )
+            sys.exit(1)
+        found[kind].add(paths[0])
+    return found
+
+
+def main() -> int:
+    root = Path(
+        subprocess.run(
+            ["git", "rev-parse", "--show-toplevel"],
+            capture_output=True,
+            text=True,
+            check=True,
+        ).stdout.strip()
+    )
+    declared = declared_paths((root / "Cargo.toml").read_text(encoding="utf-8"))
+    tests = tracked(root, "rust/tests/*.rs")
+    benches = {
+        p for p in tracked(root, "rust/benches/**/*.rs") | tracked(root, "rust/benches/*.rs")
+        if not p.startswith("rust/benches/common/")
+    }
+
+    problems = []
+    for path in sorted(tests - declared["test"]):
+        problems.append(f"{path}: no [[test]] entry in Cargo.toml — it never runs")
+    for path in sorted(benches - declared["bench"]):
+        problems.append(f"{path}: no [[bench]] entry in Cargo.toml — it never runs")
+    for path in sorted(declared["test"] - tests):
+        if path.startswith("rust/tests/"):
+            problems.append(f"Cargo.toml: [[test]] path {path} does not exist")
+    for path in sorted(declared["bench"] - benches):
+        if path.startswith("rust/benches/"):
+            problems.append(f"Cargo.toml: [[bench]] path {path} does not exist")
+
+    for line in problems:
+        print(line, file=sys.stderr)
+    print(
+        f"checked {len(tests)} test file(s) and {len(benches)} bench file(s) "
+        f"against Cargo.toml: {'OK' if not problems else f'{len(problems)} problem(s)'}"
+    )
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
