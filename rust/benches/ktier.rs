@@ -1,0 +1,194 @@
+//! K-tier chain figure: the best two-tier plan (device → edge server
+//! only) vs [`Planner::plan_chain`] over a device → edge server → cloud
+//! chain, across the paper's uplink grid. Records to BENCH_ktier.json
+//! for the CI gate (`scripts/bench_record.py`, kind "ktier").
+//!
+//!     cargo bench --bench ktier          # full grid
+//!     SMOKE=1 cargo bench --bench ktier  # CI smoke: fewer cells
+//!
+//! The scenario: the device's only neighbour is a modest edge server
+//! (4x slower than the datacentre) behind the constrained wireless
+//! uplink; the edge server has a fast wired hop to the terminal cloud.
+//! The two-tier baseline may only offload to the edge server; the
+//! three-tier plan may continue onward.
+//!
+//! Acceptance bars (hard asserts): the three-tier plan never loses to
+//! the best two-tier plan in any cell — every two-tier candidate `s`
+//! embeds in the chain's space as `cuts = [s, N]` at identical cost, so
+//! a loss is a DP bug, not a modelling choice — and at least one cell
+//! is strictly better (continuing to the fast terminal must pay off
+//! somewhere on the grid). All numbers are analytic (model evaluation,
+//! no wall clock), so the recorded figures are deterministic across
+//! machines.
+
+use branchyserve::harness::Table;
+use branchyserve::model::{BranchDesc, BranchyNetDesc};
+use branchyserve::network::LinkModel;
+use branchyserve::planner::{Planner, TierChain};
+use branchyserve::timing::DelayProfile;
+use branchyserve::util::timefmt::format_secs;
+
+/// Edge-server compute penalty vs the terminal cloud.
+const MIDDLE_SCALE: f64 = 4.0;
+/// The edge server's wired hop to the terminal cloud.
+const WIRED_MBPS: f64 = 1000.0;
+const WIRED_RTT_S: f64 = 0.002;
+/// The device's wireless RTT to the edge server.
+const WIRELESS_RTT_S: f64 = 0.01;
+
+/// The repo's B-AlexNet-shaped reference net (same fixture as fig_joint
+/// and the ablation): non-monotonic activation sizes, one early exit
+/// after stage 1 taking 20% of traffic, device 100x slower than the
+/// terminal cloud.
+fn fixture() -> (BranchyNetDesc, DelayProfile) {
+    let desc = BranchyNetDesc {
+        stage_names: (1..=8).map(|i| format!("s{i}")).collect(),
+        stage_out_bytes: vec![57_600, 18_816, 25_088, 25_088, 3_456, 1_024, 512, 8],
+        input_bytes: 12_288,
+        branches: vec![BranchDesc {
+            after_stage: 1,
+            exit_prob: 0.2,
+        }],
+    };
+    let profile = DelayProfile::from_cloud_times(
+        vec![1e-3, 1.5e-3, 1.2e-3, 1.2e-3, 8e-4, 3e-4, 1e-4, 5e-5],
+        2e-4,
+        100.0,
+    );
+    (desc, profile)
+}
+
+struct Cell {
+    mbps: f64,
+    two_cut: usize,
+    two_time: f64,
+    three_cuts: Vec<usize>,
+    three_time: f64,
+}
+
+impl Cell {
+    fn improvement_pct(&self) -> f64 {
+        (1.0 - self.three_time / self.two_time) * 100.0
+    }
+    fn strictly_better(&self) -> bool {
+        self.three_time < self.two_time
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    branchyserve::util::logger::init();
+    let smoke = std::env::var("SMOKE").is_ok();
+    let (desc, profile) = fixture();
+    let planner = Planner::new(&desc, &profile, 1e-9, false);
+    let bandwidths: Vec<f64> = if smoke {
+        vec![1.10, 18.80]
+    } else {
+        vec![0.05, 0.35, 1.10, 5.85, 18.80, 100.0]
+    };
+
+    let wired = LinkModel::new(WIRED_MBPS, WIRED_RTT_S);
+    let cells: Vec<Cell> = bandwidths
+        .iter()
+        .map(|&mbps| {
+            let wireless = LinkModel::new(mbps, WIRELESS_RTT_S);
+            let two_chain = TierChain {
+                links: vec![wireless],
+                compute_scale: vec![MIDDLE_SCALE],
+            };
+            let three_chain = TierChain {
+                links: vec![wireless, wired],
+                compute_scale: vec![MIDDLE_SCALE, 1.0],
+            };
+            let two = planner.plan_chain(&two_chain);
+            let three = planner.plan_chain(&three_chain);
+            Cell {
+                mbps,
+                two_cut: two.cuts[0],
+                two_time: two.expected_time_s,
+                three_cuts: three.cuts.clone(),
+                three_time: three.expected_time_s,
+            }
+        })
+        .collect();
+
+    let mut table = Table::new(&[
+        "Mbps", "2-tier s", "2-tier E[T]", "3-tier cuts", "3-tier E[T]", "gain %",
+    ]);
+    for c in &cells {
+        table.row(vec![
+            format!("{:.2}", c.mbps),
+            c.two_cut.to_string(),
+            format_secs(c.two_time),
+            format!("{:?}", c.three_cuts),
+            format_secs(c.three_time),
+            format!("{:.2}", c.improvement_pct()),
+        ]);
+    }
+    println!("### Three-tier chain vs best two-tier offload (edge server only)");
+    println!("{}", table.render());
+
+    let never_loses = cells.iter().all(|c| c.three_time <= c.two_time);
+    let wins = cells.iter().filter(|c| c.strictly_better()).count();
+    let max_gain = cells
+        .iter()
+        .map(|c| c.improvement_pct())
+        .fold(0.0, f64::max);
+    println!(
+        "cells: {}  strict wins: {wins}  max gain: {max_gain:.2}%",
+        cells.len()
+    );
+
+    // Acceptance bars — the two-tier space embeds in the chain's
+    // (`cuts = [s, N]` prices identically), so a failure is a DP bug.
+    assert!(never_loses, "three-tier plan lost to the two-tier plan somewhere");
+    assert!(
+        wins >= 1,
+        "the chain found no strict win anywhere on the grid"
+    );
+
+    let cell_rows: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            format!(
+                concat!(
+                    "    {{\"mbps\": {}, \"two_cut\": {}, \"two_ms\": {:.6}, ",
+                    "\"three_cuts\": [{}], \"three_ms\": {:.6}, ",
+                    "\"improvement_pct\": {:.3}}}"
+                ),
+                c.mbps,
+                c.two_cut,
+                c.two_time * 1e3,
+                c.three_cuts
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", "),
+                c.three_time * 1e3,
+                c.improvement_pct(),
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"ktier\",\n",
+            "  \"source\": \"measured\",\n",
+            "  \"smoke\": {},\n",
+            "  \"cells\": [\n{}\n  ],\n",
+            "  \"derived\": {{\n",
+            "    \"three_tier_never_loses\": {},\n",
+            "    \"cells_strictly_better\": {},\n",
+            "    \"max_improvement_pct\": {:.3}\n",
+            "  }}\n",
+            "}}\n"
+        ),
+        smoke,
+        cell_rows.join(",\n"),
+        never_loses,
+        wins,
+        max_gain
+    );
+    std::fs::write("BENCH_ktier.json", &json)?;
+    println!("wrote BENCH_ktier.json ({} cells)", cells.len());
+    Ok(())
+}

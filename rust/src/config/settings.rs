@@ -300,6 +300,13 @@ pub struct Settings {
     pub fleet: FleetSettings,
     /// Empty = a single default class derived from `network`.
     pub link_classes: Vec<LinkClassSettings>,
+    /// `[[tier]]` entries: a K-tier partition chain beyond the edge, in
+    /// order from the chain head the edge ships to, down to the
+    /// terminal tier. Empty = no chain (the cloud half is
+    /// `fleet.cloud_addr`, or in-process). Non-terminal entries carry
+    /// `uplink_mbps`/`rtt_ms` describing their hop to the *next* tier;
+    /// hop 0 — edge to chain head — is each class's own link.
+    pub tiers: Vec<crate::fleet::TierSpec>,
 }
 
 impl Default for Settings {
@@ -359,6 +366,7 @@ impl Default for Settings {
                 conn_window: 32,
             },
             link_classes: Vec::new(),
+            tiers: Vec::new(),
         }
     }
 }
@@ -543,6 +551,31 @@ impl Settings {
                 });
             }
         }
+        if let Some(arr) = doc.get("tier").and_then(Json::as_arr) {
+            self.tiers.clear();
+            for (i, entry) in arr.iter().enumerate() {
+                let addr = entry
+                    .get("addr")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("tier[{i}].addr is required"))?
+                    .to_string();
+                let uplink_mbps = entry.get("uplink_mbps").and_then(Json::as_f64);
+                let rtt_s = entry
+                    .get("rtt_ms")
+                    .and_then(Json::as_f64)
+                    .map(|ms| ms / 1e3);
+                let compute_scale = entry
+                    .get("compute_scale")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(1.0);
+                self.tiers.push(crate::fleet::TierSpec {
+                    addr,
+                    uplink_mbps,
+                    rtt_s,
+                    compute_scale,
+                });
+            }
+        }
         Ok(())
     }
 
@@ -643,6 +676,51 @@ impl Settings {
                     acfg.min_shards,
                     acfg.max_shards
                 );
+            }
+        }
+        if !self.tiers.is_empty() {
+            if self.tiers.len() < 2 {
+                bail!(
+                    "a [[tier]] chain needs at least 2 entries (a forwarding middle \
+                     and a terminal); for a single remote tier use fleet.cloud_addr"
+                );
+            }
+            if self.fleet.cloud_addr.is_some() {
+                bail!(
+                    "[[tier]] and fleet.cloud_addr are mutually exclusive \
+                     (the chain head *is* the cloud endpoint)"
+                );
+            }
+            for (i, t) in self.tiers.iter().enumerate() {
+                if let Err(e) = validate_host_port(&t.addr) {
+                    bail!("tier[{i}].addr: {e}");
+                }
+                if !(t.compute_scale.is_finite() && t.compute_scale > 0.0) {
+                    bail!(
+                        "tier[{i}] ('{}'): compute_scale must be finite and > 0; got {}",
+                        t.addr,
+                        t.compute_scale
+                    );
+                }
+                if i + 1 < self.tiers.len() {
+                    match (t.uplink_mbps, t.rtt_s) {
+                        (Some(bw), Some(rtt))
+                            if bw.is_finite()
+                                && bw > 0.0
+                                && rtt.is_finite()
+                                && rtt >= 0.0 => {}
+                        (Some(_), Some(_)) => bail!(
+                            "tier[{i}] ('{}'): uplink_mbps must be positive and finite, \
+                             rtt_ms non-negative and finite",
+                            t.addr
+                        ),
+                        _ => bail!(
+                            "tier[{i}] ('{}') is not the terminal tier and needs \
+                             uplink_mbps and rtt_ms for its hop to the next tier",
+                            t.addr
+                        ),
+                    }
+                }
             }
         }
         if self.link_classes.len() > 256 {
@@ -1140,5 +1218,56 @@ name = "wifi"
         assert!(Strategy::parse("x").is_err());
         assert_eq!(Flavor::parse("pallas").unwrap(), Flavor::Pallas);
         assert!(Flavor::parse("x").is_err());
+    }
+
+    #[test]
+    fn tier_chain_parse_and_validation() {
+        let doc = toml::parse(
+            "[[tier]]\naddr = \"edge-agg.internal:7879\"\nuplink_mbps = 1000.0\n\
+             rtt_ms = 2.0\ncompute_scale = 4.0\n\n\
+             [[tier]]\naddr = \"cloud.internal:7879\"\n",
+        )
+        .unwrap();
+        let mut s = Settings::default();
+        s.apply(&doc).unwrap();
+        assert_eq!(s.tiers.len(), 2);
+        assert_eq!(s.tiers[0].addr, "edge-agg.internal:7879");
+        assert!((s.tiers[0].uplink_mbps.unwrap() - 1000.0).abs() < 1e-12);
+        assert!((s.tiers[0].rtt_s.unwrap() - 0.002).abs() < 1e-12);
+        assert!((s.tiers[0].compute_scale - 4.0).abs() < 1e-12);
+        // Terminal tier: no hop fields needed, compute scale defaults
+        // to the profiled cloud's.
+        assert_eq!(s.tiers[1].uplink_mbps, None);
+        assert!((s.tiers[1].compute_scale - 1.0).abs() < 1e-12);
+        s.validate().unwrap();
+
+        // A single tier is not a chain.
+        let mut one = Settings::default();
+        one.apply(&toml::parse("[[tier]]\naddr = \"cloud.internal:7879\"\n").unwrap())
+            .unwrap();
+        let e = one.validate().unwrap_err().to_string();
+        assert!(e.contains("at least 2"), "{e}");
+
+        // Non-terminal tiers must describe their hop to the next tier.
+        let mut no_hop = s.clone();
+        no_hop.tiers[0].uplink_mbps = None;
+        let e = no_hop.validate().unwrap_err().to_string();
+        assert!(e.contains("tier[0]") && e.contains("uplink_mbps"), "{e}");
+
+        // The chain replaces the single cloud endpoint, never joins it.
+        let mut both = s.clone();
+        both.fleet.cloud_addr = Some("cloud.internal:7879".into());
+        let e = both.validate().unwrap_err().to_string();
+        assert!(e.contains("mutually exclusive"), "{e}");
+
+        // Degenerate compute scales and malformed endpoints are loud.
+        let mut bad = s.clone();
+        bad.tiers[0].compute_scale = 0.0;
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("compute_scale"), "{e}");
+        let mut bad = s;
+        bad.tiers[1].addr = "no-port".into();
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("tier[1].addr"), "{e}");
     }
 }

@@ -80,7 +80,29 @@ pub enum CloudExec {
     Remote {
         remote: Arc<RemoteCloudEngine>,
         fallback: InferenceEngine,
+        /// Multi-tier route: when set (with a non-empty tail), groups
+        /// ship as INFER_CHAIN_SEQ frames through `remote` (the chain
+        /// head) instead of plain partials, and a failed head degrades
+        /// to the route's direct terminal engine before the local
+        /// fallback.
+        chain: Option<ChainRoute>,
     },
+}
+
+/// The chain topology a remote [`CloudExec`] routes through: the fixed
+/// cut tail every frame carries (the *head* cut is stamped per sample),
+/// plus the degraded path.
+#[derive(Clone)]
+pub struct ChainRoute {
+    /// `cuts[1..]` of the solved chain plan — where each downstream
+    /// tier hands off. Tail cuts equal to N mean "this tier runs to the
+    /// end"; the receiving server serves those as ordinary partials.
+    pub tail: Arc<Vec<usize>>,
+    /// Direct single-hop engine to the terminal tier: when the chain
+    /// head fails, the group ships here with the *same* stamped split
+    /// (counted in `metrics.chain_fallbacks`) so chain brownouts
+    /// degrade to two-tier service instead of dropping to local-only.
+    pub direct: Option<Arc<RemoteCloudEngine>>,
 }
 
 impl From<InferenceEngine> for CloudExec {
@@ -774,7 +796,11 @@ fn run_cloud_group(
             let (classes, cloud_s) = local_suffix(engine, split, &stacked, group.len())?;
             Ok((classes, cloud_s, None))
         }
-        CloudExec::Remote { remote, fallback } => {
+        CloudExec::Remote {
+            remote,
+            fallback,
+            chain,
+        } => {
             // Samples cut after the branch already passed the gate on
             // the edge (the active-branch rule: position < split);
             // samples cut at or before it never saw a gate.
@@ -783,8 +809,41 @@ fn run_cloud_group(
             } else {
                 BRANCH_PENDING
             };
+            let route = chain.as_ref().filter(|r| !r.tail.is_empty());
             let t0 = Instant::now();
-            match remote.infer_partial(split, branch_state, &stacked) {
+            // Primary wire attempt: a chain frame when a multi-tier
+            // route is configured, a plain partial otherwise. The tail
+            // is clamped up to the stamped split so a plan switch
+            // racing in-flight samples can't produce a decreasing
+            // vector.
+            let primary = match route {
+                Some(r) => {
+                    let mut cuts = Vec::with_capacity(r.tail.len() + 1);
+                    cuts.push(split as u32);
+                    cuts.extend(r.tail.iter().map(|&c| c.max(split) as u32));
+                    remote.infer_chain(&cuts, branch_state, &stacked)
+                }
+                None => remote.infer_partial(split, branch_state, &stacked),
+            };
+            // Degraded chain service: the same stamped split ships
+            // straight to the terminal tier, so a middle-tier brownout
+            // costs the middle tier's compute placement — never the
+            // request.
+            let primary = match primary {
+                Err(e) => match route.and_then(|r| r.direct.as_ref()) {
+                    Some(direct) => {
+                        metrics.chain_fallbacks.fetch_add(1, Ordering::Relaxed);
+                        log::warn!(
+                            "chain head failed ({e:#}); degrading split {split} group \
+                             to the direct cloud"
+                        );
+                        direct.infer_partial(split, branch_state, &stacked)
+                    }
+                    None => Err(e),
+                },
+                ok => ok,
+            };
+            match primary {
                 Ok(out) if out.samples.len() == group.len() => {
                     metrics.remote_batches.fetch_add(1, Ordering::Relaxed);
                     let wire_s = (t0.elapsed().as_secs_f64() - out.cloud_s).max(0.0);

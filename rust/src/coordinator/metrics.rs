@@ -37,6 +37,10 @@ pub struct Metrics {
     /// Split-groups that fell back to local execution after a remote
     /// failure (connect/IO error, backoff window, in-flight cap).
     pub remote_fallbacks: AtomicU64,
+    /// Chain-routed groups that degraded to the direct (single-hop)
+    /// remote after the chain head failed — the samples still complete
+    /// in the cloud, just without the middle tier(s).
+    pub chain_fallbacks: AtomicU64,
     latency: Mutex<LatencyHistogram>,
 }
 
@@ -79,6 +83,7 @@ impl Metrics {
             plan_overrides: self.plan_overrides.load(Ordering::Relaxed),
             remote_batches: self.remote_batches.load(Ordering::Relaxed),
             remote_fallbacks: self.remote_fallbacks.load(Ordering::Relaxed),
+            chain_fallbacks: self.chain_fallbacks.load(Ordering::Relaxed),
             throughput_rps: completed as f64 / elapsed,
             mean_latency_s: hist.mean(),
             p50_s,
@@ -111,6 +116,9 @@ pub struct MetricsSnapshot {
     /// Split-groups that fell back to local execution after a remote
     /// failure.
     pub remote_fallbacks: u64,
+    /// Chain-routed groups that degraded to the direct single-hop
+    /// remote after the chain head failed.
+    pub chain_fallbacks: u64,
     pub throughput_rps: f64,
     pub mean_latency_s: f64,
     pub p50_s: f64,
@@ -138,6 +146,7 @@ impl MetricsSnapshot {
             plan_overrides: 0,
             remote_batches: 0,
             remote_fallbacks: 0,
+            chain_fallbacks: 0,
             throughput_rps: 0.0,
             mean_latency_s: 0.0,
             p50_s: 0.0,
@@ -170,6 +179,7 @@ impl MetricsSnapshot {
             out.plan_overrides += p.plan_overrides;
             out.remote_batches += p.remote_batches;
             out.remote_fallbacks += p.remote_fallbacks;
+            out.chain_fallbacks += p.chain_fallbacks;
             out.elapsed_s = out.elapsed_s.max(p.elapsed_s);
             out.latency_hist.merge(&p.latency_hist);
         }
@@ -188,7 +198,7 @@ impl MetricsSnapshot {
     pub fn to_json(&self) -> String {
         format!(
             "{{\"completed\":{},\"edge_exits\":{},\"rejected\":{},\"failed\":{},\
-             \"remote_batches\":{},\"remote_fallbacks\":{},\
+             \"remote_batches\":{},\"remote_fallbacks\":{},\"chain_fallbacks\":{},\
              \"throughput_rps\":{:.3},\"p50_s\":{:.6},\"p99_s\":{:.6}}}",
             self.completed,
             self.edge_exits,
@@ -196,6 +206,7 @@ impl MetricsSnapshot {
             self.failed,
             self.remote_batches,
             self.remote_fallbacks,
+            self.chain_fallbacks,
             self.throughput_rps,
             self.p50_s,
             self.p99_s
@@ -212,8 +223,13 @@ impl MetricsSnapshot {
 
     pub fn summary(&self) -> String {
         let remote = if self.remote_batches + self.remote_fallbacks > 0 {
+            let chain = if self.chain_fallbacks > 0 {
+                format!(", {} chain-degraded", self.chain_fallbacks)
+            } else {
+                String::new()
+            };
             format!(
-                ", remote cloud batches {} ({} fell back local)",
+                ", remote cloud batches {} ({} fell back local{chain})",
                 self.remote_batches, self.remote_fallbacks
             )
         } else {

@@ -26,6 +26,6 @@ pub mod engine;
 pub mod metrics;
 pub mod request;
 
-pub use engine::{AdmitError, CloudExec, Coordinator, CoordinatorConfig, ExitObserver};
+pub use engine::{AdmitError, ChainRoute, CloudExec, Coordinator, CoordinatorConfig, ExitObserver};
 pub use metrics::MetricsSnapshot;
 pub use request::{CompletionSink, InferenceRequest, InferenceResponse, ReplyTo};

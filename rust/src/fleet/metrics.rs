@@ -46,6 +46,10 @@ pub struct ClassReport {
     pub link: LinkModel,
     /// Active partition point (stages `1..=split_after` on the edge).
     pub split_after: usize,
+    /// Full cut vector when the class routes through a K-tier chain
+    /// (`cuts[0] == split_after`, remaining entries are the downstream
+    /// tiers' cut points); `None` for plain two-tier serving.
+    pub cuts: Option<Vec<usize>>,
     /// Activation wire encoding the class ships to its cloud stage (and
     /// that its planner prices the transfer term at).
     pub wire_encoding: WireEncoding,
@@ -112,11 +116,16 @@ impl FleetReport {
                 Some(a) => format!(" -> {a}"),
                 None => String::new(),
             };
+            let cuts = match &c.cuts {
+                Some(v) => format!(" (chain cuts {v:?})"),
+                None => String::new(),
+            };
             out.push_str(&format!(
-                "[{} @ {:.2} Mbps, split after {}, wire {}{}, p {:.3}{}, {} shard(s){}] {}\n",
+                "[{} @ {:.2} Mbps, split after {}{}, wire {}{}, p {:.3}{}, {} shard(s){}] {}\n",
                 c.name,
                 c.link.uplink_mbps,
                 c.split_after,
+                cuts,
                 c.wire_encoding,
                 cloud,
                 c.planner.exit_prob_planned,
@@ -170,8 +179,15 @@ impl FleetReport {
                     Some(a) => Json::Str(a.clone()).to_string(),
                     None => "null".to_string(),
                 };
+                let cuts = match &c.cuts {
+                    Some(v) => format!(
+                        "[{}]",
+                        v.iter().map(usize::to_string).collect::<Vec<_>>().join(",")
+                    ),
+                    None => "null".to_string(),
+                };
                 format!(
-                    "{{\"name\":{},\"split_after\":{},\
+                    "{{\"name\":{},\"split_after\":{},\"cuts\":{},\
                      \"wire_encoding\":\"{}\",\"cloud_addr\":{},\
                      \"shards\":{},\
                      \"queue_depths\":[{}],\
@@ -184,6 +200,7 @@ impl FleetReport {
                      \"cache_invalidations\":{},\"probe_overrides\":{},{}}}",
                     Json::Str(c.name.clone()),
                     c.split_after,
+                    cuts,
                     c.wire_encoding,
                     cloud_addr,
                     c.shards.len(),
@@ -250,6 +267,7 @@ mod tests {
                 name: "3G".into(),
                 link: LinkModel::new(1.10, 0.0),
                 split_after: 5,
+                cuts: Some(vec![5, 7]),
                 wire_encoding: WireEncoding::Q8,
                 cloud_addr: Some("cloud.internal:7879".into()),
                 planner: ClassPlannerStats {
@@ -281,6 +299,7 @@ mod tests {
                 name: "WiFi".into(),
                 link: LinkModel::new(18.80, 0.0),
                 split_after: 0,
+                cuts: None,
                 wire_encoding: WireEncoding::Raw,
                 cloud_addr: None,
                 planner: ClassPlannerStats {
@@ -360,6 +379,13 @@ mod tests {
         );
         assert_eq!(classes[1].get("wire_encoding").unwrap().as_str(), Some("raw"));
         assert!(matches!(classes[1].get("cloud_addr"), Some(Json::Null)));
+        // Chain cut vectors: the full vector for chain-routed classes,
+        // explicit null (not []) for plain two-tier serving.
+        let cuts = classes[0].get("cuts").unwrap().as_arr().unwrap();
+        assert_eq!(cuts.len(), 2);
+        assert_eq!(cuts[0].as_u64(), Some(5));
+        assert_eq!(cuts[1].as_u64(), Some(7));
+        assert!(matches!(classes[1].get("cuts"), Some(Json::Null)));
         // Planner observability: planned p, estimated p̂, cache and
         // view-rebuild counters, all per class.
         let p0 = &classes[0];
@@ -408,6 +434,7 @@ mod tests {
         assert!(s.contains("in 1..=4, +3/-2 resizes"), "{s}");
         assert!(s.contains("wire q8 -> cloud.internal:7879"), "{s}");
         assert!(s.contains("wire raw,"), "{s}");
+        assert!(s.contains("split after 5 (chain cuts [5, 7])"), "{s}");
         assert!(
             !s.contains("WiFi @ 18.80 Mbps, split after 0, wire raw, p 0.500, 1 shard(s) in"),
             "{s}"

@@ -96,6 +96,16 @@
 //!   encoded size, and every class planner prices its transfer term at
 //!   the same [`WireEncoding::payload_bytes`] map — so the optimum the
 //!   fleet plans is the optimum of the bytes it actually ships.
+//! * **The cloud half can be a chain.** With `tier_chain` set, each
+//!   class's planner solves a full cut *vector* over the K-tier chain
+//!   at startup ([`Planner::plan_chain`]): the edge runs `1..=cuts[0]`
+//!   and ships sequence-tagged INFER_CHAIN frames to the chain head,
+//!   which runs its own segment and forwards the remainder onward
+//!   (`cloud-serve --forward-addr`). If the chain head fails, the
+//!   group degrades to a direct single-hop offload against the
+//!   terminal tier at the *same* edge split (counted per shard as
+//!   `chain_fallbacks`), and only then to the shard's local engine —
+//!   no admitted request is dropped at any rung.
 //! * **Observability rolls up.** [`FleetReport`]: per-shard
 //!   [`MetricsSnapshot`]s → per-class aggregate → fleet total, all
 //!   NaN-free even for shards that served nothing — plus per-class
@@ -126,8 +136,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::settings::Strategy;
 use crate::network::bandwidth::LinkModel;
 use crate::coordinator::{
-    AdmitError, CloudExec, Coordinator, CoordinatorConfig, ExitObserver, InferenceResponse,
-    MetricsSnapshot, ReplyTo,
+    AdmitError, ChainRoute, CloudExec, Coordinator, CoordinatorConfig, ExitObserver,
+    InferenceResponse, MetricsSnapshot, ReplyTo,
 };
 use crate::model::Manifest;
 use crate::network::trace::BandwidthTrace;
@@ -136,7 +146,7 @@ use crate::partition::plan::PartitionPlan;
 use crate::planner::joint::accuracy_proxy;
 use crate::planner::{
     AdaptiveConfig, AdaptiveHandle, AdaptivePlanner, EstimatorConfig, ExitRateEstimator,
-    JointSearchSpace, Planner,
+    JointSearchSpace, Planner, TierChain,
 };
 use crate::runtime::{HostTensor, InferenceEngine};
 use crate::server::remote::{RemoteCloudConfig, RemoteCloudEngine, RemoteCloudStats};
@@ -154,6 +164,25 @@ pub enum AdmitRejection {
     Busy,
     /// Terminal: unknown class, or the shard is shut down.
     Failed(anyhow::Error),
+}
+
+/// One tier beyond the edge in a K-tier partition chain. Order matters:
+/// the first spec is the chain head the edge ships to, the last is the
+/// terminal tier that finishes every still-deferred sample.
+#[derive(Debug, Clone)]
+pub struct TierSpec {
+    /// `HOST:PORT` of this tier's cloud-stage server.
+    pub addr: String,
+    /// Uplink from *this* tier to the *next* one, Mbit/s. Required on
+    /// every tier but the last; hop 0 — edge to chain head — is each
+    /// class's own modeled link, so it is never specified here.
+    pub uplink_mbps: Option<f64>,
+    /// RTT of the hop to the next tier, seconds.
+    pub rtt_s: Option<f64>,
+    /// Per-stage compute time of this tier relative to the profiled
+    /// cloud (2.0 = half as fast, 1.0 = identical hardware). Must be
+    /// finite and positive.
+    pub compute_scale: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -220,6 +249,16 @@ pub struct FleetConfig {
     /// per class; classes resolving to the same endpoint share one
     /// pooled connection set.
     pub cloud_addr: Option<String>,
+    /// When non-empty, the cloud half is a *chain* of tiers rather than
+    /// one endpoint: each class's planner solves a full cut vector over
+    /// the layered K-tier graph at startup ([`Planner::plan_chain`],
+    /// hop 0 = the class's own link) and its shards ship chain frames
+    /// to the first tier, which runs its segment and forwards the rest
+    /// (`cloud-serve --forward-addr`). Mutually exclusive with
+    /// `cloud_addr`, per-class endpoint overrides, and the replanning
+    /// knobs (`adaptive`, `estimation`, `per_request_planning`,
+    /// `probe_fraction`): chain cut vectors are solved once and fixed.
+    pub tier_chain: Vec<TierSpec>,
     /// Wire encoding of activations shipped to remote cloud stages
     /// (raw f32 / q8 / q4). Also the encoding every class planner
     /// prices its transfer term at and the simulated channel charges,
@@ -259,6 +298,7 @@ impl Default for FleetConfig {
             per_request_planning: false,
             probe_fraction: 0.0,
             cloud_addr: None,
+            tier_chain: Vec::new(),
             wire_encoding: WireEncoding::Raw,
             joint_search: false,
             min_accuracy_proxy: 0.0,
@@ -356,6 +396,24 @@ fn shrink_with_budget(
     Ok(n)
 }
 
+/// A class's solved K-tier chain route, fixed at fleet start (the
+/// replanning knobs are rejected in chain mode, so nothing moves it).
+struct ClassChainState {
+    /// Hop links *beyond* hop 0. Hop 0 is whatever link the class is
+    /// priced at — kept out so [`Fleet::chain_expected_time_of`] can
+    /// re-price the fixed cuts under a moved first hop.
+    links_tail: Vec<LinkModel>,
+    /// Per-tier compute scale, aligned with the chain's hops.
+    scales: Vec<f64>,
+    /// The full solved cut vector; `cuts[0]` is the edge split.
+    cuts: Arc<Vec<usize>>,
+    /// `cuts[1..]` — the tail every shard stamps on its chain frames.
+    tail: Arc<Vec<usize>>,
+    /// The edge-side plan at `cuts[0]`, priced at the whole chain's
+    /// expected time.
+    base_plan: PartitionPlan,
+}
+
 struct ClassGroup {
     profile: ClassProfile,
     /// Effective cloud endpoint (the class's override, else the
@@ -397,6 +455,8 @@ struct ClassGroup {
     probe_counter: AtomicU64,
     /// Requests actually rerouted through the branch-active probe split.
     probe_overrides: AtomicU64,
+    /// The class's solved chain route; `None` without a tier chain.
+    chain: Option<ClassChainState>,
 }
 
 impl ClassGroup {
@@ -449,6 +509,10 @@ pub struct Fleet {
     /// One remote cloud client per distinct configured endpoint
     /// (fleet-wide and per-class overrides, deduped by address).
     remotes: Vec<Arc<RemoteCloudEngine>>,
+    /// The chain-head tier's client(s) (subset of `remotes`), so the
+    /// scenario harness can brown out just the middle tier while the
+    /// terminal endpoint — the degraded direct path — stays up.
+    tier_heads: Vec<Arc<RemoteCloudEngine>>,
     /// The activation transfer codec every engine/planner was built at.
     wire_encoding: WireEncoding,
     /// Fleet-wide shard budget; `None` = unbounded.
@@ -530,6 +594,53 @@ impl Fleet {
                 "min_accuracy_proxy must be in [0, 1]; got {}",
                 cfg.min_accuracy_proxy
             );
+        }
+        if !cfg.tier_chain.is_empty() {
+            if cfg.tier_chain.len() < 2 {
+                bail!(
+                    "tier_chain needs at least 2 tiers (a forwarding middle and a \
+                     terminal); for a single remote tier use cloud_addr"
+                );
+            }
+            if cfg.cloud_addr.is_some() {
+                bail!(
+                    "tier_chain and cloud_addr are mutually exclusive \
+                     (the chain head *is* the cloud endpoint)"
+                );
+            }
+            if registry.iter().any(|p| p.cloud_addr.is_some()) {
+                bail!("tier_chain is incompatible with per-class cloud_addr overrides");
+            }
+            if cfg.per_request_planning || cfg.probe_fraction > 0.0 {
+                bail!(
+                    "tier_chain is incompatible with per_request_planning/probe_fraction \
+                     (chain cut vectors are solved once at startup)"
+                );
+            }
+            if cfg.adaptive.is_some() || cfg.estimation.is_some() {
+                bail!(
+                    "tier_chain is incompatible with adaptive replanning and online \
+                     estimation (both re-solve the two-tier split; a chain's tail is fixed)"
+                );
+            }
+            for (i, t) in cfg.tier_chain.iter().enumerate() {
+                if !(t.compute_scale.is_finite() && t.compute_scale > 0.0) {
+                    bail!(
+                        "tier {i} ({}): compute_scale must be finite and > 0; got {}",
+                        t.addr,
+                        t.compute_scale
+                    );
+                }
+                if i + 1 < cfg.tier_chain.len()
+                    && (t.uplink_mbps.is_none() || t.rtt_s.is_none())
+                {
+                    bail!(
+                        "tier {i} ({}) is not the terminal tier and needs \
+                         uplink_mbps/rtt_ms for its hop to the next tier",
+                        t.addr
+                    );
+                }
+            }
         }
 
         let branch_pos = manifest.branch.after_stage;
@@ -726,9 +837,68 @@ impl Fleet {
                     );
                 }
             }
+            // K-tier chain: solve this class's full cut vector over the
+            // chain's layered graph — hop 0 is the class's own modeled
+            // uplink, later hops come from the tier specs — and fix it
+            // for the fleet's lifetime (the replanning knobs were
+            // rejected above, so nothing ever moves it).
+            let chain_state = if cfg.tier_chain.is_empty() {
+                None
+            } else {
+                let mut links = vec![prof.link];
+                let mut scales = Vec::with_capacity(cfg.tier_chain.len());
+                for (i, t) in cfg.tier_chain.iter().enumerate() {
+                    scales.push(t.compute_scale);
+                    if i + 1 < cfg.tier_chain.len() {
+                        links.push(
+                            LinkModel::try_new(
+                                t.uplink_mbps.unwrap_or(0.0),
+                                t.rtt_s.unwrap_or(0.0),
+                            )
+                            .map_err(|e| anyhow!("tier {i} ({}): {e:#}", t.addr))?,
+                        );
+                    }
+                }
+                let chain = TierChain {
+                    links,
+                    compute_scale: scales,
+                };
+                let chain_plan = planner_for_class.plan_chain(&chain);
+                log::info!(
+                    "[{}] chain plan over {} tier(s): cuts {:?}, E[T] {:.3} ms",
+                    prof.name,
+                    cfg.tier_chain.len(),
+                    chain_plan.cuts,
+                    chain_plan.expected_time_s * 1e3
+                );
+                Some(ClassChainState {
+                    links_tail: chain.links[1..].to_vec(),
+                    scales: chain.compute_scale.clone(),
+                    base_plan: PartitionPlan::from_split_encoded(
+                        chain_plan.cuts[0],
+                        chain_plan.expected_time_s,
+                        Strategy::ShortestPath,
+                        planner_for_class.desc(),
+                        class_encoding,
+                    ),
+                    tail: Arc::new(chain_plan.cuts[1..].to_vec()),
+                    cuts: Arc::new(chain_plan.cuts),
+                })
+            };
+            // Chain mode reports (and dials) the chain head as the
+            // class's cloud endpoint; the terminal tier doubles as the
+            // degraded direct path when the head is down.
+            let cloud_addr = match &chain_state {
+                Some(_) => Some(cfg.tier_chain[0].addr.clone()),
+                None => cloud_addr,
+            };
             let remote = cloud_addr
                 .as_deref()
                 .map(|addr| engine_for(addr, class_encoding));
+            let chain_direct = chain_state.as_ref().map(|_| {
+                let terminal = &cfg.tier_chain[cfg.tier_chain.len() - 1].addr;
+                engine_for(terminal, class_encoding)
+            });
             let class_planner = Arc::new(ClassPlanner::new(
                 link_class,
                 prof.name.clone(),
@@ -798,6 +968,11 @@ impl Fleet {
                 let planner = class_planner.clone();
                 let remote = remote.clone();
                 let observer = observer.clone();
+                let chain_route = chain_state.as_ref().map(|st| ChainRoute {
+                    tail: st.tail.clone(),
+                    direct: chain_direct.clone(),
+                });
+                let chain_plan = chain_state.as_ref().map(|st| st.base_plan.clone());
                 let ccfg = CoordinatorConfig {
                     entropy_threshold: cfg.entropy_threshold,
                     max_batch: cfg.max_batch,
@@ -813,6 +988,7 @@ impl Fleet {
                         Some(r) => CloudExec::Remote {
                             remote: r.clone(),
                             fallback: cloud,
+                            chain: chain_route.clone(),
                         },
                         None => CloudExec::Local(cloud),
                     };
@@ -820,8 +996,12 @@ impl Fleet {
                     // cached solve at the live link reflects every
                     // estimator/adaptive update so far, so a grown
                     // shard starts on the same split its siblings were
-                    // last pushed.
-                    let plan = planner.plan(channel.current_link());
+                    // last pushed. Chain mode instead pins every shard
+                    // to the startup cut vector's edge split.
+                    let plan = match &chain_plan {
+                        Some(p) => p.clone(),
+                        None => planner.plan(channel.current_link()),
+                    };
                     Ok(Arc::new(Coordinator::start_observed(
                         edge,
                         cloud_exec,
@@ -931,9 +1111,18 @@ impl Fleet {
                 wire_encoding: class_encoding,
                 probe_counter: AtomicU64::new(0),
                 probe_overrides: AtomicU64::new(0),
+                chain: chain_state,
             });
         }
 
+        let tier_heads = match cfg.tier_chain.first() {
+            Some(head) => engines
+                .iter()
+                .filter(|(_, e)| e.addr() == head.addr)
+                .map(|(_, e)| e.clone())
+                .collect(),
+            None => Vec::new(),
+        };
         Ok(Fleet {
             registry,
             groups,
@@ -941,6 +1130,7 @@ impl Fleet {
             probe,
             branch_pos,
             remotes: engines.into_iter().map(|(_, e)| e).collect(),
+            tier_heads,
             wire_encoding: cfg.wire_encoding,
             budget,
             route_key: AtomicU64::new(1),
@@ -1134,6 +1324,47 @@ impl Fleet {
         for r in &self.remotes {
             r.set_available(up);
         }
+    }
+
+    /// Toggle only the *chain-head* tier's availability (the scenario
+    /// harness's tier-brownout window): chain frames fail fast and
+    /// every chain-routed group degrades to a direct single-hop offload
+    /// against the terminal tier, which stays up. No-op for fleets
+    /// without a tier chain.
+    pub fn set_tier_available(&self, up: bool) {
+        for r in &self.tier_heads {
+            r.set_available(up);
+        }
+    }
+
+    /// The class's solved chain cut vector (`None` without a tier
+    /// chain). `cuts[0]` is the edge split its shards execute.
+    pub fn chain_cuts_of(&self, class: LinkClass) -> Result<Option<Vec<usize>>> {
+        Ok(self
+            .group(class)?
+            .chain
+            .as_ref()
+            .map(|c| c.cuts.as_ref().clone()))
+    }
+
+    /// `E[T]` of the class's *fixed* chain cut vector with hop 0
+    /// re-priced at `link` — the chain analogue of
+    /// [`Fleet::expected_time_of`], so the scenario twin's latencies
+    /// and the route the fleet executes come from the same pricing
+    /// fold ([`Planner::chain_expected_time`]).
+    pub fn chain_expected_time_of(&self, class: LinkClass, link: LinkModel) -> Result<f64> {
+        let group = self.group(class)?;
+        let st = group.chain.as_ref().ok_or_else(|| {
+            anyhow!("link class '{}' has no tier chain", group.profile.name)
+        })?;
+        let mut links = Vec::with_capacity(st.links_tail.len() + 1);
+        links.push(link);
+        links.extend(st.links_tail.iter().copied());
+        let chain = TierChain {
+            links,
+            compute_scale: st.scales.clone(),
+        };
+        Ok(group.planner.planner().chain_expected_time(&chain, &st.cuts))
     }
 
     /// This class's planner (for cross-checking plans in tests/tools).
@@ -1360,6 +1591,7 @@ impl Fleet {
                     name: g.profile.name.clone(),
                     link: g.profile.link,
                     split_after: handles[0].plan().split_after,
+                    cuts: g.chain.as_ref().map(|c| c.cuts.as_ref().clone()),
                     wire_encoding: g.wire_encoding,
                     cloud_addr: g.cloud_addr.clone(),
                     planner: g.planner_stats(),
@@ -1403,6 +1635,7 @@ impl Fleet {
                 name: g.profile.name.clone(),
                 link: g.profile.link,
                 split_after,
+                cuts: g.chain.as_ref().map(|c| c.cuts.as_ref().clone()),
                 wire_encoding: g.wire_encoding,
                 cloud_addr: g.cloud_addr.clone(),
                 // After the drain/join, so gate observations that landed

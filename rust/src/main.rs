@@ -28,7 +28,9 @@ use branchyserve::planner::{AdaptiveConfig, EstimatorConfig, JointSearchSpace, P
 use branchyserve::profiler::{self, ProfileOptions, ProfileReport};
 use branchyserve::runtime::InferenceEngine;
 use branchyserve::scenario::{self, ScenarioSpec};
-use branchyserve::server::{CloudStageServer, Server, ServerConfig};
+use branchyserve::server::{
+    CloudStageServer, RemoteCloudConfig, RemoteCloudEngine, Server, ServerConfig,
+};
 use branchyserve::util::logger;
 use branchyserve::util::timefmt::format_secs;
 
@@ -95,6 +97,10 @@ fn cli() -> Cli {
                     "cloud-addr",
                     "HOST:PORT of a cloud-serve instance; cloud stages run there",
                 ))
+                .flag(Flag::switch(
+                    "tier-chain",
+                    "route cloud stages through the config's [[tier]] chain (K-tier partition)",
+                ))
                 .flag(Flag::value(
                     "wire-encoding",
                     "activation transfer codec to the cloud stage: raw|q8|q4",
@@ -121,6 +127,14 @@ fn cli() -> Cli {
             )
                 .flag(Flag::value("port", "TCP port (0 = auto)").default("7879"))
                 .flag(Flag::value("bind", "listen address").default("0.0.0.0"))
+                .flag(Flag::value(
+                    "forward-addr",
+                    "HOST:PORT of the next tier; this server runs its chain segment and forwards the rest",
+                ))
+                .flag(Flag::value(
+                    "forward-encoding",
+                    "activation codec on the forwarded hop: raw|q8|q4 (default raw)",
+                ))
                 .flag(Flag::value(
                     "max-conns",
                     "shed connections over this cap with THROTTLE (0 = unlimited)",
@@ -453,6 +467,24 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
         Some(s) => WireEncoding::parse(s)?,
         None => settings.fleet.wire_encoding,
     };
+    let tier_chain = if inv.has("tier-chain") {
+        if settings.tiers.is_empty() {
+            anyhow::bail!(
+                "--tier-chain needs [[tier]] entries in the config file \
+                 (the chain topology is not expressible as flags)"
+            );
+        }
+        settings.tiers.clone()
+    } else {
+        if !settings.tiers.is_empty() {
+            println!(
+                "note: config has {} [[tier]] entries but --tier-chain was not given — \
+                 serving without a chain",
+                settings.tiers.len()
+            );
+        }
+        Vec::new()
+    };
     let estimation = if inv.has("estimate-exit-rate") || settings.fleet.online_estimation {
         let cfg = EstimatorConfig {
             drift_threshold: get_f64(inv, "drift-threshold")?
@@ -603,6 +635,7 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             per_request_planning: per_request,
             probe_fraction,
             cloud_addr: cloud_addr.clone(),
+            tier_chain: tier_chain.clone(),
             wire_encoding,
             joint_search: settings.planner.joint_search,
             min_accuracy_proxy: settings.planner.min_accuracy_proxy,
@@ -623,12 +656,17 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
             Some(a) => format!(" -> {a}"),
             None => String::new(),
         };
+        let cuts = match &c.cuts {
+            Some(v) => format!(" (chain cuts {v:?})"),
+            None => String::new(),
+        };
         println!(
-            "class {:>10} @ {:>9.2} Mbps -> split after {:>2}, {} wire \
+            "class {:>10} @ {:>9.2} Mbps -> split after {:>2}{}, {} wire \
              ({} shard(s) x {} cloud worker(s)){}",
             c.name,
             c.link.uplink_mbps,
             c.split_after,
+            cuts,
             c.wire_encoding,
             c.shards.len(),
             cloud_workers,
@@ -652,12 +690,24 @@ fn cmd_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
         ),
         None => println!("autoscale: off (fixed {shards} shard(s) per class)"),
     }
-    match &cloud_addr {
-        Some(addr) => println!(
-            "cloud stages: remote @ {addr} (local fallback on failure) — \
-             run `branchyserve cloud-serve` there"
-        ),
-        None => println!("cloud stages: in-process"),
+    if tier_chain.is_empty() {
+        match &cloud_addr {
+            Some(addr) => println!(
+                "cloud stages: remote @ {addr} (local fallback on failure) — \
+                 run `branchyserve cloud-serve` there"
+            ),
+            None => println!("cloud stages: in-process"),
+        }
+    } else {
+        let hops: Vec<&str> = tier_chain.iter().map(|t| t.addr.as_str()).collect();
+        println!(
+            "cloud stages: {}-tier chain, edge -> {} — run `branchyserve cloud-serve \
+             --forward-addr NEXT` on every tier but the last (head failures degrade \
+             to a direct hop to {})",
+            tier_chain.len() + 1,
+            hops.join(" -> "),
+            hops[hops.len() - 1],
+        );
     }
     println!("activation wire encoding: {wire_encoding} (planner prices transfers at this codec)");
     println!(
@@ -703,7 +753,9 @@ fn server_config_from(inv: &Invocation, settings: &Settings) -> Result<ServerCon
 /// loop over a [`CloudStageServer`] that executes the suffix stages
 /// `split+1..=N` of every INFER_PARTIAL frame an edge `serve
 /// --cloud-addr` instance ships to it. No planner runs here — each
-/// frame carries its own cut.
+/// frame carries its own cut. With `--forward-addr` the server is a
+/// *middle* tier of a K-tier chain: it runs only its own segment of
+/// each INFER_CHAIN frame and ships the remainder to the next tier.
 fn cmd_cloud_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
     let sim = inv.has("sim");
     let sim_cost =
@@ -728,7 +780,24 @@ fn cmd_cloud_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
         engine.manifest().batch_sizes,
     );
 
-    let server = Arc::new(CloudStageServer::new(engine));
+    let mut stage_server = CloudStageServer::new(engine);
+    if let Some(addr) = inv.get("forward-addr") {
+        if let Err(e) = validate_host_port(addr) {
+            anyhow::bail!("--forward-addr: {e}");
+        }
+        let mut rcfg = RemoteCloudConfig::new(addr.to_string());
+        if let Some(enc) = inv.get("forward-encoding") {
+            rcfg.encoding = WireEncoding::parse(enc)?;
+        }
+        let encoding = rcfg.encoding;
+        stage_server = stage_server.with_forward(Arc::new(RemoteCloudEngine::new(rcfg)));
+        println!(
+            "forwarding tier: chain tails ship onward to {addr} ({encoding} on that hop)"
+        );
+    } else if inv.get("forward-encoding").is_some() {
+        anyhow::bail!("--forward-encoding requires --forward-addr");
+    }
+    let server = Arc::new(stage_server);
     let port = get_usize(inv, "port")?.unwrap_or(7879) as u16;
     let bind = inv.get("bind").unwrap_or("0.0.0.0");
     let cfg = ServerConfig {
@@ -745,8 +814,10 @@ fn cmd_cloud_serve(inv: &Invocation, settings: &Settings) -> Result<()> {
     loop {
         std::thread::sleep(Duration::from_secs(10));
         let (batches, samples, gated, full, errors) = server.counters();
+        let (chain, forwarded) = server.chain_counters();
         println!(
             "partial batches {batches} ({samples} samples, {gated} gated), \
+             chain batches {chain} ({forwarded} forwarded), \
              full infers {full}, errors {errors}, splits served {:?}",
             server.splits_served(),
         );

@@ -3,6 +3,7 @@
 
 use crate::config::settings::Strategy;
 use crate::model::BranchyNetDesc;
+use crate::network::encoding::WireEncoding;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct PartitionPlan {
@@ -16,8 +17,14 @@ pub struct PartitionPlan {
     /// 1-based positions of side branches that are *active* (on the edge
     /// side of the cut and before it — paper §IV-B).
     pub active_branches: Vec<usize>,
-    /// Bytes transferred per sample when no early exit happens.
+    /// *Raw* activation bytes at the cut when no early exit happens —
+    /// a property of the model alone, independent of the transfer codec.
     pub transfer_bytes: u64,
+    /// Bytes the deployment actually puts on the wire per transferred
+    /// sample: `transfer_bytes` pushed through the solver's wire
+    /// encoding — the size the expected time was *minimized against*.
+    /// Equal to `transfer_bytes` for raw-f32 transfers.
+    pub wire_bytes: u64,
 }
 
 impl PartitionPlan {
@@ -27,8 +34,36 @@ impl PartitionPlan {
         strategy: Strategy,
         desc: &BranchyNetDesc,
     ) -> PartitionPlan {
+        PartitionPlan::from_split_encoded(
+            split_after,
+            expected_time_s,
+            strategy,
+            desc,
+            WireEncoding::Raw,
+        )
+    }
+
+    /// [`PartitionPlan::from_split`] for a solver that priced transfers
+    /// under `encoding`: `wire_bytes` reports the encoded size at the
+    /// cut, so the plan summary states the quantity the solver actually
+    /// minimized (under `Raw` the two byte fields coincide).
+    pub fn from_split_encoded(
+        split_after: usize,
+        expected_time_s: f64,
+        strategy: Strategy,
+        desc: &BranchyNetDesc,
+        encoding: WireEncoding,
+    ) -> PartitionPlan {
         let n = desc.num_stages();
         assert!(split_after <= n);
+        let (transfer_bytes, wire_bytes) = if split_after == n {
+            (0, 0)
+        } else {
+            (
+                desc.transfer_bytes(split_after),
+                desc.transfer_wire_bytes(split_after, encoding),
+            )
+        };
         PartitionPlan {
             split_after,
             expected_time_s,
@@ -39,11 +74,8 @@ impl PartitionPlan {
                 .filter(|b| b.after_stage < split_after)
                 .map(|b| b.after_stage)
                 .collect(),
-            transfer_bytes: if split_after == n {
-                0
-            } else {
-                desc.transfer_bytes(split_after)
-            },
+            transfer_bytes,
+            wire_bytes,
         }
     }
 
@@ -113,13 +145,48 @@ mod tests {
         let d = desc();
         let p0 = PartitionPlan::from_split(0, 0.1, Strategy::CloudOnly, &d);
         assert_eq!(p0.transfer_bytes, 80);
+        assert_eq!(p0.wire_bytes, 80, "raw: wire == transfer");
         assert_eq!(p0.split_label(&d), "input");
         assert!(p0.is_cloud_only());
 
         let p3 = PartitionPlan::from_split(3, 0.1, Strategy::EdgeOnly, &d);
         assert_eq!(p3.transfer_bytes, 0);
+        assert_eq!(p3.wire_bytes, 0);
         assert_eq!(p3.split_label(&d), "fc");
         assert!(p3.is_edge_only(3));
+    }
+
+    #[test]
+    fn wire_bytes_follow_the_encoding_not_the_raw_size() {
+        // The drift this pins against: a quantized solver must not
+        // summarize its plan with raw f32 sizes — `wire_bytes` reports
+        // what the codec ships, `transfer_bytes` stays the raw model
+        // property.
+        let d = desc();
+        for s in 0..3 {
+            for enc in WireEncoding::ALL {
+                let p = PartitionPlan::from_split_encoded(s, 0.1, Strategy::ShortestPath, &d, enc);
+                assert_eq!(p.transfer_bytes, d.transfer_bytes(s), "split {s} {enc:?}");
+                assert_eq!(
+                    p.wire_bytes,
+                    d.transfer_wire_bytes(s, enc),
+                    "split {s} {enc:?}"
+                );
+            }
+            // Raw is the identity between the two fields.
+            let raw = PartitionPlan::from_split(s, 0.1, Strategy::ShortestPath, &d);
+            assert_eq!(raw.wire_bytes, raw.transfer_bytes, "split {s}");
+        }
+        // Interior cut under q8: an actual strict shrink (100 f32-ish
+        // bytes -> header + 1-byte codes), so the two fields genuinely
+        // diverge and the test can't pass vacuously.
+        let q8 = PartitionPlan::from_split_encoded(1, 0.1, Strategy::ShortestPath, &d, WireEncoding::Q8);
+        assert!(
+            q8.wire_bytes < q8.transfer_bytes,
+            "q8 must shrink the wire: {} vs {}",
+            q8.wire_bytes,
+            q8.transfer_bytes
+        );
     }
 
     #[test]

@@ -1,0 +1,508 @@
+//! K-tier partition chains: the cut *vector* generalization.
+//!
+//! The paper's device/cloud split is the K = 2 instance of a general
+//! chain partition: K tiers (edge, any number of intermediate tiers,
+//! a terminal tier) connected by K−1 links, with a monotone cut vector
+//! `cuts[0] <= cuts[1] <= … <= cuts[K-2]` assigning stages
+//! `1..=cuts[0]` to the edge, `cuts[k-1]+1..=cuts[k]` to tier `k`, and
+//! `cuts[K-2]+1..=N` to the terminal tier. The shortest-path
+//! equivalence the planner collapses into a sweep survives intact: the
+//! layered graph simply gains one layer per tier, and because early
+//! exits only ever fire on the edge (branch gates run before the first
+//! cut; downstream tiers never gate), the survival weight factors out
+//! of everything past hop 0:
+//!
+//! ```text
+//! E[T(cuts)] = A(c0) + S(c0) · ( hop0(c0) + R1(c0) )
+//!
+//! Rk(i)      = scale_k · (C(i) − C(j))                    j = cuts[k]
+//!            + [j < N] · ( hopk(j) + Rk+1(j) )            (k < K−1)
+//! RK-1(i)    = scale_K-1 · (C(i) − C(N))
+//! ```
+//!
+//! with `A`, `S`, `C` exactly the planner's prefix/suffix tables and
+//! `hopk(j)` the k-th link's transfer time for the wire-encoded
+//! activation at stage `j`. [`Planner::plan_chain`] solves the argmin
+//! over all monotone cut vectors as a layered dynamic program in
+//! O(K·N²): one table `R_k` per intermediate tier, each entry a 1-D
+//! minimization over the next cut, then the familiar O(N) epsilon
+//! sweep over the edge cut. With K = 2 the single table is
+//! `1.0 · (C(i) − 0.0)` — bit-identical to `C(i)` — so `plan_chain`
+//! over [`TierChain::two_tier`] collapses **bit-identically** to
+//! [`Planner::plan_for`] (property-tested in
+//! `rust/tests/planner_equivalence.rs`; the exhaustive cut-vector
+//! oracle lives in `rust/tests/ktier_optimality.rs`).
+//!
+//! Tie-breaking follows the paper's epsilon rule, generalized: the
+//! decision value carries `+epsilon` exactly when `cuts[0] < N` (the
+//! vector transfers *something*), and every minimization scans
+//! ascending with `<=` — so exact ties resolve toward the
+//! lexicographically **largest** cut vector, i.e. toward keeping work
+//! on the earliest possible tier, the same direction `plan_for`
+//! resolves its single cut. When the edge cut kills all survival
+//! (`S(c0) = 0`, the p = 1 corner) or runs the whole net
+//! (`cuts[0] = N`), nothing ever crosses hop 0 and every downstream
+//! cut is reported as `N` — the lexicographically largest of the
+//! all-tied tails.
+
+use crate::network::bandwidth::LinkModel;
+
+use super::{Planner, StaticCore};
+
+/// A K-tier deployment topology as the planner prices it: K−1 links and
+/// K−1 compute scales, describing the tiers *beyond* the edge. Tier 0
+/// (the edge) contributes the planner's own profiled `t_edge`; tier `k`
+/// (1-based) runs its stages at `compute_scale[k-1] ×` the profiled
+/// cloud time and receives its input over `links[k-1]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierChain {
+    /// `links[h]` is the hop from tier `h` to tier `h+1`; `links[0]` is
+    /// the edge's own uplink. K−1 entries for a K-tier chain.
+    pub links: Vec<LinkModel>,
+    /// Per-tier compute time relative to the profiled cloud, one entry
+    /// per tier beyond the edge (the last entry is the terminal tier).
+    /// `1.0` = exactly the profile's `t_cloud`; `0.0` (a free
+    /// pass-through relay) is allowed.
+    pub compute_scale: Vec<f64>,
+}
+
+impl TierChain {
+    /// The paper's topology: one hop to a cloud running the profiled
+    /// `t_cloud` unscaled. [`Planner::plan_chain`] over this chain is
+    /// bit-identical to [`Planner::plan_for`]`(link)`.
+    pub fn two_tier(link: LinkModel) -> TierChain {
+        TierChain {
+            links: vec![link],
+            compute_scale: vec![1.0],
+        }
+    }
+
+    /// Number of tiers including the edge: `links.len() + 1`.
+    pub fn num_tiers(&self) -> usize {
+        self.links.len() + 1
+    }
+
+    /// Panics unless the chain is well-formed: at least one hop, one
+    /// compute scale per hop, every scale finite and non-negative.
+    fn assert_valid(&self) {
+        assert!(
+            !self.links.is_empty(),
+            "a tier chain needs at least one hop (K >= 2)"
+        );
+        assert_eq!(
+            self.compute_scale.len(),
+            self.links.len(),
+            "tier chain has {} hops but {} compute scales (need one per tier beyond the edge)",
+            self.links.len(),
+            self.compute_scale.len()
+        );
+        for (k, &scale) in self.compute_scale.iter().enumerate() {
+            assert!(
+                scale.is_finite() && scale >= 0.0,
+                "compute_scale[{k}] = {scale} must be finite and non-negative"
+            );
+        }
+    }
+}
+
+/// The solved chain partition: where to cut between each pair of
+/// adjacent tiers, the expected time the vector achieves, and what each
+/// hop puts on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainPlan {
+    /// `cuts[h]`: the stage after which tier `h` hands off to tier
+    /// `h+1`. Non-decreasing; `cuts[h] = N` means tier `h` runs to the
+    /// final output and nothing crosses hop `h` (or any later hop).
+    pub cuts: Vec<usize>,
+    /// `E[T]` of the vector — the model value without the tie-break
+    /// epsilon, exactly as [`Planner::plan_for`] reports its time.
+    pub expected_time_s: f64,
+    /// Wire bytes a transferred sample ships on each hop, under the
+    /// planner's baked encoding: `alpha(cuts[h])`, or 0 when nothing
+    /// crosses the hop (`cuts[h] = N`).
+    pub hop_wire_bytes: Vec<u64>,
+}
+
+impl ChainPlan {
+    /// True when the edge runs the whole net and no hop carries traffic.
+    pub fn is_edge_only(&self, num_stages: usize) -> bool {
+        self.cuts.first() == Some(&num_stages)
+    }
+
+    /// Stages each tier executes, edge first: `[cuts[0], cuts[1] −
+    /// cuts[0], …, N − cuts[K-2]]`. Sums to `num_stages`; a
+    /// pass-through tier (`cuts[k] = cuts[k-1]`) contributes 0.
+    pub fn stage_counts(&self, num_stages: usize) -> Vec<usize> {
+        let mut counts = Vec::with_capacity(self.cuts.len() + 1);
+        let mut prev = 0usize;
+        for &c in &self.cuts {
+            counts.push(c - prev);
+            prev = c;
+        }
+        counts.push(num_stages - prev);
+        counts
+    }
+}
+
+impl Planner {
+    /// `E[T(cuts)]` of one explicit monotone cut vector under `chain` —
+    /// the canonical chain pricing the dynamic program minimizes and
+    /// the exhaustive oracle re-implements. `cuts.len()` must equal the
+    /// number of hops; entries must be non-decreasing and at most N.
+    ///
+    /// The arithmetic extends the 2-tier fold without disturbing it:
+    /// the edge part is `edge_cost[c0]` (the estimator's fold), and the
+    /// transferred part multiplies the survival at the cut into the
+    /// right-folded hop/segment chain (see the module doc). With
+    /// `chain = TierChain::two_tier(link)` and `cuts = [s]` this is
+    /// bit-identical to [`Planner::expected_time`]`(s, link)`.
+    pub fn chain_expected_time(&self, chain: &TierChain, cuts: &[usize]) -> f64 {
+        chain.assert_valid();
+        let view = self.view();
+        let core = &*self.core;
+        let n = core.n;
+        assert_eq!(
+            cuts.len(),
+            chain.links.len(),
+            "cut vector has {} entries for a chain with {} hops",
+            cuts.len(),
+            chain.links.len()
+        );
+        for pair in cuts.windows(2) {
+            assert!(
+                pair[0] <= pair[1],
+                "cut vector {cuts:?} is not non-decreasing"
+            );
+        }
+        let c0 = cuts[0];
+        let last = *cuts.last().unwrap();
+        assert!(last <= n, "cut {last} out of range 0..={n}");
+
+        let mut t = view.edge_cost[c0];
+        if c0 < n {
+            let surv = view.surv[c0];
+            if surv > 0.0 {
+                t += surv
+                    * (chain.links[0].transfer_time(core.alpha_bytes[c0])
+                        + downstream(core, chain, cuts, 1, c0));
+            }
+        }
+        t
+    }
+
+    /// Solve for the optimal monotone cut vector under `chain`: the
+    /// layered-graph shortest path in O(K·N²), with the same epsilon
+    /// tie-break as [`Planner::plan_for`] (see the module doc for the
+    /// exact rule). K = 2 collapses bit-identically to `plan_for`.
+    pub fn plan_chain(&self, chain: &TierChain) -> ChainPlan {
+        self.plan_chain_with_epsilon(chain, self.epsilon)
+    }
+
+    /// [`Planner::plan_chain`] with an explicit tie-breaker, for
+    /// epsilon-sensitivity sweeps. The view is pinned once for the
+    /// whole solve, so a concurrent [`Planner::set_exit_probs`] can
+    /// never mix two p's in one plan.
+    pub fn plan_chain_with_epsilon(&self, chain: &TierChain, epsilon: f64) -> ChainPlan {
+        assert!(
+            epsilon > 0.0 && epsilon.is_finite(),
+            "epsilon must be positive (paper §V)"
+        );
+        chain.assert_valid();
+        let view = self.view();
+        let core = &*self.core;
+        let n = core.n;
+        // Number of cuts = number of hops = K − 1; tiers beyond the
+        // edge are 1..=kmax.
+        let kmax = chain.links.len();
+
+        // R[k][i]: cost of tiers k..=kmax given tier k receives the
+        // activation cut at stage i — built back to front. The terminal
+        // table is the closed form `scale · (C(i) − C(N))`; each
+        // intermediate table is a 1-D minimization over its own cut,
+        // scanning ascending with `<=` so exact ties pick the larger
+        // cut (the lexicographically larger vector). `choice[k-1][i]`
+        // remembers the argmin for reconstruction.
+        let mut r_next: Vec<f64> = (0..=n)
+            .map(|i| chain.compute_scale[kmax - 1] * (core.cloud_suffix[i] - core.cloud_suffix[n]))
+            .collect();
+        // Choice tables for tiers kmax-1 down to 1 (pushed in that
+        // order, reversed below so `choices[k-1]` belongs to tier k).
+        let mut choices: Vec<Vec<usize>> = Vec::new();
+        for k in (1..kmax).rev() {
+            let scale = chain.compute_scale[k - 1];
+            let link = chain.links[k];
+            let mut r = Vec::with_capacity(n + 1);
+            let mut choice = Vec::with_capacity(n + 1);
+            for i in 0..=n {
+                let mut best = f64::INFINITY;
+                let mut best_j = i;
+                for j in i..=n {
+                    let seg = scale * (core.cloud_suffix[i] - core.cloud_suffix[j]);
+                    let cost = if j < n {
+                        seg + (link.transfer_time(core.alpha_bytes[j]) + r_next[j])
+                    } else {
+                        seg
+                    };
+                    // `<=`: on an exact tie the larger cut wins.
+                    if cost <= best {
+                        best = cost;
+                        best_j = j;
+                    }
+                }
+                r.push(best);
+                choice.push(best_j);
+            }
+            choices.push(choice);
+            r_next = r;
+        }
+        choices.reverse();
+
+        // The edge sweep — the identical fold `plan_with_epsilon` runs,
+        // with `R[1]` in place of the bare cloud suffix.
+        let mut best_c0 = 0usize;
+        let mut best_model = f64::INFINITY;
+        let mut best_decision = f64::INFINITY;
+        for s in 0..=n {
+            let mut model = view.edge_cost[s];
+            if s < n {
+                let surv = view.surv[s];
+                if surv > 0.0 {
+                    model +=
+                        surv * (chain.links[0].transfer_time(core.alpha_bytes[s]) + r_next[s]);
+                }
+            }
+            let decision = if s < n { model + epsilon } else { model };
+            // `<=`: on an exact tie the larger cut (more edge work) wins.
+            if decision <= best_decision {
+                best_decision = decision;
+                best_model = model;
+                best_c0 = s;
+            }
+        }
+
+        // Reconstruct the vector. When nothing ever crosses hop 0 —
+        // edge-only, or zero survival at the cut — every tail is
+        // cost-tied, and the lexicographically largest (all N, matching
+        // the oracle's tie resolution) is reported.
+        let mut cuts = Vec::with_capacity(kmax);
+        cuts.push(best_c0);
+        if best_c0 == n || view.surv[best_c0] <= 0.0 {
+            cuts.resize(kmax, n);
+        } else {
+            let mut at = best_c0;
+            for k in 1..kmax {
+                let next = if at == n { n } else { choices[k - 1][at] };
+                cuts.push(next);
+                at = next;
+            }
+        }
+
+        let hop_wire_bytes: Vec<u64> = cuts
+            .iter()
+            .map(|&c| if c == n { 0 } else { core.alpha_bytes[c] })
+            .collect();
+
+        ChainPlan {
+            cuts,
+            expected_time_s: best_model,
+            hop_wire_bytes,
+        }
+    }
+}
+
+/// Cost of tiers `k..` given tier `k` receives the activation cut at
+/// stage `from`: the right fold `seg + (hop + rest)` from the module
+/// doc. Recursion depth is K−1 (chains are short).
+fn downstream(
+    core: &StaticCore,
+    chain: &TierChain,
+    cuts: &[usize],
+    k: usize,
+    from: usize,
+) -> f64 {
+    let n = core.n;
+    let kmax = cuts.len();
+    let to = if k < kmax { cuts[k] } else { n };
+    let seg = chain.compute_scale[k - 1] * (core.cloud_suffix[from] - core.cloud_suffix[to]);
+    if k < kmax && to < n {
+        seg + (chain.links[k].transfer_time(core.alpha_bytes[to])
+            + downstream(core, chain, cuts, k + 1, to))
+    } else {
+        seg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BranchDesc, BranchyNetDesc};
+    use crate::timing::profile::DelayProfile;
+
+    fn fixture(p: f64) -> (BranchyNetDesc, DelayProfile) {
+        let desc = BranchyNetDesc {
+            stage_names: (1..=5).map(|i| format!("s{i}")).collect(),
+            stage_out_bytes: vec![57_600, 18_816, 25_088, 3_456, 8],
+            input_bytes: 12_288,
+            branches: vec![BranchDesc {
+                after_stage: 1,
+                exit_prob: p,
+            }],
+        };
+        let profile = DelayProfile::from_cloud_times(
+            vec![1e-3, 2e-3, 1.5e-3, 8e-4, 2e-4],
+            3e-4,
+            100.0,
+        );
+        (desc, profile)
+    }
+
+    #[test]
+    fn two_tier_chain_collapses_to_plan_for_bitwise() {
+        let (desc, profile) = fixture(0.6);
+        for paper in [true, false] {
+            let planner = Planner::new(&desc, &profile, 1e-9, paper);
+            for mbps in [0.05, 1.10, 5.85, 18.80, 500.0] {
+                let link = LinkModel::new(mbps, 0.01);
+                let fixed = planner.plan_for(link);
+                let chain = planner.plan_chain(&TierChain::two_tier(link));
+                assert_eq!(chain.cuts, vec![fixed.split_after], "mbps={mbps}");
+                assert_eq!(
+                    chain.expected_time_s.to_bits(),
+                    fixed.expected_time_s.to_bits(),
+                    "mbps={mbps} paper={paper}"
+                );
+                assert_eq!(chain.hop_wire_bytes, vec![fixed.wire_bytes]);
+                // The explicit pricing agrees with the sweep kernel at
+                // every cut, bit for bit.
+                for s in 0..=desc.num_stages() {
+                    assert_eq!(
+                        planner
+                            .chain_expected_time(&TierChain::two_tier(link), &[s])
+                            .to_bits(),
+                        planner.expected_time(s, link).to_bits(),
+                        "s={s} mbps={mbps}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_achieves_its_reported_time_exactly() {
+        let (desc, profile) = fixture(0.4);
+        let planner = Planner::new(&desc, &profile, 1e-9, false);
+        let chain = TierChain {
+            links: vec![LinkModel::new(1.10, 0.005), LinkModel::new(100.0, 0.002)],
+            compute_scale: vec![4.0, 1.0],
+        };
+        let plan = planner.plan_chain(&chain);
+        assert_eq!(
+            planner.chain_expected_time(&chain, &plan.cuts).to_bits(),
+            plan.expected_time_s.to_bits()
+        );
+        assert!(plan.cuts[0] <= plan.cuts[1]);
+        assert_eq!(plan.stage_counts(5).iter().sum::<usize>(), 5);
+    }
+
+    #[test]
+    fn free_middle_tier_on_a_fast_hop_never_hurts() {
+        // A zero-cost middle tier behind a fat second hop: the 3-tier
+        // optimum can only improve on (or equal) the best 2-tier plan,
+        // because every [s, N] vector prices identically to the 2-tier
+        // plan at split s.
+        let (desc, profile) = fixture(0.3);
+        let planner = Planner::new(&desc, &profile, 1e-9, false);
+        let hop0 = LinkModel::new(1.10, 0.0);
+        let chain = TierChain {
+            links: vec![hop0, LinkModel::new(1000.0, 0.001)],
+            compute_scale: vec![0.0, 1.0],
+        };
+        let two = planner.plan_for(hop0);
+        let three = planner.plan_chain(&chain);
+        assert!(three.expected_time_s <= two.expected_time_s);
+        // On a unit-scale chain the all-on-middle vector [s, N] prices
+        // bit-identically to the 2-tier plan at the same first cut: the
+        // second hop is never taken.
+        let unit = TierChain {
+            links: chain.links.clone(),
+            compute_scale: vec![1.0, 1.0],
+        };
+        for s in 0..=5 {
+            assert_eq!(
+                planner.chain_expected_time(&unit, &[s, 5]).to_bits(),
+                planner.expected_time(s, hop0).to_bits(),
+                "all-on-middle vector must price as the 2-tier split {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn hand_computed_three_tier_vector() {
+        // No branches, paper mode: E[T] is a plain sum we can write out
+        // by hand. 2 stages, cuts = [1, 1]: edge runs stage 1, the
+        // middle is a pass-through, the terminal runs stage 2 at 2x.
+        let desc = BranchyNetDesc {
+            stage_names: vec!["s1".into(), "s2".into()],
+            stage_out_bytes: vec![1_000_000, 8],
+            input_bytes: 500_000,
+            branches: vec![],
+        };
+        // gamma = 10: t_edge = 10 * t_cloud.
+        let profile = DelayProfile::from_cloud_times(vec![0.002, 0.01], 0.0, 10.0);
+        let planner = Planner::new(&desc, &profile, 1e-9, true);
+        let chain = TierChain {
+            links: vec![LinkModel::new(8.0, 0.1), LinkModel::new(80.0, 0.01)],
+            compute_scale: vec![0.5, 2.0],
+        };
+        let got = planner.chain_expected_time(&chain, &[1, 1]);
+        let hop0 = 1_000_000.0 * 8.0 / 8e6 + 0.1; // 1.1 s
+        let hop1 = 1_000_000.0 * 8.0 / 80e6 + 0.01; // 0.11 s
+        let want = 0.02 + (hop0 + (0.5 * 0.0 + (hop1 + 2.0 * 0.01)));
+        assert!((got - want).abs() < 1e-12, "got {got}, want {want}");
+    }
+
+    #[test]
+    fn p_one_reports_the_all_edge_tail() {
+        // With p = 1 nothing survives past the branch: every tail is
+        // cost-tied and the plan must report the lexicographically
+        // largest (all N), matching the exhaustive oracle's tie rule.
+        let (desc, profile) = fixture(1.0);
+        let planner = Planner::new(&desc, &profile, 1e-9, true);
+        let chain = TierChain {
+            links: vec![LinkModel::new(0.05, 0.0), LinkModel::new(1.0, 0.0)],
+            compute_scale: vec![1.0, 1.0],
+        };
+        let plan = planner.plan_chain(&chain);
+        assert_eq!(plan.cuts, vec![5, 5]);
+        assert!(plan.is_edge_only(5));
+        assert_eq!(plan.hop_wire_bytes, vec![0, 0]);
+        assert_eq!(
+            plan.expected_time_s.to_bits(),
+            profile.t_edge[0].to_bits()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "not non-decreasing")]
+    fn decreasing_cut_vector_panics() {
+        let (desc, profile) = fixture(0.5);
+        let planner = Planner::new(&desc, &profile, 1e-9, false);
+        let chain = TierChain {
+            links: vec![LinkModel::new(1.0, 0.0), LinkModel::new(1.0, 0.0)],
+            compute_scale: vec![1.0, 1.0],
+        };
+        let _ = planner.chain_expected_time(&chain, &[3, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "compute scales")]
+    fn mismatched_scales_panic() {
+        let (desc, profile) = fixture(0.5);
+        let planner = Planner::new(&desc, &profile, 1e-9, false);
+        let chain = TierChain {
+            links: vec![LinkModel::new(1.0, 0.0)],
+            compute_scale: vec![1.0, 1.0],
+        };
+        let _ = planner.plan_chain(&chain);
+    }
+}

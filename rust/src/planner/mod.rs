@@ -98,15 +98,25 @@
 //!   ([`Planner::plan_joint`]): the same O(N) sweep run once per
 //!   (branch-set, wire-encoding) candidate over one shared
 //!   `StaticCore`, pruned by an accuracy-proxy floor — the first
-//!   optimizer here that moves more than the split axis.
+//!   optimizer here that moves more than the split axis;
+//! * [`chain`] — the K-tier generalization
+//!   ([`Planner::plan_chain`]): a monotone cut *vector* over a
+//!   [`TierChain`] of per-hop links and per-tier compute scales,
+//!   solved as a layered dynamic program in O(K·N²) over the same
+//!   prefix/suffix tables; K = 2 collapses bit-identically to
+//!   [`Planner::plan_for`], and the exhaustive cut-vector oracle
+//!   (`rust/tests/ktier_optimality.rs`) holds every K to the
+//!   brute-force argmin.
 
 pub mod adaptive;
 pub mod cache;
+pub mod chain;
 pub mod estimator;
 pub mod joint;
 
 pub use adaptive::{AdaptiveConfig, AdaptiveHandle, AdaptivePlanner, ReplanState, ReplanStats};
 pub use cache::PlanCache;
+pub use chain::{ChainPlan, TierChain};
 pub use estimator::{EstimatorConfig, ExitRateEstimator};
 pub use joint::{JointCandidate, JointPlan, JointSearchSpace};
 
@@ -592,7 +602,13 @@ impl Planner {
                 best_split = s;
             }
         }
-        PartitionPlan::from_split(best_split, best_model, Strategy::ShortestPath, &self.core.desc)
+        PartitionPlan::from_split_encoded(
+            best_split,
+            best_model,
+            Strategy::ShortestPath,
+            &self.core.desc,
+            self.core.wire_encoding,
+        )
     }
 
     /// Like [`Planner::plan_for`], but memoized by quantized bandwidth:
@@ -787,6 +803,37 @@ mod tests {
         let q4 = base.with_wire_encoding(WireEncoding::Q4);
         assert_eq!(q4.plan_for(link).split_after, 0, "q4: offload everything");
         assert!(q4.plan_for(link).expected_time_s < base.plan_for(link).expected_time_s);
+    }
+
+    #[test]
+    fn plan_wire_bytes_report_the_minimized_quantity() {
+        // The encoding-drift pin: an encoded planner's plan must
+        // summarize the wire size it actually priced, while the raw
+        // model size stays available alongside it.
+        let (desc, profile) = fixture(0.5);
+        let base = Planner::new(&desc, &profile, 1e-9, false);
+        let link = LinkModel::new(5.85, 0.0);
+        for enc in WireEncoding::ALL {
+            let plan = base.with_wire_encoding(enc).plan_for(link);
+            let s = plan.split_after;
+            // gamma = 100: the slow edge guarantees an offloading split,
+            // so the byte fields are live (never the edge-only zeros).
+            assert!(s < 5, "expected an offloading split under {enc:?}, got {s}");
+            assert_eq!(plan.transfer_bytes, desc.transfer_bytes(s), "{enc:?}");
+            assert_eq!(plan.wire_bytes, desc.transfer_wire_bytes(s, enc), "{enc:?}");
+        }
+        // Quantized plans genuinely diverge from the raw size — the pin
+        // can't pass vacuously.
+        let q8 = base.with_wire_encoding(WireEncoding::Q8).plan_for(link);
+        assert!(
+            q8.wire_bytes < q8.transfer_bytes,
+            "q8 wire {} must undercut raw {}",
+            q8.wire_bytes,
+            q8.transfer_bytes
+        );
+        // And the raw planner keeps the identity.
+        let raw = base.plan_for(link);
+        assert_eq!(raw.wire_bytes, raw.transfer_bytes);
     }
 
     #[test]

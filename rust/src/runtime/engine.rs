@@ -281,6 +281,39 @@ impl InferenceEngine {
         Ok(classes)
     }
 
+    /// The mid-chain sibling of [`InferenceEngine::run_suffix_classes`]:
+    /// pad a batched activation of `n` real samples to an exported
+    /// batch size — chunking to [`InferenceEngine::max_batch`] first
+    /// when `n` exceeds every export — run stages `from..=to`, and
+    /// return the resulting activations truncated back to `n` samples.
+    /// Used by the forwarding cloud-stage server, which executes a
+    /// middle segment of the partition chain and ships the output
+    /// onward instead of reducing to classes.
+    pub fn run_segment_acts(
+        &self,
+        from: usize,
+        to: usize,
+        stacked: &HostTensor,
+        n: usize,
+    ) -> Result<HostTensor> {
+        let max_exec = self.max_batch();
+        if n <= max_exec {
+            let x = stacked.pad_batch(self.bucket_batch(n));
+            let out = self.run_stages(from, to, &x)?;
+            return Ok(out.take_batch(n));
+        }
+        let samples = stacked.unstack();
+        let mut outs = Vec::with_capacity(n);
+        for chunk in samples.chunks(max_exec) {
+            let restacked = HostTensor::stack(chunk)?;
+            outs.extend(
+                self.run_segment_acts(from, to, &restacked, chunk.len())?
+                    .unstack(),
+            );
+        }
+        HostTensor::stack(&outs)
+    }
+
     /// Argmax class per sample of a (B, C) probability/logit tensor.
     pub fn argmax_classes(probs: &HostTensor) -> Vec<usize> {
         (0..probs.batch())
@@ -481,6 +514,17 @@ mod tests {
             let one = HostTensor::stack(std::slice::from_ref(t)).unwrap();
             let out = engine.run_stages(1, 2, &one).unwrap();
             assert_eq!(classes[i], InferenceEngine::argmax_classes(&out)[0]);
+        }
+
+        // Mid-chain segment path: same pad/chunk handling, but the
+        // activations come back (truncated to the real batch) instead
+        // of classes.
+        let seg = engine.run_segment_acts(1, 1, &b3, 3).unwrap();
+        assert_eq!(seg.shape(), &[3, 8]);
+        for (i, t) in b3.unstack().iter().enumerate() {
+            let one = HostTensor::stack(std::slice::from_ref(t)).unwrap();
+            let acts = engine.run_stages(1, 1, &one).unwrap();
+            assert_eq!(seg.sample(i), acts.sample(0));
         }
     }
 }

@@ -1,6 +1,7 @@
 //! Replays a [`ScenarioSpec`] against a **real** fleet — real
-//! coordinators, real planners, real autoscale enforcement, a real
-//! loopback cloud-stage server when asked — in lockstep *virtual* time.
+//! coordinators, real planners, real autoscale enforcement, real
+//! loopback cloud-stage servers when asked (a forwarding chain of
+//! them when `[[tier]]` is configured) — in lockstep *virtual* time.
 //!
 //! Determinism contract: wall clocks never decide anything.
 //!
@@ -48,7 +49,9 @@ use crate::model::Manifest;
 use crate::network::bandwidth::LinkModel;
 use crate::planner::EstimatorConfig;
 use crate::runtime::InferenceEngine;
-use crate::server::{CloudStageServer, Server, ServerHandle};
+use crate::server::{
+    CloudStageServer, RemoteCloudConfig, RemoteCloudEngine, Server, ServerHandle,
+};
 use crate::timing::DelayProfile;
 use crate::util::rng::Pcg32;
 use crate::util::stats::percentile;
@@ -108,6 +111,9 @@ struct ClassState {
     split: usize,
     /// Split trajectory: `(t_s, split)`, first entry at t = 0.
     splits: Vec<(f64, usize)>,
+    /// Routes through a K-tier chain (fixed cut vector); `split` is
+    /// the chain's edge cut `cuts[0]`.
+    chain: bool,
     /// Virtual queue twin: busy-until horizon per shard, seconds.
     twin: Vec<f64>,
     offered: u64,
@@ -145,12 +151,26 @@ impl ClassState {
     }
 
     /// Twin service time at virtual time `t`: the class planner's
-    /// expected time for the executing split at the virtual link. A
-    /// brownout is priced as edge-only execution (the real pipeline
-    /// falls back to running the suffix locally).
-    fn service_s(&self, fleet: &Fleet, cloud_up: bool, num_stages: usize) -> Result<f64> {
-        let split = if cloud_up { self.split } else { num_stages };
-        let s = fleet.expected_time_of(self.id, split, self.link)?;
+    /// expected time for the executing route at the virtual link.
+    /// Three-way degrade ladder, mirroring the real pipeline: chain
+    /// classes price the full cut vector while the chain head is up; a
+    /// head-only brownout re-prices as a direct single-hop offload at
+    /// the same edge split (degrade-to-direct against the terminal); a
+    /// full cloud brownout prices edge-only execution (local fallback).
+    fn service_s(
+        &self,
+        fleet: &Fleet,
+        cloud_up: bool,
+        tier_up: bool,
+        num_stages: usize,
+    ) -> Result<f64> {
+        let s = if !cloud_up {
+            fleet.expected_time_of(self.id, num_stages, self.link)?
+        } else if self.chain && tier_up {
+            fleet.chain_expected_time_of(self.id, self.link)?
+        } else {
+            fleet.expected_time_of(self.id, self.split, self.link)?
+        };
         if !(s.is_finite() && s > 0.0) {
             bail!("class '{}': non-positive expected time {s}", self.name);
         }
@@ -218,12 +238,42 @@ pub fn run(spec: &ScenarioSpec, seed_override: Option<u64>) -> Result<ScenarioOu
     );
     let registry = ClassRegistry::from_settings(&settings.link_classes)?;
 
-    // Loopback cloud: a real cloud-stage server on 127.0.0.1 that every
-    // class offloads to, so brownouts exercise the real remote path
-    // (wire protocol, administrative refusal, local fallback).
-    let cloud_handle: Option<ServerHandle> = if spec.loopback_cloud {
+    // Loopback cloud: real cloud-stage servers on 127.0.0.1, so
+    // brownouts exercise the real remote path (wire protocol,
+    // administrative refusal, local fallback). With a [[tier]] chain
+    // configured, one server per tier comes up — each non-terminal
+    // tier forwarding to the next — and the placeholder addrs in the
+    // file are rewritten to the listeners that actually bound, so
+    // tier brownouts exercise the real chain path (forwarded frames,
+    // a fail-fast head, degrade-to-direct against the live terminal).
+    let mut tier_chain = settings.tiers.clone();
+    let mut tier_handles: Vec<ServerHandle> = Vec::new();
+    let cloud_handle: Option<ServerHandle> = if spec.loopback_cloud && tier_chain.is_empty() {
         let engine = InferenceEngine::open_sim(manifest.clone(), "scenario-cloudstage")?;
         Some(Server::new(Arc::new(CloudStageServer::new(engine))).start(0)?)
+    } else if spec.loopback_cloud {
+        // Back to front: the terminal first, then each earlier tier
+        // forwarding to the server that just bound.
+        let mut next_addr: Option<String> = None;
+        for i in (0..tier_chain.len()).rev() {
+            let engine =
+                InferenceEngine::open_sim(manifest.clone(), &format!("scenario-tier{i}"))?;
+            let mut stage = CloudStageServer::new(engine);
+            if let Some(addr) = &next_addr {
+                stage = stage.with_forward(Arc::new(RemoteCloudEngine::new(
+                    RemoteCloudConfig::new(addr.clone()),
+                )));
+            }
+            let handle = Server::new(Arc::new(stage)).start(0)?;
+            next_addr = Some(handle.addr().to_string());
+            tier_handles.push(handle);
+        }
+        // `tier_handles` is terminal-first; walk it backwards to pair
+        // head with head.
+        for (t, h) in tier_chain.iter_mut().zip(tier_handles.iter().rev()) {
+            t.addr = h.addr().to_string();
+        }
+        None
     } else {
         None
     };
@@ -267,9 +317,11 @@ pub fn run(spec: &ScenarioSpec, seed_override: Option<u64>) -> Result<ScenarioOu
             per_request_planning: false,
             probe_fraction: 0.0,
             cloud_addr,
+            tier_chain: tier_chain.clone(),
             wire_encoding: settings.fleet.wire_encoding,
             channel_jitter: 0.0,
             real_time_channel: false,
+            ..FleetConfig::default()
         },
         move |label: &str| {
             Ok((
@@ -300,6 +352,7 @@ pub fn run(spec: &ScenarioSpec, seed_override: Option<u64>) -> Result<ScenarioOu
         let mut source = ImageSource::new(seed.wrapping_add(ci as u64));
         source.set_mix(workload.map(|w| w.class1_fraction).unwrap_or(0.5));
         let split = fleet.plan_of(id)?.split_after;
+        let chain = fleet.chain_cuts_of(id)?.is_some();
         let acfg = fleet.autoscale_of(id)?;
         let interval = acfg
             .as_ref()
@@ -315,6 +368,7 @@ pub fn run(spec: &ScenarioSpec, seed_override: Option<u64>) -> Result<ScenarioOu
             link: LinkModel::try_new(lc.uplink_mbps, lc.rtt_s)?,
             split,
             splits: vec![(0.0, split)],
+            chain,
             twin: vec![0.0; start_shards],
             offered: 0,
             accepted: 0,
@@ -343,6 +397,7 @@ pub fn run(spec: &ScenarioSpec, seed_override: Option<u64>) -> Result<ScenarioOu
     let mut arrivals_rng = Pcg32::new(seed, 1);
     let mut reassign_rng = Pcg32::new(seed, 2);
     let mut cloud_up = true;
+    let mut tier_up = true;
     let mut next_event = 0usize;
     let mut win = WindowAcc::default();
     let mut windows: Vec<Json> = Vec::new();
@@ -356,7 +411,14 @@ pub fn run(spec: &ScenarioSpec, seed_override: Option<u64>) -> Result<ScenarioOu
         // Events due at or before this tick's start.
         while next_event < spec.events.len() && spec.events[next_event].at_s <= t0 + 1e-9 {
             let ev = &spec.events[next_event];
-            apply_event(&ev.kind, ev.at_s, &mut classes, &fleet, &mut cloud_up)?;
+            apply_event(
+                &ev.kind,
+                ev.at_s,
+                &mut classes,
+                &fleet,
+                &mut cloud_up,
+                &mut tier_up,
+            )?;
             next_event += 1;
         }
 
@@ -377,7 +439,7 @@ pub fn run(spec: &ScenarioSpec, seed_override: Option<u64>) -> Result<ScenarioOu
                     Some((to, f)) if reassign_rng.bool(f) => to,
                     _ => ci,
                 };
-                let service = classes[eff].service_s(&fleet, cloud_up, num_stages)?;
+                let service = classes[eff].service_s(&fleet, cloud_up, tier_up, num_stages)?;
                 let c = &mut classes[eff];
                 c.offered += 1;
                 win.offered += 1;
@@ -441,7 +503,7 @@ pub fn run(spec: &ScenarioSpec, seed_override: Option<u64>) -> Result<ScenarioOu
 
         // Scaling decisions due by the end of this tick.
         for c in &mut classes {
-            drive_scaler(c, &fleet, t_end, cloud_up, num_stages)?;
+            drive_scaler(c, &fleet, t_end, cloud_up, tier_up, num_stages)?;
         }
 
         // Window boundary?
@@ -468,6 +530,9 @@ pub fn run(spec: &ScenarioSpec, seed_override: Option<u64>) -> Result<ScenarioOu
 
     let report = fleet.shutdown();
     if let Some(h) = cloud_handle {
+        h.stop();
+    }
+    for h in tier_handles {
         h.stop();
     }
 
@@ -499,6 +564,7 @@ fn apply_event(
     classes: &mut [ClassState],
     fleet: &Fleet,
     cloud_up: &mut bool,
+    tier_up: &mut bool,
 ) -> Result<()> {
     let idx_of = |classes: &[ClassState], name: &str| -> Result<usize> {
         classes
@@ -550,6 +616,14 @@ fn apply_event(
             fleet.set_cloud_available(true);
             *cloud_up = true;
         }
+        EventKind::TierDown => {
+            fleet.set_tier_available(false);
+            *tier_up = false;
+        }
+        EventKind::TierUp => {
+            fleet.set_tier_available(true);
+            *tier_up = true;
+        }
         EventKind::SetExitBias {
             class,
             class1_fraction,
@@ -569,6 +643,7 @@ fn drive_scaler(
     fleet: &Fleet,
     now: f64,
     cloud_up: bool,
+    tier_up: bool,
     num_stages: usize,
 ) -> Result<()> {
     let Some(acfg) = c.acfg.clone() else {
@@ -579,7 +654,7 @@ fn drive_scaler(
     while c.next_sample_t <= now + 1e-9 {
         let t = c.next_sample_t;
         c.next_sample_t += interval;
-        let service = c.service_s(fleet, cloud_up, num_stages)?;
+        let service = c.service_s(fleet, cloud_up, tier_up, num_stages)?;
         c.window.push(LoadSample {
             shards: c.twin.len(),
             depth_total: c.twin_depth(t, service),
@@ -714,6 +789,19 @@ fn evaluate_slo(
             format!("{fallbacks} remote→local fallback(s), {remote} remote completion(s)"),
         );
     }
+    if slo.expect_chain_fallbacks {
+        let degraded: u64 = report
+            .classes
+            .iter()
+            .map(|c| c.aggregate.chain_fallbacks)
+            .sum();
+        let remote: u64 = report.classes.iter().map(|c| c.aggregate.remote_batches).sum();
+        check(
+            "expect_chain_fallbacks",
+            degraded > 0,
+            format!("{degraded} chain→direct degrade(s), {remote} remote completion(s)"),
+        );
+    }
     if slo.expect_budget_denial {
         let denied: u64 = classes.iter().map(|c| c.grow_denied_budget).sum();
         let recorded = report.classes.iter().any(|c| {
@@ -805,6 +893,11 @@ fn emit_json(
     let completed: u64 = classes.iter().map(|c| c.completed).sum();
     let edge_exits: u64 = classes.iter().map(|c| c.edge_exits).sum();
     let fallbacks: u64 = report.classes.iter().map(|c| c.aggregate.remote_fallbacks).sum();
+    let chain_fallbacks: u64 = report
+        .classes
+        .iter()
+        .map(|c| c.aggregate.chain_fallbacks)
+        .sum();
     let mean = if all_lats.is_empty() {
         0.0
     } else {
@@ -828,6 +921,10 @@ fn emit_json(
                 (
                     "remote_fallbacks",
                     Json::num(r.aggregate.remote_fallbacks as f64),
+                ),
+                (
+                    "chain_fallbacks",
+                    Json::num(r.aggregate.chain_fallbacks as f64),
                 ),
                 ("p99_ms", Json::num(ms3(p_or_zero(&c.latencies, 99.0)))),
                 (
@@ -880,6 +977,12 @@ fn emit_json(
                     Json::num(r.planner.estimator_observations as f64),
                 ),
             ];
+            if let Some(cuts) = &r.cuts {
+                fields.push((
+                    "cuts",
+                    Json::arr(cuts.iter().map(|&s| Json::num(s as f64)).collect()),
+                ));
+            }
             if let Some(p) = r.planner.p_hat {
                 fields.push(("p_hat_final", Json::num((p * 1e6).round() / 1e6)));
             }
@@ -924,6 +1027,7 @@ fn emit_json(
                 ("completed", Json::num(completed as f64)),
                 ("edge_exits", Json::num(edge_exits as f64)),
                 ("cloud_fallbacks", Json::num(fallbacks as f64)),
+                ("chain_fallbacks", Json::num(chain_fallbacks as f64)),
                 ("p50_ms", Json::num(ms3(p_or_zero(&all_lats, 50.0)))),
                 ("p99_ms", Json::num(ms3(p_or_zero(&all_lats, 99.0)))),
                 ("mean_ms", Json::num(ms3(mean))),

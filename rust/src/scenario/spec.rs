@@ -103,6 +103,12 @@ pub enum EventKind {
     CloudDown,
     /// End the brownout.
     CloudUp,
+    /// Begin a *chain-head* brownout: only the first `[[tier]]` server
+    /// refuses, so chain-routed classes degrade to a direct single-hop
+    /// offload against the (still up) terminal tier.
+    TierDown,
+    /// End the chain-head brownout.
+    TierUp,
     /// Drift the label mix of a class's workload generator — the lever
     /// that moves the *observed* exit rate under online estimation.
     SetExitBias { class: String, class1_fraction: f64 },
@@ -118,13 +124,15 @@ impl EventKind {
             EventKind::Reassign { .. } => "reassign",
             EventKind::CloudDown => "cloud_down",
             EventKind::CloudUp => "cloud_up",
+            EventKind::TierDown => "tier_down",
+            EventKind::TierUp => "tier_up",
             EventKind::SetExitBias { .. } => "set_exit_bias",
         }
     }
 }
 
-const KNOWN_KINDS: &str =
-    "set_rate, ramp_rate, set_bandwidth, reassign, cloud_down, cloud_up, set_exit_bias";
+const KNOWN_KINDS: &str = "set_rate, ramp_rate, set_bandwidth, reassign, cloud_down, \
+                           cloud_up, tier_down, tier_up, set_exit_bias";
 
 /// `[slo]`: the assertions a finished run is judged by. Everything is
 /// optional; an empty block only checks the built-in ledger invariants.
@@ -145,6 +153,9 @@ pub struct SloSpec {
     /// Require at least one remote→local cloud fallback (brownout
     /// scenarios must actually brown out).
     pub expect_fallbacks: bool,
+    /// Require at least one chain→direct degrade (tier-brownout
+    /// scenarios must actually lose their chain head).
+    pub expect_chain_fallbacks: bool,
     /// Require a grow to have been denied by `fleet.max_total_shards`,
     /// with the denial recorded as a class's `last_trigger`.
     pub expect_budget_denial: bool,
@@ -292,6 +303,8 @@ impl ScenarioSpec {
                 min_completed: opt_u64(t, "min_completed", "[slo]")?,
                 expect_rejections: opt_bool(t, "expect_rejections", "[slo]")?.unwrap_or(false),
                 expect_fallbacks: opt_bool(t, "expect_fallbacks", "[slo]")?.unwrap_or(false),
+                expect_chain_fallbacks: opt_bool(t, "expect_chain_fallbacks", "[slo]")?
+                    .unwrap_or(false),
                 expect_budget_denial: opt_bool(t, "expect_budget_denial", "[slo]")?
                     .unwrap_or(false),
                 expect_max_shards_reached: opt_str(t, "expect_max_shards_reached", "[slo]")?,
@@ -393,6 +406,22 @@ impl ScenarioSpec {
                 bail!("{at}: duplicate workload for class '{}'", w.class);
             }
         }
+        if !self.settings.tiers.is_empty() {
+            if !self.loopback_cloud {
+                bail!(
+                    "a scenario with a [[tier]] chain needs [scenario] \
+                     loopback_cloud = true — the harness stands up one loopback \
+                     server per tier and rewrites the placeholder addrs to them"
+                );
+            }
+            if self.settings.fleet.online_estimation {
+                bail!(
+                    "a [[tier]] chain is incompatible with [fleet] \
+                     online_estimation = true (chain cut vectors are solved once \
+                     at startup; estimation re-solves the two-tier split)"
+                );
+            }
+        }
         self.validate_events()?;
         self.validate_slo()
     }
@@ -401,6 +430,8 @@ impl ScenarioSpec {
         let mut prev_at = 0.0f64;
         // Some(t) while a brownout opened at `t` is still unclosed.
         let mut down_since: Option<f64> = None;
+        // Same, for the chain-head brownout window.
+        let mut tier_down_since: Option<f64> = None;
         for (i, ev) in self.events.iter().enumerate() {
             let at = format!("event[{i}] ({})", ev.kind.name());
             if !(ev.at_s.is_finite() && ev.at_s >= 0.0 && ev.at_s <= self.duration_s) {
@@ -479,6 +510,33 @@ impl ScenarioSpec {
                         bail!("{at}: cloud_up without a preceding cloud_down — the cloud is up");
                     }
                 }
+                EventKind::TierDown => {
+                    if self.settings.tiers.len() < 2 {
+                        bail!(
+                            "{at}: tier_down requires a [[tier]] chain (at least 2 \
+                             entries) — without one there is no chain head to lose"
+                        );
+                    }
+                    if let Some(since) = tier_down_since {
+                        bail!(
+                            "{at}: overlapping tier-brownout windows — the chain head is \
+                             already down since the tier_down at {since} s (close it \
+                             with tier_up first)"
+                        );
+                    }
+                    tier_down_since = Some(ev.at_s);
+                }
+                EventKind::TierUp => {
+                    if self.settings.tiers.len() < 2 {
+                        bail!("{at}: tier_up requires a [[tier]] chain (at least 2 entries)");
+                    }
+                    if tier_down_since.take().is_none() {
+                        bail!(
+                            "{at}: tier_up without a preceding tier_down — the chain \
+                             head is up"
+                        );
+                    }
+                }
                 EventKind::SetExitBias {
                     class,
                     class1_fraction,
@@ -534,6 +592,12 @@ impl ScenarioSpec {
                  an in-process cloud has no remote path to fall back from"
             );
         }
+        if s.expect_chain_fallbacks && self.settings.tiers.len() < 2 {
+            bail!(
+                "[slo]: expect_chain_fallbacks needs a [[tier]] chain (at least 2 \
+                 entries) — a two-tier fleet has no chain to degrade from"
+            );
+        }
         if s.min_estimator_observations.is_some() && !self.settings.fleet.online_estimation {
             bail!(
                 "[slo]: min_estimator_observations needs [fleet] online_estimation = true"
@@ -568,6 +632,8 @@ fn parse_event(i: usize, t: &Json) -> Result<Event> {
         },
         "cloud_down" => EventKind::CloudDown,
         "cloud_up" => EventKind::CloudUp,
+        "tier_down" => EventKind::TierDown,
+        "tier_up" => EventKind::TierUp,
         "set_exit_bias" => EventKind::SetExitBias {
             class: req_str(t, "class", &at)?,
             class1_fraction: req_f64(t, "class1_fraction", &at)?,

@@ -22,8 +22,22 @@
 //! gives you the wire front-end, and plain `INFER` frames still work
 //! (served as full cloud-only inference — a partial cut at `split = 0`
 //! in one hop).
+//!
+//! **Chain forwarding.** With [`CloudStageServer::with_forward`] the
+//! server becomes a *middle tier* of a K-tier partition chain: an
+//! INFER_CHAIN_SEQ frame carrying cuts `[c0, c1, ...]` makes it run
+//! stages `c0+1..=c1` (zero stages for a pass-through `c0 == c1`) and
+//! ship the remainder onward through its own pooled
+//! [`RemoteCloudEngine`] — the same pipelining, backoff, and breaker
+//! machinery the edge uses. The reply's `cloud_s` is this tier's wall
+//! time (own compute + the whole downstream round-trip), so the
+//! caller's measured transfer stays its *own* hop's wire time only.
+//! Without a forward engine, chain frames with a genuine tail are
+//! rejected; single-cut frames (and tails ending at this tier) are
+//! served as ordinary partials.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -34,14 +48,22 @@ use crate::network::encoding::WireEncoding;
 use crate::runtime::{HostTensor, InferenceEngine};
 
 use super::protocol::{BRANCH_GATED, PartialSample};
+use super::remote::RemoteCloudEngine;
 use super::tcp::{PartialOutput, ServeBackend};
 
 /// A wire-facing backend that executes only the cloud suffix of the
 /// partition. See the [module docs](self) for the contract.
 pub struct CloudStageServer {
     engine: InferenceEngine,
+    /// Next tier of the partition chain, if this server is a middle
+    /// tier (`--forward-addr`). `None` = terminal server: chain frames
+    /// with a genuine tail are rejected.
+    forward: Option<Arc<RemoteCloudEngine>>,
     /// Partial batches served, indexed by the split they were cut at
     /// (`0..N-1`; a cut at `N` is edge-only and never transfers).
+    /// Chain batches count at their *incoming* cut `cuts[0]` — the
+    /// loopback tests key on this to prove per-hop transfers happen
+    /// exactly at the planned cuts.
     splits_served: Vec<AtomicU64>,
     partial_batches: AtomicU64,
     partial_samples: AtomicU64,
@@ -49,6 +71,12 @@ pub struct CloudStageServer {
     gated_batches: AtomicU64,
     /// Full (non-partial) INFER requests served.
     full_infers: AtomicU64,
+    /// Multi-cut INFER_CHAIN_SEQ batches served (runs this tier's
+    /// segment and forwards the tail).
+    chain_batches: AtomicU64,
+    /// Batches handed to the next-tier engine (`>= chain_batches`;
+    /// the excess are downstream failures).
+    forwarded_batches: AtomicU64,
     /// Rejected partial requests (bad split, empty batch, engine error).
     errors: AtomicU64,
     /// Partial batches served per wire encoding, indexed raw/q8/q4 —
@@ -68,10 +96,13 @@ impl CloudStageServer {
         CloudStageServer {
             splits_served: (0..n).map(|_| AtomicU64::new(0)).collect(),
             engine,
+            forward: None,
             partial_batches: AtomicU64::new(0),
             partial_samples: AtomicU64::new(0),
             gated_batches: AtomicU64::new(0),
             full_infers: AtomicU64::new(0),
+            chain_batches: AtomicU64::new(0),
+            forwarded_batches: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             enc_served: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
             bytes_received: AtomicU64::new(0),
@@ -81,8 +112,28 @@ impl CloudStageServer {
         }
     }
 
+    /// Make this server a middle tier: multi-cut chain frames run
+    /// their segment here and forward the tail through `forward`.
+    pub fn with_forward(mut self, forward: Arc<RemoteCloudEngine>) -> CloudStageServer {
+        self.forward = Some(forward);
+        self
+    }
+
     pub fn engine(&self) -> &InferenceEngine {
         &self.engine
+    }
+
+    /// The next-tier engine, if this is a forwarding middle tier.
+    pub fn forward_engine(&self) -> Option<&Arc<RemoteCloudEngine>> {
+        self.forward.as_ref()
+    }
+
+    /// (chain_batches, forwarded_batches).
+    pub fn chain_counters(&self) -> (u64, u64) {
+        (
+            self.chain_batches.load(Ordering::Relaxed),
+            self.forwarded_batches.load(Ordering::Relaxed),
+        )
     }
 
     /// Per-split partial-batch counts: `counts[s]` is how many batches
@@ -173,6 +224,89 @@ impl CloudStageServer {
         self.engine
             .run_suffix_classes(from, activation, activation.batch())
     }
+
+    /// The fallible middle-tier body of [`ServeBackend::serve_chain`]:
+    /// run stages `cuts[0]+1..=cuts[1]` (zero stages for a pass-through
+    /// `cuts[0] == cuts[1]`) and forward the tail `cuts[1..]` to the
+    /// next tier. Only called with a genuine tail (`cuts.len() >= 2`
+    /// and `cuts[1] < N` — the terminal cases delegate to the partial
+    /// path before reaching here).
+    fn chain(
+        &self,
+        cuts: &[u32],
+        branch_state: u8,
+        activation: &HostTensor,
+    ) -> Result<PartialOutput> {
+        let num_stages = self.engine.manifest().num_stages();
+        if cuts.windows(2).any(|pair| pair[0] > pair[1]) {
+            bail!("chain cuts {cuts:?} are not non-decreasing");
+        }
+        let from = cuts[0] as usize;
+        let to = cuts[1] as usize;
+        debug_assert!(from <= to && to < num_stages);
+        let Some(forward) = &self.forward else {
+            bail!(
+                "this server is a terminal tier (no --forward-addr) but received a \
+                 {}-cut chain frame; point the edge's chain at a forwarding tier",
+                cuts.len()
+            );
+        };
+        let n = activation.batch();
+        if n == 0 {
+            bail!("empty INFER_CHAIN_SEQ batch");
+        }
+        let t0 = Instant::now();
+        // This tier's segment. A pass-through relays the activation
+        // exactly as received — zero stages, bit-identical payload.
+        let ran;
+        let acts = if from == to {
+            activation
+        } else {
+            ran = self.engine.run_segment_acts(from + 1, to, activation, n)?;
+            &ran
+        };
+        self.forwarded_batches.fetch_add(1, Ordering::Relaxed);
+        let down = forward.infer_chain(&cuts[1..], branch_state, acts)?;
+        if down.samples.len() != n {
+            bail!(
+                "downstream tier answered {} samples for a batch of {n}",
+                down.samples.len()
+            );
+        }
+        // Wall time here covers own compute plus the entire downstream
+        // round-trip, so the caller's measured transfer is its own
+        // hop's wire time only.
+        let cloud_s = t0.elapsed().as_secs_f64();
+        self.chain_batches.fetch_add(1, Ordering::Relaxed);
+        self.partial_samples.fetch_add(n as u64, Ordering::Relaxed);
+        self.splits_served[from].fetch_add(1, Ordering::Relaxed);
+        if branch_state == BRANCH_GATED {
+            self.gated_batches.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(PartialOutput {
+            samples: down.samples,
+            cloud_s,
+        })
+    }
+
+    /// Shared outcome bookkeeping for the wire-facing entry points:
+    /// served batches count under their wire encoding, rejections
+    /// under `errors`.
+    fn note_served(&self, encoding: WireEncoding, result: &Result<PartialOutput>) {
+        match result {
+            Ok(_) => {
+                let idx = match encoding {
+                    WireEncoding::Raw => 0,
+                    WireEncoding::Q8 => 1,
+                    WireEncoding::Q4 => 2,
+                };
+                self.enc_served[idx].fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
 }
 
 impl ServeBackend for CloudStageServer {
@@ -213,19 +347,35 @@ impl ServeBackend for CloudStageServer {
         activation: HostTensor,
     ) -> Result<PartialOutput> {
         let result = self.partial(split, branch_state, &activation);
-        match &result {
-            Ok(_) => {
-                let idx = match encoding {
-                    WireEncoding::Raw => 0,
-                    WireEncoding::Q8 => 1,
-                    WireEncoding::Q4 => 2,
-                };
-                self.enc_served[idx].fetch_add(1, Ordering::Relaxed);
-            }
-            Err(_) => {
-                self.errors.fetch_add(1, Ordering::Relaxed);
-            }
+        self.note_served(encoding, &result);
+        result
+    }
+
+    fn serve_chain(
+        &self,
+        cuts: &[u32],
+        branch_state: u8,
+        encoding: WireEncoding,
+        activation: HostTensor,
+    ) -> Result<PartialOutput> {
+        if cuts.is_empty() {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+            bail!("INFER_CHAIN_SEQ with no cuts");
         }
+        // Terminal cases — a single cut, or a tail whose next cut
+        // already covers the whole model (nothing left downstream) —
+        // are ordinary partials: run `cuts[0]+1..=N` here and answer.
+        let num_stages = self.engine.manifest().num_stages();
+        if cuts.len() == 1 || cuts[1] as usize >= num_stages {
+            return self.serve_partial_encoded(
+                cuts[0] as usize,
+                branch_state,
+                encoding,
+                activation,
+            );
+        }
+        let result = self.chain(cuts, branch_state, &activation);
+        self.note_served(encoding, &result);
         result
     }
 
@@ -236,6 +386,7 @@ impl ServeBackend for CloudStageServer {
 
     fn metrics_json(&self) -> String {
         let (batches, samples, gated, full, errors) = self.counters();
+        let (chain, forwarded) = self.chain_counters();
         let splits = self
             .splits_served()
             .iter()
@@ -246,7 +397,9 @@ impl ServeBackend for CloudStageServer {
         let (rx, tx) = self.bytes_io();
         format!(
             "{{\"partial_batches\":{batches},\"partial_samples\":{samples},\
-             \"gated_batches\":{gated},\"full_infers\":{full},\"errors\":{errors},\
+             \"gated_batches\":{gated},\"full_infers\":{full},\
+             \"chain_batches\":{chain},\"forwarded_batches\":{forwarded},\
+             \"errors\":{errors},\
              \"splits_served\":[{splits}],\
              \"served_by_encoding\":{{\"raw\":{enc_raw},\"q8\":{enc_q8},\"q4\":{enc_q4}}},\
              \"bytes_received\":{rx},\"bytes_sent\":{tx},\"uptime_s\":{:.3}}}",
@@ -342,6 +495,103 @@ mod tests {
         assert!(json.contains("\"served_by_encoding\":{\"raw\":1,\"q8\":2,\"q4\":1}"));
         assert!(json.contains("\"bytes_received\":1024"));
         assert!(json.contains("\"bytes_sent\":258"));
+    }
+
+    /// A live terminal tier behind a real listener, plus a middle tier
+    /// whose forward engine points at it. Both engines share the same
+    /// synthetic manifest (same name → same deterministic weights), so
+    /// segment composition across the two servers must match one full
+    /// run on either engine.
+    fn forwarding_pair() -> (
+        crate::server::tcp::ServerHandle,
+        Arc<CloudStageServer>,
+        CloudStageServer,
+    ) {
+        use crate::server::remote::RemoteCloudConfig;
+        use crate::server::tcp::Server;
+        let terminal = Arc::new(server());
+        let handle = Server::new(terminal.clone()).start(0).unwrap();
+        let forward = Arc::new(RemoteCloudEngine::new(RemoteCloudConfig::new(
+            handle.addr().to_string(),
+        )));
+        let middle = server().with_forward(forward);
+        (handle, terminal, middle)
+    }
+
+    #[test]
+    fn middle_tier_runs_its_segment_and_forwards_the_tail() {
+        let (handle, terminal, middle) = forwarding_pair();
+        let input = HostTensor::new(
+            vec![2, 4],
+            vec![0.1, -0.2, 0.3, 0.4, 1.0, 0.0, -1.0, 0.5],
+        )
+        .unwrap();
+        // The edge cut after stage 1; the middle runs 2..=2, the
+        // terminal runs 3..=3.
+        let acts = middle.engine().run_stages(1, 1, &input).unwrap();
+        let out = middle
+            .serve_chain(&[1, 2], BRANCH_GATED, WireEncoding::Raw, acts.clone())
+            .unwrap();
+        assert_eq!(out.samples.len(), 2);
+
+        // Oracle: the suffix 2..=3 in one go.
+        let full = middle.engine().run_stages(2, 3, &acts).unwrap();
+        let want = InferenceEngine::argmax_classes(&full);
+        for (s, w) in out.samples.iter().zip(&want) {
+            assert_eq!(s.class as usize, *w);
+        }
+
+        // Per-hop accounting: the middle observed the frame at cut 1,
+        // the terminal at cut 2 — and nowhere else.
+        assert_eq!(middle.chain_counters(), (1, 1));
+        assert_eq!(middle.splits_served(), vec![0, 1, 0]);
+        assert_eq!(terminal.splits_served(), vec![0, 0, 1]);
+        let (term_batches, ..) = terminal.counters();
+        assert_eq!(term_batches, 1);
+        handle.stop();
+    }
+
+    #[test]
+    fn pass_through_middle_relays_the_activation_untouched() {
+        let (handle, terminal, middle) = forwarding_pair();
+        let acts = HostTensor::new(vec![1, 16], (0..16).map(|i| i as f32 * 0.25 - 2.0).collect())
+            .unwrap();
+        // cuts [1, 1]: zero stages here, the terminal does all the work.
+        let via_chain = middle
+            .serve_chain(&[1, 1], BRANCH_GATED, WireEncoding::Raw, acts.clone())
+            .unwrap();
+        // Oracle: the same activation served directly as a partial.
+        let direct = terminal.serve_partial(1, BRANCH_GATED, acts).unwrap();
+        assert_eq!(via_chain.samples.len(), 1);
+        assert_eq!(via_chain.samples[0].class, direct.samples[0].class);
+        assert_eq!(middle.chain_counters(), (1, 1));
+        assert_eq!(middle.splits_served(), vec![0, 1, 0]);
+        assert_eq!(terminal.splits_served(), vec![0, 2, 0]);
+        handle.stop();
+    }
+
+    #[test]
+    fn chain_tails_are_rejected_without_a_forward_engine() {
+        let srv = server();
+        let acts = HostTensor::zeros(vec![1, 16]);
+        let err = srv
+            .serve_chain(&[1, 2], BRANCH_GATED, WireEncoding::Raw, acts.clone())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("terminal tier"), "{err}");
+        // Non-monotone cuts are rejected even with the right shape.
+        let (handle, _terminal, middle) = forwarding_pair();
+        assert!(middle
+            .serve_chain(&[2, 1, 2], BRANCH_GATED, WireEncoding::Raw, acts.clone())
+            .is_err());
+        // A single-cut chain frame is an ordinary partial.
+        let out = srv
+            .serve_chain(&[1], BRANCH_GATED, WireEncoding::Raw, acts)
+            .unwrap();
+        assert_eq!(out.samples.len(), 1);
+        assert_eq!(srv.chain_counters(), (0, 0), "no forwarding happened");
+        assert_eq!(srv.splits_served(), vec![0, 1, 0]);
+        handle.stop();
     }
 
     #[test]

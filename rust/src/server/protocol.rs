@@ -28,8 +28,18 @@
 //!                          connection and match answers out of lockstep;
 //!                          the activation payload carries a one-byte
 //!                          encoding tag for quantized transfer)
+//!   kind 6 INFER_CHAIN_SEQ — u32 seq | u32 ncuts | u32 cuts[ncuts] |
+//!                          u8 branch_state | encoded tensor (below)
+//!                          (forwardable kind 5 for K-tier chains: the
+//!                          activation was cut after stage cuts[0]; the
+//!                          receiving server runs cuts[0]+1..=cuts[1] and
+//!                          forwards the remainder with cuts[1..], or —
+//!                          when ncuts == 1 — runs cuts[0]+1..=N and
+//!                          answers like kind 5. cuts must be
+//!                          non-decreasing, ncuts in 1..=16; answered by
+//!                          PARTIAL_RESULT_SEQ/ERROR_SEQ like kind 5)
 //!
-//! Encoded tensor (kind 5 payloads): u8 encoding | u32 ndims |
+//! Encoded tensor (kind 5/6 payloads): u8 encoding | u32 ndims |
 //! u32 dims[ndims] | payload, where payload is
 //!   encoding 0 raw — f32 data[n]                        (bit-exact)
 //!   encoding 1 q8  — f32 scale | f32 zero | u8 q[n]
@@ -94,6 +104,11 @@ pub const BRANCH_GATED: u8 = 1;
 /// approaches this; rejects hostile lengths before allocation).
 const MAX_PARTIAL_SAMPLES: usize = 65_536;
 
+/// Sanity cap on the cut count of an INFER_CHAIN_SEQ frame — a real
+/// chain has a handful of tiers; rejects hostile counts before
+/// allocation.
+pub const MAX_CHAIN_TIERS: usize = 16;
+
 /// Encoded-tensor tag bytes (kind-5 activation payloads).
 pub const ENC_RAW: u8 = 0;
 pub const ENC_Q8: u8 = 1;
@@ -142,6 +157,21 @@ pub enum Request {
     InferPartialSeq {
         seq: u32,
         split: u32,
+        branch_state: u8,
+        encoding: WireEncoding,
+        activation: HostTensor,
+    },
+    /// Forwardable chain inference ([`Request::InferPartialSeq`] for a
+    /// K-tier chain): the activation was cut after stage `cuts[0]`; the
+    /// receiving tier runs `cuts[0]+1..=cuts[1]` and forwards onward
+    /// with `cuts[1..]`, or — when only one cut remains — runs
+    /// `cuts[0]+1..=N` and answers exactly like kind 5. `cuts` is
+    /// non-decreasing with 1..=[`MAX_CHAIN_TIERS`] entries; a
+    /// pass-through tier (`cuts[0] == cuts[1]`) runs nothing and
+    /// forwards the activation as received.
+    InferChainSeq {
+        seq: u32,
+        cuts: Vec<u32>,
         branch_state: u8,
         encoding: WireEncoding,
         activation: HostTensor,
@@ -490,6 +520,29 @@ pub fn encode_infer_partial_seq(
     b
 }
 
+/// Encode an INFER_CHAIN_SEQ request body straight from a borrowed
+/// tensor — the forwarding hot path, same no-clone contract as
+/// [`encode_infer_partial_seq`]; `Request::encode` delegates here so
+/// the two can't drift. `cuts` carries the cut the activation sits at
+/// plus every remaining downstream cut.
+pub fn encode_infer_chain_seq(
+    seq: u32,
+    cuts: &[u32],
+    branch_state: u8,
+    encoding: WireEncoding,
+    activation: &HostTensor,
+) -> Vec<u8> {
+    let mut b = vec![6u8];
+    put_u32(&mut b, seq);
+    put_u32(&mut b, cuts.len() as u32);
+    for &c in cuts {
+        put_u32(&mut b, c);
+    }
+    b.push(branch_state);
+    put_tensor_encoded(&mut b, activation, encoding);
+    b
+}
+
 /// Shared body of PARTIAL_RESULT (kind 3) and PARTIAL_RESULT_SEQ
 /// (kind 4, after the seq): `u32 n | n records | f64 cloud_s`.
 fn put_partial_body(b: &mut Vec<u8>, samples: &[PartialSample], cloud_s: f64) {
@@ -569,6 +622,15 @@ impl Request {
                     activation,
                 );
             }
+            Request::InferChainSeq {
+                seq,
+                cuts,
+                branch_state,
+                encoding,
+                activation,
+            } => {
+                return encode_infer_chain_seq(*seq, cuts, *branch_state, *encoding, activation);
+            }
         }
         b
     }
@@ -617,6 +679,43 @@ impl Request {
                 Ok(Request::InferPartialSeq {
                     seq,
                     split,
+                    branch_state,
+                    encoding,
+                    activation,
+                })
+            }
+            6 => {
+                if rest.len() < 8 {
+                    bail!("truncated INFER_CHAIN_SEQ header");
+                }
+                let seq = u32::from_le_bytes(rest[0..4].try_into().unwrap());
+                let ncuts = u32::from_le_bytes(rest[4..8].try_into().unwrap()) as usize;
+                if ncuts == 0 {
+                    bail!("INFER_CHAIN_SEQ with no cuts");
+                }
+                if ncuts > MAX_CHAIN_TIERS {
+                    bail!("INFER_CHAIN_SEQ cut count {ncuts} exceeds cap");
+                }
+                if rest.len() < 8 + ncuts * 4 + 1 {
+                    bail!("truncated INFER_CHAIN_SEQ cuts");
+                }
+                let cuts: Vec<u32> = rest[8..8 + ncuts * 4]
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                for pair in cuts.windows(2) {
+                    if pair[0] > pair[1] {
+                        bail!("INFER_CHAIN_SEQ cuts {cuts:?} are not non-decreasing");
+                    }
+                }
+                let branch_state = rest[8 + ncuts * 4];
+                if branch_state > BRANCH_GATED {
+                    bail!("invalid branch_state {branch_state}");
+                }
+                let (activation, encoding) = take_tensor_encoded(&rest[8 + ncuts * 4 + 1..])?;
+                Ok(Request::InferChainSeq {
+                    seq,
+                    cuts,
                     branch_state,
                     encoding,
                     activation,

@@ -58,7 +58,8 @@ use crate::network::encoding::WireEncoding;
 use crate::runtime::HostTensor;
 
 use super::protocol::{
-    encode_infer_partial_seq, read_frame, write_frame, Request, Response,
+    encode_infer_chain_seq, encode_infer_partial_seq, read_frame, write_frame, Request,
+    Response,
 };
 use super::tcp::PartialOutput;
 
@@ -316,6 +317,39 @@ impl RemoteCloudEngine {
         branch_state: u8,
         activation: &HostTensor,
     ) -> Result<PartialOutput> {
+        self.dispatch(|seq, enc| {
+            encode_infer_partial_seq(seq, split as u32, branch_state, enc, activation)
+        })
+    }
+
+    /// Ship one chain frame: the server runs its own segment
+    /// (`cuts[0]+1..=cuts[1]`, or the full suffix for a single cut) and
+    /// forwards the remainder down the chain, so the reply's `cloud_s`
+    /// covers every downstream tier. Same pooling, pipelining, backoff,
+    /// and breaker behaviour as [`RemoteCloudEngine::infer_partial`] —
+    /// the frames share the seq space and the response kinds.
+    pub fn infer_chain(
+        &self,
+        cuts: &[u32],
+        branch_state: u8,
+        activation: &HostTensor,
+    ) -> Result<PartialOutput> {
+        self.dispatch(|seq, enc| {
+            encode_infer_chain_seq(seq, cuts, branch_state, enc, activation)
+        })
+    }
+
+    /// The shared seq-frame machinery behind both inference entry
+    /// points: availability/backoff/saturation gates, checkout, and the
+    /// stale-retry loop. `build` encodes the frame for a given seq —
+    /// encoded once, straight from the borrowed tensor (quantized per
+    /// the configured encoding, no owned Request, no activation clone
+    /// on the hot path); the same body (same seq) is reused on a stale
+    /// retry since the fresh connection has an empty pending map.
+    fn dispatch(
+        &self,
+        build: impl FnOnce(u32, WireEncoding) -> Vec<u8>,
+    ) -> Result<PartialOutput> {
         if !self.is_available() {
             // Before any counter or backoff bookkeeping: an
             // administrative outage is scripted, not observed, and must
@@ -342,18 +376,8 @@ impl RemoteCloudEngine {
         }
         let _slot = InflightGuard(&self.inflight);
 
-        // Encoded once, straight from the borrowed tensor — quantized
-        // per the configured encoding, no owned Request, no activation
-        // clone on the hot path. The same body (same seq) is reused on
-        // a stale retry: the fresh connection has an empty pending map.
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
-        let body = encode_infer_partial_seq(
-            seq,
-            split as u32,
-            branch_state,
-            self.cfg.encoding,
-            activation,
-        );
+        let body = build(seq, self.cfg.encoding);
 
         let (mut conn, mut pooled) = match self.checkout() {
             Ok(c) => c,

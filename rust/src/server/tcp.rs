@@ -199,6 +199,28 @@ pub trait ServeBackend: Send + Sync + 'static {
         self.serve_partial(split, branch_state, activation)
     }
 
+    /// Serve one forwardable INFER_CHAIN_SEQ batch: run stages
+    /// `cuts[0]+1..=cuts[1]` and ship the remainder onward (or, with a
+    /// single cut, run `cuts[0]+1..=N` like
+    /// [`ServeBackend::serve_partial_encoded`]). Only cloud-stage
+    /// backends with a forward engine implement the multi-cut form;
+    /// everything else keeps the default, which serves the single-cut
+    /// degenerate case and errors on a genuine chain.
+    fn serve_chain(
+        &self,
+        cuts: &[u32],
+        branch_state: u8,
+        encoding: WireEncoding,
+        activation: HostTensor,
+    ) -> Result<PartialOutput> {
+        match cuts {
+            [split] => self.serve_partial_encoded(*split as usize, branch_state, encoding, activation),
+            _ => anyhow::bail!(
+                "this backend does not forward chain inference (no --forward-addr)"
+            ),
+        }
+    }
+
     /// Byte accounting hook: called by the connection loop with the
     /// framed request/response sizes (header included) after each
     /// exchange. Default: not counted.
@@ -513,6 +535,25 @@ pub(super) fn respond_sync(backend: &impl ServeBackend, req: Request) -> Respons
                 message: format!("{e:#}"),
             },
         },
+        // Chain frames answer with the same seq-scoped responses as
+        // kind 5, so a pooled client needs no new reader logic.
+        Request::InferChainSeq {
+            seq,
+            cuts,
+            branch_state,
+            encoding,
+            activation,
+        } => match backend.serve_chain(&cuts, branch_state, encoding, activation) {
+            Ok(out) => Response::PartialResultSeq {
+                seq,
+                samples: out.samples,
+                cloud_s: out.cloud_s,
+            },
+            Err(e) => Response::ErrorSeq {
+                seq,
+                message: format!("{e:#}"),
+            },
+        },
     }
 }
 
@@ -626,6 +667,27 @@ impl Client {
         self.call(&Request::InferPartialSeq {
             seq,
             split,
+            branch_state,
+            encoding,
+            activation,
+        })
+    }
+
+    /// Chain inference against a forwarding cloud-stage server: the
+    /// activation sits at `cuts[0]`; the server runs its segment and
+    /// forwards the rest down the chain. Lockstep like
+    /// [`Client::infer_partial_seq`].
+    pub fn infer_chain_seq(
+        &mut self,
+        seq: u32,
+        cuts: Vec<u32>,
+        branch_state: u8,
+        encoding: WireEncoding,
+        activation: HostTensor,
+    ) -> Result<Response> {
+        self.call(&Request::InferChainSeq {
+            seq,
+            cuts,
             branch_state,
             encoding,
             activation,

@@ -1,0 +1,473 @@
+//! Exhaustive cut-vector oracle for the K-tier chain planner
+//! (`Planner::plan_chain`): on nets small enough to brute-force, the
+//! solved chain must be **bit-identical** to the argmin over *every*
+//! monotone cut vector, where each vector is priced independently fresh
+//! in this file — survival chain, edge-cost fold, cloud suffix and
+//! encoded alpha table all rebuilt from the public desc/profile
+//! primitives, sharing nothing with the planner's core.
+//!
+//! The oracle replicates the chain's documented tie rule and nothing
+//! else: the decision value carries `+epsilon` exactly when the first
+//! cut transfers something (`cuts[0] < N`), vectors are enumerated in
+//! lexicographic ascending order, and `<=` selection makes the *last*
+//! minimizer win — so exact ties resolve toward the lexicographically
+//! largest cut vector, the direction the layered DP resolves each of
+//! its per-level scans. The grids include the degenerate corners the
+//! link model clamps — dead 0 Mbps hops, infinite RTT — plus zero-cost
+//! (free relay) middle tiers and exit probabilities at exactly 0 and 1.
+//!
+//! Two cross-checks ground the oracle itself: its K = 2 pricing must be
+//! bit-identical to the standalone `Estimator` (the crate's independent
+//! 2-tier cost model), and every enumerated vector's fresh price must
+//! agree bit-for-bit with `Planner::chain_expected_time` — the
+//! canonical pricing the DP minimizes.
+
+use branchyserve::model::{synthetic, BranchDesc, BranchyNetDesc};
+use branchyserve::network::bandwidth::LinkModel;
+use branchyserve::network::encoding::WireEncoding;
+use branchyserve::planner::{ChainPlan, Planner, TierChain};
+use branchyserve::testing::property;
+use branchyserve::timing::{DelayProfile, Estimator};
+
+const EPS: f64 = 1e-9;
+
+/// Degenerate corners included in every hop grid: a dead uplink
+/// (clamped to the model's 1e-3 Mbps floor), a starved 3G-ish link, the
+/// paper's profiles, and an effectively infinite pipe.
+const BANDWIDTHS_MBPS: [f64; 6] = [0.0, 1e-3, 0.5, 1.10, 18.80, 1e5];
+/// RTT corners, including an infinite RTT (clamped by the link model).
+const RTTS_S: [f64; 5] = [0.0, 0.005, 0.1, 60.0, f64::INFINITY];
+
+/// The chain cost model rebuilt from scratch out of the public
+/// desc/profile fields — the oracle's own tables. The folds follow the
+/// planner's *documented* recurrences (module docs of `planner` and
+/// `planner::chain`), not its code: survival chain, then the
+/// survival-weighted edge prefix, then (serving mode) the
+/// branch-evaluation terms folded after, then the back-to-front cloud
+/// suffix and the encoding-mapped alpha table.
+struct Tables {
+    n: usize,
+    /// A(s): survival-weighted edge compute through stage s.
+    edge_cost: Vec<f64>,
+    /// S(s): survival probability at a cut after stage s.
+    surv: Vec<f64>,
+    /// C(s): cloud time of stages s+1..=N.
+    cloud_suffix: Vec<f64>,
+    /// alpha_s under the wire encoding, for cuts 0..N.
+    alpha_bytes: Vec<u64>,
+}
+
+fn tables(
+    desc: &BranchyNetDesc,
+    profile: &DelayProfile,
+    encoding: WireEncoding,
+    paper_mode: bool,
+) -> Tables {
+    let n = desc.num_stages();
+    let mut branches: Vec<(usize, f64)> = desc
+        .branches
+        .iter()
+        .map(|b| (b.after_stage, b.exit_prob))
+        .collect();
+    branches.sort_by_key(|&(pos, _)| pos);
+
+    // survival[j] = P[not exited at any of the first j branches].
+    let mut survival = vec![1.0f64];
+    for &(_, p) in &branches {
+        let last = *survival.last().unwrap();
+        survival.push(last * (1.0 - p));
+    }
+    // Branches *active* at split s: position strictly before s.
+    let active_at: Vec<usize> = (0..=n)
+        .map(|s| branches.iter().filter(|&&(pos, _)| pos < s).count())
+        .collect();
+
+    let mut edge_cost = vec![0.0f64; n + 1];
+    for i in 1..=n {
+        edge_cost[i] = edge_cost[i - 1] + survival[active_at[i]] * profile.t_edge[i - 1];
+    }
+    if !paper_mode {
+        for s in 0..=n {
+            let mut t = edge_cost[s];
+            for &reach in &survival[..active_at[s]] {
+                t += reach * profile.branch_t_edge;
+            }
+            edge_cost[s] = t;
+        }
+    }
+    let surv: Vec<f64> = (0..=n).map(|s| survival[active_at[s]]).collect();
+
+    let mut cloud_suffix = vec![0.0f64; n + 1];
+    for i in (0..n).rev() {
+        cloud_suffix[i] = cloud_suffix[i + 1] + profile.t_cloud[i];
+    }
+    let alpha_bytes: Vec<u64> = (0..n).map(|s| desc.transfer_wire_bytes(s, encoding)).collect();
+
+    Tables {
+        n,
+        edge_cost,
+        surv,
+        cloud_suffix,
+        alpha_bytes,
+    }
+}
+
+/// The documented right fold for tiers `k..`: `scale·(C(from) − C(to))
+/// + [to < N]·(hop_k(to) + rest)`.
+fn tail_cost(t: &Tables, chain: &TierChain, cuts: &[usize], k: usize, from: usize) -> f64 {
+    let kmax = cuts.len();
+    let to = if k < kmax { cuts[k] } else { t.n };
+    let seg = chain.compute_scale[k - 1] * (t.cloud_suffix[from] - t.cloud_suffix[to]);
+    if k < kmax && to < t.n {
+        seg + (chain.links[k].transfer_time(t.alpha_bytes[to])
+            + tail_cost(t, chain, cuts, k + 1, to))
+    } else {
+        seg
+    }
+}
+
+/// `E[T(cuts)]` from the oracle's own tables: `A(c0) + S(c0)·(hop_0(c0)
+/// + tail)`, survival factored out of everything past hop 0 because
+/// branch gates only ever run on the edge.
+fn price(t: &Tables, chain: &TierChain, cuts: &[usize]) -> f64 {
+    let c0 = cuts[0];
+    let mut out = t.edge_cost[c0];
+    if c0 < t.n {
+        let surv = t.surv[c0];
+        if surv > 0.0 {
+            out += surv
+                * (chain.links[0].transfer_time(t.alpha_bytes[c0])
+                    + tail_cost(t, chain, cuts, 1, c0));
+        }
+    }
+    out
+}
+
+/// Every non-decreasing vector of `k` cuts over `0..=n`, visited in
+/// lexicographic ascending order.
+fn for_each_monotone(n: usize, k: usize, prefix: &mut Vec<usize>, f: &mut dyn FnMut(&[usize])) {
+    if prefix.len() == k {
+        f(prefix);
+        return;
+    }
+    let lo = prefix.last().copied().unwrap_or(0);
+    for c in lo..=n {
+        prefix.push(c);
+        for_each_monotone(n, k, prefix, f);
+        prefix.pop();
+    }
+}
+
+/// The brute force: price every monotone vector independently, apply
+/// the epsilon decision rule (`+epsilon` iff `cuts[0] < N`), select
+/// with `<=` over the ascending enumeration so the lexicographically
+/// largest minimizer wins — the chain DP's documented tie direction.
+fn brute_force_chain(t: &Tables, chain: &TierChain, epsilon: f64) -> (Vec<usize>, f64) {
+    let mut best_cuts: Vec<usize> = Vec::new();
+    let mut best_model = f64::INFINITY;
+    let mut best_decision = f64::INFINITY;
+    let mut prefix = Vec::with_capacity(chain.links.len());
+    for_each_monotone(t.n, chain.links.len(), &mut prefix, &mut |cuts| {
+        let model = price(t, chain, cuts);
+        let decision = if cuts[0] < t.n { model + epsilon } else { model };
+        if decision <= best_decision {
+            best_decision = decision;
+            best_model = model;
+            best_cuts = cuts.to_vec();
+        }
+    });
+    (best_cuts, best_model)
+}
+
+/// Assert `plan_chain` reproduces the oracle exactly: same vector, same
+/// expected-time bits, same per-hop wire bytes — and that the plan
+/// achieves its reported time through the canonical pricing.
+fn assert_matches_oracle(
+    planner: &Planner,
+    t: &Tables,
+    chain: &TierChain,
+    epsilon: f64,
+    ctx: &str,
+) -> ChainPlan {
+    // Ground every vector's fresh price in the canonical pricing first:
+    // a disagreement here localizes a failure to the cost model rather
+    // than the argmin.
+    let mut prefix = Vec::with_capacity(chain.links.len());
+    for_each_monotone(t.n, chain.links.len(), &mut prefix, &mut |cuts| {
+        let fresh = price(t, chain, cuts);
+        let canonical = planner.chain_expected_time(chain, cuts);
+        assert_eq!(
+            fresh.to_bits(),
+            canonical.to_bits(),
+            "pricing drift at {cuts:?}: fresh {fresh} vs chain_expected_time {canonical} ({ctx})"
+        );
+    });
+
+    let (want_cuts, want_time) = brute_force_chain(t, chain, epsilon);
+    let plan = planner.plan_chain(chain);
+    assert_eq!(plan.cuts, want_cuts, "cut vector ({ctx})");
+    assert_eq!(
+        plan.expected_time_s.to_bits(),
+        want_time.to_bits(),
+        "expected time {} vs oracle {} ({ctx})",
+        plan.expected_time_s,
+        want_time
+    );
+    let want_bytes: Vec<u64> = want_cuts
+        .iter()
+        .map(|&c| if c == t.n { 0 } else { t.alpha_bytes[c] })
+        .collect();
+    assert_eq!(plan.hop_wire_bytes, want_bytes, "hop wire bytes ({ctx})");
+    assert_eq!(
+        planner.chain_expected_time(chain, &plan.cuts).to_bits(),
+        plan.expected_time_s.to_bits(),
+        "plan must achieve its reported time ({ctx})"
+    );
+    assert_eq!(
+        plan.stage_counts(t.n).iter().sum::<usize>(),
+        t.n,
+        "stage counts must partition the net ({ctx})"
+    );
+    plan
+}
+
+/// Validate the oracle's own tables against the crate's independent
+/// 2-tier implementation: at K = 2 the fresh fold must be bit-identical
+/// to `Estimator::expected_time` at every split.
+fn assert_tables_match_estimator(
+    t: &Tables,
+    desc: &BranchyNetDesc,
+    profile: &DelayProfile,
+    link: LinkModel,
+    encoding: WireEncoding,
+    paper: bool,
+    ctx: &str,
+) {
+    let mut est = Estimator::new(desc, profile, link).with_encoding(encoding);
+    if paper {
+        est = est.paper_mode();
+    }
+    let two = TierChain::two_tier(link);
+    for s in 0..=t.n {
+        assert_eq!(
+            price(t, &two, &[s]).to_bits(),
+            est.expected_time(s).to_bits(),
+            "oracle tables vs estimator at split {s} ({ctx})"
+        );
+    }
+}
+
+/// The tentpole obligation: on seeded random instances — net, profile,
+/// exit probabilities (0/1 corners included), wire encoding, epsilon,
+/// K ∈ {2, 3, 4}, per-hop links from the degenerate grids, per-tier
+/// compute scales including exact 0.0 free relays — `plan_chain` is
+/// bit-identical to the brute-force argmin over every monotone vector.
+#[test]
+fn plan_chain_is_bit_identical_to_the_exhaustive_argmin() {
+    property("plan_chain == brute force over cut vectors", 120, |g| {
+        let n = g.usize_in(2, 8);
+        let mut desc = synthetic::random_desc(g, n, 3);
+        // Hit the p = 0 / p = 1 corners with real probability mass.
+        for b in &mut desc.branches {
+            b.exit_prob = match g.usize_in(0, 9) {
+                0 => 0.0,
+                1 => 1.0,
+                _ => g.probability(),
+            };
+        }
+        let profile = synthetic::random_profile(g, &desc, g.f64_in(1.0, 500.0));
+        let paper = g.bool(0.5);
+        let epsilon = *g.choose(&[1e-12, 1e-9, 1e-3]);
+        let encoding = *g.choose(&WireEncoding::ALL);
+
+        let mut planner = Planner::new(&desc, &profile, epsilon, paper);
+        if encoding != WireEncoding::Raw {
+            planner = planner.with_wire_encoding(encoding);
+        }
+        let t = tables(&desc, &profile, encoding, paper);
+
+        let k_tiers = *g.choose(&[2usize, 3, 4]);
+        let links: Vec<LinkModel> = (0..k_tiers - 1)
+            .map(|_| LinkModel::new(*g.choose(&BANDWIDTHS_MBPS), *g.choose(&RTTS_S)))
+            .collect();
+        let compute_scale: Vec<f64> = (0..k_tiers - 1)
+            .map(|_| match g.usize_in(0, 3) {
+                0 => 0.0, // free pass-through relay
+                1 => 1.0,
+                _ => g.f64_in(0.05, 8.0),
+            })
+            .collect();
+        let chain = TierChain {
+            links,
+            compute_scale,
+        };
+
+        let ctx = format!(
+            "n={n} K={k_tiers} paper={paper} eps={epsilon} enc={encoding:?} \
+             scales={:?}",
+            chain.compute_scale
+        );
+        assert_tables_match_estimator(
+            &t,
+            &desc,
+            &profile,
+            chain.links[0],
+            encoding,
+            paper,
+            &ctx,
+        );
+        assert_matches_oracle(&planner, &t, &chain, epsilon, &ctx);
+    });
+}
+
+/// Fixed 6-stage net with one branch — the pinned instance shared with
+/// the joint oracle — for the exhaustive no-randomness corner sweeps.
+fn pinned_instance(p: f64) -> (BranchyNetDesc, DelayProfile) {
+    let desc = BranchyNetDesc {
+        stage_names: (1..=6).map(|i| format!("s{i}")).collect(),
+        stage_out_bytes: vec![57_600, 18_816, 25_088, 3_456, 1_024, 8],
+        input_bytes: 12_288,
+        branches: vec![BranchDesc {
+            after_stage: 1,
+            exit_prob: p,
+        }],
+    };
+    let profile = DelayProfile::from_cloud_times(
+        vec![1e-3, 1.5e-3, 1.2e-3, 8e-4, 3e-4, 5e-5],
+        2e-4,
+        10.0,
+    );
+    (desc, profile)
+}
+
+/// The same obligation on a pinned K = 3 grid — no randomness, every
+/// combination visited: the full degenerate hop-0 grid × degenerate
+/// second hops (dead, infinite, starved-with-60s-RTT, fat-with-∞-RTT) ×
+/// compute scales including a free relay × p ∈ {0, ½, 1} × both planner
+/// modes. Failures here reproduce without a seed.
+#[test]
+fn three_tier_degenerate_corners_match_the_oracle_exhaustively() {
+    let hop1s = [
+        LinkModel::new(0.0, 0.0),
+        LinkModel::new(1e5, 0.0),
+        LinkModel::new(1.10, 60.0),
+        LinkModel::new(18.80, f64::INFINITY),
+    ];
+    let scale_pairs = [[0.0, 1.0], [1.0, 1.0], [4.0, 0.5]];
+    for p in [0.0, 0.5, 1.0] {
+        let (desc, profile) = pinned_instance(p);
+        for paper in [true, false] {
+            let planner = Planner::new(&desc, &profile, EPS, paper);
+            let t = tables(&desc, &profile, WireEncoding::Raw, paper);
+            for &mbps in &BANDWIDTHS_MBPS {
+                for &rtt in &RTTS_S {
+                    let hop0 = LinkModel::new(mbps, rtt);
+                    assert_tables_match_estimator(
+                        &t,
+                        &desc,
+                        &profile,
+                        hop0,
+                        WireEncoding::Raw,
+                        paper,
+                        &format!("p={p} paper={paper} hop0={mbps}/{rtt}"),
+                    );
+                    for hop1 in hop1s {
+                        for scales in scale_pairs {
+                            let chain = TierChain {
+                                links: vec![hop0, hop1],
+                                compute_scale: scales.to_vec(),
+                            };
+                            let ctx = format!(
+                                "p={p} paper={paper} hop0={mbps}/{rtt} \
+                                 hop1={}/{} scales={scales:?}",
+                                hop1.uplink_mbps, hop1.rtt_s
+                            );
+                            let plan = assert_matches_oracle(&planner, &t, &chain, EPS, &ctx);
+                            if p == 1.0 && plan.cuts[0] > 1 {
+                                // Survival dies at the branch (after
+                                // stage 1): a winner cutting past it
+                                // never transfers, so the epsilon rule
+                                // forbids every dead mid-net cut — only
+                                // the all-edge vector with the all-N
+                                // tail tie remains.
+                                assert_eq!(plan.cuts, vec![6, 6], "{ctx}");
+                                assert!(plan.is_edge_only(6), "{ctx}");
+                                assert_eq!(plan.hop_wire_bytes, vec![0, 0], "{ctx}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// K = 4 pinned corners: two middle tiers, degenerate hops on every
+/// position, free relays in both middle slots.
+#[test]
+fn four_tier_pinned_corners_match_the_oracle() {
+    let hops = [
+        LinkModel::new(0.05, 0.005),
+        LinkModel::new(1.10, 0.1),
+        LinkModel::new(0.0, 60.0),
+        LinkModel::new(1e5, 0.0),
+    ];
+    let scale_triples = [[0.0, 0.0, 1.0], [1.0, 1.0, 1.0], [8.0, 0.25, 1.0]];
+    for p in [0.0, 0.5, 1.0] {
+        let (desc, profile) = pinned_instance(p);
+        for paper in [true, false] {
+            let planner = Planner::new(&desc, &profile, EPS, paper);
+            let t = tables(&desc, &profile, WireEncoding::Raw, paper);
+            for hop0 in hops {
+                for hop1 in hops {
+                    for hop2 in hops {
+                        for scales in scale_triples {
+                            let chain = TierChain {
+                                links: vec![hop0, hop1, hop2],
+                                compute_scale: scales.to_vec(),
+                            };
+                            let ctx = format!(
+                                "p={p} paper={paper} hops=[{}/{}, {}/{}, {}/{}] \
+                                 scales={scales:?}",
+                                hop0.uplink_mbps,
+                                hop0.rtt_s,
+                                hop1.uplink_mbps,
+                                hop1.rtt_s,
+                                hop2.uplink_mbps,
+                                hop2.rtt_s
+                            );
+                            assert_matches_oracle(&planner, &t, &chain, EPS, &ctx);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A free middle tier on a fat hop can only help: the 3-tier optimum is
+/// never worse than the 2-tier optimum over the same first hop (every
+/// `[s, N]` vector prices exactly like the 2-tier split `s` on a
+/// unit-scale tail), and the oracle agrees with the planner on both.
+#[test]
+fn free_middle_tier_never_loses_to_the_two_tier_plan() {
+    let (desc, profile) = pinned_instance(0.3);
+    let planner = Planner::new(&desc, &profile, EPS, false);
+    let t = tables(&desc, &profile, WireEncoding::Raw, false);
+    for &mbps in &BANDWIDTHS_MBPS {
+        let hop0 = LinkModel::new(mbps, 0.005);
+        let chain = TierChain {
+            links: vec![hop0, LinkModel::new(1e5, 0.0)],
+            compute_scale: vec![0.0, 1.0],
+        };
+        let ctx = format!("mbps={mbps}");
+        let three = assert_matches_oracle(&planner, &t, &chain, EPS, &ctx);
+        let two = planner.plan_for(hop0);
+        assert!(
+            three.expected_time_s <= two.expected_time_s,
+            "3-tier {} must not lose to 2-tier {} ({ctx})",
+            three.expected_time_s,
+            two.expected_time_s
+        );
+    }
+}

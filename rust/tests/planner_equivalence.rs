@@ -14,7 +14,7 @@ use branchyserve::model::synthetic;
 use branchyserve::network::bandwidth::LinkModel;
 use branchyserve::network::encoding::WireEncoding;
 use branchyserve::partition::solver;
-use branchyserve::planner::{AdaptiveConfig, JointSearchSpace, Planner, ReplanState};
+use branchyserve::planner::{AdaptiveConfig, JointSearchSpace, Planner, ReplanState, TierChain};
 use branchyserve::testing::{property, Gen};
 
 const EPS: f64 = 1e-9;
@@ -126,6 +126,58 @@ fn restricted_joint_space_degenerates_to_plan_for() {
             );
             assert_eq!(joint.ranked.len(), 1);
             assert_eq!(joint.pruned, 0);
+        }
+    });
+}
+
+/// The chain generalization's degeneration obligation: `plan_chain`
+/// over [`TierChain::two_tier`] must collapse to the paper's one-axis
+/// optimizer — `plan_for`'s cut, expected-time bits and wire bytes —
+/// across randomized nets, encoding re-bakes, p-updates and links, and
+/// the explicit chain pricing must agree with the 2-tier sweep kernel
+/// bit-for-bit at every cut.
+#[test]
+fn two_tier_chain_degenerates_to_plan_for() {
+    property("plan_chain(two_tier) == plan_for", 200, |g| {
+        let n = g.usize_in(1, 30);
+        let desc = synthetic::random_desc(g, n, 4);
+        let profile = synthetic::random_profile(g, &desc, g.f64_in(1.0, 2000.0));
+        let paper = g.bool(0.5);
+        let mut planner = Planner::new(&desc, &profile, EPS, paper);
+
+        let encoding = *g.choose(&WireEncoding::ALL);
+        if encoding != WireEncoding::Raw {
+            planner = planner.with_wire_encoding(encoding);
+        }
+        if g.bool(0.5) && !desc.branches.is_empty() {
+            let probs: Vec<f64> = (0..desc.branches.len()).map(|_| g.probability()).collect();
+            planner.set_exit_probs(&probs);
+        }
+
+        for _ in 0..6 {
+            let link = LinkModel::new(g.f64_in(0.01, 50_000.0), g.f64_in(0.0, 0.1));
+            let two = TierChain::two_tier(link);
+            let fixed = planner.plan_for(link);
+            let chain = planner.plan_chain(&two);
+            assert_eq!(
+                chain.cuts,
+                vec![fixed.split_after],
+                "n={n} paper={paper} enc={encoding:?}"
+            );
+            assert_eq!(
+                chain.expected_time_s.to_bits(),
+                fixed.expected_time_s.to_bits(),
+                "n={n} paper={paper} enc={encoding:?}"
+            );
+            assert_eq!(chain.hop_wire_bytes, vec![fixed.wire_bytes]);
+            assert_eq!(chain.is_edge_only(n), fixed.is_edge_only(n));
+            for s in 0..=n {
+                assert_eq!(
+                    planner.chain_expected_time(&two, &[s]).to_bits(),
+                    planner.expected_time(s, link).to_bits(),
+                    "chain pricing vs sweep kernel at cut {s} (n={n}, paper={paper})"
+                );
+            }
         }
     });
 }

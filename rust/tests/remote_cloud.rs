@@ -80,6 +80,7 @@ fn loopback_cloud_matches_in_process_bit_for_bit() {
         CloudExec::Remote {
             remote: remote.clone(),
             fallback: InferenceEngine::open_sim(m.clone(), "par-fb").unwrap(),
+            chain: None,
         },
         channel(),
         plan_at(&m, split),
@@ -159,6 +160,7 @@ fn loopback_q8_pipeline_matches_in_process_oracle() {
         CloudExec::Remote {
             remote: remote.clone(),
             fallback: InferenceEngine::open_sim(m.clone(), "q8-fb").unwrap(),
+            chain: None,
         },
         channel(),
         plan_at(&m, split),
@@ -254,6 +256,7 @@ fn dead_cloud_falls_back_to_local_execution() {
         CloudExec::Remote {
             remote: remote.clone(),
             fallback: InferenceEngine::open_sim(m.clone(), "fb-cloud").unwrap(),
+            chain: None,
         },
         channel(),
         plan_at(&m, 0), // cloud-only: every sample depends on the fallback

@@ -1,4 +1,4 @@
-//! The five canonical scenarios under `scenarios/` replayed end to end
+//! The canonical scenarios under `scenarios/` replayed end to end
 //! against the real fleet: every SLO check passes, and two runs with
 //! the same seed emit bit-identical benchmark JSON once the only
 //! intentionally nondeterministic field (`"wall"`) is stripped.
@@ -105,6 +105,28 @@ fn cloud_brownout_falls_back_without_dropping_anything() {
     );
     assert_eq!(total(&o, "rejected"), 0.0);
     assert_eq!(total(&o, "offered"), total(&o, "completed"));
+}
+
+#[test]
+fn tier_brownout_degrades_to_direct_without_dropping_anything() {
+    let o = run_canonical("tier_brownout");
+    assert!(
+        total(&o, "chain_fallbacks") > 0.0,
+        "a tier brownout with no chain->direct degrades never lost its head"
+    );
+    assert_eq!(total(&o, "rejected"), 0.0);
+    assert_eq!(total(&o, "offered"), total(&o, "completed"));
+    // The class routes through the chain: its report carries the full
+    // cut vector, and cuts[0] is the split the twin priced.
+    let cuts: Vec<f64> = o
+        .json
+        .get("classes")
+        .and_then(Json::as_arr)
+        .and_then(|cs| cs[0].get("cuts"))
+        .and_then(Json::as_arr)
+        .map(|arr| arr.iter().map(|c| c.as_f64().unwrap()).collect())
+        .expect("classes[0].cuts must be present for a chain class");
+    assert_eq!(cuts.len(), 2, "K=3 chain solves two cut points, got {cuts:?}");
 }
 
 #[test]

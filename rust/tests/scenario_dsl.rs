@@ -459,3 +459,121 @@ fn canonical_scenarios_on_disk_all_validate() {
     }
     assert!(found >= 5, "expected the five canonical scenarios, found {found}");
 }
+
+/// A minimal valid K=3 chain scenario; tier tests splice events onto it.
+const CHAIN_BASE: &str = r#"
+[scenario]
+name = "unit"
+duration_s = 10.0
+loopback_cloud = true
+
+[[tier]]
+addr = "127.0.0.1:7901"
+uplink_mbps = 1000.0
+rtt_ms = 1.0
+compute_scale = 4.0
+
+[[tier]]
+addr = "127.0.0.1:7902"
+
+[[link_class]]
+name = "4g"
+
+[[workload]]
+class = "4g"
+rate_rps = 5.0
+"#;
+
+#[test]
+fn tier_events_parse_on_a_chain_and_pair_up() {
+    let spec = ScenarioSpec::parse_str(&format!(
+        "{CHAIN_BASE}
+[[event]]
+at_s = 1.0
+kind = \"tier_down\"
+
+[[event]]
+at_s = 2.0
+kind = \"tier_up\"
+"
+    ))
+    .unwrap();
+    let kinds: Vec<&str> = spec.events.iter().map(|e| e.kind.name()).collect();
+    assert_eq!(kinds, ["tier_down", "tier_up"]);
+    assert_eq!(spec.settings.tiers.len(), 2);
+}
+
+#[test]
+fn tier_events_require_a_chain() {
+    // tier_down on a plain two-tier fleet has no chain head to lose.
+    let e = err_of(
+        r#"
+[[event]]
+at_s = 1.0
+kind = "tier_down"
+"#,
+    );
+    assert!(e.contains("[[tier]]"), "{e}");
+}
+
+#[test]
+fn overlapping_tier_brownouts_are_rejected() {
+    let e = ScenarioSpec::parse_str(&format!(
+        "{CHAIN_BASE}
+[[event]]
+at_s = 1.0
+kind = \"tier_down\"
+
+[[event]]
+at_s = 2.0
+kind = \"tier_down\"
+"
+    ))
+    .unwrap_err();
+    let e = format!("{e:#}");
+    assert!(e.contains("overlapping tier-brownout"), "{e}");
+    assert!(e.contains("1 s"), "should name when the open window began: {e}");
+}
+
+#[test]
+fn tier_up_without_a_tier_brownout_is_rejected() {
+    let e = ScenarioSpec::parse_str(&format!(
+        "{CHAIN_BASE}
+[[event]]
+at_s = 1.0
+kind = \"tier_up\"
+"
+    ))
+    .unwrap_err();
+    assert!(
+        format!("{e:#}").contains("without a preceding tier_down"),
+        "{e:#}"
+    );
+}
+
+#[test]
+fn a_chain_scenario_requires_the_loopback_cloud() {
+    let e = err_of(
+        r#"
+[[tier]]
+addr = "127.0.0.1:7901"
+uplink_mbps = 1000.0
+rtt_ms = 1.0
+
+[[tier]]
+addr = "127.0.0.1:7902"
+"#,
+    );
+    assert!(e.contains("loopback_cloud"), "{e}");
+}
+
+#[test]
+fn expect_chain_fallbacks_requires_a_chain() {
+    let e = err_of(
+        r#"
+[slo]
+expect_chain_fallbacks = true
+"#,
+    );
+    assert!(e.contains("[[tier]]"), "{e}");
+}

@@ -483,3 +483,227 @@ fn reactor_window_throttles_pipelined_overflow() {
     handle.stop();
     assert!(t0.elapsed() < Duration::from_secs(5), "{:?}", t0.elapsed());
 }
+
+// ---------------------------------------------------------------------
+// K-tier chain frames (kind 6): wire hygiene, then the three-listener
+// pass-through bit-identity proof over live sockets.
+// ---------------------------------------------------------------------
+
+/// Kind-6 (INFER_CHAIN_SEQ) wire hygiene: the frame round-trips through
+/// the framed wire exactly, `Request::encode` and the borrowing fast
+/// path cannot drift, and every malformed-body class — truncated
+/// header, zero cuts, over-cap cuts, truncated cut array, non-monotone
+/// cuts, bad branch state, garbage tensor — is rejected with a loud,
+/// specific error instead of being misparsed.
+#[test]
+fn chain_seq_frames_round_trip_and_reject_malformed_bodies() {
+    use branchyserve::network::WireEncoding;
+    use branchyserve::server::protocol::{
+        encode_infer_chain_seq, BRANCH_GATED, BRANCH_PENDING, MAX_CHAIN_TIERS,
+    };
+
+    let act =
+        HostTensor::new(vec![2, 16], (0..32).map(|i| i as f32 * 0.13 - 0.9).collect()).unwrap();
+    let req = Request::InferChainSeq {
+        seq: 42,
+        cuts: vec![1, 1, 2],
+        branch_state: BRANCH_GATED,
+        encoding: WireEncoding::Raw,
+        activation: act.clone(),
+    };
+
+    // Round-trip through the framed wire.
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &req.encode()).unwrap();
+    let body = read_frame(&mut &buf[..]).unwrap();
+    assert_eq!(Request::decode(&body).unwrap(), req);
+
+    // `Request::encode` delegates to the borrowing encoder: bit-equal.
+    assert_eq!(
+        req.encode(),
+        encode_infer_chain_seq(42, &[1, 1, 2], BRANCH_GATED, WireEncoding::Raw, &act)
+    );
+
+    // seq and cuts really live on the wire: changing either changes bytes.
+    let mut reseq = req.clone();
+    if let Request::InferChainSeq { seq, .. } = &mut reseq {
+        *seq = 43;
+    }
+    assert_ne!(reseq.encode(), req.encode());
+    let mut recut = req.clone();
+    if let Request::InferChainSeq { cuts, .. } = &mut recut {
+        cuts[2] = 3;
+    }
+    assert_ne!(recut.encode(), req.encode());
+
+    let err = |body: &[u8]| Request::decode(body).unwrap_err().to_string();
+
+    // Truncated header (seq + ncuts = 8 bytes after the kind byte).
+    assert!(err(&[6]).contains("truncated INFER_CHAIN_SEQ header"));
+    assert!(err(&[6, 42, 0, 0, 0]).contains("truncated INFER_CHAIN_SEQ header"));
+    // Zero cuts is meaningless.
+    assert!(err(&[6, 42, 0, 0, 0, 0, 0, 0, 0]).contains("INFER_CHAIN_SEQ with no cuts"));
+    // The tier cap bounds attacker-controlled cut counts.
+    let too_many = encode_infer_chain_seq(
+        1,
+        &vec![2; MAX_CHAIN_TIERS + 1],
+        BRANCH_PENDING,
+        WireEncoding::Raw,
+        &act,
+    );
+    assert!(err(&too_many).contains("exceeds cap"));
+    // Cut array cut short: ncuts promises 3, the bytes carry 1.
+    let valid = encode_infer_chain_seq(7, &[1, 1, 2], BRANCH_PENDING, WireEncoding::Raw, &act);
+    assert!(err(&valid[..1 + 8 + 4]).contains("truncated INFER_CHAIN_SEQ cuts"));
+    // Non-monotone cut vectors never reach a backend.
+    let decreasing = encode_infer_chain_seq(7, &[3, 1], BRANCH_PENDING, WireEncoding::Raw, &act);
+    assert!(err(&decreasing).contains("not non-decreasing"));
+    // The branch_state byte sits right after the cuts: corrupt it in place.
+    let mut bad_state = valid.clone();
+    bad_state[1 + 8 + 12] = 9;
+    assert!(err(&bad_state).contains("invalid branch_state"));
+    // A garbage tensor payload fails in the tensor decoder, not silently.
+    assert!(Request::decode(&valid[..valid.len() - 3]).is_err());
+}
+
+/// The satellite proof over real sockets: the same activations are
+/// driven through a forwarding middle tier (kind-6 frames, terminal
+/// tier behind its own listener) and through a plain single-hop server
+/// (kind-5 frames). A pass-through middle (`cuts[0] == cuts[1]`), a
+/// genuine two-segment chain, and a tail ending at the middle must all
+/// answer classes/entropies bit-identical to the single hop, and the
+/// per-hop split counters must land exactly at the planned cuts —
+/// nowhere else.
+#[test]
+fn chain_pass_through_over_live_listeners_matches_single_hop_bitwise() {
+    use branchyserve::network::WireEncoding;
+    use branchyserve::server::protocol::{BRANCH_GATED, BRANCH_PENDING};
+    use branchyserve::server::{CloudStageServer, RemoteCloudConfig, RemoteCloudEngine};
+
+    // All three engines share the manifest name, hence deterministic
+    // weights: segment composition across listeners must reproduce one
+    // straight suffix run on any of them.
+    let css = |label: &str| {
+        CloudStageServer::new(InferenceEngine::open_sim(front_manifest(), label).unwrap())
+    };
+    let terminal = Arc::new(css("chain-term"));
+    let term_srv = Server::new(terminal.clone()).start(0).unwrap();
+    let forward = Arc::new(RemoteCloudEngine::new(RemoteCloudConfig::new(
+        term_srv.addr().to_string(),
+    )));
+    let middle = Arc::new(css("chain-mid").with_forward(forward));
+    let mid_srv = Server::new(middle.clone()).start(0).unwrap();
+    let single = Arc::new(css("chain-single"));
+    let single_srv = Server::new(single.clone()).start(0).unwrap();
+
+    // Activations shaped for the sim model's cut widths (16 after
+    // stage 1, 8 after stage 2).
+    let act = |n: usize, w: usize| {
+        let data: Vec<f32> = (0..n * w).map(|i| (i as f32) * 0.13 - 0.9).collect();
+        HostTensor::new(vec![n, w], data).unwrap()
+    };
+
+    // Frame 1: pass-through middle (zero stages here, the terminal does
+    // all the work). Frame 2: genuine chain (middle runs stage 2, the
+    // terminal stage 3). Frame 3: the tail already covers the model, so
+    // the middle answers it locally as a plain partial.
+    let via_chain = exchange(
+        mid_srv.addr(),
+        &[
+            Request::InferChainSeq {
+                seq: 1,
+                cuts: vec![1, 1],
+                branch_state: BRANCH_PENDING,
+                encoding: WireEncoding::Raw,
+                activation: act(2, 16),
+            },
+            Request::InferChainSeq {
+                seq: 2,
+                cuts: vec![1, 2],
+                branch_state: BRANCH_GATED,
+                encoding: WireEncoding::Raw,
+                activation: act(3, 16),
+            },
+            Request::InferChainSeq {
+                seq: 3,
+                cuts: vec![2, 3],
+                branch_state: BRANCH_GATED,
+                encoding: WireEncoding::Raw,
+                activation: act(1, 8),
+            },
+            Request::Ping,
+        ],
+    );
+    let via_single = exchange(
+        single_srv.addr(),
+        &[
+            Request::InferPartialSeq {
+                seq: 1,
+                split: 1,
+                branch_state: BRANCH_PENDING,
+                encoding: WireEncoding::Raw,
+                activation: act(2, 16),
+            },
+            Request::InferPartialSeq {
+                seq: 2,
+                split: 1,
+                branch_state: BRANCH_GATED,
+                encoding: WireEncoding::Raw,
+                activation: act(3, 16),
+            },
+            Request::InferPartialSeq {
+                seq: 3,
+                split: 2,
+                branch_state: BRANCH_GATED,
+                encoding: WireEncoding::Raw,
+                activation: act(1, 8),
+            },
+            Request::Ping,
+        ],
+    );
+    assert_eq!(via_chain.len(), via_single.len());
+    for (i, (chain, one_hop)) in via_chain.iter().zip(&via_single).enumerate() {
+        assert_eq!(normalized(chain), normalized(one_hop), "frame {i} diverged");
+    }
+
+    // Per-hop accounting: every transfer happened exactly at its
+    // planned cut. The middle saw cut 1 twice (frames 1–2) and served
+    // frame 3 locally at cut 2; the terminal saw the forwarded tails at
+    // cuts 1 and 2; the single-hop reference mirrors the middle's shape.
+    assert_eq!(middle.chain_counters(), (2, 2));
+    assert_eq!(middle.splits_served(), vec![0, 2, 1]);
+    assert_eq!(terminal.chain_counters(), (0, 0));
+    assert_eq!(terminal.splits_served(), vec![0, 1, 1]);
+    assert_eq!(single.splits_served(), vec![0, 2, 1]);
+    let (_, mid_samples, mid_gated, _, mid_errors) = middle.counters();
+    assert_eq!((mid_samples, mid_gated, mid_errors), (6, 2, 0));
+
+    // A genuine tail arriving at a tier with no forward engine answers
+    // a seq-bound error, and the connection survives to serve the next
+    // frame.
+    let bodies = exchange(
+        single_srv.addr(),
+        &[
+            Request::InferChainSeq {
+                seq: 9,
+                cuts: vec![0, 1],
+                branch_state: BRANCH_PENDING,
+                encoding: WireEncoding::Raw,
+                activation: act(1, 4),
+            },
+            Request::Ping,
+        ],
+    );
+    match Response::decode(&bodies[0]).unwrap() {
+        Response::ErrorSeq { seq, message } => {
+            assert_eq!(seq, 9);
+            assert!(message.contains("terminal tier"), "{message}");
+        }
+        other => panic!("expected ErrorSeq, got {other:?}"),
+    }
+    assert_eq!(Response::decode(&bodies[1]).unwrap(), Response::Pong);
+
+    mid_srv.stop();
+    term_srv.stop();
+    single_srv.stop();
+}

@@ -36,6 +36,15 @@ joint ("bench": "joint", from `cargo bench --bench fig_joint`):
   * For every (mbps, p) cell present in both files, a new `joint_ms`
     more than GATE (20%) worse than the baseline's fails the merge.
 
+ktier ("bench": "ktier", from `cargo bench --bench ktier`):
+  * Run-intrinsic bars: the three-tier chain plan must never lose to
+    the best two-tier plan on any cell (`derived.three_tier_never_loses`
+    and per-cell three_ms <= two_ms) and must strictly beat it on at
+    least one (`derived.cells_strictly_better` >= 1) — the two-tier
+    space embeds in the chain's, so a loss is a planner bug.
+  * For every mbps cell present in both files, a new `three_ms` more
+    than GATE (20%) worse than the baseline's fails the merge.
+
 Either kind: baselines whose `source` is not "measured" (seed baselines
 are derived from the timing/codec model, marked "model") never gate —
 the first measured run simply replaces them.
@@ -59,7 +68,7 @@ from pathlib import Path
 
 GATE = 0.20  # fail if p99 regresses by more than this fraction
 BYTE_DRIFT = 0.01  # bytes are deterministic; >1% drift is a format change
-KINDS = ("wire", "scenario", "serve", "joint")
+KINDS = ("wire", "scenario", "serve", "joint", "ktier")
 SERVE_SPEEDUP_BAR = 2.0  # reactor vs thread-per-conn req/s, full runs only
 
 
@@ -77,8 +86,8 @@ def load(path: Path) -> dict:
         sys.exit(f"bench_record: {path} is not a bench record (kinds: {KINDS})")
     if kind in ("wire", "serve") and not isinstance(doc.get("runs"), list):
         sys.exit(f"bench_record: {path} is not a {kind}-bench record")
-    if kind == "joint" and not isinstance(doc.get("cells"), list):
-        sys.exit(f"bench_record: {path} is not a joint-bench record")
+    if kind in ("joint", "ktier") and not isinstance(doc.get("cells"), list):
+        sys.exit(f"bench_record: {path} is not a {kind}-bench record")
     return doc
 
 
@@ -191,6 +200,41 @@ def gate_joint(baseline: dict, run: dict) -> list[str]:
     return findings
 
 
+def gate_ktier(baseline: dict, run: dict) -> list[str]:
+    """The chain may never lose to the best two-tier plan; three_ms gates."""
+    findings = []
+    derived = run.get("derived", {})
+    if not derived.get("three_tier_never_loses", False):
+        findings.append(
+            "derived.three_tier_never_loses is false: the chain lost somewhere"
+        )
+    if derived.get("cells_strictly_better", 0) < 1:
+        findings.append("the chain found no strict win on the whole grid")
+    for c in run["cells"]:
+        if c["three_ms"] > c["two_ms"]:
+            findings.append(
+                f"cell ({c['mbps']} Mbps): three-tier {c['three_ms']:.3f} ms "
+                f"lost to the two-tier plan's {c['two_ms']:.3f} ms"
+            )
+    if baseline.get("source") != "measured":
+        return findings  # seed baseline is modeled, not measured: never gates
+    if baseline.get("smoke") != run.get("smoke"):
+        return findings  # smoke and full grids are not comparable
+    base_cells = {c["mbps"]: c for c in baseline["cells"]}
+    for new in run["cells"]:
+        old = base_cells.get(new["mbps"])
+        if old is None:
+            continue
+        old_ms, new_ms = old["three_ms"], new["three_ms"]
+        if new_ms > old_ms * (1.0 + GATE):
+            findings.append(
+                f"cell ({new['mbps']} Mbps): three-tier E[T] regressed "
+                f"{old_ms:.3f} -> {new_ms:.3f} ms "
+                f"(+{(new_ms / old_ms - 1.0) * 100.0:.0f}%, gate {GATE * 100:.0f}%)"
+            )
+    return findings
+
+
 def previous_of(baseline: dict) -> dict:
     if baseline.get("bench") == "scenario":
         return {
@@ -208,6 +252,11 @@ def previous_of(baseline: dict) -> dict:
             "joint_ms": {
                 f"{c['mbps']}@{c['p']}": c["joint_ms"] for c in baseline["cells"]
             },
+        }
+    if baseline.get("bench") == "ktier":
+        return {
+            "source": baseline.get("source"),
+            "three_ms": {str(c["mbps"]): c["three_ms"] for c in baseline["cells"]},
         }
     return {
         "source": baseline.get("source"),
@@ -248,6 +297,8 @@ def main() -> int:
         findings = gate_scenario(baseline, run)
     elif run.get("bench") == "joint":
         findings = gate_joint(baseline, run)
+    elif run.get("bench") == "ktier":
+        findings = gate_ktier(baseline, run)
     elif run.get("bench") == "serve":
         findings = gate_serve(baseline, run)
         speedup = run.get("derived", {}).get("reactor_speedup")
